@@ -1,0 +1,62 @@
+//! Quickstart: train a distributed SVM with CoCoA in ~30 lines of API.
+//!
+//! ```bash
+//! cargo run --release --example quickstart
+//! ```
+//!
+//! Generates a small cov-regime dataset, partitions it over K = 4 worker
+//! threads, runs Algorithm 1, and prints the duality-gap trajectory next
+//! to the mini-batch SDCA baseline at the same per-round work.
+
+use cocoa::algorithms::{run, Budget};
+use cocoa::config::{AlgorithmSpec, Backend};
+use cocoa::coordinator::Cluster;
+use cocoa::data::{cov_like, Partition, PartitionStrategy};
+use cocoa::loss::LossKind;
+use cocoa::netsim::NetworkModel;
+use cocoa::solvers::SolverKind;
+
+fn main() -> anyhow::Result<()> {
+    // 1. data: n = 8000 points in d = 54 (cov regime), K = 4 workers
+    let data = cov_like(8_000, 54, 0.1, 42);
+    let partition = Partition::new(PartitionStrategy::Contiguous, data.n(), 4, 0);
+    let lambda = 1.0 / data.n() as f64;
+    let h = data.n() / 4; // one local pass per round
+
+    println!("quickstart: n={} d={} K=4 lambda={lambda:.2e} H={h}", data.n(), data.d());
+    println!("{:<14} {:>6} {:>12} {:>12} {:>14}", "algorithm", "round", "P(w)", "gap", "sim time (s)");
+
+    for spec in [
+        AlgorithmSpec::Cocoa { h, beta_k: 1.0, solver: SolverKind::Sdca },
+        AlgorithmSpec::MinibatchCd { h, beta_b: 1.0 },
+    ] {
+        // 2. a cluster: leader + 4 worker threads over an EC2-like network
+        let mut cluster = Cluster::build(
+            &data,
+            &partition,
+            LossKind::Hinge,
+            lambda,
+            SolverKind::Sdca,
+            Backend::Native,
+            "artifacts",
+            NetworkModel::ec2_like(),
+            7,
+        )?;
+        // 3. run 10 outer rounds (Algorithm 1), evaluating every round
+        let trace = run(&mut cluster, &spec, Budget::rounds(10), 1, None, "quickstart")?;
+        cluster.shutdown();
+        for row in trace.rows.iter().filter(|r| r.round % 2 == 0) {
+            println!(
+                "{:<14} {:>6} {:>12.6} {:>12.2e} {:>14.3}",
+                spec.name(),
+                row.round,
+                row.primal,
+                row.gap,
+                row.sim_time_s
+            );
+        }
+    }
+    println!("\nCoCoA closes the duality gap orders of magnitude faster per round —");
+    println!("the same updates, applied locally before averaging (Section 3 of the paper).");
+    Ok(())
+}

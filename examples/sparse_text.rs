@@ -1,0 +1,80 @@
+//! Sparse high-dimensional workload (the paper's rcv1 regime): text-like
+//! tf-idf features, n >> d storage-sparse, K = 8 workers.
+//!
+//! ```bash
+//! cargo run --release --example sparse_text
+//! ```
+//!
+//! Exercises the CSR path end-to-end and contrasts the two communication
+//! patterns the paper highlights for this regime: in d = 20,000 dimensions
+//! every communicated vector is 160 KB, so per-update communication
+//! (naive CD) is hopeless while CoCoA amortizes it over a full local pass.
+//! Also demonstrates the LibSVM round-trip (export -> reload).
+
+use cocoa::algorithms::{run, Budget};
+use cocoa::config::{AlgorithmSpec, Backend};
+use cocoa::coordinator::Cluster;
+use cocoa::data::{rcv1_like, read_libsvm, write_libsvm, Partition, PartitionStrategy};
+use cocoa::loss::LossKind;
+use cocoa::netsim::NetworkModel;
+use cocoa::solvers::SolverKind;
+
+fn main() -> anyhow::Result<()> {
+    let n = 30_000;
+    let d = 20_000;
+    let k = 8;
+    let data = rcv1_like(n, d, 12, 0.1, 9);
+    println!(
+        "sparse_text: n={n} d={d} nnz={} (density {:.4}%) K={k}",
+        data.nnz(),
+        100.0 * data.density()
+    );
+
+    // LibSVM round-trip: the same loader would ingest the real rcv1
+    let path = std::env::temp_dir().join("cocoa_rcv1_like.svm");
+    write_libsvm(&data, &path)?;
+    let reloaded = read_libsvm(&path, d)?;
+    anyhow::ensure!(reloaded.n() == n, "libsvm round-trip lost rows");
+    println!("libsvm round-trip ok: {} ({} bytes)", path.display(), std::fs::metadata(&path)?.len());
+
+    let partition = Partition::new(PartitionStrategy::Contiguous, n, k, 0);
+    let lambda = 1.0 / n as f64;
+    let h = n / k;
+    let net = NetworkModel::ec2_like();
+
+    println!("\n{:<14} {:>7} {:>12} {:>12} {:>14} {:>12}", "algorithm", "rounds", "gap", "subopt-ish", "vectors", "sim t (s)");
+    for spec in [
+        AlgorithmSpec::Cocoa { h, beta_k: 1.0, solver: SolverKind::Sdca },
+        AlgorithmSpec::LocalSgd { h, beta: 1.0 },
+        AlgorithmSpec::MinibatchSgd { h, beta: 1.0 },
+    ] {
+        let mut cluster = Cluster::build(
+            &data, &partition, LossKind::Hinge, lambda, SolverKind::Sdca,
+            Backend::Native, "artifacts", net, 13,
+        )?;
+        let trace = run(&mut cluster, &spec, Budget::rounds(15), 5, None, "rcv1_like")?;
+        cluster.shutdown();
+        let last = trace.rows.last().unwrap();
+        println!(
+            "{:<14} {:>7} {:>12.2e} {:>12.6} {:>14} {:>12.2}",
+            spec.name(),
+            last.round,
+            last.gap,
+            last.primal,
+            last.vectors,
+            last.sim_time_s
+        );
+        trace.to_csv(format!("results/sparse_text/{}.csv", spec.name()))?;
+    }
+
+    // the naive pattern, costed without running 30k rounds: each update
+    // ships one d-vector through a 5 ms + bandwidth round
+    let one_round = net.round_time(2e-6, 2 * k, d);
+    println!(
+        "\nnaive distributed CD would need ~{n} rounds x {:.1} ms = {:.0} s of pure communication",
+        one_round * 1e3,
+        one_round * n as f64 / k as f64
+    );
+    println!("for the same {n} coordinate updates CoCoA communicated in {} rounds.", 15);
+    Ok(())
+}

@@ -1,0 +1,141 @@
+# AOT compile path: lower the L2 graphs to HLO *text* artifacts + manifest.
+#
+# This is the only place python runs; `make artifacts` invokes it once and
+# the rust binary is self-contained afterwards. Interchange format is HLO
+# text, NOT a serialized HloModuleProto: jax >= 0.5 emits protos with 64-bit
+# instruction ids which the xla crate's xla_extension 0.5.1 rejects
+# (`proto.id() <= INT_MAX`); the text parser reassigns ids and round-trips
+# cleanly (see /opt/xla-example/README.md).
+#
+# Artifacts are keyed by (kernel, loss, n_k, d, cap); the rust ArtifactStore
+# reads artifacts/manifest.json and compiles each HLO once per process.
+import argparse
+import hashlib
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+F32 = jnp.float32
+I32 = jnp.int32
+
+
+def to_hlo_text(lowered) -> str:
+    """stablehlo -> XlaComputation -> HLO text (the 0.5.1-compatible path).
+
+    The module is printed in *generic* op form: jax 0.8's pretty-printer
+    emits `stablehlo.dynamic_slice` attribute syntax that the bundled
+    stablehlo parser inside mlir_module_to_xla_computation rejects; the
+    generic form bypasses every custom-op pretty parser.
+    """
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    text = mlir_mod.operation.get_asm(print_generic_op_form=True)
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        text, use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_local_sdca(loss: str, n_k: int, d: int, cap: int) -> str:
+    fn = model.make_local_sdca_round(loss)
+    specs = (
+        jax.ShapeDtypeStruct((n_k, d), F32),   # X
+        jax.ShapeDtypeStruct((n_k,), F32),     # y
+        jax.ShapeDtypeStruct((n_k,), F32),     # alpha
+        jax.ShapeDtypeStruct((d,), F32),       # w
+        jax.ShapeDtypeStruct((cap,), I32),     # idx
+        jax.ShapeDtypeStruct((n_k,), F32),     # norms
+        jax.ShapeDtypeStruct((3,), F32),       # [lam_n, gamma, H]
+    )
+    return to_hlo_text(jax.jit(fn).lower(*specs))
+
+
+def lower_eval_objectives(loss: str, n_k: int, d: int) -> str:
+    fn = model.make_eval_objectives(loss)
+    specs = (
+        jax.ShapeDtypeStruct((n_k, d), F32),   # X
+        jax.ShapeDtypeStruct((n_k,), F32),     # y
+        jax.ShapeDtypeStruct((n_k,), F32),     # alpha
+        jax.ShapeDtypeStruct((d,), F32),       # w
+        jax.ShapeDtypeStruct((), F32),         # gamma
+    )
+    return to_hlo_text(jax.jit(fn).lower(*specs))
+
+
+# (kernel, loss, n_k, d, cap) — cap is the idx capacity (max H per call);
+# the rust side issues multiple calls for H > cap.
+# Small shapes back the test suite; the large hinge pair backs the e2e /
+# figure workloads (cov-like: n = 100k over K = 4 workers, d = 54).
+SPECS_QUICK = [
+    ("local_sdca", "hinge", 128, 16, 256),
+    ("local_sdca", "smoothed_hinge", 128, 16, 256),
+    ("local_sdca", "squared", 128, 16, 256),
+    ("local_sdca", "logistic", 128, 16, 256),
+    ("eval_objectives", "hinge", 128, 16, 0),
+    ("eval_objectives", "smoothed_hinge", 128, 16, 0),
+]
+SPECS_FULL = SPECS_QUICK + [
+    ("local_sdca", "hinge", 25000, 54, 65536),
+    ("eval_objectives", "hinge", 25000, 54, 0),
+]
+
+
+def artifact_name(kernel, loss, n_k, d, cap):
+    if kernel == "local_sdca":
+        return f"{kernel}_{loss}_{n_k}x{d}_c{cap}"
+    return f"{kernel}_{loss}_{n_k}x{d}"
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default=os.path.join("..", "artifacts"))
+    ap.add_argument("--quick", action="store_true",
+                    help="small test shapes only (skips the e2e variants)")
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    specs = SPECS_QUICK if args.quick else SPECS_FULL
+    entries = []
+    for kernel, loss, n_k, d, cap in specs:
+        name = artifact_name(kernel, loss, n_k, d, cap)
+        if kernel == "local_sdca":
+            text = lower_local_sdca(loss, n_k, d, cap)
+        elif kernel == "eval_objectives":
+            text = lower_eval_objectives(loss, n_k, d)
+        else:
+            raise ValueError(kernel)
+        fname = f"{name}.hlo.txt"
+        path = os.path.join(args.out_dir, fname)
+        with open(path, "w") as f:
+            f.write(text)
+        entries.append({
+            "name": name,
+            "file": fname,
+            "kernel": kernel,
+            "loss": loss,
+            "n_k": n_k,
+            "d": d,
+            "cap": cap,
+            "sha256": hashlib.sha256(text.encode()).hexdigest(),
+        })
+        print(f"lowered {name}: {len(text)} chars")
+
+    manifest = {"version": 1, "artifacts": entries}
+    with open(os.path.join(args.out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    # TSV twin for the rust runtime (offline build: no JSON parser there)
+    with open(os.path.join(args.out_dir, "manifest.tsv"), "w") as f:
+        f.write("#cocoa-manifest\t1\n")
+        for e in entries:
+            f.write("\t".join(str(e[k]) for k in
+                              ("name", "file", "kernel", "loss", "n_k", "d",
+                               "cap", "sha256")) + "\n")
+    print(f"wrote manifest with {len(entries)} artifacts to {args.out_dir}")
+
+
+if __name__ == "__main__":
+    main()

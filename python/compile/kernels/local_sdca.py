@@ -1,0 +1,136 @@
+# L1 Pallas kernel: LocalSDCA (Procedure B of the CoCoA paper).
+#
+# One invocation performs H sequential dual-coordinate-ascent steps on one
+# worker's local block, entirely on-device:
+#
+#     for h in 0..H:
+#         i      = idx[h]
+#         q      = x_i . (w + dw)                 # margin against local view
+#         delta  = argmax 1-D dual subproblem     # closed form / Newton
+#         dalpha[i] += delta
+#         dw        += (delta / lambda*n) * x_i   # rank-1 primal update
+#
+# and returns only (dalpha, dw) — the single pair the CoCoA coordinator
+# communicates, which is the paper's entire point: H local steps, one
+# message.
+#
+# Design notes:
+#  * The loss is selected at *lowering* time (one HLO artifact per loss);
+#    the coordinate maximizer is inlined so XLA sees straight-line math.
+#  * H is a runtime scalar (lax.while_loop), so a single artifact serves
+#    every communication/computation trade-off point (Figure 3's H sweep).
+#    idx has static capacity `cap`; only idx[:H] is consumed.
+#  * Randomness lives on the host: the rust coordinator supplies the
+#    coordinate sequence idx, keeping the kernel deterministic and testable.
+#  * Row norms are an input (precomputed once per dataset) — recomputing
+#    ||x_i||^2 every step would add an O(d) pass per iteration for nothing.
+#  * interpret=True: lowers to plain HLO (while + dynamic-slice + dot) that
+#    the rust PJRT CPU client executes. On a real TPU the same BlockSpec
+#    structure would pin X, w, dw in VMEM across all H steps (see DESIGN.md
+#    section 7); the MXU is idle (rank-1 ops), the VPU dot is the unit.
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref
+
+LOGISTIC_NEWTON_ITERS = ref.LOGISTIC_NEWTON_ITERS
+LOGISTIC_EPS = ref.LOGISTIC_EPS
+
+
+def coord_delta(loss: str, q, y, a, s, gamma):
+    """Traced 1-D dual maximizer; mirrors ref.coord_delta exactly.
+
+    All arguments are scalars (traced). `s` is ||x_i||^2 / (lambda n).
+    Guarded so a zero row (s == 0) yields delta == 0 instead of NaN.
+    """
+    s_safe = jnp.maximum(s, 1e-12)
+    if loss == "hinge":
+        b = jnp.clip((1.0 - y * q) / s_safe + y * a, 0.0, 1.0)
+        delta = y * b - a
+    elif loss == "smoothed_hinge":
+        b = jnp.clip((1.0 - y * q - gamma * y * a) / (s_safe + gamma) + y * a,
+                     0.0, 1.0)
+        delta = y * b - a
+    elif loss == "squared":
+        delta = (y - q - a) / (1.0 + s_safe)
+    elif loss == "logistic":
+        eps = LOGISTIC_EPS
+
+        def newton(_, delta):
+            b = jnp.clip(y * (a + delta), eps, 1.0 - eps)
+            g = -y * jnp.log(b / (1.0 - b)) - q - s_safe * delta
+            hess = -1.0 / (b * (1.0 - b)) - s_safe
+            delta = delta - g / hess
+            b_new = jnp.clip(y * (a + delta), eps, 1.0 - eps)
+            return y * b_new - a
+
+        delta = jax.lax.fori_loop(0, LOGISTIC_NEWTON_ITERS, newton,
+                                  jnp.zeros_like(q))
+    else:
+        raise ValueError(f"unknown loss {loss!r}")
+    return jnp.where(s > 0.0, delta, 0.0)
+
+
+def _kernel(loss, x_ref, y_ref, alpha_ref, w_ref, idx_ref, norms_ref,
+            scalars_ref, dalpha_ref, dw_ref):
+    """Pallas kernel body. scalars = [lam_n, gamma, H(float)]."""
+    X = x_ref[...]
+    y = y_ref[...]
+    alpha = alpha_ref[...]
+    w = w_ref[...]
+    idx = idx_ref[...]
+    norms = norms_ref[...]
+    lam_n = scalars_ref[0]
+    gamma = scalars_ref[1]
+    h_steps = scalars_ref[2].astype(jnp.int32)
+
+    n_k = X.shape[0]
+    d = X.shape[1]
+
+    def cond(state):
+        h, _, _ = state
+        return h < h_steps
+
+    def body(state):
+        h, dalpha, dw = state
+        i = idx[h]
+        x = jax.lax.dynamic_slice(X, (i, 0), (1, d)).reshape(d)
+        q = jnp.dot(x, w + dw)
+        a_cur = alpha[i] + dalpha[i]
+        s = norms[i] / lam_n
+        delta = coord_delta(loss, q, y[i], a_cur, s, gamma)
+        dalpha = dalpha.at[i].add(delta)
+        dw = dw + (delta / lam_n) * x
+        return h + 1, dalpha, dw
+
+    init = (jnp.int32(0), jnp.zeros(n_k, X.dtype), jnp.zeros(d, X.dtype))
+    _, dalpha, dw = jax.lax.while_loop(cond, body, init)
+    dalpha_ref[...] = dalpha
+    dw_ref[...] = dw
+
+
+def local_sdca(loss: str, X, y, alpha, w, idx, norms, scalars):
+    """H-step LocalSDCA epoch on one coordinate block.
+
+    Args:
+      loss: static loss name (selects the maximizer at lowering time).
+      X: (n_k, d) f32 local rows. y, alpha, norms: (n_k,) f32.
+      w: (d,) f32 shared primal vector. idx: (cap,) i32 coordinate sequence.
+      scalars: (3,) f32 = [lambda*n, gamma, H].
+
+    Returns:
+      (dalpha, dw): the update pair communicated by the worker.
+    """
+    n_k, d = X.shape
+    kernel = functools.partial(_kernel, loss)
+    return pl.pallas_call(
+        kernel,
+        out_shape=(
+            jax.ShapeDtypeStruct((n_k,), X.dtype),
+            jax.ShapeDtypeStruct((d,), X.dtype),
+        ),
+        interpret=True,
+    )(X, y, alpha, w, idx, norms, scalars)

@@ -1,0 +1,165 @@
+# Pure-numpy correctness oracles for the L1 kernels.
+#
+# These are deliberately written as straight-line python/numpy loops (no jax,
+# no vectorization tricks) so they are an *independent* ground truth for the
+# Pallas kernels in local_sdca.py / objective.py. pytest compares the two.
+#
+# Conventions (SSZ13 / CoCoA paper, DESIGN.md section 5):
+#   primal:  P(w) = (lambda/2)||w||^2 + (1/n) sum_i loss(x_i^T w, y_i)
+#   dual:    D(a) = -(lambda/2)||A a||^2 - (1/n) sum_i conj(-a_i)
+#   A_i = x_i / (lambda n),  w(a) = A a,  hinge dual box y_i a_i in [0,1].
+#   s_i = ||x_i||^2 / (lambda n) is the curvature of the 1-D subproblem.
+import numpy as np
+
+LOSSES = ("hinge", "smoothed_hinge", "squared", "logistic")
+
+# Number of Newton iterations used for the logistic coordinate maximizer.
+# Must match local_sdca.py so kernel and oracle agree.
+LOGISTIC_NEWTON_ITERS = 10
+LOGISTIC_EPS = 1e-6
+
+
+def loss_value(loss: str, a: float, y: float, gamma: float = 1.0) -> float:
+    """Primal loss ell_i(a) where a = x_i^T w."""
+    if loss == "hinge":
+        return max(0.0, 1.0 - y * a)
+    if loss == "smoothed_hinge":
+        ya = y * a
+        if ya >= 1.0:
+            return 0.0
+        if ya <= 1.0 - gamma:
+            return 1.0 - ya - gamma / 2.0
+        return (1.0 - ya) ** 2 / (2.0 * gamma)
+    if loss == "squared":
+        return 0.5 * (a - y) ** 2
+    if loss == "logistic":
+        # log(1 + exp(-y a)), numerically stable
+        return float(np.logaddexp(0.0, -y * a))
+    raise ValueError(loss)
+
+
+def conjugate_value(loss: str, alpha: float, y: float, gamma: float = 1.0) -> float:
+    """Conjugate term conj_i(-alpha_i) as it appears in D(a).
+
+    For the margin losses the dual variable is feasible iff y*alpha in [0,1]
+    (open interval for logistic); infeasible values return +inf.
+    """
+    b = y * alpha
+    if loss == "hinge":
+        if b < -1e-9 or b > 1.0 + 1e-9:
+            return float("inf")
+        return -b
+    if loss == "smoothed_hinge":
+        if b < -1e-9 or b > 1.0 + 1e-9:
+            return float("inf")
+        return -b + gamma * b * b / 2.0
+    if loss == "squared":
+        # ell(a) = (a-y)^2/2  =>  ell*(u) = u^2/2 + u y; conj(-alpha):
+        return alpha * alpha / 2.0 - alpha * y
+    if loss == "logistic":
+        if b <= 0.0 or b >= 1.0:
+            if b in (0.0, 1.0):
+                return 0.0  # limit of the entropy at the boundary
+            return float("inf")
+        return float(b * np.log(b) + (1.0 - b) * np.log(1.0 - b))
+    raise ValueError(loss)
+
+
+def coord_delta(loss: str, q: float, y: float, a: float, s: float,
+                gamma: float = 1.0) -> float:
+    """Closed-form / Newton maximizer of the 1-D dual subproblem.
+
+    Maximizes  -conj(-(a+delta)) - q*delta - s*delta^2/2  over delta,
+    where q = x_i^T w_current and s = ||x_i||^2/(lambda n).
+    """
+    if s <= 0.0:
+        return 0.0
+    if loss == "hinge":
+        b = np.clip((1.0 - y * q) / s + y * a, 0.0, 1.0)
+        return float(y * b - a)
+    if loss == "smoothed_hinge":
+        b = np.clip((1.0 - y * q - gamma * y * a) / (s + gamma) + y * a, 0.0, 1.0)
+        return float(y * b - a)
+    if loss == "squared":
+        return (y - q - a) / (1.0 + s)
+    if loss == "logistic":
+        eps = LOGISTIC_EPS
+        delta = 0.0
+        for _ in range(LOGISTIC_NEWTON_ITERS):
+            b = float(np.clip(y * (a + delta), eps, 1.0 - eps))
+            g = -y * np.log(b / (1.0 - b)) - q - s * delta
+            hess = -1.0 / (b * (1.0 - b)) - s
+            delta = delta - g / hess
+            # keep the iterate strictly inside the feasible box
+            b_new = float(np.clip(y * (a + delta), eps, 1.0 - eps))
+            delta = y * b_new - a
+        return float(delta)
+    raise ValueError(loss)
+
+
+def local_sdca_ref(X, y, alpha, w, idx, lam_n, gamma, H, loss):
+    """Oracle for Procedure B (LocalSDCA): H coordinate steps on one block.
+
+    Args:
+      X: (n_k, d) float array, local data rows.
+      y: (n_k,) labels.
+      alpha: (n_k,) local dual variables at round start.
+      w: (d,) shared primal vector consistent with the *global* alpha.
+      idx: (cap,) int coordinate sequence; only the first H entries are used.
+      lam_n: lambda * n (global n, not n_k).
+      gamma: smoothing parameter for smoothed_hinge.
+      H: number of inner steps.
+      loss: one of LOSSES.
+
+    Returns:
+      (delta_alpha, delta_w) with delta_w == X^T delta_alpha / lam_n.
+    """
+    X = np.asarray(X, dtype=np.float64)
+    y = np.asarray(y, dtype=np.float64)
+    alpha = np.asarray(alpha, dtype=np.float64)
+    w = np.asarray(w, dtype=np.float64)
+    n_k, d = X.shape
+    dalpha = np.zeros(n_k)
+    dw = np.zeros(d)
+    norms = (X * X).sum(axis=1)
+    for h in range(H):
+        i = int(idx[h])
+        x = X[i]
+        q = float(x @ (w + dw))
+        a_cur = alpha[i] + dalpha[i]
+        s = norms[i] / lam_n
+        delta = coord_delta(loss, q, float(y[i]), float(a_cur), float(s), gamma)
+        dalpha[i] += delta
+        dw += (delta / lam_n) * x
+    return dalpha, dw
+
+
+def block_objective_ref(X, y, alpha, w, gamma, loss):
+    """Oracle for the per-block objective partial sums.
+
+    Returns (loss_sum, conj_sum):
+      loss_sum = sum_i loss(x_i^T w, y_i)
+      conj_sum = sum_i conj(-alpha_i)
+    The leader combines these with (lambda/2)||w||^2 to form P and D.
+    """
+    X = np.asarray(X, dtype=np.float64)
+    margins = X @ np.asarray(w, dtype=np.float64)
+    loss_sum = sum(loss_value(loss, float(m), float(yi), gamma)
+                   for m, yi in zip(margins, y))
+    conj_sum = sum(conjugate_value(loss, float(ai), float(yi), gamma)
+                   for ai, yi in zip(alpha, y))
+    return float(loss_sum), float(conj_sum)
+
+
+def primal_ref(X, y, w, lam, n, gamma, loss):
+    """Full primal objective P(w) over one matrix holding all n rows."""
+    loss_sum, _ = block_objective_ref(X, y, np.zeros(len(y)), w, gamma, loss)
+    return 0.5 * lam * float(np.dot(w, w)) + loss_sum / n
+
+
+def dual_ref(X, y, alpha, lam, n, gamma, loss):
+    """Full dual objective D(alpha); w = A alpha is recomputed internally."""
+    w = np.asarray(X, dtype=np.float64).T @ np.asarray(alpha, np.float64)
+    w = w / (lam * n)
+    _, conj_sum = block_objective_ref(X, y, alpha, w, gamma, loss)
+    return -0.5 * lam * float(np.dot(w, w)) - conj_sum / n

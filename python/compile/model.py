@@ -1,0 +1,50 @@
+# L2: the CoCoA worker-side compute graph, assembled from the L1 kernels.
+#
+# Two graphs are AOT-lowered per (loss, shape) variant (see aot.py):
+#
+#   local_sdca_round  — one CoCoA outer-round's worth of local work on a
+#                       block: H SDCA steps -> (dalpha, dw). This is the
+#                       body the rust coordinator executes on every worker
+#                       every round (the hot path).
+#   eval_objectives   — the block's (loss_sum, conj_sum) partial objective
+#                       sums used by the leader for P/D/gap.
+#
+# Python exists only at build time; the rust runtime feeds these graphs
+# through PJRT with literals marshalled from its own data structures.
+import jax.numpy as jnp
+
+from .kernels import local_sdca as sdca_kernel
+from .kernels import objective as objective_kernel
+
+
+def make_local_sdca_round(loss: str):
+    """Returns fn(X, y, alpha, w, idx, norms, scalars) -> (dalpha, dw).
+
+    scalars = [lambda*n, gamma, H] as a (3,) f32 vector so one compiled
+    artifact serves every (lambda, H) configuration at runtime.
+    """
+
+    def local_sdca_round(X, y, alpha, w, idx, norms, scalars):
+        return sdca_kernel.local_sdca(loss, X, y, alpha, w, idx, norms, scalars)
+
+    return local_sdca_round
+
+
+def make_eval_objectives(loss: str):
+    """Returns fn(X, y, alpha, w, gamma) -> (loss_sum, conj_sum).
+
+    The leader combines partials: with S_l = sum_k loss_sum_k and
+    S_c = sum_k conj_sum_k,
+        P(w)     = (lambda/2)||w||^2 + S_l / n
+        D(alpha) = -(lambda/2)||w||^2 - S_c / n
+    ||w||^2 and the division by the *global* n live on the rust side.
+    """
+
+    def eval_objectives(X, y, alpha, w, gamma):
+        loss_sum, conj_sum = objective_kernel.block_objective(
+            loss, X, y, alpha, w, gamma)
+        # return_tuple lowering keeps scalar outputs; promote to (1,) so the
+        # rust side reads fixed-shape f32[1] buffers.
+        return jnp.reshape(loss_sum, (1,)), jnp.reshape(conj_sum, (1,))
+
+    return eval_objectives

@@ -1,0 +1,6 @@
+# Allow running `pytest python/tests/` from the repo root (the Makefile
+# cd's into python/, but the top-level test driver does not).
+import os
+import sys
+
+sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))

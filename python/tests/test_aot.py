@@ -1,0 +1,65 @@
+# AOT path tests: the HLO text artifacts parse, carry the right parameter
+# signature, and the manifest is consistent — everything the rust
+# ArtifactStore depends on.
+import hashlib
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+from compile import aot
+
+
+def entry_params(text: str) -> str:
+    """The input half of entry_computation_layout={(...)->...}."""
+    layout = text.split("entry_computation_layout={(", 1)[1]
+    return layout.split(")->", 1)[0]
+
+
+def test_to_hlo_text_local_sdca():
+    text = aot.lower_local_sdca("hinge", 8, 4, 16)
+    assert "HloModule" in text
+    params = entry_params(text)
+    # 7 entry parameters: X, y, alpha, w, idx, norms, scalars
+    assert params.count("f32") == 6 and params.count("s32") == 1
+    assert "f32[8,4]" in params and "s32[16]" in params and "f32[3]" in params
+
+
+def test_to_hlo_text_eval_objectives():
+    text = aot.lower_eval_objectives("hinge", 8, 4)
+    assert "HloModule" in text
+    params = entry_params(text)
+    # 5 entry parameters: X, y, alpha, w, gamma
+    assert params.count("f32") == 5
+    assert "f32[8,4]" in params
+
+
+def test_artifact_names_are_unique():
+    names = [aot.artifact_name(*s) for s in aot.SPECS_FULL]
+    assert len(names) == len(set(names))
+
+
+def test_losses_lower_to_distinct_hlo():
+    texts = {loss: aot.lower_local_sdca(loss, 8, 4, 16)
+             for loss in ("hinge", "squared", "logistic")}
+    assert len(set(texts.values())) == 3
+
+
+@pytest.mark.slow
+def test_aot_main_writes_manifest(tmp_path):
+    out = tmp_path / "artifacts"
+    subprocess.run(
+        [sys.executable, "-m", "compile.aot", "--quick", "--out-dir", str(out)],
+        check=True,
+        cwd=os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+    )
+    manifest = json.loads((out / "manifest.json").read_text())
+    assert manifest["version"] == 1
+    assert len(manifest["artifacts"]) == len(aot.SPECS_QUICK)
+    for entry in manifest["artifacts"]:
+        text = (out / entry["file"]).read_text()
+        assert "HloModule" in text
+        assert hashlib.sha256(text.encode()).hexdigest() == entry["sha256"]
+        assert {"kernel", "loss", "n_k", "d", "cap"} <= set(entry)

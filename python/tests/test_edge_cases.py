@@ -1,0 +1,167 @@
+# Edge-case coverage for the L1 kernels beyond the core sweeps in
+# test_kernel.py: boundary dual points, degenerate data, label skew, grid
+# tiling edges, and the exact contracts the rust runtime relies on.
+import numpy as np
+import pytest
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import local_sdca, objective, ref
+
+
+def run_kernel(loss, X, y, alpha, w, idx, lam_n, gamma, H):
+    norms = (X * X).sum(axis=1).astype(np.float32)
+    scalars = np.array([lam_n, gamma, H], dtype=np.float32)
+    da, dw = local_sdca.local_sdca(
+        loss, jnp.array(X), jnp.array(y), jnp.array(alpha), jnp.array(w),
+        jnp.array(idx), jnp.array(norms), jnp.array(scalars))
+    return np.asarray(da), np.asarray(dw)
+
+
+def test_alpha_at_box_boundaries_hinge():
+    """Starting exactly at the dual box corners must stay feasible."""
+    rng = np.random.default_rng(0)
+    n_k, d = 12, 5
+    X = rng.normal(size=(n_k, d)).astype(np.float32)
+    X /= np.maximum(1.0, np.linalg.norm(X, axis=1, keepdims=True))
+    y = rng.choice([-1.0, 1.0], n_k).astype(np.float32)
+    # half the coordinates at b=0, half at b=1
+    alpha = (y * np.tile([0.0, 1.0], n_k // 2)).astype(np.float32)
+    w = (X.T @ alpha / 2.0).astype(np.float32)
+    idx = rng.integers(0, n_k, 48).astype(np.int32)
+    da, _ = run_kernel("hinge", X, y, alpha, w, idx, 2.0, 1.0, 48)
+    b = y * (alpha + da)
+    assert np.all(b >= -1e-5) and np.all(b <= 1 + 1e-5)
+
+
+def test_single_row_block():
+    """n_k = 1: every step hits the same coordinate; must converge to the
+    1-D optimum, matching the oracle exactly."""
+    X = np.array([[0.6, 0.8]], np.float32)
+    y = np.array([1.0], np.float32)
+    alpha = np.zeros(1, np.float32)
+    w = np.zeros(2, np.float32)
+    idx = np.zeros(8, np.int32)
+    da, dw = run_kernel("squared", X, y, alpha, w, idx, 0.5, 1.0, 8)
+    da_r, dw_r = ref.local_sdca_ref(X, y, alpha, w, idx, 0.5, 1.0, 8, "squared")
+    np.testing.assert_allclose(da, da_r, rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(dw, dw_r, rtol=1e-5, atol=1e-6)
+
+
+def test_all_same_label():
+    """Degenerate label distribution (all +1) must still be handled."""
+    rng = np.random.default_rng(1)
+    n_k, d = 16, 4
+    X = rng.normal(size=(n_k, d)).astype(np.float32) * 0.5
+    y = np.ones(n_k, np.float32)
+    idx = rng.integers(0, n_k, 64).astype(np.int32)
+    for loss in ref.LOSSES:
+        da, dw = run_kernel(loss, X, y, np.zeros(n_k, np.float32),
+                            np.zeros(d, np.float32), idx, 1.6, 0.5, 64)
+        da_r, dw_r = ref.local_sdca_ref(
+            X, y, np.zeros(n_k), np.zeros(d), idx, 1.6, 0.5, 64, loss)
+        np.testing.assert_allclose(da, da_r, rtol=1e-4, atol=1e-5)
+
+
+def test_repeated_index_sequence():
+    """idx hammering one coordinate: updates must telescope exactly like
+    the sequential oracle (regression guard for the dalpha accumulation)."""
+    rng = np.random.default_rng(2)
+    n_k, d = 8, 3
+    X = rng.normal(size=(n_k, d)).astype(np.float32)
+    X /= np.maximum(1.0, np.linalg.norm(X, axis=1, keepdims=True))
+    y = rng.choice([-1.0, 1.0], n_k).astype(np.float32)
+    idx = np.full(32, 3, np.int32)  # only coordinate 3
+    da, dw = run_kernel("hinge", X, y, np.zeros(n_k, np.float32),
+                        np.zeros(d, np.float32), idx, 1.0, 1.0, 32)
+    da_r, dw_r = ref.local_sdca_ref(X, y, np.zeros(n_k), np.zeros(d),
+                                    idx, 1.0, 1.0, 32, "hinge")
+    np.testing.assert_allclose(da, da_r, rtol=1e-5, atol=1e-6)
+    assert np.all(da[np.arange(n_k) != 3] == 0)
+
+
+def test_h_less_than_capacity_ignores_tail():
+    """Only idx[:H] may be consumed: a garbage tail must not matter."""
+    rng = np.random.default_rng(3)
+    n_k, d, H = 10, 4, 7
+    X = rng.normal(size=(n_k, d)).astype(np.float32)
+    y = rng.choice([-1.0, 1.0], n_k).astype(np.float32)
+    base = rng.integers(0, n_k, 32).astype(np.int32)
+    poisoned = base.copy()
+    poisoned[H:] = 0  # different tail
+    out_a = run_kernel("hinge", X, y, np.zeros(n_k, np.float32),
+                       np.zeros(d, np.float32), base, 1.0, 1.0, H)
+    out_b = run_kernel("hinge", X, y, np.zeros(n_k, np.float32),
+                       np.zeros(d, np.float32), poisoned, 1.0, 1.0, H)
+    np.testing.assert_array_equal(out_a[0], out_b[0])
+    np.testing.assert_array_equal(out_a[1], out_b[1])
+
+
+def test_large_lambda_small_lambda():
+    """Extreme regularization scales: no NaN, matches oracle."""
+    rng = np.random.default_rng(4)
+    n_k, d = 12, 4
+    X = rng.normal(size=(n_k, d)).astype(np.float32)
+    X /= np.maximum(1.0, np.linalg.norm(X, axis=1, keepdims=True))
+    y = rng.choice([-1.0, 1.0], n_k).astype(np.float32)
+    idx = rng.integers(0, n_k, 24).astype(np.int32)
+    for lam_n in (1e-4, 1e4):
+        da, dw = run_kernel("smoothed_hinge", X, y, np.zeros(n_k, np.float32),
+                            np.zeros(d, np.float32), idx, lam_n, 0.5, 24)
+        assert np.all(np.isfinite(da)) and np.all(np.isfinite(dw))
+        da_r, dw_r = ref.local_sdca_ref(X, y, np.zeros(n_k), np.zeros(d),
+                                        idx, lam_n, 0.5, 24, "smoothed_hinge")
+        np.testing.assert_allclose(da, da_r, rtol=1e-3, atol=1e-5)
+
+
+@settings(max_examples=10, deadline=None)
+@given(tiles=st.integers(1, 4), d=st.integers(1, 16),
+       seed=st.integers(0, 2**31 - 1))
+def test_objective_grid_tiling_edges(tiles, d, seed):
+    """n_k exactly at TILE multiples exercises the accumulating grid."""
+    rng = np.random.default_rng(seed)
+    n_k = objective.TILE * tiles
+    X = rng.normal(size=(n_k, d)).astype(np.float32)
+    X /= np.maximum(1.0, np.linalg.norm(X, axis=1, keepdims=True))
+    y = rng.choice([-1.0, 1.0], n_k).astype(np.float32)
+    alpha = (y * rng.uniform(0, 1, n_k)).astype(np.float32)
+    w = rng.normal(0, 0.2, d).astype(np.float32)
+    ls, cs = objective.block_objective(
+        "smoothed_hinge", jnp.array(X), jnp.array(y), jnp.array(alpha),
+        jnp.array(w), jnp.float32(0.5))
+    ls_r, cs_r = ref.block_objective_ref(X, y, alpha, w, 0.5, "smoothed_hinge")
+    np.testing.assert_allclose(float(ls), ls_r, rtol=2e-3, atol=1e-3)
+    np.testing.assert_allclose(float(cs), cs_r, rtol=2e-3, atol=1e-3)
+
+
+def test_objective_logistic_boundary_alpha():
+    """Logistic conjugate at b in {0, 1} must return 0 (entropy limit),
+    not NaN — mirrors the rust-side convention."""
+    X = np.eye(3, dtype=np.float32)
+    y = np.array([1.0, -1.0, 1.0], np.float32)
+    alpha = np.array([0.0, -1.0, 1.0], np.float32)  # b = 0, 1, 1
+    w = np.zeros(3, np.float32)
+    ls, cs = objective.block_objective(
+        "logistic", jnp.array(X), jnp.array(y), jnp.array(alpha),
+        jnp.array(w), jnp.float32(1.0))
+    assert np.isfinite(float(ls)) and np.isfinite(float(cs))
+    assert abs(float(cs)) < 1e-6
+
+
+@pytest.mark.parametrize("loss", ref.LOSSES)
+def test_kernel_accepts_nonuniform_row_norms(loss):
+    """Rows well inside the unit ball (||x|| << 1) exercise the s_i != 1
+    curvature path."""
+    rng = np.random.default_rng(5)
+    n_k, d = 10, 4
+    scales = np.linspace(0.01, 1.0, n_k).reshape(-1, 1).astype(np.float32)
+    X = rng.normal(size=(n_k, d)).astype(np.float32)
+    X = scales * X / np.linalg.norm(X, axis=1, keepdims=True)
+    y = rng.choice([-1.0, 1.0], n_k).astype(np.float32)
+    idx = rng.integers(0, n_k, 40).astype(np.int32)
+    da, dw = run_kernel(loss, X, y, np.zeros(n_k, np.float32),
+                        np.zeros(d, np.float32), idx, 2.0, 0.5, 40)
+    da_r, dw_r = ref.local_sdca_ref(X, y, np.zeros(n_k), np.zeros(d),
+                                    idx, 2.0, 0.5, 40, loss)
+    np.testing.assert_allclose(da, da_r, rtol=1e-4, atol=1e-5)
+    np.testing.assert_allclose(dw, dw_r, rtol=1e-4, atol=1e-5)

@@ -1,0 +1,99 @@
+# L2 graph tests: shapes, dtypes, jit-ability, and the scalar-parameter
+# contract the rust runtime relies on (one artifact serves every lambda/H).
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+from compile import model
+from compile.kernels import ref
+
+
+def inputs(n_k=16, d=8, cap=32, seed=0):
+    rng = np.random.default_rng(seed)
+    X = rng.normal(size=(n_k, d)).astype(np.float32)
+    X /= np.maximum(1.0, np.linalg.norm(X, axis=1, keepdims=True))
+    y = rng.choice([-1.0, 1.0], n_k).astype(np.float32)
+    alpha = np.zeros(n_k, np.float32)
+    w = np.zeros(d, np.float32)
+    idx = rng.integers(0, n_k, cap).astype(np.int32)
+    norms = (X * X).sum(1).astype(np.float32)
+    return X, y, alpha, w, idx, norms
+
+
+@pytest.mark.parametrize("loss", ref.LOSSES)
+def test_local_sdca_round_shapes(loss):
+    X, y, alpha, w, idx, norms = inputs()
+    fn = jax.jit(model.make_local_sdca_round(loss))
+    scal = jnp.array([1.6, 0.5, 8.0], jnp.float32)
+    da, dw = fn(X, y, alpha, w, idx, norms, scal)
+    assert da.shape == (16,) and da.dtype == jnp.float32
+    assert dw.shape == (8,) and dw.dtype == jnp.float32
+
+
+def test_scalar_h_is_runtime_parameter():
+    """The same jitted graph must serve different H values (no retrace of
+    the while loop bound) — this is what makes one HLO artifact cover the
+    whole Figure-3 H sweep."""
+    X, y, alpha, w, idx, norms = inputs(cap=64)
+    fn = jax.jit(model.make_local_sdca_round("hinge"))
+    outs = {}
+    for H in (1, 7, 64):
+        da, dw = fn(X, y, alpha, w, idx, norms,
+                    jnp.array([1.6, 1.0, float(H)], jnp.float32))
+        outs[H] = np.asarray(da)
+        da_r, _ = ref.local_sdca_ref(X, y, alpha, w, idx, 1.6, 1.0, H, "hinge")
+        np.testing.assert_allclose(np.asarray(da), da_r, rtol=1e-4, atol=1e-5)
+    assert fn._cache_size() == 1
+    assert not np.array_equal(outs[1], outs[64])
+
+
+def test_scalar_lambda_is_runtime_parameter():
+    X, y, alpha, w, idx, norms = inputs()
+    fn = jax.jit(model.make_local_sdca_round("hinge"))
+    for lam_n in (0.5, 5.0):
+        da, dw = fn(X, y, alpha, w, idx, norms,
+                    jnp.array([lam_n, 1.0, 16.0], jnp.float32))
+        da_r, dw_r = ref.local_sdca_ref(X, y, alpha, w, idx, lam_n, 1.0, 16,
+                                        "hinge")
+        np.testing.assert_allclose(np.asarray(dw), dw_r, rtol=1e-4, atol=1e-5)
+    assert fn._cache_size() == 1
+
+
+@pytest.mark.parametrize("loss", ["hinge", "smoothed_hinge"])
+def test_eval_objectives_shapes(loss):
+    X, y, alpha, w, idx, norms = inputs()
+    fn = jax.jit(model.make_eval_objectives(loss))
+    ls, cs = fn(X, y, alpha, w, jnp.float32(0.5))
+    assert ls.shape == (1,) and cs.shape == (1,)
+    ls_r, cs_r = ref.block_objective_ref(X, y, alpha, w, 0.5, loss)
+    np.testing.assert_allclose(float(ls[0]), ls_r, rtol=1e-4, atol=1e-5)
+    np.testing.assert_allclose(float(cs[0]), cs_r, rtol=1e-4, atol=1e-5)
+
+
+def test_round_composes_with_objectives():
+    """One full CoCoA round on K=2 synthetic blocks through the L2 graphs:
+    averaging the per-block updates must not decrease the global dual."""
+    n_k, d, K = 32, 8, 2
+    lam = 0.05
+    n = n_k * K
+    blocks = [inputs(n_k, d, cap=64, seed=s) for s in (1, 2)]
+    Xg = np.vstack([b[0] for b in blocks])
+    yg = np.concatenate([b[1] for b in blocks])
+    round_fn = jax.jit(model.make_local_sdca_round("hinge"))
+    alpha = np.zeros(n, np.float32)
+    w = np.zeros(d, np.float32)
+    d0 = ref.dual_ref(Xg, yg, alpha, lam, n, 1.0, "hinge")
+    scal = jnp.array([lam * n, 1.0, 64.0], jnp.float32)
+    dalpha = np.zeros(n, np.float32)
+    dw_sum = np.zeros(d, np.float32)
+    for k, (X, y, a, _, idx, norms) in enumerate(blocks):
+        da, dw = round_fn(X, y, alpha[k * n_k:(k + 1) * n_k], w, idx, norms, scal)
+        dalpha[k * n_k:(k + 1) * n_k] = np.asarray(da) / K
+        dw_sum += np.asarray(dw) / K
+    alpha += dalpha
+    w += dw_sum
+    np.testing.assert_allclose(
+        w, Xg.T @ alpha / (lam * n), rtol=1e-4, atol=1e-6)
+    d1 = ref.dual_ref(Xg, yg, alpha, lam, n, 1.0, "hinge")
+    assert d1 >= d0 - 1e-8

@@ -1,0 +1,126 @@
+//! Ablation benches for the design choices DESIGN.md calls out:
+//!
+//!  A. inner sampling scheme — i.i.d.-with-replacement (Procedure B, what
+//!     the theory assumes) vs random-permutation passes (LibLinear-style);
+//!  B. partition strategy — contiguous vs random assignment, and its
+//!     effect on Lemma 3's sigma_min and on measured convergence;
+//!  C. aggregation — CoCoA averaging (beta_K = 1) vs the CoCoA+ extension
+//!     (beta_K = K with sigma' = K scaled subproblems) across K.
+//!
+//! ```bash
+//! cargo bench --bench ablations
+//! ```
+
+use cocoa::algorithms::{run, Budget};
+use cocoa::config::{AlgorithmSpec, Backend};
+use cocoa::coordinator::Cluster;
+use cocoa::data::{cov_like, Partition, PartitionStrategy};
+use cocoa::loss::LossKind;
+use cocoa::netsim::NetworkModel;
+use cocoa::solvers::SolverKind;
+use cocoa::theory;
+use cocoa::util::bench::time_once;
+
+fn gap_after(
+    data: &cocoa::data::Dataset,
+    part: &Partition,
+    spec: &AlgorithmSpec,
+    solver: SolverKind,
+    rounds: u64,
+    seed: u64,
+) -> f64 {
+    let mut cl = Cluster::build(
+        data,
+        part,
+        LossKind::Hinge,
+        1.0 / data.n() as f64,
+        solver,
+        Backend::Native,
+        "artifacts",
+        NetworkModel::free(),
+        seed,
+    )
+    .unwrap();
+    let tr = run(&mut cl, spec, Budget::rounds(rounds), rounds, None, "ablate").unwrap();
+    cl.shutdown();
+    tr.rows.last().unwrap().gap
+}
+
+fn main() {
+    let data = cov_like(4000, 54, 0.1, 101);
+    let k = 4;
+    let h = data.n() / k;
+    let part = Partition::new(PartitionStrategy::Contiguous, data.n(), k, 0);
+
+    // --- A: sampling scheme ---
+    println!("== ablation A: inner sampling scheme (cov 4000x54, K=4, 10 rounds) ==");
+    for (name, solver) in [
+        ("with_replacement", SolverKind::Sdca),
+        ("permutation", SolverKind::SdcaPerm),
+    ] {
+        let ((), secs) = time_once(&format!("sampling={name}"), || {
+            let gap = gap_after(
+                &data,
+                &part,
+                &AlgorithmSpec::Cocoa { h, beta_k: 1.0, solver },
+                solver,
+                10,
+                7,
+            );
+            println!("  sampling={name:<18} final gap {gap:.3e}");
+        });
+        let _ = secs;
+    }
+
+    // --- B: partition strategy vs sigma_min and convergence ---
+    println!("\n== ablation B: partition strategy (Lemma 3 sigma_min + convergence) ==");
+    println!(
+        "{:<14} {:>12} {:>14}",
+        "strategy", "sigma_min", "gap @10 rounds"
+    );
+    for strategy in [
+        PartitionStrategy::Contiguous,
+        PartitionStrategy::RoundRobin,
+        PartitionStrategy::Random,
+    ] {
+        let p = Partition::new(strategy, data.n(), k, 3);
+        let sigma = theory::sigma_min_estimate(&data, &p, 60, 5);
+        let gap = gap_after(
+            &data,
+            &p,
+            &AlgorithmSpec::Cocoa { h, beta_k: 1.0, solver: SolverKind::Sdca },
+            SolverKind::Sdca,
+            10,
+            9,
+        );
+        println!("{:<14} {:>12.3} {:>14.3e}", strategy.name(), sigma, gap);
+    }
+
+    // --- C: aggregation across K ---
+    println!("\n== ablation C: averaging (CoCoA) vs sigma'-scaled adding (CoCoA+) ==");
+    println!("{:<4} {:>16} {:>16}", "K", "cocoa gap@8", "cocoa+ gap@8");
+    for k in [2usize, 4, 8, 16] {
+        let p = Partition::new(PartitionStrategy::Contiguous, data.n(), k, 0);
+        let h = data.n() / k;
+        let plain = gap_after(
+            &data,
+            &p,
+            &AlgorithmSpec::Cocoa { h, beta_k: 1.0, solver: SolverKind::Sdca },
+            SolverKind::Sdca,
+            8,
+            11,
+        );
+        let plus = gap_after(
+            &data,
+            &p,
+            &AlgorithmSpec::CocoaPlus { h },
+            SolverKind::Sdca,
+            8,
+            11,
+        );
+        println!("{:<4} {:>16.3e} {:>16.3e}", k, plain, plus);
+    }
+    println!("\nExpected shape: permutation ~ with-replacement (slightly better);");
+    println!("partition strategy barely moves sigma_min on i.i.d.-ish data;");
+    println!("CoCoA+ pulls ahead of averaging as K grows (its 1/K dilution bites).");
+}

@@ -1,0 +1,50 @@
+//! End-to-end bench behind Figures 1 and 2: time (simulated + wall) and
+//! communicated vectors to .001-accurate primal suboptimality for each
+//! Section-6 algorithm, on the smoke-scale versions of all three dataset
+//! regimes.
+//!
+//! ```bash
+//! cargo bench --bench fig1_time_to_accuracy
+//! ```
+//!
+//! (The paper-scale run is `cocoa repro fig1`; this bench keeps the same
+//! structure at a size cargo-bench can run on every invocation.)
+
+use cocoa::experiments::{self, figures, Profile};
+use cocoa::util::bench::time_once;
+
+fn main() {
+    let results_dir = "results/bench";
+    let profile = Profile::Smoke;
+    let rounds = 200;
+    println!("== fig1/fig2 bench: time & communication to .001 suboptimality ==");
+    for ds in experiments::datasets(profile) {
+        let name = ds.name;
+        let (best, wall) = time_once(&format!("sweep {name} (K={})", ds.k), || {
+            figures::fig1_fig2_dataset(&ds, profile, rounds, 1e-3, results_dir).unwrap()
+        });
+        println!(
+            "{:<14} {:>8} {:>16} {:>18} {:>14}",
+            "algorithm", "best H", "t(.001) sim s", "vectors(.001)", "final subopt"
+        );
+        for b in &best {
+            println!(
+                "{:<14} {:>8} {:>16} {:>18} {:>14.2e}",
+                b.algorithm,
+                b.h,
+                b.time_to_target.map(|t| format!("{t:.3}")).unwrap_or("-".into()),
+                b.vectors_to_target.map(|v| v.to_string()).unwrap_or("-".into()),
+                b.final_subopt,
+            );
+        }
+        let h = figures::headline(&best, name);
+        match h.speedup {
+            Some(s) => println!(
+                "headline[{name}]: cocoa {:.1}x faster than {} (paper: ~25x)  [bench wall {wall:.1}s]\n",
+                s,
+                h.best_other.unwrap().0
+            ),
+            None => println!("headline[{name}]: baseline never reached target\n"),
+        }
+    }
+}

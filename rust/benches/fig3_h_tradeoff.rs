@@ -1,0 +1,55 @@
+//! Bench behind Figure 3 (effect of H on CoCoA) and Figure 4 (beta
+//! scaling): the communication/computation trade-off curve on the cov
+//! regime, plus the beta sensitivity table.
+//!
+//! ```bash
+//! cargo bench --bench fig3_h_tradeoff
+//! ```
+
+use cocoa::experiments::{self, figures, Profile};
+use cocoa::util::bench::time_once;
+
+fn main() {
+    let results_dir = "results/bench";
+    let profile = Profile::Smoke;
+    let ds = &experiments::datasets(profile)[0]; // cov, K = 4 as in the paper
+
+    // --- Figure 3: H sweep ---
+    let (runs, _) = time_once("fig3 H sweep (cov)", || {
+        figures::fig3(ds, profile, 120, results_dir).unwrap()
+    });
+    println!("\nFigure 3: effect of H on CoCoA ({} K={})", ds.name, ds.k);
+    println!(
+        "{:>8} {:>10} {:>14} {:>14} {:>16}",
+        "H", "rounds", "final subopt", "sim time s", "vectors total"
+    );
+    for (h, tr) in &runs {
+        let last = tr.rows.last().unwrap();
+        println!(
+            "{:>8} {:>10} {:>14.2e} {:>14.3} {:>16}",
+            h, last.round, last.primal_subopt, last.sim_time_s, last.vectors
+        );
+    }
+
+    // --- Figure 4: beta scaling at two batch sizes ---
+    let n_k = ds.data.n() / ds.k;
+    for h in [n_k, 100.min(n_k)] {
+        let (cells, _) = time_once(&format!("fig4 beta sweep (H={h})"), || {
+            figures::fig4(ds, h, 120, 1e-3, results_dir).unwrap()
+        });
+        println!("\nFigure 4: beta scaling on {} at H={h}", ds.name);
+        println!(
+            "{:<14} {:>10} {:>16} {:>14}",
+            "algorithm", "beta", "t(.001) sim s", "final subopt"
+        );
+        for c in &cells {
+            println!(
+                "{:<14} {:>10.1} {:>16} {:>14.2e}",
+                c.algorithm,
+                c.beta,
+                c.time_to_target.map(|t| format!("{t:.3}")).unwrap_or("-".into()),
+                c.final_subopt
+            );
+        }
+    }
+}

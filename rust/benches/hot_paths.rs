@@ -1,0 +1,125 @@
+//! Micro-benchmarks of the hot paths (L3 perf deliverable, EXPERIMENTS.md
+//! section Perf): the dense/sparse row kernels, the SDCA inner step, a full
+//! local epoch, the leader reduce, and the evaluation pass.
+//!
+//! ```bash
+//! cargo bench --bench hot_paths
+//! ```
+
+use cocoa::data::{cov_like, rcv1_like};
+use cocoa::loss::{Hinge, Loss};
+use cocoa::objective;
+use cocoa::solvers::{Block, LocalDualMethod, LocalSdca, Sampling};
+use cocoa::util::bench::{bench, black_box};
+use cocoa::util::Rng;
+
+fn main() {
+    println!("== hot paths (native backend) ==");
+
+    // --- row kernels, the innermost ops ---
+    let dense = cov_like(4096, 54, 0.1, 1);
+    let wide = cov_like(512, 1024, 0.1, 2);
+    let sparse = rcv1_like(4096, 10_000, 12, 0.1, 3);
+    let w54: Vec<f64> = (0..54).map(|i| (i as f64).sin()).collect();
+    let w1024: Vec<f64> = (0..1024).map(|i| (i as f64).sin()).collect();
+    let w10k: Vec<f64> = (0..10_000).map(|i| (i as f64).sin()).collect();
+
+    let mut i = 0usize;
+    bench("row_dot dense d=54", 30, 2.0, || {
+        i = (i + 1) & 4095;
+        black_box(dense.features.row_dot(i, &w54));
+    });
+    bench("row_dot dense d=1024", 30, 2.0, || {
+        i = (i + 1) & 511;
+        black_box(wide.features.row_dot(i, &w1024));
+    });
+    bench("row_dot csr ~12nnz of d=10k", 30, 2.0, || {
+        i = (i + 1) & 4095;
+        black_box(sparse.features.row_dot(i, &w10k));
+    });
+
+    let mut out54 = vec![0.0; 54];
+    bench("axpy dense d=54", 30, 2.0, || {
+        i = (i + 1) & 4095;
+        dense.features.add_row_scaled(i, 1e-9, &mut out54);
+    });
+
+    // --- one SDCA coordinate step (dot + solve + axpy) ---
+    let block = Block { data: cov_like(4096, 54, 0.1, 4), lambda_n: 1e-5 * 4096.0 };
+    let mut w_local = vec![0.0; 54];
+    let mut alpha = vec![0.0; 4096];
+    let mut rng = Rng::seed_from_u64(5);
+    bench("sdca inner step dense d=54", 30, 2.0, || {
+        let i = rng.gen_range(4096);
+        let q = block.data.features.row_dot(i, &w_local);
+        let delta = Hinge.coord_delta(q, block.data.labels[i], alpha[i], block.curvature(i));
+        alpha[i] += delta;
+        block
+            .data
+            .features
+            .add_row_scaled(i, delta / block.lambda_n, &mut w_local);
+    });
+
+    // --- a full local epoch (the per-round unit of work) ---
+    let solver = LocalSdca::new(Sampling::WithReplacement);
+    let alpha0 = vec![0.0; 4096];
+    let w0 = vec![0.0; 54];
+    let mut rng2 = Rng::seed_from_u64(6);
+    bench("local epoch H=4096 dense 4096x54", 15, 30.0, || {
+        black_box(solver.local_update(&block, &Hinge, &alpha0, &w0, 4096, &mut rng2));
+    });
+
+    let sparse_block =
+        Block { data: rcv1_like(4096, 10_000, 12, 0.1, 7), lambda_n: 1e-4 * 4096.0 };
+    let alpha_s = vec![0.0; 4096];
+    let w_s = vec![0.0; 10_000];
+    let mut rng3 = Rng::seed_from_u64(8);
+    bench("local epoch H=4096 csr 4096x10k", 15, 30.0, || {
+        black_box(solver.local_update(&sparse_block, &Hinge, &alpha_s, &w_s, 4096, &mut rng3));
+    });
+
+    // --- leader-side reduce (w += scale * sum dw) ---
+    let dws: Vec<Vec<f64>> = (0..8).map(|s| {
+        let mut r = Rng::seed_from_u64(s);
+        (0..54).map(|_| r.gen_f64()).collect()
+    }).collect();
+    let mut w_leader = vec![0.0; 54];
+    bench("leader reduce K=8 d=54", 30, 1.0, || {
+        for dw in &dws {
+            for (a, b) in w_leader.iter_mut().zip(dw) {
+                *a += 0.125 * b;
+            }
+        }
+        black_box(&w_leader);
+    });
+
+    // --- evaluation pass (per-round instrumentation cost) ---
+    bench("block objective eval 4096x54", 15, 10.0, || {
+        black_box(objective::block_loss_sum(&block.data, &w0, &Hinge));
+        black_box(objective::block_conj_sum(&block.data, &alpha0, &Hinge));
+    });
+
+    // --- coordinator round overhead (dispatch + gather + commit, H=0) ---
+    {
+        use cocoa::config::Backend;
+        use cocoa::coordinator::{Cluster, LocalWork};
+        use cocoa::data::{Partition, PartitionStrategy};
+        use cocoa::loss::LossKind;
+        use cocoa::netsim::NetworkModel;
+        use cocoa::solvers::SolverKind;
+        let data = cov_like(256, 54, 0.1, 9);
+        let part = Partition::new(PartitionStrategy::Contiguous, 256, 4, 0);
+        let mut cluster = Cluster::build(
+            &data, &part, LossKind::Hinge, 0.01, SolverKind::Sdca,
+            Backend::Native, "artifacts", NetworkModel::free(), 10,
+        )
+        .unwrap();
+        bench("coordinator round overhead K=4 (H=0)", 15, 5.0, || {
+            let replies = cluster.dispatch(|_| LocalWork::DualRound { h: 0 }).unwrap();
+            cluster.commit(&replies, 0.25).unwrap();
+        });
+        cluster.shutdown();
+    }
+
+    println!("\nderived: steps/s for the dense d=54 epoch = H / epoch_time.");
+}

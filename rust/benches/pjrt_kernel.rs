@@ -1,0 +1,69 @@
+//! L1/L2 perf: the AOT Pallas kernel through the PJRT engine.
+//!
+//! interpret=True on CPU is a correctness vehicle, not a TPU proxy, so
+//! these numbers characterize the *structure*: per-step cost vs block
+//! shape (is the while-loop body O(d) or accidentally O(n_k·d)?), call
+//! overhead, and the H-chunking path. EXPERIMENTS.md §Perf reads the
+//! TPU roofline estimate off the BlockSpec instead.
+//!
+//! ```bash
+//! make artifacts && cargo bench --bench pjrt_kernel
+//! ```
+
+use cocoa::data::cov_like;
+use cocoa::runtime::Engine;
+use cocoa::util::bench::time_once;
+use cocoa::util::Rng;
+
+fn main() {
+    let dir = std::path::Path::new("artifacts");
+    if !dir.join("manifest.tsv").exists() {
+        eprintln!("artifacts not built — run `make artifacts` first");
+        return;
+    }
+    let engine = Engine::start(dir).unwrap();
+    let handle = engine.handle();
+
+    // register both shapes the manifest carries
+    for (id, n_k, d) in [(0usize, 128usize, 16usize), (1, 25_000, 54)] {
+        let data = cov_like(n_k, d, 0.1, 7 + id as u64);
+        let mut x = Vec::with_capacity(n_k * d);
+        for i in 0..n_k {
+            for v in data.features.row_dense(i) {
+                x.push(v as f32);
+            }
+        }
+        let y: Vec<f32> = data.labels.iter().map(|&v| v as f32).collect();
+        let norms: Vec<f32> = (0..n_k).map(|i| data.norm_sq(i) as f32).collect();
+        handle.register_block(id, x, y, norms, n_k, d).unwrap();
+    }
+
+    let mut rng = Rng::seed_from_u64(9);
+    let mut run = |id: usize, n_k: usize, d: usize, h: usize, label: &str| {
+        let idx: Vec<i32> = (0..h).map(|_| rng.gen_range(n_k) as i32).collect();
+        let (out, secs) = time_once(label, || {
+            handle
+                .local_sdca(id, "hinge", vec![0.0; n_k], vec![0.0; d], idx.clone(), 1.0, 1.0)
+                .unwrap()
+        });
+        println!(
+            "    engine compute {:.3} ms -> {:.0} ns/step (H={h})",
+            out.compute_s * 1e3,
+            out.compute_s * 1e9 / h as f64
+        );
+        let _ = secs;
+    };
+
+    println!("== PJRT local_sdca structural costs ==");
+    // call overhead: H = 1
+    run(0, 128, 16, 1, "128x16  H=1 (call overhead)");
+    run(0, 128, 16, 256, "128x16  H=256 (full capacity)");
+    // chunking: H = 3 * cap
+    run(0, 128, 16, 768, "128x16  H=768 (3 chunks)");
+    // the e2e shape: per-step cost must be ~independent of n_k
+    run(1, 25_000, 54, 1_000, "25000x54 H=1000");
+    run(1, 25_000, 54, 25_000, "25000x54 H=25000 (full pass)");
+
+    println!("\nIf ns/step at 25000x54 is within ~4x of 128x16, the loop body");
+    println!("is O(d) as designed (no hidden O(n_k) per-iteration copies).");
+}

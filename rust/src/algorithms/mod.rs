@@ -1,0 +1,289 @@
+//! The Section-6 algorithms, all driven over the same [`Cluster`] runtime
+//! so their communication/computation profiles are directly comparable:
+//!
+//! | name          | local work                   | leader update                                  |
+//! |---------------|------------------------------|------------------------------------------------|
+//! | cocoa         | H SDCA steps, locally applied| `w += (beta_K/K) sum dw` (Algorithm 1)         |
+//! | minibatch_cd  | b=H coord updates, frozen w  | `w += (beta_b/(K H)) sum dw` [TBRS13/Yan13]    |
+//! | minibatch_sgd | H subgradients, frozen w     | Pegasos step over the K·H batch [SSSSC10]      |
+//! | local_sgd     | H Pegasos steps, local w     | `w += (beta/K) sum (w_k - w)`                  |
+//! | naive_cd      | cocoa with H = 1             | communicate every update                       |
+//! | naive_sgd     | local_sgd with H = 1         | communicate every update                       |
+//! | one_shot_avg  | solve block to optimality    | single round, average models [ZDW13]           |
+
+use anyhow::Result;
+
+use crate::config::AlgorithmSpec;
+use crate::coordinator::{Cluster, LocalWork};
+use crate::telemetry::{Trace, TraceRow};
+
+/// Stopping criteria for a run (whichever fires first).
+#[derive(Debug, Clone, Copy)]
+pub struct Budget {
+    pub rounds: u64,
+    /// Stop when gap <= target_gap (0 disables).
+    pub target_gap: f64,
+    /// Stop when P - P* <= target_subopt (needs `p_star`; 0 disables).
+    pub target_subopt: f64,
+}
+
+impl Budget {
+    pub fn rounds(rounds: u64) -> Self {
+        Budget { rounds, target_gap: 0.0, target_subopt: 0.0 }
+    }
+}
+
+/// Drive `spec` on the cluster, evaluating every `eval_every` rounds.
+/// `p_star`: reference optimum for the suboptimality axis (NaN-safe).
+pub fn run(
+    cluster: &mut Cluster,
+    spec: &AlgorithmSpec,
+    budget: Budget,
+    eval_every: u64,
+    p_star: Option<f64>,
+    dataset_name: &str,
+) -> Result<Trace> {
+    let mut trace = Trace::new(
+        spec.name(),
+        dataset_name,
+        cluster.k,
+        spec.h(),
+        spec.beta(),
+        cluster.lambda(),
+    );
+    // round 0 snapshot
+    record(cluster, &mut trace, 0, p_star)?;
+
+    let k = cluster.k as f64;
+    let lambda = cluster.lambda();
+    let mut sgd_t: u64 = 0; // global Pegasos step counter
+
+    let total_rounds = match spec {
+        AlgorithmSpec::OneShotAvg => 1,
+        _ => budget.rounds,
+    };
+
+    for round in 1..=total_rounds {
+        match spec {
+            AlgorithmSpec::Cocoa { h, beta_k, .. } => {
+                let h = *h;
+                let replies = cluster.dispatch(|_| LocalWork::DualRound { h })?;
+                cluster.commit(&replies, beta_k / k)?;
+            }
+            AlgorithmSpec::CocoaPlus { h } => {
+                let (h, k_usize) = (*h, cluster.k);
+                let sigma_prime = k_usize as f64;
+                let replies = cluster
+                    .dispatch(|_| LocalWork::DualRoundScaled { h, sigma_prime })?;
+                // beta_K = K adding: scale 1.0 (safe because the local
+                // subproblems were solved with sigma' = K curvature)
+                cluster.commit(&replies, 1.0)?;
+            }
+            AlgorithmSpec::NaiveCd => {
+                let replies = cluster.dispatch(|_| LocalWork::DualRound { h: 1 })?;
+                cluster.commit(&replies, 1.0 / k)?;
+            }
+            AlgorithmSpec::MinibatchCd { h, beta_b } => {
+                let b_per_worker = *h;
+                let replies =
+                    cluster.dispatch(|_| LocalWork::DualBatchFrozen { b: b_per_worker })?;
+                let b_total = (b_per_worker as f64) * k;
+                cluster.commit(&replies, beta_b / b_total)?;
+            }
+            AlgorithmSpec::LocalSgd { h, beta } => {
+                let (h, beta) = (*h, *beta);
+                let t0 = sgd_t;
+                let replies = cluster.dispatch(|_| LocalWork::SgdLocal { h, t_offset: t0 })?;
+                sgd_t += h as u64;
+                let mut w = cluster.w.clone();
+                for r in &replies {
+                    for (wv, dv) in w.iter_mut().zip(&r.dw) {
+                        *wv += beta * dv / k;
+                    }
+                }
+                cluster.set_w(w);
+            }
+            AlgorithmSpec::NaiveSgd => {
+                let t0 = sgd_t;
+                let replies =
+                    cluster.dispatch(|_| LocalWork::SgdLocal { h: 1, t_offset: t0 })?;
+                sgd_t += 1;
+                let mut w = cluster.w.clone();
+                for r in &replies {
+                    for (wv, dv) in w.iter_mut().zip(&r.dw) {
+                        *wv += dv / k;
+                    }
+                }
+                cluster.set_w(w);
+            }
+            AlgorithmSpec::MinibatchSgd { h, beta } => {
+                let (h, beta) = (*h, *beta);
+                let replies = cluster.dispatch(|_| LocalWork::SgdFrozen { h })?;
+                // one Pegasos step over the K*H mini-batch
+                let t = round;
+                let eta = 1.0 / (lambda * t as f64);
+                let batch = (h as f64) * k;
+                let mut w = cluster.w.clone();
+                let shrink = 1.0 - eta * lambda;
+                for wv in w.iter_mut() {
+                    *wv *= shrink;
+                }
+                for r in &replies {
+                    for (wv, gv) in w.iter_mut().zip(&r.dw) {
+                        *wv -= eta * beta * gv / batch;
+                    }
+                }
+                cluster.set_w(w);
+            }
+            AlgorithmSpec::OneShotAvg => {
+                let replies = cluster.dispatch(|_| LocalWork::ExactSolve)?;
+                cluster.commit(&replies, 1.0 / k)?;
+            }
+        }
+
+        if round % eval_every == 0 || round == total_rounds {
+            let row = record(cluster, &mut trace, round, p_star)?;
+            let stop_gap = budget.target_gap > 0.0 && row.gap <= budget.target_gap;
+            let stop_subopt = budget.target_subopt > 0.0
+                && row.primal_subopt.is_finite()
+                && row.primal_subopt <= budget.target_subopt;
+            if stop_gap || stop_subopt {
+                break;
+            }
+        }
+    }
+    Ok(trace)
+}
+
+fn record(
+    cluster: &mut Cluster,
+    trace: &mut Trace,
+    round: u64,
+    p_star: Option<f64>,
+) -> Result<TraceRow> {
+    let ev = cluster.evaluate()?;
+    let row = TraceRow {
+        round,
+        sim_time_s: cluster.stats.sim_time_s,
+        compute_time_s: cluster.stats.compute_s,
+        vectors: cluster.stats.vectors,
+        bytes: cluster.stats.bytes,
+        inner_steps: cluster.stats.inner_steps,
+        primal: ev.primal,
+        dual: ev.dual,
+        gap: ev.gap,
+        primal_subopt: p_star.map(|p| ev.primal - p).unwrap_or(f64::NAN),
+    };
+    trace.push(row);
+    Ok(row)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{AlgorithmSpec, Backend};
+    use crate::data::{cov_like, Partition, PartitionStrategy};
+    use crate::loss::LossKind;
+    use crate::netsim::NetworkModel;
+    use crate::solvers::SolverKind;
+
+    fn cluster(k: usize, seed: u64) -> Cluster {
+        let data = cov_like(80, 6, 0.1, seed);
+        let part = Partition::new(PartitionStrategy::Contiguous, 80, k, 0);
+        Cluster::build(
+            &data,
+            &part,
+            LossKind::Hinge,
+            0.05,
+            SolverKind::Sdca,
+            Backend::Native,
+            "artifacts",
+            NetworkModel::free(),
+            seed,
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn every_algorithm_runs_and_descends() {
+        let specs = vec![
+            AlgorithmSpec::Cocoa { h: 40, beta_k: 1.0, solver: SolverKind::Sdca },
+            AlgorithmSpec::MinibatchCd { h: 10, beta_b: 10.0 },
+            AlgorithmSpec::MinibatchSgd { h: 20, beta: 1.0 },
+            AlgorithmSpec::LocalSgd { h: 20, beta: 1.0 },
+            AlgorithmSpec::NaiveCd,
+            AlgorithmSpec::NaiveSgd,
+            AlgorithmSpec::OneShotAvg,
+        ];
+        for spec in specs {
+            let mut cl = cluster(2, 3);
+            // naive variants process one point per round; give them
+            // proportionally more rounds to show progress
+            let rounds = if spec.name().starts_with("naive") { 400 } else { 12 };
+            let trace = run(&mut cl, &spec, Budget::rounds(rounds), 4, None, "test").unwrap();
+            let p0 = trace.rows.first().unwrap().primal;
+            let p_end = trace.best_primal();
+            assert!(
+                p_end < p0,
+                "{} failed to descend: {p0} -> {p_end}",
+                spec.name()
+            );
+            cl.shutdown();
+        }
+    }
+
+    #[test]
+    fn cocoa_gap_shrinks_geometrically_ish() {
+        let mut cl = cluster(4, 5);
+        let spec = AlgorithmSpec::Cocoa { h: 100, beta_k: 1.0, solver: SolverKind::Sdca };
+        let trace = run(&mut cl, &spec, Budget::rounds(20), 1, None, "test").unwrap();
+        let g0 = trace.rows[1].gap;
+        let g_end = trace.rows.last().unwrap().gap;
+        assert!(g_end < g0 * 0.2, "gap barely moved: {g0} -> {g_end}");
+        // dual must be monotone for beta_K = 1 averaging
+        for pair in trace.rows.windows(2) {
+            assert!(pair[1].dual >= pair[0].dual - 1e-9);
+        }
+        cl.shutdown();
+    }
+
+    #[test]
+    fn target_gap_stops_early() {
+        let mut cl = cluster(2, 7);
+        let spec = AlgorithmSpec::Cocoa { h: 200, beta_k: 1.0, solver: SolverKind::Sdca };
+        let budget = Budget { rounds: 500, target_gap: 0.05, target_subopt: 0.0 };
+        let trace = run(&mut cl, &spec, budget, 1, None, "test").unwrap();
+        assert!(trace.rows.last().unwrap().gap <= 0.05);
+        assert!((trace.rows.len() as u64) < 500);
+        cl.shutdown();
+    }
+
+    #[test]
+    fn one_shot_is_single_round() {
+        let mut cl = cluster(2, 9);
+        let trace =
+            run(&mut cl, &AlgorithmSpec::OneShotAvg, Budget::rounds(50), 1, None, "test").unwrap();
+        assert_eq!(trace.rows.last().unwrap().round, 1);
+        assert_eq!(cl.stats.rounds, 1);
+        cl.shutdown();
+    }
+
+    #[test]
+    fn cocoa_beats_minibatch_per_round_at_same_h() {
+        // The paper's core claim in micro: same number of coordinate
+        // updates per round, but CoCoA's locally-applied updates make more
+        // progress per communication round.
+        let h = 40;
+        let mut cl_a = cluster(4, 11);
+        let cocoa = AlgorithmSpec::Cocoa { h, beta_k: 1.0, solver: SolverKind::Sdca };
+        let tr_a = run(&mut cl_a, &cocoa, Budget::rounds(15), 15, None, "t").unwrap();
+        let mut cl_b = cluster(4, 11);
+        let mb = AlgorithmSpec::MinibatchCd { h, beta_b: 1.0 };
+        let tr_b = run(&mut cl_b, &mb, Budget::rounds(15), 15, None, "t").unwrap();
+        let ga = tr_a.rows.last().unwrap().gap;
+        let gb = tr_b.rows.last().unwrap().gap;
+        assert!(ga < gb, "cocoa gap {ga} not better than minibatch {gb}");
+        cl_a.shutdown();
+        cl_b.shutdown();
+    }
+}

@@ -1,0 +1,466 @@
+//! TOML experiment configuration — the single declarative entry point the
+//! CLI launcher consumes (`cocoa train --config exp.toml`).
+//!
+//! Parsed with the in-tree [`crate::util::toml_lite`] subset parser
+//! (offline build: no serde/toml crates). See `examples/configs/` for
+//! ready-to-run files.
+
+use std::path::Path;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::data::{self, Dataset, Partition, PartitionStrategy};
+use crate::loss::LossKind;
+use crate::netsim::NetworkModel;
+use crate::solvers::SolverKind;
+use crate::util::toml_lite::Doc;
+
+/// Which execution backend workers use for the local dual method.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum Backend {
+    /// Pure-rust inner loop (any shape, dense or sparse).
+    #[default]
+    Native,
+    /// AOT JAX/Pallas kernel via PJRT (block shape must match an artifact).
+    Pjrt,
+}
+
+impl Backend {
+    pub fn from_name(name: &str) -> Option<Self> {
+        match name {
+            "native" => Some(Backend::Native),
+            "pjrt" => Some(Backend::Pjrt),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Backend::Native => "native",
+            Backend::Pjrt => "pjrt",
+        }
+    }
+}
+
+/// Dataset selection.
+#[derive(Debug, Clone, PartialEq)]
+pub enum DatasetSpec {
+    CovLike { n: usize, d: usize, noise: f64, seed: u64 },
+    Rcv1Like { n: usize, d: usize, nnz_per_row: usize, noise: f64, seed: u64 },
+    ImagenetLike { n: usize, d: usize, noise: f64, seed: u64 },
+    Orthogonal { k: usize, rows_per_block: usize, cols_per_block: usize, seed: u64 },
+    Libsvm { path: String, d_hint: usize },
+}
+
+impl DatasetSpec {
+    pub fn name(&self) -> String {
+        match self {
+            DatasetSpec::CovLike { n, d, .. } => format!("cov_like_{n}x{d}"),
+            DatasetSpec::Rcv1Like { n, d, .. } => format!("rcv1_like_{n}x{d}"),
+            DatasetSpec::ImagenetLike { n, d, .. } => format!("imagenet_like_{n}x{d}"),
+            DatasetSpec::Orthogonal { k, rows_per_block, .. } => {
+                format!("orthogonal_{k}x{rows_per_block}")
+            }
+            DatasetSpec::Libsvm { path, .. } => Path::new(path)
+                .file_stem()
+                .map(|s| s.to_string_lossy().into_owned())
+                .unwrap_or_else(|| "libsvm".into()),
+        }
+    }
+
+    pub fn load(&self) -> Result<Dataset> {
+        Ok(match self {
+            DatasetSpec::CovLike { n, d, noise, seed } => data::cov_like(*n, *d, *noise, *seed),
+            DatasetSpec::Rcv1Like { n, d, nnz_per_row, noise, seed } => {
+                data::rcv1_like(*n, *d, *nnz_per_row, *noise, *seed)
+            }
+            DatasetSpec::ImagenetLike { n, d, noise, seed } => {
+                data::imagenet_like(*n, *d, *noise, *seed)
+            }
+            DatasetSpec::Orthogonal { k, rows_per_block, cols_per_block, seed } => {
+                data::orthogonal_blocks(*k, *rows_per_block, *cols_per_block, *seed)
+            }
+            DatasetSpec::Libsvm { path, d_hint } => {
+                let mut ds = data::read_libsvm(path, *d_hint)?;
+                ds.normalize_rows();
+                ds
+            }
+        })
+    }
+
+    fn from_doc(doc: &Doc) -> Result<Self> {
+        let kind = doc.str_of("dataset", "kind")?;
+        let noise = doc.f64_or("dataset", "noise", 0.1);
+        let seed = doc.u64_or("dataset", "seed", 0);
+        Ok(match kind {
+            "cov_like" => DatasetSpec::CovLike {
+                n: doc.usize_of("dataset", "n")?,
+                d: doc.usize_of("dataset", "d")?,
+                noise,
+                seed,
+            },
+            "rcv1_like" => DatasetSpec::Rcv1Like {
+                n: doc.usize_of("dataset", "n")?,
+                d: doc.usize_of("dataset", "d")?,
+                nnz_per_row: doc.usize_or("dataset", "nnz_per_row", 12),
+                noise,
+                seed,
+            },
+            "imagenet_like" => DatasetSpec::ImagenetLike {
+                n: doc.usize_of("dataset", "n")?,
+                d: doc.usize_of("dataset", "d")?,
+                noise,
+                seed,
+            },
+            "orthogonal" => DatasetSpec::Orthogonal {
+                k: doc.usize_of("dataset", "k")?,
+                rows_per_block: doc.usize_of("dataset", "rows_per_block")?,
+                cols_per_block: doc.usize_of("dataset", "cols_per_block")?,
+                seed,
+            },
+            "libsvm" => DatasetSpec::Libsvm {
+                path: doc.str_of("dataset", "path")?.to_string(),
+                d_hint: doc.usize_or("dataset", "d_hint", 0),
+            },
+            other => bail!("unknown dataset kind {other:?}"),
+        })
+    }
+}
+
+/// Algorithm selection + hyperparameters (Section 6's competitors).
+#[derive(Debug, Clone, PartialEq)]
+pub enum AlgorithmSpec {
+    /// Algorithm 1 with the configured local solver.
+    Cocoa { h: usize, beta_k: f64, solver: SolverKind },
+    /// Extension (the conclusion's beta_K > 1 open problem, resolved by the
+    /// CoCoA+ follow-up): ADD the K updates (beta_K = K) while scaling the
+    /// local subproblem curvature by sigma' = K so the aggressive
+    /// aggregation stays safe.
+    CocoaPlus { h: usize },
+    /// Mini-batch SDCA (mini-batch-CD in the figures).
+    MinibatchCd { h: usize, beta_b: f64 },
+    /// Mini-batch Pegasos.
+    MinibatchSgd { h: usize, beta: f64 },
+    /// Locally-updating Pegasos.
+    LocalSgd { h: usize, beta: f64 },
+    /// Communicate after every coordinate update (H = 1 CoCoA).
+    NaiveCd,
+    /// Communicate after every SGD step.
+    NaiveSgd,
+    /// One round: solve each block to optimality and average [ZDW13].
+    OneShotAvg,
+}
+
+impl AlgorithmSpec {
+    pub fn name(&self) -> &'static str {
+        match self {
+            AlgorithmSpec::Cocoa { .. } => "cocoa",
+            AlgorithmSpec::CocoaPlus { .. } => "cocoa_plus",
+            AlgorithmSpec::MinibatchCd { .. } => "minibatch_cd",
+            AlgorithmSpec::MinibatchSgd { .. } => "minibatch_sgd",
+            AlgorithmSpec::LocalSgd { .. } => "local_sgd",
+            AlgorithmSpec::NaiveCd => "naive_cd",
+            AlgorithmSpec::NaiveSgd => "naive_sgd",
+            AlgorithmSpec::OneShotAvg => "one_shot_avg",
+        }
+    }
+
+    pub fn h(&self) -> usize {
+        match self {
+            AlgorithmSpec::Cocoa { h, .. }
+            | AlgorithmSpec::CocoaPlus { h }
+            | AlgorithmSpec::MinibatchCd { h, .. }
+            | AlgorithmSpec::MinibatchSgd { h, .. }
+            | AlgorithmSpec::LocalSgd { h, .. } => *h,
+            AlgorithmSpec::NaiveCd | AlgorithmSpec::NaiveSgd => 1,
+            AlgorithmSpec::OneShotAvg => 0,
+        }
+    }
+
+    pub fn beta(&self) -> f64 {
+        match self {
+            AlgorithmSpec::Cocoa { beta_k, .. } => *beta_k,
+            AlgorithmSpec::MinibatchCd { beta_b, .. } => *beta_b,
+            AlgorithmSpec::MinibatchSgd { beta, .. } | AlgorithmSpec::LocalSgd { beta, .. } => {
+                *beta
+            }
+            _ => 1.0,
+        }
+    }
+
+    fn from_doc(doc: &Doc) -> Result<Self> {
+        let name = doc.str_of("algorithm", "name")?;
+        let h = || doc.usize_of("algorithm", "h");
+        Ok(match name {
+            "cocoa" => AlgorithmSpec::Cocoa {
+                h: h()?,
+                beta_k: doc.f64_or("algorithm", "beta_k", 1.0),
+                solver: match doc.str_or("algorithm", "solver", "sdca") {
+                    "sdca" => SolverKind::Sdca,
+                    "sdca_perm" => SolverKind::SdcaPerm,
+                    "exact" => SolverKind::Exact,
+                    "gap_certified" => SolverKind::GapCertified,
+                    other => bail!("unknown solver {other:?}"),
+                },
+            },
+            "cocoa_plus" => AlgorithmSpec::CocoaPlus { h: h()? },
+            "minibatch_cd" => AlgorithmSpec::MinibatchCd {
+                h: h()?,
+                beta_b: doc.f64_or("algorithm", "beta_b", 1.0),
+            },
+            "minibatch_sgd" => AlgorithmSpec::MinibatchSgd {
+                h: h()?,
+                beta: doc.f64_or("algorithm", "beta", 1.0),
+            },
+            "local_sgd" => AlgorithmSpec::LocalSgd {
+                h: h()?,
+                beta: doc.f64_or("algorithm", "beta", 1.0),
+            },
+            "naive_cd" => AlgorithmSpec::NaiveCd,
+            "naive_sgd" => AlgorithmSpec::NaiveSgd,
+            "one_shot_avg" => AlgorithmSpec::OneShotAvg,
+            other => bail!("unknown algorithm {other:?}"),
+        })
+    }
+}
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct PartitionSpec {
+    pub k: usize,
+    pub strategy: PartitionStrategy,
+    pub seed: u64,
+}
+
+impl PartitionSpec {
+    pub fn build(&self, n: usize) -> Partition {
+        Partition::new(self.strategy, n, self.k, self.seed)
+    }
+
+    fn from_doc(doc: &Doc) -> Result<Self> {
+        let strategy_name = doc.str_or("partition", "strategy", "contiguous");
+        Ok(PartitionSpec {
+            k: doc.usize_of("partition", "k")?,
+            strategy: PartitionStrategy::from_name(strategy_name)
+                .ok_or_else(|| anyhow!("unknown partition strategy {strategy_name:?}"))?,
+            seed: doc.u64_or("partition", "seed", 0),
+        })
+    }
+}
+
+/// Run budget / stopping criteria.
+#[derive(Debug, Clone, PartialEq)]
+pub struct RunSpec {
+    /// Max outer rounds (T in Algorithm 1).
+    pub rounds: u64,
+    /// Stop when the duality gap falls below this (0 disables).
+    pub target_gap: f64,
+    /// Stop when P(w) - P* falls below this (requires a known optimum).
+    pub target_subopt: f64,
+    /// Evaluate P/D/gap every this many rounds.
+    pub eval_every: u64,
+    pub seed: u64,
+    pub backend: Backend,
+}
+
+impl RunSpec {
+    fn from_doc(doc: &Doc) -> Result<Self> {
+        let backend_name = doc.str_or("run", "backend", "native");
+        Ok(RunSpec {
+            rounds: doc.u64_or("run", "rounds", 50),
+            target_gap: doc.f64_or("run", "target_gap", 0.0),
+            target_subopt: doc.f64_or("run", "target_subopt", 0.0),
+            eval_every: doc.u64_or("run", "eval_every", 1),
+            seed: doc.u64_or("run", "seed", 0),
+            backend: Backend::from_name(backend_name)
+                .ok_or_else(|| anyhow!("unknown backend {backend_name:?}"))?,
+        })
+    }
+}
+
+/// The full experiment description.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ExperimentConfig {
+    pub dataset: DatasetSpec,
+    pub partition: PartitionSpec,
+    pub algorithm: AlgorithmSpec,
+    pub loss: LossKind,
+    pub lambda: f64,
+    pub run: RunSpec,
+    pub netsim: NetworkModel,
+    /// Where HLO artifacts live (Backend::Pjrt).
+    pub artifacts_dir: String,
+}
+
+impl ExperimentConfig {
+    pub fn from_toml_file<P: AsRef<Path>>(path: P) -> Result<Self> {
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("read {}", path.as_ref().display()))?;
+        Self::from_toml(&text)
+            .with_context(|| format!("in config {}", path.as_ref().display()))
+    }
+
+    pub fn from_toml(text: &str) -> Result<Self> {
+        let doc = Doc::parse(text)?;
+        let loss_name = doc.str_or("loss", "kind", "hinge");
+        let gamma = doc.f64_or("loss", "gamma", 1.0);
+        let loss = LossKind::from_name(loss_name, gamma)
+            .ok_or_else(|| anyhow!("unknown loss {loss_name:?}"))?;
+        let netsim = if doc.has_section("netsim") {
+            if let Some(preset) = doc.get("netsim", "preset").and_then(|v| v.as_str()) {
+                NetworkModel::by_name(preset)
+                    .ok_or_else(|| anyhow!("unknown netsim preset {preset:?}"))?
+            } else {
+                NetworkModel {
+                    latency_s: doc.f64_or("netsim", "latency_s", 5e-3),
+                    bandwidth_bps: doc.f64_or("netsim", "bandwidth_bps", 125e6),
+                    bytes_per_scalar: doc.usize_or("netsim", "bytes_per_scalar", 8),
+                }
+            }
+        } else {
+            NetworkModel::ec2_like()
+        };
+        Ok(ExperimentConfig {
+            dataset: DatasetSpec::from_doc(&doc)?,
+            partition: PartitionSpec::from_doc(&doc)?,
+            algorithm: AlgorithmSpec::from_doc(&doc)?,
+            loss,
+            lambda: doc.f64_of("", "lambda")?,
+            run: RunSpec::from_doc(&doc)?,
+            netsim,
+            artifacts_dir: doc.str_or("", "artifacts_dir", "artifacts").to_string(),
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"
+lambda = 1e-4
+
+[dataset]
+kind = "cov_like"
+n = 1000
+d = 54
+seed = 42
+
+[partition]
+k = 4
+
+[algorithm]
+name = "cocoa"
+h = 250
+
+[loss]
+kind = "hinge"
+
+[run]
+rounds = 50
+target_subopt = 1e-3
+"#;
+
+    #[test]
+    fn sample_config_parses() {
+        let cfg = ExperimentConfig::from_toml(SAMPLE).unwrap();
+        assert_eq!(cfg.partition.k, 4);
+        assert_eq!(cfg.algorithm.name(), "cocoa");
+        assert_eq!(cfg.algorithm.h(), 250);
+        assert_eq!(cfg.algorithm.beta(), 1.0);
+        assert_eq!(cfg.run.eval_every, 1);
+        assert_eq!(cfg.run.backend, Backend::Native);
+        assert_eq!(cfg.run.rounds, 50);
+        assert_eq!(cfg.run.target_subopt, 1e-3);
+        assert_eq!(cfg.loss, LossKind::Hinge);
+        assert_eq!(cfg.netsim, NetworkModel::ec2_like());
+    }
+
+    #[test]
+    fn dataset_spec_loads() {
+        let spec = DatasetSpec::CovLike { n: 50, d: 6, noise: 0.1, seed: 1 };
+        let ds = spec.load().unwrap();
+        assert_eq!(ds.n(), 50);
+        assert_eq!(spec.name(), "cov_like_50x6");
+    }
+
+    #[test]
+    fn explicit_netsim_parses() {
+        let text = r#"
+lambda = 0.1
+
+[dataset]
+kind = "cov_like"
+n = 10
+d = 2
+
+[partition]
+k = 2
+
+[algorithm]
+name = "naive_cd"
+
+[loss]
+kind = "squared"
+
+[run]
+rounds = 5
+
+[netsim]
+latency_s = 0.001
+bandwidth_bps = 1e9
+"#;
+        let cfg = ExperimentConfig::from_toml(text).unwrap();
+        assert_eq!(cfg.netsim.latency_s, 0.001);
+        assert_eq!(cfg.netsim.bandwidth_bps, 1e9);
+        assert_eq!(cfg.loss, LossKind::Squared);
+    }
+
+    #[test]
+    fn netsim_preset_parses() {
+        let text = format!("{SAMPLE}\n[netsim]\npreset = \"multicore\"\n");
+        let cfg = ExperimentConfig::from_toml(&text).unwrap();
+        assert_eq!(cfg.netsim, NetworkModel::multicore());
+    }
+
+    #[test]
+    fn all_algorithms_parse() {
+        for (name, extra) in [
+            ("cocoa", "h = 10"),
+            ("cocoa_plus", "h = 10"),
+            ("minibatch_cd", "h = 10\nbeta_b = 2.0"),
+            ("minibatch_sgd", "h = 10"),
+            ("local_sgd", "h = 10\nbeta = 1.0"),
+            ("naive_cd", ""),
+            ("naive_sgd", ""),
+            ("one_shot_avg", ""),
+        ] {
+            let text = format!(
+                "lambda = 0.1\n[dataset]\nkind = \"cov_like\"\nn = 10\nd = 2\n\
+                 [partition]\nk = 2\n[algorithm]\nname = \"{name}\"\n{extra}\n\
+                 [loss]\nkind = \"hinge\"\n[run]\nrounds = 1\n"
+            );
+            let cfg = ExperimentConfig::from_toml(&text).unwrap();
+            assert_eq!(cfg.algorithm.name(), name);
+        }
+    }
+
+    #[test]
+    fn unknown_fields_give_useful_errors() {
+        let bad_loss = SAMPLE.replace("kind = \"hinge\"", "kind = \"l0\"");
+        assert!(ExperimentConfig::from_toml(&bad_loss).is_err());
+        let bad_alg = SAMPLE.replace("name = \"cocoa\"", "name = \"adamw\"");
+        assert!(ExperimentConfig::from_toml(&bad_alg).is_err());
+        let no_lambda = SAMPLE.replace("lambda = 1e-4", "");
+        assert!(ExperimentConfig::from_toml(&no_lambda).is_err());
+    }
+
+    #[test]
+    fn smoothed_hinge_gamma_flows_through() {
+        let text = SAMPLE.replace(
+            "kind = \"hinge\"",
+            "kind = \"smoothed_hinge\"\ngamma = 0.25",
+        );
+        let cfg = ExperimentConfig::from_toml(&text).unwrap();
+        assert_eq!(cfg.loss, LossKind::SmoothedHinge { gamma: 0.25 });
+    }
+}

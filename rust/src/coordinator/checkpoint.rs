@@ -1,0 +1,263 @@
+//! Checkpoint / resume — fault-tolerance for long training runs.
+//!
+//! The paper's implementation sat on Spark for fault tolerance; a
+//! standalone framework needs its own. A checkpoint captures the full
+//! optimization state: the leader's `w` and accounting, plus each worker's
+//! committed `alpha_[k]` and RNG state, so a restored run continues the
+//! exact coordinate stream of the original (bit-identical native-backend
+//! trajectories — tested in `integration_coordinator`).
+//!
+//! Format: versioned text, one record per line — robust, diffable, and
+//! independent of any serialization crate (offline build):
+//!
+//! ```text
+//! #cocoa-checkpoint v1
+//! meta <k> <n> <d> <round_counter>
+//! stats <rounds> <vectors> <bytes> <compute_s> <sim_time_s> <inner_steps>
+//! w <d hex-f64 words>
+//! worker <id> rng <s0> <s1> <s2> <s3>
+//! alpha <id> <n_k hex-f64 words>
+//! ```
+//!
+//! Floats are stored as hex bit patterns: exact round-trip, no precision
+//! loss through decimal formatting.
+
+use std::io::Write;
+use std::path::Path;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+/// One worker's persisted state.
+#[derive(Debug, Clone, PartialEq)]
+pub struct WorkerState {
+    pub id: usize,
+    pub rng_state: [u64; 4],
+    pub alpha: Vec<f64>,
+}
+
+/// The full cluster state at a round boundary.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Checkpoint {
+    pub k: usize,
+    pub n: usize,
+    pub d: usize,
+    pub round_counter: u64,
+    pub stats: super::CommStats,
+    pub w: Vec<f64>,
+    pub workers: Vec<WorkerState>,
+}
+
+impl PartialEq for super::CommStats {
+    fn eq(&self, other: &Self) -> bool {
+        self.rounds == other.rounds
+            && self.vectors == other.vectors
+            && self.bytes == other.bytes
+            && self.compute_s == other.compute_s
+            && self.sim_time_s == other.sim_time_s
+            && self.inner_steps == other.inner_steps
+    }
+}
+
+fn write_f64s(out: &mut String, values: &[f64]) {
+    for v in values {
+        out.push(' ');
+        out.push_str(&format!("{:016x}", v.to_bits()));
+    }
+}
+
+fn parse_f64s(tokens: &[&str]) -> Result<Vec<f64>> {
+    tokens
+        .iter()
+        .map(|t| {
+            u64::from_str_radix(t, 16)
+                .map(f64::from_bits)
+                .with_context(|| format!("bad f64 word {t:?}"))
+        })
+        .collect()
+}
+
+impl Checkpoint {
+    pub fn save<P: AsRef<Path>>(&self, path: P) -> Result<()> {
+        if let Some(parent) = path.as_ref().parent() {
+            std::fs::create_dir_all(parent)?;
+        }
+        let mut text = String::new();
+        text.push_str("#cocoa-checkpoint v1\n");
+        text.push_str(&format!(
+            "meta {} {} {} {}\n",
+            self.k, self.n, self.d, self.round_counter
+        ));
+        text.push_str(&format!(
+            "stats {} {} {} {:016x} {:016x} {}\n",
+            self.stats.rounds,
+            self.stats.vectors,
+            self.stats.bytes,
+            self.stats.compute_s.to_bits(),
+            self.stats.sim_time_s.to_bits(),
+            self.stats.inner_steps,
+        ));
+        text.push_str("w");
+        write_f64s(&mut text, &self.w);
+        text.push('\n');
+        for ws in &self.workers {
+            text.push_str(&format!(
+                "worker {} rng {:016x} {:016x} {:016x} {:016x}\n",
+                ws.id, ws.rng_state[0], ws.rng_state[1], ws.rng_state[2], ws.rng_state[3]
+            ));
+            text.push_str(&format!("alpha {}", ws.id));
+            write_f64s(&mut text, &ws.alpha);
+            text.push('\n');
+        }
+        let mut f = std::fs::File::create(&path)
+            .with_context(|| format!("create {}", path.as_ref().display()))?;
+        f.write_all(text.as_bytes())?;
+        Ok(())
+    }
+
+    pub fn load<P: AsRef<Path>>(path: P) -> Result<Checkpoint> {
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("read {}", path.as_ref().display()))?;
+        let mut lines = text.lines();
+        let header = lines.next().context("empty checkpoint")?;
+        if header != "#cocoa-checkpoint v1" {
+            bail!("bad checkpoint header {header:?}");
+        }
+        let meta: Vec<&str> = lines.next().context("missing meta")?.split(' ').collect();
+        if meta.len() != 5 || meta[0] != "meta" {
+            bail!("bad meta line");
+        }
+        let (k, n, d, round_counter) = (
+            meta[1].parse()?,
+            meta[2].parse()?,
+            meta[3].parse()?,
+            meta[4].parse()?,
+        );
+        let st: Vec<&str> = lines.next().context("missing stats")?.split(' ').collect();
+        if st.len() != 7 || st[0] != "stats" {
+            bail!("bad stats line");
+        }
+        let stats = super::CommStats {
+            rounds: st[1].parse()?,
+            vectors: st[2].parse()?,
+            bytes: st[3].parse()?,
+            compute_s: f64::from_bits(u64::from_str_radix(st[4], 16)?),
+            sim_time_s: f64::from_bits(u64::from_str_radix(st[5], 16)?),
+            inner_steps: st[6].parse()?,
+        };
+        let wline: Vec<&str> = lines.next().context("missing w")?.split(' ').collect();
+        if wline[0] != "w" {
+            bail!("bad w line");
+        }
+        let w = parse_f64s(&wline[1..])?;
+        if w.len() != d {
+            bail!("w length {} != d {d}", w.len());
+        }
+        let mut workers = Vec::with_capacity(k);
+        let mut pending: Option<(usize, [u64; 4])> = None;
+        for line in lines {
+            let toks: Vec<&str> = line.split(' ').collect();
+            match toks.first().copied() {
+                Some("worker") => {
+                    if toks.len() != 7 || toks[2] != "rng" {
+                        bail!("bad worker line");
+                    }
+                    let id: usize = toks[1].parse()?;
+                    let rng = [
+                        u64::from_str_radix(toks[3], 16)?,
+                        u64::from_str_radix(toks[4], 16)?,
+                        u64::from_str_radix(toks[5], 16)?,
+                        u64::from_str_radix(toks[6], 16)?,
+                    ];
+                    pending = Some((id, rng));
+                }
+                Some("alpha") => {
+                    let (id, rng_state) =
+                        pending.take().ok_or_else(|| anyhow!("alpha before worker"))?;
+                    let alpha_id: usize = toks[1].parse()?;
+                    if alpha_id != id {
+                        bail!("alpha id {alpha_id} != worker id {id}");
+                    }
+                    workers.push(WorkerState {
+                        id,
+                        rng_state,
+                        alpha: parse_f64s(&toks[2..])?,
+                    });
+                }
+                Some("") | None => {}
+                Some(other) => bail!("unknown record {other:?}"),
+            }
+        }
+        if workers.len() != k {
+            bail!("checkpoint has {} workers, meta says {k}", workers.len());
+        }
+        Ok(Checkpoint { k, n, d, round_counter, stats, w, workers })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> Checkpoint {
+        Checkpoint {
+            k: 2,
+            n: 5,
+            d: 3,
+            round_counter: 7,
+            stats: crate::coordinator::CommStats {
+                rounds: 7,
+                vectors: 28,
+                bytes: 672,
+                compute_s: 0.125,
+                sim_time_s: 1.5e-3,
+                inner_steps: 700,
+            },
+            w: vec![1.0, -0.5, f64::consts_hack()],
+            workers: vec![
+                WorkerState { id: 0, rng_state: [1, 2, 3, 4], alpha: vec![0.25, -0.75, 0.0] },
+                WorkerState { id: 1, rng_state: [5, 6, 7, 8], alpha: vec![1e-300, 42.0] },
+            ],
+        }
+    }
+
+    trait Hack {
+        fn consts_hack() -> f64;
+    }
+    impl Hack for f64 {
+        fn consts_hack() -> f64 {
+            std::f64::consts::PI // exercises a non-trivial bit pattern
+        }
+    }
+
+    #[test]
+    fn roundtrip_exact() {
+        let cp = sample();
+        let path = std::env::temp_dir().join("cocoa_ckpt_test/rt.ckpt");
+        cp.save(&path).unwrap();
+        let back = Checkpoint::load(&path).unwrap();
+        assert_eq!(cp, back);
+    }
+
+    #[test]
+    fn rejects_corruption() {
+        let cp = sample();
+        let path = std::env::temp_dir().join("cocoa_ckpt_test/bad.ckpt");
+        cp.save(&path).unwrap();
+        let mut text = std::fs::read_to_string(&path).unwrap();
+        text = text.replace("#cocoa-checkpoint v1", "#cocoa-checkpoint v9");
+        std::fs::write(&path, &text).unwrap();
+        assert!(Checkpoint::load(&path).is_err());
+    }
+
+    #[test]
+    fn subnormal_and_special_values_survive() {
+        let mut cp = sample();
+        cp.w = vec![f64::MIN_POSITIVE / 2.0, -0.0, f64::MAX];
+        let path = std::env::temp_dir().join("cocoa_ckpt_test/special.ckpt");
+        cp.save(&path).unwrap();
+        let back = Checkpoint::load(&path).unwrap();
+        assert_eq!(cp.w[0].to_bits(), back.w[0].to_bits());
+        assert_eq!(cp.w[1].to_bits(), back.w[1].to_bits());
+        assert_eq!(cp.w[2].to_bits(), back.w[2].to_bits());
+    }
+}

@@ -1,0 +1,462 @@
+//! The CoCoA coordinator — Algorithm 1 of the paper as a leader/worker
+//! runtime, plus the communication accounting every figure depends on.
+//!
+//! The leader owns the shared primal vector `w` and the network-cost
+//! bookkeeping; each worker thread owns one coordinate block. One round:
+//!
+//! 1. broadcast `w` with a [`LocalWork`] order (K vectors down),
+//! 2. workers compute locally and reply with one `dw` each (K vectors up),
+//! 3. the leader reduces `w += scale * sum_k dw_k` and tells workers to
+//!    fold their pending `dalpha` in with the same scale
+//!    (`scale = beta_K / K`, Algorithm 1's averaging).
+//!
+//! Evaluation (P/D/duality gap) flows through the same channels but is
+//! *not* counted as algorithm communication — it is instrumentation.
+
+pub mod checkpoint;
+pub mod messages;
+mod worker;
+
+pub use checkpoint::Checkpoint;
+pub use messages::{EvalReply, LocalWork, RoundReply, ToLeader, ToWorker};
+pub use worker::WorkerConfig;
+
+use std::sync::mpsc::{channel, Receiver, Sender};
+
+use anyhow::{anyhow, Result};
+
+use crate::config::Backend;
+use crate::data::{Dataset, Partition};
+use crate::loss::LossKind;
+use crate::netsim::NetworkModel;
+use crate::objective;
+use crate::runtime;
+use crate::solvers::{Block, SolverKind};
+
+/// Exact communication/time accounting for a run.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct CommStats {
+    pub rounds: u64,
+    /// d-dimensional vectors moved (K broadcasts + K replies per round).
+    pub vectors: u64,
+    pub bytes: u64,
+    /// Sum over rounds of max-over-workers compute seconds.
+    pub compute_s: f64,
+    /// Simulated distributed time under the network model.
+    pub sim_time_s: f64,
+    /// Total inner steps across all workers.
+    pub inner_steps: u64,
+}
+
+/// Leader + K worker threads over a partitioned dataset.
+pub struct Cluster {
+    to_workers: Vec<Sender<ToWorker>>,
+    from_workers: Receiver<ToLeader>,
+    handles: Vec<std::thread::JoinHandle<()>>,
+    pub k: usize,
+    pub n: usize,
+    pub d: usize,
+    pub w: Vec<f64>,
+    pub net: NetworkModel,
+    /// Optional straggler injection for the simulated time axis.
+    pub stragglers: crate::netsim::StragglerModel,
+    pub stats: CommStats,
+    pub block_sizes: Vec<usize>,
+    loss: LossKind,
+    lambda: f64,
+    round_counter: u64,
+    /// Keeps the PJRT engine (and its compiled executables) alive.
+    _engine: Option<runtime::Engine>,
+}
+
+impl Cluster {
+    /// Partition `data`, spawn K workers, and (for `Backend::Pjrt`) start
+    /// the PJRT engine and register every block with it.
+    #[allow(clippy::too_many_arguments)]
+    pub fn build(
+        data: &Dataset,
+        partition: &Partition,
+        loss: LossKind,
+        lambda: f64,
+        solver: SolverKind,
+        backend: Backend,
+        artifacts_dir: &str,
+        net: NetworkModel,
+        seed: u64,
+    ) -> Result<Cluster> {
+        partition.validate().map_err(|e| anyhow!("invalid partition: {e}"))?;
+        let k = partition.k();
+        let n = data.n();
+        let d = data.d();
+        let lambda_n = lambda * n as f64;
+
+        let engine = match backend {
+            Backend::Native => None,
+            Backend::Pjrt => Some(runtime::Engine::start(artifacts_dir)?),
+        };
+
+        let (to_leader_tx, from_workers) = channel::<ToLeader>();
+        let mut to_workers = Vec::with_capacity(k);
+        let mut handles = Vec::with_capacity(k);
+        let mut block_sizes = Vec::with_capacity(k);
+
+        for (kid, rows) in partition.blocks.iter().enumerate() {
+            let block = Block { data: data.subset(rows), lambda_n };
+            block_sizes.push(block.n_k());
+            let solver_impl: Box<dyn crate::solvers::LocalDualMethod> = match (&backend, &engine)
+            {
+                (Backend::Pjrt, Some(engine)) => Box::new(runtime::PjrtLocalSdca::bind(
+                    engine.handle(),
+                    kid,
+                    &block,
+                    loss.artifact_name(),
+                    loss.gamma(),
+                )?),
+                _ => solver.build(),
+            };
+            let cfg = WorkerConfig {
+                id: kid,
+                block,
+                loss: loss.build(),
+                solver: solver_impl,
+                lambda,
+                // distinct, deterministic stream per worker
+                seed: seed.wrapping_mul(0x9e3779b97f4a7c15).wrapping_add(kid as u64),
+            };
+            let (tx, rx) = channel::<ToWorker>();
+            let leader_tx = to_leader_tx.clone();
+            let handle = std::thread::Builder::new()
+                .name(format!("cocoa-worker-{kid}"))
+                .spawn(move || worker::run_worker(cfg, rx, leader_tx))?;
+            to_workers.push(tx);
+            handles.push(handle);
+        }
+
+        Ok(Cluster {
+            to_workers,
+            from_workers,
+            handles,
+            k,
+            n,
+            d,
+            w: vec![0.0; d],
+            net,
+            stragglers: crate::netsim::StragglerModel::none(),
+            stats: CommStats::default(),
+            block_sizes,
+            loss,
+            lambda,
+            round_counter: 0,
+            _engine: engine,
+        })
+    }
+
+    /// Dispatch one round of local work (per-worker via `work_for`) and
+    /// gather the K replies. Accounts 2K vectors (broadcast + gather), the
+    /// network-model round time, and the per-round max compute.
+    pub fn dispatch(&mut self, work_for: impl Fn(usize) -> LocalWork) -> Result<Vec<RoundReply>> {
+        self.round_counter += 1;
+        let round = self.round_counter;
+        let w_shared = std::sync::Arc::new(self.w.clone());
+        for (kid, tx) in self.to_workers.iter().enumerate() {
+            tx.send(ToWorker::Round { round, w: w_shared.clone(), work: work_for(kid) })
+                .map_err(|_| anyhow!("worker {kid} channel closed"))?;
+        }
+        let mut replies: Vec<Option<RoundReply>> = vec![None; self.k];
+        let mut got = 0;
+        while got < self.k {
+            match self.from_workers.recv().map_err(|_| anyhow!("all workers gone"))? {
+                ToLeader::Round(r) if r.round == round => {
+                    let slot = &mut replies[r.worker];
+                    if slot.is_none() {
+                        got += 1;
+                    }
+                    *slot = Some(r);
+                }
+                ToLeader::Round(r) => {
+                    return Err(anyhow!("stale round reply {} from worker {}", r.round, r.worker))
+                }
+                ToLeader::Eval(_) | ToLeader::State(_) => {
+                    return Err(anyhow!("unexpected reply during round"))
+                }
+                ToLeader::Fatal { worker, message } => {
+                    return Err(anyhow!("worker {worker} failed: {message}"))
+                }
+            }
+        }
+        let replies: Vec<RoundReply> = replies.into_iter().map(Option::unwrap).collect();
+
+        let computes: Vec<f64> = replies.iter().map(|r| r.compute_s).collect();
+        let max_compute = self.stragglers.barrier_compute(round, &computes);
+        let vectors = 2 * self.k as u64; // w down + dw up, per worker
+        self.stats.rounds += 1;
+        self.stats.vectors += vectors;
+        self.stats.bytes += vectors * (self.d * self.net.bytes_per_scalar) as u64;
+        self.stats.inner_steps += replies.iter().map(|r| r.steps).sum::<u64>();
+        self.stats.compute_s += max_compute;
+        self.stats.sim_time_s += self.net.round_time(max_compute, vectors as usize, self.d);
+        Ok(replies)
+    }
+
+    /// Fold the round's updates into leader and worker state:
+    /// `w += scale * sum_k dw_k`, `alpha_[k] += scale * dalpha_[k]`.
+    pub fn commit(&mut self, replies: &[RoundReply], scale: f64) -> Result<()> {
+        for reply in replies {
+            for (wv, dv) in self.w.iter_mut().zip(&reply.dw) {
+                *wv += scale * dv;
+            }
+        }
+        for (kid, tx) in self.to_workers.iter().enumerate() {
+            tx.send(ToWorker::Commit { scale })
+                .map_err(|_| anyhow!("worker {kid} channel closed"))?;
+        }
+        Ok(())
+    }
+
+    /// Replace `w` outright (SGD-style leader updates). Workers have no
+    /// pending dual state for SGD work, so no commit is needed.
+    pub fn set_w(&mut self, w: Vec<f64>) {
+        assert_eq!(w.len(), self.d);
+        self.w = w;
+    }
+
+    /// Distributed evaluation of P(w), D(alpha), gap at the current state.
+    /// Not counted as algorithm communication (instrumentation).
+    pub fn evaluate(&mut self) -> Result<Evaluation> {
+        let w_shared = std::sync::Arc::new(self.w.clone());
+        for (kid, tx) in self.to_workers.iter().enumerate() {
+            tx.send(ToWorker::Eval { w: w_shared.clone() })
+                .map_err(|_| anyhow!("worker {kid} channel closed"))?;
+        }
+        let mut loss_sum = 0.0;
+        let mut conj_sum = 0.0;
+        let mut has_dual = true;
+        let mut got = 0;
+        while got < self.k {
+            match self.from_workers.recv().map_err(|_| anyhow!("all workers gone"))? {
+                ToLeader::Eval(e) => {
+                    loss_sum += e.loss_sum;
+                    conj_sum += e.conj_sum;
+                    has_dual &= e.has_dual;
+                    got += 1;
+                }
+                ToLeader::Round(_) | ToLeader::State(_) => {
+                    return Err(anyhow!("unexpected reply during eval"))
+                }
+                ToLeader::Fatal { worker, message } => {
+                    return Err(anyhow!("worker {worker} failed: {message}"))
+                }
+            }
+        }
+        let w_norm_sq: f64 = self.w.iter().map(|v| v * v).sum();
+        let primal = objective::primal_from_partials(loss_sum, w_norm_sq, self.lambda, self.n);
+        let dual = if has_dual {
+            objective::dual_from_partials(conj_sum, w_norm_sq, self.lambda, self.n)
+        } else {
+            f64::NAN
+        };
+        Ok(Evaluation { primal, dual, gap: primal - dual })
+    }
+
+    /// Capture the full optimization state (must be called at a round
+    /// boundary, i.e. after `commit`). See [`checkpoint`].
+    pub fn checkpoint(&mut self) -> Result<Checkpoint> {
+        for (kid, tx) in self.to_workers.iter().enumerate() {
+            tx.send(ToWorker::GetState)
+                .map_err(|_| anyhow!("worker {kid} channel closed"))?;
+        }
+        let mut workers: Vec<Option<checkpoint::WorkerState>> = (0..self.k).map(|_| None).collect();
+        let mut got = 0;
+        while got < self.k {
+            match self.from_workers.recv().map_err(|_| anyhow!("all workers gone"))? {
+                ToLeader::State(ws) => {
+                    let slot = &mut workers[ws.id];
+                    if slot.is_none() {
+                        got += 1;
+                    }
+                    *slot = Some(ws);
+                }
+                ToLeader::Fatal { worker, message } => {
+                    return Err(anyhow!("worker {worker} failed: {message}"))
+                }
+                _ => return Err(anyhow!("unexpected reply during checkpoint")),
+            }
+        }
+        Ok(Checkpoint {
+            k: self.k,
+            n: self.n,
+            d: self.d,
+            round_counter: self.round_counter,
+            stats: self.stats,
+            w: self.w.clone(),
+            workers: workers.into_iter().map(Option::unwrap).collect(),
+        })
+    }
+
+    /// Restore a previously captured state into this cluster. The cluster
+    /// must have been built over the same dataset/partition (shapes are
+    /// validated; contents are the caller's responsibility).
+    pub fn restore(&mut self, cp: &Checkpoint) -> Result<()> {
+        if cp.k != self.k || cp.n != self.n || cp.d != self.d {
+            return Err(anyhow!(
+                "checkpoint shape (K={}, n={}, d={}) does not match cluster (K={}, n={}, d={})",
+                cp.k, cp.n, cp.d, self.k, self.n, self.d
+            ));
+        }
+        for ws in &cp.workers {
+            self.to_workers[ws.id]
+                .send(ToWorker::SetState(ws.clone()))
+                .map_err(|_| anyhow!("worker {} channel closed", ws.id))?;
+        }
+        self.w = cp.w.clone();
+        self.stats = cp.stats;
+        self.round_counter = cp.round_counter;
+        Ok(())
+    }
+
+    pub fn loss(&self) -> LossKind {
+        self.loss
+    }
+
+    pub fn lambda(&self) -> f64 {
+        self.lambda
+    }
+
+    /// Largest block size (`~n` in Proposition 1).
+    pub fn n_max(&self) -> usize {
+        self.block_sizes.iter().copied().max().unwrap_or(0)
+    }
+
+    pub fn shutdown(mut self) {
+        for tx in &self.to_workers {
+            let _ = tx.send(ToWorker::Shutdown);
+        }
+        for handle in self.handles.drain(..) {
+            let _ = handle.join();
+        }
+    }
+}
+
+impl Drop for Cluster {
+    fn drop(&mut self) {
+        for tx in &self.to_workers {
+            let _ = tx.send(ToWorker::Shutdown);
+        }
+        for handle in self.handles.drain(..) {
+            let _ = handle.join();
+        }
+    }
+}
+
+/// Result of a distributed objective evaluation.
+#[derive(Debug, Clone, Copy)]
+pub struct Evaluation {
+    pub primal: f64,
+    /// NaN when any worker has never produced a dual update (SGD runs).
+    pub dual: f64,
+    pub gap: f64,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::{cov_like, PartitionStrategy};
+
+    fn small_cluster(k: usize) -> (Cluster, Dataset) {
+        let data = cov_like(60, 6, 0.1, 1);
+        let part = Partition::new(PartitionStrategy::Contiguous, 60, k, 0);
+        let cluster = Cluster::build(
+            &data,
+            &part,
+            LossKind::Hinge,
+            0.1,
+            SolverKind::Sdca,
+            Backend::Native,
+            "artifacts",
+            NetworkModel::free(),
+            7,
+        )
+        .unwrap();
+        (cluster, data)
+    }
+
+    #[test]
+    fn round_accounting() {
+        let (mut cluster, _) = small_cluster(3);
+        let replies = cluster.dispatch(|_| LocalWork::DualRound { h: 10 }).unwrap();
+        assert_eq!(replies.len(), 3);
+        assert_eq!(cluster.stats.rounds, 1);
+        assert_eq!(cluster.stats.vectors, 6); // 2K
+        assert_eq!(cluster.stats.inner_steps, 30);
+        cluster.commit(&replies, 1.0 / 3.0).unwrap();
+        cluster.shutdown();
+    }
+
+    #[test]
+    fn w_consistency_with_global_alpha() {
+        // After commits, the leader's w must equal A alpha for the global
+        // alpha implied by the same seeds — checked via the duality gap
+        // being finite and P >= D.
+        let (mut cluster, _) = small_cluster(4);
+        for _ in 0..5 {
+            let replies = cluster.dispatch(|_| LocalWork::DualRound { h: 30 }).unwrap();
+            cluster.commit(&replies, 0.25).unwrap();
+        }
+        let ev = cluster.evaluate().unwrap();
+        assert!(ev.gap.is_finite());
+        assert!(ev.gap >= -1e-9, "gap {} negative", ev.gap);
+        assert!(ev.primal >= ev.dual - 1e-9);
+        cluster.shutdown();
+    }
+
+    #[test]
+    fn dual_improves_over_rounds() {
+        let (mut cluster, _) = small_cluster(2);
+        let d0 = cluster.evaluate().unwrap().dual;
+        for _ in 0..8 {
+            let replies = cluster.dispatch(|_| LocalWork::DualRound { h: 60 }).unwrap();
+            cluster.commit(&replies, 0.5).unwrap();
+        }
+        let d1 = cluster.evaluate().unwrap().dual;
+        assert!(d1 > d0, "dual did not improve: {d0} -> {d1}");
+        cluster.shutdown();
+    }
+
+    #[test]
+    fn sgd_rounds_leave_dual_nan() {
+        let (mut cluster, _) = small_cluster(2);
+        let replies = cluster
+            .dispatch(|_| LocalWork::SgdLocal { h: 20, t_offset: 0 })
+            .unwrap();
+        // local-SGD reduce: average the w deltas
+        let mut w = cluster.w.clone();
+        for r in &replies {
+            for (wv, dv) in w.iter_mut().zip(&r.dw) {
+                *wv += dv / 2.0;
+            }
+        }
+        cluster.set_w(w);
+        let ev = cluster.evaluate().unwrap();
+        assert!(ev.primal.is_finite());
+        assert!(ev.dual.is_nan());
+        cluster.shutdown();
+    }
+
+    #[test]
+    fn sim_time_includes_network_cost() {
+        let data = cov_like(40, 5, 0.1, 2);
+        let part = Partition::new(PartitionStrategy::Contiguous, 40, 2, 0);
+        let net = NetworkModel { latency_s: 1.0, bandwidth_bps: f64::INFINITY, bytes_per_scalar: 8 };
+        let mut cluster = Cluster::build(
+            &data, &part, LossKind::Hinge, 0.1, SolverKind::Sdca,
+            Backend::Native, "artifacts", net, 3,
+        )
+        .unwrap();
+        for _ in 0..3 {
+            let r = cluster.dispatch(|_| LocalWork::DualRound { h: 1 }).unwrap();
+            cluster.commit(&r, 0.5).unwrap();
+        }
+        assert!(cluster.stats.sim_time_s >= 3.0);
+        cluster.shutdown();
+    }
+}

@@ -1,0 +1,168 @@
+//! Worker thread: owns one coordinate block (data + dual variables) and
+//! executes whatever [`LocalWork`] the leader dispatches.
+//!
+//! The dual variables `alpha_[k]` never leave this thread — the paper's
+//! communication pattern. Updates are staged: a dual round computes a
+//! pending `dalpha`, the leader's `Commit { scale }` folds it in with the
+//! `beta_K / K` scaling of Algorithm 1, keeping worker state exactly
+//! consistent with the leader's `w` at all times.
+
+use std::sync::mpsc::{Receiver, Sender};
+
+use super::checkpoint::WorkerState as CheckpointState;
+use super::messages::{EvalReply, LocalWork, RoundReply, ToLeader, ToWorker};
+use crate::loss::Loss;
+use crate::objective;
+use crate::solvers::{Block, ExactBlockSolver, LocalDualMethod, LocalSdca, PegasosEpoch, Sampling};
+use crate::telemetry::thread_cpu_time_s;
+use crate::util::Rng;
+
+pub struct WorkerConfig {
+    pub id: usize,
+    pub block: Block,
+    pub loss: Box<dyn Loss>,
+    pub solver: Box<dyn LocalDualMethod>,
+    pub lambda: f64,
+    pub seed: u64,
+}
+
+pub fn run_worker(cfg: WorkerConfig, rx: Receiver<ToWorker>, tx: Sender<ToLeader>) {
+    let WorkerConfig { id, block, loss, solver, lambda, seed } = cfg;
+    let n_k = block.n_k();
+    let mut alpha = vec![0.0f64; n_k];
+    let mut pending: Option<Vec<f64>> = None;
+    // alpha stays a valid dual point (D(0) = 0) until SGD work runs —
+    // primal-only methods have no meaningful dual value to report.
+    let mut did_sgd = false;
+    let mut rng = Rng::seed_from_u64(seed);
+
+    while let Ok(msg) = rx.recv() {
+        match msg {
+            ToWorker::Shutdown => break,
+            ToWorker::Commit { scale } => {
+                if let Some(d) = pending.take() {
+                    for (a, da) in alpha.iter_mut().zip(&d) {
+                        *a += scale * da;
+                    }
+                }
+            }
+            ToWorker::GetState => {
+                if pending.is_some() {
+                    let _ = tx.send(ToLeader::Fatal {
+                        worker: id,
+                        message: "checkpoint requested with uncommitted update".into(),
+                    });
+                    break;
+                }
+                let _ = tx.send(ToLeader::State(CheckpointState {
+                    id,
+                    rng_state: rng.state(),
+                    alpha: alpha.clone(),
+                }));
+            }
+            ToWorker::SetState(state) => {
+                if state.alpha.len() != n_k {
+                    let _ = tx.send(ToLeader::Fatal {
+                        worker: id,
+                        message: format!(
+                            "restore alpha length {} != block size {n_k}",
+                            state.alpha.len()
+                        ),
+                    });
+                    break;
+                }
+                alpha = state.alpha;
+                rng = Rng::from_state(state.rng_state);
+                pending = None;
+            }
+            ToWorker::Eval { w } => {
+                let loss_sum = objective::block_loss_sum(&block.data, &w, loss.as_ref());
+                let conj_sum = objective::block_conj_sum(&block.data, &alpha, loss.as_ref());
+                let _ = tx.send(ToLeader::Eval(EvalReply {
+                    worker: id,
+                    loss_sum,
+                    conj_sum,
+                    has_dual: !did_sgd,
+                }));
+            }
+            ToWorker::Round { round, w, work } => {
+                if pending.is_some() {
+                    let _ = tx.send(ToLeader::Fatal {
+                        worker: id,
+                        message: "round dispatched with uncommitted dual update".into(),
+                    });
+                    break;
+                }
+                let t0 = thread_cpu_time_s();
+                let (dw, steps, offloaded, dalpha) = match work {
+                    LocalWork::DualRound { h } => {
+                        let up = solver.local_update(
+                            &block, loss.as_ref(), &alpha, &w, h, &mut rng,
+                        );
+                        (up.dw, up.steps, up.offloaded_s, Some(up.dalpha))
+                    }
+                    LocalWork::DualRoundScaled { h, sigma_prime } => {
+                        let scaled =
+                            LocalSdca::with_curvature_scale(Sampling::WithReplacement, sigma_prime);
+                        let up = scaled.local_update(
+                            &block, loss.as_ref(), &alpha, &w, h, &mut rng,
+                        );
+                        (up.dw, up.steps, up.offloaded_s, Some(up.dalpha))
+                    }
+                    LocalWork::ExactSolve => {
+                        let exact = ExactBlockSolver::default();
+                        let up = exact.local_update(
+                            &block, loss.as_ref(), &alpha, &w, n_k, &mut rng,
+                        );
+                        (up.dw, up.steps, up.offloaded_s, Some(up.dalpha))
+                    }
+                    LocalWork::DualBatchFrozen { b } => {
+                        let b = b.min(n_k);
+                        // distinct coordinates, all judged against frozen w
+                        let picks = rng.sample_distinct(n_k, b);
+                        let mut dalpha = vec![0.0; n_k];
+                        let mut dw = vec![0.0; block.d()];
+                        let inv = 1.0 / block.lambda_n;
+                        for &i in picks.iter() {
+                            let q = block.data.features.row_dot(i, &w);
+                            let delta = loss.coord_delta(
+                                q,
+                                block.data.labels[i],
+                                alpha[i],
+                                block.curvature(i),
+                            );
+                            if delta != 0.0 {
+                                dalpha[i] = delta;
+                                block.data.features.add_row_scaled(i, delta * inv, &mut dw);
+                            }
+                        }
+                        (dw, b as u64, 0.0, Some(dalpha))
+                    }
+                    LocalWork::SgdLocal { h, t_offset } => {
+                        let epoch = PegasosEpoch { locally_updating: true, lambda };
+                        let out = epoch.run(&block, loss.as_ref(), &w, h, t_offset, &mut rng);
+                        (out.dw, out.steps, 0.0, None)
+                    }
+                    LocalWork::SgdFrozen { h } => {
+                        let epoch = PegasosEpoch { locally_updating: false, lambda };
+                        let out = epoch.run(&block, loss.as_ref(), &w, h, 0, &mut rng);
+                        (out.dw, out.steps, 0.0, None)
+                    }
+                };
+                let compute_s = (thread_cpu_time_s() - t0) + offloaded;
+                if let Some(d) = dalpha {
+                    pending = Some(d);
+                } else {
+                    did_sgd = true;
+                }
+                let _ = tx.send(ToLeader::Round(RoundReply {
+                    worker: id,
+                    round,
+                    dw,
+                    compute_s,
+                    steps,
+                }));
+            }
+        }
+    }
+}

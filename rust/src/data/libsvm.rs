@@ -1,0 +1,147 @@
+//! LibSVM-format reader/writer.
+//!
+//! The paper's datasets (cov, rcv1, imagenet) ship in this format; with a
+//! local copy, `[dataset] kind = "libsvm", path = "..."` in the experiment
+//! config drops the real corpus into any harness. The writer exists so
+//! synthetic datasets can be exported and round-tripped.
+
+use std::fs::File;
+use std::io::{BufRead, BufReader, BufWriter, Write};
+use std::path::Path;
+
+use anyhow::{anyhow, Context, Result};
+
+use super::{CsrMatrix, Dataset, Features};
+
+/// Parse a LibSVM file: `label idx:val idx:val ...` per line, 1-based
+/// indices. `d_hint` pre-sizes the column count (pass 0 to infer).
+pub fn read_libsvm<P: AsRef<Path>>(path: P, d_hint: usize) -> Result<Dataset> {
+    let file = File::open(&path)
+        .with_context(|| format!("open {}", path.as_ref().display()))?;
+    let reader = BufReader::new(file);
+    let mut labels = Vec::new();
+    let mut triplets: Vec<(usize, u32, f64)> = Vec::new();
+    let mut max_col: usize = d_hint;
+    for (lineno, line) in reader.lines().enumerate() {
+        let line = line?;
+        let line = line.trim();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        let row = labels.len();
+        let mut parts = line.split_ascii_whitespace();
+        let label_tok = parts
+            .next()
+            .ok_or_else(|| anyhow!("line {}: empty record", lineno + 1))?;
+        let label: f64 = label_tok
+            .parse()
+            .with_context(|| format!("line {}: bad label {label_tok:?}", lineno + 1))?;
+        // normalize {0,1} and {1,2} label conventions to {-1,+1}
+        let label = if label <= 0.0 { -1.0 } else { 1.0 };
+        labels.push(label);
+        for tok in parts {
+            let (idx, val) = tok
+                .split_once(':')
+                .ok_or_else(|| anyhow!("line {}: bad feature {tok:?}", lineno + 1))?;
+            let idx: usize = idx
+                .parse()
+                .with_context(|| format!("line {}: bad index {idx:?}", lineno + 1))?;
+            if idx == 0 {
+                return Err(anyhow!("line {}: libsvm indices are 1-based", lineno + 1));
+            }
+            let val: f64 = val
+                .parse()
+                .with_context(|| format!("line {}: bad value {val:?}", lineno + 1))?;
+            max_col = max_col.max(idx);
+            triplets.push((row, (idx - 1) as u32, val));
+        }
+    }
+    let n = labels.len();
+    let features = Features::Sparse(CsrMatrix::from_triplets(n, max_col, &triplets));
+    Ok(Dataset::new(features, labels))
+}
+
+/// Write a dataset in LibSVM format (1-based indices, zeros skipped).
+pub fn write_libsvm<P: AsRef<Path>>(ds: &Dataset, path: P) -> Result<()> {
+    let file = File::create(&path)
+        .with_context(|| format!("create {}", path.as_ref().display()))?;
+    let mut w = BufWriter::new(file);
+    for i in 0..ds.n() {
+        write!(w, "{}", if ds.labels[i] > 0.0 { "+1" } else { "-1" })?;
+        match &ds.features {
+            Features::Sparse(m) => {
+                let r = m.row_range(i);
+                for (idx, val) in m.indices[r.clone()].iter().zip(&m.values[r]) {
+                    write!(w, " {}:{}", idx + 1, val)?;
+                }
+            }
+            Features::Dense(m) => {
+                for (j, &val) in m.row(i).iter().enumerate() {
+                    if val != 0.0 {
+                        write!(w, " {}:{}", j + 1, val)?;
+                    }
+                }
+            }
+        }
+        writeln!(w)?;
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::cov_like;
+
+    #[test]
+    fn parse_basic() {
+        let dir = std::env::temp_dir().join("cocoa_libsvm_parse");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("basic.svm");
+        std::fs::write(&p, "+1 1:0.5 3:2.0\n-1 2:1.0\n# comment\n\n+1 3:0.1\n")
+            .unwrap();
+        let ds = read_libsvm(&p, 0).unwrap();
+        assert_eq!(ds.n(), 3);
+        assert_eq!(ds.d(), 3);
+        assert_eq!(ds.labels, vec![1.0, -1.0, 1.0]);
+        assert_eq!(ds.features.row_dense(0), vec![0.5, 0.0, 2.0]);
+    }
+
+    #[test]
+    fn label_conventions_normalized() {
+        let dir = std::env::temp_dir().join("cocoa_libsvm_labels");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("labels.svm");
+        std::fs::write(&p, "0 1:1\n2 1:1\n1 1:1\n").unwrap();
+        let ds = read_libsvm(&p, 0).unwrap();
+        assert_eq!(ds.labels, vec![-1.0, 1.0, 1.0]);
+    }
+
+    #[test]
+    fn rejects_zero_index() {
+        let dir = std::env::temp_dir().join("cocoa_libsvm_zero");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("zero.svm");
+        std::fs::write(&p, "+1 0:1.0\n").unwrap();
+        assert!(read_libsvm(&p, 0).is_err());
+    }
+
+    #[test]
+    fn roundtrip_synthetic() {
+        let ds = cov_like(30, 6, 0.1, 5);
+        let dir = std::env::temp_dir().join("cocoa_libsvm_rt");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("rt.svm");
+        write_libsvm(&ds, &p).unwrap();
+        let back = read_libsvm(&p, ds.d()).unwrap();
+        assert_eq!(back.n(), ds.n());
+        assert_eq!(back.labels, ds.labels);
+        for i in (0..ds.n()).step_by(7) {
+            let a = ds.features.row_dense(i);
+            let b = back.features.row_dense(i);
+            for (x, y) in a.iter().zip(&b) {
+                assert!((x - y).abs() < 1e-12);
+            }
+        }
+    }
+}

@@ -1,0 +1,260 @@
+//! Datasets, storage formats, loaders, generators, and coordinate
+//! partitioning — the substrate under every experiment in the paper.
+//!
+//! Data lives in row-major form (one row per training example `x_i`); the
+//! paper's rescaled column matrix `A_i = x_i / (lambda n)` is never
+//! materialized — solvers fold the `1/(lambda n)` factor into their updates.
+
+mod dense;
+mod libsvm;
+mod partition;
+mod sparse;
+mod synthetic;
+
+pub use dense::DenseMatrix;
+pub use libsvm::{read_libsvm, write_libsvm};
+pub use partition::{Partition, PartitionStrategy};
+pub use sparse::CsrMatrix;
+pub use synthetic::{
+    cov_like, imagenet_like, orthogonal_blocks, rcv1_like, SyntheticSpec,
+};
+
+/// Feature storage: dense row-major or CSR. All solver hot paths go
+/// through the row accessors here, so both formats run every algorithm.
+#[derive(Debug, Clone)]
+pub enum Features {
+    Dense(DenseMatrix),
+    Sparse(CsrMatrix),
+}
+
+impl Features {
+    pub fn rows(&self) -> usize {
+        match self {
+            Features::Dense(m) => m.rows,
+            Features::Sparse(m) => m.rows,
+        }
+    }
+
+    pub fn cols(&self) -> usize {
+        match self {
+            Features::Dense(m) => m.cols,
+            Features::Sparse(m) => m.cols,
+        }
+    }
+
+    /// Number of stored (potentially non-zero) entries.
+    pub fn nnz(&self) -> usize {
+        match self {
+            Features::Dense(m) => m.data.len(),
+            Features::Sparse(m) => m.values.len(),
+        }
+    }
+
+    /// `x_i . w` — the margin, the single hottest operation in the system.
+    #[inline]
+    pub fn row_dot(&self, i: usize, w: &[f64]) -> f64 {
+        match self {
+            Features::Dense(m) => m.row_dot(i, w),
+            Features::Sparse(m) => m.row_dot(i, w),
+        }
+    }
+
+    /// `out += coef * x_i` — the rank-1 primal update.
+    #[inline]
+    pub fn add_row_scaled(&self, i: usize, coef: f64, out: &mut [f64]) {
+        match self {
+            Features::Dense(m) => m.add_row_scaled(i, coef, out),
+            Features::Sparse(m) => m.add_row_scaled(i, coef, out),
+        }
+    }
+
+    /// `||x_i||^2`.
+    pub fn row_norm_sq(&self, i: usize) -> f64 {
+        match self {
+            Features::Dense(m) => m.row_norm_sq(i),
+            Features::Sparse(m) => m.row_norm_sq(i),
+        }
+    }
+
+    /// Dense copy of row `i` (marshalling into PJRT literals, tests).
+    pub fn row_dense(&self, i: usize) -> Vec<f64> {
+        let mut out = vec![0.0; self.cols()];
+        self.add_row_scaled(i, 1.0, &mut out);
+        out
+    }
+
+    /// In-place scale of row `i` (used by normalization).
+    fn scale_row(&mut self, i: usize, s: f64) {
+        match self {
+            Features::Dense(m) => m.scale_row(i, s),
+            Features::Sparse(m) => m.scale_row(i, s),
+        }
+    }
+}
+
+/// A labelled dataset for problem (1): features + labels, with cached row
+/// norms (`||x_i||^2`), reused by every solver step and the sigma_min
+/// estimator.
+#[derive(Debug, Clone)]
+pub struct Dataset {
+    pub features: Features,
+    pub labels: Vec<f64>,
+    norms_sq: Vec<f64>,
+}
+
+impl Dataset {
+    pub fn new(features: Features, labels: Vec<f64>) -> Self {
+        assert_eq!(
+            features.rows(),
+            labels.len(),
+            "feature rows must match label count"
+        );
+        let norms_sq = (0..features.rows()).map(|i| features.row_norm_sq(i)).collect();
+        Dataset { features, labels, norms_sq }
+    }
+
+    pub fn n(&self) -> usize {
+        self.labels.len()
+    }
+
+    pub fn d(&self) -> usize {
+        self.features.cols()
+    }
+
+    pub fn nnz(&self) -> usize {
+        self.features.nnz()
+    }
+
+    /// Stored-entry density in [0,1].
+    pub fn density(&self) -> f64 {
+        let cells = (self.n() as f64) * (self.d() as f64);
+        if cells == 0.0 { 0.0 } else { self.nnz() as f64 / cells }
+    }
+
+    #[inline]
+    pub fn norm_sq(&self, i: usize) -> f64 {
+        self.norms_sq[i]
+    }
+
+    /// Scale every row to `||x_i|| <= 1`, the paper's standing assumption
+    /// (Section 4). Rows already inside the ball are left untouched.
+    pub fn normalize_rows(&mut self) {
+        for i in 0..self.n() {
+            let norm = self.norms_sq[i].sqrt();
+            if norm > 1.0 {
+                self.features.scale_row(i, 1.0 / norm);
+                self.norms_sq[i] = 1.0;
+            }
+        }
+    }
+
+    /// Largest `||x_i||^2` — 1.0 after normalization.
+    pub fn max_norm_sq(&self) -> f64 {
+        self.norms_sq.iter().cloned().fold(0.0, f64::max)
+    }
+
+    /// Materialize the sub-dataset for the rows in `idx` (a worker block).
+    pub fn subset(&self, idx: &[u32]) -> Dataset {
+        let labels: Vec<f64> = idx.iter().map(|&i| self.labels[i as usize]).collect();
+        let features = match &self.features {
+            Features::Dense(m) => Features::Dense(m.subset(idx)),
+            Features::Sparse(m) => Features::Sparse(m.subset(idx)),
+        };
+        Dataset::new(features, labels)
+    }
+
+    /// `w = A alpha = (1/(lambda n)) sum_i alpha_i x_i` — the dual-to-primal
+    /// map (Section 2).
+    pub fn primal_from_dual(&self, alpha: &[f64], lambda: f64) -> Vec<f64> {
+        assert_eq!(alpha.len(), self.n());
+        let mut w = vec![0.0; self.d()];
+        let scale = 1.0 / (lambda * self.n() as f64);
+        for (i, &a) in alpha.iter().enumerate() {
+            if a != 0.0 {
+                self.features.add_row_scaled(i, a * scale, &mut w);
+            }
+        }
+        w
+    }
+
+    /// A short stable fingerprint of shape + content used to key cached
+    /// optima on disk.
+    pub fn fingerprint(&self) -> String {
+        // FNV-1a over a deterministic sample of entries: cheap and stable.
+        let mut h: u64 = 0xcbf29ce484222325;
+        let mut mix = |v: u64| {
+            h ^= v;
+            h = h.wrapping_mul(0x100000001b3);
+        };
+        mix(self.n() as u64);
+        mix(self.d() as u64);
+        mix(self.nnz() as u64);
+        let step = (self.n() / 64).max(1);
+        for i in (0..self.n()).step_by(step) {
+            mix(self.labels[i].to_bits());
+            mix(self.norms_sq[i].to_bits());
+        }
+        format!("{h:016x}")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn toy() -> Dataset {
+        let m = DenseMatrix::from_rows(&[
+            vec![3.0, 4.0],
+            vec![0.5, 0.0],
+            vec![0.0, 0.0],
+        ]);
+        Dataset::new(Features::Dense(m), vec![1.0, -1.0, 1.0])
+    }
+
+    #[test]
+    fn norms_cached() {
+        let ds = toy();
+        assert_eq!(ds.norm_sq(0), 25.0);
+        assert_eq!(ds.norm_sq(1), 0.25);
+        assert_eq!(ds.norm_sq(2), 0.0);
+    }
+
+    #[test]
+    fn normalize_caps_at_unit_ball() {
+        let mut ds = toy();
+        ds.normalize_rows();
+        assert!((ds.norm_sq(0) - 1.0).abs() < 1e-12);
+        // rows already inside the ball are untouched
+        assert_eq!(ds.norm_sq(1), 0.25);
+        assert!(ds.max_norm_sq() <= 1.0 + 1e-12);
+    }
+
+    #[test]
+    fn primal_from_dual_matches_manual() {
+        let ds = toy();
+        let lambda = 0.5;
+        let w = ds.primal_from_dual(&[1.0, 2.0, 0.0], lambda);
+        let scale = 1.0 / (lambda * 3.0);
+        assert!((w[0] - (3.0 + 1.0) * scale).abs() < 1e-12);
+        assert!((w[1] - 4.0 * scale).abs() < 1e-12);
+    }
+
+    #[test]
+    fn subset_preserves_rows() {
+        let ds = toy();
+        let sub = ds.subset(&[2, 0]);
+        assert_eq!(sub.n(), 2);
+        assert_eq!(sub.labels, vec![1.0, 1.0]);
+        assert_eq!(sub.features.row_dense(0), vec![0.0, 0.0]);
+        assert_eq!(sub.features.row_dense(1), vec![3.0, 4.0]);
+    }
+
+    #[test]
+    fn fingerprint_changes_with_data() {
+        let a = toy().fingerprint();
+        let mut other = toy();
+        other.labels[0] = -1.0;
+        assert_ne!(a, other.fingerprint());
+        assert_eq!(a, toy().fingerprint());
+    }
+}

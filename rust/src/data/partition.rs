@@ -1,0 +1,204 @@
+//! Coordinate-block partitioning: how the n dual variables (and their
+//! datapoints) are split over the K workers (Section 3's `{I_k}` blocks).
+//!
+//! The partition is a first-class object because it is *the* quantity the
+//! convergence theory depends on: Lemma 3's sigma_min is a property of how
+//! correlated data ends up across blocks, and `~n = max_k n_k` enters
+//! Proposition 1's Theta.
+
+use crate::util::Rng;
+
+/// How rows are assigned to workers.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PartitionStrategy {
+    /// Blocks of consecutive rows (Spark-partition-like; default).
+    Contiguous,
+    /// Row i goes to worker i mod K.
+    RoundRobin,
+    /// Uniformly random assignment (balanced up to +-1).
+    Random,
+}
+
+impl PartitionStrategy {
+    pub fn from_name(name: &str) -> Option<Self> {
+        match name {
+            "contiguous" => Some(PartitionStrategy::Contiguous),
+            "round_robin" => Some(PartitionStrategy::RoundRobin),
+            "random" => Some(PartitionStrategy::Random),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            PartitionStrategy::Contiguous => "contiguous",
+            PartitionStrategy::RoundRobin => "round_robin",
+            PartitionStrategy::Random => "random",
+        }
+    }
+}
+
+/// A disjoint cover of `0..n` by K blocks of row indices.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Partition {
+    pub blocks: Vec<Vec<u32>>,
+    n: usize,
+}
+
+impl Partition {
+    pub fn new(strategy: PartitionStrategy, n: usize, k: usize, seed: u64) -> Self {
+        assert!(k >= 1 && k <= n.max(1), "need 1 <= K <= n (K={k}, n={n})");
+        let blocks = match strategy {
+            PartitionStrategy::Contiguous => {
+                // Sizes differ by at most 1: first (n % k) blocks get one extra.
+                let base = n / k;
+                let extra = n % k;
+                let mut blocks = Vec::with_capacity(k);
+                let mut start = 0u32;
+                for b in 0..k {
+                    let size = base + usize::from(b < extra);
+                    blocks.push((start..start + size as u32).collect());
+                    start += size as u32;
+                }
+                blocks
+            }
+            PartitionStrategy::RoundRobin => {
+                let mut blocks = vec![Vec::with_capacity(n / k + 1); k];
+                for i in 0..n as u32 {
+                    blocks[(i as usize) % k].push(i);
+                }
+                blocks
+            }
+            PartitionStrategy::Random => {
+                let mut rng = Rng::seed_from_u64(seed);
+                let mut ids: Vec<u32> = (0..n as u32).collect();
+                rng.shuffle(&mut ids);
+                let base = n / k;
+                let extra = n % k;
+                let mut blocks = Vec::with_capacity(k);
+                let mut cursor = 0;
+                for b in 0..k {
+                    let size = base + usize::from(b < extra);
+                    let mut block: Vec<u32> =
+                        ids[cursor..cursor + size].to_vec();
+                    block.sort_unstable(); // cache-friendly local order
+                    blocks.push(block);
+                    cursor += size;
+                }
+                blocks
+            }
+        };
+        Partition { blocks, n }
+    }
+
+    /// Build directly from explicit blocks (tests, custom layouts).
+    pub fn from_blocks(blocks: Vec<Vec<u32>>, n: usize) -> Self {
+        let p = Partition { blocks, n };
+        debug_assert!(p.validate().is_ok());
+        p
+    }
+
+    pub fn k(&self) -> usize {
+        self.blocks.len()
+    }
+
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    /// Size of the largest block — `~n` in Proposition 1.
+    pub fn n_max(&self) -> usize {
+        self.blocks.iter().map(Vec::len).max().unwrap_or(0)
+    }
+
+    /// Checks the disjoint-cover invariant; the coordinator asserts this
+    /// at startup and proptests hammer it.
+    pub fn validate(&self) -> Result<(), String> {
+        let mut seen = vec![false; self.n];
+        for (k, block) in self.blocks.iter().enumerate() {
+            for &i in block {
+                let i = i as usize;
+                if i >= self.n {
+                    return Err(format!("block {k} contains out-of-range row {i}"));
+                }
+                if seen[i] {
+                    return Err(format!("row {i} appears in multiple blocks"));
+                }
+                seen[i] = true;
+            }
+        }
+        if let Some(missing) = seen.iter().position(|s| !s) {
+            return Err(format!("row {missing} not covered by any block"));
+        }
+        Ok(())
+    }
+
+    /// Map from global row -> (worker, local index).
+    pub fn locate(&self) -> Vec<(u32, u32)> {
+        let mut loc = vec![(0u32, 0u32); self.n];
+        for (k, block) in self.blocks.iter().enumerate() {
+            for (local, &i) in block.iter().enumerate() {
+                loc[i as usize] = (k as u32, local as u32);
+            }
+        }
+        loc
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn contiguous_covers_with_balanced_sizes() {
+        let p = Partition::new(PartitionStrategy::Contiguous, 10, 3, 0);
+        assert_eq!(p.k(), 3);
+        assert_eq!(p.blocks[0].len(), 4);
+        assert_eq!(p.blocks[1].len(), 3);
+        assert_eq!(p.blocks[2].len(), 3);
+        assert!(p.validate().is_ok());
+        assert_eq!(p.n_max(), 4);
+    }
+
+    #[test]
+    fn round_robin_interleaves() {
+        let p = Partition::new(PartitionStrategy::RoundRobin, 7, 2, 0);
+        assert_eq!(p.blocks[0], vec![0, 2, 4, 6]);
+        assert_eq!(p.blocks[1], vec![1, 3, 5]);
+        assert!(p.validate().is_ok());
+    }
+
+    #[test]
+    fn random_is_balanced_and_seed_stable() {
+        let a = Partition::new(PartitionStrategy::Random, 100, 7, 42);
+        let b = Partition::new(PartitionStrategy::Random, 100, 7, 42);
+        assert_eq!(a, b);
+        assert!(a.validate().is_ok());
+        assert!(a.n_max() <= 100 / 7 + 1);
+        let c = Partition::new(PartitionStrategy::Random, 100, 7, 43);
+        assert_ne!(a, c);
+    }
+
+    #[test]
+    fn validate_catches_overlap_and_gap() {
+        let p = Partition { blocks: vec![vec![0, 1], vec![1, 2]], n: 3 };
+        assert!(p.validate().unwrap_err().contains("multiple"));
+        let p = Partition { blocks: vec![vec![0], vec![2]], n: 3 };
+        assert!(p.validate().unwrap_err().contains("not covered"));
+    }
+
+    #[test]
+    fn locate_inverts_blocks() {
+        let p = Partition::new(PartitionStrategy::RoundRobin, 9, 3, 0);
+        let loc = p.locate();
+        for (i, &(k, local)) in loc.iter().enumerate() {
+            assert_eq!(p.blocks[k as usize][local as usize], i as u32);
+        }
+    }
+
+    #[test]
+    fn k_equals_one_is_single_block() {
+        let p = Partition::new(PartitionStrategy::Contiguous, 5, 1, 0);
+        assert_eq!(p.blocks[0], vec![0, 1, 2, 3, 4]);
+    }
+}

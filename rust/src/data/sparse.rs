@@ -1,0 +1,157 @@
+//! CSR sparse feature matrix — the rcv1-regime storage (n >> d, ~0.1% nnz).
+
+/// Compressed sparse row matrix. `indptr` has `rows + 1` entries;
+/// row `i`'s entries live in `indices/values[indptr[i]..indptr[i+1]]`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct CsrMatrix {
+    pub rows: usize,
+    pub cols: usize,
+    pub indptr: Vec<usize>,
+    pub indices: Vec<u32>,
+    pub values: Vec<f64>,
+}
+
+impl CsrMatrix {
+    pub fn from_triplets(
+        rows: usize,
+        cols: usize,
+        triplets: &[(usize, u32, f64)],
+    ) -> Self {
+        let mut by_row: Vec<Vec<(u32, f64)>> = vec![Vec::new(); rows];
+        for &(r, c, v) in triplets {
+            assert!(r < rows && (c as usize) < cols, "triplet out of bounds");
+            by_row[r].push((c, v));
+        }
+        let mut indptr = Vec::with_capacity(rows + 1);
+        let mut indices = Vec::with_capacity(triplets.len());
+        let mut values = Vec::with_capacity(triplets.len());
+        indptr.push(0);
+        for row in &mut by_row {
+            row.sort_unstable_by_key(|&(c, _)| c);
+            for &(c, v) in row.iter() {
+                indices.push(c);
+                values.push(v);
+            }
+            indptr.push(indices.len());
+        }
+        CsrMatrix { rows, cols, indptr, indices, values }
+    }
+
+    #[inline]
+    pub fn row_range(&self, i: usize) -> std::ops::Range<usize> {
+        self.indptr[i]..self.indptr[i + 1]
+    }
+
+    #[inline]
+    pub fn row_dot(&self, i: usize, w: &[f64]) -> f64 {
+        let r = self.row_range(i);
+        let mut s = 0.0;
+        for (idx, val) in self.indices[r.clone()].iter().zip(&self.values[r]) {
+            s += val * w[*idx as usize];
+        }
+        s
+    }
+
+    #[inline]
+    pub fn add_row_scaled(&self, i: usize, coef: f64, out: &mut [f64]) {
+        let r = self.row_range(i);
+        for (idx, val) in self.indices[r.clone()].iter().zip(&self.values[r]) {
+            out[*idx as usize] += coef * val;
+        }
+    }
+
+    pub fn row_norm_sq(&self, i: usize) -> f64 {
+        self.values[self.row_range(i)].iter().map(|v| v * v).sum()
+    }
+
+    pub fn scale_row(&mut self, i: usize, s: f64) {
+        let r = self.row_range(i);
+        for v in &mut self.values[r] {
+            *v *= s;
+        }
+    }
+
+    pub fn row_nnz(&self, i: usize) -> usize {
+        self.indptr[i + 1] - self.indptr[i]
+    }
+
+    pub fn subset(&self, idx: &[u32]) -> CsrMatrix {
+        let mut indptr = Vec::with_capacity(idx.len() + 1);
+        let nnz: usize = idx.iter().map(|&i| self.row_nnz(i as usize)).sum();
+        let mut indices = Vec::with_capacity(nnz);
+        let mut values = Vec::with_capacity(nnz);
+        indptr.push(0);
+        for &i in idx {
+            let r = self.row_range(i as usize);
+            indices.extend_from_slice(&self.indices[r.clone()]);
+            values.extend_from_slice(&self.values[r]);
+            indptr.push(indices.len());
+        }
+        CsrMatrix { rows: idx.len(), cols: self.cols, indptr, indices, values }
+    }
+
+    /// Dense expansion (tests / PJRT marshalling of small blocks only).
+    pub fn to_dense(&self) -> super::DenseMatrix {
+        let mut m = super::DenseMatrix::zeros(self.rows, self.cols);
+        for i in 0..self.rows {
+            let r = self.row_range(i);
+            for (idx, val) in self.indices[r.clone()].iter().zip(&self.values[r]) {
+                m.row_mut(i)[*idx as usize] = *val;
+            }
+        }
+        m
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> CsrMatrix {
+        CsrMatrix::from_triplets(
+            3,
+            4,
+            &[(0, 1, 2.0), (0, 3, 1.0), (2, 0, -1.0), (2, 2, 0.5)],
+        )
+    }
+
+    #[test]
+    fn row_dot_skips_zeros() {
+        let m = sample();
+        let w = [1.0, 10.0, 100.0, 1000.0];
+        assert_eq!(m.row_dot(0, &w), 20.0 + 1000.0);
+        assert_eq!(m.row_dot(1, &w), 0.0); // empty row
+        assert_eq!(m.row_dot(2, &w), -1.0 + 50.0);
+    }
+
+    #[test]
+    fn add_row_scaled_scatter() {
+        let m = sample();
+        let mut out = vec![0.0; 4];
+        m.add_row_scaled(2, 2.0, &mut out);
+        assert_eq!(out, vec![-2.0, 0.0, 1.0, 0.0]);
+    }
+
+    #[test]
+    fn triplets_sorted_within_row() {
+        let m = CsrMatrix::from_triplets(1, 3, &[(0, 2, 1.0), (0, 0, 2.0)]);
+        assert_eq!(m.indices, vec![0, 2]);
+        assert_eq!(m.values, vec![2.0, 1.0]);
+    }
+
+    #[test]
+    fn subset_and_dense_roundtrip() {
+        let m = sample();
+        let s = m.subset(&[2, 0]);
+        let d = s.to_dense();
+        assert_eq!(d.row(0), &[-1.0, 0.0, 0.5, 0.0]);
+        assert_eq!(d.row(1), &[0.0, 2.0, 0.0, 1.0]);
+    }
+
+    #[test]
+    fn norms() {
+        let m = sample();
+        assert!((m.row_norm_sq(0) - 5.0).abs() < 1e-12);
+        assert_eq!(m.row_norm_sq(1), 0.0);
+    }
+}

@@ -1,0 +1,269 @@
+//! Figure harnesses: the code that regenerates Figures 1-4 and the
+//! headline 25x claim. Each writes per-run traces as CSV under
+//! `results/figN/` and returns structured summaries for the CLI tables.
+
+use anyhow::Result;
+
+use super::{cached_optimum, make_cluster, ExpDataset, Profile};
+use crate::algorithms::{self, Budget};
+use crate::config::{AlgorithmSpec, Backend};
+use crate::loss::LossKind;
+use crate::solvers::SolverKind;
+use crate::telemetry::Trace;
+
+/// The four Section-6 competitors at a given per-round H.
+pub fn competitors(h: usize) -> Vec<AlgorithmSpec> {
+    vec![
+        AlgorithmSpec::Cocoa { h, beta_k: 1.0, solver: SolverKind::Sdca },
+        AlgorithmSpec::MinibatchCd { h, beta_b: 1.0 },
+        AlgorithmSpec::LocalSgd { h, beta: 1.0 },
+        AlgorithmSpec::MinibatchSgd { h, beta: 1.0 },
+    ]
+}
+
+/// H grid relative to a block size: the paper sweeps H from 1 to ~n_k
+/// (processing nearly all local data per round was best for the
+/// locally-updating methods).
+pub fn h_grid(n_k: usize, profile: Profile) -> Vec<usize> {
+    let fracs: &[f64] = match profile {
+        Profile::Smoke => &[0.01, 0.1, 1.0],
+        Profile::Paper => &[0.001, 0.01, 0.1, 0.5, 1.0],
+    };
+    let mut grid: Vec<usize> = fracs
+        .iter()
+        .map(|f| ((n_k as f64 * f).round() as usize).max(1))
+        .collect();
+    grid.dedup();
+    grid
+}
+
+/// One algorithm's best-H result on one dataset.
+pub struct BestH {
+    pub algorithm: &'static str,
+    pub h: usize,
+    /// Simulated seconds to reach `target` suboptimality (None = never).
+    pub time_to_target: Option<f64>,
+    /// Communicated vectors to reach it.
+    pub vectors_to_target: Option<u64>,
+    pub final_subopt: f64,
+    pub trace: Trace,
+}
+
+/// Run every competitor over the H grid on one dataset and keep the best-H
+/// trace per algorithm — the exact construction of Figures 1 and 2
+/// ("for all competing methods, we present the result for the batch size
+/// that yields the best performance").
+pub fn fig1_fig2_dataset(
+    ds: &ExpDataset,
+    profile: Profile,
+    rounds: u64,
+    target: f64,
+    results_dir: &str,
+) -> Result<Vec<BestH>> {
+    let p_star = cached_optimum(ds, LossKind::Hinge, results_dir)?;
+    let n_k = ds.data.n() / ds.k;
+    let grid = h_grid(n_k, profile);
+    let budget = Budget { rounds, target_gap: 0.0, target_subopt: target / 4.0 };
+
+    let mut best: Vec<Option<BestH>> = vec![None, None, None, None];
+    for &h in &grid {
+        for (slot, spec) in competitors(h).into_iter().enumerate() {
+            let mut cluster = make_cluster(ds, LossKind::Hinge, Backend::Native, "artifacts", 17)?;
+            let trace =
+                algorithms::run(&mut cluster, &spec, budget, 1, Some(p_star), ds.name)?;
+            cluster.shutdown();
+            let candidate = BestH {
+                algorithm: spec.name(),
+                h,
+                time_to_target: trace.time_to_subopt(target),
+                vectors_to_target: trace.vectors_to_subopt(target),
+                final_subopt: trace
+                    .rows
+                    .last()
+                    .map(|r| r.primal_subopt)
+                    .unwrap_or(f64::INFINITY),
+                trace,
+            };
+            let better = match &best[slot] {
+                None => true,
+                Some(cur) => match (candidate.time_to_target, cur.time_to_target) {
+                    (Some(a), Some(b)) => a < b,
+                    (Some(_), None) => true,
+                    (None, Some(_)) => false,
+                    (None, None) => candidate.final_subopt < cur.final_subopt,
+                },
+            };
+            if better {
+                best[slot] = Some(candidate);
+            }
+        }
+    }
+    let best: Vec<BestH> = best.into_iter().map(Option::unwrap).collect();
+    // persist the winning traces: the series of Figures 1 and 2
+    for b in &best {
+        let path = format!(
+            "{results_dir}/fig1_fig2/{}_{}_h{}.csv",
+            ds.name, b.algorithm, b.h
+        );
+        b.trace.to_csv(path)?;
+    }
+    Ok(best)
+}
+
+/// Figure 3: the effect of H on CoCoA (cov dataset, K = 4 in the paper).
+pub fn fig3(
+    ds: &ExpDataset,
+    profile: Profile,
+    rounds: u64,
+    results_dir: &str,
+) -> Result<Vec<(usize, Trace)>> {
+    let p_star = cached_optimum(ds, LossKind::Hinge, results_dir)?;
+    let n_k = ds.data.n() / ds.k;
+    let mut grid = vec![1usize];
+    grid.extend(h_grid(n_k, profile));
+    grid.dedup();
+    let mut out = Vec::new();
+    for h in grid {
+        let mut cluster = make_cluster(ds, LossKind::Hinge, Backend::Native, "artifacts", 19)?;
+        let spec = AlgorithmSpec::Cocoa { h, beta_k: 1.0, solver: SolverKind::Sdca };
+        let trace = algorithms::run(
+            &mut cluster,
+            &spec,
+            Budget::rounds(rounds),
+            1,
+            Some(p_star),
+            ds.name,
+        )?;
+        cluster.shutdown();
+        trace.to_csv(format!("{results_dir}/fig3/cocoa_h{h}.csv"))?;
+        out.push((h, trace));
+    }
+    Ok(out)
+}
+
+/// One (algorithm, beta) cell of Figure 4.
+pub struct BetaCell {
+    pub algorithm: &'static str,
+    pub beta: f64,
+    pub time_to_target: Option<f64>,
+    pub final_subopt: f64,
+}
+
+/// Figure 4: scaling the averaging step by beta, for two batch sizes
+/// (paper: H = 1e5 and H = 100 on cov). beta ranges over [1, K] for the
+/// K-averaged methods and [1, b] analogues for mini-batch CD.
+pub fn fig4(
+    ds: &ExpDataset,
+    h: usize,
+    rounds: u64,
+    target: f64,
+    results_dir: &str,
+) -> Result<Vec<BetaCell>> {
+    let p_star = cached_optimum(ds, LossKind::Hinge, results_dir)?;
+    let k = ds.k as f64;
+    let b_total = (h * ds.k) as f64;
+    let mut cells = Vec::new();
+    let betas_k: Vec<f64> = vec![1.0, (k / 2.0).max(1.0), k];
+    let betas_b: Vec<f64> = vec![1.0, (b_total / 100.0).max(1.0), (b_total / 10.0).max(1.0), b_total];
+    let budget = Budget { rounds, target_gap: 0.0, target_subopt: target / 4.0 };
+
+    let mut run_one = |spec: AlgorithmSpec, beta: f64| -> Result<()> {
+        let mut cluster = make_cluster(ds, LossKind::Hinge, Backend::Native, "artifacts", 23)?;
+        let trace = algorithms::run(&mut cluster, &spec, budget, 1, Some(p_star), ds.name)?;
+        cluster.shutdown();
+        trace.to_csv(format!(
+            "{results_dir}/fig4/{}_h{}_beta{}.csv",
+            spec.name(),
+            h,
+            beta
+        ))?;
+        cells.push(BetaCell {
+            algorithm: spec.name(),
+            beta,
+            time_to_target: trace.time_to_subopt(target),
+            final_subopt: trace
+                .rows
+                .last()
+                .map(|r| r.primal_subopt)
+                .unwrap_or(f64::INFINITY),
+        });
+        Ok(())
+    };
+
+    for &beta in &betas_k {
+        run_one(
+            AlgorithmSpec::Cocoa { h, beta_k: beta, solver: SolverKind::Sdca },
+            beta,
+        )?;
+        run_one(AlgorithmSpec::LocalSgd { h, beta }, beta)?;
+        run_one(AlgorithmSpec::MinibatchSgd { h, beta }, beta)?;
+    }
+    for &beta in &betas_b {
+        run_one(AlgorithmSpec::MinibatchCd { h, beta_b: beta }, beta)?;
+    }
+    Ok(cells)
+}
+
+/// The headline number: how much faster CoCoA reaches `target`
+/// suboptimality than the best competitor (paper: ~25x on average).
+pub struct Headline {
+    pub dataset: &'static str,
+    pub cocoa_time: Option<f64>,
+    pub best_other: Option<(String, f64)>,
+    pub speedup: Option<f64>,
+}
+
+pub fn headline(best: &[BestH], dataset: &'static str) -> Headline {
+    let cocoa = best.iter().find(|b| b.algorithm == "cocoa");
+    let cocoa_time = cocoa.and_then(|b| b.time_to_target);
+    let best_other = best
+        .iter()
+        .filter(|b| b.algorithm != "cocoa")
+        .filter_map(|b| b.time_to_target.map(|t| (b.algorithm.to_string(), t)))
+        .min_by(|a, b| a.1.total_cmp(&b.1));
+    let speedup = match (cocoa_time, &best_other) {
+        (Some(c), Some((_, o))) if c > 0.0 => Some(o / c),
+        _ => None,
+    };
+    Headline { dataset, cocoa_time, best_other, speedup }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn h_grid_scales_with_block() {
+        let g = h_grid(1000, Profile::Paper);
+        assert!(g.contains(&1000));
+        assert!(g.iter().all(|&h| h >= 1));
+        assert!(g.windows(2).all(|w| w[0] < w[1]));
+    }
+
+    #[test]
+    fn competitors_are_the_papers_four() {
+        let names: Vec<_> = competitors(10).iter().map(|s| s.name()).collect();
+        assert_eq!(names, vec!["cocoa", "minibatch_cd", "local_sgd", "minibatch_sgd"]);
+    }
+
+    #[test]
+    fn headline_math() {
+        let mk = |alg: &'static str, t: Option<f64>| BestH {
+            algorithm: alg,
+            h: 1,
+            time_to_target: t,
+            vectors_to_target: t.map(|x| x as u64),
+            final_subopt: 0.0,
+            trace: Trace::new(alg, "x", 1, 1, 1.0, 0.1),
+        };
+        let best = vec![
+            mk("cocoa", Some(2.0)),
+            mk("minibatch_cd", Some(50.0)),
+            mk("local_sgd", Some(10.0)),
+            mk("minibatch_sgd", None),
+        ];
+        let h = headline(&best, "cov");
+        assert_eq!(h.speedup, Some(5.0));
+        assert_eq!(h.best_other.unwrap().0, "local_sgd");
+    }
+}

@@ -1,0 +1,114 @@
+//! Hinge loss — the SVM loss used in all of the paper's experiments
+//! (Section 6), with the classic closed-form SDCA coordinate update.
+
+use super::Loss;
+
+/// `loss(a, y) = max(0, 1 - y a)`; dual box `y alpha in [0, 1]`,
+/// `conj(-alpha) = -y alpha` inside the box.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct Hinge;
+
+impl Loss for Hinge {
+    #[inline]
+    fn value(&self, a: f64, y: f64) -> f64 {
+        (1.0 - y * a).max(0.0)
+    }
+
+    #[inline]
+    fn conjugate(&self, alpha: f64, y: f64) -> f64 {
+        let b = y * alpha;
+        if !(-1e-9..=1.0 + 1e-9).contains(&b) {
+            return f64::INFINITY;
+        }
+        -b
+    }
+
+    #[inline]
+    fn subgradient(&self, a: f64, y: f64) -> f64 {
+        if y * a < 1.0 {
+            -y
+        } else {
+            0.0
+        }
+    }
+
+    #[inline]
+    fn coord_delta(&self, q: f64, y: f64, a: f64, s: f64) -> f64 {
+        if s <= 0.0 {
+            return 0.0;
+        }
+        let b = ((1.0 - y * q) / s + y * a).clamp(0.0, 1.0);
+        y * b - a
+    }
+
+    fn smoothness_gamma(&self) -> Option<f64> {
+        None // non-smooth: Theorem 2's rate does not apply directly
+    }
+
+    #[inline]
+    fn project_feasible(&self, alpha: f64, y: f64) -> f64 {
+        y * (y * alpha).clamp(0.0, 1.0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::loss::test_util::assert_delta_is_argmax;
+
+    #[test]
+    fn value_and_subgradient() {
+        let l = Hinge;
+        assert_eq!(l.value(0.0, 1.0), 1.0);
+        assert_eq!(l.value(2.0, 1.0), 0.0);
+        assert_eq!(l.value(-2.0, -1.0), 0.0);
+        assert_eq!(l.subgradient(0.5, 1.0), -1.0);
+        assert_eq!(l.subgradient(2.0, 1.0), 0.0);
+    }
+
+    #[test]
+    fn conjugate_box() {
+        let l = Hinge;
+        assert_eq!(l.conjugate(0.5, 1.0), -0.5);
+        assert!(l.conjugate(1.5, 1.0).is_infinite());
+        assert!(l.conjugate(-0.5, 1.0).is_infinite());
+        assert_eq!(l.conjugate(-0.5, -1.0), -0.5);
+    }
+
+    #[test]
+    fn delta_is_argmax_over_grid() {
+        let l = Hinge;
+        for &y in &[1.0, -1.0] {
+            for &a in &[0.0, 0.3 * y, 0.9 * y] {
+                for &q in &[-1.0, 0.0, 0.5, 2.0] {
+                    for &s in &[0.1, 1.0, 10.0] {
+                        assert_delta_is_argmax(&l, q, y, a, s);
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn delta_keeps_feasibility() {
+        let l = Hinge;
+        let y = -1.0;
+        let a = -0.8; // b = 0.8
+        let delta = l.coord_delta(-5.0, y, a, 0.5);
+        let b_new = y * (a + delta);
+        assert!((0.0..=1.0).contains(&b_new));
+    }
+
+    #[test]
+    fn zero_row_no_move() {
+        assert_eq!(Hinge.coord_delta(0.3, 1.0, 0.2, 0.0), 0.0);
+    }
+
+    #[test]
+    fn project_feasible_clamps() {
+        let l = Hinge;
+        assert_eq!(l.project_feasible(1.2, 1.0), 1.0);
+        assert_eq!(l.project_feasible(-0.2, 1.0), 0.0);
+        assert_eq!(l.project_feasible(-1.2, -1.0), -1.0);
+    }
+}

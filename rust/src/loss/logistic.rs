@@ -1,0 +1,134 @@
+//! Logistic loss — regularized logistic regression; the coordinate
+//! maximizer has no closed form, so a fixed Newton iteration solves the 1-D
+//! subproblem (matching `kernels/local_sdca.py` step for step).
+
+use super::Loss;
+
+/// Newton iterations for the 1-D conjugate maximization; kept identical to
+/// `python/compile/kernels/ref.py::LOGISTIC_NEWTON_ITERS`.
+pub const NEWTON_ITERS: usize = 10;
+const EPS: f64 = 1e-6;
+
+/// `loss(a, y) = log(1 + exp(-y a))`; dual `b = y alpha in (0,1)` with
+/// `conj(-alpha) = b log b + (1-b) log(1-b)` (negative entropy);
+/// 4-smooth (`gamma = 1/4`).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct Logistic;
+
+impl Loss for Logistic {
+    #[inline]
+    fn value(&self, a: f64, y: f64) -> f64 {
+        let z = -y * a;
+        // stable log(1 + e^z)
+        if z > 0.0 {
+            z + (1.0 + (-z).exp()).ln()
+        } else {
+            (1.0 + z.exp()).ln()
+        }
+    }
+
+    #[inline]
+    fn conjugate(&self, alpha: f64, y: f64) -> f64 {
+        let b = y * alpha;
+        if b <= 0.0 || b >= 1.0 {
+            if b == 0.0 || b == 1.0 {
+                return 0.0; // entropy limit
+            }
+            return f64::INFINITY;
+        }
+        b * b.ln() + (1.0 - b) * (1.0 - b).ln()
+    }
+
+    #[inline]
+    fn subgradient(&self, a: f64, y: f64) -> f64 {
+        // d/da log(1+exp(-ya)) = -y / (1 + exp(ya))
+        -y / (1.0 + (y * a).exp())
+    }
+
+    #[inline]
+    fn coord_delta(&self, q: f64, y: f64, a: f64, s: f64) -> f64 {
+        if s <= 0.0 {
+            return 0.0;
+        }
+        // Newton on f(delta) = -conj(-(a+delta)) - q delta - s delta^2/2:
+        //   f'(delta)  = -y ln(b/(1-b)) - q - s delta,  b = y(a+delta)
+        //   f''(delta) = -1/(b(1-b)) - s
+        let mut delta = 0.0;
+        for _ in 0..NEWTON_ITERS {
+            let b = (y * (a + delta)).clamp(EPS, 1.0 - EPS);
+            let g = -y * (b / (1.0 - b)).ln() - q - s * delta;
+            let h = -1.0 / (b * (1.0 - b)) - s;
+            delta -= g / h;
+            // keep the iterate strictly inside the feasible box
+            let b_new = (y * (a + delta)).clamp(EPS, 1.0 - EPS);
+            delta = y * b_new - a;
+        }
+        delta
+    }
+
+    fn smoothness_gamma(&self) -> Option<f64> {
+        Some(0.25)
+    }
+
+    #[inline]
+    fn project_feasible(&self, alpha: f64, y: f64) -> f64 {
+        y * (y * alpha).clamp(EPS, 1.0 - EPS)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::loss::test_util::assert_delta_is_argmax;
+
+    #[test]
+    fn value_stable_at_extremes() {
+        let l = Logistic;
+        assert!(l.value(100.0, 1.0) < 1e-10);
+        assert!((l.value(-100.0, 1.0) - 100.0).abs() < 1e-9);
+        assert!((l.value(0.0, 1.0) - std::f64::consts::LN_2).abs() < 1e-12);
+    }
+
+    #[test]
+    fn conjugate_entropy() {
+        let l = Logistic;
+        assert!((l.conjugate(0.5, 1.0) - (0.5f64.ln())).abs() < 1e-12);
+        assert!(l.conjugate(1.5, 1.0).is_infinite());
+        assert_eq!(l.conjugate(1.0, 1.0), 0.0);
+    }
+
+    #[test]
+    fn subgradient_matches_finite_difference() {
+        let l = Logistic;
+        for &a in &[-2.0, -0.1, 0.0, 0.4, 3.0] {
+            let eps = 1e-6;
+            let fd = (l.value(a + eps, 1.0) - l.value(a - eps, 1.0)) / (2.0 * eps);
+            assert!((l.subgradient(a, 1.0) - fd).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn delta_is_argmax_over_grid() {
+        let l = Logistic;
+        for &y in &[1.0, -1.0] {
+            for &a in &[0.2 * y, 0.5 * y, 0.8 * y] {
+                for &q in &[-1.0, 0.0, 0.8] {
+                    for &s in &[0.1, 1.0, 4.0] {
+                        assert_delta_is_argmax(&l, q, y, a, s);
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn newton_stays_feasible_from_boundary() {
+        let l = Logistic;
+        // starting from alpha = 0 (the CoCoA initial point) must move
+        // strictly inside (0,1) without NaN
+        let delta = l.coord_delta(0.0, 1.0, 0.0, 0.5);
+        assert!(delta.is_finite());
+        let b = 1.0 * (0.0 + delta);
+        assert!(b > 0.0 && b < 1.0, "b = {b}");
+    }
+}

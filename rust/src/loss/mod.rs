@@ -1,0 +1,188 @@
+//! The regularized-loss-minimization problem class of eq. (1)/(2): losses,
+//! Fenchel conjugates, and single-coordinate dual maximizers.
+//!
+//! Conventions (SSZ13, mirrored exactly by `python/compile/kernels/ref.py`):
+//!
+//! * primal: `P(w) = (lambda/2)||w||^2 + (1/n) sum_i loss(x_i^T w, y_i)`
+//! * dual:   `D(a) = -(lambda/2)||A a||^2 - (1/n) sum_i conj(-a_i)`
+//! * `A_i = x_i/(lambda n)`, `w(a) = A a`; hinge dual box `y_i a_i in [0,1]`.
+//!
+//! `coord_delta` solves the 1-D subproblem of Procedure B:
+//! `argmax_da  -conj(-(a+da)) - q*da - s*da^2/2` with `q = x_i^T w` and
+//! `s = ||x_i||^2/(lambda n)` — closed form for hinge/smoothed-hinge/squared,
+//! a fixed Newton iteration for logistic.
+
+mod hinge;
+mod logistic;
+mod smoothed_hinge;
+mod squared;
+
+pub use hinge::Hinge;
+pub use logistic::Logistic;
+pub use smoothed_hinge::SmoothedHinge;
+pub use squared::Squared;
+
+/// A loss `ell_i(a)` (with label `y`) and everything the primal-dual
+/// machinery needs from it.
+pub trait Loss: Send + Sync + std::fmt::Debug {
+    /// Primal loss value at margin `a = x_i^T w`.
+    fn value(&self, a: f64, y: f64) -> f64;
+
+    /// Conjugate term `conj(-alpha)` as it appears in `D`; `+inf` when
+    /// `alpha` is dual-infeasible.
+    fn conjugate(&self, alpha: f64, y: f64) -> f64;
+
+    /// A subgradient of `a -> value(a, y)` at `a` (drives the SGD baselines).
+    fn subgradient(&self, a: f64, y: f64) -> f64;
+
+    /// Maximizer of the 1-D dual subproblem; see module docs.
+    fn coord_delta(&self, q: f64, y: f64, a: f64, s: f64) -> f64;
+
+    /// `gamma` such that the loss is `(1/gamma)`-smooth, if smooth
+    /// (Proposition 1 / Theorem 2 need it); `None` for hinge.
+    fn smoothness_gamma(&self) -> Option<f64>;
+
+    /// Clamp `alpha` into the dual-feasible set (numerical hygiene after
+    /// f32 round-trips through the PJRT backend).
+    fn project_feasible(&self, alpha: f64, y: f64) -> f64;
+}
+
+/// Config-friendly loss selector.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum LossKind {
+    Hinge,
+    SmoothedHinge { gamma: f64 },
+    Squared,
+    Logistic,
+}
+
+impl LossKind {
+    /// Parse from config names; `gamma` applies to `smoothed_hinge`.
+    pub fn from_name(name: &str, gamma: f64) -> Option<Self> {
+        match name {
+            "hinge" => Some(LossKind::Hinge),
+            "smoothed_hinge" => Some(LossKind::SmoothedHinge { gamma }),
+            "squared" => Some(LossKind::Squared),
+            "logistic" => Some(LossKind::Logistic),
+            _ => None,
+        }
+    }
+
+    pub fn build(&self) -> Box<dyn Loss> {
+        match *self {
+            LossKind::Hinge => Box::new(Hinge),
+            LossKind::SmoothedHinge { gamma } => Box::new(SmoothedHinge::new(gamma)),
+            LossKind::Squared => Box::new(Squared),
+            LossKind::Logistic => Box::new(Logistic),
+        }
+    }
+
+    /// The name the AOT manifest uses for this loss's kernel artifacts.
+    pub fn artifact_name(&self) -> &'static str {
+        match self {
+            LossKind::Hinge => "hinge",
+            LossKind::SmoothedHinge { .. } => "smoothed_hinge",
+            LossKind::Squared => "squared",
+            LossKind::Logistic => "logistic",
+        }
+    }
+
+    /// Smoothing parameter forwarded to the kernels (unused slots get 1.0).
+    pub fn gamma(&self) -> f64 {
+        match *self {
+            LossKind::SmoothedHinge { gamma } => gamma,
+            _ => 1.0,
+        }
+    }
+}
+
+impl std::fmt::Display for LossKind {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            LossKind::SmoothedHinge { gamma } => write!(f, "smoothed_hinge(γ={gamma})"),
+            other => write!(f, "{}", other.artifact_name()),
+        }
+    }
+}
+
+#[cfg(test)]
+pub(crate) mod test_util {
+    use super::*;
+
+    /// Numerically verify that `coord_delta` maximizes the 1-D subproblem:
+    /// the objective at `delta*` beats a grid of perturbations.
+    pub fn assert_delta_is_argmax(loss: &dyn Loss, q: f64, y: f64, a: f64, s: f64) {
+        let obj = |da: f64| -loss.conjugate(a + da, y) - q * da - s * da * da / 2.0;
+        let star = loss.coord_delta(q, y, a, s);
+        let at_star = obj(star);
+        assert!(at_star.is_finite(), "objective at delta* not finite");
+        for step in [-0.1, -0.01, -1e-4, 1e-4, 0.01, 0.1] {
+            let v = obj(star + step);
+            assert!(
+                v <= at_star + 1e-9,
+                "perturbation {step} improves objective: {v} > {at_star} \
+                 (q={q}, y={y}, a={a}, s={s})"
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn kind_roundtrips_through_names() {
+        for kind in [
+            LossKind::Hinge,
+            LossKind::SmoothedHinge { gamma: 0.25 },
+            LossKind::Squared,
+            LossKind::Logistic,
+        ] {
+            let back = LossKind::from_name(kind.artifact_name(), kind.gamma());
+            match kind {
+                LossKind::SmoothedHinge { gamma } => {
+                    assert_eq!(back, Some(LossKind::SmoothedHinge { gamma }))
+                }
+                other => assert_eq!(back, Some(other)),
+            }
+        }
+        assert_eq!(LossKind::from_name("nope", 1.0), None);
+    }
+
+    #[test]
+    fn artifact_names_match_python_losses() {
+        assert_eq!(LossKind::Hinge.artifact_name(), "hinge");
+        assert_eq!(
+            LossKind::SmoothedHinge { gamma: 0.5 }.artifact_name(),
+            "smoothed_hinge"
+        );
+        assert_eq!(LossKind::Squared.artifact_name(), "squared");
+        assert_eq!(LossKind::Logistic.artifact_name(), "logistic");
+    }
+
+    /// Fenchel–Young: for every loss, value(a) + conj*(-alpha) >= -alpha*a
+    /// pointwise, with equality at the coordinate maximizer's optimum pair.
+    #[test]
+    fn fenchel_young_inequality() {
+        let losses: Vec<Box<dyn Loss>> = vec![
+            Box::new(Hinge),
+            Box::new(SmoothedHinge::new(0.5)),
+            Box::new(Squared),
+            Box::new(Logistic),
+        ];
+        for loss in &losses {
+            for &y in &[1.0, -1.0] {
+                for &a in &[-2.0, -0.3, 0.0, 0.7, 1.5] {
+                    for &alpha in &[0.1 * y, 0.5 * y, 0.9 * y] {
+                        let lhs = loss.value(a, y) + loss.conjugate(alpha, y);
+                        assert!(
+                            lhs >= -alpha * a - 1e-9,
+                            "{loss:?} violates Fenchel–Young at a={a}, alpha={alpha}, y={y}"
+                        );
+                    }
+                }
+            }
+        }
+    }
+}

@@ -1,0 +1,136 @@
+//! gamma-smoothed hinge — the `(1/gamma)`-smooth loss under which
+//! Proposition 1 and Theorem 2 hold; the theory-validation experiments use
+//! this loss so measured rates can be compared against the analysis.
+
+use super::Loss;
+
+/// Smoothed hinge (SSZ13):
+/// `0` if `ya >= 1`; `1 - ya - gamma/2` if `ya <= 1 - gamma`;
+/// `(1 - ya)^2/(2 gamma)` in between. `(1/gamma)`-smooth, and
+/// `conj(-alpha) = -y alpha + (gamma/2)(y alpha)^2` on the box.
+#[derive(Debug, Clone, Copy)]
+pub struct SmoothedHinge {
+    pub gamma: f64,
+}
+
+impl SmoothedHinge {
+    pub fn new(gamma: f64) -> Self {
+        assert!(gamma > 0.0, "smoothing gamma must be positive");
+        SmoothedHinge { gamma }
+    }
+}
+
+impl Loss for SmoothedHinge {
+    #[inline]
+    fn value(&self, a: f64, y: f64) -> f64 {
+        let ya = y * a;
+        if ya >= 1.0 {
+            0.0
+        } else if ya <= 1.0 - self.gamma {
+            1.0 - ya - self.gamma / 2.0
+        } else {
+            (1.0 - ya) * (1.0 - ya) / (2.0 * self.gamma)
+        }
+    }
+
+    #[inline]
+    fn conjugate(&self, alpha: f64, y: f64) -> f64 {
+        let b = y * alpha;
+        if !(-1e-9..=1.0 + 1e-9).contains(&b) {
+            return f64::INFINITY;
+        }
+        -b + self.gamma * b * b / 2.0
+    }
+
+    #[inline]
+    fn subgradient(&self, a: f64, y: f64) -> f64 {
+        let ya = y * a;
+        if ya >= 1.0 {
+            0.0
+        } else if ya <= 1.0 - self.gamma {
+            -y
+        } else {
+            -y * (1.0 - ya) / self.gamma
+        }
+    }
+
+    #[inline]
+    fn coord_delta(&self, q: f64, y: f64, a: f64, s: f64) -> f64 {
+        if s <= 0.0 {
+            return 0.0;
+        }
+        let g = self.gamma;
+        let b = ((1.0 - y * q - g * y * a) / (s + g) + y * a).clamp(0.0, 1.0);
+        y * b - a
+    }
+
+    fn smoothness_gamma(&self) -> Option<f64> {
+        Some(self.gamma)
+    }
+
+    #[inline]
+    fn project_feasible(&self, alpha: f64, y: f64) -> f64 {
+        y * (y * alpha).clamp(0.0, 1.0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::loss::test_util::assert_delta_is_argmax;
+
+    #[test]
+    fn value_piecewise() {
+        let l = SmoothedHinge::new(0.5);
+        assert_eq!(l.value(2.0, 1.0), 0.0);
+        // linear branch: ya = -1 <= 1 - gamma
+        assert!((l.value(-1.0, 1.0) - (1.0 + 1.0 - 0.25)).abs() < 1e-12);
+        // quadratic branch: ya = 0.75 in (0.5, 1)
+        assert!((l.value(0.75, 1.0) - 0.0625 / 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn smooth_limit_recovers_hinge() {
+        // gamma -> 0 converges to plain hinge
+        let small = SmoothedHinge::new(1e-9);
+        for &a in &[-1.0, 0.0, 0.5, 2.0] {
+            let h = crate::loss::Hinge;
+            assert!((small.value(a, 1.0) - h.value(a, 1.0)).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn delta_is_argmax_over_grid() {
+        for &gamma in &[0.1, 0.5, 1.0] {
+            let l = SmoothedHinge::new(gamma);
+            for &y in &[1.0, -1.0] {
+                for &a in &[0.0, 0.4 * y] {
+                    for &q in &[-1.5, 0.0, 1.0] {
+                        for &s in &[0.2, 2.0] {
+                            assert_delta_is_argmax(&l, q, y, a, s);
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn gradient_is_lipschitz_with_inv_gamma() {
+        let gamma = 0.25;
+        let l = SmoothedHinge::new(gamma);
+        let pts: Vec<f64> = (-40..40).map(|i| i as f64 * 0.05).collect();
+        for win in pts.windows(2) {
+            let (a, b) = (win[0], win[1]);
+            let lip = (l.subgradient(a, 1.0) - l.subgradient(b, 1.0)).abs()
+                / (a - b).abs();
+            assert!(lip <= 1.0 / gamma + 1e-9, "lipschitz {lip} > 1/gamma");
+        }
+    }
+
+    #[test]
+    #[should_panic]
+    fn zero_gamma_rejected() {
+        SmoothedHinge::new(0.0);
+    }
+}

@@ -1,0 +1,90 @@
+//! Squared loss — ridge regression inside the same framework (the paper's
+//! problem class (1) covers "regularized linear regression").
+
+use super::Loss;
+
+/// `loss(a, y) = (a - y)^2 / 2`; `conj(-alpha) = alpha^2/2 - alpha y`
+/// (unconstrained dual), 1-smooth (`gamma = 1`).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct Squared;
+
+impl Loss for Squared {
+    #[inline]
+    fn value(&self, a: f64, y: f64) -> f64 {
+        0.5 * (a - y) * (a - y)
+    }
+
+    #[inline]
+    fn conjugate(&self, alpha: f64, y: f64) -> f64 {
+        alpha * alpha / 2.0 - alpha * y
+    }
+
+    #[inline]
+    fn subgradient(&self, a: f64, y: f64) -> f64 {
+        a - y
+    }
+
+    #[inline]
+    fn coord_delta(&self, q: f64, y: f64, a: f64, s: f64) -> f64 {
+        if s <= 0.0 {
+            return 0.0;
+        }
+        (y - q - a) / (1.0 + s)
+    }
+
+    fn smoothness_gamma(&self) -> Option<f64> {
+        Some(1.0)
+    }
+
+    #[inline]
+    fn project_feasible(&self, alpha: f64, _y: f64) -> f64 {
+        alpha // unconstrained
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::loss::test_util::assert_delta_is_argmax;
+
+    #[test]
+    fn value_and_gradient() {
+        let l = Squared;
+        assert_eq!(l.value(3.0, 1.0), 2.0);
+        assert_eq!(l.subgradient(3.0, 1.0), 2.0);
+    }
+
+    #[test]
+    fn conjugate_fenchel_equality_at_optimum() {
+        // for smooth losses equality holds when alpha = -loss'(a)
+        let l = Squared;
+        let (a, y) = (1.7, 0.5);
+        let alpha = -l.subgradient(a, y);
+        let lhs = l.value(a, y) + l.conjugate(alpha, y);
+        assert!((lhs - (-alpha * a)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn delta_is_argmax_over_grid() {
+        let l = Squared;
+        for &y in &[1.0, -1.0, 0.3] {
+            for &a in &[-1.0, 0.0, 2.0] {
+                for &q in &[-2.0, 0.0, 1.0] {
+                    for &s in &[0.1, 1.0, 5.0] {
+                        assert_delta_is_argmax(&l, q, y, a, s);
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn exact_solve_in_one_step_when_isolated() {
+        // with w containing only this coordinate's contribution, repeated
+        // updates converge geometrically; one step from 0 with q=0 lands at
+        // y/(1+s)
+        let l = Squared;
+        let d = l.coord_delta(0.0, 2.0, 0.0, 1.0);
+        assert!((d - 1.0).abs() < 1e-12);
+    }
+}

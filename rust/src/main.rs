@@ -1,0 +1,365 @@
+//! `cocoa` — CLI launcher for the CoCoA distributed training framework.
+//!
+//! Subcommands:
+//!   train --config <toml> [--out <csv>] [--p-star <f64>]
+//!   repro <table1|fig1|fig2|fig3|fig4|headline|theory|all>
+//!         [--smoke] [--results-dir <dir>] [--rounds <n>]
+//!   optimum --config <toml>
+//!   gen-data <cov|rcv1|imagenet> --n <n> --d <d> [--seed <s>] --out <path>
+//!
+//! The binary is self-contained after `make artifacts`: python never runs
+//! on this path. (Args are parsed by hand — the offline build carries no
+//! clap.)
+
+use anyhow::{anyhow, bail, Result};
+
+use cocoa::algorithms::{self, Budget};
+use cocoa::config::ExperimentConfig;
+use cocoa::coordinator::Cluster;
+use cocoa::data;
+use cocoa::experiments::{self, figures, theory_val, Profile};
+use cocoa::objective;
+
+/// Tiny argv helper: `--key value` options + positionals.
+struct Args {
+    positional: Vec<String>,
+    options: std::collections::HashMap<String, String>,
+    flags: std::collections::HashSet<String>,
+}
+
+impl Args {
+    fn parse(argv: &[String], flag_names: &[&str]) -> Result<Args> {
+        let mut positional = Vec::new();
+        let mut options = std::collections::HashMap::new();
+        let mut flags = std::collections::HashSet::new();
+        let mut it = argv.iter().peekable();
+        while let Some(arg) = it.next() {
+            if let Some(name) = arg.strip_prefix("--") {
+                if flag_names.contains(&name) {
+                    flags.insert(name.to_string());
+                } else {
+                    let value = it
+                        .next()
+                        .ok_or_else(|| anyhow!("--{name} requires a value"))?;
+                    options.insert(name.to_string(), value.clone());
+                }
+            } else {
+                positional.push(arg.clone());
+            }
+        }
+        Ok(Args { positional, options, flags })
+    }
+
+    fn opt(&self, name: &str) -> Option<&str> {
+        self.options.get(name).map(String::as_str)
+    }
+
+    fn req(&self, name: &str) -> Result<&str> {
+        self.opt(name).ok_or_else(|| anyhow!("missing required --{name}"))
+    }
+}
+
+const USAGE: &str = "\
+cocoa — communication-efficient distributed dual coordinate ascent (NIPS 2014 reproduction)
+
+USAGE:
+  cocoa train --config <toml> [--out <csv>] [--p-star <f64>]
+  cocoa repro <table1|fig1|fig2|fig3|fig4|headline|theory|all> [--smoke] [--results-dir <dir>] [--rounds <n>]
+  cocoa optimum --config <toml>
+  cocoa gen-data <cov|rcv1|imagenet> --n <n> --d <d> [--seed <s>] --out <path>
+";
+
+fn main() -> Result<()> {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let Some(cmd) = argv.first() else {
+        eprint!("{USAGE}");
+        std::process::exit(2);
+    };
+    match cmd.as_str() {
+        "train" => {
+            let args = Args::parse(&argv[1..], &[])?;
+            let p_star = args.opt("p-star").map(|s| s.parse()).transpose()?;
+            train(args.req("config")?, args.opt("out").map(String::from), p_star)
+        }
+        "repro" => {
+            let args = Args::parse(&argv[1..], &["smoke"])?;
+            let target = args
+                .positional
+                .first()
+                .ok_or_else(|| anyhow!("repro needs a target (e.g. fig1)"))?;
+            let profile =
+                if args.flags.contains("smoke") { Profile::Smoke } else { Profile::Paper };
+            let rounds = args.opt("rounds").map(|s| s.parse()).transpose()?;
+            repro(target, profile, args.opt("results-dir").unwrap_or("results"), rounds)
+        }
+        "optimum" => {
+            let args = Args::parse(&argv[1..], &[])?;
+            optimum(args.req("config")?)
+        }
+        "gen-data" => {
+            let args = Args::parse(&argv[1..], &[])?;
+            let regime = args
+                .positional
+                .first()
+                .ok_or_else(|| anyhow!("gen-data needs a regime (cov|rcv1|imagenet)"))?;
+            gen_data(
+                regime,
+                args.req("n")?.parse()?,
+                args.req("d")?.parse()?,
+                args.opt("seed").map(|s| s.parse()).transpose()?.unwrap_or(0),
+                args.req("out")?,
+            )
+        }
+        "help" | "--help" | "-h" => {
+            print!("{USAGE}");
+            Ok(())
+        }
+        other => {
+            eprintln!("unknown command {other:?}\n{USAGE}");
+            std::process::exit(2);
+        }
+    }
+}
+
+fn train(config_path: &str, out: Option<String>, p_star: Option<f64>) -> Result<()> {
+    let cfg = ExperimentConfig::from_toml_file(config_path)?;
+    let data = cfg.dataset.load()?;
+    let partition = cfg.partition.build(data.n());
+    eprintln!(
+        "dataset {} (n={}, d={}, density={:.4}) | K={} | {} | loss {} | lambda {}",
+        cfg.dataset.name(),
+        data.n(),
+        data.d(),
+        data.density(),
+        cfg.partition.k,
+        cfg.algorithm.name(),
+        cfg.loss,
+        cfg.lambda,
+    );
+    let mut cluster = Cluster::build(
+        &data,
+        &partition,
+        cfg.loss,
+        cfg.lambda,
+        match cfg.algorithm {
+            cocoa::config::AlgorithmSpec::Cocoa { solver, .. } => solver,
+            _ => cocoa::solvers::SolverKind::Sdca,
+        },
+        cfg.run.backend,
+        &cfg.artifacts_dir,
+        cfg.netsim,
+        cfg.run.seed,
+    )?;
+    let budget = Budget {
+        rounds: cfg.run.rounds,
+        target_gap: cfg.run.target_gap,
+        target_subopt: cfg.run.target_subopt,
+    };
+    let trace = algorithms::run(
+        &mut cluster,
+        &cfg.algorithm,
+        budget,
+        cfg.run.eval_every,
+        p_star,
+        &cfg.dataset.name(),
+    )?;
+    cluster.shutdown();
+
+    let last = trace.last().expect("at least round 0 recorded");
+    println!(
+        "finished: rounds={} sim_time={:.3}s vectors={} P={:.6} D={:.6} gap={:.2e}",
+        last.round, last.sim_time_s, last.vectors, last.primal, last.dual, last.gap
+    );
+    let out = out.unwrap_or_else(|| {
+        format!(
+            "results/train_{}_{}_k{}_h{}.csv",
+            cfg.dataset.name(),
+            cfg.algorithm.name(),
+            cfg.partition.k,
+            cfg.algorithm.h()
+        )
+    });
+    trace.to_csv(&out)?;
+    eprintln!("trace -> {out}");
+    Ok(())
+}
+
+fn repro(target: &str, profile: Profile, results_dir: &str, rounds: Option<u64>) -> Result<()> {
+    match target {
+        "table1" => {
+            println!("Table 1: Datasets for Empirical Study");
+            println!(
+                "{:<10} {:>10} {:>8} {:>9} {:>4} {:>10}",
+                "dataset", "n", "d", "density", "K", "lambda"
+            );
+            for row in experiments::table1(profile) {
+                println!(
+                    "{:<10} {:>10} {:>8} {:>9.4} {:>4} {:>10.1e}",
+                    row.name, row.n, row.d, row.density, row.k, row.lambda
+                );
+            }
+        }
+        "fig1" | "fig2" => {
+            let rounds = rounds.unwrap_or(default_rounds(profile));
+            for ds in experiments::datasets(profile) {
+                let best =
+                    figures::fig1_fig2_dataset(&ds, profile, rounds, 1e-3, results_dir)?;
+                println!(
+                    "\n{} (K={}): suboptimality vs time / vs communicated vectors",
+                    ds.name, ds.k
+                );
+                println!(
+                    "{:<14} {:>8} {:>16} {:>18} {:>12}",
+                    "algorithm", "best H", "t(.001) sim s", "vectors(.001)", "final subopt"
+                );
+                for b in &best {
+                    println!(
+                        "{:<14} {:>8} {:>16} {:>18} {:>12.2e}",
+                        b.algorithm,
+                        b.h,
+                        b.time_to_target
+                            .map(|t| format!("{t:.2}"))
+                            .unwrap_or("-".into()),
+                        b.vectors_to_target
+                            .map(|v| v.to_string())
+                            .unwrap_or("-".into()),
+                        b.final_subopt
+                    );
+                }
+                let h = figures::headline(&best, ds.name);
+                if let Some(s) = h.speedup {
+                    println!(
+                        "  -> CoCoA speedup to .001-accuracy: {s:.1}x over {}",
+                        h.best_other.unwrap().0
+                    );
+                }
+            }
+        }
+        "fig3" => {
+            let rounds = rounds.unwrap_or(default_rounds(profile));
+            let ds = &experiments::datasets(profile)[0]; // cov, K = 4 (paper)
+            let runs = figures::fig3(ds, profile, rounds, results_dir)?;
+            println!("Figure 3: effect of H on CoCoA ({} K={})", ds.name, ds.k);
+            println!("{:>8} {:>14} {:>14} {:>14}", "H", "rounds", "final subopt", "sim time s");
+            for (h, tr) in &runs {
+                let last = tr.rows.last().unwrap();
+                println!(
+                    "{:>8} {:>14} {:>14.2e} {:>14.2}",
+                    h, last.round, last.primal_subopt, last.sim_time_s
+                );
+            }
+        }
+        "fig4" => {
+            let rounds = rounds.unwrap_or(default_rounds(profile));
+            let ds = &experiments::datasets(profile)[0];
+            let n_k = ds.data.n() / ds.k;
+            for h in [n_k, 100.min(n_k)] {
+                let cells = figures::fig4(ds, h, rounds, 1e-3, results_dir)?;
+                println!("\nFigure 4: beta scaling on {} at H={h}", ds.name);
+                println!(
+                    "{:<14} {:>10} {:>16} {:>14}",
+                    "algorithm", "beta", "t(.001) sim s", "final subopt"
+                );
+                for c in &cells {
+                    println!(
+                        "{:<14} {:>10.1} {:>16} {:>14.2e}",
+                        c.algorithm,
+                        c.beta,
+                        c.time_to_target
+                            .map(|t| format!("{t:.2}"))
+                            .unwrap_or("-".into()),
+                        c.final_subopt
+                    );
+                }
+            }
+        }
+        "headline" => {
+            let rounds = rounds.unwrap_or(default_rounds(profile));
+            let mut speedups = Vec::new();
+            for ds in experiments::datasets(profile) {
+                let best =
+                    figures::fig1_fig2_dataset(&ds, profile, rounds, 1e-3, results_dir)?;
+                let h = figures::headline(&best, ds.name);
+                println!(
+                    "{:<10} cocoa {:>10} best-other {:>22} speedup {}",
+                    h.dataset,
+                    h.cocoa_time.map(|t| format!("{t:.2}s")).unwrap_or("-".into()),
+                    h.best_other
+                        .clone()
+                        .map(|(n, t)| format!("{n} {t:.2}s"))
+                        .unwrap_or("-".into()),
+                    h.speedup.map(|s| format!("{s:.1}x")).unwrap_or("-".into()),
+                );
+                if let Some(s) = h.speedup {
+                    speedups.push(s);
+                }
+            }
+            if !speedups.is_empty() {
+                let geo = speedups.iter().map(|s| s.ln()).sum::<f64>() / speedups.len() as f64;
+                println!("geometric-mean speedup: {:.1}x (paper reports ~25x)", geo.exp());
+            }
+        }
+        "theory" => {
+            let data = match profile {
+                Profile::Smoke => data::cov_like(600, 12, 0.05, 31),
+                Profile::Paper => data::cov_like(4000, 20, 0.05, 31),
+            };
+            let lambda = 10.0 / data.n() as f64;
+            println!("Theorem 2 validation (smoothed hinge, gamma=1, lambda={lambda:.1e}):");
+            println!(
+                "{:>3} {:>7} {:>10} {:>9} {:>11} {:>11} {:>6}",
+                "K", "H", "Theta", "sigma", "pred rate", "meas rate", "ok"
+            );
+            for (k, h) in [(1usize, 50usize), (2, 50), (4, 50), (4, 200), (8, 50)] {
+                let rep = theory_val::validate(&data, k, h, lambda, 1.0, 20, 7)?;
+                println!(
+                    "{:>3} {:>7} {:>10.4} {:>9.2} {:>11.5} {:>11.5} {:>6}",
+                    rep.k,
+                    rep.h,
+                    rep.theta,
+                    rep.sigma,
+                    rep.predicted_rate,
+                    rep.measured_rate,
+                    if rep.bound_respected { "yes" } else { "NO" }
+                );
+            }
+        }
+        "all" => {
+            for t in ["table1", "fig1", "fig3", "fig4", "theory"] {
+                repro(t, profile, results_dir, rounds)?;
+            }
+        }
+        other => bail!(
+            "unknown repro target {other:?} (try table1|fig1|fig2|fig3|fig4|headline|theory|all)"
+        ),
+    }
+    Ok(())
+}
+
+fn default_rounds(profile: Profile) -> u64 {
+    match profile {
+        Profile::Smoke => 150,
+        Profile::Paper => 60,
+    }
+}
+
+fn optimum(config_path: &str) -> Result<()> {
+    let cfg = ExperimentConfig::from_toml_file(config_path)?;
+    let data = cfg.dataset.load()?;
+    let loss = cfg.loss.build();
+    let (p_star, _) = objective::compute_optimum(&data, cfg.lambda, loss.as_ref(), 1e-9, 4000);
+    println!("{p_star:.12}");
+    Ok(())
+}
+
+fn gen_data(regime: &str, n: usize, d: usize, seed: u64, out: &str) -> Result<()> {
+    let ds = match regime {
+        "cov" => data::cov_like(n, d, 0.1, seed),
+        "rcv1" => data::rcv1_like(n, d, 12, 0.1, seed),
+        "imagenet" => data::imagenet_like(n, d, 0.1, seed),
+        other => bail!("unknown regime {other:?} (cov|rcv1|imagenet)"),
+    };
+    data::write_libsvm(&ds, out)?;
+    eprintln!("wrote {} rows x {} cols to {out}", ds.n(), ds.d());
+    Ok(())
+}

@@ -1,0 +1,204 @@
+//! Network cost model — converts counted communication into simulated
+//! distributed wall-time.
+//!
+//! The paper's experiments ran on Spark over m1.large EC2 instances; its
+//! headline claim is about wall-clock dominated by communication rounds.
+//! Our workers run in-process, so per-round *compute* is measured (thread
+//! CPU time, max over workers, as a real cluster would experience), and
+//! *communication* is modeled from exactly counted vectors/bytes:
+//!
+//! `round_time = max_k compute_k + latency + bytes_on_wire / bandwidth`
+//!
+//! The paper's own motivation quantifies the regime: memory access ~100 ns
+//! vs network ~250,000 ns (Section 1, footnote 1) — the presets below span
+//! commodity-cluster to multicore so the communication/computation
+//! trade-off (Figure 3) can be explored across environments.
+
+/// Simulated interconnect.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct NetworkModel {
+    /// Per-round fixed cost (seconds): barrier + scheduling + RTT.
+    pub latency_s: f64,
+    /// Payload rate (bytes/second) of the reduce+broadcast path.
+    pub bandwidth_bps: f64,
+    /// Wire width of one scalar (8 = f64, 4 = f32).
+    pub bytes_per_scalar: usize,
+}
+
+impl NetworkModel {
+    /// Commodity EC2-like cluster (the paper's testbed): ~5 ms barrier,
+    /// 1 Gbit/s effective reduce bandwidth.
+    pub fn ec2_like() -> Self {
+        NetworkModel { latency_s: 5e-3, bandwidth_bps: 125e6, bytes_per_scalar: 8 }
+    }
+
+    /// Low-latency HPC interconnect.
+    pub fn infiniband() -> Self {
+        NetworkModel { latency_s: 5e-5, bandwidth_bps: 5e9, bytes_per_scalar: 8 }
+    }
+
+    /// Multi-core shared memory ("communication as fast as memory access").
+    pub fn multicore() -> Self {
+        NetworkModel { latency_s: 1e-7, bandwidth_bps: 2e10, bytes_per_scalar: 8 }
+    }
+
+    /// No communication cost at all (isolates pure computation).
+    pub fn free() -> Self {
+        NetworkModel { latency_s: 0.0, bandwidth_bps: f64::INFINITY, bytes_per_scalar: 8 }
+    }
+
+    pub fn by_name(name: &str) -> Option<Self> {
+        match name {
+            "ec2_like" => Some(Self::ec2_like()),
+            "infiniband" => Some(Self::infiniband()),
+            "multicore" => Some(Self::multicore()),
+            "free" => Some(Self::free()),
+            _ => None,
+        }
+    }
+
+    /// Time to move `vectors` d-dimensional vectors through the leader in
+    /// one round (gather + broadcast counted once: the reduce result going
+    /// back out is one more vector per worker, folded into `vectors` by the
+    /// coordinator's accounting).
+    pub fn transfer_time(&self, vectors: usize, d: usize) -> f64 {
+        let bytes = (vectors * d * self.bytes_per_scalar) as f64;
+        if self.bandwidth_bps.is_infinite() {
+            0.0
+        } else {
+            bytes / self.bandwidth_bps
+        }
+    }
+
+    /// Full round time; see module docs.
+    pub fn round_time(&self, max_compute_s: f64, vectors: usize, d: usize) -> f64 {
+        max_compute_s + self.latency_s + self.transfer_time(vectors, d)
+    }
+}
+
+/// Straggler model — the bulk-synchronous failure mode of the paper's
+/// Spark testbed: every CoCoA round is a barrier, so the round runs at the
+/// pace of the *slowest* worker. Deterministic per (round, worker) so
+/// simulated timings are replayable.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct StragglerModel {
+    /// Probability a given worker straggles in a given round.
+    pub probability: f64,
+    /// Compute-time multiplier applied to a straggling worker.
+    pub slowdown: f64,
+    pub seed: u64,
+}
+
+impl StragglerModel {
+    pub fn none() -> Self {
+        StragglerModel { probability: 0.0, slowdown: 1.0, seed: 0 }
+    }
+
+    /// Typical shared-cluster churn: 10% of workers 5x slower.
+    pub fn shared_cluster() -> Self {
+        StragglerModel { probability: 0.1, slowdown: 5.0, seed: 0x57a6 }
+    }
+
+    /// The multiplier worker `k` experiences in `round`.
+    pub fn factor(&self, round: u64, worker: usize) -> f64 {
+        if self.probability <= 0.0 {
+            return 1.0;
+        }
+        let mut rng = crate::util::Rng::seed_from_u64(
+            self.seed ^ round.wrapping_mul(0x9e3779b97f4a7c15) ^ (worker as u64) << 32,
+        );
+        if rng.gen_bool(self.probability) {
+            self.slowdown
+        } else {
+            1.0
+        }
+    }
+
+    /// Barrier compute time for a round: max over workers of their
+    /// straggler-scaled compute.
+    pub fn barrier_compute(&self, round: u64, computes: &[f64]) -> f64 {
+        computes
+            .iter()
+            .enumerate()
+            .map(|(k, &c)| c * self.factor(round, k))
+            .fold(0.0, f64::max)
+    }
+}
+
+impl Default for NetworkModel {
+    fn default() -> Self {
+        Self::ec2_like()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn round_time_adds_up() {
+        let m = NetworkModel { latency_s: 0.01, bandwidth_bps: 1e6, bytes_per_scalar: 8 };
+        // 2 vectors of 1000 doubles = 16000 bytes -> 16 ms
+        let t = m.round_time(0.5, 2, 1000);
+        assert!((t - (0.5 + 0.01 + 0.016)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn free_network_costs_nothing() {
+        let m = NetworkModel::free();
+        assert_eq!(m.round_time(1.0, 100, 100000), 1.0);
+    }
+
+    #[test]
+    fn presets_ordered_by_speed() {
+        let d = 10000;
+        let ec2 = NetworkModel::ec2_like().round_time(0.0, 8, d);
+        let ib = NetworkModel::infiniband().round_time(0.0, 8, d);
+        let mc = NetworkModel::multicore().round_time(0.0, 8, d);
+        assert!(ec2 > ib && ib > mc);
+    }
+
+    #[test]
+    fn by_name_roundtrip() {
+        for name in ["ec2_like", "infiniband", "multicore", "free"] {
+            assert!(NetworkModel::by_name(name).is_some());
+        }
+        assert!(NetworkModel::by_name("carrier_pigeon").is_none());
+    }
+
+    #[test]
+    fn straggler_factor_deterministic_and_bounded() {
+        let m = StragglerModel::shared_cluster();
+        for round in 0..50u64 {
+            for k in 0..8 {
+                let f = m.factor(round, k);
+                assert!(f == 1.0 || f == m.slowdown);
+                assert_eq!(f, m.factor(round, k)); // replayable
+            }
+        }
+        // roughly `probability` of (round, worker) cells straggle
+        let hits: usize = (0..2000u64)
+            .map(|r| usize::from(m.factor(r, 0) > 1.0))
+            .sum();
+        assert!((100..400).contains(&hits), "straggle rate off: {hits}/2000");
+        assert_eq!(StragglerModel::none().factor(3, 1), 1.0);
+    }
+
+    #[test]
+    fn barrier_takes_slowest_worker() {
+        let m = StragglerModel { probability: 1.0, slowdown: 10.0, seed: 1 };
+        let t = m.barrier_compute(0, &[0.1, 0.2, 0.05]);
+        assert!((t - 2.0).abs() < 1e-12); // 0.2 * 10
+        let free = StragglerModel::none().barrier_compute(0, &[0.1, 0.2, 0.05]);
+        assert!((free - 0.2).abs() < 1e-12);
+    }
+
+    #[test]
+    fn communication_dominates_for_naive_updates() {
+        // the paper's core motivation: H=1 rounds pay latency per update
+        let m = NetworkModel::ec2_like();
+        let naive_100_updates = 100.0 * m.round_time(1e-6, 4, 54);
+        let cocoa_1_round = m.round_time(100.0 * 1e-6, 4, 54);
+        assert!(naive_100_updates > 50.0 * cocoa_1_round);
+    }
+}

@@ -1,0 +1,278 @@
+//! Primal/dual objectives and the duality-gap certificate (Section 2).
+//!
+//! `P(w) = (lambda/2)||w||^2 + (1/n) sum_i loss(x_i^T w, y_i)`
+//! `D(a) = -(lambda/2)||A a||^2 - (1/n) sum_i conj(-a_i)`
+//!
+//! The gap `P(w(a)) - D(a) >= 0` certifies suboptimality without knowing
+//! the optimum — the paper's recommended stopping criterion. The
+//! distributed runtime evaluates these via per-block partial sums
+//! (mirroring the `eval_objectives` PJRT artifact); the whole-dataset
+//! functions here are the reference used by tests and the optimum cache.
+
+use crate::data::Dataset;
+use crate::loss::Loss;
+
+/// `sum_i loss(x_i^T w, y_i)` over a block — one of the two partial sums a
+/// worker reports during evaluation.
+pub fn block_loss_sum(data: &Dataset, w: &[f64], loss: &dyn Loss) -> f64 {
+    (0..data.n())
+        .map(|i| loss.value(data.features.row_dot(i, w), data.labels[i]))
+        .sum()
+}
+
+/// `sum_i conj(-alpha_i)` over a block — the other partial sum.
+pub fn block_conj_sum(data: &Dataset, alpha: &[f64], loss: &dyn Loss) -> f64 {
+    data.labels
+        .iter()
+        .zip(alpha)
+        .map(|(&y, &a)| loss.conjugate(a, y))
+        .sum()
+}
+
+/// Combine partial sums into the primal value.
+pub fn primal_from_partials(loss_sum: f64, w_norm_sq: f64, lambda: f64, n: usize) -> f64 {
+    0.5 * lambda * w_norm_sq + loss_sum / n as f64
+}
+
+/// Combine partial sums into the dual value.
+pub fn dual_from_partials(conj_sum: f64, w_norm_sq: f64, lambda: f64, n: usize) -> f64 {
+    -0.5 * lambda * w_norm_sq - conj_sum / n as f64
+}
+
+/// Full primal objective on one dataset.
+pub fn primal(data: &Dataset, w: &[f64], lambda: f64, loss: &dyn Loss) -> f64 {
+    let w_norm_sq: f64 = w.iter().map(|v| v * v).sum();
+    primal_from_partials(block_loss_sum(data, w, loss), w_norm_sq, lambda, data.n())
+}
+
+/// Full dual objective; recomputes `w = A alpha` internally.
+pub fn dual(data: &Dataset, alpha: &[f64], lambda: f64, loss: &dyn Loss) -> f64 {
+    let w = data.primal_from_dual(alpha, lambda);
+    let w_norm_sq: f64 = w.iter().map(|v| v * v).sum();
+    dual_from_partials(block_conj_sum(data, alpha, loss), w_norm_sq, lambda, data.n())
+}
+
+/// Duality gap `P(w(a)) - D(a)`.
+pub fn duality_gap(data: &Dataset, alpha: &[f64], lambda: f64, loss: &dyn Loss) -> f64 {
+    let w = data.primal_from_dual(alpha, lambda);
+    primal(data, &w, lambda, loss) - dual(data, alpha, lambda, loss)
+}
+
+/// Reference optimum: single-machine permutation SDCA until the duality
+/// gap falls below `tol`. Used to compute the `P*` that the figures'
+/// "primal suboptimality" axis is measured against.
+pub fn compute_optimum(
+    data: &Dataset,
+    lambda: f64,
+    loss: &dyn Loss,
+    tol: f64,
+    max_passes: usize,
+) -> (f64, Vec<f64>) {
+    use crate::solvers::{Block, ExactBlockSolver, LocalDualMethod};
+
+    let n = data.n();
+    let block = Block { data: data.clone(), lambda_n: lambda * n as f64 };
+    let solver = ExactBlockSolver { tol: 0.0, max_passes: 1 };
+    let mut alpha = vec![0.0; n];
+    let mut w = vec![0.0; data.d()];
+    let mut rng = crate::util::Rng::seed_from_u64(0x0c0c0a);
+    let mut best_primal = f64::INFINITY;
+    for _ in 0..max_passes {
+        let up = solver.local_update(&block, loss, &alpha, &w, n, &mut rng);
+        for (a, da) in alpha.iter_mut().zip(&up.dalpha) {
+            *a += da;
+        }
+        for (wv, dv) in w.iter_mut().zip(&up.dw) {
+            *wv += dv;
+        }
+        let p = primal(data, &w, lambda, loss);
+        let d = dual_from_partials(
+            block_conj_sum(data, &alpha, loss),
+            w.iter().map(|v| v * v).sum(),
+            lambda,
+            n,
+        );
+        best_primal = best_primal.min(p);
+        if p - d < tol {
+            break;
+        }
+    }
+    (best_primal, w)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::cov_like;
+    use crate::loss::{Hinge, SmoothedHinge, Squared};
+
+    #[test]
+    fn gap_nonnegative_at_feasible_points() {
+        let data = cov_like(80, 6, 0.1, 1);
+        let lambda = 0.1;
+        for loss in [&Hinge as &dyn crate::loss::Loss, &Squared] {
+            let alpha: Vec<f64> = data.labels.iter().map(|y| 0.3 * y).collect();
+            assert!(duality_gap(&data, &alpha, lambda, loss) >= -1e-12);
+        }
+    }
+
+    #[test]
+    fn zero_alpha_gap_is_one_for_hinge() {
+        // P(0) = 1 (all margins 0), D(0) = 0 => gap = 1 (the paper's
+        // D(a*) - D(0) <= 1 normalization, Lemma 20 of SSZ13).
+        let data = cov_like(50, 5, 0.1, 2);
+        let gap = duality_gap(&data, &vec![0.0; 50], 0.1, &Hinge);
+        assert!((gap - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn partials_compose_to_full_objective() {
+        let data = cov_like(60, 6, 0.1, 3);
+        let lambda = 0.05;
+        let loss = SmoothedHinge::new(0.5);
+        let alpha: Vec<f64> = data.labels.iter().map(|y| 0.2 * y).collect();
+        let w = data.primal_from_dual(&alpha, lambda);
+        let w_norm_sq: f64 = w.iter().map(|v| v * v).sum();
+        // split into two pseudo-blocks and combine
+        let idx_a: Vec<u32> = (0..30).collect();
+        let idx_b: Vec<u32> = (30..60).collect();
+        let (da, db) = (data.subset(&idx_a), data.subset(&idx_b));
+        let ls = block_loss_sum(&da, &w, &loss) + block_loss_sum(&db, &w, &loss);
+        let cs = block_conj_sum(&da, &alpha[..30], &loss)
+            + block_conj_sum(&db, &alpha[30..], &loss);
+        let p = primal_from_partials(ls, w_norm_sq, lambda, 60);
+        let d = dual_from_partials(cs, w_norm_sq, lambda, 60);
+        assert!((p - primal(&data, &w, lambda, &loss)).abs() < 1e-10);
+        assert!((d - dual(&data, &alpha, lambda, &loss)).abs() < 1e-10);
+    }
+
+    #[test]
+    fn compute_optimum_closes_gap() {
+        let data = cov_like(120, 8, 0.05, 4);
+        let lambda = 0.1;
+        let (p_star, w_star) = compute_optimum(&data, lambda, &Hinge, 1e-8, 400);
+        assert!(p_star.is_finite());
+        // optimum must not exceed the value at any feasible w we can try
+        let p0 = primal(&data, &vec![0.0; 8], lambda, &Hinge);
+        assert!(p_star <= p0);
+        assert!(primal(&data, &w_star, lambda, &Hinge) <= p0);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Local (per-block) duality structure — Appendix B of the paper.
+//
+// For block k with local data A_[k], local duals alpha_[k], and
+// `w_bar = w - A_[k] alpha_[k]` (the other blocks' contribution), the paper
+// defines a local primal/dual pair (eqs. (8)/(9)) whose gap certifies the
+// *block* suboptimality — the quantity Assumption 1 contracts. Used by the
+// gap-certified local solver and by tests of Proposition 4.
+
+/// `P_k(w_k; w_bar)` of eq. (9), evaluated at `w_k = A_[k] alpha_[k]`.
+/// `w` is the full shared vector (= w_bar + w_k), `n` the GLOBAL n.
+pub fn local_primal(
+    block: &Dataset,
+    w: &[f64],
+    w_k: &[f64],
+    lambda: f64,
+    n: usize,
+    loss: &dyn Loss,
+) -> f64 {
+    let loss_sum = block_loss_sum(block, w, loss);
+    let wk_norm_sq: f64 = w_k.iter().map(|v| v * v).sum();
+    loss_sum / n as f64 + 0.5 * lambda * wk_norm_sq
+}
+
+/// `D_k(alpha_[k]; w_bar)` of eq. (8).
+pub fn local_dual(
+    block: &Dataset,
+    alpha_k: &[f64],
+    w: &[f64],
+    w_k: &[f64],
+    lambda: f64,
+    n: usize,
+    loss: &dyn Loss,
+) -> f64 {
+    let conj_sum = block_conj_sum(block, alpha_k, loss);
+    let w_norm_sq: f64 = w.iter().map(|v| v * v).sum();
+    let wbar_norm_sq: f64 = w
+        .iter()
+        .zip(w_k)
+        .map(|(a, b)| (a - b) * (a - b))
+        .sum();
+    -0.5 * lambda * w_norm_sq + 0.5 * lambda * wbar_norm_sq - conj_sum / n as f64
+}
+
+/// The block's duality gap `g_k = P_k - D_k >= 0`; zero exactly at the
+/// block optimum (strong duality of the local pair, Proposition 4).
+pub fn local_gap(
+    block: &Dataset,
+    alpha_k: &[f64],
+    w: &[f64],
+    lambda: f64,
+    n: usize,
+    loss: &dyn Loss,
+) -> f64 {
+    // w_k = A_[k] alpha_[k] with the global 1/(lambda n) scaling
+    let mut w_k = vec![0.0; block.d()];
+    let scale = 1.0 / (lambda * n as f64);
+    for (i, &a) in alpha_k.iter().enumerate() {
+        if a != 0.0 {
+            block.features.add_row_scaled(i, a * scale, &mut w_k);
+        }
+    }
+    local_primal(block, w, &w_k, lambda, n, loss)
+        - local_dual(block, alpha_k, w, &w_k, lambda, n, loss)
+}
+
+#[cfg(test)]
+mod local_gap_tests {
+    use super::*;
+    use crate::data::cov_like;
+    use crate::loss::{Hinge, SmoothedHinge};
+    use crate::solvers::{Block, ExactBlockSolver, LocalDualMethod};
+    use crate::util::Rng;
+
+    #[test]
+    fn local_gap_nonnegative() {
+        let data = cov_like(40, 6, 0.1, 31);
+        let lambda = 0.05;
+        let n = 80; // pretend this block is half of a larger problem
+        let alpha: Vec<f64> = data.labels.iter().map(|y| 0.3 * y).collect();
+        let mut w = data.primal_from_dual(&alpha, lambda);
+        // w also carries some other-block contribution
+        for (j, wv) in w.iter_mut().enumerate() {
+            *wv = *wv * 0.5 + 0.01 * (j as f64).sin();
+        }
+        let g = local_gap(&data, &alpha, &w, lambda, n, &Hinge);
+        assert!(g >= -1e-10, "local gap {g} < 0");
+    }
+
+    #[test]
+    fn local_gap_zero_at_block_optimum() {
+        let data = cov_like(30, 5, 0.1, 32);
+        let n = 30;
+        let lambda = 0.1;
+        let loss = SmoothedHinge::new(0.5);
+        let block = Block { data: data.clone(), lambda_n: lambda * n as f64 };
+        let solver = ExactBlockSolver { tol: 1e-12, max_passes: 3000 };
+        let mut rng = Rng::seed_from_u64(33);
+        let up = solver.local_update(
+            &block, &loss, &vec![0.0; 30], &vec![0.0; 5], 0, &mut rng,
+        );
+        let g = local_gap(&data, &up.dalpha, &up.dw, lambda, n, &loss);
+        assert!(g.abs() < 1e-6, "gap at block optimum: {g}");
+    }
+
+    #[test]
+    fn local_gap_equals_global_gap_for_single_block() {
+        // With K = 1, w_bar = 0 and the local pair IS the global pair.
+        let data = cov_like(25, 4, 0.1, 34);
+        let lambda = 0.08;
+        let alpha: Vec<f64> = data.labels.iter().map(|y| 0.4 * y).collect();
+        let w = data.primal_from_dual(&alpha, lambda);
+        let lg = local_gap(&data, &alpha, &w, lambda, data.n(), &Hinge);
+        let gg = duality_gap(&data, &alpha, lambda, &Hinge);
+        assert!((lg - gg).abs() < 1e-10, "{lg} vs {gg}");
+    }
+}

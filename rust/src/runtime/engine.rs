@@ -1,0 +1,384 @@
+//! The PJRT engine thread.
+//!
+//! `xla::PjRtClient` is `Rc`-based (not `Send`), so one dedicated thread
+//! owns the client, the compiled executables, and the per-block data
+//! literals; workers talk to it through a cloneable [`EngineHandle`] with
+//! plain `Vec<f32>` payloads. Executables are compiled once per
+//! (kernel, loss, shape) on first use; block feature matrices are uploaded
+//! once at registration (data ships once on a real cluster too, so this is
+//! not counted as round communication).
+
+use std::collections::HashMap;
+
+use std::sync::mpsc::{channel, Receiver, Sender};
+
+use anyhow::{anyhow, Result};
+
+use super::manifest::Manifest;
+
+/// Output of one local_sdca execution (possibly chunked over cap).
+#[derive(Debug, Clone)]
+pub struct SdcaOut {
+    pub dalpha: Vec<f32>,
+    pub dw: Vec<f32>,
+    /// Engine-side wall seconds spent in execute (the engine thread is
+    /// dedicated, so wall ~= cpu there).
+    pub compute_s: f64,
+}
+
+#[derive(Debug, Clone)]
+pub struct EvalOut {
+    pub loss_sum: f64,
+    pub conj_sum: f64,
+    pub compute_s: f64,
+}
+
+enum Request {
+    Register {
+        block_id: usize,
+        x: Vec<f32>, // row-major n_k x d
+        y: Vec<f32>,
+        norms: Vec<f32>,
+        n_k: usize,
+        d: usize,
+        reply: Sender<Result<(), String>>,
+    },
+    LocalSdca {
+        block_id: usize,
+        loss: String,
+        alpha: Vec<f32>,
+        w: Vec<f32>,
+        idx: Vec<i32>,
+        lam_n: f32,
+        gamma: f32,
+        reply: Sender<Result<SdcaOut, String>>,
+    },
+    Eval {
+        block_id: usize,
+        loss: String,
+        alpha: Vec<f32>,
+        w: Vec<f32>,
+        gamma: f32,
+        reply: Sender<Result<EvalOut, String>>,
+    },
+    Shutdown,
+}
+
+/// Cloneable handle workers use to reach the engine thread.
+#[derive(Clone)]
+pub struct EngineHandle {
+    tx: Sender<Request>,
+}
+
+pub struct Engine {
+    handle: EngineHandle,
+    join: Option<std::thread::JoinHandle<()>>,
+}
+
+struct BlockData {
+    x: xla::Literal, // f32[n_k, d]
+    y: xla::Literal,
+    norms: xla::Literal,
+    n_k: usize,
+    d: usize,
+}
+
+struct EngineState {
+    client: xla::PjRtClient,
+    manifest: Manifest,
+    dir: std::path::PathBuf,
+    executables: HashMap<String, xla::PjRtLoadedExecutable>,
+    blocks: HashMap<usize, BlockData>,
+}
+
+impl Engine {
+    /// Spawn the engine thread over an artifacts directory.
+    pub fn start(artifacts_dir: impl Into<std::path::PathBuf>) -> Result<Engine> {
+        let dir = artifacts_dir.into();
+        let manifest = Manifest::load(&dir)?;
+        let (tx, rx) = channel::<Request>();
+        let (ready_tx, ready_rx) = channel::<Result<(), String>>();
+        let join = std::thread::Builder::new()
+            .name("pjrt-engine".into())
+            .spawn(move || engine_main(dir, manifest, rx, ready_tx))?;
+        ready_rx
+            .recv()
+            .map_err(|_| anyhow!("engine thread died during startup"))?
+            .map_err(|e| anyhow!("PJRT client init failed: {e}"))?;
+        Ok(Engine { handle: EngineHandle { tx }, join: Some(join) })
+    }
+
+    pub fn handle(&self) -> EngineHandle {
+        self.handle.clone()
+    }
+}
+
+impl Drop for Engine {
+    fn drop(&mut self) {
+        let _ = self.handle.tx.send(Request::Shutdown);
+        if let Some(j) = self.join.take() {
+            let _ = j.join();
+        }
+    }
+}
+
+impl EngineHandle {
+    /// Upload a block's static data (features, labels, norms) once.
+    pub fn register_block(
+        &self,
+        block_id: usize,
+        x: Vec<f32>,
+        y: Vec<f32>,
+        norms: Vec<f32>,
+        n_k: usize,
+        d: usize,
+    ) -> Result<()> {
+        let (reply, rx) = channel();
+        self.tx
+            .send(Request::Register { block_id, x, y, norms, n_k, d, reply })
+            .map_err(|_| anyhow!("engine gone"))?;
+        rx.recv().map_err(|_| anyhow!("engine gone"))?.map_err(|e| anyhow!(e))
+    }
+
+    /// Run H = idx.len() LocalSDCA steps on a registered block. The engine
+    /// chunks over the artifact's idx capacity transparently.
+    pub fn local_sdca(
+        &self,
+        block_id: usize,
+        loss: &str,
+        alpha: Vec<f32>,
+        w: Vec<f32>,
+        idx: Vec<i32>,
+        lam_n: f32,
+        gamma: f32,
+    ) -> Result<SdcaOut> {
+        let (reply, rx) = channel();
+        self.tx
+            .send(Request::LocalSdca {
+                block_id,
+                loss: loss.to_string(),
+                alpha,
+                w,
+                idx,
+                lam_n,
+                gamma,
+                reply,
+            })
+            .map_err(|_| anyhow!("engine gone"))?;
+        rx.recv().map_err(|_| anyhow!("engine gone"))?.map_err(|e| anyhow!(e))
+    }
+
+    /// Evaluate the block objective partial sums.
+    pub fn eval(
+        &self,
+        block_id: usize,
+        loss: &str,
+        alpha: Vec<f32>,
+        w: Vec<f32>,
+        gamma: f32,
+    ) -> Result<EvalOut> {
+        let (reply, rx) = channel();
+        self.tx
+            .send(Request::Eval {
+                block_id,
+                loss: loss.to_string(),
+                alpha,
+                w,
+                gamma,
+                reply,
+            })
+            .map_err(|_| anyhow!("engine gone"))?;
+        rx.recv().map_err(|_| anyhow!("engine gone"))?.map_err(|e| anyhow!(e))
+    }
+}
+
+fn engine_main(
+    dir: std::path::PathBuf,
+    manifest: Manifest,
+    rx: Receiver<Request>,
+    ready: Sender<Result<(), String>>,
+) {
+    let client = match xla::PjRtClient::cpu() {
+        Ok(c) => {
+            let _ = ready.send(Ok(()));
+            c
+        }
+        Err(e) => {
+            let _ = ready.send(Err(e.to_string()));
+            return;
+        }
+    };
+    let mut st = EngineState {
+        client,
+        manifest,
+        dir,
+        executables: HashMap::new(),
+        blocks: HashMap::new(),
+    };
+    while let Ok(req) = rx.recv() {
+        match req {
+            Request::Shutdown => break,
+            Request::Register { block_id, x, y, norms, n_k, d, reply } => {
+                let r = register(&mut st, block_id, x, y, norms, n_k, d);
+                let _ = reply.send(r.map_err(|e| e.to_string()));
+            }
+            Request::LocalSdca { block_id, loss, alpha, w, idx, lam_n, gamma, reply } => {
+                let r = run_sdca(&mut st, block_id, &loss, alpha, w, idx, lam_n, gamma);
+                let _ = reply.send(r.map_err(|e| e.to_string()));
+            }
+            Request::Eval { block_id, loss, alpha, w, gamma, reply } => {
+                let r = run_eval(&mut st, block_id, &loss, alpha, w, gamma);
+                let _ = reply.send(r.map_err(|e| e.to_string()));
+            }
+        }
+    }
+}
+
+fn register(
+    st: &mut EngineState,
+    block_id: usize,
+    x: Vec<f32>,
+    y: Vec<f32>,
+    norms: Vec<f32>,
+    n_k: usize,
+    d: usize,
+) -> Result<()> {
+    if x.len() != n_k * d || y.len() != n_k || norms.len() != n_k {
+        return Err(anyhow!(
+            "register shapes inconsistent: x={} y={} norms={} for {n_k}x{d}",
+            x.len(),
+            y.len(),
+            norms.len()
+        ));
+    }
+    let x = xla::Literal::vec1(&x).reshape(&[n_k as i64, d as i64])?;
+    let y = xla::Literal::vec1(&y);
+    let norms = xla::Literal::vec1(&norms);
+    st.blocks.insert(block_id, BlockData { x, y, norms, n_k, d });
+    Ok(())
+}
+
+/// Ensure the artifact for (kernel, loss, shape) is compiled; returns its
+/// cache key and idx capacity. (Split from the lookup so callers can hold
+/// immutable borrows of both the executable and the block data.)
+fn ensure_compiled(
+    st: &mut EngineState,
+    kernel: &str,
+    loss: &str,
+    n_k: usize,
+    d: usize,
+) -> Result<(String, usize)> {
+    let entry = st
+        .manifest
+        .find(kernel, loss, n_k, d)
+        .ok_or_else(|| {
+            anyhow!(
+                "no AOT artifact for kernel={kernel} loss={loss} shape={n_k}x{d}; \
+                 add the spec to python/compile/aot.py and re-run `make artifacts`"
+            )
+        })?
+        .clone();
+    if !st.executables.contains_key(&entry.name) {
+        let path = st.manifest.path_of(&st.dir, &entry);
+        let proto = xla::HloModuleProto::from_text_file(&path)?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = st.client.compile(&comp)?;
+        st.executables.insert(entry.name.clone(), exe);
+    }
+    Ok((entry.name, entry.cap))
+}
+
+fn run_sdca(
+    st: &mut EngineState,
+    block_id: usize,
+    loss: &str,
+    mut alpha: Vec<f32>,
+    mut w: Vec<f32>,
+    idx: Vec<i32>,
+    lam_n: f32,
+    gamma: f32,
+) -> Result<SdcaOut> {
+    let t0 = std::time::Instant::now();
+    let (n_k, d) = {
+        let b = st.blocks.get(&block_id).ok_or_else(|| anyhow!("unknown block {block_id}"))?;
+        (b.n_k, b.d)
+    };
+    if alpha.len() != n_k || w.len() != d {
+        return Err(anyhow!("sdca input shapes inconsistent"));
+    }
+    let (exe_name, cap) = ensure_compiled(st, "local_sdca", loss, n_k, d)?;
+    if cap == 0 {
+        return Err(anyhow!("artifact has zero idx capacity"));
+    }
+    let mut dalpha_total = vec![0.0f32; n_k];
+    let mut dw_total = vec![0.0f32; d];
+    // Chunk H over the artifact's idx capacity, feeding each chunk the
+    // locally-updated (alpha, w) — semantically identical to one long run.
+    for chunk in idx.chunks(cap) {
+        let h = chunk.len();
+        let mut idx_buf = vec![0i32; cap];
+        idx_buf[..h].copy_from_slice(chunk);
+        let scalars = [lam_n, gamma, h as f32];
+        let exe = st.executables.get(&exe_name).unwrap();
+        let block = st.blocks.get(&block_id).unwrap();
+        let args = [
+            block.x.clone(),
+            block.y.clone(),
+            xla::Literal::vec1(&alpha),
+            xla::Literal::vec1(&w),
+            xla::Literal::vec1(&idx_buf),
+            block.norms.clone(),
+            xla::Literal::vec1(&scalars),
+        ];
+        let result = exe.execute::<xla::Literal>(&args)?[0][0].to_literal_sync()?;
+        let (da_lit, dw_lit) = result.to_tuple2()?;
+        let da = da_lit.to_vec::<f32>()?;
+        let dw = dw_lit.to_vec::<f32>()?;
+        for i in 0..n_k {
+            dalpha_total[i] += da[i];
+            alpha[i] += da[i];
+        }
+        for j in 0..d {
+            dw_total[j] += dw[j];
+            w[j] += dw[j];
+        }
+    }
+    Ok(SdcaOut {
+        dalpha: dalpha_total,
+        dw: dw_total,
+        compute_s: t0.elapsed().as_secs_f64(),
+    })
+}
+
+fn run_eval(
+    st: &mut EngineState,
+    block_id: usize,
+    loss: &str,
+    alpha: Vec<f32>,
+    w: Vec<f32>,
+    gamma: f32,
+) -> Result<EvalOut> {
+    let t0 = std::time::Instant::now();
+    let (n_k, d) = {
+        let b = st.blocks.get(&block_id).ok_or_else(|| anyhow!("unknown block {block_id}"))?;
+        (b.n_k, b.d)
+    };
+    let (exe_name, _) = ensure_compiled(st, "eval_objectives", loss, n_k, d)?;
+    let exe = st.executables.get(&exe_name).unwrap();
+    let block = st.blocks.get(&block_id).unwrap();
+    let gamma_lit = xla::Literal::vec1(&[gamma]).reshape(&[])?;
+    let args = [
+        block.x.clone(),
+        block.y.clone(),
+        xla::Literal::vec1(&alpha),
+        xla::Literal::vec1(&w),
+        gamma_lit,
+    ];
+    let result = exe.execute::<xla::Literal>(&args)?[0][0].to_literal_sync()?;
+    let (ls, cs) = result.to_tuple2()?;
+    Ok(EvalOut {
+        loss_sum: ls.to_vec::<f32>()?[0] as f64,
+        conj_sum: cs.to_vec::<f32>()?[0] as f64,
+        compute_s: t0.elapsed().as_secs_f64(),
+    })
+}

@@ -1,0 +1,126 @@
+//! `artifacts/manifest.tsv` — the contract between `python/compile/aot.py`
+//! and the rust runtime. One row per AOT-lowered (kernel, loss, shape)
+//! variant. (aot.py also writes a manifest.json for humans; the runtime
+//! consumes the TSV because this build vendors no JSON parser.)
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct ArtifactEntry {
+    pub name: String,
+    pub file: String,
+    /// "local_sdca" | "eval_objectives"
+    pub kernel: String,
+    /// "hinge" | "smoothed_hinge" | "squared" | "logistic"
+    pub loss: String,
+    pub n_k: usize,
+    pub d: usize,
+    /// idx capacity (max H per execute); 0 for kernels without idx.
+    pub cap: usize,
+    pub sha256: String,
+}
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct Manifest {
+    pub version: u32,
+    pub artifacts: Vec<ArtifactEntry>,
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> Result<Self> {
+        let path = dir.join("manifest.tsv");
+        let text = std::fs::read_to_string(&path).with_context(|| {
+            format!("read {} (run `make artifacts` first)", path.display())
+        })?;
+        Self::parse(&text)
+    }
+
+    pub fn parse(text: &str) -> Result<Self> {
+        let mut lines = text.lines().filter(|l| !l.trim().is_empty());
+        let header = lines.next().context("empty manifest")?;
+        let (tag, version) = header
+            .split_once('\t')
+            .context("manifest header must be `#cocoa-manifest\\t<version>`")?;
+        if tag != "#cocoa-manifest" {
+            bail!("bad manifest header tag {tag:?}");
+        }
+        let version: u32 = version.trim().parse().context("manifest version")?;
+        if version != 1 {
+            bail!("unsupported manifest version {version}");
+        }
+        let mut artifacts = Vec::new();
+        for (i, line) in lines.enumerate() {
+            let cols: Vec<&str> = line.split('\t').collect();
+            if cols.len() != 8 {
+                bail!("manifest row {} has {} columns, want 8", i + 2, cols.len());
+            }
+            artifacts.push(ArtifactEntry {
+                name: cols[0].to_string(),
+                file: cols[1].to_string(),
+                kernel: cols[2].to_string(),
+                loss: cols[3].to_string(),
+                n_k: cols[4].parse().with_context(|| format!("row {}: n_k", i + 2))?,
+                d: cols[5].parse().with_context(|| format!("row {}: d", i + 2))?,
+                cap: cols[6].parse().with_context(|| format!("row {}: cap", i + 2))?,
+                sha256: cols[7].to_string(),
+            });
+        }
+        if artifacts.is_empty() {
+            return Err(anyhow!("manifest lists no artifacts"));
+        }
+        Ok(Manifest { version, artifacts })
+    }
+
+    /// Find the artifact for (kernel, loss) with exactly the block shape.
+    pub fn find(&self, kernel: &str, loss: &str, n_k: usize, d: usize) -> Option<&ArtifactEntry> {
+        self.artifacts
+            .iter()
+            .find(|a| a.kernel == kernel && a.loss == loss && a.n_k == n_k && a.d == d)
+    }
+
+    pub fn path_of(&self, dir: &Path, entry: &ArtifactEntry) -> PathBuf {
+        dir.join(&entry.file)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = "#cocoa-manifest\t1\n\
+        local_sdca_hinge_8x4_c16\ta.hlo.txt\tlocal_sdca\thinge\t8\t4\t16\tdeadbeef\n\
+        eval_objectives_hinge_8x4\tb.hlo.txt\teval_objectives\thinge\t8\t4\t0\tfeedface\n";
+
+    #[test]
+    fn parse_and_find() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        assert_eq!(m.artifacts.len(), 2);
+        assert!(m.find("local_sdca", "hinge", 8, 4).is_some());
+        assert!(m.find("local_sdca", "hinge", 8, 5).is_none());
+        assert!(m.find("local_sdca", "squared", 8, 4).is_none());
+        assert_eq!(m.find("eval_objectives", "hinge", 8, 4).unwrap().cap, 0);
+    }
+
+    #[test]
+    fn rejects_bad_versions_and_shapes() {
+        assert!(Manifest::parse("#cocoa-manifest\t9\nx\ty\tz\tw\t1\t1\t1\ts").is_err());
+        assert!(Manifest::parse("#wrong\t1\n").is_err());
+        assert!(Manifest::parse("#cocoa-manifest\t1\nshort\trow\n").is_err());
+        assert!(Manifest::parse("#cocoa-manifest\t1\n").is_err()); // empty
+    }
+
+    #[test]
+    fn load_real_manifest_if_built() {
+        // soft check against the actual artifacts dir when present
+        let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        if dir.join("manifest.tsv").exists() {
+            let m = Manifest::load(&dir).unwrap();
+            assert!(!m.artifacts.is_empty());
+            for a in &m.artifacts {
+                assert!(m.path_of(&dir, a).exists(), "missing {}", a.file);
+            }
+        }
+    }
+}

@@ -1,0 +1,99 @@
+//! PJRT runtime — loads and executes the AOT-compiled JAX/Pallas artifacts.
+//!
+//! `make artifacts` runs python once to lower the L2/L1 graphs to HLO text;
+//! this module is everything that touches them afterwards:
+//!
+//! * [`manifest`] — the artifact index written by `aot.py`.
+//! * [`engine`] — the dedicated thread owning the `xla::PjRtClient`, the
+//!   compiled executables, and per-block data literals.
+//! * [`PjrtLocalSdca`] — a [`crate::solvers::LocalDualMethod`] backed by
+//!   the Pallas `local_sdca` kernel, so the coordinator can swap the native
+//!   rust inner loop for the XLA-compiled one per worker.
+//!
+//! Shapes are static in the artifacts: the block must match an entry in the
+//! manifest exactly (pad the dataset or add a spec to `aot.py` otherwise).
+
+mod engine;
+mod manifest;
+
+pub use engine::{Engine, EngineHandle, EvalOut, SdcaOut};
+pub use manifest::{ArtifactEntry, Manifest};
+
+use crate::loss::Loss;
+use crate::util::Rng;
+use crate::solvers::{Block, LocalDualMethod, LocalUpdate};
+
+/// LocalSDCA via the AOT Pallas kernel. Each instance is bound to a block
+/// previously registered with the engine under `block_id`.
+pub struct PjrtLocalSdca {
+    pub handle: EngineHandle,
+    pub block_id: usize,
+    pub loss_name: &'static str,
+    pub gamma: f64,
+}
+
+impl PjrtLocalSdca {
+    /// Register the block's static data with the engine and return the
+    /// solver. Sparse features are densified (the kernel is dense).
+    pub fn bind(
+        handle: EngineHandle,
+        block_id: usize,
+        block: &Block,
+        loss_name: &'static str,
+        gamma: f64,
+    ) -> anyhow::Result<Self> {
+        let n_k = block.n_k();
+        let d = block.d();
+        let mut x = Vec::with_capacity(n_k * d);
+        for i in 0..n_k {
+            for v in block.data.features.row_dense(i) {
+                x.push(v as f32);
+            }
+        }
+        let y: Vec<f32> = block.data.labels.iter().map(|&v| v as f32).collect();
+        let norms: Vec<f32> = (0..n_k).map(|i| block.data.norm_sq(i) as f32).collect();
+        handle.register_block(block_id, x, y, norms, n_k, d)?;
+        Ok(PjrtLocalSdca { handle, block_id, loss_name, gamma })
+    }
+}
+
+impl LocalDualMethod for PjrtLocalSdca {
+    fn name(&self) -> &'static str {
+        "pjrt_local_sdca"
+    }
+
+    fn local_update(
+        &self,
+        block: &Block,
+        _loss: &dyn Loss,
+        alpha: &[f64],
+        w: &[f64],
+        h: usize,
+        rng: &mut Rng,
+    ) -> LocalUpdate {
+        // Host-side randomness: the same ChaCha stream a native LocalSdca
+        // would consume, so the two backends are comparable run-for-run.
+        let n_k = block.n_k();
+        let idx: Vec<i32> = (0..h).map(|_| rng.gen_range(n_k) as i32).collect();
+        let alpha_f32: Vec<f32> = alpha.iter().map(|&v| v as f32).collect();
+        let w_f32: Vec<f32> = w.iter().map(|&v| v as f32).collect();
+        let out = self
+            .handle
+            .local_sdca(
+                self.block_id,
+                self.loss_name,
+                alpha_f32,
+                w_f32,
+                idx,
+                block.lambda_n as f32,
+                self.gamma as f32,
+            )
+            .expect("PJRT local_sdca failed");
+        LocalUpdate {
+            dalpha: out.dalpha.iter().map(|&v| v as f64).collect(),
+            dw: out.dw.iter().map(|&v| v as f64).collect(),
+            steps: h as u64,
+            offloaded_s: out.compute_s,
+        }
+    }
+}

@@ -1,0 +1,134 @@
+//! Pegasos epochs — the primal SGD baselines of Section 6.
+//!
+//! Both SGD competitors run the same inner step (Pegasos [SSSSC10]:
+//! `w <- (1 - eta_t lambda) w - eta_t loss'(x_i^T w) x_i`, `eta_t = 1/(lambda t)`);
+//! they differ only in whether the primal vector is updated *locally*
+//! between inner iterations (local-SGD) or all subgradients are taken
+//! against the frozen round-start `w` (mini-batch SGD) — exactly the
+//! distinction the paper's experiments isolate.
+
+use crate::loss::Loss;
+use crate::util::Rng;
+use crate::solvers::Block;
+
+/// What a worker hands back after an SGD epoch.
+#[derive(Debug, Clone)]
+pub struct SgdOutcome {
+    /// local-SGD: `w_local_final - w_start`. mini-batch: the *sum* of
+    /// subgradient directions `loss'(q_h) x_{i_h}` over the epoch
+    /// (the leader applies the step size).
+    pub dw: Vec<f64>,
+    pub steps: u64,
+}
+
+/// One H-step Pegasos epoch on a block.
+#[derive(Debug, Clone, Copy)]
+pub struct PegasosEpoch {
+    /// true => locally-updating (local-SGD); false => frozen-w mini-batch.
+    pub locally_updating: bool,
+    /// Global lambda (the Pegasos step size is 1/(lambda t)).
+    pub lambda: f64,
+}
+
+impl PegasosEpoch {
+    /// Run H steps. `t_offset` is the global step counter at epoch start so
+    /// the 1/(lambda t) schedule keeps decaying across rounds.
+    pub fn run(
+        &self,
+        block: &Block,
+        loss: &dyn Loss,
+        w: &[f64],
+        h: usize,
+        t_offset: u64,
+        rng: &mut Rng,
+    ) -> SgdOutcome {
+        let n_k = block.n_k();
+        if self.locally_updating {
+            let mut w_local = w.to_vec();
+            for step in 0..h {
+                let t = (t_offset + step as u64 + 1) as f64;
+                let eta = 1.0 / (self.lambda * t);
+                let i = rng.gen_range(n_k);
+                let q = block.data.features.row_dot(i, &w_local);
+                let g = loss.subgradient(q, block.data.labels[i]);
+                // shrink from the regularizer, then the loss step
+                let shrink = 1.0 - eta * self.lambda;
+                for v in w_local.iter_mut() {
+                    *v *= shrink;
+                }
+                if g != 0.0 {
+                    block
+                        .data
+                        .features
+                        .add_row_scaled(i, -eta * g, &mut w_local);
+                }
+            }
+            let dw = w_local.iter().zip(w).map(|(a, b)| a - b).collect();
+            SgdOutcome { dw, steps: h as u64 }
+        } else {
+            // frozen-w: accumulate the subgradient directions only
+            let mut gsum = vec![0.0; block.d()];
+            for _ in 0..h {
+                let i = rng.gen_range(n_k);
+                let q = block.data.features.row_dot(i, w);
+                let g = loss.subgradient(q, block.data.labels[i]);
+                if g != 0.0 {
+                    block.data.features.add_row_scaled(i, g, &mut gsum);
+                }
+            }
+            SgdOutcome { dw: gsum, steps: h as u64 }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::loss::Hinge;
+    use crate::objective;
+    use crate::solvers::test_util::test_block;
+
+    #[test]
+    fn local_epoch_reduces_primal_eventually() {
+        let block = test_block(200, 8, 0.05, 200, 1);
+        let lambda = 0.05;
+        let epoch = PegasosEpoch { locally_updating: true, lambda };
+        let mut w = vec![0.0; 8];
+        let mut rng = Rng::seed_from_u64(2);
+        let p0 = objective::primal(&block.data, &w, lambda, &Hinge);
+        let mut t = 0u64;
+        for _ in 0..10 {
+            let out = epoch.run(&block, &Hinge, &w, 200, t, &mut rng);
+            t += out.steps;
+            for (wv, dv) in w.iter_mut().zip(&out.dw) {
+                *wv += dv;
+            }
+        }
+        let p1 = objective::primal(&block.data, &w, lambda, &Hinge);
+        assert!(p1 < p0, "pegasos failed to descend: {p0} -> {p1}");
+    }
+
+    #[test]
+    fn frozen_epoch_returns_raw_subgradient_sum() {
+        let block = test_block(50, 4, 0.1, 50, 3);
+        let epoch = PegasosEpoch { locally_updating: false, lambda: 0.1 };
+        let w = vec![0.0; 4];
+        let mut rng = Rng::seed_from_u64(4);
+        let out = epoch.run(&block, &Hinge, &w, 30, 0, &mut rng);
+        // at w = 0 every margin is 0 < 1, so every step contributes -y x_i;
+        // the sum is bounded by H * max||x||
+        let norm: f64 = out.dw.iter().map(|v| v * v).sum::<f64>().sqrt();
+        assert!(norm > 0.0 && norm <= 30.0 + 1e-9);
+        assert_eq!(out.steps, 30);
+    }
+
+    #[test]
+    fn deterministic_under_seed() {
+        let block = test_block(30, 4, 0.1, 30, 5);
+        let epoch = PegasosEpoch { locally_updating: true, lambda: 0.1 };
+        let w = vec![0.0; 4];
+        let a = epoch.run(&block, &Hinge, &w, 25, 0, &mut Rng::seed_from_u64(6));
+        let b = epoch.run(&block, &Hinge, &w, 25, 0, &mut Rng::seed_from_u64(6));
+        assert_eq!(a.dw, b.dw);
+    }
+}

@@ -1,0 +1,253 @@
+//! Run traces and metrics — the data behind every figure.
+//!
+//! Each evaluated round appends a [`TraceRow`]; a [`Trace`] serializes to
+//! CSV/JSON under `results/` and answers the headline queries ("time to
+//! .001-accuracy", "vectors to .001-accuracy") that Figures 1-2 and the
+//! 25x claim are built from.
+
+use std::io::Write;
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+/// One evaluated point of a run.
+#[derive(Debug, Clone, Copy)]
+pub struct TraceRow {
+    pub round: u64,
+    /// Simulated distributed time (netsim model; excludes evaluation cost).
+    pub sim_time_s: f64,
+    /// Accumulated worker compute only (max over workers per round).
+    pub compute_time_s: f64,
+    /// d-dimensional vectors communicated so far (worker->leader plus
+    /// leader->worker broadcasts).
+    pub vectors: u64,
+    /// Bytes on the wire so far.
+    pub bytes: u64,
+    /// Inner steps performed so far (sum over workers).
+    pub inner_steps: u64,
+    pub primal: f64,
+    /// NaN for primal-only (SGD) methods.
+    pub dual: f64,
+    pub gap: f64,
+    /// `P(w) - P*` when a reference optimum is known, else NaN.
+    pub primal_subopt: f64,
+}
+
+/// A full run history plus identifying metadata.
+#[derive(Debug, Clone)]
+pub struct Trace {
+    pub algorithm: String,
+    pub dataset: String,
+    pub k: usize,
+    pub h: usize,
+    pub beta: f64,
+    pub lambda: f64,
+    pub rows: Vec<TraceRow>,
+}
+
+impl Trace {
+    pub fn new(
+        algorithm: impl Into<String>,
+        dataset: impl Into<String>,
+        k: usize,
+        h: usize,
+        beta: f64,
+        lambda: f64,
+    ) -> Self {
+        Trace {
+            algorithm: algorithm.into(),
+            dataset: dataset.into(),
+            k,
+            h,
+            beta,
+            lambda,
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn push(&mut self, row: TraceRow) {
+        self.rows.push(row);
+    }
+
+    pub fn last(&self) -> Option<&TraceRow> {
+        self.rows.last()
+    }
+
+    /// First simulated time at which `primal_subopt <= eps` (Figure 1 /
+    /// headline metric). None if never reached.
+    pub fn time_to_subopt(&self, eps: f64) -> Option<f64> {
+        self.rows
+            .iter()
+            .find(|r| r.primal_subopt <= eps)
+            .map(|r| r.sim_time_s)
+    }
+
+    /// First communicated-vector count at which `primal_subopt <= eps`
+    /// (Figure 2's x-axis).
+    pub fn vectors_to_subopt(&self, eps: f64) -> Option<u64> {
+        self.rows
+            .iter()
+            .find(|r| r.primal_subopt <= eps)
+            .map(|r| r.vectors)
+    }
+
+    /// First duality gap <= eps.
+    pub fn time_to_gap(&self, eps: f64) -> Option<f64> {
+        self.rows.iter().find(|r| r.gap <= eps).map(|r| r.sim_time_s)
+    }
+
+    /// Best (smallest) primal value seen.
+    pub fn best_primal(&self) -> f64 {
+        self.rows.iter().map(|r| r.primal).fold(f64::INFINITY, f64::min)
+    }
+
+    pub fn to_csv<P: AsRef<Path>>(&self, path: P) -> Result<()> {
+        if let Some(parent) = path.as_ref().parent() {
+            std::fs::create_dir_all(parent)?;
+        }
+        let mut f = std::fs::File::create(&path)
+            .with_context(|| format!("create {}", path.as_ref().display()))?;
+        writeln!(
+            f,
+            "round,sim_time_s,compute_time_s,vectors,bytes,inner_steps,primal,dual,gap,primal_subopt"
+        )?;
+        for r in &self.rows {
+            writeln!(
+                f,
+                "{},{},{},{},{},{},{},{},{},{}",
+                r.round,
+                r.sim_time_s,
+                r.compute_time_s,
+                r.vectors,
+                r.bytes,
+                r.inner_steps,
+                r.primal,
+                r.dual,
+                r.gap,
+                r.primal_subopt
+            )?;
+        }
+        Ok(())
+    }
+
+    /// Hand-rolled JSON writer (offline build: no serde_json). The format
+    /// is stable and consumed by the plotting snippets in EXPERIMENTS.md.
+    pub fn to_json<P: AsRef<Path>>(&self, path: P) -> Result<()> {
+        if let Some(parent) = path.as_ref().parent() {
+            std::fs::create_dir_all(parent)?;
+        }
+        let mut f = std::fs::File::create(&path)
+            .with_context(|| format!("create {}", path.as_ref().display()))?;
+        writeln!(f, "{{")?;
+        writeln!(f, "  \"algorithm\": \"{}\",", self.algorithm)?;
+        writeln!(f, "  \"dataset\": \"{}\",", self.dataset)?;
+        writeln!(f, "  \"k\": {},", self.k)?;
+        writeln!(f, "  \"h\": {},", self.h)?;
+        writeln!(f, "  \"beta\": {},", json_f64(self.beta))?;
+        writeln!(f, "  \"lambda\": {},", json_f64(self.lambda))?;
+        writeln!(f, "  \"rows\": [")?;
+        for (i, r) in self.rows.iter().enumerate() {
+            let sep = if i + 1 == self.rows.len() { "" } else { "," };
+            writeln!(
+                f,
+                "    {{\"round\": {}, \"sim_time_s\": {}, \"compute_time_s\": {}, \"vectors\": {}, \"bytes\": {}, \"inner_steps\": {}, \"primal\": {}, \"dual\": {}, \"gap\": {}, \"primal_subopt\": {}}}{}",
+                r.round,
+                json_f64(r.sim_time_s),
+                json_f64(r.compute_time_s),
+                r.vectors,
+                r.bytes,
+                r.inner_steps,
+                json_f64(r.primal),
+                json_f64(r.dual),
+                json_f64(r.gap),
+                json_f64(r.primal_subopt),
+                sep,
+            )?;
+        }
+        writeln!(f, "  ]")?;
+        writeln!(f, "}}")?;
+        Ok(())
+    }
+}
+
+/// JSON has no NaN/inf literals; emit null for them.
+fn json_f64(v: f64) -> String {
+    if v.is_finite() {
+        format!("{v}")
+    } else {
+        "null".to_string()
+    }
+}
+
+/// Thread CPU-time clock: measures a worker's *own* compute, immune to the
+/// timesharing distortion of running K worker threads on fewer cores
+/// (wall-clock would inflate by the oversubscription factor).
+pub fn thread_cpu_time_s() -> f64 {
+    let mut ts = libc::timespec { tv_sec: 0, tv_nsec: 0 };
+    let rc = unsafe { libc::clock_gettime(libc::CLOCK_THREAD_CPUTIME_ID, &mut ts) };
+    debug_assert_eq!(rc, 0);
+    ts.tv_sec as f64 + ts.tv_nsec as f64 * 1e-9
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn row(round: u64, t: f64, vectors: u64, subopt: f64, gap: f64) -> TraceRow {
+        TraceRow {
+            round,
+            sim_time_s: t,
+            compute_time_s: t * 0.5,
+            vectors,
+            bytes: vectors * 8,
+            inner_steps: round * 10,
+            primal: 0.5 + subopt,
+            dual: 0.5 - gap + subopt,
+            gap,
+            primal_subopt: subopt,
+        }
+    }
+
+    #[test]
+    fn threshold_queries() {
+        let mut tr = Trace::new("cocoa", "cov", 4, 100, 1.0, 1e-4);
+        tr.push(row(1, 1.0, 8, 0.1, 0.2));
+        tr.push(row(2, 2.0, 16, 0.01, 0.02));
+        tr.push(row(3, 3.0, 24, 0.0005, 0.001));
+        assert_eq!(tr.time_to_subopt(1e-3), Some(3.0));
+        assert_eq!(tr.vectors_to_subopt(0.05), Some(16));
+        assert_eq!(tr.time_to_gap(0.5), Some(1.0));
+        assert_eq!(tr.time_to_subopt(1e-9), None);
+    }
+
+    #[test]
+    fn csv_roundtrip_row_count() {
+        let mut tr = Trace::new("cocoa", "cov", 4, 100, 1.0, 1e-4);
+        tr.push(row(1, 1.0, 8, 0.1, 0.2));
+        tr.push(row(2, 2.0, 16, 0.01, 0.02));
+        let dir = std::env::temp_dir().join("cocoa_trace_test");
+        let p = dir.join("t.csv");
+        tr.to_csv(&p).unwrap();
+        let text = std::fs::read_to_string(&p).unwrap();
+        assert_eq!(text.lines().count(), 3); // header + 2
+        let pj = dir.join("t.json");
+        tr.to_json(&pj).unwrap();
+        let json = std::fs::read_to_string(&pj).unwrap();
+        assert!(json.contains("\"algorithm\": \"cocoa\""));
+        assert_eq!(json.matches("\"round\":").count(), 2);
+    }
+
+    #[test]
+    fn thread_clock_monotone_and_advancing() {
+        let t0 = thread_cpu_time_s();
+        // burn a little CPU
+        let mut acc = 0.0f64;
+        for i in 0..200_000 {
+            acc += (i as f64).sqrt();
+        }
+        assert!(acc > 0.0);
+        let t1 = thread_cpu_time_s();
+        assert!(t1 >= t0);
+        assert!(t1 - t0 < 5.0, "implausible cpu time delta");
+    }
+}

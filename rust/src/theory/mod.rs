@@ -1,0 +1,177 @@
+//! The paper's convergence theory, computable: Proposition 1's Θ, Lemma 3's
+//! σ_min, and Theorem 2's geometric rate. Tests and the theory-validation
+//! harness compare measured convergence against these quantities.
+
+use crate::data::{Dataset, Partition};
+
+/// Proposition 1: the local geometric improvement of LOCALSDCA after H
+/// steps on a block of size at most `n_max` (`~n` in the paper), for
+/// `(1/gamma)`-smooth losses:
+/// `Theta = (1 - (lambda n gamma)/(1 + lambda n gamma) * 1/~n)^H`.
+pub fn theta_local_sdca(h: usize, lambda: f64, n: usize, gamma: f64, n_max: usize) -> f64 {
+    assert!(n_max >= 1);
+    let lng = lambda * n as f64 * gamma;
+    let per_step = 1.0 - (lng / (1.0 + lng)) / n_max as f64;
+    per_step.powi(h as i32)
+}
+
+/// Theorem 2: per-round contraction factor of the dual suboptimality,
+/// `1 - (1 - Theta) * (1/K) * (lambda n gamma)/(sigma + lambda n gamma)`.
+pub fn theorem2_rate(theta: f64, k: usize, lambda: f64, n: usize, gamma: f64, sigma: f64) -> f64 {
+    let lng = lambda * n as f64 * gamma;
+    1.0 - (1.0 - theta) * (1.0 / k as f64) * (lng / (sigma + lng))
+}
+
+/// Rounds predicted by Theorem 2 to shrink the dual suboptimality by
+/// `target` (e.g. 1e-3), starting from `D(a*) - D(0) <= 1`.
+pub fn theorem2_rounds(rate: f64, target: f64) -> f64 {
+    assert!(rate > 0.0 && rate < 1.0);
+    target.ln() / rate.ln()
+}
+
+/// Lemma 3's partition-correlation constant
+/// `sigma_min = max_a lambda^2 n^2 (sum_k ||A_[k] a_[k]||^2 - ||A a||^2) / ||a||^2`,
+/// estimated by shifted power iteration on the symmetric operator
+/// `M a = lambda^2 n^2 (blockdiag(A_k^T A_k) - A^T A) a`, which in data
+/// space reduces to `(M a)_i = x_i . (z_{k(i)} - z)` with
+/// `z_b = sum_{j in b} a_j x_j`, `z = sum_b z_b` (the lambda n factors
+/// cancel against A's 1/(lambda n) scaling).
+///
+/// The shift `c = ~n` keeps the iterated operator PSD (Lemma 3 gives
+/// `-~n <= eigs(M) <= ~n`), so the dominant eigenvalue of `M + cI` is
+/// `sigma_min + c`.
+pub fn sigma_min_estimate(data: &Dataset, partition: &Partition, iters: usize, seed: u64) -> f64 {
+    let n = data.n();
+    assert_eq!(n, partition.n());
+    let d = data.d();
+    let k = partition.k();
+    let shift = partition.n_max() as f64;
+
+    let locate = partition.locate();
+    let mut rng = crate::util::Rng::seed_from_u64(seed);
+    let mut v: Vec<f64> = (0..n).map(|_| rng.gen_f64() - 0.5).collect();
+    normalize(&mut v);
+
+    let mut eig = shift;
+    let mut z_blocks = vec![vec![0.0; d]; k];
+    for _ in 0..iters {
+        // z_b = sum_{j in b} v_j x_j ; z = sum_b z_b
+        for zb in z_blocks.iter_mut() {
+            zb.iter_mut().for_each(|x| *x = 0.0);
+        }
+        for (j, &vj) in v.iter().enumerate() {
+            if vj != 0.0 {
+                let b = locate[j].0 as usize;
+                data.features.add_row_scaled(j, vj, &mut z_blocks[b]);
+            }
+        }
+        let mut z = vec![0.0; d];
+        for zb in &z_blocks {
+            for (zi, &zbi) in z.iter_mut().zip(zb) {
+                *zi += zbi;
+            }
+        }
+        // (M + shift I) v
+        let mut next = vec![0.0; n];
+        for i in 0..n {
+            let b = locate[i].0 as usize;
+            let diff: f64 = {
+                // x_i . (z_b - z) without materializing the difference
+                data.features.row_dot(i, &z_blocks[b]) - data.features.row_dot(i, &z)
+            };
+            next[i] = diff + shift * v[i];
+        }
+        eig = norm(&next);
+        if eig == 0.0 {
+            return 0.0;
+        }
+        for (vi, ni) in v.iter_mut().zip(&next) {
+            *vi = ni / eig;
+        }
+    }
+    (eig - shift).max(0.0)
+}
+
+fn norm(v: &[f64]) -> f64 {
+    v.iter().map(|x| x * x).sum::<f64>().sqrt()
+}
+
+fn normalize(v: &mut [f64]) {
+    let nv = norm(v);
+    if nv > 0.0 {
+        v.iter_mut().for_each(|x| *x /= nv);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::{cov_like, orthogonal_blocks, PartitionStrategy};
+
+    #[test]
+    fn theta_limits() {
+        // H = 0: no progress, Theta = 1. H -> inf: Theta -> 0.
+        assert_eq!(theta_local_sdca(0, 0.1, 100, 1.0, 25), 1.0);
+        assert!(theta_local_sdca(100_000, 0.1, 100, 1.0, 25) < 1e-6);
+        // more steps always helps
+        let t1 = theta_local_sdca(10, 0.1, 100, 1.0, 25);
+        let t2 = theta_local_sdca(20, 0.1, 100, 1.0, 25);
+        assert!(t2 < t1);
+    }
+
+    #[test]
+    fn theorem2_k1_recovers_theta() {
+        // K = 1 with sigma = 0 (Lemma 3): rate = Theta exactly.
+        let theta = theta_local_sdca(50, 0.1, 100, 1.0, 100);
+        let rate = theorem2_rate(theta, 1, 0.1, 100, 1.0, 0.0);
+        assert!((rate - theta).abs() < 1e-12);
+    }
+
+    #[test]
+    fn theorem2_rate_degrades_with_k_and_sigma() {
+        let theta = 0.5;
+        let r1 = theorem2_rate(theta, 1, 0.1, 100, 1.0, 0.0);
+        let r4 = theorem2_rate(theta, 4, 0.1, 100, 1.0, 0.0);
+        let r4s = theorem2_rate(theta, 4, 0.1, 100, 1.0, 50.0);
+        assert!(r1 < r4 && r4 < r4s && r4s < 1.0);
+    }
+
+    #[test]
+    fn sigma_zero_for_orthogonal_partition() {
+        let k = 3;
+        let data = orthogonal_blocks(k, 10, 4, 1);
+        let blocks: Vec<Vec<u32>> = (0..k)
+            .map(|b| ((b * 10) as u32..(b * 10 + 10) as u32).collect())
+            .collect();
+        let part = Partition::from_blocks(blocks, data.n());
+        let sigma = sigma_min_estimate(&data, &part, 60, 2);
+        assert!(sigma < 1e-6, "sigma = {sigma} should vanish");
+    }
+
+    #[test]
+    fn sigma_bounds_of_lemma3() {
+        let data = cov_like(90, 8, 0.1, 3);
+        let part = Partition::new(PartitionStrategy::Contiguous, 90, 3, 0);
+        let sigma = sigma_min_estimate(&data, &part, 80, 4);
+        assert!(sigma >= 0.0);
+        assert!(sigma <= part.n_max() as f64 + 1e-6, "sigma = {sigma}");
+        // correlated data split across workers must have sigma > 0
+        assert!(sigma > 1e-3, "sigma = {sigma} unexpectedly tiny");
+    }
+
+    #[test]
+    fn sigma_zero_for_single_block() {
+        let data = cov_like(40, 6, 0.1, 5);
+        let part = Partition::new(PartitionStrategy::Contiguous, 40, 1, 0);
+        let sigma = sigma_min_estimate(&data, &part, 60, 6);
+        assert!(sigma < 1e-8, "K=1 must give sigma_min = 0, got {sigma}");
+    }
+
+    #[test]
+    fn rounds_prediction_monotone() {
+        let fast = theorem2_rounds(0.5, 1e-3);
+        let slow = theorem2_rounds(0.9, 1e-3);
+        assert!(fast < slow);
+        assert!(fast > 0.0);
+    }
+}

@@ -1,0 +1,118 @@
+//! Minimal benchmarking harness (offline build: no criterion).
+//!
+//! Measures wall time over adaptive iteration counts, reports
+//! median/p10/p90 like criterion's summary line. Used by the
+//! `rust/benches/*.rs` targets (`cargo bench`).
+
+use std::time::Instant;
+
+/// One benchmark measurement.
+pub struct Measurement {
+    pub name: String,
+    pub median_ns: f64,
+    pub p10_ns: f64,
+    pub p90_ns: f64,
+    pub iters_per_sample: u64,
+}
+
+impl Measurement {
+    pub fn print(&self) {
+        println!(
+            "{:<44} median {:>12}  p10 {:>12}  p90 {:>12}  ({} it/sample)",
+            self.name,
+            fmt_ns(self.median_ns),
+            fmt_ns(self.p10_ns),
+            fmt_ns(self.p90_ns),
+            self.iters_per_sample
+        );
+    }
+}
+
+pub fn fmt_ns(ns: f64) -> String {
+    if ns < 1e3 {
+        format!("{ns:.1} ns")
+    } else if ns < 1e6 {
+        format!("{:.2} µs", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:.2} ms", ns / 1e6)
+    } else {
+        format!("{:.3} s", ns / 1e9)
+    }
+}
+
+/// Benchmark `f`, auto-calibrating the per-sample iteration count so one
+/// sample takes ~`target_sample_ms`, then collecting `samples` samples.
+pub fn bench(name: &str, samples: usize, target_sample_ms: f64, mut f: impl FnMut()) -> Measurement {
+    // calibrate
+    let mut iters: u64 = 1;
+    loop {
+        let t0 = Instant::now();
+        for _ in 0..iters {
+            f();
+        }
+        let elapsed = t0.elapsed().as_secs_f64() * 1e3;
+        if elapsed >= target_sample_ms || iters >= 1 << 30 {
+            break;
+        }
+        let scale = (target_sample_ms / elapsed.max(1e-6)).clamp(1.5, 100.0);
+        iters = ((iters as f64) * scale).ceil() as u64;
+    }
+    // measure
+    let mut per_iter: Vec<f64> = Vec::with_capacity(samples);
+    for _ in 0..samples {
+        let t0 = Instant::now();
+        for _ in 0..iters {
+            f();
+        }
+        per_iter.push(t0.elapsed().as_nanos() as f64 / iters as f64);
+    }
+    per_iter.sort_by(f64::total_cmp);
+    let pct = |p: f64| per_iter[((per_iter.len() - 1) as f64 * p).round() as usize];
+    let m = Measurement {
+        name: name.to_string(),
+        median_ns: pct(0.5),
+        p10_ns: pct(0.1),
+        p90_ns: pct(0.9),
+        iters_per_sample: iters,
+    };
+    m.print();
+    m
+}
+
+/// Time a single long-running closure (end-to-end benches).
+pub fn time_once<T>(name: &str, f: impl FnOnce() -> T) -> (T, f64) {
+    let t0 = Instant::now();
+    let out = f();
+    let secs = t0.elapsed().as_secs_f64();
+    println!("{name:<44} {:.3} s", secs);
+    (out, secs)
+}
+
+/// Prevent the optimizer from discarding a computed value.
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_measures_something_sane() {
+        let mut acc = 0u64;
+        let m = bench("noop-ish", 5, 0.2, || {
+            acc = acc.wrapping_add(black_box(1));
+        });
+        assert!(m.median_ns > 0.0);
+        assert!(m.p10_ns <= m.median_ns && m.median_ns <= m.p90_ns);
+    }
+
+    #[test]
+    fn fmt_ns_units() {
+        assert!(fmt_ns(5.0).contains("ns"));
+        assert!(fmt_ns(5e3).contains("µs"));
+        assert!(fmt_ns(5e6).contains("ms"));
+        assert!(fmt_ns(5e9).contains("s"));
+    }
+}

@@ -1,0 +1,9 @@
+//! Offline substrates: the utilities the framework would normally pull
+//! from crates.io (rand, toml) built in-tree because this environment
+//! vendors only the xla PJRT closure.
+
+pub mod bench;
+pub mod rng;
+pub mod toml_lite;
+
+pub use rng::Rng;

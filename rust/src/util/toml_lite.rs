@@ -1,0 +1,288 @@
+//! Minimal TOML-subset parser — the offline substrate behind the config
+//! system (the build has no network access to the serde/toml crates).
+//!
+//! Supported grammar (everything the experiment configs use):
+//!   * `[section]` / `[section.sub]` headers
+//!   * `key = value` with string, integer, float, boolean values
+//!   * `#` comments and blank lines
+//!
+//! Unsupported on purpose (config files simply avoid them): arrays, inline
+//! tables, multi-line strings, dotted keys, datetimes.
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Context, Result};
+
+#[derive(Debug, Clone, PartialEq)]
+pub enum Value {
+    Str(String),
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+}
+
+impl Value {
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Value::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            Value::Float(f) => Some(*f),
+            Value::Int(i) => Some(*i as f64),
+            _ => None,
+        }
+    }
+
+    pub fn as_i64(&self) -> Option<i64> {
+        match self {
+            Value::Int(i) => Some(*i),
+            _ => None,
+        }
+    }
+
+    pub fn as_usize(&self) -> Option<usize> {
+        self.as_i64().and_then(|i| usize::try_from(i).ok())
+    }
+
+    pub fn as_u64(&self) -> Option<u64> {
+        self.as_i64().and_then(|i| u64::try_from(i).ok())
+    }
+
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Value::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+}
+
+/// A parsed document: section name ("" for top level) -> key -> value.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct Doc {
+    sections: BTreeMap<String, BTreeMap<String, Value>>,
+}
+
+impl Doc {
+    pub fn parse(text: &str) -> Result<Doc> {
+        let mut doc = Doc::default();
+        let mut current = String::new();
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = strip_comment(raw).trim();
+            if line.is_empty() {
+                continue;
+            }
+            if let Some(rest) = line.strip_prefix('[') {
+                let name = rest
+                    .strip_suffix(']')
+                    .with_context(|| format!("line {}: unterminated section", lineno + 1))?
+                    .trim();
+                if name.is_empty() {
+                    bail!("line {}: empty section name", lineno + 1);
+                }
+                current = name.to_string();
+                doc.sections.entry(current.clone()).or_default();
+                continue;
+            }
+            let (key, value) = line
+                .split_once('=')
+                .with_context(|| format!("line {}: expected key = value", lineno + 1))?;
+            let key = key.trim();
+            if key.is_empty() {
+                bail!("line {}: empty key", lineno + 1);
+            }
+            let value = parse_value(value.trim())
+                .with_context(|| format!("line {}: bad value {:?}", lineno + 1, value.trim()))?;
+            doc.sections
+                .entry(current.clone())
+                .or_default()
+                .insert(key.to_string(), value);
+        }
+        Ok(doc)
+    }
+
+    pub fn get(&self, section: &str, key: &str) -> Option<&Value> {
+        self.sections.get(section)?.get(key)
+    }
+
+    pub fn has_section(&self, section: &str) -> bool {
+        self.sections.contains_key(section)
+    }
+
+    pub fn section_keys(&self, section: &str) -> Vec<&str> {
+        self.sections
+            .get(section)
+            .map(|m| m.keys().map(String::as_str).collect())
+            .unwrap_or_default()
+    }
+
+    // typed accessors with good error messages -------------------------
+
+    pub fn str_of(&self, section: &str, key: &str) -> Result<&str> {
+        self.get(section, key)
+            .and_then(Value::as_str)
+            .with_context(|| format!("missing string [{section}] {key}"))
+    }
+
+    pub fn f64_of(&self, section: &str, key: &str) -> Result<f64> {
+        self.get(section, key)
+            .and_then(Value::as_f64)
+            .with_context(|| format!("missing number [{section}] {key}"))
+    }
+
+    pub fn usize_of(&self, section: &str, key: &str) -> Result<usize> {
+        self.get(section, key)
+            .and_then(Value::as_usize)
+            .with_context(|| format!("missing integer [{section}] {key}"))
+    }
+
+    pub fn f64_or(&self, section: &str, key: &str, default: f64) -> f64 {
+        self.get(section, key).and_then(Value::as_f64).unwrap_or(default)
+    }
+
+    pub fn usize_or(&self, section: &str, key: &str, default: usize) -> usize {
+        self.get(section, key).and_then(Value::as_usize).unwrap_or(default)
+    }
+
+    pub fn u64_or(&self, section: &str, key: &str, default: u64) -> u64 {
+        self.get(section, key).and_then(Value::as_u64).unwrap_or(default)
+    }
+
+    pub fn str_or<'a>(&'a self, section: &str, key: &str, default: &'a str) -> &'a str {
+        self.get(section, key).and_then(Value::as_str).unwrap_or(default)
+    }
+}
+
+fn strip_comment(line: &str) -> &str {
+    // a '#' inside a quoted string does not start a comment
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(s: &str) -> Result<Value> {
+    if let Some(inner) = s.strip_prefix('"') {
+        let inner = inner
+            .strip_suffix('"')
+            .context("unterminated string")?;
+        return Ok(Value::Str(inner.to_string()));
+    }
+    match s {
+        "true" => return Ok(Value::Bool(true)),
+        "false" => return Ok(Value::Bool(false)),
+        _ => {}
+    }
+    // integer first, then float (TOML floats: ., e/E, inf, nan)
+    if !s.contains('.') && !s.contains(['e', 'E']) {
+        if let Ok(i) = s.replace('_', "").parse::<i64>() {
+            return Ok(Value::Int(i));
+        }
+    }
+    if let Ok(f) = s.replace('_', "").parse::<f64>() {
+        return Ok(Value::Float(f));
+    }
+    bail!("unrecognized value")
+}
+
+/// Write helper: formats a value back to the subset syntax.
+pub fn format_value(v: &Value) -> String {
+    match v {
+        Value::Str(s) => format!("\"{s}\""),
+        Value::Int(i) => i.to_string(),
+        Value::Float(f) => {
+            if f.fract() == 0.0 && f.abs() < 1e15 {
+                format!("{f:.1}")
+            } else {
+                format!("{f}")
+            }
+        }
+        Value::Bool(b) => b.to_string(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"
+# top-level
+lambda = 1e-4
+name = "cov experiment"
+verbose = true
+count = 1_000
+
+[dataset]
+kind = "cov_like"  # inline comment
+n = 1000
+noise = 0.1
+
+[run.inner]
+rounds = 50
+"#;
+
+    #[test]
+    fn parses_sections_and_types() {
+        let doc = Doc::parse(SAMPLE).unwrap();
+        assert_eq!(doc.f64_of("", "lambda").unwrap(), 1e-4);
+        assert_eq!(doc.str_of("", "name").unwrap(), "cov experiment");
+        assert_eq!(doc.get("", "verbose").unwrap().as_bool(), Some(true));
+        assert_eq!(doc.usize_of("", "count").unwrap(), 1000);
+        assert_eq!(doc.str_of("dataset", "kind").unwrap(), "cov_like");
+        assert_eq!(doc.usize_of("dataset", "n").unwrap(), 1000);
+        assert_eq!(doc.f64_of("dataset", "noise").unwrap(), 0.1);
+        assert_eq!(doc.usize_of("run.inner", "rounds").unwrap(), 50);
+    }
+
+    #[test]
+    fn int_vs_float_distinction() {
+        let doc = Doc::parse("a = 3\nb = 3.0\nc = 3e0").unwrap();
+        assert!(matches!(doc.get("", "a"), Some(Value::Int(3))));
+        assert!(matches!(doc.get("", "b"), Some(Value::Float(_))));
+        assert!(matches!(doc.get("", "c"), Some(Value::Float(_))));
+    }
+
+    #[test]
+    fn hash_inside_string_is_not_comment() {
+        let doc = Doc::parse("path = \"a#b\"").unwrap();
+        assert_eq!(doc.str_of("", "path").unwrap(), "a#b");
+    }
+
+    #[test]
+    fn errors_are_line_numbered() {
+        let err = Doc::parse("ok = 1\nbroken").unwrap_err();
+        assert!(format!("{err:#}").contains("line 2"));
+        let err = Doc::parse("[unterminated").unwrap_err();
+        assert!(format!("{err:#}").contains("line 1"));
+    }
+
+    #[test]
+    fn defaults_helpers() {
+        let doc = Doc::parse("[s]\nx = 5").unwrap();
+        assert_eq!(doc.usize_or("s", "x", 9), 5);
+        assert_eq!(doc.usize_or("s", "missing", 9), 9);
+        assert_eq!(doc.str_or("s", "missing", "dflt"), "dflt");
+    }
+
+    #[test]
+    fn format_value_roundtrips() {
+        for v in [
+            Value::Str("hi".into()),
+            Value::Int(-3),
+            Value::Float(2.5),
+            Value::Bool(false),
+        ] {
+            let text = format!("k = {}", format_value(&v));
+            let doc = Doc::parse(&text).unwrap();
+            assert_eq!(doc.get("", "k"), Some(&v));
+        }
+    }
+}

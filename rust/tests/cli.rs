@@ -1,0 +1,110 @@
+//! CLI smoke tests: the `cocoa` binary end-to-end — gen-data, train from a
+//! TOML config, optimum, and bad-input error paths.
+
+use std::process::Command;
+
+fn bin() -> Command {
+    Command::new(env!("CARGO_BIN_EXE_cocoa"))
+}
+
+fn tmpdir(tag: &str) -> std::path::PathBuf {
+    let dir = std::env::temp_dir().join(format!("cocoa_cli_{tag}"));
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+#[test]
+fn help_prints_usage() {
+    let out = bin().arg("help").output().unwrap();
+    assert!(out.status.success());
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(text.contains("repro"));
+    assert!(text.contains("train"));
+}
+
+#[test]
+fn unknown_command_exits_nonzero() {
+    let out = bin().arg("frobnicate").output().unwrap();
+    assert!(!out.status.success());
+}
+
+#[test]
+fn gen_data_writes_libsvm() {
+    let dir = tmpdir("gendata");
+    let path = dir.join("toy.svm");
+    let out = bin()
+        .args(["gen-data", "cov", "--n", "50", "--d", "6", "--out"])
+        .arg(&path)
+        .output()
+        .unwrap();
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let text = std::fs::read_to_string(&path).unwrap();
+    assert_eq!(text.lines().count(), 50);
+    assert!(text.lines().all(|l| l.starts_with("+1") || l.starts_with("-1")));
+}
+
+#[test]
+fn train_runs_config_and_writes_trace() {
+    let dir = tmpdir("train");
+    let cfg_path = dir.join("exp.toml");
+    let trace_path = dir.join("trace.csv");
+    std::fs::write(
+        &cfg_path,
+        r#"
+lambda = 0.01
+
+[dataset]
+kind = "cov_like"
+n = 200
+d = 8
+seed = 3
+
+[partition]
+k = 2
+
+[algorithm]
+name = "cocoa"
+h = 100
+
+[loss]
+kind = "hinge"
+
+[run]
+rounds = 5
+"#,
+    )
+    .unwrap();
+    let out = bin()
+        .arg("train")
+        .args(["--config"])
+        .arg(&cfg_path)
+        .args(["--out"])
+        .arg(&trace_path)
+        .output()
+        .unwrap();
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    assert!(stdout.contains("finished: rounds=5"), "stdout: {stdout}");
+    let trace = std::fs::read_to_string(&trace_path).unwrap();
+    assert_eq!(trace.lines().count(), 7); // header + rounds 0..=5
+    assert!(trace.lines().next().unwrap().starts_with("round,sim_time_s"));
+}
+
+#[test]
+fn train_rejects_bad_config() {
+    let dir = tmpdir("badcfg");
+    let cfg_path = dir.join("bad.toml");
+    std::fs::write(&cfg_path, "lambda = \"not a number\"\n").unwrap();
+    let out = bin().arg("train").arg("--config").arg(&cfg_path).output().unwrap();
+    assert!(!out.status.success());
+}
+
+#[test]
+fn repro_table1_smoke() {
+    let out = bin().args(["repro", "table1", "--smoke"]).output().unwrap();
+    assert!(out.status.success());
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(text.contains("cov"));
+    assert!(text.contains("rcv1"));
+    assert!(text.contains("imagenet"));
+}

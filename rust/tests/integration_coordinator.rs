@@ -1,0 +1,289 @@
+//! Coordinator integration: the leader/worker runtime against the paper's
+//! Algorithm-1 semantics, across partitions, losses, K, and backends.
+
+use cocoa::config::Backend;
+use cocoa::coordinator::{Cluster, LocalWork};
+use cocoa::data::{cov_like, orthogonal_blocks, rcv1_like, Partition, PartitionStrategy};
+use cocoa::loss::LossKind;
+use cocoa::netsim::NetworkModel;
+use cocoa::objective;
+use cocoa::solvers::SolverKind;
+
+fn build(
+    data: &cocoa::data::Dataset,
+    k: usize,
+    loss: LossKind,
+    lambda: f64,
+    seed: u64,
+) -> Cluster {
+    let part = Partition::new(PartitionStrategy::Contiguous, data.n(), k, 0);
+    Cluster::build(
+        &data.clone(),
+        &part,
+        loss,
+        lambda,
+        SolverKind::Sdca,
+        Backend::Native,
+        "artifacts",
+        NetworkModel::free(),
+        seed,
+    )
+    .unwrap()
+}
+
+/// Run T CoCoA rounds and return the gap trajectory.
+fn run_cocoa(cluster: &mut Cluster, t: usize, h: usize) -> Vec<f64> {
+    let k = cluster.k as f64;
+    let mut gaps = vec![cluster.evaluate().unwrap().gap];
+    for _ in 0..t {
+        let replies = cluster.dispatch(|_| LocalWork::DualRound { h }).unwrap();
+        cluster.commit(&replies, 1.0 / k).unwrap();
+        gaps.push(cluster.evaluate().unwrap().gap);
+    }
+    gaps
+}
+
+#[test]
+fn converges_on_every_loss() {
+    let data = cov_like(120, 8, 0.1, 1);
+    for loss in [
+        LossKind::Hinge,
+        LossKind::SmoothedHinge { gamma: 0.5 },
+        LossKind::Squared,
+        LossKind::Logistic,
+    ] {
+        let mut cluster = build(&data, 3, loss, 0.05, 2);
+        let gaps = run_cocoa(&mut cluster, 12, 80);
+        assert!(
+            gaps.last().unwrap() < &(gaps[0] * 0.2),
+            "{loss:?}: gap {} -> {}",
+            gaps[0],
+            gaps.last().unwrap()
+        );
+        for g in &gaps {
+            assert!(*g >= -1e-9, "{loss:?}: negative gap {g}");
+        }
+        cluster.shutdown();
+    }
+}
+
+#[test]
+fn converges_on_sparse_data() {
+    let data = rcv1_like(300, 500, 6, 0.1, 3);
+    let mut cluster = build(&data, 4, LossKind::Hinge, 0.02, 4);
+    let gaps = run_cocoa(&mut cluster, 15, 150);
+    assert!(gaps.last().unwrap() < &(gaps[0] * 0.3));
+    cluster.shutdown();
+}
+
+#[test]
+fn k_equals_one_matches_serial_sdca_rate() {
+    // K = 1 CoCoA with beta = 1 is exactly serial SDCA: the gap after the
+    // same number of total steps must match a direct serial run closely.
+    let data = cov_like(100, 6, 0.1, 5);
+    let mut cluster = build(&data, 1, LossKind::Hinge, 0.05, 6);
+    let gaps = run_cocoa(&mut cluster, 5, 100);
+    assert!(gaps.last().unwrap() < &0.25, "K=1 run too slow: {gaps:?}");
+    cluster.shutdown();
+}
+
+#[test]
+fn partition_strategies_all_converge() {
+    let data = cov_like(90, 6, 0.1, 7);
+    for strategy in [
+        PartitionStrategy::Contiguous,
+        PartitionStrategy::RoundRobin,
+        PartitionStrategy::Random,
+    ] {
+        let part = Partition::new(strategy, 90, 3, 11);
+        let mut cluster = Cluster::build(
+            &data,
+            &part,
+            LossKind::Hinge,
+            0.05,
+            SolverKind::Sdca,
+            Backend::Native,
+            "artifacts",
+            NetworkModel::free(),
+            8,
+        )
+        .unwrap();
+        let gaps = run_cocoa(&mut cluster, 10, 60);
+        assert!(
+            gaps.last().unwrap() < &(gaps[0] * 0.3),
+            "{strategy:?} failed to converge"
+        );
+        cluster.shutdown();
+    }
+}
+
+#[test]
+fn orthogonal_data_converges_like_k1() {
+    // Lemma 3: with orthogonal blocks sigma_min = 0 and the K-machine rate
+    // matches the ideal; with exact local solves one round is optimal.
+    let k = 3;
+    let data = orthogonal_blocks(k, 12, 4, 9);
+    let part = Partition::new(PartitionStrategy::Contiguous, data.n(), k, 0);
+    let mut cluster = Cluster::build(
+        &data,
+        &part,
+        LossKind::SmoothedHinge { gamma: 1.0 },
+        0.05,
+        SolverKind::Exact,
+        Backend::Native,
+        "artifacts",
+        NetworkModel::free(),
+        10,
+    )
+    .unwrap();
+    // exact local solve + independent blocks: after one full round with
+    // scale 1 (note: NOT 1/K, valid only because the blocks are orthogonal)
+    let replies = cluster.dispatch(|_| LocalWork::ExactSolve).unwrap();
+    cluster.commit(&replies, 1.0).unwrap();
+    let ev = cluster.evaluate().unwrap();
+    assert!(ev.gap < 1e-4, "orthogonal one-round gap = {}", ev.gap);
+    cluster.shutdown();
+}
+
+#[test]
+fn comm_accounting_is_exact() {
+    let data = cov_like(60, 5, 0.1, 11);
+    let mut cluster = build(&data, 4, LossKind::Hinge, 0.1, 12);
+    for t in 1..=7 {
+        let replies = cluster.dispatch(|_| LocalWork::DualRound { h: 5 }).unwrap();
+        cluster.commit(&replies, 0.25).unwrap();
+        assert_eq!(cluster.stats.rounds, t);
+        assert_eq!(cluster.stats.vectors, 8 * t); // 2K per round
+        assert_eq!(cluster.stats.inner_steps, 20 * t); // K*h
+        assert_eq!(
+            cluster.stats.bytes,
+            cluster.stats.vectors * (5 * 8) as u64
+        );
+    }
+    cluster.shutdown();
+}
+
+#[test]
+fn leader_w_equals_a_alpha_throughout() {
+    // Reconstruct the implied global alpha by running the same seeds
+    // through the evaluation identity: P(w) - D(alpha) >= 0 with equality
+    // structure maintained requires w == A alpha exactly; a drift would
+    // show up as a persistent gap floor or negative gap.
+    let data = cov_like(80, 6, 0.1, 13);
+    let mut cluster = build(&data, 2, LossKind::Squared, 0.1, 14);
+    for _ in 0..10 {
+        let replies = cluster.dispatch(|_| LocalWork::DualRound { h: 40 }).unwrap();
+        cluster.commit(&replies, 0.5).unwrap();
+        let ev = cluster.evaluate().unwrap();
+        assert!(ev.gap >= -1e-9, "negative gap: w drifted from A alpha");
+    }
+    // squared loss: near-optimum the gap closes fully, which is impossible
+    // if w and alpha were inconsistent
+    let final_gap = cluster.evaluate().unwrap().gap;
+    assert!(final_gap < 0.05, "gap floor {final_gap} suggests drift");
+    cluster.shutdown();
+}
+
+#[test]
+fn mixed_work_rounds_are_rejected_cleanly() {
+    // dispatching a new dual round with an uncommitted pending update must
+    // surface a Fatal error, not silently corrupt state
+    let data = cov_like(40, 4, 0.1, 15);
+    let mut cluster = build(&data, 2, LossKind::Hinge, 0.1, 16);
+    let _replies = cluster.dispatch(|_| LocalWork::DualRound { h: 5 }).unwrap();
+    // no commit here — next dispatch must fail
+    let err = cluster.dispatch(|_| LocalWork::DualRound { h: 5 });
+    assert!(err.is_err());
+}
+
+#[test]
+fn eval_consistent_with_direct_objective() {
+    // distributed evaluation (partial sums over workers) must equal the
+    // single-machine objective at the same (w, alpha)
+    let data = cov_like(70, 5, 0.1, 17);
+    let mut cluster = build(&data, 3, LossKind::Hinge, 0.08, 18);
+    let replies = cluster.dispatch(|_| LocalWork::DualRound { h: 30 }).unwrap();
+    cluster.commit(&replies, 1.0 / 3.0).unwrap();
+    let ev = cluster.evaluate().unwrap();
+    let p_direct = objective::primal(&data, &cluster.w, 0.08, &cocoa::loss::Hinge);
+    assert!((ev.primal - p_direct).abs() < 1e-10);
+    cluster.shutdown();
+}
+
+#[test]
+fn checkpoint_resume_is_bit_identical() {
+    // Train 4 rounds, checkpoint, train 4 more; separately restore the
+    // checkpoint into a FRESH cluster and train the same 4 rounds: the
+    // native backend must produce bit-identical w (alpha + rng state are
+    // both captured).
+    let data = cov_like(90, 7, 0.1, 41);
+    let run_rounds = |cluster: &mut Cluster, t: usize| {
+        for _ in 0..t {
+            let replies = cluster.dispatch(|_| LocalWork::DualRound { h: 30 }).unwrap();
+            cluster.commit(&replies, 1.0 / 3.0).unwrap();
+        }
+    };
+
+    let mut original = build(&data, 3, LossKind::Hinge, 0.05, 42);
+    run_rounds(&mut original, 4);
+    let cp = original.checkpoint().unwrap();
+    run_rounds(&mut original, 4);
+    let w_reference = original.w.clone();
+    original.shutdown();
+
+    // persist + reload through the file format
+    let path = std::env::temp_dir().join("cocoa_resume_test/state.ckpt");
+    cp.save(&path).unwrap();
+    let reloaded = cocoa::coordinator::Checkpoint::load(&path).unwrap();
+    assert_eq!(cp, reloaded);
+
+    // a fresh cluster with a DIFFERENT seed — restore overwrites it all
+    let mut resumed = build(&data, 3, LossKind::Hinge, 0.05, 999);
+    resumed.restore(&reloaded).unwrap();
+    run_rounds(&mut resumed, 4);
+    assert_eq!(resumed.w, w_reference, "resumed trajectory diverged");
+    assert_eq!(resumed.stats.rounds, 8);
+    resumed.shutdown();
+}
+
+#[test]
+fn restore_rejects_shape_mismatch() {
+    let data = cov_like(40, 5, 0.1, 43);
+    let mut a = build(&data, 2, LossKind::Hinge, 0.05, 44);
+    let cp = a.checkpoint().unwrap();
+    a.shutdown();
+    let other = cov_like(40, 5, 0.1, 43);
+    let mut b = build(&other, 4, LossKind::Hinge, 0.05, 45); // K mismatch
+    assert!(b.restore(&cp).is_err());
+    b.shutdown();
+}
+
+#[test]
+fn stragglers_inflate_simulated_time_only() {
+    // A straggling worker slows the simulated barrier but must not change
+    // the optimization trajectory (bulk-synchronous semantics).
+    let data = cov_like(80, 6, 0.1, 61);
+    let run_with = |stragglers: cocoa::netsim::StragglerModel| {
+        let mut cluster = build(&data, 4, LossKind::Hinge, 0.05, 62);
+        cluster.stragglers = stragglers;
+        for _ in 0..6 {
+            let replies = cluster.dispatch(|_| LocalWork::DualRound { h: 40 }).unwrap();
+            cluster.commit(&replies, 0.25).unwrap();
+        }
+        let gap = cluster.evaluate().unwrap().gap;
+        let sim = cluster.stats.sim_time_s;
+        cluster.shutdown();
+        (gap, sim)
+    };
+    let (gap_clean, sim_clean) = run_with(cocoa::netsim::StragglerModel::none());
+    let (gap_slow, sim_slow) = run_with(cocoa::netsim::StragglerModel {
+        probability: 1.0,
+        slowdown: 20.0,
+        seed: 7,
+    });
+    assert!((gap_clean - gap_slow).abs() < 1e-12, "trajectory changed");
+    assert!(
+        sim_slow > sim_clean,
+        "stragglers must cost simulated time: {sim_slow} !> {sim_clean}"
+    );
+}

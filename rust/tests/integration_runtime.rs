@@ -1,0 +1,197 @@
+//! Integration tests for the PJRT runtime: loading the AOT JAX/Pallas
+//! artifacts, executing them, and checking numerical parity with the
+//! native rust solver. Requires `make artifacts` to have run.
+
+use cocoa::config::Backend;
+use cocoa::coordinator::{Cluster, LocalWork};
+use cocoa::data::{cov_like, Partition, PartitionStrategy};
+use cocoa::loss::{Hinge, LossKind};
+use cocoa::netsim::NetworkModel;
+use cocoa::objective;
+use cocoa::runtime::{Engine, Manifest, PjrtLocalSdca};
+use cocoa::solvers::{Block, LocalDualMethod, LocalSdca, Sampling, SolverKind};
+use cocoa::util::Rng;
+
+fn artifacts_dir() -> std::path::PathBuf {
+    std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+fn have_artifacts() -> bool {
+    artifacts_dir().join("manifest.tsv").exists()
+}
+
+/// Build a block whose shape matches the small test artifact (128 x 16).
+fn artifact_block(seed: u64) -> Block {
+    let data = cov_like(128, 16, 0.1, seed);
+    Block { data, lambda_n: 0.01 * 128.0 }
+}
+
+#[test]
+fn manifest_lists_test_shapes() {
+    if !have_artifacts() {
+        eprintln!("skipping: artifacts not built");
+        return;
+    }
+    let m = Manifest::load(&artifacts_dir()).unwrap();
+    for loss in ["hinge", "smoothed_hinge", "squared", "logistic"] {
+        assert!(
+            m.find("local_sdca", loss, 128, 16).is_some(),
+            "missing local_sdca {loss} 128x16"
+        );
+    }
+    assert!(m.find("eval_objectives", "hinge", 128, 16).is_some());
+}
+
+#[test]
+fn pjrt_matches_native_solver() {
+    if !have_artifacts() {
+        eprintln!("skipping: artifacts not built");
+        return;
+    }
+    let engine = Engine::start(artifacts_dir()).unwrap();
+    let block = artifact_block(1);
+    let pjrt = PjrtLocalSdca::bind(engine.handle(), 0, &block, "hinge", 1.0).unwrap();
+
+    let alpha = vec![0.0; 128];
+    let w = vec![0.0; 16];
+    let h = 200;
+    // identical ChaCha-free Rng streams => identical coordinate sequences
+    let up_pjrt = pjrt.local_update(&block, &Hinge, &alpha, &w, h, &mut Rng::seed_from_u64(9));
+    let native = LocalSdca::new(Sampling::WithReplacement);
+    let up_native =
+        native.local_update(&block, &Hinge, &alpha, &w, h, &mut Rng::seed_from_u64(9));
+
+    for (a, b) in up_pjrt.dalpha.iter().zip(&up_native.dalpha) {
+        assert!((a - b).abs() < 5e-3, "dalpha mismatch: {a} vs {b}");
+    }
+    for (a, b) in up_pjrt.dw.iter().zip(&up_native.dw) {
+        assert!((a - b).abs() < 5e-3, "dw mismatch: {a} vs {b}");
+    }
+    // and the invariant dw = A dalpha holds for the f32 path too
+    let mut expect = vec![0.0; 16];
+    for (i, &da) in up_pjrt.dalpha.iter().enumerate() {
+        block
+            .data
+            .features
+            .add_row_scaled(i, da / block.lambda_n, &mut expect);
+    }
+    for (a, b) in expect.iter().zip(&up_pjrt.dw) {
+        assert!((a - b).abs() < 1e-4);
+    }
+}
+
+#[test]
+fn pjrt_chunks_h_beyond_capacity() {
+    if !have_artifacts() {
+        eprintln!("skipping: artifacts not built");
+        return;
+    }
+    // cap for the 128x16 artifact is 256; H = 700 forces 3 chunks
+    let engine = Engine::start(artifacts_dir()).unwrap();
+    let block = artifact_block(2);
+    let pjrt = PjrtLocalSdca::bind(engine.handle(), 0, &block, "hinge", 1.0).unwrap();
+    let up = pjrt.local_update(
+        &block,
+        &Hinge,
+        &vec![0.0; 128],
+        &vec![0.0; 16],
+        700,
+        &mut Rng::seed_from_u64(11),
+    );
+    let native = LocalSdca::new(Sampling::WithReplacement);
+    let up_n = native.local_update(
+        &block,
+        &Hinge,
+        &vec![0.0; 128],
+        &vec![0.0; 16],
+        700,
+        &mut Rng::seed_from_u64(11),
+    );
+    for (a, b) in up.dw.iter().zip(&up_n.dw) {
+        assert!((a - b).abs() < 1e-2, "chunked dw mismatch: {a} vs {b}");
+    }
+}
+
+#[test]
+fn pjrt_eval_matches_native_objective() {
+    if !have_artifacts() {
+        eprintln!("skipping: artifacts not built");
+        return;
+    }
+    let engine = Engine::start(artifacts_dir()).unwrap();
+    let block = artifact_block(3);
+    let handle = engine.handle();
+    // register
+    let n_k = 128;
+    let d = 16;
+    let mut x = Vec::with_capacity(n_k * d);
+    for i in 0..n_k {
+        for v in block.data.features.row_dense(i) {
+            x.push(v as f32);
+        }
+    }
+    let y: Vec<f32> = block.data.labels.iter().map(|&v| v as f32).collect();
+    let norms: Vec<f32> = (0..n_k).map(|i| block.data.norm_sq(i) as f32).collect();
+    handle.register_block(7, x, y, norms, n_k, d).unwrap();
+
+    let alpha: Vec<f32> = block.data.labels.iter().map(|&y| 0.4 * y as f32).collect();
+    let w: Vec<f32> = (0..d).map(|j| 0.01 * j as f32).collect();
+    let out = handle.eval(7, "hinge", alpha.clone(), w.clone(), 1.0).unwrap();
+
+    let alpha64: Vec<f64> = alpha.iter().map(|&v| v as f64).collect();
+    let w64: Vec<f64> = w.iter().map(|&v| v as f64).collect();
+    let ls = objective::block_loss_sum(&block.data, &w64, &Hinge);
+    let cs = objective::block_conj_sum(&block.data, &alpha64, &Hinge);
+    assert!((out.loss_sum - ls).abs() / ls.max(1.0) < 1e-3, "{} vs {ls}", out.loss_sum);
+    assert!((out.conj_sum - cs).abs() / cs.abs().max(1.0) < 1e-3, "{} vs {cs}", out.conj_sum);
+}
+
+#[test]
+fn missing_artifact_shape_is_a_clean_error() {
+    if !have_artifacts() {
+        eprintln!("skipping: artifacts not built");
+        return;
+    }
+    let engine = Engine::start(artifacts_dir()).unwrap();
+    let handle = engine.handle();
+    handle
+        .register_block(0, vec![0.0; 10 * 3], vec![1.0; 10], vec![0.0; 10], 10, 3)
+        .unwrap();
+    let err = handle
+        .local_sdca(0, "hinge", vec![0.0; 10], vec![0.0; 3], vec![0; 4], 1.0, 1.0)
+        .unwrap_err();
+    let msg = format!("{err:#}");
+    assert!(msg.contains("no AOT artifact"), "unhelpful error: {msg}");
+}
+
+#[test]
+fn full_cluster_runs_on_pjrt_backend() {
+    if !have_artifacts() {
+        eprintln!("skipping: artifacts not built");
+        return;
+    }
+    // 2 workers x 128 rows: each block matches the 128x16 artifact
+    let data = cov_like(256, 16, 0.1, 5);
+    let part = Partition::new(PartitionStrategy::Contiguous, 256, 2, 0);
+    let mut cluster = Cluster::build(
+        &data,
+        &part,
+        LossKind::Hinge,
+        0.01,
+        SolverKind::Sdca,
+        Backend::Pjrt,
+        artifacts_dir().to_str().unwrap(),
+        NetworkModel::free(),
+        13,
+    )
+    .unwrap();
+    let g0 = cluster.evaluate().unwrap().gap;
+    for _ in 0..6 {
+        let replies = cluster.dispatch(|_| LocalWork::DualRound { h: 128 }).unwrap();
+        cluster.commit(&replies, 0.5).unwrap();
+    }
+    let ev = cluster.evaluate().unwrap();
+    assert!(ev.gap < g0 * 0.5, "gap barely moved on PJRT backend: {g0} -> {}", ev.gap);
+    assert!(ev.gap >= -1e-6);
+    cluster.shutdown();
+}

@@ -1,0 +1,271 @@
+//! Property-based tests over the framework's invariants.
+//!
+//! The offline build has no proptest crate, so this file carries its own
+//! lightweight property harness: each property runs over `CASES` seeded
+//! random instances; on failure it reports the seed so the case replays
+//! exactly (`Rng` is deterministic per seed).
+
+use cocoa::data::{cov_like, rcv1_like, Dataset, Partition, PartitionStrategy};
+use cocoa::loss::{Hinge, Logistic, Loss, LossKind, SmoothedHinge, Squared};
+use cocoa::objective;
+use cocoa::solvers::{Block, LocalDualMethod, LocalSdca, Sampling};
+use cocoa::theory;
+use cocoa::util::Rng;
+
+const CASES: u64 = 40;
+
+/// Run `prop` for CASES seeds, reporting the failing seed.
+fn for_all(name: &str, prop: impl Fn(u64, &mut Rng)) {
+    for seed in 0..CASES {
+        let mut rng = Rng::seed_from_u64(0xfeed_0000 + seed);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            prop(seed, &mut rng)
+        }));
+        if let Err(e) = result {
+            panic!("property {name:?} failed at seed {seed}: {e:?}");
+        }
+    }
+}
+
+fn random_loss(rng: &mut Rng) -> Box<dyn Loss> {
+    match rng.gen_range(4) {
+        0 => Box::new(Hinge),
+        1 => Box::new(SmoothedHinge::new(rng.gen_range_f64(0.1, 1.0))),
+        2 => Box::new(Squared),
+        _ => Box::new(Logistic),
+    }
+}
+
+fn random_dataset(rng: &mut Rng, seed: u64) -> Dataset {
+    let n = 20 + rng.gen_range(80);
+    let d = 2 + rng.gen_range(12);
+    if rng.gen_bool(0.3) {
+        rcv1_like(n, d * 4, 3, 0.1, seed)
+    } else {
+        cov_like(n, d, 0.1, seed)
+    }
+}
+
+fn feasible_alpha(data: &Dataset, loss: &dyn Loss, rng: &mut Rng) -> Vec<f64> {
+    data.labels
+        .iter()
+        .map(|&y| loss.project_feasible(y * rng.gen_range_f64(0.05, 0.95), y))
+        .collect()
+}
+
+#[test]
+fn prop_partition_disjoint_cover() {
+    for_all("partition disjoint cover", |seed, rng| {
+        let n = 1 + rng.gen_range(500);
+        let k = 1 + rng.gen_range(n.min(16));
+        let strategy = match rng.gen_range(3) {
+            0 => PartitionStrategy::Contiguous,
+            1 => PartitionStrategy::RoundRobin,
+            _ => PartitionStrategy::Random,
+        };
+        let p = Partition::new(strategy, n, k, seed);
+        p.validate().expect("partition invariant violated");
+        assert_eq!(p.k(), k);
+        let total: usize = p.blocks.iter().map(Vec::len).sum();
+        assert_eq!(total, n);
+        // balance: sizes differ by at most 1
+        let max = p.blocks.iter().map(Vec::len).max().unwrap();
+        let min = p.blocks.iter().map(Vec::len).min().unwrap();
+        assert!(max - min <= 1, "unbalanced: {max} vs {min}");
+    });
+}
+
+#[test]
+fn prop_duality_gap_nonnegative() {
+    for_all("duality gap >= 0", |seed, rng| {
+        let data = random_dataset(rng, seed);
+        let loss = random_loss(rng);
+        let lambda = rng.gen_range_f64(0.005, 0.5);
+        let alpha = feasible_alpha(&data, loss.as_ref(), rng);
+        let gap = objective::duality_gap(&data, &alpha, lambda, loss.as_ref());
+        assert!(gap >= -1e-9, "gap {gap} < 0");
+    });
+}
+
+#[test]
+fn prop_sdca_update_is_feasible_and_consistent() {
+    for_all("sdca feasibility + dw = A dalpha", |seed, rng| {
+        let data = random_dataset(rng, seed);
+        let n = data.n();
+        let loss = random_loss(rng);
+        let lambda = rng.gen_range_f64(0.01, 0.3);
+        let block = Block { data, lambda_n: lambda * n as f64 };
+        let alpha = feasible_alpha(&block.data, loss.as_ref(), rng);
+        let w = block.data.primal_from_dual(&alpha, lambda);
+        let h = rng.gen_range(200);
+        let solver = LocalSdca::new(Sampling::WithReplacement);
+        let up = solver.local_update(&block, loss.as_ref(), &alpha, &w, h, rng);
+
+        // dw == A dalpha
+        let mut expect = vec![0.0; block.d()];
+        for (i, &da) in up.dalpha.iter().enumerate() {
+            if da != 0.0 {
+                block
+                    .data
+                    .features
+                    .add_row_scaled(i, da / block.lambda_n, &mut expect);
+            }
+        }
+        for (a, b) in expect.iter().zip(&up.dw) {
+            assert!((a - b).abs() < 1e-9);
+        }
+        // feasibility preserved at full application
+        for (i, (&a0, &da)) in alpha.iter().zip(&up.dalpha).enumerate() {
+            let a1 = a0 + da;
+            let conj = loss.conjugate(a1, block.data.labels[i]);
+            assert!(conj.is_finite(), "coordinate {i} left the dual domain");
+        }
+    });
+}
+
+#[test]
+fn prop_averaging_scale_preserves_feasibility() {
+    // alpha + (beta/K) dalpha stays feasible for any beta in [0, K]
+    // (convexity of the dual domain) — the Algorithm-1 commit step.
+    for_all("scaled commit feasible", |seed, rng| {
+        let data = cov_like(40 + rng.gen_range(40), 6, 0.1, seed);
+        let n = data.n();
+        let loss = random_loss(rng);
+        let lambda = 0.05;
+        let block = Block { data, lambda_n: lambda * n as f64 };
+        let alpha = feasible_alpha(&block.data, loss.as_ref(), rng);
+        let w = block.data.primal_from_dual(&alpha, lambda);
+        let solver = LocalSdca::new(Sampling::WithReplacement);
+        let up = solver.local_update(&block, loss.as_ref(), &alpha, &w, 60, rng);
+        let k = 1 + rng.gen_range(8);
+        let beta = rng.gen_range_f64(0.0, k as f64);
+        let scale = beta / k as f64;
+        for (i, (&a0, &da)) in alpha.iter().zip(&up.dalpha).enumerate() {
+            let a1 = a0 + scale * da;
+            let conj = loss.conjugate(a1, block.data.labels[i]);
+            assert!(
+                conj.is_finite(),
+                "scaled commit (beta={beta}, K={k}) left the dual domain at {i}"
+            );
+        }
+    });
+}
+
+#[test]
+fn prop_local_update_never_decreases_global_dual() {
+    // Coordinate ascent restricted to one block never decreases D when
+    // the whole update is applied (Assumption 1's premise).
+    for_all("block ascent monotone", |seed, rng| {
+        let data = random_dataset(rng, seed);
+        let n = data.n();
+        let loss = random_loss(rng);
+        let lambda = rng.gen_range_f64(0.02, 0.2);
+        let block = Block { data, lambda_n: lambda * n as f64 };
+        let alpha = feasible_alpha(&block.data, loss.as_ref(), rng);
+        let w = block.data.primal_from_dual(&alpha, lambda);
+        let d0 = objective::dual(&block.data, &alpha, lambda, loss.as_ref());
+        let solver = LocalSdca::new(Sampling::WithReplacement);
+        let up = solver.local_update(&block, loss.as_ref(), &alpha, &w, 50, rng);
+        let alpha1: Vec<f64> = alpha.iter().zip(&up.dalpha).map(|(a, d)| a + d).collect();
+        let d1 = objective::dual(&block.data, &alpha1, lambda, loss.as_ref());
+        assert!(d1 >= d0 - 1e-9, "dual decreased: {d0} -> {d1}");
+    });
+}
+
+#[test]
+fn prop_lemma3_sigma_bounds() {
+    for_all("0 <= sigma_min <= n_max", |seed, rng| {
+        let data = random_dataset(rng, seed);
+        let n = data.n();
+        let k = 1 + rng.gen_range(n.min(6));
+        let part = Partition::new(PartitionStrategy::Contiguous, n, k, seed);
+        let sigma = theory::sigma_min_estimate(&data, &part, 40, seed);
+        assert!(sigma >= 0.0, "sigma {sigma} < 0");
+        assert!(
+            sigma <= part.n_max() as f64 + 1e-6,
+            "sigma {sigma} > n_max {}",
+            part.n_max()
+        );
+    });
+}
+
+#[test]
+fn prop_theta_is_contraction_and_monotone() {
+    for_all("theta in (0,1], monotone in H", |_seed, rng| {
+        let n = 20 + rng.gen_range(1000);
+        let n_max = 1 + rng.gen_range(n);
+        let lambda = rng.gen_range_f64(1e-5, 1.0);
+        let gamma = rng.gen_range_f64(0.05, 2.0);
+        let h = rng.gen_range(10_000);
+        let t_h = theory::theta_local_sdca(h, lambda, n, gamma, n_max);
+        let t_h1 = theory::theta_local_sdca(h + 1, lambda, n, gamma, n_max);
+        // theta can underflow to exactly 0 for huge H — that's the
+        // solved-to-optimality limit, still a valid contraction factor
+        assert!((0.0..=1.0).contains(&t_h), "theta {t_h} out of range");
+        assert!(t_h1 <= t_h, "theta not monotone: {t_h1} > {t_h}");
+        let rate = theory::theorem2_rate(t_h, 1 + rng.gen_range(32), lambda, n, gamma,
+                                          rng.gen_range_f64(0.0, n_max as f64));
+        assert!((0.0..=1.0).contains(&rate), "rate {rate} out of range");
+    });
+}
+
+#[test]
+fn prop_loss_conjugate_fenchel_young() {
+    for_all("Fenchel-Young inequality", |_seed, rng| {
+        let loss = random_loss(rng);
+        for _ in 0..20 {
+            let y = if rng.gen_bool(0.5) { 1.0 } else { -1.0 };
+            let a = rng.gen_range_f64(-3.0, 3.0);
+            let alpha = loss.project_feasible(y * rng.gen_range_f64(0.01, 0.99), y);
+            let lhs = loss.value(a, y) + loss.conjugate(alpha, y);
+            assert!(
+                lhs >= -alpha * a - 1e-8,
+                "{loss:?} FY violated: {lhs} < {}",
+                -alpha * a
+            );
+        }
+    });
+}
+
+#[test]
+fn prop_coord_delta_maximizes_1d_subproblem() {
+    for_all("coord_delta is the 1-D argmax", |_seed, rng| {
+        let loss = random_loss(rng);
+        let y = if rng.gen_bool(0.5) { 1.0 } else { -1.0 };
+        let a = loss.project_feasible(y * rng.gen_range_f64(0.02, 0.98), y);
+        let q = rng.gen_range_f64(-2.0, 2.0);
+        let s = rng.gen_range_f64(0.01, 5.0);
+        let obj = |da: f64| -loss.conjugate(a + da, y) - q * da - s * da * da / 2.0;
+        let star = loss.coord_delta(q, y, a, s);
+        let at_star = obj(star);
+        assert!(at_star.is_finite());
+        for _ in 0..25 {
+            let probe = star + rng.gen_range_f64(-0.5, 0.5);
+            let v = obj(probe);
+            assert!(
+                v <= at_star + 1e-6,
+                "{loss:?}: probe beats argmax by {}",
+                v - at_star
+            );
+        }
+    });
+}
+
+#[test]
+fn prop_csr_dense_row_ops_agree() {
+    for_all("CSR and dense row ops agree", |seed, rng| {
+        let data = rcv1_like(10 + rng.gen_range(50), 30, 4, 0.1, seed);
+        let dense_rows: Vec<Vec<f64>> =
+            (0..data.n()).map(|i| data.features.row_dense(i)).collect();
+        let w: Vec<f64> = (0..30).map(|_| rng.gen_range_f64(-1.0, 1.0)).collect();
+        for i in 0..data.n() {
+            let sparse_dot = data.features.row_dot(i, &w);
+            let dense_dot: f64 = dense_rows[i].iter().zip(&w).map(|(a, b)| a * b).sum();
+            assert!((sparse_dot - dense_dot).abs() < 1e-10);
+            assert!((data.norm_sq(i)
+                - dense_rows[i].iter().map(|v| v * v).sum::<f64>())
+            .abs()
+                < 1e-10);
+        }
+    });
+}

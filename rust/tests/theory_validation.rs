@@ -1,0 +1,68 @@
+//! Theorem 2 / Proposition 1 validation across a grid of (K, H, lambda):
+//! the measured per-round dual contraction must respect the predicted
+//! geometric rate (the bound), and the qualitative dependencies the paper
+//! derives must show up in the measurements.
+
+use cocoa::data::cov_like;
+use cocoa::experiments::theory_val::validate;
+use cocoa::theory;
+
+#[test]
+fn bound_respected_across_k_grid() {
+    let data = cov_like(400, 12, 0.05, 77);
+    let lambda = 10.0 / 400.0;
+    for k in [1usize, 2, 4, 8] {
+        let rep = validate(&data, k, 60, lambda, 1.0, 12, 3).unwrap();
+        assert!(
+            rep.bound_respected,
+            "K={k}: measured {} > predicted {}",
+            rep.measured_rate, rep.predicted_rate
+        );
+        assert!(rep.measured_rate < 1.0, "K={k}: no progress at all");
+    }
+}
+
+#[test]
+fn bound_respected_across_h_grid() {
+    let data = cov_like(300, 10, 0.05, 78);
+    let lambda = 10.0 / 300.0;
+    let mut rates = Vec::new();
+    for h in [5usize, 25, 100, 400] {
+        let rep = validate(&data, 3, h, lambda, 1.0, 12, 4).unwrap();
+        assert!(rep.bound_respected, "H={h} violates Theorem 2");
+        rates.push((h, rep.measured_rate, rep.predicted_rate));
+    }
+    // larger H => faster measured AND predicted per-round rate
+    for pair in rates.windows(2) {
+        assert!(
+            pair[1].1 <= pair[0].1 + 0.05,
+            "measured rate not improving with H: {rates:?}"
+        );
+        assert!(pair[1].2 < pair[0].2);
+    }
+}
+
+#[test]
+fn k1_matches_serial_sdca_theory() {
+    // K = 1: Theorem 2 collapses to Theta (the remark after Lemma 3).
+    let data = cov_like(200, 8, 0.05, 79);
+    let lambda = 10.0 / 200.0;
+    let rep = validate(&data, 1, 50, lambda, 1.0, 15, 5).unwrap();
+    let theta = theory::theta_local_sdca(50, lambda, 200, 1.0, 200);
+    assert!((rep.predicted_rate - theta).abs() < 1e-9);
+    assert!(rep.sigma < 1e-6, "K=1 sigma should vanish: {}", rep.sigma);
+}
+
+#[test]
+fn rate_prediction_is_not_vacuous() {
+    // the predicted rate should be < 1 by a usable margin for sane
+    // configurations — otherwise the bound predicts nothing
+    let data = cov_like(300, 10, 0.05, 80);
+    let lambda = 10.0 / 300.0;
+    let rep = validate(&data, 4, 300, lambda, 1.0, 10, 6).unwrap();
+    assert!(
+        rep.predicted_rate < 0.999,
+        "vacuous bound: {}",
+        rep.predicted_rate
+    );
+}
