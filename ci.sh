@@ -1,0 +1,28 @@
+#!/usr/bin/env bash
+# CI gate for the cocoa crate: build, test, lint, format.
+#
+#   ./ci.sh            # everything
+#   ./ci.sh --fast     # skip clippy/fmt (tier-1 only)
+#
+# Tier-1 (the driver's gate) is exactly: cargo build --release && cargo test -q
+
+set -euo pipefail
+cd "$(dirname "$0")"
+
+step() { printf '\n== %s ==\n' "$*"; }
+
+step "cargo build --release"
+cargo build --release
+
+step "cargo test -q"
+cargo test -q
+
+if [[ "${1:-}" != "--fast" ]]; then
+    step "cargo clippy -- -D warnings"
+    cargo clippy --all-targets -- -D warnings
+
+    step "cargo fmt --check"
+    cargo fmt --check
+fi
+
+printf '\nci: all green\n'

@@ -10,19 +10,14 @@
 //! a fixed duality gap. On the slow network large H wins decisively; as
 //! communication gets cheaper the optimum shifts toward smaller H —
 //! exactly the "freely steer the trade-off" knob the paper motivates.
+//! One session per network; every H point warm-starts the same threads.
 
-use cocoa::algorithms::{run, Budget};
-use cocoa::config::{AlgorithmSpec, Backend};
-use cocoa::coordinator::Cluster;
-use cocoa::data::{cov_like, Partition, PartitionStrategy};
-use cocoa::loss::LossKind;
-use cocoa::netsim::NetworkModel;
-use cocoa::solvers::SolverKind;
+use cocoa::data::cov_like;
+use cocoa::prelude::*;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> cocoa::Result<()> {
     let data = cov_like(20_000, 54, 0.1, 3);
     let k = 4;
-    let partition = Partition::new(PartitionStrategy::Contiguous, data.n(), k, 0);
     let lambda = 1.0 / data.n() as f64;
     let nets: [(&str, NetworkModel); 3] = [
         ("ec2_like", NetworkModel::ec2_like()),
@@ -40,35 +35,30 @@ fn main() -> anyhow::Result<()> {
     println!();
 
     for (name, net) in nets {
+        let mut session = Trainer::on(&data)
+            .workers(k)
+            .loss(LossKind::Hinge)
+            .lambda(lambda)
+            .network(net)
+            .seed(5)
+            .label("tradeoff")
+            .build()?;
         print!("{name:<12}");
         for h in h_grid {
-            let mut cluster = Cluster::build(
-                &data, &partition, LossKind::Hinge, lambda, SolverKind::Sdca,
-                Backend::Native, "artifacts", net, 5,
-            )?;
+            session.reset()?;
             // equal total-steps budget across H; evaluation cadence scaled
             // so instrumentation stays cheap for tiny H
-            let budget = Budget {
-                rounds: (600_000 / h as u64).max(120),
-                target_gap,
-                target_subopt: 0.0,
-            };
-            let eval_every = (2_000 / h as u64).max(1);
-            let trace = run(
-                &mut cluster,
-                &AlgorithmSpec::Cocoa { h, beta_k: 1.0, solver: SolverKind::Sdca },
-                budget,
-                eval_every,
-                None,
-                "tradeoff",
-            )?;
-            cluster.shutdown();
+            let budget = Budget::until_gap(target_gap)
+                .max_rounds((600_000 / h as u64).max(120))
+                .eval_every((2_000 / h as u64).max(1));
+            let trace = session.run(&mut Cocoa::new(h), budget)?;
             match trace.time_to_gap(target_gap) {
                 Some(t) => print!(" {:>12.3}", t),
                 None => print!(" {:>12}", "-"),
             }
         }
         println!();
+        session.shutdown();
     }
     println!("\nReading: on the EC2-like network (5 ms rounds) H must be large;");
     println!("on multicore (memory-speed rounds) small H catches up — the paper's");

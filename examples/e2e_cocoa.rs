@@ -16,28 +16,17 @@
 //!      .001-accurate primal suboptimality (the paper's headline metric);
 //!   5. write traces to results/e2e/*.csv (recorded in EXPERIMENTS.md).
 
-use cocoa::algorithms::{run, Budget};
-use cocoa::config::{AlgorithmSpec, Backend};
-use cocoa::coordinator::Cluster;
-use cocoa::data::{cov_like, Partition, PartitionStrategy};
-use cocoa::loss::LossKind;
-use cocoa::netsim::NetworkModel;
+use cocoa::data::cov_like;
 use cocoa::objective;
-use cocoa::solvers::SolverKind;
+use cocoa::prelude::*;
 
 const N: usize = 100_000;
 const D: usize = 54;
 const K: usize = 4;
 
 fn main() -> anyhow::Result<()> {
-    let artifacts = std::path::Path::new("artifacts");
-    if !artifacts.join("manifest.tsv").exists() {
-        anyhow::bail!("artifacts/ not built — run `make artifacts` first");
-    }
-
     println!("== e2e: CoCoA on cov-like {N}x{D}, K={K}, hinge SVM ==");
     let data = cov_like(N, D, 0.1, 11);
-    let partition = Partition::new(PartitionStrategy::Contiguous, N, K, 0);
     let lambda = 1e-5;
     let h = N / K; // one full local pass per outer round
 
@@ -46,28 +35,40 @@ fn main() -> anyhow::Result<()> {
     let (p_star, _) = objective::compute_optimum(&data, lambda, &cocoa::loss::Hinge, 1e-8, 200);
     println!("P* = {p_star:.9}");
 
-    let budget = Budget { rounds: 40, target_gap: 0.0, target_subopt: 2e-4 };
-    let spec = AlgorithmSpec::Cocoa { h, beta_k: 1.0, solver: SolverKind::Sdca };
+    let budget = Budget::rounds(40).target_subopt(2e-4);
+    let trainer = |backend: Backend| {
+        Trainer::on(&data)
+            .workers(K)
+            .loss(LossKind::Hinge)
+            .lambda(lambda)
+            .backend(backend)
+            .artifacts_dir("artifacts")
+            .network(NetworkModel::ec2_like())
+            .seed(21)
+            .label("cov_e2e")
+    };
 
     // --- PJRT backend: inner loop = AOT Pallas kernel through XLA ---
-    let mut cluster = Cluster::build(
-        &data, &partition, LossKind::Hinge, lambda, SolverKind::Sdca,
-        Backend::Pjrt, "artifacts", NetworkModel::ec2_like(), 21,
-    )?;
+    // (Trainer::build returns the typed MissingArtifacts error when
+    // `make artifacts` has not run.)
+    let mut session = match trainer(Backend::Pjrt).build() {
+        Err(Error::MissingArtifacts { dir }) => {
+            anyhow::bail!("{dir}/ not built — run `make artifacts` first")
+        }
+        other => other?,
+    };
+    session.set_reference_optimum(Some(p_star));
     println!("\n[pjrt backend] running up to {} rounds of H={h}...", budget.rounds);
-    let trace_pjrt = run(&mut cluster, &spec, budget, 1, Some(p_star), "cov_e2e")?;
-    cluster.shutdown();
+    let trace_pjrt = session.run(&mut Cocoa::new(h), budget)?;
+    session.shutdown();
     report("pjrt", &trace_pjrt);
     trace_pjrt.to_csv("results/e2e/cocoa_pjrt.csv")?;
 
     // --- native backend: same problem, same seeds ---
-    let mut cluster = Cluster::build(
-        &data, &partition, LossKind::Hinge, lambda, SolverKind::Sdca,
-        Backend::Native, "artifacts", NetworkModel::ec2_like(), 21,
-    )?;
+    let mut session = trainer(Backend::Native).build()?;
+    session.set_reference_optimum(Some(p_star));
     println!("\n[native backend] running the identical configuration...");
-    let trace_native = run(&mut cluster, &spec, budget, 1, Some(p_star), "cov_e2e")?;
-    cluster.shutdown();
+    let trace_native = session.run(&mut Cocoa::new(h), budget)?;
     report("native", &trace_native);
     trace_native.to_csv("results/e2e/cocoa_native.csv")?;
 
@@ -78,22 +79,13 @@ fn main() -> anyhow::Result<()> {
     println!("\nbackend parity: P_pjrt={p_pjrt:.8} P_native={p_native:.8} (rel diff {rel:.2e})");
     anyhow::ensure!(rel < 1e-2, "backends disagree beyond f32 tolerance");
 
-    // --- the baseline: mini-batch SDCA at the same per-round batch ---
-    let mut cluster = Cluster::build(
-        &data, &partition, LossKind::Hinge, lambda, SolverKind::Sdca,
-        Backend::Native, "artifacts", NetworkModel::ec2_like(), 21,
-    )?;
+    // --- the baseline: mini-batch SDCA at the same per-round batch,
+    //     warm-started on the same native worker threads ---
+    session.reset()?;
     println!("\n[baseline] mini-batch SDCA, same batch size per round...");
-    let mb_budget = Budget { rounds: 400, target_gap: 0.0, target_subopt: 2e-4 };
-    let trace_mb = run(
-        &mut cluster,
-        &AlgorithmSpec::MinibatchCd { h, beta_b: 1.0 },
-        mb_budget,
-        10,
-        Some(p_star),
-        "cov_e2e",
-    )?;
-    cluster.shutdown();
+    let mb_budget = Budget::rounds(400).target_subopt(2e-4).eval_every(10);
+    let trace_mb = session.run(&mut MinibatchCd::new(h), mb_budget)?;
+    session.shutdown();
     report("minibatch_cd", &trace_mb);
     trace_mb.to_csv("results/e2e/minibatch_cd.csv")?;
 
@@ -115,8 +107,12 @@ fn main() -> anyhow::Result<()> {
         v_mb.map(|v| v.to_string()).unwrap_or("-".into())
     );
     match (t_cocoa, t_mb) {
-        (Some(a), Some(b)) => println!("speedup: {:.1}x (paper reports ~25x vs best competitor)", b / a),
-        (Some(_), None) => println!("speedup: >{}x (baseline never reached target)", mb_budget.rounds),
+        (Some(a), Some(b)) => {
+            println!("speedup: {:.1}x (paper reports ~25x vs best competitor)", b / a)
+        }
+        (Some(_), None) => {
+            println!("speedup: >{}x (baseline never reached target)", mb_budget.rounds)
+        }
         _ => println!("warning: cocoa did not reach the target within budget"),
     }
     anyhow::ensure!(t_cocoa.is_some(), "e2e failed: CoCoA must reach .001 suboptimality");
@@ -124,8 +120,11 @@ fn main() -> anyhow::Result<()> {
     Ok(())
 }
 
-fn report(name: &str, trace: &cocoa::telemetry::Trace) {
-    println!("  {:<8} {:>6} {:>12} {:>12} {:>12} {:>12}", "backend", "round", "P(w)", "gap", "subopt", "sim t (s)");
+fn report(name: &str, trace: &Trace) {
+    println!(
+        "  {:<8} {:>6} {:>12} {:>12} {:>12} {:>12}",
+        "backend", "round", "P(w)", "gap", "subopt", "sim t (s)"
+    );
     for row in trace.rows.iter().filter(|r| r.round.is_multiple_of(5) || r.round <= 2) {
         println!(
             "  {:<8} {:>6} {:>12.6} {:>12.2e} {:>12.2e} {:>12.2}",

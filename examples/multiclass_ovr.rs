@@ -7,13 +7,8 @@
 //! cargo run --release --example multiclass_ovr
 //! ```
 
-use cocoa::algorithms::{run, Budget};
-use cocoa::config::{AlgorithmSpec, Backend};
-use cocoa::coordinator::Cluster;
-use cocoa::data::{Dataset, DenseMatrix, Features, Partition, PartitionStrategy};
-use cocoa::loss::LossKind;
-use cocoa::netsim::NetworkModel;
-use cocoa::solvers::SolverKind;
+use cocoa::data::{Dataset, DenseMatrix, Features};
+use cocoa::prelude::*;
 use cocoa::util::Rng;
 
 const CLASSES: usize = 3;
@@ -44,11 +39,10 @@ fn make_multiclass(n: usize, d: usize, seed: u64) -> (Dataset, Vec<usize>) {
     (ds, classes)
 }
 
-fn main() -> anyhow::Result<()> {
+fn main() -> cocoa::Result<()> {
     let (base, classes) = make_multiclass(N, D, 77);
     let lambda = 1.0 / N as f64;
     let k = 4;
-    let partition = Partition::new(PartitionStrategy::RoundRobin, N, k, 0);
     let h = N / k;
 
     println!("one-vs-rest: {CLASSES} classes, n={N}, d={D}, K={k}");
@@ -59,15 +53,19 @@ fn main() -> anyhow::Result<()> {
         for (label, &c) in ds.labels.iter_mut().zip(&classes) {
             *label = if c == class { 1.0 } else { -1.0 };
         }
-        let mut cluster = Cluster::build(
-            &ds, &partition, LossKind::Hinge, lambda, SolverKind::Sdca,
-            Backend::Native, "artifacts", NetworkModel::ec2_like(), 5 + class as u64,
-        )?;
-        let spec = AlgorithmSpec::Cocoa { h, beta_k: 1.0, solver: SolverKind::Sdca };
-        let budget = Budget { rounds: 25, target_gap: 1e-3, target_subopt: 0.0 };
-        let trace = run(&mut cluster, &spec, budget, 1, None, "ovr")?;
-        let w = cluster.w.clone();
-        cluster.shutdown();
+        let mut session = Trainer::on(&ds)
+            .workers(k)
+            .partition_strategy(PartitionStrategy::RoundRobin)
+            .loss(LossKind::Hinge)
+            .lambda(lambda)
+            .network(NetworkModel::ec2_like())
+            .seed(5 + class as u64)
+            .label("ovr")
+            .build()?;
+        let budget = Budget::until_gap(1e-3).max_rounds(25);
+        let trace = session.run(&mut Cocoa::new(h), budget)?;
+        let w = session.w().to_vec();
+        session.shutdown();
         let last = trace.rows.last().unwrap();
         println!(
             "  class {class}: {} rounds, gap {:.2e}, {} vectors, sim {:.2}s",
@@ -95,6 +93,10 @@ fn main() -> anyhow::Result<()> {
     }
     let acc = correct as f64 / N as f64;
     println!("training accuracy: {:.2}% ({} / {N})", 100.0 * acc, correct);
-    anyhow::ensure!(acc > 0.9, "OvR accuracy suspiciously low: {acc}");
+    if acc <= 0.9 {
+        return Err(Error::Runtime {
+            message: format!("OvR accuracy suspiciously low: {acc}"),
+        });
+    }
     Ok(())
 }

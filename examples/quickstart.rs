@@ -4,51 +4,50 @@
 //! cargo run --release --example quickstart
 //! ```
 //!
-//! Generates a small cov-regime dataset, partitions it over K = 4 worker
-//! threads, runs Algorithm 1, and prints the duality-gap trajectory next
-//! to the mini-batch SDCA baseline at the same per-round work.
+//! Generates a small cov-regime dataset, builds one [`Session`] (K = 4
+//! worker threads over an EC2-like network), runs Algorithm 1 next to the
+//! mini-batch SDCA baseline at the same per-round work, then shows the
+//! CoCoA+ adding regime — all on the same warm-started worker threads.
 
-use cocoa::algorithms::{run, Budget};
-use cocoa::config::{AlgorithmSpec, Backend};
-use cocoa::coordinator::Cluster;
-use cocoa::data::{cov_like, Partition, PartitionStrategy};
-use cocoa::loss::LossKind;
-use cocoa::netsim::NetworkModel;
-use cocoa::solvers::SolverKind;
+use cocoa::data::cov_like;
+use cocoa::prelude::*;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> cocoa::Result<()> {
     // 1. data: n = 8000 points in d = 54 (cov regime), K = 4 workers
     let data = cov_like(8_000, 54, 0.1, 42);
-    let partition = Partition::new(PartitionStrategy::Contiguous, data.n(), 4, 0);
     let lambda = 1.0 / data.n() as f64;
     let h = data.n() / 4; // one local pass per round
 
-    println!("quickstart: n={} d={} K=4 lambda={lambda:.2e} H={h}", data.n(), data.d());
-    println!("{:<14} {:>6} {:>12} {:>12} {:>14}", "algorithm", "round", "P(w)", "gap", "sim time (s)");
+    // 2. one session: a typed builder, validated at build()
+    let mut session = Trainer::on(&data)
+        .workers(4)
+        .loss(LossKind::Hinge)
+        .lambda(lambda)
+        .network(NetworkModel::ec2_like())
+        .seed(7)
+        .label("quickstart")
+        .build()?;
 
-    for spec in [
-        AlgorithmSpec::Cocoa { h, beta_k: 1.0, solver: SolverKind::Sdca },
-        AlgorithmSpec::MinibatchCd { h, beta_b: 1.0 },
-    ] {
-        // 2. a cluster: leader + 4 worker threads over an EC2-like network
-        let mut cluster = Cluster::build(
-            &data,
-            &partition,
-            LossKind::Hinge,
-            lambda,
-            SolverKind::Sdca,
-            Backend::Native,
-            "artifacts",
-            NetworkModel::ec2_like(),
-            7,
-        )?;
-        // 3. run 10 outer rounds (Algorithm 1), evaluating every round
-        let trace = run(&mut cluster, &spec, Budget::rounds(10), 1, None, "quickstart")?;
-        cluster.shutdown();
+    println!("quickstart: n={} d={} K=4 lambda={lambda:.2e} H={h}", data.n(), data.d());
+    println!(
+        "{:<14} {:>6} {:>12} {:>12} {:>14}",
+        "algorithm", "round", "P(w)", "gap", "sim time (s)"
+    );
+
+    // 3. algorithms are trait objects; reset() warm-starts the same
+    //    worker threads between runs
+    let mut algos: Vec<Box<dyn Algorithm>> = vec![
+        Box::new(Cocoa::new(h)),          // Algorithm 1, beta_K = 1 averaging
+        Box::new(MinibatchCd::new(h)),    // frozen-w baseline, same batch
+        Box::new(Cocoa::adding(h)),       // CoCoA+: beta_K = K adding
+    ];
+    for algo in algos.iter_mut() {
+        session.reset()?;
+        let trace = session.run(algo.as_mut(), Budget::rounds(10))?;
         for row in trace.rows.iter().filter(|r| r.round % 2 == 0) {
             println!(
                 "{:<14} {:>6} {:>12.6} {:>12.2e} {:>14.3}",
-                spec.name(),
+                algo.name(),
                 row.round,
                 row.primal,
                 row.gap,
@@ -57,6 +56,7 @@ fn main() -> anyhow::Result<()> {
         }
     }
     println!("\nCoCoA closes the duality gap orders of magnitude faster per round —");
-    println!("the same updates, applied locally before averaging (Section 3 of the paper).");
+    println!("the same updates, applied locally before averaging (Section 3 of the");
+    println!("paper); the adding regime (Aggregation::Add) is one constructor away.");
     Ok(())
 }

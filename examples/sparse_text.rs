@@ -9,15 +9,11 @@
 //! patterns the paper highlights for this regime: in d = 20,000 dimensions
 //! every communicated vector is 160 KB, so per-update communication
 //! (naive CD) is hopeless while CoCoA amortizes it over a full local pass.
-//! Also demonstrates the LibSVM round-trip (export -> reload).
+//! Also demonstrates the LibSVM round-trip (export -> reload), and runs
+//! all three algorithms on one warm-started session.
 
-use cocoa::algorithms::{run, Budget};
-use cocoa::config::{AlgorithmSpec, Backend};
-use cocoa::coordinator::Cluster;
-use cocoa::data::{rcv1_like, read_libsvm, write_libsvm, Partition, PartitionStrategy};
-use cocoa::loss::LossKind;
-use cocoa::netsim::NetworkModel;
-use cocoa::solvers::SolverKind;
+use cocoa::data::{rcv1_like, read_libsvm, write_libsvm};
+use cocoa::prelude::*;
 
 fn main() -> anyhow::Result<()> {
     let n = 30_000;
@@ -35,37 +31,49 @@ fn main() -> anyhow::Result<()> {
     write_libsvm(&data, &path)?;
     let reloaded = read_libsvm(&path, d)?;
     anyhow::ensure!(reloaded.n() == n, "libsvm round-trip lost rows");
-    println!("libsvm round-trip ok: {} ({} bytes)", path.display(), std::fs::metadata(&path)?.len());
+    println!(
+        "libsvm round-trip ok: {} ({} bytes)",
+        path.display(),
+        std::fs::metadata(&path)?.len()
+    );
 
-    let partition = Partition::new(PartitionStrategy::Contiguous, n, k, 0);
     let lambda = 1.0 / n as f64;
     let h = n / k;
     let net = NetworkModel::ec2_like();
+    let mut session = Trainer::on(&data)
+        .workers(k)
+        .loss(LossKind::Hinge)
+        .lambda(lambda)
+        .network(net)
+        .seed(13)
+        .label("rcv1_like")
+        .build()?;
 
-    println!("\n{:<14} {:>7} {:>12} {:>12} {:>14} {:>12}", "algorithm", "rounds", "gap", "subopt-ish", "vectors", "sim t (s)");
-    for spec in [
-        AlgorithmSpec::Cocoa { h, beta_k: 1.0, solver: SolverKind::Sdca },
-        AlgorithmSpec::LocalSgd { h, beta: 1.0 },
-        AlgorithmSpec::MinibatchSgd { h, beta: 1.0 },
-    ] {
-        let mut cluster = Cluster::build(
-            &data, &partition, LossKind::Hinge, lambda, SolverKind::Sdca,
-            Backend::Native, "artifacts", net, 13,
-        )?;
-        let trace = run(&mut cluster, &spec, Budget::rounds(15), 5, None, "rcv1_like")?;
-        cluster.shutdown();
+    println!(
+        "\n{:<14} {:>7} {:>12} {:>12} {:>14} {:>12}",
+        "algorithm", "rounds", "gap", "subopt-ish", "vectors", "sim t (s)"
+    );
+    let mut algos: Vec<Box<dyn Algorithm>> = vec![
+        Box::new(Cocoa::new(h)),
+        Box::new(LocalSgd::new(h)),
+        Box::new(MinibatchSgd::new(h)),
+    ];
+    for algo in algos.iter_mut() {
+        session.reset()?;
+        let trace = session.run(algo.as_mut(), Budget::rounds(15).eval_every(5))?;
         let last = trace.rows.last().unwrap();
         println!(
             "{:<14} {:>7} {:>12.2e} {:>12.6} {:>14} {:>12.2}",
-            spec.name(),
+            algo.name(),
             last.round,
             last.gap,
             last.primal,
             last.vectors,
             last.sim_time_s
         );
-        trace.to_csv(format!("results/sparse_text/{}.csv", spec.name()))?;
+        trace.to_csv(format!("results/sparse_text/{}.csv", algo.name()))?;
     }
+    session.shutdown();
 
     // the naive pattern, costed without running 30k rounds: each update
     // ships one d-vector through a 5 ms + bandwidth round

@@ -5,44 +5,40 @@
 //!  B. partition strategy — contiguous vs random assignment, and its
 //!     effect on Lemma 3's sigma_min and on measured convergence;
 //!  C. aggregation — CoCoA averaging (beta_K = 1) vs the CoCoA+ extension
-//!     (beta_K = K with sigma' = K scaled subproblems) across K.
+//!     (Aggregation::Add: beta_K = K with sigma' = K scaled subproblems)
+//!     across K.
 //!
 //! ```bash
 //! cargo bench --bench ablations
 //! ```
 
-use cocoa::algorithms::{run, Budget};
-use cocoa::config::{AlgorithmSpec, Backend};
-use cocoa::coordinator::Cluster;
-use cocoa::data::{cov_like, Partition, PartitionStrategy};
-use cocoa::loss::LossKind;
-use cocoa::netsim::NetworkModel;
-use cocoa::solvers::SolverKind;
+use cocoa::data::cov_like;
+use cocoa::prelude::*;
 use cocoa::theory;
 use cocoa::util::bench::time_once;
 
 fn gap_after(
-    data: &cocoa::data::Dataset,
-    part: &Partition,
-    spec: &AlgorithmSpec,
+    data: &Dataset,
+    part: Partition,
+    algo: &mut dyn Algorithm,
     solver: SolverKind,
     rounds: u64,
     seed: u64,
 ) -> f64 {
-    let mut cl = Cluster::build(
-        data,
-        part,
-        LossKind::Hinge,
-        1.0 / data.n() as f64,
-        solver,
-        Backend::Native,
-        "artifacts",
-        NetworkModel::free(),
-        seed,
-    )
-    .unwrap();
-    let tr = run(&mut cl, spec, Budget::rounds(rounds), rounds, None, "ablate").unwrap();
-    cl.shutdown();
+    let mut session = Trainer::on(data)
+        .partition(part)
+        .loss(LossKind::Hinge)
+        .lambda(1.0 / data.n() as f64)
+        .solver(solver)
+        .network(NetworkModel::free())
+        .seed(seed)
+        .label("ablate")
+        .build()
+        .unwrap();
+    let tr = session
+        .run(algo, Budget::rounds(rounds).eval_every(rounds))
+        .unwrap();
+    session.shutdown();
     tr.rows.last().unwrap().gap
 }
 
@@ -59,14 +55,7 @@ fn main() {
         ("permutation", SolverKind::SdcaPerm),
     ] {
         let ((), secs) = time_once(&format!("sampling={name}"), || {
-            let gap = gap_after(
-                &data,
-                &part,
-                &AlgorithmSpec::Cocoa { h, beta_k: 1.0, solver },
-                solver,
-                10,
-                7,
-            );
+            let gap = gap_after(&data, part.clone(), &mut Cocoa::new(h), solver, 10, 7);
             println!("  sampling={name:<18} final gap {gap:.3e}");
         });
         let _ = secs;
@@ -85,14 +74,7 @@ fn main() {
     ] {
         let p = Partition::new(strategy, data.n(), k, 3);
         let sigma = theory::sigma_min_estimate(&data, &p, 60, 5);
-        let gap = gap_after(
-            &data,
-            &p,
-            &AlgorithmSpec::Cocoa { h, beta_k: 1.0, solver: SolverKind::Sdca },
-            SolverKind::Sdca,
-            10,
-            9,
-        );
+        let gap = gap_after(&data, p, &mut Cocoa::new(h), SolverKind::Sdca, 10, 9);
         println!("{:<14} {:>12.3} {:>14.3e}", strategy.name(), sigma, gap);
     }
 
@@ -102,22 +84,8 @@ fn main() {
     for k in [2usize, 4, 8, 16] {
         let p = Partition::new(PartitionStrategy::Contiguous, data.n(), k, 0);
         let h = data.n() / k;
-        let plain = gap_after(
-            &data,
-            &p,
-            &AlgorithmSpec::Cocoa { h, beta_k: 1.0, solver: SolverKind::Sdca },
-            SolverKind::Sdca,
-            8,
-            11,
-        );
-        let plus = gap_after(
-            &data,
-            &p,
-            &AlgorithmSpec::CocoaPlus { h },
-            SolverKind::Sdca,
-            8,
-            11,
-        );
+        let plain = gap_after(&data, p.clone(), &mut Cocoa::new(h), SolverKind::Sdca, 8, 11);
+        let plus = gap_after(&data, p, &mut Cocoa::adding(h), SolverKind::Sdca, 8, 11);
         println!("{:<4} {:>16.3e} {:>16.3e}", k, plain, plus);
     }
     println!("\nExpected shape: permutation ~ with-replacement (slightly better);");

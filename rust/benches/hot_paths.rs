@@ -101,24 +101,44 @@ fn main() {
 
     // --- coordinator round overhead (dispatch + gather + commit, H=0) ---
     {
-        use cocoa::config::Backend;
-        use cocoa::coordinator::{Cluster, LocalWork};
-        use cocoa::data::{Partition, PartitionStrategy};
+        use cocoa::coordinator::LocalWork;
         use cocoa::loss::LossKind;
         use cocoa::netsim::NetworkModel;
-        use cocoa::solvers::SolverKind;
+        use cocoa::Trainer;
         let data = cov_like(256, 54, 0.1, 9);
-        let part = Partition::new(PartitionStrategy::Contiguous, 256, 4, 0);
-        let mut cluster = Cluster::build(
-            &data, &part, LossKind::Hinge, 0.01, SolverKind::Sdca,
-            Backend::Native, "artifacts", NetworkModel::free(), 10,
-        )
-        .unwrap();
+        let mut session = Trainer::on(&data)
+            .workers(4)
+            .loss(LossKind::Hinge)
+            .lambda(0.01)
+            .network(NetworkModel::free())
+            .seed(10)
+            .build()
+            .unwrap();
         bench("coordinator round overhead K=4 (H=0)", 15, 5.0, || {
-            let replies = cluster.dispatch(|_| LocalWork::DualRound { h: 0 }).unwrap();
-            cluster.commit(&replies, 0.25).unwrap();
+            let replies = session.dispatch(|_| LocalWork::DualRound { h: 0 }).unwrap();
+            session.commit(&replies, 0.25).unwrap();
         });
-        cluster.shutdown();
+        // warm-start vs rebuild: what Session::reset saves per sweep point.
+        // reset() is fire-and-forget, so follow it with an H=0 round as a
+        // barrier — the delta vs the round-overhead bench above isolates
+        // the workers' actual reset work.
+        bench("session reset + round barrier (warm-start)", 15, 2.0, || {
+            session.reset().unwrap();
+            let replies = session.dispatch(|_| LocalWork::DualRound { h: 0 }).unwrap();
+            session.commit(&replies, 0.25).unwrap();
+        });
+        session.shutdown();
+        bench("session build + shutdown (cold start)", 15, 5.0, || {
+            let s = Trainer::on(&data)
+                .workers(4)
+                .loss(LossKind::Hinge)
+                .lambda(0.01)
+                .network(NetworkModel::free())
+                .seed(10)
+                .build()
+                .unwrap();
+            s.shutdown();
+        });
     }
 
     println!("\nderived: steps/s for the dense d=54 epoch = H / epoch_time.");

@@ -1,145 +1,564 @@
-//! The Section-6 algorithms, all driven over the same [`Cluster`] runtime
-//! so their communication/computation profiles are directly comparable:
+//! Algorithms as a first-class trait: every Section-6 method implements
+//! [`Algorithm`] — a per-round `local_work()` order plus a `reduce()` that
+//! folds the K replies into the shared state — and runs through the same
+//! [`Session`](crate::Session) driver, so their communication/computation
+//! profiles are directly comparable:
 //!
-//! | name          | local work                   | leader update                                  |
-//! |---------------|------------------------------|------------------------------------------------|
-//! | cocoa         | H SDCA steps, locally applied| `w += (beta_K/K) sum dw` (Algorithm 1)         |
-//! | minibatch_cd  | b=H coord updates, frozen w  | `w += (beta_b/(K H)) sum dw` [TBRS13/Yan13]    |
-//! | minibatch_sgd | H subgradients, frozen w     | Pegasos step over the K·H batch [SSSSC10]      |
-//! | local_sgd     | H Pegasos steps, local w     | `w += (beta/K) sum (w_k - w)`                  |
-//! | naive_cd      | cocoa with H = 1             | communicate every update                       |
-//! | naive_sgd     | local_sgd with H = 1         | communicate every update                       |
-//! | one_shot_avg  | solve block to optimality    | single round, average models [ZDW13]           |
+//! | type            | local work                   | reduce                                         |
+//! |-----------------|------------------------------|------------------------------------------------|
+//! | [`Cocoa`]       | H SDCA steps, locally applied| `w += scale * sum dw` per [`Aggregation`]      |
+//! | [`MinibatchCd`] | b=H coord updates, frozen w  | `w += (beta_b/(K H)) sum dw` [TBRS13/Yan13]    |
+//! | [`MinibatchSgd`]| H subgradients, frozen w     | Pegasos step over the K·H batch [SSSSC10]      |
+//! | [`LocalSgd`]    | H Pegasos steps, local w     | `w += (beta/K) sum (w_k - w)`                  |
+//! | [`NaiveCd`]     | cocoa with H = 1             | communicate every update                       |
+//! | [`NaiveSgd`]    | local_sgd with H = 1         | communicate every update                       |
+//! | [`OneShotAvg`]  | solve block to optimality    | single round, average models [ZDW13]           |
+//!
+//! The aggregation policy of Algorithm 1 is its own type: CoCoA's safe
+//! averaging (`beta_K = 1`) and the CoCoA+ adding regime (`beta_K = K`
+//! with `sigma' = K` scaled subproblems, resolving the conclusion's open
+//! problem) are two values of [`Aggregation`], so CoCoA+ is a constructor
+//! away: [`Cocoa::adding`].
 
-use anyhow::Result;
-
-use crate::config::AlgorithmSpec;
-use crate::coordinator::{Cluster, LocalWork};
+use crate::coordinator::{Cluster, LocalWork, RoundReply};
+use crate::error::{Error, Result};
 use crate::telemetry::{Trace, TraceRow};
 
-/// Stopping criteria for a run (whichever fires first).
-#[derive(Debug, Clone, Copy)]
-pub struct Budget {
-    pub rounds: u64,
-    /// Stop when gap <= target_gap (0 disables).
-    pub target_gap: f64,
-    /// Stop when P - P* <= target_subopt (needs `p_star`; 0 disables).
-    pub target_subopt: f64,
+/// How the leader folds the K local updates into the shared state — the
+/// `beta_K` knob of Algorithm 1, made a policy type.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Aggregation {
+    /// `w += (beta_k / K) * sum_k dw_k` — Algorithm 1. `beta_k = 1` is the
+    /// always-safe choice the paper uses throughout Section 6.
+    Average { beta_k: f64 },
+    /// `w += sum_k dw_k` (`beta_K = K`), safe because the local subproblems
+    /// are solved with `sigma' = K` scaled curvature (the CoCoA+ regime of
+    /// *Adding vs. Averaging* [Ma et al.]).
+    Add,
 }
 
-impl Budget {
-    pub fn rounds(rounds: u64) -> Self {
-        Budget { rounds, target_gap: 0.0, target_subopt: 0.0 }
+impl Default for Aggregation {
+    fn default() -> Self {
+        Aggregation::Average { beta_k: 1.0 }
     }
 }
 
-/// Drive `spec` on the cluster, evaluating every `eval_every` rounds.
-/// `p_star`: reference optimum for the suboptimality axis (NaN-safe).
-pub fn run(
+impl Aggregation {
+    /// The scale the leader applies to `sum_k dw_k` at commit time.
+    pub fn commit_scale(&self, k: usize) -> f64 {
+        match self {
+            Aggregation::Average { beta_k } => beta_k / k as f64,
+            Aggregation::Add => 1.0,
+        }
+    }
+
+    /// Extra curvature scaling the local subproblem must be solved with
+    /// for this aggregation to be safe (`None` = unscaled).
+    pub fn sigma_prime(&self, k: usize) -> Option<f64> {
+        match self {
+            Aggregation::Average { .. } => None,
+            Aggregation::Add => Some(k as f64),
+        }
+    }
+}
+
+/// Per-round context handed to [`Algorithm`] hooks.
+#[derive(Debug, Clone, Copy)]
+pub struct RoundCtx {
+    /// 1-based outer round.
+    pub round: u64,
+    /// Number of workers.
+    pub k: usize,
+    /// Regularization strength of the problem being solved.
+    pub lambda: f64,
+}
+
+/// A distributed optimization method over the CoCoA runtime: per round the
+/// driver dispatches `local_work(ctx, kid)` to every worker, gathers the K
+/// replies, and hands them to `reduce`, which owns the leader-side update
+/// (commit scaling, Pegasos steps, ...). Implement this to plug a new
+/// method into [`Session::run`](crate::Session::run); all Section-6
+/// baselines below are implementations.
+pub trait Algorithm {
+    /// Stable name used in traces, CSV paths, and figure labels.
+    fn name(&self) -> &'static str;
+
+    /// Inner steps per worker per round (0 where it is not meaningful).
+    fn h(&self) -> usize;
+
+    /// The beta knob recorded in traces (aggregation aggressiveness).
+    fn beta(&self) -> f64 {
+        1.0
+    }
+
+    /// Rounds this algorithm will actually run given the budget
+    /// (single-round methods override this to 1).
+    fn total_rounds(&self, budget_rounds: u64) -> u64 {
+        budget_rounds
+    }
+
+    /// The order broadcast to worker `worker` this round.
+    fn local_work(&self, ctx: &RoundCtx, worker: usize) -> LocalWork;
+
+    /// Fold the K replies into leader + worker state.
+    fn reduce(
+        &mut self,
+        cluster: &mut Cluster,
+        replies: &[RoundReply],
+        ctx: &RoundCtx,
+    ) -> Result<()>;
+}
+
+/// Stopping criteria + instrumentation cadence for one run (whichever
+/// criterion fires first stops the run).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Budget {
+    /// Max outer rounds (T in Algorithm 1).
+    pub rounds: u64,
+    /// Stop when the duality gap falls to this (0 disables).
+    pub target_gap: f64,
+    /// Stop when `P - P*` falls to this (needs a reference optimum on the
+    /// session; 0 disables).
+    pub target_subopt: f64,
+    /// Evaluate P/D/gap every this many rounds (instrumentation, not
+    /// counted as algorithm communication).
+    pub eval_every: u64,
+}
+
+impl Default for Budget {
+    fn default() -> Self {
+        Budget { rounds: 100, target_gap: 0.0, target_subopt: 0.0, eval_every: 1 }
+    }
+}
+
+/// Runaway guard for the open-ended `until_*` constructors.
+const UNTIL_ROUNDS_CAP: u64 = 100_000;
+
+impl Budget {
+    /// Run exactly up to `rounds` outer rounds.
+    pub fn rounds(rounds: u64) -> Self {
+        Budget { rounds, ..Budget::default() }
+    }
+
+    /// Run until the duality gap reaches `gap` (capped at 100k rounds as a
+    /// runaway guard; chain [`Budget::max_rounds`] to change the cap).
+    pub fn until_gap(gap: f64) -> Self {
+        Budget { rounds: UNTIL_ROUNDS_CAP, target_gap: gap, ..Budget::default() }
+    }
+
+    /// Run until `P - P*` reaches `subopt` (requires
+    /// [`Session::set_reference_optimum`](crate::Session::set_reference_optimum);
+    /// capped at 100k rounds as a runaway guard).
+    pub fn until_subopt(subopt: f64) -> Self {
+        Budget { rounds: UNTIL_ROUNDS_CAP, target_subopt: subopt, ..Budget::default() }
+    }
+
+    /// Override the round cap.
+    pub fn max_rounds(mut self, rounds: u64) -> Self {
+        self.rounds = rounds;
+        self
+    }
+
+    /// Also stop at this duality gap.
+    pub fn target_gap(mut self, gap: f64) -> Self {
+        self.target_gap = gap;
+        self
+    }
+
+    /// Also stop at this primal suboptimality.
+    pub fn target_subopt(mut self, subopt: f64) -> Self {
+        self.target_subopt = subopt;
+        self
+    }
+
+    /// Evaluate every `n` rounds instead of every round.
+    pub fn eval_every(mut self, n: u64) -> Self {
+        self.eval_every = n.max(1);
+        self
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Algorithm 1 and its aggregation variants
+// ---------------------------------------------------------------------------
+
+/// CoCoA (Algorithm 1): H locally-applied steps of the configured local
+/// dual method per round, reduced under an [`Aggregation`] policy.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Cocoa {
+    h: usize,
+    aggregation: Aggregation,
+}
+
+impl Cocoa {
+    /// Safe averaging (`beta_K = 1`), the paper's default.
+    pub fn new(h: usize) -> Self {
+        Cocoa { h, aggregation: Aggregation::default() }
+    }
+
+    /// Averaging with an explicit `beta_k` scale (Figure 4's knob).
+    pub fn averaging(h: usize, beta_k: f64) -> Self {
+        Cocoa { h, aggregation: Aggregation::Average { beta_k } }
+    }
+
+    /// CoCoA+: `beta_K = K` adding over `sigma' = K` scaled subproblems.
+    pub fn adding(h: usize) -> Self {
+        Cocoa { h, aggregation: Aggregation::Add }
+    }
+
+    /// Override the aggregation policy.
+    pub fn aggregation(mut self, aggregation: Aggregation) -> Self {
+        self.aggregation = aggregation;
+        self
+    }
+}
+
+impl Algorithm for Cocoa {
+    fn name(&self) -> &'static str {
+        match self.aggregation {
+            Aggregation::Average { .. } => "cocoa",
+            Aggregation::Add => "cocoa_plus",
+        }
+    }
+
+    fn h(&self) -> usize {
+        self.h
+    }
+
+    fn beta(&self) -> f64 {
+        match self.aggregation {
+            Aggregation::Average { beta_k } => beta_k,
+            // the adding scale is K, applied via commit_scale; traces
+            // record 1.0 to match the historical cocoa_plus convention
+            Aggregation::Add => 1.0,
+        }
+    }
+
+    fn local_work(&self, ctx: &RoundCtx, _worker: usize) -> LocalWork {
+        match self.aggregation.sigma_prime(ctx.k) {
+            None => LocalWork::DualRound { h: self.h },
+            Some(sigma_prime) => LocalWork::DualRoundScaled { h: self.h, sigma_prime },
+        }
+    }
+
+    fn reduce(
+        &mut self,
+        cluster: &mut Cluster,
+        replies: &[RoundReply],
+        ctx: &RoundCtx,
+    ) -> Result<()> {
+        cluster.commit(replies, self.aggregation.commit_scale(ctx.k))?;
+        Ok(())
+    }
+}
+
+/// H = 1 CoCoA: communicate after every coordinate update.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct NaiveCd;
+
+impl Algorithm for NaiveCd {
+    fn name(&self) -> &'static str {
+        "naive_cd"
+    }
+
+    fn h(&self) -> usize {
+        1
+    }
+
+    fn local_work(&self, _ctx: &RoundCtx, _worker: usize) -> LocalWork {
+        LocalWork::DualRound { h: 1 }
+    }
+
+    fn reduce(
+        &mut self,
+        cluster: &mut Cluster,
+        replies: &[RoundReply],
+        ctx: &RoundCtx,
+    ) -> Result<()> {
+        cluster.commit(replies, 1.0 / ctx.k as f64)?;
+        Ok(())
+    }
+}
+
+/// Mini-batch SDCA [TBRS13/Yan13] ("mini-batch-CD" in the figures): b = H
+/// distinct coordinate updates per worker, all judged against the frozen
+/// round-start `w`, averaged with `beta_b / (K H)`.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct MinibatchCd {
+    h: usize,
+    beta_b: f64,
+}
+
+impl MinibatchCd {
+    pub fn new(h: usize) -> Self {
+        MinibatchCd { h, beta_b: 1.0 }
+    }
+
+    /// The batch-aggregation scale (`beta_b = b` is the aggressive adding
+    /// the paper warns about).
+    pub fn beta_b(mut self, beta_b: f64) -> Self {
+        self.beta_b = beta_b;
+        self
+    }
+}
+
+impl Algorithm for MinibatchCd {
+    fn name(&self) -> &'static str {
+        "minibatch_cd"
+    }
+
+    fn h(&self) -> usize {
+        self.h
+    }
+
+    fn beta(&self) -> f64 {
+        self.beta_b
+    }
+
+    fn local_work(&self, _ctx: &RoundCtx, _worker: usize) -> LocalWork {
+        LocalWork::DualBatchFrozen { b: self.h }
+    }
+
+    fn reduce(
+        &mut self,
+        cluster: &mut Cluster,
+        replies: &[RoundReply],
+        ctx: &RoundCtx,
+    ) -> Result<()> {
+        let b_total = (self.h * ctx.k) as f64;
+        cluster.commit(replies, self.beta_b / b_total)?;
+        Ok(())
+    }
+}
+
+/// Locally-updating Pegasos: H local SGD steps per round on a continued
+/// global `1/(lambda t)` schedule, model deltas averaged.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct LocalSgd {
+    h: usize,
+    beta: f64,
+    /// Global Pegasos step counter, advanced by H per round.
+    t: u64,
+}
+
+impl LocalSgd {
+    pub fn new(h: usize) -> Self {
+        LocalSgd { h, beta: 1.0, t: 0 }
+    }
+
+    pub fn beta(mut self, beta: f64) -> Self {
+        self.beta = beta;
+        self
+    }
+}
+
+impl Algorithm for LocalSgd {
+    fn name(&self) -> &'static str {
+        "local_sgd"
+    }
+
+    fn h(&self) -> usize {
+        self.h
+    }
+
+    fn beta(&self) -> f64 {
+        self.beta
+    }
+
+    fn local_work(&self, _ctx: &RoundCtx, _worker: usize) -> LocalWork {
+        LocalWork::SgdLocal { h: self.h, t_offset: self.t }
+    }
+
+    fn reduce(
+        &mut self,
+        cluster: &mut Cluster,
+        replies: &[RoundReply],
+        ctx: &RoundCtx,
+    ) -> Result<()> {
+        self.t += self.h as u64;
+        let scale = self.beta / ctx.k as f64;
+        let mut w = cluster.w.clone();
+        for r in replies {
+            for (wv, dv) in w.iter_mut().zip(&r.dw) {
+                *wv += scale * dv;
+            }
+        }
+        cluster.set_w(w);
+        Ok(())
+    }
+}
+
+/// Communicate after every SGD step (H = 1 [`LocalSgd`]).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct NaiveSgd {
+    t: u64,
+}
+
+impl NaiveSgd {
+    pub fn new() -> Self {
+        NaiveSgd::default()
+    }
+}
+
+impl Algorithm for NaiveSgd {
+    fn name(&self) -> &'static str {
+        "naive_sgd"
+    }
+
+    fn h(&self) -> usize {
+        1
+    }
+
+    fn local_work(&self, _ctx: &RoundCtx, _worker: usize) -> LocalWork {
+        LocalWork::SgdLocal { h: 1, t_offset: self.t }
+    }
+
+    fn reduce(
+        &mut self,
+        cluster: &mut Cluster,
+        replies: &[RoundReply],
+        ctx: &RoundCtx,
+    ) -> Result<()> {
+        self.t += 1;
+        let scale = 1.0 / ctx.k as f64;
+        let mut w = cluster.w.clone();
+        for r in replies {
+            for (wv, dv) in w.iter_mut().zip(&r.dw) {
+                *wv += scale * dv;
+            }
+        }
+        cluster.set_w(w);
+        Ok(())
+    }
+}
+
+/// Mini-batch Pegasos [SSSSC10]: H subgradients per worker against frozen
+/// `w`, one Pegasos step over the whole K·H batch per round.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct MinibatchSgd {
+    h: usize,
+    beta: f64,
+}
+
+impl MinibatchSgd {
+    pub fn new(h: usize) -> Self {
+        MinibatchSgd { h, beta: 1.0 }
+    }
+
+    pub fn beta(mut self, beta: f64) -> Self {
+        self.beta = beta;
+        self
+    }
+}
+
+impl Algorithm for MinibatchSgd {
+    fn name(&self) -> &'static str {
+        "minibatch_sgd"
+    }
+
+    fn h(&self) -> usize {
+        self.h
+    }
+
+    fn beta(&self) -> f64 {
+        self.beta
+    }
+
+    fn local_work(&self, _ctx: &RoundCtx, _worker: usize) -> LocalWork {
+        LocalWork::SgdFrozen { h: self.h }
+    }
+
+    fn reduce(
+        &mut self,
+        cluster: &mut Cluster,
+        replies: &[RoundReply],
+        ctx: &RoundCtx,
+    ) -> Result<()> {
+        let eta = 1.0 / (ctx.lambda * ctx.round as f64);
+        let batch = (self.h * ctx.k) as f64;
+        let shrink = 1.0 - eta * ctx.lambda;
+        let mut w = cluster.w.clone();
+        for wv in w.iter_mut() {
+            *wv *= shrink;
+        }
+        for r in replies {
+            for (wv, gv) in w.iter_mut().zip(&r.dw) {
+                *wv -= eta * self.beta * gv / batch;
+            }
+        }
+        cluster.set_w(w);
+        Ok(())
+    }
+}
+
+/// One-shot averaging [ZDW13]: a single round where every worker solves
+/// its block to optimality and the leader averages the models.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct OneShotAvg;
+
+impl Algorithm for OneShotAvg {
+    fn name(&self) -> &'static str {
+        "one_shot_avg"
+    }
+
+    fn h(&self) -> usize {
+        0
+    }
+
+    fn total_rounds(&self, _budget_rounds: u64) -> u64 {
+        1
+    }
+
+    fn local_work(&self, _ctx: &RoundCtx, _worker: usize) -> LocalWork {
+        LocalWork::ExactSolve
+    }
+
+    fn reduce(
+        &mut self,
+        cluster: &mut Cluster,
+        replies: &[RoundReply],
+        ctx: &RoundCtx,
+    ) -> Result<()> {
+        cluster.commit(replies, 1.0 / ctx.k as f64)?;
+        Ok(())
+    }
+}
+
+// ---------------------------------------------------------------------------
+// The round driver (used by Session::run)
+// ---------------------------------------------------------------------------
+
+/// Drive `algorithm` on `cluster` until the budget stops it, evaluating on
+/// the budget's cadence. `p_star` feeds the suboptimality axis.
+pub(crate) fn drive(
     cluster: &mut Cluster,
-    spec: &AlgorithmSpec,
+    algorithm: &mut dyn Algorithm,
     budget: Budget,
-    eval_every: u64,
     p_star: Option<f64>,
-    dataset_name: &str,
+    dataset_label: &str,
 ) -> Result<Trace> {
+    if budget.target_subopt > 0.0 && p_star.is_none() {
+        // without P* the subopt column is NaN and the criterion can never
+        // fire — fail fast instead of spinning to the round cap
+        return Err(Error::MissingReferenceOptimum);
+    }
     let mut trace = Trace::new(
-        spec.name(),
-        dataset_name,
+        algorithm.name(),
+        dataset_label,
         cluster.k,
-        spec.h(),
-        spec.beta(),
+        algorithm.h(),
+        algorithm.beta(),
         cluster.lambda(),
     );
     // round 0 snapshot
     record(cluster, &mut trace, 0, p_star)?;
 
-    let k = cluster.k as f64;
-    let lambda = cluster.lambda();
-    let mut sgd_t: u64 = 0; // global Pegasos step counter
-
-    let total_rounds = match spec {
-        AlgorithmSpec::OneShotAvg => 1,
-        _ => budget.rounds,
-    };
-
+    let total_rounds = algorithm.total_rounds(budget.rounds);
+    let eval_every = budget.eval_every.max(1);
     for round in 1..=total_rounds {
-        match spec {
-            AlgorithmSpec::Cocoa { h, beta_k, .. } => {
-                let h = *h;
-                let replies = cluster.dispatch(|_| LocalWork::DualRound { h })?;
-                cluster.commit(&replies, beta_k / k)?;
-            }
-            AlgorithmSpec::CocoaPlus { h } => {
-                let (h, k_usize) = (*h, cluster.k);
-                let sigma_prime = k_usize as f64;
-                let replies = cluster
-                    .dispatch(|_| LocalWork::DualRoundScaled { h, sigma_prime })?;
-                // beta_K = K adding: scale 1.0 (safe because the local
-                // subproblems were solved with sigma' = K curvature)
-                cluster.commit(&replies, 1.0)?;
-            }
-            AlgorithmSpec::NaiveCd => {
-                let replies = cluster.dispatch(|_| LocalWork::DualRound { h: 1 })?;
-                cluster.commit(&replies, 1.0 / k)?;
-            }
-            AlgorithmSpec::MinibatchCd { h, beta_b } => {
-                let b_per_worker = *h;
-                let replies =
-                    cluster.dispatch(|_| LocalWork::DualBatchFrozen { b: b_per_worker })?;
-                let b_total = (b_per_worker as f64) * k;
-                cluster.commit(&replies, beta_b / b_total)?;
-            }
-            AlgorithmSpec::LocalSgd { h, beta } => {
-                let (h, beta) = (*h, *beta);
-                let t0 = sgd_t;
-                let replies = cluster.dispatch(|_| LocalWork::SgdLocal { h, t_offset: t0 })?;
-                sgd_t += h as u64;
-                let mut w = cluster.w.clone();
-                for r in &replies {
-                    for (wv, dv) in w.iter_mut().zip(&r.dw) {
-                        *wv += beta * dv / k;
-                    }
-                }
-                cluster.set_w(w);
-            }
-            AlgorithmSpec::NaiveSgd => {
-                let t0 = sgd_t;
-                let replies =
-                    cluster.dispatch(|_| LocalWork::SgdLocal { h: 1, t_offset: t0 })?;
-                sgd_t += 1;
-                let mut w = cluster.w.clone();
-                for r in &replies {
-                    for (wv, dv) in w.iter_mut().zip(&r.dw) {
-                        *wv += dv / k;
-                    }
-                }
-                cluster.set_w(w);
-            }
-            AlgorithmSpec::MinibatchSgd { h, beta } => {
-                let (h, beta) = (*h, *beta);
-                let replies = cluster.dispatch(|_| LocalWork::SgdFrozen { h })?;
-                // one Pegasos step over the K*H mini-batch
-                let t = round;
-                let eta = 1.0 / (lambda * t as f64);
-                let batch = (h as f64) * k;
-                let mut w = cluster.w.clone();
-                let shrink = 1.0 - eta * lambda;
-                for wv in w.iter_mut() {
-                    *wv *= shrink;
-                }
-                for r in &replies {
-                    for (wv, gv) in w.iter_mut().zip(&r.dw) {
-                        *wv -= eta * beta * gv / batch;
-                    }
-                }
-                cluster.set_w(w);
-            }
-            AlgorithmSpec::OneShotAvg => {
-                let replies = cluster.dispatch(|_| LocalWork::ExactSolve)?;
-                cluster.commit(&replies, 1.0 / k)?;
-            }
-        }
+        let ctx = RoundCtx { round, k: cluster.k, lambda: cluster.lambda() };
+        let replies = cluster.dispatch(|kid| algorithm.local_work(&ctx, kid))?;
+        algorithm.reduce(cluster, &replies, &ctx)?;
 
         if round % eval_every == 0 || round == total_rounds {
             let row = record(cluster, &mut trace, round, p_star)?;
@@ -160,7 +579,7 @@ fn record(
     trace: &mut Trace,
     round: u64,
     p_star: Option<f64>,
-) -> Result<TraceRow> {
+) -> Result<TraceRow, Error> {
     let ev = cluster.evaluate()?;
     let row = TraceRow {
         round,
@@ -181,62 +600,54 @@ fn record(
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::config::{AlgorithmSpec, Backend};
-    use crate::data::{cov_like, Partition, PartitionStrategy};
+    use crate::api::{Session, Trainer};
+    use crate::data::cov_like;
     use crate::loss::LossKind;
     use crate::netsim::NetworkModel;
-    use crate::solvers::SolverKind;
 
-    fn cluster(k: usize, seed: u64) -> Cluster {
+    fn session(k: usize, seed: u64) -> Session {
         let data = cov_like(80, 6, 0.1, seed);
-        let part = Partition::new(PartitionStrategy::Contiguous, 80, k, 0);
-        Cluster::build(
-            &data,
-            &part,
-            LossKind::Hinge,
-            0.05,
-            SolverKind::Sdca,
-            Backend::Native,
-            "artifacts",
-            NetworkModel::free(),
-            seed,
-        )
-        .unwrap()
+        Trainer::on(&data)
+            .workers(k)
+            .loss(LossKind::Hinge)
+            .lambda(0.05)
+            .network(NetworkModel::free())
+            .seed(seed)
+            .label("test")
+            .build()
+            .unwrap()
     }
 
     #[test]
     fn every_algorithm_runs_and_descends() {
-        let specs = vec![
-            AlgorithmSpec::Cocoa { h: 40, beta_k: 1.0, solver: SolverKind::Sdca },
-            AlgorithmSpec::MinibatchCd { h: 10, beta_b: 10.0 },
-            AlgorithmSpec::MinibatchSgd { h: 20, beta: 1.0 },
-            AlgorithmSpec::LocalSgd { h: 20, beta: 1.0 },
-            AlgorithmSpec::NaiveCd,
-            AlgorithmSpec::NaiveSgd,
-            AlgorithmSpec::OneShotAvg,
+        let algos: Vec<Box<dyn Algorithm>> = vec![
+            Box::new(Cocoa::new(40)),
+            Box::new(MinibatchCd::new(10).beta_b(10.0)),
+            Box::new(MinibatchSgd::new(20)),
+            Box::new(LocalSgd::new(20)),
+            Box::new(NaiveCd),
+            Box::new(NaiveSgd::new()),
+            Box::new(OneShotAvg),
         ];
-        for spec in specs {
-            let mut cl = cluster(2, 3);
+        for mut algo in algos {
+            let mut sess = session(2, 3);
             // naive variants process one point per round; give them
             // proportionally more rounds to show progress
-            let rounds = if spec.name().starts_with("naive") { 400 } else { 12 };
-            let trace = run(&mut cl, &spec, Budget::rounds(rounds), 4, None, "test").unwrap();
+            let rounds = if algo.name().starts_with("naive") { 400 } else { 12 };
+            let trace = sess
+                .run(algo.as_mut(), Budget::rounds(rounds).eval_every(4))
+                .unwrap();
             let p0 = trace.rows.first().unwrap().primal;
             let p_end = trace.best_primal();
-            assert!(
-                p_end < p0,
-                "{} failed to descend: {p0} -> {p_end}",
-                spec.name()
-            );
-            cl.shutdown();
+            assert!(p_end < p0, "{} failed to descend: {p0} -> {p_end}", algo.name());
+            sess.shutdown();
         }
     }
 
     #[test]
     fn cocoa_gap_shrinks_geometrically_ish() {
-        let mut cl = cluster(4, 5);
-        let spec = AlgorithmSpec::Cocoa { h: 100, beta_k: 1.0, solver: SolverKind::Sdca };
-        let trace = run(&mut cl, &spec, Budget::rounds(20), 1, None, "test").unwrap();
+        let mut sess = session(4, 5);
+        let trace = sess.run(&mut Cocoa::new(100), Budget::rounds(20)).unwrap();
         let g0 = trace.rows[1].gap;
         let g_end = trace.rows.last().unwrap().gap;
         assert!(g_end < g0 * 0.2, "gap barely moved: {g0} -> {g_end}");
@@ -244,28 +655,26 @@ mod tests {
         for pair in trace.rows.windows(2) {
             assert!(pair[1].dual >= pair[0].dual - 1e-9);
         }
-        cl.shutdown();
+        sess.shutdown();
     }
 
     #[test]
     fn target_gap_stops_early() {
-        let mut cl = cluster(2, 7);
-        let spec = AlgorithmSpec::Cocoa { h: 200, beta_k: 1.0, solver: SolverKind::Sdca };
-        let budget = Budget { rounds: 500, target_gap: 0.05, target_subopt: 0.0 };
-        let trace = run(&mut cl, &spec, budget, 1, None, "test").unwrap();
+        let mut sess = session(2, 7);
+        let budget = Budget::until_gap(0.05).max_rounds(500);
+        let trace = sess.run(&mut Cocoa::new(200), budget).unwrap();
         assert!(trace.rows.last().unwrap().gap <= 0.05);
         assert!((trace.rows.len() as u64) < 500);
-        cl.shutdown();
+        sess.shutdown();
     }
 
     #[test]
     fn one_shot_is_single_round() {
-        let mut cl = cluster(2, 9);
-        let trace =
-            run(&mut cl, &AlgorithmSpec::OneShotAvg, Budget::rounds(50), 1, None, "test").unwrap();
+        let mut sess = session(2, 9);
+        let trace = sess.run(&mut OneShotAvg, Budget::rounds(50)).unwrap();
         assert_eq!(trace.rows.last().unwrap().round, 1);
-        assert_eq!(cl.stats.rounds, 1);
-        cl.shutdown();
+        assert_eq!(sess.stats().rounds, 1);
+        sess.shutdown();
     }
 
     #[test]
@@ -274,16 +683,42 @@ mod tests {
         // updates per round, but CoCoA's locally-applied updates make more
         // progress per communication round.
         let h = 40;
-        let mut cl_a = cluster(4, 11);
-        let cocoa = AlgorithmSpec::Cocoa { h, beta_k: 1.0, solver: SolverKind::Sdca };
-        let tr_a = run(&mut cl_a, &cocoa, Budget::rounds(15), 15, None, "t").unwrap();
-        let mut cl_b = cluster(4, 11);
-        let mb = AlgorithmSpec::MinibatchCd { h, beta_b: 1.0 };
-        let tr_b = run(&mut cl_b, &mb, Budget::rounds(15), 15, None, "t").unwrap();
+        let mut sess_a = session(4, 11);
+        let tr_a = sess_a
+            .run(&mut Cocoa::new(h), Budget::rounds(15).eval_every(15))
+            .unwrap();
+        let mut sess_b = session(4, 11);
+        let tr_b = sess_b
+            .run(&mut MinibatchCd::new(h), Budget::rounds(15).eval_every(15))
+            .unwrap();
         let ga = tr_a.rows.last().unwrap().gap;
         let gb = tr_b.rows.last().unwrap().gap;
         assert!(ga < gb, "cocoa gap {ga} not better than minibatch {gb}");
-        cl_a.shutdown();
-        cl_b.shutdown();
+        sess_a.shutdown();
+        sess_b.shutdown();
+    }
+
+    #[test]
+    fn aggregation_scales() {
+        let avg = Aggregation::Average { beta_k: 1.0 };
+        assert_eq!(avg.commit_scale(4), 0.25);
+        assert_eq!(avg.sigma_prime(4), None);
+        let add = Aggregation::Add;
+        assert_eq!(add.commit_scale(4), 1.0);
+        assert_eq!(add.sigma_prime(4), Some(4.0));
+    }
+
+    #[test]
+    fn budget_constructors() {
+        let b = Budget::default();
+        assert_eq!(b.eval_every, 1);
+        assert_eq!(b.target_gap, 0.0);
+        let g = Budget::until_gap(1e-3);
+        assert_eq!(g.target_gap, 1e-3);
+        assert!(g.rounds >= 100_000);
+        let s = Budget::until_subopt(1e-3).max_rounds(77).eval_every(0);
+        assert_eq!(s.target_subopt, 1e-3);
+        assert_eq!(s.rounds, 77);
+        assert_eq!(s.eval_every, 1); // clamped
     }
 }

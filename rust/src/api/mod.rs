@@ -1,0 +1,410 @@
+//! The public entry point: a typed [`Trainer`] builder that validates the
+//! whole problem description at `build()` time, and the [`Session`] facade
+//! it yields — a reusable handle over the spawned leader/worker cluster.
+//!
+//! ```no_run
+//! use cocoa::prelude::*;
+//! use cocoa::data::cov_like;
+//!
+//! # fn main() -> cocoa::Result<()> {
+//! let data = cov_like(8_000, 54, 0.1, 42);
+//! let mut session = Trainer::on(&data)
+//!     .workers(4)
+//!     .loss(LossKind::Hinge)
+//!     .lambda(1.0 / data.n() as f64)
+//!     .network(NetworkModel::ec2_like())
+//!     .seed(7)
+//!     .build()?;
+//! let trace = session.run(&mut Cocoa::new(2_000), Budget::rounds(10))?;
+//! println!("final gap: {:.2e}", trace.rows.last().unwrap().gap);
+//! # Ok(())
+//! # }
+//! ```
+
+use std::path::Path;
+
+use crate::algorithms::{self, Algorithm, Budget};
+use crate::config::Backend;
+use crate::coordinator::{
+    Checkpoint, Cluster, ClusterSpec, CommStats, Evaluation, LocalWork, RoundReply,
+};
+use crate::data::{Dataset, Partition, PartitionStrategy};
+use crate::error::{Error, Result};
+use crate::loss::LossKind;
+use crate::netsim::{NetworkModel, StragglerModel};
+use crate::solvers::SolverKind;
+use crate::telemetry::Trace;
+
+/// How the trainer partitions the data over workers.
+#[derive(Debug, Clone)]
+enum PartitionChoice {
+    /// K equal blocks under a strategy (the common case).
+    Workers { k: usize, strategy: PartitionStrategy, seed: u64 },
+    /// A caller-supplied partition (full control).
+    Explicit(Partition),
+}
+
+/// Typed builder for a distributed training [`Session`].
+///
+/// Required: the dataset ([`Trainer::on`]), a partition
+/// ([`Trainer::workers`] or [`Trainer::partition`]), and
+/// [`Trainer::lambda`]. Everything else has the paper's defaults: hinge
+/// loss, LocalSDCA, native backend, free network, seed 0. All validation
+/// happens in [`Trainer::build`], which returns a typed [`Error`] instead
+/// of panicking or stringly failing.
+#[derive(Debug, Clone)]
+pub struct Trainer<'a> {
+    data: &'a Dataset,
+    partition: Option<PartitionChoice>,
+    loss: LossKind,
+    lambda: Option<f64>,
+    solver: SolverKind,
+    backend: Backend,
+    artifacts_dir: String,
+    net: NetworkModel,
+    stragglers: StragglerModel,
+    seed: u64,
+    label: String,
+}
+
+impl<'a> Trainer<'a> {
+    /// Start describing a training run over `data`.
+    pub fn on(data: &'a Dataset) -> Self {
+        Trainer {
+            data,
+            partition: None,
+            loss: LossKind::Hinge,
+            lambda: None,
+            solver: SolverKind::default(),
+            backend: Backend::default(),
+            artifacts_dir: "artifacts".into(),
+            net: NetworkModel::free(),
+            stragglers: StragglerModel::none(),
+            seed: 0,
+            label: "dataset".into(),
+        }
+    }
+
+    /// Partition into `k` contiguous equal blocks (override the strategy
+    /// with [`Trainer::partition_strategy`]).
+    pub fn workers(mut self, k: usize) -> Self {
+        let (strategy, seed) = match self.partition {
+            Some(PartitionChoice::Workers { strategy, seed, .. }) => (strategy, seed),
+            _ => (PartitionStrategy::Contiguous, 0),
+        };
+        self.partition = Some(PartitionChoice::Workers { k, strategy, seed });
+        self
+    }
+
+    /// Choose how rows are assigned to the `k` blocks of
+    /// [`Trainer::workers`] (contiguous / round-robin / random).
+    pub fn partition_strategy(mut self, strategy: PartitionStrategy) -> Self {
+        self.partition = Some(match self.partition {
+            Some(PartitionChoice::Workers { k, seed, .. }) => {
+                PartitionChoice::Workers { k, strategy, seed }
+            }
+            // strategy before workers: remember it with a placeholder K
+            // that build() rejects if workers() never follows
+            _ => PartitionChoice::Workers { k: 0, strategy, seed: 0 },
+        });
+        self
+    }
+
+    /// Seed for the `Random` partition strategy. Like
+    /// [`Trainer::partition_strategy`], order-insensitive with respect to
+    /// [`Trainer::workers`].
+    pub fn partition_seed(mut self, seed: u64) -> Self {
+        self.partition = Some(match self.partition {
+            Some(PartitionChoice::Workers { k, strategy, .. }) => {
+                PartitionChoice::Workers { k, strategy, seed }
+            }
+            // seed before workers: placeholder K that build() rejects if
+            // workers() never follows
+            _ => PartitionChoice::Workers { k: 0, strategy: PartitionStrategy::Contiguous, seed },
+        });
+        self
+    }
+
+    /// Use an explicit, caller-built [`Partition`] (validated at build).
+    pub fn partition(mut self, partition: Partition) -> Self {
+        self.partition = Some(PartitionChoice::Explicit(partition));
+        self
+    }
+
+    /// The loss of problem (1). Default: hinge (SVM).
+    pub fn loss(mut self, loss: LossKind) -> Self {
+        self.loss = loss;
+        self
+    }
+
+    /// Regularization strength (required — the paper tunes it per dataset).
+    pub fn lambda(mut self, lambda: f64) -> Self {
+        self.lambda = Some(lambda);
+        self
+    }
+
+    /// The local dual method workers run (Procedure A). Default: LocalSDCA.
+    pub fn solver(mut self, solver: SolverKind) -> Self {
+        self.solver = solver;
+        self
+    }
+
+    /// Execution backend for the inner loop. Default: native rust.
+    pub fn backend(mut self, backend: Backend) -> Self {
+        self.backend = backend;
+        self
+    }
+
+    /// Where AOT HLO artifacts live (only read for [`Backend::Pjrt`]).
+    pub fn artifacts_dir(mut self, dir: impl Into<String>) -> Self {
+        self.artifacts_dir = dir.into();
+        self
+    }
+
+    /// Network cost model for the simulated-time axis. Default: free
+    /// (communication costs nothing unless you model it).
+    pub fn network(mut self, net: NetworkModel) -> Self {
+        self.net = net;
+        self
+    }
+
+    /// Straggler injection for the simulated-time axis.
+    pub fn stragglers(mut self, stragglers: StragglerModel) -> Self {
+        self.stragglers = stragglers;
+        self
+    }
+
+    /// Master seed; each worker derives a distinct deterministic stream.
+    pub fn seed(mut self, seed: u64) -> Self {
+        self.seed = seed;
+        self
+    }
+
+    /// Dataset label recorded in traces and CSV paths.
+    pub fn label(mut self, label: impl Into<String>) -> Self {
+        self.label = label.into();
+        self
+    }
+
+    /// Validate the description and spawn the worker cluster.
+    pub fn build(self) -> Result<Session> {
+        let n = self.data.n();
+
+        let lambda = self.lambda.ok_or(Error::MissingLambda)?;
+        if !lambda.is_finite() || lambda <= 0.0 {
+            return Err(Error::InvalidLambda { value: lambda });
+        }
+
+        let partition = match self.partition {
+            None => return Err(Error::MissingPartition),
+            Some(PartitionChoice::Workers { k, strategy, seed }) => {
+                if k == 0 || k > n {
+                    return Err(Error::TooManyWorkers { k, n });
+                }
+                Partition::new(strategy, n, k, seed)
+            }
+            Some(PartitionChoice::Explicit(p)) => {
+                if p.n() != n {
+                    return Err(Error::PartitionMismatch { data_n: n, partition_n: p.n() });
+                }
+                if p.k() > n {
+                    return Err(Error::TooManyWorkers { k: p.k(), n });
+                }
+                p
+            }
+        };
+        partition
+            .validate()
+            .map_err(|reason| Error::InvalidPartition { reason })?;
+
+        if self.backend == Backend::Pjrt
+            && !Path::new(&self.artifacts_dir).join("manifest.tsv").exists()
+        {
+            return Err(Error::MissingArtifacts { dir: self.artifacts_dir });
+        }
+
+        let cluster = Cluster::spawn(ClusterSpec {
+            data: self.data,
+            partition: &partition,
+            loss: self.loss,
+            lambda,
+            solver: self.solver,
+            backend: self.backend,
+            artifacts_dir: &self.artifacts_dir,
+            net: self.net,
+            stragglers: self.stragglers,
+            seed: self.seed,
+        })?;
+        Ok(Session { cluster, label: self.label, p_star: None })
+    }
+}
+
+/// A live distributed training session: the leader plus K spawned worker
+/// threads, reusable across runs ([`Session::reset`] warm-starts the next
+/// run on the same threads instead of re-partitioning and re-spawning).
+pub struct Session {
+    cluster: Cluster,
+    label: String,
+    p_star: Option<f64>,
+}
+
+impl Session {
+    /// Drive `algorithm` until `budget` stops it. The trace records one
+    /// row per evaluation on the budget's cadence.
+    pub fn run(&mut self, algorithm: &mut dyn Algorithm, budget: Budget) -> Result<Trace> {
+        algorithms::drive(&mut self.cluster, algorithm, budget, self.p_star, &self.label)
+    }
+
+    /// Warm-start: zero the optimization state (w, dual blocks, rng
+    /// streams, stats) while keeping the worker threads, their data
+    /// blocks, and any PJRT bindings alive. After `reset()` a run is
+    /// bit-identical to one on a freshly built session with the same
+    /// seed — minus the partition/spawn/registration cost.
+    pub fn reset(&mut self) -> Result<()> {
+        self.cluster.reset()?;
+        Ok(())
+    }
+
+    /// Reference optimum `P*` for the suboptimality axis of subsequent
+    /// runs (`None` clears it; rows record NaN without one).
+    pub fn set_reference_optimum(&mut self, p_star: Option<f64>) {
+        self.p_star = p_star;
+    }
+
+    /// Straggler injection for the simulated-time axis.
+    pub fn set_stragglers(&mut self, stragglers: StragglerModel) {
+        self.cluster.stragglers = stragglers;
+    }
+
+    /// Distributed evaluation of P(w), D(alpha), duality gap.
+    pub fn evaluate(&mut self) -> Result<Evaluation> {
+        Ok(self.cluster.evaluate()?)
+    }
+
+    /// Capture the full optimization state (round boundary only).
+    pub fn checkpoint(&mut self) -> Result<Checkpoint> {
+        Ok(self.cluster.checkpoint()?)
+    }
+
+    /// Restore a previously captured state (shapes validated).
+    pub fn restore(&mut self, cp: &Checkpoint) -> Result<()> {
+        Ok(self.cluster.restore(cp)?)
+    }
+
+    /// The shared primal model.
+    pub fn w(&self) -> &[f64] {
+        &self.cluster.w
+    }
+
+    /// Communication/time accounting so far.
+    pub fn stats(&self) -> &CommStats {
+        &self.cluster.stats
+    }
+
+    pub fn k(&self) -> usize {
+        self.cluster.k
+    }
+
+    pub fn n(&self) -> usize {
+        self.cluster.n
+    }
+
+    pub fn d(&self) -> usize {
+        self.cluster.d
+    }
+
+    pub fn lambda(&self) -> f64 {
+        self.cluster.lambda()
+    }
+
+    pub fn loss(&self) -> LossKind {
+        self.cluster.loss()
+    }
+
+    /// Largest block size (`~n` in Proposition 1).
+    pub fn n_max(&self) -> usize {
+        self.cluster.n_max()
+    }
+
+    /// Low-level escape hatch: dispatch one round of hand-chosen
+    /// [`LocalWork`] (instrumentation, custom drivers, tests). Prefer
+    /// [`Session::run`] with an [`Algorithm`].
+    pub fn dispatch(&mut self, work_for: impl Fn(usize) -> LocalWork) -> Result<Vec<RoundReply>> {
+        Ok(self.cluster.dispatch(work_for)?)
+    }
+
+    /// Low-level escape hatch: fold replies in with an explicit scale.
+    pub fn commit(&mut self, replies: &[RoundReply], scale: f64) -> Result<()> {
+        Ok(self.cluster.commit(replies, scale)?)
+    }
+
+    /// Replace `w` outright (SGD-style leader updates).
+    pub fn set_w(&mut self, w: Vec<f64>) {
+        self.cluster.set_w(w);
+    }
+
+    /// Join all worker threads. Dropping the session does the same.
+    pub fn shutdown(self) {
+        self.cluster.shutdown();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::algorithms::Cocoa;
+    use crate::data::cov_like;
+
+    #[test]
+    fn builder_defaults_and_overrides() {
+        let data = cov_like(60, 5, 0.1, 1);
+        let mut sess = Trainer::on(&data)
+            .workers(3)
+            .lambda(0.1)
+            .label("t")
+            .build()
+            .unwrap();
+        assert_eq!(sess.k(), 3);
+        assert_eq!(sess.n(), 60);
+        assert_eq!(sess.d(), 5);
+        assert_eq!(sess.lambda(), 0.1);
+        let tr = sess.run(&mut Cocoa::new(20), Budget::rounds(3)).unwrap();
+        assert_eq!(tr.dataset, "t");
+        assert_eq!(tr.rows.len(), 4); // round 0 + 3
+        sess.shutdown();
+    }
+
+    #[test]
+    fn partition_strategy_order_is_flexible() {
+        let data = cov_like(30, 4, 0.1, 2);
+        // strategy first, workers after — must still build
+        let sess = Trainer::on(&data)
+            .partition_strategy(PartitionStrategy::RoundRobin)
+            .workers(2)
+            .lambda(0.1)
+            .build()
+            .unwrap();
+        assert_eq!(sess.k(), 2);
+        sess.shutdown();
+        // strategy alone never gets a K: typed error, no panic
+        let err = Trainer::on(&data)
+            .partition_strategy(PartitionStrategy::RoundRobin)
+            .lambda(0.1)
+            .build()
+            .unwrap_err();
+        assert!(matches!(err, Error::TooManyWorkers { k: 0, .. }), "{err}");
+    }
+
+    #[test]
+    fn reference_optimum_feeds_subopt_axis() {
+        let data = cov_like(50, 4, 0.1, 3);
+        let mut sess = Trainer::on(&data).workers(2).lambda(0.1).build().unwrap();
+        let tr = sess.run(&mut Cocoa::new(10), Budget::rounds(2)).unwrap();
+        assert!(tr.rows.last().unwrap().primal_subopt.is_nan());
+        sess.set_reference_optimum(Some(0.0));
+        sess.reset().unwrap();
+        let tr = sess.run(&mut Cocoa::new(10), Budget::rounds(2)).unwrap();
+        assert!(tr.rows.last().unwrap().primal_subopt.is_finite());
+        sess.shutdown();
+    }
+}

@@ -2,14 +2,18 @@
 //! CLI launcher consumes (`cocoa train --config exp.toml`).
 //!
 //! Parsed with the in-tree [`crate::util::toml_lite`] subset parser
-//! (offline build: no serde/toml crates). See `examples/configs/` for
-//! ready-to-run files.
+//! (offline build: no serde/toml crates). A parsed [`ExperimentConfig`]
+//! converts to the typed API with [`ExperimentConfig::trainer`],
+//! [`AlgorithmSpec::instantiate`], and [`RunSpec::budget`].
 
 use std::path::Path;
 
 use anyhow::{anyhow, bail, Context, Result};
 
+use crate::algorithms::{self, Aggregation, Algorithm, Budget};
+use crate::api::Trainer;
 use crate::data::{self, Dataset, Partition, PartitionStrategy};
+use crate::error::Error;
 use crate::loss::LossKind;
 use crate::netsim::NetworkModel;
 use crate::solvers::SolverKind;
@@ -188,6 +192,39 @@ impl AlgorithmSpec {
         }
     }
 
+    /// The local solver this spec asks for (only CoCoA carries one; every
+    /// other method's local work is fixed by its definition).
+    pub fn solver_kind(&self) -> SolverKind {
+        match self {
+            AlgorithmSpec::Cocoa { solver, .. } => *solver,
+            _ => SolverKind::Sdca,
+        }
+    }
+
+    /// Construct the runnable [`Algorithm`] this declarative spec names.
+    /// Equivalence (same `name()`, `h()`, `beta()`) is guarded by a
+    /// property test over every spec the parser accepts.
+    pub fn instantiate(&self) -> Box<dyn Algorithm> {
+        match self {
+            AlgorithmSpec::Cocoa { h, beta_k, .. } => Box::new(
+                algorithms::Cocoa::new(*h).aggregation(Aggregation::Average { beta_k: *beta_k }),
+            ),
+            AlgorithmSpec::CocoaPlus { h } => Box::new(algorithms::Cocoa::adding(*h)),
+            AlgorithmSpec::MinibatchCd { h, beta_b } => {
+                Box::new(algorithms::MinibatchCd::new(*h).beta_b(*beta_b))
+            }
+            AlgorithmSpec::MinibatchSgd { h, beta } => {
+                Box::new(algorithms::MinibatchSgd::new(*h).beta(*beta))
+            }
+            AlgorithmSpec::LocalSgd { h, beta } => {
+                Box::new(algorithms::LocalSgd::new(*h).beta(*beta))
+            }
+            AlgorithmSpec::NaiveCd => Box::new(algorithms::NaiveCd),
+            AlgorithmSpec::NaiveSgd => Box::new(algorithms::NaiveSgd::new()),
+            AlgorithmSpec::OneShotAvg => Box::new(algorithms::OneShotAvg),
+        }
+    }
+
     fn from_doc(doc: &Doc) -> Result<Self> {
         let name = doc.str_of("algorithm", "name")?;
         let h = || doc.usize_of("algorithm", "h");
@@ -263,6 +300,14 @@ pub struct RunSpec {
 }
 
 impl RunSpec {
+    /// The typed [`Budget`] this run section describes.
+    pub fn budget(&self) -> Budget {
+        Budget::rounds(self.rounds)
+            .target_gap(self.target_gap)
+            .target_subopt(self.target_subopt)
+            .eval_every(self.eval_every)
+    }
+
     fn from_doc(doc: &Doc) -> Result<Self> {
         let backend_name = doc.str_or("run", "backend", "native");
         Ok(RunSpec {
@@ -292,14 +337,46 @@ pub struct ExperimentConfig {
 }
 
 impl ExperimentConfig {
-    pub fn from_toml_file<P: AsRef<Path>>(path: P) -> Result<Self> {
-        let text = std::fs::read_to_string(&path)
-            .with_context(|| format!("read {}", path.as_ref().display()))?;
-        Self::from_toml(&text)
-            .with_context(|| format!("in config {}", path.as_ref().display()))
+    pub fn from_toml_file<P: AsRef<Path>>(path: P) -> Result<Self, Error> {
+        let parse = || -> Result<Self> {
+            let text = std::fs::read_to_string(&path)
+                .with_context(|| format!("read {}", path.as_ref().display()))?;
+            Self::parse_toml(&text)
+                .with_context(|| format!("in config {}", path.as_ref().display()))
+        };
+        parse().map_err(|e| Error::Config { message: format!("{e:#}") })
     }
 
-    pub fn from_toml(text: &str) -> Result<Self> {
+    pub fn from_toml(text: &str) -> Result<Self, Error> {
+        Self::parse_toml(text).map_err(|e| Error::Config { message: format!("{e:#}") })
+    }
+
+    /// A [`Trainer`] pre-filled from this config (the dataset is loaded
+    /// separately so the caller controls its lifetime):
+    ///
+    /// ```no_run
+    /// # fn main() -> cocoa::Result<()> {
+    /// let cfg = cocoa::ExperimentConfig::from_toml_file("exp.toml")?;
+    /// let data = cfg.dataset.load()?;
+    /// let mut session = cfg.trainer(&data).build()?;
+    /// let trace = session.run(cfg.algorithm.instantiate().as_mut(), cfg.run.budget())?;
+    /// # Ok(())
+    /// # }
+    /// ```
+    pub fn trainer<'a>(&self, data: &'a Dataset) -> Trainer<'a> {
+        Trainer::on(data)
+            .partition(self.partition.build(data.n()))
+            .loss(self.loss)
+            .lambda(self.lambda)
+            .solver(self.algorithm.solver_kind())
+            .backend(self.run.backend)
+            .artifacts_dir(self.artifacts_dir.as_str())
+            .network(self.netsim)
+            .seed(self.run.seed)
+            .label(self.dataset.name())
+    }
+
+    fn parse_toml(text: &str) -> Result<Self> {
         let doc = Doc::parse(text)?;
         let loss_name = doc.str_or("loss", "kind", "hinge");
         let gamma = doc.f64_or("loss", "gamma", 1.0);
@@ -452,6 +529,21 @@ bandwidth_bps = 1e9
         assert!(ExperimentConfig::from_toml(&bad_alg).is_err());
         let no_lambda = SAMPLE.replace("lambda = 1e-4", "");
         assert!(ExperimentConfig::from_toml(&no_lambda).is_err());
+    }
+
+    #[test]
+    fn toml_to_trainer_builds_a_running_session() {
+        let cfg = ExperimentConfig::from_toml(SAMPLE).unwrap();
+        let data = crate::data::cov_like(100, 6, 0.1, 1);
+        let mut session = cfg.trainer(&data).build().unwrap();
+        let mut algo = cfg.algorithm.instantiate();
+        assert_eq!(algo.name(), cfg.algorithm.name());
+        assert_eq!(algo.h(), cfg.algorithm.h());
+        assert_eq!(algo.beta(), cfg.algorithm.beta());
+        let tr = session.run(algo.as_mut(), Budget::rounds(2)).unwrap();
+        assert_eq!(tr.algorithm, "cocoa");
+        assert_eq!(tr.rows.last().unwrap().round, 2);
+        session.shutdown();
     }
 
     #[test]

@@ -64,6 +64,12 @@ pub enum ToWorker {
     GetState,
     /// Restore: replace committed state wholesale.
     SetState(super::checkpoint::WorkerState),
+    /// Warm-start: zero the dual block, drop any pending update, and
+    /// reseed the rng to its spawn-time stream — the worker becomes
+    /// indistinguishable from a freshly spawned one while keeping its
+    /// data block (and any PJRT binding) alive. No ack: channel ordering
+    /// guarantees the next `Round` sees the reset state.
+    Reset,
     Shutdown,
 }
 

@@ -28,10 +28,25 @@ use anyhow::{anyhow, Result};
 use crate::config::Backend;
 use crate::data::{Dataset, Partition};
 use crate::loss::LossKind;
-use crate::netsim::NetworkModel;
+use crate::netsim::{NetworkModel, StragglerModel};
 use crate::objective;
 use crate::runtime;
 use crate::solvers::{Block, SolverKind};
+
+/// Everything [`Cluster::spawn`] needs, by name. Built and validated by
+/// [`crate::Trainer`] — the only public road to a cluster.
+pub(crate) struct ClusterSpec<'a> {
+    pub data: &'a Dataset,
+    pub partition: &'a Partition,
+    pub loss: LossKind,
+    pub lambda: f64,
+    pub solver: SolverKind,
+    pub backend: Backend,
+    pub artifacts_dir: &'a str,
+    pub net: NetworkModel,
+    pub stragglers: StragglerModel,
+    pub seed: u64,
+}
 
 /// Exact communication/time accounting for a run.
 #[derive(Debug, Clone, Copy, Default)]
@@ -70,21 +85,25 @@ pub struct Cluster {
 }
 
 impl Cluster {
-    /// Partition `data`, spawn K workers, and (for `Backend::Pjrt`) start
-    /// the PJRT engine and register every block with it.
-    #[allow(clippy::too_many_arguments)]
-    pub fn build(
-        data: &Dataset,
-        partition: &Partition,
-        loss: LossKind,
-        lambda: f64,
-        solver: SolverKind,
-        backend: Backend,
-        artifacts_dir: &str,
-        net: NetworkModel,
-        seed: u64,
-    ) -> Result<Cluster> {
-        partition.validate().map_err(|e| anyhow!("invalid partition: {e}"))?;
+    /// Spawn K worker threads over the partitioned dataset, and (for
+    /// `Backend::Pjrt`) start the PJRT engine and register every block
+    /// with it. Crate-private: the public road here is
+    /// [`crate::Trainer::build`], which validates the spec first.
+    pub(crate) fn spawn(spec: ClusterSpec<'_>) -> Result<Cluster> {
+        let ClusterSpec {
+            data,
+            partition,
+            loss,
+            lambda,
+            solver,
+            backend,
+            artifacts_dir,
+            net,
+            stragglers,
+            seed,
+        } = spec;
+        // the partition was already validated (with typed errors) by
+        // Trainer::build — the only road here
         let k = partition.k();
         let n = data.n();
         let d = data.d();
@@ -141,7 +160,7 @@ impl Cluster {
             d,
             w: vec![0.0; d],
             net,
-            stragglers: crate::netsim::StragglerModel::none(),
+            stragglers,
             stats: CommStats::default(),
             block_sizes,
             loss,
@@ -149,6 +168,23 @@ impl Cluster {
             round_counter: 0,
             _engine: engine,
         })
+    }
+
+    /// Warm-start: zero all optimization state (leader `w`, worker dual
+    /// blocks, rng streams, accounting) while keeping the threads, their
+    /// data, and any PJRT block registrations alive. A run after `reset()`
+    /// is bit-identical to one on a freshly spawned cluster with the same
+    /// seed. Channel ordering makes an ack unnecessary: the next dispatch
+    /// on each worker channel is processed after its reset.
+    pub fn reset(&mut self) -> Result<()> {
+        for (kid, tx) in self.to_workers.iter().enumerate() {
+            tx.send(ToWorker::Reset)
+                .map_err(|_| anyhow!("worker {kid} channel closed"))?;
+        }
+        self.w = vec![0.0; self.d];
+        self.stats = CommStats::default();
+        self.round_counter = 0;
+        Ok(())
     }
 
     /// Dispatch one round of local work (per-worker via `work_for`) and
@@ -362,21 +398,26 @@ mod tests {
     use super::*;
     use crate::data::{cov_like, PartitionStrategy};
 
+    fn spec_cluster(data: &Dataset, part: &Partition, net: NetworkModel, seed: u64) -> Cluster {
+        Cluster::spawn(ClusterSpec {
+            data,
+            partition: part,
+            loss: LossKind::Hinge,
+            lambda: 0.1,
+            solver: SolverKind::Sdca,
+            backend: Backend::Native,
+            artifacts_dir: "artifacts",
+            net,
+            stragglers: StragglerModel::none(),
+            seed,
+        })
+        .unwrap()
+    }
+
     fn small_cluster(k: usize) -> (Cluster, Dataset) {
         let data = cov_like(60, 6, 0.1, 1);
         let part = Partition::new(PartitionStrategy::Contiguous, 60, k, 0);
-        let cluster = Cluster::build(
-            &data,
-            &part,
-            LossKind::Hinge,
-            0.1,
-            SolverKind::Sdca,
-            Backend::Native,
-            "artifacts",
-            NetworkModel::free(),
-            7,
-        )
-        .unwrap();
+        let cluster = spec_cluster(&data, &part, NetworkModel::free(), 7);
         (cluster, data)
     }
 
@@ -443,15 +484,30 @@ mod tests {
     }
 
     #[test]
+    fn reset_reproduces_a_fresh_cluster_bit_for_bit() {
+        let (mut cluster, _) = small_cluster(3);
+        let run_rounds = |cl: &mut Cluster| {
+            for _ in 0..5 {
+                let replies = cl.dispatch(|_| LocalWork::DualRound { h: 20 }).unwrap();
+                cl.commit(&replies, 1.0 / 3.0).unwrap();
+            }
+            cl.w.clone()
+        };
+        let w_first = run_rounds(&mut cluster);
+        cluster.reset().unwrap();
+        assert!(cluster.w.iter().all(|&v| v == 0.0));
+        assert_eq!(cluster.stats.rounds, 0);
+        let w_again = run_rounds(&mut cluster);
+        assert_eq!(w_first, w_again, "warm-started run diverged from fresh run");
+        cluster.shutdown();
+    }
+
+    #[test]
     fn sim_time_includes_network_cost() {
         let data = cov_like(40, 5, 0.1, 2);
         let part = Partition::new(PartitionStrategy::Contiguous, 40, 2, 0);
         let net = NetworkModel { latency_s: 1.0, bandwidth_bps: f64::INFINITY, bytes_per_scalar: 8 };
-        let mut cluster = Cluster::build(
-            &data, &part, LossKind::Hinge, 0.1, SolverKind::Sdca,
-            Backend::Native, "artifacts", net, 3,
-        )
-        .unwrap();
+        let mut cluster = spec_cluster(&data, &part, net, 3);
         for _ in 0..3 {
             let r = cluster.dispatch(|_| LocalWork::DualRound { h: 1 }).unwrap();
             cluster.commit(&r, 0.5).unwrap();

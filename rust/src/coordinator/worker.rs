@@ -39,6 +39,12 @@ pub fn run_worker(cfg: WorkerConfig, rx: Receiver<ToWorker>, tx: Sender<ToLeader
     while let Ok(msg) = rx.recv() {
         match msg {
             ToWorker::Shutdown => break,
+            ToWorker::Reset => {
+                alpha.iter_mut().for_each(|a| *a = 0.0);
+                pending = None;
+                did_sgd = false;
+                rng = Rng::seed_from_u64(seed);
+            }
             ToWorker::Commit { scale } => {
                 if let Some(d) = pending.take() {
                     for (a, da) in alpha.iter_mut().zip(&d) {

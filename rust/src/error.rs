@@ -1,0 +1,115 @@
+//! The crate-level error type — every public API entry point ([`crate::Trainer`],
+//! [`crate::Session`], [`crate::config::ExperimentConfig`]) returns these
+//! typed variants instead of ad-hoc `anyhow!` strings, so callers can match
+//! on *what* went wrong (a missing lambda vs. a dead worker) rather than
+//! parsing messages.
+
+use std::fmt;
+
+/// Everything that can go wrong at the API boundary.
+#[derive(Debug)]
+#[non_exhaustive]
+pub enum Error {
+    /// `Trainer::build` called without `.lambda(...)` — the regularizer has
+    /// no sane default (the paper tunes it per dataset, Table 1).
+    MissingLambda,
+    /// Lambda must be finite and strictly positive.
+    InvalidLambda { value: f64 },
+    /// `Trainer::build` called without `.workers(k)` or `.partition(p)`.
+    MissingPartition,
+    /// More workers than data points: at least one block would be empty.
+    TooManyWorkers { k: usize, n: usize },
+    /// An explicit partition covers a different number of rows than the
+    /// dataset the trainer was built on.
+    PartitionMismatch { data_n: usize, partition_n: usize },
+    /// The partition violates its own invariants (non-disjoint blocks,
+    /// out-of-range indices, ...).
+    InvalidPartition { reason: String },
+    /// `Backend::Pjrt` selected but the artifacts directory is missing its
+    /// `manifest.tsv` (run `make artifacts` first).
+    MissingArtifacts { dir: String },
+    /// A run budget stops on primal suboptimality (`target_subopt > 0`)
+    /// but the session has no reference optimum to measure against — call
+    /// [`Session::set_reference_optimum`](crate::Session::set_reference_optimum)
+    /// first (otherwise the run could only ever exhaust its round cap).
+    MissingReferenceOptimum,
+    /// A TOML experiment config failed to parse or validate.
+    Config { message: String },
+    /// A runtime failure after construction (worker death, PJRT engine
+    /// error, I/O while writing traces).
+    Runtime { message: String },
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Error::MissingLambda => {
+                write!(f, "no regularization strength: call Trainer::lambda(...)")
+            }
+            Error::InvalidLambda { value } => {
+                write!(f, "lambda must be finite and > 0, got {value}")
+            }
+            Error::MissingPartition => {
+                write!(f, "no partition: call Trainer::workers(k) or Trainer::partition(...)")
+            }
+            Error::TooManyWorkers { k, n } => {
+                write!(f, "{k} workers over {n} rows: at least one block would be empty")
+            }
+            Error::PartitionMismatch { data_n, partition_n } => write!(
+                f,
+                "partition covers {partition_n} rows but the dataset has {data_n}"
+            ),
+            Error::InvalidPartition { reason } => write!(f, "invalid partition: {reason}"),
+            Error::MissingArtifacts { dir } => write!(
+                f,
+                "PJRT backend selected but {dir}/manifest.tsv does not exist \
+                 (run `make artifacts` first)"
+            ),
+            Error::MissingReferenceOptimum => write!(
+                f,
+                "budget stops on suboptimality but no reference optimum is set: \
+                 call Session::set_reference_optimum(Some(p_star)) first"
+            ),
+            Error::Config { message } => write!(f, "config error: {message}"),
+            Error::Runtime { message } => write!(f, "runtime error: {message}"),
+        }
+    }
+}
+
+impl std::error::Error for Error {}
+
+impl From<anyhow::Error> for Error {
+    fn from(e: anyhow::Error) -> Self {
+        Error::Runtime { message: format!("{e:#}") }
+    }
+}
+
+/// Crate-wide result alias; defaults to the crate [`Error`].
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn display_is_actionable() {
+        let msgs = [
+            Error::MissingLambda.to_string(),
+            Error::InvalidLambda { value: -1.0 }.to_string(),
+            Error::TooManyWorkers { k: 8, n: 4 }.to_string(),
+            Error::MissingArtifacts { dir: "artifacts".into() }.to_string(),
+        ];
+        assert!(msgs[0].contains("lambda"));
+        assert!(msgs[1].contains("-1"));
+        assert!(msgs[2].contains("8 workers"));
+        assert!(msgs[3].contains("manifest.tsv"));
+    }
+
+    #[test]
+    fn anyhow_conversion_preserves_chain() {
+        let e = anyhow::anyhow!("inner").context("outer");
+        let err: Error = e.into();
+        let msg = err.to_string();
+        assert!(msg.contains("outer") && msg.contains("inner"), "{msg}");
+    }
+}

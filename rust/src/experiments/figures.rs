@@ -1,23 +1,28 @@
 //! Figure harnesses: the code that regenerates Figures 1-4 and the
 //! headline 25x claim. Each writes per-run traces as CSV under
 //! `results/figN/` and returns structured summaries for the CLI tables.
+//!
+//! All sweeps run on ONE warm-started [`Session`] per dataset:
+//! [`Session::reset`] reuses the spawned worker threads between grid
+//! points instead of re-partitioning and re-spawning per run (identical
+//! trajectories — reset restores the spawn-time rng streams).
 
-use anyhow::Result;
-
-use super::{cached_optimum, make_cluster, ExpDataset, Profile};
-use crate::algorithms::{self, Budget};
-use crate::config::{AlgorithmSpec, Backend};
+use crate::algorithms::{Algorithm, Budget, Cocoa, LocalSgd, MinibatchCd, MinibatchSgd};
+use crate::api::Session;
+use crate::config::Backend;
+use crate::error::Result;
 use crate::loss::LossKind;
-use crate::solvers::SolverKind;
 use crate::telemetry::Trace;
 
+use super::{cached_optimum, make_session, ExpDataset, Profile};
+
 /// The four Section-6 competitors at a given per-round H.
-pub fn competitors(h: usize) -> Vec<AlgorithmSpec> {
+pub fn competitors(h: usize) -> Vec<Box<dyn Algorithm>> {
     vec![
-        AlgorithmSpec::Cocoa { h, beta_k: 1.0, solver: SolverKind::Sdca },
-        AlgorithmSpec::MinibatchCd { h, beta_b: 1.0 },
-        AlgorithmSpec::LocalSgd { h, beta: 1.0 },
-        AlgorithmSpec::MinibatchSgd { h, beta: 1.0 },
+        Box::new(Cocoa::new(h)),
+        Box::new(MinibatchCd::new(h)),
+        Box::new(LocalSgd::new(h)),
+        Box::new(MinibatchSgd::new(h)),
     ]
 }
 
@@ -49,6 +54,12 @@ pub struct BestH {
     pub trace: Trace,
 }
 
+/// Reset-then-run: every grid point starts from the spawn-identical state.
+fn warm_run(session: &mut Session, algo: &mut dyn Algorithm, budget: Budget) -> Result<Trace> {
+    session.reset()?;
+    session.run(algo, budget)
+}
+
 /// Run every competitor over the H grid on one dataset and keep the best-H
 /// trace per algorithm — the exact construction of Figures 1 and 2
 /// ("for all competing methods, we present the result for the batch size
@@ -63,17 +74,17 @@ pub fn fig1_fig2_dataset(
     let p_star = cached_optimum(ds, LossKind::Hinge, results_dir)?;
     let n_k = ds.data.n() / ds.k;
     let grid = h_grid(n_k, profile);
-    let budget = Budget { rounds, target_gap: 0.0, target_subopt: target / 4.0 };
+    let budget = Budget::rounds(rounds).target_subopt(target / 4.0);
+
+    let mut session = make_session(ds, LossKind::Hinge, Backend::Native, "artifacts", 17)?;
+    session.set_reference_optimum(Some(p_star));
 
     let mut best: Vec<Option<BestH>> = vec![None, None, None, None];
     for &h in &grid {
-        for (slot, spec) in competitors(h).into_iter().enumerate() {
-            let mut cluster = make_cluster(ds, LossKind::Hinge, Backend::Native, "artifacts", 17)?;
-            let trace =
-                algorithms::run(&mut cluster, &spec, budget, 1, Some(p_star), ds.name)?;
-            cluster.shutdown();
+        for (slot, mut algo) in competitors(h).into_iter().enumerate() {
+            let trace = warm_run(&mut session, algo.as_mut(), budget)?;
             let candidate = BestH {
-                algorithm: spec.name(),
+                algorithm: algo.name(),
                 h,
                 time_to_target: trace.time_to_subopt(target),
                 vectors_to_target: trace.vectors_to_subopt(target),
@@ -98,6 +109,7 @@ pub fn fig1_fig2_dataset(
             }
         }
     }
+    session.shutdown();
     let best: Vec<BestH> = best.into_iter().map(Option::unwrap).collect();
     // persist the winning traces: the series of Figures 1 and 2
     for b in &best {
@@ -111,6 +123,7 @@ pub fn fig1_fig2_dataset(
 }
 
 /// Figure 3: the effect of H on CoCoA (cov dataset, K = 4 in the paper).
+/// The whole sweep warm-starts one session (see the module docs).
 pub fn fig3(
     ds: &ExpDataset,
     profile: Profile,
@@ -122,22 +135,15 @@ pub fn fig3(
     let mut grid = vec![1usize];
     grid.extend(h_grid(n_k, profile));
     grid.dedup();
+    let mut session = make_session(ds, LossKind::Hinge, Backend::Native, "artifacts", 19)?;
+    session.set_reference_optimum(Some(p_star));
     let mut out = Vec::new();
     for h in grid {
-        let mut cluster = make_cluster(ds, LossKind::Hinge, Backend::Native, "artifacts", 19)?;
-        let spec = AlgorithmSpec::Cocoa { h, beta_k: 1.0, solver: SolverKind::Sdca };
-        let trace = algorithms::run(
-            &mut cluster,
-            &spec,
-            Budget::rounds(rounds),
-            1,
-            Some(p_star),
-            ds.name,
-        )?;
-        cluster.shutdown();
+        let trace = warm_run(&mut session, &mut Cocoa::new(h), Budget::rounds(rounds))?;
         trace.to_csv(format!("{results_dir}/fig3/cocoa_h{h}.csv"))?;
         out.push((h, trace));
     }
+    session.shutdown();
     Ok(out)
 }
 
@@ -164,21 +170,26 @@ pub fn fig4(
     let b_total = (h * ds.k) as f64;
     let mut cells = Vec::new();
     let betas_k: Vec<f64> = vec![1.0, (k / 2.0).max(1.0), k];
-    let betas_b: Vec<f64> = vec![1.0, (b_total / 100.0).max(1.0), (b_total / 10.0).max(1.0), b_total];
-    let budget = Budget { rounds, target_gap: 0.0, target_subopt: target / 4.0 };
+    let betas_b: Vec<f64> =
+        vec![1.0, (b_total / 100.0).max(1.0), (b_total / 10.0).max(1.0), b_total];
+    let budget = Budget::rounds(rounds).target_subopt(target / 4.0);
 
-    let mut run_one = |spec: AlgorithmSpec, beta: f64| -> Result<()> {
-        let mut cluster = make_cluster(ds, LossKind::Hinge, Backend::Native, "artifacts", 23)?;
-        let trace = algorithms::run(&mut cluster, &spec, budget, 1, Some(p_star), ds.name)?;
-        cluster.shutdown();
+    let mut session = make_session(ds, LossKind::Hinge, Backend::Native, "artifacts", 23)?;
+    session.set_reference_optimum(Some(p_star));
+
+    let mut run_one = |session: &mut Session,
+                       mut algo: Box<dyn Algorithm>,
+                       beta: f64|
+     -> Result<()> {
+        let trace = warm_run(session, algo.as_mut(), budget)?;
         trace.to_csv(format!(
             "{results_dir}/fig4/{}_h{}_beta{}.csv",
-            spec.name(),
+            algo.name(),
             h,
             beta
         ))?;
         cells.push(BetaCell {
-            algorithm: spec.name(),
+            algorithm: algo.name(),
             beta,
             time_to_target: trace.time_to_subopt(target),
             final_subopt: trace
@@ -191,16 +202,14 @@ pub fn fig4(
     };
 
     for &beta in &betas_k {
-        run_one(
-            AlgorithmSpec::Cocoa { h, beta_k: beta, solver: SolverKind::Sdca },
-            beta,
-        )?;
-        run_one(AlgorithmSpec::LocalSgd { h, beta }, beta)?;
-        run_one(AlgorithmSpec::MinibatchSgd { h, beta }, beta)?;
+        run_one(&mut session, Box::new(Cocoa::averaging(h, beta)), beta)?;
+        run_one(&mut session, Box::new(LocalSgd::new(h).beta(beta)), beta)?;
+        run_one(&mut session, Box::new(MinibatchSgd::new(h).beta(beta)), beta)?;
     }
     for &beta in &betas_b {
-        run_one(AlgorithmSpec::MinibatchCd { h, beta_b: beta }, beta)?;
+        run_one(&mut session, Box::new(MinibatchCd::new(h).beta_b(beta)), beta)?;
     }
+    session.shutdown();
     Ok(cells)
 }
 

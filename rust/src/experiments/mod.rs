@@ -157,25 +157,25 @@ pub fn table1(profile: Profile) -> Vec<Table1Row> {
         .collect()
 }
 
-/// Build a cluster for an experiment dataset with the standard settings.
-pub fn make_cluster(
+/// Build a [`Session`](crate::Session) for an experiment dataset with the
+/// standard settings (LocalSDCA, EC2-like network).
+pub fn make_session(
     ds: &ExpDataset,
     loss: LossKind,
     backend: Backend,
     artifacts_dir: &str,
     seed: u64,
-) -> Result<crate::coordinator::Cluster> {
-    crate::coordinator::Cluster::build(
-        &ds.data,
-        &ds.partition(),
-        loss,
-        ds.lambda,
-        crate::solvers::SolverKind::Sdca,
-        backend,
-        artifacts_dir,
-        default_net(),
-        seed,
-    )
+) -> crate::error::Result<crate::Session> {
+    crate::Trainer::on(&ds.data)
+        .partition(ds.partition())
+        .loss(loss)
+        .lambda(ds.lambda)
+        .backend(backend)
+        .artifacts_dir(artifacts_dir)
+        .network(default_net())
+        .seed(seed)
+        .label(ds.name)
+        .build()
 }
 
 #[cfg(test)]

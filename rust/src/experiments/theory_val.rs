@@ -3,15 +3,12 @@
 //! and check the measured dual convergence against the predicted geometric
 //! rate.
 
-use anyhow::Result;
-
-use crate::algorithms::{self, Budget};
-use crate::config::{AlgorithmSpec, Backend};
-use crate::coordinator::Cluster;
+use crate::algorithms::{Budget, Cocoa};
+use crate::api::Trainer;
 use crate::data::{Dataset, Partition, PartitionStrategy};
+use crate::error::Result;
 use crate::loss::LossKind;
 use crate::netsim::NetworkModel;
-use crate::solvers::SolverKind;
 use crate::theory;
 
 pub struct TheoryReport {
@@ -55,27 +52,16 @@ pub fn validate(
     // D* == P* at optimality (strong duality; smooth loss)
     let d_star = crate::objective::primal(data, &w_star, lambda, loss_impl.as_ref());
 
-    let mut cluster = Cluster::build(
-        data,
-        &part,
-        loss,
-        lambda,
-        SolverKind::Sdca,
-        Backend::Native,
-        "artifacts",
-        NetworkModel::free(),
-        seed,
-    )?;
-    let spec = AlgorithmSpec::Cocoa { h, beta_k: 1.0, solver: SolverKind::Sdca };
-    let trace = algorithms::run(
-        &mut cluster,
-        &spec,
-        Budget::rounds(rounds),
-        1,
-        None,
-        "theory",
-    )?;
-    cluster.shutdown();
+    let mut session = Trainer::on(data)
+        .partition(part)
+        .loss(loss)
+        .lambda(lambda)
+        .network(NetworkModel::free())
+        .seed(seed)
+        .label("theory")
+        .build()?;
+    let trace = session.run(&mut Cocoa::new(h), Budget::rounds(rounds))?;
+    session.shutdown();
 
     // measured geometric-mean contraction of the dual suboptimality
     let subopts: Vec<f64> = trace

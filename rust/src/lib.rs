@@ -2,9 +2,65 @@
 //!
 //! A production-shaped reproduction of Jaggi, Smith, Takáč, Terhorst,
 //! Hofmann & Jordan, *Communication-Efficient Distributed Dual Coordinate
-//! Ascent* (NIPS 2014).
+//! Ascent* (NIPS 2014), built around two public types:
 //!
-//! The crate implements the paper's full experimental system:
+//! * [`Trainer`] — a typed builder describing the problem (data, partition,
+//!   loss, lambda, local solver, backend, network model, seed). All
+//!   validation happens at [`Trainer::build`], which returns a typed
+//!   [`Error`] — never a panic, never a stringly error.
+//! * [`Session`] — the live cluster the builder yields: the leader plus K
+//!   worker threads owning disjoint coordinate blocks. One session runs
+//!   many algorithms ([`Session::run`]) and warm-starts between runs
+//!   ([`Session::reset`] keeps the threads, data, and PJRT bindings).
+//!
+//! Algorithms are a first-class trait ([`Algorithm`]): per round the driver
+//! asks the algorithm for each worker's [`coordinator::LocalWork`], gathers
+//! the K replies, and hands them to the algorithm's `reduce`. All seven
+//! Section-6 baselines ship as implementations, and the `beta_K`
+//! aggregation knob of Algorithm 1 is its own policy type
+//! ([`Aggregation`]), which makes CoCoA+ a constructor away.
+//!
+//! ## 30-second API tour
+//!
+//! ```no_run
+//! use cocoa::prelude::*;
+//! use cocoa::data::cov_like;
+//!
+//! fn main() -> cocoa::Result<()> {
+//!     // 1. a dataset and a session: K = 4 worker threads, hinge SVM
+//!     let data = cov_like(8_000, 54, 0.1, 42);
+//!     let mut session = Trainer::on(&data)
+//!         .workers(4)
+//!         .loss(LossKind::Hinge)
+//!         .lambda(1.0 / data.n() as f64)
+//!         .network(NetworkModel::ec2_like())
+//!         .seed(7)
+//!         .build()?;
+//!
+//!     // 2. CoCoA with safe averaging (Algorithm 1, beta_K = 1)
+//!     let h = data.n() / 4; // one local pass per round
+//!     let avg = session.run(&mut Cocoa::new(h), Budget::rounds(10))?;
+//!
+//!     // 3. warm-start the same threads and compare the CoCoA+ adding
+//!     //    regime (beta_K = K over sigma' = K scaled subproblems)
+//!     session.reset()?;
+//!     let add = session.run(&mut Cocoa::adding(h), Budget::rounds(10))?;
+//!
+//!     println!(
+//!         "gap after 10 rounds — averaging: {:.2e}, adding: {:.2e}",
+//!         avg.rows.last().unwrap().gap,
+//!         add.rows.last().unwrap().gap,
+//!     );
+//!
+//!     // 4. run until a target instead of a round count
+//!     session.reset()?;
+//!     let trace = session.run(&mut Cocoa::new(h), Budget::until_gap(1e-3))?;
+//!     println!("gap 1e-3 after {} rounds", trace.rows.last().unwrap().round);
+//!     Ok(())
+//! }
+//! ```
+//!
+//! ## Layers
 //!
 //! * [`data`] — dense/CSR datasets, a LibSVM loader, the synthetic workload
 //!   generators matching the paper's three dataset regimes, and the
@@ -14,14 +70,13 @@
 //!   conjugates and closed-form/Newton single-coordinate dual maximizers.
 //! * [`solvers`] — `LOCALDUALMETHOD` implementations (Procedure A): the
 //!   paper's LocalSDCA (Procedure B), a permuted-order variant, and the
-//!   exact block solver that realizes the `H -> inf` block-coordinate-
-//!   descent limit discussed after Lemma 3.
+//!   exact block solver that realizes the `H -> inf` limit.
 //! * [`coordinator`] — Algorithm 1 as a leader/worker runtime: real worker
 //!   threads owning disjoint data + dual blocks, message-passing rounds,
-//!   `beta_K`-scaled reduces, exact communication accounting.
-//! * [`algorithms`] — every Section-6 competitor configured over the same
-//!   runtime: mini-batch SDCA, mini-batch SGD (Pegasos), locally-updating
-//!   SGD, naive distributed CD/SGD, and one-shot averaging.
+//!   exact communication accounting.
+//! * [`algorithms`] — the [`Algorithm`] trait, the [`Aggregation`] policy,
+//!   and every Section-6 competitor as an implementation.
+//! * [`api`] — the [`Trainer`] builder and [`Session`] facade.
 //! * [`objective`] — primal/dual objectives and the duality-gap certificate.
 //! * [`netsim`] — the network cost model that turns counted communication
 //!   into simulated distributed wall-time.
@@ -35,7 +90,9 @@
 //!   configs, and the harnesses that regenerate Table 1 and Figures 1–4.
 
 pub mod algorithms;
+pub mod api;
 pub mod config;
+pub mod error;
 pub mod util;
 pub mod coordinator;
 pub mod data;
@@ -48,7 +105,27 @@ pub mod solvers;
 pub mod telemetry;
 pub mod theory;
 
+pub use algorithms::{Aggregation, Algorithm, Budget};
+pub use api::{Session, Trainer};
 pub use config::ExperimentConfig;
 pub use coordinator::Cluster;
 pub use data::{Dataset, Partition};
+pub use error::{Error, Result};
 pub use loss::LossKind;
+
+/// One-line import for the common path:
+/// `use cocoa::prelude::*;`
+pub mod prelude {
+    pub use crate::algorithms::{
+        Aggregation, Algorithm, Budget, Cocoa, LocalSgd, MinibatchCd, MinibatchSgd, NaiveCd,
+        NaiveSgd, OneShotAvg, RoundCtx,
+    };
+    pub use crate::api::{Session, Trainer};
+    pub use crate::config::{AlgorithmSpec, Backend, ExperimentConfig};
+    pub use crate::data::{Dataset, Partition, PartitionStrategy};
+    pub use crate::error::{Error, Result};
+    pub use crate::loss::LossKind;
+    pub use crate::netsim::{NetworkModel, StragglerModel};
+    pub use crate::solvers::SolverKind;
+    pub use crate::telemetry::{Trace, TraceRow};
+}

@@ -13,9 +13,7 @@
 
 use anyhow::{anyhow, bail, Result};
 
-use cocoa::algorithms::{self, Budget};
 use cocoa::config::ExperimentConfig;
-use cocoa::coordinator::Cluster;
 use cocoa::data;
 use cocoa::experiments::{self, figures, theory_val, Profile};
 use cocoa::objective;
@@ -124,7 +122,6 @@ fn main() -> Result<()> {
 fn train(config_path: &str, out: Option<String>, p_star: Option<f64>) -> Result<()> {
     let cfg = ExperimentConfig::from_toml_file(config_path)?;
     let data = cfg.dataset.load()?;
-    let partition = cfg.partition.build(data.n());
     eprintln!(
         "dataset {} (n={}, d={}, density={:.4}) | K={} | {} | loss {} | lambda {}",
         cfg.dataset.name(),
@@ -136,34 +133,19 @@ fn train(config_path: &str, out: Option<String>, p_star: Option<f64>) -> Result<
         cfg.loss,
         cfg.lambda,
     );
-    let mut cluster = Cluster::build(
-        &data,
-        &partition,
-        cfg.loss,
-        cfg.lambda,
-        match cfg.algorithm {
-            cocoa::config::AlgorithmSpec::Cocoa { solver, .. } => solver,
-            _ => cocoa::solvers::SolverKind::Sdca,
-        },
-        cfg.run.backend,
-        &cfg.artifacts_dir,
-        cfg.netsim,
-        cfg.run.seed,
-    )?;
-    let budget = Budget {
-        rounds: cfg.run.rounds,
-        target_gap: cfg.run.target_gap,
-        target_subopt: cfg.run.target_subopt,
-    };
-    let trace = algorithms::run(
-        &mut cluster,
-        &cfg.algorithm,
-        budget,
-        cfg.run.eval_every,
-        p_star,
-        &cfg.dataset.name(),
-    )?;
-    cluster.shutdown();
+    let mut session = cfg.trainer(&data).build()?;
+    session.set_reference_optimum(p_star);
+    let mut algorithm = cfg.algorithm.instantiate();
+    let mut budget = cfg.run.budget();
+    if budget.target_subopt > 0.0 && p_star.is_none() {
+        eprintln!(
+            "note: config sets target_subopt but no --p-star was given; \
+             running to the round/gap budget instead (try `cocoa optimum`)"
+        );
+        budget.target_subopt = 0.0;
+    }
+    let trace = session.run(algorithm.as_mut(), budget)?;
+    session.shutdown();
 
     let last = trace.last().expect("at least round 0 recorded");
     println!(

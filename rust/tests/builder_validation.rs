@@ -1,0 +1,193 @@
+//! Builder validation: every misconfiguration `Trainer::build` can reject
+//! must come back as the right typed `Error` variant — no panics, no
+//! stringly `anyhow` at the API boundary. Plus the warm-start and
+//! `Aggregation::Add` end-to-end guarantees of the `Session` facade.
+
+use cocoa::data::cov_like;
+use cocoa::prelude::*;
+
+fn data() -> Dataset {
+    cov_like(40, 5, 0.1, 1)
+}
+
+#[test]
+fn missing_lambda_is_typed() {
+    let data = data();
+    let err = Trainer::on(&data).workers(2).build().unwrap_err();
+    assert!(matches!(err, Error::MissingLambda), "{err}");
+}
+
+#[test]
+fn invalid_lambda_is_typed() {
+    let data = data();
+    for bad in [0.0, -0.5, f64::NAN, f64::INFINITY] {
+        let err = Trainer::on(&data).workers(2).lambda(bad).build().unwrap_err();
+        match err {
+            Error::InvalidLambda { value } => {
+                assert!(value == bad || (value.is_nan() && bad.is_nan()))
+            }
+            other => panic!("lambda {bad}: wrong variant {other}"),
+        }
+    }
+}
+
+#[test]
+fn missing_partition_is_typed() {
+    let data = data();
+    let err = Trainer::on(&data).lambda(0.1).build().unwrap_err();
+    assert!(matches!(err, Error::MissingPartition), "{err}");
+}
+
+#[test]
+fn k_larger_than_n_is_typed() {
+    let data = data(); // n = 40
+    let err = Trainer::on(&data).workers(41).lambda(0.1).build().unwrap_err();
+    assert!(
+        matches!(err, Error::TooManyWorkers { k: 41, n: 40 }),
+        "{err}"
+    );
+    // zero workers is equally impossible
+    let err = Trainer::on(&data).workers(0).lambda(0.1).build().unwrap_err();
+    assert!(matches!(err, Error::TooManyWorkers { k: 0, .. }), "{err}");
+}
+
+#[test]
+fn pjrt_without_artifacts_is_typed() {
+    let data = data();
+    let err = Trainer::on(&data)
+        .workers(2)
+        .lambda(0.1)
+        .backend(Backend::Pjrt)
+        .artifacts_dir("/definitely/not/a/real/artifacts/dir")
+        .build()
+        .unwrap_err();
+    match err {
+        Error::MissingArtifacts { dir } => assert!(dir.contains("not/a/real")),
+        other => panic!("wrong variant: {other}"),
+    }
+}
+
+#[test]
+fn mismatched_partition_is_typed() {
+    let data = data(); // n = 40
+    let wrong = Partition::new(PartitionStrategy::Contiguous, 60, 2, 0);
+    let err = Trainer::on(&data)
+        .partition(wrong)
+        .lambda(0.1)
+        .build()
+        .unwrap_err();
+    assert!(
+        matches!(err, Error::PartitionMismatch { data_n: 40, partition_n: 60 }),
+        "{err}"
+    );
+}
+
+#[test]
+fn errors_are_std_error_and_display() {
+    let data = data();
+    let err = Trainer::on(&data).workers(2).build().unwrap_err();
+    let dynamic: &dyn std::error::Error = &err;
+    assert!(dynamic.to_string().contains("lambda"));
+}
+
+#[test]
+fn explicit_partition_builds_and_runs() {
+    let data = data();
+    let part = Partition::new(PartitionStrategy::RoundRobin, 40, 4, 7);
+    let mut session = Trainer::on(&data)
+        .partition(part)
+        .lambda(0.1)
+        .build()
+        .unwrap();
+    assert_eq!(session.k(), 4);
+    let tr = session.run(&mut Cocoa::new(10), Budget::rounds(2)).unwrap();
+    assert_eq!(tr.rows.last().unwrap().round, 2);
+    session.shutdown();
+}
+
+#[test]
+fn aggregation_add_runs_end_to_end() {
+    // CoCoA+ through the whole public path: builder -> session -> trace.
+    let data = cov_like(200, 8, 0.1, 3);
+    let mut session = Trainer::on(&data)
+        .workers(4)
+        .loss(LossKind::SmoothedHinge { gamma: 1.0 })
+        .lambda(0.05)
+        .seed(5)
+        .build()
+        .unwrap();
+    let trace = session
+        .run(&mut Cocoa::adding(50), Budget::rounds(8))
+        .unwrap();
+    session.shutdown();
+    assert_eq!(trace.algorithm, "cocoa_plus");
+    let g0 = trace.rows.first().unwrap().gap;
+    let g_end = trace.rows.last().unwrap().gap;
+    assert!(g_end.is_finite() && g_end >= -1e-9, "adding diverged: {g_end}");
+    assert!(g_end < g0 * 0.5, "adding made no progress: {g0} -> {g_end}");
+}
+
+#[test]
+fn until_subopt_without_reference_is_typed() {
+    // target_subopt can never fire without P*: fail fast instead of
+    // spinning to the round cap
+    let data = data();
+    let mut session = Trainer::on(&data).workers(2).lambda(0.1).build().unwrap();
+    let err = session
+        .run(&mut Cocoa::new(10), Budget::until_subopt(1e-3))
+        .unwrap_err();
+    assert!(matches!(err, Error::MissingReferenceOptimum), "{err}");
+    // with a reference set, the same budget runs
+    session.set_reference_optimum(Some(0.0));
+    session
+        .run(&mut Cocoa::new(10), Budget::until_subopt(1e-3).max_rounds(2))
+        .unwrap();
+    session.shutdown();
+}
+
+#[test]
+fn partition_seed_is_order_insensitive() {
+    let data = cov_like(60, 4, 0.1, 2);
+    let build = |t: Trainer| {
+        let mut s = t.lambda(0.1).seed(3).build().unwrap();
+        let tr = s.run(&mut Cocoa::new(5), Budget::rounds(1)).unwrap();
+        let p = tr.rows.last().unwrap().primal;
+        s.shutdown();
+        p
+    };
+    let seed_first = build(
+        Trainer::on(&data)
+            .partition_seed(42)
+            .workers(3)
+            .partition_strategy(PartitionStrategy::Random),
+    );
+    let seed_last = build(
+        Trainer::on(&data)
+            .workers(3)
+            .partition_strategy(PartitionStrategy::Random)
+            .partition_seed(42),
+    );
+    assert_eq!(seed_first, seed_last, "partition_seed dropped when called first");
+}
+
+#[test]
+fn session_reset_reproduces_the_run_exactly() {
+    // Warm-start contract: reset() + run == fresh build + run, bit for bit.
+    let data = cov_like(150, 6, 0.1, 9);
+    let mut session = Trainer::on(&data)
+        .workers(3)
+        .lambda(0.05)
+        .seed(11)
+        .build()
+        .unwrap();
+    let first = session.run(&mut Cocoa::new(30), Budget::rounds(5)).unwrap();
+    session.reset().unwrap();
+    let again = session.run(&mut Cocoa::new(30), Budget::rounds(5)).unwrap();
+    session.shutdown();
+    assert_eq!(first.rows.len(), again.rows.len());
+    for (a, b) in first.rows.iter().zip(&again.rows) {
+        assert_eq!(a.primal, b.primal, "round {}: warm-start diverged", a.round);
+        assert_eq!(a.dual, b.dual);
+        assert_eq!(a.vectors, b.vectors);
+    }
+}

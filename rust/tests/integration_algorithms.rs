@@ -1,34 +1,26 @@
 //! Algorithm-level integration: the Section-6 competitors produce the
 //! qualitative results the paper reports — CoCoA wins on communication,
 //! mini-batch methods are beta-sensitive, one-shot averaging is biased.
+//! Everything runs through the public `Trainer`/`Session` surface.
 
-use cocoa::algorithms::{run, Budget};
-use cocoa::config::{AlgorithmSpec, Backend};
-use cocoa::coordinator::Cluster;
-use cocoa::data::{cov_like, Dataset, Partition, PartitionStrategy};
-use cocoa::loss::LossKind;
-use cocoa::netsim::NetworkModel;
+use cocoa::data::cov_like;
 use cocoa::objective;
-use cocoa::solvers::SolverKind;
+use cocoa::prelude::*;
 
 fn data() -> Dataset {
     cov_like(400, 10, 0.08, 42)
 }
 
-fn cluster(data: &Dataset, k: usize, net: NetworkModel, seed: u64) -> Cluster {
-    let part = Partition::new(PartitionStrategy::Contiguous, data.n(), k, 0);
-    Cluster::build(
-        data,
-        &part,
-        LossKind::Hinge,
-        0.02,
-        SolverKind::Sdca,
-        Backend::Native,
-        "artifacts",
-        net,
-        seed,
-    )
-    .unwrap()
+fn session(data: &Dataset, k: usize, net: NetworkModel, seed: u64) -> Session {
+    Trainer::on(data)
+        .workers(k)
+        .loss(LossKind::Hinge)
+        .lambda(0.02)
+        .network(net)
+        .seed(seed)
+        .label("cov")
+        .build()
+        .unwrap()
 }
 
 fn p_star(data: &Dataset) -> f64 {
@@ -42,31 +34,14 @@ fn cocoa_reaches_milli_accuracy_with_fewer_vectors() {
     let data = data();
     let p = p_star(&data);
     let h = 100; // full local pass per round (n_k = 100 at K = 4)
-    let budget = Budget { rounds: 300, target_gap: 0.0, target_subopt: 5e-4 };
+    let budget = Budget::rounds(300).target_subopt(5e-4);
 
-    let mut cl = cluster(&data, 4, NetworkModel::free(), 1);
-    let cocoa_trace = run(
-        &mut cl,
-        &AlgorithmSpec::Cocoa { h, beta_k: 1.0, solver: SolverKind::Sdca },
-        budget,
-        1,
-        Some(p),
-        "cov",
-    )
-    .unwrap();
-    cl.shutdown();
-
-    let mut cl = cluster(&data, 4, NetworkModel::free(), 1);
-    let mb_trace = run(
-        &mut cl,
-        &AlgorithmSpec::MinibatchCd { h, beta_b: 1.0 },
-        budget,
-        1,
-        Some(p),
-        "cov",
-    )
-    .unwrap();
-    cl.shutdown();
+    let mut sess = session(&data, 4, NetworkModel::free(), 1);
+    sess.set_reference_optimum(Some(p));
+    let cocoa_trace = sess.run(&mut Cocoa::new(h), budget).unwrap();
+    sess.reset().unwrap();
+    let mb_trace = sess.run(&mut MinibatchCd::new(h), budget).unwrap();
+    sess.shutdown();
 
     let cocoa_v = cocoa_trace.vectors_to_subopt(1e-3);
     let mb_v = mb_trace.vectors_to_subopt(1e-3);
@@ -91,29 +66,15 @@ fn naive_cd_pays_heavy_communication_under_ec2_model() {
     let p = p_star(&data);
     let net = NetworkModel::ec2_like();
 
-    let mut cl = cluster(&data, 4, net, 2);
-    let cocoa_trace = run(
-        &mut cl,
-        &AlgorithmSpec::Cocoa { h: 100, beta_k: 1.0, solver: SolverKind::Sdca },
-        Budget::rounds(10),
-        1,
-        Some(p),
-        "cov",
-    )
-    .unwrap();
-    cl.shutdown();
-
-    let mut cl = cluster(&data, 4, net, 2);
-    let naive_trace = run(
-        &mut cl,
-        &AlgorithmSpec::NaiveCd,
-        Budget::rounds(1000), // 1000 rounds x 1 step = same steps as cocoa
-        50,
-        Some(p),
-        "cov",
-    )
-    .unwrap();
-    cl.shutdown();
+    let mut sess = session(&data, 4, net, 2);
+    sess.set_reference_optimum(Some(p));
+    let cocoa_trace = sess.run(&mut Cocoa::new(100), Budget::rounds(10)).unwrap();
+    sess.reset().unwrap();
+    // 1000 rounds x 1 step = same steps as cocoa
+    let naive_trace = sess
+        .run(&mut NaiveCd, Budget::rounds(1000).eval_every(50))
+        .unwrap();
+    sess.shutdown();
 
     let cocoa_last = cocoa_trace.rows.last().unwrap();
     let naive_last = naive_trace.rows.last().unwrap();
@@ -136,17 +97,14 @@ fn aggressive_beta_b_destabilizes_minibatch_cd() {
     let b_total = (h * 4) as f64;
 
     let run_beta = |beta: f64, seed: u64| {
-        let mut cl = cluster(&data, 4, NetworkModel::free(), seed);
-        let tr = run(
-            &mut cl,
-            &AlgorithmSpec::MinibatchCd { h, beta_b: beta },
-            Budget::rounds(25),
-            25,
-            None,
-            "cov",
-        )
-        .unwrap();
-        cl.shutdown();
+        let mut sess = session(&data, 4, NetworkModel::free(), seed);
+        let tr = sess
+            .run(
+                &mut MinibatchCd::new(h).beta_b(beta),
+                Budget::rounds(25).eval_every(25),
+            )
+            .unwrap();
+        sess.shutdown();
         tr.rows.last().unwrap().gap
     };
 
@@ -164,31 +122,16 @@ fn one_shot_averaging_leaves_residual_bias() {
     // correlated data — one_shot must end with a materially larger gap
     // than a few CoCoA rounds at the same local effort.
     let data = data();
-    let mut cl = cluster(&data, 4, NetworkModel::free(), 4);
-    let one_shot = run(
-        &mut cl,
-        &AlgorithmSpec::OneShotAvg,
-        Budget::rounds(1),
-        1,
-        None,
-        "cov",
-    )
-    .unwrap();
-    cl.shutdown();
+    let mut sess = session(&data, 4, NetworkModel::free(), 4);
+    let one_shot = sess.run(&mut OneShotAvg, Budget::rounds(1)).unwrap();
     let bias_gap = one_shot.rows.last().unwrap().gap;
     assert!(bias_gap > 1e-4, "one-shot suspiciously optimal: {bias_gap}");
 
-    let mut cl = cluster(&data, 4, NetworkModel::free(), 4);
-    let cocoa_tr = run(
-        &mut cl,
-        &AlgorithmSpec::Cocoa { h: 100, beta_k: 1.0, solver: SolverKind::Sdca },
-        Budget::rounds(30),
-        30,
-        None,
-        "cov",
-    )
-    .unwrap();
-    cl.shutdown();
+    sess.reset().unwrap();
+    let cocoa_tr = sess
+        .run(&mut Cocoa::new(100), Budget::rounds(30).eval_every(30))
+        .unwrap();
+    sess.shutdown();
     let cocoa_gap = cocoa_tr.rows.last().unwrap().gap;
     assert!(
         cocoa_gap < bias_gap * 0.5,
@@ -203,17 +146,18 @@ fn local_sgd_beats_minibatch_sgd() {
     let data = data();
     let p = p_star(&data);
     let h = 100;
-    let budget = Budget::rounds(40);
+    let budget = Budget::rounds(40).eval_every(40);
 
-    let run_spec = |spec: AlgorithmSpec, seed: u64| {
-        let mut cl = cluster(&data, 4, NetworkModel::free(), seed);
-        let tr = run(&mut cl, &spec, budget, 40, Some(p), "cov").unwrap();
-        cl.shutdown();
+    let run_algo = |algo: &mut dyn Algorithm, seed: u64| {
+        let mut sess = session(&data, 4, NetworkModel::free(), seed);
+        sess.set_reference_optimum(Some(p));
+        let tr = sess.run(algo, budget).unwrap();
+        sess.shutdown();
         tr.rows.last().unwrap().primal_subopt
     };
 
-    let local = run_spec(AlgorithmSpec::LocalSgd { h, beta: 1.0 }, 5);
-    let frozen = run_spec(AlgorithmSpec::MinibatchSgd { h, beta: 1.0 }, 5);
+    let local = run_algo(&mut LocalSgd::new(h), 5);
+    let frozen = run_algo(&mut MinibatchSgd::new(h), 5);
     assert!(
         local < frozen,
         "local-SGD {local} should beat mini-batch SGD {frozen}"
@@ -223,32 +167,27 @@ fn local_sgd_beats_minibatch_sgd() {
 #[test]
 fn h_sweep_shows_communication_compute_tradeoff() {
     // Figure 3: under a costly network, larger H converges faster in
-    // simulated time (up to a point); under a free network, the ordering
-    // by *rounds* favors large H too but by time it's much flatter.
+    // simulated time (up to a point) — every grid point warm-starts the
+    // same session.
     let data = data();
     let p = p_star(&data);
-    let net = NetworkModel::ec2_like();
+    let mut sess = session(&data, 4, NetworkModel::ec2_like(), 6);
+    sess.set_reference_optimum(Some(p));
     let mut time_at_h = Vec::new();
     for h in [1usize, 10, 100] {
-        let mut cl = cluster(&data, 4, net, 6);
-        let tr = run(
-            &mut cl,
-            &AlgorithmSpec::Cocoa { h, beta_k: 1.0, solver: SolverKind::Sdca },
-            Budget { rounds: 4000, target_gap: 0.0, target_subopt: 1e-3 },
-            10,
-            Some(p),
-            "cov",
-        )
-        .unwrap();
-        cl.shutdown();
+        sess.reset().unwrap();
+        let tr = sess
+            .run(
+                &mut Cocoa::new(h),
+                Budget::until_subopt(1e-3).max_rounds(4000).eval_every(10),
+            )
+            .unwrap();
         time_at_h.push((h, tr.time_to_subopt(1e-3)));
     }
+    sess.shutdown();
     let t1 = time_at_h[0].1;
     let t100 = time_at_h[2].1;
-    assert!(
-        t100.is_some(),
-        "H=100 never reached target: {time_at_h:?}"
-    );
+    assert!(t100.is_some(), "H=100 never reached target: {time_at_h:?}");
     if let (Some(a), Some(b)) = (t1, t100) {
         assert!(b < a, "H=100 ({b}) should beat H=1 ({a}) on a slow network");
     }
@@ -259,20 +198,18 @@ fn cocoa_plus_adding_is_safe_and_competitive() {
     // The extension resolving the conclusion's open problem: beta_K = K
     // adding with sigma' = K scaled subproblems must (a) not diverge and
     // (b) be at least comparable to safe averaging per round (it typically
-    // wins as K grows).
+    // wins as K grows). Aggregation::Add, end-to-end.
     let data = data();
     let h = 100;
-    let run_spec = |spec: AlgorithmSpec, seed: u64| {
-        let mut cl = cluster(&data, 8, NetworkModel::free(), seed);
-        let tr = run(&mut cl, &spec, Budget::rounds(20), 20, None, "cov").unwrap();
-        cl.shutdown();
-        tr.rows.last().unwrap().gap
-    };
-    let plain = run_spec(
-        AlgorithmSpec::Cocoa { h, beta_k: 1.0, solver: SolverKind::Sdca },
-        7,
-    );
-    let plus = run_spec(AlgorithmSpec::CocoaPlus { h }, 7);
+    let mut sess = session(&data, 8, NetworkModel::free(), 7);
+    let budget = Budget::rounds(20).eval_every(20);
+    let plain_tr = sess.run(&mut Cocoa::new(h), budget).unwrap();
+    sess.reset().unwrap();
+    let plus_tr = sess.run(&mut Cocoa::adding(h), budget).unwrap();
+    sess.shutdown();
+    assert_eq!(plus_tr.algorithm, "cocoa_plus");
+    let plain = plain_tr.rows.last().unwrap().gap;
+    let plus = plus_tr.rows.last().unwrap().gap;
     assert!(plus.is_finite() && plus > -1e-9, "cocoa+ diverged: {plus}");
     assert!(
         plus < plain * 2.0,
@@ -282,25 +219,31 @@ fn cocoa_plus_adding_is_safe_and_competitive() {
 
 #[test]
 fn unsafe_adding_without_sigma_scaling_is_worse() {
-    // beta_K = K *without* the sigma' correction (plain Cocoa with
-    // beta_k = K) is the aggressive update the paper warns about; on
+    // beta_K = K *without* the sigma' correction (plain averaging scaled
+    // to beta_k = K) is the aggressive update the paper warns about; on
     // correlated data it must do worse than CoCoA+ at the same
     // aggregation aggressiveness.
     let data = data();
     let h = 100;
     let k = 8;
-    let run_gap = |spec: AlgorithmSpec| {
-        let mut cl = cluster(&data, k, NetworkModel::free(), 9);
-        let tr = run(&mut cl, &spec, Budget::rounds(15), 15, None, "cov").unwrap();
-        cl.shutdown();
-        tr.rows.last().unwrap().gap
-    };
-    let unsafe_add = run_gap(AlgorithmSpec::Cocoa {
-        h,
-        beta_k: k as f64,
-        solver: SolverKind::Sdca,
-    });
-    let safe_add = run_gap(AlgorithmSpec::CocoaPlus { h });
+    let mut sess = session(&data, k, NetworkModel::free(), 9);
+    let budget = Budget::rounds(15).eval_every(15);
+    let unsafe_add = sess
+        .run(&mut Cocoa::averaging(h, k as f64), budget)
+        .unwrap()
+        .rows
+        .last()
+        .unwrap()
+        .gap;
+    sess.reset().unwrap();
+    let safe_add = sess
+        .run(&mut Cocoa::adding(h), budget)
+        .unwrap()
+        .rows
+        .last()
+        .unwrap()
+        .gap;
+    sess.shutdown();
     assert!(
         !unsafe_add.is_finite() || unsafe_add > safe_add,
         "unscaled adding ({unsafe_add}) should underperform cocoa+ ({safe_add})"

@@ -1,44 +1,31 @@
 //! Coordinator integration: the leader/worker runtime against the paper's
-//! Algorithm-1 semantics, across partitions, losses, K, and backends.
+//! Algorithm-1 semantics, across partitions, losses, K, and backends —
+//! driven through the `Session` facade's low-level dispatch/commit hatch.
 
-use cocoa::config::Backend;
-use cocoa::coordinator::{Cluster, LocalWork};
-use cocoa::data::{cov_like, orthogonal_blocks, rcv1_like, Partition, PartitionStrategy};
-use cocoa::loss::LossKind;
-use cocoa::netsim::NetworkModel;
+use cocoa::coordinator::LocalWork;
+use cocoa::data::{cov_like, orthogonal_blocks, rcv1_like};
 use cocoa::objective;
-use cocoa::solvers::SolverKind;
+use cocoa::prelude::*;
 
-fn build(
-    data: &cocoa::data::Dataset,
-    k: usize,
-    loss: LossKind,
-    lambda: f64,
-    seed: u64,
-) -> Cluster {
-    let part = Partition::new(PartitionStrategy::Contiguous, data.n(), k, 0);
-    Cluster::build(
-        &data.clone(),
-        &part,
-        loss,
-        lambda,
-        SolverKind::Sdca,
-        Backend::Native,
-        "artifacts",
-        NetworkModel::free(),
-        seed,
-    )
-    .unwrap()
+fn build(data: &Dataset, k: usize, loss: LossKind, lambda: f64, seed: u64) -> Session {
+    Trainer::on(data)
+        .workers(k)
+        .loss(loss)
+        .lambda(lambda)
+        .network(NetworkModel::free())
+        .seed(seed)
+        .build()
+        .unwrap()
 }
 
-/// Run T CoCoA rounds and return the gap trajectory.
-fn run_cocoa(cluster: &mut Cluster, t: usize, h: usize) -> Vec<f64> {
-    let k = cluster.k as f64;
-    let mut gaps = vec![cluster.evaluate().unwrap().gap];
+/// Run T CoCoA rounds by hand and return the gap trajectory.
+fn run_cocoa(session: &mut Session, t: usize, h: usize) -> Vec<f64> {
+    let k = session.k() as f64;
+    let mut gaps = vec![session.evaluate().unwrap().gap];
     for _ in 0..t {
-        let replies = cluster.dispatch(|_| LocalWork::DualRound { h }).unwrap();
-        cluster.commit(&replies, 1.0 / k).unwrap();
-        gaps.push(cluster.evaluate().unwrap().gap);
+        let replies = session.dispatch(|_| LocalWork::DualRound { h }).unwrap();
+        session.commit(&replies, 1.0 / k).unwrap();
+        gaps.push(session.evaluate().unwrap().gap);
     }
     gaps
 }
@@ -52,8 +39,8 @@ fn converges_on_every_loss() {
         LossKind::Squared,
         LossKind::Logistic,
     ] {
-        let mut cluster = build(&data, 3, loss, 0.05, 2);
-        let gaps = run_cocoa(&mut cluster, 12, 80);
+        let mut session = build(&data, 3, loss, 0.05, 2);
+        let gaps = run_cocoa(&mut session, 12, 80);
         assert!(
             gaps.last().unwrap() < &(gaps[0] * 0.2),
             "{loss:?}: gap {} -> {}",
@@ -63,17 +50,17 @@ fn converges_on_every_loss() {
         for g in &gaps {
             assert!(*g >= -1e-9, "{loss:?}: negative gap {g}");
         }
-        cluster.shutdown();
+        session.shutdown();
     }
 }
 
 #[test]
 fn converges_on_sparse_data() {
     let data = rcv1_like(300, 500, 6, 0.1, 3);
-    let mut cluster = build(&data, 4, LossKind::Hinge, 0.02, 4);
-    let gaps = run_cocoa(&mut cluster, 15, 150);
+    let mut session = build(&data, 4, LossKind::Hinge, 0.02, 4);
+    let gaps = run_cocoa(&mut session, 15, 150);
     assert!(gaps.last().unwrap() < &(gaps[0] * 0.3));
-    cluster.shutdown();
+    session.shutdown();
 }
 
 #[test]
@@ -81,10 +68,10 @@ fn k_equals_one_matches_serial_sdca_rate() {
     // K = 1 CoCoA with beta = 1 is exactly serial SDCA: the gap after the
     // same number of total steps must match a direct serial run closely.
     let data = cov_like(100, 6, 0.1, 5);
-    let mut cluster = build(&data, 1, LossKind::Hinge, 0.05, 6);
-    let gaps = run_cocoa(&mut cluster, 5, 100);
+    let mut session = build(&data, 1, LossKind::Hinge, 0.05, 6);
+    let gaps = run_cocoa(&mut session, 5, 100);
     assert!(gaps.last().unwrap() < &0.25, "K=1 run too slow: {gaps:?}");
-    cluster.shutdown();
+    session.shutdown();
 }
 
 #[test]
@@ -95,25 +82,22 @@ fn partition_strategies_all_converge() {
         PartitionStrategy::RoundRobin,
         PartitionStrategy::Random,
     ] {
-        let part = Partition::new(strategy, 90, 3, 11);
-        let mut cluster = Cluster::build(
-            &data,
-            &part,
-            LossKind::Hinge,
-            0.05,
-            SolverKind::Sdca,
-            Backend::Native,
-            "artifacts",
-            NetworkModel::free(),
-            8,
-        )
-        .unwrap();
-        let gaps = run_cocoa(&mut cluster, 10, 60);
+        let mut session = Trainer::on(&data)
+            .workers(3)
+            .partition_strategy(strategy)
+            .partition_seed(11)
+            .loss(LossKind::Hinge)
+            .lambda(0.05)
+            .network(NetworkModel::free())
+            .seed(8)
+            .build()
+            .unwrap();
+        let gaps = run_cocoa(&mut session, 10, 60);
         assert!(
             gaps.last().unwrap() < &(gaps[0] * 0.3),
             "{strategy:?} failed to converge"
         );
-        cluster.shutdown();
+        session.shutdown();
     }
 }
 
@@ -123,44 +107,40 @@ fn orthogonal_data_converges_like_k1() {
     // matches the ideal; with exact local solves one round is optimal.
     let k = 3;
     let data = orthogonal_blocks(k, 12, 4, 9);
-    let part = Partition::new(PartitionStrategy::Contiguous, data.n(), k, 0);
-    let mut cluster = Cluster::build(
-        &data,
-        &part,
-        LossKind::SmoothedHinge { gamma: 1.0 },
-        0.05,
-        SolverKind::Exact,
-        Backend::Native,
-        "artifacts",
-        NetworkModel::free(),
-        10,
-    )
-    .unwrap();
+    let mut session = Trainer::on(&data)
+        .workers(k)
+        .loss(LossKind::SmoothedHinge { gamma: 1.0 })
+        .lambda(0.05)
+        .solver(SolverKind::Exact)
+        .network(NetworkModel::free())
+        .seed(10)
+        .build()
+        .unwrap();
     // exact local solve + independent blocks: after one full round with
     // scale 1 (note: NOT 1/K, valid only because the blocks are orthogonal)
-    let replies = cluster.dispatch(|_| LocalWork::ExactSolve).unwrap();
-    cluster.commit(&replies, 1.0).unwrap();
-    let ev = cluster.evaluate().unwrap();
+    let replies = session.dispatch(|_| LocalWork::ExactSolve).unwrap();
+    session.commit(&replies, 1.0).unwrap();
+    let ev = session.evaluate().unwrap();
     assert!(ev.gap < 1e-4, "orthogonal one-round gap = {}", ev.gap);
-    cluster.shutdown();
+    session.shutdown();
 }
 
 #[test]
 fn comm_accounting_is_exact() {
     let data = cov_like(60, 5, 0.1, 11);
-    let mut cluster = build(&data, 4, LossKind::Hinge, 0.1, 12);
+    let mut session = build(&data, 4, LossKind::Hinge, 0.1, 12);
     for t in 1..=7 {
-        let replies = cluster.dispatch(|_| LocalWork::DualRound { h: 5 }).unwrap();
-        cluster.commit(&replies, 0.25).unwrap();
-        assert_eq!(cluster.stats.rounds, t);
-        assert_eq!(cluster.stats.vectors, 8 * t); // 2K per round
-        assert_eq!(cluster.stats.inner_steps, 20 * t); // K*h
+        let replies = session.dispatch(|_| LocalWork::DualRound { h: 5 }).unwrap();
+        session.commit(&replies, 0.25).unwrap();
+        assert_eq!(session.stats().rounds, t);
+        assert_eq!(session.stats().vectors, 8 * t); // 2K per round
+        assert_eq!(session.stats().inner_steps, 20 * t); // K*h
         assert_eq!(
-            cluster.stats.bytes,
-            cluster.stats.vectors * (5 * 8) as u64
+            session.stats().bytes,
+            session.stats().vectors * (5 * 8) as u64
         );
     }
-    cluster.shutdown();
+    session.shutdown();
 }
 
 #[test]
@@ -170,30 +150,30 @@ fn leader_w_equals_a_alpha_throughout() {
     // structure maintained requires w == A alpha exactly; a drift would
     // show up as a persistent gap floor or negative gap.
     let data = cov_like(80, 6, 0.1, 13);
-    let mut cluster = build(&data, 2, LossKind::Squared, 0.1, 14);
+    let mut session = build(&data, 2, LossKind::Squared, 0.1, 14);
     for _ in 0..10 {
-        let replies = cluster.dispatch(|_| LocalWork::DualRound { h: 40 }).unwrap();
-        cluster.commit(&replies, 0.5).unwrap();
-        let ev = cluster.evaluate().unwrap();
+        let replies = session.dispatch(|_| LocalWork::DualRound { h: 40 }).unwrap();
+        session.commit(&replies, 0.5).unwrap();
+        let ev = session.evaluate().unwrap();
         assert!(ev.gap >= -1e-9, "negative gap: w drifted from A alpha");
     }
     // squared loss: near-optimum the gap closes fully, which is impossible
     // if w and alpha were inconsistent
-    let final_gap = cluster.evaluate().unwrap().gap;
+    let final_gap = session.evaluate().unwrap().gap;
     assert!(final_gap < 0.05, "gap floor {final_gap} suggests drift");
-    cluster.shutdown();
+    session.shutdown();
 }
 
 #[test]
 fn mixed_work_rounds_are_rejected_cleanly() {
     // dispatching a new dual round with an uncommitted pending update must
-    // surface a Fatal error, not silently corrupt state
+    // surface a typed Runtime error, not silently corrupt state
     let data = cov_like(40, 4, 0.1, 15);
-    let mut cluster = build(&data, 2, LossKind::Hinge, 0.1, 16);
-    let _replies = cluster.dispatch(|_| LocalWork::DualRound { h: 5 }).unwrap();
+    let mut session = build(&data, 2, LossKind::Hinge, 0.1, 16);
+    let _replies = session.dispatch(|_| LocalWork::DualRound { h: 5 }).unwrap();
     // no commit here — next dispatch must fail
-    let err = cluster.dispatch(|_| LocalWork::DualRound { h: 5 });
-    assert!(err.is_err());
+    let err = session.dispatch(|_| LocalWork::DualRound { h: 5 });
+    assert!(matches!(err, Err(Error::Runtime { .. })));
 }
 
 #[test]
@@ -201,26 +181,26 @@ fn eval_consistent_with_direct_objective() {
     // distributed evaluation (partial sums over workers) must equal the
     // single-machine objective at the same (w, alpha)
     let data = cov_like(70, 5, 0.1, 17);
-    let mut cluster = build(&data, 3, LossKind::Hinge, 0.08, 18);
-    let replies = cluster.dispatch(|_| LocalWork::DualRound { h: 30 }).unwrap();
-    cluster.commit(&replies, 1.0 / 3.0).unwrap();
-    let ev = cluster.evaluate().unwrap();
-    let p_direct = objective::primal(&data, &cluster.w, 0.08, &cocoa::loss::Hinge);
+    let mut session = build(&data, 3, LossKind::Hinge, 0.08, 18);
+    let replies = session.dispatch(|_| LocalWork::DualRound { h: 30 }).unwrap();
+    session.commit(&replies, 1.0 / 3.0).unwrap();
+    let ev = session.evaluate().unwrap();
+    let p_direct = objective::primal(&data, session.w(), 0.08, &cocoa::loss::Hinge);
     assert!((ev.primal - p_direct).abs() < 1e-10);
-    cluster.shutdown();
+    session.shutdown();
 }
 
 #[test]
 fn checkpoint_resume_is_bit_identical() {
     // Train 4 rounds, checkpoint, train 4 more; separately restore the
-    // checkpoint into a FRESH cluster and train the same 4 rounds: the
+    // checkpoint into a FRESH session and train the same 4 rounds: the
     // native backend must produce bit-identical w (alpha + rng state are
     // both captured).
     let data = cov_like(90, 7, 0.1, 41);
-    let run_rounds = |cluster: &mut Cluster, t: usize| {
+    let run_rounds = |session: &mut Session, t: usize| {
         for _ in 0..t {
-            let replies = cluster.dispatch(|_| LocalWork::DualRound { h: 30 }).unwrap();
-            cluster.commit(&replies, 1.0 / 3.0).unwrap();
+            let replies = session.dispatch(|_| LocalWork::DualRound { h: 30 }).unwrap();
+            session.commit(&replies, 1.0 / 3.0).unwrap();
         }
     };
 
@@ -228,7 +208,7 @@ fn checkpoint_resume_is_bit_identical() {
     run_rounds(&mut original, 4);
     let cp = original.checkpoint().unwrap();
     run_rounds(&mut original, 4);
-    let w_reference = original.w.clone();
+    let w_reference = original.w().to_vec();
     original.shutdown();
 
     // persist + reload through the file format
@@ -237,12 +217,12 @@ fn checkpoint_resume_is_bit_identical() {
     let reloaded = cocoa::coordinator::Checkpoint::load(&path).unwrap();
     assert_eq!(cp, reloaded);
 
-    // a fresh cluster with a DIFFERENT seed — restore overwrites it all
+    // a fresh session with a DIFFERENT seed — restore overwrites it all
     let mut resumed = build(&data, 3, LossKind::Hinge, 0.05, 999);
     resumed.restore(&reloaded).unwrap();
     run_rounds(&mut resumed, 4);
-    assert_eq!(resumed.w, w_reference, "resumed trajectory diverged");
-    assert_eq!(resumed.stats.rounds, 8);
+    assert_eq!(resumed.w(), w_reference.as_slice(), "resumed trajectory diverged");
+    assert_eq!(resumed.stats().rounds, 8);
     resumed.shutdown();
 }
 
@@ -263,20 +243,20 @@ fn stragglers_inflate_simulated_time_only() {
     // A straggling worker slows the simulated barrier but must not change
     // the optimization trajectory (bulk-synchronous semantics).
     let data = cov_like(80, 6, 0.1, 61);
-    let run_with = |stragglers: cocoa::netsim::StragglerModel| {
-        let mut cluster = build(&data, 4, LossKind::Hinge, 0.05, 62);
-        cluster.stragglers = stragglers;
+    let run_with = |stragglers: StragglerModel| {
+        let mut session = build(&data, 4, LossKind::Hinge, 0.05, 62);
+        session.set_stragglers(stragglers);
         for _ in 0..6 {
-            let replies = cluster.dispatch(|_| LocalWork::DualRound { h: 40 }).unwrap();
-            cluster.commit(&replies, 0.25).unwrap();
+            let replies = session.dispatch(|_| LocalWork::DualRound { h: 40 }).unwrap();
+            session.commit(&replies, 0.25).unwrap();
         }
-        let gap = cluster.evaluate().unwrap().gap;
-        let sim = cluster.stats.sim_time_s;
-        cluster.shutdown();
+        let gap = session.evaluate().unwrap().gap;
+        let sim = session.stats().sim_time_s;
+        session.shutdown();
         (gap, sim)
     };
-    let (gap_clean, sim_clean) = run_with(cocoa::netsim::StragglerModel::none());
-    let (gap_slow, sim_slow) = run_with(cocoa::netsim::StragglerModel {
+    let (gap_clean, sim_clean) = run_with(StragglerModel::none());
+    let (gap_slow, sim_slow) = run_with(StragglerModel {
         probability: 1.0,
         slowdown: 20.0,
         seed: 7,

@@ -3,14 +3,15 @@
 //! native rust solver. Requires `make artifacts` to have run.
 
 use cocoa::config::Backend;
-use cocoa::coordinator::{Cluster, LocalWork};
-use cocoa::data::{cov_like, Partition, PartitionStrategy};
+use cocoa::coordinator::LocalWork;
+use cocoa::data::cov_like;
 use cocoa::loss::{Hinge, LossKind};
 use cocoa::netsim::NetworkModel;
 use cocoa::objective;
 use cocoa::runtime::{Engine, Manifest, PjrtLocalSdca};
-use cocoa::solvers::{Block, LocalDualMethod, LocalSdca, Sampling, SolverKind};
+use cocoa::solvers::{Block, LocalDualMethod, LocalSdca, Sampling};
 use cocoa::util::Rng;
+use cocoa::Trainer;
 
 fn artifacts_dir() -> std::path::PathBuf {
     std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts")
@@ -172,26 +173,23 @@ fn full_cluster_runs_on_pjrt_backend() {
     }
     // 2 workers x 128 rows: each block matches the 128x16 artifact
     let data = cov_like(256, 16, 0.1, 5);
-    let part = Partition::new(PartitionStrategy::Contiguous, 256, 2, 0);
-    let mut cluster = Cluster::build(
-        &data,
-        &part,
-        LossKind::Hinge,
-        0.01,
-        SolverKind::Sdca,
-        Backend::Pjrt,
-        artifacts_dir().to_str().unwrap(),
-        NetworkModel::free(),
-        13,
-    )
-    .unwrap();
-    let g0 = cluster.evaluate().unwrap().gap;
+    let mut session = Trainer::on(&data)
+        .workers(2)
+        .loss(LossKind::Hinge)
+        .lambda(0.01)
+        .backend(Backend::Pjrt)
+        .artifacts_dir(artifacts_dir().to_str().unwrap())
+        .network(NetworkModel::free())
+        .seed(13)
+        .build()
+        .unwrap();
+    let g0 = session.evaluate().unwrap().gap;
     for _ in 0..6 {
-        let replies = cluster.dispatch(|_| LocalWork::DualRound { h: 128 }).unwrap();
-        cluster.commit(&replies, 0.5).unwrap();
+        let replies = session.dispatch(|_| LocalWork::DualRound { h: 128 }).unwrap();
+        session.commit(&replies, 0.5).unwrap();
     }
-    let ev = cluster.evaluate().unwrap();
+    let ev = session.evaluate().unwrap();
     assert!(ev.gap < g0 * 0.5, "gap barely moved on PJRT backend: {g0} -> {}", ev.gap);
     assert!(ev.gap >= -1e-6);
-    cluster.shutdown();
+    session.shutdown();
 }

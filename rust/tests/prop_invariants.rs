@@ -269,3 +269,40 @@ fn prop_csr_dense_row_ops_agree() {
         }
     });
 }
+
+#[test]
+fn prop_toml_algorithms_instantiate_equivalently() {
+    // Config-layer migration guard: for every AlgorithmSpec the TOML
+    // parser accepts, the builder path (AlgorithmSpec::instantiate) must
+    // construct an Algorithm with identical name, H, and beta.
+    use cocoa::algorithms::Algorithm;
+    use cocoa::config::ExperimentConfig;
+
+    for_all("toml -> Algorithm equivalence", |_seed, rng| {
+        let h = 1 + rng.gen_range(500);
+        let beta = 0.25 * (1 + rng.gen_range(32)) as f64;
+        let sections = [
+            format!("name = \"cocoa\"\nh = {h}\nbeta_k = {beta}"),
+            format!("name = \"cocoa\"\nh = {h}\nsolver = \"sdca_perm\""),
+            format!("name = \"cocoa_plus\"\nh = {h}"),
+            format!("name = \"minibatch_cd\"\nh = {h}\nbeta_b = {beta}"),
+            format!("name = \"minibatch_sgd\"\nh = {h}\nbeta = {beta}"),
+            format!("name = \"local_sgd\"\nh = {h}\nbeta = {beta}"),
+            "name = \"naive_cd\"".to_string(),
+            "name = \"naive_sgd\"".to_string(),
+            "name = \"one_shot_avg\"".to_string(),
+        ];
+        for section in sections {
+            let text = format!(
+                "lambda = 0.1\n[dataset]\nkind = \"cov_like\"\nn = 10\nd = 2\n\
+                 [partition]\nk = 2\n[algorithm]\n{section}\n\
+                 [loss]\nkind = \"hinge\"\n[run]\nrounds = 1\n"
+            );
+            let cfg = ExperimentConfig::from_toml(&text).unwrap();
+            let algo = cfg.algorithm.instantiate();
+            assert_eq!(algo.name(), cfg.algorithm.name(), "{section}");
+            assert_eq!(algo.h(), cfg.algorithm.h(), "{section}");
+            assert_eq!(algo.beta(), cfg.algorithm.beta(), "{section}");
+        }
+    });
+}
