@@ -2,7 +2,7 @@
 # CI gate for the cocoa crate: build, test, lint, format.
 #
 #   ./ci.sh            # everything
-#   ./ci.sh --fast     # skip clippy/fmt (tier-1 only)
+#   ./ci.sh --fast     # skip clippy/fmt (tier-1 + determinism gate)
 #
 # Tier-1 (the driver's gate) is exactly: cargo build --release && cargo test -q
 
@@ -16,6 +16,22 @@ cargo build --release
 
 step "cargo test -q"
 cargo test -q
+
+# Seeded-determinism gate: the prop_transport suite writes a fingerprint of
+# a seeded SimNet run (gap/dual/primal bit patterns, byte totals, final-w
+# hash) to target/determinism/trace_<seed>.csv. Run it twice with the seed
+# pinned and diff — any nondeterminism in the transport, the coordinator's
+# reduction order, or the byte accounting shows up here.
+step "seeded determinism (same seed => identical trace + byte totals)"
+DET_SEED="${CARGO_TEST_SEED:-42}"
+DET_FILE="target/determinism/trace_${DET_SEED}.csv"
+rm -f "$DET_FILE"
+CARGO_TEST_SEED="$DET_SEED" cargo test -q --test prop_transport seeded_determinism_artifact
+cp "$DET_FILE" /tmp/cocoa_determinism_run1.csv
+rm -f "$DET_FILE"
+CARGO_TEST_SEED="$DET_SEED" cargo test -q --test prop_transport seeded_determinism_artifact
+diff /tmp/cocoa_determinism_run1.csv "$DET_FILE"
+printf 'determinism: two seeded runs produced identical traces\n'
 
 if [[ "${1:-}" != "--fast" ]]; then
     step "cargo clippy -- -D warnings"

@@ -11,6 +11,11 @@
 //! communication gets cheaper the optimum shifts toward smaller H —
 //! exactly the "freely steer the trade-off" knob the paper motivates.
 //! One session per network; every H point warm-starts the same threads.
+//!
+//! Runs on the byte-exact `counted` transport, so the simulated time is
+//! driven by measured wire bytes (headers, sparse dw encodings) rather
+//! than the analytic vector count; the per-kind ledger of the last run is
+//! printed at the end.
 
 use cocoa::data::cov_like;
 use cocoa::prelude::*;
@@ -34,12 +39,14 @@ fn main() -> cocoa::Result<()> {
     }
     println!();
 
+    let mut last_run: Option<(u64, Vec<(String, u64, u64)>)> = None;
     for (name, net) in nets {
         let mut session = Trainer::on(&data)
             .workers(k)
             .loss(LossKind::Hinge)
             .lambda(lambda)
             .network(net)
+            .transport(TransportKind::Counted)
             .seed(5)
             .label("tradeoff")
             .build()?;
@@ -56,9 +63,28 @@ fn main() -> cocoa::Result<()> {
                 Some(t) => print!(" {:>12.3}", t),
                 None => print!(" {:>12}", "-"),
             }
+            last_run = session.ledger().map(|ledger| {
+                let rows = ledger
+                    .rows()
+                    .filter(|(_, msgs, _)| *msgs > 0)
+                    .map(|(kind, msgs, bytes)| (kind.name().to_string(), msgs, bytes))
+                    .collect();
+                (session.stats().bytes_measured, rows)
+            });
         }
         println!();
         session.shutdown();
+    }
+    if let Some((algo_bytes, rows)) = last_run {
+        println!(
+            "\nlast run (H={}, multicore): {:.2} MB of algorithm traffic on the wire;",
+            h_grid[h_grid.len() - 1],
+            algo_bytes as f64 / 1e6
+        );
+        println!("per-kind ledger (headers + sparse dw encodings, eval counted separately):");
+        for (kind, msgs, bytes) in rows {
+            println!("  {kind:<13} {msgs:>8} msgs {bytes:>14} B");
+        }
     }
     println!("\nReading: on the EC2-like network (5 ms rounds) H must be large;");
     println!("on multicore (memory-speed rounds) small H catches up — the paper's");

@@ -14,6 +14,7 @@ use cocoa::algorithms::{Budget, Cocoa};
 use cocoa::config::Backend;
 use cocoa::experiments::{self, cached_optimum, figures, make_session, Profile};
 use cocoa::loss::LossKind;
+use cocoa::transport::TransportKind;
 use cocoa::util::bench::time_once;
 
 fn main() {
@@ -30,14 +31,14 @@ fn main() {
     });
     println!("\nFigure 3: effect of H on CoCoA ({} K={})", ds.name, ds.k);
     println!(
-        "{:>8} {:>10} {:>14} {:>14} {:>16}",
-        "H", "rounds", "final subopt", "sim time s", "vectors total"
+        "{:>8} {:>10} {:>14} {:>14} {:>16} {:>16}",
+        "H", "rounds", "final subopt", "sim time s", "vectors total", "measured bytes"
     );
     for (h, tr) in &runs {
         let last = tr.rows.last().unwrap();
         println!(
-            "{:>8} {:>10} {:>14.2e} {:>14.3} {:>16}",
-            h, last.round, last.primal_subopt, last.sim_time_s, last.vectors
+            "{:>8} {:>10} {:>14.2e} {:>14.3} {:>16} {:>16}",
+            h, last.round, last.primal_subopt, last.sim_time_s, last.vectors, last.bytes_measured
         );
     }
 
@@ -47,8 +48,15 @@ fn main() {
     let grid: Vec<usize> = runs.iter().map(|(h, _)| *h).collect();
     let ((), cold_secs) = time_once("fig3 H sweep (cold: rebuild per H)", || {
         for &h in &grid {
-            let mut session =
-                make_session(ds, LossKind::Hinge, Backend::Native, "artifacts", 19).unwrap();
+            let mut session = make_session(
+                ds,
+                LossKind::Hinge,
+                Backend::Native,
+                "artifacts",
+                19,
+                TransportKind::Counted,
+            )
+            .unwrap();
             session.set_reference_optimum(Some(p_star));
             let trace = session.run(&mut Cocoa::new(h), Budget::rounds(120)).unwrap();
             trace

@@ -99,11 +99,39 @@ fn main() {
         black_box(objective::block_conj_sum(&block.data, &alpha0, &Hinge));
     });
 
+    // --- transport wire format: sparse delta-encoding of RoundReply.dw ---
+    {
+        use cocoa::transport::{decode_dw, encode_dw};
+        let dense_dw: Vec<f64> = (0..54).map(|i| (i as f64).cos()).collect();
+        let mut sparse_dw = vec![0.0f64; 10_000];
+        for i in (0..10_000).step_by(800) {
+            sparse_dw[i] = (i as f64 + 1.0).sin(); // ~13 nnz, rcv1-like reply
+        }
+        bench("encode_dw dense d=54", 30, 1.0, || {
+            black_box(encode_dw(&dense_dw));
+        });
+        bench("encode_dw sparse d=10k nnz~13", 30, 1.0, || {
+            black_box(encode_dw(&sparse_dw));
+        });
+        let enc_sparse = encode_dw(&sparse_dw);
+        let enc_dense = encode_dw(&dense_dw);
+        bench("decode_dw sparse d=10k", 30, 1.0, || {
+            black_box(decode_dw(&enc_sparse));
+        });
+        println!(
+            "  dw wire sizes: dense d=54 -> {} B; sparse d=10k -> {} B (vs {} B dense)",
+            enc_dense.len(),
+            enc_sparse.len(),
+            1 + 4 + 8 * 10_000,
+        );
+    }
+
     // --- coordinator round overhead (dispatch + gather + commit, H=0) ---
     {
         use cocoa::coordinator::LocalWork;
         use cocoa::loss::LossKind;
         use cocoa::netsim::NetworkModel;
+        use cocoa::transport::TransportKind;
         use cocoa::Trainer;
         let data = cov_like(256, 54, 0.1, 9);
         let mut session = Trainer::on(&data)
@@ -128,6 +156,27 @@ fn main() {
             session.commit(&replies, 0.25).unwrap();
         });
         session.shutdown();
+        // same round loop on the byte-exact transport: the delta vs the
+        // inproc round-overhead bench above is the cost of counting
+        let mut counted = Trainer::on(&data)
+            .workers(4)
+            .loss(LossKind::Hinge)
+            .lambda(0.01)
+            .network(NetworkModel::free())
+            .transport(TransportKind::Counted)
+            .seed(10)
+            .build()
+            .unwrap();
+        bench("coordinator round overhead K=4 (counted)", 15, 5.0, || {
+            let replies = counted.dispatch(|_| LocalWork::DualRound { h: 0 }).unwrap();
+            counted.commit(&replies, 0.25).unwrap();
+        });
+        println!(
+            "  counted after bench: {} B measured over {} rounds",
+            counted.stats().bytes_measured,
+            counted.stats().rounds,
+        );
+        counted.shutdown();
         bench("session build + shutdown (cold start)", 15, 5.0, || {
             let s = Trainer::on(&data)
                 .workers(4)

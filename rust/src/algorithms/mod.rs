@@ -586,7 +586,8 @@ fn record(
         sim_time_s: cluster.stats.sim_time_s,
         compute_time_s: cluster.stats.compute_s,
         vectors: cluster.stats.vectors,
-        bytes: cluster.stats.bytes,
+        bytes_modeled: cluster.stats.bytes_modeled,
+        bytes_measured: cluster.stats.bytes_measured,
         inner_steps: cluster.stats.inner_steps,
         primal: ev.primal,
         dual: ev.dual,

@@ -34,6 +34,7 @@ use crate::loss::LossKind;
 use crate::netsim::{NetworkModel, StragglerModel};
 use crate::solvers::SolverKind;
 use crate::telemetry::Trace;
+use crate::transport::{Ledger, Transcript, TransportKind};
 
 /// How the trainer partitions the data over workers.
 #[derive(Debug, Clone)]
@@ -65,6 +66,7 @@ pub struct Trainer<'a> {
     stragglers: StragglerModel,
     seed: u64,
     label: String,
+    transport: TransportKind,
 }
 
 impl<'a> Trainer<'a> {
@@ -82,6 +84,7 @@ impl<'a> Trainer<'a> {
             stragglers: StragglerModel::none(),
             seed: 0,
             label: "dataset".into(),
+            transport: TransportKind::InProc,
         }
     }
 
@@ -174,6 +177,17 @@ impl<'a> Trainer<'a> {
         self
     }
 
+    /// Transport backend for leader <-> worker messages. Default: plain
+    /// in-process channels (zero overhead, bytes not measured). Pick
+    /// [`TransportKind::Counted`] to measure byte-exact communication,
+    /// [`TransportKind::SimNet`] for deterministic fault injection, or
+    /// [`TransportKind::Record`]/[`TransportKind::Replay`] for transcript
+    /// record/replay. Validated (typed) at [`Trainer::build`].
+    pub fn transport(mut self, transport: TransportKind) -> Self {
+        self.transport = transport;
+        self
+    }
+
     /// Master seed; each worker derives a distinct deterministic stream.
     pub fn seed(mut self, seed: u64) -> Self {
         self.seed = seed;
@@ -223,6 +237,8 @@ impl<'a> Trainer<'a> {
             return Err(Error::MissingArtifacts { dir: self.artifacts_dir });
         }
 
+        self.transport.validate()?;
+
         let cluster = Cluster::spawn(ClusterSpec {
             data: self.data,
             partition: &partition,
@@ -234,6 +250,7 @@ impl<'a> Trainer<'a> {
             net: self.net,
             stragglers: self.stragglers,
             seed: self.seed,
+            transport: self.transport,
         })?;
         Ok(Session { cluster, label: self.label, p_star: None })
     }
@@ -326,6 +343,26 @@ impl Session {
         self.cluster.n_max()
     }
 
+    /// Name of the active transport backend
+    /// (`inproc`/`counted`/`simnet`/`record`/`replay`).
+    pub fn transport_name(&self) -> &'static str {
+        self.cluster.transport_name()
+    }
+
+    /// Byte-exact per-kind communication ledger. `None` on the unmeasured
+    /// in-process default.
+    pub fn ledger(&self) -> Option<&Ledger> {
+        self.cluster.ledger()
+    }
+
+    /// Take the transcript recorded so far. `Some` only on the
+    /// [`TransportKind::Record`] backend; feed it to
+    /// [`TransportKind::Replay`] on a twin session to re-serve the run
+    /// deterministically.
+    pub fn take_transcript(&mut self) -> Option<Transcript> {
+        self.cluster.take_transcript()
+    }
+
     /// Low-level escape hatch: dispatch one round of hand-chosen
     /// [`LocalWork`] (instrumentation, custom drivers, tests). Prefer
     /// [`Session::run`] with an [`Algorithm`].
@@ -393,6 +430,43 @@ mod tests {
             .build()
             .unwrap_err();
         assert!(matches!(err, Error::TooManyWorkers { k: 0, .. }), "{err}");
+    }
+
+    #[test]
+    fn counted_transport_feeds_measured_bytes() {
+        let data = cov_like(60, 5, 0.1, 4);
+        let mut sess = Trainer::on(&data)
+            .workers(2)
+            .lambda(0.1)
+            .transport(TransportKind::Counted)
+            .build()
+            .unwrap();
+        assert_eq!(sess.transport_name(), "counted");
+        let tr = sess.run(&mut Cocoa::new(10), Budget::rounds(3)).unwrap();
+        let last = tr.rows.last().unwrap();
+        assert!(last.bytes_measured > 0);
+        assert!(last.bytes_modeled > 0);
+        // measured bytes are per-row monotone
+        for pair in tr.rows.windows(2) {
+            assert!(pair[1].bytes_measured >= pair[0].bytes_measured);
+        }
+        assert!(sess.ledger().is_some());
+        assert!(sess.take_transcript().is_none()); // counted does not tape
+        sess.shutdown();
+    }
+
+    #[test]
+    fn invalid_transport_is_typed_at_build() {
+        let data = cov_like(30, 4, 0.1, 5);
+        let mut cfg = crate::transport::SimNetConfig::new(0);
+        cfg.straggler_slowdown = 0.25;
+        let err = Trainer::on(&data)
+            .workers(2)
+            .lambda(0.1)
+            .transport(TransportKind::SimNet(cfg))
+            .build()
+            .unwrap_err();
+        assert!(matches!(err, Error::InvalidTransport { .. }), "{err}");
     }
 
     #[test]

@@ -17,6 +17,7 @@ use crate::error::Error;
 use crate::loss::LossKind;
 use crate::netsim::NetworkModel;
 use crate::solvers::SolverKind;
+use crate::transport::{SimNetConfig, TransportKind};
 use crate::util::toml_lite::Doc;
 
 /// Which execution backend workers use for the local dual method.
@@ -332,6 +333,10 @@ pub struct ExperimentConfig {
     pub lambda: f64,
     pub run: RunSpec,
     pub netsim: NetworkModel,
+    /// Leader <-> worker transport backend (`[transport]` section; default
+    /// inproc). Range checks happen at `Trainer::build`, which returns a
+    /// typed `Error::InvalidTransport`.
+    pub transport: TransportKind,
     /// Where HLO artifacts live (Backend::Pjrt).
     pub artifacts_dir: String,
 }
@@ -372,6 +377,7 @@ impl ExperimentConfig {
             .backend(self.run.backend)
             .artifacts_dir(self.artifacts_dir.as_str())
             .network(self.netsim)
+            .transport(self.transport.clone())
             .seed(self.run.seed)
             .label(self.dataset.name())
     }
@@ -396,6 +402,27 @@ impl ExperimentConfig {
         } else {
             NetworkModel::ec2_like()
         };
+        let transport = if doc.has_section("transport") {
+            match doc.str_or("transport", "kind", "inproc") {
+                "inproc" => TransportKind::InProc,
+                "counted" => TransportKind::Counted,
+                "record" => TransportKind::Record,
+                "simnet" => TransportKind::SimNet(SimNetConfig {
+                    seed: doc.u64_or("transport", "seed", 0),
+                    jitter_s: doc.f64_or("transport", "jitter_s", 1e-3),
+                    drop_prob: doc.f64_or("transport", "drop_prob", 0.0),
+                    max_retries: doc.u64_or("transport", "max_retries", 3) as u32,
+                    retry_timeout_s: doc.f64_or("transport", "retry_timeout_s", 5e-3),
+                    straggler_prob: doc.f64_or("transport", "straggler_prob", 0.0),
+                    straggler_slowdown: doc.f64_or("transport", "straggler_slowdown", 1.0),
+                }),
+                other => bail!(
+                    "unknown transport kind {other:?} (inproc|counted|simnet|record)"
+                ),
+            }
+        } else {
+            TransportKind::InProc
+        };
         Ok(ExperimentConfig {
             dataset: DatasetSpec::from_doc(&doc)?,
             partition: PartitionSpec::from_doc(&doc)?,
@@ -404,6 +431,7 @@ impl ExperimentConfig {
             lambda: doc.f64_of("", "lambda")?,
             run: RunSpec::from_doc(&doc)?,
             netsim,
+            transport,
             artifacts_dir: doc.str_or("", "artifacts_dir", "artifacts").to_string(),
         })
     }
@@ -497,6 +525,49 @@ bandwidth_bps = 1e9
         let text = format!("{SAMPLE}\n[netsim]\npreset = \"multicore\"\n");
         let cfg = ExperimentConfig::from_toml(&text).unwrap();
         assert_eq!(cfg.netsim, NetworkModel::multicore());
+    }
+
+    #[test]
+    fn transport_section_parses() {
+        // no section: inproc default
+        let cfg = ExperimentConfig::from_toml(SAMPLE).unwrap();
+        assert_eq!(cfg.transport, TransportKind::InProc);
+
+        let counted = format!("{SAMPLE}\n[transport]\nkind = \"counted\"\n");
+        let cfg = ExperimentConfig::from_toml(&counted).unwrap();
+        assert_eq!(cfg.transport, TransportKind::Counted);
+
+        let simnet = format!(
+            "{SAMPLE}\n[transport]\nkind = \"simnet\"\nseed = 9\njitter_s = 0.002\n\
+             drop_prob = 0.05\nmax_retries = 2\nstraggler_prob = 0.1\n\
+             straggler_slowdown = 4.0\n"
+        );
+        let cfg = ExperimentConfig::from_toml(&simnet).unwrap();
+        match &cfg.transport {
+            TransportKind::SimNet(c) => {
+                assert_eq!(c.seed, 9);
+                assert_eq!(c.jitter_s, 0.002);
+                assert_eq!(c.drop_prob, 0.05);
+                assert_eq!(c.max_retries, 2);
+                assert_eq!(c.straggler_prob, 0.1);
+                assert_eq!(c.straggler_slowdown, 4.0);
+            }
+            other => panic!("expected simnet, got {other:?}"),
+        }
+
+        let bad = format!("{SAMPLE}\n[transport]\nkind = \"quantum\"\n");
+        assert!(ExperimentConfig::from_toml(&bad).is_err());
+    }
+
+    #[test]
+    fn out_of_range_simnet_config_fails_at_build_with_typed_error() {
+        let text = format!(
+            "{SAMPLE}\n[transport]\nkind = \"simnet\"\ndrop_prob = 1.0\n"
+        );
+        let cfg = ExperimentConfig::from_toml(&text).unwrap(); // parse is lenient
+        let data = crate::data::cov_like(50, 4, 0.1, 1);
+        let err = cfg.trainer(&data).build().unwrap_err();
+        assert!(matches!(err, Error::InvalidTransport { .. }), "{err}");
     }
 
     #[test]

@@ -11,13 +11,17 @@
 //! independent of any serialization crate (offline build):
 //!
 //! ```text
-//! #cocoa-checkpoint v1
+//! #cocoa-checkpoint v2
 //! meta <k> <n> <d> <round_counter>
-//! stats <rounds> <vectors> <bytes> <compute_s> <sim_time_s> <inner_steps>
+//! stats <rounds> <vectors> <bytes_modeled> <bytes_measured> <compute_s> <sim_time_s> <inner_steps>
 //! w <d hex-f64 words>
 //! worker <id> rng <s0> <s1> <s2> <s3>
 //! alpha <id> <n_k hex-f64 words>
 //! ```
+//!
+//! (v1 had a single `bytes` column; v2 splits modeled vs transport-measured
+//! bytes and is not backward compatible — old checkpoints are rejected by
+//! the header check.)
 //!
 //! Floats are stored as hex bit patterns: exact round-trip, no precision
 //! loss through decimal formatting.
@@ -51,7 +55,8 @@ impl PartialEq for super::CommStats {
     fn eq(&self, other: &Self) -> bool {
         self.rounds == other.rounds
             && self.vectors == other.vectors
-            && self.bytes == other.bytes
+            && self.bytes_modeled == other.bytes_modeled
+            && self.bytes_measured == other.bytes_measured
             && self.compute_s == other.compute_s
             && self.sim_time_s == other.sim_time_s
             && self.inner_steps == other.inner_steps
@@ -82,16 +87,17 @@ impl Checkpoint {
             std::fs::create_dir_all(parent)?;
         }
         let mut text = String::new();
-        text.push_str("#cocoa-checkpoint v1\n");
+        text.push_str("#cocoa-checkpoint v2\n");
         text.push_str(&format!(
             "meta {} {} {} {}\n",
             self.k, self.n, self.d, self.round_counter
         ));
         text.push_str(&format!(
-            "stats {} {} {} {:016x} {:016x} {}\n",
+            "stats {} {} {} {} {:016x} {:016x} {}\n",
             self.stats.rounds,
             self.stats.vectors,
-            self.stats.bytes,
+            self.stats.bytes_modeled,
+            self.stats.bytes_measured,
             self.stats.compute_s.to_bits(),
             self.stats.sim_time_s.to_bits(),
             self.stats.inner_steps,
@@ -119,7 +125,7 @@ impl Checkpoint {
             .with_context(|| format!("read {}", path.as_ref().display()))?;
         let mut lines = text.lines();
         let header = lines.next().context("empty checkpoint")?;
-        if header != "#cocoa-checkpoint v1" {
+        if header != "#cocoa-checkpoint v2" {
             bail!("bad checkpoint header {header:?}");
         }
         let meta: Vec<&str> = lines.next().context("missing meta")?.split(' ').collect();
@@ -133,16 +139,17 @@ impl Checkpoint {
             meta[4].parse()?,
         );
         let st: Vec<&str> = lines.next().context("missing stats")?.split(' ').collect();
-        if st.len() != 7 || st[0] != "stats" {
+        if st.len() != 8 || st[0] != "stats" {
             bail!("bad stats line");
         }
         let stats = super::CommStats {
             rounds: st[1].parse()?,
             vectors: st[2].parse()?,
-            bytes: st[3].parse()?,
-            compute_s: f64::from_bits(u64::from_str_radix(st[4], 16)?),
-            sim_time_s: f64::from_bits(u64::from_str_radix(st[5], 16)?),
-            inner_steps: st[6].parse()?,
+            bytes_modeled: st[3].parse()?,
+            bytes_measured: st[4].parse()?,
+            compute_s: f64::from_bits(u64::from_str_radix(st[5], 16)?),
+            sim_time_s: f64::from_bits(u64::from_str_radix(st[6], 16)?),
+            inner_steps: st[7].parse()?,
         };
         let wline: Vec<&str> = lines.next().context("missing w")?.split(' ').collect();
         if wline[0] != "w" {
@@ -207,7 +214,8 @@ mod tests {
             stats: crate::coordinator::CommStats {
                 rounds: 7,
                 vectors: 28,
-                bytes: 672,
+                bytes_modeled: 672,
+                bytes_measured: 731,
                 compute_s: 0.125,
                 sim_time_s: 1.5e-3,
                 inner_steps: 700,
@@ -244,7 +252,7 @@ mod tests {
         let path = std::env::temp_dir().join("cocoa_ckpt_test/bad.ckpt");
         cp.save(&path).unwrap();
         let mut text = std::fs::read_to_string(&path).unwrap();
-        text = text.replace("#cocoa-checkpoint v1", "#cocoa-checkpoint v9");
+        text = text.replace("#cocoa-checkpoint v2", "#cocoa-checkpoint v9");
         std::fs::write(&path, &text).unwrap();
         assert!(Checkpoint::load(&path).is_err());
     }

@@ -97,8 +97,10 @@ pub struct EvalReply {
     pub has_dual: bool,
 }
 
-/// Worker -> leader envelope.
-#[derive(Debug)]
+/// Worker -> leader envelope. `Clone` so the transport layer's
+/// [`Record`](crate::transport::Record) backend can tape replies for
+/// deterministic replay.
+#[derive(Debug, Clone)]
 pub enum ToLeader {
     Round(RoundReply),
     Eval(EvalReply),

@@ -10,7 +10,15 @@
 //!    fold their pending `dalpha` in with the same scale
 //!    (`scale = beta_K / K`, Algorithm 1's averaging).
 //!
-//! Evaluation (P/D/duality gap) flows through the same channels but is
+//! Every leader-side message moves through the pluggable
+//! [`Transport`](crate::transport::Transport) layer: the in-process
+//! default is zero-overhead, while the measuring backends (counted /
+//! simnet / record / replay) account byte-exact serialized sizes — and
+//! when they do, the *measured* bytes (not the analytic vector count)
+//! drive the [`netsim`](crate::netsim) round time, together with any
+//! transport-injected latency (jitter, retransmits, stragglers).
+//!
+//! Evaluation (P/D/duality gap) flows through the same transport but is
 //! *not* counted as algorithm communication — it is instrumentation.
 
 pub mod checkpoint;
@@ -21,7 +29,7 @@ pub use checkpoint::Checkpoint;
 pub use messages::{EvalReply, LocalWork, RoundReply, ToLeader, ToWorker};
 pub use worker::WorkerConfig;
 
-use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::mpsc::channel;
 
 use anyhow::{anyhow, Result};
 
@@ -32,6 +40,7 @@ use crate::netsim::{NetworkModel, StragglerModel};
 use crate::objective;
 use crate::runtime;
 use crate::solvers::{Block, SolverKind};
+use crate::transport::{InProc, Ledger, Transcript, Transport, TransportKind};
 
 /// Everything [`Cluster::spawn`] needs, by name. Built and validated by
 /// [`crate::Trainer`] — the only public road to a cluster.
@@ -46,6 +55,7 @@ pub(crate) struct ClusterSpec<'a> {
     pub net: NetworkModel,
     pub stragglers: StragglerModel,
     pub seed: u64,
+    pub transport: TransportKind,
 }
 
 /// Exact communication/time accounting for a run.
@@ -54,7 +64,12 @@ pub struct CommStats {
     pub rounds: u64,
     /// d-dimensional vectors moved (K broadcasts + K replies per round).
     pub vectors: u64,
-    pub bytes: u64,
+    /// Bytes per the analytic model: `vectors * d * bytes_per_scalar`.
+    pub bytes_modeled: u64,
+    /// Byte-exact serialized bytes as measured by the transport, including
+    /// any retransmissions. 0 unless a measuring transport (counted /
+    /// simnet / record / replay) is configured.
+    pub bytes_measured: u64,
     /// Sum over rounds of max-over-workers compute seconds.
     pub compute_s: f64,
     /// Simulated distributed time under the network model.
@@ -65,8 +80,7 @@ pub struct CommStats {
 
 /// Leader + K worker threads over a partitioned dataset.
 pub struct Cluster {
-    to_workers: Vec<Sender<ToWorker>>,
-    from_workers: Receiver<ToLeader>,
+    transport: Box<dyn Transport>,
     handles: Vec<std::thread::JoinHandle<()>>,
     pub k: usize,
     pub n: usize,
@@ -101,6 +115,7 @@ impl Cluster {
             net,
             stragglers,
             seed,
+            transport,
         } = spec;
         // the partition was already validated (with typed errors) by
         // Trainer::build — the only road here
@@ -151,9 +166,10 @@ impl Cluster {
             handles.push(handle);
         }
 
+        let transport = transport.build(InProc::new(to_workers, from_workers));
+
         Ok(Cluster {
-            to_workers,
-            from_workers,
+            transport,
             handles,
             k,
             n,
@@ -171,16 +187,17 @@ impl Cluster {
     }
 
     /// Warm-start: zero all optimization state (leader `w`, worker dual
-    /// blocks, rng streams, accounting) while keeping the threads, their
-    /// data, and any PJRT block registrations alive. A run after `reset()`
-    /// is bit-identical to one on a freshly spawned cluster with the same
-    /// seed. Channel ordering makes an ack unnecessary: the next dispatch
-    /// on each worker channel is processed after its reset.
+    /// blocks, rng streams, accounting, transport ledgers) while keeping
+    /// the threads, their data, and any PJRT block registrations alive. A
+    /// run after `reset()` is bit-identical to one on a freshly spawned
+    /// cluster with the same seed. Channel ordering makes an ack
+    /// unnecessary: the next dispatch on each worker channel is processed
+    /// after its reset.
     pub fn reset(&mut self) -> Result<()> {
-        for (kid, tx) in self.to_workers.iter().enumerate() {
-            tx.send(ToWorker::Reset)
-                .map_err(|_| anyhow!("worker {kid} channel closed"))?;
+        for kid in 0..self.k {
+            self.transport.send(kid, ToWorker::Reset)?;
         }
+        self.transport.reset_state();
         self.w = vec![0.0; self.d];
         self.stats = CommStats::default();
         self.round_counter = 0;
@@ -189,19 +206,23 @@ impl Cluster {
 
     /// Dispatch one round of local work (per-worker via `work_for`) and
     /// gather the K replies. Accounts 2K vectors (broadcast + gather), the
-    /// network-model round time, and the per-round max compute.
+    /// network-model round time, and the per-round max compute. When the
+    /// transport measures bytes, the measured total (including any SimNet
+    /// retransmissions) replaces the analytic vector count in the round
+    /// time, and transport-injected latency joins the barrier; the round's
+    /// commit bytes are charged by [`Cluster::commit`].
     pub fn dispatch(&mut self, work_for: impl Fn(usize) -> LocalWork) -> Result<Vec<RoundReply>> {
         self.round_counter += 1;
         let round = self.round_counter;
         let w_shared = std::sync::Arc::new(self.w.clone());
-        for (kid, tx) in self.to_workers.iter().enumerate() {
-            tx.send(ToWorker::Round { round, w: w_shared.clone(), work: work_for(kid) })
-                .map_err(|_| anyhow!("worker {kid} channel closed"))?;
+        for kid in 0..self.k {
+            self.transport
+                .send(kid, ToWorker::Round { round, w: w_shared.clone(), work: work_for(kid) })?;
         }
         let mut replies: Vec<Option<RoundReply>> = vec![None; self.k];
         let mut got = 0;
         while got < self.k {
-            match self.from_workers.recv().map_err(|_| anyhow!("all workers gone"))? {
+            match self.transport.recv()? {
                 ToLeader::Round(r) if r.round == round => {
                     let slot = &mut replies[r.worker];
                     if slot.is_none() {
@@ -224,27 +245,45 @@ impl Cluster {
 
         let computes: Vec<f64> = replies.iter().map(|r| r.compute_s).collect();
         let max_compute = self.stragglers.barrier_compute(round, &computes);
+        let injected_s = self.transport.take_round_latency();
+        let measured = self.transport.take_round_bytes();
         let vectors = 2 * self.k as u64; // w down + dw up, per worker
         self.stats.rounds += 1;
         self.stats.vectors += vectors;
-        self.stats.bytes += vectors * (self.d * self.net.bytes_per_scalar) as u64;
+        self.stats.bytes_modeled += vectors * (self.d * self.net.bytes_per_scalar) as u64;
         self.stats.inner_steps += replies.iter().map(|r| r.steps).sum::<u64>();
         self.stats.compute_s += max_compute;
-        self.stats.sim_time_s += self.net.round_time(max_compute, vectors as usize, self.d);
+        self.stats.sim_time_s += match measured {
+            Some(bytes) => {
+                self.stats.bytes_measured += bytes;
+                self.net.round_time_bytes(max_compute + injected_s, bytes)
+            }
+            None => self.net.round_time(max_compute + injected_s, vectors as usize, self.d),
+        };
         Ok(replies)
     }
 
     /// Fold the round's updates into leader and worker state:
     /// `w += scale * sum_k dw_k`, `alpha_[k] += scale * dalpha_[k]`.
+    /// On a measuring transport, the K commit messages are drained into
+    /// `bytes_measured` here (and their transfer time into `sim_time_s`),
+    /// so every round's accounting closes at its own commit and
+    /// `stats.bytes_measured` always equals the ledger's algorithm bytes
+    /// at round boundaries.
     pub fn commit(&mut self, replies: &[RoundReply], scale: f64) -> Result<()> {
         for reply in replies {
             for (wv, dv) in self.w.iter_mut().zip(&reply.dw) {
                 *wv += scale * dv;
             }
         }
-        for (kid, tx) in self.to_workers.iter().enumerate() {
-            tx.send(ToWorker::Commit { scale })
-                .map_err(|_| anyhow!("worker {kid} channel closed"))?;
+        for kid in 0..self.k {
+            self.transport.send(kid, ToWorker::Commit { scale })?;
+        }
+        if let Some(bytes) = self.transport.take_round_bytes() {
+            self.stats.bytes_measured += bytes;
+            // rides the round's existing barrier: transfer time only, the
+            // per-round fixed latency was already charged at dispatch
+            self.stats.sim_time_s += self.net.transfer_time_bytes(bytes);
         }
         Ok(())
     }
@@ -258,23 +297,25 @@ impl Cluster {
 
     /// Distributed evaluation of P(w), D(alpha), gap at the current state.
     /// Not counted as algorithm communication (instrumentation).
+    ///
+    /// Replies are slotted by worker id and folded in worker order, so the
+    /// floating-point reduction is deterministic regardless of arrival
+    /// interleaving — transports and warm-started runs stay bit-identical.
     pub fn evaluate(&mut self) -> Result<Evaluation> {
         let w_shared = std::sync::Arc::new(self.w.clone());
-        for (kid, tx) in self.to_workers.iter().enumerate() {
-            tx.send(ToWorker::Eval { w: w_shared.clone() })
-                .map_err(|_| anyhow!("worker {kid} channel closed"))?;
+        for kid in 0..self.k {
+            self.transport.send(kid, ToWorker::Eval { w: w_shared.clone() })?;
         }
-        let mut loss_sum = 0.0;
-        let mut conj_sum = 0.0;
-        let mut has_dual = true;
+        let mut parts: Vec<Option<EvalReply>> = vec![None; self.k];
         let mut got = 0;
         while got < self.k {
-            match self.from_workers.recv().map_err(|_| anyhow!("all workers gone"))? {
+            match self.transport.recv()? {
                 ToLeader::Eval(e) => {
-                    loss_sum += e.loss_sum;
-                    conj_sum += e.conj_sum;
-                    has_dual &= e.has_dual;
-                    got += 1;
+                    let slot = &mut parts[e.worker];
+                    if slot.is_none() {
+                        got += 1;
+                    }
+                    *slot = Some(e);
                 }
                 ToLeader::Round(_) | ToLeader::State(_) => {
                     return Err(anyhow!("unexpected reply during eval"))
@@ -283,6 +324,14 @@ impl Cluster {
                     return Err(anyhow!("worker {worker} failed: {message}"))
                 }
             }
+        }
+        let mut loss_sum = 0.0;
+        let mut conj_sum = 0.0;
+        let mut has_dual = true;
+        for e in parts.into_iter().map(Option::unwrap) {
+            loss_sum += e.loss_sum;
+            conj_sum += e.conj_sum;
+            has_dual &= e.has_dual;
         }
         let w_norm_sq: f64 = self.w.iter().map(|v| v * v).sum();
         let primal = objective::primal_from_partials(loss_sum, w_norm_sq, self.lambda, self.n);
@@ -297,14 +346,13 @@ impl Cluster {
     /// Capture the full optimization state (must be called at a round
     /// boundary, i.e. after `commit`). See [`checkpoint`].
     pub fn checkpoint(&mut self) -> Result<Checkpoint> {
-        for (kid, tx) in self.to_workers.iter().enumerate() {
-            tx.send(ToWorker::GetState)
-                .map_err(|_| anyhow!("worker {kid} channel closed"))?;
+        for kid in 0..self.k {
+            self.transport.send(kid, ToWorker::GetState)?;
         }
         let mut workers: Vec<Option<checkpoint::WorkerState>> = (0..self.k).map(|_| None).collect();
         let mut got = 0;
         while got < self.k {
-            match self.from_workers.recv().map_err(|_| anyhow!("all workers gone"))? {
+            match self.transport.recv()? {
                 ToLeader::State(ws) => {
                     let slot = &mut workers[ws.id];
                     if slot.is_none() {
@@ -340,9 +388,7 @@ impl Cluster {
             ));
         }
         for ws in &cp.workers {
-            self.to_workers[ws.id]
-                .send(ToWorker::SetState(ws.clone()))
-                .map_err(|_| anyhow!("worker {} channel closed", ws.id))?;
+            self.transport.send(ws.id, ToWorker::SetState(ws.clone()))?;
         }
         self.w = cp.w.clone();
         self.stats = cp.stats;
@@ -363,9 +409,28 @@ impl Cluster {
         self.block_sizes.iter().copied().max().unwrap_or(0)
     }
 
+    /// Name of the active transport backend.
+    pub fn transport_name(&self) -> &'static str {
+        self.transport.name()
+    }
+
+    /// Byte-exact per-kind ledger (None for the unmeasured inproc default).
+    pub fn ledger(&self) -> Option<&Ledger> {
+        self.transport.ledger()
+    }
+
+    /// Take the transcript recorded so far (Record transport only).
+    pub fn take_transcript(&mut self) -> Option<Transcript> {
+        self.transport.take_transcript()
+    }
+
     pub fn shutdown(mut self) {
-        for tx in &self.to_workers {
-            let _ = tx.send(ToWorker::Shutdown);
+        self.shutdown_inner();
+    }
+
+    fn shutdown_inner(&mut self) {
+        for kid in 0..self.k {
+            let _ = self.transport.send(kid, ToWorker::Shutdown);
         }
         for handle in self.handles.drain(..) {
             let _ = handle.join();
@@ -375,12 +440,7 @@ impl Cluster {
 
 impl Drop for Cluster {
     fn drop(&mut self) {
-        for tx in &self.to_workers {
-            let _ = tx.send(ToWorker::Shutdown);
-        }
-        for handle in self.handles.drain(..) {
-            let _ = handle.join();
-        }
+        self.shutdown_inner();
     }
 }
 
@@ -410,6 +470,7 @@ mod tests {
             net,
             stragglers: StragglerModel::none(),
             seed,
+            transport: TransportKind::InProc,
         })
         .unwrap()
     }
@@ -499,6 +560,44 @@ mod tests {
         assert_eq!(cluster.stats.rounds, 0);
         let w_again = run_rounds(&mut cluster);
         assert_eq!(w_first, w_again, "warm-started run diverged from fresh run");
+        cluster.shutdown();
+    }
+
+    #[test]
+    fn counted_transport_measures_bytes() {
+        let data = cov_like(40, 5, 0.1, 2);
+        let part = Partition::new(PartitionStrategy::Contiguous, 40, 2, 0);
+        let mut cluster = Cluster::spawn(ClusterSpec {
+            data: &data,
+            partition: &part,
+            loss: LossKind::Hinge,
+            lambda: 0.1,
+            solver: SolverKind::Sdca,
+            backend: Backend::Native,
+            artifacts_dir: "artifacts",
+            net: NetworkModel::free(),
+            stragglers: StragglerModel::none(),
+            seed: 3,
+            transport: TransportKind::Counted,
+        })
+        .unwrap();
+        assert_eq!(cluster.transport_name(), "counted");
+        assert_eq!(cluster.stats.bytes_measured, 0);
+        let replies = cluster.dispatch(|_| LocalWork::DualRound { h: 10 }).unwrap();
+        cluster.commit(&replies, 0.5).unwrap();
+        let after_round = cluster.stats.bytes_measured;
+        assert!(after_round > 0, "counted transport measured nothing");
+        // eval traffic is instrumentation: it must not move algorithm bytes
+        cluster.evaluate().unwrap();
+        assert_eq!(cluster.stats.bytes_measured, after_round);
+        let r2 = cluster.dispatch(|_| LocalWork::DualRound { h: 10 }).unwrap();
+        cluster.commit(&r2, 0.5).unwrap();
+        assert!(cluster.stats.bytes_measured > after_round);
+        let ledger = cluster.ledger().expect("counted has a ledger");
+        // at a round boundary the two byte-exact views agree
+        assert_eq!(cluster.stats.bytes_measured, ledger.algorithm_bytes());
+        assert!(ledger.bytes(crate::transport::MessageKind::EvalRequest) > 0);
+        assert!(ledger.total_bytes() > ledger.algorithm_bytes());
         cluster.shutdown();
     }
 

@@ -33,6 +33,12 @@ pub enum Error {
     /// [`Session::set_reference_optimum`](crate::Session::set_reference_optimum)
     /// first (otherwise the run could only ever exhaust its round cap).
     MissingReferenceOptimum,
+    /// A transport configuration failed validation (out-of-range SimNet
+    /// parameters such as `drop_prob >= 1` or a slowdown below 1).
+    InvalidTransport { reason: String },
+    /// A transport failed at runtime: worker channels closed, or a replay
+    /// diverged from its recorded transcript.
+    Transport { message: String },
     /// A TOML experiment config failed to parse or validate.
     Config { message: String },
     /// A runtime failure after construction (worker death, PJRT engine
@@ -70,6 +76,10 @@ impl fmt::Display for Error {
                 "budget stops on suboptimality but no reference optimum is set: \
                  call Session::set_reference_optimum(Some(p_star)) first"
             ),
+            Error::InvalidTransport { reason } => {
+                write!(f, "invalid transport config: {reason}")
+            }
+            Error::Transport { message } => write!(f, "transport error: {message}"),
             Error::Config { message } => write!(f, "config error: {message}"),
             Error::Runtime { message } => write!(f, "runtime error: {message}"),
         }
@@ -79,8 +89,14 @@ impl fmt::Display for Error {
 impl std::error::Error for Error {}
 
 impl From<anyhow::Error> for Error {
+    /// Internal plumbing (the coordinator) speaks `anyhow`; a typed crate
+    /// [`Error`] traveling through it (e.g. a transport failure) is
+    /// recovered by downcast instead of being erased into `Runtime`.
     fn from(e: anyhow::Error) -> Self {
-        Error::Runtime { message: format!("{e:#}") }
+        match e.downcast::<Error>() {
+            Ok(typed) => typed,
+            Err(e) => Error::Runtime { message: format!("{e:#}") },
+        }
     }
 }
 
@@ -98,11 +114,15 @@ mod tests {
             Error::InvalidLambda { value: -1.0 }.to_string(),
             Error::TooManyWorkers { k: 8, n: 4 }.to_string(),
             Error::MissingArtifacts { dir: "artifacts".into() }.to_string(),
+            Error::InvalidTransport { reason: "drop_prob must be in [0, 1)".into() }.to_string(),
+            Error::Transport { message: "replay diverged at event 3".into() }.to_string(),
         ];
         assert!(msgs[0].contains("lambda"));
         assert!(msgs[1].contains("-1"));
         assert!(msgs[2].contains("8 workers"));
         assert!(msgs[3].contains("manifest.tsv"));
+        assert!(msgs[4].contains("drop_prob"));
+        assert!(msgs[5].contains("replay diverged"));
     }
 
     #[test]
@@ -111,5 +131,15 @@ mod tests {
         let err: Error = e.into();
         let msg = err.to_string();
         assert!(msg.contains("outer") && msg.contains("inner"), "{msg}");
+    }
+
+    #[test]
+    fn anyhow_roundtrip_recovers_typed_variants() {
+        // a typed error that passed through the coordinator's anyhow layer
+        // must come back as itself, not as Runtime
+        let typed = Error::Transport { message: "replay diverged at event 3".into() };
+        let through: anyhow::Error = typed.into();
+        let back: Error = through.into();
+        assert!(matches!(back, Error::Transport { .. }), "{back}");
     }
 }

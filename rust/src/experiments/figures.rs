@@ -13,6 +13,7 @@ use crate::config::Backend;
 use crate::error::Result;
 use crate::loss::LossKind;
 use crate::telemetry::Trace;
+use crate::transport::TransportKind;
 
 use super::{cached_optimum, make_session, ExpDataset, Profile};
 
@@ -76,7 +77,14 @@ pub fn fig1_fig2_dataset(
     let grid = h_grid(n_k, profile);
     let budget = Budget::rounds(rounds).target_subopt(target / 4.0);
 
-    let mut session = make_session(ds, LossKind::Hinge, Backend::Native, "artifacts", 17)?;
+    let mut session = make_session(
+        ds,
+        LossKind::Hinge,
+        Backend::Native,
+        "artifacts",
+        17,
+        TransportKind::InProc,
+    )?;
     session.set_reference_optimum(Some(p_star));
 
     let mut best: Vec<Option<BestH>> = vec![None, None, None, None];
@@ -124,6 +132,11 @@ pub fn fig1_fig2_dataset(
 
 /// Figure 3: the effect of H on CoCoA (cov dataset, K = 4 in the paper).
 /// The whole sweep warm-starts one session (see the module docs).
+///
+/// This sweep runs on the byte-exact `counted` transport: the measured
+/// wire bytes (headers, sparse dw encodings — not the analytic vector
+/// count) drive the netsim round time, so the H trade-off reflects what a
+/// real fabric would carry. The `bytes_measured` CSV column is populated.
 pub fn fig3(
     ds: &ExpDataset,
     profile: Profile,
@@ -135,7 +148,14 @@ pub fn fig3(
     let mut grid = vec![1usize];
     grid.extend(h_grid(n_k, profile));
     grid.dedup();
-    let mut session = make_session(ds, LossKind::Hinge, Backend::Native, "artifacts", 19)?;
+    let mut session = make_session(
+        ds,
+        LossKind::Hinge,
+        Backend::Native,
+        "artifacts",
+        19,
+        TransportKind::Counted,
+    )?;
     session.set_reference_optimum(Some(p_star));
     let mut out = Vec::new();
     for h in grid {
@@ -174,7 +194,14 @@ pub fn fig4(
         vec![1.0, (b_total / 100.0).max(1.0), (b_total / 10.0).max(1.0), b_total];
     let budget = Budget::rounds(rounds).target_subopt(target / 4.0);
 
-    let mut session = make_session(ds, LossKind::Hinge, Backend::Native, "artifacts", 23)?;
+    let mut session = make_session(
+        ds,
+        LossKind::Hinge,
+        Backend::Native,
+        "artifacts",
+        23,
+        TransportKind::InProc,
+    )?;
     session.set_reference_optimum(Some(p_star));
 
     let mut run_one = |session: &mut Session,

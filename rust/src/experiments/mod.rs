@@ -22,6 +22,7 @@ use crate::data::{self, Dataset, Partition, PartitionStrategy};
 use crate::loss::LossKind;
 use crate::netsim::NetworkModel;
 use crate::objective;
+use crate::transport::TransportKind;
 
 /// Experiment scale. `Smoke` keeps integration tests fast; `Paper` is the
 /// scaled-down-but-faithful reproduction grid (full regimes, 1-core budget).
@@ -158,13 +159,17 @@ pub fn table1(profile: Profile) -> Vec<Table1Row> {
 }
 
 /// Build a [`Session`](crate::Session) for an experiment dataset with the
-/// standard settings (LocalSDCA, EC2-like network).
+/// standard settings (LocalSDCA, EC2-like network) and the given
+/// transport. Use [`TransportKind::InProc`] for pure-speed sweeps and
+/// [`TransportKind::Counted`] where measured wire bytes should drive the
+/// simulated time axis (the fig3 sweeps do).
 pub fn make_session(
     ds: &ExpDataset,
     loss: LossKind,
     backend: Backend,
     artifacts_dir: &str,
     seed: u64,
+    transport: TransportKind,
 ) -> crate::error::Result<crate::Session> {
     crate::Trainer::on(&ds.data)
         .partition(ds.partition())
@@ -173,6 +178,7 @@ pub fn make_session(
         .backend(backend)
         .artifacts_dir(artifacts_dir)
         .network(default_net())
+        .transport(transport)
         .seed(seed)
         .label(ds.name)
         .build()

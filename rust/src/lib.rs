@@ -56,9 +56,30 @@
 //!     session.reset()?;
 //!     let trace = session.run(&mut Cocoa::new(h), Budget::until_gap(1e-3))?;
 //!     println!("gap 1e-3 after {} rounds", trace.rows.last().unwrap().round);
+//!
+//!     // 5. measure real communication: a byte-exact transport makes the
+//!     //    measured wire bytes (headers, sparse dw encodings) drive the
+//!     //    simulated round time and the bytes_measured trace column
+//!     let mut counted = Trainer::on(&data)
+//!         .workers(4)
+//!         .lambda(1.0 / data.n() as f64)
+//!         .network(NetworkModel::ec2_like())
+//!         .transport(TransportKind::Counted)
+//!         .build()?;
+//!     let trace = counted.run(&mut Cocoa::new(h), Budget::rounds(5))?;
+//!     println!(
+//!         "measured {} B on the wire (modeled {} B)",
+//!         trace.rows.last().unwrap().bytes_measured,
+//!         trace.rows.last().unwrap().bytes_modeled,
+//!     );
 //!     Ok(())
 //! }
 //! ```
+//!
+//! Swap [`TransportKind::Counted`] for `TransportKind::SimNet(...)` to
+//! inject deterministic latency jitter, bounded drops/retransmits, and
+//! stragglers (same seed, same trajectory, bit for bit), or
+//! `TransportKind::Record`/`Replay` to tape a run and re-serve it.
 //!
 //! ## Layers
 //!
@@ -74,6 +95,10 @@
 //! * [`coordinator`] — Algorithm 1 as a leader/worker runtime: real worker
 //!   threads owning disjoint data + dual blocks, message-passing rounds,
 //!   exact communication accounting.
+//! * [`transport`] — the pluggable leader<->worker message fabric: the
+//!   zero-overhead in-process default, byte-exact counted accounting, a
+//!   deterministic seedable fault injector (SimNet), and transcript
+//!   record/replay.
 //! * [`algorithms`] — the [`Algorithm`] trait, the [`Aggregation`] policy,
 //!   and every Section-6 competitor as an implementation.
 //! * [`api`] — the [`Trainer`] builder and [`Session`] facade.
@@ -104,6 +129,7 @@ pub mod runtime;
 pub mod solvers;
 pub mod telemetry;
 pub mod theory;
+pub mod transport;
 
 pub use algorithms::{Aggregation, Algorithm, Budget};
 pub use api::{Session, Trainer};
@@ -112,6 +138,7 @@ pub use coordinator::Cluster;
 pub use data::{Dataset, Partition};
 pub use error::{Error, Result};
 pub use loss::LossKind;
+pub use transport::TransportKind;
 
 /// One-line import for the common path:
 /// `use cocoa::prelude::*;`
@@ -128,4 +155,5 @@ pub mod prelude {
     pub use crate::netsim::{NetworkModel, StragglerModel};
     pub use crate::solvers::SolverKind;
     pub use crate::telemetry::{Trace, TraceRow};
+    pub use crate::transport::{SimNetConfig, Transcript, TransportKind};
 }

@@ -152,6 +152,12 @@ fn train(config_path: &str, out: Option<String>, p_star: Option<f64>) -> Result<
         "finished: rounds={} sim_time={:.3}s vectors={} P={:.6} D={:.6} gap={:.2e}",
         last.round, last.sim_time_s, last.vectors, last.primal, last.dual, last.gap
     );
+    if last.bytes_measured > 0 {
+        println!(
+            "measured communication: {} B on the wire (modeled {} B)",
+            last.bytes_measured, last.bytes_modeled
+        );
+    }
     let out = out.unwrap_or_else(|| {
         format!(
             "results/train_{}_{}_k{}_h{}.csv",

@@ -74,6 +74,24 @@ impl NetworkModel {
     pub fn round_time(&self, max_compute_s: f64, vectors: usize, d: usize) -> f64 {
         max_compute_s + self.latency_s + self.transfer_time(vectors, d)
     }
+
+    /// Time to move `bytes` through the leader in one round — the
+    /// byte-exact counterpart of [`NetworkModel::transfer_time`], fed by
+    /// the transport ledger's measured sizes (headers, sparse encodings,
+    /// retransmissions and all) instead of the analytic vector count.
+    pub fn transfer_time_bytes(&self, bytes: u64) -> f64 {
+        if self.bandwidth_bps.is_infinite() {
+            0.0
+        } else {
+            bytes as f64 / self.bandwidth_bps
+        }
+    }
+
+    /// Full round time from measured bytes; see
+    /// [`NetworkModel::transfer_time_bytes`].
+    pub fn round_time_bytes(&self, max_compute_s: f64, bytes: u64) -> f64 {
+        max_compute_s + self.latency_s + self.transfer_time_bytes(bytes)
+    }
 }
 
 /// Straggler model — the bulk-synchronous failure mode of the paper's
@@ -147,6 +165,19 @@ mod tests {
     fn free_network_costs_nothing() {
         let m = NetworkModel::free();
         assert_eq!(m.round_time(1.0, 100, 100000), 1.0);
+        assert_eq!(m.round_time_bytes(1.0, u64::MAX), 1.0);
+    }
+
+    #[test]
+    fn byte_exact_round_time_matches_vector_model_at_equal_volume() {
+        let m = NetworkModel { latency_s: 0.01, bandwidth_bps: 1e6, bytes_per_scalar: 8 };
+        let (vectors, d) = (4, 500);
+        let bytes = (vectors * d * m.bytes_per_scalar) as u64;
+        let a = m.round_time(0.25, vectors, d);
+        let b = m.round_time_bytes(0.25, bytes);
+        assert!((a - b).abs() < 1e-15);
+        // measured bytes include headers/retransmits: strictly more time
+        assert!(m.round_time_bytes(0.25, bytes + 640) > a);
     }
 
     #[test]

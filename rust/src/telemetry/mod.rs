@@ -21,8 +21,12 @@ pub struct TraceRow {
     /// d-dimensional vectors communicated so far (worker->leader plus
     /// leader->worker broadcasts).
     pub vectors: u64,
-    /// Bytes on the wire so far.
-    pub bytes: u64,
+    /// Bytes so far per the analytic model (`vectors * d * scalar width`).
+    pub bytes_modeled: u64,
+    /// Byte-exact bytes so far as measured by the transport ledger
+    /// (headers, sparse dw encodings, retransmissions); 0 unless a
+    /// measuring transport (counted/simnet/record/replay) is configured.
+    pub bytes_measured: u64,
     /// Inner steps performed so far (sum over workers).
     pub inner_steps: u64,
     pub primal: f64,
@@ -101,25 +105,28 @@ impl Trace {
         self.rows.iter().map(|r| r.primal).fold(f64::INFINITY, f64::min)
     }
 
+    /// The CSV schema of [`Trace::to_csv`], one name per [`TraceRow`]
+    /// field, in order.
+    pub const CSV_HEADER: &str =
+        "round,sim_time_s,compute_time_s,vectors,bytes_modeled,bytes_measured,inner_steps,primal,dual,gap,primal_subopt";
+
     pub fn to_csv<P: AsRef<Path>>(&self, path: P) -> Result<()> {
         if let Some(parent) = path.as_ref().parent() {
             std::fs::create_dir_all(parent)?;
         }
         let mut f = std::fs::File::create(&path)
             .with_context(|| format!("create {}", path.as_ref().display()))?;
-        writeln!(
-            f,
-            "round,sim_time_s,compute_time_s,vectors,bytes,inner_steps,primal,dual,gap,primal_subopt"
-        )?;
+        writeln!(f, "{}", Self::CSV_HEADER)?;
         for r in &self.rows {
             writeln!(
                 f,
-                "{},{},{},{},{},{},{},{},{},{}",
+                "{},{},{},{},{},{},{},{},{},{},{}",
                 r.round,
                 r.sim_time_s,
                 r.compute_time_s,
                 r.vectors,
-                r.bytes,
+                r.bytes_modeled,
+                r.bytes_measured,
                 r.inner_steps,
                 r.primal,
                 r.dual,
@@ -150,12 +157,13 @@ impl Trace {
             let sep = if i + 1 == self.rows.len() { "" } else { "," };
             writeln!(
                 f,
-                "    {{\"round\": {}, \"sim_time_s\": {}, \"compute_time_s\": {}, \"vectors\": {}, \"bytes\": {}, \"inner_steps\": {}, \"primal\": {}, \"dual\": {}, \"gap\": {}, \"primal_subopt\": {}}}{}",
+                "    {{\"round\": {}, \"sim_time_s\": {}, \"compute_time_s\": {}, \"vectors\": {}, \"bytes_modeled\": {}, \"bytes_measured\": {}, \"inner_steps\": {}, \"primal\": {}, \"dual\": {}, \"gap\": {}, \"primal_subopt\": {}}}{}",
                 r.round,
                 json_f64(r.sim_time_s),
                 json_f64(r.compute_time_s),
                 r.vectors,
-                r.bytes,
+                r.bytes_modeled,
+                r.bytes_measured,
                 r.inner_steps,
                 json_f64(r.primal),
                 json_f64(r.dual),
@@ -199,7 +207,8 @@ mod tests {
             sim_time_s: t,
             compute_time_s: t * 0.5,
             vectors,
-            bytes: vectors * 8,
+            bytes_modeled: vectors * 8,
+            bytes_measured: vectors * 9 + 16,
             inner_steps: round * 10,
             primal: 0.5 + subopt,
             dual: 0.5 - gap + subopt,
@@ -234,7 +243,73 @@ mod tests {
         tr.to_json(&pj).unwrap();
         let json = std::fs::read_to_string(&pj).unwrap();
         assert!(json.contains("\"algorithm\": \"cocoa\""));
+        assert!(json.contains("\"bytes_modeled\": 64"));
+        assert!(json.contains("\"bytes_measured\": 88"));
         assert_eq!(json.matches("\"round\":").count(), 2);
+    }
+
+    #[test]
+    fn csv_schema_roundtrips() {
+        // The schema contract behind every figure: the header names both
+        // byte columns, and each written row parses back to the exact
+        // TraceRow it came from (f64 Display is shortest-roundtrip).
+        let mut tr = Trace::new("cocoa", "cov", 4, 100, 1.0, 1e-4);
+        tr.push(row(1, 0.125, 8, 0.1, 0.2));
+        let mut no_ref = row(2, 2.5, 16, 0.01, 0.02);
+        no_ref.primal_subopt = f64::NAN; // NaN subopt (no P*) must survive
+        tr.push(no_ref);
+        let p = std::env::temp_dir().join("cocoa_trace_test/schema.csv");
+        tr.to_csv(&p).unwrap();
+        let text = std::fs::read_to_string(&p).unwrap();
+        let mut lines = text.lines();
+        assert_eq!(lines.next().unwrap(), Trace::CSV_HEADER);
+        assert_eq!(
+            Trace::CSV_HEADER.split(',').collect::<Vec<_>>(),
+            vec![
+                "round",
+                "sim_time_s",
+                "compute_time_s",
+                "vectors",
+                "bytes_modeled",
+                "bytes_measured",
+                "inner_steps",
+                "primal",
+                "dual",
+                "gap",
+                "primal_subopt",
+            ]
+        );
+        for (line, orig) in lines.zip(&tr.rows) {
+            let f: Vec<&str> = line.split(',').collect();
+            assert_eq!(f.len(), 11);
+            let back = TraceRow {
+                round: f[0].parse().unwrap(),
+                sim_time_s: f[1].parse().unwrap(),
+                compute_time_s: f[2].parse().unwrap(),
+                vectors: f[3].parse().unwrap(),
+                bytes_modeled: f[4].parse().unwrap(),
+                bytes_measured: f[5].parse().unwrap(),
+                inner_steps: f[6].parse().unwrap(),
+                primal: f[7].parse().unwrap(),
+                dual: f[8].parse().unwrap(),
+                gap: f[9].parse().unwrap(),
+                primal_subopt: f[10].parse().unwrap(),
+            };
+            assert_eq!(back.round, orig.round);
+            assert_eq!(back.vectors, orig.vectors);
+            assert_eq!(back.bytes_modeled, orig.bytes_modeled);
+            assert_eq!(back.bytes_measured, orig.bytes_measured);
+            assert_eq!(back.inner_steps, orig.inner_steps);
+            assert_eq!(back.sim_time_s.to_bits(), orig.sim_time_s.to_bits());
+            assert_eq!(back.compute_time_s.to_bits(), orig.compute_time_s.to_bits());
+            assert_eq!(back.primal.to_bits(), orig.primal.to_bits());
+            assert_eq!(back.dual.to_bits(), orig.dual.to_bits());
+            assert_eq!(back.gap.to_bits(), orig.gap.to_bits());
+            assert!(
+                back.primal_subopt.to_bits() == orig.primal_subopt.to_bits()
+                    || (back.primal_subopt.is_nan() && orig.primal_subopt.is_nan())
+            );
+        }
     }
 
     #[test]

@@ -1,0 +1,363 @@
+//! Pluggable leader <-> worker transport.
+//!
+//! The paper's headline claim is that rounds are expensive — so the round
+//! trip itself must be a first-class, measurable object, not hard-wired
+//! channels. This module abstracts the leader's view of the message fabric
+//! behind the [`Transport`] trait, with four backends:
+//!
+//! * [`InProc`] — the plain std-channel path; zero overhead, nothing
+//!   measured. The default.
+//! * [`Counted`] — wraps any backend with byte-exact serialized-size
+//!   accounting per [`MessageKind`] (broadcasts, delta-w replies, eval,
+//!   checkpoints), using the wire layout of [`wire`]. Measured bytes (not
+//!   analytic vector counts) then drive the
+//!   [`netsim`](crate::netsim::NetworkModel) round time and the
+//!   `bytes_measured` telemetry column.
+//! * [`SimNet`] — a deterministic, seedable adversary: per-message latency
+//!   jitter, bounded drop/retransmit cycles, and per-reply stragglers. It
+//!   only perturbs *accounting* (bytes, simulated latency) — message
+//!   contents and per-worker ordering are untouched, so the optimization
+//!   trajectory is bit-identical to [`InProc`] with the same seed (tested
+//!   in `tests/prop_transport.rs`).
+//! * [`Record`] / [`Replay`] — record a transcript of every leader-visible
+//!   event, then deterministically re-serve it: a replayed run reproduces
+//!   the original trace bit for bit without any live worker traffic, and
+//!   fails with a typed error the moment the driver diverges from the
+//!   tape.
+//!
+//! Selection is declarative via [`TransportKind`]
+//! ([`Trainer::transport`](crate::Trainer::transport) or the `[transport]`
+//! TOML section); construction happens inside
+//! [`Cluster::spawn`](crate::Cluster), which always builds the real
+//! channel fabric and then wraps the leader endpoints.
+
+pub mod wire;
+
+mod replay;
+mod simnet;
+
+pub use self::replay::{Record, Replay, ReplayEvent, Transcript};
+pub use self::simnet::{SimNet, SimNetConfig};
+pub use self::wire::{decode_dw, encode_dw, DwEncoding, MessageKind};
+
+use std::sync::mpsc::{Receiver, Sender};
+
+use crate::coordinator::{ToLeader, ToWorker};
+use crate::error::{Error, Result};
+
+use self::wire::KIND_COUNT;
+
+/// Byte-exact communication ledger: message counts and serialized sizes
+/// per [`MessageKind`], exactly as the wire layout of [`wire`] would have
+/// carried them. Order-independent (pure sums), so totals are invariant
+/// across reruns of a deterministic run.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct Ledger {
+    msgs: [u64; KIND_COUNT],
+    bytes: [u64; KIND_COUNT],
+    /// Wasted retransmissions injected by [`SimNet`] drops; their bytes are
+    /// already included in the per-kind totals.
+    pub retransmits: u64,
+}
+
+impl Ledger {
+    pub(crate) fn count(&mut self, kind: MessageKind, bytes: u64) {
+        self.msgs[kind.index()] += 1;
+        self.bytes[kind.index()] += bytes;
+    }
+
+    pub fn bytes(&self, kind: MessageKind) -> u64 {
+        self.bytes[kind.index()]
+    }
+
+    pub fn msgs(&self, kind: MessageKind) -> u64 {
+        self.msgs[kind.index()]
+    }
+
+    pub fn total_bytes(&self) -> u64 {
+        self.bytes.iter().sum()
+    }
+
+    /// Algorithm communication only (broadcast + commit + delta-w) — the
+    /// traffic the paper's figures charge for; eval, checkpoint, and
+    /// control traffic are excluded.
+    pub fn algorithm_bytes(&self) -> u64 {
+        MessageKind::ALL
+            .iter()
+            .filter(|k| k.is_algorithm())
+            .map(|k| self.bytes[k.index()])
+            .sum()
+    }
+
+    /// `(kind, messages, bytes)` rows for reporting.
+    pub fn rows(&self) -> impl Iterator<Item = (MessageKind, u64, u64)> + '_ {
+        MessageKind::ALL
+            .iter()
+            .map(move |&k| (k, self.msgs[k.index()], self.bytes[k.index()]))
+    }
+}
+
+/// Shared metering state of every measuring backend: the ledger plus the
+/// high-water mark `take_round_bytes` drains against. One implementation
+/// of the count/drain/reset laws keeps counted, simnet, record, and
+/// replay byte-for-byte in agreement.
+#[derive(Debug, Clone, Copy, Default)]
+pub(crate) struct Meter {
+    pub ledger: Ledger,
+    round_mark: u64,
+}
+
+impl Meter {
+    pub fn count(&mut self, kind: MessageKind, bytes: u64) {
+        self.ledger.count(kind, bytes);
+    }
+
+    /// Algorithm bytes accumulated since the previous drain.
+    pub fn drain(&mut self) -> u64 {
+        let total = self.ledger.algorithm_bytes();
+        let delta = total - self.round_mark;
+        self.round_mark = total;
+        delta
+    }
+
+    pub fn reset(&mut self) {
+        *self = Meter::default();
+    }
+}
+
+/// The leader's view of the leader <-> worker message fabric. One
+/// transport serves one cluster; worker threads keep their raw channel
+/// endpoints — the trait abstracts (and instruments) the leader side,
+/// where all communication accounting lives.
+pub trait Transport: Send {
+    fn name(&self) -> &'static str;
+
+    /// Deliver `msg` to worker `to`.
+    fn send(&mut self, to: usize, msg: ToWorker) -> Result<()>;
+
+    /// Block for the next leader-bound message.
+    fn recv(&mut self) -> Result<ToLeader>;
+
+    /// Byte-exact ledger, when this backend measures (`None`: unmeasured).
+    fn ledger(&self) -> Option<&Ledger> {
+        None
+    }
+
+    /// Measured algorithm bytes since the previous call (`None`:
+    /// unmeasured). Drained by the coordinator once per round.
+    fn take_round_bytes(&mut self) -> Option<u64> {
+        None
+    }
+
+    /// Injected latency (jitter, retransmit timeouts, stragglers) since
+    /// the previous call, max over workers — it joins the round barrier.
+    fn take_round_latency(&mut self) -> f64 {
+        0.0
+    }
+
+    /// Transcript recorded so far ([`Record`] backend; `None` otherwise).
+    fn take_transcript(&mut self) -> Option<Transcript> {
+        None
+    }
+
+    /// Forget all accounting/replay state. `Session::reset` warm-start
+    /// contract: a reset transport is indistinguishable from a fresh one.
+    fn reset_state(&mut self) {}
+}
+
+/// The zero-overhead default: plain std channels, nothing measured.
+pub struct InProc {
+    to_workers: Vec<Sender<ToWorker>>,
+    from_workers: Receiver<ToLeader>,
+}
+
+impl InProc {
+    pub(crate) fn new(
+        to_workers: Vec<Sender<ToWorker>>,
+        from_workers: Receiver<ToLeader>,
+    ) -> Self {
+        InProc { to_workers, from_workers }
+    }
+
+    pub(crate) fn k(&self) -> usize {
+        self.to_workers.len()
+    }
+}
+
+impl Transport for InProc {
+    fn name(&self) -> &'static str {
+        "inproc"
+    }
+
+    fn send(&mut self, to: usize, msg: ToWorker) -> Result<()> {
+        self.to_workers[to].send(msg).map_err(|_| Error::Transport {
+            message: format!("worker {to} channel closed"),
+        })
+    }
+
+    fn recv(&mut self) -> Result<ToLeader> {
+        self.from_workers.recv().map_err(|_| Error::Transport {
+            message: "all workers disconnected".into(),
+        })
+    }
+}
+
+/// Wraps any backend with byte-exact per-kind accounting.
+pub struct Counted<T: Transport> {
+    inner: T,
+    meter: Meter,
+}
+
+impl<T: Transport> Counted<T> {
+    pub fn over(inner: T) -> Self {
+        Counted { inner, meter: Meter::default() }
+    }
+}
+
+impl<T: Transport> Transport for Counted<T> {
+    fn name(&self) -> &'static str {
+        "counted"
+    }
+
+    fn send(&mut self, to: usize, msg: ToWorker) -> Result<()> {
+        let (kind, bytes) = wire::to_worker_wire(&msg);
+        self.meter.count(kind, bytes);
+        self.inner.send(to, msg)
+    }
+
+    fn recv(&mut self) -> Result<ToLeader> {
+        let msg = self.inner.recv()?;
+        let (kind, bytes) = wire::to_leader_wire(&msg);
+        self.meter.count(kind, bytes);
+        Ok(msg)
+    }
+
+    fn ledger(&self) -> Option<&Ledger> {
+        Some(&self.meter.ledger)
+    }
+
+    fn take_round_bytes(&mut self) -> Option<u64> {
+        Some(self.meter.drain())
+    }
+
+    fn take_round_latency(&mut self) -> f64 {
+        self.inner.take_round_latency()
+    }
+
+    fn reset_state(&mut self) {
+        self.meter.reset();
+        self.inner.reset_state();
+    }
+}
+
+/// Declarative transport selection — the builder/TOML-facing side of the
+/// backends above. Validated (typed) at `Trainer::build`.
+#[derive(Debug, Clone, Default)]
+pub enum TransportKind {
+    /// Plain in-process channels; zero overhead, bytes not measured.
+    #[default]
+    InProc,
+    /// [`InProc`] + byte-exact accounting; measured bytes drive netsim.
+    Counted,
+    /// Deterministic seeded fault/latency injection + accounting.
+    SimNet(SimNetConfig),
+    /// Byte-exact accounting + a full transcript for later [`Replay`].
+    Record,
+    /// Serve a previously recorded transcript (no live worker traffic).
+    Replay(std::sync::Arc<Transcript>),
+}
+
+impl TransportKind {
+    pub fn name(&self) -> &'static str {
+        match self {
+            TransportKind::InProc => "inproc",
+            TransportKind::Counted => "counted",
+            TransportKind::SimNet(_) => "simnet",
+            TransportKind::Record => "record",
+            TransportKind::Replay(_) => "replay",
+        }
+    }
+
+    /// Typed validation — called by `Trainer::build` before any thread is
+    /// spawned.
+    pub fn validate(&self) -> Result<()> {
+        if let TransportKind::SimNet(cfg) = self {
+            cfg.validate()
+                .map_err(|reason| Error::InvalidTransport { reason })?;
+        }
+        Ok(())
+    }
+
+    /// Wrap the leader endpoints of a freshly spawned cluster.
+    pub(crate) fn build(self, inner: InProc) -> Box<dyn Transport> {
+        match self {
+            TransportKind::InProc => Box::new(inner),
+            TransportKind::Counted => Box::new(Counted::over(inner)),
+            TransportKind::SimNet(cfg) => Box::new(SimNet::over(inner, cfg)),
+            TransportKind::Record => Box::new(Record::over(inner)),
+            TransportKind::Replay(t) => Box::new(Replay::serve(inner, t)),
+        }
+    }
+}
+
+impl PartialEq for TransportKind {
+    fn eq(&self, other: &Self) -> bool {
+        match (self, other) {
+            (TransportKind::InProc, TransportKind::InProc)
+            | (TransportKind::Counted, TransportKind::Counted)
+            | (TransportKind::Record, TransportKind::Record) => true,
+            (TransportKind::SimNet(a), TransportKind::SimNet(b)) => a == b,
+            (TransportKind::Replay(a), TransportKind::Replay(b)) => {
+                std::sync::Arc::ptr_eq(a, b)
+            }
+            _ => false,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ledger_sums_per_kind_and_total() {
+        let mut ledger = Ledger::default();
+        ledger.count(MessageKind::Broadcast, 100);
+        ledger.count(MessageKind::Broadcast, 50);
+        ledger.count(MessageKind::DeltaW, 30);
+        ledger.count(MessageKind::EvalReply, 7);
+        assert_eq!(ledger.bytes(MessageKind::Broadcast), 150);
+        assert_eq!(ledger.msgs(MessageKind::Broadcast), 2);
+        assert_eq!(ledger.total_bytes(), 187);
+        // eval traffic is instrumentation, not algorithm communication
+        assert_eq!(ledger.algorithm_bytes(), 180);
+        let rows: Vec<_> = ledger.rows().collect();
+        assert_eq!(rows.len(), wire::KIND_COUNT);
+    }
+
+    #[test]
+    fn kind_selection_names_and_equality() {
+        assert_eq!(TransportKind::default().name(), "inproc");
+        assert_eq!(TransportKind::Counted.name(), "counted");
+        assert_eq!(TransportKind::SimNet(SimNetConfig::new(1)).name(), "simnet");
+        assert_eq!(TransportKind::InProc, TransportKind::InProc);
+        assert_ne!(TransportKind::InProc, TransportKind::Counted);
+        assert_eq!(
+            TransportKind::SimNet(SimNetConfig::new(1)),
+            TransportKind::SimNet(SimNetConfig::new(1))
+        );
+        assert_ne!(
+            TransportKind::SimNet(SimNetConfig::new(1)),
+            TransportKind::SimNet(SimNetConfig::new(2))
+        );
+    }
+
+    #[test]
+    fn invalid_simnet_config_is_typed() {
+        let mut cfg = SimNetConfig::new(0);
+        cfg.drop_prob = 1.5;
+        let err = TransportKind::SimNet(cfg).validate().unwrap_err();
+        assert!(matches!(err, Error::InvalidTransport { .. }), "{err}");
+        assert!(TransportKind::SimNet(SimNetConfig::new(0)).validate().is_ok());
+    }
+}

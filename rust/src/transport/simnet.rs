@@ -1,0 +1,298 @@
+//! SimNet — a deterministic, seedable network adversary.
+//!
+//! Injects the failure modes a real cluster fabric shows — per-message
+//! latency jitter, dropped packets with bounded retransmission, slow
+//! (straggling) reply paths — while *never* touching message contents or
+//! per-worker ordering. Drops are modeled as wasted attempts: a message
+//! may be "dropped" up to `max_retries` times (each charging a retransmit
+//! of its full size plus a timeout latency), and the attempt after the
+//! last retry always lands. Delivery is therefore guaranteed and the
+//! optimization trajectory is bit-identical to [`InProc`](super::InProc);
+//! only the byte ledger and the injected-latency account differ — which is
+//! exactly what makes Figure-3-style sweeps and fault scenarios
+//! reproducible.
+//!
+//! Every per-message decision is drawn from an RNG seeded by
+//! `(seed, worker, direction, per-worker sequence number)`, so fates do
+//! not depend on cross-worker arrival interleaving: the same seed gives
+//! the same drops, the same jitter, and the same byte totals on every run.
+//!
+//! This is distinct from [`StragglerModel`](crate::netsim::StragglerModel),
+//! which scales the *modeled compute barrier*; SimNet stragglers delay the
+//! transport path of individual round replies (charged as extra injected
+//! latency proportional to the straggler's measured compute).
+
+use super::wire;
+use super::{InProc, Ledger, Meter, Transport};
+use crate::coordinator::{ToLeader, ToWorker};
+use crate::error::Result;
+use crate::util::Rng;
+
+/// Deterministic fault/latency injection parameters. Everything is pure in
+/// `seed`; see [`SimNetConfig::validate`] for the accepted ranges.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct SimNetConfig {
+    pub seed: u64,
+    /// Max uniform per-message one-way latency jitter (seconds).
+    pub jitter_s: f64,
+    /// Per-attempt drop probability, in `[0, 1)`.
+    pub drop_prob: f64,
+    /// Retransmissions allowed per message; the attempt after the last
+    /// retry always lands (bounded drops, guaranteed delivery).
+    pub max_retries: u32,
+    /// Latency charged per dropped attempt (detection timeout + resend).
+    pub retry_timeout_s: f64,
+    /// Probability a worker's round reply straggles, in `[0, 1]`.
+    pub straggler_prob: f64,
+    /// Slowdown factor of a straggling reply (>= 1): the reply is charged
+    /// `(slowdown - 1) * compute_s` of extra transport latency.
+    pub straggler_slowdown: f64,
+}
+
+impl SimNetConfig {
+    /// Mild defaults: 1 ms jitter, 1% drops with 3 retries, no stragglers.
+    pub fn new(seed: u64) -> Self {
+        SimNetConfig {
+            seed,
+            jitter_s: 1e-3,
+            drop_prob: 0.01,
+            max_retries: 3,
+            retry_timeout_s: 5e-3,
+            straggler_prob: 0.0,
+            straggler_slowdown: 1.0,
+        }
+    }
+
+    /// Override the jitter amplitude.
+    pub fn jitter(mut self, jitter_s: f64) -> Self {
+        self.jitter_s = jitter_s;
+        self
+    }
+
+    /// Override the drop/retransmit cycle.
+    pub fn drops(mut self, drop_prob: f64, max_retries: u32, retry_timeout_s: f64) -> Self {
+        self.drop_prob = drop_prob;
+        self.max_retries = max_retries;
+        self.retry_timeout_s = retry_timeout_s;
+        self
+    }
+
+    /// Override straggling replies.
+    pub fn stragglers(mut self, prob: f64, slowdown: f64) -> Self {
+        self.straggler_prob = prob;
+        self.straggler_slowdown = slowdown;
+        self
+    }
+
+    /// Range checks; `Err(reason)` feeds the typed
+    /// [`Error::InvalidTransport`](crate::Error::InvalidTransport).
+    pub fn validate(&self) -> std::result::Result<(), String> {
+        if !self.jitter_s.is_finite() || self.jitter_s < 0.0 {
+            return Err(format!("jitter_s must be finite and >= 0, got {}", self.jitter_s));
+        }
+        if !(0.0..1.0).contains(&self.drop_prob) {
+            return Err(format!("drop_prob must be in [0, 1), got {}", self.drop_prob));
+        }
+        if !self.retry_timeout_s.is_finite() || self.retry_timeout_s < 0.0 {
+            return Err(format!(
+                "retry_timeout_s must be finite and >= 0, got {}",
+                self.retry_timeout_s
+            ));
+        }
+        if !(0.0..=1.0).contains(&self.straggler_prob) {
+            return Err(format!(
+                "straggler_prob must be in [0, 1], got {}",
+                self.straggler_prob
+            ));
+        }
+        if !self.straggler_slowdown.is_finite() || self.straggler_slowdown < 1.0 {
+            return Err(format!(
+                "straggler_slowdown must be finite and >= 1, got {}",
+                self.straggler_slowdown
+            ));
+        }
+        Ok(())
+    }
+}
+
+/// One message's deterministic fate.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub(crate) struct Fate {
+    /// Dropped attempts before the one that lands (`<= max_retries`).
+    pub drops: u32,
+    /// Injected latency: retransmit timeouts + jitter.
+    pub latency_s: f64,
+    /// Whether this delivery straggles (only applied to round replies).
+    pub straggles: bool,
+}
+
+/// Pure in `(cfg, stream)`: the same stream id always yields the same fate.
+pub(crate) fn message_fate(cfg: &SimNetConfig, stream: u64) -> Fate {
+    let mut rng = Rng::seed_from_u64(stream);
+    let mut drops = 0u32;
+    while drops < cfg.max_retries && cfg.drop_prob > 0.0 && rng.gen_bool(cfg.drop_prob) {
+        drops += 1;
+    }
+    let latency_s = drops as f64 * cfg.retry_timeout_s + rng.gen_f64() * cfg.jitter_s;
+    let straggles = cfg.straggler_prob > 0.0 && rng.gen_bool(cfg.straggler_prob);
+    Fate { drops, latency_s, straggles }
+}
+
+/// Stream id for message number `seq` to/from `worker` (direction 0 =
+/// leader->worker, 1 = worker->leader).
+fn stream_id(seed: u64, worker: usize, direction: u64, seq: u64) -> u64 {
+    seed ^ (worker as u64 + 1).wrapping_mul(0x9e3779b97f4a7c15)
+        ^ (direction + 1).wrapping_mul(0xd1b54a32d192ed03)
+        ^ (seq + 1).wrapping_mul(0x2545f4914f6cdd1d)
+}
+
+/// The deterministic fault-injecting backend. See the module docs.
+pub struct SimNet {
+    inner: InProc,
+    cfg: SimNetConfig,
+    meter: Meter,
+    /// Per-worker injected latency since the last drain.
+    pending_lat: Vec<f64>,
+    /// Per-worker sequence numbers, one per direction.
+    send_seq: Vec<u64>,
+    recv_seq: Vec<u64>,
+}
+
+impl SimNet {
+    pub(crate) fn over(inner: InProc, cfg: SimNetConfig) -> Self {
+        let k = inner.k();
+        SimNet {
+            inner,
+            cfg,
+            meter: Meter::default(),
+            pending_lat: vec![0.0; k],
+            send_seq: vec![0; k],
+            recv_seq: vec![0; k],
+        }
+    }
+}
+
+impl Transport for SimNet {
+    fn name(&self) -> &'static str {
+        "simnet"
+    }
+
+    fn send(&mut self, to: usize, msg: ToWorker) -> Result<()> {
+        let (kind, bytes) = wire::to_worker_wire(&msg);
+        self.meter.count(kind, bytes);
+        // faults only hit algorithm traffic: eval/checkpoint/control are
+        // instrumentation and should not perturb the simulated time axis
+        if kind.is_algorithm() {
+            let seq = self.send_seq[to];
+            self.send_seq[to] += 1;
+            let fate = message_fate(&self.cfg, stream_id(self.cfg.seed, to, 0, seq));
+            for _ in 0..fate.drops {
+                self.meter.count(kind, bytes); // wasted retransmission
+                self.meter.ledger.retransmits += 1;
+            }
+            self.pending_lat[to] += fate.latency_s;
+        }
+        self.inner.send(to, msg)
+    }
+
+    fn recv(&mut self) -> Result<ToLeader> {
+        let msg = self.inner.recv()?;
+        let (kind, bytes) = wire::to_leader_wire(&msg);
+        self.meter.count(kind, bytes);
+        if let ToLeader::Round(r) = &msg {
+            let (worker, compute_s) = (r.worker, r.compute_s);
+            let seq = self.recv_seq[worker];
+            self.recv_seq[worker] += 1;
+            let fate = message_fate(&self.cfg, stream_id(self.cfg.seed, worker, 1, seq));
+            for _ in 0..fate.drops {
+                self.meter.count(kind, bytes);
+                self.meter.ledger.retransmits += 1;
+            }
+            let mut lat = fate.latency_s;
+            if fate.straggles {
+                lat += (self.cfg.straggler_slowdown - 1.0) * compute_s;
+            }
+            self.pending_lat[worker] += lat;
+        }
+        Ok(msg)
+    }
+
+    fn ledger(&self) -> Option<&Ledger> {
+        Some(&self.meter.ledger)
+    }
+
+    fn take_round_bytes(&mut self) -> Option<u64> {
+        Some(self.meter.drain())
+    }
+
+    fn take_round_latency(&mut self) -> f64 {
+        let max = self.pending_lat.iter().fold(0.0f64, |m, &v| m.max(v));
+        self.pending_lat.iter_mut().for_each(|v| *v = 0.0);
+        max
+    }
+
+    fn reset_state(&mut self) {
+        self.meter.reset();
+        self.pending_lat.iter_mut().for_each(|v| *v = 0.0);
+        self.send_seq.iter_mut().for_each(|v| *v = 0);
+        self.recv_seq.iter_mut().for_each(|v| *v = 0);
+        self.inner.reset_state();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fate_is_deterministic_per_stream() {
+        let cfg = SimNetConfig::new(7).drops(0.3, 4, 2e-3).stragglers(0.5, 8.0);
+        for stream in 0..200u64 {
+            assert_eq!(message_fate(&cfg, stream), message_fate(&cfg, stream));
+        }
+    }
+
+    #[test]
+    fn drops_are_bounded_by_max_retries() {
+        let cfg = SimNetConfig::new(3).drops(0.9, 2, 1e-3);
+        let mut max_seen = 0;
+        for stream in 0..500u64 {
+            let fate = message_fate(&cfg, stream);
+            assert!(fate.drops <= 2);
+            max_seen = max_seen.max(fate.drops);
+            // latency covers the timeouts paid
+            assert!(fate.latency_s >= fate.drops as f64 * 1e-3 - 1e-15);
+        }
+        assert_eq!(max_seen, 2, "at 90% drop rate the cap must be hit");
+    }
+
+    #[test]
+    fn zero_fault_config_injects_nothing() {
+        let cfg = SimNetConfig::new(1).jitter(0.0).drops(0.0, 3, 1e-3);
+        for stream in 0..100u64 {
+            let fate = message_fate(&cfg, stream);
+            assert_eq!(fate.drops, 0);
+            assert_eq!(fate.latency_s, 0.0);
+            assert!(!fate.straggles);
+        }
+    }
+
+    #[test]
+    fn streams_differ_across_workers_and_directions() {
+        let a = stream_id(5, 0, 0, 0);
+        let b = stream_id(5, 1, 0, 0);
+        let c = stream_id(5, 0, 1, 0);
+        let d = stream_id(5, 0, 0, 1);
+        assert!(a != b && a != c && a != d && b != c);
+    }
+
+    #[test]
+    fn validate_rejects_out_of_range() {
+        assert!(SimNetConfig::new(0).validate().is_ok());
+        assert!(SimNetConfig::new(0).jitter(-1.0).validate().is_err());
+        assert!(SimNetConfig::new(0).drops(1.0, 1, 1e-3).validate().is_err());
+        assert!(SimNetConfig::new(0).drops(0.1, 1, f64::NAN).validate().is_err());
+        assert!(SimNetConfig::new(0).stragglers(2.0, 2.0).validate().is_err());
+        assert!(SimNetConfig::new(0).stragglers(0.5, 0.5).validate().is_err());
+    }
+}

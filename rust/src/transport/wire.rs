@@ -1,0 +1,349 @@
+//! Wire format: byte-exact sizing (and, for `dw`, real encoding) of every
+//! leader <-> worker message.
+//!
+//! The in-process backends never serialize for delivery, but the byte
+//! accounting of [`Counted`](super::Counted) and friends must be *exact*,
+//! not an analytic vector count — so this module pins down one concrete
+//! wire layout and sizes every message against it:
+//!
+//! * every message: a 16-byte header (kind tag `u32`, worker `u32`,
+//!   round `u64`),
+//! * dense f64 vectors: `u32` length prefix + 8 bytes per scalar,
+//! * `dw` payloads: the cheaper of a dense block and a sparse
+//!   `(u32 index, f64 value)` pair list — the sparse delta-encoding that
+//!   makes mostly-zero round replies (tiny H, very sparse data) cheap.
+//!
+//! [`encode_dw`]/[`decode_dw`] implement the `dw` layout for real (used by
+//! the `hot_paths` bench and the round-trip tests); the rest of the module
+//! only *sizes* messages, which is all the ledger needs.
+
+use crate::coordinator::{LocalWork, ToLeader, ToWorker};
+
+/// Number of [`MessageKind`] variants (ledger array size).
+pub const KIND_COUNT: usize = 7;
+
+/// Message taxonomy for per-kind byte accounting.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum MessageKind {
+    /// Leader -> worker round dispatch carrying the shared `w`.
+    Broadcast = 0,
+    /// Leader -> worker commit order (the `beta_K / K` fold).
+    Commit = 1,
+    /// Worker -> leader round reply carrying `dw` (the delta-w vector).
+    DeltaW = 2,
+    /// Leader -> worker evaluation request (instrumentation).
+    EvalRequest = 3,
+    /// Worker -> leader evaluation partial sums (instrumentation).
+    EvalReply = 4,
+    /// Checkpoint traffic in either direction (get/set/report state).
+    Checkpoint = 5,
+    /// Control traffic (reset, shutdown, fatal errors).
+    Control = 6,
+}
+
+impl MessageKind {
+    pub const ALL: [MessageKind; KIND_COUNT] = [
+        MessageKind::Broadcast,
+        MessageKind::Commit,
+        MessageKind::DeltaW,
+        MessageKind::EvalRequest,
+        MessageKind::EvalReply,
+        MessageKind::Checkpoint,
+        MessageKind::Control,
+    ];
+
+    #[inline]
+    pub fn index(self) -> usize {
+        self as usize
+    }
+
+    /// Algorithm communication (what the paper's figures charge for), as
+    /// opposed to instrumentation (eval), fault tolerance (checkpoint),
+    /// and control traffic.
+    pub fn is_algorithm(self) -> bool {
+        matches!(
+            self,
+            MessageKind::Broadcast | MessageKind::Commit | MessageKind::DeltaW
+        )
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            MessageKind::Broadcast => "broadcast",
+            MessageKind::Commit => "commit",
+            MessageKind::DeltaW => "delta_w",
+            MessageKind::EvalRequest => "eval_request",
+            MessageKind::EvalReply => "eval_reply",
+            MessageKind::Checkpoint => "checkpoint",
+            MessageKind::Control => "control",
+        }
+    }
+}
+
+/// Fixed per-message header: kind tag (`u32`), worker id (`u32`),
+/// round (`u64`).
+pub const HEADER_BYTES: u64 = 16;
+/// Length prefix of variable-size payloads.
+const LEN_BYTES: u64 = 4;
+/// RNG state carried by checkpoint messages (`[u64; 4]`).
+const RNG_STATE_BYTES: u64 = 32;
+
+/// Length-prefixed dense f64 vector.
+pub fn dense_vec_bytes(len: usize) -> u64 {
+    LEN_BYTES + 8 * len as u64
+}
+
+/// How a `dw` vector goes on the wire.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DwEncoding {
+    /// `tag u8 + d u32 + d * f64`.
+    Dense,
+    /// `tag u8 + d u32 + nnz u32 + nnz * (u32 index + f64 value)`.
+    Sparse,
+}
+
+/// Chosen encoding + exact encoded size for a `dw` payload: the sparse
+/// pair list when it is strictly smaller (nnz < ~2d/3), dense otherwise.
+pub fn dw_wire(dw: &[f64]) -> (DwEncoding, u64) {
+    let d = dw.len() as u64;
+    let nnz = dw.iter().filter(|v| **v != 0.0).count() as u64;
+    let dense = 1 + LEN_BYTES + 8 * d;
+    let sparse = 1 + LEN_BYTES + LEN_BYTES + 12 * nnz;
+    if sparse < dense {
+        (DwEncoding::Sparse, sparse)
+    } else {
+        (DwEncoding::Dense, dense)
+    }
+}
+
+/// Encode `dw` into the layout [`dw_wire`] sized (little-endian).
+pub fn encode_dw(dw: &[f64]) -> Vec<u8> {
+    let (encoding, bytes) = dw_wire(dw);
+    let mut out = Vec::with_capacity(bytes as usize);
+    out.push(match encoding {
+        DwEncoding::Dense => 0u8,
+        DwEncoding::Sparse => 1u8,
+    });
+    out.extend_from_slice(&(dw.len() as u32).to_le_bytes());
+    match encoding {
+        DwEncoding::Dense => {
+            for v in dw {
+                out.extend_from_slice(&v.to_le_bytes());
+            }
+        }
+        DwEncoding::Sparse => {
+            let nnz = dw.iter().filter(|v| **v != 0.0).count() as u32;
+            out.extend_from_slice(&nnz.to_le_bytes());
+            for (i, v) in dw.iter().enumerate() {
+                if *v != 0.0 {
+                    out.extend_from_slice(&(i as u32).to_le_bytes());
+                    out.extend_from_slice(&v.to_le_bytes());
+                }
+            }
+        }
+    }
+    debug_assert_eq!(out.len() as u64, bytes);
+    out
+}
+
+/// Decode a buffer produced by [`encode_dw`]. `None` on malformed input.
+pub fn decode_dw(buf: &[u8]) -> Option<Vec<f64>> {
+    let (&tag, rest) = buf.split_first()?;
+    if rest.len() < 4 {
+        return None;
+    }
+    let d = u32::from_le_bytes(rest[0..4].try_into().ok()?) as usize;
+    let rest = &rest[4..];
+    match tag {
+        0 => {
+            if rest.len() != 8 * d {
+                return None;
+            }
+            let mut out = Vec::with_capacity(d);
+            for chunk in rest.chunks_exact(8) {
+                out.push(f64::from_le_bytes(chunk.try_into().ok()?));
+            }
+            Some(out)
+        }
+        1 => {
+            if rest.len() < 4 {
+                return None;
+            }
+            let nnz = u32::from_le_bytes(rest[0..4].try_into().ok()?) as usize;
+            let rest = &rest[4..];
+            if rest.len() != 12 * nnz {
+                return None;
+            }
+            let mut out = vec![0.0; d];
+            for chunk in rest.chunks_exact(12) {
+                let i = u32::from_le_bytes(chunk[0..4].try_into().ok()?) as usize;
+                if i >= d {
+                    return None;
+                }
+                out[i] = f64::from_le_bytes(chunk[4..12].try_into().ok()?);
+            }
+            Some(out)
+        }
+        _ => None,
+    }
+}
+
+/// A [`LocalWork`] order: kind tag (`u32`) + two parameter words covers
+/// every variant (h/b/t_offset/sigma_prime).
+fn local_work_bytes(_work: &LocalWork) -> u64 {
+    4 + 16
+}
+
+/// `(kind, exact serialized size)` of a leader -> worker message.
+pub fn to_worker_wire(msg: &ToWorker) -> (MessageKind, u64) {
+    match msg {
+        ToWorker::Round { w, work, .. } => (
+            MessageKind::Broadcast,
+            HEADER_BYTES + local_work_bytes(work) + dense_vec_bytes(w.len()),
+        ),
+        ToWorker::Commit { .. } => (MessageKind::Commit, HEADER_BYTES + 8),
+        ToWorker::Eval { w } => (
+            MessageKind::EvalRequest,
+            HEADER_BYTES + dense_vec_bytes(w.len()),
+        ),
+        ToWorker::GetState => (MessageKind::Checkpoint, HEADER_BYTES),
+        ToWorker::SetState(ws) => (
+            MessageKind::Checkpoint,
+            HEADER_BYTES + RNG_STATE_BYTES + dense_vec_bytes(ws.alpha.len()),
+        ),
+        ToWorker::Reset | ToWorker::Shutdown => (MessageKind::Control, HEADER_BYTES),
+    }
+}
+
+/// `(kind, exact serialized size)` of a worker -> leader message.
+pub fn to_leader_wire(msg: &ToLeader) -> (MessageKind, u64) {
+    match msg {
+        // compute_s (f64) + steps (u64) ride along with the encoded dw
+        ToLeader::Round(r) => (MessageKind::DeltaW, HEADER_BYTES + 16 + dw_wire(&r.dw).1),
+        // loss_sum + conj_sum (f64 each) + has_dual (u8)
+        ToLeader::Eval(_) => (MessageKind::EvalReply, HEADER_BYTES + 17),
+        ToLeader::State(ws) => (
+            MessageKind::Checkpoint,
+            HEADER_BYTES + RNG_STATE_BYTES + dense_vec_bytes(ws.alpha.len()),
+        ),
+        ToLeader::Fatal { message, .. } => (
+            MessageKind::Control,
+            HEADER_BYTES + LEN_BYTES + message.len() as u64,
+        ),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::RoundReply;
+
+    #[test]
+    fn dw_roundtrip_dense_bit_exact() {
+        let dw = vec![1.5, -0.0, f64::MIN_POSITIVE / 2.0, std::f64::consts::PI, -3.25];
+        let (enc, bytes) = dw_wire(&dw);
+        assert_eq!(enc, DwEncoding::Dense); // only one zero out of five
+        let buf = encode_dw(&dw);
+        assert_eq!(buf.len() as u64, bytes);
+        let back = decode_dw(&buf).unwrap();
+        assert_eq!(back.len(), dw.len());
+        for (a, b) in dw.iter().zip(&back) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+    }
+
+    #[test]
+    fn dw_roundtrip_sparse_bit_exact() {
+        let mut dw = vec![0.0f64; 1000];
+        dw[3] = 1.25;
+        dw[999] = -std::f64::consts::E;
+        let (enc, bytes) = dw_wire(&dw);
+        assert_eq!(enc, DwEncoding::Sparse);
+        assert_eq!(bytes, 1 + 4 + 4 + 12 * 2);
+        let buf = encode_dw(&dw);
+        assert_eq!(buf.len() as u64, bytes);
+        let back = decode_dw(&buf).unwrap();
+        for (a, b) in dw.iter().zip(&back) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+    }
+
+    #[test]
+    fn sparse_wins_exactly_when_smaller() {
+        // nnz where 8 + 12*nnz < 8*d flips the choice
+        for d in [3usize, 10, 100] {
+            for nnz in 0..=d {
+                let mut dw = vec![0.0f64; d];
+                for i in 0..nnz {
+                    dw[i] = 1.0 + i as f64;
+                }
+                let (enc, bytes) = dw_wire(&dw);
+                let dense = 1 + 4 + 8 * d as u64;
+                let sparse = 1 + 4 + 4 + 12 * nnz as u64;
+                match enc {
+                    DwEncoding::Sparse => assert!(sparse < dense, "d={d} nnz={nnz}"),
+                    DwEncoding::Dense => assert!(dense <= sparse, "d={d} nnz={nnz}"),
+                }
+                assert_eq!(bytes, dense.min(sparse));
+                assert_eq!(encode_dw(&dw).len() as u64, bytes);
+            }
+        }
+    }
+
+    #[test]
+    fn decode_rejects_malformed() {
+        assert!(decode_dw(&[]).is_none());
+        assert!(decode_dw(&[7, 0, 0, 0, 0]).is_none()); // unknown tag
+        let mut buf = encode_dw(&[1.0, 2.0]);
+        buf.pop(); // truncated payload
+        assert!(decode_dw(&buf).is_none());
+    }
+
+    #[test]
+    fn message_sizes_scale_with_payload() {
+        let w = std::sync::Arc::new(vec![0.0f64; 100]);
+        let (kind, b100) = to_worker_wire(&ToWorker::Round {
+            round: 1,
+            w: w.clone(),
+            work: LocalWork::DualRound { h: 5 },
+        });
+        assert_eq!(kind, MessageKind::Broadcast);
+        let w2 = std::sync::Arc::new(vec![0.0f64; 200]);
+        let (_, b200) = to_worker_wire(&ToWorker::Round {
+            round: 1,
+            w: w2,
+            work: LocalWork::DualRound { h: 5 },
+        });
+        assert_eq!(b200 - b100, 100 * 8);
+
+        let (kind, commit) = to_worker_wire(&ToWorker::Commit { scale: 0.25 });
+        assert_eq!(kind, MessageKind::Commit);
+        assert_eq!(commit, HEADER_BYTES + 8);
+
+        let reply = ToLeader::Round(RoundReply {
+            worker: 0,
+            round: 1,
+            dw: vec![0.0; 50],
+            compute_s: 0.0,
+            steps: 5,
+        });
+        let (kind, bytes) = to_leader_wire(&reply);
+        assert_eq!(kind, MessageKind::DeltaW);
+        // all-zero dw: the sparse encoding collapses to the fixed preamble
+        assert_eq!(bytes, HEADER_BYTES + 16 + 1 + 4 + 4);
+    }
+
+    #[test]
+    fn kind_index_is_dense_and_stable() {
+        for (i, kind) in MessageKind::ALL.iter().enumerate() {
+            assert_eq!(kind.index(), i);
+        }
+        assert!(MessageKind::Broadcast.is_algorithm());
+        assert!(MessageKind::Commit.is_algorithm());
+        assert!(MessageKind::DeltaW.is_algorithm());
+        assert!(!MessageKind::EvalRequest.is_algorithm());
+        assert!(!MessageKind::EvalReply.is_algorithm());
+        assert!(!MessageKind::Checkpoint.is_algorithm());
+        assert!(!MessageKind::Control.is_algorithm());
+    }
+}

@@ -1,0 +1,140 @@
+//! Golden tests: ridge regression (squared loss) has a closed-form optimum
+//! `(X^T X / n + lambda I) w* = X^T y / n` — CoCoA must reach it.
+//!
+//! * the exact block solver (`solvers/exact.rs`) on a single block lands
+//!   on w* directly (the H -> inf limit),
+//! * full CoCoA — both safe averaging and the CoCoA+ `adding(h)` regime —
+//!   reaches `P*` within `Budget::until_subopt(1e-6)` for K in {1, 2, 4}.
+
+use cocoa::data::{cov_like, Dataset};
+use cocoa::loss::Squared;
+use cocoa::objective;
+use cocoa::prelude::*;
+use cocoa::solvers::{Block, ExactBlockSolver, LocalDualMethod};
+use cocoa::util::Rng;
+
+/// Solve the ridge normal equations by Gaussian elimination with partial
+/// pivoting (d is tiny here).
+fn closed_form_ridge(data: &Dataset, lambda: f64) -> Vec<f64> {
+    let (n, d) = (data.n(), data.d());
+    let rows: Vec<Vec<f64>> = (0..n).map(|i| data.features.row_dense(i)).collect();
+    let mut a = vec![vec![0.0f64; d]; d];
+    let mut b = vec![0.0f64; d];
+    for (x, &y) in rows.iter().zip(&data.labels) {
+        for j in 0..d {
+            b[j] += x[j] * y / n as f64;
+            for l in 0..d {
+                a[j][l] += x[j] * x[l] / n as f64;
+            }
+        }
+    }
+    for j in 0..d {
+        a[j][j] += lambda;
+    }
+    // forward elimination
+    for col in 0..d {
+        let pivot_row = (col..d)
+            .max_by(|&i, &j| a[i][col].abs().total_cmp(&a[j][col].abs()))
+            .unwrap();
+        a.swap(col, pivot_row);
+        b.swap(col, pivot_row);
+        let pivot = a[col][col];
+        assert!(pivot.abs() > 1e-12, "singular ridge system");
+        let above = a[col].clone();
+        for row in (col + 1)..d {
+            let factor = a[row][col] / pivot;
+            for l in col..d {
+                a[row][l] -= factor * above[l];
+            }
+            b[row] -= factor * b[col];
+        }
+    }
+    // back substitution
+    let mut w = vec![0.0f64; d];
+    for col in (0..d).rev() {
+        let mut s = b[col];
+        for l in (col + 1)..d {
+            s -= a[col][l] * w[l];
+        }
+        w[col] = s / a[col][col];
+    }
+    w
+}
+
+fn tiny_ridge() -> (Dataset, f64, Vec<f64>, f64) {
+    let data = cov_like(24, 4, 0.2, 5);
+    let lambda = 0.1;
+    let w_star = closed_form_ridge(&data, lambda);
+    let p_star = objective::primal(&data, &w_star, lambda, &Squared);
+    (data, lambda, w_star, p_star)
+}
+
+#[test]
+fn closed_form_is_a_stationary_point() {
+    // sanity on the golden value itself: perturbing w* in any coordinate
+    // direction cannot decrease the primal
+    let (data, lambda, w_star, p_star) = tiny_ridge();
+    for j in 0..w_star.len() {
+        for eps in [1e-4, -1e-4] {
+            let mut w = w_star.clone();
+            w[j] += eps;
+            let p = objective::primal(&data, &w, lambda, &Squared);
+            assert!(p >= p_star - 1e-12, "w* not optimal along coordinate {j}");
+        }
+    }
+}
+
+#[test]
+fn exact_block_solver_reaches_closed_form() {
+    let (data, lambda, w_star, p_star) = tiny_ridge();
+    let n = data.n();
+    let block = Block { data: data.clone(), lambda_n: lambda * n as f64 };
+    let solver = ExactBlockSolver::default();
+    let mut rng = Rng::seed_from_u64(1);
+    let up = solver.local_update(
+        &block,
+        &Squared,
+        &vec![0.0; n],
+        &vec![0.0; data.d()],
+        0,
+        &mut rng,
+    );
+    let p = objective::primal(&data, &up.dw, lambda, &Squared);
+    assert!(
+        p - p_star <= 1e-6,
+        "exact solver missed the ridge optimum: P - P* = {}",
+        p - p_star
+    );
+    for (j, (a, b)) in up.dw.iter().zip(&w_star).enumerate() {
+        assert!((a - b).abs() < 1e-3, "w[{j}]: exact {a} vs closed form {b}");
+    }
+}
+
+#[test]
+fn cocoa_averaging_and_adding_reach_closed_form_for_k_1_2_4() {
+    let (data, lambda, _w_star, p_star) = tiny_ridge();
+    for k in [1usize, 2, 4] {
+        for adding in [false, true] {
+            let mut sess = Trainer::on(&data)
+                .workers(k)
+                .loss(LossKind::Squared)
+                .lambda(lambda)
+                .seed(3)
+                .label("ridge")
+                .build()
+                .unwrap();
+            sess.set_reference_optimum(Some(p_star));
+            let mut algo = if adding { Cocoa::adding(12) } else { Cocoa::new(12) };
+            let budget = Budget::until_subopt(1e-6).max_rounds(20_000);
+            let trace = sess.run(&mut algo, budget).unwrap();
+            let last = trace.rows.last().unwrap();
+            assert!(
+                last.primal_subopt <= 1e-6,
+                "K={k} adding={adding}: stalled at subopt {} after {} rounds",
+                last.primal_subopt,
+                last.round
+            );
+            sess.shutdown();
+        }
+    }
+}

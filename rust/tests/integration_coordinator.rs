@@ -136,9 +136,11 @@ fn comm_accounting_is_exact() {
         assert_eq!(session.stats().vectors, 8 * t); // 2K per round
         assert_eq!(session.stats().inner_steps, 20 * t); // K*h
         assert_eq!(
-            session.stats().bytes,
+            session.stats().bytes_modeled,
             session.stats().vectors * (5 * 8) as u64
         );
+        // the inproc default measures nothing
+        assert_eq!(session.stats().bytes_measured, 0);
     }
     session.shutdown();
 }

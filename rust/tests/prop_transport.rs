@@ -1,0 +1,293 @@
+//! Transport-layer properties: trajectory invariance across backends,
+//! byte-exact accounting laws, deterministic replay, and the seeded
+//! determinism artifact the CI job diffs across two runs.
+//!
+//! Like `prop_invariants.rs`, this file carries its own lightweight
+//! property harness (the offline build has no proptest crate): each
+//! property runs over `CASES` seeded random instances; on failure it
+//! reports the seed so the case replays exactly.
+
+use std::sync::Arc;
+
+use cocoa::data::cov_like;
+use cocoa::prelude::*;
+use cocoa::util::Rng;
+
+const CASES: u64 = 6;
+
+fn for_all(name: &str, prop: impl Fn(u64, &mut Rng)) {
+    for seed in 0..CASES {
+        let mut rng = Rng::seed_from_u64(0x7a45_0000 + seed);
+        let result =
+            std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| prop(seed, &mut rng)));
+        if let Err(e) = result {
+            panic!("property {name:?} failed at seed {seed}: {e:?}");
+        }
+    }
+}
+
+#[derive(Debug, Clone, Copy)]
+struct Case {
+    n: usize,
+    d: usize,
+    k: usize,
+    h: usize,
+    rounds: u64,
+    lambda: f64,
+    seed: u64,
+}
+
+fn random_case(seed: u64, rng: &mut Rng) -> Case {
+    let n = 30 + rng.gen_range(90);
+    Case {
+        n,
+        d: 3 + rng.gen_range(8),
+        k: 1 + rng.gen_range(n.min(4)),
+        h: 5 + rng.gen_range(40),
+        rounds: 3 + rng.gen_range(4) as u64,
+        lambda: rng.gen_range_f64(0.02, 0.2),
+        seed,
+    }
+}
+
+/// Run one CoCoA session over `case` on the given transport; returns the
+/// final `w` and the trace.
+fn run(case: Case, transport: TransportKind) -> (Vec<f64>, Trace) {
+    let data = cov_like(case.n, case.d, 0.1, case.seed);
+    let mut session = Trainer::on(&data)
+        .workers(case.k)
+        .loss(LossKind::SmoothedHinge { gamma: 1.0 })
+        .lambda(case.lambda)
+        .network(NetworkModel::ec2_like())
+        .transport(transport)
+        .seed(case.seed)
+        .label("prop")
+        .build()
+        .unwrap();
+    let trace = session
+        .run(&mut Cocoa::new(case.h), Budget::rounds(case.rounds))
+        .unwrap();
+    let w = session.w().to_vec();
+    session.shutdown();
+    (w, trace)
+}
+
+fn assert_rows_bit_identical(a: &Trace, b: &Trace, what: &str) {
+    assert_eq!(a.rows.len(), b.rows.len(), "{what}: row counts differ");
+    for (ra, rb) in a.rows.iter().zip(&b.rows) {
+        assert_eq!(ra.round, rb.round, "{what}");
+        assert_eq!(ra.vectors, rb.vectors, "{what}: round {}", ra.round);
+        assert_eq!(
+            ra.primal.to_bits(),
+            rb.primal.to_bits(),
+            "{what}: primal diverged at round {}",
+            ra.round
+        );
+        assert_eq!(
+            ra.dual.to_bits(),
+            rb.dual.to_bits(),
+            "{what}: dual diverged at round {}",
+            ra.round
+        );
+        assert_eq!(
+            ra.gap.to_bits(),
+            rb.gap.to_bits(),
+            "{what}: gap diverged at round {}",
+            ra.round
+        );
+    }
+}
+
+#[test]
+fn prop_simnet_trajectory_is_bit_identical_to_inproc() {
+    // SimNet injects jitter, drops/retransmits, and stragglers — but never
+    // touches message contents or per-worker ordering, so final w and the
+    // whole P/D/gap trace must match InProc bit for bit.
+    for_all("simnet == inproc trajectories", |seed, rng| {
+        let case = random_case(seed, rng);
+        let simnet = SimNetConfig::new(seed)
+            .jitter(2e-3)
+            .drops(0.1, 3, 5e-3)
+            .stragglers(0.2, 6.0);
+        let (w_inproc, tr_inproc) = run(case, TransportKind::InProc);
+        let (w_simnet, tr_simnet) = run(case, TransportKind::SimNet(simnet));
+        assert_eq!(w_inproc.len(), w_simnet.len());
+        for (a, b) in w_inproc.iter().zip(&w_simnet) {
+            assert_eq!(a.to_bits(), b.to_bits(), "final w diverged (case {case:?})");
+        }
+        assert_rows_bit_identical(&tr_inproc, &tr_simnet, "simnet vs inproc");
+    });
+}
+
+#[test]
+fn prop_counted_bytes_monotone_and_invariant_across_runs() {
+    for_all("counted bytes monotone + repeatable", |seed, rng| {
+        let case = random_case(seed, rng);
+        let (_, first) = run(case, TransportKind::Counted);
+        let (_, again) = run(case, TransportKind::Counted);
+
+        // monotone in rounds, strictly increasing once rounds happen
+        for pair in first.rows.windows(2) {
+            assert!(
+                pair[1].bytes_measured > pair[0].bytes_measured,
+                "bytes not strictly increasing: {} -> {} (case {case:?})",
+                pair[0].bytes_measured,
+                pair[1].bytes_measured
+            );
+        }
+        assert_eq!(first.rows[0].bytes_measured, 0, "round 0 moved algorithm bytes");
+
+        // invariant across repeat runs, row by row
+        for (ra, rb) in first.rows.iter().zip(&again.rows) {
+            assert_eq!(
+                ra.bytes_measured, rb.bytes_measured,
+                "byte totals differ across identical runs (round {})",
+                ra.round
+            );
+            assert_eq!(ra.bytes_modeled, rb.bytes_modeled);
+        }
+    });
+}
+
+#[test]
+fn prop_simnet_same_seed_same_bytes_and_gaps() {
+    // The acceptance contract: same seed => identical gap trace and
+    // identical byte totals across two consecutive runs.
+    for_all("simnet determinism", |seed, rng| {
+        let case = random_case(seed, rng);
+        let cfg = SimNetConfig::new(seed ^ 0xd00d).jitter(1e-3).drops(0.2, 2, 3e-3);
+        let (w1, tr1) = run(case, TransportKind::SimNet(cfg));
+        let (w2, tr2) = run(case, TransportKind::SimNet(cfg));
+        for (a, b) in w1.iter().zip(&w2) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+        assert_rows_bit_identical(&tr1, &tr2, "simnet run 1 vs run 2");
+        for (ra, rb) in tr1.rows.iter().zip(&tr2.rows) {
+            assert_eq!(ra.bytes_measured, rb.bytes_measured);
+        }
+    });
+}
+
+#[test]
+fn simnet_drops_charge_retransmission_bytes() {
+    let case = Case { n: 80, d: 6, k: 4, h: 20, rounds: 6, lambda: 0.05, seed: 3 };
+    let (_, clean) = run(case, TransportKind::Counted);
+    let lossy = SimNetConfig::new(7).jitter(0.0).drops(0.5, 3, 1e-3);
+    let (_, dropped) = run(case, TransportKind::SimNet(lossy));
+    let clean_total = clean.rows.last().unwrap().bytes_measured;
+    let lossy_total = dropped.rows.last().unwrap().bytes_measured;
+    // 144 algorithm messages at 50% drop: retransmissions are certain
+    assert!(
+        lossy_total > clean_total,
+        "drops did not charge extra bytes: {lossy_total} <= {clean_total}"
+    );
+}
+
+#[test]
+fn record_then_replay_reproduces_the_run_bit_for_bit() {
+    let case = Case { n: 60, d: 5, k: 3, h: 15, rounds: 5, lambda: 0.1, seed: 11 };
+    let data = cov_like(case.n, case.d, 0.1, case.seed);
+    let build = |transport: TransportKind| {
+        Trainer::on(&data)
+            .workers(case.k)
+            .loss(LossKind::SmoothedHinge { gamma: 1.0 })
+            .lambda(case.lambda)
+            .network(NetworkModel::ec2_like())
+            .transport(transport)
+            .seed(case.seed)
+            .label("replay")
+            .build()
+            .unwrap()
+    };
+
+    let mut recorder = build(TransportKind::Record);
+    let recorded = recorder
+        .run(&mut Cocoa::new(case.h), Budget::rounds(case.rounds))
+        .unwrap();
+    let w_recorded = recorder.w().to_vec();
+    let tape = Arc::new(recorder.take_transcript().expect("record keeps a tape"));
+    recorder.shutdown();
+    assert!(tape.sends() > 0 && tape.recvs() > 0);
+
+    // replay: same driver, no live worker traffic — every reply (compute
+    // times included) comes off the tape, so even sim_time_s reproduces
+    let mut replayer = build(TransportKind::Replay(tape.clone()));
+    let replayed = replayer
+        .run(&mut Cocoa::new(case.h), Budget::rounds(case.rounds))
+        .unwrap();
+    for (a, b) in w_recorded.iter().zip(replayer.w()) {
+        assert_eq!(a.to_bits(), b.to_bits(), "replayed w diverged");
+    }
+    assert_eq!(recorded.rows.len(), replayed.rows.len());
+    for (ra, rb) in recorded.rows.iter().zip(&replayed.rows) {
+        assert_eq!(ra.primal.to_bits(), rb.primal.to_bits());
+        assert_eq!(ra.dual.to_bits(), rb.dual.to_bits());
+        assert_eq!(ra.gap.to_bits(), rb.gap.to_bits());
+        assert_eq!(ra.bytes_measured, rb.bytes_measured);
+        assert_eq!(ra.sim_time_s.to_bits(), rb.sim_time_s.to_bits());
+        assert_eq!(ra.compute_time_s.to_bits(), rb.compute_time_s.to_bits());
+    }
+    replayer.shutdown();
+
+    // a diverging driver (one extra round) must fail with a typed error,
+    // not silently fabricate data past the end of the tape
+    let mut diverging = build(TransportKind::Replay(tape));
+    let err = diverging
+        .run(&mut Cocoa::new(case.h), Budget::rounds(case.rounds + 1))
+        .unwrap_err();
+    assert!(
+        matches!(err, cocoa::Error::Transport { .. }),
+        "divergence must surface as the typed transport error, got: {err}"
+    );
+    assert!(
+        err.to_string().contains("replay diverged"),
+        "wrong error: {err}"
+    );
+    diverging.shutdown();
+}
+
+/// Writes the deterministic fingerprint of a seeded SimNet run to
+/// `target/determinism/trace_<seed>.csv`. The CI job runs this test twice
+/// with `CARGO_TEST_SEED` pinned and diffs the two files — any
+/// nondeterminism in the transport, the coordinator reduction order, or
+/// the byte accounting shows up as a diff. Only deterministic columns are
+/// written (no wall-clock or CPU-time derived values).
+#[test]
+fn seeded_determinism_artifact() {
+    let seed: u64 = std::env::var("CARGO_TEST_SEED")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(42);
+    let case = Case {
+        n: 90,
+        d: 7,
+        k: 3,
+        h: 25,
+        rounds: 6,
+        lambda: 0.05,
+        seed,
+    };
+    let cfg = SimNetConfig::new(seed).jitter(1e-3).drops(0.15, 3, 2e-3).stragglers(0.1, 4.0);
+    let (w, trace) = run(case, TransportKind::SimNet(cfg));
+
+    let mut out = String::from("round,vectors,bytes_modeled,bytes_measured,primal_bits,dual_bits,gap_bits\n");
+    for r in &trace.rows {
+        out.push_str(&format!(
+            "{},{},{},{},{:016x},{:016x},{:016x}\n",
+            r.round,
+            r.vectors,
+            r.bytes_modeled,
+            r.bytes_measured,
+            r.primal.to_bits(),
+            r.dual.to_bits(),
+            r.gap.to_bits(),
+        ));
+    }
+    let fingerprint = w
+        .iter()
+        .fold(0u64, |acc, v| acc.rotate_left(7) ^ v.to_bits());
+    out.push_str(&format!("final_w_fingerprint {fingerprint:016x}\n"));
+
+    std::fs::create_dir_all("target/determinism").unwrap();
+    std::fs::write(format!("target/determinism/trace_{seed}.csv"), out).unwrap();
+}
