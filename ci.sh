@@ -33,7 +33,23 @@ CARGO_TEST_SEED="$DET_SEED" cargo test -q --test prop_transport seeded_determini
 diff /tmp/cocoa_determinism_run1.csv "$DET_FILE"
 printf 'determinism: two seeded runs produced identical traces\n'
 
+# Same gate for the L1/prox path: the golden_lasso suite writes an L1-run
+# fingerprint (counted transport, leader-side prox, sparse broadcast byte
+# accounting) — any nondeterminism in the regularizer path diffs here.
+step "seeded determinism, L1 prox path"
+DET_L1_FILE="target/determinism/trace_l1_${DET_SEED}.csv"
+rm -f "$DET_L1_FILE"
+CARGO_TEST_SEED="$DET_SEED" cargo test -q --test golden_lasso seeded_determinism_artifact_l1
+cp "$DET_L1_FILE" /tmp/cocoa_determinism_l1_run1.csv
+rm -f "$DET_L1_FILE"
+CARGO_TEST_SEED="$DET_SEED" cargo test -q --test golden_lasso seeded_determinism_artifact_l1
+diff /tmp/cocoa_determinism_l1_run1.csv "$DET_L1_FILE"
+printf 'determinism: two seeded L1 runs produced identical traces\n'
+
 if [[ "${1:-}" != "--fast" ]]; then
+    step "cargo doc --no-deps (rustdoc warnings are errors)"
+    RUSTDOCFLAGS="-D warnings" cargo doc --no-deps --quiet
+
     step "cargo clippy -- -D warnings"
     cargo clippy --all-targets -- -D warnings
 

@@ -99,6 +99,33 @@ fn main() {
         black_box(objective::block_conj_sum(&block.data, &alpha0, &Hinge));
     });
 
+    // --- regularizer prox-step kernel (the leader's per-commit map) ---
+    {
+        use cocoa::regularizers::{Regularizer, RegularizerKind};
+        let l1 = RegularizerKind::L1 { epsilon: 0.5 }.build();
+        let l2 = RegularizerKind::L2.build();
+        let v: Vec<f64> = (0..10_000).map(|i| 3.0 * (i as f64 * 0.37).sin()).collect();
+        let mut w_out = vec![0.0f64; 10_000];
+        bench("prox map dense d=10k (l1 soft threshold)", 30, 1.0, || {
+            l1.prox_into(&v, &mut w_out);
+            black_box(&w_out);
+        });
+        bench("prox map dense d=10k (l2 identity)", 30, 1.0, || {
+            l2.prox_into(&v, &mut w_out);
+            black_box(&w_out);
+        });
+        // sparse-column variant: after a sparse-data round only the
+        // touched coordinates of v moved, so the map only needs to revisit
+        // those — the L1 inner-loop shape future regressions would hit
+        let touched: Vec<usize> = (0..10_000).step_by(83).collect(); // ~120 cols
+        bench("prox map sparse ~120 touched of d=10k", 30, 1.0, || {
+            for &j in &touched {
+                w_out[j] = l1.prox_coord(v[j]);
+            }
+            black_box(&w_out);
+        });
+    }
+
     // --- transport wire format: sparse delta-encoding of RoundReply.dw ---
     {
         use cocoa::transport::{decode_dw, encode_dw};

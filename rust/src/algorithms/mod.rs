@@ -20,9 +20,9 @@
 //! problem) are two values of [`Aggregation`], so CoCoA+ is a constructor
 //! away: [`Cocoa::adding`].
 
-use crate::coordinator::{Cluster, LocalWork, RoundReply};
+use crate::coordinator::{Cluster, Evaluation, LocalWork, RoundReply};
 use crate::error::{Error, Result};
-use crate::telemetry::{Trace, TraceRow};
+use crate::telemetry::{StopReason, Trace, TraceRow};
 
 /// How the leader folds the K local updates into the shared state — the
 /// `beta_K` knob of Algorithm 1, made a policy type.
@@ -95,6 +95,15 @@ pub trait Algorithm {
     /// (single-round methods override this to 1).
     fn total_rounds(&self, budget_rounds: u64) -> u64 {
         budget_rounds
+    }
+
+    /// Does this method's leader update assume the plain L2 regularizer?
+    /// The primal (Pegasos) SGD baselines do — their `1/(lambda t)` step
+    /// and shrink are derived from `(lambda/2)||w||^2` — so the driver
+    /// rejects them on L1/elastic-net sessions with a typed error instead
+    /// of silently optimizing the wrong objective.
+    fn requires_l2(&self) -> bool {
+        false
     }
 
     /// The order broadcast to worker `worker` this round.
@@ -357,6 +366,10 @@ impl Algorithm for LocalSgd {
         "local_sgd"
     }
 
+    fn requires_l2(&self) -> bool {
+        true
+    }
+
     fn h(&self) -> usize {
         self.h
     }
@@ -403,6 +416,10 @@ impl NaiveSgd {
 impl Algorithm for NaiveSgd {
     fn name(&self) -> &'static str {
         "naive_sgd"
+    }
+
+    fn requires_l2(&self) -> bool {
+        true
     }
 
     fn h(&self) -> usize {
@@ -454,6 +471,10 @@ impl MinibatchSgd {
 impl Algorithm for MinibatchSgd {
     fn name(&self) -> &'static str {
         "minibatch_sgd"
+    }
+
+    fn requires_l2(&self) -> bool {
+        true
     }
 
     fn h(&self) -> usize {
@@ -542,6 +563,12 @@ pub(crate) fn drive(
         // fire — fail fast instead of spinning to the round cap
         return Err(Error::MissingReferenceOptimum);
     }
+    if algorithm.requires_l2() && !cluster.regularizer().is_l2() {
+        return Err(Error::UnsupportedRegularizer {
+            regularizer: cluster.regularizer().to_string(),
+            context: format!("the primal-SGD baseline {:?}", algorithm.name()),
+        });
+    }
     let mut trace = Trace::new(
         algorithm.name(),
         dataset_label,
@@ -551,26 +578,42 @@ pub(crate) fn drive(
         cluster.lambda(),
     );
     // round 0 snapshot
-    record(cluster, &mut trace, 0, p_star)?;
+    let ev = cluster.evaluate()?;
+    record(cluster, &mut trace, 0, p_star, ev, StopReason::Running);
 
     let total_rounds = algorithm.total_rounds(budget.rounds);
     let eval_every = budget.eval_every.max(1);
+    let mut stopped = StopReason::MaxRounds;
     for round in 1..=total_rounds {
         let ctx = RoundCtx { round, k: cluster.k, lambda: cluster.lambda() };
         let replies = cluster.dispatch(|kid| algorithm.local_work(&ctx, kid))?;
         algorithm.reduce(cluster, &replies, &ctx)?;
 
         if round % eval_every == 0 || round == total_rounds {
-            let row = record(cluster, &mut trace, round, p_star)?;
-            let stop_gap = budget.target_gap > 0.0 && row.gap <= budget.target_gap;
+            let ev = cluster.evaluate()?;
+            let subopt = p_star.map(|p| ev.primal - p).unwrap_or(f64::NAN);
+            let stop_gap = budget.target_gap > 0.0 && ev.gap <= budget.target_gap;
             let stop_subopt = budget.target_subopt > 0.0
-                && row.primal_subopt.is_finite()
-                && row.primal_subopt <= budget.target_subopt;
+                && subopt.is_finite()
+                && subopt <= budget.target_subopt;
+            // gap wins ties: it is the paper's primary certificate
+            let reason = if stop_gap {
+                StopReason::Gap
+            } else if stop_subopt {
+                StopReason::Subopt
+            } else if round == total_rounds {
+                StopReason::MaxRounds
+            } else {
+                StopReason::Running
+            };
+            record(cluster, &mut trace, round, p_star, ev, reason);
             if stop_gap || stop_subopt {
+                stopped = reason;
                 break;
             }
         }
     }
+    cluster.last_stop = stopped;
     Ok(trace)
 }
 
@@ -579,8 +622,9 @@ fn record(
     trace: &mut Trace,
     round: u64,
     p_star: Option<f64>,
-) -> Result<TraceRow, Error> {
-    let ev = cluster.evaluate()?;
+    ev: Evaluation,
+    stop: StopReason,
+) -> TraceRow {
     let row = TraceRow {
         round,
         sim_time_s: cluster.stats.sim_time_s,
@@ -593,9 +637,11 @@ fn record(
         dual: ev.dual,
         gap: ev.gap,
         primal_subopt: p_star.map(|p| ev.primal - p).unwrap_or(f64::NAN),
+        w_nnz: cluster.w_nnz(),
+        stop,
     };
     trace.push(row);
-    Ok(row)
+    row
 }
 
 #[cfg(test)]
@@ -666,6 +712,49 @@ mod tests {
         let trace = sess.run(&mut Cocoa::new(200), budget).unwrap();
         assert!(trace.rows.last().unwrap().gap <= 0.05);
         assert!((trace.rows.len() as u64) < 500);
+        sess.shutdown();
+    }
+
+    #[test]
+    fn stop_reasons_distinguish_gap_from_subopt() {
+        use crate::telemetry::StopReason;
+        // gap criterion: final row says "gap", earlier rows say "running"
+        let mut sess = session(2, 13);
+        let trace = sess
+            .run(&mut Cocoa::new(200), Budget::until_gap(0.05).max_rounds(500))
+            .unwrap();
+        assert_eq!(trace.rows.last().unwrap().stop, StopReason::Gap);
+        for row in &trace.rows[..trace.rows.len() - 1] {
+            assert_eq!(row.stop, StopReason::Running, "round {}", row.round);
+        }
+        // the checkpoint remembers why the run ended
+        assert_eq!(sess.checkpoint().unwrap().stop, StopReason::Gap);
+
+        // subopt criterion on the same session
+        sess.reset().unwrap();
+        sess.set_reference_optimum(Some(0.0));
+        let trace = sess
+            .run(&mut Cocoa::new(50), Budget::until_subopt(10.0).max_rounds(50))
+            .unwrap();
+        assert_eq!(trace.rows.last().unwrap().stop, StopReason::Subopt);
+        assert_eq!(sess.checkpoint().unwrap().stop, StopReason::Subopt);
+
+        // plain round budget: "max_rounds"
+        sess.reset().unwrap();
+        sess.set_reference_optimum(None);
+        let trace = sess.run(&mut Cocoa::new(10), Budget::rounds(3)).unwrap();
+        assert_eq!(trace.rows.last().unwrap().stop, StopReason::MaxRounds);
+        assert_eq!(trace.rows[0].stop, StopReason::Running);
+        sess.shutdown();
+    }
+
+    #[test]
+    fn w_nnz_tracks_the_primal_iterate() {
+        let mut sess = session(2, 15);
+        let trace = sess.run(&mut Cocoa::new(40), Budget::rounds(3)).unwrap();
+        assert_eq!(trace.rows[0].w_nnz, 0); // w starts at zero
+        let last = trace.rows.last().unwrap();
+        assert!(last.w_nnz > 0 && last.w_nnz <= sess.d() as u64);
         sess.shutdown();
     }
 

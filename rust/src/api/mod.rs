@@ -32,6 +32,7 @@ use crate::data::{Dataset, Partition, PartitionStrategy};
 use crate::error::{Error, Result};
 use crate::loss::LossKind;
 use crate::netsim::{NetworkModel, StragglerModel};
+use crate::regularizers::RegularizerKind;
 use crate::solvers::SolverKind;
 use crate::telemetry::Trace;
 use crate::transport::{Ledger, Transcript, TransportKind};
@@ -59,6 +60,7 @@ pub struct Trainer<'a> {
     partition: Option<PartitionChoice>,
     loss: LossKind,
     lambda: Option<f64>,
+    regularizer: RegularizerKind,
     solver: SolverKind,
     backend: Backend,
     artifacts_dir: String,
@@ -77,6 +79,7 @@ impl<'a> Trainer<'a> {
             partition: None,
             loss: LossKind::Hinge,
             lambda: None,
+            regularizer: RegularizerKind::default(),
             solver: SolverKind::default(),
             backend: Backend::default(),
             artifacts_dir: "artifacts".into(),
@@ -143,6 +146,19 @@ impl<'a> Trainer<'a> {
     /// Regularization strength (required — the paper tunes it per dataset).
     pub fn lambda(mut self, lambda: f64) -> Self {
         self.lambda = Some(lambda);
+        self
+    }
+
+    /// The regularizer `Omega` of `P(w) = lambda Omega(w) + loss term`.
+    /// Default: plain L2 (the paper's problem). Pick
+    /// [`RegularizerKind::L1`] for lasso-style sparsity or
+    /// [`RegularizerKind::ElasticNet`] for the mixture; parameters are
+    /// range-checked (typed `Error::InvalidRegularizer`) at
+    /// [`Trainer::build`], and combinations that assume L2 — the PJRT
+    /// backend, the gap-certified local solver — are rejected with
+    /// `Error::UnsupportedRegularizer`.
+    pub fn regularizer(mut self, regularizer: RegularizerKind) -> Self {
+        self.regularizer = regularizer;
         self
     }
 
@@ -231,6 +247,27 @@ impl<'a> Trainer<'a> {
             .validate()
             .map_err(|reason| Error::InvalidPartition { reason })?;
 
+        self.regularizer
+            .validate()
+            .map_err(|reason| Error::InvalidRegularizer { reason })?;
+        if !self.regularizer.is_l2() {
+            // features whose math hardcodes (lambda/2)||w||^2
+            if self.backend == Backend::Pjrt {
+                return Err(Error::UnsupportedRegularizer {
+                    regularizer: self.regularizer.to_string(),
+                    context: "the PJRT backend (its AOT kernels fix the L2 subproblem)".into(),
+                });
+            }
+            if self.solver == SolverKind::GapCertified {
+                return Err(Error::UnsupportedRegularizer {
+                    regularizer: self.regularizer.to_string(),
+                    context: "the gap_certified solver (the Appendix-B local \
+                              certificate is derived for L2)"
+                        .into(),
+                });
+            }
+        }
+
         if self.backend == Backend::Pjrt
             && !Path::new(&self.artifacts_dir).join("manifest.tsv").exists()
         {
@@ -244,6 +281,7 @@ impl<'a> Trainer<'a> {
             partition: &partition,
             loss: self.loss,
             lambda,
+            regularizer: self.regularizer,
             solver: self.solver,
             backend: self.backend,
             artifacts_dir: &self.artifacts_dir,
@@ -336,6 +374,17 @@ impl Session {
 
     pub fn loss(&self) -> LossKind {
         self.cluster.loss()
+    }
+
+    /// The regularizer the session was built with.
+    pub fn regularizer(&self) -> RegularizerKind {
+        self.cluster.regularizer()
+    }
+
+    /// Nonzero count of the current primal iterate `w` (prox-induced
+    /// exact zeros — the sparsity-recovery axis on L1/elastic-net runs).
+    pub fn w_nnz(&self) -> u64 {
+        self.cluster.w_nnz()
     }
 
     /// Largest block size (`~n` in Proposition 1).
@@ -467,6 +516,29 @@ mod tests {
             .build()
             .unwrap_err();
         assert!(matches!(err, Error::InvalidTransport { .. }), "{err}");
+    }
+
+    #[test]
+    fn regularizer_flows_through_the_builder() {
+        let data = cov_like(60, 6, 0.1, 6);
+        let mut sess = Trainer::on(&data)
+            .workers(2)
+            .loss(LossKind::Squared)
+            .lambda(0.2)
+            .regularizer(RegularizerKind::L1 { epsilon: 0.5 })
+            .build()
+            .unwrap();
+        assert_eq!(sess.regularizer(), RegularizerKind::L1 { epsilon: 0.5 });
+        let tr = sess.run(&mut Cocoa::new(30), Budget::rounds(6)).unwrap();
+        for row in &tr.rows {
+            assert!(row.gap >= -1e-9, "round {}: gap {}", row.round, row.gap);
+        }
+        assert!(sess.w_nnz() <= 6);
+        assert_eq!(
+            sess.w_nnz(),
+            sess.w().iter().filter(|v| **v != 0.0).count() as u64
+        );
+        sess.shutdown();
     }
 
     #[test]

@@ -16,6 +16,7 @@ use crate::data::{self, Dataset, Partition, PartitionStrategy};
 use crate::error::Error;
 use crate::loss::LossKind;
 use crate::netsim::NetworkModel;
+use crate::regularizers::RegularizerKind;
 use crate::solvers::SolverKind;
 use crate::transport::{SimNetConfig, TransportKind};
 use crate::util::toml_lite::Doc;
@@ -331,6 +332,10 @@ pub struct ExperimentConfig {
     pub algorithm: AlgorithmSpec,
     pub loss: LossKind,
     pub lambda: f64,
+    /// The `[regularizer]` section (default plain L2). Parameter ranges
+    /// are checked at `Trainer::build`, which returns a typed
+    /// `Error::InvalidRegularizer` / `Error::UnsupportedRegularizer`.
+    pub regularizer: RegularizerKind,
     pub run: RunSpec,
     pub netsim: NetworkModel,
     /// Leader <-> worker transport backend (`[transport]` section; default
@@ -373,6 +378,7 @@ impl ExperimentConfig {
             .partition(self.partition.build(data.n()))
             .loss(self.loss)
             .lambda(self.lambda)
+            .regularizer(self.regularizer)
             .solver(self.algorithm.solver_kind())
             .backend(self.run.backend)
             .artifacts_dir(self.artifacts_dir.as_str())
@@ -388,6 +394,20 @@ impl ExperimentConfig {
         let gamma = doc.f64_or("loss", "gamma", 1.0);
         let loss = LossKind::from_name(loss_name, gamma)
             .ok_or_else(|| anyhow!("unknown loss {loss_name:?}"))?;
+        let regularizer = if doc.has_section("regularizer") {
+            match doc.str_or("regularizer", "kind", "l2") {
+                "l2" => RegularizerKind::L2,
+                "l1" => RegularizerKind::L1 {
+                    epsilon: doc.f64_or("regularizer", "epsilon", 0.5),
+                },
+                "elastic_net" => RegularizerKind::ElasticNet {
+                    l1_ratio: doc.f64_or("regularizer", "l1_ratio", 0.5),
+                },
+                other => bail!("unknown regularizer kind {other:?} (l2|l1|elastic_net)"),
+            }
+        } else {
+            RegularizerKind::L2
+        };
         let netsim = if doc.has_section("netsim") {
             if let Some(preset) = doc.get("netsim", "preset").and_then(|v| v.as_str()) {
                 NetworkModel::by_name(preset)
@@ -429,6 +449,7 @@ impl ExperimentConfig {
             algorithm: AlgorithmSpec::from_doc(&doc)?,
             loss,
             lambda: doc.f64_of("", "lambda")?,
+            regularizer,
             run: RunSpec::from_doc(&doc)?,
             netsim,
             transport,
@@ -568,6 +589,51 @@ bandwidth_bps = 1e9
         let data = crate::data::cov_like(50, 4, 0.1, 1);
         let err = cfg.trainer(&data).build().unwrap_err();
         assert!(matches!(err, Error::InvalidTransport { .. }), "{err}");
+    }
+
+    #[test]
+    fn regularizer_section_parses() {
+        // no section: plain L2 default
+        let cfg = ExperimentConfig::from_toml(SAMPLE).unwrap();
+        assert_eq!(cfg.regularizer, RegularizerKind::L2);
+
+        let l1 = format!("{SAMPLE}\n[regularizer]\nkind = \"l1\"\nepsilon = 0.25\n");
+        let cfg = ExperimentConfig::from_toml(&l1).unwrap();
+        assert_eq!(cfg.regularizer, RegularizerKind::L1 { epsilon: 0.25 });
+
+        let en = format!("{SAMPLE}\n[regularizer]\nkind = \"elastic_net\"\nl1_ratio = 0.7\n");
+        let cfg = ExperimentConfig::from_toml(&en).unwrap();
+        assert_eq!(cfg.regularizer, RegularizerKind::ElasticNet { l1_ratio: 0.7 });
+
+        let bad = format!("{SAMPLE}\n[regularizer]\nkind = \"l0\"\n");
+        assert!(ExperimentConfig::from_toml(&bad).is_err());
+    }
+
+    #[test]
+    fn out_of_range_regularizer_fails_at_build_with_typed_error() {
+        let text = format!(
+            "{SAMPLE}\n[regularizer]\nkind = \"elastic_net\"\nl1_ratio = 1.0\n"
+        );
+        let cfg = ExperimentConfig::from_toml(&text).unwrap(); // parse is lenient
+        let data = crate::data::cov_like(50, 4, 0.1, 1);
+        let err = cfg.trainer(&data).build().unwrap_err();
+        assert!(matches!(err, Error::InvalidRegularizer { .. }), "{err}");
+    }
+
+    #[test]
+    fn regularized_config_builds_a_running_session() {
+        let text = format!(
+            "{SAMPLE}\n[regularizer]\nkind = \"l1\"\nepsilon = 0.5\n"
+        )
+        .replace("kind = \"hinge\"", "kind = \"squared\"");
+        let cfg = ExperimentConfig::from_toml(&text).unwrap();
+        let data = crate::data::cov_like(60, 5, 0.1, 2);
+        let mut session = cfg.trainer(&data).build().unwrap();
+        assert_eq!(session.regularizer(), RegularizerKind::L1 { epsilon: 0.5 });
+        let mut algo = cfg.algorithm.instantiate();
+        let tr = session.run(algo.as_mut(), Budget::rounds(2)).unwrap();
+        assert!(tr.rows.last().unwrap().gap >= -1e-9);
+        session.shutdown();
     }
 
     #[test]

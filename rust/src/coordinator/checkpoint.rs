@@ -11,17 +11,25 @@
 //! independent of any serialization crate (offline build):
 //!
 //! ```text
-//! #cocoa-checkpoint v2
+//! #cocoa-checkpoint v3
 //! meta <k> <n> <d> <round_counter>
+//! stop <running|max_rounds|gap|subopt>
+//! regularizer <kind token, e.g. l2 or l1(ε=0.5)>
 //! stats <rounds> <vectors> <bytes_modeled> <bytes_measured> <compute_s> <sim_time_s> <inner_steps>
-//! w <d hex-f64 words>
+//! v <d hex-f64 words>
 //! worker <id> rng <s0> <s1> <s2> <s3>
 //! alpha <id> <n_k hex-f64 words>
 //! ```
 //!
-//! (v1 had a single `bytes` column; v2 splits modeled vs transport-measured
-//! bytes and is not backward compatible — old checkpoints are rejected by
-//! the header check.)
+//! (v1 had a single `bytes` column; v2 split modeled vs transport-measured
+//! bytes; v3 renames the shared vector `w` to `v` — it is the *pre-prox*
+//! dual combination, from which the primal iterate `w = prox(v)` is
+//! recomputed on restore — and records which stop criterion ended the
+//! checkpointed run plus the regularizer the state belongs to, so a
+//! restore into a cluster with a different regularizer is rejected
+//! instead of silently reinterpreting `v` through the wrong prox. No
+//! version is backward compatible — old checkpoints are rejected by the
+//! header check.)
 //!
 //! Floats are stored as hex bit patterns: exact round-trip, no precision
 //! loss through decimal formatting.
@@ -30,6 +38,8 @@ use std::io::Write;
 use std::path::Path;
 
 use anyhow::{anyhow, bail, Context, Result};
+
+use crate::telemetry::StopReason;
 
 /// One worker's persisted state.
 #[derive(Debug, Clone, PartialEq)]
@@ -46,8 +56,19 @@ pub struct Checkpoint {
     pub n: usize,
     pub d: usize,
     pub round_counter: u64,
+    /// Which stop criterion ended the checkpointed run
+    /// ([`StopReason::Running`] when the run never finished a driven
+    /// budget — e.g. checkpoints taken mid-sweep).
+    pub stop: StopReason,
+    /// Display token of the regularizer this state was trained under
+    /// (e.g. `l2`, `l1(ε=0.5)`). Restore validates it against the target
+    /// cluster — `v` is only meaningful through the matching prox.
+    pub regularizer: String,
     pub stats: super::CommStats,
-    pub w: Vec<f64>,
+    /// The pre-prox shared vector; the primal iterate is `prox(v)`,
+    /// recomputed by the restoring cluster's regularizer (for L2, `v` *is*
+    /// `w`).
+    pub v: Vec<f64>,
     pub workers: Vec<WorkerState>,
 }
 
@@ -87,11 +108,13 @@ impl Checkpoint {
             std::fs::create_dir_all(parent)?;
         }
         let mut text = String::new();
-        text.push_str("#cocoa-checkpoint v2\n");
+        text.push_str("#cocoa-checkpoint v3\n");
         text.push_str(&format!(
             "meta {} {} {} {}\n",
             self.k, self.n, self.d, self.round_counter
         ));
+        text.push_str(&format!("stop {}\n", self.stop.as_str()));
+        text.push_str(&format!("regularizer {}\n", self.regularizer));
         text.push_str(&format!(
             "stats {} {} {} {} {:016x} {:016x} {}\n",
             self.stats.rounds,
@@ -102,8 +125,8 @@ impl Checkpoint {
             self.stats.sim_time_s.to_bits(),
             self.stats.inner_steps,
         ));
-        text.push_str("w");
-        write_f64s(&mut text, &self.w);
+        text.push_str("v");
+        write_f64s(&mut text, &self.v);
         text.push('\n');
         for ws in &self.workers {
             text.push_str(&format!(
@@ -125,7 +148,7 @@ impl Checkpoint {
             .with_context(|| format!("read {}", path.as_ref().display()))?;
         let mut lines = text.lines();
         let header = lines.next().context("empty checkpoint")?;
-        if header != "#cocoa-checkpoint v2" {
+        if header != "#cocoa-checkpoint v3" {
             bail!("bad checkpoint header {header:?}");
         }
         let meta: Vec<&str> = lines.next().context("missing meta")?.split(' ').collect();
@@ -138,6 +161,19 @@ impl Checkpoint {
             meta[3].parse()?,
             meta[4].parse()?,
         );
+        let stop_line: Vec<&str> =
+            lines.next().context("missing stop")?.split(' ').collect();
+        if stop_line.len() != 2 || stop_line[0] != "stop" {
+            bail!("bad stop line");
+        }
+        let stop = StopReason::from_name(stop_line[1])
+            .ok_or_else(|| anyhow!("unknown stop reason {:?}", stop_line[1]))?;
+        let reg_line: Vec<&str> =
+            lines.next().context("missing regularizer")?.split(' ').collect();
+        if reg_line.len() != 2 || reg_line[0] != "regularizer" {
+            bail!("bad regularizer line");
+        }
+        let regularizer = reg_line[1].to_string();
         let st: Vec<&str> = lines.next().context("missing stats")?.split(' ').collect();
         if st.len() != 8 || st[0] != "stats" {
             bail!("bad stats line");
@@ -151,13 +187,13 @@ impl Checkpoint {
             sim_time_s: f64::from_bits(u64::from_str_radix(st[6], 16)?),
             inner_steps: st[7].parse()?,
         };
-        let wline: Vec<&str> = lines.next().context("missing w")?.split(' ').collect();
-        if wline[0] != "w" {
-            bail!("bad w line");
+        let vline: Vec<&str> = lines.next().context("missing v")?.split(' ').collect();
+        if vline[0] != "v" {
+            bail!("bad v line");
         }
-        let w = parse_f64s(&wline[1..])?;
-        if w.len() != d {
-            bail!("w length {} != d {d}", w.len());
+        let v = parse_f64s(&vline[1..])?;
+        if v.len() != d {
+            bail!("v length {} != d {d}", v.len());
         }
         let mut workers = Vec::with_capacity(k);
         let mut pending: Option<(usize, [u64; 4])> = None;
@@ -197,7 +233,7 @@ impl Checkpoint {
         if workers.len() != k {
             bail!("checkpoint has {} workers, meta says {k}", workers.len());
         }
-        Ok(Checkpoint { k, n, d, round_counter, stats, w, workers })
+        Ok(Checkpoint { k, n, d, round_counter, stop, regularizer, stats, v, workers })
     }
 }
 
@@ -211,6 +247,8 @@ mod tests {
             n: 5,
             d: 3,
             round_counter: 7,
+            stop: StopReason::Gap,
+            regularizer: "l1(ε=0.5)".to_string(),
             stats: crate::coordinator::CommStats {
                 rounds: 7,
                 vectors: 28,
@@ -220,7 +258,7 @@ mod tests {
                 sim_time_s: 1.5e-3,
                 inner_steps: 700,
             },
-            w: vec![1.0, -0.5, f64::consts_hack()],
+            v: vec![1.0, -0.5, f64::consts_hack()],
             workers: vec![
                 WorkerState { id: 0, rng_state: [1, 2, 3, 4], alpha: vec![0.25, -0.75, 0.0] },
                 WorkerState { id: 1, rng_state: [5, 6, 7, 8], alpha: vec![1e-300, 42.0] },
@@ -252,7 +290,21 @@ mod tests {
         let path = std::env::temp_dir().join("cocoa_ckpt_test/bad.ckpt");
         cp.save(&path).unwrap();
         let mut text = std::fs::read_to_string(&path).unwrap();
-        text = text.replace("#cocoa-checkpoint v2", "#cocoa-checkpoint v9");
+        text = text.replace("#cocoa-checkpoint v3", "#cocoa-checkpoint v9");
+        std::fs::write(&path, &text).unwrap();
+        assert!(Checkpoint::load(&path).is_err());
+        // an unknown stop token is rejected, not silently defaulted
+        let cp = sample();
+        cp.save(&path).unwrap();
+        let mut text = std::fs::read_to_string(&path).unwrap();
+        text = text.replace("stop gap", "stop because");
+        std::fs::write(&path, &text).unwrap();
+        assert!(Checkpoint::load(&path).is_err());
+        // a missing regularizer record is rejected too
+        let cp = sample();
+        cp.save(&path).unwrap();
+        let mut text = std::fs::read_to_string(&path).unwrap();
+        text = text.replace("regularizer l1(ε=0.5)\n", "");
         std::fs::write(&path, &text).unwrap();
         assert!(Checkpoint::load(&path).is_err());
     }
@@ -260,12 +312,28 @@ mod tests {
     #[test]
     fn subnormal_and_special_values_survive() {
         let mut cp = sample();
-        cp.w = vec![f64::MIN_POSITIVE / 2.0, -0.0, f64::MAX];
+        cp.v = vec![f64::MIN_POSITIVE / 2.0, -0.0, f64::MAX];
         let path = std::env::temp_dir().join("cocoa_ckpt_test/special.ckpt");
         cp.save(&path).unwrap();
         let back = Checkpoint::load(&path).unwrap();
-        assert_eq!(cp.w[0].to_bits(), back.w[0].to_bits());
-        assert_eq!(cp.w[1].to_bits(), back.w[1].to_bits());
-        assert_eq!(cp.w[2].to_bits(), back.w[2].to_bits());
+        assert_eq!(cp.v[0].to_bits(), back.v[0].to_bits());
+        assert_eq!(cp.v[1].to_bits(), back.v[1].to_bits());
+        assert_eq!(cp.v[2].to_bits(), back.v[2].to_bits());
+    }
+
+    #[test]
+    fn stop_reason_round_trips_through_the_file() {
+        for stop in [
+            StopReason::Running,
+            StopReason::MaxRounds,
+            StopReason::Gap,
+            StopReason::Subopt,
+        ] {
+            let mut cp = sample();
+            cp.stop = stop;
+            let path = std::env::temp_dir().join("cocoa_ckpt_test/stop.ckpt");
+            cp.save(&path).unwrap();
+            assert_eq!(Checkpoint::load(&path).unwrap().stop, stop);
+        }
     }
 }

@@ -38,8 +38,10 @@ use crate::data::{Dataset, Partition};
 use crate::loss::LossKind;
 use crate::netsim::{NetworkModel, StragglerModel};
 use crate::objective;
+use crate::regularizers::{l1_norm, Regularizer, RegularizerKind};
 use crate::runtime;
 use crate::solvers::{Block, SolverKind};
+use crate::telemetry::StopReason;
 use crate::transport::{InProc, Ledger, Transcript, Transport, TransportKind};
 
 /// Everything [`Cluster::spawn`] needs, by name. Built and validated by
@@ -49,6 +51,7 @@ pub(crate) struct ClusterSpec<'a> {
     pub partition: &'a Partition,
     pub loss: LossKind,
     pub lambda: f64,
+    pub regularizer: RegularizerKind,
     pub solver: SolverKind,
     pub backend: Backend,
     pub artifacts_dir: &'a str,
@@ -79,20 +82,38 @@ pub struct CommStats {
 }
 
 /// Leader + K worker threads over a partitioned dataset.
+///
+/// The leader owns *two* shared vectors: `v`, the dual combination
+/// `(1/(lambda_eff n)) A alpha` the commits accumulate into, and the
+/// primal iterate `w = prox(v)` that rounds and evaluations broadcast.
+/// For the L2 regularizer the prox is the identity and `w` mirrors `v`
+/// bit for bit — exactly the seed's single shared vector.
 pub struct Cluster {
     transport: Box<dyn Transport>,
     handles: Vec<std::thread::JoinHandle<()>>,
     pub k: usize,
     pub n: usize,
     pub d: usize,
+    /// The primal iterate `prox(v)` — what workers see and what
+    /// [`crate::Session::w`] exposes.
     pub w: Vec<f64>,
     pub net: NetworkModel,
     /// Optional straggler injection for the simulated time axis.
     pub stragglers: crate::netsim::StragglerModel,
     pub stats: CommStats,
     pub block_sizes: Vec<usize>,
+    /// Why the most recent driven run stopped (recorded by the round
+    /// driver, persisted in checkpoints).
+    pub last_stop: StopReason,
+    /// The pre-prox shared vector the dual updates accumulate into.
+    v: Vec<f64>,
+    reg: Box<dyn Regularizer>,
+    regularizer: RegularizerKind,
     loss: LossKind,
     lambda: f64,
+    /// `lambda * sigma` — the strength of the normalized problem every
+    /// objective formula and solver constant uses (== `lambda` for L2).
+    lambda_eff: f64,
     round_counter: u64,
     /// Keeps the PJRT engine (and its compiled executables) alive.
     _engine: Option<runtime::Engine>,
@@ -109,6 +130,7 @@ impl Cluster {
             partition,
             loss,
             lambda,
+            regularizer,
             solver,
             backend,
             artifacts_dir,
@@ -122,7 +144,12 @@ impl Cluster {
         let k = partition.k();
         let n = data.n();
         let d = data.d();
-        let lambda_n = lambda * n as f64;
+        let reg = regularizer.build();
+        // the normalized problem's strength: lambda * sigma. For L2
+        // (sigma = 1) this is exactly lambda, so Block constants and every
+        // downstream formula stay bit-identical to the seed.
+        let lambda_eff = lambda * reg.strong_convexity();
+        let lambda_n = lambda_eff * n as f64;
 
         let engine = match backend {
             Backend::Native => None,
@@ -179,11 +206,28 @@ impl Cluster {
             stragglers,
             stats: CommStats::default(),
             block_sizes,
+            last_stop: StopReason::default(),
+            v: vec![0.0; d],
+            reg,
+            regularizer,
             loss,
             lambda,
+            lambda_eff,
             round_counter: 0,
             _engine: engine,
         })
+    }
+
+    /// Refresh the primal iterate from the shared vector: `w = prox(v)`.
+    /// The L2 fast path copies bits (identity prox), so seed trajectories
+    /// are reproduced exactly; for L1/elastic-net this is the leader's
+    /// per-commit prox step that plants exact zeros in the broadcast `w`.
+    fn sync_w(&mut self) {
+        if self.reg.is_identity_map() {
+            self.w.copy_from_slice(&self.v);
+        } else {
+            self.reg.prox_into(&self.v, &mut self.w);
+        }
     }
 
     /// Warm-start: zero all optimization state (leader `w`, worker dual
@@ -199,7 +243,9 @@ impl Cluster {
         }
         self.transport.reset_state();
         self.w = vec![0.0; self.d];
+        self.v = vec![0.0; self.d];
         self.stats = CommStats::default();
+        self.last_stop = StopReason::default();
         self.round_counter = 0;
         Ok(())
     }
@@ -264,7 +310,8 @@ impl Cluster {
     }
 
     /// Fold the round's updates into leader and worker state:
-    /// `w += scale * sum_k dw_k`, `alpha_[k] += scale * dalpha_[k]`.
+    /// `v += scale * sum_k dw_k` then `w = prox(v)`, and
+    /// `alpha_[k] += scale * dalpha_[k]` on the workers.
     /// On a measuring transport, the K commit messages are drained into
     /// `bytes_measured` here (and their transfer time into `sim_time_s`),
     /// so every round's accounting closes at its own commit and
@@ -272,10 +319,11 @@ impl Cluster {
     /// at round boundaries.
     pub fn commit(&mut self, replies: &[RoundReply], scale: f64) -> Result<()> {
         for reply in replies {
-            for (wv, dv) in self.w.iter_mut().zip(&reply.dw) {
-                *wv += scale * dv;
+            for (vv, dv) in self.v.iter_mut().zip(&reply.dw) {
+                *vv += scale * dv;
             }
         }
+        self.sync_w();
         for kid in 0..self.k {
             self.transport.send(kid, ToWorker::Commit { scale })?;
         }
@@ -289,9 +337,12 @@ impl Cluster {
     }
 
     /// Replace `w` outright (SGD-style leader updates). Workers have no
-    /// pending dual state for SGD work, so no commit is needed.
+    /// pending dual state for SGD work, so no commit is needed. The shared
+    /// vector mirrors the new `w` — primal methods are L2-only (guarded by
+    /// the round driver), where the prox is the identity.
     pub fn set_w(&mut self, w: Vec<f64>) {
         assert_eq!(w.len(), self.d);
+        self.v.copy_from_slice(&w);
         self.w = w;
     }
 
@@ -333,10 +384,24 @@ impl Cluster {
             conj_sum += e.conj_sum;
             has_dual &= e.has_dual;
         }
+        // The normalized pair: P = lambda_eff [ ||w||^2/2 + kappa||w||_1 ]
+        // + loss/n and D = -(lambda_eff/2)||w||^2 - conj/n, both at the
+        // *mapped* w = prox(v) (whose norm is exactly the normalized
+        // conjugate's value at v). kappa = 0 reduces to the seed formulas
+        // bit for bit.
+        let kappa = self.reg.l1_weight();
         let w_norm_sq: f64 = self.w.iter().map(|v| v * v).sum();
-        let primal = objective::primal_from_partials(loss_sum, w_norm_sq, self.lambda, self.n);
+        let w_l1 = if kappa == 0.0 { 0.0 } else { l1_norm(&self.w) };
+        let primal = objective::primal_from_partials_reg(
+            loss_sum,
+            w_norm_sq,
+            w_l1,
+            self.lambda_eff,
+            kappa,
+            self.n,
+        );
         let dual = if has_dual {
-            objective::dual_from_partials(conj_sum, w_norm_sq, self.lambda, self.n)
+            objective::dual_from_partials(conj_sum, w_norm_sq, self.lambda_eff, self.n)
         } else {
             f64::NAN
         };
@@ -371,8 +436,10 @@ impl Cluster {
             n: self.n,
             d: self.d,
             round_counter: self.round_counter,
+            stop: self.last_stop,
+            regularizer: self.regularizer.to_string(),
             stats: self.stats,
-            w: self.w.clone(),
+            v: self.v.clone(),
             workers: workers.into_iter().map(Option::unwrap).collect(),
         })
     }
@@ -387,11 +454,23 @@ impl Cluster {
                 cp.k, cp.n, cp.d, self.k, self.n, self.d
             ));
         }
+        // v is only meaningful through the matching prox/lambda_eff: a
+        // state trained under one regularizer must not be silently
+        // reinterpreted by another
+        if cp.regularizer != self.regularizer.to_string() {
+            return Err(anyhow!(
+                "checkpoint regularizer {} does not match cluster regularizer {}",
+                cp.regularizer,
+                self.regularizer
+            ));
+        }
         for ws in &cp.workers {
             self.transport.send(ws.id, ToWorker::SetState(ws.clone()))?;
         }
-        self.w = cp.w.clone();
+        self.v = cp.v.clone();
+        self.sync_w();
         self.stats = cp.stats;
+        self.last_stop = cp.stop;
         self.round_counter = cp.round_counter;
         Ok(())
     }
@@ -402,6 +481,22 @@ impl Cluster {
 
     pub fn lambda(&self) -> f64 {
         self.lambda
+    }
+
+    /// The regularizer this cluster was built with.
+    pub fn regularizer(&self) -> RegularizerKind {
+        self.regularizer
+    }
+
+    /// `lambda * sigma` — the normalized problem's strength (== `lambda`
+    /// for L2).
+    pub fn lambda_eff(&self) -> f64 {
+        self.lambda_eff
+    }
+
+    /// Nonzero count of the primal iterate (the sparsity-recovery axis).
+    pub fn w_nnz(&self) -> u64 {
+        self.w.iter().filter(|v| **v != 0.0).count() as u64
     }
 
     /// Largest block size (`~n` in Proposition 1).
@@ -464,6 +559,7 @@ mod tests {
             partition: part,
             loss: LossKind::Hinge,
             lambda: 0.1,
+            regularizer: RegularizerKind::L2,
             solver: SolverKind::Sdca,
             backend: Backend::Native,
             artifacts_dir: "artifacts",
@@ -572,6 +668,7 @@ mod tests {
             partition: &part,
             loss: LossKind::Hinge,
             lambda: 0.1,
+            regularizer: RegularizerKind::L2,
             solver: SolverKind::Sdca,
             backend: Backend::Native,
             artifacts_dir: "artifacts",
@@ -598,6 +695,46 @@ mod tests {
         assert_eq!(cluster.stats.bytes_measured, ledger.algorithm_bytes());
         assert!(ledger.bytes(crate::transport::MessageKind::EvalRequest) > 0);
         assert!(ledger.total_bytes() > ledger.algorithm_bytes());
+        cluster.shutdown();
+    }
+
+    #[test]
+    fn l1_commit_prox_maps_the_broadcast_w() {
+        // Under the smoothed-L1 regularizer the leader's commit must run
+        // the prox map: every |v_j| <= kappa lands on an exact zero in w,
+        // and the certificate stays a valid (nonnegative) gap.
+        let data = cov_like(60, 8, 0.1, 9);
+        let part = Partition::new(PartitionStrategy::Contiguous, 60, 2, 0);
+        let mut cluster = Cluster::spawn(ClusterSpec {
+            data: &data,
+            partition: &part,
+            loss: LossKind::Squared,
+            lambda: 0.2,
+            regularizer: RegularizerKind::L1 { epsilon: 0.5 },
+            solver: SolverKind::Sdca,
+            backend: Backend::Native,
+            artifacts_dir: "artifacts",
+            net: NetworkModel::free(),
+            stragglers: StragglerModel::none(),
+            seed: 10,
+            transport: TransportKind::InProc,
+        })
+        .unwrap();
+        assert_eq!(cluster.regularizer(), RegularizerKind::L1 { epsilon: 0.5 });
+        assert!((cluster.lambda_eff() - 0.1).abs() < 1e-15); // lambda * eps
+        for _ in 0..4 {
+            let replies = cluster.dispatch(|_| LocalWork::DualRound { h: 40 }).unwrap();
+            cluster.commit(&replies, 0.5).unwrap();
+        }
+        let kappa = 1.0 / 0.5; // 1/epsilon
+        for (j, (&wj, &vj)) in cluster.w.iter().zip(&cluster.v).enumerate() {
+            let expect = crate::regularizers::soft_threshold(vj, kappa);
+            assert_eq!(wj.to_bits(), expect.to_bits(), "w[{j}] not prox-mapped");
+        }
+        assert!(cluster.w_nnz() <= 8);
+        let ev = cluster.evaluate().unwrap();
+        assert!(ev.gap >= -1e-10, "regularized gap {} negative", ev.gap);
+        assert!(ev.primal.is_finite() && ev.dual.is_finite());
         cluster.shutdown();
     }
 

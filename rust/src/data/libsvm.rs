@@ -4,56 +4,122 @@
 //! local copy, `[dataset] kind = "libsvm", path = "..."` in the experiment
 //! config drops the real corpus into any harness. The writer exists so
 //! synthetic datasets can be exported and round-tripped.
+//!
+//! The reader is hardened against the format's wild variants: `qid:` rank
+//! fields and comments (full-line and trailing `# ...`) are accepted,
+//! out-of-order feature indices are sorted, and every malformed input —
+//! bad labels/indices/values, duplicate indices, 0-based indices,
+//! non-finite values — surfaces as the typed
+//! [`Error::Libsvm`](crate::error::Error::Libsvm) with a 1-based line
+//! number instead of a panic or a stringly error.
+//!
+//! Labels: when *every* label is one of the classification conventions
+//! `{-1, 0, 1, 2}` the file is treated as binary and normalized to
+//! `{-1, +1}` (`<= 0` maps to `-1`); any other value anywhere makes the
+//! whole file a regression target set and labels pass through untouched —
+//! lasso/squared-loss workloads keep their real-valued responses.
 
 use std::fs::File;
 use std::io::{BufRead, BufReader, BufWriter, Write};
 use std::path::Path;
 
-use anyhow::{anyhow, Context, Result};
+use anyhow::{Context, Result};
+
+use crate::error::Error;
 
 use super::{CsrMatrix, Dataset, Features};
 
-/// Parse a LibSVM file: `label idx:val idx:val ...` per line, 1-based
-/// indices. `d_hint` pre-sizes the column count (pass 0 to infer).
-pub fn read_libsvm<P: AsRef<Path>>(path: P, d_hint: usize) -> Result<Dataset> {
+fn bad(line: usize, message: impl Into<String>) -> Error {
+    Error::Libsvm { line, message: message.into() }
+}
+
+/// Parse a LibSVM file: `label [qid:<q>] idx:val idx:val ... [# comment]`
+/// per line, 1-based indices. `d_hint` pre-sizes the column count (pass 0
+/// to infer). Malformed input yields the typed
+/// [`Error::Libsvm`](crate::error::Error::Libsvm) — see the module docs
+/// for exactly what is accepted.
+pub fn read_libsvm<P: AsRef<Path>>(path: P, d_hint: usize) -> Result<Dataset, Error> {
     let file = File::open(&path)
-        .with_context(|| format!("open {}", path.as_ref().display()))?;
+        .map_err(|e| bad(0, format!("open {}: {e}", path.as_ref().display())))?;
     let reader = BufReader::new(file);
     let mut labels = Vec::new();
     let mut triplets: Vec<(usize, u32, f64)> = Vec::new();
     let mut max_col: usize = d_hint;
+    // per-row duplicate detection without a hash set (offline build):
+    // collect the row's indices and scan a sorted copy for equal neighbors
+    let mut row_cols: Vec<u32> = Vec::new();
     for (lineno, line) in reader.lines().enumerate() {
-        let line = line?;
-        let line = line.trim();
-        if line.is_empty() || line.starts_with('#') {
+        let lineno = lineno + 1; // 1-based for error messages
+        let line = line.map_err(|e| bad(lineno, format!("read: {e}")))?;
+        // strip trailing comments ('#' starts a comment anywhere on the
+        // line) and surrounding whitespace (including trailing '\r')
+        let line = match line.split_once('#') {
+            Some((head, _comment)) => head,
+            None => line.as_str(),
+        }
+        .trim();
+        if line.is_empty() {
             continue;
         }
         let row = labels.len();
-        let mut parts = line.split_ascii_whitespace();
-        let label_tok = parts
-            .next()
-            .ok_or_else(|| anyhow!("line {}: empty record", lineno + 1))?;
+        let mut parts = line.split_ascii_whitespace().peekable();
+        let label_tok = parts.next().expect("non-empty trimmed line has a token");
         let label: f64 = label_tok
             .parse()
-            .with_context(|| format!("line {}: bad label {label_tok:?}", lineno + 1))?;
-        // normalize {0,1} and {1,2} label conventions to {-1,+1}
-        let label = if label <= 0.0 { -1.0 } else { 1.0 };
+            .map_err(|_| bad(lineno, format!("bad label {label_tok:?}")))?;
+        if !label.is_finite() {
+            return Err(bad(lineno, format!("non-finite label {label_tok:?}")));
+        }
         labels.push(label);
+        // optional ranking qid field between the label and the features
+        if let Some(tok) = parts.peek() {
+            if let Some(q) = tok.strip_prefix("qid:") {
+                q.parse::<u64>()
+                    .map_err(|_| bad(lineno, format!("bad qid {q:?}")))?;
+                parts.next();
+            }
+        }
+        row_cols.clear();
         for tok in parts {
             let (idx, val) = tok
                 .split_once(':')
-                .ok_or_else(|| anyhow!("line {}: bad feature {tok:?}", lineno + 1))?;
+                .ok_or_else(|| bad(lineno, format!("bad feature {tok:?} (want idx:val)")))?;
             let idx: usize = idx
                 .parse()
-                .with_context(|| format!("line {}: bad index {idx:?}", lineno + 1))?;
+                .map_err(|_| bad(lineno, format!("bad index {idx:?}")))?;
             if idx == 0 {
-                return Err(anyhow!("line {}: libsvm indices are 1-based", lineno + 1));
+                return Err(bad(lineno, "libsvm indices are 1-based, found index 0"));
+            }
+            if idx > u32::MAX as usize {
+                return Err(bad(lineno, format!("index {idx} exceeds u32 range")));
             }
             let val: f64 = val
                 .parse()
-                .with_context(|| format!("line {}: bad value {val:?}", lineno + 1))?;
+                .map_err(|_| bad(lineno, format!("bad value {val:?}")))?;
+            if !val.is_finite() {
+                return Err(bad(lineno, format!("non-finite value {val:?} at index {idx}")));
+            }
             max_col = max_col.max(idx);
+            row_cols.push((idx - 1) as u32);
             triplets.push((row, (idx - 1) as u32, val));
+        }
+        // duplicate indices are ambiguous (last-wins? sum?) — reject them;
+        // out-of-order indices are fine (the CSR builder sorts per row)
+        row_cols.sort_unstable();
+        if let Some(dup) = row_cols.windows(2).find(|p| p[0] == p[1]) {
+            return Err(bad(lineno, format!("duplicate feature index {}", dup[0] + 1)));
+        }
+    }
+    // normalize the {0,1} / {1,2} classification conventions to {-1,+1},
+    // but only when the whole file looks like one — a single real-valued
+    // response makes this a regression target set and binarizing it would
+    // silently destroy the labels (see module docs)
+    let classification = labels
+        .iter()
+        .all(|&y| y == -1.0 || y == 0.0 || y == 1.0 || y == 2.0);
+    if classification {
+        for y in labels.iter_mut() {
+            *y = if *y <= 0.0 { -1.0 } else { 1.0 };
         }
     }
     let n = labels.len();
@@ -117,13 +183,107 @@ mod tests {
         assert_eq!(ds.labels, vec![-1.0, 1.0, 1.0]);
     }
 
+    /// Write `content` to a scratch file and parse it.
+    fn parse(tag: &str, content: &str) -> Result<crate::data::Dataset, Error> {
+        let dir = std::env::temp_dir().join("cocoa_libsvm_hardening");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join(format!("{tag}.svm"));
+        std::fs::write(&p, content).unwrap();
+        read_libsvm(&p, 0)
+    }
+
     #[test]
     fn rejects_zero_index() {
-        let dir = std::env::temp_dir().join("cocoa_libsvm_zero");
-        std::fs::create_dir_all(&dir).unwrap();
-        let p = dir.join("zero.svm");
-        std::fs::write(&p, "+1 0:1.0\n").unwrap();
-        assert!(read_libsvm(&p, 0).is_err());
+        let err = parse("zero", "+1 0:1.0\n").unwrap_err();
+        assert!(matches!(err, Error::Libsvm { line: 1, .. }), "{err}");
+        assert!(err.to_string().contains("1-based"), "{err}");
+    }
+
+    #[test]
+    fn regression_targets_pass_through_unbinarized() {
+        // one real-valued label anywhere => the whole file is regression
+        let ds = parse("regression", "2.7 1:1.0\n-0.3 1:0.5\n1 2:1.0\n").unwrap();
+        assert_eq!(ds.labels, vec![2.7, -0.3, 1.0]);
+        // ...whereas an all-conventional file still normalizes
+        let ds = parse("classif", "0 1:1.0\n2 1:0.5\n1 2:1.0\n-1 2:2.0\n").unwrap();
+        assert_eq!(ds.labels, vec![-1.0, 1.0, 1.0, -1.0]);
+    }
+
+    #[test]
+    fn accepts_qid_fields_and_ignores_them() {
+        let ds = parse("qid", "+1 qid:3 1:0.5 2:1.0\n-1 qid:4 2:2.0\n").unwrap();
+        assert_eq!(ds.n(), 2);
+        assert_eq!(ds.d(), 2);
+        assert_eq!(ds.features.row_dense(0), vec![0.5, 1.0]);
+        assert_eq!(ds.features.row_dense(1), vec![0.0, 2.0]);
+        // but a malformed qid is a typed error, not a feature
+        let err = parse("badqid", "+1 qid:x 1:0.5\n").unwrap_err();
+        assert!(matches!(err, Error::Libsvm { line: 1, .. }), "{err}");
+    }
+
+    #[test]
+    fn accepts_inline_comments_and_trailing_whitespace() {
+        let ds = parse(
+            "comments",
+            "# full-line comment\n+1 1:0.5 2:1.0 # trailing comment\n-1 1:2.0   \t\r\n",
+        )
+        .unwrap();
+        assert_eq!(ds.n(), 2);
+        assert_eq!(ds.features.row_dense(0), vec![0.5, 1.0]);
+        assert_eq!(ds.features.row_dense(1), vec![2.0, 0.0]);
+    }
+
+    #[test]
+    fn sorts_out_of_order_indices() {
+        let ds = parse("ooo", "+1 3:3.0 1:1.0 2:2.0\n").unwrap();
+        assert_eq!(ds.features.row_dense(0), vec![1.0, 2.0, 3.0]);
+        // CSR invariant: indices strictly increasing within the row
+        match &ds.features {
+            crate::data::Features::Sparse(m) => {
+                let r = m.row_range(0);
+                let idx = &m.indices[r];
+                assert!(idx.windows(2).all(|p| p[0] < p[1]), "unsorted row: {idx:?}");
+            }
+            other => panic!("expected sparse features, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn rejects_duplicate_indices_with_line_number() {
+        let err = parse("dup", "+1 1:1.0\n-1 2:1.0 3:0.5 2:2.0\n").unwrap_err();
+        match err {
+            Error::Libsvm { line, ref message } => {
+                assert_eq!(line, 2);
+                assert!(message.contains("duplicate feature index 2"), "{message}");
+            }
+            other => panic!("wrong variant: {other}"),
+        }
+    }
+
+    #[test]
+    fn rejects_malformed_tokens_with_typed_errors() {
+        for (tag, text, needle) in [
+            ("badlabel", "one 1:1.0\n", "label"),
+            ("badindex", "+1 x:1.0\n", "index"),
+            ("badvalue", "+1 1:abc\n", "value"),
+            ("nocolon", "+1 1=1.0\n", "feature"),
+            ("nonfinite", "+1 1:inf\n", "non-finite"),
+            ("nanlabel", "nan 1:1.0\n", "label"),
+            ("hugeindex", "+1 99999999999:1.0\n", "u32"),
+        ] {
+            let err = parse(tag, text).unwrap_err();
+            assert!(
+                matches!(err, Error::Libsvm { line: 1, .. }),
+                "{tag}: wrong variant {err}"
+            );
+            assert!(err.to_string().contains(needle), "{tag}: {err}");
+        }
+    }
+
+    #[test]
+    fn missing_file_is_typed_not_a_panic() {
+        let err = read_libsvm("/nonexistent/cocoa/no.svm", 0).unwrap_err();
+        assert!(matches!(err, Error::Libsvm { line: 0, .. }), "{err}");
     }
 
     #[test]

@@ -33,6 +33,16 @@ pub enum Error {
     /// [`Session::set_reference_optimum`](crate::Session::set_reference_optimum)
     /// first (otherwise the run could only ever exhaust its round cap).
     MissingReferenceOptimum,
+    /// A regularizer configuration failed validation (non-positive L1
+    /// smoothing epsilon, an elastic-net ratio outside `[0, 1)`, ...).
+    InvalidRegularizer { reason: String },
+    /// A valid regularizer was combined with a feature that assumes plain
+    /// L2 — the PJRT kernel artifacts, the Appendix-B gap-certified local
+    /// solver, or the primal (Pegasos) SGD baselines.
+    UnsupportedRegularizer { regularizer: String, context: String },
+    /// A LibSVM file failed to parse (`line` is 1-based; 0 for file-level
+    /// problems).
+    Libsvm { line: usize, message: String },
     /// A transport configuration failed validation (out-of-range SimNet
     /// parameters such as `drop_prob >= 1` or a slowdown below 1).
     InvalidTransport { reason: String },
@@ -76,6 +86,21 @@ impl fmt::Display for Error {
                 "budget stops on suboptimality but no reference optimum is set: \
                  call Session::set_reference_optimum(Some(p_star)) first"
             ),
+            Error::InvalidRegularizer { reason } => {
+                write!(f, "invalid regularizer config: {reason}")
+            }
+            Error::UnsupportedRegularizer { regularizer, context } => write!(
+                f,
+                "regularizer {regularizer} is not supported by {context} \
+                 (only the plain l2 regularizer is)"
+            ),
+            Error::Libsvm { line, message } => {
+                if *line == 0 {
+                    write!(f, "libsvm parse error: {message}")
+                } else {
+                    write!(f, "libsvm parse error at line {line}: {message}")
+                }
+            }
             Error::InvalidTransport { reason } => {
                 write!(f, "invalid transport config: {reason}")
             }

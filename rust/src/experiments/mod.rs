@@ -8,11 +8,15 @@
 //! * [`figures::fig4`] — the beta scaling sweep.
 //! * [`figures::headline`] — the "25x to .001-accuracy" ratio.
 //! * [`theory_val`] — Theorem 2 / Proposition 1 validation (our addition).
+//! * [`sparsity`] — the sparsity-recovery figure for the L1 workload the
+//!   regularizers subsystem opens (nonzero count + suboptimality vs
+//!   rounds across K, exact closed-form reference).
 //!
 //! Everything is exposed as library functions so the CLI (`cocoa repro`),
 //! the criterion benches, and the integration tests drive the same code.
 
 pub mod figures;
+pub mod sparsity;
 pub mod theory_val;
 
 use anyhow::Result;

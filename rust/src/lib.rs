@@ -5,7 +5,8 @@
 //! Ascent* (NIPS 2014), built around two public types:
 //!
 //! * [`Trainer`] — a typed builder describing the problem (data, partition,
-//!   loss, lambda, local solver, backend, network model, seed). All
+//!   loss, lambda, regularizer, local solver, backend, network model,
+//!   seed). All
 //!   validation happens at [`Trainer::build`], which returns a typed
 //!   [`Error`] — never a panic, never a stringly error.
 //! * [`Session`] — the live cluster the builder yields: the leader plus K
@@ -52,12 +53,34 @@
 //!         add.rows.last().unwrap().gap,
 //!     );
 //!
-//!     // 4. run until a target instead of a round count
+//!     // 4. run until a target instead of a round count; the trace's
+//!     //    `stop` column records which criterion actually fired
 //!     session.reset()?;
 //!     let trace = session.run(&mut Cocoa::new(h), Budget::until_gap(1e-3))?;
-//!     println!("gap 1e-3 after {} rounds", trace.rows.last().unwrap().round);
+//!     println!(
+//!         "gap 1e-3 after {} rounds (stop = {})",
+//!         trace.rows.last().unwrap().round,
+//!         trace.rows.last().unwrap().stop,
+//!     );
 //!
-//!     // 5. measure real communication: a byte-exact transport makes the
+//!     // 5. open a lasso workload: the regularizer is pluggable, and the
+//!     //    epsilon-smoothed L1 plants exact zeros in w (leader-side prox;
+//!     //    `w_nnz` in the trace tracks the recovered support)
+//!     let mut lasso = Trainer::on(&data)
+//!         .workers(4)
+//!         .loss(LossKind::Squared)
+//!         .lambda(0.05)
+//!         .regularizer(RegularizerKind::L1 { epsilon: 0.5 })
+//!         .build()?;
+//!     let trace = lasso.run(&mut Cocoa::new(h), Budget::rounds(10))?;
+//!     println!(
+//!         "lasso: {} of {} coordinates nonzero, gap {:.2e}",
+//!         trace.rows.last().unwrap().w_nnz,
+//!         lasso.d(),
+//!         trace.rows.last().unwrap().gap,
+//!     );
+//!
+//!     // 6. measure real communication: a byte-exact transport makes the
 //!     //    measured wire bytes (headers, sparse dw encodings) drive the
 //!     //    simulated round time and the bytes_measured trace column
 //!     let mut counted = Trainer::on(&data)
@@ -89,6 +112,12 @@
 //! * [`loss`] — the regularized-loss-minimization problem class of eq. (1):
 //!   hinge, smoothed hinge, squared and logistic losses with their Fenchel
 //!   conjugates and closed-form/Newton single-coordinate dual maximizers.
+//! * [`regularizers`] — the pluggable `Omega(w)` of the generalized
+//!   problem: plain L2, epsilon-smoothed L1 (lasso with exact zeros,
+//!   ProxCoCoA-style), and elastic net, each carrying its conjugate, prox
+//!   map, and strong-convexity constant. Choosing L1 makes the broadcast
+//!   `w` sparse, which the counted transport's adaptive encoding turns
+//!   into measurably smaller wire bytes.
 //! * [`solvers`] — `LOCALDUALMETHOD` implementations (Procedure A): the
 //!   paper's LocalSDCA (Procedure B), a permuted-order variant, and the
 //!   exact block solver that realizes the `H -> inf` limit.
@@ -125,6 +154,7 @@ pub mod experiments;
 pub mod loss;
 pub mod netsim;
 pub mod objective;
+pub mod regularizers;
 pub mod runtime;
 pub mod solvers;
 pub mod telemetry;
@@ -138,6 +168,7 @@ pub use coordinator::Cluster;
 pub use data::{Dataset, Partition};
 pub use error::{Error, Result};
 pub use loss::LossKind;
+pub use regularizers::RegularizerKind;
 pub use transport::TransportKind;
 
 /// One-line import for the common path:
@@ -153,7 +184,8 @@ pub mod prelude {
     pub use crate::error::{Error, Result};
     pub use crate::loss::LossKind;
     pub use crate::netsim::{NetworkModel, StragglerModel};
+    pub use crate::regularizers::RegularizerKind;
     pub use crate::solvers::SolverKind;
-    pub use crate::telemetry::{Trace, TraceRow};
+    pub use crate::telemetry::{StopReason, Trace, TraceRow};
     pub use crate::transport::{SimNetConfig, Transcript, TransportKind};
 }

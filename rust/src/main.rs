@@ -2,7 +2,7 @@
 //!
 //! Subcommands:
 //!   train --config <toml> [--out <csv>] [--p-star <f64>]
-//!   repro <table1|fig1|fig2|fig3|fig4|headline|theory|all>
+//!   repro <table1|fig1|fig2|fig3|fig4|headline|sparsity|theory|all>
 //!         [--smoke] [--results-dir <dir>] [--rounds <n>]
 //!   optimum --config <toml>
 //!   gen-data <cov|rcv1|imagenet> --n <n> --d <d> [--seed <s>] --out <path>
@@ -17,6 +17,7 @@ use cocoa::config::ExperimentConfig;
 use cocoa::data;
 use cocoa::experiments::{self, figures, theory_val, Profile};
 use cocoa::objective;
+use cocoa::regularizers::Regularizer;
 
 /// Tiny argv helper: `--key value` options + positionals.
 struct Args {
@@ -62,7 +63,7 @@ cocoa — communication-efficient distributed dual coordinate ascent (NIPS 2014 
 
 USAGE:
   cocoa train --config <toml> [--out <csv>] [--p-star <f64>]
-  cocoa repro <table1|fig1|fig2|fig3|fig4|headline|theory|all> [--smoke] [--results-dir <dir>] [--rounds <n>]
+  cocoa repro <table1|fig1|fig2|fig3|fig4|headline|sparsity|theory|all> [--smoke] [--results-dir <dir>] [--rounds <n>]
   cocoa optimum --config <toml>
   cocoa gen-data <cov|rcv1|imagenet> --n <n> --d <d> [--seed <s>] --out <path>
 ";
@@ -145,13 +146,17 @@ fn train(config_path: &str, out: Option<String>, p_star: Option<f64>) -> Result<
         budget.target_subopt = 0.0;
     }
     let trace = session.run(algorithm.as_mut(), budget)?;
+    let d = session.d();
     session.shutdown();
 
     let last = trace.last().expect("at least round 0 recorded");
     println!(
-        "finished: rounds={} sim_time={:.3}s vectors={} P={:.6} D={:.6} gap={:.2e}",
-        last.round, last.sim_time_s, last.vectors, last.primal, last.dual, last.gap
+        "finished: rounds={} sim_time={:.3}s vectors={} P={:.6} D={:.6} gap={:.2e} stop={}",
+        last.round, last.sim_time_s, last.vectors, last.primal, last.dual, last.gap, last.stop
     );
+    if cfg.regularizer.build().sparsity_hint() {
+        println!("sparsity: {} of {d} coordinates nonzero", last.w_nnz);
+    }
     if last.bytes_measured > 0 {
         println!(
             "measured communication: {} B on the wire (modeled {} B)",
@@ -287,6 +292,30 @@ fn repro(target: &str, profile: Profile, results_dir: &str, rounds: Option<u64>)
                 println!("geometric-mean speedup: {:.1}x (paper reports ~25x)", geo.exp());
             }
         }
+        "sparsity" => {
+            let rounds = rounds.unwrap_or(match profile {
+                Profile::Smoke => 250,
+                Profile::Paper => 400,
+            });
+            let runs = experiments::sparsity::sparsity_recovery(profile, rounds, results_dir)?;
+            println!("Sparsity recovery: CoCoA + smoothed-L1 on the planted lasso design");
+            println!(
+                "{:>3} {:>8} {:>10} {:>10} {:>14} {:>12}",
+                "K", "nnz", "true nnz", "support", "final subopt", "wire bytes"
+            );
+            for r in &runs {
+                println!(
+                    "{:>3} {:>8} {:>10} {:>10} {:>14.2e} {:>12}",
+                    r.k,
+                    r.final_nnz,
+                    r.true_nnz,
+                    if r.support_exact { "exact" } else { "MISSED" },
+                    r.final_subopt,
+                    r.bytes_measured
+                );
+            }
+            println!("traces -> {results_dir}/fig_sparsity/lasso_K{{1,2,4}}.csv");
+        }
         "theory" => {
             let data = match profile {
                 Profile::Smoke => data::cov_like(600, 12, 0.05, 31),
@@ -313,12 +342,13 @@ fn repro(target: &str, profile: Profile, results_dir: &str, rounds: Option<u64>)
             }
         }
         "all" => {
-            for t in ["table1", "fig1", "fig3", "fig4", "theory"] {
+            for t in ["table1", "fig1", "fig3", "fig4", "sparsity", "theory"] {
                 repro(t, profile, results_dir, rounds)?;
             }
         }
         other => bail!(
-            "unknown repro target {other:?} (try table1|fig1|fig2|fig3|fig4|headline|theory|all)"
+            "unknown repro target {other:?} \
+             (try table1|fig1|fig2|fig3|fig4|headline|sparsity|theory|all)"
         ),
     }
     Ok(())
@@ -335,7 +365,15 @@ fn optimum(config_path: &str) -> Result<()> {
     let cfg = ExperimentConfig::from_toml_file(config_path)?;
     let data = cfg.dataset.load()?;
     let loss = cfg.loss.build();
-    let (p_star, _) = objective::compute_optimum(&data, cfg.lambda, loss.as_ref(), 1e-9, 4000);
+    // honor the [regularizer] section: an L1/elastic-net config must get
+    // the *regularized* optimum, not the plain-L2 one
+    let p_star = if cfg.regularizer.is_l2() {
+        objective::compute_optimum(&data, cfg.lambda, loss.as_ref(), 1e-9, 4000).0
+    } else {
+        let reg = cfg.regularizer.build();
+        objective::compute_optimum_reg(&data, cfg.lambda, reg.as_ref(), loss.as_ref(), 1e-9, 4000)
+            .0
+    };
     println!("{p_star:.12}");
     Ok(())
 }

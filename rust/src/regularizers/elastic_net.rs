@@ -1,0 +1,67 @@
+//! Elastic net — the L1/L2 mixture.
+
+use super::Regularizer;
+
+/// `Omega(w) = eta ||w||_1 + ((1 - eta)/2)||w||^2` with mixing ratio
+/// `eta = l1_ratio` in `[0, 1)`. `eta = 0` is exactly [`super::L2`];
+/// `eta -> 1` approaches pure L1 (use [`super::SmoothedL1`] there — the
+/// strong convexity `sigma = 1 - eta` vanishes at the limit, which is why
+/// `eta = 1` is rejected with a typed error at `Trainer::build`).
+#[derive(Debug, Clone, Copy)]
+pub struct ElasticNet {
+    l1_ratio: f64,
+}
+
+impl ElasticNet {
+    /// `l1_ratio` must be finite and in `[0, 1)` (validated with a typed
+    /// error at `Trainer::build`; asserted here for direct users).
+    pub fn new(l1_ratio: f64) -> Self {
+        assert!(
+            l1_ratio.is_finite() && (0.0..1.0).contains(&l1_ratio),
+            "elastic_net l1_ratio must be in [0, 1), got {l1_ratio}"
+        );
+        ElasticNet { l1_ratio }
+    }
+
+    pub fn l1_ratio(&self) -> f64 {
+        self.l1_ratio
+    }
+}
+
+impl Regularizer for ElasticNet {
+    fn name(&self) -> &'static str {
+        "elastic_net"
+    }
+
+    fn strong_convexity(&self) -> f64 {
+        1.0 - self.l1_ratio
+    }
+
+    fn l1_weight(&self) -> f64 {
+        self.l1_ratio / (1.0 - self.l1_ratio)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn constants_recover_the_mixture() {
+        // lambda_eff * (1/2)||w||^2 term carries lambda(1 - eta)/2 and the
+        // L1 term lambda_eff * kappa = lambda * eta — the mixture as
+        // written, just renormalized.
+        let eta = 0.4;
+        let r = ElasticNet::new(eta);
+        let lambda = 0.2;
+        let lambda_eff = lambda * r.strong_convexity();
+        assert!((lambda_eff - lambda * (1.0 - eta)).abs() < 1e-15);
+        assert!((lambda_eff * r.l1_weight() - lambda * eta).abs() < 1e-15);
+    }
+
+    #[test]
+    #[should_panic(expected = "l1_ratio")]
+    fn ratio_one_panics() {
+        let _ = ElasticNet::new(1.0);
+    }
+}

@@ -1,0 +1,23 @@
+//! The paper's original regularizer: `Omega(w) = (1/2)||w||^2`.
+
+use super::Regularizer;
+
+/// Plain L2 — `sigma = 1`, no L1 part. Its prox map is the identity, so
+/// the leader's shared vector `v` *is* the primal iterate `w` and every
+/// trajectory matches the seed implementation bit for bit.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct L2;
+
+impl Regularizer for L2 {
+    fn name(&self) -> &'static str {
+        "l2"
+    }
+
+    fn strong_convexity(&self) -> f64 {
+        1.0
+    }
+
+    fn l1_weight(&self) -> f64 {
+        0.0
+    }
+}

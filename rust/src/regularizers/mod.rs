@@ -1,0 +1,370 @@
+//! Pluggable regularizers — the `g(w)` of the generalized primal-dual
+//! setup (CoCoA's general framework / the L1 treatment of ProxCoCoA).
+//!
+//! The seed reproduced problem (1) for the L2 regularizer only; this
+//! subsystem makes the regularizer a first-class object with its own
+//! conjugate and prox operator, opening lasso and elastic-net workloads:
+//!
+//! `P(w) = lambda * Omega(w) + (1/n) sum_i loss(x_i^T w, y_i)`
+//!
+//! with `Omega` one of
+//!
+//! * [`L2`]           — `(1/2)||w||^2` (the paper's original problem),
+//! * [`SmoothedL1`]   — `||w||_1 + (eps/2)||w||^2`, the epsilon-smoothed
+//!   L1 of the L1-regularized distributed-optimization follow-up
+//!   (1512.04011): the small quadratic term restores the strong convexity
+//!   the dual machinery needs while keeping exact zeros in `w`,
+//! * [`ElasticNet`]   — `eta||w||_1 + ((1-eta)/2)||w||^2`.
+//!
+//! ## The normalization that keeps L2 bit-identical
+//!
+//! Every supported `Omega` is `sigma`-strongly convex with an L1 part:
+//! `Omega(w) = mu||w||_1 + (sigma/2)||w||^2`. Dividing by `sigma` and
+//! folding it into the regularization strength gives the *normalized*
+//! problem the whole runtime operates on:
+//!
+//! `P(w) = lambda_eff * [ (1/2)||w||^2 + kappa ||w||_1 ] + (1/n) sum loss`
+//!
+//! with `lambda_eff = lambda * sigma` and `kappa = mu / sigma`. The shared
+//! vector the coordinator owns is `v = (1/(lambda_eff n)) sum_i alpha_i x_i`
+//! — exactly the seed's `w = A alpha` when `kappa = 0` — and the primal
+//! iterate is the prox/gradient map of the normalized conjugate:
+//!
+//! `w_j = prox(v_j) = soft(v_j, kappa)`,
+//! `Omega_norm*(v) = (1/2)||soft(v, kappa)||^2 = (1/2)||w||^2`.
+//!
+//! Consequences the rest of the crate leans on:
+//!
+//! * the dual keeps the seed's shape `D = -(lambda_eff/2)||w||^2 - conj/n`
+//!   with the *mapped* `w`, and the primal only gains the
+//!   `lambda_eff * kappa * ||w||_1` term,
+//! * the local solvers are untouched: they optimize the generalized
+//!   framework's quadratic model of the local subproblem (smoothness `1`
+//!   of the normalized conjugate) through the existing
+//!   `Block { lambda_n = lambda_eff * n }` constants,
+//! * for L2, `sigma = 1`, `kappa = 0`: `lambda_eff == lambda`, the prox is
+//!   the identity, and every trajectory is bit-identical to the seed's.
+//!
+//! The leader applies the prox once per commit ([`Regularizer::prox_into`])
+//! — the "prox step" whose dense/sparse-column kernels the `hot_paths`
+//! bench tracks — and prox-induced exact zeros in the broadcast `w` are
+//! what the counted transport's adaptive sparse encoding compresses on L1
+//! runs.
+
+mod elastic_net;
+mod l1;
+mod l2;
+
+pub use elastic_net::ElasticNet;
+pub use l1::SmoothedL1;
+pub use l2::L2;
+
+/// Soft-thresholding `sign(v) * max(|v| - k, 0)` — the prox operator of
+/// `k ||.||_1` (and, for `k = 0`, exactly the identity).
+#[inline]
+pub fn soft_threshold(v: f64, k: f64) -> f64 {
+    if v > k {
+        v - k
+    } else if v < -k {
+        v + k
+    } else {
+        0.0
+    }
+}
+
+/// `||w||_1` (the partial sum the regularized primal needs next to
+/// `||w||^2`).
+pub fn l1_norm(w: &[f64]) -> f64 {
+    w.iter().map(|v| v.abs()).sum()
+}
+
+/// A regularizer `Omega(w) = mu||w||_1 + (sigma/2)||w||^2` for the
+/// generalized problem `P(w) = lambda Omega(w) + (1/n) sum_i loss_i`.
+///
+/// Implementations provide the two constants; values, conjugates, and the
+/// prox map all follow from them (see the module docs for the
+/// normalization). Everything is per-coordinate separable.
+pub trait Regularizer: Send + Sync + std::fmt::Debug {
+    /// Stable name used in traces, errors, and checkpoint records.
+    fn name(&self) -> &'static str;
+
+    /// `sigma` — the strong-convexity constant of `Omega` (the coefficient
+    /// of its quadratic part). The runtime folds it into
+    /// `lambda_eff = lambda * sigma`.
+    fn strong_convexity(&self) -> f64;
+
+    /// `kappa = mu / sigma` — the L1 weight of the sigma-normalized
+    /// regularizer (the soft-threshold level of the prox map).
+    fn l1_weight(&self) -> f64;
+
+    /// Advertises that the prox map produces exact zeros, i.e. the
+    /// `w_nnz` trace column is a meaningful sparsity-recovery axis (the
+    /// CLI prints it for such runs). Purely informational: the wire layer
+    /// picks dense vs sparse encodings from the actual nonzero count, not
+    /// from this hint.
+    fn sparsity_hint(&self) -> bool {
+        self.l1_weight() > 0.0
+    }
+
+    /// Is the prox map the identity (the L2 fast path: the leader skips
+    /// the map and keeps `w == v` bit-for-bit)?
+    fn is_identity_map(&self) -> bool {
+        self.l1_weight() == 0.0
+    }
+
+    /// The per-coordinate prox/gradient map `w_j = d/dv Omega_norm*(v_j)`.
+    #[inline]
+    fn prox_coord(&self, v: f64) -> f64 {
+        soft_threshold(v, self.l1_weight())
+    }
+
+    /// Apply the prox map to a whole shared vector (the leader's
+    /// per-commit "prox step"; dense kernel in the `hot_paths` bench).
+    fn prox_into(&self, v: &[f64], w: &mut [f64]) {
+        debug_assert_eq!(v.len(), w.len());
+        let k = self.l1_weight();
+        for (wj, &vj) in w.iter_mut().zip(v) {
+            *wj = soft_threshold(vj, k);
+        }
+    }
+
+    /// Normalized regularizer value `Omega_norm(w) = (1/2)||w||^2 +
+    /// kappa||w||_1` (multiply by `lambda_eff` for the primal term).
+    fn value(&self, w: &[f64]) -> f64 {
+        let norm_sq: f64 = w.iter().map(|v| v * v).sum();
+        0.5 * norm_sq + self.l1_weight() * l1_norm(w)
+    }
+
+    /// Normalized conjugate `Omega_norm*(v) = (1/2)||soft(v, kappa)||^2`
+    /// (multiply by `lambda_eff` for the dual term).
+    fn conjugate(&self, v: &[f64]) -> f64 {
+        let k = self.l1_weight();
+        0.5 * v
+            .iter()
+            .map(|&vj| {
+                let s = soft_threshold(vj, k);
+                s * s
+            })
+            .sum::<f64>()
+    }
+}
+
+/// Config-friendly regularizer selector (the `[regularizer]` TOML section
+/// and [`Trainer::regularizer`](crate::Trainer::regularizer)).
+#[derive(Debug, Clone, Copy, PartialEq, Default)]
+pub enum RegularizerKind {
+    /// `(1/2)||w||^2` — the paper's original problem (default).
+    #[default]
+    L2,
+    /// `||w||_1 + (epsilon/2)||w||^2` — epsilon-smoothed L1 (lasso-style
+    /// sparsity with exact zeros; `epsilon` trades dual conditioning
+    /// against closeness to the pure-L1 optimum).
+    L1 { epsilon: f64 },
+    /// `l1_ratio ||w||_1 + ((1 - l1_ratio)/2)||w||^2`; `l1_ratio` must be
+    /// in `[0, 1)` (use [`RegularizerKind::L1`] for the pure-L1 limit).
+    ElasticNet { l1_ratio: f64 },
+}
+
+impl RegularizerKind {
+    /// Parse from config names; `param` is `epsilon` for `l1` and
+    /// `l1_ratio` for `elastic_net` (ignored for `l2`).
+    pub fn from_name(name: &str, param: f64) -> Option<Self> {
+        match name {
+            "l2" => Some(RegularizerKind::L2),
+            "l1" => Some(RegularizerKind::L1 { epsilon: param }),
+            "elastic_net" => Some(RegularizerKind::ElasticNet { l1_ratio: param }),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            RegularizerKind::L2 => "l2",
+            RegularizerKind::L1 { .. } => "l1",
+            RegularizerKind::ElasticNet { .. } => "elastic_net",
+        }
+    }
+
+    pub fn is_l2(&self) -> bool {
+        matches!(self, RegularizerKind::L2)
+    }
+
+    /// Range-check the parameters; `Err(reason)` feeds the typed
+    /// `Error::InvalidRegularizer` at `Trainer::build`.
+    pub fn validate(&self) -> Result<(), String> {
+        match *self {
+            RegularizerKind::L2 => Ok(()),
+            RegularizerKind::L1 { epsilon } => {
+                if !epsilon.is_finite() || epsilon <= 0.0 {
+                    Err(format!(
+                        "l1 smoothing epsilon must be finite and > 0, got {epsilon} \
+                         (the dual machinery needs the (epsilon/2)||w||^2 term's strong convexity)"
+                    ))
+                } else {
+                    Ok(())
+                }
+            }
+            RegularizerKind::ElasticNet { l1_ratio } => {
+                if !l1_ratio.is_finite() || !(0.0..1.0).contains(&l1_ratio) {
+                    Err(format!(
+                        "elastic_net l1_ratio must be in [0, 1), got {l1_ratio} \
+                         (for the pure-L1 limit use kind = \"l1\" with a smoothing epsilon)"
+                    ))
+                } else {
+                    Ok(())
+                }
+            }
+        }
+    }
+
+    pub fn build(&self) -> Box<dyn Regularizer> {
+        match *self {
+            RegularizerKind::L2 => Box::new(L2),
+            RegularizerKind::L1 { epsilon } => Box::new(SmoothedL1::new(epsilon)),
+            RegularizerKind::ElasticNet { l1_ratio } => Box::new(ElasticNet::new(l1_ratio)),
+        }
+    }
+}
+
+impl std::fmt::Display for RegularizerKind {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            RegularizerKind::L2 => write!(f, "l2"),
+            RegularizerKind::L1 { epsilon } => write!(f, "l1(ε={epsilon})"),
+            RegularizerKind::ElasticNet { l1_ratio } => {
+                write!(f, "elastic_net(η={l1_ratio})")
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn all_kinds() -> Vec<RegularizerKind> {
+        vec![
+            RegularizerKind::L2,
+            RegularizerKind::L1 { epsilon: 0.5 },
+            RegularizerKind::ElasticNet { l1_ratio: 0.3 },
+        ]
+    }
+
+    #[test]
+    fn soft_threshold_cases() {
+        assert_eq!(soft_threshold(2.0, 0.5), 1.5);
+        assert_eq!(soft_threshold(-2.0, 0.5), -1.5);
+        assert_eq!(soft_threshold(0.3, 0.5), 0.0);
+        assert_eq!(soft_threshold(-0.3, 0.5), 0.0);
+        // k = 0 is exactly the identity (the L2 fast path's contract)
+        for v in [3.25, -1.5, 0.0, f64::MIN_POSITIVE] {
+            assert_eq!(soft_threshold(v, 0.0).to_bits(), v.to_bits());
+        }
+    }
+
+    #[test]
+    fn l2_is_identity_map_with_unit_strength() {
+        let r = L2;
+        assert_eq!(r.strong_convexity(), 1.0);
+        assert_eq!(r.l1_weight(), 0.0);
+        assert!(r.is_identity_map());
+        assert!(!r.sparsity_hint());
+        let v = [1.5, -2.0, 0.0];
+        let mut w = [0.0; 3];
+        r.prox_into(&v, &mut w);
+        assert_eq!(w, v);
+        // Omega_norm == Omega_norm* for the self-dual L2
+        assert!((r.value(&v) - r.conjugate(&v)).abs() < 1e-15);
+    }
+
+    #[test]
+    fn l1_and_elastic_net_constants() {
+        let l1 = SmoothedL1::new(0.5);
+        assert_eq!(l1.strong_convexity(), 0.5);
+        assert_eq!(l1.l1_weight(), 2.0); // mu/sigma = 1/0.5
+        assert!(l1.sparsity_hint() && !l1.is_identity_map());
+
+        let en = ElasticNet::new(0.25);
+        assert_eq!(en.strong_convexity(), 0.75);
+        assert!((en.l1_weight() - 0.25 / 0.75).abs() < 1e-15);
+
+        // eta = 0 degenerates to L2 exactly
+        let en0 = ElasticNet::new(0.0);
+        assert_eq!(en0.l1_weight(), 0.0);
+        assert!(en0.is_identity_map());
+        assert_eq!(en0.strong_convexity(), 1.0);
+    }
+
+    #[test]
+    fn prox_minimizes_its_objective() {
+        // prox(v) = argmin_u (1/2)(u - v)^2 + kappa|u|: the returned point
+        // must beat a grid of perturbations for every kind.
+        for kind in all_kinds() {
+            let reg = kind.build();
+            let k = reg.l1_weight();
+            let obj = |u: f64, v: f64| 0.5 * (u - v) * (u - v) + k * u.abs();
+            for &v in &[-2.0, -0.9, -0.1, 0.0, 0.4, 1.7] {
+                let star = reg.prox_coord(v);
+                let at_star = obj(star, v);
+                for step in [-0.1, -1e-3, 1e-3, 0.1] {
+                    assert!(
+                        obj(star + step, v) >= at_star - 1e-12,
+                        "{kind}: prox({v}) = {star} not a minimizer"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn fenchel_young_for_normalized_pair() {
+        // Omega_norm(w) + Omega_norm*(v) >= w . v, equality at w = prox(v).
+        for kind in all_kinds() {
+            let reg = kind.build();
+            let v = [1.2, -0.7, 0.05, -2.4, 0.0];
+            for w in [
+                [0.5, -0.5, 0.0, -1.0, 0.3],
+                [1.2, -0.7, 0.05, -2.4, 0.0],
+                [0.0, 0.0, 0.0, 0.0, 0.0],
+            ] {
+                let dot: f64 = w.iter().zip(&v).map(|(a, b)| a * b).sum();
+                assert!(
+                    reg.value(&w) + reg.conjugate(&v) >= dot - 1e-12,
+                    "{kind}: Fenchel-Young violated"
+                );
+            }
+            // equality at the prox point
+            let mut w_star = [0.0; 5];
+            reg.prox_into(&v, &mut w_star);
+            let dot: f64 = w_star.iter().zip(&v).map(|(a, b)| a * b).sum();
+            let slack = reg.value(&w_star) + reg.conjugate(&v) - dot;
+            assert!(slack.abs() < 1e-12, "{kind}: slack {slack} at prox point");
+        }
+    }
+
+    #[test]
+    fn kind_roundtrips_through_names_and_validates() {
+        for kind in all_kinds() {
+            let param = match kind {
+                RegularizerKind::L2 => 0.0,
+                RegularizerKind::L1 { epsilon } => epsilon,
+                RegularizerKind::ElasticNet { l1_ratio } => l1_ratio,
+            };
+            assert_eq!(RegularizerKind::from_name(kind.name(), param), Some(kind));
+            assert!(kind.validate().is_ok(), "{kind}");
+            assert_eq!(kind.build().name(), kind.name());
+        }
+        assert_eq!(RegularizerKind::from_name("l0", 1.0), None);
+        assert!(RegularizerKind::L1 { epsilon: 0.0 }.validate().is_err());
+        assert!(RegularizerKind::L1 { epsilon: f64::NAN }.validate().is_err());
+        assert!(RegularizerKind::ElasticNet { l1_ratio: 1.0 }.validate().is_err());
+        assert!(RegularizerKind::ElasticNet { l1_ratio: -0.1 }.validate().is_err());
+        assert!(RegularizerKind::default().is_l2());
+    }
+
+    #[test]
+    fn l1_norm_sums_absolutes() {
+        assert_eq!(l1_norm(&[1.0, -2.5, 0.0, 0.5]), 4.0);
+        assert_eq!(l1_norm(&[]), 0.0);
+    }
+}

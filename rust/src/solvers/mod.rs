@@ -7,6 +7,16 @@
 //! `alpha` (`w = A alpha`), return `(dalpha_[k], dw)` with
 //! `dw = A_[k] dalpha_[k]`. CoCoA inherits the convergence of whatever
 //! runs here (Theorem 2 + Assumption 1).
+//!
+//! With a non-L2 regularizer (see [`crate::regularizers`]) the same code
+//! runs the *generalized* framework's local subproblem: the broadcast `w`
+//! is the leader's prox-mapped iterate `prox(v)` (the linearization point
+//! of the normalized conjugate), [`Block::lambda_n`] carries
+//! `lambda_eff * n = lambda * sigma * n`, and the quadratic coupling the
+//! inner loop maintains is exactly the 1-smooth upper-bound model of the
+//! normalized conjugate around `v`. The solvers never see the prox — the
+//! leader applies it at commit — which is what keeps the L2 fast path
+//! (sigma = 1, prox = identity) the bit-identical seed arithmetic.
 
 mod exact;
 mod gap_certified;
@@ -25,7 +35,9 @@ use crate::loss::Loss;
 /// A worker's view of its block: the local rows plus the problem constants.
 pub struct Block {
     pub data: Dataset,
-    /// `lambda * n` with the *global* n — the scaling constant in `A`.
+    /// `lambda_eff * n` with the *global* n — the scaling constant in `A`
+    /// of the sigma-normalized problem (`lambda_eff = lambda *
+    /// regularizer strong convexity`; plain `lambda * n` for L2).
     pub lambda_n: f64,
 }
 

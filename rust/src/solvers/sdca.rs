@@ -189,6 +189,74 @@ mod tests {
     }
 
     #[test]
+    fn prox_fixed_point_is_a_solver_fixed_point() {
+        // The generalized-subproblem contract: run LocalSDCA on the
+        // normalized block (lambda_n = lambda*sigma*n) from the *prox
+        // fixed point* of a smoothed-L1 problem — alpha_i = y_i - x_i^T w
+        // with w = prox(v), v = A alpha — and no coordinate moves. This
+        // pins the exact interplay the coordinator relies on: solvers stay
+        // prox-oblivious, yet their fixed points are the regularized
+        // optima. (Tiny instance re-derived inline on purpose — a solver
+        // unit test should not lean on the experiments-layer lasso
+        // helpers it ultimately underpins.)
+        use crate::loss::Squared;
+        use crate::regularizers::{Regularizer, RegularizerKind};
+
+        // orthogonal indicator design: 2 columns x 3 rows each
+        let (d, m) = (2usize, 3usize);
+        let n = d * m;
+        let y_col = [0.9, 0.05]; // one active, one thresholded to zero
+        let mut triplets = Vec::new();
+        let mut labels = Vec::new();
+        for j in 0..d {
+            for r in 0..m {
+                triplets.push((j * m + r, j as u32, 1.0));
+                labels.push(y_col[j]);
+            }
+        }
+        let data = crate::data::Dataset::new(
+            crate::data::Features::Sparse(crate::data::CsrMatrix::from_triplets(
+                n, d, &triplets,
+            )),
+            labels,
+        );
+        let (lambda, eps) = (0.1, 0.5);
+        let reg = RegularizerKind::L1 { epsilon: eps }.build();
+        let lambda_eff = lambda * reg.strong_convexity();
+
+        // closed-form optimum and its dual point
+        let c = m as f64 / n as f64;
+        let w_star: Vec<f64> = (0..d)
+            .map(|j| {
+                crate::regularizers::soft_threshold(m as f64 * y_col[j] / n as f64, lambda)
+                    / (lambda * eps + c)
+            })
+            .collect();
+        let alpha: Vec<f64> = (0..n)
+            .map(|i| {
+                let j = i / m;
+                y_col[j] - w_star[j]
+            })
+            .collect();
+        // consistency: prox(v(alpha)) == w_star
+        let v = data.primal_from_dual(&alpha, lambda_eff);
+        for j in 0..d {
+            assert!(
+                (reg.prox_coord(v[j]) - w_star[j]).abs() < 1e-12,
+                "prox(v[{j}]) != w*[{j}]"
+            );
+        }
+
+        let block = Block { data, lambda_n: lambda_eff * n as f64 };
+        let solver = LocalSdca::new(Sampling::Permutation);
+        let up = solver.local_update(&block, &Squared, &alpha, &w_star, n, &mut rng(17));
+        for (i, da) in up.dalpha.iter().enumerate() {
+            assert!(da.abs() < 1e-12, "coordinate {i} moved by {da} at the optimum");
+        }
+        assert!(up.dw.iter().all(|dv| dv.abs() < 1e-12));
+    }
+
+    #[test]
     fn deterministic_under_seed() {
         let block = test_block(25, 5, 0.2, 50, 6);
         let solver = LocalSdca::new(Sampling::WithReplacement);

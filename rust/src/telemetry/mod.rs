@@ -10,6 +10,55 @@ use std::path::Path;
 
 use anyhow::{Context, Result};
 
+/// Which stopping criterion (if any) fired at an evaluated round — the
+/// disambiguation `Budget::until_gap` vs `Budget::until_subopt` runs need
+/// (both used to be indistinguishable in trace output). Non-final rows
+/// record [`StopReason::Running`]; the final row records what actually
+/// ended the run. Also persisted in checkpoints so a resumed session knows
+/// why its source run stopped.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum StopReason {
+    /// The run was still in progress at this evaluation (or no run has
+    /// recorded a stop yet).
+    #[default]
+    Running,
+    /// The round budget (`Budget::rounds` / the `until_*` cap) ran out.
+    MaxRounds,
+    /// The duality-gap target (`Budget::until_gap` / `target_gap`) fired.
+    Gap,
+    /// The primal-suboptimality target (`Budget::until_subopt` /
+    /// `target_subopt`) fired.
+    Subopt,
+}
+
+impl StopReason {
+    pub fn as_str(self) -> &'static str {
+        match self {
+            StopReason::Running => "running",
+            StopReason::MaxRounds => "max_rounds",
+            StopReason::Gap => "gap",
+            StopReason::Subopt => "subopt",
+        }
+    }
+
+    /// Parse the `as_str` token (checkpoint/CSV round-trips).
+    pub fn from_name(name: &str) -> Option<StopReason> {
+        match name {
+            "running" => Some(StopReason::Running),
+            "max_rounds" => Some(StopReason::MaxRounds),
+            "gap" => Some(StopReason::Gap),
+            "subopt" => Some(StopReason::Subopt),
+            _ => None,
+        }
+    }
+}
+
+impl std::fmt::Display for StopReason {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.as_str())
+    }
+}
+
 /// One evaluated point of a run.
 #[derive(Debug, Clone, Copy)]
 pub struct TraceRow {
@@ -35,6 +84,13 @@ pub struct TraceRow {
     pub gap: f64,
     /// `P(w) - P*` when a reference optimum is known, else NaN.
     pub primal_subopt: f64,
+    /// Nonzero count of the primal iterate `w` — the sparsity-recovery
+    /// axis for L1/elastic-net runs (prox-induced exact zeros; equals the
+    /// dense count on typical L2 runs).
+    pub w_nnz: u64,
+    /// Which stop criterion fired at this row ([`StopReason::Running`] on
+    /// non-final rows).
+    pub stop: StopReason,
 }
 
 /// A full run history plus identifying metadata.
@@ -108,7 +164,7 @@ impl Trace {
     /// The CSV schema of [`Trace::to_csv`], one name per [`TraceRow`]
     /// field, in order.
     pub const CSV_HEADER: &str =
-        "round,sim_time_s,compute_time_s,vectors,bytes_modeled,bytes_measured,inner_steps,primal,dual,gap,primal_subopt";
+        "round,sim_time_s,compute_time_s,vectors,bytes_modeled,bytes_measured,inner_steps,primal,dual,gap,primal_subopt,w_nnz,stop";
 
     pub fn to_csv<P: AsRef<Path>>(&self, path: P) -> Result<()> {
         if let Some(parent) = path.as_ref().parent() {
@@ -120,7 +176,7 @@ impl Trace {
         for r in &self.rows {
             writeln!(
                 f,
-                "{},{},{},{},{},{},{},{},{},{},{}",
+                "{},{},{},{},{},{},{},{},{},{},{},{},{}",
                 r.round,
                 r.sim_time_s,
                 r.compute_time_s,
@@ -131,7 +187,9 @@ impl Trace {
                 r.primal,
                 r.dual,
                 r.gap,
-                r.primal_subopt
+                r.primal_subopt,
+                r.w_nnz,
+                r.stop
             )?;
         }
         Ok(())
@@ -157,7 +215,7 @@ impl Trace {
             let sep = if i + 1 == self.rows.len() { "" } else { "," };
             writeln!(
                 f,
-                "    {{\"round\": {}, \"sim_time_s\": {}, \"compute_time_s\": {}, \"vectors\": {}, \"bytes_modeled\": {}, \"bytes_measured\": {}, \"inner_steps\": {}, \"primal\": {}, \"dual\": {}, \"gap\": {}, \"primal_subopt\": {}}}{}",
+                "    {{\"round\": {}, \"sim_time_s\": {}, \"compute_time_s\": {}, \"vectors\": {}, \"bytes_modeled\": {}, \"bytes_measured\": {}, \"inner_steps\": {}, \"primal\": {}, \"dual\": {}, \"gap\": {}, \"primal_subopt\": {}, \"w_nnz\": {}, \"stop\": \"{}\"}}{}",
                 r.round,
                 json_f64(r.sim_time_s),
                 json_f64(r.compute_time_s),
@@ -169,6 +227,8 @@ impl Trace {
                 json_f64(r.dual),
                 json_f64(r.gap),
                 json_f64(r.primal_subopt),
+                r.w_nnz,
+                r.stop,
                 sep,
             )?;
         }
@@ -214,6 +274,8 @@ mod tests {
             dual: 0.5 - gap + subopt,
             gap,
             primal_subopt: subopt,
+            w_nnz: 3 + round,
+            stop: StopReason::Running,
         }
     }
 
@@ -245,6 +307,8 @@ mod tests {
         assert!(json.contains("\"algorithm\": \"cocoa\""));
         assert!(json.contains("\"bytes_modeled\": 64"));
         assert!(json.contains("\"bytes_measured\": 88"));
+        assert!(json.contains("\"w_nnz\": 4"));
+        assert!(json.contains("\"stop\": \"running\""));
         assert_eq!(json.matches("\"round\":").count(), 2);
     }
 
@@ -257,6 +321,7 @@ mod tests {
         tr.push(row(1, 0.125, 8, 0.1, 0.2));
         let mut no_ref = row(2, 2.5, 16, 0.01, 0.02);
         no_ref.primal_subopt = f64::NAN; // NaN subopt (no P*) must survive
+        no_ref.stop = StopReason::Gap;
         tr.push(no_ref);
         let p = std::env::temp_dir().join("cocoa_trace_test/schema.csv");
         tr.to_csv(&p).unwrap();
@@ -277,11 +342,13 @@ mod tests {
                 "dual",
                 "gap",
                 "primal_subopt",
+                "w_nnz",
+                "stop",
             ]
         );
         for (line, orig) in lines.zip(&tr.rows) {
             let f: Vec<&str> = line.split(',').collect();
-            assert_eq!(f.len(), 11);
+            assert_eq!(f.len(), 13);
             let back = TraceRow {
                 round: f[0].parse().unwrap(),
                 sim_time_s: f[1].parse().unwrap(),
@@ -294,6 +361,8 @@ mod tests {
                 dual: f[8].parse().unwrap(),
                 gap: f[9].parse().unwrap(),
                 primal_subopt: f[10].parse().unwrap(),
+                w_nnz: f[11].parse().unwrap(),
+                stop: StopReason::from_name(f[12]).unwrap(),
             };
             assert_eq!(back.round, orig.round);
             assert_eq!(back.vectors, orig.vectors);
@@ -309,7 +378,23 @@ mod tests {
                 back.primal_subopt.to_bits() == orig.primal_subopt.to_bits()
                     || (back.primal_subopt.is_nan() && orig.primal_subopt.is_nan())
             );
+            assert_eq!(back.w_nnz, orig.w_nnz);
+            assert_eq!(back.stop, orig.stop);
         }
+    }
+
+    #[test]
+    fn stop_reason_roundtrips() {
+        for reason in [
+            StopReason::Running,
+            StopReason::MaxRounds,
+            StopReason::Gap,
+            StopReason::Subopt,
+        ] {
+            assert_eq!(StopReason::from_name(reason.as_str()), Some(reason));
+        }
+        assert_eq!(StopReason::from_name("because"), None);
+        assert_eq!(StopReason::default(), StopReason::Running);
     }
 
     #[test]

@@ -9,13 +9,17 @@
 //! * every message: a 16-byte header (kind tag `u32`, worker `u32`,
 //!   round `u64`),
 //! * dense f64 vectors: `u32` length prefix + 8 bytes per scalar,
-//! * `dw` payloads: the cheaper of a dense block and a sparse
-//!   `(u32 index, f64 value)` pair list — the sparse delta-encoding that
-//!   makes mostly-zero round replies (tiny H, very sparse data) cheap.
+//! * shared-vector payloads (`dw` replies AND the `w` broadcasts): the
+//!   cheaper of a dense block and a sparse `(u32 index, f64 value)` pair
+//!   list — the sparse delta-encoding that makes mostly-zero round
+//!   replies (tiny H, very sparse data) cheap, and that compresses the
+//!   broadcast `w` when an L1/elastic-net regularizer's prox map plants
+//!   exact zeros in it (lasso broadcasts shrink with the recovered
+//!   support).
 //!
-//! [`encode_dw`]/[`decode_dw`] implement the `dw` layout for real (used by
-//! the `hot_paths` bench and the round-trip tests); the rest of the module
-//! only *sizes* messages, which is all the ledger needs.
+//! [`encode_dw`]/[`decode_dw`] implement the shared-vector layout for real
+//! (used by the `hot_paths` bench and the round-trip tests); the rest of
+//! the module only *sizes* messages, which is all the ledger needs.
 
 use crate::coordinator::{LocalWork, ToLeader, ToWorker};
 
@@ -194,17 +198,20 @@ fn local_work_bytes(_work: &LocalWork) -> u64 {
     4 + 16
 }
 
-/// `(kind, exact serialized size)` of a leader -> worker message.
+/// `(kind, exact serialized size)` of a leader -> worker message. The
+/// broadcast `w` rides the same adaptive encoding as `dw` replies: dense
+/// for typical L2 iterates, the index/value pair list once a prox map
+/// makes `w` mostly zero.
 pub fn to_worker_wire(msg: &ToWorker) -> (MessageKind, u64) {
     match msg {
         ToWorker::Round { w, work, .. } => (
             MessageKind::Broadcast,
-            HEADER_BYTES + local_work_bytes(work) + dense_vec_bytes(w.len()),
+            HEADER_BYTES + local_work_bytes(work) + dw_wire(w).1,
         ),
         ToWorker::Commit { .. } => (MessageKind::Commit, HEADER_BYTES + 8),
         ToWorker::Eval { w } => (
             MessageKind::EvalRequest,
-            HEADER_BYTES + dense_vec_bytes(w.len()),
+            HEADER_BYTES + dw_wire(w).1,
         ),
         ToWorker::GetState => (MessageKind::Checkpoint, HEADER_BYTES),
         ToWorker::SetState(ws) => (
@@ -301,14 +308,15 @@ mod tests {
 
     #[test]
     fn message_sizes_scale_with_payload() {
-        let w = std::sync::Arc::new(vec![0.0f64; 100]);
+        // dense (every coordinate nonzero) broadcasts grow linearly in d
+        let w = std::sync::Arc::new(vec![1.5f64; 100]);
         let (kind, b100) = to_worker_wire(&ToWorker::Round {
             round: 1,
             w: w.clone(),
             work: LocalWork::DualRound { h: 5 },
         });
         assert_eq!(kind, MessageKind::Broadcast);
-        let w2 = std::sync::Arc::new(vec![0.0f64; 200]);
+        let w2 = std::sync::Arc::new(vec![1.5f64; 200]);
         let (_, b200) = to_worker_wire(&ToWorker::Round {
             round: 1,
             w: w2,
@@ -331,6 +339,39 @@ mod tests {
         assert_eq!(kind, MessageKind::DeltaW);
         // all-zero dw: the sparse encoding collapses to the fixed preamble
         assert_eq!(bytes, HEADER_BYTES + 16 + 1 + 4 + 4);
+    }
+
+    #[test]
+    fn prox_sparse_broadcast_shrinks_on_the_wire() {
+        // A lasso-style w (few nonzeros from the prox map) must cost the
+        // sparse pair-list size, far below the dense layout — this is the
+        // mechanism behind smaller measured bytes on L1 runs.
+        let mut w = vec![0.0f64; 500];
+        for j in (0..500).step_by(100) {
+            w[j] = 0.75;
+        }
+        let (kind, sparse_bytes) = to_worker_wire(&ToWorker::Round {
+            round: 3,
+            w: std::sync::Arc::new(w),
+            work: LocalWork::DualRound { h: 5 },
+        });
+        assert_eq!(kind, MessageKind::Broadcast);
+        let dense_equiv = to_worker_wire(&ToWorker::Round {
+            round: 3,
+            w: std::sync::Arc::new(vec![0.75f64; 500]),
+            work: LocalWork::DualRound { h: 5 },
+        })
+        .1;
+        assert_eq!(sparse_bytes, HEADER_BYTES + (4 + 16) + 1 + 4 + 4 + 12 * 5);
+        assert!(sparse_bytes < dense_equiv / 10);
+        // the eval request carries the same adaptively-encoded w
+        let mut w = vec![0.0f64; 500];
+        w[7] = -1.25;
+        let (kind, eval_bytes) = to_worker_wire(&ToWorker::Eval {
+            w: std::sync::Arc::new(w),
+        });
+        assert_eq!(kind, MessageKind::EvalRequest);
+        assert_eq!(eval_bytes, HEADER_BYTES + 1 + 4 + 4 + 12);
     }
 
     #[test]

@@ -68,6 +68,67 @@ fn pjrt_without_artifacts_is_typed() {
 }
 
 #[test]
+fn invalid_regularizer_params_are_typed() {
+    let data = data();
+    for kind in [
+        RegularizerKind::L1 { epsilon: 0.0 },
+        RegularizerKind::L1 { epsilon: -1.0 },
+        RegularizerKind::L1 { epsilon: f64::NAN },
+        RegularizerKind::ElasticNet { l1_ratio: 1.0 },
+        RegularizerKind::ElasticNet { l1_ratio: -0.2 },
+        RegularizerKind::ElasticNet { l1_ratio: f64::INFINITY },
+    ] {
+        let err = Trainer::on(&data)
+            .workers(2)
+            .lambda(0.1)
+            .regularizer(kind)
+            .build()
+            .unwrap_err();
+        assert!(
+            matches!(err, Error::InvalidRegularizer { .. }),
+            "{kind:?}: wrong variant {err}"
+        );
+    }
+}
+
+#[test]
+fn l2_only_features_reject_other_regularizers_typed() {
+    let data = data();
+    // the gap-certified solver's Appendix-B certificate is L2 math
+    let err = Trainer::on(&data)
+        .workers(2)
+        .lambda(0.1)
+        .regularizer(RegularizerKind::L1 { epsilon: 0.5 })
+        .solver(SolverKind::GapCertified)
+        .build()
+        .unwrap_err();
+    assert!(matches!(err, Error::UnsupportedRegularizer { .. }), "{err}");
+    // the PJRT kernels hardcode the L2 subproblem — rejected before the
+    // (missing) artifacts are even looked for
+    let err = Trainer::on(&data)
+        .workers(2)
+        .lambda(0.1)
+        .regularizer(RegularizerKind::ElasticNet { l1_ratio: 0.3 })
+        .backend(Backend::Pjrt)
+        .artifacts_dir("/definitely/not/a/real/artifacts/dir")
+        .build()
+        .unwrap_err();
+    assert!(matches!(err, Error::UnsupportedRegularizer { .. }), "{err}");
+    // a *valid* non-L2 regularizer with the default solver builds fine
+    let session = Trainer::on(&data)
+        .workers(2)
+        .lambda(0.1)
+        .regularizer(RegularizerKind::ElasticNet { l1_ratio: 0.3 })
+        .build()
+        .unwrap();
+    assert_eq!(
+        session.regularizer(),
+        RegularizerKind::ElasticNet { l1_ratio: 0.3 }
+    );
+    session.shutdown();
+}
+
+#[test]
 fn mismatched_partition_is_typed() {
     let data = data(); // n = 40
     let wrong = Partition::new(PartitionStrategy::Contiguous, 60, 2, 0);

@@ -1,0 +1,238 @@
+//! Golden lasso: CoCoA with the epsilon-smoothed L1 regularizer on an
+//! orthogonal design must reach the soft-thresholding *closed-form*
+//! optimum (smoothing included) to 1e-8 for K ∈ {1, 2, 4}, with the
+//! recovered support matching exactly — the L1 analogue of
+//! `golden_ridge.rs`. Also locks in the workload's side contracts: the
+//! duality-gap certificate stays valid, the counted transport measures
+//! *fewer* bytes than an equivalent L2 run (prox-sparse broadcasts), and
+//! the L1 path is seed-deterministic (the CI determinism job diffs the
+//! artifact this file writes).
+
+use cocoa::data::cov_like;
+use cocoa::experiments::sparsity::{lasso_closed_form, lasso_design, planted_lasso};
+use cocoa::prelude::*;
+
+#[test]
+fn golden_lasso_reaches_closed_form_optimum_for_k_1_2_4() {
+    let (d, m) = (8usize, 6usize);
+    let n = d * m;
+    // z_j/n = y_j/d with the soft threshold at lambda = 0.1: columns 2
+    // and 5 (|y|/8 < 0.1) are thresholded to exact zero, the other six
+    // (|y|/8 >= 0.125) stay active, mixed signs
+    let y_col = [1.6, -1.2, 0.1, 2.4, -2.0, -0.06, 1.0, -1.44];
+    let (lambda, eps) = (0.1, 0.5);
+    let w_star = lasso_closed_form(d, m, &y_col, lambda, eps);
+    assert_eq!(w_star[2], 0.0);
+    assert_eq!(w_star[5], 0.0);
+    let data = lasso_design(d, m, &y_col);
+
+    for k in [1usize, 2, 4] {
+        let mut session = Trainer::on(&data)
+            .workers(k)
+            .loss(LossKind::Squared)
+            .lambda(lambda)
+            .regularizer(RegularizerKind::L1 { epsilon: eps })
+            .seed(5)
+            .label("golden_lasso")
+            .build()
+            .unwrap();
+        let h = n / k; // one local pass per round
+        let trace = session
+            .run(&mut Cocoa::adding(h), Budget::rounds(1500).eval_every(1500))
+            .unwrap();
+
+        // certificate stays a certificate under the prox
+        for row in &trace.rows {
+            assert!(row.gap >= -1e-10, "K={k}: negative gap at round {}", row.round);
+        }
+
+        let w = session.w();
+        for j in 0..d {
+            assert!(
+                (w[j] - w_star[j]).abs() <= 1e-8,
+                "K={k}: w[{j}] = {} vs closed form {}",
+                w[j],
+                w_star[j]
+            );
+        }
+        // exact support recovery: prox zeros are *exact* zeros
+        for j in 0..d {
+            assert_eq!(
+                w[j] == 0.0,
+                w_star[j] == 0.0,
+                "K={k}: support mismatch at {j} (w = {})",
+                w[j]
+            );
+        }
+        assert_eq!(trace.rows.last().unwrap().w_nnz, 6, "K={k}");
+        session.shutdown();
+    }
+}
+
+#[test]
+fn l1_dual_is_monotone_under_safe_averaging() {
+    // The generalized framework's guarantee carries over: SDCA local
+    // steps on the quadratic model + beta_K = 1 averaging never decrease
+    // the regularized dual, smooth loss or not orthogonal data.
+    let data = cov_like(100, 8, 0.1, 27);
+    let mut session = Trainer::on(&data)
+        .workers(4)
+        .loss(LossKind::Squared)
+        .lambda(0.1)
+        .regularizer(RegularizerKind::L1 { epsilon: 0.5 })
+        .seed(28)
+        .build()
+        .unwrap();
+    let trace = session.run(&mut Cocoa::new(40), Budget::rounds(12)).unwrap();
+    for pair in trace.rows.windows(2) {
+        assert!(
+            pair[1].dual >= pair[0].dual - 1e-9,
+            "dual decreased: {} -> {} at round {}",
+            pair[0].dual,
+            pair[1].dual,
+            pair[1].round
+        );
+        assert!(pair[1].gap >= -1e-9);
+    }
+    session.shutdown();
+}
+
+#[test]
+fn l1_broadcasts_measure_fewer_bytes_than_l2() {
+    // The coordinator's prox-induced sparsity on the wire: with d = 400
+    // and a 10-column support, the broadcast w rides the sparse encoding
+    // on the L1 run while the L2 run's dense v pays full freight.
+    let prob = planted_lasso(400, 2, 10, 0.1, 0.5);
+    let run = |reg: Option<RegularizerKind>| {
+        let mut trainer = Trainer::on(&prob.data)
+            .workers(2)
+            .loss(LossKind::Squared)
+            .lambda(prob.lambda)
+            .transport(TransportKind::Counted)
+            .seed(9)
+            .label("bytes");
+        if let Some(kind) = reg {
+            trainer = trainer.regularizer(kind);
+        }
+        let mut session = trainer.build().unwrap();
+        let trace = session
+            .run(&mut Cocoa::new(400), Budget::rounds(10).eval_every(10))
+            .unwrap();
+        let bytes = trace.rows.last().unwrap().bytes_measured;
+        let nnz = trace.rows.last().unwrap().w_nnz;
+        session.shutdown();
+        (bytes, nnz)
+    };
+    let (l2_bytes, l2_nnz) = run(None);
+    let (l1_bytes, l1_nnz) = run(Some(RegularizerKind::L1 { epsilon: 0.5 }));
+    assert!(l1_nnz <= 10, "L1 run not sparse: nnz = {l1_nnz}");
+    assert!(l2_nnz > 100, "L2 run unexpectedly sparse: nnz = {l2_nnz}");
+    assert!(
+        l1_bytes < l2_bytes,
+        "prox sparsity did not shrink measured bytes: L1 {l1_bytes} >= L2 {l2_bytes}"
+    );
+}
+
+#[test]
+fn restore_rejects_checkpoint_from_a_different_regularizer() {
+    // v is only meaningful through the matching prox: an L1 checkpoint
+    // must not restore into an L2 session (or a different epsilon).
+    let data = cov_like(40, 5, 0.1, 31);
+    let build = |kind: Option<RegularizerKind>| {
+        let mut trainer = Trainer::on(&data).workers(2).loss(LossKind::Squared).lambda(0.1);
+        if let Some(kind) = kind {
+            trainer = trainer.regularizer(kind);
+        }
+        trainer.seed(32).build().unwrap()
+    };
+    let mut l1 = build(Some(RegularizerKind::L1 { epsilon: 0.5 }));
+    l1.run(&mut Cocoa::new(10), Budget::rounds(2)).unwrap();
+    let cp = l1.checkpoint().unwrap();
+    l1.shutdown();
+
+    // same regularizer: restores fine
+    let mut twin = build(Some(RegularizerKind::L1 { epsilon: 0.5 }));
+    twin.restore(&cp).unwrap();
+    twin.shutdown();
+    // plain L2 and a different epsilon: rejected
+    let mut l2 = build(None);
+    assert!(l2.restore(&cp).is_err());
+    l2.shutdown();
+    let mut other_eps = build(Some(RegularizerKind::L1 { epsilon: 0.25 }));
+    assert!(other_eps.restore(&cp).is_err());
+    other_eps.shutdown();
+}
+
+#[test]
+fn sgd_baselines_reject_non_l2_with_typed_error() {
+    let data = cov_like(40, 5, 0.1, 3);
+    let mut session = Trainer::on(&data)
+        .workers(2)
+        .loss(LossKind::Hinge)
+        .lambda(0.1)
+        .regularizer(RegularizerKind::ElasticNet { l1_ratio: 0.5 })
+        .build()
+        .unwrap();
+    let err = session
+        .run(&mut LocalSgd::new(10), Budget::rounds(2))
+        .unwrap_err();
+    assert!(
+        matches!(err, Error::UnsupportedRegularizer { .. }),
+        "wrong error: {err}"
+    );
+    // the session itself is still healthy for dual methods
+    let trace = session.run(&mut Cocoa::new(10), Budget::rounds(2)).unwrap();
+    assert!(trace.rows.last().unwrap().gap >= -1e-9);
+    session.shutdown();
+}
+
+/// L1 twin of `prop_transport::seeded_determinism_artifact`: writes the
+/// deterministic fingerprint of a seeded counted L1 run to
+/// `target/determinism/trace_l1_<seed>.csv`. The CI determinism job runs
+/// this twice with `CARGO_TEST_SEED` pinned and diffs the files, so the
+/// prox path (leader-side soft threshold, sparse broadcast accounting) is
+/// determinism-checked exactly like the L2 path.
+#[test]
+fn seeded_determinism_artifact_l1() {
+    let seed: u64 = std::env::var("CARGO_TEST_SEED")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(42);
+    let data = cov_like(90, 7, 0.1, seed);
+    let mut session = Trainer::on(&data)
+        .workers(3)
+        .loss(LossKind::Squared)
+        .lambda(0.05)
+        .regularizer(RegularizerKind::L1 { epsilon: 0.5 })
+        .network(NetworkModel::ec2_like())
+        .transport(TransportKind::Counted)
+        .seed(seed)
+        .label("l1_det")
+        .build()
+        .unwrap();
+    let trace = session.run(&mut Cocoa::new(25), Budget::rounds(6)).unwrap();
+    let w = session.w().to_vec();
+    session.shutdown();
+
+    let mut out = String::from(
+        "round,vectors,bytes_modeled,bytes_measured,w_nnz,primal_bits,dual_bits,gap_bits\n",
+    );
+    for r in &trace.rows {
+        out.push_str(&format!(
+            "{},{},{},{},{},{:016x},{:016x},{:016x}\n",
+            r.round,
+            r.vectors,
+            r.bytes_modeled,
+            r.bytes_measured,
+            r.w_nnz,
+            r.primal.to_bits(),
+            r.dual.to_bits(),
+            r.gap.to_bits(),
+        ));
+    }
+    let fingerprint = w.iter().fold(0u64, |acc, v| acc.rotate_left(7) ^ v.to_bits());
+    out.push_str(&format!("final_w_fingerprint {fingerprint:016x}\n"));
+
+    std::fs::create_dir_all("target/determinism").unwrap();
+    std::fs::write(format!("target/determinism/trace_l1_{seed}.csv"), out).unwrap();
+}
