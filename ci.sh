@@ -1,15 +1,46 @@
 #!/usr/bin/env bash
-# CI gate for the cocoa crate: build, test, lint, format.
+# CI gate for the cocoa crate: build, test, determinism, perf smoke, lint.
 #
 #   ./ci.sh            # everything
-#   ./ci.sh --fast     # skip clippy/fmt (tier-1 + determinism gate)
+#   ./ci.sh --fast     # skip clippy/fmt/doc (tier-1 + determinism + perf smoke)
 #
 # Tier-1 (the driver's gate) is exactly: cargo build --release && cargo test -q
+#
+# Scratch comparisons live in a mktemp -d sandbox removed on exit, so runs
+# from different checkouts never collide in /tmp (the old fixed-path bug).
+# The determinism tests themselves write seed-scoped files under this
+# checkout's target/ — like any cargo artifact, one ci.sh run per checkout
+# at a time.
 
 set -euo pipefail
 cd "$(dirname "$0")"
 
+SCRATCH="$(mktemp -d "${TMPDIR:-/tmp}/cocoa_ci.XXXXXX")"
+trap 'rm -rf "$SCRATCH"' EXIT
+
 step() { printf '\n== %s ==\n' "$*"; }
+
+DET_SEED="${CARGO_TEST_SEED:-42}"
+
+# run_determinism_gate <label> <test target> <test name> <trace file>
+#
+# Runs the named seeded test twice with CARGO_TEST_SEED pinned and diffs
+# the trace fingerprint it writes (gap/dual/primal bit patterns, byte
+# totals, final-w hash). Any nondeterminism in the transport, the
+# reduction order, the kernels, or the byte accounting shows up here.
+# The second run's trace is left in place (target/determinism/) so CI can
+# upload it as an artifact.
+run_determinism_gate() {
+    local label="$1" target="$2" name="$3" trace="$4"
+    step "seeded determinism: $label (same seed => identical trace)"
+    rm -f "$trace"
+    CARGO_TEST_SEED="$DET_SEED" cargo test -q --test "$target" "$name"
+    cp "$trace" "$SCRATCH/${label}_run1.csv"
+    rm -f "$trace"
+    CARGO_TEST_SEED="$DET_SEED" cargo test -q --test "$target" "$name"
+    diff "$SCRATCH/${label}_run1.csv" "$trace"
+    printf 'determinism(%s): two seeded runs produced identical traces\n' "$label"
+}
 
 step "cargo build --release"
 cargo build --release
@@ -17,34 +48,18 @@ cargo build --release
 step "cargo test -q"
 cargo test -q
 
-# Seeded-determinism gate: the prop_transport suite writes a fingerprint of
-# a seeded SimNet run (gap/dual/primal bit patterns, byte totals, final-w
-# hash) to target/determinism/trace_<seed>.csv. Run it twice with the seed
-# pinned and diff — any nondeterminism in the transport, the coordinator's
-# reduction order, or the byte accounting shows up here.
-step "seeded determinism (same seed => identical trace + byte totals)"
-DET_SEED="${CARGO_TEST_SEED:-42}"
-DET_FILE="target/determinism/trace_${DET_SEED}.csv"
-rm -f "$DET_FILE"
-CARGO_TEST_SEED="$DET_SEED" cargo test -q --test prop_transport seeded_determinism_artifact
-cp "$DET_FILE" /tmp/cocoa_determinism_run1.csv
-rm -f "$DET_FILE"
-CARGO_TEST_SEED="$DET_SEED" cargo test -q --test prop_transport seeded_determinism_artifact
-diff /tmp/cocoa_determinism_run1.csv "$DET_FILE"
-printf 'determinism: two seeded runs produced identical traces\n'
+run_determinism_gate "l2_transport" prop_transport seeded_determinism_artifact \
+    "target/determinism/trace_${DET_SEED}.csv"
+run_determinism_gate "l1_prox" golden_lasso seeded_determinism_artifact_l1 \
+    "target/determinism/trace_l1_${DET_SEED}.csv"
 
-# Same gate for the L1/prox path: the golden_lasso suite writes an L1-run
-# fingerprint (counted transport, leader-side prox, sparse broadcast byte
-# accounting) — any nondeterminism in the regularizer path diffs here.
-step "seeded determinism, L1 prox path"
-DET_L1_FILE="target/determinism/trace_l1_${DET_SEED}.csv"
-rm -f "$DET_L1_FILE"
-CARGO_TEST_SEED="$DET_SEED" cargo test -q --test golden_lasso seeded_determinism_artifact_l1
-cp "$DET_L1_FILE" /tmp/cocoa_determinism_l1_run1.csv
-rm -f "$DET_L1_FILE"
-CARGO_TEST_SEED="$DET_SEED" cargo test -q --test golden_lasso seeded_determinism_artifact_l1
-diff /tmp/cocoa_determinism_l1_run1.csv "$DET_L1_FILE"
-printf 'determinism: two seeded L1 runs produced identical traces\n'
+# Perf smoke: run the tiny-profile workloads and validate BENCH_hotpath.json
+# structurally (fields present, numbers finite, monotone round times).
+# Never timing-gated — CI boxes are too noisy; the JSON is the artifact
+# that carries the perf trajectory across commits.
+step "perf smoke (BENCH_hotpath.json schema gate)"
+./target/release/cocoa perf --smoke --seed "$DET_SEED" --out target/BENCH_hotpath.json
+./target/release/cocoa perf --validate target/BENCH_hotpath.json
 
 if [[ "${1:-}" != "--fast" ]]; then
     step "cargo doc --no-deps (rustdoc warnings are errors)"

@@ -6,12 +6,56 @@
 //! cargo bench --bench hot_paths
 //! ```
 
-use cocoa::data::{cov_like, rcv1_like};
+use cocoa::data::{cov_like, rcv1_like, Features};
+use cocoa::kernels;
 use cocoa::loss::{Hinge, Loss};
 use cocoa::objective;
-use cocoa::solvers::{Block, LocalDualMethod, LocalSdca, Sampling};
+use cocoa::solvers::{Block, LocalDualMethod, LocalSdca, LocalUpdate, Sampling};
 use cocoa::util::bench::{bench, black_box};
 use cocoa::util::Rng;
+
+/// The pre-kernels inner loop, reproduced verbatim: bounds-checked naive
+/// gather/scatter through per-element indexing, the curvature division
+/// re-run every step, and the full-d delta extraction. Benched against
+/// `LocalSdca::local_update` below to measure the sparse hot-path speedup
+/// this refactor bought (the two produce bit-identical results — pinned
+/// by rust/tests/prop_kernels.rs).
+fn pre_pr_sparse_local_update(
+    block: &Block,
+    loss: &dyn Loss,
+    alpha: &[f64],
+    w: &[f64],
+    h: usize,
+    rng: &mut Rng,
+) -> LocalUpdate {
+    let m = match &block.data.features {
+        Features::Sparse(m) => m,
+        Features::Dense(_) => unreachable!("sparse baseline"),
+    };
+    let n_k = block.n_k();
+    let mut dalpha = vec![0.0; n_k];
+    let mut w_local = w.to_vec();
+    let inv_lambda_n = 1.0 / block.lambda_n;
+    for _ in 0..h {
+        let i = rng.gen_range(n_k);
+        let (idx, val) = m.row_view(i);
+        let mut q = 0.0;
+        for (c, v) in idx.iter().zip(val) {
+            q += v * w_local[*c as usize];
+        }
+        let s = block.data.norm_sq(i) / block.lambda_n;
+        let delta = loss.coord_delta(q, block.data.labels[i], alpha[i] + dalpha[i], s);
+        if delta != 0.0 {
+            dalpha[i] += delta;
+            let coef = delta * inv_lambda_n;
+            for (c, v) in idx.iter().zip(val) {
+                w_local[*c as usize] += coef * v;
+            }
+        }
+    }
+    let dw = w_local.iter().zip(w.iter()).map(|(wl, w0)| wl - w0).collect();
+    LocalUpdate { dalpha, dw, steps: h as u64, offloaded_s: 0.0 }
+}
 
 fn main() {
     println!("== hot paths (native backend) ==");
@@ -45,7 +89,7 @@ fn main() {
     });
 
     // --- one SDCA coordinate step (dot + solve + axpy) ---
-    let block = Block { data: cov_like(4096, 54, 0.1, 4), lambda_n: 1e-5 * 4096.0 };
+    let block = Block::new(cov_like(4096, 54, 0.1, 4), 1e-5 * 4096.0);
     let mut w_local = vec![0.0; 54];
     let mut alpha = vec![0.0; 4096];
     let mut rng = Rng::seed_from_u64(5);
@@ -70,13 +114,58 @@ fn main() {
     });
 
     let sparse_block =
-        Block { data: rcv1_like(4096, 10_000, 12, 0.1, 7), lambda_n: 1e-4 * 4096.0 };
+        Block::new(rcv1_like(4096, 10_000, 12, 0.1, 7), 1e-4 * 4096.0);
     let alpha_s = vec![0.0; 4096];
     let w_s = vec![0.0; 10_000];
     let mut rng3 = Rng::seed_from_u64(8);
-    bench("local epoch H=4096 csr 4096x10k", 15, 30.0, || {
+    let fused = bench("local epoch H=4096 csr 4096x10k (fused kernels)", 15, 30.0, || {
         black_box(solver.local_update(&sparse_block, &Hinge, &alpha_s, &w_s, 4096, &mut rng3));
     });
+    let mut rng3b = Rng::seed_from_u64(8);
+    let naive = bench("local epoch H=4096 csr 4096x10k (pre-PR baseline)", 15, 30.0, || {
+        black_box(pre_pr_sparse_local_update(
+            &sparse_block, &Hinge, &alpha_s, &w_s, 4096, &mut rng3b,
+        ));
+    });
+    println!(
+        "  sparse inner-loop speedup vs pre-PR baseline: {:.2}x \
+         ({:.0} -> {:.0} steps/ms)",
+        naive.median_ns / fused.median_ns,
+        4096.0 / (naive.median_ns / 1e6),
+        4096.0 / (fused.median_ns / 1e6),
+    );
+
+    // --- the sparse row kernels head-to-head (gather dot) ---
+    {
+        let (idx_bench, val_bench) = match &sparse_block.data.features {
+            Features::Sparse(m) => {
+                // pick a mid-sized row so the kernel sees a typical nnz
+                let mut best = 0;
+                for i in 0..4096 {
+                    if m.row_view(i).0.len() >= 12 {
+                        best = i;
+                        break;
+                    }
+                }
+                m.row_view(best)
+            }
+            Features::Dense(_) => unreachable!(),
+        };
+        let w10k_ref = &w10k;
+        bench("sparse_dot kernel (unchecked, unrolled)", 30, 1.0, || {
+            // the path CsrMatrix::row_dot takes after its one length check
+            black_box(unsafe {
+                kernels::sparse_dot_unchecked(idx_bench, val_bench, w10k_ref)
+            });
+        });
+        bench("sparse_dot naive (bounds-checked)", 30, 1.0, || {
+            let mut s = 0.0;
+            for (c, v) in idx_bench.iter().zip(val_bench) {
+                s += v * w10k_ref[*c as usize];
+            }
+            black_box(s);
+        });
+    }
 
     // --- leader-side reduce (w += scale * sum dw) ---
     let dws: Vec<Vec<f64>> = (0..8).map(|s| {

@@ -162,7 +162,10 @@ impl Cluster {
         let mut block_sizes = Vec::with_capacity(k);
 
         for (kid, rows) in partition.blocks.iter().enumerate() {
-            let block = Block { data: data.subset(rows), lambda_n };
+            // subset() compacts the shard to contiguous local-row storage;
+            // Block::new fills the per-shard caches (curvatures, sparse
+            // column-touch set) the inner loop runs on.
+            let block = Block::new(data.subset(rows), lambda_n);
             block_sizes.push(block.n_k());
             let solver_impl: Box<dyn crate::solvers::LocalDualMethod> = match (&backend, &engine)
             {

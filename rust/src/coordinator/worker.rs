@@ -11,6 +11,8 @@ use std::sync::mpsc::{Receiver, Sender};
 
 use super::checkpoint::WorkerState as CheckpointState;
 use super::messages::{EvalReply, LocalWork, RoundReply, ToLeader, ToWorker};
+use crate::data::Features;
+use crate::kernels;
 use crate::loss::Loss;
 use crate::objective;
 use crate::solvers::{Block, ExactBlockSolver, LocalDualMethod, LocalSdca, PegasosEpoch, Sampling};
@@ -129,17 +131,54 @@ pub fn run_worker(cfg: WorkerConfig, rx: Receiver<ToWorker>, tx: Sender<ToLeader
                         let mut dalpha = vec![0.0; n_k];
                         let mut dw = vec![0.0; block.d()];
                         let inv = 1.0 / block.lambda_n;
-                        for &i in picks.iter() {
-                            let q = block.data.features.row_dot(i, &w);
-                            let delta = loss.coord_delta(
-                                q,
-                                block.data.labels[i],
-                                alpha[i],
-                                block.curvature(i),
-                            );
-                            if delta != 0.0 {
-                                dalpha[i] = delta;
-                                block.data.features.add_row_scaled(i, delta * inv, &mut dw);
+                        // monomorphized like the LocalSdca inner loop: one
+                        // row_view per pick, fused kernels, cached
+                        // curvature — same arithmetic, same bits
+                        assert_eq!(w.len(), block.d());
+                        match &block.data.features {
+                            Features::Sparse(m) => {
+                                for &i in picks.iter() {
+                                    let (idx, val) = m.row_view(i);
+                                    // SAFETY: CSR indices < cols ==
+                                    // w.len() == dw.len() (asserted above)
+                                    let q = unsafe {
+                                        kernels::sparse_dot_unchecked(idx, val, &w)
+                                    };
+                                    let delta = loss.coord_delta(
+                                        q,
+                                        block.data.labels[i],
+                                        alpha[i],
+                                        block.curvature(i),
+                                    );
+                                    if delta != 0.0 {
+                                        dalpha[i] = delta;
+                                        // SAFETY: as above.
+                                        unsafe {
+                                            kernels::sparse_axpy_unchecked(
+                                                idx,
+                                                val,
+                                                delta * inv,
+                                                &mut dw,
+                                            )
+                                        };
+                                    }
+                                }
+                            }
+                            Features::Dense(m) => {
+                                for &i in picks.iter() {
+                                    let row = m.row(i);
+                                    let q = kernels::dense_dot(row, &w);
+                                    let delta = loss.coord_delta(
+                                        q,
+                                        block.data.labels[i],
+                                        alpha[i],
+                                        block.curvature(i),
+                                    );
+                                    if delta != 0.0 {
+                                        dalpha[i] = delta;
+                                        kernels::dense_axpy(delta * inv, row, &mut dw);
+                                    }
+                                }
                             }
                         }
                         (dw, b as u64, 0.0, Some(dalpha))

@@ -46,14 +46,11 @@ impl DenseMatrix {
     }
 
     pub fn row_norm_sq(&self, i: usize) -> f64 {
-        let r = self.row(i);
-        dot(r, r)
+        crate::kernels::dense_norm_sq(self.row(i))
     }
 
     pub fn scale_row(&mut self, i: usize, s: f64) {
-        for v in self.row_mut(i) {
-            *v *= s;
-        }
+        crate::kernels::scale_in_place(self.row_mut(i), s);
     }
 
     pub fn subset(&self, idx: &[u32]) -> DenseMatrix {
@@ -70,48 +67,19 @@ impl DenseMatrix {
     }
 }
 
-/// 8-lane blocked dot product. `chunks_exact(8)` gives LLVM a fixed-width
-/// body it fully vectorizes without `-ffast-math`-style reassociation;
-/// measured 1.6x over the naive zip/sum and 2.1x over a 4-accumulator
-/// manual unroll at the d=54 hot shape, 4.1x at d=1024 (EXPERIMENTS.md
-/// section Perf, iteration L3-1).
+/// 8-lane blocked dot product — now a thin re-export of
+/// [`crate::kernels::dense_dot`], which owns the blocked reduction (and
+/// its bit-exactness contract) for every dense hot path.
 #[inline]
 pub fn dot(a: &[f64], b: &[f64]) -> f64 {
-    debug_assert_eq!(a.len(), b.len());
-    let mut acc = [0.0f64; 8];
-    let ca = a.chunks_exact(8);
-    let cb = b.chunks_exact(8);
-    let (ra, rb) = (ca.remainder(), cb.remainder());
-    for (xa, xb) in ca.zip(cb) {
-        for k in 0..8 {
-            acc[k] += xa[k] * xb[k];
-        }
-    }
-    let mut s = ((acc[0] + acc[1]) + (acc[2] + acc[3]))
-        + ((acc[4] + acc[5]) + (acc[6] + acc[7]));
-    for (x, y) in ra.iter().zip(rb) {
-        s += x * y;
-    }
-    s
+    crate::kernels::dense_dot(a, b)
 }
 
-/// `out += coef * a`, blocked like [`dot`] (iteration L3-2: +24% on the
-/// d=54 axpy, neutral at d >= 256 where it is memory-bound).
+/// `out += coef * a`, blocked like [`dot`] — a thin re-export of
+/// [`crate::kernels::dense_axpy`].
 #[inline]
 pub fn axpy(coef: f64, a: &[f64], out: &mut [f64]) {
-    debug_assert_eq!(a.len(), out.len());
-    let ca = a.chunks_exact(8);
-    let ra = ca.remainder();
-    let co = out.chunks_exact_mut(8);
-    for (xo, xa) in co.zip(ca) {
-        for k in 0..8 {
-            xo[k] += coef * xa[k];
-        }
-    }
-    let tail = out.len() - ra.len();
-    for (o, &v) in out[tail..].iter_mut().zip(ra.iter()) {
-        *o += coef * v;
-    }
+    crate::kernels::dense_axpy(coef, a, out)
 }
 
 #[cfg(test)]

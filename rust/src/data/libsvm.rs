@@ -136,8 +136,8 @@ pub fn write_libsvm<P: AsRef<Path>>(ds: &Dataset, path: P) -> Result<()> {
         write!(w, "{}", if ds.labels[i] > 0.0 { "+1" } else { "-1" })?;
         match &ds.features {
             Features::Sparse(m) => {
-                let r = m.row_range(i);
-                for (idx, val) in m.indices[r.clone()].iter().zip(&m.values[r]) {
+                let (indices, values) = m.row_view(i);
+                for (idx, val) in indices.iter().zip(values) {
                     write!(w, " {}:{}", idx + 1, val)?;
                 }
             }
@@ -240,8 +240,7 @@ mod tests {
         // CSR invariant: indices strictly increasing within the row
         match &ds.features {
             crate::data::Features::Sparse(m) => {
-                let r = m.row_range(0);
-                let idx = &m.indices[r];
+                let idx = m.row_view(0).0;
                 assert!(idx.windows(2).all(|p| p[0] < p[1]), "unsorted row: {idx:?}");
             }
             other => panic!("expected sparse features, got {other:?}"),

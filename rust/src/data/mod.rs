@@ -31,14 +31,14 @@ impl Features {
     pub fn rows(&self) -> usize {
         match self {
             Features::Dense(m) => m.rows,
-            Features::Sparse(m) => m.rows,
+            Features::Sparse(m) => m.rows(),
         }
     }
 
     pub fn cols(&self) -> usize {
         match self {
             Features::Dense(m) => m.cols,
-            Features::Sparse(m) => m.cols,
+            Features::Sparse(m) => m.cols(),
         }
     }
 
@@ -46,7 +46,7 @@ impl Features {
     pub fn nnz(&self) -> usize {
         match self {
             Features::Dense(m) => m.data.len(),
-            Features::Sparse(m) => m.values.len(),
+            Features::Sparse(m) => m.nnz(),
         }
     }
 

@@ -1,14 +1,23 @@
 //! CSR sparse feature matrix — the rcv1-regime storage (n >> d, ~0.1% nnz).
 
+use crate::kernels;
+
 /// Compressed sparse row matrix. `indptr` has `rows + 1` entries;
 /// row `i`'s entries live in `indices/values[indptr[i]..indptr[i+1]]`.
+///
+/// The storage fields are private on purpose: every constructor validates
+/// `index < cols`, and nothing can break that afterwards — which is what
+/// lets the row accessors run the *unchecked* gather kernels from
+/// [`crate::kernels`] soundly (no per-element bounds check in the SDCA
+/// inner loop). Read access goes through [`CsrMatrix::row_view`] and
+/// friends.
 #[derive(Debug, Clone, PartialEq)]
 pub struct CsrMatrix {
-    pub rows: usize,
-    pub cols: usize,
-    pub indptr: Vec<usize>,
-    pub indices: Vec<u32>,
-    pub values: Vec<f64>,
+    rows: usize,
+    cols: usize,
+    indptr: Vec<usize>,
+    indices: Vec<u32>,
+    values: Vec<f64>,
 }
 
 impl CsrMatrix {
@@ -37,38 +46,56 @@ impl CsrMatrix {
         CsrMatrix { rows, cols, indptr, indices, values }
     }
 
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    /// Stored entries (the CSR nnz).
+    pub fn nnz(&self) -> usize {
+        self.values.len()
+    }
+
     #[inline]
     pub fn row_range(&self, i: usize) -> std::ops::Range<usize> {
         self.indptr[i]..self.indptr[i + 1]
     }
 
+    /// Row `i` as `(indices, values)` slices — one indptr fetch for both,
+    /// the shape the fused inner-loop kernels consume.
+    #[inline]
+    pub fn row_view(&self, i: usize) -> (&[u32], &[f64]) {
+        let r = self.row_range(i);
+        (&self.indices[r.clone()], &self.values[r])
+    }
+
     #[inline]
     pub fn row_dot(&self, i: usize, w: &[f64]) -> f64 {
-        let r = self.row_range(i);
-        let mut s = 0.0;
-        for (idx, val) in self.indices[r.clone()].iter().zip(&self.values[r]) {
-            s += val * w[*idx as usize];
-        }
-        s
+        assert!(w.len() >= self.cols, "row_dot target shorter than cols");
+        let (idx, val) = self.row_view(i);
+        // SAFETY: constructors validate index < cols, fields are private,
+        // and w.len() >= cols was just checked.
+        unsafe { kernels::sparse_dot_unchecked(idx, val, w) }
     }
 
     #[inline]
     pub fn add_row_scaled(&self, i: usize, coef: f64, out: &mut [f64]) {
-        let r = self.row_range(i);
-        for (idx, val) in self.indices[r.clone()].iter().zip(&self.values[r]) {
-            out[*idx as usize] += coef * val;
-        }
+        assert!(out.len() >= self.cols, "add_row_scaled target shorter than cols");
+        let (idx, val) = self.row_view(i);
+        // SAFETY: as in `row_dot` — index < cols <= out.len().
+        unsafe { kernels::sparse_axpy_unchecked(idx, val, coef, out) }
     }
 
     pub fn row_norm_sq(&self, i: usize) -> f64 {
-        self.values[self.row_range(i)].iter().map(|v| v * v).sum()
+        kernels::sparse_norm_sq(&self.values[self.row_range(i)])
     }
 
     pub fn scale_row(&mut self, i: usize, s: f64) {
         let r = self.row_range(i);
-        for v in &mut self.values[r] {
-            *v *= s;
-        }
+        kernels::scale_in_place(&mut self.values[r], s);
     }
 
     pub fn row_nnz(&self, i: usize) -> usize {
@@ -90,13 +117,32 @@ impl CsrMatrix {
         CsrMatrix { rows: idx.len(), cols: self.cols, indptr, indices, values }
     }
 
+    /// Sorted unique columns with at least one stored entry — the shard's
+    /// column-touch set. A worker's local updates can only move `w` on
+    /// these columns, so the inner loop's delta extraction walks this set
+    /// instead of all `cols` (rcv1-regime shards touch a fraction of the
+    /// feature space).
+    pub fn touched_cols(&self) -> Vec<u32> {
+        let mut seen = vec![false; self.cols];
+        for &c in &self.indices {
+            seen[c as usize] = true;
+        }
+        let mut cols: Vec<u32> = Vec::new();
+        for (c, hit) in seen.iter().enumerate() {
+            if *hit {
+                cols.push(c as u32);
+            }
+        }
+        cols
+    }
+
     /// Dense expansion (tests / PJRT marshalling of small blocks only).
     pub fn to_dense(&self) -> super::DenseMatrix {
         let mut m = super::DenseMatrix::zeros(self.rows, self.cols);
         for i in 0..self.rows {
-            let r = self.row_range(i);
-            for (idx, val) in self.indices[r.clone()].iter().zip(&self.values[r]) {
-                m.row_mut(i)[*idx as usize] = *val;
+            let (idx, val) = self.row_view(i);
+            for (c, v) in idx.iter().zip(val) {
+                m.row_mut(i)[*c as usize] = *v;
             }
         }
         m
@@ -135,8 +181,8 @@ mod tests {
     #[test]
     fn triplets_sorted_within_row() {
         let m = CsrMatrix::from_triplets(1, 3, &[(0, 2, 1.0), (0, 0, 2.0)]);
-        assert_eq!(m.indices, vec![0, 2]);
-        assert_eq!(m.values, vec![2.0, 1.0]);
+        assert_eq!(m.row_view(0).0, &[0, 2]);
+        assert_eq!(m.row_view(0).1, &[2.0, 1.0]);
     }
 
     #[test]
@@ -153,5 +199,26 @@ mod tests {
         let m = sample();
         assert!((m.row_norm_sq(0) - 5.0).abs() < 1e-12);
         assert_eq!(m.row_norm_sq(1), 0.0);
+    }
+
+    #[test]
+    fn touched_cols_is_the_sorted_union() {
+        let m = sample();
+        assert_eq!(m.touched_cols(), vec![0, 1, 2, 3]);
+        let s = m.subset(&[0, 1]); // rows 0 (cols 1, 3) and 1 (empty)
+        assert_eq!(s.touched_cols(), vec![1, 3]);
+        let empty = CsrMatrix::from_triplets(2, 5, &[]);
+        assert!(empty.touched_cols().is_empty());
+    }
+
+    #[test]
+    fn row_view_matches_ranges() {
+        let m = sample();
+        let (idx, val) = m.row_view(0);
+        assert_eq!(idx, &[1, 3]);
+        assert_eq!(val, &[2.0, 1.0]);
+        assert_eq!(m.row_view(1).0.len(), 0);
+        assert_eq!(m.nnz(), 4);
+        assert_eq!((m.rows(), m.cols()), (3, 4));
     }
 }

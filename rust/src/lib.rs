@@ -118,9 +118,21 @@
 //!   map, and strong-convexity constant. Choosing L1 makes the broadcast
 //!   `w` sparse, which the counted transport's adaptive encoding turns
 //!   into measurably smaller wire bytes.
+//! * [`kernels`] — the fused scalar kernels under every solver hot path:
+//!   sparse/dense dot, axpy, scaled update, and nnz-aware norms, each with
+//!   a documented (and property-tested) bit-exact accumulation order. The
+//!   sparse gather kernels skip per-element bounds checks soundly — the
+//!   CSR type owns the index invariant.
 //! * [`solvers`] — `LOCALDUALMETHOD` implementations (Procedure A): the
 //!   paper's LocalSDCA (Procedure B), a permuted-order variant, and the
-//!   exact block solver that realizes the `H -> inf` limit.
+//!   exact block solver that realizes the `H -> inf` limit. Worker
+//!   [`solvers::Block`]s carry per-shard caches (precomputed curvatures,
+//!   the sparse column-touch set) so inner loops never recompute them.
+//! * [`perf`] — the reproducible performance harness behind `cocoa perf`:
+//!   standardized workloads (dense ridge, rcv1-density sparse logistic,
+//!   smoothed-L1 lasso, each at K ∈ {1, 4}) emitting a schema-versioned
+//!   `BENCH_hotpath.json` (steps/sec, time-to-1e-3-gap, wire bytes, peak
+//!   RSS) that CI validates as a smoke gate.
 //! * [`coordinator`] — Algorithm 1 as a leader/worker runtime: real worker
 //!   threads owning disjoint data + dual blocks, message-passing rounds,
 //!   exact communication accounting.
@@ -151,9 +163,11 @@ pub mod util;
 pub mod coordinator;
 pub mod data;
 pub mod experiments;
+pub mod kernels;
 pub mod loss;
 pub mod netsim;
 pub mod objective;
+pub mod perf;
 pub mod regularizers;
 pub mod runtime;
 pub mod solvers;

@@ -4,6 +4,7 @@
 //!   train --config <toml> [--out <csv>] [--p-star <f64>]
 //!   repro <table1|fig1|fig2|fig3|fig4|headline|sparsity|theory|all>
 //!         [--smoke] [--results-dir <dir>] [--rounds <n>]
+//!   perf [--smoke] [--out <json>] [--seed <n>] | perf --validate <json>
 //!   optimum --config <toml>
 //!   gen-data <cov|rcv1|imagenet> --n <n> --d <d> [--seed <s>] --out <path>
 //!
@@ -17,6 +18,7 @@ use cocoa::config::ExperimentConfig;
 use cocoa::data;
 use cocoa::experiments::{self, figures, theory_val, Profile};
 use cocoa::objective;
+use cocoa::perf::{self, PerfProfile};
 use cocoa::regularizers::Regularizer;
 
 /// Tiny argv helper: `--key value` options + positionals.
@@ -64,6 +66,8 @@ cocoa — communication-efficient distributed dual coordinate ascent (NIPS 2014 
 USAGE:
   cocoa train --config <toml> [--out <csv>] [--p-star <f64>]
   cocoa repro <table1|fig1|fig2|fig3|fig4|headline|sparsity|theory|all> [--smoke] [--results-dir <dir>] [--rounds <n>]
+  cocoa perf [--smoke] [--out <json>] [--seed <n>]
+  cocoa perf --validate <json>
   cocoa optimum --config <toml>
   cocoa gen-data <cov|rcv1|imagenet> --n <n> --d <d> [--seed <s>] --out <path>
 ";
@@ -90,6 +94,20 @@ fn main() -> Result<()> {
                 if args.flags.contains("smoke") { Profile::Smoke } else { Profile::Paper };
             let rounds = args.opt("rounds").map(|s| s.parse()).transpose()?;
             repro(target, profile, args.opt("results-dir").unwrap_or("results"), rounds)
+        }
+        "perf" => {
+            let args = Args::parse(&argv[1..], &["smoke"])?;
+            if let Some(path) = args.opt("validate") {
+                return perf_validate(path);
+            }
+            let profile =
+                if args.flags.contains("smoke") { PerfProfile::Smoke } else { PerfProfile::Full };
+            let seed = args.opt("seed").map(|s| s.parse()).transpose()?.unwrap_or(42);
+            perf_run(
+                profile,
+                seed,
+                args.opt("out").unwrap_or("BENCH_hotpath.json"),
+            )
         }
         "optimum" => {
             let args = Args::parse(&argv[1..], &[])?;
@@ -359,6 +377,48 @@ fn default_rounds(profile: Profile) -> u64 {
         Profile::Smoke => 150,
         Profile::Paper => 60,
     }
+}
+
+fn perf_run(profile: PerfProfile, seed: u64, out: &str) -> Result<()> {
+    eprintln!(
+        "perf: profile {} seed {seed} -> {out} (3 workload families x K in {{1, 4}})",
+        profile.as_str()
+    );
+    let report = perf::run_all(profile, seed)?;
+    println!(
+        "{:<24} {:>3} {:>9} {:>9} {:>13} {:>12} {:>14} {:>12}",
+        "workload", "K", "n", "d", "steps/s", "final gap", "t(gap 1e-3) s", "wire bytes"
+    );
+    for w in &report.workloads {
+        println!(
+            "{:<24} {:>3} {:>9} {:>9} {:>13.0} {:>12.2e} {:>14} {:>12}",
+            w.name,
+            w.k,
+            w.n,
+            w.d,
+            w.steps_per_sec,
+            w.final_gap,
+            w.time_to_gap_1e3_s
+                .map(|t| format!("{t:.3}"))
+                .unwrap_or("-".into()),
+            w.bytes_measured,
+        );
+    }
+    if let Some(rss) = report.peak_rss_bytes {
+        println!("peak RSS: {:.1} MiB", rss as f64 / (1024.0 * 1024.0));
+    }
+    report.write(out)?;
+    // self-validate: the file CI uploads must always pass the same gate
+    // CI runs, so a schema regression fails here first
+    perf::validate_file(std::path::Path::new(out)).map_err(|e| anyhow!("{e}"))?;
+    eprintln!("report -> {out} (schema v{} validated)", perf::SCHEMA_VERSION);
+    Ok(())
+}
+
+fn perf_validate(path: &str) -> Result<()> {
+    perf::validate_file(std::path::Path::new(path)).map_err(|e| anyhow!("{e}"))?;
+    println!("{path}: valid BENCH schema v{}", perf::SCHEMA_VERSION);
+    Ok(())
 }
 
 fn optimum(config_path: &str) -> Result<()> {

@@ -71,7 +71,7 @@ pub fn compute_optimum(
     use crate::solvers::{Block, ExactBlockSolver, LocalDualMethod};
 
     let n = data.n();
-    let block = Block { data: data.clone(), lambda_n: lambda * n as f64 };
+    let block = Block::new(data.clone(), lambda * n as f64);
     let solver = ExactBlockSolver { tol: 0.0, max_passes: 1 };
     let mut alpha = vec![0.0; n];
     let mut w = vec![0.0; data.d()];
@@ -261,7 +261,7 @@ pub fn compute_optimum_reg(
 
     let n = data.n();
     let lambda_eff = lambda * reg.strong_convexity();
-    let block = Block { data: data.clone(), lambda_n: lambda_eff * n as f64 };
+    let block = Block::new(data.clone(), lambda_eff * n as f64);
     let solver = ExactBlockSolver { tol: 0.0, max_passes: 1 };
     let mut alpha = vec![0.0; n];
     let mut v = vec![0.0; data.d()];
@@ -491,7 +491,7 @@ mod local_gap_tests {
         let n = 30;
         let lambda = 0.1;
         let loss = SmoothedHinge::new(0.5);
-        let block = Block { data: data.clone(), lambda_n: lambda * n as f64 };
+        let block = Block::new(data.clone(), lambda * n as f64);
         let solver = ExactBlockSolver { tol: 1e-12, max_passes: 3000 };
         let mut rng = Rng::seed_from_u64(33);
         let up = solver.local_update(

@@ -1,0 +1,22 @@
+//! Reproducible performance harness — `cocoa perf`.
+//!
+//! The repo's north star says "as fast as the hardware allows"; this
+//! module is how that claim becomes a measured trajectory instead of a
+//! slogan. [`run_all`] executes standardized workloads (dense ridge,
+//! rcv1-density sparse logistic, smoothed-L1 lasso, each at K ∈ {1, 4})
+//! and emits a schema-versioned `BENCH_hotpath.json`: steps/sec,
+//! simulated time to a 1e-3 duality gap, byte-exact wire bytes, and peak
+//! RSS.
+//!
+//! CI consumes the `--smoke` profile as a *structural* gate: the
+//! [`schema`] validator checks that every field is present, every number
+//! finite, and cumulative round times monotone — never that a timing beat
+//! a threshold (shared CI runners make timing gates flaky; trajectories
+//! are compared across commits by humans and tooling reading the uploaded
+//! artifacts instead).
+
+pub mod schema;
+mod workloads;
+
+pub use schema::{parse, validate, validate_file, validate_str, Json, SchemaError};
+pub use workloads::{run_all, BenchReport, PerfProfile, WorkloadReport, SCHEMA_VERSION};

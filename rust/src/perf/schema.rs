@@ -1,0 +1,470 @@
+//! Schema validation for `BENCH_*.json` — the contract CI's perf smoke
+//! gate enforces (fields present, numbers finite, round times monotone)
+//! without ever timing-gating.
+//!
+//! The offline build carries no serde, so this module ships a minimal
+//! recursive-descent JSON parser (objects, arrays, strings, numbers,
+//! bools, null — everything the bench report emits) plus the validator
+//! over the parsed tree.
+
+use std::fmt;
+
+use super::SCHEMA_VERSION;
+
+/// A parsed JSON value (order-preserving objects).
+#[derive(Debug, Clone, PartialEq)]
+pub enum Json {
+    Null,
+    Bool(bool),
+    Num(f64),
+    Str(String),
+    Arr(Vec<Json>),
+    Obj(Vec<(String, Json)>),
+}
+
+impl Json {
+    /// Object field lookup (first occurrence).
+    pub fn get(&self, key: &str) -> Option<&Json> {
+        match self {
+            Json::Obj(fields) => fields.iter().find(|(k, _)| k == key).map(|(_, v)| v),
+            _ => None,
+        }
+    }
+
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            Json::Num(v) => Some(*v),
+            _ => None,
+        }
+    }
+
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Json::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn as_arr(&self) -> Option<&[Json]> {
+        match self {
+            Json::Arr(items) => Some(items),
+            _ => None,
+        }
+    }
+}
+
+/// Why a bench report failed to parse or validate.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SchemaError {
+    pub message: String,
+}
+
+impl fmt::Display for SchemaError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "bench schema: {}", self.message)
+    }
+}
+
+impl std::error::Error for SchemaError {}
+
+fn err<T>(message: impl Into<String>) -> Result<T, SchemaError> {
+    Err(SchemaError { message: message.into() })
+}
+
+// ---------------------------------------------------------------------------
+// Parser
+// ---------------------------------------------------------------------------
+
+struct Parser<'a> {
+    bytes: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Parser<'a> {
+    fn skip_ws(&mut self) {
+        while let Some(&b) = self.bytes.get(self.pos) {
+            if b == b' ' || b == b'\t' || b == b'\n' || b == b'\r' {
+                self.pos += 1;
+            } else {
+                break;
+            }
+        }
+    }
+
+    fn peek(&self) -> Option<u8> {
+        self.bytes.get(self.pos).copied()
+    }
+
+    fn expect(&mut self, b: u8) -> Result<(), SchemaError> {
+        if self.peek() == Some(b) {
+            self.pos += 1;
+            Ok(())
+        } else {
+            err(format!(
+                "expected '{}' at byte {}, found {:?}",
+                b as char,
+                self.pos,
+                self.peek().map(|c| c as char)
+            ))
+        }
+    }
+
+    fn value(&mut self) -> Result<Json, SchemaError> {
+        self.skip_ws();
+        match self.peek() {
+            Some(b'{') => self.object(),
+            Some(b'[') => self.array(),
+            Some(b'"') => Ok(Json::Str(self.string()?)),
+            Some(b't') => self.literal("true", Json::Bool(true)),
+            Some(b'f') => self.literal("false", Json::Bool(false)),
+            Some(b'n') => self.literal("null", Json::Null),
+            Some(c) if c == b'-' || c.is_ascii_digit() => self.number(),
+            other => err(format!("unexpected {:?} at byte {}", other.map(|c| c as char), self.pos)),
+        }
+    }
+
+    fn literal(&mut self, word: &str, value: Json) -> Result<Json, SchemaError> {
+        if self.bytes[self.pos..].starts_with(word.as_bytes()) {
+            self.pos += word.len();
+            Ok(value)
+        } else {
+            err(format!("bad literal at byte {}", self.pos))
+        }
+    }
+
+    fn number(&mut self) -> Result<Json, SchemaError> {
+        let start = self.pos;
+        while let Some(b) = self.peek() {
+            if b.is_ascii_digit() || matches!(b, b'-' | b'+' | b'.' | b'e' | b'E') {
+                self.pos += 1;
+            } else {
+                break;
+            }
+        }
+        let text = std::str::from_utf8(&self.bytes[start..self.pos])
+            .map_err(|_| SchemaError { message: "non-utf8 number".into() })?;
+        match text.parse::<f64>() {
+            Ok(v) => Ok(Json::Num(v)),
+            Err(_) => err(format!("bad number {text:?} at byte {start}")),
+        }
+    }
+
+    fn string(&mut self) -> Result<String, SchemaError> {
+        self.expect(b'"')?;
+        let mut out = String::new();
+        loop {
+            match self.peek() {
+                None => return err("unterminated string"),
+                Some(b'"') => {
+                    self.pos += 1;
+                    return Ok(out);
+                }
+                Some(b'\\') => {
+                    self.pos += 1;
+                    match self.peek() {
+                        Some(b'"') => out.push('"'),
+                        Some(b'\\') => out.push('\\'),
+                        Some(b'/') => out.push('/'),
+                        Some(b'n') => out.push('\n'),
+                        Some(b't') => out.push('\t'),
+                        Some(b'r') => out.push('\r'),
+                        Some(b'b') => out.push('\u{8}'),
+                        Some(b'f') => out.push('\u{c}'),
+                        Some(b'u') => {
+                            if self.pos + 4 >= self.bytes.len() {
+                                return err("truncated \\u escape");
+                            }
+                            let hex =
+                                std::str::from_utf8(&self.bytes[self.pos + 1..self.pos + 5])
+                                    .map_err(|_| SchemaError {
+                                        message: "non-utf8 \\u escape".into(),
+                                    })?;
+                            let code = u32::from_str_radix(hex, 16)
+                                .map_err(|_| SchemaError { message: "bad \\u escape".into() })?;
+                            // surrogate pairs unsupported (the report never emits them)
+                            out.push(char::from_u32(code).unwrap_or('\u{fffd}'));
+                            self.pos += 4;
+                        }
+                        other => {
+                            return err(format!("bad escape {:?}", other.map(|c| c as char)))
+                        }
+                    }
+                    self.pos += 1;
+                }
+                Some(_) => {
+                    // copy a run of plain bytes (UTF-8 passes through intact)
+                    let start = self.pos;
+                    while let Some(b) = self.peek() {
+                        if b == b'"' || b == b'\\' {
+                            break;
+                        }
+                        self.pos += 1;
+                    }
+                    out.push_str(
+                        std::str::from_utf8(&self.bytes[start..self.pos])
+                            .map_err(|_| SchemaError { message: "non-utf8 string".into() })?,
+                    );
+                }
+            }
+        }
+    }
+
+    fn array(&mut self) -> Result<Json, SchemaError> {
+        self.expect(b'[')?;
+        let mut items = Vec::new();
+        self.skip_ws();
+        if self.peek() == Some(b']') {
+            self.pos += 1;
+            return Ok(Json::Arr(items));
+        }
+        loop {
+            items.push(self.value()?);
+            self.skip_ws();
+            match self.peek() {
+                Some(b',') => {
+                    self.pos += 1;
+                }
+                Some(b']') => {
+                    self.pos += 1;
+                    return Ok(Json::Arr(items));
+                }
+                other => {
+                    return err(format!(
+                        "expected ',' or ']' at byte {}, found {:?}",
+                        self.pos,
+                        other.map(|c| c as char)
+                    ))
+                }
+            }
+        }
+    }
+
+    fn object(&mut self) -> Result<Json, SchemaError> {
+        self.expect(b'{')?;
+        let mut fields = Vec::new();
+        self.skip_ws();
+        if self.peek() == Some(b'}') {
+            self.pos += 1;
+            return Ok(Json::Obj(fields));
+        }
+        loop {
+            self.skip_ws();
+            let key = self.string()?;
+            self.skip_ws();
+            self.expect(b':')?;
+            let value = self.value()?;
+            fields.push((key, value));
+            self.skip_ws();
+            match self.peek() {
+                Some(b',') => {
+                    self.pos += 1;
+                }
+                Some(b'}') => {
+                    self.pos += 1;
+                    return Ok(Json::Obj(fields));
+                }
+                other => {
+                    return err(format!(
+                        "expected ',' or '}}' at byte {}, found {:?}",
+                        self.pos,
+                        other.map(|c| c as char)
+                    ))
+                }
+            }
+        }
+    }
+}
+
+/// Parse a JSON document (trailing whitespace allowed, nothing else).
+pub fn parse(text: &str) -> Result<Json, SchemaError> {
+    let mut p = Parser { bytes: text.as_bytes(), pos: 0 };
+    let v = p.value()?;
+    p.skip_ws();
+    if p.pos != p.bytes.len() {
+        return err(format!("trailing garbage at byte {}", p.pos));
+    }
+    Ok(v)
+}
+
+// ---------------------------------------------------------------------------
+// Validator
+// ---------------------------------------------------------------------------
+
+fn finite_num(doc: &Json, ctx: &str, key: &str) -> Result<f64, SchemaError> {
+    match doc.get(key) {
+        Some(Json::Num(v)) if v.is_finite() => Ok(*v),
+        Some(Json::Num(v)) => err(format!("{ctx}: field {key:?} is not finite ({v})")),
+        Some(_) => err(format!("{ctx}: field {key:?} is not a number")),
+        None => err(format!("{ctx}: missing field {key:?}")),
+    }
+}
+
+/// A finite number or an explicit null (targets that were never reached,
+/// platforms without procfs).
+fn finite_num_or_null(doc: &Json, ctx: &str, key: &str) -> Result<Option<f64>, SchemaError> {
+    match doc.get(key) {
+        Some(Json::Null) => Ok(None),
+        _ => finite_num(doc, ctx, key).map(Some),
+    }
+}
+
+/// Validate a bench report document against the `BENCH_*.json` schema.
+/// Structural only: presence, types, finiteness, non-negativity where it
+/// is meaningful, and monotone cumulative round times. Never compares
+/// timings against thresholds — CI machines are too noisy for that.
+pub fn validate(doc: &Json) -> Result<(), SchemaError> {
+    let version = finite_num(doc, "report", "schema_version")?;
+    if version != SCHEMA_VERSION as f64 {
+        return err(format!(
+            "schema_version {version} != supported {SCHEMA_VERSION}"
+        ));
+    }
+    match doc.get("profile").and_then(Json::as_str) {
+        Some("smoke") | Some("full") => {}
+        Some(other) => return err(format!("unknown profile {other:?}")),
+        None => return err("missing string field \"profile\""),
+    }
+    finite_num(doc, "report", "seed")?;
+    finite_num_or_null(doc, "report", "peak_rss_bytes")?;
+
+    let workloads = match doc.get("workloads").and_then(Json::as_arr) {
+        Some(w) if !w.is_empty() => w,
+        Some(_) => return err("workloads array is empty"),
+        None => return err("missing array field \"workloads\""),
+    };
+    for wl in workloads {
+        let name = wl
+            .get("name")
+            .and_then(Json::as_str)
+            .ok_or_else(|| SchemaError { message: "workload missing \"name\"".into() })?
+            .to_string();
+        let ctx = format!("workload {name:?}");
+        for key in ["k", "n", "d", "rounds"] {
+            let v = finite_num(wl, &ctx, key)?;
+            if v < 1.0 {
+                return err(format!("{ctx}: {key} = {v} < 1"));
+            }
+        }
+        let density = finite_num(wl, &ctx, "density")?;
+        if !(0.0..=1.0).contains(&density) {
+            return err(format!("{ctx}: density {density} outside [0, 1]"));
+        }
+        for key in ["inner_steps", "wall_s", "steps_per_sec", "bytes_measured"] {
+            let v = finite_num(wl, &ctx, key)?;
+            if v < 0.0 {
+                return err(format!("{ctx}: {key} = {v} < 0"));
+            }
+        }
+        finite_num(wl, &ctx, "final_gap")?;
+        if let Some(t) = finite_num_or_null(wl, &ctx, "time_to_gap_1e3_s")? {
+            if t < 0.0 {
+                return err(format!("{ctx}: time_to_gap_1e3_s = {t} < 0"));
+            }
+        }
+        let times = wl
+            .get("round_sim_time_s")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| SchemaError {
+                message: format!("{ctx}: missing array \"round_sim_time_s\""),
+            })?;
+        if times.is_empty() {
+            // the writer records at least round 0 — an empty trajectory
+            // means the trace path broke, which is exactly what this gate
+            // exists to catch
+            return err(format!("{ctx}: round_sim_time_s is empty"));
+        }
+        let mut prev = f64::NEG_INFINITY;
+        for (i, t) in times.iter().enumerate() {
+            let v = match t.as_f64() {
+                Some(v) if v.is_finite() => v,
+                _ => return err(format!("{ctx}: round_sim_time_s[{i}] not a finite number")),
+            };
+            if v < prev {
+                return err(format!(
+                    "{ctx}: round_sim_time_s not monotone at index {i} ({prev} -> {v})"
+                ));
+            }
+            prev = v;
+        }
+    }
+    Ok(())
+}
+
+/// Parse + validate a report string.
+pub fn validate_str(text: &str) -> Result<(), SchemaError> {
+    validate(&parse(text)?)
+}
+
+/// Parse + validate a report file.
+pub fn validate_file(path: &std::path::Path) -> Result<(), SchemaError> {
+    let text = std::fs::read_to_string(path).map_err(|e| SchemaError {
+        message: format!("read {}: {e}", path.display()),
+    })?;
+    validate_str(&text)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parser_roundtrips_basic_values() {
+        let doc = parse(r#"{"a": 1.5, "b": [1, 2, null], "c": "x\ny", "d": true}"#).unwrap();
+        assert_eq!(doc.get("a").unwrap().as_f64(), Some(1.5));
+        assert_eq!(doc.get("b").unwrap().as_arr().unwrap().len(), 3);
+        assert_eq!(doc.get("c").unwrap().as_str(), Some("x\ny"));
+        assert_eq!(doc.get("d"), Some(&Json::Bool(true)));
+        assert!(parse("{\"a\": }").is_err());
+        assert!(parse("[1, 2").is_err());
+        assert!(parse("{} trailing").is_err());
+    }
+
+    fn minimal_workload(extra: &str, times: &str) -> String {
+        format!(
+            r#"{{"schema_version": 1, "profile": "smoke", "seed": 7,
+                "peak_rss_bytes": 1048576,
+                "workloads": [{{"name": "w", "k": 1, "n": 10, "d": 2,
+                  "density": 1.0, "rounds": 3, "inner_steps": 30,
+                  "wall_s": 0.01, "steps_per_sec": 3000.0,
+                  "final_gap": 0.5, "time_to_gap_1e3_s": null,
+                  "bytes_measured": 128,
+                  "round_sim_time_s": {times}{extra}}}]}}"#
+        )
+    }
+
+    #[test]
+    fn validator_accepts_a_wellformed_report() {
+        validate_str(&minimal_workload("", "[0.0, 0.1, 0.1, 0.4]")).unwrap();
+    }
+
+    #[test]
+    fn validator_rejects_non_monotone_round_times() {
+        let e = validate_str(&minimal_workload("", "[0.0, 0.5, 0.2]")).unwrap_err();
+        assert!(e.message.contains("not monotone"), "{e}");
+    }
+
+    #[test]
+    fn validator_rejects_empty_round_times() {
+        let e = validate_str(&minimal_workload("", "[]")).unwrap_err();
+        assert!(e.message.contains("empty"), "{e}");
+    }
+
+    #[test]
+    fn validator_rejects_missing_fields_and_bad_version() {
+        let doc = minimal_workload("", "[0.0]").replace("\"schema_version\": 1", "\"schema_version\": 99");
+        assert!(validate_str(&doc).unwrap_err().message.contains("schema_version"));
+        let doc = minimal_workload("", "[0.0]").replace("\"steps_per_sec\": 3000.0,", "");
+        assert!(validate_str(&doc)
+            .unwrap_err()
+            .message
+            .contains("steps_per_sec"));
+    }
+
+    #[test]
+    fn validator_rejects_non_finite_numbers() {
+        // 1e999 overflows to inf when parsed — must be rejected, JSON has
+        // no way to express it intentionally
+        let doc = minimal_workload("", "[0.0]").replace("\"wall_s\": 0.01", "\"wall_s\": 1e999");
+        assert!(validate_str(&doc).unwrap_err().message.contains("wall_s"));
+    }
+}

@@ -1,0 +1,299 @@
+//! The standardized perf workloads behind `cocoa perf` — the repo's first
+//! reproducible performance trajectory.
+//!
+//! Three workload families, each matched to a regime the paper's
+//! experiments exercise, each run at K ∈ {1, 4}:
+//!
+//! * `dense_ridge` — cov-regime dense features, squared loss, L2 (the
+//!   dense dot/axpy hot path);
+//! * `sparse_logistic` — rcv1-regime CSR features at text-corpus density,
+//!   logistic loss, L2 (the sparse gather/scatter hot path);
+//! * `lasso_smoothed_l1` — squared loss with the ε-smoothed L1
+//!   regularizer (the leader-side prox path and the sparse broadcast
+//!   encoding).
+//!
+//! Every run uses the byte-exact counted transport and the ec2-like
+//! network model, so `bytes_measured` and the simulated time axis are
+//! populated. The report is written as schema-versioned JSON
+//! (`BENCH_hotpath.json`) and validated by [`super::schema`]; CI runs the
+//! `--smoke` profile as a structural gate without ever comparing timings.
+
+use std::io::Write;
+use std::path::Path;
+use std::time::Instant;
+
+use crate::algorithms::{Budget, Cocoa};
+use crate::data::{cov_like, rcv1_like, Dataset};
+use crate::loss::LossKind;
+use crate::netsim::NetworkModel;
+use crate::regularizers::RegularizerKind;
+use crate::telemetry::{json_f64, peak_rss_bytes};
+use crate::transport::TransportKind;
+use crate::Trainer;
+
+/// Version of the `BENCH_*.json` layout. Bump on any breaking change to
+/// field names or meanings; the validator rejects mismatches.
+pub const SCHEMA_VERSION: u32 = 1;
+
+/// Problem sizes: tiny (CI smoke) or benchmark-scale.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PerfProfile {
+    /// Seconds-scale total: structural gate for CI.
+    Smoke,
+    /// The real trajectory numbers.
+    Full,
+}
+
+impl PerfProfile {
+    pub fn as_str(self) -> &'static str {
+        match self {
+            PerfProfile::Smoke => "smoke",
+            PerfProfile::Full => "full",
+        }
+    }
+}
+
+/// One workload's measurements.
+#[derive(Debug, Clone)]
+pub struct WorkloadReport {
+    pub name: String,
+    pub k: usize,
+    pub n: usize,
+    pub d: usize,
+    pub density: f64,
+    /// Outer rounds actually run.
+    pub rounds: u64,
+    /// Inner (coordinate) steps summed over workers.
+    pub inner_steps: u64,
+    /// Wall-clock seconds for the whole run (excludes session build).
+    pub wall_s: f64,
+    /// `inner_steps / wall_s` — the headline hot-path throughput.
+    pub steps_per_sec: f64,
+    /// Duality gap at the final evaluated round.
+    pub final_gap: f64,
+    /// Simulated seconds to reach gap <= 1e-3 (None if never reached).
+    pub time_to_gap_1e3_s: Option<f64>,
+    /// Byte-exact wire bytes (counted transport).
+    pub bytes_measured: u64,
+    /// Cumulative simulated time at each evaluated round (monotone).
+    pub round_sim_time_s: Vec<f64>,
+}
+
+/// The full bench report serialized to `BENCH_*.json`.
+#[derive(Debug, Clone)]
+pub struct BenchReport {
+    pub schema_version: u32,
+    pub profile: PerfProfile,
+    pub seed: u64,
+    pub peak_rss_bytes: Option<u64>,
+    pub workloads: Vec<WorkloadReport>,
+}
+
+struct WorkloadSpec {
+    name: &'static str,
+    k: usize,
+    data: Dataset,
+    loss: LossKind,
+    lambda: f64,
+    regularizer: RegularizerKind,
+    max_rounds: u64,
+}
+
+fn specs(profile: PerfProfile, seed: u64) -> Vec<WorkloadSpec> {
+    // (n, d) per family; smoke shapes keep the whole suite in seconds
+    let (ridge_n, ridge_d, sparse_n, sparse_d, sparse_nnz, lasso_n, lasso_d, cap) =
+        match profile {
+            PerfProfile::Smoke => (600, 24, 800, 2_000, 10, 400, 16, 20),
+            PerfProfile::Full => (20_000, 54, 40_000, 20_000, 12, 4_000, 100, 200),
+        };
+    let mut specs = Vec::new();
+    for k in [1usize, 4] {
+        specs.push(WorkloadSpec {
+            name: "dense_ridge",
+            k,
+            data: cov_like(ridge_n, ridge_d, 0.1, seed ^ 0xd0),
+            loss: LossKind::Squared,
+            lambda: 1.0 / ridge_n as f64,
+            regularizer: RegularizerKind::L2,
+            max_rounds: cap,
+        });
+        specs.push(WorkloadSpec {
+            name: "sparse_logistic",
+            k,
+            data: rcv1_like(sparse_n, sparse_d, sparse_nnz, 0.1, seed ^ 0x5b),
+            loss: LossKind::Logistic,
+            lambda: 1.0 / sparse_n as f64,
+            regularizer: RegularizerKind::L2,
+            max_rounds: cap,
+        });
+        specs.push(WorkloadSpec {
+            name: "lasso_smoothed_l1",
+            k,
+            data: cov_like(lasso_n, lasso_d, 0.1, seed ^ 0x11),
+            loss: LossKind::Squared,
+            lambda: 0.05,
+            regularizer: RegularizerKind::L1 { epsilon: 0.5 },
+            max_rounds: cap,
+        });
+    }
+    specs
+}
+
+/// Run every workload and assemble the report.
+pub fn run_all(profile: PerfProfile, seed: u64) -> crate::Result<BenchReport> {
+    let mut workloads = Vec::new();
+    for spec in specs(profile, seed) {
+        let n = spec.data.n();
+        let d = spec.data.d();
+        let density = spec.data.density();
+        let h = (n / spec.k).max(1);
+        let mut session = Trainer::on(&spec.data)
+            .workers(spec.k)
+            .loss(spec.loss)
+            .lambda(spec.lambda)
+            .regularizer(spec.regularizer)
+            .network(NetworkModel::ec2_like())
+            .transport(TransportKind::Counted)
+            .seed(seed)
+            .label(spec.name)
+            .build()?;
+        let budget = Budget::until_gap(1e-3).max_rounds(spec.max_rounds);
+        let t0 = Instant::now();
+        let trace = session.run(&mut Cocoa::new(h), budget)?;
+        let wall_s = t0.elapsed().as_secs_f64();
+        let stats = *session.stats();
+        session.shutdown();
+
+        let last = trace.rows.last().expect("at least round 0 recorded");
+        workloads.push(WorkloadReport {
+            name: format!("{}_k{}", spec.name, spec.k),
+            k: spec.k,
+            n,
+            d,
+            density,
+            rounds: stats.rounds.max(1),
+            inner_steps: stats.inner_steps,
+            wall_s,
+            steps_per_sec: stats.inner_steps as f64 / wall_s.max(1e-9),
+            final_gap: last.gap,
+            time_to_gap_1e3_s: trace.time_to_gap(1e-3),
+            bytes_measured: last.bytes_measured,
+            round_sim_time_s: trace.rows.iter().map(|r| r.sim_time_s).collect(),
+        });
+    }
+    Ok(BenchReport {
+        schema_version: SCHEMA_VERSION,
+        profile,
+        seed,
+        peak_rss_bytes: peak_rss_bytes(),
+        workloads,
+    })
+}
+
+impl BenchReport {
+    /// Hand-rolled JSON (offline build: no serde), the exact layout
+    /// [`super::schema::validate`] checks.
+    pub fn to_json_string(&self) -> String {
+        let mut s = String::new();
+        s.push_str("{\n");
+        s.push_str(&format!("  \"schema_version\": {},\n", self.schema_version));
+        s.push_str(&format!("  \"profile\": \"{}\",\n", self.profile.as_str()));
+        s.push_str(&format!("  \"seed\": {},\n", self.seed));
+        s.push_str(&format!(
+            "  \"peak_rss_bytes\": {},\n",
+            self.peak_rss_bytes.map_or("null".to_string(), |v| v.to_string())
+        ));
+        s.push_str("  \"workloads\": [\n");
+        for (i, w) in self.workloads.iter().enumerate() {
+            let times: Vec<String> = w.round_sim_time_s.iter().map(|t| json_f64(*t)).collect();
+            s.push_str(&format!(
+                "    {{\"name\": \"{}\", \"k\": {}, \"n\": {}, \"d\": {}, \"density\": {}, \
+                 \"rounds\": {}, \"inner_steps\": {}, \"wall_s\": {}, \"steps_per_sec\": {}, \
+                 \"final_gap\": {}, \"time_to_gap_1e3_s\": {}, \"bytes_measured\": {}, \
+                 \"round_sim_time_s\": [{}]}}{}\n",
+                w.name,
+                w.k,
+                w.n,
+                w.d,
+                json_f64(w.density),
+                w.rounds,
+                w.inner_steps,
+                json_f64(w.wall_s),
+                json_f64(w.steps_per_sec),
+                json_f64(w.final_gap),
+                w.time_to_gap_1e3_s.map_or("null".to_string(), json_f64),
+                w.bytes_measured,
+                times.join(", "),
+                if i + 1 == self.workloads.len() { "" } else { "," },
+            ));
+        }
+        s.push_str("  ]\n}\n");
+        s
+    }
+
+    /// Write the report, creating parent directories as needed.
+    pub fn write<P: AsRef<Path>>(&self, path: P) -> std::io::Result<()> {
+        if let Some(parent) = path.as_ref().parent() {
+            if !parent.as_os_str().is_empty() {
+                std::fs::create_dir_all(parent)?;
+            }
+        }
+        let mut f = std::fs::File::create(path)?;
+        f.write_all(self.to_json_string().as_bytes())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::perf::schema;
+
+    #[test]
+    fn smoke_report_roundtrips_through_the_validator() {
+        // the real end-to-end path CI runs: smoke workloads -> JSON ->
+        // parse -> schema validation
+        let report = run_all(PerfProfile::Smoke, 42).unwrap();
+        assert_eq!(report.workloads.len(), 6); // 3 families x K in {1, 4}
+        for w in &report.workloads {
+            assert!(w.inner_steps > 0, "{}: no inner steps", w.name);
+            assert!(w.bytes_measured > 0, "{}: counted transport silent", w.name);
+            assert!(
+                w.round_sim_time_s.windows(2).all(|p| p[1] >= p[0]),
+                "{}: sim time not monotone",
+                w.name
+            );
+        }
+        let json = report.to_json_string();
+        schema::validate_str(&json).unwrap();
+    }
+
+    #[test]
+    fn report_write_creates_parents_and_validates() {
+        let dir = std::env::temp_dir().join("cocoa_perf_test");
+        let _ = std::fs::remove_dir_all(&dir);
+        let path = dir.join("nested/BENCH_test.json");
+        let report = BenchReport {
+            schema_version: SCHEMA_VERSION,
+            profile: PerfProfile::Smoke,
+            seed: 1,
+            peak_rss_bytes: None,
+            workloads: vec![WorkloadReport {
+                name: "w".into(),
+                k: 1,
+                n: 10,
+                d: 2,
+                density: 1.0,
+                rounds: 2,
+                inner_steps: 20,
+                wall_s: 0.01,
+                steps_per_sec: 2000.0,
+                final_gap: 0.5,
+                time_to_gap_1e3_s: None,
+                bytes_measured: 64,
+                round_sim_time_s: vec![0.0, 0.5],
+            }],
+        };
+        report.write(&path).unwrap();
+        schema::validate_file(&path).unwrap();
+    }
+}

@@ -28,20 +28,47 @@ pub use gap_certified::GapCertifiedSolver;
 pub use sdca::{LocalSdca, Sampling};
 pub use sgd::{PegasosEpoch, SgdOutcome};
 
-use crate::data::Dataset;
+use crate::data::{Dataset, Features};
 use crate::util::Rng;
 use crate::loss::Loss;
 
-/// A worker's view of its block: the local rows plus the problem constants.
+/// A worker's view of its block: the local rows (already compacted to
+/// local row indices by [`Dataset::subset`]) plus the problem constants,
+/// and the per-shard caches the inner loop leans on:
+///
+/// * per-row subproblem curvatures `||x_i||^2 / (lambda n)`, divided out
+///   **once per shard** instead of once per inner step;
+/// * the sparse shard's column-touch set (sorted unique columns with any
+///   stored entry), which bounds where local updates can move `w` — the
+///   delta extraction at the end of a local round walks this set instead
+///   of all `d` columns.
+///
+/// Construct through [`Block::new`] so the caches always match the data.
 pub struct Block {
     pub data: Dataset,
     /// `lambda_eff * n` with the *global* n — the scaling constant in `A`
     /// of the sigma-normalized problem (`lambda_eff = lambda *
     /// regularizer strong convexity`; plain `lambda * n` for L2).
     pub lambda_n: f64,
+    /// `norms_sq[i] / lambda_n`, precomputed (same division the per-step
+    /// path used to run, so values are bit-identical).
+    curv: Vec<f64>,
+    /// Sorted unique touched columns; `None` for dense shards (all
+    /// columns are touchable).
+    touched: Option<Vec<u32>>,
 }
 
 impl Block {
+    /// Build a worker block over `data` with the shard caches filled.
+    pub fn new(data: Dataset, lambda_n: f64) -> Block {
+        let curv = (0..data.n()).map(|i| data.norm_sq(i) / lambda_n).collect();
+        let touched = match &data.features {
+            Features::Sparse(m) => Some(m.touched_cols()),
+            Features::Dense(_) => None,
+        };
+        Block { data, lambda_n, curv, touched }
+    }
+
     pub fn n_k(&self) -> usize {
         self.data.n()
     }
@@ -51,10 +78,15 @@ impl Block {
     }
 
     /// Curvature `s_i = ||x_i||^2 / (lambda n)` of coordinate i's
-    /// 1-D subproblem.
+    /// 1-D subproblem (precomputed per shard).
     #[inline]
     pub fn curvature(&self, i: usize) -> f64 {
-        self.data.norm_sq(i) / self.lambda_n
+        self.curv[i]
+    }
+
+    /// The sparse shard's column-touch set (`None` on dense shards).
+    pub fn touched_cols(&self) -> Option<&[u32]> {
+        self.touched.as_deref()
     }
 }
 
@@ -122,10 +154,7 @@ pub(crate) mod test_util {
     use crate::data::cov_like;
 
     pub fn test_block(n_k: usize, d: usize, lambda: f64, global_n: usize, seed: u64) -> Block {
-        Block {
-            data: cov_like(n_k, d, 0.1, seed),
-            lambda_n: lambda * global_n as f64,
-        }
+        Block::new(cov_like(n_k, d, 0.1, seed), lambda * global_n as f64)
     }
 
     /// The Procedure-A output invariant: dw == A_[k] dalpha.

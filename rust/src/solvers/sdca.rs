@@ -4,6 +4,8 @@
 //! behaviour is exactly what distinguishes CoCoA from mini-batch methods.
 
 use super::{Block, LocalDualMethod, LocalUpdate};
+use crate::data::Features;
+use crate::kernels;
 use crate::util::Rng;
 use crate::loss::Loss;
 
@@ -60,7 +62,7 @@ impl LocalDualMethod for LocalSdca {
     ) -> LocalUpdate {
         let n_k = block.n_k();
         debug_assert_eq!(alpha.len(), n_k);
-        debug_assert_eq!(w.len(), block.d());
+        assert_eq!(w.len(), block.d(), "w length must match block dimension");
         let mut dalpha = vec![0.0; n_k];
         // Maintain w_local = w + sigma' * dw in place; dw is recovered at
         // the end. For the paper's Algorithm 1 (sigma' = 1) this is just
@@ -71,10 +73,10 @@ impl LocalDualMethod for LocalSdca {
         let mut w_local = w.to_vec();
         let scale = self.curvature_scale;
         let inv_lambda_n = scale / block.lambda_n;
-
+        let sampling = self.sampling;
         let mut perm: Vec<u32> = Vec::new();
-        for step in 0..h {
-            let i = match self.sampling {
+        let mut pick = |step: usize, rng: &mut Rng| -> usize {
+            match sampling {
                 Sampling::WithReplacement => rng.gen_range(n_k),
                 Sampling::Permutation => {
                     let pos = step % n_k;
@@ -83,25 +85,75 @@ impl LocalDualMethod for LocalSdca {
                     }
                     perm[pos] as usize
                 }
-            };
-            let q = block.data.features.row_dot(i, &w_local);
-            let a_cur = alpha[i] + dalpha[i];
-            let s = block.curvature(i) * self.curvature_scale;
-            let delta = loss.coord_delta(q, block.data.labels[i], a_cur, s);
-            if delta != 0.0 {
-                dalpha[i] += delta;
-                block
-                    .data
-                    .features
-                    .add_row_scaled(i, delta * inv_lambda_n, &mut w_local);
+            }
+        };
+
+        // The inner loop is monomorphized per storage format so each step
+        // runs the fused kernels on the row slices directly: one indptr
+        // fetch per step, no per-element bounds checks, the curvature
+        // division precomputed per shard. Arithmetic (values, order) is
+        // identical to the generic Features::row_dot/add_row_scaled path
+        // this replaces — the prop_kernels suite pins that bit-for-bit.
+        match &block.data.features {
+            Features::Sparse(m) => {
+                for step in 0..h {
+                    let i = pick(step, rng);
+                    let (idx, val) = m.row_view(i);
+                    // SAFETY: CsrMatrix guarantees index < cols, and
+                    // w_local.len() == block.d() == cols (asserted above).
+                    let q = unsafe { kernels::sparse_dot_unchecked(idx, val, &w_local) };
+                    let a_cur = alpha[i] + dalpha[i];
+                    let s = block.curvature(i) * scale;
+                    let delta = loss.coord_delta(q, block.data.labels[i], a_cur, s);
+                    if delta != 0.0 {
+                        dalpha[i] += delta;
+                        // SAFETY: as above.
+                        unsafe {
+                            kernels::sparse_axpy_unchecked(
+                                idx,
+                                val,
+                                delta * inv_lambda_n,
+                                &mut w_local,
+                            )
+                        };
+                    }
+                }
+            }
+            Features::Dense(m) => {
+                for step in 0..h {
+                    let i = pick(step, rng);
+                    let row = m.row(i);
+                    let q = kernels::dense_dot(row, &w_local);
+                    let a_cur = alpha[i] + dalpha[i];
+                    let s = block.curvature(i) * scale;
+                    let delta = loss.coord_delta(q, block.data.labels[i], a_cur, s);
+                    if delta != 0.0 {
+                        dalpha[i] += delta;
+                        kernels::dense_axpy(delta * inv_lambda_n, row, &mut w_local);
+                    }
+                }
             }
         }
 
-        let dw = w_local
-            .iter()
-            .zip(w.iter())
-            .map(|(wl, w0)| (wl - w0) / scale)
-            .collect();
+        // Delta extraction: on sparse shards only touched columns can have
+        // moved; untouched columns satisfy w_local[j] == w[j] bit-for-bit,
+        // where the old full-d pass computed (x - x)/scale == +0.0 — the
+        // same bits the zero-fill writes.
+        let dw = match block.touched_cols() {
+            Some(cols) => {
+                let mut dw = vec![0.0; w.len()];
+                for &j in cols {
+                    let j = j as usize;
+                    dw[j] = (w_local[j] - w[j]) / scale;
+                }
+                dw
+            }
+            None => w_local
+                .iter()
+                .zip(w.iter())
+                .map(|(wl, w0)| (wl - w0) / scale)
+                .collect(),
+        };
         LocalUpdate { dalpha, dw, steps: h as u64, offloaded_s: 0.0 }
     }
 }
@@ -247,7 +299,7 @@ mod tests {
             );
         }
 
-        let block = Block { data, lambda_n: lambda_eff * n as f64 };
+        let block = Block::new(data, lambda_eff * n as f64);
         let solver = LocalSdca::new(Sampling::Permutation);
         let up = solver.local_update(&block, &Squared, &alpha, &w_star, n, &mut rng(17));
         for (i, da) in up.dalpha.iter().enumerate() {

@@ -238,8 +238,9 @@ impl Trace {
     }
 }
 
-/// JSON has no NaN/inf literals; emit null for them.
-fn json_f64(v: f64) -> String {
+/// JSON has no NaN/inf literals; emit null for them. Shared with the
+/// perf harness's `BENCH_*.json` writer so both encoders stay consistent.
+pub(crate) fn json_f64(v: f64) -> String {
     if v.is_finite() {
         format!("{v}")
     } else {
@@ -250,11 +251,58 @@ fn json_f64(v: f64) -> String {
 /// Thread CPU-time clock: measures a worker's *own* compute, immune to the
 /// timesharing distortion of running K worker threads on fewer cores
 /// (wall-clock would inflate by the oversubscription factor).
+///
+/// Bound directly against the system C library (the offline build carries
+/// no `libc` crate). The FFI arm is gated to the platforms whose timespec
+/// layout ({i64, i64}) and clock id this shim hardcodes — 64-bit Linux
+/// (CLOCK_THREAD_CPUTIME_ID = 3) and 64-bit macOS (= 16); everywhere else
+/// falls back to monotonic wall time rather than risking a garbage-filled
+/// struct from a mismatched ABI. The syscall result is hard-checked: a
+/// wrong clock id must fail loudly, not report zero compute forever.
+#[cfg(all(any(target_os = "linux", target_os = "macos"), target_pointer_width = "64"))]
 pub fn thread_cpu_time_s() -> f64 {
-    let mut ts = libc::timespec { tv_sec: 0, tv_nsec: 0 };
-    let rc = unsafe { libc::clock_gettime(libc::CLOCK_THREAD_CPUTIME_ID, &mut ts) };
-    debug_assert_eq!(rc, 0);
+    #[repr(C)]
+    struct Timespec {
+        tv_sec: i64,
+        tv_nsec: i64,
+    }
+    extern "C" {
+        fn clock_gettime(clock_id: i32, tp: *mut Timespec) -> i32;
+    }
+    #[cfg(target_os = "macos")]
+    const CLOCK_THREAD_CPUTIME_ID: i32 = 16;
+    #[cfg(target_os = "linux")]
+    const CLOCK_THREAD_CPUTIME_ID: i32 = 3;
+    let mut ts = Timespec { tv_sec: 0, tv_nsec: 0 };
+    let rc = unsafe { clock_gettime(CLOCK_THREAD_CPUTIME_ID, &mut ts) };
+    assert_eq!(rc, 0, "clock_gettime(CLOCK_THREAD_CPUTIME_ID) failed");
     ts.tv_sec as f64 + ts.tv_nsec as f64 * 1e-9
+}
+
+/// Fallback for platforms the FFI shim is not vetted on: monotonic wall
+/// time from an arbitrary process-local epoch (callers only ever
+/// difference two samples; oversubscribed-core timesharing will inflate
+/// these readings, unlike the thread-CPU clock).
+#[cfg(not(all(any(target_os = "linux", target_os = "macos"), target_pointer_width = "64")))]
+pub fn thread_cpu_time_s() -> f64 {
+    use std::sync::OnceLock;
+    use std::time::Instant;
+    static EPOCH: OnceLock<Instant> = OnceLock::new();
+    EPOCH.get_or_init(Instant::now).elapsed().as_secs_f64()
+}
+
+/// Peak resident set size of this process in bytes (`VmHWM` from
+/// `/proc/self/status`). `None` where procfs is unavailable — the perf
+/// harness records `null` rather than a fabricated number.
+pub fn peak_rss_bytes() -> Option<u64> {
+    let status = std::fs::read_to_string("/proc/self/status").ok()?;
+    for line in status.lines() {
+        if let Some(rest) = line.strip_prefix("VmHWM:") {
+            let kb: u64 = rest.trim().trim_end_matches("kB").trim().parse().ok()?;
+            return Some(kb * 1024);
+        }
+    }
+    None
 }
 
 #[cfg(test)]
@@ -395,6 +443,15 @@ mod tests {
         }
         assert_eq!(StopReason::from_name("because"), None);
         assert_eq!(StopReason::default(), StopReason::Running);
+    }
+
+    #[test]
+    fn peak_rss_reads_procfs_on_linux() {
+        if std::path::Path::new("/proc/self/status").exists() {
+            let rss = peak_rss_bytes().expect("VmHWM present on Linux");
+            // a running test binary occupies at least a few pages
+            assert!(rss > 64 * 1024, "implausible peak RSS {rss}");
+        }
     }
 
     #[test]

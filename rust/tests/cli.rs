@@ -108,3 +108,34 @@ fn repro_table1_smoke() {
     assert!(text.contains("rcv1"));
     assert!(text.contains("imagenet"));
 }
+
+#[test]
+fn perf_smoke_writes_and_validates_bench_json() {
+    let dir = tmpdir("perf");
+    let path = dir.join("BENCH_hotpath.json");
+    let out = bin()
+        .args(["perf", "--smoke", "--seed", "7", "--out"])
+        .arg(&path)
+        .output()
+        .unwrap();
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    assert!(stdout.contains("dense_ridge_k1"), "stdout: {stdout}");
+    assert!(stdout.contains("sparse_logistic_k4"), "stdout: {stdout}");
+    let json = std::fs::read_to_string(&path).unwrap();
+    assert!(json.contains("\"schema_version\": 1"));
+    assert!(json.contains("\"profile\": \"smoke\""));
+    // the standalone validator accepts the file the run just wrote
+    let check = bin().args(["perf", "--validate"]).arg(&path).output().unwrap();
+    assert!(check.status.success(), "{}", String::from_utf8_lossy(&check.stderr));
+    assert!(String::from_utf8_lossy(&check.stdout).contains("valid BENCH schema"));
+}
+
+#[test]
+fn perf_validate_rejects_garbage() {
+    let dir = tmpdir("perfbad");
+    let path = dir.join("broken.json");
+    std::fs::write(&path, "{\"schema_version\": 99}").unwrap();
+    let out = bin().args(["perf", "--validate"]).arg(&path).output().unwrap();
+    assert!(!out.status.success());
+}

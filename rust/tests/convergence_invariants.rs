@@ -134,7 +134,7 @@ fn cocoa_k1_matches_single_machine_sdca_to_1e10() {
         // serial: the same LocalSDCA stream, by hand. Worker 0 derives its
         // rng stream as seed * golden-ratio-constant + 0 (coordinator
         // spawn contract), and with K = 1 its block is the whole dataset.
-        let block = Block { data: data.clone(), lambda_n: lambda * n as f64 };
+        let block = Block::new(data.clone(), lambda * n as f64);
         let loss = loss_kind.build();
         let solver = LocalSdca::new(Sampling::WithReplacement);
         let mut rng = Rng::seed_from_u64(seed.wrapping_mul(0x9e3779b97f4a7c15));

@@ -88,7 +88,7 @@ fn closed_form_is_a_stationary_point() {
 fn exact_block_solver_reaches_closed_form() {
     let (data, lambda, w_star, p_star) = tiny_ridge();
     let n = data.n();
-    let block = Block { data: data.clone(), lambda_n: lambda * n as f64 };
+    let block = Block::new(data.clone(), lambda * n as f64);
     let solver = ExactBlockSolver::default();
     let mut rng = Rng::seed_from_u64(1);
     let up = solver.local_update(

@@ -24,7 +24,7 @@ fn have_artifacts() -> bool {
 /// Build a block whose shape matches the small test artifact (128 x 16).
 fn artifact_block(seed: u64) -> Block {
     let data = cov_like(128, 16, 0.1, seed);
-    Block { data, lambda_n: 0.01 * 128.0 }
+    Block::new(data, 0.01 * 128.0)
 }
 
 #[test]

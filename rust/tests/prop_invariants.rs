@@ -94,7 +94,7 @@ fn prop_sdca_update_is_feasible_and_consistent() {
         let n = data.n();
         let loss = random_loss(rng);
         let lambda = rng.gen_range_f64(0.01, 0.3);
-        let block = Block { data, lambda_n: lambda * n as f64 };
+        let block = Block::new(data, lambda * n as f64);
         let alpha = feasible_alpha(&block.data, loss.as_ref(), rng);
         let w = block.data.primal_from_dual(&alpha, lambda);
         let h = rng.gen_range(200);
@@ -132,7 +132,7 @@ fn prop_averaging_scale_preserves_feasibility() {
         let n = data.n();
         let loss = random_loss(rng);
         let lambda = 0.05;
-        let block = Block { data, lambda_n: lambda * n as f64 };
+        let block = Block::new(data, lambda * n as f64);
         let alpha = feasible_alpha(&block.data, loss.as_ref(), rng);
         let w = block.data.primal_from_dual(&alpha, lambda);
         let solver = LocalSdca::new(Sampling::WithReplacement);
@@ -160,7 +160,7 @@ fn prop_local_update_never_decreases_global_dual() {
         let n = data.n();
         let loss = random_loss(rng);
         let lambda = rng.gen_range_f64(0.02, 0.2);
-        let block = Block { data, lambda_n: lambda * n as f64 };
+        let block = Block::new(data, lambda * n as f64);
         let alpha = feasible_alpha(&block.data, loss.as_ref(), rng);
         let w = block.data.primal_from_dual(&alpha, lambda);
         let d0 = objective::dual(&block.data, &alpha, lambda, loss.as_ref());
