@@ -48,10 +48,25 @@ cargo build --release
 step "cargo test -q"
 cargo test -q
 
+# All five examples must keep building against the public API (the Driver
+# redesign migrated every one of them), and quickstart must actually run:
+# it exercises Session::run with composable rules, a manual Driver::step()
+# loop, and the CSV/Trace observer sinks end-to-end.
+step "cargo build --release --examples"
+cargo build --release --examples
+
+step "run quickstart example (driver API end-to-end)"
+./target/release/examples/quickstart > "$SCRATCH/quickstart.out"
+grep -q "observer run:" "$SCRATCH/quickstart.out"
+
 run_determinism_gate "l2_transport" prop_transport seeded_determinism_artifact \
     "target/determinism/trace_${DET_SEED}.csv"
 run_determinism_gate "l1_prox" golden_lasso seeded_determinism_artifact_l1 \
     "target/determinism/trace_l1_${DET_SEED}.csv"
+# third gate: the step-wise driver streaming through the JSONL observer
+# sink — two seeded runs must produce byte-identical artifacts
+run_determinism_gate "driver_jsonl" driver_equivalence seeded_driver_jsonl_artifact \
+    "target/determinism/driver_${DET_SEED}.jsonl"
 
 # Perf smoke: run the tiny-profile workloads and validate BENCH_hotpath.json
 # structurally (fields present, numbers finite, monotone round times).

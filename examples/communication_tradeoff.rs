@@ -55,10 +55,10 @@ fn main() -> cocoa::Result<()> {
             session.reset()?;
             // equal total-steps budget across H; evaluation cadence scaled
             // so instrumentation stays cheap for tiny H
-            let budget = Budget::until_gap(target_gap)
-                .max_rounds((600_000 / h as u64).max(120))
-                .eval_every((2_000 / h as u64).max(1));
-            let trace = session.run(&mut Cocoa::new(h), budget)?;
+            let rule = GapBelow::new(target_gap)
+                .or(MaxRounds::new((600_000 / h as u64).max(120)));
+            let spec = DriverSpec::new(rule).eval_every((2_000 / h as u64).max(1));
+            let trace = session.run(&mut Cocoa::new(h), spec)?;
             match trace.time_to_gap(target_gap) {
                 Some(t) => print!(" {:>12.3}", t),
                 None => print!(" {:>12}", "-"),

@@ -35,7 +35,10 @@ fn main() -> anyhow::Result<()> {
     let (p_star, _) = objective::compute_optimum(&data, lambda, &cocoa::loss::Hinge, 1e-8, 200);
     println!("P* = {p_star:.9}");
 
-    let budget = Budget::rounds(40).target_subopt(2e-4);
+    // stop at 2e-4 suboptimality, or 40 rounds, whichever first — the
+    // composable-rule spelling of the old Budget (rebuilt per run: rules
+    // may carry state, so each run gets a fresh one)
+    let stopping = || SuboptBelow::new(2e-4).or(MaxRounds::new(40));
     let trainer = |backend: Backend| {
         Trainer::on(&data)
             .workers(K)
@@ -58,8 +61,8 @@ fn main() -> anyhow::Result<()> {
         other => other?,
     };
     session.set_reference_optimum(Some(p_star));
-    println!("\n[pjrt backend] running up to {} rounds of H={h}...", budget.rounds);
-    let trace_pjrt = session.run(&mut Cocoa::new(h), budget)?;
+    println!("\n[pjrt backend] running up to 40 rounds of H={h}...");
+    let trace_pjrt = session.run(&mut Cocoa::new(h), stopping())?;
     session.shutdown();
     report("pjrt", &trace_pjrt);
     trace_pjrt.to_csv("results/e2e/cocoa_pjrt.csv")?;
@@ -68,7 +71,7 @@ fn main() -> anyhow::Result<()> {
     let mut session = trainer(Backend::Native).build()?;
     session.set_reference_optimum(Some(p_star));
     println!("\n[native backend] running the identical configuration...");
-    let trace_native = session.run(&mut Cocoa::new(h), budget)?;
+    let trace_native = session.run(&mut Cocoa::new(h), stopping())?;
     report("native", &trace_native);
     trace_native.to_csv("results/e2e/cocoa_native.csv")?;
 
@@ -83,8 +86,8 @@ fn main() -> anyhow::Result<()> {
     //     warm-started on the same native worker threads ---
     session.reset()?;
     println!("\n[baseline] mini-batch SDCA, same batch size per round...");
-    let mb_budget = Budget::rounds(400).target_subopt(2e-4).eval_every(10);
-    let trace_mb = session.run(&mut MinibatchCd::new(h), mb_budget)?;
+    let mb_spec = DriverSpec::new(SuboptBelow::new(2e-4).or(MaxRounds::new(400))).eval_every(10);
+    let trace_mb = session.run(&mut MinibatchCd::new(h), mb_spec)?;
     session.shutdown();
     report("minibatch_cd", &trace_mb);
     trace_mb.to_csv("results/e2e/minibatch_cd.csv")?;

@@ -62,8 +62,8 @@ fn main() -> cocoa::Result<()> {
             .seed(5 + class as u64)
             .label("ovr")
             .build()?;
-        let budget = Budget::until_gap(1e-3).max_rounds(25);
-        let trace = session.run(&mut Cocoa::new(h), budget)?;
+        let stopping = GapBelow::new(1e-3).or(MaxRounds::new(25));
+        let trace = session.run(&mut Cocoa::new(h), stopping)?;
         let w = session.w().to_vec();
         session.shutdown();
         let last = trace.rows.last().unwrap();

@@ -1,13 +1,16 @@
-//! Quickstart: train a distributed SVM with CoCoA in ~30 lines of API.
+//! Quickstart: drive a distributed SVM round by round with the step-wise
+//! [`Driver`] API, then let the batch wrapper do the same in one call.
 //!
 //! ```bash
 //! cargo run --release --example quickstart
 //! ```
 //!
 //! Generates a small cov-regime dataset, builds one [`Session`] (K = 4
-//! worker threads over an EC2-like network), runs Algorithm 1 next to the
-//! mini-batch SDCA baseline at the same per-round work, then shows the
-//! CoCoA+ adding regime — all on the same warm-started worker threads.
+//! worker threads over an EC2-like network), and shows the three ways to
+//! run it: `Session::run` with composable stopping rules, a manual
+//! `Driver::step()` loop where the caller owns the round boundary, and a
+//! driver with observers streaming rows to CSV — all on the same
+//! warm-started worker threads.
 
 use cocoa::data::cov_like;
 use cocoa::prelude::*;
@@ -27,36 +30,61 @@ fn main() -> cocoa::Result<()> {
         .seed(7)
         .label("quickstart")
         .build()?;
-
     println!("quickstart: n={} d={} K=4 lambda={lambda:.2e} H={h}", data.n(), data.d());
+
+    // 3. batch mode: stop at a duality gap, with a round-cap safety net
+    //    (rules compose with .or()/.and(); first listed wins ties)
+    let trace = session.run(&mut Cocoa::new(h), GapBelow::new(1e-4).or(MaxRounds::new(20)))?;
+    let last = trace.rows.last().unwrap();
     println!(
-        "{:<14} {:>6} {:>12} {:>12} {:>14}",
-        "algorithm", "round", "P(w)", "gap", "sim time (s)"
+        "\nbatch run:   gap {:.2e} after {} rounds (stop = {})",
+        last.gap, last.round, last.stop
     );
 
-    // 3. algorithms are trait objects; reset() warm-starts the same
-    //    worker threads between runs
-    let mut algos: Vec<Box<dyn Algorithm>> = vec![
-        Box::new(Cocoa::new(h)),          // Algorithm 1, beta_K = 1 averaging
-        Box::new(MinibatchCd::new(h)),    // frozen-w baseline, same batch
-        Box::new(Cocoa::adding(h)),       // CoCoA+: beta_K = K adding
-    ];
-    for algo in algos.iter_mut() {
-        session.reset()?;
-        let trace = session.run(algo.as_mut(), Budget::rounds(10))?;
-        for row in trace.rows.iter().filter(|r| r.round % 2 == 0) {
-            println!(
-                "{:<14} {:>6} {:>12.6} {:>12.2e} {:>14.3}",
-                algo.name(),
-                row.round,
-                row.primal,
-                row.gap,
-                row.sim_time_s
-            );
+    // 4. step mode: the caller owns the round boundary. step() yields
+    //    typed events — inspect every round, adapt, or pause mid-run.
+    //    Here: CoCoA+ (the beta_K = K adding regime), same threads.
+    session.reset()?;
+    let mut plus = Cocoa::adding(h);
+    let mut driver = session.drive(&mut plus, GapBelow::new(1e-4).or(MaxRounds::new(20)))?;
+    println!("\nstep loop ({}):", driver.meta().algorithm);
+    loop {
+        match driver.step()? {
+            RoundEvent::Evaluated { row } if row.round % 4 == 0 => println!(
+                "  round {:>3}  P {:.6}  gap {:.2e}  sim {:.3}s",
+                row.round, row.primal, row.gap, row.sim_time_s
+            ),
+            RoundEvent::Stopped { reason } => {
+                println!("  stopped: {reason}");
+                break;
+            }
+            _ => {}
         }
     }
+    drop(driver); // releases the session for the next run
+
+    // 5. observers: stream every evaluated row to a CSV file while an
+    //    incremental TraceSink builds the same trace the batch mode
+    //    returns — telemetry is pluggable, not hardwired into the loop
+    session.reset()?;
+    let mut csv = CsvSink::create("target/quickstart_trace.csv")?;
+    let mut sink = TraceSink::new();
+    let mut cocoa = Cocoa::new(h);
+    let mut driver = session.drive(&mut cocoa, MaxRounds::new(10))?;
+    driver.observe(&mut csv)?;
+    driver.observe(&mut sink)?;
+    let trace = driver.drain()?;
+    drop(driver);
+    let streamed = sink.take().expect("observer saw the run");
+    assert_eq!(streamed.rows.len(), trace.rows.len());
+    println!(
+        "\nobserver run: {} rows streamed to target/quickstart_trace.csv",
+        streamed.rows.len()
+    );
+
     println!("\nCoCoA closes the duality gap orders of magnitude faster per round —");
     println!("the same updates, applied locally before averaging (Section 3 of the");
-    println!("paper); the adding regime (Aggregation::Add) is one constructor away.");
+    println!("paper); the adding regime (Cocoa::adding) is one constructor away.");
+    session.shutdown();
     Ok(())
 }

@@ -60,7 +60,8 @@ fn main() -> anyhow::Result<()> {
     ];
     for algo in algos.iter_mut() {
         session.reset()?;
-        let trace = session.run(algo.as_mut(), Budget::rounds(15).eval_every(5))?;
+        let trace =
+            session.run(algo.as_mut(), DriverSpec::new(MaxRounds::new(15)).eval_every(5))?;
         let last = trace.rows.last().unwrap();
         println!(
             "{:<14} {:>7} {:>12.2e} {:>12.6} {:>14} {:>12.2}",

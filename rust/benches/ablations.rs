@@ -36,7 +36,7 @@ fn gap_after(
         .build()
         .unwrap();
     let tr = session
-        .run(algo, Budget::rounds(rounds).eval_every(rounds))
+        .run(algo, DriverSpec::new(MaxRounds::new(rounds)).eval_every(rounds))
         .unwrap();
     session.shutdown();
     tr.rows.last().unwrap().gap

@@ -10,8 +10,9 @@
 //! cargo bench --bench fig3_h_tradeoff
 //! ```
 
-use cocoa::algorithms::{Budget, Cocoa};
+use cocoa::algorithms::Cocoa;
 use cocoa::config::Backend;
+use cocoa::driver::MaxRounds;
 use cocoa::experiments::{self, cached_optimum, figures, make_session, Profile};
 use cocoa::loss::LossKind;
 use cocoa::transport::TransportKind;
@@ -58,7 +59,7 @@ fn main() {
             )
             .unwrap();
             session.set_reference_optimum(Some(p_star));
-            let trace = session.run(&mut Cocoa::new(h), Budget::rounds(120)).unwrap();
+            let trace = session.run(&mut Cocoa::new(h), MaxRounds::new(120)).unwrap();
             trace
                 .to_csv(format!("{results_dir}/fig3_cold/cocoa_h{h}.csv"))
                 .unwrap();

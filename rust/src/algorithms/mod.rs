@@ -20,9 +20,8 @@
 //! problem) are two values of [`Aggregation`], so CoCoA+ is a constructor
 //! away: [`Cocoa::adding`].
 
-use crate::coordinator::{Cluster, Evaluation, LocalWork, RoundReply};
+use crate::coordinator::{Cluster, LocalWork, RoundReply};
 use crate::error::{Error, Result};
-use crate::telemetry::{StopReason, Trace, TraceRow};
 
 /// How the leader folds the K local updates into the shared state — the
 /// `beta_K` knob of Algorithm 1, made a policy type.
@@ -106,6 +105,14 @@ pub trait Algorithm {
         false
     }
 
+    /// Does this method maintain no dual variables? Primal-only (SGD)
+    /// methods evaluate to a NaN dual and a NaN duality gap, so a
+    /// gap-based stopping rule can never fire on them — the driver uses
+    /// this to reject the combination when nothing else bounds the run.
+    fn primal_only(&self) -> bool {
+        false
+    }
+
     /// The order broadcast to worker `worker` this round.
     fn local_work(&self, ctx: &RoundCtx, worker: usize) -> LocalWork;
 
@@ -118,8 +125,20 @@ pub trait Algorithm {
     ) -> Result<()>;
 }
 
-/// Stopping criteria + instrumentation cadence for one run (whichever
-/// criterion fires first stops the run).
+/// Legacy stopping criteria + instrumentation cadence for one run
+/// (whichever criterion fires first stops the run).
+///
+/// `Budget` predates the composable
+/// [`StoppingRule`](crate::driver::StoppingRule) API and is kept as a
+/// compact conversion into it: anywhere a
+/// [`Session::run`](crate::Session::run) /
+/// [`Session::drive`](crate::Session::drive) call accepts stopping rules,
+/// a `Budget` still works — it validates ([`Budget::validate`]) and
+/// decomposes into `gap -> subopt -> max-rounds` rules in its historical
+/// precedence order. New code should prefer the rules (`GapBelow`,
+/// `MaxRounds`, `SimTimeBelow`, ... and the `or`/`and` combinators),
+/// which also cover budgets `Budget` never could (simulated time, wire
+/// bytes, conjunctions).
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct Budget {
     /// Max outer rounds (T in Algorithm 1).
@@ -180,11 +199,33 @@ impl Budget {
         self
     }
 
-    /// Evaluate every `n` rounds instead of every round.
+    /// Evaluate every `n` rounds instead of every round. `0` is rejected
+    /// by [`Budget::validate`] with a typed [`Error::InvalidBudget`] when
+    /// the budget reaches a driver (it used to be silently clamped to 1).
     pub fn eval_every(mut self, n: u64) -> Self {
-        self.eval_every = n.max(1);
+        self.eval_every = n;
         self
     }
+
+    /// Check the budget's internal consistency. Called by the driver
+    /// conversion; exposed so config loaders can fail early.
+    pub fn validate(&self) -> Result<()> {
+        validate_eval_every(self.eval_every)
+    }
+}
+
+/// The one eval-cadence validity check, shared by [`Budget::validate`]
+/// and every driver-side cadence knob so the typed error text cannot
+/// drift between roads.
+pub(crate) fn validate_eval_every(n: u64) -> Result<()> {
+    if n == 0 {
+        return Err(Error::InvalidBudget {
+            reason: "eval_every must be >= 1 (0 would never evaluate; \
+                     use a larger cadence instead)"
+                .into(),
+        });
+    }
+    Ok(())
 }
 
 // ---------------------------------------------------------------------------
@@ -370,6 +411,10 @@ impl Algorithm for LocalSgd {
         true
     }
 
+    fn primal_only(&self) -> bool {
+        true
+    }
+
     fn h(&self) -> usize {
         self.h
     }
@@ -419,6 +464,10 @@ impl Algorithm for NaiveSgd {
     }
 
     fn requires_l2(&self) -> bool {
+        true
+    }
+
+    fn primal_only(&self) -> bool {
         true
     }
 
@@ -474,6 +523,10 @@ impl Algorithm for MinibatchSgd {
     }
 
     fn requires_l2(&self) -> bool {
+        true
+    }
+
+    fn primal_only(&self) -> bool {
         true
     }
 
@@ -545,104 +598,9 @@ impl Algorithm for OneShotAvg {
     }
 }
 
-// ---------------------------------------------------------------------------
-// The round driver (used by Session::run)
-// ---------------------------------------------------------------------------
-
-/// Drive `algorithm` on `cluster` until the budget stops it, evaluating on
-/// the budget's cadence. `p_star` feeds the suboptimality axis.
-pub(crate) fn drive(
-    cluster: &mut Cluster,
-    algorithm: &mut dyn Algorithm,
-    budget: Budget,
-    p_star: Option<f64>,
-    dataset_label: &str,
-) -> Result<Trace> {
-    if budget.target_subopt > 0.0 && p_star.is_none() {
-        // without P* the subopt column is NaN and the criterion can never
-        // fire — fail fast instead of spinning to the round cap
-        return Err(Error::MissingReferenceOptimum);
-    }
-    if algorithm.requires_l2() && !cluster.regularizer().is_l2() {
-        return Err(Error::UnsupportedRegularizer {
-            regularizer: cluster.regularizer().to_string(),
-            context: format!("the primal-SGD baseline {:?}", algorithm.name()),
-        });
-    }
-    let mut trace = Trace::new(
-        algorithm.name(),
-        dataset_label,
-        cluster.k,
-        algorithm.h(),
-        algorithm.beta(),
-        cluster.lambda(),
-    );
-    // round 0 snapshot
-    let ev = cluster.evaluate()?;
-    record(cluster, &mut trace, 0, p_star, ev, StopReason::Running);
-
-    let total_rounds = algorithm.total_rounds(budget.rounds);
-    let eval_every = budget.eval_every.max(1);
-    let mut stopped = StopReason::MaxRounds;
-    for round in 1..=total_rounds {
-        let ctx = RoundCtx { round, k: cluster.k, lambda: cluster.lambda() };
-        let replies = cluster.dispatch(|kid| algorithm.local_work(&ctx, kid))?;
-        algorithm.reduce(cluster, &replies, &ctx)?;
-
-        if round % eval_every == 0 || round == total_rounds {
-            let ev = cluster.evaluate()?;
-            let subopt = p_star.map(|p| ev.primal - p).unwrap_or(f64::NAN);
-            let stop_gap = budget.target_gap > 0.0 && ev.gap <= budget.target_gap;
-            let stop_subopt = budget.target_subopt > 0.0
-                && subopt.is_finite()
-                && subopt <= budget.target_subopt;
-            // gap wins ties: it is the paper's primary certificate
-            let reason = if stop_gap {
-                StopReason::Gap
-            } else if stop_subopt {
-                StopReason::Subopt
-            } else if round == total_rounds {
-                StopReason::MaxRounds
-            } else {
-                StopReason::Running
-            };
-            record(cluster, &mut trace, round, p_star, ev, reason);
-            if stop_gap || stop_subopt {
-                stopped = reason;
-                break;
-            }
-        }
-    }
-    cluster.last_stop = stopped;
-    Ok(trace)
-}
-
-fn record(
-    cluster: &mut Cluster,
-    trace: &mut Trace,
-    round: u64,
-    p_star: Option<f64>,
-    ev: Evaluation,
-    stop: StopReason,
-) -> TraceRow {
-    let row = TraceRow {
-        round,
-        sim_time_s: cluster.stats.sim_time_s,
-        compute_time_s: cluster.stats.compute_s,
-        vectors: cluster.stats.vectors,
-        bytes_modeled: cluster.stats.bytes_modeled,
-        bytes_measured: cluster.stats.bytes_measured,
-        inner_steps: cluster.stats.inner_steps,
-        primal: ev.primal,
-        dual: ev.dual,
-        gap: ev.gap,
-        primal_subopt: p_star.map(|p| ev.primal - p).unwrap_or(f64::NAN),
-        w_nnz: cluster.w_nnz(),
-        stop,
-    };
-    trace.push(row);
-    row
-}
+// The round loop itself lives in [`crate::driver`]: `Session::run` drains
+// a step-wise `Driver`, whose event machine reproduces the historical
+// batch loop bit for bit (pinned by `rust/tests/driver_equivalence.rs`).
 
 #[cfg(test)]
 mod tests {
@@ -809,6 +767,11 @@ mod tests {
         let s = Budget::until_subopt(1e-3).max_rounds(77).eval_every(0);
         assert_eq!(s.target_subopt, 1e-3);
         assert_eq!(s.rounds, 77);
-        assert_eq!(s.eval_every, 1); // clamped
+        // eval_every(0) is no longer silently clamped: it is kept and
+        // rejected with a typed error at validation time
+        assert_eq!(s.eval_every, 0);
+        assert!(matches!(s.validate(), Err(Error::InvalidBudget { .. })));
+        assert!(s.eval_every(4).validate().is_ok());
+        assert!(Budget::default().validate().is_ok());
     }
 }

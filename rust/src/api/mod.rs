@@ -15,7 +15,7 @@
 //!     .network(NetworkModel::ec2_like())
 //!     .seed(7)
 //!     .build()?;
-//! let trace = session.run(&mut Cocoa::new(2_000), Budget::rounds(10))?;
+//! let trace = session.run(&mut Cocoa::new(2_000), GapBelow::new(1e-3).or(MaxRounds::new(10)))?;
 //! println!("final gap: {:.2e}", trace.rows.last().unwrap().gap);
 //! # Ok(())
 //! # }
@@ -23,12 +23,13 @@
 
 use std::path::Path;
 
-use crate::algorithms::{self, Algorithm, Budget};
+use crate::algorithms::Algorithm;
 use crate::config::Backend;
 use crate::coordinator::{
     Checkpoint, Cluster, ClusterSpec, CommStats, Evaluation, LocalWork, RoundReply,
 };
 use crate::data::{Dataset, Partition, PartitionStrategy};
+use crate::driver::{Driver, IntoDriverSpec};
 use crate::error::{Error, Result};
 use crate::loss::LossKind;
 use crate::netsim::{NetworkModel, StragglerModel};
@@ -304,10 +305,36 @@ pub struct Session {
 }
 
 impl Session {
-    /// Drive `algorithm` until `budget` stops it. The trace records one
-    /// row per evaluation on the budget's cadence.
-    pub fn run(&mut self, algorithm: &mut dyn Algorithm, budget: Budget) -> Result<Trace> {
-        algorithms::drive(&mut self.cluster, algorithm, budget, self.p_star, &self.label)
+    /// Drive `algorithm` until the stopping criteria end the run, and
+    /// return the full trace (one row per evaluation on the spec's
+    /// cadence). Accepts a composable
+    /// [`StoppingRule`](crate::driver::StoppingRule), a
+    /// [`DriverSpec`](crate::driver::DriverSpec), or a legacy
+    /// [`Budget`](crate::algorithms::Budget) — this is a thin
+    /// compatibility wrapper that drains a [`Session::drive`] driver, so
+    /// batch runs and manual step loops produce bit-identical traces.
+    pub fn run(
+        &mut self,
+        algorithm: &mut dyn Algorithm,
+        stopping: impl IntoDriverSpec,
+    ) -> Result<Trace> {
+        let mut driver = self.drive(algorithm, stopping)?;
+        driver.drain()
+    }
+
+    /// Open the round loop: a resumable [`Driver`] state machine whose
+    /// [`step()`](Driver::step) advances the run one event at a time
+    /// (round work, evaluations, checkpoints, the terminal stop), with
+    /// pluggable [`Observer`](crate::driver::Observer)s for telemetry and
+    /// persistence. The session and algorithm stay mutably borrowed until
+    /// the driver is dropped; dropping it mid-run leaves the session at a
+    /// valid round boundary (checkpointable, resumable).
+    pub fn drive<'d>(
+        &'d mut self,
+        algorithm: &'d mut dyn Algorithm,
+        stopping: impl IntoDriverSpec,
+    ) -> Result<Driver<'d>> {
+        Driver::new(&mut self.cluster, algorithm, stopping.into_spec()?, self.p_star, &self.label)
     }
 
     /// Warm-start: zero the optimization state (w, dual blocks, rng
@@ -438,7 +465,7 @@ impl Session {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::algorithms::Cocoa;
+    use crate::algorithms::{Budget, Cocoa};
     use crate::data::cov_like;
 
     #[test]

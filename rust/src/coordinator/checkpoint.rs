@@ -328,6 +328,8 @@ mod tests {
             StopReason::MaxRounds,
             StopReason::Gap,
             StopReason::Subopt,
+            StopReason::SimTime,
+            StopReason::Bytes,
         ] {
             let mut cp = sample();
             cp.stop = stop;

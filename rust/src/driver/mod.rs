@@ -1,0 +1,659 @@
+//! The step-wise round driver — the caller owns the round boundary.
+//!
+//! The legacy entry point buried round iteration, evaluation cadence,
+//! stopping, and trace construction inside a closed batch loop. This
+//! module inverts that control: [`Session::drive`](crate::Session::drive)
+//! yields a [`Driver`], a resumable round state machine whose
+//! [`Driver::step`] advances the run one event at a time:
+//!
+//! ```no_run
+//! use cocoa::prelude::*;
+//! use cocoa::data::cov_like;
+//!
+//! # fn main() -> cocoa::Result<()> {
+//! let data = cov_like(1_000, 10, 0.1, 1);
+//! let mut session = Trainer::on(&data).workers(2).lambda(0.05).build()?;
+//! let mut algo = Cocoa::new(100);
+//! let mut driver = session.drive(&mut algo, GapBelow::new(1e-3).or(MaxRounds::new(200)))?;
+//! loop {
+//!     match driver.step()? {
+//!         RoundEvent::Evaluated { row } => println!("round {} gap {:.2e}", row.round, row.gap),
+//!         RoundEvent::Stopped { reason } => { println!("done: {reason}"); break; }
+//!         _ => {}
+//!     }
+//! }
+//! # Ok(())
+//! # }
+//! ```
+//!
+//! One `step()` call returns the next [`RoundEvent`] of the run, doing a
+//! round of distributed work when one is needed to produce it. The event
+//! stream of a run is always, in order:
+//!
+//! 1. one `Evaluated` for the round-0 snapshot (skipped on resumed runs),
+//! 2. per round: `RoundStarted`, then `Evaluated` if the evaluation
+//!    cadence (or a firing stopping rule, or the final round) calls for
+//!    it, then `Checkpointed` if the checkpoint cadence does,
+//! 3. exactly one terminal `Stopped` (further `step()` calls keep
+//!    returning it without re-notifying observers).
+//!
+//! Stopping is a composable [`StoppingRule`] (see [`stopping`]); trace
+//! building, streaming persistence, progress printing, and checkpoint
+//! retention are pluggable [`Observer`]s (see [`observers`]). The legacy
+//! [`Budget`] converts into rules via [`IntoDriverSpec`], and
+//! [`Session::run`](crate::Session::run) is now a thin wrapper that
+//! drains a driver — producing bit-identical traces to the old loop.
+
+pub mod observers;
+pub mod stopping;
+
+pub use observers::{CheckpointSink, CsvSink, EventLog, JsonlSink, Observer, ProgressLine, TraceSink};
+pub use stopping::{
+    All, Any, BytesBelow, GapBelow, MaxRounds, Observation, SimTimeBelow, StoppingRule,
+    SuboptBelow,
+};
+
+use std::collections::VecDeque;
+
+use crate::algorithms::{validate_eval_every, Algorithm, Budget, RoundCtx};
+use crate::coordinator::{Cluster, Evaluation};
+use crate::error::{Error, Result};
+use crate::telemetry::{json_escape, json_f64, StopReason, Trace, TraceRow};
+
+/// Identifying metadata of one driven run — what a [`Trace`] header
+/// carries, available to observers before the first row exists.
+#[derive(Debug, Clone, PartialEq)]
+pub struct RunMeta {
+    /// Stable algorithm name (trace/CSV labels).
+    pub algorithm: String,
+    /// Dataset label the session was built with.
+    pub dataset: String,
+    /// Worker count.
+    pub k: usize,
+    /// Inner steps per worker per round.
+    pub h: usize,
+    /// Aggregation aggressiveness recorded in traces.
+    pub beta: f64,
+    /// Regularization strength.
+    pub lambda: f64,
+}
+
+impl RunMeta {
+    /// An empty [`Trace`] carrying this metadata.
+    pub fn new_trace(&self) -> Trace {
+        Trace::new(
+            self.algorithm.clone(),
+            self.dataset.clone(),
+            self.k,
+            self.h,
+            self.beta,
+            self.lambda,
+        )
+    }
+
+    /// One-line JSON object (the first line of a [`JsonlSink`] stream).
+    /// The name and label are arbitrary caller strings, so they are
+    /// JSON-escaped.
+    pub fn to_json_object(&self) -> String {
+        format!(
+            "{{\"algorithm\": \"{}\", \"dataset\": \"{}\", \"k\": {}, \"h\": {}, \"beta\": {}, \"lambda\": {}}}",
+            json_escape(&self.algorithm),
+            json_escape(&self.dataset),
+            self.k,
+            self.h,
+            json_f64(self.beta),
+            json_f64(self.lambda),
+        )
+    }
+}
+
+/// One event of a driven run. `Copy` on purpose: event streams are cheap
+/// to tee to any number of observers and to record wholesale.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum RoundEvent {
+    /// Round `round`'s local work + reduce ran. Observers see it before
+    /// the round's evaluation; as a [`Driver::step`] return value it
+    /// means "the round ran, nothing else was due".
+    RoundStarted { round: u64 },
+    /// P/D/gap were evaluated and a trace row built (round 0 is the
+    /// pre-work snapshot).
+    Evaluated { row: TraceRow },
+    /// The driver captured a checkpoint at this round boundary (the
+    /// payload goes to [`Observer::on_checkpoint`]).
+    Checkpointed { round: u64 },
+    /// The run ended. Terminal: emitted exactly once per run.
+    Stopped { reason: StopReason },
+}
+
+impl RoundEvent {
+    /// Is this the terminal event of the run?
+    pub fn is_stopped(&self) -> bool {
+        matches!(self, RoundEvent::Stopped { .. })
+    }
+}
+
+/// Everything a [`Driver`] needs beyond the algorithm: the stopping rule
+/// plus the instrumentation cadences. Built explicitly, or implicitly
+/// from anything implementing [`IntoDriverSpec`] (a bare rule, a legacy
+/// [`Budget`]).
+pub struct DriverSpec {
+    stopping: Box<dyn StoppingRule>,
+    eval_every: u64,
+    checkpoint_every: u64,
+}
+
+impl DriverSpec {
+    /// A spec stopping on `rule`, evaluating every round, never
+    /// checkpointing.
+    pub fn new(rule: impl StoppingRule + 'static) -> Self {
+        DriverSpec { stopping: Box::new(rule), eval_every: 1, checkpoint_every: 0 }
+    }
+
+    /// Evaluate P/D/gap every `n` rounds instead of every round
+    /// (validated at [`Session::drive`](crate::Session::drive): 0 is a
+    /// typed [`Error::InvalidBudget`], not a silent clamp).
+    pub fn eval_every(mut self, n: u64) -> Self {
+        self.eval_every = n;
+        self
+    }
+
+    /// Capture a checkpoint every `n` rounds and hand it to the
+    /// observers' [`Observer::on_checkpoint`] hooks (0 = never, the
+    /// default).
+    pub fn checkpoint_every(mut self, n: u64) -> Self {
+        self.checkpoint_every = n;
+        self
+    }
+}
+
+/// Conversion into a [`DriverSpec`] — the argument type of
+/// [`Session::drive`](crate::Session::drive) and
+/// [`Session::run`](crate::Session::run). Implemented by `DriverSpec`
+/// itself, by every [`StoppingRule`], and by the legacy [`Budget`]
+/// (validated, then decomposed into `gap -> subopt -> max-rounds` rules
+/// in its historical precedence order).
+pub trait IntoDriverSpec {
+    fn into_spec(self) -> Result<DriverSpec>;
+}
+
+impl IntoDriverSpec for DriverSpec {
+    fn into_spec(self) -> Result<DriverSpec> {
+        Ok(self)
+    }
+}
+
+impl<S: StoppingRule + 'static> IntoDriverSpec for S {
+    fn into_spec(self) -> Result<DriverSpec> {
+        Ok(DriverSpec::new(self))
+    }
+}
+
+impl IntoDriverSpec for Budget {
+    fn into_spec(self) -> Result<DriverSpec> {
+        self.validate()?;
+        Ok(DriverSpec {
+            stopping: Box::new(stopping::budget_rules(&self)),
+            eval_every: self.eval_every,
+            checkpoint_every: 0,
+        })
+    }
+}
+
+/// A resumable round state machine over one algorithm and one live
+/// cluster. Created by [`Session::drive`](crate::Session::drive); the
+/// session and algorithm stay mutably borrowed until the driver is
+/// dropped.
+///
+/// [`Driver::step`] yields the run's events one at a time;
+/// [`Driver::drain`] steps to the terminal `Stopped` and returns the
+/// collected [`Trace`] (what [`Session::run`](crate::Session::run)
+/// does). A paused driver can simply be dropped — the session then holds
+/// a valid round boundary, ready for
+/// [`Session::checkpoint`](crate::Session::checkpoint); a later driver
+/// over the restored state continues the run via [`Driver::resume_from`].
+pub struct Driver<'d> {
+    cluster: &'d mut Cluster,
+    algorithm: &'d mut dyn Algorithm,
+    stopping: Box<dyn StoppingRule>,
+    observers: Vec<&'d mut dyn Observer>,
+    meta: RunMeta,
+    p_star: Option<f64>,
+    eval_every: u64,
+    checkpoint_every: u64,
+    /// Rounds completed, driver-local (resumed drivers start above 0).
+    round: u64,
+    /// Hard round bound: the algorithm's own truncation applied to the
+    /// stopping rule's cap (`u64::MAX` = unbounded). The driver forces an
+    /// evaluation at this round so the final trace row always exists.
+    round_cap: u64,
+    started: bool,
+    snapshot_done: bool,
+    finished: Option<StopReason>,
+    queue: VecDeque<RoundEvent>,
+}
+
+impl<'d> Driver<'d> {
+    pub(crate) fn new(
+        cluster: &'d mut Cluster,
+        algorithm: &'d mut dyn Algorithm,
+        spec: DriverSpec,
+        p_star: Option<f64>,
+        label: &str,
+    ) -> Result<Self> {
+        let DriverSpec { stopping, eval_every, checkpoint_every } = spec;
+        validate_eval_every(eval_every)?;
+        if stopping.requires_reference_optimum() && p_star.is_none() {
+            // without P* the subopt observation is NaN and the criterion
+            // can never fire — fail fast instead of spinning to a cap
+            return Err(Error::MissingReferenceOptimum);
+        }
+        if algorithm.requires_l2() && !cluster.regularizer().is_l2() {
+            return Err(Error::UnsupportedRegularizer {
+                regularizer: cluster.regularizer().to_string(),
+                context: format!("the primal-SGD baseline {:?}", algorithm.name()),
+            });
+        }
+        if algorithm.primal_only()
+            && stopping.requires_dual_certificate()
+            && stopping.round_cap().is_none()
+        {
+            // a gap rule is dead on a NaN-gap method; with nothing else
+            // bounding the run, step() would spin forever — fail fast
+            return Err(Error::InvalidBudget {
+                reason: format!(
+                    "stopping rule {} can only fire on a duality-gap certificate, but \
+                     {} is a primal-only method (its gap is always NaN) and no round \
+                     cap bounds the run — add .or(MaxRounds::new(...))",
+                    stopping.describe(),
+                    algorithm.name(),
+                ),
+            });
+        }
+        let round_cap = algorithm.total_rounds(stopping.round_cap().unwrap_or(u64::MAX));
+        let meta = RunMeta {
+            algorithm: algorithm.name().to_string(),
+            dataset: label.to_string(),
+            k: cluster.k,
+            h: algorithm.h(),
+            beta: algorithm.beta(),
+            lambda: cluster.lambda(),
+        };
+        Ok(Driver {
+            cluster,
+            algorithm,
+            stopping,
+            observers: Vec::new(),
+            meta,
+            p_star,
+            eval_every,
+            checkpoint_every,
+            round: 0,
+            round_cap,
+            started: false,
+            snapshot_done: false,
+            finished: None,
+            queue: VecDeque::new(),
+        })
+    }
+
+    /// The run's identifying metadata.
+    pub fn meta(&self) -> &RunMeta {
+        &self.meta
+    }
+
+    /// Rounds completed so far (driver-local numbering).
+    pub fn rounds_completed(&self) -> u64 {
+        self.round
+    }
+
+    /// `Some(reason)` once the terminal `Stopped` event has been emitted.
+    pub fn finished(&self) -> Option<StopReason> {
+        self.finished
+    }
+
+    /// Attach an observer. Must happen before the first [`Driver::step`]
+    /// so every observer sees the complete event stream (a typed error
+    /// otherwise).
+    pub fn observe(&mut self, observer: &'d mut dyn Observer) -> Result<()> {
+        if self.started {
+            return Err(Error::Runtime {
+                message: "observers must be attached before the first step() \
+                          (the run's event stream has already begun)"
+                    .into(),
+            });
+        }
+        self.observers.push(observer);
+        Ok(())
+    }
+
+    /// Continue a run that already completed `rounds_done` rounds (a
+    /// session restored from a checkpoint): driver-local numbering starts
+    /// there and the round-0 snapshot evaluation is skipped. Must be
+    /// called before the first [`Driver::step`].
+    pub fn resume_from(&mut self, rounds_done: u64) -> Result<()> {
+        if self.started {
+            return Err(Error::Runtime {
+                message: "resume_from must be called before the first step()".into(),
+            });
+        }
+        self.round = rounds_done;
+        self.snapshot_done = rounds_done > 0;
+        Ok(())
+    }
+
+    /// Change the evaluation cadence (adaptive callers may retune it
+    /// between steps; 0 is rejected with a typed error).
+    pub fn set_eval_every(&mut self, n: u64) -> Result<()> {
+        validate_eval_every(n)?;
+        self.eval_every = n;
+        Ok(())
+    }
+
+    /// Change the checkpoint cadence (0 disables).
+    pub fn set_checkpoint_every(&mut self, n: u64) {
+        self.checkpoint_every = n;
+    }
+
+    /// Advance the run and return its next event (see the module docs
+    /// for the exact stream grammar). After the terminal `Stopped` event,
+    /// further calls return it again without re-notifying observers.
+    pub fn step(&mut self) -> Result<RoundEvent> {
+        if let Some(event) = self.queue.pop_front() {
+            return Ok(event);
+        }
+        if let Some(reason) = self.finished {
+            return Ok(RoundEvent::Stopped { reason });
+        }
+        if !self.started {
+            self.started = true;
+            for obs in self.observers.iter_mut() {
+                obs.on_start(&self.meta)?;
+            }
+        }
+        if !self.snapshot_done {
+            // round-0 snapshot: record the starting point before any work
+            // (stopping rules are not consulted here — the legacy loop
+            // never stopped before doing work)
+            self.snapshot_done = true;
+            let ev = self.cluster.evaluate()?;
+            let row = self.make_row(0, ev, StopReason::Running);
+            self.notify(RoundEvent::Evaluated { row })?;
+            return Ok(self.queue.pop_front().expect("snapshot event queued"));
+        }
+        if self.round >= self.round_cap {
+            // nothing left to run (a zero-round budget, or a resume at or
+            // past the cap): terminal without work
+            return self.finish(StopReason::MaxRounds);
+        }
+
+        // --- exactly one CoCoA round ---
+        self.round += 1;
+        let round = self.round;
+        self.notify(RoundEvent::RoundStarted { round })?;
+        let ctx = RoundCtx { round, k: self.cluster.k, lambda: self.cluster.lambda() };
+        {
+            let algorithm = &mut *self.algorithm;
+            let replies = self.cluster.dispatch(|kid| algorithm.local_work(&ctx, kid))?;
+            algorithm.reduce(self.cluster, &replies, &ctx)?;
+        }
+
+        let eval_due = round % self.eval_every == 0 || round == self.round_cap;
+        let mut reason: Option<StopReason> = None;
+        if eval_due {
+            let ev = self.cluster.evaluate()?;
+            let obs = self.observation(round, Some(&ev));
+            reason = self.stopping.check(&obs);
+            if reason.is_none() && round == self.round_cap {
+                // the algorithm truncated the run below every rule's cap
+                // (single-round methods): the round budget is what ended it
+                reason = Some(StopReason::MaxRounds);
+            }
+            let row = self.make_row(round, ev, reason.unwrap_or(StopReason::Running));
+            self.notify(RoundEvent::Evaluated { row })?;
+        } else {
+            let obs = self.observation(round, None);
+            reason = self.stopping.check(&obs);
+            if let Some(r) = reason {
+                // an accounting rule fired off the evaluation cadence:
+                // evaluate now so the final trace row exists
+                let ev = self.cluster.evaluate()?;
+                let row = self.make_row(round, ev, r);
+                self.notify(RoundEvent::Evaluated { row })?;
+            }
+        }
+        if let Some(r) = reason {
+            // record the stop on the cluster *before* any cadence
+            // checkpoint below, so a checkpoint captured on the final
+            // round persists the true reason, not Running
+            self.cluster.last_stop = r;
+        }
+        if self.checkpoint_every > 0 && round % self.checkpoint_every == 0 {
+            let cp = self.cluster.checkpoint()?;
+            for obs in self.observers.iter_mut() {
+                obs.on_checkpoint(&self.meta, &cp)?;
+            }
+            self.notify(RoundEvent::Checkpointed { round })?;
+        }
+        if let Some(r) = reason {
+            return self.finish(r);
+        }
+        Ok(self.queue.pop_front().expect("round produced at least RoundStarted"))
+    }
+
+    /// Step until the terminal `Stopped` event, collecting every
+    /// evaluated row into a [`Trace`] — the batch behavior
+    /// [`Session::run`](crate::Session::run) wraps.
+    pub fn drain(&mut self) -> Result<Trace> {
+        let mut trace = self.meta.new_trace();
+        loop {
+            match self.step()? {
+                RoundEvent::Evaluated { row } => trace.push(row),
+                RoundEvent::Stopped { .. } => return Ok(trace),
+                RoundEvent::RoundStarted { .. } | RoundEvent::Checkpointed { .. } => {}
+            }
+        }
+    }
+
+    fn finish(&mut self, reason: StopReason) -> Result<RoundEvent> {
+        self.cluster.last_stop = reason;
+        self.finished = Some(reason);
+        self.notify(RoundEvent::Stopped { reason })?;
+        Ok(self.queue.pop_front().expect("stop event queued"))
+    }
+
+    fn notify(&mut self, event: RoundEvent) -> Result<()> {
+        for obs in self.observers.iter_mut() {
+            obs.on_event(&self.meta, &event)?;
+        }
+        self.queue.push_back(event);
+        Ok(())
+    }
+
+    fn make_row(&self, round: u64, ev: Evaluation, stop: StopReason) -> TraceRow {
+        TraceRow {
+            round,
+            sim_time_s: self.cluster.stats.sim_time_s,
+            compute_time_s: self.cluster.stats.compute_s,
+            vectors: self.cluster.stats.vectors,
+            bytes_modeled: self.cluster.stats.bytes_modeled,
+            bytes_measured: self.cluster.stats.bytes_measured,
+            inner_steps: self.cluster.stats.inner_steps,
+            primal: ev.primal,
+            dual: ev.dual,
+            gap: ev.gap,
+            primal_subopt: self.p_star.map(|p| ev.primal - p).unwrap_or(f64::NAN),
+            w_nnz: self.cluster.w_nnz(),
+            stop,
+        }
+    }
+
+    fn observation(&self, round: u64, ev: Option<&Evaluation>) -> Observation {
+        let stats = &self.cluster.stats;
+        let (primal, dual, gap) = match ev {
+            Some(e) => (e.primal, e.dual, e.gap),
+            None => (f64::NAN, f64::NAN, f64::NAN),
+        };
+        Observation {
+            round,
+            evaluated: ev.is_some(),
+            primal,
+            dual,
+            gap,
+            primal_subopt: match (ev, self.p_star) {
+                (Some(e), Some(p)) => e.primal - p,
+                _ => f64::NAN,
+            },
+            sim_time_s: stats.sim_time_s,
+            vectors: stats.vectors,
+            bytes_modeled: stats.bytes_modeled,
+            bytes_measured: stats.bytes_measured,
+            inner_steps: stats.inner_steps,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::algorithms::Cocoa;
+    use crate::api::{Session, Trainer};
+    use crate::data::cov_like;
+    use crate::loss::LossKind;
+
+    fn session(k: usize, seed: u64) -> Session {
+        let data = cov_like(80, 6, 0.1, seed);
+        Trainer::on(&data)
+            .workers(k)
+            .loss(LossKind::Hinge)
+            .lambda(0.05)
+            .seed(seed)
+            .label("driver_unit")
+            .build()
+            .unwrap()
+    }
+
+    #[test]
+    fn step_stream_matches_the_documented_grammar() {
+        let mut sess = session(2, 3);
+        let mut algo = Cocoa::new(20);
+        let mut driver = sess.drive(&mut algo, MaxRounds::new(3)).unwrap();
+        // snapshot first
+        let first = driver.step().unwrap();
+        assert!(matches!(first, RoundEvent::Evaluated { row } if row.round == 0));
+        // then RoundStarted/Evaluated pairs, terminated by one Stopped
+        let mut events = vec![first];
+        loop {
+            let ev = driver.step().unwrap();
+            events.push(ev);
+            if ev.is_stopped() {
+                break;
+            }
+        }
+        assert!(
+            matches!(events.last(), Some(RoundEvent::Stopped { reason: StopReason::MaxRounds })),
+            "{events:?}"
+        );
+        let rounds: Vec<u64> = events
+            .iter()
+            .filter_map(|e| match e {
+                RoundEvent::RoundStarted { round } => Some(*round),
+                _ => None,
+            })
+            .collect();
+        assert_eq!(rounds, vec![1, 2, 3]);
+        assert_eq!(driver.rounds_completed(), 3);
+        assert_eq!(driver.finished(), Some(StopReason::MaxRounds));
+        // terminal event is idempotent
+        assert!(driver.step().unwrap().is_stopped());
+        drop(driver);
+        sess.shutdown();
+    }
+
+    #[test]
+    fn zero_round_budget_stops_without_work() {
+        let mut sess = session(2, 5);
+        let mut algo = Cocoa::new(10);
+        let mut driver = sess.drive(&mut algo, MaxRounds::new(0)).unwrap();
+        assert!(matches!(driver.step().unwrap(), RoundEvent::Evaluated { row } if row.round == 0));
+        assert!(matches!(
+            driver.step().unwrap(),
+            RoundEvent::Stopped { reason: StopReason::MaxRounds }
+        ));
+        assert_eq!(driver.rounds_completed(), 0);
+        drop(driver);
+        assert_eq!(sess.stats().rounds, 0);
+        sess.shutdown();
+    }
+
+    #[test]
+    fn sim_time_rule_stops_off_the_eval_cadence_with_a_final_row() {
+        let data = cov_like(60, 5, 0.1, 7);
+        let mut sess = Trainer::on(&data)
+            .workers(2)
+            .lambda(0.05)
+            .network(crate::netsim::NetworkModel {
+                latency_s: 1.0,
+                bandwidth_bps: f64::INFINITY,
+                bytes_per_scalar: 8,
+            })
+            .seed(7)
+            .build()
+            .unwrap();
+        // every round costs >= 1 simulated second; the budget allows ~3.
+        // eval_every(100) means no round is on the evaluation cadence, so
+        // the stop must force the final evaluation itself.
+        let spec = DriverSpec::new(SimTimeBelow::new(3.0)).eval_every(100);
+        let mut algo = Cocoa::new(5);
+        let mut driver = sess.drive(&mut algo, spec).unwrap();
+        let trace = driver.drain().unwrap();
+        drop(driver);
+        assert_eq!(trace.rows.len(), 2, "snapshot + forced final row");
+        let last = trace.rows.last().unwrap();
+        assert_eq!(last.stop, StopReason::SimTime);
+        assert!(last.sim_time_s >= 3.0);
+        assert_eq!(sess.checkpoint().unwrap().stop, StopReason::SimTime);
+        sess.shutdown();
+    }
+
+    #[test]
+    fn observers_must_attach_and_resume_before_first_step() {
+        let mut sess = session(2, 9);
+        let mut algo = Cocoa::new(10);
+        let mut log = EventLog::new();
+        let mut driver = sess.drive(&mut algo, MaxRounds::new(2)).unwrap();
+        driver.step().unwrap();
+        assert!(matches!(driver.observe(&mut log), Err(Error::Runtime { .. })));
+        assert!(matches!(driver.resume_from(5), Err(Error::Runtime { .. })));
+        assert!(matches!(driver.set_eval_every(0), Err(Error::InvalidBudget { .. })));
+        drop(driver);
+        sess.shutdown();
+    }
+
+    #[test]
+    fn run_meta_json_object_is_stable() {
+        let meta = RunMeta {
+            algorithm: "cocoa".into(),
+            dataset: "cov".into(),
+            k: 4,
+            h: 100,
+            beta: 1.0,
+            lambda: 1e-4,
+        };
+        let json = meta.to_json_object();
+        assert!(json.starts_with('{') && json.ends_with('}'));
+        assert!(json.contains("\"algorithm\": \"cocoa\""));
+        assert!(json.contains("\"lambda\": 0.0001"));
+        let trace = meta.new_trace();
+        assert_eq!(trace.algorithm, "cocoa");
+        assert_eq!(trace.k, 4);
+
+        // labels are arbitrary caller strings: quotes must be escaped,
+        // not corrupt the JSONL meta line
+        let hostile = RunMeta { dataset: "rcv1 \"full\"".into(), ..meta };
+        assert!(
+            hostile.to_json_object().contains("\"dataset\": \"rcv1 \\\"full\\\"\""),
+            "{}",
+            hostile.to_json_object()
+        );
+    }
+}

@@ -1,0 +1,445 @@
+//! Observers — pluggable telemetry and persistence sinks for a
+//! [`Driver`](crate::driver::Driver) run.
+//!
+//! The driver notifies every attached [`Observer`] of each
+//! [`RoundEvent`](crate::driver::RoundEvent) in stream order, so what used
+//! to be hardwired into the training loop (trace construction, CSV
+//! writing, progress printing, checkpoint policy) is now a set of
+//! composable sinks:
+//!
+//! * [`TraceSink`] — builds a [`Trace`] incrementally (what
+//!   [`Session::run`](crate::Session::run) uses under the hood).
+//! * [`CsvSink`] / [`JsonlSink`] — stream every evaluated row to a writer
+//!   as it happens, flushed per row so the file is row-complete even if
+//!   the process dies mid-run. Every *deterministic* column of two seeded
+//!   runs is identical (the CI determinism gate diffs a timing-stripped
+//!   JSONL artifact; the two clock columns fold in measured thread-CPU
+//!   compute).
+//! * [`CheckpointSink`] — receives the full [`Checkpoint`] payloads the
+//!   driver captures on its `checkpoint_every` cadence and keeps the
+//!   latest (optionally persisting each to a directory).
+//! * [`ProgressLine`] — a live per-round status line (round, gap, wire
+//!   bytes, simulated time), what `cocoa train --progress` attaches.
+//! * [`EventLog`] — records the raw event stream (tests, debugging).
+
+use std::io::Write;
+use std::path::{Path, PathBuf};
+
+use crate::coordinator::Checkpoint;
+use crate::error::{Error, Result};
+use crate::telemetry::Trace;
+
+use super::{RoundEvent, RunMeta};
+
+/// A passive subscriber to a driver's event stream. All hooks default to
+/// no-ops except [`Observer::on_event`]; errors propagate out of
+/// [`Driver::step`](crate::driver::Driver::step) and end the run.
+pub trait Observer {
+    /// Called once, before any event of the run is delivered.
+    fn on_start(&mut self, meta: &RunMeta) -> Result<()> {
+        let _ = meta;
+        Ok(())
+    }
+
+    /// Called for every event, in stream order (the same order
+    /// [`Driver::step`](crate::driver::Driver::step) returns them).
+    fn on_event(&mut self, meta: &RunMeta, event: &RoundEvent) -> Result<()>;
+
+    /// Called with the full checkpoint payload whenever the driver's
+    /// `checkpoint_every` cadence captures one (the corresponding
+    /// [`RoundEvent::Checkpointed`] carries only the round number, so the
+    /// event stream stays small and `Copy`).
+    fn on_checkpoint(&mut self, meta: &RunMeta, checkpoint: &Checkpoint) -> Result<()> {
+        let _ = (meta, checkpoint);
+        Ok(())
+    }
+}
+
+fn io_err(e: std::io::Error) -> Error {
+    Error::Runtime { message: format!("observer sink I/O error: {e}") }
+}
+
+/// Builds a [`Trace`] incrementally from `Evaluated` events — one row per
+/// evaluation, identical to what the batch wrapper returns. Take the
+/// finished trace with [`TraceSink::take`] after the driver is done (or
+/// dropped mid-run: the trace then holds the rows seen so far).
+#[derive(Default)]
+pub struct TraceSink {
+    trace: Option<Trace>,
+}
+
+impl TraceSink {
+    pub fn new() -> Self {
+        TraceSink::default()
+    }
+
+    /// The trace built so far (None before the run started).
+    pub fn trace(&self) -> Option<&Trace> {
+        self.trace.as_ref()
+    }
+
+    /// Take ownership of the built trace.
+    pub fn take(&mut self) -> Option<Trace> {
+        self.trace.take()
+    }
+}
+
+impl Observer for TraceSink {
+    fn on_start(&mut self, meta: &RunMeta) -> Result<()> {
+        self.trace = Some(meta.new_trace());
+        Ok(())
+    }
+
+    fn on_event(&mut self, _meta: &RunMeta, event: &RoundEvent) -> Result<()> {
+        if let RoundEvent::Evaluated { row } = event {
+            if let Some(trace) = self.trace.as_mut() {
+                trace.push(*row);
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Streams every evaluated row to a writer in the exact
+/// [`Trace::to_csv`] format (header first), flushing when the run stops.
+pub struct CsvSink<W: Write> {
+    out: W,
+}
+
+impl CsvSink<std::io::BufWriter<std::fs::File>> {
+    /// Stream to a file (parent directories created).
+    pub fn create(path: impl AsRef<Path>) -> Result<Self> {
+        if let Some(parent) = path.as_ref().parent() {
+            std::fs::create_dir_all(parent).map_err(io_err)?;
+        }
+        let file = std::fs::File::create(path).map_err(io_err)?;
+        Ok(CsvSink::new(std::io::BufWriter::new(file)))
+    }
+}
+
+impl<W: Write> CsvSink<W> {
+    pub fn new(out: W) -> Self {
+        CsvSink { out }
+    }
+
+    /// Recover the writer (e.g. the byte buffer in tests).
+    pub fn into_inner(self) -> W {
+        self.out
+    }
+}
+
+impl<W: Write> Observer for CsvSink<W> {
+    fn on_start(&mut self, _meta: &RunMeta) -> Result<()> {
+        writeln!(self.out, "{}", Trace::CSV_HEADER).map_err(io_err)
+    }
+
+    fn on_event(&mut self, _meta: &RunMeta, event: &RoundEvent) -> Result<()> {
+        match event {
+            RoundEvent::Evaluated { row } => {
+                // flush per row: the durability point of a streaming sink
+                // is that rows survive a mid-run crash, and evaluations
+                // are far too infrequent for the flush to matter
+                writeln!(self.out, "{}", row.csv_line())
+                    .and_then(|()| self.out.flush())
+                    .map_err(io_err)
+            }
+            RoundEvent::Stopped { .. } => self.out.flush().map_err(io_err),
+            _ => Ok(()),
+        }
+    }
+}
+
+/// Streams the run as JSON Lines: one meta object first, then one row
+/// object per evaluation (the same objects [`Trace::to_json`] nests in
+/// its `rows` array). Every deterministic column of a seeded run
+/// reproduces exactly — the CI determinism gate diffs two seeded runs
+/// after stripping the two measured-clock fields.
+pub struct JsonlSink<W: Write> {
+    out: W,
+}
+
+impl JsonlSink<std::io::BufWriter<std::fs::File>> {
+    /// Stream to a file (parent directories created).
+    pub fn create(path: impl AsRef<Path>) -> Result<Self> {
+        if let Some(parent) = path.as_ref().parent() {
+            std::fs::create_dir_all(parent).map_err(io_err)?;
+        }
+        let file = std::fs::File::create(path).map_err(io_err)?;
+        Ok(JsonlSink::new(std::io::BufWriter::new(file)))
+    }
+}
+
+impl<W: Write> JsonlSink<W> {
+    pub fn new(out: W) -> Self {
+        JsonlSink { out }
+    }
+
+    pub fn into_inner(self) -> W {
+        self.out
+    }
+}
+
+impl<W: Write> Observer for JsonlSink<W> {
+    fn on_start(&mut self, meta: &RunMeta) -> Result<()> {
+        writeln!(self.out, "{}", meta.to_json_object()).map_err(io_err)
+    }
+
+    fn on_event(&mut self, _meta: &RunMeta, event: &RoundEvent) -> Result<()> {
+        match event {
+            RoundEvent::Evaluated { row } => {
+                // flush per row (see CsvSink): crash-durable streaming
+                writeln!(self.out, "{}", row.to_json_object())
+                    .and_then(|()| self.out.flush())
+                    .map_err(io_err)
+            }
+            RoundEvent::Stopped { .. } => self.out.flush().map_err(io_err),
+            _ => Ok(()),
+        }
+    }
+}
+
+/// Receives the checkpoints captured on the driver's `checkpoint_every`
+/// cadence. Always keeps the latest in memory ([`CheckpointSink::latest`]
+/// / [`CheckpointSink::take_latest`] — feed it to
+/// [`Session::restore`](crate::Session::restore) to resume); with
+/// [`CheckpointSink::to_dir`] every capture is also persisted as
+/// `round_NNNNNN.ckpt`.
+#[derive(Default)]
+pub struct CheckpointSink {
+    dir: Option<PathBuf>,
+    latest: Option<Checkpoint>,
+    saved: Vec<PathBuf>,
+}
+
+impl CheckpointSink {
+    /// Keep only the latest checkpoint, in memory.
+    pub fn in_memory() -> Self {
+        CheckpointSink::default()
+    }
+
+    /// Also persist every captured checkpoint under `dir`.
+    pub fn to_dir(dir: impl Into<PathBuf>) -> Self {
+        CheckpointSink { dir: Some(dir.into()), latest: None, saved: Vec::new() }
+    }
+
+    /// The most recent checkpoint captured (None before the first).
+    pub fn latest(&self) -> Option<&Checkpoint> {
+        self.latest.as_ref()
+    }
+
+    /// Take ownership of the most recent checkpoint.
+    pub fn take_latest(&mut self) -> Option<Checkpoint> {
+        self.latest.take()
+    }
+
+    /// Paths written so far (empty for [`CheckpointSink::in_memory`]).
+    pub fn saved_paths(&self) -> &[PathBuf] {
+        &self.saved
+    }
+}
+
+impl Observer for CheckpointSink {
+    fn on_event(&mut self, _meta: &RunMeta, _event: &RoundEvent) -> Result<()> {
+        Ok(())
+    }
+
+    fn on_checkpoint(&mut self, _meta: &RunMeta, checkpoint: &Checkpoint) -> Result<()> {
+        if let Some(dir) = &self.dir {
+            let path = dir.join(format!("round_{:06}.ckpt", checkpoint.stats.rounds));
+            checkpoint
+                .save(&path)
+                .map_err(|e| Error::Runtime { message: format!("checkpoint save: {e:#}") })?;
+            self.saved.push(path);
+        }
+        self.latest = Some(checkpoint.clone());
+        Ok(())
+    }
+}
+
+/// A live status line per evaluated round — algorithm, round, duality
+/// gap, communicated bytes (measured when a measuring transport is
+/// active, modeled otherwise), and simulated time — plus a final line
+/// naming the stop reason. What `cocoa train --progress` attaches.
+pub struct ProgressLine<W: Write> {
+    out: W,
+}
+
+impl ProgressLine<std::io::Stderr> {
+    /// Print to stderr (keeps stdout clean for machine-readable output).
+    pub fn stderr() -> Self {
+        ProgressLine { out: std::io::stderr() }
+    }
+}
+
+impl<W: Write> ProgressLine<W> {
+    pub fn new(out: W) -> Self {
+        ProgressLine { out }
+    }
+
+    pub fn into_inner(self) -> W {
+        self.out
+    }
+}
+
+impl<W: Write> Observer for ProgressLine<W> {
+    fn on_event(&mut self, meta: &RunMeta, event: &RoundEvent) -> Result<()> {
+        match event {
+            RoundEvent::Evaluated { row } => writeln!(
+                self.out,
+                "{} round {:>6} | gap {:>10.3e} | {:>12} B | sim {:>9.3}s",
+                meta.algorithm,
+                row.round,
+                row.gap,
+                row.wire_bytes(),
+                row.sim_time_s
+            )
+            .map_err(io_err),
+            RoundEvent::Stopped { reason } => {
+                writeln!(self.out, "{} stopped: {}", meta.algorithm, reason).map_err(io_err)
+            }
+            _ => Ok(()),
+        }
+    }
+}
+
+/// Records the raw event stream (tests assert ordering invariants on it;
+/// also handy for debugging a custom driver loop).
+#[derive(Default)]
+pub struct EventLog {
+    events: Vec<RoundEvent>,
+}
+
+impl EventLog {
+    pub fn new() -> Self {
+        EventLog::default()
+    }
+
+    pub fn events(&self) -> &[RoundEvent] {
+        &self.events
+    }
+
+    pub fn into_events(self) -> Vec<RoundEvent> {
+        self.events
+    }
+}
+
+impl Observer for EventLog {
+    fn on_event(&mut self, _meta: &RunMeta, event: &RoundEvent) -> Result<()> {
+        self.events.push(*event);
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::telemetry::{StopReason, TraceRow};
+
+    fn meta() -> RunMeta {
+        RunMeta {
+            algorithm: "cocoa".into(),
+            dataset: "unit".into(),
+            k: 2,
+            h: 5,
+            beta: 1.0,
+            lambda: 0.1,
+        }
+    }
+
+    fn row(round: u64) -> TraceRow {
+        TraceRow {
+            round,
+            sim_time_s: round as f64 * 0.5,
+            compute_time_s: round as f64 * 0.25,
+            vectors: round * 4,
+            bytes_modeled: round * 32,
+            bytes_measured: round * 40,
+            inner_steps: round * 10,
+            primal: 0.75,
+            dual: 0.25,
+            gap: 0.5,
+            primal_subopt: f64::NAN,
+            w_nnz: 3,
+            stop: StopReason::Running,
+        }
+    }
+
+    #[test]
+    fn trace_sink_collects_evaluated_rows() {
+        let meta = meta();
+        let mut sink = TraceSink::new();
+        assert!(sink.trace().is_none());
+        sink.on_start(&meta).unwrap();
+        sink.on_event(&meta, &RoundEvent::Evaluated { row: row(0) }).unwrap();
+        sink.on_event(&meta, &RoundEvent::RoundStarted { round: 1 }).unwrap();
+        sink.on_event(&meta, &RoundEvent::Evaluated { row: row(1) }).unwrap();
+        sink.on_event(&meta, &RoundEvent::Stopped { reason: StopReason::MaxRounds }).unwrap();
+        let trace = sink.take().unwrap();
+        assert_eq!(trace.algorithm, "cocoa");
+        assert_eq!(trace.dataset, "unit");
+        assert_eq!(trace.rows.len(), 2);
+        assert_eq!(trace.rows[1].round, 1);
+        assert!(sink.take().is_none());
+    }
+
+    #[test]
+    fn csv_sink_streams_header_and_rows() {
+        let meta = meta();
+        let mut sink = CsvSink::new(Vec::new());
+        sink.on_start(&meta).unwrap();
+        sink.on_event(&meta, &RoundEvent::Evaluated { row: row(0) }).unwrap();
+        sink.on_event(&meta, &RoundEvent::Checkpointed { round: 1 }).unwrap();
+        sink.on_event(&meta, &RoundEvent::Evaluated { row: row(2) }).unwrap();
+        sink.on_event(&meta, &RoundEvent::Stopped { reason: StopReason::Gap }).unwrap();
+        let text = String::from_utf8(sink.into_inner()).unwrap();
+        let lines: Vec<&str> = text.lines().collect();
+        assert_eq!(lines.len(), 3); // header + 2 rows, events don't leak in
+        assert_eq!(lines[0], Trace::CSV_HEADER);
+        assert_eq!(lines[1], row(0).csv_line());
+        assert_eq!(lines[2], row(2).csv_line());
+    }
+
+    #[test]
+    fn jsonl_sink_streams_meta_then_rows() {
+        let meta = meta();
+        let mut sink = JsonlSink::new(Vec::new());
+        sink.on_start(&meta).unwrap();
+        sink.on_event(&meta, &RoundEvent::Evaluated { row: row(1) }).unwrap();
+        sink.on_event(&meta, &RoundEvent::Stopped { reason: StopReason::MaxRounds }).unwrap();
+        let text = String::from_utf8(sink.into_inner()).unwrap();
+        let lines: Vec<&str> = text.lines().collect();
+        assert_eq!(lines.len(), 2);
+        assert!(lines[0].contains("\"algorithm\": \"cocoa\""), "{}", lines[0]);
+        assert_eq!(lines[1], row(1).to_json_object());
+        // NaN encodes as null, not as an invalid JSON literal
+        assert!(lines[1].contains("\"primal_subopt\": null"), "{}", lines[1]);
+    }
+
+    #[test]
+    fn progress_line_prints_round_and_stop() {
+        let meta = meta();
+        let mut sink = ProgressLine::new(Vec::new());
+        sink.on_event(&meta, &RoundEvent::Evaluated { row: row(3) }).unwrap();
+        sink.on_event(&meta, &RoundEvent::Stopped { reason: StopReason::Gap }).unwrap();
+        let text = String::from_utf8(sink.into_inner()).unwrap();
+        assert!(text.contains("cocoa round"), "{text}");
+        assert!(text.contains("| gap"), "{text}");
+        assert!(text.contains("120 B"), "{text}"); // measured (3*40) wins over modeled
+        assert!(text.contains("stopped: gap"), "{text}");
+    }
+
+    #[test]
+    fn event_log_records_the_stream_in_order() {
+        let meta = meta();
+        let mut log = EventLog::new();
+        log.on_event(&meta, &RoundEvent::Evaluated { row: row(0) }).unwrap();
+        log.on_event(&meta, &RoundEvent::RoundStarted { round: 1 }).unwrap();
+        log.on_event(&meta, &RoundEvent::Stopped { reason: StopReason::MaxRounds }).unwrap();
+        assert_eq!(log.events().len(), 3);
+        assert!(matches!(log.events()[1], RoundEvent::RoundStarted { round: 1 }));
+        assert!(matches!(
+            log.into_events().pop(),
+            Some(RoundEvent::Stopped { reason: StopReason::MaxRounds })
+        ));
+    }
+}

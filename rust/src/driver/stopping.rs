@@ -1,0 +1,550 @@
+//! Composable stopping rules — the open replacement for the closed
+//! [`Budget`](crate::algorithms::Budget) struct.
+//!
+//! A [`StoppingRule`] inspects one [`Observation`] per completed round and
+//! answers "should the run end, and why". Rules compose: [`Any`] stops at
+//! the first rule that fires (short-circuit OR, first-listed wins — which
+//! is how the legacy `Budget` precedence *gap > subopt > max-rounds* is
+//! expressed), [`All`] latches each rule as it fires and stops once every
+//! rule has (AND across the whole run, not a single instant). The
+//! [`StoppingRule::or`] / [`StoppingRule::and`] combinator methods build
+//! these inline:
+//!
+//! ```
+//! use cocoa::driver::stopping::{GapBelow, MaxRounds, StoppingRule};
+//! // stop at gap <= 1e-3, but never run more than 500 rounds
+//! let rule = GapBelow::new(1e-3).or(MaxRounds::new(500));
+//! assert_eq!(rule.round_cap(), Some(500));
+//! ```
+//!
+//! Rules that need evaluation data ([`GapBelow`], [`SuboptBelow`]) can
+//! only fire at evaluated rounds — the unevaluated [`Observation`] carries
+//! NaN objective fields, and NaN comparisons are false. Accounting rules
+//! ([`SimTimeBelow`], [`BytesBelow`], [`MaxRounds`]) fire on any round.
+
+use crate::algorithms::Budget;
+use crate::telemetry::StopReason;
+
+/// What a [`StoppingRule`] sees after each completed round (and once for
+/// the round-0 snapshot is *not* checked — rules first run after round 1,
+/// matching the legacy driver, which never stopped before doing work).
+#[derive(Debug, Clone, Copy)]
+pub struct Observation {
+    /// Rounds completed so far (driver-local numbering, starting at 1).
+    pub round: u64,
+    /// Whether P/D/gap were computed this round. When `false` the four
+    /// objective fields below are NaN and eval-based rules cannot fire.
+    pub evaluated: bool,
+    pub primal: f64,
+    /// NaN for primal-only (SGD) methods even when evaluated.
+    pub dual: f64,
+    pub gap: f64,
+    /// `P(w) - P*`; NaN unless evaluated *and* a reference optimum is set.
+    pub primal_subopt: f64,
+    /// Simulated distributed seconds so far (netsim model).
+    pub sim_time_s: f64,
+    /// d-dimensional vectors communicated so far.
+    pub vectors: u64,
+    /// Analytic bytes so far (`vectors * d * scalar width`).
+    pub bytes_modeled: u64,
+    /// Byte-exact wire bytes so far; 0 unless a measuring transport is
+    /// configured.
+    pub bytes_measured: u64,
+    /// Inner coordinate/SGD steps so far, summed over workers.
+    pub inner_steps: u64,
+}
+
+impl Observation {
+    /// The run's best-known byte count: measured when a measuring
+    /// transport is active, modeled otherwise — the same convention as
+    /// [`TraceRow::wire_bytes`](crate::telemetry::TraceRow::wire_bytes).
+    pub fn wire_bytes(&self) -> u64 {
+        if self.bytes_measured > 0 {
+            self.bytes_measured
+        } else {
+            self.bytes_modeled
+        }
+    }
+}
+
+/// A stopping criterion for a [`Driver`](crate::driver::Driver) run.
+///
+/// `check` is called once per completed round; returning `Some(reason)`
+/// ends the run with that reason (recorded in the final trace row, the
+/// cluster's checkpoint, and the `Stopped` event). Implementations may
+/// keep state (`&mut self`) — [`All`] uses this to latch fired rules.
+pub trait StoppingRule {
+    /// Human-readable description (logs, debugging, error messages).
+    fn describe(&self) -> String;
+
+    /// Inspect the completed round; `Some(reason)` stops the run.
+    fn check(&mut self, obs: &Observation) -> Option<StopReason>;
+
+    /// The last round this rule could possibly allow, if it bounds the
+    /// run at all. The driver forces an evaluation at this round so the
+    /// final trace row always exists (the legacy `Budget` behavior).
+    fn round_cap(&self) -> Option<u64> {
+        None
+    }
+
+    /// Does this rule need
+    /// [`Session::set_reference_optimum`](crate::Session::set_reference_optimum)?
+    /// The driver fails fast with a typed error instead of spinning to a
+    /// round cap that a NaN suboptimality can never beat.
+    fn requires_reference_optimum(&self) -> bool {
+        false
+    }
+
+    /// Can this rule *only* fire off a duality-gap certificate? Primal-
+    /// only (SGD) methods evaluate to a NaN gap, so such a rule is dead
+    /// on them; when it is also the run's only way to stop (no round
+    /// cap), the driver rejects the combination instead of spinning
+    /// forever. `Any` propagates with all() (one live alternative can
+    /// still stop the run), `All` with any() (one dead requirement makes
+    /// the conjunction unsatisfiable).
+    fn requires_dual_certificate(&self) -> bool {
+        false
+    }
+
+    /// Stop when *either* rule fires (first-listed wins ties).
+    fn or<R>(self, other: R) -> Any
+    where
+        Self: Sized + 'static,
+        R: StoppingRule + 'static,
+    {
+        Any::new(vec![Box::new(self), Box::new(other)])
+    }
+
+    /// Stop once *both* rules have fired (each latches when it first
+    /// fires; they need not fire on the same round).
+    fn and<R>(self, other: R) -> All
+    where
+        Self: Sized + 'static,
+        R: StoppingRule + 'static,
+    {
+        All::new(vec![Box::new(self), Box::new(other)])
+    }
+}
+
+impl StoppingRule for Box<dyn StoppingRule> {
+    fn describe(&self) -> String {
+        (**self).describe()
+    }
+
+    fn check(&mut self, obs: &Observation) -> Option<StopReason> {
+        (**self).check(obs)
+    }
+
+    fn round_cap(&self) -> Option<u64> {
+        (**self).round_cap()
+    }
+
+    fn requires_reference_optimum(&self) -> bool {
+        (**self).requires_reference_optimum()
+    }
+
+    fn requires_dual_certificate(&self) -> bool {
+        (**self).requires_dual_certificate()
+    }
+}
+
+/// Stop after `n` completed rounds ([`StopReason::MaxRounds`]) — the `T`
+/// of Algorithm 1, as a rule.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct MaxRounds {
+    rounds: u64,
+}
+
+impl MaxRounds {
+    pub fn new(rounds: u64) -> Self {
+        MaxRounds { rounds }
+    }
+}
+
+impl StoppingRule for MaxRounds {
+    fn describe(&self) -> String {
+        format!("max_rounds({})", self.rounds)
+    }
+
+    fn check(&mut self, obs: &Observation) -> Option<StopReason> {
+        (obs.round >= self.rounds).then_some(StopReason::MaxRounds)
+    }
+
+    fn round_cap(&self) -> Option<u64> {
+        Some(self.rounds)
+    }
+}
+
+/// Stop when the duality gap reaches `eps` ([`StopReason::Gap`]) — the
+/// paper's primary certificate. Only fires at evaluated rounds.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct GapBelow {
+    eps: f64,
+}
+
+impl GapBelow {
+    pub fn new(eps: f64) -> Self {
+        GapBelow { eps }
+    }
+}
+
+impl StoppingRule for GapBelow {
+    fn describe(&self) -> String {
+        format!("gap<={:e}", self.eps)
+    }
+
+    fn check(&mut self, obs: &Observation) -> Option<StopReason> {
+        // NaN gap (unevaluated round, or an SGD method's missing dual
+        // certificate) compares false: the rule simply cannot fire
+        (obs.gap <= self.eps).then_some(StopReason::Gap)
+    }
+
+    fn requires_dual_certificate(&self) -> bool {
+        true
+    }
+}
+
+/// Stop when `P(w) - P*` reaches `eps` ([`StopReason::Subopt`]). Needs a
+/// reference optimum on the session; only fires at evaluated rounds.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct SuboptBelow {
+    eps: f64,
+}
+
+impl SuboptBelow {
+    pub fn new(eps: f64) -> Self {
+        SuboptBelow { eps }
+    }
+}
+
+impl StoppingRule for SuboptBelow {
+    fn describe(&self) -> String {
+        format!("subopt<={:e}", self.eps)
+    }
+
+    fn check(&mut self, obs: &Observation) -> Option<StopReason> {
+        (obs.primal_subopt.is_finite() && obs.primal_subopt <= self.eps)
+            .then_some(StopReason::Subopt)
+    }
+
+    fn requires_reference_optimum(&self) -> bool {
+        true
+    }
+}
+
+/// Keep running while the simulated distributed time stays below
+/// `limit_s`; fire ([`StopReason::SimTime`]) on the first round that
+/// reaches it — a wall-clock budget on the netsim axis, checked every
+/// round (no evaluation needed).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct SimTimeBelow {
+    limit_s: f64,
+}
+
+impl SimTimeBelow {
+    pub fn new(limit_s: f64) -> Self {
+        SimTimeBelow { limit_s }
+    }
+}
+
+impl StoppingRule for SimTimeBelow {
+    fn describe(&self) -> String {
+        format!("sim_time<{:e}s", self.limit_s)
+    }
+
+    fn check(&mut self, obs: &Observation) -> Option<StopReason> {
+        (obs.sim_time_s >= self.limit_s).then_some(StopReason::SimTime)
+    }
+}
+
+/// Keep running while the communicated bytes stay below `limit`; fire
+/// ([`StopReason::Bytes`]) on the first round that reaches it. Uses the
+/// byte-exact measured total when a measuring transport is active, the
+/// analytic modeled total otherwise — so the rule works on every
+/// transport and tightens automatically when real wire sizes are known.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct BytesBelow {
+    limit: u64,
+}
+
+impl BytesBelow {
+    pub fn new(limit: u64) -> Self {
+        BytesBelow { limit }
+    }
+}
+
+impl StoppingRule for BytesBelow {
+    fn describe(&self) -> String {
+        format!("bytes<{}", self.limit)
+    }
+
+    fn check(&mut self, obs: &Observation) -> Option<StopReason> {
+        (obs.wire_bytes() >= self.limit).then_some(StopReason::Bytes)
+    }
+}
+
+/// Short-circuit OR: stops at the first child rule that fires, in listed
+/// order (so earlier rules win ties — the legacy `Budget` precedence
+/// *gap > subopt > max-rounds* is `Any([gap, subopt, max])`). An empty
+/// `Any` never fires.
+pub struct Any {
+    rules: Vec<Box<dyn StoppingRule>>,
+}
+
+impl Any {
+    pub fn new(rules: Vec<Box<dyn StoppingRule>>) -> Self {
+        Any { rules }
+    }
+
+    /// Append one more alternative (keeps `a.or(b).or(c)` flat-ish when
+    /// built manually).
+    pub fn push(&mut self, rule: impl StoppingRule + 'static) {
+        self.rules.push(Box::new(rule));
+    }
+}
+
+impl StoppingRule for Any {
+    fn describe(&self) -> String {
+        let inner: Vec<String> = self.rules.iter().map(|r| r.describe()).collect();
+        format!("any({})", inner.join(", "))
+    }
+
+    fn check(&mut self, obs: &Observation) -> Option<StopReason> {
+        self.rules.iter_mut().find_map(|r| r.check(obs))
+    }
+
+    fn round_cap(&self) -> Option<u64> {
+        // the run ends no later than the *tightest* child cap
+        self.rules.iter().filter_map(|r| r.round_cap()).min()
+    }
+
+    fn requires_reference_optimum(&self) -> bool {
+        // legacy Budget semantics: a subopt target fails fast without P*
+        // even when other criteria could stop the run first
+        self.rules.iter().any(|r| r.requires_reference_optimum())
+    }
+
+    fn requires_dual_certificate(&self) -> bool {
+        // one alternative that does not need the gap keeps the run
+        // stoppable (also covers the empty Any, which never fires)
+        self.rules.iter().all(|r| r.requires_dual_certificate())
+    }
+}
+
+/// Latching AND: each child rule is remembered once it first fires; the
+/// run stops on the round the *last* outstanding rule fires, with that
+/// rule's reason. An empty `All` never fires.
+pub struct All {
+    rules: Vec<Box<dyn StoppingRule>>,
+    fired: Vec<Option<StopReason>>,
+}
+
+impl All {
+    pub fn new(rules: Vec<Box<dyn StoppingRule>>) -> Self {
+        let fired = vec![None; rules.len()];
+        All { rules, fired }
+    }
+
+    /// Append one more requirement.
+    pub fn push(&mut self, rule: impl StoppingRule + 'static) {
+        self.rules.push(Box::new(rule));
+        self.fired.push(None);
+    }
+}
+
+impl StoppingRule for All {
+    fn describe(&self) -> String {
+        let inner: Vec<String> = self.rules.iter().map(|r| r.describe()).collect();
+        format!("all({})", inner.join(", "))
+    }
+
+    fn check(&mut self, obs: &Observation) -> Option<StopReason> {
+        if self.rules.is_empty() {
+            return None;
+        }
+        let mut newly = None;
+        for (rule, slot) in self.rules.iter_mut().zip(self.fired.iter_mut()) {
+            if slot.is_none() {
+                if let Some(reason) = rule.check(obs) {
+                    *slot = Some(reason);
+                    newly = Some(reason);
+                }
+            }
+        }
+        if self.fired.iter().all(|s| s.is_some()) {
+            // the reason of the rule that completed the conjunction
+            newly.or_else(|| self.fired.last().copied().flatten())
+        } else {
+            None
+        }
+    }
+
+    fn round_cap(&self) -> Option<u64> {
+        // bounded only if *every* requirement is bounded; then the run
+        // ends no later than the loosest child cap
+        let mut cap = 0u64;
+        for rule in &self.rules {
+            cap = cap.max(rule.round_cap()?);
+        }
+        if self.rules.is_empty() {
+            None
+        } else {
+            Some(cap)
+        }
+    }
+
+    fn requires_reference_optimum(&self) -> bool {
+        self.rules.iter().any(|r| r.requires_reference_optimum())
+    }
+
+    fn requires_dual_certificate(&self) -> bool {
+        // a conjunction with one gap-only requirement can never complete
+        // on a primal-only method
+        self.rules.iter().any(|r| r.requires_dual_certificate())
+    }
+}
+
+/// The rules a legacy [`Budget`] describes, in its historical precedence
+/// order (*gap > subopt > round cap*). Shared by the
+/// [`IntoDriverSpec`](crate::driver::IntoDriverSpec) impl on `Budget`.
+pub(crate) fn budget_rules(budget: &Budget) -> Any {
+    let mut rules: Vec<Box<dyn StoppingRule>> = Vec::new();
+    if budget.target_gap > 0.0 {
+        rules.push(Box::new(GapBelow::new(budget.target_gap)));
+    }
+    if budget.target_subopt > 0.0 {
+        rules.push(Box::new(SuboptBelow::new(budget.target_subopt)));
+    }
+    rules.push(Box::new(MaxRounds::new(budget.rounds)));
+    Any::new(rules)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn obs(round: u64, gap: f64, subopt: f64) -> Observation {
+        Observation {
+            round,
+            evaluated: gap.is_finite(),
+            primal: 0.5,
+            dual: 0.5 - gap,
+            gap,
+            primal_subopt: subopt,
+            sim_time_s: round as f64 * 0.25,
+            vectors: round * 8,
+            bytes_modeled: round * 64,
+            bytes_measured: 0,
+            inner_steps: round * 100,
+        }
+    }
+
+    #[test]
+    fn atomic_rules_fire_on_their_thresholds() {
+        assert_eq!(MaxRounds::new(3).check(&obs(3, 1.0, f64::NAN)), Some(StopReason::MaxRounds));
+        assert_eq!(MaxRounds::new(3).check(&obs(2, 1.0, f64::NAN)), None);
+        assert_eq!(GapBelow::new(0.1).check(&obs(1, 0.05, f64::NAN)), Some(StopReason::Gap));
+        assert_eq!(GapBelow::new(0.1).check(&obs(1, 0.5, f64::NAN)), None);
+        // NaN gap (unevaluated round) can never fire the gap rule
+        assert_eq!(GapBelow::new(0.1).check(&obs(1, f64::NAN, f64::NAN)), None);
+        assert_eq!(SuboptBelow::new(0.1).check(&obs(1, 0.5, 0.05)), Some(StopReason::Subopt));
+        assert_eq!(SuboptBelow::new(0.1).check(&obs(1, 0.5, f64::NAN)), None);
+        assert!(SuboptBelow::new(0.1).requires_reference_optimum());
+        assert!(!GapBelow::new(0.1).requires_reference_optimum());
+        assert_eq!(SimTimeBelow::new(0.5).check(&obs(2, 1.0, f64::NAN)), Some(StopReason::SimTime));
+        assert_eq!(SimTimeBelow::new(0.6).check(&obs(2, 1.0, f64::NAN)), None);
+        assert_eq!(BytesBelow::new(128).check(&obs(2, 1.0, f64::NAN)), Some(StopReason::Bytes));
+        assert_eq!(BytesBelow::new(129).check(&obs(2, 1.0, f64::NAN)), None);
+    }
+
+    #[test]
+    fn bytes_rule_prefers_measured_over_modeled() {
+        let mut o = obs(2, 1.0, f64::NAN);
+        o.bytes_measured = 1_000; // modeled says 128, the wire says 1000
+        assert_eq!(BytesBelow::new(500).check(&o), Some(StopReason::Bytes));
+        o.bytes_measured = 100;
+        assert_eq!(BytesBelow::new(500).check(&o), None);
+    }
+
+    #[test]
+    fn any_first_listed_rule_wins_ties() {
+        // gap and max-rounds both fire at round 3: gap listed first wins,
+        // the legacy Budget precedence
+        let mut rule = GapBelow::new(0.1).or(MaxRounds::new(3));
+        assert_eq!(rule.check(&obs(3, 0.05, f64::NAN)), Some(StopReason::Gap));
+        let mut rule = MaxRounds::new(3).or(GapBelow::new(0.1));
+        assert_eq!(rule.check(&obs(3, 0.05, f64::NAN)), Some(StopReason::MaxRounds));
+    }
+
+    #[test]
+    fn any_caps_tighten_and_all_caps_loosen() {
+        let any = GapBelow::new(0.1).or(MaxRounds::new(10)).or(MaxRounds::new(7));
+        assert_eq!(any.round_cap(), Some(7));
+        let all = MaxRounds::new(10).and(MaxRounds::new(7));
+        assert_eq!(all.round_cap(), Some(10));
+        // one unbounded requirement makes the conjunction unbounded
+        let all = MaxRounds::new(10).and(GapBelow::new(0.1));
+        assert_eq!(all.round_cap(), None);
+        assert_eq!(GapBelow::new(0.1).round_cap(), None);
+    }
+
+    #[test]
+    fn all_latches_rules_across_rounds() {
+        // gap fires at round 2, min-rounds at round 5: the conjunction
+        // completes at round 5 even though the gap has bounced back up
+        let mut rule = GapBelow::new(0.1).and(MaxRounds::new(5));
+        assert_eq!(rule.check(&obs(2, 0.05, f64::NAN)), None); // gap latched
+        assert_eq!(rule.check(&obs(3, 0.9, f64::NAN)), None);
+        assert_eq!(rule.check(&obs(5, 0.9, f64::NAN)), Some(StopReason::MaxRounds));
+    }
+
+    #[test]
+    fn combinators_propagate_reference_optimum_requirement() {
+        assert!(GapBelow::new(0.1).or(SuboptBelow::new(0.1)).requires_reference_optimum());
+        assert!(MaxRounds::new(5).and(SuboptBelow::new(0.1)).requires_reference_optimum());
+        assert!(!GapBelow::new(0.1).or(MaxRounds::new(5)).requires_reference_optimum());
+    }
+
+    #[test]
+    fn combinators_propagate_dual_certificate_requirement() {
+        assert!(GapBelow::new(0.1).requires_dual_certificate());
+        assert!(!MaxRounds::new(5).requires_dual_certificate());
+        // Any: one live (non-gap) alternative keeps the run stoppable
+        assert!(!GapBelow::new(0.1).or(MaxRounds::new(5)).requires_dual_certificate());
+        assert!(GapBelow::new(0.1).or(GapBelow::new(0.2)).requires_dual_certificate());
+        // All: one dead (gap-only) requirement blocks the conjunction
+        assert!(MaxRounds::new(5).and(GapBelow::new(0.1)).requires_dual_certificate());
+        assert!(!MaxRounds::new(5).and(SimTimeBelow::new(1.0)).requires_dual_certificate());
+    }
+
+    #[test]
+    fn observation_wire_bytes_prefers_measured() {
+        let mut o = obs(2, 1.0, f64::NAN);
+        assert_eq!(o.wire_bytes(), o.bytes_modeled);
+        o.bytes_measured = 999;
+        assert_eq!(o.wire_bytes(), 999);
+    }
+
+    #[test]
+    fn budget_conversion_keeps_legacy_precedence_and_cap() {
+        let b = Budget::until_gap(1e-3).max_rounds(40).target_subopt(1e-2);
+        let mut rules = budget_rules(&b);
+        assert_eq!(rules.round_cap(), Some(40));
+        assert!(rules.requires_reference_optimum());
+        // both targets met on the same round: gap wins
+        assert_eq!(rules.check(&obs(5, 1e-4, 1e-3)), Some(StopReason::Gap));
+        let plain = budget_rules(&Budget::rounds(7));
+        assert_eq!(plain.round_cap(), Some(7));
+        assert!(!plain.requires_reference_optimum());
+        assert!(plain.describe().contains("max_rounds(7)"));
+    }
+
+    #[test]
+    fn empty_combinators_never_fire() {
+        let mut any = Any::new(Vec::new());
+        assert_eq!(any.check(&obs(1, 0.0, 0.0)), None);
+        let mut all = All::new(Vec::new());
+        assert_eq!(all.check(&obs(1, 0.0, 0.0)), None);
+        assert_eq!(all.round_cap(), None);
+    }
+}

@@ -28,6 +28,10 @@ pub enum Error {
     /// `Backend::Pjrt` selected but the artifacts directory is missing its
     /// `manifest.tsv` (run `make artifacts` first).
     MissingArtifacts { dir: String },
+    /// A run budget / driver spec failed validation — e.g. an evaluation
+    /// cadence of 0, which would disable evaluation entirely (the old
+    /// behavior silently clamped it to 1).
+    InvalidBudget { reason: String },
     /// A run budget stops on primal suboptimality (`target_subopt > 0`)
     /// but the session has no reference optimum to measure against — call
     /// [`Session::set_reference_optimum`](crate::Session::set_reference_optimum)
@@ -81,6 +85,7 @@ impl fmt::Display for Error {
                 "PJRT backend selected but {dir}/manifest.tsv does not exist \
                  (run `make artifacts` first)"
             ),
+            Error::InvalidBudget { reason } => write!(f, "invalid budget: {reason}"),
             Error::MissingReferenceOptimum => write!(
                 f,
                 "budget stops on suboptimality but no reference optimum is set: \
@@ -139,6 +144,7 @@ mod tests {
             Error::InvalidLambda { value: -1.0 }.to_string(),
             Error::TooManyWorkers { k: 8, n: 4 }.to_string(),
             Error::MissingArtifacts { dir: "artifacts".into() }.to_string(),
+            Error::InvalidBudget { reason: "eval_every must be >= 1".into() }.to_string(),
             Error::InvalidTransport { reason: "drop_prob must be in [0, 1)".into() }.to_string(),
             Error::Transport { message: "replay diverged at event 3".into() }.to_string(),
         ];
@@ -146,8 +152,9 @@ mod tests {
         assert!(msgs[1].contains("-1"));
         assert!(msgs[2].contains("8 workers"));
         assert!(msgs[3].contains("manifest.tsv"));
-        assert!(msgs[4].contains("drop_prob"));
-        assert!(msgs[5].contains("replay diverged"));
+        assert!(msgs[4].contains("eval_every"));
+        assert!(msgs[5].contains("drop_prob"));
+        assert!(msgs[6].contains("replay diverged"));
     }
 
     #[test]

@@ -7,9 +7,10 @@
 //! points instead of re-partitioning and re-spawning per run (identical
 //! trajectories — reset restores the spawn-time rng streams).
 
-use crate::algorithms::{Algorithm, Budget, Cocoa, LocalSgd, MinibatchCd, MinibatchSgd};
+use crate::algorithms::{Algorithm, Cocoa, LocalSgd, MinibatchCd, MinibatchSgd};
 use crate::api::Session;
 use crate::config::Backend;
+use crate::driver::{IntoDriverSpec, MaxRounds, StoppingRule, SuboptBelow};
 use crate::error::Result;
 use crate::loss::LossKind;
 use crate::telemetry::Trace;
@@ -56,9 +57,13 @@ pub struct BestH {
 }
 
 /// Reset-then-run: every grid point starts from the spawn-identical state.
-fn warm_run(session: &mut Session, algo: &mut dyn Algorithm, budget: Budget) -> Result<Trace> {
+fn warm_run(
+    session: &mut Session,
+    algo: &mut dyn Algorithm,
+    stopping: impl IntoDriverSpec,
+) -> Result<Trace> {
     session.reset()?;
-    session.run(algo, budget)
+    session.run(algo, stopping)
 }
 
 /// Run every competitor over the H grid on one dataset and keep the best-H
@@ -75,7 +80,9 @@ pub fn fig1_fig2_dataset(
     let p_star = cached_optimum(ds, LossKind::Hinge, results_dir)?;
     let n_k = ds.data.n() / ds.k;
     let grid = h_grid(n_k, profile);
-    let budget = Budget::rounds(rounds).target_subopt(target / 4.0);
+    // overshoot the target 4x before the round cap ends the sweep point
+    // (subopt listed first: it names the stop when both fire together)
+    let stopping = || SuboptBelow::new(target / 4.0).or(MaxRounds::new(rounds));
 
     let mut session = make_session(
         ds,
@@ -90,7 +97,7 @@ pub fn fig1_fig2_dataset(
     let mut best: Vec<Option<BestH>> = vec![None, None, None, None];
     for &h in &grid {
         for (slot, mut algo) in competitors(h).into_iter().enumerate() {
-            let trace = warm_run(&mut session, algo.as_mut(), budget)?;
+            let trace = warm_run(&mut session, algo.as_mut(), stopping())?;
             let candidate = BestH {
                 algorithm: algo.name(),
                 h,
@@ -159,7 +166,7 @@ pub fn fig3(
     session.set_reference_optimum(Some(p_star));
     let mut out = Vec::new();
     for h in grid {
-        let trace = warm_run(&mut session, &mut Cocoa::new(h), Budget::rounds(rounds))?;
+        let trace = warm_run(&mut session, &mut Cocoa::new(h), MaxRounds::new(rounds))?;
         trace.to_csv(format!("{results_dir}/fig3/cocoa_h{h}.csv"))?;
         out.push((h, trace));
     }
@@ -192,7 +199,7 @@ pub fn fig4(
     let betas_k: Vec<f64> = vec![1.0, (k / 2.0).max(1.0), k];
     let betas_b: Vec<f64> =
         vec![1.0, (b_total / 100.0).max(1.0), (b_total / 10.0).max(1.0), b_total];
-    let budget = Budget::rounds(rounds).target_subopt(target / 4.0);
+    let stopping = || SuboptBelow::new(target / 4.0).or(MaxRounds::new(rounds));
 
     let mut session = make_session(
         ds,
@@ -208,7 +215,7 @@ pub fn fig4(
                        mut algo: Box<dyn Algorithm>,
                        beta: f64|
      -> Result<()> {
-        let trace = warm_run(session, algo.as_mut(), budget)?;
+        let trace = warm_run(session, algo.as_mut(), stopping())?;
         trace.to_csv(format!(
             "{results_dir}/fig4/{}_h{}_beta{}.csv",
             algo.name(),

@@ -13,8 +13,9 @@
 
 use anyhow::Result;
 
-use crate::algorithms::{Budget, Cocoa};
+use crate::algorithms::Cocoa;
 use crate::data::{CsrMatrix, Dataset, Features};
+use crate::driver::{DriverSpec, MaxRounds};
 use crate::loss::LossKind;
 use crate::objective;
 use crate::regularizers::{soft_threshold, RegularizerKind};
@@ -158,7 +159,7 @@ pub fn sparsity_recovery(
         let h = n / k; // one local pass per round
         let trace = session.run(
             &mut Cocoa::adding(h),
-            Budget::rounds(rounds).eval_every(10),
+            DriverSpec::new(MaxRounds::new(rounds)).eval_every(10),
         )?;
         trace.to_csv(format!("{results_dir}/fig_sparsity/lasso_K{k}.csv"))?;
 

@@ -3,9 +3,10 @@
 //! and check the measured dual convergence against the predicted geometric
 //! rate.
 
-use crate::algorithms::{Budget, Cocoa};
+use crate::algorithms::Cocoa;
 use crate::api::Trainer;
 use crate::data::{Dataset, Partition, PartitionStrategy};
+use crate::driver::MaxRounds;
 use crate::error::Result;
 use crate::loss::LossKind;
 use crate::netsim::NetworkModel;
@@ -60,7 +61,7 @@ pub fn validate(
         .seed(seed)
         .label("theory")
         .build()?;
-    let trace = session.run(&mut Cocoa::new(h), Budget::rounds(rounds))?;
+    let trace = session.run(&mut Cocoa::new(h), MaxRounds::new(rounds))?;
     session.shutdown();
 
     // measured geometric-mean contraction of the dual suboptimality

@@ -2,7 +2,8 @@
 //!
 //! A production-shaped reproduction of Jaggi, Smith, Takáč, Terhorst,
 //! Hofmann & Jordan, *Communication-Efficient Distributed Dual Coordinate
-//! Ascent* (NIPS 2014), built around two public types:
+//! Ascent* (NIPS 2014), built around three public types — a builder, a
+//! session, and a step-wise driver:
 //!
 //! * [`Trainer`] — a typed builder describing the problem (data, partition,
 //!   loss, lambda, regularizer, local solver, backend, network model,
@@ -13,6 +14,19 @@
 //!   worker threads owning disjoint coordinate blocks. One session runs
 //!   many algorithms ([`Session::run`]) and warm-starts between runs
 //!   ([`Session::reset`] keeps the threads, data, and PJRT bindings).
+//!
+//! The training loop itself is open: [`Session::drive`] yields a
+//! [`Driver`] — a resumable round state machine whose `step()` advances
+//! exactly one unit of the run and returns a typed
+//! [`RoundEvent`] (`RoundStarted`, `Evaluated`, `Checkpointed`,
+//! `Stopped`). Stopping criteria are composable
+//! [`StoppingRule`](driver::StoppingRule)s (`GapBelow`, `MaxRounds`,
+//! `SimTimeBelow`, `BytesBelow`, ... under `or`/`and` combinators);
+//! telemetry and persistence are pluggable
+//! [`Observer`](driver::Observer)s (incremental trace builder, streaming
+//! CSV/JSONL sinks, checkpoint retention, a live progress line).
+//! [`Session::run`] is the batch wrapper over the same machine, so the
+//! one-call path and the manual step loop produce bit-identical traces.
 //!
 //! Algorithms are a first-class trait ([`Algorithm`]): per round the driver
 //! asks the algorithm for each worker's [`coordinator::LocalWork`], gathers
@@ -38,58 +52,76 @@
 //!         .seed(7)
 //!         .build()?;
 //!
-//!     // 2. CoCoA with safe averaging (Algorithm 1, beta_K = 1)
+//!     // 2. batch mode: run until a composable stopping rule fires; the
+//!     //    trace's `stop` column records which criterion actually ended
+//!     //    the run (gap listed first, so it wins ties)
 //!     let h = data.n() / 4; // one local pass per round
-//!     let avg = session.run(&mut Cocoa::new(h), Budget::rounds(10))?;
+//!     let trace = session.run(
+//!         &mut Cocoa::new(h),
+//!         GapBelow::new(1e-3).or(MaxRounds::new(50)),
+//!     )?;
+//!     let last = trace.rows.last().unwrap();
+//!     println!("gap {:.2e} after {} rounds (stop = {})", last.gap, last.round, last.stop);
 //!
-//!     // 3. warm-start the same threads and compare the CoCoA+ adding
-//!     //    regime (beta_K = K over sigma' = K scaled subproblems)
+//!     // 3. step mode: the caller owns the round boundary. `step()`
+//!     //    yields typed events — drive one round at a time, inspect,
+//!     //    adapt, pause whenever you like
 //!     session.reset()?;
-//!     let add = session.run(&mut Cocoa::adding(h), Budget::rounds(10))?;
+//!     let mut plus = Cocoa::adding(h); // CoCoA+: beta_K = K adding
+//!     let mut driver = session.drive(&mut plus, MaxRounds::new(10))?;
+//!     loop {
+//!         match driver.step()? {
+//!             RoundEvent::Evaluated { row } => {
+//!                 println!("round {:>3}  gap {:.2e}", row.round, row.gap)
+//!             }
+//!             RoundEvent::Stopped { reason } => {
+//!                 println!("stopped: {reason}");
+//!                 break;
+//!             }
+//!             _ => {}
+//!         }
+//!     }
+//!     drop(driver); // releases the session for the next run
 //!
-//!     println!(
-//!         "gap after 10 rounds — averaging: {:.2e}, adding: {:.2e}",
-//!         avg.rows.last().unwrap().gap,
-//!         add.rows.last().unwrap().gap,
-//!     );
-//!
-//!     // 4. run until a target instead of a round count; the trace's
-//!     //    `stop` column records which criterion actually fired
+//!     // 4. observers: stream every evaluated row to disk and print a
+//!     //    live progress line, while a simulated-time budget (with a
+//!     //    round-cap safety net) decides when to stop
 //!     session.reset()?;
-//!     let trace = session.run(&mut Cocoa::new(h), Budget::until_gap(1e-3))?;
-//!     println!(
-//!         "gap 1e-3 after {} rounds (stop = {})",
-//!         trace.rows.last().unwrap().round,
-//!         trace.rows.last().unwrap().stop,
-//!     );
+//!     let mut csv = CsvSink::create("results/quickstart.csv")?;
+//!     let mut progress = ProgressLine::stderr();
+//!     let mut algo = Cocoa::new(h);
+//!     let mut driver = session.drive(
+//!         &mut algo,
+//!         SimTimeBelow::new(30.0).or(MaxRounds::new(200)),
+//!     )?;
+//!     driver.observe(&mut csv)?;
+//!     driver.observe(&mut progress)?;
+//!     let trace = driver.drain()?;
+//!     drop(driver);
+//!     println!("simulated {:.1}s", trace.rows.last().unwrap().sim_time_s);
 //!
-//!     // 5. open a lasso workload: the regularizer is pluggable, and the
-//!     //    epsilon-smoothed L1 plants exact zeros in w (leader-side prox;
-//!     //    `w_nnz` in the trace tracks the recovered support)
+//!     // 5. the rest of the problem space is pluggable too: swap the
+//!     //    regularizer for a lasso workload with exact zeros...
 //!     let mut lasso = Trainer::on(&data)
 //!         .workers(4)
 //!         .loss(LossKind::Squared)
 //!         .lambda(0.05)
 //!         .regularizer(RegularizerKind::L1 { epsilon: 0.5 })
 //!         .build()?;
-//!     let trace = lasso.run(&mut Cocoa::new(h), Budget::rounds(10))?;
-//!     println!(
-//!         "lasso: {} of {} coordinates nonzero, gap {:.2e}",
-//!         trace.rows.last().unwrap().w_nnz,
-//!         lasso.d(),
-//!         trace.rows.last().unwrap().gap,
-//!     );
+//!     let trace = lasso.run(&mut Cocoa::new(h), MaxRounds::new(10))?;
+//!     println!("lasso: {} nonzero of {}", trace.rows.last().unwrap().w_nnz, lasso.d());
 //!
-//!     // 6. measure real communication: a byte-exact transport makes the
-//!     //    measured wire bytes (headers, sparse dw encodings) drive the
-//!     //    simulated round time and the bytes_measured trace column
+//!     // ...or the transport, to stop on *measured* wire bytes
 //!     let mut counted = Trainer::on(&data)
 //!         .workers(4)
 //!         .lambda(1.0 / data.n() as f64)
 //!         .network(NetworkModel::ec2_like())
 //!         .transport(TransportKind::Counted)
 //!         .build()?;
-//!     let trace = counted.run(&mut Cocoa::new(h), Budget::rounds(5))?;
+//!     let trace = counted.run(
+//!         &mut Cocoa::new(h),
+//!         BytesBelow::new(64 << 20).or(MaxRounds::new(100)),
+//!     )?;
 //!     println!(
 //!         "measured {} B on the wire (modeled {} B)",
 //!         trace.rows.last().unwrap().bytes_measured,
@@ -98,6 +130,11 @@
 //!     Ok(())
 //! }
 //! ```
+//!
+//! The legacy [`Budget`] struct still works everywhere a stopping rule
+//! does (it validates and converts into `gap -> subopt -> max-rounds`
+//! rules in its historical precedence order), so pre-driver call sites
+//! keep compiling unchanged.
 //!
 //! Swap [`TransportKind::Counted`] for `TransportKind::SimNet(...)` to
 //! inject deterministic latency jitter, bounded drops/retransmits, and
@@ -142,6 +179,10 @@
 //!   record/replay.
 //! * [`algorithms`] — the [`Algorithm`] trait, the [`Aggregation`] policy,
 //!   and every Section-6 competitor as an implementation.
+//! * [`driver`] — the step-wise round state machine behind every run:
+//!   [`Driver`] with typed [`RoundEvent`]s, composable
+//!   [`driver::stopping`] rules, and pluggable [`driver::observers`]
+//!   (trace builder, streaming CSV/JSONL, checkpoint policy, progress).
 //! * [`api`] — the [`Trainer`] builder and [`Session`] facade.
 //! * [`objective`] — primal/dual objectives and the duality-gap certificate.
 //! * [`netsim`] — the network cost model that turns counted communication
@@ -162,6 +203,7 @@ pub mod error;
 pub mod util;
 pub mod coordinator;
 pub mod data;
+pub mod driver;
 pub mod experiments;
 pub mod kernels;
 pub mod loss;
@@ -180,6 +222,7 @@ pub use api::{Session, Trainer};
 pub use config::ExperimentConfig;
 pub use coordinator::Cluster;
 pub use data::{Dataset, Partition};
+pub use driver::{Driver, DriverSpec, IntoDriverSpec, RoundEvent, RunMeta};
 pub use error::{Error, Result};
 pub use loss::LossKind;
 pub use regularizers::RegularizerKind;
@@ -195,6 +238,11 @@ pub mod prelude {
     pub use crate::api::{Session, Trainer};
     pub use crate::config::{AlgorithmSpec, Backend, ExperimentConfig};
     pub use crate::data::{Dataset, Partition, PartitionStrategy};
+    pub use crate::driver::{
+        All, Any, BytesBelow, CheckpointSink, CsvSink, Driver, DriverSpec, EventLog, GapBelow,
+        IntoDriverSpec, JsonlSink, MaxRounds, Observation, Observer, ProgressLine, RoundEvent,
+        RunMeta, SimTimeBelow, StoppingRule, SuboptBelow, TraceSink,
+    };
     pub use crate::error::{Error, Result};
     pub use crate::loss::LossKind;
     pub use crate::netsim::{NetworkModel, StragglerModel};

@@ -1,7 +1,7 @@
 //! `cocoa` — CLI launcher for the CoCoA distributed training framework.
 //!
 //! Subcommands:
-//!   train --config <toml> [--out <csv>] [--p-star <f64>]
+//!   train --config <toml> [--out <csv>] [--p-star <f64>] [--progress]
 //!   repro <table1|fig1|fig2|fig3|fig4|headline|sparsity|theory|all>
 //!         [--smoke] [--results-dir <dir>] [--rounds <n>]
 //!   perf [--smoke] [--out <json>] [--seed <n>] | perf --validate <json>
@@ -16,6 +16,7 @@ use anyhow::{anyhow, bail, Result};
 
 use cocoa::config::ExperimentConfig;
 use cocoa::data;
+use cocoa::driver::ProgressLine;
 use cocoa::experiments::{self, figures, theory_val, Profile};
 use cocoa::objective;
 use cocoa::perf::{self, PerfProfile};
@@ -64,7 +65,7 @@ const USAGE: &str = "\
 cocoa — communication-efficient distributed dual coordinate ascent (NIPS 2014 reproduction)
 
 USAGE:
-  cocoa train --config <toml> [--out <csv>] [--p-star <f64>]
+  cocoa train --config <toml> [--out <csv>] [--p-star <f64>] [--progress]
   cocoa repro <table1|fig1|fig2|fig3|fig4|headline|sparsity|theory|all> [--smoke] [--results-dir <dir>] [--rounds <n>]
   cocoa perf [--smoke] [--out <json>] [--seed <n>]
   cocoa perf --validate <json>
@@ -80,9 +81,14 @@ fn main() -> Result<()> {
     };
     match cmd.as_str() {
         "train" => {
-            let args = Args::parse(&argv[1..], &[])?;
+            let args = Args::parse(&argv[1..], &["progress"])?;
             let p_star = args.opt("p-star").map(|s| s.parse()).transpose()?;
-            train(args.req("config")?, args.opt("out").map(String::from), p_star)
+            train(
+                args.req("config")?,
+                args.opt("out").map(String::from),
+                p_star,
+                args.flags.contains("progress"),
+            )
         }
         "repro" => {
             let args = Args::parse(&argv[1..], &["smoke"])?;
@@ -138,7 +144,7 @@ fn main() -> Result<()> {
     }
 }
 
-fn train(config_path: &str, out: Option<String>, p_star: Option<f64>) -> Result<()> {
+fn train(config_path: &str, out: Option<String>, p_star: Option<f64>, progress: bool) -> Result<()> {
     let cfg = ExperimentConfig::from_toml_file(config_path)?;
     let data = cfg.dataset.load()?;
     eprintln!(
@@ -163,7 +169,16 @@ fn train(config_path: &str, out: Option<String>, p_star: Option<f64>) -> Result<
         );
         budget.target_subopt = 0.0;
     }
-    let trace = session.run(algorithm.as_mut(), budget)?;
+    let trace = if progress {
+        // live per-round status (round, gap, wire bytes, sim time) on
+        // stderr, implemented as a driver Observer — stdout stays clean
+        let mut line = ProgressLine::stderr();
+        let mut driver = session.drive(algorithm.as_mut(), budget)?;
+        driver.observe(&mut line)?;
+        driver.drain()?
+    } else {
+        session.run(algorithm.as_mut(), budget)?
+    };
     let d = session.d();
     session.shutdown();
 

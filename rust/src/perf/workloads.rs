@@ -22,8 +22,9 @@ use std::io::Write;
 use std::path::Path;
 use std::time::Instant;
 
-use crate::algorithms::{Budget, Cocoa};
+use crate::algorithms::Cocoa;
 use crate::data::{cov_like, rcv1_like, Dataset};
+use crate::driver::{GapBelow, MaxRounds, StoppingRule};
 use crate::loss::LossKind;
 use crate::netsim::NetworkModel;
 use crate::regularizers::RegularizerKind;
@@ -157,9 +158,9 @@ pub fn run_all(profile: PerfProfile, seed: u64) -> crate::Result<BenchReport> {
             .seed(seed)
             .label(spec.name)
             .build()?;
-        let budget = Budget::until_gap(1e-3).max_rounds(spec.max_rounds);
+        let stopping = GapBelow::new(1e-3).or(MaxRounds::new(spec.max_rounds));
         let t0 = Instant::now();
-        let trace = session.run(&mut Cocoa::new(h), budget)?;
+        let trace = session.run(&mut Cocoa::new(h), stopping)?;
         let wall_s = t0.elapsed().as_secs_f64();
         let stats = *session.stats();
         session.shutdown();

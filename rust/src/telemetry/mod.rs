@@ -29,6 +29,12 @@ pub enum StopReason {
     /// The primal-suboptimality target (`Budget::until_subopt` /
     /// `target_subopt`) fired.
     Subopt,
+    /// A simulated-time budget (the driver's `SimTimeBelow` stopping
+    /// rule) ran out.
+    SimTime,
+    /// A communication budget (the driver's `BytesBelow` stopping rule)
+    /// ran out.
+    Bytes,
 }
 
 impl StopReason {
@@ -38,6 +44,8 @@ impl StopReason {
             StopReason::MaxRounds => "max_rounds",
             StopReason::Gap => "gap",
             StopReason::Subopt => "subopt",
+            StopReason::SimTime => "sim_time",
+            StopReason::Bytes => "bytes",
         }
     }
 
@@ -48,6 +56,8 @@ impl StopReason {
             "max_rounds" => Some(StopReason::MaxRounds),
             "gap" => Some(StopReason::Gap),
             "subopt" => Some(StopReason::Subopt),
+            "sim_time" => Some(StopReason::SimTime),
+            "bytes" => Some(StopReason::Bytes),
             _ => None,
         }
     }
@@ -60,7 +70,7 @@ impl std::fmt::Display for StopReason {
 }
 
 /// One evaluated point of a run.
-#[derive(Debug, Clone, Copy)]
+#[derive(Debug, Clone, Copy, PartialEq)]
 pub struct TraceRow {
     pub round: u64,
     /// Simulated distributed time (netsim model; excludes evaluation cost).
@@ -91,6 +101,66 @@ pub struct TraceRow {
     /// Which stop criterion fired at this row ([`StopReason::Running`] on
     /// non-final rows).
     pub stop: StopReason,
+}
+
+impl TraceRow {
+    /// The run's best-known byte count so far: the byte-exact measured
+    /// total when a measuring transport is active, the analytic modeled
+    /// total otherwise. The one convention shared by everything that
+    /// reasons about "bytes on the wire" (progress lines, byte-budget
+    /// stopping rules).
+    pub fn wire_bytes(&self) -> u64 {
+        if self.bytes_measured > 0 {
+            self.bytes_measured
+        } else {
+            self.bytes_modeled
+        }
+    }
+
+    /// This row as one line of the [`Trace::CSV_HEADER`] schema — the
+    /// exact text [`Trace::to_csv`] writes, shared with the streaming
+    /// CSV observer sink so batch files and streamed files stay
+    /// byte-identical.
+    pub fn csv_line(&self) -> String {
+        format!(
+            "{},{},{},{},{},{},{},{},{},{},{},{},{}",
+            self.round,
+            self.sim_time_s,
+            self.compute_time_s,
+            self.vectors,
+            self.bytes_modeled,
+            self.bytes_measured,
+            self.inner_steps,
+            self.primal,
+            self.dual,
+            self.gap,
+            self.primal_subopt,
+            self.w_nnz,
+            self.stop
+        )
+    }
+
+    /// This row as one JSON object — the exact object [`Trace::to_json`]
+    /// nests in its `rows` array, and one line of the streaming JSONL
+    /// observer sink (NaN/inf encode as `null`).
+    pub fn to_json_object(&self) -> String {
+        format!(
+            "{{\"round\": {}, \"sim_time_s\": {}, \"compute_time_s\": {}, \"vectors\": {}, \"bytes_modeled\": {}, \"bytes_measured\": {}, \"inner_steps\": {}, \"primal\": {}, \"dual\": {}, \"gap\": {}, \"primal_subopt\": {}, \"w_nnz\": {}, \"stop\": \"{}\"}}",
+            self.round,
+            json_f64(self.sim_time_s),
+            json_f64(self.compute_time_s),
+            self.vectors,
+            self.bytes_modeled,
+            self.bytes_measured,
+            self.inner_steps,
+            json_f64(self.primal),
+            json_f64(self.dual),
+            json_f64(self.gap),
+            json_f64(self.primal_subopt),
+            self.w_nnz,
+            self.stop,
+        )
+    }
 }
 
 /// A full run history plus identifying metadata.
@@ -174,23 +244,7 @@ impl Trace {
             .with_context(|| format!("create {}", path.as_ref().display()))?;
         writeln!(f, "{}", Self::CSV_HEADER)?;
         for r in &self.rows {
-            writeln!(
-                f,
-                "{},{},{},{},{},{},{},{},{},{},{},{},{}",
-                r.round,
-                r.sim_time_s,
-                r.compute_time_s,
-                r.vectors,
-                r.bytes_modeled,
-                r.bytes_measured,
-                r.inner_steps,
-                r.primal,
-                r.dual,
-                r.gap,
-                r.primal_subopt,
-                r.w_nnz,
-                r.stop
-            )?;
+            writeln!(f, "{}", r.csv_line())?;
         }
         Ok(())
     }
@@ -204,8 +258,8 @@ impl Trace {
         let mut f = std::fs::File::create(&path)
             .with_context(|| format!("create {}", path.as_ref().display()))?;
         writeln!(f, "{{")?;
-        writeln!(f, "  \"algorithm\": \"{}\",", self.algorithm)?;
-        writeln!(f, "  \"dataset\": \"{}\",", self.dataset)?;
+        writeln!(f, "  \"algorithm\": \"{}\",", json_escape(&self.algorithm))?;
+        writeln!(f, "  \"dataset\": \"{}\",", json_escape(&self.dataset))?;
         writeln!(f, "  \"k\": {},", self.k)?;
         writeln!(f, "  \"h\": {},", self.h)?;
         writeln!(f, "  \"beta\": {},", json_f64(self.beta))?;
@@ -213,24 +267,7 @@ impl Trace {
         writeln!(f, "  \"rows\": [")?;
         for (i, r) in self.rows.iter().enumerate() {
             let sep = if i + 1 == self.rows.len() { "" } else { "," };
-            writeln!(
-                f,
-                "    {{\"round\": {}, \"sim_time_s\": {}, \"compute_time_s\": {}, \"vectors\": {}, \"bytes_modeled\": {}, \"bytes_measured\": {}, \"inner_steps\": {}, \"primal\": {}, \"dual\": {}, \"gap\": {}, \"primal_subopt\": {}, \"w_nnz\": {}, \"stop\": \"{}\"}}{}",
-                r.round,
-                json_f64(r.sim_time_s),
-                json_f64(r.compute_time_s),
-                r.vectors,
-                r.bytes_modeled,
-                r.bytes_measured,
-                r.inner_steps,
-                json_f64(r.primal),
-                json_f64(r.dual),
-                json_f64(r.gap),
-                json_f64(r.primal_subopt),
-                r.w_nnz,
-                r.stop,
-                sep,
-            )?;
+            writeln!(f, "    {}{}", r.to_json_object(), sep)?;
         }
         writeln!(f, "  ]")?;
         writeln!(f, "}}")?;
@@ -246,6 +283,26 @@ pub(crate) fn json_f64(v: f64) -> String {
     } else {
         "null".to_string()
     }
+}
+
+/// Escape a string for embedding in a JSON string literal. Labels and
+/// algorithm names are arbitrary caller strings ([`crate::Trainer::label`],
+/// TOML configs) — a quote or backslash in one must not corrupt the
+/// hand-rolled JSON writers.
+pub(crate) fn json_escape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out
 }
 
 /// Thread CPU-time clock: measures a worker's *own* compute, immune to the
@@ -438,11 +495,46 @@ mod tests {
             StopReason::MaxRounds,
             StopReason::Gap,
             StopReason::Subopt,
+            StopReason::SimTime,
+            StopReason::Bytes,
         ] {
             assert_eq!(StopReason::from_name(reason.as_str()), Some(reason));
         }
         assert_eq!(StopReason::from_name("because"), None);
         assert_eq!(StopReason::default(), StopReason::Running);
+    }
+
+    #[test]
+    fn row_formatters_match_the_batch_writers() {
+        // the streaming sinks reuse these exact strings: one CSV line per
+        // row under the shared header, one JSON object per row
+        let r = row(3, 1.5, 24, 0.01, 0.02);
+        let line = r.csv_line();
+        assert_eq!(line.split(',').count(), 13);
+        assert!(line.starts_with("3,1.5,0.75,24,"));
+        assert!(line.ends_with(",running"));
+        let obj = r.to_json_object();
+        assert!(obj.starts_with("{\"round\": 3,"));
+        assert!(obj.ends_with("\"stop\": \"running\"}"));
+        let mut nan_row = r;
+        nan_row.primal_subopt = f64::NAN;
+        assert!(nan_row.to_json_object().contains("\"primal_subopt\": null"));
+    }
+
+    #[test]
+    fn json_escape_handles_quotes_backslashes_and_controls() {
+        assert_eq!(json_escape("plain"), "plain");
+        assert_eq!(json_escape("a\"b"), "a\\\"b");
+        assert_eq!(json_escape("a\\b"), "a\\\\b");
+        assert_eq!(json_escape("a\nb\tc"), "a\\nb\\tc");
+        assert_eq!(json_escape("\u{1}"), "\\u0001");
+        // a hostile dataset label cannot corrupt the JSON writer
+        let mut tr = Trace::new("cocoa", "rcv1 \"full\"", 1, 1, 1.0, 0.1);
+        tr.push(row(1, 1.0, 8, 0.1, 0.2));
+        let p = std::env::temp_dir().join("cocoa_trace_test/escaped.json");
+        tr.to_json(&p).unwrap();
+        let json = std::fs::read_to_string(&p).unwrap();
+        assert!(json.contains("\"dataset\": \"rcv1 \\\"full\\\"\""), "{json}");
     }
 
     #[test]

@@ -232,6 +232,28 @@ fn partition_seed_is_order_insensitive() {
 }
 
 #[test]
+fn zero_eval_cadence_is_rejected_typed() {
+    // eval_every(0) used to be silently clamped to 1; it is now a typed
+    // validation error on every road into the driver
+    let data = cov_like(40, 5, 0.1, 3);
+    let mut session = Trainer::on(&data).workers(2).lambda(0.1).build().unwrap();
+    let err = session.run(&mut Cocoa::new(5), Budget::rounds(3).eval_every(0)).unwrap_err();
+    assert!(matches!(err, Error::InvalidBudget { .. }), "{err}");
+    assert!(err.to_string().contains("eval_every"), "{err}");
+    // the DriverSpec cadence knob is validated the same way
+    let mut algo = Cocoa::new(5);
+    let err = session
+        .drive(&mut algo, DriverSpec::new(MaxRounds::new(3)).eval_every(0))
+        .err()
+        .expect("zero cadence must not build a driver");
+    assert!(matches!(err, Error::InvalidBudget { .. }), "{err}");
+    // a valid budget still runs on this session afterwards
+    let trace = session.run(&mut Cocoa::new(5), Budget::rounds(2)).unwrap();
+    assert_eq!(trace.rows.len(), 3);
+    session.shutdown();
+}
+
+#[test]
 fn session_reset_reproduces_the_run_exactly() {
     // Warm-start contract: reset() + run == fresh build + run, bit for bit.
     let data = cov_like(150, 6, 0.1, 9);

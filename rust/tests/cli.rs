@@ -91,6 +91,62 @@ rounds = 5
 }
 
 #[test]
+fn train_progress_streams_live_round_lines() {
+    let dir = tmpdir("train_progress");
+    let cfg_path = dir.join("exp.toml");
+    let trace_path = dir.join("trace.csv");
+    std::fs::write(
+        &cfg_path,
+        r#"
+lambda = 0.01
+
+[dataset]
+kind = "cov_like"
+n = 120
+d = 6
+seed = 5
+
+[partition]
+k = 2
+
+[algorithm]
+name = "cocoa"
+h = 40
+
+[loss]
+kind = "hinge"
+
+[run]
+rounds = 4
+"#,
+    )
+    .unwrap();
+    let out = bin()
+        .arg("train")
+        .args(["--config"])
+        .arg(&cfg_path)
+        .args(["--progress", "--out"])
+        .arg(&trace_path)
+        .output()
+        .unwrap();
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    // the progress observer streams one line per evaluated round to
+    // stderr (round, gap, bytes, sim time) and names the stop reason
+    let stderr = String::from_utf8_lossy(&out.stderr);
+    assert!(stderr.contains("cocoa round"), "stderr: {stderr}");
+    assert!(stderr.contains("| gap"), "stderr: {stderr}");
+    assert!(stderr.contains("| sim") || stderr.contains("sim "), "stderr: {stderr}");
+    assert!(stderr.contains("stopped: max_rounds"), "stderr: {stderr}");
+    // one line per evaluated round: 0..=4, plus the stop line
+    assert_eq!(stderr.matches("cocoa round").count(), 5, "stderr: {stderr}");
+    // stdout summary and the trace file are unaffected by --progress
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    assert!(stdout.contains("finished: rounds=4"), "stdout: {stdout}");
+    let trace = std::fs::read_to_string(&trace_path).unwrap();
+    assert_eq!(trace.lines().count(), 6); // header + rounds 0..=4
+}
+
+#[test]
 fn train_rejects_bad_config() {
     let dir = tmpdir("badcfg");
     let cfg_path = dir.join("bad.toml");

@@ -1,0 +1,475 @@
+//! Driver equivalence + event-stream invariants: the seeded golden suite
+//! behind the step-wise Driver redesign.
+//!
+//! * `Session::run` (the batch compatibility wrapper) and a manual
+//!   `Driver::step()`-until-stopped loop must produce bit-identical
+//!   traces across losses (hinge / logistic / smoothed-L1 lasso) and
+//!   K ∈ {1, 4}. Live runs are compared on every deterministic column
+//!   (objectives, bytes, counters, stop reasons); the timing columns
+//!   (`sim_time_s` / `compute_time_s`) fold in *measured* thread-CPU
+//!   compute, so their bit-identity is proven through the record/replay
+//!   transport, where every reply — compute times included — comes off
+//!   one shared tape.
+//! * The event stream obeys its grammar: exactly one terminal `Stopped`,
+//!   strictly increasing rounds, evaluation cadence honored.
+//! * A driver paused mid-run, checkpointed, restored into a fresh
+//!   session, and resumed reaches the exact final gap of an
+//!   uninterrupted run.
+//! * A seeded driver run streams a JSONL artifact for the CI
+//!   run-twice-and-diff determinism gate.
+
+use std::sync::Arc;
+
+use cocoa::coordinator::Checkpoint;
+use cocoa::data::cov_like;
+use cocoa::prelude::*;
+
+struct Case {
+    name: &'static str,
+    loss: LossKind,
+    regularizer: RegularizerKind,
+    lambda: f64,
+}
+
+fn cases() -> Vec<Case> {
+    vec![
+        Case { name: "hinge", loss: LossKind::Hinge, regularizer: RegularizerKind::L2, lambda: 0.05 },
+        Case {
+            name: "logistic",
+            loss: LossKind::Logistic,
+            regularizer: RegularizerKind::L2,
+            lambda: 0.05,
+        },
+        Case {
+            name: "smoothed_l1",
+            loss: LossKind::Squared,
+            regularizer: RegularizerKind::L1 { epsilon: 0.5 },
+            lambda: 0.1,
+        },
+    ]
+}
+
+fn build_session(case: &Case, k: usize, seed: u64) -> Session {
+    let data = cov_like(96, 7, 0.1, seed);
+    Trainer::on(&data)
+        .workers(k)
+        .loss(case.loss)
+        .lambda(case.lambda)
+        .regularizer(case.regularizer)
+        .seed(seed)
+        .label(case.name)
+        .build()
+        .unwrap()
+}
+
+/// Bit-exact comparison. `include_times` additionally pins the
+/// `sim_time_s` / `compute_time_s` columns — only meaningful when both
+/// traces come off the same replay tape (live runs measure real
+/// thread-CPU compute, which is not reproducible).
+fn assert_rows_bit_identical(a: &Trace, b: &Trace, context: &str, include_times: bool) {
+    assert_eq!(a.rows.len(), b.rows.len(), "{context}: row counts differ");
+    for (ra, rb) in a.rows.iter().zip(&b.rows) {
+        let ctx = format!("{context}, round {}", ra.round);
+        assert_eq!(ra.round, rb.round, "{ctx}");
+        if include_times {
+            assert_eq!(ra.sim_time_s.to_bits(), rb.sim_time_s.to_bits(), "{ctx}: sim_time");
+            assert_eq!(
+                ra.compute_time_s.to_bits(),
+                rb.compute_time_s.to_bits(),
+                "{ctx}: compute"
+            );
+        }
+        assert_eq!(ra.vectors, rb.vectors, "{ctx}: vectors");
+        assert_eq!(ra.bytes_modeled, rb.bytes_modeled, "{ctx}: bytes_modeled");
+        assert_eq!(ra.bytes_measured, rb.bytes_measured, "{ctx}: bytes_measured");
+        assert_eq!(ra.inner_steps, rb.inner_steps, "{ctx}: inner_steps");
+        assert_eq!(ra.primal.to_bits(), rb.primal.to_bits(), "{ctx}: primal");
+        assert!(
+            ra.dual.to_bits() == rb.dual.to_bits() || (ra.dual.is_nan() && rb.dual.is_nan()),
+            "{ctx}: dual {} vs {}",
+            ra.dual,
+            rb.dual
+        );
+        assert_eq!(ra.gap.to_bits(), rb.gap.to_bits(), "{ctx}: gap");
+        assert!(
+            ra.primal_subopt.to_bits() == rb.primal_subopt.to_bits()
+                || (ra.primal_subopt.is_nan() && rb.primal_subopt.is_nan()),
+            "{ctx}: subopt"
+        );
+        assert_eq!(ra.w_nnz, rb.w_nnz, "{ctx}: w_nnz");
+        assert_eq!(ra.stop, rb.stop, "{ctx}: stop reason");
+    }
+}
+
+/// The core golden equivalence: batch wrapper == manual step loop on
+/// every deterministic column, for every loss family and K in {1, 4},
+/// on an off-unit evaluation cadence (so the cadence logic itself is
+/// exercised).
+#[test]
+fn stepwise_loop_matches_batch_run_bitwise() {
+    for case in cases() {
+        for k in [1usize, 4] {
+            let mut session = build_session(&case, k, 11);
+            let batch = session
+                .run(&mut Cocoa::new(30), DriverSpec::new(MaxRounds::new(7)).eval_every(2))
+                .unwrap();
+
+            // same session, warm-started: drive the identical run by hand
+            session.reset().unwrap();
+            let mut sink = TraceSink::new();
+            let mut algo = Cocoa::new(30);
+            let mut driver = session
+                .drive(&mut algo, DriverSpec::new(MaxRounds::new(7)).eval_every(2))
+                .unwrap();
+            driver.observe(&mut sink).unwrap();
+            while !driver.step().unwrap().is_stopped() {}
+            assert_eq!(driver.finished(), Some(StopReason::MaxRounds));
+            drop(driver);
+            let manual = sink.take().unwrap();
+
+            let context = format!("{} K={k}", case.name);
+            assert_rows_bit_identical(&batch, &manual, &context, false);
+            // the final row carries the round cap as its stop reason, and
+            // the cadence put rows at 0, 2, 4, 6, 7
+            assert_eq!(manual.rows.last().unwrap().stop, StopReason::MaxRounds, "{context}");
+            let rounds: Vec<u64> = manual.rows.iter().map(|r| r.round).collect();
+            assert_eq!(rounds, vec![0, 2, 4, 6, 7], "{context}");
+            session.shutdown();
+        }
+    }
+}
+
+/// Full bit-identity *including the timing columns*: record a batch run
+/// to a transcript, then replay the tape through a manual
+/// `Driver::step()` loop — every reply (measured compute times included)
+/// is served from the tape, so the manual loop must reproduce the
+/// recorded batch trace bit for bit, `sim_time_s` and all. This pins
+/// that the step machine issues exactly the same message sequence as the
+/// batch wrapper.
+#[test]
+fn replayed_step_loop_reproduces_batch_run_including_sim_time() {
+    let all = cases();
+    let case = &all[0];
+    let data = cov_like(96, 7, 0.1, 17);
+    let build = |transport: TransportKind| {
+        Trainer::on(&data)
+            .workers(3)
+            .loss(case.loss)
+            .lambda(case.lambda)
+            .network(NetworkModel::ec2_like())
+            .transport(transport)
+            .seed(17)
+            .label("driver_replay")
+            .build()
+            .unwrap()
+    };
+    let spec = || DriverSpec::new(MaxRounds::new(6)).eval_every(2);
+
+    let mut recorder = build(TransportKind::Record);
+    let recorded = recorder.run(&mut Cocoa::new(20), spec()).unwrap();
+    let tape = Arc::new(recorder.take_transcript().expect("record keeps a tape"));
+    recorder.shutdown();
+
+    let mut replayer = build(TransportKind::Replay(tape));
+    let mut sink = TraceSink::new();
+    let mut algo = Cocoa::new(20);
+    let mut driver = replayer.drive(&mut algo, spec()).unwrap();
+    driver.observe(&mut sink).unwrap();
+    while !driver.step().unwrap().is_stopped() {}
+    drop(driver);
+    let manual = sink.take().unwrap();
+    replayer.shutdown();
+
+    assert_rows_bit_identical(&recorded, &manual, "record vs replayed step loop", true);
+}
+
+/// Target-gap stopping: wrapper and manual loop agree on when to stop and
+/// why, and the session's checkpoint remembers the reason.
+#[test]
+fn until_gap_equivalence_includes_stop_reason() {
+    let all = cases();
+    let case = &all[0];
+    let mut session = build_session(case, 2, 7);
+    let batch = session.run(&mut Cocoa::new(200), Budget::until_gap(0.05).max_rounds(500)).unwrap();
+    assert_eq!(batch.rows.last().unwrap().stop, StopReason::Gap);
+    assert_eq!(session.checkpoint().unwrap().stop, StopReason::Gap);
+
+    session.reset().unwrap();
+    let mut algo = Cocoa::new(200);
+    let mut sink = TraceSink::new();
+    // the composable spelling of the same budget
+    let mut driver =
+        session.drive(&mut algo, GapBelow::new(0.05).or(MaxRounds::new(500))).unwrap();
+    driver.observe(&mut sink).unwrap();
+    let manual = driver.drain().unwrap();
+    assert_eq!(driver.finished(), Some(StopReason::Gap));
+    drop(driver);
+
+    assert_rows_bit_identical(&batch, &manual, "until_gap", false);
+    // the observer saw exactly the drained trace
+    assert_rows_bit_identical(&manual, &sink.take().unwrap(), "until_gap observer", true);
+    assert_eq!(session.checkpoint().unwrap().stop, StopReason::Gap);
+    session.shutdown();
+}
+
+/// Event-stream grammar: one terminal Stopped, strictly increasing
+/// rounds, evaluation cadence honored (plus the forced final evaluation).
+#[test]
+fn event_stream_invariants_hold() {
+    let all = cases();
+    let case = &all[0];
+    let mut session = build_session(case, 3, 5);
+    let mut log = EventLog::new();
+    let mut algo = Cocoa::new(20);
+    let mut driver =
+        session.drive(&mut algo, DriverSpec::new(MaxRounds::new(9)).eval_every(3)).unwrap();
+    driver.observe(&mut log).unwrap();
+    let trace = driver.drain().unwrap();
+    drop(driver);
+    let events = log.events();
+
+    // exactly one Stopped, and it is the last event
+    let stopped: Vec<usize> = events
+        .iter()
+        .enumerate()
+        .filter_map(|(i, e)| e.is_stopped().then_some(i))
+        .collect();
+    assert_eq!(stopped, vec![events.len() - 1], "one terminal Stopped: {events:?}");
+
+    // the first event is the round-0 snapshot
+    assert!(
+        matches!(events[0], RoundEvent::Evaluated { row } if row.round == 0),
+        "{events:?}"
+    );
+
+    // RoundStarted rounds are exactly 1..=9, strictly increasing
+    let started: Vec<u64> = events
+        .iter()
+        .filter_map(|e| match e {
+            RoundEvent::RoundStarted { round } => Some(*round),
+            _ => None,
+        })
+        .collect();
+    assert_eq!(started, (1..=9).collect::<Vec<u64>>());
+
+    // Evaluated rounds honor the cadence: 0, 3, 6, 9 (9 is also the cap)
+    let evaluated: Vec<u64> = events
+        .iter()
+        .filter_map(|e| match e {
+            RoundEvent::Evaluated { row } => Some(row.round),
+            _ => None,
+        })
+        .collect();
+    assert_eq!(evaluated, vec![0, 3, 6, 9]);
+    assert_eq!(trace.rows.len(), evaluated.len());
+
+    // each Evaluated (past the snapshot) follows its own RoundStarted
+    for (i, e) in events.iter().enumerate() {
+        if let RoundEvent::Evaluated { row } = e {
+            if row.round > 0 {
+                assert!(
+                    events[..i]
+                        .iter()
+                        .any(|p| matches!(p, RoundEvent::RoundStarted { round } if *round == row.round)),
+                    "Evaluated round {} before its RoundStarted",
+                    row.round
+                );
+            }
+        }
+    }
+    session.shutdown();
+}
+
+/// The acceptance scenario: pause a driver mid-run, checkpoint through a
+/// save/load round-trip, restore into a *fresh* session, resume — and
+/// land on the exact final gap of an uninterrupted run (every
+/// deterministic column; timing columns fold in measured compute).
+#[test]
+fn pause_checkpoint_resume_matches_uninterrupted_run() {
+    let all = cases();
+    let case = &all[0];
+    let total_rounds = 8u64;
+    let pause_after = 3u64;
+
+    let mut uninterrupted = build_session(case, 3, 21);
+    let full = uninterrupted.run(&mut Cocoa::new(25), MaxRounds::new(total_rounds)).unwrap();
+    let final_full = *full.rows.last().unwrap();
+    uninterrupted.shutdown();
+
+    // run the first `pause_after` rounds, then drop the driver mid-run
+    let mut session = build_session(case, 3, 21);
+    {
+        let mut algo = Cocoa::new(25);
+        let mut driver = session.drive(&mut algo, MaxRounds::new(total_rounds)).unwrap();
+        let mut evals = 0u64;
+        while evals <= pause_after {
+            if let RoundEvent::Evaluated { .. } = driver.step().unwrap() {
+                evals += 1; // snapshot + rounds 1..=pause_after
+            }
+        }
+        assert_eq!(driver.rounds_completed(), pause_after);
+    } // driver dropped: the session sits at a valid round boundary
+
+    // checkpoint through the on-disk format
+    let dir = std::env::temp_dir().join("cocoa_driver_equivalence");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("pause.ckpt");
+    session.checkpoint().unwrap().save(&path).unwrap();
+    session.shutdown();
+    let cp = Checkpoint::load(&path).unwrap();
+    assert_eq!(cp.stop, StopReason::Running); // paused, not stopped
+
+    // fresh session, restored state, resumed driver
+    let mut resumed = build_session(case, 3, 21);
+    resumed.restore(&cp).unwrap();
+    let mut algo = Cocoa::new(25);
+    let mut driver = resumed.drive(&mut algo, MaxRounds::new(total_rounds)).unwrap();
+    driver.resume_from(pause_after).unwrap();
+    let tail = driver.drain().unwrap();
+    drop(driver);
+
+    // the tail picks up at round pause_after + 1 (no duplicate snapshot)
+    assert_eq!(tail.rows.first().unwrap().round, pause_after + 1);
+    let final_tail = *tail.rows.last().unwrap();
+    assert_eq!(final_tail.round, total_rounds);
+    assert_eq!(final_tail.stop, StopReason::MaxRounds);
+    assert_eq!(final_tail.gap.to_bits(), final_full.gap.to_bits(), "resumed gap diverged");
+    assert_eq!(final_tail.primal.to_bits(), final_full.primal.to_bits());
+    assert_eq!(final_tail.dual.to_bits(), final_full.dual.to_bits());
+    assert_eq!(final_tail.vectors, final_full.vectors);
+    assert_eq!(final_tail.bytes_modeled, final_full.bytes_modeled);
+    assert_eq!(final_tail.inner_steps, final_full.inner_steps);
+    assert_eq!(final_tail.w_nnz, final_full.w_nnz);
+    resumed.shutdown();
+}
+
+/// The checkpoint-every-N policy: the driver captures on cadence, the
+/// sink keeps the latest, and the latest is a usable resume point.
+#[test]
+fn checkpoint_observer_captures_on_cadence() {
+    let all = cases();
+    let case = &all[0];
+    let mut session = build_session(case, 2, 13);
+    let mut keeper = CheckpointSink::in_memory();
+    let mut log = EventLog::new();
+    let mut algo = Cocoa::new(15);
+    let mut driver = session
+        .drive(&mut algo, DriverSpec::new(MaxRounds::new(6)).checkpoint_every(3))
+        .unwrap();
+    driver.observe(&mut keeper).unwrap();
+    driver.observe(&mut log).unwrap();
+    driver.drain().unwrap();
+    drop(driver);
+
+    let checkpointed: Vec<u64> = log
+        .events()
+        .iter()
+        .filter_map(|e| match e {
+            RoundEvent::Checkpointed { round } => Some(*round),
+            _ => None,
+        })
+        .collect();
+    assert_eq!(checkpointed, vec![3, 6]);
+    let latest = keeper.take_latest().expect("cadence captured a checkpoint");
+    assert_eq!(latest.stats.rounds, 6);
+    // round 6 is also the final round: the cadence checkpoint must carry
+    // the true stop reason, not Running
+    assert_eq!(latest.stop, StopReason::MaxRounds);
+    // the captured state restores cleanly into the same-shape session
+    session.restore(&latest).unwrap();
+    session.shutdown();
+}
+
+/// A gap rule is dead on a primal-only (NaN-gap) method; without a round
+/// cap the run could never end — the driver rejects the combination with
+/// a typed error instead of spinning forever.
+#[test]
+fn unbounded_gap_rule_on_primal_only_method_is_rejected() {
+    let all = cases();
+    let case = &all[0];
+    let mut session = build_session(case, 2, 19);
+    let mut sgd = LocalSgd::new(10);
+    let err = session
+        .drive(&mut sgd, GapBelow::new(1e-3))
+        .err()
+        .expect("uncapped gap rule + primal-only method must not build a driver");
+    assert!(matches!(err, Error::InvalidBudget { .. }), "{err}");
+    assert!(err.to_string().contains("primal-only"), "{err}");
+    // adding any round cap makes the run stoppable again
+    let trace = session
+        .run(&mut LocalSgd::new(10), GapBelow::new(1e-3).or(MaxRounds::new(3)))
+        .unwrap();
+    assert_eq!(trace.rows.last().unwrap().round, 3);
+    assert!(trace.rows.last().unwrap().gap.is_nan());
+    assert_eq!(trace.rows.last().unwrap().stop, StopReason::MaxRounds);
+    // and dual methods may run uncapped on a live gap rule
+    session.reset().unwrap();
+    let trace = session.run(&mut Cocoa::new(200), GapBelow::new(0.05)).unwrap();
+    assert_eq!(trace.rows.last().unwrap().stop, StopReason::Gap);
+    session.shutdown();
+}
+
+/// Drop the two measured-time fields from a streamed JSONL row. The
+/// timing columns fold in real thread-CPU measurements (not reproducible
+/// across runs), so — exactly like the CSV fingerprints of the other two
+/// determinism gates — the diffable artifact carries every
+/// *deterministic* column and omits the clocks.
+fn strip_timing(line: &str) -> String {
+    match (line.find(", \"sim_time_s\""), line.find(", \"vectors\"")) {
+        (Some(a), Some(b)) if a < b => format!("{}{}", &line[..a], &line[b..]),
+        _ => line.to_string(),
+    }
+}
+
+/// Seeded determinism artifact for CI: a driver run streaming through the
+/// JSONL sink. ci.sh runs this twice with a pinned CARGO_TEST_SEED and
+/// diffs the two files — any nondeterminism in the driver's event
+/// machine, the transport byte accounting, or the sink encoding shows up
+/// as a diff.
+#[test]
+fn seeded_driver_jsonl_artifact() {
+    let seed: u64 = std::env::var("CARGO_TEST_SEED")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(42);
+    let data = cov_like(90, 7, 0.1, seed);
+    let mut session = Trainer::on(&data)
+        .workers(3)
+        .loss(LossKind::Hinge)
+        .lambda(0.05)
+        .transport(TransportKind::Counted)
+        .seed(seed)
+        .label("driver_jsonl")
+        .build()
+        .unwrap();
+
+    std::fs::create_dir_all("target/determinism").unwrap();
+    let full_path = format!("target/determinism/driver_{seed}_full.jsonl");
+    let mut jsonl = JsonlSink::create(&full_path).unwrap();
+    let mut algo = Cocoa::new(25);
+    let mut driver =
+        session.drive(&mut algo, DriverSpec::new(MaxRounds::new(6)).eval_every(2)).unwrap();
+    driver.observe(&mut jsonl).unwrap();
+    let trace = driver.drain().unwrap();
+    drop(driver);
+    session.shutdown();
+
+    let text = std::fs::read_to_string(&full_path).unwrap();
+    let lines: Vec<&str> = text.lines().collect();
+    // meta line + one line per evaluated row (0, 2, 4, 6)
+    assert_eq!(lines.len(), 1 + trace.rows.len(), "{text}");
+    assert!(lines[0].contains("\"algorithm\": \"cocoa\""));
+    assert!(lines[0].contains("\"dataset\": \"driver_jsonl\""));
+    for (line, row) in lines[1..].iter().zip(&trace.rows) {
+        assert_eq!(*line, row.to_json_object());
+    }
+    // measured bytes made it into the stream (counted transport)
+    assert!(lines.last().unwrap().contains("\"bytes_measured\": "));
+
+    // the CI-diffed artifact: every deterministic column, clocks stripped
+    let diffable: String =
+        lines.iter().map(|l| strip_timing(l) + "\n").collect::<Vec<_>>().concat();
+    assert!(!diffable.contains("sim_time_s"), "{diffable}");
+    assert!(diffable.contains("\"gap\": "));
+    std::fs::write(format!("target/determinism/driver_{seed}.jsonl"), diffable).unwrap();
+}
