@@ -68,6 +68,52 @@ run_determinism_gate "l1_prox" golden_lasso seeded_determinism_artifact_l1 \
 run_determinism_gate "driver_jsonl" driver_equivalence seeded_driver_jsonl_artifact \
     "target/determinism/driver_${DET_SEED}.jsonl"
 
+# Multi-process smoke: a real leader + 2 worker processes over a Unix
+# socket, sharing one config. Gates the socket transport end-to-end —
+# versioned handshake, framed wire traffic, clean shutdown — and the
+# gap-target stop proves actual optimization happened across processes.
+step "multi-process smoke (cocoa leader + 2 workers over UDS)"
+cat > "$SCRATCH/net_smoke.toml" <<'EOF'
+lambda = 0.01
+
+[dataset]
+kind = "cov_like"
+n = 400
+d = 10
+seed = 11
+
+[partition]
+k = 2
+
+[algorithm]
+name = "cocoa"
+h = 200
+
+[loss]
+kind = "hinge"
+
+[run]
+rounds = 400
+target_gap = 1e-3
+
+[transport]
+kind = "net"
+EOF
+NET_SOCK="$SCRATCH/net_smoke.sock"
+./target/release/cocoa worker --config "$SCRATCH/net_smoke.toml" \
+    --connect "uds:$NET_SOCK" --attempts 40 --backoff-s 0.25 &
+W1=$!
+./target/release/cocoa worker --config "$SCRATCH/net_smoke.toml" \
+    --connect "uds:$NET_SOCK" --attempts 40 --backoff-s 0.25 &
+W2=$!
+./target/release/cocoa leader --config "$SCRATCH/net_smoke.toml" \
+    --listen "uds:$NET_SOCK" --workers 2 --out "$SCRATCH/net_smoke.csv" \
+    > "$SCRATCH/net_smoke.out"
+wait "$W1" "$W2"   # set -e: nonzero worker exit fails the gate
+grep -q "stop=gap" "$SCRATCH/net_smoke.out"
+grep -q "socket: sent" "$SCRATCH/net_smoke.out"
+printf 'net smoke: leader + 2 workers reached the gap target over UDS\n'
+
 # Perf smoke: run the tiny-profile workloads and validate BENCH_hotpath.json
 # structurally (fields present, numbers finite, monotone round times).
 # Never timing-gated — CI boxes are too noisy; the JSON is the artifact

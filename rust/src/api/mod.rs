@@ -269,13 +269,20 @@ impl<'a> Trainer<'a> {
             }
         }
 
+        self.transport.validate()?;
+        if matches!(self.transport, TransportKind::Net(_)) && self.backend == Backend::Pjrt {
+            return Err(Error::InvalidTransport {
+                reason: "the net transport requires the native backend (workers are \
+                         separate processes; a PJRT engine cannot span them)"
+                    .into(),
+            });
+        }
+
         if self.backend == Backend::Pjrt
             && !Path::new(&self.artifacts_dir).join("manifest.tsv").exists()
         {
             return Err(Error::MissingArtifacts { dir: self.artifacts_dir });
         }
-
-        self.transport.validate()?;
 
         let cluster = Cluster::spawn(ClusterSpec {
             data: self.data,
@@ -373,6 +380,18 @@ impl Session {
         Ok(self.cluster.restore(cp)?)
     }
 
+    /// Recover a net-transport session after a worker failure: re-accept
+    /// replacement connections for dead slots
+    /// ([`Transport::heal`](crate::transport::Transport::heal)), restore
+    /// every worker from `cp`, and drain pre-failure traffic. Returns
+    /// how many connections were healed. On non-net transports this
+    /// fails with the transport's typed no-reconnection error — see
+    /// [`run_with_recovery`](crate::driver::recovery::run_with_recovery)
+    /// for the full resume loop built on top.
+    pub fn recover(&mut self, cp: &Checkpoint) -> Result<usize> {
+        Ok(self.cluster.recover(cp)?)
+    }
+
     /// The shared primal model.
     pub fn w(&self) -> &[f64] {
         &self.cluster.w
@@ -437,6 +456,13 @@ impl Session {
     /// deterministically.
     pub fn take_transcript(&mut self) -> Option<Transcript> {
         self.cluster.take_transcript()
+    }
+
+    /// Raw socket accounting (net transport only): every byte written to
+    /// and read from worker connections, split into payload, framing,
+    /// and handshake so it reconciles exactly with [`Session::ledger`].
+    pub fn socket_stats(&self) -> Option<crate::transport::SocketStats> {
+        self.cluster.socket_stats()
     }
 
     /// Low-level escape hatch: dispatch one round of hand-chosen

@@ -18,7 +18,7 @@ use crate::loss::LossKind;
 use crate::netsim::NetworkModel;
 use crate::regularizers::RegularizerKind;
 use crate::solvers::SolverKind;
-use crate::transport::{SimNetConfig, TransportKind};
+use crate::transport::{NetConfig, SimNetConfig, TransportKind};
 use crate::util::toml_lite::Doc;
 
 /// Which execution backend workers use for the local dual method.
@@ -436,8 +436,17 @@ impl ExperimentConfig {
                     straggler_prob: doc.f64_or("transport", "straggler_prob", 0.0),
                     straggler_slowdown: doc.f64_or("transport", "straggler_slowdown", 1.0),
                 }),
+                "net" => TransportKind::Net(NetConfig {
+                    listen: doc.str_or("transport.net", "listen", "").to_string(),
+                    accept_timeout_s: doc.f64_or("transport.net", "accept_timeout_s", 30.0),
+                    recv_timeout_s: doc.f64_or("transport.net", "recv_timeout_s", 30.0),
+                    record: doc
+                        .get("transport.net", "record")
+                        .and_then(|v| v.as_bool())
+                        .unwrap_or(false),
+                }),
                 other => bail!(
-                    "unknown transport kind {other:?} (inproc|counted|simnet|record)"
+                    "unknown transport kind {other:?} (inproc|counted|simnet|record|net)"
                 ),
             }
         } else {
@@ -574,6 +583,22 @@ bandwidth_bps = 1e9
                 assert_eq!(c.straggler_slowdown, 4.0);
             }
             other => panic!("expected simnet, got {other:?}"),
+        }
+
+        let net = format!(
+            "{SAMPLE}\n[transport]\nkind = \"net\"\n\
+             [transport.net]\nlisten = \"uds:/tmp/cocoa.sock\"\n\
+             accept_timeout_s = 5.0\nrecord = true\n"
+        );
+        let cfg = ExperimentConfig::from_toml(&net).unwrap();
+        match &cfg.transport {
+            TransportKind::Net(c) => {
+                assert_eq!(c.listen, "uds:/tmp/cocoa.sock");
+                assert_eq!(c.accept_timeout_s, 5.0);
+                assert_eq!(c.recv_timeout_s, 30.0); // default
+                assert!(c.record);
+            }
+            other => panic!("expected net, got {other:?}"),
         }
 
         let bad = format!("{SAMPLE}\n[transport]\nkind = \"quantum\"\n");

@@ -23,9 +23,9 @@
 
 pub mod checkpoint;
 pub mod messages;
-mod worker;
+pub(crate) mod worker;
 
-pub use checkpoint::Checkpoint;
+pub use checkpoint::{Checkpoint, WorkerState};
 pub use messages::{EvalReply, LocalWork, RoundReply, ToLeader, ToWorker};
 pub use worker::WorkerConfig;
 
@@ -59,6 +59,43 @@ pub(crate) struct ClusterSpec<'a> {
     pub stragglers: StragglerModel,
     pub seed: u64,
     pub transport: TransportKind,
+}
+
+/// The per-worker rng seed: distinct, deterministic stream per worker.
+/// Shared by the in-process spawn path and the net worker process so a
+/// multi-process run draws bit-identical random streams.
+pub(crate) fn worker_seed(seed: u64, kid: usize) -> u64 {
+    seed.wrapping_mul(0x9e3779b97f4a7c15).wrapping_add(kid as u64)
+}
+
+/// Build worker `kid`'s full native-backend configuration from the global
+/// run description. [`Cluster::spawn`] uses this for its in-process
+/// threads and a `cocoa worker` process uses it for its assigned slot —
+/// one code path, so the two deployments construct identical state.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn native_worker_config(
+    data: &Dataset,
+    rows: &[u32],
+    loss: LossKind,
+    lambda: f64,
+    regularizer: RegularizerKind,
+    solver: SolverKind,
+    seed: u64,
+    kid: usize,
+) -> WorkerConfig {
+    let lambda_n = lambda * regularizer.build().strong_convexity() * data.n() as f64;
+    // subset() compacts the shard to contiguous local-row storage;
+    // Block::new fills the per-shard caches (curvatures, sparse
+    // column-touch set) the inner loop runs on.
+    let block = Block::new(data.subset(rows), lambda_n);
+    WorkerConfig {
+        id: kid,
+        block,
+        loss: loss.build(),
+        solver: solver.build(),
+        lambda,
+        seed: worker_seed(seed, kid),
+    }
 }
 
 /// Exact communication/time accounting for a run.
@@ -151,6 +188,51 @@ impl Cluster {
         let lambda_eff = lambda * reg.strong_convexity();
         let lambda_n = lambda_eff * n as f64;
 
+        // Net transport: the K workers are remote `cocoa worker` processes
+        // that connect over TCP/UDS — no local threads, no channels. The
+        // handshake fingerprint binds peers to this exact run description.
+        if let TransportKind::Net(netcfg) = &transport {
+            if backend == Backend::Pjrt {
+                return Err(anyhow!("net transport requires the native backend"));
+            }
+            let fingerprint = crate::transport::net::run_fingerprint(
+                data,
+                partition,
+                loss,
+                regularizer,
+                solver,
+                lambda,
+                seed,
+            );
+            let sock = crate::transport::net::NetTransport::bind(netcfg, k, fingerprint)?;
+            let boxed: Box<dyn Transport> = if netcfg.record {
+                Box::new(crate::transport::Record::over(sock))
+            } else {
+                Box::new(sock)
+            };
+            return Ok(Cluster {
+                transport: boxed,
+                handles: Vec::new(),
+                k,
+                n,
+                d,
+                w: vec![0.0; d],
+                net,
+                stragglers,
+                stats: CommStats::default(),
+                block_sizes: partition.blocks.iter().map(|b| b.len()).collect(),
+                last_stop: StopReason::default(),
+                v: vec![0.0; d],
+                reg,
+                regularizer,
+                loss,
+                lambda,
+                lambda_eff,
+                round_counter: 0,
+                _engine: None,
+            });
+        }
+
         let engine = match backend {
             Backend::Native => None,
             Backend::Pjrt => Some(runtime::Engine::start(artifacts_dir)?),
@@ -162,31 +244,41 @@ impl Cluster {
         let mut block_sizes = Vec::with_capacity(k);
 
         for (kid, rows) in partition.blocks.iter().enumerate() {
-            // subset() compacts the shard to contiguous local-row storage;
-            // Block::new fills the per-shard caches (curvatures, sparse
-            // column-touch set) the inner loop runs on.
-            let block = Block::new(data.subset(rows), lambda_n);
-            block_sizes.push(block.n_k());
-            let solver_impl: Box<dyn crate::solvers::LocalDualMethod> = match (&backend, &engine)
-            {
-                (Backend::Pjrt, Some(engine)) => Box::new(runtime::PjrtLocalSdca::bind(
-                    engine.handle(),
+            let cfg = match (&backend, &engine) {
+                (Backend::Pjrt, Some(engine)) => {
+                    // subset() compacts the shard to contiguous local-row
+                    // storage; Block::new fills the per-shard caches
+                    // (curvatures, sparse column-touch set).
+                    let block = Block::new(data.subset(rows), lambda_n);
+                    let solver_impl: Box<dyn crate::solvers::LocalDualMethod> =
+                        Box::new(runtime::PjrtLocalSdca::bind(
+                            engine.handle(),
+                            kid,
+                            &block,
+                            loss.artifact_name(),
+                            loss.gamma(),
+                        )?);
+                    WorkerConfig {
+                        id: kid,
+                        block,
+                        loss: loss.build(),
+                        solver: solver_impl,
+                        lambda,
+                        seed: worker_seed(seed, kid),
+                    }
+                }
+                _ => native_worker_config(
+                    data,
+                    rows,
+                    loss,
+                    lambda,
+                    regularizer,
+                    solver,
+                    seed,
                     kid,
-                    &block,
-                    loss.artifact_name(),
-                    loss.gamma(),
-                )?),
-                _ => solver.build(),
+                ),
             };
-            let cfg = WorkerConfig {
-                id: kid,
-                block,
-                loss: loss.build(),
-                solver: solver_impl,
-                lambda,
-                // distinct, deterministic stream per worker
-                seed: seed.wrapping_mul(0x9e3779b97f4a7c15).wrapping_add(kid as u64),
-            };
+            block_sizes.push(cfg.block.n_k());
             let (tx, rx) = channel::<ToWorker>();
             let leader_tx = to_leader_tx.clone();
             let handle = std::thread::Builder::new()
@@ -478,6 +570,69 @@ impl Cluster {
         Ok(())
     }
 
+    /// Recover a net cluster after a mid-round worker failure: re-accept
+    /// replacement connections for dead slots, restore every worker from
+    /// `cp`, and drain all pre-failure traffic so the next dispatch starts
+    /// clean. Returns the number of connections healed.
+    ///
+    /// The aborted round may have left survivors with in-flight `Round`
+    /// replies and a staged (uncommitted) `dalpha`. `SetState` clears the
+    /// stage; the `GetState` sent right behind it acts as a per-connection
+    /// barrier — socket FIFO guarantees any stale reply arrives *before*
+    /// the worker's `State`, so once K `State`s are in, no pre-recovery
+    /// message can alias into a future round.
+    pub fn recover(&mut self, cp: &Checkpoint) -> Result<usize> {
+        if cp.k != self.k || cp.n != self.n || cp.d != self.d {
+            return Err(anyhow!(
+                "checkpoint shape (K={}, n={}, d={}) does not match cluster (K={}, n={}, d={})",
+                cp.k, cp.n, cp.d, self.k, self.n, self.d
+            ));
+        }
+        if cp.regularizer != self.regularizer.to_string() {
+            return Err(anyhow!(
+                "checkpoint regularizer {} does not match cluster regularizer {}",
+                cp.regularizer,
+                self.regularizer
+            ));
+        }
+        let healed = self.transport.heal()?;
+        for ws in &cp.workers {
+            self.transport.send(ws.id, ToWorker::SetState(ws.clone()))?;
+            self.transport.send(ws.id, ToWorker::GetState)?;
+        }
+        let mut seen = vec![false; self.k];
+        let mut got = 0;
+        while got < self.k {
+            match self.transport.recv()? {
+                ToLeader::State(ws) if ws.id < self.k => {
+                    if !seen[ws.id] {
+                        seen[ws.id] = true;
+                        got += 1;
+                    }
+                }
+                // stale replies from the aborted round: drain and drop
+                ToLeader::Round(_) | ToLeader::Eval(_) => {}
+                ToLeader::State(ws) => {
+                    return Err(anyhow!("state reply from unknown worker {}", ws.id))
+                }
+                ToLeader::Fatal { worker, message } => {
+                    return Err(anyhow!("worker {worker} failed during recovery: {message}"))
+                }
+            }
+        }
+        self.v = cp.v.clone();
+        self.sync_w();
+        self.stats = cp.stats;
+        self.last_stop = cp.stop;
+        self.round_counter = cp.round_counter;
+        // The aborted round's traffic really crossed the wire (it stays in
+        // the ledger) but its round never completed: drop the partial
+        // drain so the next round's stats don't inherit it.
+        let _ = self.transport.take_round_bytes();
+        let _ = self.transport.take_round_latency();
+        Ok(healed)
+    }
+
     pub fn loss(&self) -> LossKind {
         self.loss
     }
@@ -520,6 +675,12 @@ impl Cluster {
     /// Take the transcript recorded so far (Record transport only).
     pub fn take_transcript(&mut self) -> Option<Transcript> {
         self.transport.take_transcript()
+    }
+
+    /// Raw socket accounting (net transport only): every byte written to
+    /// and read from worker connections, including framing and handshakes.
+    pub fn socket_stats(&self) -> Option<crate::transport::SocketStats> {
+        self.transport.socket_stats()
     }
 
     pub fn shutdown(mut self) {

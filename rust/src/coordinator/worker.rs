@@ -1,11 +1,18 @@
-//! Worker thread: owns one coordinate block (data + dual variables) and
+//! Worker logic: owns one coordinate block (data + dual variables) and
 //! executes whatever [`LocalWork`] the leader dispatches.
 //!
-//! The dual variables `alpha_[k]` never leave this thread — the paper's
+//! The dual variables `alpha_[k]` never leave the worker — the paper's
 //! communication pattern. Updates are staged: a dual round computes a
 //! pending `dalpha`, the leader's `Commit { scale }` folds it in with the
 //! `beta_K / K` scaling of Algorithm 1, keeping worker state exactly
 //! consistent with the leader's `w` at all times.
+//!
+//! The message-handling state machine lives in [`WorkerCore`], shared by
+//! the two deployment shapes: [`run_worker`] drives it over in-process
+//! channels (one thread per worker), and the net worker loop
+//! (`transport::net`) drives the *same* core over socket frames — so a
+//! multi-process run executes bit-identical arithmetic to an in-process
+//! one by construction.
 
 use std::sync::mpsc::{Receiver, Sender};
 
@@ -28,186 +35,240 @@ pub struct WorkerConfig {
     pub seed: u64,
 }
 
-pub fn run_worker(cfg: WorkerConfig, rx: Receiver<ToWorker>, tx: Sender<ToLeader>) {
-    let WorkerConfig { id, block, loss, solver, lambda, seed } = cfg;
-    let n_k = block.n_k();
-    let mut alpha = vec![0.0f64; n_k];
-    let mut pending: Option<Vec<f64>> = None;
+/// What the transport loop driving a [`WorkerCore`] should do after one
+/// message.
+pub(crate) enum CoreStep {
+    /// Nothing to send; keep serving.
+    Continue,
+    /// Send this reply and keep serving.
+    Reply(ToLeader),
+    /// Send this [`ToLeader::Fatal`] and stop serving — worker state is
+    /// no longer trustworthy.
+    Fatal(ToLeader),
+    /// Clean shutdown requested by the leader.
+    Shutdown,
+}
+
+/// One worker's full message-handling state machine.
+pub(crate) struct WorkerCore {
+    id: usize,
+    n_k: usize,
+    block: Block,
+    loss: Box<dyn Loss>,
+    solver: Box<dyn LocalDualMethod>,
+    lambda: f64,
+    seed: u64,
+    alpha: Vec<f64>,
+    pending: Option<Vec<f64>>,
     // alpha stays a valid dual point (D(0) = 0) until SGD work runs —
     // primal-only methods have no meaningful dual value to report.
-    let mut did_sgd = false;
-    let mut rng = Rng::seed_from_u64(seed);
+    did_sgd: bool,
+    rng: Rng,
+}
 
-    while let Ok(msg) = rx.recv() {
+impl WorkerCore {
+    pub(crate) fn new(cfg: WorkerConfig) -> Self {
+        let WorkerConfig { id, block, loss, solver, lambda, seed } = cfg;
+        let n_k = block.n_k();
+        WorkerCore {
+            id,
+            n_k,
+            block,
+            loss,
+            solver,
+            lambda,
+            seed,
+            alpha: vec![0.0f64; n_k],
+            pending: None,
+            did_sgd: false,
+            rng: Rng::seed_from_u64(seed),
+        }
+    }
+
+    pub(crate) fn handle(&mut self, msg: ToWorker) -> CoreStep {
         match msg {
-            ToWorker::Shutdown => break,
+            ToWorker::Shutdown => CoreStep::Shutdown,
             ToWorker::Reset => {
-                alpha.iter_mut().for_each(|a| *a = 0.0);
-                pending = None;
-                did_sgd = false;
-                rng = Rng::seed_from_u64(seed);
+                self.alpha.iter_mut().for_each(|a| *a = 0.0);
+                self.pending = None;
+                self.did_sgd = false;
+                self.rng = Rng::seed_from_u64(self.seed);
+                CoreStep::Continue
             }
             ToWorker::Commit { scale } => {
-                if let Some(d) = pending.take() {
-                    for (a, da) in alpha.iter_mut().zip(&d) {
+                if let Some(d) = self.pending.take() {
+                    for (a, da) in self.alpha.iter_mut().zip(&d) {
                         *a += scale * da;
                     }
                 }
+                CoreStep::Continue
             }
             ToWorker::GetState => {
-                if pending.is_some() {
-                    let _ = tx.send(ToLeader::Fatal {
-                        worker: id,
+                if self.pending.is_some() {
+                    return CoreStep::Fatal(ToLeader::Fatal {
+                        worker: self.id,
                         message: "checkpoint requested with uncommitted update".into(),
                     });
-                    break;
                 }
-                let _ = tx.send(ToLeader::State(CheckpointState {
-                    id,
-                    rng_state: rng.state(),
-                    alpha: alpha.clone(),
-                }));
+                CoreStep::Reply(ToLeader::State(CheckpointState {
+                    id: self.id,
+                    rng_state: self.rng.state(),
+                    alpha: self.alpha.clone(),
+                }))
             }
             ToWorker::SetState(state) => {
-                if state.alpha.len() != n_k {
-                    let _ = tx.send(ToLeader::Fatal {
-                        worker: id,
+                if state.alpha.len() != self.n_k {
+                    return CoreStep::Fatal(ToLeader::Fatal {
+                        worker: self.id,
                         message: format!(
-                            "restore alpha length {} != block size {n_k}",
-                            state.alpha.len()
+                            "restore alpha length {} != block size {}",
+                            state.alpha.len(),
+                            self.n_k
                         ),
                     });
-                    break;
                 }
-                alpha = state.alpha;
-                rng = Rng::from_state(state.rng_state);
-                pending = None;
+                self.alpha = state.alpha;
+                self.rng = Rng::from_state(state.rng_state);
+                self.pending = None;
+                CoreStep::Continue
             }
             ToWorker::Eval { w } => {
-                let loss_sum = objective::block_loss_sum(&block.data, &w, loss.as_ref());
-                let conj_sum = objective::block_conj_sum(&block.data, &alpha, loss.as_ref());
-                let _ = tx.send(ToLeader::Eval(EvalReply {
-                    worker: id,
+                let loss_sum = objective::block_loss_sum(&self.block.data, &w, self.loss.as_ref());
+                let conj_sum =
+                    objective::block_conj_sum(&self.block.data, &self.alpha, self.loss.as_ref());
+                CoreStep::Reply(ToLeader::Eval(EvalReply {
+                    worker: self.id,
                     loss_sum,
                     conj_sum,
-                    has_dual: !did_sgd,
-                }));
+                    has_dual: !self.did_sgd,
+                }))
             }
             ToWorker::Round { round, w, work } => {
-                if pending.is_some() {
-                    let _ = tx.send(ToLeader::Fatal {
-                        worker: id,
+                if self.pending.is_some() {
+                    return CoreStep::Fatal(ToLeader::Fatal {
+                        worker: self.id,
                         message: "round dispatched with uncommitted dual update".into(),
                     });
-                    break;
                 }
                 let t0 = thread_cpu_time_s();
-                let (dw, steps, offloaded, dalpha) = match work {
-                    LocalWork::DualRound { h } => {
-                        let up = solver.local_update(
-                            &block, loss.as_ref(), &alpha, &w, h, &mut rng,
-                        );
-                        (up.dw, up.steps, up.offloaded_s, Some(up.dalpha))
-                    }
-                    LocalWork::DualRoundScaled { h, sigma_prime } => {
-                        let scaled =
-                            LocalSdca::with_curvature_scale(Sampling::WithReplacement, sigma_prime);
-                        let up = scaled.local_update(
-                            &block, loss.as_ref(), &alpha, &w, h, &mut rng,
-                        );
-                        (up.dw, up.steps, up.offloaded_s, Some(up.dalpha))
-                    }
-                    LocalWork::ExactSolve => {
-                        let exact = ExactBlockSolver::default();
-                        let up = exact.local_update(
-                            &block, loss.as_ref(), &alpha, &w, n_k, &mut rng,
-                        );
-                        (up.dw, up.steps, up.offloaded_s, Some(up.dalpha))
-                    }
-                    LocalWork::DualBatchFrozen { b } => {
-                        let b = b.min(n_k);
-                        // distinct coordinates, all judged against frozen w
-                        let picks = rng.sample_distinct(n_k, b);
-                        let mut dalpha = vec![0.0; n_k];
-                        let mut dw = vec![0.0; block.d()];
-                        let inv = 1.0 / block.lambda_n;
-                        // monomorphized like the LocalSdca inner loop: one
-                        // row_view per pick, fused kernels, cached
-                        // curvature — same arithmetic, same bits
-                        assert_eq!(w.len(), block.d());
-                        match &block.data.features {
-                            Features::Sparse(m) => {
-                                for &i in picks.iter() {
-                                    let (idx, val) = m.row_view(i);
-                                    // SAFETY: CSR indices < cols ==
-                                    // w.len() == dw.len() (asserted above)
-                                    let q = unsafe {
-                                        kernels::sparse_dot_unchecked(idx, val, &w)
-                                    };
-                                    let delta = loss.coord_delta(
-                                        q,
-                                        block.data.labels[i],
-                                        alpha[i],
-                                        block.curvature(i),
-                                    );
-                                    if delta != 0.0 {
-                                        dalpha[i] = delta;
-                                        // SAFETY: as above.
-                                        unsafe {
-                                            kernels::sparse_axpy_unchecked(
-                                                idx,
-                                                val,
-                                                delta * inv,
-                                                &mut dw,
-                                            )
-                                        };
-                                    }
-                                }
-                            }
-                            Features::Dense(m) => {
-                                for &i in picks.iter() {
-                                    let row = m.row(i);
-                                    let q = kernels::dense_dot(row, &w);
-                                    let delta = loss.coord_delta(
-                                        q,
-                                        block.data.labels[i],
-                                        alpha[i],
-                                        block.curvature(i),
-                                    );
-                                    if delta != 0.0 {
-                                        dalpha[i] = delta;
-                                        kernels::dense_axpy(delta * inv, row, &mut dw);
-                                    }
-                                }
-                            }
-                        }
-                        (dw, b as u64, 0.0, Some(dalpha))
-                    }
-                    LocalWork::SgdLocal { h, t_offset } => {
-                        let epoch = PegasosEpoch { locally_updating: true, lambda };
-                        let out = epoch.run(&block, loss.as_ref(), &w, h, t_offset, &mut rng);
-                        (out.dw, out.steps, 0.0, None)
-                    }
-                    LocalWork::SgdFrozen { h } => {
-                        let epoch = PegasosEpoch { locally_updating: false, lambda };
-                        let out = epoch.run(&block, loss.as_ref(), &w, h, 0, &mut rng);
-                        (out.dw, out.steps, 0.0, None)
-                    }
-                };
+                let (dw, steps, offloaded, dalpha) = self.run_round(&w, work);
                 let compute_s = (thread_cpu_time_s() - t0) + offloaded;
                 if let Some(d) = dalpha {
-                    pending = Some(d);
+                    self.pending = Some(d);
                 } else {
-                    did_sgd = true;
+                    self.did_sgd = true;
                 }
-                let _ = tx.send(ToLeader::Round(RoundReply {
-                    worker: id,
+                CoreStep::Reply(ToLeader::Round(RoundReply {
+                    worker: self.id,
                     round,
                     dw,
                     compute_s,
                     steps,
-                }));
+                }))
             }
+        }
+    }
+
+    #[allow(clippy::type_complexity)]
+    fn run_round(&mut self, w: &[f64], work: LocalWork) -> (Vec<f64>, u64, f64, Option<Vec<f64>>) {
+        let Self { n_k, block, loss, solver, lambda, alpha, rng, .. } = self;
+        let n_k = *n_k;
+        match work {
+            LocalWork::DualRound { h } => {
+                let up = solver.local_update(block, loss.as_ref(), alpha, w, h, rng);
+                (up.dw, up.steps, up.offloaded_s, Some(up.dalpha))
+            }
+            LocalWork::DualRoundScaled { h, sigma_prime } => {
+                let scaled = LocalSdca::with_curvature_scale(Sampling::WithReplacement, sigma_prime);
+                let up = scaled.local_update(block, loss.as_ref(), alpha, w, h, rng);
+                (up.dw, up.steps, up.offloaded_s, Some(up.dalpha))
+            }
+            LocalWork::ExactSolve => {
+                let exact = ExactBlockSolver::default();
+                let up = exact.local_update(block, loss.as_ref(), alpha, w, n_k, rng);
+                (up.dw, up.steps, up.offloaded_s, Some(up.dalpha))
+            }
+            LocalWork::DualBatchFrozen { b } => {
+                let b = b.min(n_k);
+                // distinct coordinates, all judged against frozen w
+                let picks = rng.sample_distinct(n_k, b);
+                let mut dalpha = vec![0.0; n_k];
+                let mut dw = vec![0.0; block.d()];
+                let inv = 1.0 / block.lambda_n;
+                // monomorphized like the LocalSdca inner loop: one
+                // row_view per pick, fused kernels, cached
+                // curvature — same arithmetic, same bits
+                assert_eq!(w.len(), block.d());
+                match &block.data.features {
+                    Features::Sparse(m) => {
+                        for &i in picks.iter() {
+                            let (idx, val) = m.row_view(i);
+                            // SAFETY: CSR indices < cols ==
+                            // w.len() == dw.len() (asserted above)
+                            let q = unsafe { kernels::sparse_dot_unchecked(idx, val, w) };
+                            let delta = loss.coord_delta(
+                                q,
+                                block.data.labels[i],
+                                alpha[i],
+                                block.curvature(i),
+                            );
+                            if delta != 0.0 {
+                                dalpha[i] = delta;
+                                // SAFETY: as above.
+                                unsafe {
+                                    kernels::sparse_axpy_unchecked(idx, val, delta * inv, &mut dw)
+                                };
+                            }
+                        }
+                    }
+                    Features::Dense(m) => {
+                        for &i in picks.iter() {
+                            let row = m.row(i);
+                            let q = kernels::dense_dot(row, w);
+                            let delta = loss.coord_delta(
+                                q,
+                                block.data.labels[i],
+                                alpha[i],
+                                block.curvature(i),
+                            );
+                            if delta != 0.0 {
+                                dalpha[i] = delta;
+                                kernels::dense_axpy(delta * inv, row, &mut dw);
+                            }
+                        }
+                    }
+                }
+                (dw, b as u64, 0.0, Some(dalpha))
+            }
+            LocalWork::SgdLocal { h, t_offset } => {
+                let epoch = PegasosEpoch { locally_updating: true, lambda: *lambda };
+                let out = epoch.run(block, loss.as_ref(), w, h, t_offset, rng);
+                (out.dw, out.steps, 0.0, None)
+            }
+            LocalWork::SgdFrozen { h } => {
+                let epoch = PegasosEpoch { locally_updating: false, lambda: *lambda };
+                let out = epoch.run(block, loss.as_ref(), w, h, 0, rng);
+                (out.dw, out.steps, 0.0, None)
+            }
+        }
+    }
+}
+
+/// Drive a [`WorkerCore`] over in-process channels (one thread per
+/// worker, the `InProc` deployment shape).
+pub fn run_worker(cfg: WorkerConfig, rx: Receiver<ToWorker>, tx: Sender<ToLeader>) {
+    let mut core = WorkerCore::new(cfg);
+    while let Ok(msg) = rx.recv() {
+        match core.handle(msg) {
+            CoreStep::Continue => {}
+            CoreStep::Reply(reply) => {
+                let _ = tx.send(reply);
+            }
+            CoreStep::Fatal(reply) => {
+                let _ = tx.send(reply);
+                break;
+            }
+            CoreStep::Shutdown => break,
         }
     }
 }

@@ -45,9 +45,11 @@
 //! drains a driver — producing bit-identical traces to the old loop.
 
 pub mod observers;
+pub mod recovery;
 pub mod stopping;
 
 pub use observers::{CheckpointSink, CsvSink, EventLog, JsonlSink, Observer, ProgressLine, TraceSink};
+pub use recovery::{run_with_recovery, RecoveryOutcome, RecoveryPolicy};
 pub use stopping::{
     All, Any, BytesBelow, GapBelow, MaxRounds, Observation, SimTimeBelow, StoppingRule,
     SuboptBelow,

@@ -1,0 +1,410 @@
+//! Checkpoint-based failure recovery for the round loop.
+//!
+//! [`run_with_recovery`] drives a run to completion like
+//! [`Driver::drain`](super::Driver::drain), but survives the typed
+//! connection failures the net transport reports
+//! ([`Error::Timeout`](crate::Error::Timeout) /
+//! [`Error::PeerLost`](crate::Error::PeerLost)): it aborts the damaged
+//! round, restores every peer from the newest checkpoint via
+//! [`Session::recover`], and resumes the round loop where the checkpoint
+//! left it. Because checkpoints capture the full optimization state —
+//! including the worker rng streams — a recovered run's trajectory is
+//! bit-identical to one that never failed.
+//!
+//! The loop keeps its own [`CheckpointSink`] attached to every attempt,
+//! and takes one eager checkpoint before the first round so a crash
+//! before the first cadence checkpoint is still recoverable (it rolls
+//! back to round 0). Trace rows from rounds the rollback undid are
+//! discarded; the resumed driver re-evaluates them, so the assembled
+//! [`Trace`] is exactly the uninterrupted one.
+//!
+//! Any other error — a fatal worker state, a handshake rejection, a
+//! plain transport bug — propagates immediately, as does a failure
+//! budget exhausted by `max_recoveries` back-to-back losses.
+
+use crate::algorithms::Algorithm;
+use crate::api::Session;
+use crate::coordinator::Checkpoint;
+use crate::error::{Error, Result};
+use crate::telemetry::{StopReason, Trace, TraceRow};
+
+use super::observers::{CheckpointSink, Observer};
+use super::{DriverSpec, RoundEvent, RunMeta};
+
+/// How hard to try before giving up on a run.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct RecoveryPolicy {
+    /// Max checkpoint restores per run. Each *successful* recovery still
+    /// counts: a flapping cluster should fail loudly, not loop forever.
+    pub max_recoveries: u32,
+}
+
+impl Default for RecoveryPolicy {
+    fn default() -> Self {
+        RecoveryPolicy { max_recoveries: 3 }
+    }
+}
+
+/// What a recovered run produced.
+#[derive(Debug, Clone)]
+pub struct RecoveryOutcome {
+    /// The run's trace — identical to an uninterrupted run's.
+    pub trace: Trace,
+    /// Why the run stopped.
+    pub stop: StopReason,
+    /// How many checkpoint restores the run needed (0 = clean run).
+    pub recoveries: u32,
+}
+
+/// Drive `algorithm` to completion, recovering from worker failures.
+///
+/// `make_spec` is called once per attempt ([`DriverSpec`]s own their
+/// stopping rule, so a fresh one is needed per driver); it must describe
+/// the same run each time, with `checkpoint_every > 0` for any rollback
+/// to be cheaper than starting over. `extra` observers are re-attached
+/// to every attempt and see the spliced event stream (rows of rounds a
+/// rollback undid are re-emitted by the resumed driver).
+pub fn run_with_recovery(
+    session: &mut Session,
+    algorithm: &mut dyn Algorithm,
+    mut make_spec: impl FnMut() -> Result<DriverSpec>,
+    policy: &RecoveryPolicy,
+    extra: &mut [&mut dyn Observer],
+) -> Result<RecoveryOutcome> {
+    // the floor to roll back to if a round fails before the first
+    // cadence checkpoint exists
+    let mut last_cp: Checkpoint = session.checkpoint()?;
+    let mut sink = CheckpointSink::in_memory();
+    let mut rows: Vec<TraceRow> = Vec::new();
+    let mut meta: Option<RunMeta> = None;
+    let mut recoveries: u32 = 0;
+    let mut resume_at: u64 = last_cp.round_counter;
+    let stop: StopReason;
+
+    'attempts: loop {
+        let failure: Error;
+        {
+            let mut driver = session.drive(&mut *algorithm, make_spec()?)?;
+            if resume_at > 0 {
+                driver.resume_from(resume_at)?;
+            }
+            driver.observe(&mut sink)?;
+            for obs in extra.iter_mut() {
+                driver.observe(&mut **obs)?;
+            }
+            if meta.is_none() {
+                meta = Some(driver.meta().clone());
+            }
+            loop {
+                match driver.step() {
+                    Ok(RoundEvent::Evaluated { row }) => rows.push(row),
+                    Ok(RoundEvent::Stopped { reason }) => {
+                        stop = reason;
+                        break 'attempts;
+                    }
+                    Ok(_) => {}
+                    Err(e) => {
+                        failure = e;
+                        break;
+                    }
+                }
+            }
+        }
+        // only connection-level losses are recoverable; anything else
+        // (fatal worker state, rejected handshake, divergence) is not a
+        // failure a checkpoint can undo
+        let recoverable = matches!(failure, Error::Timeout { .. } | Error::PeerLost { .. });
+        if !recoverable || recoveries >= policy.max_recoveries {
+            return Err(failure);
+        }
+        if let Some(cp) = sink.latest() {
+            if cp.round_counter > last_cp.round_counter {
+                last_cp = cp.clone();
+            }
+        }
+        session.recover(&last_cp)?;
+        recoveries += 1;
+        resume_at = last_cp.round_counter;
+        if resume_at == 0 {
+            // the resumed driver redoes the round-0 snapshot; drop ours
+            rows.clear();
+        } else {
+            rows.retain(|r| r.round <= resume_at);
+        }
+    }
+
+    let meta = meta.expect("the driver ran at least once");
+    let mut trace = meta.new_trace();
+    for row in rows {
+        trace.push(row);
+    }
+    Ok(RecoveryOutcome { trace, stop, recoveries })
+}
+
+#[cfg(test)]
+mod tests {
+    use std::path::PathBuf;
+    use std::thread;
+    use std::time::Duration;
+
+    use super::*;
+    use crate::algorithms::Cocoa;
+    use crate::api::Trainer;
+    use crate::config::{
+        AlgorithmSpec, Backend, DatasetSpec, ExperimentConfig, PartitionSpec, RunSpec,
+    };
+    use crate::coordinator::worker::{CoreStep, WorkerCore};
+    use crate::coordinator::{native_worker_config, ToWorker};
+    use crate::data::{cov_like, Partition, PartitionStrategy};
+    use crate::driver::MaxRounds;
+    use crate::loss::LossKind;
+    use crate::netsim::NetworkModel;
+    use crate::regularizers::RegularizerKind;
+    use crate::solvers::SolverKind;
+    use crate::transport::net::{
+        decode_handshake_reply, encode_hello, read_frame, run_fingerprint, run_worker_process,
+        write_frame, FrameRead, HandshakeReply, NetAddr, Sock,
+    };
+    use crate::transport::wire;
+    use crate::transport::{NetConfig, ReconnectPolicy, TransportKind};
+
+    const N: usize = 120;
+    const D: usize = 8;
+    const NOISE: f64 = 0.1;
+    const SEED: u64 = 3;
+    const LAMBDA: f64 = 0.05;
+    const K: usize = 2;
+    const H: usize = 30;
+    const ROUNDS: u64 = 6;
+
+    fn sock_path(tag: &str) -> PathBuf {
+        std::env::temp_dir().join(format!("cocoa-recovery-{}-{tag}.sock", std::process::id()))
+    }
+
+    fn worker_cfg(listen: &str) -> ExperimentConfig {
+        ExperimentConfig {
+            dataset: DatasetSpec::CovLike { n: N, d: D, noise: NOISE, seed: SEED },
+            partition: PartitionSpec { k: K, strategy: PartitionStrategy::Contiguous, seed: 0 },
+            algorithm: AlgorithmSpec::Cocoa { h: H, beta_k: 1.0, solver: SolverKind::Sdca },
+            loss: LossKind::Hinge,
+            lambda: LAMBDA,
+            regularizer: RegularizerKind::default(),
+            run: RunSpec {
+                rounds: ROUNDS,
+                target_gap: 0.0,
+                target_subopt: 0.0,
+                eval_every: 1,
+                seed: SEED,
+                backend: Backend::Native,
+            },
+            netsim: NetworkModel::free(),
+            transport: TransportKind::Net(NetConfig::new(listen)),
+            artifacts_dir: "artifacts".into(),
+        }
+    }
+
+    fn connect_with_retry(addr: &NetAddr) -> Sock {
+        for _ in 0..400 {
+            if let Ok(s) = Sock::connect(addr) {
+                return s;
+            }
+            thread::sleep(Duration::from_millis(10));
+        }
+        panic!("listener never came up at {addr:?}");
+    }
+
+    /// A worker that speaks the real protocol but drops its connection —
+    /// no reply, no farewell — the moment it sees its `die_at`-th Round
+    /// dispatch, leaving the leader mid-round with a half-reduced update.
+    fn dying_worker(listen: String, die_at: usize) {
+        let addr = NetAddr::parse(&listen).unwrap();
+        let mut sock = connect_with_retry(&addr);
+        let data = cov_like(N, D, NOISE, SEED);
+        let partition = Partition::new(PartitionStrategy::Contiguous, N, K, 0);
+        let fp = run_fingerprint(
+            &data,
+            &partition,
+            LossKind::Hinge,
+            RegularizerKind::default(),
+            SolverKind::Sdca,
+            LAMBDA,
+            SEED,
+        );
+        write_frame(&mut sock, &encode_hello(None, fp)).unwrap();
+        let frame = match read_frame(&mut sock).unwrap() {
+            FrameRead::Frame(f) => f,
+            FrameRead::Eof => panic!("leader hung up during handshake"),
+        };
+        let slot = match decode_handshake_reply(&frame).unwrap() {
+            HandshakeReply::Accept { slot } => slot,
+            HandshakeReply::Reject { reason } => panic!("rejected: {reason}"),
+        };
+        let mut core = WorkerCore::new(native_worker_config(
+            &data,
+            &partition.blocks[slot],
+            LossKind::Hinge,
+            LAMBDA,
+            RegularizerKind::default(),
+            SolverKind::Sdca,
+            SEED,
+            slot,
+        ));
+        let mut rounds_seen = 0usize;
+        loop {
+            let payload = match read_frame(&mut sock).unwrap() {
+                FrameRead::Frame(p) => p,
+                FrameRead::Eof => return,
+            };
+            let msg = wire::decode_to_worker(&payload).unwrap();
+            if matches!(msg, ToWorker::Round { .. }) {
+                rounds_seen += 1;
+                if rounds_seen == die_at {
+                    return; // mid-round vanish: socket closes, no reply
+                }
+            }
+            match core.handle(msg) {
+                CoreStep::Continue => {}
+                CoreStep::Reply(reply) => {
+                    write_frame(&mut sock, &wire::encode_to_leader(&reply)).unwrap()
+                }
+                CoreStep::Fatal(reply) => panic!("worker went fatal: {reply:?}"),
+                CoreStep::Shutdown => return,
+            }
+        }
+    }
+
+    fn honest_worker(listen: String) -> thread::JoinHandle<()> {
+        thread::spawn(move || {
+            let cfg = worker_cfg(&listen);
+            run_worker_process(&cfg, &listen, &ReconnectPolicy { attempts: 60, backoff_s: 0.05 })
+                .unwrap();
+        })
+    }
+
+    /// The acceptance gate: kill one worker mid-round; the run recovers
+    /// from the last checkpoint and finishes with the exact trajectory —
+    /// every evaluated row and the final w, bit for bit — of a run that
+    /// never failed.
+    #[test]
+    fn killed_worker_recovers_to_identical_trajectory() {
+        // uninterrupted twin over counted in-proc channels
+        let data = cov_like(N, D, NOISE, SEED);
+        let mut twin = Trainer::on(&data)
+            .workers(K)
+            .lambda(LAMBDA)
+            .seed(SEED)
+            .transport(TransportKind::Counted)
+            .build()
+            .unwrap();
+        let twin_trace = twin
+            .run(&mut Cocoa::new(H), DriverSpec::new(MaxRounds::new(ROUNDS)))
+            .unwrap();
+        let twin_w: Vec<u64> = twin.w().iter().map(|x| x.to_bits()).collect();
+        twin.shutdown();
+
+        let path = sock_path("kill");
+        let _ = std::fs::remove_file(&path);
+        let listen = format!("uds:{}", path.display());
+
+        // worker A dies on its 3rd Round dispatch (checkpoints land at
+        // rounds 2 and 4, so the rollback target is round 2); worker B
+        // stays honest throughout
+        let evil = {
+            let listen = listen.clone();
+            thread::spawn(move || dying_worker(listen, 3))
+        };
+        let honest = honest_worker(listen.clone());
+
+        let mut session = Trainer::on(&data)
+            .workers(K)
+            .lambda(LAMBDA)
+            .seed(SEED)
+            .transport(TransportKind::Net(NetConfig::new(&listen)))
+            .build()
+            .unwrap();
+
+        // only now — both original workers hold slots — may the
+        // replacement connect; it waits in the listener backlog until
+        // recovery's heal() accepts it into the dead slot
+        let replacement = honest_worker(listen.clone());
+
+        let outcome = run_with_recovery(
+            &mut session,
+            &mut Cocoa::new(H),
+            || Ok(DriverSpec::new(MaxRounds::new(ROUNDS)).checkpoint_every(2)),
+            &RecoveryPolicy::default(),
+            &mut [],
+        )
+        .unwrap();
+
+        assert_eq!(outcome.recoveries, 1, "expected exactly one recovery");
+        assert_eq!(outcome.stop, StopReason::MaxRounds);
+        let w: Vec<u64> = session.w().iter().map(|x| x.to_bits()).collect();
+        assert_eq!(w, twin_w, "recovered w must be bit-identical to the twin's");
+
+        assert_eq!(outcome.trace.rows.len(), twin_trace.rows.len());
+        for (got, want) in outcome.trace.rows.iter().zip(twin_trace.rows.iter()) {
+            assert_eq!(got.round, want.round);
+            assert_eq!(got.primal.to_bits(), want.primal.to_bits(), "round {}", got.round);
+            assert_eq!(got.dual.to_bits(), want.dual.to_bits(), "round {}", got.round);
+            assert_eq!(got.gap.to_bits(), want.gap.to_bits(), "round {}", got.round);
+            assert_eq!(got.inner_steps, want.inner_steps, "round {}", got.round);
+            assert_eq!(got.bytes_measured, want.bytes_measured, "round {}", got.round);
+        }
+
+        session.shutdown();
+        evil.join().unwrap();
+        honest.join().unwrap();
+        replacement.join().unwrap();
+        let _ = std::fs::remove_file(&path);
+    }
+
+    /// A non-network error must propagate untouched: recovery only eats
+    /// the typed connection-loss variants.
+    #[test]
+    fn non_connection_errors_propagate() {
+        let data = cov_like(40, 4, NOISE, 7);
+        let mut session = Trainer::on(&data).workers(2).lambda(0.1).build().unwrap();
+        let err = run_with_recovery(
+            &mut session,
+            &mut Cocoa::new(5),
+            // eval_every = 0 is rejected by the driver with a typed
+            // error that has nothing to do with the network
+            || Ok(DriverSpec::new(MaxRounds::new(3)).eval_every(0)),
+            &RecoveryPolicy::default(),
+            &mut [],
+        )
+        .unwrap_err();
+        assert!(
+            !matches!(err, Error::Timeout { .. } | Error::PeerLost { .. }),
+            "unexpected: {err}"
+        );
+        session.shutdown();
+    }
+
+    /// A clean run through the recovery loop is exactly `Session::run`.
+    #[test]
+    fn clean_run_matches_plain_drain() {
+        let data = cov_like(60, 6, NOISE, 11);
+        let mut a = Trainer::on(&data).workers(2).lambda(0.1).seed(1).build().unwrap();
+        let plain = a.run(&mut Cocoa::new(10), DriverSpec::new(MaxRounds::new(4))).unwrap();
+        a.shutdown();
+
+        let mut b = Trainer::on(&data).workers(2).lambda(0.1).seed(1).build().unwrap();
+        let outcome = run_with_recovery(
+            &mut b,
+            &mut Cocoa::new(10),
+            || Ok(DriverSpec::new(MaxRounds::new(4)).checkpoint_every(2)),
+            &RecoveryPolicy::default(),
+            &mut [],
+        )
+        .unwrap();
+        b.shutdown();
+
+        assert_eq!(outcome.recoveries, 0);
+        assert_eq!(outcome.trace.rows.len(), plain.rows.len());
+        for (got, want) in outcome.trace.rows.iter().zip(plain.rows.iter()) {
+            assert_eq!(got.gap.to_bits(), want.gap.to_bits(), "round {}", got.round);
+        }
+    }
+}

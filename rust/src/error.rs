@@ -53,6 +53,18 @@ pub enum Error {
     /// A transport failed at runtime: worker channels closed, or a replay
     /// diverged from its recorded transcript.
     Transport { message: String },
+    /// A net-transport receive (or accept) deadline expired with no
+    /// worker traffic. Recoverable: heal the cluster and resume from the
+    /// last checkpoint (see `driver::recovery`).
+    Timeout { waited_s: f64 },
+    /// A connected worker's socket died (EOF, I/O error, or an
+    /// undecodable frame). Recoverable like [`Error::Timeout`].
+    PeerLost { worker: usize, reason: String },
+    /// A net-transport handshake was rejected: wire-version mismatch, a
+    /// run-fingerprint that doesn't match the leader's config + data, or
+    /// a slot conflict. Not recoverable by retrying — the peer is
+    /// running a different experiment (or a different build).
+    Handshake { reason: String },
     /// A TOML experiment config failed to parse or validate.
     Config { message: String },
     /// A runtime failure after construction (worker death, PJRT engine
@@ -110,6 +122,13 @@ impl fmt::Display for Error {
                 write!(f, "invalid transport config: {reason}")
             }
             Error::Transport { message } => write!(f, "transport error: {message}"),
+            Error::Timeout { waited_s } => {
+                write!(f, "timed out after {waited_s} s waiting for worker traffic")
+            }
+            Error::PeerLost { worker, reason } => {
+                write!(f, "lost worker {worker}: {reason}")
+            }
+            Error::Handshake { reason } => write!(f, "handshake rejected: {reason}"),
             Error::Config { message } => write!(f, "config error: {message}"),
             Error::Runtime { message } => write!(f, "runtime error: {message}"),
         }
@@ -147,6 +166,9 @@ mod tests {
             Error::InvalidBudget { reason: "eval_every must be >= 1".into() }.to_string(),
             Error::InvalidTransport { reason: "drop_prob must be in [0, 1)".into() }.to_string(),
             Error::Transport { message: "replay diverged at event 3".into() }.to_string(),
+            Error::Timeout { waited_s: 30.0 }.to_string(),
+            Error::PeerLost { worker: 2, reason: "connection closed".into() }.to_string(),
+            Error::Handshake { reason: "wire version 2 incompatible with 1".into() }.to_string(),
         ];
         assert!(msgs[0].contains("lambda"));
         assert!(msgs[1].contains("-1"));
@@ -155,6 +177,9 @@ mod tests {
         assert!(msgs[4].contains("eval_every"));
         assert!(msgs[5].contains("drop_prob"));
         assert!(msgs[6].contains("replay diverged"));
+        assert!(msgs[7].contains("30"));
+        assert!(msgs[8].contains("worker 2"));
+        assert!(msgs[9].contains("wire version"));
     }
 
     #[test]
@@ -173,5 +198,13 @@ mod tests {
         let through: anyhow::Error = typed.into();
         let back: Error = through.into();
         assert!(matches!(back, Error::Transport { .. }), "{back}");
+        // the recovery path matches on these two after they cross the
+        // coordinator's anyhow layer — they must survive the round trip
+        let through: anyhow::Error = Error::PeerLost { worker: 1, reason: "eof".into() }.into();
+        let back: Error = through.into();
+        assert!(matches!(back, Error::PeerLost { worker: 1, .. }), "{back}");
+        let through: anyhow::Error = Error::Timeout { waited_s: 5.0 }.into();
+        let back: Error = through.into();
+        assert!(matches!(back, Error::Timeout { .. }), "{back}");
     }
 }

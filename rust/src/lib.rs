@@ -141,6 +141,39 @@
 //! stragglers (same seed, same trajectory, bit for bit), or
 //! `TransportKind::Record`/`Replay` to tape a run and re-serve it.
 //!
+//! ## Multi-process deployment
+//!
+//! `TransportKind::Net(...)` moves the same protocol onto real sockets —
+//! TCP (`tcp:host:port`) or Unix-domain (`uds:/path`) — with the workers
+//! as separate OS processes. The CLI wires it up from one shared config:
+//!
+//! ```text
+//! cocoa worker --config exp.toml --connect uds:/tmp/cocoa.sock &   # x K
+//! cocoa leader --config exp.toml --listen uds:/tmp/cocoa.sock --workers K
+//! ```
+//!
+//! Every worker loads the same TOML, derives its own data block and
+//! per-slot seed from it, and proves agreement in a versioned handshake:
+//! a fingerprint over the dataset, partition, loss, regularizer, solver,
+//! lambda, seed, and wire version. A peer from a different experiment —
+//! or a different wire version — is rejected with a typed
+//! [`Error::Handshake`] before any training traffic flows. Because the
+//! socket frames carry the exact in-process wire encoding, a K-process
+//! run's trajectory is bit-identical to the in-process one, and the
+//! transport [`Ledger`](transport::Ledger) still accounts every payload
+//! byte (socket-level overhead is reported separately via
+//! [`Session::socket_stats`]: length prefixes + handshake frames, and
+//! nothing else).
+//!
+//! Failures are survivable on both sides. Workers reconnect with bounded
+//! exponential backoff; the leader turns a dead connection into a typed
+//! [`Error::PeerLost`] (or [`Error::Timeout`]) at the failed round, and
+//! [`driver::recovery::run_with_recovery`] rolls the cluster back to the
+//! newest checkpoint, re-accepts a replacement worker
+//! ([`Session::recover`]), and resumes — the recovered trajectory is
+//! bit-identical to one that never failed, because checkpoints carry the
+//! worker rng streams.
+//!
 //! ## Layers
 //!
 //! * [`data`] — dense/CSR datasets, a LibSVM loader, the synthetic workload
@@ -175,8 +208,10 @@
 //!   exact communication accounting.
 //! * [`transport`] — the pluggable leader<->worker message fabric: the
 //!   zero-overhead in-process default, byte-exact counted accounting, a
-//!   deterministic seedable fault injector (SimNet), and transcript
-//!   record/replay.
+//!   deterministic seedable fault injector (SimNet), transcript
+//!   record/replay, and a real-socket backend ([`transport::net`]: TCP /
+//!   Unix-domain, versioned fingerprinted handshake, reconnect + leader
+//!   `heal`) behind `cocoa leader` / `cocoa worker`.
 //! * [`algorithms`] — the [`Algorithm`] trait, the [`Aggregation`] policy,
 //!   and every Section-6 competitor as an implementation.
 //! * [`driver`] — the step-wise round state machine behind every run:

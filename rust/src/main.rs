@@ -7,6 +7,8 @@
 //!   perf [--smoke] [--out <json>] [--seed <n>] | perf --validate <json>
 //!   optimum --config <toml>
 //!   gen-data <cov|rcv1|imagenet> --n <n> --d <d> [--seed <s>] --out <path>
+//!   leader --config <toml> --listen <addr> [--workers <k>] ...
+//!   worker --config <toml> --connect <addr> [--attempts <n>] [--backoff-s <s>]
 //!
 //! The binary is self-contained after `make artifacts`: python never runs
 //! on this path. (Args are parsed by hand — the offline build carries no
@@ -16,11 +18,14 @@ use anyhow::{anyhow, bail, Result};
 
 use cocoa::config::ExperimentConfig;
 use cocoa::data;
-use cocoa::driver::ProgressLine;
+use cocoa::driver::recovery::{run_with_recovery, RecoveryPolicy};
+use cocoa::driver::{IntoDriverSpec, Observer, ProgressLine};
 use cocoa::experiments::{self, figures, theory_val, Profile};
 use cocoa::objective;
 use cocoa::perf::{self, PerfProfile};
 use cocoa::regularizers::Regularizer;
+use cocoa::transport::net::run_worker_process;
+use cocoa::transport::{NetConfig, ReconnectPolicy, TransportKind};
 
 /// Tiny argv helper: `--key value` options + positionals.
 struct Args {
@@ -71,6 +76,9 @@ USAGE:
   cocoa perf --validate <json>
   cocoa optimum --config <toml>
   cocoa gen-data <cov|rcv1|imagenet> --n <n> --d <d> [--seed <s>] --out <path>
+  cocoa leader --config <toml> --listen <tcp:host:port|uds:/path> [--workers <k>] [--out <csv>]
+               [--p-star <f64>] [--progress] [--checkpoint-every <n>] [--max-recoveries <m>]
+  cocoa worker --config <toml> --connect <tcp:host:port|uds:/path> [--attempts <n>] [--backoff-s <s>]
 ";
 
 fn main() -> Result<()> {
@@ -131,6 +139,29 @@ fn main() -> Result<()> {
                 args.req("d")?.parse()?,
                 args.opt("seed").map(|s| s.parse()).transpose()?.unwrap_or(0),
                 args.req("out")?,
+            )
+        }
+        "leader" => {
+            let args = Args::parse(&argv[1..], &["progress"])?;
+            let p_star = args.opt("p-star").map(|s| s.parse()).transpose()?;
+            leader(
+                args.req("config")?,
+                args.opt("listen"),
+                args.opt("workers").map(|s| s.parse()).transpose()?,
+                args.opt("out").map(String::from),
+                p_star,
+                args.flags.contains("progress"),
+                args.opt("checkpoint-every").map(|s| s.parse()).transpose()?.unwrap_or(1),
+                args.opt("max-recoveries").map(|s| s.parse()).transpose()?.unwrap_or(3),
+            )
+        }
+        "worker" => {
+            let args = Args::parse(&argv[1..], &[])?;
+            worker(
+                args.req("config")?,
+                args.req("connect")?,
+                args.opt("attempts").map(|s| s.parse()).transpose()?.unwrap_or(10),
+                args.opt("backoff-s").map(|s| s.parse()).transpose()?.unwrap_or(0.2),
             )
         }
         "help" | "--help" | "-h" => {
@@ -207,6 +238,124 @@ fn train(config_path: &str, out: Option<String>, p_star: Option<f64>, progress: 
     });
     trace.to_csv(&out)?;
     eprintln!("trace -> {out}");
+    Ok(())
+}
+
+#[allow(clippy::too_many_arguments)]
+fn leader(
+    config_path: &str,
+    listen: Option<&str>,
+    workers: Option<usize>,
+    out: Option<String>,
+    p_star: Option<f64>,
+    progress: bool,
+    checkpoint_every: u64,
+    max_recoveries: u32,
+) -> Result<()> {
+    let cfg = ExperimentConfig::from_toml_file(config_path)?;
+    let data = cfg.dataset.load()?;
+    if let Some(k) = workers {
+        if k != cfg.partition.k {
+            bail!(
+                "--workers {k} disagrees with the config partition (k = {}); \
+                 every worker derives its block from the same config, so the \
+                 two must match",
+                cfg.partition.k
+            );
+        }
+    }
+    // start from the config's [transport.net] section when present so
+    // timeouts/taping survive; the flag overrides the listen address
+    let mut netcfg = match &cfg.transport {
+        TransportKind::Net(c) => c.clone(),
+        _ => NetConfig::new(""),
+    };
+    if let Some(addr) = listen {
+        netcfg.listen = addr.to_string();
+    }
+    if netcfg.listen.is_empty() {
+        bail!("no listen address: pass --listen or set listen under [transport.net]");
+    }
+    eprintln!(
+        "leader: dataset {} (n={}, d={}) | {} | waiting for {} workers on {}",
+        cfg.dataset.name(),
+        data.n(),
+        data.d(),
+        cfg.algorithm.name(),
+        cfg.partition.k,
+        netcfg.listen,
+    );
+    let mut session = cfg.trainer(&data).transport(TransportKind::Net(netcfg)).build()?;
+    session.set_reference_optimum(p_star);
+    let mut algorithm = cfg.algorithm.instantiate();
+    let mut budget = cfg.run.budget();
+    if budget.target_subopt > 0.0 && p_star.is_none() {
+        eprintln!(
+            "note: config sets target_subopt but no --p-star was given; \
+             running to the round/gap budget instead (try `cocoa optimum`)"
+        );
+        budget.target_subopt = 0.0;
+    }
+    let policy = RecoveryPolicy { max_recoveries };
+    let make_spec = || Ok(budget.into_spec()?.checkpoint_every(checkpoint_every));
+    let outcome = if progress {
+        let mut line = ProgressLine::stderr();
+        let extra: &mut [&mut dyn Observer] = &mut [&mut line];
+        run_with_recovery(&mut session, algorithm.as_mut(), make_spec, &policy, extra)?
+    } else {
+        run_with_recovery(&mut session, algorithm.as_mut(), make_spec, &policy, &mut [])?
+    };
+    let trace = outcome.trace;
+    let d = session.d();
+    let stats = session.socket_stats();
+    session.shutdown();
+
+    let last = trace.last().expect("at least round 0 recorded");
+    println!(
+        "finished: rounds={} sim_time={:.3}s vectors={} P={:.6} D={:.6} gap={:.2e} stop={}",
+        last.round, last.sim_time_s, last.vectors, last.primal, last.dual, last.gap, last.stop
+    );
+    if outcome.recoveries > 0 {
+        println!("recoveries: {} checkpoint restores", outcome.recoveries);
+    }
+    if cfg.regularizer.build().sparsity_hint() {
+        println!("sparsity: {} of {d} coordinates nonzero", last.w_nnz);
+    }
+    if let Some(s) = stats {
+        println!(
+            "socket: sent {} B / recv {} B in {} frames \
+             (payload {} B, framing {} B, handshake {} B)",
+            s.sent_bytes,
+            s.recv_bytes,
+            s.sent_frames + s.recv_frames,
+            s.payload_bytes(),
+            s.framing_bytes,
+            s.handshake_bytes,
+        );
+    }
+    let out = out.unwrap_or_else(|| {
+        format!(
+            "results/leader_{}_{}_k{}_h{}.csv",
+            cfg.dataset.name(),
+            cfg.algorithm.name(),
+            cfg.partition.k,
+            cfg.algorithm.h()
+        )
+    });
+    trace.to_csv(&out)?;
+    eprintln!("trace -> {out}");
+    Ok(())
+}
+
+fn worker(config_path: &str, connect: &str, attempts: u32, backoff_s: f64) -> Result<()> {
+    let cfg = ExperimentConfig::from_toml_file(config_path)?;
+    eprintln!(
+        "worker: dataset {} | {} | connecting to {connect}",
+        cfg.dataset.name(),
+        cfg.algorithm.name(),
+    );
+    run_worker_process(&cfg, connect, &ReconnectPolicy { attempts, backoff_s })?;
+    eprintln!("worker: clean shutdown");
     Ok(())
 }
 

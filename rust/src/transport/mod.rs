@@ -24,21 +24,31 @@
 //!   the original trace bit for bit without any live worker traffic, and
 //!   fails with a typed error the moment the driver diverges from the
 //!   tape.
+//! * [`net`] — the real thing: the wire layout framed over TCP or
+//!   Unix-domain sockets to K `cocoa worker` *processes*, with a
+//!   versioned, fingerprinted handshake, per-recv deadlines, and
+//!   checkpoint-based recovery when a worker dies. Its ledger is read off
+//!   the actual socket writes, so "measured bytes" stops being a
+//!   simulation.
 //!
 //! Selection is declarative via [`TransportKind`]
 //! ([`Trainer::transport`](crate::Trainer::transport) or the `[transport]`
 //! TOML section); construction happens inside
 //! [`Cluster::spawn`](crate::Cluster), which always builds the real
-//! channel fabric and then wraps the leader endpoints.
+//! channel fabric and then wraps the leader endpoints (for
+//! [`TransportKind::Net`] it instead binds a listener and accepts the
+//! remote workers).
 
+pub mod net;
 pub mod wire;
 
 mod replay;
 mod simnet;
 
+pub use self::net::{NetConfig, ReconnectPolicy, SocketStats};
 pub use self::replay::{Record, Replay, ReplayEvent, Transcript};
 pub use self::simnet::{SimNet, SimNetConfig};
-pub use self::wire::{decode_dw, encode_dw, DwEncoding, MessageKind};
+pub use self::wire::{decode_dw, encode_dw, DwEncoding, MessageKind, WireError};
 
 use std::sync::mpsc::{Receiver, Sender};
 
@@ -160,6 +170,20 @@ pub trait Transport: Send {
         None
     }
 
+    /// Re-accept connections for dead peers after a failure (net backend;
+    /// wrappers forward). Returns how many connections were (re)made.
+    /// Backends without a notion of reconnection return a typed error.
+    fn heal(&mut self) -> Result<usize> {
+        Err(Error::Transport {
+            message: format!("transport {:?} does not support reconnection", self.name()),
+        })
+    }
+
+    /// Raw socket accounting (net backend; wrappers forward).
+    fn socket_stats(&self) -> Option<SocketStats> {
+        None
+    }
+
     /// Forget all accounting/replay state. `Session::reset` warm-start
     /// contract: a reset transport is indistinguishable from a fresh one.
     fn reset_state(&mut self) {}
@@ -244,6 +268,14 @@ impl<T: Transport> Transport for Counted<T> {
         self.inner.take_round_latency()
     }
 
+    fn heal(&mut self) -> Result<usize> {
+        self.inner.heal()
+    }
+
+    fn socket_stats(&self) -> Option<SocketStats> {
+        self.inner.socket_stats()
+    }
+
     fn reset_state(&mut self) {
         self.meter.reset();
         self.inner.reset_state();
@@ -265,6 +297,10 @@ pub enum TransportKind {
     Record,
     /// Serve a previously recorded transcript (no live worker traffic).
     Replay(std::sync::Arc<Transcript>),
+    /// Real sockets to K `cocoa worker` processes (TCP or UDS), with
+    /// byte-exact accounting read off the socket writes. Set
+    /// [`NetConfig::record`] to tape the traffic for later [`Replay`].
+    Net(NetConfig),
 }
 
 impl TransportKind {
@@ -275,15 +311,19 @@ impl TransportKind {
             TransportKind::SimNet(_) => "simnet",
             TransportKind::Record => "record",
             TransportKind::Replay(_) => "replay",
+            TransportKind::Net(_) => "net",
         }
     }
 
     /// Typed validation — called by `Trainer::build` before any thread is
     /// spawned.
     pub fn validate(&self) -> Result<()> {
-        if let TransportKind::SimNet(cfg) = self {
-            cfg.validate()
-                .map_err(|reason| Error::InvalidTransport { reason })?;
+        match self {
+            TransportKind::SimNet(cfg) => cfg
+                .validate()
+                .map_err(|reason| Error::InvalidTransport { reason })?,
+            TransportKind::Net(cfg) => cfg.validate()?,
+            _ => {}
         }
         Ok(())
     }
@@ -296,6 +336,11 @@ impl TransportKind {
             TransportKind::SimNet(cfg) => Box::new(SimNet::over(inner, cfg)),
             TransportKind::Record => Box::new(Record::over(inner)),
             TransportKind::Replay(t) => Box::new(Replay::serve(inner, t)),
+            // handled by Cluster::spawn before any channel fabric exists:
+            // net workers are remote processes, not threads
+            TransportKind::Net(_) => {
+                unreachable!("net transport is bound by Cluster::spawn, not built over channels")
+            }
         }
     }
 }
@@ -310,6 +355,7 @@ impl PartialEq for TransportKind {
             (TransportKind::Replay(a), TransportKind::Replay(b)) => {
                 std::sync::Arc::ptr_eq(a, b)
             }
+            (TransportKind::Net(a), TransportKind::Net(b)) => a == b,
             _ => false,
         }
     }

@@ -1,0 +1,352 @@
+//! The leader's socket transport: K accepted worker connections behind
+//! the [`Transport`] trait.
+//!
+//! One reader thread per connection turns frames into [`ToLeader`]
+//! messages on a single event queue; `recv` drains it under a deadline.
+//! Each connection carries a generation counter so events from a dead
+//! connection can never be mistaken for its replacement's — a stale
+//! `RoundReply` racing a reconnect is discarded by generation, not by
+//! guesswork.
+//!
+//! Accounting: the per-kind [`Ledger`](crate::transport::Ledger) counts
+//! exactly the payload bytes that crossed the socket (the encoder's
+//! length equals the sizing function's by construction), while
+//! [`SocketStats`] counts raw socket bytes — payloads plus 4-byte frame
+//! prefixes plus handshake traffic — so the two reconcile exactly:
+//! `sent + recv == ledger.total + framing + handshake`.
+
+use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use super::{
+    decode_hello, encode_accept, encode_reject, read_frame, write_frame, FrameRead, NetAddr,
+    NetConfig, NetListener, Sock, SocketStats, LEN_PREFIX_BYTES,
+};
+use crate::coordinator::{ToLeader, ToWorker};
+use crate::error::{Error, Result};
+use crate::transport::wire;
+use crate::transport::{Ledger, Meter, Transport};
+
+/// How often the accept loop polls its nonblocking listener.
+const ACCEPT_POLL: Duration = Duration::from_millis(5);
+/// Read deadline during a handshake — a connected-but-silent peer must
+/// not stall the accept loop for the whole accept window.
+const HANDSHAKE_READ_TIMEOUT: Duration = Duration::from_secs(1);
+
+/// One worker slot's connection state.
+struct Peer {
+    /// Write half; `None` until the slot's first handshake completes or
+    /// after the connection died.
+    writer: Option<Sock>,
+    reader: Option<JoinHandle<()>>,
+    /// Bumped on every (re)connection; events carry the generation they
+    /// were read under, and stale ones are discarded.
+    gen: u64,
+    alive: bool,
+}
+
+enum PeerEvent {
+    Msg { slot: usize, gen: u64, msg: ToLeader, frame_bytes: u64 },
+    Down { slot: usize, gen: u64, reason: String },
+}
+
+/// The real-socket [`Transport`]: see the module docs.
+pub struct NetTransport {
+    listener: NetListener,
+    peers: Vec<Peer>,
+    events: Receiver<PeerEvent>,
+    events_tx: Sender<PeerEvent>,
+    meter: Meter,
+    stats: SocketStats,
+    accept_timeout: Duration,
+    recv_timeout: Duration,
+    fingerprint: u64,
+}
+
+impl NetTransport {
+    /// Bind the configured listener and block until all `k` workers have
+    /// connected and passed the handshake (or the accept window closes
+    /// with a typed [`Error::Timeout`]).
+    pub(crate) fn bind(cfg: &NetConfig, k: usize, fingerprint: u64) -> Result<NetTransport> {
+        let addr = NetAddr::parse(&cfg.listen)?;
+        let listener = NetListener::bind(&addr)?;
+        listener.set_nonblocking(true).map_err(|e| Error::Transport {
+            message: format!("listener setup failed: {e}"),
+        })?;
+        let (events_tx, events) = channel();
+        let mut t = NetTransport {
+            listener,
+            peers: (0..k)
+                .map(|_| Peer { writer: None, reader: None, gen: 0, alive: false })
+                .collect(),
+            events,
+            events_tx,
+            meter: Meter::default(),
+            stats: SocketStats::default(),
+            accept_timeout: Duration::from_secs_f64(cfg.accept_timeout_s),
+            recv_timeout: Duration::from_secs_f64(cfg.recv_timeout_s),
+            fingerprint,
+        };
+        t.accept_workers()?;
+        Ok(t)
+    }
+
+    /// Accept + handshake connections until every slot is alive. A
+    /// rejected peer (bad fingerprint, garbage hello, cluster full) does
+    /// not abort the loop — the slot stays open for a valid worker.
+    fn accept_workers(&mut self) -> Result<usize> {
+        let deadline = Instant::now() + self.accept_timeout;
+        let mut made = 0;
+        while self.peers.iter().any(|p| !p.alive) {
+            match self.listener.accept() {
+                Ok(sock) => {
+                    if self.handshake(sock).is_ok() {
+                        made += 1;
+                    }
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                    if Instant::now() >= deadline {
+                        return Err(Error::Timeout {
+                            waited_s: self.accept_timeout.as_secs_f64(),
+                        });
+                    }
+                    std::thread::sleep(ACCEPT_POLL);
+                }
+                Err(e) => {
+                    return Err(Error::Transport { message: format!("accept failed: {e}") })
+                }
+            }
+        }
+        Ok(made)
+    }
+
+    /// Run the handshake on one fresh connection and install it in a
+    /// slot. Errors reject *this peer* only.
+    fn handshake(&mut self, mut sock: Sock) -> Result<()> {
+        let setup_err =
+            |e: std::io::Error| Error::Handshake { reason: format!("socket setup failed: {e}") };
+        sock.set_read_timeout(Some(HANDSHAKE_READ_TIMEOUT)).map_err(setup_err)?;
+        let frame = match read_frame(&mut sock) {
+            Ok(FrameRead::Frame(f)) => f,
+            Ok(FrameRead::Eof) => {
+                return Err(Error::Handshake { reason: "peer closed before hello".into() })
+            }
+            Err(e) => return Err(Error::Handshake { reason: format!("hello read failed: {e}") }),
+        };
+        self.stats.handshake_bytes += LEN_PREFIX_BYTES + frame.len() as u64;
+        let hello = match decode_hello(&frame) {
+            Ok(h) => h,
+            Err(e) => {
+                let reason = format!("bad hello: {e}");
+                self.reject(&mut sock, &reason);
+                return Err(Error::Handshake { reason });
+            }
+        };
+        if hello.fingerprint != self.fingerprint {
+            let reason = format!(
+                "run fingerprint {:016x} does not match leader {:016x} \
+                 (different dataset, partition, loss, regularizer, solver, lambda, or seed)",
+                hello.fingerprint, self.fingerprint
+            );
+            self.reject(&mut sock, &reason);
+            return Err(Error::Handshake { reason });
+        }
+        // a reconnecting worker gets its old slot back when free;
+        // otherwise the lowest free slot (the worker builds its block
+        // from whatever slot the accept assigns)
+        let free = |p: &Peer| !p.alive;
+        let slot = match hello.requested.filter(|&s| s < self.peers.len() && free(&self.peers[s]))
+        {
+            Some(s) => s,
+            None => match self.peers.iter().position(free) {
+                Some(s) => s,
+                None => {
+                    self.reject(&mut sock, "cluster full: all slots are connected");
+                    return Err(Error::Handshake { reason: "cluster full".into() });
+                }
+            },
+        };
+        let accept = encode_accept(slot);
+        write_frame(&mut sock, &accept)
+            .map_err(|e| Error::Handshake { reason: format!("accept write failed: {e}") })?;
+        self.stats.handshake_bytes += LEN_PREFIX_BYTES + accept.len() as u64;
+        sock.set_read_timeout(None).map_err(setup_err)?;
+        let reader_half = sock.try_clone().map_err(setup_err)?;
+
+        let peer = &mut self.peers[slot];
+        peer.gen += 1;
+        let gen = peer.gen;
+        // the previous reader (if any) exited when its socket died /
+        // was shut down — join it before installing the replacement
+        if let Some(h) = peer.reader.take() {
+            let _ = h.join();
+        }
+        let tx = self.events_tx.clone();
+        peer.reader = Some(std::thread::spawn(move || reader_loop(reader_half, slot, gen, tx)));
+        peer.writer = Some(sock);
+        peer.alive = true;
+        Ok(())
+    }
+
+    fn reject(&mut self, sock: &mut Sock, reason: &str) {
+        let frame = encode_reject(reason);
+        if write_frame(sock, &frame).is_ok() {
+            self.stats.handshake_bytes += LEN_PREFIX_BYTES + frame.len() as u64;
+        }
+    }
+
+    /// Tear down a slot's connection (idempotent). Shutting the socket
+    /// down unblocks the reader thread, so the join is prompt.
+    fn drop_peer(&mut self, slot: usize) {
+        let peer = &mut self.peers[slot];
+        peer.alive = false;
+        if let Some(w) = peer.writer.take() {
+            let _ = w.shutdown();
+        }
+        if let Some(h) = peer.reader.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+fn reader_loop(mut sock: Sock, slot: usize, gen: u64, tx: Sender<PeerEvent>) {
+    loop {
+        match read_frame(&mut sock) {
+            Ok(FrameRead::Frame(payload)) => match wire::decode_to_leader(&payload) {
+                Ok(msg) => {
+                    let frame_bytes = LEN_PREFIX_BYTES + payload.len() as u64;
+                    if tx.send(PeerEvent::Msg { slot, gen, msg, frame_bytes }).is_err() {
+                        return; // transport dropped
+                    }
+                }
+                Err(e) => {
+                    let _ = tx.send(PeerEvent::Down {
+                        slot,
+                        gen,
+                        reason: format!("undecodable frame: {e}"),
+                    });
+                    return;
+                }
+            },
+            Ok(FrameRead::Eof) => {
+                let _ = tx.send(PeerEvent::Down {
+                    slot,
+                    gen,
+                    reason: "connection closed".into(),
+                });
+                return;
+            }
+            Err(e) => {
+                let _ = tx.send(PeerEvent::Down { slot, gen, reason: format!("read failed: {e}") });
+                return;
+            }
+        }
+    }
+}
+
+impl Transport for NetTransport {
+    fn name(&self) -> &'static str {
+        "net"
+    }
+
+    fn send(&mut self, to: usize, msg: ToWorker) -> Result<()> {
+        if to >= self.peers.len() {
+            return Err(Error::Transport {
+                message: format!("send to worker {to} of a {}-worker cluster", self.peers.len()),
+            });
+        }
+        let (kind, bytes) = wire::to_worker_wire(&msg);
+        let payload = wire::encode_to_worker(&msg, to);
+        debug_assert_eq!(payload.len() as u64, bytes);
+        let Some(writer) = self.peers[to].writer.as_mut() else {
+            return Err(Error::PeerLost { worker: to, reason: "no live connection".into() });
+        };
+        if let Err(e) = write_frame(writer, &payload) {
+            self.drop_peer(to);
+            return Err(Error::PeerLost { worker: to, reason: format!("write failed: {e}") });
+        }
+        self.meter.count(kind, bytes);
+        self.stats.sent_bytes += LEN_PREFIX_BYTES + bytes;
+        self.stats.sent_frames += 1;
+        self.stats.framing_bytes += LEN_PREFIX_BYTES;
+        Ok(())
+    }
+
+    fn recv(&mut self) -> Result<ToLeader> {
+        loop {
+            match self.events.recv_timeout(self.recv_timeout) {
+                Ok(PeerEvent::Msg { slot, gen, msg, frame_bytes }) => {
+                    if gen != self.peers[slot].gen || !self.peers[slot].alive {
+                        continue; // from a connection we already replaced
+                    }
+                    let (kind, bytes) = wire::to_leader_wire(&msg);
+                    self.meter.count(kind, bytes);
+                    self.stats.recv_bytes += frame_bytes;
+                    self.stats.recv_frames += 1;
+                    self.stats.framing_bytes += LEN_PREFIX_BYTES;
+                    return Ok(msg);
+                }
+                Ok(PeerEvent::Down { slot, gen, reason }) => {
+                    if gen != self.peers[slot].gen || !self.peers[slot].alive {
+                        continue;
+                    }
+                    self.drop_peer(slot);
+                    return Err(Error::PeerLost { worker: slot, reason });
+                }
+                Err(RecvTimeoutError::Timeout) => {
+                    return Err(Error::Timeout { waited_s: self.recv_timeout.as_secs_f64() })
+                }
+                Err(RecvTimeoutError::Disconnected) => {
+                    unreachable!("transport holds its own event sender")
+                }
+            }
+        }
+    }
+
+    fn ledger(&self) -> Option<&Ledger> {
+        Some(&self.meter.ledger)
+    }
+
+    fn take_round_bytes(&mut self) -> Option<u64> {
+        Some(self.meter.drain())
+    }
+
+    fn heal(&mut self) -> Result<usize> {
+        // fold queued failures in first so every dead slot is refilled in
+        // one accept pass; queued data messages (a survivor's stale
+        // replies) are kept — the recovery barrier drains them
+        let queued: Vec<PeerEvent> = self.events.try_iter().collect();
+        for ev in queued {
+            match ev {
+                PeerEvent::Down { slot, gen, .. }
+                    if gen == self.peers[slot].gen && self.peers[slot].alive =>
+                {
+                    self.drop_peer(slot)
+                }
+                PeerEvent::Down { .. } => {}
+                msg @ PeerEvent::Msg { .. } => {
+                    let _ = self.events_tx.send(msg);
+                }
+            }
+        }
+        self.accept_workers()
+    }
+
+    fn socket_stats(&self) -> Option<SocketStats> {
+        Some(self.stats)
+    }
+
+    fn reset_state(&mut self) {
+        self.meter.reset();
+        self.stats = SocketStats::default();
+    }
+}
+
+impl Drop for NetTransport {
+    fn drop(&mut self) {
+        for slot in 0..self.peers.len() {
+            self.drop_peer(slot);
+        }
+    }
+}

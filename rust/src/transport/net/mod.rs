@@ -1,0 +1,588 @@
+//! Real-network transport: the [`wire`] layout framed over TCP or
+//! Unix-domain sockets, so a K-worker run spans K actual processes.
+//!
+//! Layering, bottom up:
+//!
+//! * **Framing** — every message is `u32` little-endian length prefix +
+//!   the exact [`wire`] encoding. [`read_frame`] treats EOF *between*
+//!   frames as a clean close and EOF *inside* a frame as an error, and
+//!   caps the declared length at [`MAX_FRAME_BYTES`] before allocating.
+//! * **Handshake** — a connecting worker sends `Hello { requested slot,
+//!   run fingerprint }`; the leader answers `Accept { slot }` or
+//!   `Reject { reason }`. The hello rides the same versioned 16-byte
+//!   header as every other frame, so a peer from an incompatible build
+//!   fails with a typed [`WireError::BadVersion`] before any payload is
+//!   interpreted, and [`run_fingerprint`] binds both sides to the same
+//!   dataset + partition + loss + regularizer + solver + lambda + seed —
+//!   a worker loading different data is rejected, not silently wrong.
+//! * **Leader** — [`NetTransport`] (in [`leader`]) implements
+//!   [`Transport`](crate::transport::Transport) over the accepted
+//!   sockets: per-kind byte accounting read off actual writes, per-recv
+//!   deadlines ([`Error::Timeout`](crate::Error::Timeout)), dead-peer
+//!   detection ([`Error::PeerLost`](crate::Error::PeerLost)), and
+//!   [`heal`](crate::transport::Transport::heal) to re-accept
+//!   replacements for the checkpoint-recovery path.
+//! * **Worker** — [`run_worker_process`] (in [`worker`]) connects with
+//!   bounded retry/backoff and drives the *same*
+//!   [`WorkerCore`](crate::coordinator::worker::WorkerCore) state machine
+//!   as the in-process threads, so multi-process trajectories are
+//!   bit-identical to `InProc` by construction.
+
+pub mod leader;
+pub mod worker;
+
+pub use leader::NetTransport;
+pub use worker::run_worker_process;
+
+use std::io::{self, Read, Write};
+use std::net::{TcpListener, TcpStream};
+use std::os::unix::net::{UnixListener, UnixStream};
+use std::path::PathBuf;
+use std::time::Duration;
+
+use super::wire::{self, WireError};
+use crate::data::{Dataset, Partition};
+use crate::error::{Error, Result};
+use crate::loss::LossKind;
+use crate::regularizers::RegularizerKind;
+use crate::solvers::SolverKind;
+
+/// The `[transport.net]` section: where the leader listens and how long
+/// it waits.
+#[derive(Debug, Clone, PartialEq)]
+pub struct NetConfig {
+    /// Leader listen address: `tcp:host:port` or `uds:/path/to.sock`.
+    pub listen: String,
+    /// How long `Trainer::build` (and `heal`) waits for all K workers to
+    /// connect and pass the handshake.
+    pub accept_timeout_s: f64,
+    /// Per-`recv` deadline; expiry surfaces as a typed
+    /// [`Error::Timeout`], the trigger for checkpoint recovery.
+    pub recv_timeout_s: f64,
+    /// Additionally tape all leader-visible traffic (like the `record`
+    /// transport) for a later in-process [`Replay`](super::Replay).
+    pub record: bool,
+}
+
+impl NetConfig {
+    pub fn new(listen: impl Into<String>) -> Self {
+        NetConfig {
+            listen: listen.into(),
+            accept_timeout_s: 30.0,
+            recv_timeout_s: 30.0,
+            record: false,
+        }
+    }
+
+    /// Typed validation, called by `TransportKind::validate` at build.
+    pub fn validate(&self) -> Result<()> {
+        NetAddr::parse(&self.listen)?;
+        for (name, v) in [
+            ("accept_timeout_s", self.accept_timeout_s),
+            ("recv_timeout_s", self.recv_timeout_s),
+        ] {
+            if !v.is_finite() || v <= 0.0 {
+                return Err(Error::InvalidTransport {
+                    reason: format!("{name} must be finite and > 0, got {v}"),
+                });
+            }
+        }
+        Ok(())
+    }
+}
+
+/// A parsed `tcp:host:port` / `uds:/path` endpoint.
+#[derive(Debug, Clone, PartialEq)]
+pub enum NetAddr {
+    Tcp(String),
+    Uds(PathBuf),
+}
+
+impl NetAddr {
+    pub fn parse(s: &str) -> Result<NetAddr> {
+        if let Some(rest) = s.strip_prefix("tcp:") {
+            if rest.is_empty() || !rest.contains(':') {
+                return Err(Error::InvalidTransport {
+                    reason: format!("tcp address {rest:?} must be host:port"),
+                });
+            }
+            Ok(NetAddr::Tcp(rest.to_string()))
+        } else if let Some(rest) = s.strip_prefix("uds:") {
+            if rest.is_empty() {
+                return Err(Error::InvalidTransport {
+                    reason: "uds address needs a socket path".into(),
+                });
+            }
+            Ok(NetAddr::Uds(PathBuf::from(rest)))
+        } else {
+            Err(Error::InvalidTransport {
+                reason: format!("address {s:?} must be tcp:host:port or uds:/path/to.sock"),
+            })
+        }
+    }
+}
+
+/// How a `cocoa worker` retries a lost leader connection.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ReconnectPolicy {
+    /// Max connection attempts (initial connect and reconnects alike).
+    pub attempts: u32,
+    /// Base backoff; doubles per consecutive failure, capped at 5 s.
+    pub backoff_s: f64,
+}
+
+impl Default for ReconnectPolicy {
+    fn default() -> Self {
+        ReconnectPolicy { attempts: 10, backoff_s: 0.2 }
+    }
+}
+
+/// Raw socket accounting on the leader side: every byte that crossed a
+/// worker connection, split so it reconciles exactly with the per-kind
+/// [`Ledger`](crate::transport::Ledger):
+///
+/// `sent_bytes + recv_bytes == ledger.total_bytes() + framing_bytes +
+/// handshake_bytes`
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct SocketStats {
+    /// Bytes written to worker sockets after the handshake (payload +
+    /// length prefixes).
+    pub sent_bytes: u64,
+    /// Bytes read from worker sockets after the handshake.
+    pub recv_bytes: u64,
+    pub sent_frames: u64,
+    pub recv_frames: u64,
+    /// The 4-byte length prefixes (one per post-handshake frame) — the
+    /// only overhead the in-process ledger does not account.
+    pub framing_bytes: u64,
+    /// Hello/accept/reject traffic (both directions, prefixes included).
+    pub handshake_bytes: u64,
+}
+
+impl SocketStats {
+    /// Socket bytes minus framing and handshake overhead — what the
+    /// in-process ledger should report for the same traffic.
+    pub fn payload_bytes(&self) -> u64 {
+        (self.sent_bytes + self.recv_bytes) - self.framing_bytes - self.handshake_bytes
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Sockets: one enum over the two stream families
+// ---------------------------------------------------------------------------
+
+/// A connected stream of either family.
+pub(crate) enum Sock {
+    Tcp(TcpStream),
+    Uds(UnixStream),
+}
+
+impl Sock {
+    pub(crate) fn try_clone(&self) -> io::Result<Sock> {
+        Ok(match self {
+            Sock::Tcp(s) => Sock::Tcp(s.try_clone()?),
+            Sock::Uds(s) => Sock::Uds(s.try_clone()?),
+        })
+    }
+
+    pub(crate) fn set_read_timeout(&self, dur: Option<Duration>) -> io::Result<()> {
+        match self {
+            Sock::Tcp(s) => s.set_read_timeout(dur),
+            Sock::Uds(s) => s.set_read_timeout(dur),
+        }
+    }
+
+    /// Shut down both directions; unblocks a reader on a cloned handle.
+    pub(crate) fn shutdown(&self) -> io::Result<()> {
+        match self {
+            Sock::Tcp(s) => s.shutdown(std::net::Shutdown::Both),
+            Sock::Uds(s) => s.shutdown(std::net::Shutdown::Both),
+        }
+    }
+
+    pub(crate) fn connect(addr: &NetAddr) -> io::Result<Sock> {
+        Ok(match addr {
+            NetAddr::Tcp(hostport) => {
+                let s = TcpStream::connect(hostport)?;
+                s.set_nodelay(true)?;
+                Sock::Tcp(s)
+            }
+            NetAddr::Uds(path) => Sock::Uds(UnixStream::connect(path)?),
+        })
+    }
+}
+
+impl Read for Sock {
+    fn read(&mut self, buf: &mut [u8]) -> io::Result<usize> {
+        match self {
+            Sock::Tcp(s) => s.read(buf),
+            Sock::Uds(s) => s.read(buf),
+        }
+    }
+}
+
+impl Write for Sock {
+    fn write(&mut self, buf: &[u8]) -> io::Result<usize> {
+        match self {
+            Sock::Tcp(s) => s.write(buf),
+            Sock::Uds(s) => s.write(buf),
+        }
+    }
+
+    fn flush(&mut self) -> io::Result<()> {
+        match self {
+            Sock::Tcp(s) => s.flush(),
+            Sock::Uds(s) => s.flush(),
+        }
+    }
+}
+
+/// A bound listener of either family. Dropping a UDS listener removes
+/// its socket file.
+pub(crate) enum NetListener {
+    Tcp(TcpListener),
+    Uds(UnixListener, PathBuf),
+}
+
+impl NetListener {
+    pub(crate) fn bind(addr: &NetAddr) -> Result<NetListener> {
+        match addr {
+            NetAddr::Tcp(hostport) => {
+                let l = TcpListener::bind(hostport).map_err(|e| Error::Transport {
+                    message: format!("bind tcp:{hostport} failed: {e}"),
+                })?;
+                Ok(NetListener::Tcp(l))
+            }
+            NetAddr::Uds(path) => {
+                // a stale socket file from a crashed run blocks the bind
+                let _ = std::fs::remove_file(path);
+                let l = UnixListener::bind(path).map_err(|e| Error::Transport {
+                    message: format!("bind uds:{} failed: {e}", path.display()),
+                })?;
+                Ok(NetListener::Uds(l, path.clone()))
+            }
+        }
+    }
+
+    pub(crate) fn set_nonblocking(&self, nonblocking: bool) -> io::Result<()> {
+        match self {
+            NetListener::Tcp(l) => l.set_nonblocking(nonblocking),
+            NetListener::Uds(l, _) => l.set_nonblocking(nonblocking),
+        }
+    }
+
+    pub(crate) fn accept(&self) -> io::Result<Sock> {
+        match self {
+            NetListener::Tcp(l) => {
+                let (s, _) = l.accept()?;
+                s.set_nodelay(true)?;
+                Ok(Sock::Tcp(s))
+            }
+            NetListener::Uds(l, _) => {
+                let (s, _) = l.accept()?;
+                Ok(Sock::Uds(s))
+            }
+        }
+    }
+}
+
+impl Drop for NetListener {
+    fn drop(&mut self) {
+        if let NetListener::Uds(_, path) = self {
+            let _ = std::fs::remove_file(path);
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Framing
+// ---------------------------------------------------------------------------
+
+/// Length prefix in front of every frame.
+pub(crate) const LEN_PREFIX_BYTES: u64 = 4;
+/// Hard cap on a frame's declared length (256 MiB) — bounds what a
+/// malicious or corrupted peer can make the reader allocate.
+pub const MAX_FRAME_BYTES: usize = 1 << 28;
+
+/// One `read_frame` outcome: a full frame, or a clean close.
+pub(crate) enum FrameRead {
+    Frame(Vec<u8>),
+    /// The peer closed the stream *between* frames.
+    Eof,
+}
+
+/// Write one length-prefixed frame and flush it.
+pub(crate) fn write_frame(w: &mut impl Write, payload: &[u8]) -> io::Result<()> {
+    debug_assert!(payload.len() <= MAX_FRAME_BYTES);
+    w.write_all(&(payload.len() as u32).to_le_bytes())?;
+    w.write_all(payload)?;
+    w.flush()
+}
+
+/// Read one length-prefixed frame. EOF before the first length byte is a
+/// clean [`FrameRead::Eof`]; EOF anywhere later is an error (the peer
+/// died mid-frame).
+pub(crate) fn read_frame(r: &mut impl Read) -> io::Result<FrameRead> {
+    let mut len = [0u8; 4];
+    let mut got = 0;
+    while got < len.len() {
+        let n = r.read(&mut len[got..])?;
+        if n == 0 {
+            if got == 0 {
+                return Ok(FrameRead::Eof);
+            }
+            return Err(io::Error::new(
+                io::ErrorKind::UnexpectedEof,
+                "connection closed inside a frame length",
+            ));
+        }
+        got += n;
+    }
+    let declared = u32::from_le_bytes(len) as usize;
+    if declared > MAX_FRAME_BYTES {
+        return Err(io::Error::new(
+            io::ErrorKind::InvalidData,
+            format!("declared frame length {declared} exceeds cap {MAX_FRAME_BYTES}"),
+        ));
+    }
+    let mut payload = vec![0u8; declared];
+    r.read_exact(&mut payload)?;
+    Ok(FrameRead::Frame(payload))
+}
+
+// ---------------------------------------------------------------------------
+// Handshake frames
+// ---------------------------------------------------------------------------
+
+/// A worker's opening frame.
+pub(crate) struct Hello {
+    /// The slot a reconnecting worker held before; `None` on first
+    /// connect (leader assigns the lowest free slot).
+    pub requested: Option<usize>,
+    pub fingerprint: u64,
+}
+
+pub(crate) fn encode_hello(requested: Option<usize>, fingerprint: u64) -> Vec<u8> {
+    let slot = requested.map(|s| s as u32).unwrap_or(u32::MAX);
+    let mut out = Vec::with_capacity(24);
+    wire::encode_header(wire::TAG_HELLO, slot, 0, &mut out);
+    out.extend_from_slice(&fingerprint.to_le_bytes());
+    out
+}
+
+pub(crate) fn decode_hello(buf: &[u8]) -> std::result::Result<Hello, WireError> {
+    let (h, mut r) = wire::decode_header(buf)?;
+    if h.tag != wire::TAG_HELLO {
+        return Err(WireError::UnknownTag { got: h.tag });
+    }
+    let fingerprint = r.u64("hello fingerprint")?;
+    r.finish("trailing bytes after hello")?;
+    let requested = if h.worker == u32::MAX { None } else { Some(h.worker as usize) };
+    Ok(Hello { requested, fingerprint })
+}
+
+/// The leader's answer to a hello.
+pub(crate) enum HandshakeReply {
+    Accept { slot: usize },
+    Reject { reason: String },
+}
+
+pub(crate) fn encode_accept(slot: usize) -> Vec<u8> {
+    let mut out = Vec::with_capacity(16);
+    wire::encode_header(wire::TAG_ACCEPT, slot as u32, 0, &mut out);
+    out
+}
+
+pub(crate) fn encode_reject(reason: &str) -> Vec<u8> {
+    let mut out = Vec::with_capacity(16 + 4 + reason.len());
+    wire::encode_header(wire::TAG_REJECT, 0, 0, &mut out);
+    out.extend_from_slice(&(reason.len() as u32).to_le_bytes());
+    out.extend_from_slice(reason.as_bytes());
+    out
+}
+
+pub(crate) fn decode_handshake_reply(
+    buf: &[u8],
+) -> std::result::Result<HandshakeReply, WireError> {
+    let (h, mut r) = wire::decode_header(buf)?;
+    match h.tag {
+        wire::TAG_ACCEPT => {
+            r.finish("trailing bytes after accept")?;
+            Ok(HandshakeReply::Accept { slot: h.worker as usize })
+        }
+        wire::TAG_REJECT => {
+            let len = r.elems("reject reason length")?;
+            let raw = r.take(len, "reject reason")?;
+            r.finish("trailing bytes after reject")?;
+            Ok(HandshakeReply::Reject {
+                reason: String::from_utf8_lossy(raw).into_owned(),
+            })
+        }
+        got => Err(WireError::UnknownTag { got }),
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Run fingerprint
+// ---------------------------------------------------------------------------
+
+fn fnv1a(h: &mut u64, v: u64) {
+    *h ^= v;
+    *h = h.wrapping_mul(0x100000001b3);
+}
+
+fn fnv1a_bytes(h: &mut u64, bytes: &[u8]) {
+    for &b in bytes {
+        fnv1a(h, b as u64);
+    }
+}
+
+/// One u64 binding a run's full description: dataset content fingerprint,
+/// shapes, partition layout, loss, regularizer, solver, lambda, and seed.
+/// The leader and every worker compute it independently from their own
+/// config + data; the handshake rejects a mismatch, so two processes can
+/// only train together when they would produce bit-identical state.
+#[allow(clippy::too_many_arguments)]
+pub fn run_fingerprint(
+    data: &Dataset,
+    partition: &Partition,
+    loss: LossKind,
+    regularizer: RegularizerKind,
+    solver: SolverKind,
+    lambda: f64,
+    seed: u64,
+) -> u64 {
+    let mut h: u64 = 0xcbf29ce484222325;
+    fnv1a_bytes(&mut h, data.fingerprint().as_bytes());
+    fnv1a(&mut h, data.n() as u64);
+    fnv1a(&mut h, data.d() as u64);
+    fnv1a(&mut h, partition.k() as u64);
+    for block in &partition.blocks {
+        fnv1a(&mut h, block.len() as u64);
+    }
+    fnv1a_bytes(&mut h, loss.to_string().as_bytes());
+    fnv1a_bytes(&mut h, regularizer.to_string().as_bytes());
+    fnv1a_bytes(&mut h, format!("{solver:?}").as_bytes());
+    fnv1a(&mut h, lambda.to_bits());
+    fnv1a(&mut h, seed);
+    fnv1a(&mut h, wire::WIRE_VERSION as u64);
+    h
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::{Partition, PartitionStrategy};
+
+    #[test]
+    fn addr_parse_accepts_both_schemes_and_rejects_garbage() {
+        assert_eq!(
+            NetAddr::parse("tcp:127.0.0.1:7070").unwrap(),
+            NetAddr::Tcp("127.0.0.1:7070".into())
+        );
+        assert_eq!(
+            NetAddr::parse("uds:/tmp/cocoa.sock").unwrap(),
+            NetAddr::Uds(PathBuf::from("/tmp/cocoa.sock"))
+        );
+        for bad in ["", "127.0.0.1:7070", "tcp:", "tcp:nohost", "uds:", "http:x"] {
+            let err = NetAddr::parse(bad).unwrap_err();
+            assert!(matches!(err, Error::InvalidTransport { .. }), "{bad:?}: {err}");
+        }
+    }
+
+    #[test]
+    fn config_validates_listen_and_timeouts() {
+        assert!(NetConfig::new("uds:/tmp/x.sock").validate().is_ok());
+        assert!(NetConfig::new("nope").validate().is_err());
+        let mut cfg = NetConfig::new("tcp:127.0.0.1:0");
+        cfg.recv_timeout_s = 0.0;
+        assert!(cfg.validate().is_err());
+        cfg.recv_timeout_s = f64::INFINITY;
+        assert!(cfg.validate().is_err());
+    }
+
+    #[test]
+    fn frame_roundtrip_and_clean_eof() {
+        let mut buf = Vec::new();
+        write_frame(&mut buf, b"hello").unwrap();
+        write_frame(&mut buf, b"").unwrap();
+        let mut r = std::io::Cursor::new(buf);
+        match read_frame(&mut r).unwrap() {
+            FrameRead::Frame(p) => assert_eq!(p, b"hello"),
+            FrameRead::Eof => panic!("expected frame"),
+        }
+        match read_frame(&mut r).unwrap() {
+            FrameRead::Frame(p) => assert!(p.is_empty()),
+            FrameRead::Eof => panic!("expected empty frame"),
+        }
+        assert!(matches!(read_frame(&mut r).unwrap(), FrameRead::Eof));
+    }
+
+    #[test]
+    fn frame_reader_rejects_oversize_and_midframe_eof() {
+        // declared length over the cap: rejected before allocation
+        let huge = (MAX_FRAME_BYTES as u32 + 1).to_le_bytes().to_vec();
+        let err = read_frame(&mut std::io::Cursor::new(huge)).unwrap_err();
+        assert_eq!(err.kind(), io::ErrorKind::InvalidData);
+        // EOF inside the length prefix
+        let err = read_frame(&mut std::io::Cursor::new(vec![1u8, 0])).unwrap_err();
+        assert_eq!(err.kind(), io::ErrorKind::UnexpectedEof);
+        // EOF inside the payload
+        let mut short = 10u32.to_le_bytes().to_vec();
+        short.extend_from_slice(b"abc");
+        let err = read_frame(&mut std::io::Cursor::new(short)).unwrap_err();
+        assert_eq!(err.kind(), io::ErrorKind::UnexpectedEof);
+    }
+
+    #[test]
+    fn handshake_frames_roundtrip() {
+        let hello = decode_hello(&encode_hello(Some(3), 0xDEAD_BEEF)).unwrap();
+        assert_eq!(hello.requested, Some(3));
+        assert_eq!(hello.fingerprint, 0xDEAD_BEEF);
+        let hello = decode_hello(&encode_hello(None, 7)).unwrap();
+        assert_eq!(hello.requested, None);
+
+        match decode_handshake_reply(&encode_accept(2)).unwrap() {
+            HandshakeReply::Accept { slot } => assert_eq!(slot, 2),
+            HandshakeReply::Reject { reason } => panic!("rejected: {reason}"),
+        }
+        match decode_handshake_reply(&encode_reject("cluster full")).unwrap() {
+            HandshakeReply::Reject { reason } => assert_eq!(reason, "cluster full"),
+            HandshakeReply::Accept { .. } => panic!("accepted"),
+        }
+        // a data frame is not a handshake reply
+        let not_reply = wire::encode_to_worker(
+            &crate::coordinator::ToWorker::Commit { scale: 1.0 },
+            0,
+        );
+        assert!(decode_handshake_reply(&not_reply).is_err());
+        // version mismatch is caught on the hello itself
+        let mut old = encode_hello(None, 7);
+        old[2] = 0;
+        assert!(matches!(decode_hello(&old), Err(WireError::BadVersion { .. })));
+    }
+
+    #[test]
+    fn fingerprint_separates_runs() {
+        let data = crate::data::cov_like(60, 6, 0.1, 3);
+        let other = crate::data::cov_like(60, 6, 0.1, 4);
+        let part = |k| Partition::new(PartitionStrategy::Contiguous, 60, k, 0);
+        let f = |d: &Dataset, k, lambda, seed| {
+            run_fingerprint(
+                d,
+                &part(k),
+                LossKind::Hinge,
+                RegularizerKind::L2,
+                SolverKind::Sdca,
+                lambda,
+                seed,
+            )
+        };
+        let base = f(&data, 2, 1e-3, 0);
+        assert_eq!(base, f(&data, 2, 1e-3, 0), "deterministic");
+        assert_ne!(base, f(&other, 2, 1e-3, 0), "different data");
+        assert_ne!(base, f(&data, 3, 1e-3, 0), "different k");
+        assert_ne!(base, f(&data, 2, 1e-2, 0), "different lambda");
+        assert_ne!(base, f(&data, 2, 1e-3, 1), "different seed");
+    }
+}

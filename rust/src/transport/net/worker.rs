@@ -1,0 +1,219 @@
+//! The `cocoa worker` side: connect to a leader, handshake, and serve
+//! frames by driving the shared [`WorkerCore`] state machine.
+//!
+//! The worker derives everything from the *same* experiment config the
+//! leader loaded: dataset, partition, and per-slot seed come from
+//! [`native_worker_config`], the code path the in-process threads use —
+//! so a multi-process run computes bit-identical updates by
+//! construction, and [`run_fingerprint`](super::run_fingerprint) proves
+//! both sides agree before any training traffic flows.
+//!
+//! Connection loss is survivable: the worker reconnects with bounded
+//! exponential backoff (a fresh connection starts with a fresh core; the
+//! leader's checkpoint recovery restores real state via `SetState`). A
+//! handshake *rejection* is not retried — the peer is running a
+//! different experiment, and retrying can never fix that.
+
+use std::time::Duration;
+
+use super::{
+    decode_handshake_reply, encode_hello, read_frame, write_frame, FrameRead, HandshakeReply,
+    NetAddr, ReconnectPolicy, Sock,
+};
+use crate::config::{Backend, ExperimentConfig};
+use crate::coordinator::worker::{CoreStep, WorkerCore};
+use crate::coordinator::{native_worker_config, ToLeader};
+use crate::error::{Error, Result};
+use crate::transport::wire;
+
+/// Longest single backoff sleep between connection attempts.
+const MAX_BACKOFF: Duration = Duration::from_secs(5);
+
+/// Why one serve session over one connection ended.
+enum Served {
+    /// Leader ordered a clean shutdown — the run is over.
+    Shutdown,
+    /// The connection died; reconnecting may resume the run.
+    Lost(String),
+}
+
+/// Run one worker process to completion: connect to `connect`, pass the
+/// fingerprint handshake, and serve the assigned block until the leader
+/// orders shutdown. Returns `Ok(())` only on a clean shutdown.
+pub fn run_worker_process(
+    cfg: &ExperimentConfig,
+    connect: &str,
+    policy: &ReconnectPolicy,
+) -> Result<()> {
+    let addr = NetAddr::parse(connect)?;
+    if cfg.run.backend == Backend::Pjrt {
+        return Err(Error::InvalidTransport {
+            reason: "net workers require the native backend (run.backend = \"native\")".into(),
+        });
+    }
+    if policy.attempts == 0 || !policy.backoff_s.is_finite() || policy.backoff_s < 0.0 {
+        return Err(Error::InvalidTransport {
+            reason: format!(
+                "reconnect policy needs attempts >= 1 and a finite backoff, got {policy:?}"
+            ),
+        });
+    }
+    let data = cfg.dataset.load().map_err(Error::from)?;
+    let partition = cfg.partition.build(data.n());
+    let fingerprint = super::run_fingerprint(
+        &data,
+        &partition,
+        cfg.loss,
+        cfg.regularizer,
+        cfg.algorithm.solver_kind(),
+        cfg.lambda,
+        cfg.run.seed,
+    );
+
+    // the slot we held on the previous connection; re-requested on
+    // reconnect so recovery restores the same block when possible
+    let mut held: Option<usize> = None;
+    let mut failures: u32 = 0;
+    loop {
+        let mut sock = match Sock::connect(&addr) {
+            Ok(s) => s,
+            Err(e) => {
+                failures += 1;
+                if failures >= policy.attempts {
+                    return Err(Error::Transport {
+                        message: format!(
+                            "connect {connect} failed after {failures} attempts: {e}"
+                        ),
+                    });
+                }
+                std::thread::sleep(backoff(policy, failures));
+                continue;
+            }
+        };
+
+        let slot = match handshake(&mut sock, held, fingerprint) {
+            Ok(slot) => slot,
+            Err(HandshakeEnd::Rejected(reason)) => return Err(Error::Handshake { reason }),
+            Err(HandshakeEnd::Lost(_)) => {
+                failures += 1;
+                if failures >= policy.attempts {
+                    return Err(Error::PeerLost {
+                        worker: held.unwrap_or(usize::MAX),
+                        reason: format!("leader unreachable after {failures} attempts"),
+                    });
+                }
+                std::thread::sleep(backoff(policy, failures));
+                continue;
+            }
+        };
+        if slot >= partition.blocks.len() {
+            return Err(Error::Handshake {
+                reason: format!(
+                    "leader assigned slot {slot} of a {}-block partition",
+                    partition.blocks.len()
+                ),
+            });
+        }
+        held = Some(slot);
+        failures = 0; // a full handshake resets the reconnect budget
+
+        // A fresh core per connection: zero dual state, slot-seeded rng.
+        // After a recovery the leader's SetState overwrites both before
+        // any round work is dispatched.
+        let mut core = WorkerCore::new(native_worker_config(
+            &data,
+            &partition.blocks[slot],
+            cfg.loss,
+            cfg.lambda,
+            cfg.regularizer,
+            cfg.algorithm.solver_kind(),
+            cfg.run.seed,
+            slot,
+        ));
+        match serve(&mut sock, &mut core)? {
+            Served::Shutdown => return Ok(()),
+            Served::Lost(_) => {
+                failures += 1;
+                if failures >= policy.attempts {
+                    return Err(Error::PeerLost {
+                        worker: slot,
+                        reason: format!("leader unreachable after {failures} attempts"),
+                    });
+                }
+                std::thread::sleep(backoff(policy, failures));
+            }
+        }
+    }
+}
+
+fn backoff(policy: &ReconnectPolicy, failures: u32) -> Duration {
+    let exp = failures.saturating_sub(1).min(16);
+    let s = policy.backoff_s * (1u64 << exp) as f64;
+    Duration::from_secs_f64(s).min(MAX_BACKOFF)
+}
+
+enum HandshakeEnd {
+    /// Typed rejection from the leader: wrong fingerprint/version/slot.
+    Rejected(String),
+    /// Connection-level failure before an answer; retryable.
+    Lost(String),
+}
+
+/// Send the hello and wait for the slot assignment. Blocks until the
+/// leader answers — a reconnecting worker queued in the listener backlog
+/// waits here until the leader's recovery `heal` accepts it.
+fn handshake(
+    sock: &mut Sock,
+    held: Option<usize>,
+    fingerprint: u64,
+) -> std::result::Result<usize, HandshakeEnd> {
+    write_frame(sock, &encode_hello(held, fingerprint))
+        .map_err(|e| HandshakeEnd::Lost(format!("hello write failed: {e}")))?;
+    let frame = match read_frame(sock) {
+        Ok(FrameRead::Frame(f)) => f,
+        Ok(FrameRead::Eof) => {
+            return Err(HandshakeEnd::Lost("leader closed before answering hello".into()))
+        }
+        Err(e) => return Err(HandshakeEnd::Lost(format!("handshake read failed: {e}"))),
+    };
+    match decode_handshake_reply(&frame) {
+        Ok(HandshakeReply::Accept { slot }) => Ok(slot),
+        Ok(HandshakeReply::Reject { reason }) => Err(HandshakeEnd::Rejected(reason)),
+        Err(e) => Err(HandshakeEnd::Rejected(format!("undecodable handshake reply: {e}"))),
+    }
+}
+
+/// Serve one connection until shutdown, connection loss, or a fatal
+/// state error. `Err` means the worker must not continue (its state or
+/// the leader's frames can no longer be trusted).
+fn serve(sock: &mut Sock, core: &mut WorkerCore) -> Result<Served> {
+    loop {
+        let payload = match read_frame(sock) {
+            Ok(FrameRead::Frame(p)) => p,
+            Ok(FrameRead::Eof) => return Ok(Served::Lost("leader closed the connection".into())),
+            Err(e) => return Ok(Served::Lost(format!("read failed: {e}"))),
+        };
+        // an undecodable frame from an accepted leader is not a blip —
+        // the peers disagree about the protocol; bail out for good
+        let msg = wire::decode_to_worker(&payload).map_err(Error::from)?;
+        match core.handle(msg) {
+            CoreStep::Continue => {}
+            CoreStep::Reply(reply) => {
+                if let Err(e) = write_frame(sock, &wire::encode_to_leader(&reply)) {
+                    return Ok(Served::Lost(format!("write failed: {e}")));
+                }
+            }
+            CoreStep::Fatal(reply) => {
+                // best-effort report to the leader, then refuse to serve:
+                // the core's state is no longer trustworthy
+                let _ = write_frame(sock, &wire::encode_to_leader(&reply));
+                let message = match reply {
+                    ToLeader::Fatal { message, .. } => message,
+                    _ => "worker entered a fatal state".into(),
+                };
+                return Err(Error::Runtime { message });
+            }
+            CoreStep::Shutdown => return Ok(Served::Shutdown),
+        }
+    }
+}

@@ -1,13 +1,16 @@
-//! Wire format: byte-exact sizing (and, for `dw`, real encoding) of every
+//! Wire format: byte-exact sizing *and* real encoding of every
 //! leader <-> worker message.
 //!
 //! The in-process backends never serialize for delivery, but the byte
 //! accounting of [`Counted`](super::Counted) and friends must be *exact*,
 //! not an analytic vector count — so this module pins down one concrete
-//! wire layout and sizes every message against it:
+//! wire layout and sizes every message against it. The net transport
+//! ([`super::net`]) then ships these exact bytes over real sockets, so
+//! socket-measured traffic and the in-process ledger agree to the byte:
 //!
-//! * every message: a 16-byte header (kind tag `u32`, worker `u32`,
-//!   round `u64`),
+//! * every message: a 16-byte header — magic `u16` ([`MAGIC`]), format
+//!   version `u8` ([`WIRE_VERSION`]), variant tag `u8`, worker `u32`,
+//!   round `u64`, all little-endian,
 //! * dense f64 vectors: `u32` length prefix + 8 bytes per scalar,
 //! * shared-vector payloads (`dw` replies AND the `w` broadcasts): the
 //!   cheaper of a dense block and a sparse `(u32 index, f64 value)` pair
@@ -17,11 +20,17 @@
 //!   exact zeros in it (lasso broadcasts shrink with the recovered
 //!   support).
 //!
-//! [`encode_dw`]/[`decode_dw`] implement the shared-vector layout for real
-//! (used by the `hot_paths` bench and the round-trip tests); the rest of
-//! the module only *sizes* messages, which is all the ledger needs.
+//! Decoding is hardened against untrusted streams: truncated buffers,
+//! bad magic/version, unknown tags, out-of-range indices, and oversized
+//! declared lengths all come back as a typed [`WireError`] — never a
+//! panic, never an attacker-sized allocation. The byte layout itself is
+//! pinned by golden-bytes tests below; bump [`WIRE_VERSION`] on any
+//! change so cross-process peers fail at decode time, not as silent
+//! corruption.
 
-use crate::coordinator::{LocalWork, ToLeader, ToWorker};
+use std::sync::Arc;
+
+use crate::coordinator::{LocalWork, RoundReply, ToLeader, ToWorker, WorkerState};
 
 /// Number of [`MessageKind`] variants (ledger array size).
 pub const KIND_COUNT: usize = 7;
@@ -84,13 +93,81 @@ impl MessageKind {
     }
 }
 
-/// Fixed per-message header: kind tag (`u32`), worker id (`u32`),
-/// round (`u64`).
+/// Fixed per-message header: magic (`u16`) + version (`u8`) + variant
+/// tag (`u8`) + worker id (`u32`) + round (`u64`).
 pub const HEADER_BYTES: u64 = 16;
+/// First two header bytes of every frame ("C0CA", little-endian).
+pub const MAGIC: u16 = 0xC0CA;
+/// Wire-format version; bump on any layout change.
+pub const WIRE_VERSION: u8 = 1;
 /// Length prefix of variable-size payloads.
 const LEN_BYTES: u64 = 4;
 /// RNG state carried by checkpoint messages (`[u64; 4]`).
 const RNG_STATE_BYTES: u64 = 32;
+/// Hard cap on any wire-declared element count (f64 slots). Bounds the
+/// allocation a malicious peer can trigger to 256 MiB.
+pub const MAX_WIRE_ELEMS: usize = 1 << 25;
+
+// Variant tags (byte 3 of the header). Leader -> worker in 0x0_,
+// worker -> leader in 0x8_, handshake frames in 0xF_.
+pub(crate) const TAG_ROUND: u8 = 0x01;
+pub(crate) const TAG_COMMIT: u8 = 0x02;
+pub(crate) const TAG_EVAL: u8 = 0x03;
+pub(crate) const TAG_GET_STATE: u8 = 0x04;
+pub(crate) const TAG_SET_STATE: u8 = 0x05;
+pub(crate) const TAG_RESET: u8 = 0x06;
+pub(crate) const TAG_SHUTDOWN: u8 = 0x07;
+pub(crate) const TAG_ROUND_REPLY: u8 = 0x81;
+pub(crate) const TAG_EVAL_REPLY: u8 = 0x82;
+pub(crate) const TAG_STATE: u8 = 0x83;
+pub(crate) const TAG_FATAL: u8 = 0x84;
+pub(crate) const TAG_HELLO: u8 = 0xF0;
+pub(crate) const TAG_ACCEPT: u8 = 0xF1;
+pub(crate) const TAG_REJECT: u8 = 0xF2;
+
+/// Typed decode failure: what went wrong, never a panic.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum WireError {
+    /// Buffer ended before the named field.
+    Truncated { what: &'static str },
+    /// First two bytes are not [`MAGIC`] — not a cocoa frame at all.
+    BadMagic { got: u16 },
+    /// A cocoa frame from an incompatible wire-format version.
+    BadVersion { got: u8, want: u8 },
+    /// Unknown variant tag for the decoding direction.
+    UnknownTag { got: u8 },
+    /// A declared length exceeds the decoder's allocation cap.
+    Oversized { declared: u64, max: u64 },
+    /// Structurally invalid payload (bad index, length mismatch, ...).
+    Malformed { what: &'static str },
+}
+
+impl std::fmt::Display for WireError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            WireError::Truncated { what } => write!(f, "truncated frame at {what}"),
+            WireError::BadMagic { got } => write!(f, "bad magic {got:#06x} (want {MAGIC:#06x})"),
+            WireError::BadVersion { got, want } => {
+                write!(f, "wire version {got} incompatible with {want}")
+            }
+            WireError::UnknownTag { got } => write!(f, "unknown message tag {got:#04x}"),
+            WireError::Oversized { declared, max } => {
+                write!(f, "declared length {declared} exceeds cap {max}")
+            }
+            WireError::Malformed { what } => write!(f, "malformed payload: {what}"),
+        }
+    }
+}
+
+impl std::error::Error for WireError {}
+
+impl From<WireError> for crate::error::Error {
+    fn from(e: WireError) -> Self {
+        crate::error::Error::Transport { message: format!("wire: {e}") }
+    }
+}
+
+type WireResult<T> = std::result::Result<T, WireError>;
 
 /// Length-prefixed dense f64 vector.
 pub fn dense_vec_bytes(len: usize) -> u64 {
@@ -106,11 +183,19 @@ pub enum DwEncoding {
     Sparse,
 }
 
+/// Exact zero by bit pattern. `-0.0` counts as a nonzero so sparse
+/// round-trips stay bit-identical to the dense ones (`0.0 == -0.0`
+/// numerically, but the decoded vector must reproduce the input bits).
+#[inline]
+fn is_wire_zero(v: f64) -> bool {
+    v.to_bits() == 0
+}
+
 /// Chosen encoding + exact encoded size for a `dw` payload: the sparse
 /// pair list when it is strictly smaller (nnz < ~2d/3), dense otherwise.
 pub fn dw_wire(dw: &[f64]) -> (DwEncoding, u64) {
     let d = dw.len() as u64;
-    let nnz = dw.iter().filter(|v| **v != 0.0).count() as u64;
+    let nnz = dw.iter().filter(|v| !is_wire_zero(**v)).count() as u64;
     let dense = 1 + LEN_BYTES + 8 * d;
     let sparse = 1 + LEN_BYTES + LEN_BYTES + 12 * nnz;
     if sparse < dense {
@@ -122,8 +207,15 @@ pub fn dw_wire(dw: &[f64]) -> (DwEncoding, u64) {
 
 /// Encode `dw` into the layout [`dw_wire`] sized (little-endian).
 pub fn encode_dw(dw: &[f64]) -> Vec<u8> {
-    let (encoding, bytes) = dw_wire(dw);
+    let (_, bytes) = dw_wire(dw);
     let mut out = Vec::with_capacity(bytes as usize);
+    encode_dw_into(dw, &mut out);
+    debug_assert_eq!(out.len() as u64, bytes);
+    out
+}
+
+fn encode_dw_into(dw: &[f64], out: &mut Vec<u8>) {
+    let (encoding, _) = dw_wire(dw);
     out.push(match encoding {
         DwEncoding::Dense => 0u8,
         DwEncoding::Sparse => 1u8,
@@ -136,60 +228,30 @@ pub fn encode_dw(dw: &[f64]) -> Vec<u8> {
             }
         }
         DwEncoding::Sparse => {
-            let nnz = dw.iter().filter(|v| **v != 0.0).count() as u32;
+            let nnz = dw.iter().filter(|v| !is_wire_zero(**v)).count() as u32;
             out.extend_from_slice(&nnz.to_le_bytes());
             for (i, v) in dw.iter().enumerate() {
-                if *v != 0.0 {
+                if !is_wire_zero(*v) {
                     out.extend_from_slice(&(i as u32).to_le_bytes());
                     out.extend_from_slice(&v.to_le_bytes());
                 }
             }
         }
     }
-    debug_assert_eq!(out.len() as u64, bytes);
-    out
 }
 
-/// Decode a buffer produced by [`encode_dw`]. `None` on malformed input.
+/// Decode a buffer produced by [`encode_dw`]. `None` on malformed input
+/// (see [`decode_dw_strict`] for the typed reason).
 pub fn decode_dw(buf: &[u8]) -> Option<Vec<f64>> {
-    let (&tag, rest) = buf.split_first()?;
-    if rest.len() < 4 {
-        return None;
-    }
-    let d = u32::from_le_bytes(rest[0..4].try_into().ok()?) as usize;
-    let rest = &rest[4..];
-    match tag {
-        0 => {
-            if rest.len() != 8 * d {
-                return None;
-            }
-            let mut out = Vec::with_capacity(d);
-            for chunk in rest.chunks_exact(8) {
-                out.push(f64::from_le_bytes(chunk.try_into().ok()?));
-            }
-            Some(out)
-        }
-        1 => {
-            if rest.len() < 4 {
-                return None;
-            }
-            let nnz = u32::from_le_bytes(rest[0..4].try_into().ok()?) as usize;
-            let rest = &rest[4..];
-            if rest.len() != 12 * nnz {
-                return None;
-            }
-            let mut out = vec![0.0; d];
-            for chunk in rest.chunks_exact(12) {
-                let i = u32::from_le_bytes(chunk[0..4].try_into().ok()?) as usize;
-                if i >= d {
-                    return None;
-                }
-                out[i] = f64::from_le_bytes(chunk[4..12].try_into().ok()?);
-            }
-            Some(out)
-        }
-        _ => None,
-    }
+    decode_dw_strict(buf).ok()
+}
+
+/// Decode a buffer produced by [`encode_dw`], consuming it exactly.
+pub fn decode_dw_strict(buf: &[u8]) -> WireResult<Vec<f64>> {
+    let mut r = Reader::new(buf);
+    let dw = r.dw()?;
+    r.finish("dw")?;
+    Ok(dw)
 }
 
 /// A [`LocalWork`] order: kind tag (`u32`) + two parameter words covers
@@ -240,16 +302,305 @@ pub fn to_leader_wire(msg: &ToLeader) -> (MessageKind, u64) {
     }
 }
 
+// ---------------------------------------------------------------------------
+// Encoding
+// ---------------------------------------------------------------------------
+
+/// Append the fixed 16-byte header.
+pub(crate) fn encode_header(tag: u8, worker: u32, round: u64, out: &mut Vec<u8>) {
+    out.extend_from_slice(&MAGIC.to_le_bytes());
+    out.push(WIRE_VERSION);
+    out.push(tag);
+    out.extend_from_slice(&worker.to_le_bytes());
+    out.extend_from_slice(&round.to_le_bytes());
+}
+
+fn encode_worker_state(ws: &WorkerState, out: &mut Vec<u8>) {
+    for word in ws.rng_state {
+        out.extend_from_slice(&word.to_le_bytes());
+    }
+    out.extend_from_slice(&(ws.alpha.len() as u32).to_le_bytes());
+    for a in &ws.alpha {
+        out.extend_from_slice(&a.to_le_bytes());
+    }
+}
+
+fn local_work_fields(work: &LocalWork) -> (u32, u64, u64) {
+    match *work {
+        LocalWork::DualRound { h } => (0, h as u64, 0),
+        LocalWork::DualRoundScaled { h, sigma_prime } => (1, h as u64, sigma_prime.to_bits()),
+        LocalWork::DualBatchFrozen { b } => (2, b as u64, 0),
+        LocalWork::ExactSolve => (3, 0, 0),
+        LocalWork::SgdLocal { h, t_offset } => (4, h as u64, t_offset),
+        LocalWork::SgdFrozen { h } => (5, h as u64, 0),
+    }
+}
+
+/// Serialize a leader -> worker message addressed to `to`. The encoded
+/// length equals [`to_worker_wire`]'s size exactly — the ledger and the
+/// socket agree by construction.
+pub fn encode_to_worker(msg: &ToWorker, to: usize) -> Vec<u8> {
+    let (_, sized) = to_worker_wire(msg);
+    let mut out = Vec::with_capacity(sized as usize);
+    let to = to as u32;
+    match msg {
+        ToWorker::Round { round, w, work } => {
+            encode_header(TAG_ROUND, to, *round, &mut out);
+            let (tag, p1, p2) = local_work_fields(work);
+            out.extend_from_slice(&tag.to_le_bytes());
+            out.extend_from_slice(&p1.to_le_bytes());
+            out.extend_from_slice(&p2.to_le_bytes());
+            encode_dw_into(w, &mut out);
+        }
+        ToWorker::Commit { scale } => {
+            encode_header(TAG_COMMIT, to, 0, &mut out);
+            out.extend_from_slice(&scale.to_le_bytes());
+        }
+        ToWorker::Eval { w } => {
+            encode_header(TAG_EVAL, to, 0, &mut out);
+            encode_dw_into(w, &mut out);
+        }
+        ToWorker::GetState => encode_header(TAG_GET_STATE, to, 0, &mut out),
+        ToWorker::SetState(ws) => {
+            encode_header(TAG_SET_STATE, to, 0, &mut out);
+            encode_worker_state(ws, &mut out);
+        }
+        ToWorker::Reset => encode_header(TAG_RESET, to, 0, &mut out),
+        ToWorker::Shutdown => encode_header(TAG_SHUTDOWN, to, 0, &mut out),
+    }
+    debug_assert_eq!(out.len() as u64, sized);
+    out
+}
+
+/// Serialize a worker -> leader message. The encoded length equals
+/// [`to_leader_wire`]'s size exactly.
+pub fn encode_to_leader(msg: &ToLeader) -> Vec<u8> {
+    let (_, sized) = to_leader_wire(msg);
+    let mut out = Vec::with_capacity(sized as usize);
+    match msg {
+        ToLeader::Round(r) => {
+            encode_header(TAG_ROUND_REPLY, r.worker as u32, r.round, &mut out);
+            out.extend_from_slice(&r.compute_s.to_le_bytes());
+            out.extend_from_slice(&r.steps.to_le_bytes());
+            encode_dw_into(&r.dw, &mut out);
+        }
+        ToLeader::Eval(e) => {
+            encode_header(TAG_EVAL_REPLY, e.worker as u32, 0, &mut out);
+            out.extend_from_slice(&e.loss_sum.to_le_bytes());
+            out.extend_from_slice(&e.conj_sum.to_le_bytes());
+            out.push(e.has_dual as u8);
+        }
+        ToLeader::State(ws) => {
+            encode_header(TAG_STATE, ws.id as u32, 0, &mut out);
+            encode_worker_state(ws, &mut out);
+        }
+        ToLeader::Fatal { worker, message } => {
+            encode_header(TAG_FATAL, *worker as u32, 0, &mut out);
+            out.extend_from_slice(&(message.len() as u32).to_le_bytes());
+            out.extend_from_slice(message.as_bytes());
+        }
+    }
+    debug_assert_eq!(out.len() as u64, sized);
+    out
+}
+
+// ---------------------------------------------------------------------------
+// Decoding
+// ---------------------------------------------------------------------------
+
+/// Cursor over an untrusted buffer; every read is bounds-checked.
+pub(crate) struct Reader<'a> {
+    buf: &'a [u8],
+}
+
+impl<'a> Reader<'a> {
+    pub(crate) fn new(buf: &'a [u8]) -> Self {
+        Reader { buf }
+    }
+
+    pub(crate) fn take(&mut self, n: usize, what: &'static str) -> WireResult<&'a [u8]> {
+        if self.buf.len() < n {
+            return Err(WireError::Truncated { what });
+        }
+        let (head, rest) = self.buf.split_at(n);
+        self.buf = rest;
+        Ok(head)
+    }
+
+    pub(crate) fn u8(&mut self, what: &'static str) -> WireResult<u8> {
+        Ok(self.take(1, what)?[0])
+    }
+
+    pub(crate) fn u32(&mut self, what: &'static str) -> WireResult<u32> {
+        Ok(u32::from_le_bytes(self.take(4, what)?.try_into().unwrap()))
+    }
+
+    pub(crate) fn u64(&mut self, what: &'static str) -> WireResult<u64> {
+        Ok(u64::from_le_bytes(self.take(8, what)?.try_into().unwrap()))
+    }
+
+    pub(crate) fn f64(&mut self, what: &'static str) -> WireResult<f64> {
+        Ok(f64::from_le_bytes(self.take(8, what)?.try_into().unwrap()))
+    }
+
+    /// Wire-declared element count, capped before any allocation.
+    pub(crate) fn elems(&mut self, what: &'static str) -> WireResult<usize> {
+        let n = self.u32(what)? as usize;
+        if n > MAX_WIRE_ELEMS {
+            return Err(WireError::Oversized { declared: n as u64, max: MAX_WIRE_ELEMS as u64 });
+        }
+        Ok(n)
+    }
+
+    fn f64_vec(&mut self, what: &'static str) -> WireResult<Vec<f64>> {
+        let len = self.elems(what)?;
+        let raw = self.take(8 * len, what)?;
+        Ok(raw.chunks_exact(8).map(|c| f64::from_le_bytes(c.try_into().unwrap())).collect())
+    }
+
+    fn dw(&mut self) -> WireResult<Vec<f64>> {
+        let tag = self.u8("dw tag")?;
+        let d = self.elems("dw length")?;
+        match tag {
+            0 => {
+                let raw = self.take(8 * d, "dw dense values")?;
+                Ok(raw.chunks_exact(8).map(|c| f64::from_le_bytes(c.try_into().unwrap())).collect())
+            }
+            1 => {
+                let nnz = self.elems("dw nnz")?;
+                let raw = self.take(12 * nnz, "dw sparse pairs")?;
+                let mut out = vec![0.0; d];
+                for chunk in raw.chunks_exact(12) {
+                    let i = u32::from_le_bytes(chunk[0..4].try_into().unwrap()) as usize;
+                    if i >= d {
+                        return Err(WireError::Malformed { what: "sparse index out of range" });
+                    }
+                    out[i] = f64::from_le_bytes(chunk[4..12].try_into().unwrap());
+                }
+                Ok(out)
+            }
+            _ => Err(WireError::Malformed { what: "unknown dw encoding tag" }),
+        }
+    }
+
+    fn worker_state(&mut self, id: usize) -> WireResult<WorkerState> {
+        let mut rng_state = [0u64; 4];
+        for word in &mut rng_state {
+            *word = self.u64("rng state")?;
+        }
+        let alpha = self.f64_vec("alpha")?;
+        Ok(WorkerState { id, rng_state, alpha })
+    }
+
+    /// Reject trailing garbage: a valid frame is consumed exactly.
+    pub(crate) fn finish(&self, what: &'static str) -> WireResult<()> {
+        if self.buf.is_empty() {
+            Ok(())
+        } else {
+            Err(WireError::Malformed { what })
+        }
+    }
+}
+
+/// Decoded 16-byte header.
+pub(crate) struct Header {
+    pub tag: u8,
+    pub worker: u32,
+    pub round: u64,
+}
+
+/// Validate magic + version and split off the header.
+pub(crate) fn decode_header<'a>(buf: &'a [u8]) -> WireResult<(Header, Reader<'a>)> {
+    let mut r = Reader::new(buf);
+    let magic = u16::from_le_bytes(r.take(2, "magic")?.try_into().unwrap());
+    if magic != MAGIC {
+        return Err(WireError::BadMagic { got: magic });
+    }
+    let version = r.u8("version")?;
+    if version != WIRE_VERSION {
+        return Err(WireError::BadVersion { got: version, want: WIRE_VERSION });
+    }
+    let tag = r.u8("tag")?;
+    let worker = r.u32("worker id")?;
+    let round = r.u64("round")?;
+    Ok((Header { tag, worker, round }, r))
+}
+
+fn decode_local_work(r: &mut Reader<'_>) -> WireResult<LocalWork> {
+    let tag = r.u32("work tag")?;
+    let p1 = r.u64("work param 1")?;
+    let p2 = r.u64("work param 2")?;
+    Ok(match tag {
+        0 => LocalWork::DualRound { h: p1 as usize },
+        1 => LocalWork::DualRoundScaled { h: p1 as usize, sigma_prime: f64::from_bits(p2) },
+        2 => LocalWork::DualBatchFrozen { b: p1 as usize },
+        3 => LocalWork::ExactSolve,
+        4 => LocalWork::SgdLocal { h: p1 as usize, t_offset: p2 },
+        5 => LocalWork::SgdFrozen { h: p1 as usize },
+        _ => return Err(WireError::Malformed { what: "unknown local work tag" }),
+    })
+}
+
+/// Decode one leader -> worker frame (the payload of a net frame).
+pub fn decode_to_worker(buf: &[u8]) -> WireResult<ToWorker> {
+    let (h, mut r) = decode_header(buf)?;
+    let msg = match h.tag {
+        TAG_ROUND => {
+            let work = decode_local_work(&mut r)?;
+            let w = Arc::new(r.dw()?);
+            ToWorker::Round { round: h.round, w, work }
+        }
+        TAG_COMMIT => ToWorker::Commit { scale: r.f64("commit scale")? },
+        TAG_EVAL => ToWorker::Eval { w: Arc::new(r.dw()?) },
+        TAG_GET_STATE => ToWorker::GetState,
+        TAG_SET_STATE => ToWorker::SetState(r.worker_state(h.worker as usize)?),
+        TAG_RESET => ToWorker::Reset,
+        TAG_SHUTDOWN => ToWorker::Shutdown,
+        got => return Err(WireError::UnknownTag { got }),
+    };
+    r.finish("trailing bytes after message")?;
+    Ok(msg)
+}
+
+/// Decode one worker -> leader frame (the payload of a net frame).
+pub fn decode_to_leader(buf: &[u8]) -> WireResult<ToLeader> {
+    let (h, mut r) = decode_header(buf)?;
+    let worker = h.worker as usize;
+    let msg = match h.tag {
+        TAG_ROUND_REPLY => {
+            let compute_s = r.f64("compute_s")?;
+            let steps = r.u64("steps")?;
+            let dw = r.dw()?;
+            ToLeader::Round(RoundReply { worker, round: h.round, dw, compute_s, steps })
+        }
+        TAG_EVAL_REPLY => {
+            let loss_sum = r.f64("loss_sum")?;
+            let conj_sum = r.f64("conj_sum")?;
+            let has_dual = r.u8("has_dual")? != 0;
+            ToLeader::Eval(crate::coordinator::EvalReply { worker, loss_sum, conj_sum, has_dual })
+        }
+        TAG_STATE => ToLeader::State(r.worker_state(worker)?),
+        TAG_FATAL => {
+            let len = r.elems("fatal message length")?;
+            let raw = r.take(len, "fatal message")?;
+            ToLeader::Fatal { worker, message: String::from_utf8_lossy(raw).into_owned() }
+        }
+        got => return Err(WireError::UnknownTag { got }),
+    };
+    r.finish("trailing bytes after message")?;
+    Ok(msg)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::coordinator::RoundReply;
+    use crate::coordinator::{EvalReply, RoundReply};
 
     #[test]
     fn dw_roundtrip_dense_bit_exact() {
         let dw = vec![1.5, -0.0, f64::MIN_POSITIVE / 2.0, std::f64::consts::PI, -3.25];
         let (enc, bytes) = dw_wire(&dw);
-        assert_eq!(enc, DwEncoding::Dense); // only one zero out of five
+        assert_eq!(enc, DwEncoding::Dense); // -0.0 counts as nonzero by bits
         let buf = encode_dw(&dw);
         assert_eq!(buf.len() as u64, bytes);
         let back = decode_dw(&buf).unwrap();
@@ -273,6 +624,19 @@ mod tests {
         for (a, b) in dw.iter().zip(&back) {
             assert_eq!(a.to_bits(), b.to_bits());
         }
+    }
+
+    #[test]
+    fn negative_zero_survives_sparse_roundtrip() {
+        // -0.0 is numerically zero but a distinct bit pattern; the sparse
+        // path must carry it so net and in-proc trajectories stay
+        // bit-identical.
+        let mut dw = vec![0.0f64; 100];
+        dw[7] = -0.0;
+        let (enc, _) = dw_wire(&dw);
+        assert_eq!(enc, DwEncoding::Sparse);
+        let back = decode_dw(&encode_dw(&dw)).unwrap();
+        assert_eq!(back[7].to_bits(), (-0.0f64).to_bits());
     }
 
     #[test]
@@ -386,5 +750,240 @@ mod tests {
         assert!(!MessageKind::EvalReply.is_algorithm());
         assert!(!MessageKind::Checkpoint.is_algorithm());
         assert!(!MessageKind::Control.is_algorithm());
+    }
+
+    // -- full codec: encoded length == sized length, bit-exact round-trips
+
+    fn roundtrip_to_worker(msg: ToWorker, to: usize) -> ToWorker {
+        let (_, sized) = to_worker_wire(&msg);
+        let buf = encode_to_worker(&msg, to);
+        assert_eq!(buf.len() as u64, sized, "encoded length must match sizing");
+        decode_to_worker(&buf).unwrap()
+    }
+
+    fn roundtrip_to_leader(msg: ToLeader) -> ToLeader {
+        let (_, sized) = to_leader_wire(&msg);
+        let buf = encode_to_leader(&msg);
+        assert_eq!(buf.len() as u64, sized, "encoded length must match sizing");
+        decode_to_leader(&buf).unwrap()
+    }
+
+    #[test]
+    fn to_worker_codec_roundtrips_every_variant() {
+        let w = std::sync::Arc::new(vec![0.5, -0.0, 2.5]);
+        let works = [
+            LocalWork::DualRound { h: 7 },
+            LocalWork::DualRoundScaled { h: 7, sigma_prime: 1.75 },
+            LocalWork::DualBatchFrozen { b: 3 },
+            LocalWork::ExactSolve,
+            LocalWork::SgdLocal { h: 9, t_offset: 41 },
+            LocalWork::SgdFrozen { h: 2 },
+        ];
+        for work in works {
+            let back = roundtrip_to_worker(
+                ToWorker::Round { round: 12, w: w.clone(), work },
+                1,
+            );
+            match back {
+                ToWorker::Round { round, w: bw, work: bwork } => {
+                    assert_eq!(round, 12);
+                    assert_eq!(format!("{bwork:?}"), format!("{work:?}"));
+                    for (a, b) in w.iter().zip(bw.iter()) {
+                        assert_eq!(a.to_bits(), b.to_bits());
+                    }
+                }
+                other => panic!("wrong variant: {other:?}"),
+            }
+        }
+
+        match roundtrip_to_worker(ToWorker::Commit { scale: 0.125 }, 2) {
+            ToWorker::Commit { scale } => assert_eq!(scale, 0.125),
+            other => panic!("wrong variant: {other:?}"),
+        }
+        assert!(matches!(roundtrip_to_worker(ToWorker::GetState, 0), ToWorker::GetState));
+        assert!(matches!(roundtrip_to_worker(ToWorker::Reset, 0), ToWorker::Reset));
+        assert!(matches!(roundtrip_to_worker(ToWorker::Shutdown, 0), ToWorker::Shutdown));
+
+        let ws = WorkerState { id: 3, rng_state: [1, 2, 3, u64::MAX], alpha: vec![0.5, -1.5] };
+        match roundtrip_to_worker(ToWorker::SetState(ws.clone()), 3) {
+            ToWorker::SetState(back) => assert_eq!(back, ws),
+            other => panic!("wrong variant: {other:?}"),
+        }
+    }
+
+    #[test]
+    fn to_leader_codec_roundtrips_every_variant() {
+        let reply = RoundReply {
+            worker: 2,
+            round: 9,
+            dw: vec![0.0, 1.5, 0.0, -2.25],
+            compute_s: 0.0625,
+            steps: 40,
+        };
+        match roundtrip_to_leader(ToLeader::Round(reply.clone())) {
+            ToLeader::Round(back) => {
+                assert_eq!(back.worker, reply.worker);
+                assert_eq!(back.round, reply.round);
+                assert_eq!(back.steps, reply.steps);
+                assert_eq!(back.compute_s.to_bits(), reply.compute_s.to_bits());
+                for (a, b) in reply.dw.iter().zip(back.dw.iter()) {
+                    assert_eq!(a.to_bits(), b.to_bits());
+                }
+            }
+            other => panic!("wrong variant: {other:?}"),
+        }
+
+        let eval = EvalReply { worker: 1, loss_sum: 3.5, conj_sum: -0.25, has_dual: true };
+        match roundtrip_to_leader(ToLeader::Eval(eval)) {
+            ToLeader::Eval(back) => {
+                assert_eq!(back.worker, 1);
+                assert_eq!(back.loss_sum.to_bits(), eval.loss_sum.to_bits());
+                assert_eq!(back.conj_sum.to_bits(), eval.conj_sum.to_bits());
+                assert!(back.has_dual);
+            }
+            other => panic!("wrong variant: {other:?}"),
+        }
+
+        let ws = WorkerState { id: 0, rng_state: [9, 8, 7, 6], alpha: vec![0.0, 0.25] };
+        match roundtrip_to_leader(ToLeader::State(ws.clone())) {
+            ToLeader::State(back) => assert_eq!(back, ws),
+            other => panic!("wrong variant: {other:?}"),
+        }
+
+        match roundtrip_to_leader(ToLeader::Fatal { worker: 3, message: "boom".into() }) {
+            ToLeader::Fatal { worker, message } => {
+                assert_eq!(worker, 3);
+                assert_eq!(message, "boom");
+            }
+            other => panic!("wrong variant: {other:?}"),
+        }
+    }
+
+    #[test]
+    fn golden_bytes_pin_the_layout() {
+        // Commit{scale: 1.0} to worker 2 (round field unused, 0). Any
+        // change here is a wire-format break: bump WIRE_VERSION.
+        let buf = encode_to_worker(&ToWorker::Commit { scale: 1.0 }, 2);
+        assert_eq!(
+            buf,
+            vec![
+                0xCA, 0xC0, // magic 0xC0CA, little-endian
+                0x01, // wire version
+                0x02, // tag: commit
+                0x02, 0x00, 0x00, 0x00, // worker 2
+                0x00, 0x00, 0x00, 0x00, 0x00, 0x00, 0x00, 0x00, // round 0
+                0x00, 0x00, 0x00, 0x00, 0x00, 0x00, 0xF0, 0x3F, // scale 1.0
+            ]
+        );
+
+        // Round reply from worker 1, round 3, sparse dw [0, -2.0, 0].
+        let buf = encode_to_leader(&ToLeader::Round(RoundReply {
+            worker: 1,
+            round: 3,
+            dw: vec![0.0, -2.0, 0.0],
+            compute_s: 0.5,
+            steps: 4,
+        }));
+        assert_eq!(
+            buf,
+            vec![
+                0xCA, 0xC0, 0x01, 0x81, // magic, version, tag: round reply
+                0x01, 0x00, 0x00, 0x00, // worker 1
+                0x03, 0x00, 0x00, 0x00, 0x00, 0x00, 0x00, 0x00, // round 3
+                0x00, 0x00, 0x00, 0x00, 0x00, 0x00, 0xE0, 0x3F, // compute_s 0.5
+                0x04, 0x00, 0x00, 0x00, 0x00, 0x00, 0x00, 0x00, // steps 4
+                0x01, // dw: sparse
+                0x03, 0x00, 0x00, 0x00, // d = 3
+                0x01, 0x00, 0x00, 0x00, // nnz = 1
+                0x01, 0x00, 0x00, 0x00, // index 1
+                0x00, 0x00, 0x00, 0x00, 0x00, 0x00, 0x00, 0xC0, // -2.0
+            ]
+        );
+    }
+
+    #[test]
+    fn malformed_frames_decode_to_typed_errors() {
+        let good = encode_to_worker(&ToWorker::Commit { scale: 1.0 }, 0);
+
+        // (case name, mutated frame, expected error) — decode must return
+        // the typed error, never panic or allocate per attacker-declared
+        // lengths.
+        let commit_truncated = good[..HEADER_BYTES as usize + 3].to_vec();
+        let mut bad_magic = good.clone();
+        bad_magic[0] = 0xFF;
+        let mut bad_version = good.clone();
+        bad_version[2] = WIRE_VERSION + 1;
+        let mut unknown_tag = good.clone();
+        unknown_tag[3] = 0x7E;
+        let mut trailing = good.clone();
+        trailing.push(0);
+        // sparse dw declaring d = u32::MAX: must be rejected by the cap,
+        // not answered with a 32 GiB allocation
+        let mut oversized = Vec::new();
+        encode_header(TAG_EVAL, 0, 0, &mut oversized);
+        oversized.push(1); // sparse
+        oversized.extend_from_slice(&u32::MAX.to_le_bytes()); // d
+        oversized.extend_from_slice(&0u32.to_le_bytes()); // nnz
+        // sparse index beyond the declared dimension
+        let mut bad_index = Vec::new();
+        encode_header(TAG_EVAL, 0, 0, &mut bad_index);
+        bad_index.push(1);
+        bad_index.extend_from_slice(&2u32.to_le_bytes()); // d = 2
+        bad_index.extend_from_slice(&1u32.to_le_bytes()); // nnz = 1
+        bad_index.extend_from_slice(&9u32.to_le_bytes()); // index 9 >= d
+        bad_index.extend_from_slice(&1.0f64.to_le_bytes());
+
+        let cases: Vec<(&str, Vec<u8>, WireError)> = vec![
+            ("empty", Vec::new(), WireError::Truncated { what: "magic" }),
+            ("header only half", good[..7].to_vec(), WireError::Truncated { what: "worker id" }),
+            (
+                "commit payload truncated",
+                commit_truncated,
+                WireError::Truncated { what: "commit scale" },
+            ),
+            ("bad magic", bad_magic, WireError::BadMagic { got: 0xC0FF }),
+            (
+                "bad version",
+                bad_version,
+                WireError::BadVersion { got: WIRE_VERSION + 1, want: WIRE_VERSION },
+            ),
+            ("unknown tag", unknown_tag, WireError::UnknownTag { got: 0x7E }),
+            (
+                "trailing garbage",
+                trailing,
+                WireError::Malformed { what: "trailing bytes after message" },
+            ),
+            (
+                "oversized declared dw",
+                oversized,
+                WireError::Oversized { declared: u32::MAX as u64, max: MAX_WIRE_ELEMS as u64 },
+            ),
+            (
+                "sparse index out of range",
+                bad_index,
+                WireError::Malformed { what: "sparse index out of range" },
+            ),
+        ];
+        for (name, frame, want) in cases {
+            let got = decode_to_worker(&frame).unwrap_err();
+            assert_eq!(got, want, "case {name:?}");
+        }
+
+        // same header validation guards the worker -> leader direction
+        let mut reply = encode_to_leader(&ToLeader::Fatal { worker: 0, message: "x".into() });
+        reply[2] = 0; // version 0
+        assert_eq!(
+            decode_to_leader(&reply).unwrap_err(),
+            WireError::BadVersion { got: 0, want: WIRE_VERSION }
+        );
+        // fatal message length pointing past the buffer
+        let mut fatal = Vec::new();
+        encode_header(TAG_FATAL, 0, 0, &mut fatal);
+        fatal.extend_from_slice(&100u32.to_le_bytes());
+        fatal.extend_from_slice(b"short");
+        assert_eq!(
+            decode_to_leader(&fatal).unwrap_err(),
+            WireError::Truncated { what: "fatal message" }
+        );
     }
 }

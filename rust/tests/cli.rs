@@ -23,9 +23,114 @@ fn help_prints_usage() {
 }
 
 #[test]
+fn no_subcommand_prints_full_usage_and_exits_nonzero() {
+    let out = bin().output().unwrap();
+    assert!(!out.status.success());
+    let text = String::from_utf8_lossy(&out.stderr);
+    for cmd in ["train", "repro", "perf", "optimum", "leader", "worker"] {
+        assert!(text.contains(&format!("cocoa {cmd}")), "usage is missing {cmd}: {text}");
+    }
+}
+
+#[test]
 fn unknown_command_exits_nonzero() {
     let out = bin().arg("frobnicate").output().unwrap();
     assert!(!out.status.success());
+    // an unknown subcommand names itself and shows the real usage
+    let text = String::from_utf8_lossy(&out.stderr);
+    assert!(text.contains("frobnicate"), "stderr: {text}");
+    assert!(text.contains("cocoa leader"), "stderr: {text}");
+    assert!(text.contains("cocoa worker"), "stderr: {text}");
+}
+
+#[test]
+fn leader_and_workers_run_over_uds_end_to_end() {
+    let dir = tmpdir("leaderworker");
+    let cfg_path = dir.join("exp.toml");
+    let sock = dir.join("cluster.sock");
+    let _ = std::fs::remove_file(&sock);
+    let trace_path = dir.join("trace.csv");
+    std::fs::write(
+        &cfg_path,
+        r#"
+lambda = 0.01
+
+[dataset]
+kind = "cov_like"
+n = 200
+d = 8
+seed = 3
+
+[partition]
+k = 2
+
+[algorithm]
+name = "cocoa"
+h = 100
+
+[loss]
+kind = "hinge"
+
+[run]
+rounds = 5
+
+[transport]
+kind = "net"
+"#,
+    )
+    .unwrap();
+    let listen = format!("uds:{}", sock.display());
+    let workers: Vec<_> = (0..2)
+        .map(|_| {
+            bin()
+                .arg("worker")
+                .args(["--config"])
+                .arg(&cfg_path)
+                .args(["--connect", &listen, "--attempts", "40", "--backoff-s", "0.25"])
+                .spawn()
+                .unwrap()
+        })
+        .collect();
+    let out = bin()
+        .arg("leader")
+        .args(["--config"])
+        .arg(&cfg_path)
+        .args(["--listen", &listen, "--workers", "2", "--out"])
+        .arg(&trace_path)
+        .output()
+        .unwrap();
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    assert!(stdout.contains("finished: rounds=5"), "stdout: {stdout}");
+    assert!(stdout.contains("socket: sent"), "stdout: {stdout}");
+    for mut w in workers {
+        let status = w.wait().unwrap();
+        assert!(status.success(), "worker exited nonzero");
+    }
+    let trace = std::fs::read_to_string(&trace_path).unwrap();
+    assert_eq!(trace.lines().count(), 7); // header + rounds 0..=5
+}
+
+#[test]
+fn leader_rejects_worker_count_mismatch() {
+    let dir = tmpdir("leadermismatch");
+    let cfg_path = dir.join("exp.toml");
+    std::fs::write(
+        &cfg_path,
+        "lambda = 0.01\n\n[dataset]\nkind = \"cov_like\"\nn = 50\nd = 4\n\n\
+         [partition]\nk = 2\n\n[algorithm]\nname = \"cocoa\"\nh = 10\n",
+    )
+    .unwrap();
+    let out = bin()
+        .arg("leader")
+        .args(["--config"])
+        .arg(&cfg_path)
+        .args(["--listen", "uds:/tmp/never-bound.sock", "--workers", "3"])
+        .output()
+        .unwrap();
+    assert!(!out.status.success());
+    let text = String::from_utf8_lossy(&out.stderr);
+    assert!(text.contains("--workers 3"), "stderr: {text}");
 }
 
 #[test]

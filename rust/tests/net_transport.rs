@@ -1,0 +1,304 @@
+//! Multi-process transport acceptance: a leader plus K worker threads
+//! speaking the real socket protocol over a Unix-domain socket must be
+//! indistinguishable — trajectory, ledger, bytes — from the in-process
+//! cluster, and the handshake must keep mismatched or garbage peers out
+//! without disturbing the run.
+//!
+//! Workers run in-test as threads calling the same `run_worker_process`
+//! entry point the `cocoa worker` binary uses; only the process boundary
+//! is folded away, the sockets and frames are real.
+
+use std::io::{Read, Write};
+use std::path::PathBuf;
+use std::thread;
+use std::time::Duration;
+
+use cocoa::algorithms::Cocoa;
+use cocoa::config::{
+    AlgorithmSpec, Backend, DatasetSpec, ExperimentConfig, PartitionSpec, RunSpec,
+};
+use cocoa::data::{cov_like, PartitionStrategy};
+use cocoa::driver::MaxRounds;
+use cocoa::loss::LossKind;
+use cocoa::netsim::NetworkModel;
+use cocoa::regularizers::RegularizerKind;
+use cocoa::solvers::SolverKind;
+use cocoa::transport::net::run_worker_process;
+use cocoa::transport::{MessageKind, NetConfig, ReconnectPolicy, TransportKind};
+use cocoa::{Error, Trainer};
+
+const N: usize = 120;
+const D: usize = 8;
+const NOISE: f64 = 0.1;
+const SEED: u64 = 5;
+const LAMBDA: f64 = 0.05;
+const H: usize = 25;
+const ROUNDS: u64 = 5;
+
+fn sock_path(tag: &str) -> PathBuf {
+    std::env::temp_dir().join(format!("cocoa-net-{}-{tag}.sock", std::process::id()))
+}
+
+fn worker_cfg(k: usize, data_seed: u64, listen: &str) -> ExperimentConfig {
+    ExperimentConfig {
+        dataset: DatasetSpec::CovLike { n: N, d: D, noise: NOISE, seed: data_seed },
+        partition: PartitionSpec { k, strategy: PartitionStrategy::Contiguous, seed: 0 },
+        algorithm: AlgorithmSpec::Cocoa { h: H, beta_k: 1.0, solver: SolverKind::Sdca },
+        loss: LossKind::Hinge,
+        lambda: LAMBDA,
+        regularizer: RegularizerKind::default(),
+        run: RunSpec {
+            rounds: ROUNDS,
+            target_gap: 0.0,
+            target_subopt: 0.0,
+            eval_every: 1,
+            seed: SEED,
+            backend: Backend::Native,
+        },
+        netsim: NetworkModel::free(),
+        transport: TransportKind::Net(NetConfig::new(listen)),
+        artifacts_dir: "artifacts".into(),
+    }
+}
+
+fn spawn_workers(k: usize, data_seed: u64, listen: &str) -> Vec<thread::JoinHandle<()>> {
+    (0..k)
+        .map(|_| {
+            let listen = listen.to_string();
+            thread::spawn(move || {
+                let cfg = worker_cfg(k, data_seed, &listen);
+                run_worker_process(
+                    &cfg,
+                    &listen,
+                    &ReconnectPolicy { attempts: 60, backoff_s: 0.05 },
+                )
+                .unwrap();
+            })
+        })
+        .collect()
+}
+
+/// The acceptance gate: at K ∈ {1, 2, 4}, a UDS multi-process run is
+/// bit-identical to the counted in-process run — every evaluated row,
+/// the final w, and the per-kind wire ledger — and the socket byte
+/// totals reconcile exactly with the ledger plus the framing and
+/// handshake overhead the in-process fabric does not have.
+#[test]
+fn uds_run_is_bit_identical_to_inproc() {
+    for k in [1usize, 2, 4] {
+        let data = cov_like(N, D, NOISE, SEED);
+
+        let mut twin = Trainer::on(&data)
+            .workers(k)
+            .lambda(LAMBDA)
+            .seed(SEED)
+            .transport(TransportKind::Counted)
+            .build()
+            .unwrap();
+        let twin_trace = twin.run(&mut Cocoa::new(H), MaxRounds::new(ROUNDS)).unwrap();
+        let twin_w: Vec<u64> = twin.w().iter().map(|x| x.to_bits()).collect();
+        let twin_ledger = twin.ledger().unwrap().clone();
+        twin.shutdown();
+
+        let path = sock_path(&format!("bitident-k{k}"));
+        let _ = std::fs::remove_file(&path);
+        let listen = format!("uds:{}", path.display());
+        let workers = spawn_workers(k, SEED, &listen);
+
+        let mut session = Trainer::on(&data)
+            .workers(k)
+            .lambda(LAMBDA)
+            .seed(SEED)
+            .transport(TransportKind::Net(NetConfig::new(&listen)))
+            .build()
+            .unwrap();
+        assert_eq!(session.transport_name(), "net");
+        let trace = session.run(&mut Cocoa::new(H), MaxRounds::new(ROUNDS)).unwrap();
+        let w: Vec<u64> = session.w().iter().map(|x| x.to_bits()).collect();
+
+        // trajectory: every evaluated row, bit for bit
+        assert_eq!(trace.rows.len(), twin_trace.rows.len(), "K={k}");
+        for (got, want) in trace.rows.iter().zip(twin_trace.rows.iter()) {
+            assert_eq!(got.round, want.round, "K={k}");
+            assert_eq!(got.primal.to_bits(), want.primal.to_bits(), "K={k} round {}", got.round);
+            assert_eq!(got.dual.to_bits(), want.dual.to_bits(), "K={k} round {}", got.round);
+            assert_eq!(got.gap.to_bits(), want.gap.to_bits(), "K={k} round {}", got.round);
+            assert_eq!(got.inner_steps, want.inner_steps, "K={k} round {}", got.round);
+            assert_eq!(
+                got.bytes_measured, want.bytes_measured,
+                "K={k} round {}",
+                got.round
+            );
+        }
+        assert_eq!(w, twin_w, "K={k}: final w must be bit-identical");
+
+        // ledger: the socket fabric accounts exactly what the in-process
+        // counted fabric does, kind by kind (captured before shutdown so
+        // no control traffic races the comparison)
+        let ledger = session.ledger().unwrap().clone();
+        for kind in [
+            MessageKind::Broadcast,
+            MessageKind::Commit,
+            MessageKind::DeltaW,
+            MessageKind::EvalRequest,
+            MessageKind::EvalReply,
+        ] {
+            assert_eq!(ledger.bytes(kind), twin_ledger.bytes(kind), "K={k} {kind:?}");
+            assert_eq!(ledger.msgs(kind), twin_ledger.msgs(kind), "K={k} {kind:?}");
+        }
+
+        // reconciliation: socket bytes = ledger payload + framing + handshake
+        let stats = session.socket_stats().expect("net transport reports socket stats");
+        assert_eq!(
+            stats.sent_bytes + stats.recv_bytes,
+            ledger.total_bytes() + stats.framing_bytes + stats.handshake_bytes,
+            "K={k}: socket bytes must reconcile with the ledger"
+        );
+        assert_eq!(stats.payload_bytes(), ledger.total_bytes(), "K={k}");
+        assert_eq!(
+            stats.framing_bytes,
+            4 * (stats.sent_frames + stats.recv_frames),
+            "K={k}: one 4-byte length prefix per frame"
+        );
+
+        session.shutdown();
+        for h in workers {
+            h.join().unwrap();
+        }
+        let _ = std::fs::remove_file(&path);
+    }
+}
+
+/// A worker loading a different experiment (here: another dataset seed)
+/// must be refused at the handshake with a typed error — before any
+/// training traffic — while a matching worker is accepted and the run
+/// completes normally.
+#[test]
+fn fingerprint_mismatch_is_rejected_with_typed_error() {
+    let data = cov_like(N, D, NOISE, SEED);
+    let path = sock_path("mismatch");
+    let _ = std::fs::remove_file(&path);
+    let listen = format!("uds:{}", path.display());
+
+    // wrong experiment: same shapes, different data seed
+    let mismatched = {
+        let listen = listen.clone();
+        thread::spawn(move || {
+            let cfg = worker_cfg(1, SEED + 1, &listen);
+            run_worker_process(&cfg, &listen, &ReconnectPolicy { attempts: 60, backoff_s: 0.05 })
+                .unwrap_err()
+        })
+    };
+    let good = spawn_workers(1, SEED, &listen);
+
+    let mut session = Trainer::on(&data)
+        .workers(1)
+        .lambda(LAMBDA)
+        .seed(SEED)
+        .transport(TransportKind::Net(NetConfig::new(&listen)))
+        .build()
+        .unwrap();
+    let trace = session.run(&mut Cocoa::new(H), MaxRounds::new(2)).unwrap();
+    assert_eq!(trace.rows.last().unwrap().round, 2);
+    session.shutdown();
+
+    let err = mismatched.join().unwrap();
+    match err {
+        Error::Handshake { reason } => {
+            assert!(reason.contains("fingerprint"), "unexpected reason: {reason}")
+        }
+        other => panic!("expected Error::Handshake, got {other}"),
+    }
+    for h in good {
+        h.join().unwrap();
+    }
+    let _ = std::fs::remove_file(&path);
+}
+
+/// An untrusted peer spraying garbage at the listener must not take a
+/// worker slot or wedge the leader: the real worker still gets accepted
+/// and the run completes.
+#[test]
+fn garbage_hello_does_not_take_a_slot() {
+    let data = cov_like(N, D, NOISE, SEED);
+    let path = sock_path("garbage");
+    let _ = std::fs::remove_file(&path);
+    let listen = format!("uds:{}", path.display());
+
+    let garbage = {
+        let path = path.clone();
+        thread::spawn(move || {
+            // raw socket, no protocol: a correctly-framed frame whose
+            // payload is noise (bad magic), then hold the line open
+            let mut s = loop {
+                match std::os::unix::net::UnixStream::connect(&path) {
+                    Ok(s) => break s,
+                    Err(_) => thread::sleep(Duration::from_millis(10)),
+                }
+            };
+            let payload = [0xABu8; 24];
+            let mut frame = (payload.len() as u32).to_le_bytes().to_vec();
+            frame.extend_from_slice(&payload);
+            let _ = s.write_all(&frame);
+            let _ = s.flush();
+            // the leader answers with a reject frame and closes
+            let mut sink = Vec::new();
+            let _ = s.read_to_end(&mut sink);
+            sink
+        })
+    };
+    let good = spawn_workers(1, SEED, &listen);
+
+    let mut session = Trainer::on(&data)
+        .workers(1)
+        .lambda(LAMBDA)
+        .seed(SEED)
+        .transport(TransportKind::Net(NetConfig::new(&listen)))
+        .build()
+        .unwrap();
+    let trace = session.run(&mut Cocoa::new(H), MaxRounds::new(2)).unwrap();
+    assert_eq!(trace.rows.last().unwrap().round, 2);
+    session.shutdown();
+
+    let answer = garbage.join().unwrap();
+    assert!(!answer.is_empty(), "leader should answer garbage with a reject frame");
+    for h in good {
+        h.join().unwrap();
+    }
+    let _ = std::fs::remove_file(&path);
+}
+
+/// A leader with no workers must give up with `Error::Timeout` once the
+/// accept window closes — not hang, not panic.
+#[test]
+fn accept_timeout_is_typed() {
+    let data = cov_like(40, 4, NOISE, 9);
+    let path = sock_path("timeout");
+    let _ = std::fs::remove_file(&path);
+    let mut netcfg = NetConfig::new(format!("uds:{}", path.display()));
+    netcfg.accept_timeout_s = 0.3;
+
+    let err = Trainer::on(&data)
+        .workers(1)
+        .lambda(LAMBDA)
+        .transport(TransportKind::Net(netcfg))
+        .build()
+        .unwrap_err();
+    assert!(matches!(err, Error::Timeout { .. }), "expected Error::Timeout, got {err}");
+    let _ = std::fs::remove_file(&path);
+}
+
+/// The net transport refuses the PJRT backend up front: workers are
+/// separate processes, a single in-process engine cannot serve them.
+#[test]
+fn net_plus_pjrt_is_rejected_at_build() {
+    let data = cov_like(40, 4, NOISE, 9);
+    let err = Trainer::on(&data)
+        .workers(1)
+        .lambda(LAMBDA)
+        .backend(Backend::Pjrt)
+        .transport(TransportKind::Net(NetConfig::new("uds:/tmp/never-bound.sock")))
+        .build()
+        .unwrap_err();
+    assert!(matches!(err, Error::InvalidTransport { .. }), "got {err}");
+}
