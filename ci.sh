@@ -1,5 +1,6 @@
 #!/usr/bin/env bash
-# CI gate for the cocoa crate: build, test, determinism, perf smoke, lint.
+# CI gate for the cocoa crate: build, test, determinism, perf smoke,
+# perf regression gate (vs benchmarks/BENCH_hotpath.json), lint.
 #
 #   ./ci.sh            # everything
 #   ./ci.sh --fast     # skip clippy/fmt/doc (tier-1 + determinism + perf smoke)
@@ -116,11 +117,32 @@ printf 'net smoke: leader + 2 workers reached the gap target over UDS\n'
 
 # Perf smoke: run the tiny-profile workloads and validate BENCH_hotpath.json
 # structurally (fields present, numbers finite, monotone round times).
-# Never timing-gated — CI boxes are too noisy; the JSON is the artifact
-# that carries the perf trajectory across commits.
 step "perf smoke (BENCH_hotpath.json schema gate)"
 ./target/release/cocoa perf --smoke --seed "$DET_SEED" --out target/BENCH_hotpath.json
 ./target/release/cocoa perf --validate target/BENCH_hotpath.json
+
+# Perf regression gate: compare the candidate against the checked-in
+# per-workload baseline. The baseline is deliberately conservative and
+# the tolerance band generous (see benchmarks/README.md) — this catches
+# order-of-magnitude regressions (debug build in CI, accidental O(n^2)),
+# not runner noise. The delta report is uploaded as a CI artifact.
+step "perf regression gate (candidate vs benchmarks/BENCH_hotpath.json)"
+./target/release/cocoa perf --validate target/BENCH_hotpath.json \
+    --baseline benchmarks/BENCH_hotpath.json --tolerance 0.5 \
+    --delta target/BENCH_delta.txt
+
+# The gate must be able to FAIL: validate the candidate against itself at
+# tolerance -1 (demands >= 2x its own throughput — impossible), and
+# require a nonzero exit. If this ever passes, the gate is not gating.
+step "perf gate self-test (tolerance -1 must fail)"
+if ./target/release/cocoa perf --validate target/BENCH_hotpath.json \
+    --baseline target/BENCH_hotpath.json --tolerance -1 \
+    > "$SCRATCH/gate_selftest.out" 2>&1; then
+    echo "perf gate self-test FAILED: an impossible tolerance passed" >&2
+    cat "$SCRATCH/gate_selftest.out" >&2
+    exit 1
+fi
+printf 'perf gate self-test: impossible tolerance correctly exited nonzero\n'
 
 if [[ "${1:-}" != "--fast" ]]; then
     step "cargo doc --no-deps (rustdoc warnings are errors)"

@@ -70,6 +70,7 @@ pub struct Trainer<'a> {
     seed: u64,
     label: String,
     transport: TransportKind,
+    threads: usize,
 }
 
 impl<'a> Trainer<'a> {
@@ -89,6 +90,7 @@ impl<'a> Trainer<'a> {
             seed: 0,
             label: "dataset".into(),
             transport: TransportKind::InProc,
+            threads: 1,
         }
     }
 
@@ -211,6 +213,17 @@ impl<'a> Trainer<'a> {
         self
     }
 
+    /// Intra-worker shard count T for the local solves. Default 1 (the
+    /// sequential path). Runs are deterministic *per T* — same seed and
+    /// same T reproduce bit-identically, but different T values follow
+    /// different (equally valid) trajectories; see the contract in
+    /// [`LocalSdca`](crate::solvers::LocalSdca). Validated at
+    /// [`Trainer::build`].
+    pub fn threads(mut self, threads: usize) -> Self {
+        self.threads = threads;
+        self
+    }
+
     /// Dataset label recorded in traces and CSV paths.
     pub fn label(mut self, label: impl Into<String>) -> Self {
         self.label = label.into();
@@ -269,6 +282,15 @@ impl<'a> Trainer<'a> {
             }
         }
 
+        if self.threads == 0 || self.threads > 256 {
+            return Err(Error::Config {
+                message: format!(
+                    "threads must be in 1..=256 (1 = the sequential path), got {}",
+                    self.threads
+                ),
+            });
+        }
+
         self.transport.validate()?;
         if matches!(self.transport, TransportKind::Net(_)) && self.backend == Backend::Pjrt {
             return Err(Error::InvalidTransport {
@@ -297,6 +319,7 @@ impl<'a> Trainer<'a> {
             stragglers: self.stragglers,
             seed: self.seed,
             transport: self.transport,
+            threads: self.threads,
         })?;
         Ok(Session { cluster, label: self.label, p_star: None })
     }

@@ -324,6 +324,33 @@ impl RunSpec {
     }
 }
 
+/// The `[runtime]` section: how workers execute their local solves.
+/// Unlike `[netsim]`/`[transport]` these knobs *do* shape the trajectory:
+/// with `threads = T > 1` the local solves run the deterministic-per-T
+/// sharded schedule (see [`crate::solvers::LocalSdca`]), so T is part of
+/// the run identity and folded into the net handshake fingerprint.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct RuntimeSpec {
+    /// Intra-worker shard count T for the local solves (>= 1).
+    pub threads: usize,
+}
+
+impl Default for RuntimeSpec {
+    fn default() -> Self {
+        RuntimeSpec { threads: 1 }
+    }
+}
+
+impl RuntimeSpec {
+    fn from_doc(doc: &Doc) -> Result<Self> {
+        let threads = doc.usize_or("runtime", "threads", 1);
+        if threads == 0 {
+            bail!("[runtime] threads must be >= 1 (1 = sequential)");
+        }
+        Ok(RuntimeSpec { threads })
+    }
+}
+
 /// The full experiment description.
 #[derive(Debug, Clone, PartialEq)]
 pub struct ExperimentConfig {
@@ -337,6 +364,8 @@ pub struct ExperimentConfig {
     /// `Error::InvalidRegularizer` / `Error::UnsupportedRegularizer`.
     pub regularizer: RegularizerKind,
     pub run: RunSpec,
+    /// The `[runtime]` section (default: 1 thread, the sequential path).
+    pub runtime: RuntimeSpec,
     pub netsim: NetworkModel,
     /// Leader <-> worker transport backend (`[transport]` section; default
     /// inproc). Range checks happen at `Trainer::build`, which returns a
@@ -385,6 +414,7 @@ impl ExperimentConfig {
             .network(self.netsim)
             .transport(self.transport.clone())
             .seed(self.run.seed)
+            .threads(self.runtime.threads)
             .label(self.dataset.name())
     }
 
@@ -460,6 +490,7 @@ impl ExperimentConfig {
             lambda: doc.f64_of("", "lambda")?,
             regularizer,
             run: RunSpec::from_doc(&doc)?,
+            runtime: RuntimeSpec::from_doc(&doc)?,
             netsim,
             transport,
             artifacts_dir: doc.str_or("", "artifacts_dir", "artifacts").to_string(),
@@ -508,6 +539,22 @@ target_subopt = 1e-3
         assert_eq!(cfg.run.target_subopt, 1e-3);
         assert_eq!(cfg.loss, LossKind::Hinge);
         assert_eq!(cfg.netsim, NetworkModel::ec2_like());
+    }
+
+    #[test]
+    fn runtime_section_parses_and_rejects_zero_threads() {
+        // no section: the sequential default
+        let cfg = ExperimentConfig::from_toml(SAMPLE).unwrap();
+        assert_eq!(cfg.runtime, RuntimeSpec::default());
+        assert_eq!(cfg.runtime.threads, 1);
+
+        let threaded = format!("{SAMPLE}\n[runtime]\nthreads = 4\n");
+        let cfg = ExperimentConfig::from_toml(&threaded).unwrap();
+        assert_eq!(cfg.runtime.threads, 4);
+
+        let zero = format!("{SAMPLE}\n[runtime]\nthreads = 0\n");
+        let err = ExperimentConfig::from_toml(&zero).unwrap_err();
+        assert!(err.to_string().contains("threads"), "{err}");
     }
 
     #[test]

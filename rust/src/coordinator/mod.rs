@@ -59,6 +59,11 @@ pub(crate) struct ClusterSpec<'a> {
     pub stragglers: StragglerModel,
     pub seed: u64,
     pub transport: TransportKind,
+    /// Intra-worker shard count T for the local solves (>= 1; see the
+    /// deterministic-per-T contract in [`crate::solvers::LocalSdca`]).
+    /// Part of the run identity: trajectories are a function of
+    /// `(seed, threads)`, so the net handshake fingerprints it too.
+    pub threads: usize,
 }
 
 /// The per-worker rng seed: distinct, deterministic stream per worker.
@@ -82,6 +87,7 @@ pub(crate) fn native_worker_config(
     solver: SolverKind,
     seed: u64,
     kid: usize,
+    threads: usize,
 ) -> WorkerConfig {
     let lambda_n = lambda * regularizer.build().strong_convexity() * data.n() as f64;
     // subset() compacts the shard to contiguous local-row storage;
@@ -92,9 +98,10 @@ pub(crate) fn native_worker_config(
         id: kid,
         block,
         loss: loss.build(),
-        solver: solver.build(),
+        solver: solver.build(threads),
         lambda,
         seed: worker_seed(seed, kid),
+        threads,
     }
 }
 
@@ -175,6 +182,7 @@ impl Cluster {
             stragglers,
             seed,
             transport,
+            threads,
         } = spec;
         // the partition was already validated (with typed errors) by
         // Trainer::build — the only road here
@@ -203,6 +211,7 @@ impl Cluster {
                 solver,
                 lambda,
                 seed,
+                threads,
             );
             let sock = crate::transport::net::NetTransport::bind(netcfg, k, fingerprint)?;
             let boxed: Box<dyn Transport> = if netcfg.record {
@@ -265,6 +274,9 @@ impl Cluster {
                         solver: solver_impl,
                         lambda,
                         seed: worker_seed(seed, kid),
+                        // the PJRT engine runs the local solve off-thread;
+                        // intra-worker sharding does not apply to it
+                        threads: 1,
                     }
                 }
                 _ => native_worker_config(
@@ -276,6 +288,7 @@ impl Cluster {
                     solver,
                     seed,
                     kid,
+                    threads,
                 ),
             };
             block_sizes.push(cfg.block.n_k());
@@ -731,6 +744,7 @@ mod tests {
             stragglers: StragglerModel::none(),
             seed,
             transport: TransportKind::InProc,
+            threads: 1,
         })
         .unwrap()
     }
@@ -840,6 +854,7 @@ mod tests {
             stragglers: StragglerModel::none(),
             seed: 3,
             transport: TransportKind::Counted,
+            threads: 1,
         })
         .unwrap();
         assert_eq!(cluster.transport_name(), "counted");
@@ -882,6 +897,7 @@ mod tests {
             stragglers: StragglerModel::none(),
             seed: 10,
             transport: TransportKind::InProc,
+            threads: 1,
         })
         .unwrap();
         assert_eq!(cluster.regularizer(), RegularizerKind::L1 { epsilon: 0.5 });

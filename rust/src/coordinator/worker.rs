@@ -33,6 +33,10 @@ pub struct WorkerConfig {
     pub solver: Box<dyn LocalDualMethod>,
     pub lambda: f64,
     pub seed: u64,
+    /// Intra-worker shard count T for the local solves (>= 1). `solver`
+    /// was already built with it; kept here so work items that construct
+    /// solvers on the fly (e.g. `DualRoundScaled`) shard identically.
+    pub threads: usize,
 }
 
 /// What the transport loop driving a [`WorkerCore`] should do after one
@@ -58,6 +62,7 @@ pub(crate) struct WorkerCore {
     solver: Box<dyn LocalDualMethod>,
     lambda: f64,
     seed: u64,
+    threads: usize,
     alpha: Vec<f64>,
     pending: Option<Vec<f64>>,
     // alpha stays a valid dual point (D(0) = 0) until SGD work runs —
@@ -68,7 +73,7 @@ pub(crate) struct WorkerCore {
 
 impl WorkerCore {
     pub(crate) fn new(cfg: WorkerConfig) -> Self {
-        let WorkerConfig { id, block, loss, solver, lambda, seed } = cfg;
+        let WorkerConfig { id, block, loss, solver, lambda, seed, threads } = cfg;
         let n_k = block.n_k();
         WorkerCore {
             id,
@@ -78,6 +83,7 @@ impl WorkerCore {
             solver,
             lambda,
             seed,
+            threads,
             alpha: vec![0.0f64; n_k],
             pending: None,
             did_sgd: false,
@@ -171,7 +177,7 @@ impl WorkerCore {
 
     #[allow(clippy::type_complexity)]
     fn run_round(&mut self, w: &[f64], work: LocalWork) -> (Vec<f64>, u64, f64, Option<Vec<f64>>) {
-        let Self { n_k, block, loss, solver, lambda, alpha, rng, .. } = self;
+        let Self { n_k, block, loss, solver, lambda, alpha, rng, threads, .. } = self;
         let n_k = *n_k;
         match work {
             LocalWork::DualRound { h } => {
@@ -179,7 +185,8 @@ impl WorkerCore {
                 (up.dw, up.steps, up.offloaded_s, Some(up.dalpha))
             }
             LocalWork::DualRoundScaled { h, sigma_prime } => {
-                let scaled = LocalSdca::with_curvature_scale(Sampling::WithReplacement, sigma_prime);
+                let scaled = LocalSdca::with_curvature_scale(Sampling::WithReplacement, sigma_prime)
+                    .with_threads(*threads);
                 let up = scaled.local_update(block, loss.as_ref(), alpha, w, h, rng);
                 (up.dw, up.steps, up.offloaded_s, Some(up.dalpha))
             }

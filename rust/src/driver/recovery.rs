@@ -151,7 +151,7 @@ mod tests {
     use crate::algorithms::Cocoa;
     use crate::api::Trainer;
     use crate::config::{
-        AlgorithmSpec, Backend, DatasetSpec, ExperimentConfig, PartitionSpec, RunSpec,
+        AlgorithmSpec, Backend, DatasetSpec, ExperimentConfig, PartitionSpec, RunSpec, RuntimeSpec,
     };
     use crate::coordinator::worker::{CoreStep, WorkerCore};
     use crate::coordinator::{native_worker_config, ToWorker};
@@ -197,6 +197,7 @@ mod tests {
                 seed: SEED,
                 backend: Backend::Native,
             },
+            runtime: RuntimeSpec::default(),
             netsim: NetworkModel::free(),
             transport: TransportKind::Net(NetConfig::new(listen)),
             artifacts_dir: "artifacts".into(),
@@ -229,6 +230,7 @@ mod tests {
             SolverKind::Sdca,
             LAMBDA,
             SEED,
+            1,
         );
         write_frame(&mut sock, &encode_hello(None, fp)).unwrap();
         let frame = match read_frame(&mut sock).unwrap() {
@@ -248,6 +250,7 @@ mod tests {
             SolverKind::Sdca,
             SEED,
             slot,
+            1,
         ));
         let mut rounds_seen = 0usize;
         loop {

@@ -1,5 +1,6 @@
-//! Fused scalar kernels for the solver hot path — the innermost dots,
-//! axpys, scaled updates, and norms every inner SDCA step runs.
+//! Fused kernels for the solver hot path — the innermost dots, axpys,
+//! scaled updates, and norms every inner SDCA step runs — with runtime
+//! feature-detected SIMD backends over a scalar reference.
 //!
 //! Two design rules govern everything in this module:
 //!
@@ -10,69 +11,136 @@
 //!    every seeded trajectory in the repo — the determinism gates, the
 //!    golden suites — is bit-for-bit unchanged by routing through them.
 //!    The dense kernels keep the 8-lane blocked order the dense hot path
-//!    has used since the L3 perf iteration (see `dense_dot`). Unrolling
-//!    here buys instruction-level parallelism on the *loads* (index
-//!    gather, value fetch) without reassociating the FP adds.
+//!    has used since the L3 perf iteration (see [`scalar::dense_dot`]).
+//!    The SIMD backends ([`simd`]) map those lane accumulators onto
+//!    vector lanes one-to-one and replay the same combine tree — no FMA,
+//!    no reassociation — so **every backend produces identical bits**,
+//!    and backend selection can never change a trajectory.
 //! 2. **Checked by construction, not per element.** The `*_unchecked`
 //!    gather kernels elide the per-element bounds check of the naive loop.
 //!    Their safety contract — every index is in bounds for the gathered
 //!    slice — is owned by [`crate::data::CsrMatrix`], whose constructors
 //!    validate `index < cols` once and whose fields are private so the
 //!    invariant cannot be broken afterwards. The safe wrappers
-//!    ([`sparse_dot`], [`sparse_axpy`]) validate per call and exist for
-//!    callers outside that invariant (tests, external users).
+//!    ([`sparse_dot`], [`sparse_axpy`], [`dense_dot`], [`dense_axpy`])
+//!    validate per call — with real `assert`s, active in release builds
+//!    too, because a silent truncation returns a *wrong* answer — and
+//!    exist for callers outside that invariant.
 //!
+//! Backend selection runs once per process ([`backend`]): AVX2 when
+//! `is_x86_feature_detected!("avx2")` says so, NEON on aarch64 (part of
+//! the target baseline), scalar otherwise — or everywhere when the
+//! `COCOA_SIMD=off` environment variable forces the reference path.
 //! The property suite (`rust/tests/prop_kernels.rs`) pins rule 1: every
-//! fused kernel is compared bit-for-bit against a naive scalar reference
-//! on random sparse/dense inputs, including empty rows.
+//! dispatched kernel is compared bit-for-bit against the scalar
+//! reference on random and adversarial inputs (empty rows, `len % 8 != 0`
+//! remainders, subnormals).
 
-/// 8-lane blocked dense dot product. `chunks_exact(8)` gives LLVM a
-/// fixed-width body it fully vectorizes without `-ffast-math`-style
-/// reassociation; measured 1.6x over the naive zip/sum and 2.1x over a
-/// 4-accumulator manual unroll at the d=54 hot shape, 4.1x at d=1024
-/// (EXPERIMENTS.md section Perf, iteration L3-1).
-///
-/// Reduction order (the bit-exactness contract): 8 independent lane
-/// accumulators over the `len / 8 * 8` prefix, combined as
-/// `((l0+l1)+(l2+l3)) + ((l4+l5)+(l6+l7))`, then the remainder folded in
-/// left to right.
-#[inline]
-pub fn dense_dot(a: &[f64], b: &[f64]) -> f64 {
-    debug_assert_eq!(a.len(), b.len());
-    let mut acc = [0.0f64; 8];
-    let ca = a.chunks_exact(8);
-    let cb = b.chunks_exact(8);
-    let (ra, rb) = (ca.remainder(), cb.remainder());
-    for (xa, xb) in ca.zip(cb) {
-        for k in 0..8 {
-            acc[k] += xa[k] * xb[k];
-        }
-    }
-    let mut s = ((acc[0] + acc[1]) + (acc[2] + acc[3]))
-        + ((acc[4] + acc[5]) + (acc[6] + acc[7]));
-    for (x, y) in ra.iter().zip(rb) {
-        s += x * y;
-    }
-    s
+pub mod scalar;
+pub mod simd;
+
+use std::sync::OnceLock;
+
+/// Which kernel implementation [`backend`] selected for this process.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Backend {
+    /// The scalar reference kernels ([`scalar`]).
+    Scalar,
+    /// AVX2 dense + sparse-gather kernels (x86_64, runtime-detected).
+    Avx2,
+    /// NEON dense kernels (aarch64 baseline).
+    Neon,
 }
 
-/// `out += coef * a`, blocked like [`dense_dot`] (iteration L3-2: +24% on
-/// the d=54 axpy, neutral at d >= 256 where it is memory-bound). Each
-/// element update is independent, so the blocking never changes bits.
-#[inline]
-pub fn dense_axpy(coef: f64, a: &[f64], out: &mut [f64]) {
-    debug_assert_eq!(a.len(), out.len());
-    let ca = a.chunks_exact(8);
-    let ra = ca.remainder();
-    let co = out.chunks_exact_mut(8);
-    for (xo, xa) in co.zip(ca) {
-        for k in 0..8 {
-            xo[k] += coef * xa[k];
+impl Backend {
+    /// Stable lowercase name, reported in `BENCH_hotpath.json`.
+    pub fn name(self) -> &'static str {
+        match self {
+            Backend::Scalar => "scalar",
+            Backend::Avx2 => "avx2",
+            Backend::Neon => "neon",
         }
     }
-    let tail = out.len() - ra.len();
-    for (o, &v) in out[tail..].iter_mut().zip(ra.iter()) {
-        *o += coef * v;
+}
+
+static BACKEND: OnceLock<Backend> = OnceLock::new();
+
+/// The kernel backend this process dispatches to — detected once, cached
+/// for the process lifetime (so a trajectory can never mix backends).
+pub fn backend() -> Backend {
+    *BACKEND.get_or_init(detect)
+}
+
+/// [`backend`]'s stable name (`"scalar"` / `"avx2"` / `"neon"`).
+pub fn backend_name() -> &'static str {
+    backend().name()
+}
+
+fn detect() -> Backend {
+    // escape hatch: COCOA_SIMD=off pins the scalar reference path (used
+    // by the property suite's cross-backend runs and for bisecting)
+    if let Some(v) = std::env::var_os("COCOA_SIMD") {
+        if v == "off" || v == "0" || v == "scalar" {
+            return Backend::Scalar;
+        }
+    }
+    detect_arch()
+}
+
+#[cfg(target_arch = "x86_64")]
+fn detect_arch() -> Backend {
+    if std::arch::is_x86_feature_detected!("avx2") {
+        Backend::Avx2
+    } else {
+        Backend::Scalar
+    }
+}
+
+#[cfg(target_arch = "aarch64")]
+fn detect_arch() -> Backend {
+    Backend::Neon
+}
+
+#[cfg(not(any(target_arch = "x86_64", target_arch = "aarch64")))]
+fn detect_arch() -> Backend {
+    Backend::Scalar
+}
+
+/// 8-lane blocked dense dot product (see [`scalar::dense_dot`] for the
+/// reduction-order contract), dispatched to the detected SIMD backend —
+/// all backends are bit-identical by construction.
+///
+/// Validates `a.len() == b.len()` per call (release builds included: a
+/// mismatched pair used to silently truncate to the shorter slice).
+#[inline]
+pub fn dense_dot(a: &[f64], b: &[f64]) -> f64 {
+    assert_eq!(a.len(), b.len(), "dense_dot: length mismatch");
+    match backend() {
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: backend() returned Avx2 only after runtime detection,
+        // and lengths were just checked equal.
+        Backend::Avx2 => unsafe { simd::avx2::dense_dot(a, b) },
+        #[cfg(target_arch = "aarch64")]
+        Backend::Neon => simd::neon::dense_dot(a, b),
+        _ => scalar::dense_dot(a, b),
+    }
+}
+
+/// `out += coef * a`, blocked like [`dense_dot`] and dispatched the same
+/// way (element updates are independent, so blocking never changes bits).
+///
+/// Validates `a.len() == out.len()` per call (release builds included).
+#[inline]
+pub fn dense_axpy(coef: f64, a: &[f64], out: &mut [f64]) {
+    assert_eq!(a.len(), out.len(), "dense_axpy: length mismatch");
+    match backend() {
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: backend() returned Avx2 only after runtime detection,
+        // and lengths were just checked equal.
+        Backend::Avx2 => unsafe { simd::avx2::dense_axpy(coef, a, out) },
+        #[cfg(target_arch = "aarch64")]
+        Backend::Neon => simd::neon::dense_axpy(coef, a, out),
+        _ => scalar::dense_axpy(coef, a, out),
     }
 }
 
@@ -83,45 +151,23 @@ pub fn dense_norm_sq(a: &[f64]) -> f64 {
     dense_dot(a, a)
 }
 
-/// Sparse gather-dot: `sum_k values[k] * w[indices[k]]`, unrolled by 4.
-///
-/// Reduction order: a single accumulator, strictly left to right — the
-/// unroll computes four products ahead (independent rounded ops) but
-/// chains the adds sequentially, so the result is bit-identical to the
-/// naive `for (i, v) in indices.zip(values) { s += v * w[i] }` loop.
+/// Sparse gather-dot: `sum_k values[k] * w[indices[k]]` with a strictly
+/// left-to-right add chain (see [`scalar::sparse_dot_unchecked`]). On
+/// AVX2 the four products per unroll are gathered and multiplied in one
+/// vector op — the adds stay scalar-chained, so bits never change.
 ///
 /// # Safety
 /// Every `indices[k] as usize` must be `< w.len()`. [`crate::data::CsrMatrix`]
 /// guarantees this for its rows against any `w` of length `>= cols`.
 #[inline]
 pub unsafe fn sparse_dot_unchecked(indices: &[u32], values: &[f64], w: &[f64]) -> f64 {
-    debug_assert_eq!(indices.len(), values.len());
-    debug_assert!(indices.iter().all(|&i| (i as usize) < w.len()));
-    let n = indices.len();
-    let mut s = 0.0f64;
-    let mut k = 0usize;
-    while k + 4 <= n {
-        let p0 = *values.get_unchecked(k)
-            * *w.get_unchecked(*indices.get_unchecked(k) as usize);
-        let p1 = *values.get_unchecked(k + 1)
-            * *w.get_unchecked(*indices.get_unchecked(k + 1) as usize);
-        let p2 = *values.get_unchecked(k + 2)
-            * *w.get_unchecked(*indices.get_unchecked(k + 2) as usize);
-        let p3 = *values.get_unchecked(k + 3)
-            * *w.get_unchecked(*indices.get_unchecked(k + 3) as usize);
-        // strictly sequential adds: never reassociated
-        s += p0;
-        s += p1;
-        s += p2;
-        s += p3;
-        k += 4;
+    #[cfg(target_arch = "x86_64")]
+    // the i32 gather needs every index to fit a non-negative i32; any
+    // in-bounds index does once w.len() <= i32::MAX
+    if backend() == Backend::Avx2 && w.len() <= i32::MAX as usize {
+        return simd::avx2::sparse_dot_unchecked(indices, values, w);
     }
-    while k < n {
-        s += *values.get_unchecked(k)
-            * *w.get_unchecked(*indices.get_unchecked(k) as usize);
-        k += 1;
-    }
-    s
+    scalar::sparse_dot_unchecked(indices, values, w)
 }
 
 /// Safe wrapper over [`sparse_dot_unchecked`]: validates every index per
@@ -138,36 +184,17 @@ pub fn sparse_dot(indices: &[u32], values: &[f64], w: &[f64]) -> f64 {
     unsafe { sparse_dot_unchecked(indices, values, w) }
 }
 
-/// Sparse scatter-axpy: `out[indices[k]] += coef * values[k]`, unrolled
-/// by 4. Updates run strictly left to right (a read-modify-write per
-/// element), so rows with repeated indices still fold in the naive order
-/// and the result is bit-identical to the scalar loop.
+/// Sparse scatter-axpy: `out[indices[k]] += coef * values[k]`, strictly
+/// left to right (see [`scalar::sparse_axpy_unchecked`]). Always scalar:
+/// the RMW chain must preserve order even under repeated indices, and no
+/// AVX2 scatter exists to vectorize the stores anyway.
 ///
 /// # Safety
 /// Every `indices[k] as usize` must be `< out.len()` (see
 /// [`sparse_dot_unchecked`]).
 #[inline]
 pub unsafe fn sparse_axpy_unchecked(indices: &[u32], values: &[f64], coef: f64, out: &mut [f64]) {
-    debug_assert_eq!(indices.len(), values.len());
-    debug_assert!(indices.iter().all(|&i| (i as usize) < out.len()));
-    let n = indices.len();
-    let mut k = 0usize;
-    while k + 4 <= n {
-        *out.get_unchecked_mut(*indices.get_unchecked(k) as usize) +=
-            coef * *values.get_unchecked(k);
-        *out.get_unchecked_mut(*indices.get_unchecked(k + 1) as usize) +=
-            coef * *values.get_unchecked(k + 1);
-        *out.get_unchecked_mut(*indices.get_unchecked(k + 2) as usize) +=
-            coef * *values.get_unchecked(k + 2);
-        *out.get_unchecked_mut(*indices.get_unchecked(k + 3) as usize) +=
-            coef * *values.get_unchecked(k + 3);
-        k += 4;
-    }
-    while k < n {
-        *out.get_unchecked_mut(*indices.get_unchecked(k) as usize) +=
-            coef * *values.get_unchecked(k);
-        k += 1;
-    }
+    scalar::sparse_axpy_unchecked(indices, values, coef, out)
 }
 
 /// Safe wrapper over [`sparse_axpy_unchecked`]: validates every index per
@@ -184,30 +211,12 @@ pub fn sparse_axpy(indices: &[u32], values: &[f64], coef: f64, out: &mut [f64]) 
     unsafe { sparse_axpy_unchecked(indices, values, coef, out) }
 }
 
-/// nnz-aware squared norm of a sparse row: `sum_k values[k]^2`, single
-/// accumulator left to right (bit-identical to `values.iter().map(|v| v *
-/// v).sum()` — iterator `sum` folds sequentially from 0.0).
+/// nnz-aware squared norm of a sparse row (see
+/// [`scalar::sparse_norm_sq`]; always scalar — the add chain is the
+/// whole kernel).
 #[inline]
 pub fn sparse_norm_sq(values: &[f64]) -> f64 {
-    let mut s = 0.0f64;
-    let mut k = 0usize;
-    let n = values.len();
-    while k + 4 <= n {
-        let p0 = values[k] * values[k];
-        let p1 = values[k + 1] * values[k + 1];
-        let p2 = values[k + 2] * values[k + 2];
-        let p3 = values[k + 3] * values[k + 3];
-        s += p0;
-        s += p1;
-        s += p2;
-        s += p3;
-        k += 4;
-    }
-    while k < n {
-        s += values[k] * values[k];
-        k += 1;
-    }
-    s
+    scalar::sparse_norm_sq(values)
 }
 
 /// In-place scaled update `values[k] *= s` (row normalization; each
@@ -272,6 +281,24 @@ mod tests {
         sparse_dot(&[4], &[1.0], &[0.0; 3]);
     }
 
+    // The satellite-fix regression tests: the dense safe wrappers must
+    // reject length mismatches in *every* build profile — before the
+    // promotion to real asserts, a release build silently truncated to
+    // the shorter slice and returned a wrong answer. ci.sh runs the
+    // kernel suite under --release so these exercise the release path.
+    #[test]
+    #[should_panic(expected = "dense_dot: length mismatch")]
+    fn dense_dot_rejects_length_mismatch_in_all_profiles() {
+        dense_dot(&[1.0, 2.0, 3.0], &[1.0, 2.0]);
+    }
+
+    #[test]
+    #[should_panic(expected = "dense_axpy: length mismatch")]
+    fn dense_axpy_rejects_length_mismatch_in_all_profiles() {
+        let mut out = [0.0; 2];
+        dense_axpy(1.0, &[1.0, 2.0, 3.0], &mut out);
+    }
+
     #[test]
     fn norm_matches_iterator_sum_bitwise() {
         let vals: Vec<f64> = (0..11).map(|i| ((i * 13) as f64).cos() * 1.7).collect();
@@ -295,6 +322,38 @@ mod tests {
             s += a[k] * b[k];
         }
         assert_eq!(dense_dot(&a, &b).to_bits(), s.to_bits());
+    }
+
+    #[test]
+    fn dispatched_backend_matches_scalar_reference_bitwise() {
+        // whatever backend() picked on this machine, the dispatched
+        // kernels must equal the scalar reference bit-for-bit (trivially
+        // true when the pick *is* scalar; the real cross-check on
+        // AVX2/NEON hosts)
+        for len in [0usize, 1, 7, 8, 9, 15, 16, 31, 64] {
+            let a: Vec<f64> = (0..len).map(|i| (i as f64 * 0.37).sin() * 1.5).collect();
+            let b: Vec<f64> = (0..len).map(|i| (i as f64 * 0.73).cos() - 0.2).collect();
+            assert_eq!(
+                dense_dot(&a, &b).to_bits(),
+                scalar::dense_dot(&a, &b).to_bits(),
+                "dense_dot backend {} diverged at len {len}",
+                backend_name()
+            );
+            let mut o1: Vec<f64> = (0..len).map(|i| i as f64 * 0.01 - 0.3).collect();
+            let mut o2 = o1.clone();
+            dense_axpy(-1.75, &a, &mut o1);
+            scalar::dense_axpy(-1.75, &a, &mut o2);
+            for (x, y) in o1.iter().zip(&o2) {
+                assert_eq!(x.to_bits(), y.to_bits());
+            }
+        }
+    }
+
+    #[test]
+    fn backend_is_cached_and_named() {
+        let b = backend();
+        assert_eq!(b, backend(), "backend must be stable per process");
+        assert!(["scalar", "avx2", "neon"].contains(&backend_name()));
     }
 
     #[test]

@@ -1,0 +1,162 @@
+//! The scalar reference kernels — the bit-exactness ground truth.
+//!
+//! Every function here commits to the documented accumulation order of
+//! the original fused scalar kernels (see the module docs of
+//! [`crate::kernels`]). The SIMD backends in [`super::simd`] must
+//! reproduce these results bit-for-bit; the property suite
+//! (`rust/tests/prop_kernels.rs`) compares the dispatching public kernels
+//! against this module on adversarial shapes.
+//!
+//! These functions skip the per-call length/bounds validation the public
+//! dispatchers perform (they carry `debug_assert`s only) — call them
+//! through [`crate::kernels`] unless you are a test or bench that has
+//! already validated its inputs.
+
+/// 8-lane blocked dense dot product. `chunks_exact(8)` gives LLVM a
+/// fixed-width body it fully vectorizes without `-ffast-math`-style
+/// reassociation; measured 1.6x over the naive zip/sum and 2.1x over a
+/// 4-accumulator manual unroll at the d=54 hot shape, 4.1x at d=1024
+/// (EXPERIMENTS.md section Perf, iteration L3-1).
+///
+/// Reduction order (the bit-exactness contract): 8 independent lane
+/// accumulators over the `len / 8 * 8` prefix, combined as
+/// `((l0+l1)+(l2+l3)) + ((l4+l5)+(l6+l7))`, then the remainder folded in
+/// left to right.
+#[inline]
+pub fn dense_dot(a: &[f64], b: &[f64]) -> f64 {
+    debug_assert_eq!(a.len(), b.len());
+    let mut acc = [0.0f64; 8];
+    let ca = a.chunks_exact(8);
+    let cb = b.chunks_exact(8);
+    let (ra, rb) = (ca.remainder(), cb.remainder());
+    for (xa, xb) in ca.zip(cb) {
+        for k in 0..8 {
+            acc[k] += xa[k] * xb[k];
+        }
+    }
+    let mut s = ((acc[0] + acc[1]) + (acc[2] + acc[3]))
+        + ((acc[4] + acc[5]) + (acc[6] + acc[7]));
+    for (x, y) in ra.iter().zip(rb) {
+        s += x * y;
+    }
+    s
+}
+
+/// `out += coef * a`, blocked like [`dense_dot`] (iteration L3-2: +24% on
+/// the d=54 axpy, neutral at d >= 256 where it is memory-bound). Each
+/// element update is independent, so the blocking never changes bits.
+#[inline]
+pub fn dense_axpy(coef: f64, a: &[f64], out: &mut [f64]) {
+    debug_assert_eq!(a.len(), out.len());
+    let ca = a.chunks_exact(8);
+    let ra = ca.remainder();
+    let co = out.chunks_exact_mut(8);
+    for (xo, xa) in co.zip(ca) {
+        for k in 0..8 {
+            xo[k] += coef * xa[k];
+        }
+    }
+    let tail = out.len() - ra.len();
+    for (o, &v) in out[tail..].iter_mut().zip(ra.iter()) {
+        *o += coef * v;
+    }
+}
+
+/// Sparse gather-dot: `sum_k values[k] * w[indices[k]]`, unrolled by 4.
+///
+/// Reduction order: a single accumulator, strictly left to right — the
+/// unroll computes four products ahead (independent rounded ops) but
+/// chains the adds sequentially, so the result is bit-identical to the
+/// naive `for (i, v) in indices.zip(values) { s += v * w[i] }` loop.
+///
+/// # Safety
+/// Every `indices[k] as usize` must be `< w.len()`. [`crate::data::CsrMatrix`]
+/// guarantees this for its rows against any `w` of length `>= cols`.
+#[inline]
+pub unsafe fn sparse_dot_unchecked(indices: &[u32], values: &[f64], w: &[f64]) -> f64 {
+    debug_assert_eq!(indices.len(), values.len());
+    debug_assert!(indices.iter().all(|&i| (i as usize) < w.len()));
+    let n = indices.len();
+    let mut s = 0.0f64;
+    let mut k = 0usize;
+    while k + 4 <= n {
+        let p0 = *values.get_unchecked(k)
+            * *w.get_unchecked(*indices.get_unchecked(k) as usize);
+        let p1 = *values.get_unchecked(k + 1)
+            * *w.get_unchecked(*indices.get_unchecked(k + 1) as usize);
+        let p2 = *values.get_unchecked(k + 2)
+            * *w.get_unchecked(*indices.get_unchecked(k + 2) as usize);
+        let p3 = *values.get_unchecked(k + 3)
+            * *w.get_unchecked(*indices.get_unchecked(k + 3) as usize);
+        // strictly sequential adds: never reassociated
+        s += p0;
+        s += p1;
+        s += p2;
+        s += p3;
+        k += 4;
+    }
+    while k < n {
+        s += *values.get_unchecked(k)
+            * *w.get_unchecked(*indices.get_unchecked(k) as usize);
+        k += 1;
+    }
+    s
+}
+
+/// Sparse scatter-axpy: `out[indices[k]] += coef * values[k]`, unrolled
+/// by 4. Updates run strictly left to right (a read-modify-write per
+/// element), so rows with repeated indices still fold in the naive order
+/// and the result is bit-identical to the scalar loop.
+///
+/// # Safety
+/// Every `indices[k] as usize` must be `< out.len()` (see
+/// [`sparse_dot_unchecked`]).
+#[inline]
+pub unsafe fn sparse_axpy_unchecked(indices: &[u32], values: &[f64], coef: f64, out: &mut [f64]) {
+    debug_assert_eq!(indices.len(), values.len());
+    debug_assert!(indices.iter().all(|&i| (i as usize) < out.len()));
+    let n = indices.len();
+    let mut k = 0usize;
+    while k + 4 <= n {
+        *out.get_unchecked_mut(*indices.get_unchecked(k) as usize) +=
+            coef * *values.get_unchecked(k);
+        *out.get_unchecked_mut(*indices.get_unchecked(k + 1) as usize) +=
+            coef * *values.get_unchecked(k + 1);
+        *out.get_unchecked_mut(*indices.get_unchecked(k + 2) as usize) +=
+            coef * *values.get_unchecked(k + 2);
+        *out.get_unchecked_mut(*indices.get_unchecked(k + 3) as usize) +=
+            coef * *values.get_unchecked(k + 3);
+        k += 4;
+    }
+    while k < n {
+        *out.get_unchecked_mut(*indices.get_unchecked(k) as usize) +=
+            coef * *values.get_unchecked(k);
+        k += 1;
+    }
+}
+
+/// nnz-aware squared norm of a sparse row: `sum_k values[k]^2`, single
+/// accumulator left to right (bit-identical to `values.iter().map(|v| v *
+/// v).sum()` — iterator `sum` folds sequentially from 0.0).
+#[inline]
+pub fn sparse_norm_sq(values: &[f64]) -> f64 {
+    let mut s = 0.0f64;
+    let mut k = 0usize;
+    let n = values.len();
+    while k + 4 <= n {
+        let p0 = values[k] * values[k];
+        let p1 = values[k + 1] * values[k + 1];
+        let p2 = values[k + 2] * values[k + 2];
+        let p3 = values[k + 3] * values[k + 3];
+        s += p0;
+        s += p1;
+        s += p2;
+        s += p3;
+        k += 4;
+    }
+    while k < n {
+        s += values[k] * values[k];
+        k += 1;
+    }
+    s
+}

@@ -1,0 +1,240 @@
+//! Explicit SIMD kernel backends (AVX2 on x86_64, NEON on aarch64),
+//! selected at runtime by [`crate::kernels::backend`].
+//!
+//! Every function here is a drop-in for its scalar counterpart in
+//! [`super::scalar`] and must be **bit-identical** to it — the SIMD lanes
+//! are arranged so each scalar lane accumulator maps to exactly one
+//! vector lane, the lane combine replays the documented scalar reduction
+//! tree, and no FMA is ever emitted (a fused multiply-add rounds once
+//! where `mul` + `add` round twice, which would change bits). The
+//! property suite compares these against the scalar reference bitwise on
+//! adversarial shapes (empty, `len % 8 != 0` remainders, subnormals).
+//!
+//! What is (and is not) vectorized:
+//!
+//! * `dense_dot` / `dense_axpy`: full-width SIMD. The scalar versions
+//!   already use an 8-lane blocked order, so two 4-wide (AVX2) or four
+//!   2-wide (NEON) vector accumulators reproduce it exactly.
+//! * `sparse_dot`: AVX2 vectorizes the 4 gathered products per unroll
+//!   (`vgatherdpd` + one `mul`); the adds stay a strictly sequential
+//!   scalar chain — that order is the kernel's documented contract, so
+//!   only the (independently rounded) products may be vectorized.
+//! * `sparse_axpy`, `sparse_norm_sq`: stay scalar everywhere. The
+//!   scatter is a strictly ordered read-modify-write chain (repeated
+//!   indices must fold in order; no AVX2 scatter exists anyway) and the
+//!   norm's chained adds leave nothing but the squares to vectorize —
+//!   measured neutral, not worth a second code path.
+
+#[cfg(target_arch = "x86_64")]
+pub mod avx2 {
+    //! AVX2 (+ the AVX it implies) backend. Callers must have verified
+    //! `is_x86_feature_detected!("avx2")` — the dispatcher does.
+    use core::arch::x86_64::{
+        __m128i, _mm256_add_pd, _mm256_i32gather_pd, _mm256_loadu_pd, _mm256_mul_pd,
+        _mm256_set1_pd, _mm256_setzero_pd, _mm256_storeu_pd, _mm_loadu_si128,
+    };
+
+    /// [`crate::kernels::scalar::dense_dot`], AVX2. Lanes 0–3 and 4–7 of
+    /// the scalar 8-lane accumulator live in two `__m256d` registers;
+    /// the combine extracts the 8 lanes and replays
+    /// `((l0+l1)+(l2+l3)) + ((l4+l5)+(l6+l7))` in scalar, then folds the
+    /// remainder left to right. `mul` + `add`, never FMA.
+    ///
+    /// # Safety
+    /// The CPU must support AVX2, and `a.len() == b.len()` (the
+    /// dispatcher validates both).
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn dense_dot(a: &[f64], b: &[f64]) -> f64 {
+        debug_assert_eq!(a.len(), b.len());
+        let n = a.len();
+        let main = n / 8 * 8;
+        let mut acc_lo = _mm256_setzero_pd();
+        let mut acc_hi = _mm256_setzero_pd();
+        let (pa, pb) = (a.as_ptr(), b.as_ptr());
+        let mut k = 0usize;
+        while k < main {
+            let a_lo = _mm256_loadu_pd(pa.add(k));
+            let b_lo = _mm256_loadu_pd(pb.add(k));
+            let a_hi = _mm256_loadu_pd(pa.add(k + 4));
+            let b_hi = _mm256_loadu_pd(pb.add(k + 4));
+            acc_lo = _mm256_add_pd(acc_lo, _mm256_mul_pd(a_lo, b_lo));
+            acc_hi = _mm256_add_pd(acc_hi, _mm256_mul_pd(a_hi, b_hi));
+            k += 8;
+        }
+        let mut lo = [0.0f64; 4];
+        let mut hi = [0.0f64; 4];
+        _mm256_storeu_pd(lo.as_mut_ptr(), acc_lo);
+        _mm256_storeu_pd(hi.as_mut_ptr(), acc_hi);
+        let mut s = ((lo[0] + lo[1]) + (lo[2] + lo[3]))
+            + ((hi[0] + hi[1]) + (hi[2] + hi[3]));
+        while k < n {
+            s += *a.get_unchecked(k) * *b.get_unchecked(k);
+            k += 1;
+        }
+        s
+    }
+
+    /// [`crate::kernels::scalar::dense_axpy`], AVX2. Element updates are
+    /// independent, so any blocking is bit-safe; this one mirrors the
+    /// scalar 8-block (two 4-wide `mul` + `add` per block, no FMA) with a
+    /// scalar left-to-right tail.
+    ///
+    /// # Safety
+    /// The CPU must support AVX2, and `a.len() == out.len()` (the
+    /// dispatcher validates both).
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn dense_axpy(coef: f64, a: &[f64], out: &mut [f64]) {
+        debug_assert_eq!(a.len(), out.len());
+        let n = a.len();
+        let main = n / 8 * 8;
+        let c = _mm256_set1_pd(coef);
+        let pa = a.as_ptr();
+        let po = out.as_mut_ptr();
+        let mut k = 0usize;
+        while k < main {
+            let o_lo = _mm256_loadu_pd(po.add(k));
+            let o_hi = _mm256_loadu_pd(po.add(k + 4));
+            let a_lo = _mm256_loadu_pd(pa.add(k));
+            let a_hi = _mm256_loadu_pd(pa.add(k + 4));
+            _mm256_storeu_pd(po.add(k), _mm256_add_pd(o_lo, _mm256_mul_pd(c, a_lo)));
+            _mm256_storeu_pd(po.add(k + 4), _mm256_add_pd(o_hi, _mm256_mul_pd(c, a_hi)));
+            k += 8;
+        }
+        while k < n {
+            *out.get_unchecked_mut(k) += coef * *a.get_unchecked(k);
+            k += 1;
+        }
+    }
+
+    /// [`crate::kernels::scalar::sparse_dot_unchecked`], AVX2: the four
+    /// products of each unroll come from one `vgatherdpd` + one `mul`;
+    /// the accumulator adds stay a strictly sequential scalar chain (the
+    /// documented reduction order), so bits never change — each product
+    /// is a single rounded multiply either way.
+    ///
+    /// # Safety
+    /// The CPU must support AVX2; every `indices[k] as usize` must be
+    /// `< w.len()`; and `w.len() <= i32::MAX as usize` so each u32 index
+    /// is a non-negative i32 for the gather (the dispatcher checks the
+    /// length and falls back to scalar otherwise).
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn sparse_dot_unchecked(indices: &[u32], values: &[f64], w: &[f64]) -> f64 {
+        debug_assert_eq!(indices.len(), values.len());
+        debug_assert!(w.len() <= i32::MAX as usize);
+        debug_assert!(indices.iter().all(|&i| (i as usize) < w.len()));
+        let n = indices.len();
+        let mut s = 0.0f64;
+        let mut k = 0usize;
+        while k + 4 <= n {
+            let vidx = _mm_loadu_si128(indices.as_ptr().add(k) as *const __m128i);
+            let vals = _mm256_loadu_pd(values.as_ptr().add(k));
+            let gathered = _mm256_i32gather_pd::<8>(w.as_ptr(), vidx);
+            let mut p = [0.0f64; 4];
+            _mm256_storeu_pd(p.as_mut_ptr(), _mm256_mul_pd(vals, gathered));
+            // strictly sequential adds: never reassociated
+            s += p[0];
+            s += p[1];
+            s += p[2];
+            s += p[3];
+            k += 4;
+        }
+        while k < n {
+            s += *values.get_unchecked(k)
+                * *w.get_unchecked(*indices.get_unchecked(k) as usize);
+            k += 1;
+        }
+        s
+    }
+}
+
+#[cfg(target_arch = "aarch64")]
+pub mod neon {
+    //! NEON backend. NEON is part of the aarch64 baseline (every
+    //! `aarch64-*` std target compiles with it on), so these are safe
+    //! functions — no runtime detection needed.
+    use core::arch::aarch64::{
+        vaddq_f64, vdupq_n_f64, vgetq_lane_f64, vld1q_f64, vmulq_f64, vst1q_f64,
+    };
+
+    /// [`crate::kernels::scalar::dense_dot`], NEON. The scalar 8-lane
+    /// accumulator lives in four 2-wide vector registers (lanes (0,1),
+    /// (2,3), (4,5), (6,7)); the combine extracts all 8 lanes and replays
+    /// the scalar reduction tree. `vmulq` + `vaddq`, never `vfmaq`.
+    pub fn dense_dot(a: &[f64], b: &[f64]) -> f64 {
+        debug_assert_eq!(a.len(), b.len());
+        let n = a.len();
+        let main = n / 8 * 8;
+        // SAFETY: all loads stay inside the `main` prefix of both
+        // slices; NEON is in the aarch64 target baseline.
+        unsafe {
+            let mut acc01 = vdupq_n_f64(0.0);
+            let mut acc23 = vdupq_n_f64(0.0);
+            let mut acc45 = vdupq_n_f64(0.0);
+            let mut acc67 = vdupq_n_f64(0.0);
+            let (pa, pb) = (a.as_ptr(), b.as_ptr());
+            let mut k = 0usize;
+            while k < main {
+                acc01 = vaddq_f64(acc01, vmulq_f64(vld1q_f64(pa.add(k)), vld1q_f64(pb.add(k))));
+                acc23 = vaddq_f64(
+                    acc23,
+                    vmulq_f64(vld1q_f64(pa.add(k + 2)), vld1q_f64(pb.add(k + 2))),
+                );
+                acc45 = vaddq_f64(
+                    acc45,
+                    vmulq_f64(vld1q_f64(pa.add(k + 4)), vld1q_f64(pb.add(k + 4))),
+                );
+                acc67 = vaddq_f64(
+                    acc67,
+                    vmulq_f64(vld1q_f64(pa.add(k + 6)), vld1q_f64(pb.add(k + 6))),
+                );
+                k += 8;
+            }
+            let mut s = ((vgetq_lane_f64::<0>(acc01) + vgetq_lane_f64::<1>(acc01))
+                + (vgetq_lane_f64::<0>(acc23) + vgetq_lane_f64::<1>(acc23)))
+                + ((vgetq_lane_f64::<0>(acc45) + vgetq_lane_f64::<1>(acc45))
+                    + (vgetq_lane_f64::<0>(acc67) + vgetq_lane_f64::<1>(acc67)));
+            for (x, y) in a[main..].iter().zip(&b[main..]) {
+                s += x * y;
+            }
+            s
+        }
+    }
+
+    /// [`crate::kernels::scalar::dense_axpy`], NEON: four 2-wide
+    /// `vmulq` + `vaddq` per 8-block (no FMA), scalar tail.
+    pub fn dense_axpy(coef: f64, a: &[f64], out: &mut [f64]) {
+        debug_assert_eq!(a.len(), out.len());
+        let n = a.len();
+        let main = n / 8 * 8;
+        // SAFETY: all loads/stores stay inside the `main` prefix; NEON
+        // is in the aarch64 target baseline.
+        unsafe {
+            let c = vdupq_n_f64(coef);
+            let pa = a.as_ptr();
+            let po = out.as_mut_ptr();
+            let mut k = 0usize;
+            while k < main {
+                vst1q_f64(
+                    po.add(k),
+                    vaddq_f64(vld1q_f64(po.add(k)), vmulq_f64(c, vld1q_f64(pa.add(k)))),
+                );
+                vst1q_f64(
+                    po.add(k + 2),
+                    vaddq_f64(vld1q_f64(po.add(k + 2)), vmulq_f64(c, vld1q_f64(pa.add(k + 2)))),
+                );
+                vst1q_f64(
+                    po.add(k + 4),
+                    vaddq_f64(vld1q_f64(po.add(k + 4)), vmulq_f64(c, vld1q_f64(pa.add(k + 4)))),
+                );
+                vst1q_f64(
+                    po.add(k + 6),
+                    vaddq_f64(vld1q_f64(po.add(k + 6)), vmulq_f64(c, vld1q_f64(pa.add(k + 6)))),
+                );
+                k += 8;
+            }
+        }
+        for (o, &v) in out[main..].iter_mut().zip(a[main..].iter()) {
+            *o += coef * v;
+        }
+    }
+}

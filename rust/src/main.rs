@@ -1,14 +1,8 @@
 //! `cocoa` — CLI launcher for the CoCoA distributed training framework.
 //!
-//! Subcommands:
-//!   train --config <toml> [--out <csv>] [--p-star <f64>] [--progress]
-//!   repro <table1|fig1|fig2|fig3|fig4|headline|sparsity|theory|all>
-//!         [--smoke] [--results-dir <dir>] [--rounds <n>]
-//!   perf [--smoke] [--out <json>] [--seed <n>] | perf --validate <json>
-//!   optimum --config <toml>
-//!   gen-data <cov|rcv1|imagenet> --n <n> --d <d> [--seed <s>] --out <path>
-//!   leader --config <toml> --listen <addr> [--workers <k>] ...
-//!   worker --config <toml> --connect <addr> [--attempts <n>] [--backoff-s <s>]
+//! The [`USAGE`] string below is the single source of truth for
+//! subcommands and flags (it used to be duplicated here and the two
+//! copies drifted); `cocoa help` prints it verbatim.
 //!
 //! The binary is self-contained after `make artifacts`: python never runs
 //! on this path. (Args are parsed by hand — the offline build carries no
@@ -70,15 +64,25 @@ const USAGE: &str = "\
 cocoa — communication-efficient distributed dual coordinate ascent (NIPS 2014 reproduction)
 
 USAGE:
-  cocoa train --config <toml> [--out <csv>] [--p-star <f64>] [--progress]
+  cocoa train --config <toml> [--out <csv>] [--p-star <f64>] [--progress] [--threads <t>]
   cocoa repro <table1|fig1|fig2|fig3|fig4|headline|sparsity|theory|all> [--smoke] [--results-dir <dir>] [--rounds <n>]
   cocoa perf [--smoke] [--out <json>] [--seed <n>]
-  cocoa perf --validate <json>
+  cocoa perf --validate <json> [--baseline <json>] [--tolerance <frac>] [--delta <path>]
   cocoa optimum --config <toml>
   cocoa gen-data <cov|rcv1|imagenet> --n <n> --d <d> [--seed <s>] --out <path>
   cocoa leader --config <toml> --listen <tcp:host:port|uds:/path> [--workers <k>] [--out <csv>]
-               [--p-star <f64>] [--progress] [--checkpoint-every <n>] [--max-recoveries <m>]
-  cocoa worker --config <toml> --connect <tcp:host:port|uds:/path> [--attempts <n>] [--backoff-s <s>]
+               [--p-star <f64>] [--progress] [--checkpoint-every <n>] [--max-recoveries <m>] [--threads <t>]
+  cocoa worker --config <toml> --connect <tcp:host:port|uds:/path> [--attempts <n>] [--backoff-s <s>] [--threads <t>]
+
+  --threads overrides [runtime] threads from the config (intra-worker shard
+  count T for the local solves; trajectories are deterministic per T). In a
+  leader/worker deployment every process must agree on T — it is part of
+  the handshake fingerprint.
+
+  perf --validate alone checks the report's structure only. Add --baseline
+  to also gate steps/sec, time-to-1e-3-gap, and peak RSS within the
+  --tolerance band (default 0.5 = 50%); --delta writes the comparison
+  report to a file for CI artifacts.
 ";
 
 fn main() -> Result<()> {
@@ -96,6 +100,7 @@ fn main() -> Result<()> {
                 args.opt("out").map(String::from),
                 p_star,
                 args.flags.contains("progress"),
+                args.opt("threads").map(|s| s.parse()).transpose()?,
             )
         }
         "repro" => {
@@ -112,7 +117,9 @@ fn main() -> Result<()> {
         "perf" => {
             let args = Args::parse(&argv[1..], &["smoke"])?;
             if let Some(path) = args.opt("validate") {
-                return perf_validate(path);
+                let tolerance =
+                    args.opt("tolerance").map(|s| s.parse()).transpose()?.unwrap_or(0.5);
+                return perf_validate(path, args.opt("baseline"), tolerance, args.opt("delta"));
             }
             let profile =
                 if args.flags.contains("smoke") { PerfProfile::Smoke } else { PerfProfile::Full };
@@ -153,6 +160,7 @@ fn main() -> Result<()> {
                 args.flags.contains("progress"),
                 args.opt("checkpoint-every").map(|s| s.parse()).transpose()?.unwrap_or(1),
                 args.opt("max-recoveries").map(|s| s.parse()).transpose()?.unwrap_or(3),
+                args.opt("threads").map(|s| s.parse()).transpose()?,
             )
         }
         "worker" => {
@@ -162,6 +170,7 @@ fn main() -> Result<()> {
                 args.req("connect")?,
                 args.opt("attempts").map(|s| s.parse()).transpose()?.unwrap_or(10),
                 args.opt("backoff-s").map(|s| s.parse()).transpose()?.unwrap_or(0.2),
+                args.opt("threads").map(|s| s.parse()).transpose()?,
             )
         }
         "help" | "--help" | "-h" => {
@@ -175,11 +184,20 @@ fn main() -> Result<()> {
     }
 }
 
-fn train(config_path: &str, out: Option<String>, p_star: Option<f64>, progress: bool) -> Result<()> {
-    let cfg = ExperimentConfig::from_toml_file(config_path)?;
+fn train(
+    config_path: &str,
+    out: Option<String>,
+    p_star: Option<f64>,
+    progress: bool,
+    threads: Option<usize>,
+) -> Result<()> {
+    let mut cfg = ExperimentConfig::from_toml_file(config_path)?;
+    if let Some(t) = threads {
+        cfg.runtime.threads = t;
+    }
     let data = cfg.dataset.load()?;
     eprintln!(
-        "dataset {} (n={}, d={}, density={:.4}) | K={} | {} | loss {} | lambda {}",
+        "dataset {} (n={}, d={}, density={:.4}) | K={} | {} | loss {} | lambda {} | T={}",
         cfg.dataset.name(),
         data.n(),
         data.d(),
@@ -188,6 +206,7 @@ fn train(config_path: &str, out: Option<String>, p_star: Option<f64>, progress: 
         cfg.algorithm.name(),
         cfg.loss,
         cfg.lambda,
+        cfg.runtime.threads,
     );
     let mut session = cfg.trainer(&data).build()?;
     session.set_reference_optimum(p_star);
@@ -251,8 +270,12 @@ fn leader(
     progress: bool,
     checkpoint_every: u64,
     max_recoveries: u32,
+    threads: Option<usize>,
 ) -> Result<()> {
-    let cfg = ExperimentConfig::from_toml_file(config_path)?;
+    let mut cfg = ExperimentConfig::from_toml_file(config_path)?;
+    if let Some(t) = threads {
+        cfg.runtime.threads = t;
+    }
     let data = cfg.dataset.load()?;
     if let Some(k) = workers {
         if k != cfg.partition.k {
@@ -347,12 +370,22 @@ fn leader(
     Ok(())
 }
 
-fn worker(config_path: &str, connect: &str, attempts: u32, backoff_s: f64) -> Result<()> {
-    let cfg = ExperimentConfig::from_toml_file(config_path)?;
+fn worker(
+    config_path: &str,
+    connect: &str,
+    attempts: u32,
+    backoff_s: f64,
+    threads: Option<usize>,
+) -> Result<()> {
+    let mut cfg = ExperimentConfig::from_toml_file(config_path)?;
+    if let Some(t) = threads {
+        cfg.runtime.threads = t;
+    }
     eprintln!(
-        "worker: dataset {} | {} | connecting to {connect}",
+        "worker: dataset {} | {} | T={} | connecting to {connect}",
         cfg.dataset.name(),
         cfg.algorithm.name(),
+        cfg.runtime.threads,
     );
     run_worker_process(&cfg, connect, &ReconnectPolicy { attempts, backoff_s })?;
     eprintln!("worker: clean shutdown");
@@ -545,19 +578,21 @@ fn default_rounds(profile: Profile) -> u64 {
 
 fn perf_run(profile: PerfProfile, seed: u64, out: &str) -> Result<()> {
     eprintln!(
-        "perf: profile {} seed {seed} -> {out} (3 workload families x K in {{1, 4}})",
+        "perf: profile {} seed {seed} -> {out} \
+         (3 workload families x K in {{1, 4}}, sparse also at T = 4)",
         profile.as_str()
     );
     let report = perf::run_all(profile, seed)?;
     println!(
-        "{:<24} {:>3} {:>9} {:>9} {:>13} {:>12} {:>14} {:>12}",
-        "workload", "K", "n", "d", "steps/s", "final gap", "t(gap 1e-3) s", "wire bytes"
+        "{:<24} {:>3} {:>3} {:>9} {:>9} {:>13} {:>12} {:>14} {:>12}",
+        "workload", "K", "T", "n", "d", "steps/s", "final gap", "t(gap 1e-3) s", "wire bytes"
     );
     for w in &report.workloads {
         println!(
-            "{:<24} {:>3} {:>9} {:>9} {:>13.0} {:>12.2e} {:>14} {:>12}",
+            "{:<24} {:>3} {:>3} {:>9} {:>9} {:>13.0} {:>12.2e} {:>14} {:>12}",
             w.name,
             w.k,
+            w.threads,
             w.n,
             w.d,
             w.steps_per_sec,
@@ -575,13 +610,53 @@ fn perf_run(profile: PerfProfile, seed: u64, out: &str) -> Result<()> {
     // self-validate: the file CI uploads must always pass the same gate
     // CI runs, so a schema regression fails here first
     perf::validate_file(std::path::Path::new(out)).map_err(|e| anyhow!("{e}"))?;
-    eprintln!("report -> {out} (schema v{} validated)", perf::SCHEMA_VERSION);
+    eprintln!(
+        "report -> {out} (schema v{}, kernel backend {})",
+        perf::SCHEMA_VERSION,
+        report.kernel_backend
+    );
     Ok(())
 }
 
-fn perf_validate(path: &str) -> Result<()> {
+/// `cocoa perf --validate`: always the structural schema check; with
+/// `--baseline` also the regression gate. The output states what was and
+/// wasn't checked, and the process exits nonzero if the gate fails.
+fn perf_validate(
+    path: &str,
+    baseline: Option<&str>,
+    tolerance: f64,
+    delta: Option<&str>,
+) -> Result<()> {
     perf::validate_file(std::path::Path::new(path)).map_err(|e| anyhow!("{e}"))?;
-    println!("{path}: valid BENCH schema v{}", perf::SCHEMA_VERSION);
+    println!(
+        "{path}: schema v{} OK (fields present, numbers finite, round times monotone)",
+        perf::SCHEMA_VERSION
+    );
+    let Some(baseline) = baseline else {
+        println!(
+            "{path}: timings NOT compared — no --baseline given \
+             (pass --baseline <json> to gate steps/sec, time-to-gap, and peak RSS)"
+        );
+        return Ok(());
+    };
+    let outcome = perf::compare_files(
+        std::path::Path::new(path),
+        std::path::Path::new(baseline),
+        tolerance,
+    )
+    .map_err(|e| anyhow!("{e}"))?;
+    let rendered = outcome.render();
+    print!("{rendered}");
+    if let Some(delta_path) = delta {
+        std::fs::write(delta_path, &rendered)?;
+        eprintln!("delta report -> {delta_path}");
+    }
+    if !outcome.passed() {
+        bail!(
+            "perf gate failed: {} regression(s) vs {baseline} at tolerance {tolerance}",
+            outcome.failures.len()
+        );
+    }
     Ok(())
 }
 

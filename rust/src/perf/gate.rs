@@ -1,0 +1,332 @@
+//! The perf-regression gate behind `cocoa perf --validate --baseline`:
+//! compare a candidate `BENCH_*.json` against a checked-in per-workload
+//! baseline within a tolerance band, and say *exactly* what was and
+//! wasn't checked.
+//!
+//! Three comparisons, all relative to `tolerance` (a fraction; 0.5 means
+//! "within 50%", sized for shared-runner noise):
+//!
+//! * `steps_per_sec` per workload — candidate must reach at least
+//!   `(1 - tolerance) x baseline`;
+//! * `time_to_gap_1e3_s` per workload — candidate must be at most
+//!   `(1 + tolerance) x baseline`. A `null` baseline (target never
+//!   reached) skips the check; a `null` candidate against a non-null
+//!   baseline is a regression (the build stopped reaching the gap);
+//! * `peak_rss_bytes` per report — candidate at most
+//!   `(1 + tolerance) x baseline`, same null rules.
+//!
+//! Workloads present in the baseline but missing from the candidate fail
+//! the gate (a silently dropped workload is how a regression hides);
+//! candidate workloads the baseline does not know are reported as
+//! unchecked, not failed, so baselines can lag new workloads.
+//!
+//! A *negative* tolerance tightens the gate past equality: `--tolerance
+//! -1` demands `steps_per_sec >= 2x` the baseline's, which no run
+//! satisfies against itself — CI uses that as a self-test that the gate
+//! can actually fail (see `ci.sh`).
+
+use super::schema::{parse, validate, Json, SchemaError};
+
+fn err<T>(message: impl Into<String>) -> Result<T, SchemaError> {
+    Err(SchemaError { message: message.into() })
+}
+
+/// The gate's full verdict: every failed comparison, every comparison
+/// that ran, and every comparison that was skipped (with the reason).
+#[derive(Debug, Clone)]
+pub struct GateOutcome {
+    /// The tolerance band the comparisons used.
+    pub tolerance: f64,
+    /// Human-readable failures; empty means the gate passed.
+    pub failures: Vec<String>,
+    /// Comparisons that ran, with the measured ratios.
+    pub checked: Vec<String>,
+    /// Comparisons that could not run and why (null baselines, workloads
+    /// unknown to the baseline).
+    pub skipped: Vec<String>,
+}
+
+impl GateOutcome {
+    pub fn passed(&self) -> bool {
+        self.failures.is_empty()
+    }
+
+    /// The delta report: verdict, then what was checked, skipped, and
+    /// failed — written next to the bench JSON for the CI artifact.
+    pub fn render(&self) -> String {
+        let mut s = String::new();
+        s.push_str(&format!(
+            "perf gate: {} (tolerance {:+.0}%)\n",
+            if self.passed() { "PASS" } else { "FAIL" },
+            self.tolerance * 100.0
+        ));
+        for line in &self.checked {
+            s.push_str(&format!("  checked  {line}\n"));
+        }
+        for line in &self.skipped {
+            s.push_str(&format!("  skipped  {line}\n"));
+        }
+        for line in &self.failures {
+            s.push_str(&format!("  FAILED   {line}\n"));
+        }
+        s
+    }
+}
+
+fn workload_map(doc: &Json, which: &str) -> Result<Vec<(String, Json)>, SchemaError> {
+    let arr = doc
+        .get("workloads")
+        .and_then(Json::as_arr)
+        .ok_or_else(|| SchemaError { message: format!("{which}: missing workloads") })?;
+    arr.iter()
+        .map(|w| {
+            let name = w
+                .get("name")
+                .and_then(Json::as_str)
+                .ok_or_else(|| SchemaError { message: format!("{which}: unnamed workload") })?;
+            Ok((name.to_string(), w.clone()))
+        })
+        .collect()
+}
+
+fn num(w: &Json, key: &str) -> Option<f64> {
+    w.get(key).and_then(Json::as_f64)
+}
+
+/// `Some(Some(x))` for a number, `Some(None)` for an explicit null,
+/// `None` for a missing or mistyped field.
+fn opt_num(w: &Json, key: &str) -> Option<Option<f64>> {
+    match w.get(key) {
+        Some(Json::Null) => Some(None),
+        Some(v) => v.as_f64().map(Some),
+        None => None,
+    }
+}
+
+/// Compare a candidate report against a baseline report. Both documents
+/// must individually pass [`validate`] first — this function re-checks
+/// that so a gate invocation can never silently compare garbage.
+pub fn compare(candidate: &Json, baseline: &Json, tolerance: f64) -> Result<GateOutcome, SchemaError> {
+    if !tolerance.is_finite() {
+        return err(format!("tolerance must be finite, got {tolerance}"));
+    }
+    validate(candidate).map_err(|e| SchemaError { message: format!("candidate: {}", e.message) })?;
+    validate(baseline).map_err(|e| SchemaError { message: format!("baseline: {}", e.message) })?;
+
+    let mut out = GateOutcome {
+        tolerance,
+        failures: Vec::new(),
+        checked: Vec::new(),
+        skipped: Vec::new(),
+    };
+
+    let cand = workload_map(candidate, "candidate")?;
+    let base = workload_map(baseline, "baseline")?;
+
+    for (name, bw) in &base {
+        let Some((_, cw)) = cand.iter().find(|(n, _)| n == name) else {
+            out.failures.push(format!(
+                "{name}: present in the baseline but missing from the candidate"
+            ));
+            continue;
+        };
+
+        // throughput: the headline number, always gated
+        let b_sps = num(bw, "steps_per_sec").unwrap_or(f64::NAN);
+        let c_sps = num(cw, "steps_per_sec").unwrap_or(f64::NAN);
+        let floor = (1.0 - tolerance) * b_sps;
+        let line = format!(
+            "{name}: steps_per_sec {c_sps:.1} vs baseline {b_sps:.1} (floor {floor:.1})"
+        );
+        if c_sps >= floor {
+            out.checked.push(line);
+        } else {
+            out.failures.push(line);
+        }
+
+        // time to the 1e-3 gap: only when the baseline reached it
+        match (opt_num(bw, "time_to_gap_1e3_s"), opt_num(cw, "time_to_gap_1e3_s")) {
+            (Some(None), _) => out.skipped.push(format!(
+                "{name}: time_to_gap_1e3_s (baseline never reached the gap)"
+            )),
+            (Some(Some(b_t)), Some(Some(c_t))) => {
+                let ceil = (1.0 + tolerance) * b_t;
+                let line = format!(
+                    "{name}: time_to_gap_1e3_s {c_t:.4} vs baseline {b_t:.4} (ceiling {ceil:.4})"
+                );
+                if c_t <= ceil {
+                    out.checked.push(line);
+                } else {
+                    out.failures.push(line);
+                }
+            }
+            (Some(Some(b_t)), Some(None)) => out.failures.push(format!(
+                "{name}: baseline reached the 1e-3 gap in {b_t:.4}s, candidate never did"
+            )),
+            _ => out.failures.push(format!("{name}: time_to_gap_1e3_s missing")),
+        }
+    }
+
+    for (name, _) in &cand {
+        if !base.iter().any(|(n, _)| n == name) {
+            out.skipped.push(format!("{name}: not in the baseline (new workload, not gated)"));
+        }
+    }
+
+    // peak RSS: report-level, same null semantics as time-to-gap
+    match (
+        opt_num(baseline, "peak_rss_bytes"),
+        opt_num(candidate, "peak_rss_bytes"),
+    ) {
+        (Some(None), _) => out
+            .skipped
+            .push("peak_rss_bytes (baseline recorded none)".into()),
+        (Some(Some(b)), Some(Some(c))) => {
+            let ceil = (1.0 + tolerance) * b;
+            let line = format!("report: peak_rss_bytes {c:.0} vs baseline {b:.0} (ceiling {ceil:.0})");
+            if c <= ceil {
+                out.checked.push(line);
+            } else {
+                out.failures.push(line);
+            }
+        }
+        (Some(Some(b)), Some(None)) => out.failures.push(format!(
+            "report: baseline recorded peak_rss_bytes {b:.0}, candidate recorded none"
+        )),
+        _ => out.failures.push("report: peak_rss_bytes missing".into()),
+    }
+
+    Ok(out)
+}
+
+/// Parse + compare two report strings.
+pub fn compare_str(candidate: &str, baseline: &str, tolerance: f64) -> Result<GateOutcome, SchemaError> {
+    compare(&parse(candidate)?, &parse(baseline)?, tolerance)
+}
+
+/// Parse + compare two report files.
+pub fn compare_files(
+    candidate: &std::path::Path,
+    baseline: &std::path::Path,
+    tolerance: f64,
+) -> Result<GateOutcome, SchemaError> {
+    let read = |p: &std::path::Path| {
+        std::fs::read_to_string(p)
+            .map_err(|e| SchemaError { message: format!("read {}: {e}", p.display()) })
+    };
+    compare_str(&read(candidate)?, &read(baseline)?, tolerance)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn report(name_sps: &[(&str, f64)], rss: &str, gap_s: &str) -> String {
+        let workloads: Vec<String> = name_sps
+            .iter()
+            .map(|(name, sps)| {
+                format!(
+                    r#"{{"name": "{name}", "k": 1, "threads": 1, "n": 10, "d": 2,
+                        "density": 1.0, "rounds": 3, "inner_steps": 30,
+                        "wall_s": 0.01, "steps_per_sec": {sps},
+                        "final_gap": 0.5, "time_to_gap_1e3_s": {gap_s},
+                        "bytes_measured": 128, "round_sim_time_s": [0.0, 0.1]}}"#
+                )
+            })
+            .collect();
+        format!(
+            r#"{{"schema_version": 2, "profile": "smoke", "seed": 7,
+                "kernel_backend": "scalar", "peak_rss_bytes": {rss},
+                "workloads": [{}]}}"#,
+            workloads.join(", ")
+        )
+    }
+
+    #[test]
+    fn identical_reports_pass_at_any_nonneg_tolerance() {
+        let r = report(&[("a_k1", 1000.0), ("b_k1", 500.0)], "1048576", "0.2");
+        for tol in [0.0, 0.1, 0.5] {
+            let out = compare_str(&r, &r, tol).unwrap();
+            assert!(out.passed(), "tol {tol}: {:?}", out.failures);
+            assert!(!out.checked.is_empty());
+        }
+    }
+
+    #[test]
+    fn slower_candidate_fails_and_names_the_workload() {
+        let base = report(&[("a_k1", 1000.0)], "1048576", "0.2");
+        let slow = report(&[("a_k1", 400.0)], "1048576", "0.2");
+        let out = compare_str(&slow, &base, 0.5).unwrap();
+        assert!(!out.passed());
+        assert!(out.failures[0].contains("a_k1"), "{:?}", out.failures);
+        assert!(out.failures[0].contains("steps_per_sec"), "{:?}", out.failures);
+        // within the band it passes: 600 >= (1 - 0.5) * 1000
+        let ok = report(&[("a_k1", 600.0)], "1048576", "0.2");
+        assert!(compare_str(&ok, &base, 0.5).unwrap().passed());
+    }
+
+    #[test]
+    fn negative_tolerance_fails_a_self_comparison() {
+        // the "gate actually gates" self-test CI runs: a report can never
+        // be 2x faster than itself
+        let r = report(&[("a_k1", 1000.0)], "1048576", "0.2");
+        let out = compare_str(&r, &r, -1.0).unwrap();
+        assert!(!out.passed());
+    }
+
+    #[test]
+    fn missing_workload_fails_new_workload_skips() {
+        let base = report(&[("a_k1", 1000.0), ("gone_k1", 10.0)], "1048576", "0.2");
+        let cand = report(&[("a_k1", 1000.0), ("new_k1", 10.0)], "1048576", "0.2");
+        let out = compare_str(&cand, &base, 0.5).unwrap();
+        assert!(out.failures.iter().any(|f| f.contains("gone_k1")), "{:?}", out.failures);
+        assert!(out.skipped.iter().any(|s| s.contains("new_k1")), "{:?}", out.skipped);
+    }
+
+    #[test]
+    fn null_baseline_fields_skip_null_candidate_against_real_baseline_fails() {
+        let base_null = report(&[("a_k1", 1000.0)], "null", "null");
+        let cand = report(&[("a_k1", 1000.0)], "1048576", "0.2");
+        let out = compare_str(&cand, &base_null, 0.5).unwrap();
+        assert!(out.passed(), "{:?}", out.failures);
+        assert!(out.skipped.iter().any(|s| s.contains("peak_rss_bytes")));
+        assert!(out.skipped.iter().any(|s| s.contains("time_to_gap")));
+
+        // the reverse direction is a regression, not a skip
+        let out = compare_str(&base_null, &cand, 0.5).unwrap();
+        assert!(!out.passed());
+        assert!(out.failures.iter().any(|f| f.contains("peak_rss_bytes")), "{:?}", out.failures);
+        assert!(out.failures.iter().any(|f| f.contains("1e-3 gap")), "{:?}", out.failures);
+    }
+
+    #[test]
+    fn slower_time_to_gap_and_fatter_rss_fail() {
+        let base = report(&[("a_k1", 1000.0)], "1000000", "0.2");
+        let slow_gap = report(&[("a_k1", 1000.0)], "1000000", "0.9");
+        let out = compare_str(&slow_gap, &base, 0.5).unwrap();
+        assert!(out.failures.iter().any(|f| f.contains("time_to_gap")), "{:?}", out.failures);
+        let fat = report(&[("a_k1", 1000.0)], "2000000", "0.2");
+        let out = compare_str(&fat, &base, 0.5).unwrap();
+        assert!(out.failures.iter().any(|f| f.contains("peak_rss_bytes")), "{:?}", out.failures);
+    }
+
+    #[test]
+    fn garbage_documents_are_rejected_not_compared() {
+        let good = report(&[("a_k1", 1000.0)], "1048576", "0.2");
+        assert!(compare_str("{}", &good, 0.5).is_err());
+        assert!(compare_str(&good, "{}", 0.5).is_err());
+        assert!(compare_str(&good, &good, f64::NAN).is_err());
+    }
+
+    #[test]
+    fn render_names_every_bucket() {
+        let base = report(&[("a_k1", 1000.0), ("gone_k1", 10.0)], "null", "null");
+        let cand = report(&[("a_k1", 1000.0), ("new_k1", 10.0)], "1048576", "0.2");
+        let out = compare_str(&cand, &base, 0.5).unwrap();
+        let text = out.render();
+        assert!(text.contains("FAIL"), "{text}");
+        assert!(text.contains("checked"), "{text}");
+        assert!(text.contains("skipped"), "{text}");
+        assert!(text.contains("gone_k1"), "{text}");
+    }
+}

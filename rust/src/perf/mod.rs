@@ -8,15 +8,21 @@
 //! simulated time to a 1e-3 duality gap, byte-exact wire bytes, and peak
 //! RSS.
 //!
-//! CI consumes the `--smoke` profile as a *structural* gate: the
-//! [`schema`] validator checks that every field is present, every number
-//! finite, and cumulative round times monotone — never that a timing beat
-//! a threshold (shared CI runners make timing gates flaky; trajectories
-//! are compared across commits by humans and tooling reading the uploaded
-//! artifacts instead).
+//! CI consumes the `--smoke` profile twice:
+//!
+//! * a *structural* gate — the [`schema`] validator checks that every
+//!   field is present, every number finite, and cumulative round times
+//!   monotone;
+//! * a *regression* gate — [`gate::compare`] checks steps/sec,
+//!   time-to-1e-3-gap, and peak RSS against the checked-in per-workload
+//!   baseline (`benchmarks/BENCH_hotpath.json`) within a tolerance band
+//!   sized for shared-runner noise, and writes a delta report saying
+//!   exactly what was and wasn't compared.
 
+pub mod gate;
 pub mod schema;
 mod workloads;
 
+pub use gate::{compare, compare_files, compare_str, GateOutcome};
 pub use schema::{parse, validate, validate_file, validate_str, Json, SchemaError};
 pub use workloads::{run_all, BenchReport, PerfProfile, WorkloadReport, SCHEMA_VERSION};

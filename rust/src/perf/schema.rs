@@ -325,6 +325,11 @@ pub fn validate(doc: &Json) -> Result<(), SchemaError> {
         None => return err("missing string field \"profile\""),
     }
     finite_num(doc, "report", "seed")?;
+    match doc.get("kernel_backend").and_then(Json::as_str) {
+        Some(s) if !s.is_empty() => {}
+        Some(_) => return err("kernel_backend is empty"),
+        None => return err("missing string field \"kernel_backend\""),
+    }
     finite_num_or_null(doc, "report", "peak_rss_bytes")?;
 
     let workloads = match doc.get("workloads").and_then(Json::as_arr) {
@@ -339,7 +344,7 @@ pub fn validate(doc: &Json) -> Result<(), SchemaError> {
             .ok_or_else(|| SchemaError { message: "workload missing \"name\"".into() })?
             .to_string();
         let ctx = format!("workload {name:?}");
-        for key in ["k", "n", "d", "rounds"] {
+        for key in ["k", "threads", "n", "d", "rounds"] {
             let v = finite_num(wl, &ctx, key)?;
             if v < 1.0 {
                 return err(format!("{ctx}: {key} = {v} < 1"));
@@ -421,9 +426,10 @@ mod tests {
 
     fn minimal_workload(extra: &str, times: &str) -> String {
         format!(
-            r#"{{"schema_version": 1, "profile": "smoke", "seed": 7,
+            r#"{{"schema_version": 2, "profile": "smoke", "seed": 7,
+                "kernel_backend": "scalar",
                 "peak_rss_bytes": 1048576,
-                "workloads": [{{"name": "w", "k": 1, "n": 10, "d": 2,
+                "workloads": [{{"name": "w", "k": 1, "threads": 1, "n": 10, "d": 2,
                   "density": 1.0, "rounds": 3, "inner_steps": 30,
                   "wall_s": 0.01, "steps_per_sec": 3000.0,
                   "final_gap": 0.5, "time_to_gap_1e3_s": null,
@@ -451,13 +457,17 @@ mod tests {
 
     #[test]
     fn validator_rejects_missing_fields_and_bad_version() {
-        let doc = minimal_workload("", "[0.0]").replace("\"schema_version\": 1", "\"schema_version\": 99");
+        let doc = minimal_workload("", "[0.0]").replace("\"schema_version\": 2", "\"schema_version\": 99");
         assert!(validate_str(&doc).unwrap_err().message.contains("schema_version"));
         let doc = minimal_workload("", "[0.0]").replace("\"steps_per_sec\": 3000.0,", "");
         assert!(validate_str(&doc)
             .unwrap_err()
             .message
             .contains("steps_per_sec"));
+        let doc = minimal_workload("", "[0.0]").replace("\"kernel_backend\": \"scalar\",", "");
+        assert!(validate_str(&doc).unwrap_err().message.contains("kernel_backend"));
+        let doc = minimal_workload("", "[0.0]").replace("\"threads\": 1,", "\"threads\": 0,");
+        assert!(validate_str(&doc).unwrap_err().message.contains("threads"));
     }
 
     #[test]

@@ -12,11 +12,18 @@
 //!   regularizer (the leader-side prox path and the sparse broadcast
 //!   encoding).
 //!
+//! The `sparse_logistic` family additionally runs with `threads = 4`
+//! (suffix `_t4`) so the intra-worker sharded hot path has its own
+//! trajectory next to the sequential one.
+//!
 //! Every run uses the byte-exact counted transport and the ec2-like
 //! network model, so `bytes_measured` and the simulated time axis are
 //! populated. The report is written as schema-versioned JSON
-//! (`BENCH_hotpath.json`) and validated by [`super::schema`]; CI runs the
-//! `--smoke` profile as a structural gate without ever comparing timings.
+//! (`BENCH_hotpath.json`) and validated by [`super::schema`]. CI runs the
+//! `--smoke` profile as a structural gate, and `cocoa perf --validate
+//! --baseline` compares steps/sec, time-to-gap, and peak RSS against a
+//! checked-in per-workload baseline within a tolerance band (see
+//! [`super::gate`]).
 
 use std::io::Write;
 use std::path::Path;
@@ -34,7 +41,9 @@ use crate::Trainer;
 
 /// Version of the `BENCH_*.json` layout. Bump on any breaking change to
 /// field names or meanings; the validator rejects mismatches.
-pub const SCHEMA_VERSION: u32 = 1;
+/// v2: per-workload `threads`, top-level `kernel_backend`, `_t4` sparse
+/// variants.
+pub const SCHEMA_VERSION: u32 = 2;
 
 /// Problem sizes: tiny (CI smoke) or benchmark-scale.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -59,6 +68,8 @@ impl PerfProfile {
 pub struct WorkloadReport {
     pub name: String,
     pub k: usize,
+    /// Intra-worker shard count T the local solves ran with.
+    pub threads: usize,
     pub n: usize,
     pub d: usize,
     pub density: f64,
@@ -86,6 +97,10 @@ pub struct BenchReport {
     pub schema_version: u32,
     pub profile: PerfProfile,
     pub seed: u64,
+    /// Which kernel backend the dispatcher picked on this machine
+    /// (`scalar` / `avx2` / `neon`) — context for comparing steps/sec
+    /// across runs.
+    pub kernel_backend: String,
     pub peak_rss_bytes: Option<u64>,
     pub workloads: Vec<WorkloadReport>,
 }
@@ -93,6 +108,7 @@ pub struct BenchReport {
 struct WorkloadSpec {
     name: &'static str,
     k: usize,
+    threads: usize,
     data: Dataset,
     loss: LossKind,
     lambda: f64,
@@ -112,24 +128,31 @@ fn specs(profile: PerfProfile, seed: u64) -> Vec<WorkloadSpec> {
         specs.push(WorkloadSpec {
             name: "dense_ridge",
             k,
+            threads: 1,
             data: cov_like(ridge_n, ridge_d, 0.1, seed ^ 0xd0),
             loss: LossKind::Squared,
             lambda: 1.0 / ridge_n as f64,
             regularizer: RegularizerKind::L2,
             max_rounds: cap,
         });
-        specs.push(WorkloadSpec {
-            name: "sparse_logistic",
-            k,
-            data: rcv1_like(sparse_n, sparse_d, sparse_nnz, 0.1, seed ^ 0x5b),
-            loss: LossKind::Logistic,
-            lambda: 1.0 / sparse_n as f64,
-            regularizer: RegularizerKind::L2,
-            max_rounds: cap,
-        });
+        // the sparse hot path runs both sequential and T = 4 sharded, so
+        // the intra-worker speedup is a first-class trajectory
+        for threads in [1usize, 4] {
+            specs.push(WorkloadSpec {
+                name: "sparse_logistic",
+                k,
+                threads,
+                data: rcv1_like(sparse_n, sparse_d, sparse_nnz, 0.1, seed ^ 0x5b),
+                loss: LossKind::Logistic,
+                lambda: 1.0 / sparse_n as f64,
+                regularizer: RegularizerKind::L2,
+                max_rounds: cap,
+            });
+        }
         specs.push(WorkloadSpec {
             name: "lasso_smoothed_l1",
             k,
+            threads: 1,
             data: cov_like(lasso_n, lasso_d, 0.1, seed ^ 0x11),
             loss: LossKind::Squared,
             lambda: 0.05,
@@ -156,6 +179,7 @@ pub fn run_all(profile: PerfProfile, seed: u64) -> crate::Result<BenchReport> {
             .network(NetworkModel::ec2_like())
             .transport(TransportKind::Counted)
             .seed(seed)
+            .threads(spec.threads)
             .label(spec.name)
             .build()?;
         let stopping = GapBelow::new(1e-3).or(MaxRounds::new(spec.max_rounds));
@@ -166,9 +190,11 @@ pub fn run_all(profile: PerfProfile, seed: u64) -> crate::Result<BenchReport> {
         session.shutdown();
 
         let last = trace.rows.last().expect("at least round 0 recorded");
+        let suffix = if spec.threads > 1 { format!("_t{}", spec.threads) } else { String::new() };
         workloads.push(WorkloadReport {
-            name: format!("{}_k{}", spec.name, spec.k),
+            name: format!("{}_k{}{}", spec.name, spec.k, suffix),
             k: spec.k,
+            threads: spec.threads,
             n,
             d,
             density,
@@ -186,6 +212,7 @@ pub fn run_all(profile: PerfProfile, seed: u64) -> crate::Result<BenchReport> {
         schema_version: SCHEMA_VERSION,
         profile,
         seed,
+        kernel_backend: crate::kernels::backend_name().to_string(),
         peak_rss_bytes: peak_rss_bytes(),
         workloads,
     })
@@ -200,6 +227,7 @@ impl BenchReport {
         s.push_str(&format!("  \"schema_version\": {},\n", self.schema_version));
         s.push_str(&format!("  \"profile\": \"{}\",\n", self.profile.as_str()));
         s.push_str(&format!("  \"seed\": {},\n", self.seed));
+        s.push_str(&format!("  \"kernel_backend\": \"{}\",\n", self.kernel_backend));
         s.push_str(&format!(
             "  \"peak_rss_bytes\": {},\n",
             self.peak_rss_bytes.map_or("null".to_string(), |v| v.to_string())
@@ -208,12 +236,14 @@ impl BenchReport {
         for (i, w) in self.workloads.iter().enumerate() {
             let times: Vec<String> = w.round_sim_time_s.iter().map(|t| json_f64(*t)).collect();
             s.push_str(&format!(
-                "    {{\"name\": \"{}\", \"k\": {}, \"n\": {}, \"d\": {}, \"density\": {}, \
+                "    {{\"name\": \"{}\", \"k\": {}, \"threads\": {}, \"n\": {}, \"d\": {}, \
+                 \"density\": {}, \
                  \"rounds\": {}, \"inner_steps\": {}, \"wall_s\": {}, \"steps_per_sec\": {}, \
                  \"final_gap\": {}, \"time_to_gap_1e3_s\": {}, \"bytes_measured\": {}, \
                  \"round_sim_time_s\": [{}]}}{}\n",
                 w.name,
                 w.k,
+                w.threads,
                 w.n,
                 w.d,
                 json_f64(w.density),
@@ -254,7 +284,12 @@ mod tests {
         // the real end-to-end path CI runs: smoke workloads -> JSON ->
         // parse -> schema validation
         let report = run_all(PerfProfile::Smoke, 42).unwrap();
-        assert_eq!(report.workloads.len(), 6); // 3 families x K in {1, 4}
+        // 3 families x K in {1, 4}, plus sparse_logistic at T = 4
+        assert_eq!(report.workloads.len(), 8);
+        assert!(!report.kernel_backend.is_empty());
+        let names: Vec<&str> = report.workloads.iter().map(|w| w.name.as_str()).collect();
+        assert!(names.contains(&"sparse_logistic_k4"), "{names:?}");
+        assert!(names.contains(&"sparse_logistic_k4_t4"), "{names:?}");
         for w in &report.workloads {
             assert!(w.inner_steps > 0, "{}: no inner steps", w.name);
             assert!(w.bytes_measured > 0, "{}: counted transport silent", w.name);
@@ -277,10 +312,12 @@ mod tests {
             schema_version: SCHEMA_VERSION,
             profile: PerfProfile::Smoke,
             seed: 1,
+            kernel_backend: "scalar".into(),
             peak_rss_bytes: None,
             workloads: vec![WorkloadReport {
                 name: "w".into(),
                 k: 1,
+                threads: 1,
                 n: 10,
                 d: 2,
                 density: 1.0,

@@ -138,10 +138,18 @@ pub enum SolverKind {
 }
 
 impl SolverKind {
-    pub fn build(&self) -> Box<dyn LocalDualMethod> {
+    /// Build the local solver with the given intra-worker shard count
+    /// (see the deterministic-per-T contract in [`sdca`](LocalSdca)).
+    /// Only the SDCA variants shard; the exact and gap-certified solvers
+    /// ignore `threads` (their inner loops are inherently sequential).
+    pub fn build(&self, threads: usize) -> Box<dyn LocalDualMethod> {
         match self {
-            SolverKind::Sdca => Box::new(LocalSdca::new(Sampling::WithReplacement)),
-            SolverKind::SdcaPerm => Box::new(LocalSdca::new(Sampling::Permutation)),
+            SolverKind::Sdca => {
+                Box::new(LocalSdca::new(Sampling::WithReplacement).with_threads(threads))
+            }
+            SolverKind::SdcaPerm => {
+                Box::new(LocalSdca::new(Sampling::Permutation).with_threads(threads))
+            }
             SolverKind::Exact => Box::new(ExactBlockSolver::default()),
             SolverKind::GapCertified => Box::new(GapCertifiedSolver::default()),
         }

@@ -2,6 +2,23 @@
 //! ascent steps on the local block, each immediately applied to the local
 //! view of `w`. This "apply updates locally while they are processed"
 //! behaviour is exactly what distinguishes CoCoA from mini-batch methods.
+//!
+//! # Intra-worker threading (deterministic-per-T)
+//!
+//! With `threads = T > 1` the block is sharded into T contiguous
+//! coordinate sub-ranges, each solved by its own thread exactly like a
+//! CoCoA+ sub-worker: a private RNG (T seeds drawn from the round RNG up
+//! front), a private copy of `w`, `h / T` of the step budget, and the
+//! curvature multiplier scaled by an extra factor T — the safe-adding
+//! sigma' for a T-way partition, so the summed update still never
+//! decreases the dual. Shards share no mutable state and their partial
+//! `dw`s are combined in pinned shard order 0..T, so the trajectory is a
+//! pure function of `(seed, T)` — **deterministic per T**, independent of
+//! thread scheduling, core count, or whether the shards actually run in
+//! parallel ([`LocalSdca::local_update_sequential_schedule`] replays the
+//! identical schedule on the caller thread; the property suite pins the
+//! two bit-for-bit). `T = 1` runs the original sequential path unchanged,
+//! bit-identical to every pre-threading trajectory.
 
 use super::{Block, LocalDualMethod, LocalUpdate};
 use crate::data::Features;
@@ -29,17 +46,167 @@ pub struct LocalSdca {
     /// *added* (beta_K = K) updates safe — the conclusion's open question,
     /// resolved by the CoCoA+ follow-up; implemented here as an extension.
     pub curvature_scale: f64,
+    /// Intra-worker shard count T (>= 1). See the module docs for the
+    /// deterministic-per-T contract; 1 is the sequential legacy path.
+    pub threads: usize,
 }
 
 impl LocalSdca {
     pub fn new(sampling: Sampling) -> Self {
-        LocalSdca { sampling, curvature_scale: 1.0 }
+        LocalSdca { sampling, curvature_scale: 1.0, threads: 1 }
     }
 
     /// sigma'-scaled variant (CoCoA+ style additive updates).
     pub fn with_curvature_scale(sampling: Sampling, sigma_prime: f64) -> Self {
         assert!(sigma_prime >= 1.0, "sigma' must be >= 1");
-        LocalSdca { sampling, curvature_scale: sigma_prime }
+        LocalSdca { sampling, curvature_scale: sigma_prime, threads: 1 }
+    }
+
+    /// Set the intra-worker shard count T. Shards never outnumber the
+    /// block's coordinates (the effective T is clamped per block).
+    pub fn with_threads(mut self, threads: usize) -> Self {
+        assert!(threads >= 1, "threads must be >= 1");
+        self.threads = threads;
+        self
+    }
+
+    /// Replay the exact shard schedule of [`local_update`] on the caller
+    /// thread — same seeds, same sub-ranges, same pinned combine order —
+    /// without spawning. Exists so the property suite can pin that the
+    /// threaded execution is bit-identical to its sequential schedule
+    /// (i.e. that thread scheduling can never leak into a trajectory);
+    /// not intended for production use.
+    ///
+    /// [`local_update`]: LocalDualMethod::local_update
+    #[doc(hidden)]
+    pub fn local_update_sequential_schedule(
+        &self,
+        block: &Block,
+        loss: &dyn Loss,
+        alpha: &[f64],
+        w: &[f64],
+        h: usize,
+        rng: &mut Rng,
+    ) -> LocalUpdate {
+        self.update_impl(block, loss, alpha, w, h, rng, false)
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn update_impl(
+        &self,
+        block: &Block,
+        loss: &dyn Loss,
+        alpha: &[f64],
+        w: &[f64],
+        h: usize,
+        rng: &mut Rng,
+        parallel: bool,
+    ) -> LocalUpdate {
+        let n_k = block.n_k();
+        debug_assert_eq!(alpha.len(), n_k);
+        assert_eq!(w.len(), block.d(), "w length must match block dimension");
+        let t = self.threads.max(1).min(n_k.max(1));
+        let mut dalpha = vec![0.0; n_k];
+
+        if t == 1 {
+            // the sequential legacy path: the full block is one shard on
+            // the caller thread with the round RNG — bit-identical to
+            // every pre-threading trajectory
+            let mut w_local = w.to_vec();
+            sdca_range(
+                block,
+                loss,
+                alpha,
+                &mut w_local,
+                &mut dalpha,
+                0,
+                h,
+                self.curvature_scale,
+                self.sampling,
+                rng,
+            );
+            let dw = extract_dw(block, &w_local, w, self.curvature_scale);
+            return LocalUpdate { dalpha, dw, steps: h as u64, offloaded_s: 0.0 };
+        }
+
+        // Deterministic-per-T sharding. Everything random is fixed up
+        // front: T shard seeds drawn from the round RNG (advancing it, so
+        // consecutive rounds see fresh randomness), contiguous sub-range
+        // bounds, and the per-shard step budget (h/T, the first h%T
+        // shards taking one extra).
+        let scale_eff = self.curvature_scale * t as f64;
+        let seeds: Vec<u64> = (0..t).map(|_| rng.next_u64()).collect();
+        let sampling = self.sampling;
+
+        // split dalpha into the per-shard chunks [s*n_k/T, (s+1)*n_k/T)
+        let mut jobs: Vec<(usize, usize, u64, &mut [f64])> = Vec::with_capacity(t);
+        let mut rest: &mut [f64] = &mut dalpha;
+        let mut lo = 0usize;
+        for (s, &seed) in seeds.iter().enumerate() {
+            let hi = (s + 1) * n_k / t;
+            let tmp = rest;
+            let (chunk, tail) = tmp.split_at_mut(hi - lo);
+            let h_s = h / t + usize::from(s < h % t);
+            jobs.push((lo, h_s, seed, chunk));
+            rest = tail;
+            lo = hi;
+        }
+
+        let run_shard = |lo: usize, h_s: usize, seed: u64, chunk: &mut [f64]| -> Vec<f64> {
+            let mut w_local = w.to_vec();
+            let mut shard_rng = Rng::seed_from_u64(seed);
+            sdca_range(
+                block, loss, alpha, &mut w_local, chunk, lo, h_s, scale_eff, sampling,
+                &mut shard_rng,
+            );
+            w_local
+        };
+
+        // Shards share nothing mutable, so parallel execution computes
+        // the exact bits of the sequential replay below; the only
+        // ordering that matters is the pinned combine order afterwards.
+        let shard_w: Vec<Vec<f64>> = if parallel {
+            let run_shard = &run_shard;
+            std::thread::scope(|scope| {
+                let handles: Vec<_> = jobs
+                    .into_iter()
+                    .map(|(lo, h_s, seed, chunk)| {
+                        scope.spawn(move || run_shard(lo, h_s, seed, chunk))
+                    })
+                    .collect();
+                handles
+                    .into_iter()
+                    .map(|j| j.join().expect("sdca shard thread panicked"))
+                    .collect()
+            })
+        } else {
+            jobs.into_iter()
+                .map(|(lo, h_s, seed, chunk)| run_shard(lo, h_s, seed, chunk))
+                .collect()
+        };
+
+        // Pinned reduction order: dw = sum over shards 0..T of each
+        // shard's delta, always in shard index order — never in thread
+        // completion order. dalpha needs no combine (disjoint chunks).
+        let mut dw = vec![0.0; w.len()];
+        match block.touched_cols() {
+            Some(cols) => {
+                for w_s in &shard_w {
+                    for &j in cols {
+                        let j = j as usize;
+                        dw[j] += (w_s[j] - w[j]) / scale_eff;
+                    }
+                }
+            }
+            None => {
+                for w_s in &shard_w {
+                    for (d, (wl, w0)) in dw.iter_mut().zip(w_s.iter().zip(w)) {
+                        *d += (wl - w0) / scale_eff;
+                    }
+                }
+            }
+        }
+        LocalUpdate { dalpha, dw, steps: h as u64, offloaded_s: 0.0 }
     }
 }
 
@@ -60,101 +227,115 @@ impl LocalDualMethod for LocalSdca {
         h: usize,
         rng: &mut Rng,
     ) -> LocalUpdate {
-        let n_k = block.n_k();
-        debug_assert_eq!(alpha.len(), n_k);
-        assert_eq!(w.len(), block.d(), "w length must match block dimension");
-        let mut dalpha = vec![0.0; n_k];
-        // Maintain w_local = w + sigma' * dw in place; dw is recovered at
-        // the end. For the paper's Algorithm 1 (sigma' = 1) this is just
-        // the running local view of w. For the CoCoA+ extension the whole
-        // quadratic coupling of the local subproblem — the per-step
-        // curvature AND the accumulated cross-coordinate term — carries
-        // the sigma' factor, hence the scaled accumulation.
-        let mut w_local = w.to_vec();
-        let scale = self.curvature_scale;
-        let inv_lambda_n = scale / block.lambda_n;
-        let sampling = self.sampling;
-        let mut perm: Vec<u32> = Vec::new();
-        let mut pick = |step: usize, rng: &mut Rng| -> usize {
-            match sampling {
-                Sampling::WithReplacement => rng.gen_range(n_k),
-                Sampling::Permutation => {
-                    let pos = step % n_k;
-                    if pos == 0 {
-                        perm = sample_permutation(n_k, rng);
-                    }
-                    perm[pos] as usize
-                }
-            }
-        };
+        self.update_impl(block, loss, alpha, w, h, rng, true)
+    }
+}
 
-        // The inner loop is monomorphized per storage format so each step
-        // runs the fused kernels on the row slices directly: one indptr
-        // fetch per step, no per-element bounds checks, the curvature
-        // division precomputed per shard. Arithmetic (values, order) is
-        // identical to the generic Features::row_dot/add_row_scaled path
-        // this replaces — the prop_kernels suite pins that bit-for-bit.
-        match &block.data.features {
-            Features::Sparse(m) => {
-                for step in 0..h {
-                    let i = pick(step, rng);
-                    let (idx, val) = m.row_view(i);
-                    // SAFETY: CsrMatrix guarantees index < cols, and
-                    // w_local.len() == block.d() == cols (asserted above).
-                    let q = unsafe { kernels::sparse_dot_unchecked(idx, val, &w_local) };
-                    let a_cur = alpha[i] + dalpha[i];
-                    let s = block.curvature(i) * scale;
-                    let delta = loss.coord_delta(q, block.data.labels[i], a_cur, s);
-                    if delta != 0.0 {
-                        dalpha[i] += delta;
-                        // SAFETY: as above.
-                        unsafe {
-                            kernels::sparse_axpy_unchecked(
-                                idx,
-                                val,
-                                delta * inv_lambda_n,
-                                &mut w_local,
-                            )
-                        };
-                    }
+/// The SDCA inner loop over one contiguous coordinate sub-range
+/// `[lo, lo + dalpha.len())` of the block: `h` steps, each picking a
+/// local coordinate (uniform or permutation over the *sub-range*),
+/// judging it against `w_local`, and applying any move to `dalpha`
+/// (locally indexed) and `w_local` in place. `w_local` accumulates
+/// `scale_eff * dw_shard` on top of the broadcast `w`; the caller
+/// recovers the shard's `dw` afterwards.
+///
+/// Monomorphized per storage format so each step runs the fused kernels
+/// on the row slices directly: one indptr fetch per step, no per-element
+/// bounds checks, the curvature division precomputed per shard. With the
+/// full range and the round RNG this is arithmetic-identical to the
+/// original unsharded loop — the prop_kernels suite pins that
+/// bit-for-bit.
+#[allow(clippy::too_many_arguments)]
+fn sdca_range(
+    block: &Block,
+    loss: &dyn Loss,
+    alpha: &[f64],
+    w_local: &mut [f64],
+    dalpha: &mut [f64],
+    lo: usize,
+    h: usize,
+    scale_eff: f64,
+    sampling: Sampling,
+    rng: &mut Rng,
+) {
+    let len = dalpha.len();
+    if len == 0 {
+        return;
+    }
+    let inv_lambda_n = scale_eff / block.lambda_n;
+    let mut perm: Vec<u32> = Vec::new();
+    let mut pick = |step: usize, rng: &mut Rng| -> usize {
+        match sampling {
+            Sampling::WithReplacement => rng.gen_range(len),
+            Sampling::Permutation => {
+                let pos = step % len;
+                if pos == 0 {
+                    perm = sample_permutation(len, rng);
                 }
+                perm[pos] as usize
             }
-            Features::Dense(m) => {
-                for step in 0..h {
-                    let i = pick(step, rng);
-                    let row = m.row(i);
-                    let q = kernels::dense_dot(row, &w_local);
-                    let a_cur = alpha[i] + dalpha[i];
-                    let s = block.curvature(i) * scale;
-                    let delta = loss.coord_delta(q, block.data.labels[i], a_cur, s);
-                    if delta != 0.0 {
-                        dalpha[i] += delta;
-                        kernels::dense_axpy(delta * inv_lambda_n, row, &mut w_local);
-                    }
+        }
+    };
+
+    match &block.data.features {
+        Features::Sparse(m) => {
+            for step in 0..h {
+                let j = pick(step, rng);
+                let i = lo + j;
+                let (idx, val) = m.row_view(i);
+                // SAFETY: CsrMatrix guarantees index < cols, and
+                // w_local.len() == block.d() == cols (asserted by the
+                // caller).
+                let q = unsafe { kernels::sparse_dot_unchecked(idx, val, w_local) };
+                let a_cur = alpha[i] + dalpha[j];
+                let s = block.curvature(i) * scale_eff;
+                let delta = loss.coord_delta(q, block.data.labels[i], a_cur, s);
+                if delta != 0.0 {
+                    dalpha[j] += delta;
+                    // SAFETY: as above.
+                    unsafe {
+                        kernels::sparse_axpy_unchecked(idx, val, delta * inv_lambda_n, w_local)
+                    };
                 }
             }
         }
-
-        // Delta extraction: on sparse shards only touched columns can have
-        // moved; untouched columns satisfy w_local[j] == w[j] bit-for-bit,
-        // where the old full-d pass computed (x - x)/scale == +0.0 — the
-        // same bits the zero-fill writes.
-        let dw = match block.touched_cols() {
-            Some(cols) => {
-                let mut dw = vec![0.0; w.len()];
-                for &j in cols {
-                    let j = j as usize;
-                    dw[j] = (w_local[j] - w[j]) / scale;
+        Features::Dense(m) => {
+            for step in 0..h {
+                let j = pick(step, rng);
+                let i = lo + j;
+                let row = m.row(i);
+                let q = kernels::dense_dot(row, w_local);
+                let a_cur = alpha[i] + dalpha[j];
+                let s = block.curvature(i) * scale_eff;
+                let delta = loss.coord_delta(q, block.data.labels[i], a_cur, s);
+                if delta != 0.0 {
+                    dalpha[j] += delta;
+                    kernels::dense_axpy(delta * inv_lambda_n, row, w_local);
                 }
-                dw
             }
-            None => w_local
-                .iter()
-                .zip(w.iter())
-                .map(|(wl, w0)| (wl - w0) / scale)
-                .collect(),
-        };
-        LocalUpdate { dalpha, dw, steps: h as u64, offloaded_s: 0.0 }
+        }
+    }
+}
+
+/// Delta extraction for the single-shard path: on sparse shards only
+/// touched columns can have moved; untouched columns satisfy
+/// `w_local[j] == w[j]` bit-for-bit, where the old full-d pass computed
+/// `(x - x)/scale == +0.0` — the same bits the zero-fill writes.
+fn extract_dw(block: &Block, w_local: &[f64], w: &[f64], scale: f64) -> Vec<f64> {
+    match block.touched_cols() {
+        Some(cols) => {
+            let mut dw = vec![0.0; w.len()];
+            for &j in cols {
+                let j = j as usize;
+                dw[j] = (w_local[j] - w[j]) / scale;
+            }
+            dw
+        }
+        None => w_local
+            .iter()
+            .zip(w.iter())
+            .map(|(wl, w0)| (wl - w0) / scale)
+            .collect(),
     }
 }
 
@@ -194,6 +375,28 @@ mod tests {
     }
 
     #[test]
+    fn dw_equals_a_dalpha_when_threaded() {
+        // the Procedure-A contract must survive sharding: disjoint
+        // dalpha chunks, per-shard w copies, pinned dw combine
+        let block = test_block(40, 6, 0.05, 80, 0);
+        for threads in [2usize, 4] {
+            for sampling in [Sampling::WithReplacement, Sampling::Permutation] {
+                let solver = LocalSdca::new(sampling).with_threads(threads);
+                let up = solver.local_update(
+                    &block,
+                    &Hinge,
+                    &vec![0.0; 40],
+                    &vec![0.0; 6],
+                    120,
+                    &mut rng(1),
+                );
+                assert_eq!(up.steps, 120);
+                assert_dw_consistent(&block, &up);
+            }
+        }
+    }
+
+    #[test]
     fn local_dual_objective_never_decreases() {
         // Every inner step is exact coordinate ascent on the global dual
         // restricted to the block => applying the *whole* local update (as
@@ -225,19 +428,50 @@ mod tests {
     }
 
     #[test]
+    fn local_dual_objective_never_decreases_threaded() {
+        // sigma' = T safe-adding across the shard partition: the summed
+        // sharded update must still be dual non-decreasing
+        let block = test_block(60, 8, 0.1, 60, 2);
+        let loss = SmoothedHinge::new(0.5);
+        let lambda = 0.1;
+        let mut alpha = vec![0.0; 60];
+        let mut w = vec![0.0; 8];
+        let solver = LocalSdca::new(Sampling::WithReplacement).with_threads(4);
+        let mut d_prev = objective::dual(&block.data, &alpha, lambda, &loss);
+        let mut r = rng(3);
+        for _ in 0..5 {
+            let up = solver.local_update(&block, &loss, &alpha, &w, 90, &mut r);
+            for (a, da) in alpha.iter_mut().zip(&up.dalpha) {
+                *a += da;
+            }
+            for (wv, dv) in w.iter_mut().zip(&up.dw) {
+                *wv += dv;
+            }
+            let d_new = objective::dual(&block.data, &alpha, lambda, &loss);
+            assert!(
+                d_new >= d_prev - 1e-10,
+                "threaded dual decreased: {d_prev} -> {d_new}"
+            );
+            d_prev = d_new;
+        }
+    }
+
+    #[test]
     fn h_zero_is_noop() {
         let block = test_block(10, 4, 0.1, 10, 4);
-        let solver = LocalSdca::new(Sampling::WithReplacement);
-        let up = solver.local_update(
-            &block,
-            &Hinge,
-            &vec![0.0; 10],
-            &vec![0.0; 4],
-            0,
-            &mut rng(5),
-        );
-        assert!(up.dalpha.iter().all(|&v| v == 0.0));
-        assert!(up.dw.iter().all(|&v| v == 0.0));
+        for threads in [1usize, 3] {
+            let solver = LocalSdca::new(Sampling::WithReplacement).with_threads(threads);
+            let up = solver.local_update(
+                &block,
+                &Hinge,
+                &vec![0.0; 10],
+                &vec![0.0; 4],
+                0,
+                &mut rng(5),
+            );
+            assert!(up.dalpha.iter().all(|&v| v == 0.0));
+            assert!(up.dw.iter().all(|&v| v == 0.0));
+        }
     }
 
     #[test]
@@ -311,11 +545,75 @@ mod tests {
     #[test]
     fn deterministic_under_seed() {
         let block = test_block(25, 5, 0.2, 50, 6);
-        let solver = LocalSdca::new(Sampling::WithReplacement);
-        let a = solver.local_update(&block, &Hinge, &vec![0.0; 25], &vec![0.0; 5], 40, &mut rng(7));
-        let b = solver.local_update(&block, &Hinge, &vec![0.0; 25], &vec![0.0; 5], 40, &mut rng(7));
-        assert_eq!(a.dalpha, b.dalpha);
-        assert_eq!(a.dw, b.dw);
+        for threads in [1usize, 2, 4] {
+            let solver = LocalSdca::new(Sampling::WithReplacement).with_threads(threads);
+            let a =
+                solver.local_update(&block, &Hinge, &vec![0.0; 25], &vec![0.0; 5], 40, &mut rng(7));
+            let b =
+                solver.local_update(&block, &Hinge, &vec![0.0; 25], &vec![0.0; 5], 40, &mut rng(7));
+            assert_eq!(a.dalpha, b.dalpha);
+            assert_eq!(a.dw, b.dw);
+        }
+    }
+
+    #[test]
+    fn threaded_execution_matches_sequential_schedule_bitwise() {
+        // the deterministic-per-T contract: running the shard schedule on
+        // real threads produces the same bits as replaying it on one
+        let block = test_block(30, 5, 0.2, 60, 11);
+        for threads in [1usize, 2, 4] {
+            for sampling in [Sampling::WithReplacement, Sampling::Permutation] {
+                let solver = LocalSdca::new(sampling).with_threads(threads);
+                let par = solver.local_update(
+                    &block,
+                    &Hinge,
+                    &vec![0.0; 30],
+                    &vec![0.0; 5],
+                    60,
+                    &mut rng(13),
+                );
+                let seq = solver.local_update_sequential_schedule(
+                    &block,
+                    &Hinge,
+                    &vec![0.0; 30],
+                    &vec![0.0; 5],
+                    60,
+                    &mut rng(13),
+                );
+                for (a, b) in par.dalpha.iter().zip(&seq.dalpha) {
+                    assert_eq!(a.to_bits(), b.to_bits(), "dalpha diverged at T={threads}");
+                }
+                for (a, b) in par.dw.iter().zip(&seq.dw) {
+                    assert_eq!(a.to_bits(), b.to_bits(), "dw diverged at T={threads}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn one_thread_is_bit_identical_to_legacy_sequential_path() {
+        // with_threads(1) must not perturb the RNG stream or any
+        // arithmetic relative to the original unsharded solver
+        let block = test_block(25, 5, 0.2, 50, 6);
+        let legacy = LocalSdca::new(Sampling::WithReplacement);
+        let t1 = LocalSdca::new(Sampling::WithReplacement).with_threads(1);
+        let a = legacy.local_update(&block, &Hinge, &vec![0.0; 25], &vec![0.0; 5], 40, &mut rng(7));
+        let b = t1.local_update(&block, &Hinge, &vec![0.0; 25], &vec![0.0; 5], 40, &mut rng(7));
+        for (x, y) in a.dalpha.iter().zip(&b.dalpha) {
+            assert_eq!(x.to_bits(), y.to_bits());
+        }
+        for (x, y) in a.dw.iter().zip(&b.dw) {
+            assert_eq!(x.to_bits(), y.to_bits());
+        }
+    }
+
+    #[test]
+    fn more_threads_than_coordinates_clamps() {
+        let block = test_block(3, 4, 0.5, 6, 8);
+        let solver = LocalSdca::new(Sampling::WithReplacement).with_threads(16);
+        let up = solver.local_update(&block, &Hinge, &vec![0.0; 3], &vec![0.0; 4], 9, &mut rng(2));
+        assert_eq!(up.steps, 9);
+        assert_dw_consistent(&block, &up);
     }
 
     #[test]

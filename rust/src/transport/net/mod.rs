@@ -13,8 +13,10 @@
 //!   header as every other frame, so a peer from an incompatible build
 //!   fails with a typed [`WireError::BadVersion`] before any payload is
 //!   interpreted, and [`run_fingerprint`] binds both sides to the same
-//!   dataset + partition + loss + regularizer + solver + lambda + seed —
-//!   a worker loading different data is rejected, not silently wrong.
+//!   dataset + partition + loss + regularizer + solver + lambda + seed +
+//!   intra-worker thread count — a worker loading different data (or one
+//!   that would walk a different deterministic-per-T trajectory) is
+//!   rejected, not silently wrong.
 //! * **Leader** — [`NetTransport`] (in [`leader`]) implements
 //!   [`Transport`](crate::transport::Transport) over the accepted
 //!   sockets: per-kind byte accounting read off actual writes, per-recv
@@ -134,6 +136,29 @@ pub struct ReconnectPolicy {
 impl Default for ReconnectPolicy {
     fn default() -> Self {
         ReconnectPolicy { attempts: 10, backoff_s: 0.2 }
+    }
+}
+
+impl ReconnectPolicy {
+    /// Longest single backoff sleep between connection attempts.
+    pub const MAX_BACKOFF_S: f64 = 5.0;
+
+    /// The sleep before retry number `failures` (1-based): exponential
+    /// `backoff_s * 2^(failures-1)` capped at [`Self::MAX_BACKOFF_S`].
+    ///
+    /// Both the exponent (shift capped at 2^16) and the product are
+    /// clamped *in f64 seconds space, before a `Duration` is built* —
+    /// `Duration::from_secs_f64` panics on non-finite or overlarge
+    /// inputs, so an uncapped product from a huge `--backoff-s` (or an
+    /// overflowed shift wrapping the delay to ~0, turning reconnect into
+    /// a busy-loop hammering the leader) must never reach it.
+    pub fn delay(&self, failures: u32) -> Duration {
+        let exp = failures.saturating_sub(1).min(16);
+        let s = self.backoff_s * (1u64 << exp) as f64;
+        // clamp handles inf and overlarge; NaN fails both comparisons,
+        // so route it to the cap explicitly
+        let s = if s.is_finite() { s.clamp(0.0, Self::MAX_BACKOFF_S) } else { Self::MAX_BACKOFF_S };
+        Duration::from_secs_f64(s)
     }
 }
 
@@ -438,7 +463,9 @@ fn fnv1a_bytes(h: &mut u64, bytes: &[u8]) {
 }
 
 /// One u64 binding a run's full description: dataset content fingerprint,
-/// shapes, partition layout, loss, regularizer, solver, lambda, and seed.
+/// shapes, partition layout, loss, regularizer, solver, lambda, seed, and
+/// the intra-worker thread count (trajectories are deterministic *per T*,
+/// so peers running different T would silently diverge without it).
 /// The leader and every worker compute it independently from their own
 /// config + data; the handshake rejects a mismatch, so two processes can
 /// only train together when they would produce bit-identical state.
@@ -451,6 +478,7 @@ pub fn run_fingerprint(
     solver: SolverKind,
     lambda: f64,
     seed: u64,
+    threads: usize,
 ) -> u64 {
     let mut h: u64 = 0xcbf29ce484222325;
     fnv1a_bytes(&mut h, data.fingerprint().as_bytes());
@@ -465,6 +493,7 @@ pub fn run_fingerprint(
     fnv1a_bytes(&mut h, format!("{solver:?}").as_bytes());
     fnv1a(&mut h, lambda.to_bits());
     fnv1a(&mut h, seed);
+    fnv1a(&mut h, threads as u64);
     fnv1a(&mut h, wire::WIRE_VERSION as u64);
     h
 }
@@ -499,6 +528,34 @@ mod tests {
         assert!(cfg.validate().is_err());
         cfg.recv_timeout_s = f64::INFINITY;
         assert!(cfg.validate().is_err());
+    }
+
+    #[test]
+    fn backoff_schedule_doubles_then_caps() {
+        let p = ReconnectPolicy::default(); // 0.2 s base
+        let want = [0.2, 0.4, 0.8, 1.6, 3.2, 5.0, 5.0, 5.0];
+        for (i, &w) in want.iter().enumerate() {
+            let got = p.delay(i as u32 + 1).as_secs_f64();
+            assert!((got - w).abs() < 1e-12, "failure {}: {} != {}", i + 1, got, w);
+        }
+        // failures=0 behaves like the first failure (no shift underflow)
+        assert_eq!(p.delay(0), p.delay(1));
+    }
+
+    #[test]
+    fn backoff_extremes_never_panic_or_wrap() {
+        // huge failure counts: the shift is capped, the product clamps
+        let p = ReconnectPolicy { attempts: u32::MAX, backoff_s: 0.2 };
+        assert_eq!(p.delay(u32::MAX).as_secs_f64(), ReconnectPolicy::MAX_BACKOFF_S);
+        // huge base: backoff_s * 2^16 would overflow Duration::from_secs_f64
+        let p = ReconnectPolicy { attempts: 3, backoff_s: 1e300 };
+        assert_eq!(p.delay(40).as_secs_f64(), ReconnectPolicy::MAX_BACKOFF_S);
+        // infinite product routes to the cap, not a panic
+        let p = ReconnectPolicy { attempts: 3, backoff_s: f64::MAX };
+        assert_eq!(p.delay(17).as_secs_f64(), ReconnectPolicy::MAX_BACKOFF_S);
+        // zero base is a valid immediate-retry policy
+        let p = ReconnectPolicy { attempts: 3, backoff_s: 0.0 };
+        assert_eq!(p.delay(5).as_secs_f64(), 0.0);
     }
 
     #[test]
@@ -567,7 +624,7 @@ mod tests {
         let data = crate::data::cov_like(60, 6, 0.1, 3);
         let other = crate::data::cov_like(60, 6, 0.1, 4);
         let part = |k| Partition::new(PartitionStrategy::Contiguous, 60, k, 0);
-        let f = |d: &Dataset, k, lambda, seed| {
+        let f = |d: &Dataset, k, lambda, seed, threads| {
             run_fingerprint(
                 d,
                 &part(k),
@@ -576,13 +633,15 @@ mod tests {
                 SolverKind::Sdca,
                 lambda,
                 seed,
+                threads,
             )
         };
-        let base = f(&data, 2, 1e-3, 0);
-        assert_eq!(base, f(&data, 2, 1e-3, 0), "deterministic");
-        assert_ne!(base, f(&other, 2, 1e-3, 0), "different data");
-        assert_ne!(base, f(&data, 3, 1e-3, 0), "different k");
-        assert_ne!(base, f(&data, 2, 1e-2, 0), "different lambda");
-        assert_ne!(base, f(&data, 2, 1e-3, 1), "different seed");
+        let base = f(&data, 2, 1e-3, 0, 1);
+        assert_eq!(base, f(&data, 2, 1e-3, 0, 1), "deterministic");
+        assert_ne!(base, f(&other, 2, 1e-3, 0, 1), "different data");
+        assert_ne!(base, f(&data, 3, 1e-3, 0, 1), "different k");
+        assert_ne!(base, f(&data, 2, 1e-2, 0, 1), "different lambda");
+        assert_ne!(base, f(&data, 2, 1e-3, 1, 1), "different seed");
+        assert_ne!(base, f(&data, 2, 1e-3, 0, 4), "different thread count");
     }
 }

@@ -14,8 +14,6 @@
 //! handshake *rejection* is not retried — the peer is running a
 //! different experiment, and retrying can never fix that.
 
-use std::time::Duration;
-
 use super::{
     decode_handshake_reply, encode_hello, read_frame, write_frame, FrameRead, HandshakeReply,
     NetAddr, ReconnectPolicy, Sock,
@@ -25,9 +23,6 @@ use crate::coordinator::worker::{CoreStep, WorkerCore};
 use crate::coordinator::{native_worker_config, ToLeader};
 use crate::error::{Error, Result};
 use crate::transport::wire;
-
-/// Longest single backoff sleep between connection attempts.
-const MAX_BACKOFF: Duration = Duration::from_secs(5);
 
 /// Why one serve session over one connection ended.
 enum Served {
@@ -68,6 +63,7 @@ pub fn run_worker_process(
         cfg.algorithm.solver_kind(),
         cfg.lambda,
         cfg.run.seed,
+        cfg.runtime.threads,
     );
 
     // the slot we held on the previous connection; re-requested on
@@ -86,7 +82,7 @@ pub fn run_worker_process(
                         ),
                     });
                 }
-                std::thread::sleep(backoff(policy, failures));
+                std::thread::sleep(policy.delay(failures));
                 continue;
             }
         };
@@ -102,7 +98,7 @@ pub fn run_worker_process(
                         reason: format!("leader unreachable after {failures} attempts"),
                     });
                 }
-                std::thread::sleep(backoff(policy, failures));
+                std::thread::sleep(policy.delay(failures));
                 continue;
             }
         };
@@ -129,6 +125,7 @@ pub fn run_worker_process(
             cfg.algorithm.solver_kind(),
             cfg.run.seed,
             slot,
+            cfg.runtime.threads,
         ));
         match serve(&mut sock, &mut core)? {
             Served::Shutdown => return Ok(()),
@@ -140,16 +137,10 @@ pub fn run_worker_process(
                         reason: format!("leader unreachable after {failures} attempts"),
                     });
                 }
-                std::thread::sleep(backoff(policy, failures));
+                std::thread::sleep(policy.delay(failures));
             }
         }
     }
-}
-
-fn backoff(policy: &ReconnectPolicy, failures: u32) -> Duration {
-    let exp = failures.saturating_sub(1).min(16);
-    let s = policy.backoff_s * (1u64 << exp) as f64;
-    Duration::from_secs_f64(s).min(MAX_BACKOFF)
 }
 
 enum HandshakeEnd {

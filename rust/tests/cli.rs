@@ -283,13 +283,108 @@ fn perf_smoke_writes_and_validates_bench_json() {
     let stdout = String::from_utf8_lossy(&out.stdout);
     assert!(stdout.contains("dense_ridge_k1"), "stdout: {stdout}");
     assert!(stdout.contains("sparse_logistic_k4"), "stdout: {stdout}");
+    // v2 schema: the sparse workloads also run at T=4 and the report
+    // names the dispatched kernel backend
+    assert!(stdout.contains("sparse_logistic_k4_t4"), "stdout: {stdout}");
     let json = std::fs::read_to_string(&path).unwrap();
-    assert!(json.contains("\"schema_version\": 1"));
+    assert!(json.contains("\"schema_version\": 2"));
     assert!(json.contains("\"profile\": \"smoke\""));
-    // the standalone validator accepts the file the run just wrote
+    assert!(json.contains("\"kernel_backend\""));
+    assert!(json.contains("\"threads\": 4"));
+    // the standalone validator accepts the file the run just wrote, and
+    // says out loud that no timing comparison happened without --baseline
     let check = bin().args(["perf", "--validate"]).arg(&path).output().unwrap();
     assert!(check.status.success(), "{}", String::from_utf8_lossy(&check.stderr));
-    assert!(String::from_utf8_lossy(&check.stdout).contains("valid BENCH schema"));
+    let check_out = String::from_utf8_lossy(&check.stdout);
+    assert!(check_out.contains("schema v2 OK"), "stdout: {check_out}");
+    assert!(check_out.contains("NOT compared"), "stdout: {check_out}");
+}
+
+/// The checked-in baseline, as shipped — gate tests derive candidates
+/// from it by string surgery so they always match the live schema.
+fn checked_in_baseline() -> String {
+    let path = concat!(env!("CARGO_MANIFEST_DIR"), "/benchmarks/BENCH_hotpath.json");
+    std::fs::read_to_string(path).expect("benchmarks/BENCH_hotpath.json must be checked in")
+}
+
+#[test]
+fn perf_gate_passes_a_candidate_matching_the_checked_in_baseline() {
+    let dir = tmpdir("perfgate_pass");
+    let baseline = dir.join("baseline.json");
+    let candidate = dir.join("candidate.json");
+    let delta = dir.join("delta.txt");
+    std::fs::write(&baseline, checked_in_baseline()).unwrap();
+    std::fs::write(&candidate, checked_in_baseline()).unwrap();
+    let out = bin()
+        .args(["perf", "--validate"])
+        .arg(&candidate)
+        .args(["--baseline"])
+        .arg(&baseline)
+        .args(["--tolerance", "0.5", "--delta"])
+        .arg(&delta)
+        .output()
+        .unwrap();
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    assert!(stdout.contains("PASS"), "stdout: {stdout}");
+    // the delta report artifact is written and lists what was checked
+    let report = std::fs::read_to_string(&delta).unwrap();
+    assert!(report.contains("steps_per_sec"), "delta: {report}");
+    assert!(report.contains("dense_ridge_k1"), "delta: {report}");
+}
+
+#[test]
+fn perf_gate_fails_a_deliberately_slowed_candidate() {
+    // The acceptance criterion for the gate: a slowed build must make
+    // `cocoa perf --validate --baseline` exit nonzero. The candidate is
+    // the checked-in baseline with every steps_per_sec cut to 400 —
+    // below the 0.5-tolerance floor of 500.
+    let dir = tmpdir("perfgate_fail");
+    let baseline = dir.join("baseline.json");
+    let candidate = dir.join("candidate.json");
+    let delta = dir.join("delta.txt");
+    let base = checked_in_baseline();
+    assert!(base.contains("\"steps_per_sec\": 1000.0"), "baseline shape changed; update this test");
+    std::fs::write(&baseline, &base).unwrap();
+    std::fs::write(&candidate, base.replace("\"steps_per_sec\": 1000.0", "\"steps_per_sec\": 400.0"))
+        .unwrap();
+    let out = bin()
+        .args(["perf", "--validate"])
+        .arg(&candidate)
+        .args(["--baseline"])
+        .arg(&baseline)
+        .args(["--tolerance", "0.5", "--delta"])
+        .arg(&delta)
+        .output()
+        .unwrap();
+    assert!(!out.status.success(), "a 2.5x slowdown must fail the gate");
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    let stderr = String::from_utf8_lossy(&out.stderr);
+    assert!(stdout.contains("FAIL"), "stdout: {stdout}");
+    assert!(stdout.contains("sparse_logistic_k4_t4"), "every workload regressed: {stdout}");
+    assert!(stderr.contains("perf gate failed"), "stderr: {stderr}");
+    // the delta artifact records the failure for CI upload
+    let report = std::fs::read_to_string(&delta).unwrap();
+    assert!(report.contains("FAIL"), "delta: {report}");
+}
+
+#[test]
+fn perf_gate_self_test_tolerance_fails_a_self_comparison() {
+    // ci.sh's self-test in miniature: tolerance -1 demands >= 2x the
+    // file's own throughput, so comparing a report against itself must
+    // exit nonzero. If this ever passes, the gate is not gating.
+    let dir = tmpdir("perfgate_selftest");
+    let path = dir.join("report.json");
+    std::fs::write(&path, checked_in_baseline()).unwrap();
+    let out = bin()
+        .args(["perf", "--validate"])
+        .arg(&path)
+        .args(["--baseline"])
+        .arg(&path)
+        .args(["--tolerance", "-1"])
+        .output()
+        .unwrap();
+    assert!(!out.status.success(), "an impossible tolerance must fail");
 }
 
 #[test]

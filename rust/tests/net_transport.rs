@@ -15,7 +15,7 @@ use std::time::Duration;
 
 use cocoa::algorithms::Cocoa;
 use cocoa::config::{
-    AlgorithmSpec, Backend, DatasetSpec, ExperimentConfig, PartitionSpec, RunSpec,
+    AlgorithmSpec, Backend, DatasetSpec, ExperimentConfig, PartitionSpec, RunSpec, RuntimeSpec,
 };
 use cocoa::data::{cov_like, PartitionStrategy};
 use cocoa::driver::MaxRounds;
@@ -55,6 +55,7 @@ fn worker_cfg(k: usize, data_seed: u64, listen: &str) -> ExperimentConfig {
             seed: SEED,
             backend: Backend::Native,
         },
+        runtime: RuntimeSpec::default(),
         netsim: NetworkModel::free(),
         transport: TransportKind::Net(NetConfig::new(listen)),
         artifacts_dir: "artifacts".into(),

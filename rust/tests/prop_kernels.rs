@@ -287,6 +287,219 @@ fn block_caches_match_their_definitions() {
     assert_eq!(touched, &union[..]);
 }
 
+/// Values chosen to stress floating-point edge behavior: subnormals
+/// (where a fused-multiply-add or a flush-to-zero backend would diverge
+/// from the scalar reference), signed zeros, huge and tiny magnitudes.
+fn adversarial_values(rng: &mut Rng, n: usize) -> Vec<f64> {
+    const POOL: [f64; 10] = [
+        5e-324,                 // smallest positive subnormal
+        1e-310,                 // subnormal
+        -1e-310,                // negative subnormal
+        2.2250738585072014e-308, // smallest positive normal
+        1e308,
+        -1e-16,
+        0.0,
+        -0.0,
+        1.0,
+        -3.5,
+    ];
+    (0..n)
+        .map(|_| {
+            if rng.gen_bool(0.5) {
+                POOL[rng.gen_range(POOL.len())]
+            } else {
+                rng.normal() * 2.0
+            }
+        })
+        .collect()
+}
+
+/// Lengths chosen to exercise every remainder class of an 8-lane (AVX2)
+/// and 2-lane (NEON) vector body: empty, sub-width, one-past-width,
+/// len % 8 in 1..=7, and larger blocks.
+const ADVERSARIAL_LENS: [usize; 14] = [0, 1, 2, 3, 4, 5, 7, 8, 9, 15, 16, 17, 31, 33];
+
+#[test]
+fn dispatched_dense_kernels_bit_match_scalar_on_adversarial_shapes() {
+    // `kernels::dense_dot` / `dense_axpy` go through the runtime-detected
+    // backend (AVX2/NEON when available); `kernels::scalar::*` is the
+    // bit-exactness ground truth. Any lane-order, FMA, or tail-handling
+    // divergence in a SIMD path shows up here.
+    let mut rng = Rng::seed_from_u64(0x51d0);
+    for &d in &ADVERSARIAL_LENS {
+        for trial in 0..40 {
+            let a = adversarial_values(&mut rng, d);
+            let b = adversarial_values(&mut rng, d);
+            let got = kernels::dense_dot(&a, &b);
+            let want = kernels::scalar::dense_dot(&a, &b);
+            assert_eq!(
+                got.to_bits(),
+                want.to_bits(),
+                "dense_dot diverged from scalar (d={d} trial={trial}): {got:e} != {want:e}"
+            );
+
+            let coef = if trial % 3 == 0 { 1e-310 } else { rng.normal() };
+            let mut got_out = adversarial_values(&mut rng, d);
+            let mut want_out = got_out.clone();
+            kernels::dense_axpy(coef, &a, &mut got_out);
+            kernels::scalar::dense_axpy(coef, &a, &mut want_out);
+            for (j, (x, y)) in got_out.iter().zip(&want_out).enumerate() {
+                assert_eq!(
+                    x.to_bits(),
+                    y.to_bits(),
+                    "dense_axpy diverged from scalar (d={d} trial={trial} col={j})"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn dispatched_sparse_kernels_bit_match_scalar_on_adversarial_shapes() {
+    // Empty rows (nnz = 0), every gather-width remainder, and subnormal
+    // values, against the unchecked scalar reference (bounds are valid
+    // by construction: indices come from random_indices into [0, d)).
+    let mut rng = Rng::seed_from_u64(0x5a55);
+    for &nnz_target in &ADVERSARIAL_LENS {
+        for trial in 0..40 {
+            let d = nnz_target.max(1) + rng.gen_range(16);
+            let nnz = nnz_target.min(d);
+            let idx = random_indices(&mut rng, d, nnz);
+            let val = adversarial_values(&mut rng, nnz);
+            let w = adversarial_values(&mut rng, d);
+            let got = kernels::sparse_dot(&idx, &val, &w);
+            let want = unsafe { kernels::scalar::sparse_dot_unchecked(&idx, &val, &w) };
+            assert_eq!(
+                got.to_bits(),
+                want.to_bits(),
+                "sparse_dot diverged from scalar (nnz={nnz} d={d} trial={trial})"
+            );
+
+            let coef = rng.normal();
+            let mut got_out = adversarial_values(&mut rng, d);
+            let mut want_out = got_out.clone();
+            kernels::sparse_axpy(&idx, &val, coef, &mut got_out);
+            unsafe { kernels::scalar::sparse_axpy_unchecked(&idx, &val, coef, &mut want_out) };
+            for (j, (x, y)) in got_out.iter().zip(&want_out).enumerate() {
+                assert_eq!(
+                    x.to_bits(),
+                    y.to_bits(),
+                    "sparse_axpy diverged from scalar (nnz={nnz} d={d} trial={trial} col={j})"
+                );
+            }
+
+            let got_n = kernels::sparse_norm_sq(&val);
+            let want_n = kernels::scalar::sparse_norm_sq(&val);
+            assert_eq!(got_n.to_bits(), want_n.to_bits(), "sparse_norm_sq diverged");
+        }
+    }
+}
+
+#[test]
+fn threaded_local_update_is_deterministic_and_matches_its_sequential_schedule() {
+    // The deterministic-per-T contract at the solver level: for each T,
+    // two runs from the same RNG state are bit-identical, and the
+    // scoped-thread execution is bit-identical to the same schedule
+    // replayed sequentially on one thread (so OS scheduling can never
+    // leak into a trajectory). T=1 must reproduce the legacy solver.
+    let mut seed_rng = Rng::seed_from_u64(0x7eaded);
+    for trial in 0..4 {
+        let n = 24 + seed_rng.gen_range(40);
+        let d = 12 + seed_rng.gen_range(50);
+        let data = random_sparse_dataset(&mut seed_rng, n, d);
+        let block = Block::new(data, 0.05 * n as f64);
+        let alpha = vec![0.0; n];
+        let w: Vec<f64> = (0..d).map(|j| (j as f64 * 0.7).cos() * 0.2).collect();
+        let h = 4 * n;
+        for t in [1usize, 2, 4] {
+            let solver = LocalSdca::new(Sampling::WithReplacement).with_threads(t);
+            let mut rng_a = Rng::seed_from_u64(trial * 101 + 13);
+            let mut rng_b = rng_a.clone();
+            let mut rng_c = rng_a.clone();
+            let up_a = solver.local_update(&block, &SmoothedHinge::new(0.5), &alpha, &w, h, &mut rng_a);
+            let up_b = solver.local_update(&block, &SmoothedHinge::new(0.5), &alpha, &w, h, &mut rng_b);
+            let up_seq = solver.local_update_sequential_schedule(
+                &block, &SmoothedHinge::new(0.5), &alpha, &w, h, &mut rng_c,
+            );
+            for (which, other) in [("repeat run", &up_b), ("sequential schedule", &up_seq)] {
+                for (a, b) in up_a.dalpha.iter().zip(&other.dalpha) {
+                    assert_eq!(a.to_bits(), b.to_bits(), "T={t}: dalpha diverged vs {which}");
+                }
+                for (a, b) in up_a.dw.iter().zip(&other.dw) {
+                    assert_eq!(a.to_bits(), b.to_bits(), "T={t}: dw diverged vs {which}");
+                }
+            }
+            // the RNG must advance identically regardless of execution mode
+            assert_eq!(rng_a.next_u64(), rng_b.next_u64(), "T={t}: RNG stream diverged");
+            if t == 1 {
+                // T=1 is the legacy sequential path, bit for bit
+                let legacy = LocalSdca::new(Sampling::WithReplacement);
+                let mut rng_d = Rng::seed_from_u64(trial * 101 + 13);
+                let up_legacy =
+                    legacy.local_update(&block, &SmoothedHinge::new(0.5), &alpha, &w, h, &mut rng_d);
+                for (a, b) in up_a.dalpha.iter().zip(&up_legacy.dalpha) {
+                    assert_eq!(a.to_bits(), b.to_bits(), "T=1 diverged from the legacy solver");
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn threaded_sessions_produce_bit_identical_traces_per_thread_count() {
+    // Session-level determinism: for each T, two full training runs with
+    // the same seed produce bit-identical TraceRow streams and final w.
+    // The T=1 session must also match a session that never called
+    // `.threads()` at all (the pre-threading builder path).
+    use cocoa::algorithms::{Budget, Cocoa};
+    use cocoa::api::Trainer;
+    use cocoa::data::cov_like;
+    use cocoa::loss::LossKind;
+
+    let data = cov_like(160, 12, 0.1, 9);
+    let run = |threads: Option<usize>| {
+        let mut b = Trainer::on(&data)
+            .workers(2)
+            .loss(LossKind::SmoothedHinge { gamma: 1.0 })
+            .lambda(0.05)
+            .seed(7)
+            .label("prop_threads");
+        if let Some(t) = threads {
+            b = b.threads(t);
+        }
+        let mut session = b.build().unwrap();
+        let trace = session.run(&mut Cocoa::new(80), Budget::rounds(6)).unwrap();
+        let w = session.w().to_vec();
+        session.shutdown();
+        (trace, w)
+    };
+
+    let (base_trace, base_w) = run(None);
+    for t in [1usize, 2, 4] {
+        let (t1, w1) = run(Some(t));
+        let (t2, w2) = run(Some(t));
+        assert_eq!(t1.rows.len(), t2.rows.len(), "T={t}: trace lengths diverged");
+        for (ra, rb) in t1.rows.iter().zip(&t2.rows) {
+            assert_eq!(ra.primal.to_bits(), rb.primal.to_bits(), "T={t}: primal diverged");
+            assert_eq!(ra.dual.to_bits(), rb.dual.to_bits(), "T={t}: dual diverged");
+            assert_eq!(ra.gap.to_bits(), rb.gap.to_bits(), "T={t}: gap diverged");
+            assert_eq!(ra.inner_steps, rb.inner_steps, "T={t}: inner_steps diverged");
+        }
+        for (a, b) in w1.iter().zip(&w2) {
+            assert_eq!(a.to_bits(), b.to_bits(), "T={t}: final w diverged between runs");
+        }
+        if t == 1 {
+            // one thread == the builder default == the legacy path
+            for (ra, rb) in t1.rows.iter().zip(&base_trace.rows) {
+                assert_eq!(ra.gap.to_bits(), rb.gap.to_bits(), "T=1 diverged from default");
+            }
+            for (a, b) in w1.iter().zip(&base_w) {
+                assert_eq!(a.to_bits(), b.to_bits(), "T=1 final w diverged from default");
+            }
+        }
+    }
+}
+
 #[test]
 fn csr_rows_are_duplicate_free_and_sorted() {
     let mut rng = Rng::seed_from_u64(0xc52);
