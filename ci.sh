@@ -73,7 +73,12 @@ run_determinism_gate "driver_jsonl" driver_equivalence seeded_driver_jsonl_artif
 # socket, sharing one config. Gates the socket transport end-to-end —
 # versioned handshake, framed wire traffic, clean shutdown — and the
 # gap-target stop proves actual optimization happened across processes.
-step "multi-process smoke (cocoa leader + 2 workers over UDS)"
+# The leader also runs with full observability on: --trace-out streams
+# round-phase spans as JSONL (left under target/determinism/ so CI
+# uploads it), and --metrics serves live Prometheus text that a
+# background scraper polls MID-RUN over bash's /dev/tcp — no curl
+# needed — asserting a well-formed, non-empty exposition.
+step "multi-process smoke (cocoa leader + 2 workers over UDS, live /metrics)"
 cat > "$SCRATCH/net_smoke.toml" <<'EOF'
 lambda = 0.01
 
@@ -101,19 +106,52 @@ target_gap = 1e-3
 kind = "net"
 EOF
 NET_SOCK="$SCRATCH/net_smoke.sock"
+METRICS_PORT=$(( 20000 + ($$ % 20000) ))
+SPANS="target/determinism/net_smoke_spans.jsonl"
+mkdir -p target/determinism
+rm -f "$SPANS"
 ./target/release/cocoa worker --config "$SCRATCH/net_smoke.toml" \
     --connect "uds:$NET_SOCK" --attempts 40 --backoff-s 0.25 &
 W1=$!
 ./target/release/cocoa worker --config "$SCRATCH/net_smoke.toml" \
     --connect "uds:$NET_SOCK" --attempts 40 --backoff-s 0.25 &
 W2=$!
+# Mid-run scraper: retry GET /metrics until a body carrying per-slot
+# solve analytics lands (present from round 1 on; the endpoint stays up
+# until the leader exits, so only startup is raced).
+(
+    for _ in $(seq 1 400); do
+        if { exec 3<>"/dev/tcp/127.0.0.1/$METRICS_PORT"; } 2>/dev/null; then
+            printf 'GET /metrics HTTP/1.0\r\n\r\n' >&3
+            cat <&3 > "$SCRATCH/metrics_scrape.http"
+            exec 3>&- 3<&-
+            if grep -q '^cocoa_solve_seconds_count{' "$SCRATCH/metrics_scrape.http"; then
+                exit 0
+            fi
+        fi
+        sleep 0.05
+    done
+    exit 1
+) &
+SCRAPER=$!
 ./target/release/cocoa leader --config "$SCRATCH/net_smoke.toml" \
     --listen "uds:$NET_SOCK" --workers 2 --out "$SCRATCH/net_smoke.csv" \
+    --trace-out "$SPANS" --metrics "tcp:127.0.0.1:$METRICS_PORT" \
     > "$SCRATCH/net_smoke.out"
 wait "$W1" "$W2"   # set -e: nonzero worker exit fails the gate
+wait "$SCRAPER"    # the mid-run scrape must have landed a metrics body
 grep -q "stop=gap" "$SCRATCH/net_smoke.out"
 grep -q "socket: sent" "$SCRATCH/net_smoke.out"
-printf 'net smoke: leader + 2 workers reached the gap target over UDS\n'
+# the captured scrape is a complete, well-formed Prometheus exposition
+grep -q 'HTTP/1.0 200 OK' "$SCRATCH/metrics_scrape.http"
+grep -q '^cocoa_rounds_total ' "$SCRATCH/metrics_scrape.http"
+grep -q '^cocoa_phase_seconds_total{phase="local_solve"}' "$SCRATCH/metrics_scrape.http"
+grep -q '^cocoa_solve_imbalance_ratio ' "$SCRATCH/metrics_scrape.http"
+# the span stream exists, is non-empty, and carries per-slot solve spans
+test -s "$SPANS"
+grep -q '"phase": "local_solve"' "$SPANS"
+grep -q '"phase": "commit"' "$SPANS"
+printf 'net smoke: gap target reached over UDS; /metrics scraped mid-run; spans -> %s\n' "$SPANS"
 
 # Perf smoke: run the tiny-profile workloads and validate BENCH_hotpath.json
 # structurally (fields present, numbers finite, monotone round times).

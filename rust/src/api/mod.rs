@@ -488,6 +488,28 @@ impl Session {
         self.cluster.socket_stats()
     }
 
+    /// Enable/disable round-phase span recording (off by default). A pure
+    /// observer toggle — trajectories are bit-identical either way; turn
+    /// it on when attaching a [`SpanSink`](crate::obs::SpanSink) or
+    /// serving [`MetricsHub`](crate::obs::MetricsHub) so per-phase
+    /// timings flow.
+    pub fn set_tracing(&mut self, on: bool) {
+        self.cluster.set_tracing(on);
+    }
+
+    /// Is round-phase span recording enabled?
+    pub fn tracing(&self) -> bool {
+        self.cluster.tracing()
+    }
+
+    /// Max peak RSS any worker has reported so far (0 before the first
+    /// round, or where procfs is unavailable). Combine with the leader's
+    /// own [`peak_rss_bytes`](crate::telemetry::peak_rss_bytes) for the
+    /// run-wide max.
+    pub fn max_worker_rss(&self) -> u64 {
+        self.cluster.max_worker_rss()
+    }
+
     /// Low-level escape hatch: dispatch one round of hand-chosen
     /// [`LocalWork`] (instrumentation, custom drivers, tests). Prefer
     /// [`Session::run`] with an [`Algorithm`].

@@ -97,6 +97,28 @@ pub struct EvalReply {
     pub has_dual: bool,
 }
 
+/// Worker -> leader: the per-round observability block, sent right after
+/// every [`RoundReply`]. Pure instrumentation — it is never folded into
+/// the model, never charged as algorithm communication, and dropping it
+/// on the floor cannot change a trajectory.
+#[derive(Debug, Clone, Copy)]
+pub struct WorkerMetrics {
+    pub worker: usize,
+    pub round: u64,
+    /// Wall-clock seconds of the local solve (includes any offload).
+    pub solve_wall_s: f64,
+    /// Thread CPU seconds of the local solve.
+    pub solve_cpu_s: f64,
+    /// Inner steps actually executed this round.
+    pub inner_steps: u64,
+    /// Worker-process peak RSS, via
+    /// [`peak_rss_bytes`](crate::telemetry::peak_rss_bytes); 0 where
+    /// procfs is missing.
+    pub peak_rss_bytes: u64,
+    /// Total reconnects this worker performed (net transport; 0 in-proc).
+    pub reconnects: u64,
+}
+
 /// Worker -> leader envelope. `Clone` so the transport layer's
 /// [`Record`](crate::transport::Record) backend can tape replies for
 /// deterministic replay.
@@ -107,4 +129,6 @@ pub enum ToLeader {
     State(super::checkpoint::WorkerState),
     /// A worker hit an unrecoverable error (e.g. PJRT failure).
     Fatal { worker: usize, message: String },
+    /// The per-round observability block (always follows a `Round`).
+    Metrics(WorkerMetrics),
 }

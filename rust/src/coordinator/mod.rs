@@ -26,7 +26,7 @@ pub mod messages;
 pub(crate) mod worker;
 
 pub use checkpoint::{Checkpoint, WorkerState};
-pub use messages::{EvalReply, LocalWork, RoundReply, ToLeader, ToWorker};
+pub use messages::{EvalReply, LocalWork, RoundReply, ToLeader, ToWorker, WorkerMetrics};
 pub use worker::WorkerConfig;
 
 use std::sync::mpsc::channel;
@@ -38,6 +38,7 @@ use crate::data::{Dataset, Partition};
 use crate::loss::LossKind;
 use crate::netsim::{NetworkModel, StragglerModel};
 use crate::objective;
+use crate::obs::{Phase, Recorder, RoundObs, Span};
 use crate::regularizers::{l1_norm, Regularizer, RegularizerKind};
 use crate::runtime;
 use crate::solvers::{Block, SolverKind};
@@ -159,6 +160,20 @@ pub struct Cluster {
     /// objective formula and solver constant uses (== `lambda` for L2).
     lambda_eff: f64,
     round_counter: u64,
+    /// The observability seam: disabled (default) it never samples a
+    /// clock; enabled it records per-phase [`Span`]s the driver drains
+    /// once per round via [`Cluster::take_round_obs`]. Pure observation —
+    /// trajectories are bit-identical either way.
+    recorder: Recorder,
+    /// The metrics blocks gathered by the most recent dispatch, in slot
+    /// order (drained by [`Cluster::take_round_obs`]).
+    round_workers: Vec<WorkerMetrics>,
+    /// Max `peak_rss_bytes` any worker has reported so far.
+    max_worker_rss: u64,
+    /// Cumulative lost-peer recoveries ([`Cluster::recover`] calls).
+    obs_timeouts: u64,
+    /// Cumulative connections healed across those recoveries.
+    obs_heals: u64,
     /// Keeps the PJRT engine (and its compiled executables) alive.
     _engine: Option<runtime::Engine>,
 }
@@ -238,6 +253,11 @@ impl Cluster {
                 lambda,
                 lambda_eff,
                 round_counter: 0,
+                recorder: Recorder::default(),
+                round_workers: Vec::new(),
+                max_worker_rss: 0,
+                obs_timeouts: 0,
+                obs_heals: 0,
                 _engine: None,
             });
         }
@@ -322,6 +342,11 @@ impl Cluster {
             lambda,
             lambda_eff,
             round_counter: 0,
+            recorder: Recorder::default(),
+            round_workers: Vec::new(),
+            max_worker_rss: 0,
+            obs_timeouts: 0,
+            obs_heals: 0,
             _engine: engine,
         })
     }
@@ -355,6 +380,11 @@ impl Cluster {
         self.stats = CommStats::default();
         self.last_stop = StopReason::default();
         self.round_counter = 0;
+        let _ = self.recorder.drain();
+        self.round_workers.clear();
+        self.max_worker_rss = 0;
+        self.obs_timeouts = 0;
+        self.obs_heals = 0;
         Ok(())
     }
 
@@ -368,14 +398,21 @@ impl Cluster {
     pub fn dispatch(&mut self, work_for: impl Fn(usize) -> LocalWork) -> Result<Vec<RoundReply>> {
         self.round_counter += 1;
         let round = self.round_counter;
+        let t_bcast = self.recorder.start();
         let w_shared = std::sync::Arc::new(self.w.clone());
         for kid in 0..self.k {
             self.transport
                 .send(kid, ToWorker::Round { round, w: w_shared.clone(), work: work_for(kid) })?;
         }
+        self.recorder.finish(t_bcast, round, Phase::Broadcast);
+        // the gather barrier: every worker sends its Round reply chased by
+        // its Metrics block, so one round drains exactly K of each
+        let t_reduce = self.recorder.start();
         let mut replies: Vec<Option<RoundReply>> = vec![None; self.k];
+        let mut metrics: Vec<Option<WorkerMetrics>> = vec![None; self.k];
         let mut got = 0;
-        while got < self.k {
+        let mut got_m = 0;
+        while got < self.k || got_m < self.k {
             match self.transport.recv()? {
                 ToLeader::Round(r) if r.round == round => {
                     let slot = &mut replies[r.worker];
@@ -387,6 +424,16 @@ impl Cluster {
                 ToLeader::Round(r) => {
                     return Err(anyhow!("stale round reply {} from worker {}", r.round, r.worker))
                 }
+                // instrumentation must never take a run down: anything
+                // stale or out of range is dropped on the floor
+                ToLeader::Metrics(m) if m.round == round && m.worker < self.k => {
+                    let slot = &mut metrics[m.worker];
+                    if slot.is_none() {
+                        got_m += 1;
+                    }
+                    *slot = Some(m);
+                }
+                ToLeader::Metrics(_) => {}
                 ToLeader::Eval(_) | ToLeader::State(_) => {
                     return Err(anyhow!("unexpected reply during round"))
                 }
@@ -396,6 +443,17 @@ impl Cluster {
             }
         }
         let replies: Vec<RoundReply> = replies.into_iter().map(Option::unwrap).collect();
+        self.round_workers = metrics.into_iter().map(Option::unwrap).collect();
+        for m in &self.round_workers {
+            self.max_worker_rss = self.max_worker_rss.max(m.peak_rss_bytes);
+            self.recorder.push(Span {
+                round,
+                phase: Phase::LocalSolve,
+                slot: Some(m.worker),
+                wall_s: m.solve_wall_s,
+                cpu_s: m.solve_cpu_s,
+            });
+        }
 
         let computes: Vec<f64> = replies.iter().map(|r| r.compute_s).collect();
         let max_compute = self.stragglers.barrier_compute(round, &computes);
@@ -414,6 +472,7 @@ impl Cluster {
             }
             None => self.net.round_time(max_compute + injected_s, vectors as usize, self.d),
         };
+        self.recorder.finish(t_reduce, round, Phase::Reduce);
         Ok(replies)
     }
 
@@ -426,6 +485,7 @@ impl Cluster {
     /// `stats.bytes_measured` always equals the ledger's algorithm bytes
     /// at round boundaries.
     pub fn commit(&mut self, replies: &[RoundReply], scale: f64) -> Result<()> {
+        let t_commit = self.recorder.start();
         for reply in replies {
             for (vv, dv) in self.v.iter_mut().zip(&reply.dw) {
                 *vv += scale * dv;
@@ -441,6 +501,7 @@ impl Cluster {
             // per-round fixed latency was already charged at dispatch
             self.stats.sim_time_s += self.net.transfer_time_bytes(bytes);
         }
+        self.recorder.finish(t_commit, self.round_counter, Phase::Commit);
         Ok(())
     }
 
@@ -461,6 +522,7 @@ impl Cluster {
     /// floating-point reduction is deterministic regardless of arrival
     /// interleaving — transports and warm-started runs stay bit-identical.
     pub fn evaluate(&mut self) -> Result<Evaluation> {
+        let t_eval = self.recorder.start();
         let w_shared = std::sync::Arc::new(self.w.clone());
         for kid in 0..self.k {
             self.transport.send(kid, ToWorker::Eval { w: w_shared.clone() })?;
@@ -476,6 +538,8 @@ impl Cluster {
                     }
                     *slot = Some(e);
                 }
+                // a straggling metrics block is instrumentation: drop it
+                ToLeader::Metrics(_) => {}
                 ToLeader::Round(_) | ToLeader::State(_) => {
                     return Err(anyhow!("unexpected reply during eval"))
                 }
@@ -513,6 +577,7 @@ impl Cluster {
         } else {
             f64::NAN
         };
+        self.recorder.finish(t_eval, self.round_counter, Phase::Evaluate);
         Ok(Evaluation { primal, dual, gap: primal - dual })
     }
 
@@ -609,6 +674,10 @@ impl Cluster {
             ));
         }
         let healed = self.transport.heal()?;
+        // every recovery was forced by a lost or timed-out peer; both
+        // counters are cumulative run-level observability
+        self.obs_timeouts += 1;
+        self.obs_heals += healed as u64;
         for ws in &cp.workers {
             self.transport.send(ws.id, ToWorker::SetState(ws.clone()))?;
             self.transport.send(ws.id, ToWorker::GetState)?;
@@ -624,7 +693,7 @@ impl Cluster {
                     }
                 }
                 // stale replies from the aborted round: drain and drop
-                ToLeader::Round(_) | ToLeader::Eval(_) => {}
+                ToLeader::Round(_) | ToLeader::Eval(_) | ToLeader::Metrics(_) => {}
                 ToLeader::State(ws) => {
                     return Err(anyhow!("state reply from unknown worker {}", ws.id))
                 }
@@ -694,6 +763,43 @@ impl Cluster {
     /// and read from worker connections, including framing and handshakes.
     pub fn socket_stats(&self) -> Option<crate::transport::SocketStats> {
         self.transport.socket_stats()
+    }
+
+    /// Enable/disable round-phase span recording (off by default). A pure
+    /// observer toggle: trajectories, byte counts, and sim time are
+    /// bit-identical either way (asserted by `tests/observability.rs`).
+    pub fn set_tracing(&mut self, on: bool) {
+        self.recorder.set_enabled(on);
+    }
+
+    /// Is span recording enabled?
+    pub fn tracing(&self) -> bool {
+        self.recorder.enabled()
+    }
+
+    /// Max `peak_rss_bytes` any worker has reported so far (0 until the
+    /// first round completes, or where procfs is unavailable).
+    pub fn max_worker_rss(&self) -> u64 {
+        self.max_worker_rss
+    }
+
+    /// Drain everything observed about the round just completed: recorded
+    /// spans (empty unless [`Cluster::set_tracing`]), the K worker metrics
+    /// blocks, and cumulative ledger/socket/failure snapshots. The driver
+    /// calls this once per round and fans it out to observers.
+    pub fn take_round_obs(&mut self) -> RoundObs {
+        let spans = self.recorder.drain();
+        let workers = std::mem::take(&mut self.round_workers);
+        RoundObs {
+            round: self.round_counter,
+            spans,
+            workers,
+            ledger: self.ledger().copied(),
+            socket: self.socket_stats(),
+            timeouts: self.obs_timeouts,
+            heals: self.obs_heals,
+            max_worker_rss: self.max_worker_rss,
+        }
     }
 
     pub fn shutdown(mut self) {
@@ -915,6 +1021,47 @@ mod tests {
         let ev = cluster.evaluate().unwrap();
         assert!(ev.gap >= -1e-10, "regularized gap {} negative", ev.gap);
         assert!(ev.primal.is_finite() && ev.dual.is_finite());
+        cluster.shutdown();
+    }
+
+    #[test]
+    fn dispatch_gathers_worker_metrics_and_solve_spans() {
+        let (mut cluster, _) = small_cluster(3);
+        cluster.set_tracing(true);
+        let replies = cluster.dispatch(|_| LocalWork::DualRound { h: 10 }).unwrap();
+        cluster.commit(&replies, 1.0 / 3.0).unwrap();
+        let obs = cluster.take_round_obs();
+        assert_eq!(obs.round, 1);
+        assert_eq!(obs.workers.len(), 3);
+        for (slot, m) in obs.workers.iter().enumerate() {
+            assert_eq!(m.worker, slot);
+            assert_eq!(m.round, 1);
+            assert_eq!(m.inner_steps, 10);
+            assert!(m.solve_wall_s >= 0.0 && m.solve_cpu_s >= 0.0);
+        }
+        // spans: broadcast + 3 local_solve + reduce + commit
+        let count = |p: Phase| obs.spans.iter().filter(|s| s.phase == p).count();
+        assert_eq!(count(Phase::Broadcast), 1);
+        assert_eq!(count(Phase::LocalSolve), 3);
+        assert_eq!(count(Phase::Reduce), 1);
+        assert_eq!(count(Phase::Commit), 1);
+        assert_eq!(obs.spans.len(), 6);
+        // the drain took everything
+        let again = cluster.take_round_obs();
+        assert!(again.spans.is_empty() && again.workers.is_empty());
+        cluster.shutdown();
+    }
+
+    #[test]
+    fn metrics_flow_is_always_on_and_tracing_is_opt_in() {
+        let (mut cluster, _) = small_cluster(2);
+        assert!(!cluster.tracing());
+        let replies = cluster.dispatch(|_| LocalWork::DualRound { h: 5 }).unwrap();
+        cluster.commit(&replies, 0.5).unwrap();
+        let obs = cluster.take_round_obs();
+        assert_eq!(obs.workers.len(), 2, "metrics blocks flow even with tracing off");
+        assert!(obs.spans.is_empty(), "spans recorded while tracing disabled");
+        assert!(obs.workers.iter().all(|m| m.reconnects == 0));
         cluster.shutdown();
     }
 

@@ -17,13 +17,13 @@
 use std::sync::mpsc::{Receiver, Sender};
 
 use super::checkpoint::WorkerState as CheckpointState;
-use super::messages::{EvalReply, LocalWork, RoundReply, ToLeader, ToWorker};
+use super::messages::{EvalReply, LocalWork, RoundReply, ToLeader, ToWorker, WorkerMetrics};
 use crate::data::Features;
 use crate::kernels;
 use crate::loss::Loss;
 use crate::objective;
 use crate::solvers::{Block, ExactBlockSolver, LocalDualMethod, LocalSdca, PegasosEpoch, Sampling};
-use crate::telemetry::thread_cpu_time_s;
+use crate::telemetry::{peak_rss_bytes, thread_cpu_time_s};
 use crate::util::Rng;
 
 pub struct WorkerConfig {
@@ -46,6 +46,14 @@ pub(crate) enum CoreStep {
     Continue,
     /// Send this reply and keep serving.
     Reply(ToLeader),
+    /// Send the round reply, then its observability block, in that order.
+    /// Two messages so the algorithm payload and the instrumentation stay
+    /// separate frames on the wire (distinct [`MessageKind`]s in the
+    /// ledger), and a leader that predates metrics could simply drop the
+    /// second.
+    ///
+    /// [`MessageKind`]: crate::transport::MessageKind
+    ReplyWithMetrics(ToLeader, ToLeader),
     /// Send this [`ToLeader::Fatal`] and stop serving — worker state is
     /// no longer trustworthy.
     Fatal(ToLeader),
@@ -69,6 +77,10 @@ pub(crate) struct WorkerCore {
     // primal-only methods have no meaningful dual value to report.
     did_sgd: bool,
     rng: Rng,
+    /// Lifetime reconnect count, reported in every metrics block. Always 0
+    /// in-process; the net worker loop bumps it across re-handshakes via
+    /// [`WorkerCore::set_reconnects`].
+    reconnects: u64,
 }
 
 impl WorkerCore {
@@ -88,7 +100,14 @@ impl WorkerCore {
             pending: None,
             did_sgd: false,
             rng: Rng::seed_from_u64(seed),
+            reconnects: 0,
         }
+    }
+
+    /// Carry a running reconnect total into a freshly constructed core
+    /// (the net worker rebuilds its core on every successful reconnect).
+    pub(crate) fn set_reconnects(&mut self, reconnects: u64) {
+        self.reconnects = reconnects;
     }
 
     pub(crate) fn handle(&mut self, msg: ToWorker) -> CoreStep {
@@ -156,21 +175,31 @@ impl WorkerCore {
                         message: "round dispatched with uncommitted dual update".into(),
                     });
                 }
+                let wall0 = std::time::Instant::now();
                 let t0 = thread_cpu_time_s();
                 let (dw, steps, offloaded, dalpha) = self.run_round(&w, work);
                 let compute_s = (thread_cpu_time_s() - t0) + offloaded;
+                let solve_wall_s = wall0.elapsed().as_secs_f64();
                 if let Some(d) = dalpha {
                     self.pending = Some(d);
                 } else {
                     self.did_sgd = true;
                 }
-                CoreStep::Reply(ToLeader::Round(RoundReply {
-                    worker: self.id,
-                    round,
-                    dw,
-                    compute_s,
-                    steps,
-                }))
+                // Every round reply is chased by its observability block:
+                // the protocol is identical whether or not anyone listens,
+                // so instrumentation can never perturb a trajectory.
+                CoreStep::ReplyWithMetrics(
+                    ToLeader::Round(RoundReply { worker: self.id, round, dw, compute_s, steps }),
+                    ToLeader::Metrics(WorkerMetrics {
+                        worker: self.id,
+                        round,
+                        solve_wall_s,
+                        solve_cpu_s: compute_s,
+                        inner_steps: steps,
+                        peak_rss_bytes: peak_rss_bytes().unwrap_or(0),
+                        reconnects: self.reconnects,
+                    }),
+                )
             }
         }
     }
@@ -270,6 +299,10 @@ pub fn run_worker(cfg: WorkerConfig, rx: Receiver<ToWorker>, tx: Sender<ToLeader
             CoreStep::Continue => {}
             CoreStep::Reply(reply) => {
                 let _ = tx.send(reply);
+            }
+            CoreStep::ReplyWithMetrics(reply, metrics) => {
+                let _ = tx.send(reply);
+                let _ = tx.send(metrics);
             }
             CoreStep::Fatal(reply) => {
                 let _ = tx.send(reply);

@@ -60,6 +60,7 @@ use std::collections::VecDeque;
 use crate::algorithms::{validate_eval_every, Algorithm, Budget, RoundCtx};
 use crate::coordinator::{Cluster, Evaluation};
 use crate::error::{Error, Result};
+use crate::obs::RoundObs;
 use crate::telemetry::{json_escape, json_f64, StopReason, Trace, TraceRow};
 
 /// Identifying metadata of one driven run — what a [`Trace`] header
@@ -380,6 +381,7 @@ impl<'d> Driver<'d> {
             let ev = self.cluster.evaluate()?;
             let row = self.make_row(0, ev, StopReason::Running);
             self.notify(RoundEvent::Evaluated { row })?;
+            self.notify_round_obs()?;
             return Ok(self.queue.pop_front().expect("snapshot event queued"));
         }
         if self.round >= self.round_cap {
@@ -423,6 +425,9 @@ impl<'d> Driver<'d> {
                 self.notify(RoundEvent::Evaluated { row })?;
             }
         }
+        // the round is now fully observed (dispatch/commit/eval spans +
+        // worker metrics): drain it to the on_round_obs hooks
+        self.notify_round_obs()?;
         if let Some(r) = reason {
             // record the stop on the cluster *before* any cadence
             // checkpoint below, so a checkpoint captured on the final
@@ -468,6 +473,18 @@ impl<'d> Driver<'d> {
             obs.on_event(&self.meta, &event)?;
         }
         self.queue.push_back(event);
+        Ok(())
+    }
+
+    /// Drain the cluster's per-round observability and fan it out. Not a
+    /// [`RoundEvent`]: [`RoundObs`] is heavyweight telemetry, kept off the
+    /// `Copy` event stream and delivered through its own default-no-op
+    /// hook so existing observers are untouched.
+    fn notify_round_obs(&mut self) -> Result<()> {
+        let obs: RoundObs = self.cluster.take_round_obs();
+        for o in self.observers.iter_mut() {
+            o.on_round_obs(&self.meta, &obs)?;
+        }
         Ok(())
     }
 

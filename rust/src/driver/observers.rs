@@ -24,9 +24,11 @@
 
 use std::io::Write;
 use std::path::{Path, PathBuf};
+use std::time::{Duration, Instant};
 
 use crate::coordinator::Checkpoint;
 use crate::error::{Error, Result};
+use crate::obs::RoundObs;
 use crate::telemetry::Trace;
 
 use super::{RoundEvent, RunMeta};
@@ -51,6 +53,17 @@ pub trait Observer {
     /// event stream stays small and `Copy`).
     fn on_checkpoint(&mut self, meta: &RunMeta, checkpoint: &Checkpoint) -> Result<()> {
         let _ = (meta, checkpoint);
+        Ok(())
+    }
+
+    /// Called once per completed round (and once for the round-0
+    /// snapshot) with everything the cluster observed about it: phase
+    /// spans, per-worker metrics, ledger/socket snapshots. Default no-op,
+    /// so observers that only care about the event stream are untouched.
+    /// Consumed by [`SpanSink`](crate::obs::SpanSink) and
+    /// [`MetricsObserver`](crate::obs::MetricsObserver).
+    fn on_round_obs(&mut self, meta: &RunMeta, obs: &RoundObs) -> Result<()> {
+        let _ = (meta, obs);
         Ok(())
     }
 }
@@ -256,10 +269,31 @@ impl Observer for CheckpointSink {
     }
 }
 
+/// Render a byte count in human binary units: exact bytes below 1 KiB,
+/// one decimal above (`120 B`, `1.5 KiB`, `5.1 MiB`, `3.0 GiB`).
+fn human_bytes(bytes: u64) -> String {
+    const UNITS: [&str; 4] = ["B", "KiB", "MiB", "GiB"];
+    let mut value = bytes as f64;
+    let mut unit = 0;
+    while value >= 1024.0 && unit + 1 < UNITS.len() {
+        value /= 1024.0;
+        unit += 1;
+    }
+    if unit == 0 {
+        format!("{bytes} B")
+    } else {
+        format!("{value:.1} {}", UNITS[unit])
+    }
+}
+
 /// A live status line per evaluated round — algorithm, round, duality
 /// gap, communicated bytes (measured when a measuring transport is
-/// active, modeled otherwise), and simulated time — plus a final line
-/// naming the stop reason. What `cocoa train --progress` attaches.
+/// active, modeled otherwise) in human units, simulated time, and the
+/// run's rounds-per-simulated-second rate — plus a final line naming the
+/// stop reason. What `cocoa train --progress` attaches.
+///
+/// The rate is `round / sim_time_s` — derived from deterministic columns,
+/// so two seeded runs print bit-identical lines.
 pub struct ProgressLine<W: Write> {
     out: W,
 }
@@ -284,16 +318,24 @@ impl<W: Write> ProgressLine<W> {
 impl<W: Write> Observer for ProgressLine<W> {
     fn on_event(&mut self, meta: &RunMeta, event: &RoundEvent) -> Result<()> {
         match event {
-            RoundEvent::Evaluated { row } => writeln!(
-                self.out,
-                "{} round {:>6} | gap {:>10.3e} | {:>12} B | sim {:>9.3}s",
-                meta.algorithm,
-                row.round,
-                row.gap,
-                row.wire_bytes(),
-                row.sim_time_s
-            )
-            .map_err(io_err),
+            RoundEvent::Evaluated { row } => {
+                let rate = if row.sim_time_s > 0.0 {
+                    format!("{:.2}", row.round as f64 / row.sim_time_s)
+                } else {
+                    "-".to_string()
+                };
+                writeln!(
+                    self.out,
+                    "{} round {:>6} | gap {:>10.3e} | {:>10} | sim {:>9.3}s | {:>8} r/s",
+                    meta.algorithm,
+                    row.round,
+                    row.gap,
+                    human_bytes(row.wire_bytes()),
+                    row.sim_time_s,
+                    rate,
+                )
+                .map_err(io_err)
+            }
             RoundEvent::Stopped { reason } => {
                 writeln!(self.out, "{} stopped: {}", meta.algorithm, reason).map_err(io_err)
             }
@@ -303,10 +345,21 @@ impl<W: Write> Observer for ProgressLine<W> {
 }
 
 /// Records the raw event stream (tests assert ordering invariants on it;
-/// also handy for debugging a custom driver loop).
-#[derive(Default)]
+/// also handy for debugging a custom driver loop). Each event is stamped
+/// with a monotonic capture time ([`EventLog::timestamps`]), so a log can
+/// localize *when* in wall time a run's phases happened without any
+/// system-clock dependence.
 pub struct EventLog {
+    /// Monotonic origin every stamp is measured from (log creation).
+    origin: Instant,
     events: Vec<RoundEvent>,
+    stamps: Vec<Duration>,
+}
+
+impl Default for EventLog {
+    fn default() -> Self {
+        EventLog { origin: Instant::now(), events: Vec::new(), stamps: Vec::new() }
+    }
 }
 
 impl EventLog {
@@ -318,6 +371,13 @@ impl EventLog {
         &self.events
     }
 
+    /// Monotonic capture offsets from log creation, one per event, in
+    /// stream order — nondecreasing by construction ([`Instant`] can
+    /// never go backwards).
+    pub fn timestamps(&self) -> &[Duration] {
+        &self.stamps
+    }
+
     pub fn into_events(self) -> Vec<RoundEvent> {
         self.events
     }
@@ -326,6 +386,7 @@ impl EventLog {
 impl Observer for EventLog {
     fn on_event(&mut self, _meta: &RunMeta, event: &RoundEvent) -> Result<()> {
         self.events.push(*event);
+        self.stamps.push(self.origin.elapsed());
         Ok(())
     }
 }
@@ -416,16 +477,50 @@ mod tests {
     }
 
     #[test]
-    fn progress_line_prints_round_and_stop() {
+    fn human_bytes_picks_binary_units() {
+        for (bytes, expect) in [
+            (0, "0 B"),
+            (120, "120 B"),
+            (1023, "1023 B"),
+            (1024, "1.0 KiB"),
+            (1536, "1.5 KiB"),
+            (1_048_576, "1.0 MiB"),
+            (3_221_225_472, "3.0 GiB"),
+            // GiB is the largest unit: it absorbs anything bigger
+            (5_497_558_138_880, "5120.0 GiB"),
+        ] {
+            assert_eq!(human_bytes(bytes), expect, "{bytes}");
+        }
+    }
+
+    #[test]
+    fn progress_line_renders_exact_human_unit_lines() {
         let meta = meta();
         let mut sink = ProgressLine::new(Vec::new());
+        sink.on_event(&meta, &RoundEvent::Evaluated { row: row(0) }).unwrap();
         sink.on_event(&meta, &RoundEvent::Evaluated { row: row(3) }).unwrap();
+        let mut big = row(3);
+        big.bytes_measured = 153_600; // 150 KiB
+        sink.on_event(&meta, &RoundEvent::Evaluated { row: big }).unwrap();
         sink.on_event(&meta, &RoundEvent::Stopped { reason: StopReason::Gap }).unwrap();
         let text = String::from_utf8(sink.into_inner()).unwrap();
-        assert!(text.contains("cocoa round"), "{text}");
-        assert!(text.contains("| gap"), "{text}");
-        assert!(text.contains("120 B"), "{text}"); // measured (3*40) wins over modeled
-        assert!(text.contains("stopped: gap"), "{text}");
+        let lines: Vec<&str> = text.lines().collect();
+        // pinned exactly: these lines are the CLI's human surface, and
+        // every column is deterministic (the rate derives from round and
+        // simulated time, never a wall clock)
+        assert_eq!(
+            lines[0],
+            "cocoa round      0 | gap   5.000e-1 |        0 B | sim     0.000s |        - r/s"
+        );
+        assert_eq!(
+            lines[1],
+            "cocoa round      3 | gap   5.000e-1 |      120 B | sim     1.500s |     2.00 r/s"
+        );
+        assert_eq!(
+            lines[2],
+            "cocoa round      3 | gap   5.000e-1 |  150.0 KiB | sim     1.500s |     2.00 r/s"
+        );
+        assert_eq!(lines[3], "cocoa stopped: gap");
     }
 
     #[test]
@@ -437,6 +532,10 @@ mod tests {
         log.on_event(&meta, &RoundEvent::Stopped { reason: StopReason::MaxRounds }).unwrap();
         assert_eq!(log.events().len(), 3);
         assert!(matches!(log.events()[1], RoundEvent::RoundStarted { round: 1 }));
+        // one monotonic stamp per event, nondecreasing in stream order
+        let stamps = log.timestamps();
+        assert_eq!(stamps.len(), 3);
+        assert!(stamps.windows(2).all(|w| w[0] <= w[1]), "{stamps:?}");
         assert!(matches!(
             log.into_events().pop(),
             Some(RoundEvent::Stopped { reason: StopReason::MaxRounds })

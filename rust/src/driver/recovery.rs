@@ -270,6 +270,10 @@ mod tests {
                 CoreStep::Reply(reply) => {
                     write_frame(&mut sock, &wire::encode_to_leader(&reply)).unwrap()
                 }
+                CoreStep::ReplyWithMetrics(reply, metrics) => {
+                    write_frame(&mut sock, &wire::encode_to_leader(&reply)).unwrap();
+                    write_frame(&mut sock, &wire::encode_to_leader(&metrics)).unwrap();
+                }
                 CoreStep::Fatal(reply) => panic!("worker went fatal: {reply:?}"),
                 CoreStep::Shutdown => return,
             }

@@ -222,6 +222,12 @@
 //! * [`objective`] — primal/dual objectives and the duality-gap certificate.
 //! * [`netsim`] — the network cost model that turns counted communication
 //!   into simulated distributed wall-time.
+//! * [`obs`] — span-based observability for the live cluster: per-round
+//!   phase spans (`broadcast -> local_solve -> reduce -> commit ->
+//!   evaluate`) through a recorder seam that is provably passive, per-worker
+//!   metrics carried on their own non-algorithm wire message, log-bucketed
+//!   straggler histograms, a JSONL span sink (`--trace-out`), and a live
+//!   Prometheus `/metrics` endpoint (`cocoa leader --metrics`).
 //! * [`runtime`] — the PJRT backend: loads the AOT-compiled JAX/Pallas HLO
 //!   artifacts (built once by `make artifacts`) and serves them to workers
 //!   from a dedicated engine thread. Python never runs at training time.
@@ -244,6 +250,7 @@ pub mod kernels;
 pub mod loss;
 pub mod netsim;
 pub mod objective;
+pub mod obs;
 pub mod perf;
 pub mod regularizers;
 pub mod runtime;

@@ -16,8 +16,10 @@ use cocoa::driver::recovery::{run_with_recovery, RecoveryPolicy};
 use cocoa::driver::{IntoDriverSpec, Observer, ProgressLine};
 use cocoa::experiments::{self, figures, theory_val, Profile};
 use cocoa::objective;
+use cocoa::obs::{MetricsHub, MetricsServer, SpanSink};
 use cocoa::perf::{self, PerfProfile};
 use cocoa::regularizers::Regularizer;
+use cocoa::telemetry::peak_rss_bytes;
 use cocoa::transport::net::run_worker_process;
 use cocoa::transport::{NetConfig, ReconnectPolicy, TransportKind};
 
@@ -65,6 +67,7 @@ cocoa — communication-efficient distributed dual coordinate ascent (NIPS 2014 
 
 USAGE:
   cocoa train --config <toml> [--out <csv>] [--p-star <f64>] [--progress] [--threads <t>]
+              [--trace-out <jsonl>]
   cocoa repro <table1|fig1|fig2|fig3|fig4|headline|sparsity|theory|all> [--smoke] [--results-dir <dir>] [--rounds <n>]
   cocoa perf [--smoke] [--out <json>] [--seed <n>]
   cocoa perf --validate <json> [--baseline <json>] [--tolerance <frac>] [--delta <path>]
@@ -72,12 +75,19 @@ USAGE:
   cocoa gen-data <cov|rcv1|imagenet> --n <n> --d <d> [--seed <s>] --out <path>
   cocoa leader --config <toml> --listen <tcp:host:port|uds:/path> [--workers <k>] [--out <csv>]
                [--p-star <f64>] [--progress] [--checkpoint-every <n>] [--max-recoveries <m>] [--threads <t>]
+               [--trace-out <jsonl>] [--metrics <tcp:host:port|uds:/path>]
   cocoa worker --config <toml> --connect <tcp:host:port|uds:/path> [--attempts <n>] [--backoff-s <s>] [--threads <t>]
 
   --threads overrides [runtime] threads from the config (intra-worker shard
   count T for the local solves; trajectories are deterministic per T). In a
   leader/worker deployment every process must agree on T — it is part of
   the handshake fingerprint.
+
+  --trace-out streams one JSON object per round-phase span (broadcast,
+  local_solve, reduce, commit, evaluate; wall + CPU seconds) as
+  flush-per-line JSONL. --metrics serves live Prometheus text at
+  GET /metrics on the given address. Both are passive observers: the
+  trajectory is bit-identical with or without them.
 
   perf --validate alone checks the report's structure only. Add --baseline
   to also gate steps/sec, time-to-1e-3-gap, and peak RSS within the
@@ -101,6 +111,7 @@ fn main() -> Result<()> {
                 p_star,
                 args.flags.contains("progress"),
                 args.opt("threads").map(|s| s.parse()).transpose()?,
+                args.opt("trace-out").map(String::from),
             )
         }
         "repro" => {
@@ -161,6 +172,8 @@ fn main() -> Result<()> {
                 args.opt("checkpoint-every").map(|s| s.parse()).transpose()?.unwrap_or(1),
                 args.opt("max-recoveries").map(|s| s.parse()).transpose()?.unwrap_or(3),
                 args.opt("threads").map(|s| s.parse()).transpose()?,
+                args.opt("trace-out").map(String::from),
+                args.opt("metrics").map(String::from),
             )
         }
         "worker" => {
@@ -190,6 +203,7 @@ fn train(
     p_star: Option<f64>,
     progress: bool,
     threads: Option<usize>,
+    trace_out: Option<String>,
 ) -> Result<()> {
     let mut cfg = ExperimentConfig::from_toml_file(config_path)?;
     if let Some(t) = threads {
@@ -219,12 +233,21 @@ fn train(
         );
         budget.target_subopt = 0.0;
     }
-    let trace = if progress {
+    // span recording is passive — the trajectory is bit-identical with or
+    // without it — so turn it on only when someone will read the spans
+    session.set_tracing(trace_out.is_some());
+    let mut sink = trace_out.as_ref().map(SpanSink::create).transpose()?;
+    let trace = if progress || sink.is_some() {
         // live per-round status (round, gap, wire bytes, sim time) on
         // stderr, implemented as a driver Observer — stdout stays clean
         let mut line = ProgressLine::stderr();
         let mut driver = session.drive(algorithm.as_mut(), budget)?;
-        driver.observe(&mut line)?;
+        if progress {
+            driver.observe(&mut line)?;
+        }
+        if let Some(s) = sink.as_mut() {
+            driver.observe(s)?;
+        }
         driver.drain()?
     } else {
         session.run(algorithm.as_mut(), budget)?
@@ -257,6 +280,9 @@ fn train(
     });
     trace.to_csv(&out)?;
     eprintln!("trace -> {out}");
+    if let Some(path) = &trace_out {
+        eprintln!("spans -> {path}");
+    }
     Ok(())
 }
 
@@ -271,6 +297,8 @@ fn leader(
     checkpoint_every: u64,
     max_recoveries: u32,
     threads: Option<usize>,
+    trace_out: Option<String>,
+    metrics: Option<String>,
 ) -> Result<()> {
     let mut cfg = ExperimentConfig::from_toml_file(config_path)?;
     if let Some(t) = threads {
@@ -321,16 +349,40 @@ fn leader(
     }
     let policy = RecoveryPolicy { max_recoveries };
     let make_spec = || Ok(budget.into_spec()?.checkpoint_every(checkpoint_every));
-    let outcome = if progress {
-        let mut line = ProgressLine::stderr();
-        let extra: &mut [&mut dyn Observer] = &mut [&mut line];
-        run_with_recovery(&mut session, algorithm.as_mut(), make_spec, &policy, extra)?
-    } else {
-        run_with_recovery(&mut session, algorithm.as_mut(), make_spec, &policy, &mut [])?
+    // spans feed --trace-out and the /metrics phase timings; both are
+    // passive observers, so the flags only decide who listens
+    session.set_tracing(trace_out.is_some() || metrics.is_some());
+    let hub = MetricsHub::new();
+    let server = match &metrics {
+        Some(addr) => {
+            let srv = MetricsServer::serve(addr, hub.clone())?;
+            eprintln!("metrics: serving GET /metrics on {addr}");
+            Some(srv)
+        }
+        None => None,
     };
+    let mut line = ProgressLine::stderr();
+    let mut sink = trace_out.as_ref().map(SpanSink::create).transpose()?;
+    let mut hub_obs = hub.observer();
+    let mut extra: Vec<&mut dyn Observer> = Vec::new();
+    if progress {
+        extra.push(&mut line);
+    }
+    if let Some(s) = sink.as_mut() {
+        extra.push(s);
+    }
+    if metrics.is_some() {
+        extra.push(&mut hub_obs);
+    }
+    let outcome =
+        run_with_recovery(&mut session, algorithm.as_mut(), make_spec, &policy, &mut extra)?;
     let trace = outcome.trace;
     let d = session.d();
     let stats = session.socket_stats();
+    // run-wide peak RSS: the workers' wire-reported maxima folded with the
+    // leader's own footprint
+    let run_rss = session.max_worker_rss().max(peak_rss_bytes().unwrap_or(0));
+    hub.observe_leader_rss(run_rss);
     session.shutdown();
 
     let last = trace.last().expect("at least round 0 recorded");
@@ -356,6 +408,12 @@ fn leader(
             s.handshake_bytes,
         );
     }
+    if run_rss > 0 {
+        println!(
+            "peak RSS (leader+workers): {:.1} MiB",
+            run_rss as f64 / (1024.0 * 1024.0)
+        );
+    }
     let out = out.unwrap_or_else(|| {
         format!(
             "results/leader_{}_{}_k{}_h{}.csv",
@@ -367,6 +425,12 @@ fn leader(
     });
     trace.to_csv(&out)?;
     eprintln!("trace -> {out}");
+    if let Some(path) = &trace_out {
+        eprintln!("spans -> {path}");
+    }
+    if let Some(srv) = server {
+        srv.shutdown();
+    }
     Ok(())
 }
 

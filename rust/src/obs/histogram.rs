@@ -1,0 +1,227 @@
+//! Hand-rolled log-bucketed latency histograms with exact merge.
+//!
+//! Fixed geometric bucket bounds (`1 µs · 2^i`, 28 buckets up to ~134 s,
+//! plus overflow) shared by every instance, so merging two histograms is
+//! an exact elementwise sum — no rebinning error, and quantiles of a
+//! merge equal quantiles of recording the union. Exact `min`/`max`/`sum`
+//! ride along; quantiles are bucket upper bounds (documented resolution:
+//! one factor of 2).
+
+/// Number of finite buckets; bucket `i` covers `(bound(i-1), bound(i)]`.
+pub const BUCKETS: usize = 28;
+
+const MIN_BOUND: f64 = 1e-6;
+
+/// Log-bucketed histogram of nonnegative seconds.
+#[derive(Debug, Clone)]
+pub struct LogHistogram {
+    /// `counts[i]` for bucket `i`; `counts[BUCKETS]` is overflow (+Inf).
+    counts: [u64; BUCKETS + 1],
+    count: u64,
+    sum: f64,
+    min: f64,
+    max: f64,
+}
+
+impl Default for LogHistogram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl LogHistogram {
+    pub fn new() -> Self {
+        LogHistogram {
+            counts: [0; BUCKETS + 1],
+            count: 0,
+            sum: 0.0,
+            min: f64::INFINITY,
+            max: f64::NEG_INFINITY,
+        }
+    }
+
+    /// Upper bound of finite bucket `i` in seconds: `1e-6 * 2^i`.
+    pub fn bound(i: usize) -> f64 {
+        MIN_BOUND * f64::powi(2.0, i as i32)
+    }
+
+    fn bucket_of(v: f64) -> usize {
+        // linear scan: BUCKETS is small and this is never on a hot path
+        for i in 0..BUCKETS {
+            if v <= Self::bound(i) {
+                return i;
+            }
+        }
+        BUCKETS
+    }
+
+    /// Record one observation. Negative and NaN values clamp to 0 (they
+    /// can only arise from clock skew; dropping them would desync
+    /// `count` from the caller's bookkeeping).
+    pub fn record(&mut self, v: f64) {
+        let v = if v.is_finite() && v > 0.0 { v } else { 0.0 };
+        self.counts[Self::bucket_of(v)] += 1;
+        self.count += 1;
+        self.sum += v;
+        self.min = self.min.min(v);
+        self.max = self.max.max(v);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    pub fn sum(&self) -> f64 {
+        self.sum
+    }
+
+    /// Exact smallest observation (0.0 when empty).
+    pub fn min(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.min
+        }
+    }
+
+    /// Exact largest observation (0.0 when empty).
+    pub fn max(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.max
+        }
+    }
+
+    /// Quantile estimate for `q` in `[0, 1]`: the upper bound of the
+    /// bucket holding the rank-`ceil(q * count)` observation, clamped to
+    /// the exact `[min, max]` envelope. Resolution is the bucket width
+    /// (a factor of 2); `q = 0`/`q = 1` are exact.
+    pub fn quantile(&self, q: f64) -> f64 {
+        if self.count == 0 {
+            return 0.0;
+        }
+        if q <= 0.0 {
+            return self.min();
+        }
+        if q >= 1.0 {
+            return self.max();
+        }
+        let rank = (q * self.count as f64).ceil().max(1.0) as u64;
+        let mut seen = 0u64;
+        for (i, &c) in self.counts.iter().enumerate() {
+            seen += c;
+            if seen >= rank {
+                let hi = if i < BUCKETS { Self::bound(i) } else { self.max };
+                return hi.clamp(self.min, self.max);
+            }
+        }
+        self.max()
+    }
+
+    /// Exact merge: identical fixed bounds make this an elementwise sum.
+    pub fn merge(&mut self, other: &LogHistogram) {
+        for (a, b) in self.counts.iter_mut().zip(other.counts.iter()) {
+            *a += b;
+        }
+        self.count += other.count;
+        self.sum += other.sum;
+        self.min = self.min.min(other.min);
+        self.max = self.max.max(other.max);
+    }
+
+    /// Prometheus-style cumulative buckets: `(upper_bound_s, cumulative
+    /// count)` for each finite bucket, in increasing bound order. The
+    /// `+Inf` bucket is [`LogHistogram::count`].
+    pub fn cumulative(&self) -> impl Iterator<Item = (f64, u64)> + '_ {
+        let mut acc = 0u64;
+        self.counts[..BUCKETS].iter().enumerate().map(move |(i, &c)| {
+            acc += c;
+            (Self::bound(i), acc)
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bounds_are_geometric_and_bucketing_is_consistent() {
+        assert_eq!(LogHistogram::bound(0), 1e-6);
+        for i in 1..BUCKETS {
+            assert!((LogHistogram::bound(i) / LogHistogram::bound(i - 1) - 2.0).abs() < 1e-12);
+        }
+        // an observation lands in the first bucket whose bound covers it
+        let mut h = LogHistogram::new();
+        h.record(1.5e-6); // bound(0)=1e-6 < 1.5e-6 <= bound(1)=2e-6
+        let cum: Vec<_> = h.cumulative().collect();
+        assert_eq!(cum[0].1, 0);
+        assert_eq!(cum[1].1, 1);
+    }
+
+    #[test]
+    fn min_max_sum_are_exact_and_quantiles_bracket() {
+        let mut h = LogHistogram::new();
+        for v in [0.001, 0.002, 0.004, 0.008, 0.5] {
+            h.record(v);
+        }
+        assert_eq!(h.count(), 5);
+        assert!((h.sum() - 0.515).abs() < 1e-12);
+        assert_eq!(h.min(), 0.001);
+        assert_eq!(h.max(), 0.5);
+        assert_eq!(h.quantile(0.0), 0.001);
+        assert_eq!(h.quantile(1.0), 0.5);
+        // p50 rank is the 3rd observation (0.004): within a factor of 2
+        let p50 = h.quantile(0.5);
+        assert!((0.004..=0.008).contains(&p50), "p50 = {p50}");
+        // quantiles never leave the exact envelope
+        for q in [0.01, 0.25, 0.5, 0.75, 0.99] {
+            let v = h.quantile(q);
+            assert!((h.min()..=h.max()).contains(&v), "q{q} = {v}");
+        }
+    }
+
+    #[test]
+    fn merge_is_exact_against_recording_the_union() {
+        let obs_a = [1e-5, 3e-4, 0.02, 7.0];
+        let obs_b = [2e-6, 0.02, 0.9, 300.0]; // 300 s lands in overflow
+        let mut a = LogHistogram::new();
+        let mut b = LogHistogram::new();
+        let mut union = LogHistogram::new();
+        for v in obs_a {
+            a.record(v);
+            union.record(v);
+        }
+        for v in obs_b {
+            b.record(v);
+            union.record(v);
+        }
+        a.merge(&b);
+        assert_eq!(a.count(), union.count());
+        assert_eq!(a.sum().to_bits(), union.sum().to_bits());
+        assert_eq!(a.min(), union.min());
+        assert_eq!(a.max(), union.max());
+        let ca: Vec<_> = a.cumulative().collect();
+        let cu: Vec<_> = union.cumulative().collect();
+        assert_eq!(ca, cu);
+        for q in [0.0, 0.1, 0.5, 0.9, 0.99, 1.0] {
+            assert_eq!(a.quantile(q).to_bits(), union.quantile(q).to_bits());
+        }
+    }
+
+    #[test]
+    fn empty_and_degenerate_inputs_are_defined() {
+        let h = LogHistogram::new();
+        assert_eq!(h.count(), 0);
+        assert_eq!(h.min(), 0.0);
+        assert_eq!(h.max(), 0.0);
+        assert_eq!(h.quantile(0.5), 0.0);
+        let mut h = LogHistogram::new();
+        h.record(f64::NAN);
+        h.record(-1.0);
+        assert_eq!(h.count(), 2);
+        assert_eq!(h.min(), 0.0);
+        assert_eq!(h.max(), 0.0);
+    }
+}

@@ -1,0 +1,439 @@
+//! Leader-side straggler analytics and the Prometheus text renderer.
+//!
+//! [`MetricsHub`] is the shared aggregation state: per-slot
+//! [`LogHistogram`]s of local-solve wall time (exact-merge, so the
+//! all-slots histogram is derived without rebinning error), cumulative
+//! per-phase seconds, per-round min/p50/p99/max solve times with an
+//! imbalance ratio (`max/mean`, the straggler signal), counters for
+//! timeouts/reconnects/heals, and snapshots of the run gauges (round,
+//! gap, P, D) plus the byte-exact ledger and socket totals. A hub is
+//! `Clone` (shared `Arc<Mutex<_>>`), so the
+//! [`MetricsServer`](crate::obs::MetricsServer) renders from another
+//! thread while the driver's [`MetricsObserver`] feeds it.
+
+use std::fmt::Write as _;
+use std::sync::{Arc, Mutex};
+
+use super::histogram::LogHistogram;
+use super::{Phase, RoundObs};
+use crate::driver::{Observer, RoundEvent, RunMeta};
+use crate::error::Result;
+use crate::transport::{Ledger, SocketStats};
+
+#[derive(Debug, Default)]
+struct MetricsState {
+    rounds_total: u64,
+    last_round: u64,
+    last_gap: f64,
+    last_primal: f64,
+    last_dual: f64,
+    sim_time_s: f64,
+    wire_bytes: u64,
+    /// Cumulative wall seconds per [`Phase`] (local_solve = max over
+    /// slots per round: the critical-path convention of BENCH v3).
+    phase_seconds: [f64; 5],
+    /// Per-slot local-solve wall-time histograms.
+    solve_hists: Vec<LogHistogram>,
+    /// Last completed round's per-slot solve stats.
+    round_solve_min: f64,
+    round_solve_p50: f64,
+    round_solve_p99: f64,
+    round_solve_max: f64,
+    /// `max / mean` of the last round's per-slot solve times.
+    imbalance_ratio: f64,
+    timeouts: u64,
+    reconnects: u64,
+    heals: u64,
+    max_worker_rss: u64,
+    ledger: Option<Ledger>,
+    socket: Option<SocketStats>,
+}
+
+/// Shared, thread-safe metrics aggregation state.
+#[derive(Debug, Clone, Default)]
+pub struct MetricsHub {
+    inner: Arc<Mutex<MetricsState>>,
+}
+
+impl MetricsHub {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// An [`Observer`] feeding this hub (attach via `Driver::observe`).
+    pub fn observer(&self) -> MetricsObserver {
+        MetricsObserver { hub: self.clone() }
+    }
+
+    fn record_event(&self, event: &RoundEvent) {
+        let mut s = self.inner.lock().expect("metrics hub poisoned");
+        match event {
+            RoundEvent::RoundStarted { round } => {
+                s.rounds_total += 1;
+                s.last_round = *round;
+            }
+            RoundEvent::Evaluated { row } => {
+                s.last_gap = row.gap;
+                s.last_primal = row.primal;
+                s.last_dual = row.dual;
+                s.sim_time_s = row.sim_time_s;
+                s.wire_bytes = row.wire_bytes();
+            }
+            _ => {}
+        }
+    }
+
+    fn record_round(&self, obs: &RoundObs) {
+        let mut s = self.inner.lock().expect("metrics hub poisoned");
+        for span in &obs.spans {
+            if span.phase != Phase::LocalSolve {
+                s.phase_seconds[span.phase.index()] += span.wall_s;
+            }
+        }
+        // per-slot solve analytics from the worker metrics blocks
+        if !obs.workers.is_empty() {
+            if s.solve_hists.len() < obs.workers.len() {
+                s.solve_hists.resize_with(obs.workers.len(), LogHistogram::new);
+            }
+            let mut round_hist = LogHistogram::new();
+            let mut sum = 0.0;
+            let mut reconnects = 0;
+            for m in &obs.workers {
+                if let Some(h) = s.solve_hists.get_mut(m.worker) {
+                    h.record(m.solve_wall_s);
+                }
+                round_hist.record(m.solve_wall_s);
+                sum += m.solve_wall_s;
+                reconnects += m.reconnects;
+            }
+            s.round_solve_min = round_hist.min();
+            s.round_solve_p50 = round_hist.quantile(0.5);
+            s.round_solve_p99 = round_hist.quantile(0.99);
+            s.round_solve_max = round_hist.max();
+            let mean = sum / obs.workers.len() as f64;
+            s.imbalance_ratio = if mean > 0.0 { round_hist.max() / mean } else { 1.0 };
+            // critical path: the barrier waits for the slowest slot
+            s.phase_seconds[Phase::LocalSolve.index()] += round_hist.max();
+            s.reconnects = reconnects;
+        }
+        s.timeouts = obs.timeouts;
+        s.heals = obs.heals;
+        s.max_worker_rss = s.max_worker_rss.max(obs.max_worker_rss);
+        if obs.ledger.is_some() {
+            s.ledger = obs.ledger;
+        }
+        if obs.socket.is_some() {
+            s.socket = obs.socket;
+        }
+    }
+
+    /// Cumulative per-phase seconds, indexed like [`Phase::ALL`].
+    pub fn phase_seconds(&self) -> [f64; 5] {
+        self.inner.lock().expect("metrics hub poisoned").phase_seconds
+    }
+
+    /// Render the Prometheus text exposition (format 0.0.4).
+    pub fn render(&self) -> String {
+        let s = self.inner.lock().expect("metrics hub poisoned");
+        let mut out = String::with_capacity(4096);
+        let w = &mut out;
+
+        let _ = writeln!(w, "# HELP cocoa_rounds_total Completed CoCoA rounds.");
+        let _ = writeln!(w, "# TYPE cocoa_rounds_total counter");
+        let _ = writeln!(w, "cocoa_rounds_total {}", s.rounds_total);
+        let _ = writeln!(w, "# HELP cocoa_round Last started round number.");
+        let _ = writeln!(w, "# TYPE cocoa_round gauge");
+        let _ = writeln!(w, "cocoa_round {}", s.last_round);
+        for (name, help, v) in [
+            ("cocoa_duality_gap", "Last evaluated duality gap.", s.last_gap),
+            ("cocoa_primal_value", "Last evaluated primal objective P(w).", s.last_primal),
+            ("cocoa_dual_value", "Last evaluated dual objective D(alpha).", s.last_dual),
+            ("cocoa_sim_time_seconds", "Simulated distributed seconds.", s.sim_time_s),
+        ] {
+            let _ = writeln!(w, "# HELP {name} {help}");
+            let _ = writeln!(w, "# TYPE {name} gauge");
+            let _ = writeln!(w, "{name} {}", prom_f64(v));
+        }
+        let _ = writeln!(w, "# HELP cocoa_wire_bytes Wire bytes charged to the run so far.");
+        let _ = writeln!(w, "# TYPE cocoa_wire_bytes gauge");
+        let _ = writeln!(w, "cocoa_wire_bytes {}", s.wire_bytes);
+
+        let _ = writeln!(
+            w,
+            "# HELP cocoa_phase_seconds_total Cumulative wall seconds per round phase \
+             (local_solve = slowest slot per round)."
+        );
+        let _ = writeln!(w, "# TYPE cocoa_phase_seconds_total counter");
+        for p in Phase::ALL {
+            let _ = writeln!(
+                w,
+                "cocoa_phase_seconds_total{{phase=\"{}\"}} {}",
+                p.as_str(),
+                prom_f64(s.phase_seconds[p.index()])
+            );
+        }
+
+        let _ = writeln!(
+            w,
+            "# HELP cocoa_solve_seconds Per-slot local-solve wall time (log-bucketed)."
+        );
+        let _ = writeln!(w, "# TYPE cocoa_solve_seconds histogram");
+        for (slot, h) in s.solve_hists.iter().enumerate() {
+            for (bound, cum) in h.cumulative() {
+                let _ = writeln!(
+                    w,
+                    "cocoa_solve_seconds_bucket{{slot=\"{slot}\",le=\"{}\"}} {cum}",
+                    prom_f64(bound)
+                );
+            }
+            let _ = writeln!(
+                w,
+                "cocoa_solve_seconds_bucket{{slot=\"{slot}\",le=\"+Inf\"}} {}",
+                h.count()
+            );
+            let _ = writeln!(w, "cocoa_solve_seconds_sum{{slot=\"{slot}\"}} {}", prom_f64(h.sum()));
+            let _ = writeln!(w, "cocoa_solve_seconds_count{{slot=\"{slot}\"}} {}", h.count());
+        }
+
+        let _ = writeln!(
+            w,
+            "# HELP cocoa_round_solve_seconds Last round's per-slot solve-time spread."
+        );
+        let _ = writeln!(w, "# TYPE cocoa_round_solve_seconds gauge");
+        for (stat, v) in [
+            ("min", s.round_solve_min),
+            ("p50", s.round_solve_p50),
+            ("p99", s.round_solve_p99),
+            ("max", s.round_solve_max),
+        ] {
+            let _ = writeln!(w, "cocoa_round_solve_seconds{{stat=\"{stat}\"}} {}", prom_f64(v));
+        }
+        let _ = writeln!(
+            w,
+            "# HELP cocoa_solve_imbalance_ratio Last round's max/mean solve time (1.0 = balanced)."
+        );
+        let _ = writeln!(w, "# TYPE cocoa_solve_imbalance_ratio gauge");
+        let _ = writeln!(w, "cocoa_solve_imbalance_ratio {}", prom_f64(s.imbalance_ratio));
+
+        for (name, help, v) in [
+            ("cocoa_timeouts_total", "Leader recv timeouts.", s.timeouts),
+            ("cocoa_reconnects_total", "Worker reconnects (sum over slots).", s.reconnects),
+            ("cocoa_heals_total", "Successful heal() recoveries.", s.heals),
+        ] {
+            let _ = writeln!(w, "# HELP {name} {help}");
+            let _ = writeln!(w, "# TYPE {name} counter");
+            let _ = writeln!(w, "{name} {v}");
+        }
+        let _ = writeln!(
+            w,
+            "# HELP cocoa_peak_rss_bytes Max peak RSS over leader and workers."
+        );
+        let _ = writeln!(w, "# TYPE cocoa_peak_rss_bytes gauge");
+        let _ = writeln!(w, "cocoa_peak_rss_bytes {}", s.max_worker_rss);
+
+        if let Some(ledger) = &s.ledger {
+            let _ = writeln!(
+                w,
+                "# HELP cocoa_ledger_bytes_total Byte-exact payload bytes per message kind."
+            );
+            let _ = writeln!(w, "# TYPE cocoa_ledger_bytes_total counter");
+            for (kind, _msgs, bytes) in ledger.rows() {
+                let _ = writeln!(
+                    w,
+                    "cocoa_ledger_bytes_total{{kind=\"{}\"}} {bytes}",
+                    kind.name()
+                );
+            }
+            let _ = writeln!(
+                w,
+                "# HELP cocoa_ledger_msgs_total Messages per kind in the ledger."
+            );
+            let _ = writeln!(w, "# TYPE cocoa_ledger_msgs_total counter");
+            for (kind, msgs, _bytes) in ledger.rows() {
+                let _ = writeln!(
+                    w,
+                    "cocoa_ledger_msgs_total{{kind=\"{}\"}} {msgs}",
+                    kind.name()
+                );
+            }
+        }
+        if let Some(sock) = &s.socket {
+            let _ = writeln!(
+                w,
+                "# HELP cocoa_socket_bytes_total Raw socket bytes (payload + framing)."
+            );
+            let _ = writeln!(w, "# TYPE cocoa_socket_bytes_total counter");
+            let _ = writeln!(
+                w,
+                "cocoa_socket_bytes_total{{direction=\"sent\"}} {}",
+                sock.sent_bytes
+            );
+            let _ = writeln!(
+                w,
+                "cocoa_socket_bytes_total{{direction=\"recv\"}} {}",
+                sock.recv_bytes
+            );
+            let _ = writeln!(
+                w,
+                "# HELP cocoa_socket_overhead_bytes_total Framing and handshake overhead."
+            );
+            let _ = writeln!(w, "# TYPE cocoa_socket_overhead_bytes_total counter");
+            let _ = writeln!(
+                w,
+                "cocoa_socket_overhead_bytes_total{{kind=\"framing\"}} {}",
+                sock.framing_bytes
+            );
+            let _ = writeln!(
+                w,
+                "cocoa_socket_overhead_bytes_total{{kind=\"handshake\"}} {}",
+                sock.handshake_bytes
+            );
+        }
+        out
+    }
+
+    /// Fold the leader's own peak RSS into the reported max.
+    pub fn observe_leader_rss(&self, rss: u64) {
+        let mut s = self.inner.lock().expect("metrics hub poisoned");
+        s.max_worker_rss = s.max_worker_rss.max(rss);
+    }
+}
+
+/// Prometheus float rendering: finite values via `{}` (shortest
+/// round-trip), non-finite as `NaN` / `+Inf` / `-Inf`.
+fn prom_f64(v: f64) -> String {
+    if v.is_nan() {
+        "NaN".into()
+    } else if v == f64::INFINITY {
+        "+Inf".into()
+    } else if v == f64::NEG_INFINITY {
+        "-Inf".into()
+    } else {
+        format!("{v}")
+    }
+}
+
+/// The [`Observer`] that feeds a [`MetricsHub`].
+pub struct MetricsObserver {
+    hub: MetricsHub,
+}
+
+impl Observer for MetricsObserver {
+    fn on_event(&mut self, _meta: &RunMeta, event: &RoundEvent) -> Result<()> {
+        self.hub.record_event(event);
+        Ok(())
+    }
+
+    fn on_round_obs(&mut self, _meta: &RunMeta, obs: &RoundObs) -> Result<()> {
+        self.hub.record_round(obs);
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::WorkerMetrics;
+    use crate::obs::Span;
+
+    fn meta() -> RunMeta {
+        RunMeta {
+            algorithm: "cocoa".into(),
+            dataset: "t".into(),
+            k: 2,
+            h: 10,
+            beta: 1.0,
+            lambda: 0.1,
+        }
+    }
+
+    fn obs(round: u64) -> RoundObs {
+        RoundObs {
+            round,
+            spans: vec![
+                Span { round, phase: Phase::Broadcast, slot: None, wall_s: 0.01, cpu_s: 0.01 },
+                Span { round, phase: Phase::Reduce, slot: None, wall_s: 0.05, cpu_s: 0.0 },
+                Span { round, phase: Phase::Commit, slot: None, wall_s: 0.002, cpu_s: 0.002 },
+            ],
+            workers: vec![
+                WorkerMetrics {
+                    worker: 0,
+                    round,
+                    solve_wall_s: 0.04,
+                    solve_cpu_s: 0.039,
+                    inner_steps: 100,
+                    peak_rss_bytes: 1 << 20,
+                    reconnects: 0,
+                },
+                WorkerMetrics {
+                    worker: 1,
+                    round,
+                    solve_wall_s: 0.08,
+                    solve_cpu_s: 0.079,
+                    inner_steps: 100,
+                    peak_rss_bytes: 3 << 20,
+                    reconnects: 1,
+                },
+            ],
+            ledger: None,
+            socket: None,
+            timeouts: 0,
+            heals: 0,
+            max_worker_rss: 3 << 20,
+        }
+    }
+
+    #[test]
+    fn hub_accumulates_rounds_and_renders_valid_exposition() {
+        let hub = MetricsHub::new();
+        let mut o = hub.observer();
+        let m = meta();
+        o.on_event(&m, &RoundEvent::RoundStarted { round: 1 }).unwrap();
+        o.on_round_obs(&m, &obs(1)).unwrap();
+        o.on_event(&m, &RoundEvent::RoundStarted { round: 2 }).unwrap();
+        o.on_round_obs(&m, &obs(2)).unwrap();
+
+        let phase = hub.phase_seconds();
+        assert!((phase[Phase::Broadcast.index()] - 0.02).abs() < 1e-12);
+        // local_solve is the per-round max over slots, summed over rounds
+        assert!((phase[Phase::LocalSolve.index()] - 0.16).abs() < 1e-12);
+
+        let text = hub.render();
+        assert!(text.contains("cocoa_rounds_total 2"));
+        assert!(text.contains("cocoa_phase_seconds_total{phase=\"reduce\"}"));
+        assert!(text.contains("cocoa_solve_seconds_bucket{slot=\"1\",le=\"+Inf\"} 2"));
+        assert!(text.contains("cocoa_solve_seconds_count{slot=\"0\"} 2"));
+        assert!(text.contains("cocoa_reconnects_total 1"));
+        assert!(text.contains("cocoa_peak_rss_bytes 3145728"));
+        assert!(text.contains("cocoa_solve_imbalance_ratio"));
+        // every non-comment line is "name{labels} value" with a parseable value
+        for line in text.lines() {
+            if line.starts_with('#') {
+                continue;
+            }
+            let (name, value) = line.rsplit_once(' ').expect("metric line has a value");
+            assert!(!name.is_empty());
+            assert!(
+                value.parse::<f64>().is_ok() || matches!(value, "NaN" | "+Inf" | "-Inf"),
+                "unparseable value in line: {line}"
+            );
+        }
+    }
+
+    #[test]
+    fn imbalance_ratio_flags_the_straggler() {
+        let hub = MetricsHub::new();
+        let mut o = hub.observer();
+        let m = meta();
+        let mut one = obs(1);
+        one.workers[1].solve_wall_s = 0.36; // 9x the other slot
+        o.on_round_obs(&m, &one).unwrap();
+        let text = hub.render();
+        let ratio_line = text
+            .lines()
+            .find(|l| l.starts_with("cocoa_solve_imbalance_ratio"))
+            .unwrap();
+        let ratio: f64 = ratio_line.rsplit_once(' ').unwrap().1.parse().unwrap();
+        assert!(ratio > 1.5, "ratio = {ratio}");
+    }
+}

@@ -1,0 +1,252 @@
+//! Span-based observability for the live cluster: round-phase tracing,
+//! per-worker metrics, straggler analytics, and export surfaces.
+//!
+//! The paper's tradeoff (local computation vs. communication rounds) is
+//! invisible in totals — a slow round could be the local solve, the
+//! reduce barrier, one straggling worker, or the prox/eval step. This
+//! module decomposes every driver round into typed [`Phase`] spans and
+//! aggregates per-worker solve metrics into leader-side analytics:
+//!
+//! * [`Phase`] / [`Span`] / [`RoundObs`] — the vocabulary: one span per
+//!   phase per round (`broadcast -> local_solve -> reduce -> commit ->
+//!   evaluate`), carrying wall seconds, thread CPU seconds, and the
+//!   worker slot for per-worker phases.
+//! * [`Recorder`] — the seam the coordinator records through. Disabled
+//!   (the default) it never samples a clock and never allocates; enabled
+//!   it only *observes* — trajectories are bit-identical either way
+//!   (asserted by `tests/observability.rs`).
+//! * [`LogHistogram`] — hand-rolled log-bucketed latency histograms with
+//!   exact merge, behind the per-slot straggler analytics.
+//! * [`MetricsHub`] / [`MetricsObserver`] — shared aggregation state and
+//!   the [`Observer`](crate::driver::Observer) that feeds it, rendered as
+//!   Prometheus text exposition.
+//! * [`MetricsServer`] — a minimal HTTP/1.0 responder (over the
+//!   `transport/net` socket plumbing) serving `GET /metrics` from a live
+//!   leader: `cocoa leader --metrics tcp:127.0.0.1:9100`.
+//! * [`SpanSink`] — an observer streaming spans as flush-per-line JSONL
+//!   (`cocoa train/leader --trace-out spans.jsonl`), with a structural
+//!   validator ([`validate_span_jsonl`]) in the style of the perf
+//!   `schema.rs` gate.
+//!
+//! Per-worker metrics ride the wire as their own
+//! [`MessageKind::Metrics`](crate::transport::MessageKind) message —
+//! excluded from `algorithm_bytes()`, so the measured-communication
+//! axis and the simulated-time axis of the paper's figures are untouched
+//! by construction.
+
+pub mod histogram;
+pub mod metrics;
+pub mod server;
+pub mod spans;
+
+pub use histogram::LogHistogram;
+pub use metrics::{MetricsHub, MetricsObserver};
+pub use server::MetricsServer;
+pub use spans::{validate_span_jsonl, SpanSink};
+
+pub use crate::coordinator::WorkerMetrics;
+
+use crate::telemetry::thread_cpu_time_s;
+use crate::transport::{Ledger, SocketStats};
+
+/// The phases a CoCoA round decomposes into, in execution order.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Phase {
+    /// Leader sends `w` + the round's `LocalWork` to all K workers.
+    Broadcast,
+    /// A worker's local dual solve (one span per slot, from the
+    /// worker-reported metrics block).
+    LocalSolve,
+    /// Leader blocks gathering the K replies (the straggler barrier).
+    Reduce,
+    /// Fold the deltas into `v`, apply the prox, sync `w`.
+    Commit,
+    /// Distributed evaluation of P / D / gap (cadence rounds only).
+    Evaluate,
+}
+
+impl Phase {
+    /// All phases, in execution order (stable indices for accumulators).
+    pub const ALL: [Phase; 5] = [
+        Phase::Broadcast,
+        Phase::LocalSolve,
+        Phase::Reduce,
+        Phase::Commit,
+        Phase::Evaluate,
+    ];
+
+    /// Dense 0..5 index, aligned with [`Phase::ALL`].
+    pub fn index(self) -> usize {
+        match self {
+            Phase::Broadcast => 0,
+            Phase::LocalSolve => 1,
+            Phase::Reduce => 2,
+            Phase::Commit => 3,
+            Phase::Evaluate => 4,
+        }
+    }
+
+    /// Stable snake_case name (span JSONL, Prometheus labels, BENCH v3).
+    pub fn as_str(self) -> &'static str {
+        match self {
+            Phase::Broadcast => "broadcast",
+            Phase::LocalSolve => "local_solve",
+            Phase::Reduce => "reduce",
+            Phase::Commit => "commit",
+            Phase::Evaluate => "evaluate",
+        }
+    }
+
+    /// Inverse of [`Phase::as_str`].
+    pub fn from_str(name: &str) -> Option<Phase> {
+        Phase::ALL.iter().copied().find(|p| p.as_str() == name)
+    }
+}
+
+impl std::fmt::Display for Phase {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.as_str())
+    }
+}
+
+/// One timed phase of one round.
+#[derive(Debug, Clone, Copy)]
+pub struct Span {
+    pub round: u64,
+    pub phase: Phase,
+    /// Worker slot for per-worker phases ([`Phase::LocalSolve`]); `None`
+    /// for leader-side phases.
+    pub slot: Option<usize>,
+    /// Elapsed wall-clock seconds.
+    pub wall_s: f64,
+    /// Thread CPU seconds over the same interval
+    /// ([`thread_cpu_time_s`]); `wall_s - cpu_s` is time spent blocked.
+    pub cpu_s: f64,
+}
+
+/// Everything observed about one completed round, handed to
+/// [`Observer::on_round_obs`](crate::driver::Observer::on_round_obs).
+#[derive(Debug, Clone, Default)]
+pub struct RoundObs {
+    pub round: u64,
+    /// Leader-phase spans plus one synthesized
+    /// [`Phase::LocalSolve`] span per worker slot.
+    pub spans: Vec<Span>,
+    /// The per-worker metrics blocks gathered this round, slot-ordered.
+    pub workers: Vec<WorkerMetrics>,
+    /// Snapshot of the byte-exact ledger (measuring transports only).
+    pub ledger: Option<Ledger>,
+    /// Snapshot of raw socket accounting (net transport only).
+    pub socket: Option<SocketStats>,
+    /// Cumulative recv timeouts observed by the leader.
+    pub timeouts: u64,
+    /// Cumulative successful `heal()` recoveries.
+    pub heals: u64,
+    /// Max `peak_rss_bytes` reported by any worker so far (plus the
+    /// leader's own, folded in by the caller).
+    pub max_worker_rss: u64,
+}
+
+/// A wall + thread-CPU clock sample; subtract two to get a span.
+#[derive(Debug, Clone, Copy)]
+pub struct PhaseTimer {
+    wall: std::time::Instant,
+    cpu: f64,
+}
+
+/// The recording seam the coordinator instruments through.
+///
+/// Disabled (default) every call is a branch on a bool: no clock is
+/// sampled, nothing allocates. Enabled it appends [`Span`]s that the
+/// driver drains once per round. Either way it only observes — no
+/// message, byte count, or trajectory value depends on it.
+#[derive(Debug, Default)]
+pub struct Recorder {
+    enabled: bool,
+    spans: Vec<Span>,
+}
+
+impl Recorder {
+    pub fn enabled(&self) -> bool {
+        self.enabled
+    }
+
+    pub fn set_enabled(&mut self, on: bool) {
+        self.enabled = on;
+    }
+
+    /// Sample the clocks iff enabled.
+    pub fn start(&self) -> Option<PhaseTimer> {
+        if self.enabled {
+            Some(PhaseTimer { wall: std::time::Instant::now(), cpu: thread_cpu_time_s() })
+        } else {
+            None
+        }
+    }
+
+    /// Close a [`start`](Recorder::start) sample into a span.
+    pub fn finish(&mut self, t: Option<PhaseTimer>, round: u64, phase: Phase) {
+        if let Some(t) = t {
+            self.spans.push(Span {
+                round,
+                phase,
+                slot: None,
+                wall_s: t.wall.elapsed().as_secs_f64(),
+                cpu_s: (thread_cpu_time_s() - t.cpu).max(0.0),
+            });
+        }
+    }
+
+    /// Append a pre-built span (worker-side solve spans).
+    pub fn push(&mut self, span: Span) {
+        if self.enabled {
+            self.spans.push(span);
+        }
+    }
+
+    /// Take every span recorded since the previous drain.
+    pub fn drain(&mut self) -> Vec<Span> {
+        std::mem::take(&mut self.spans)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn phase_names_round_trip_and_indices_are_dense() {
+        for (i, p) in Phase::ALL.iter().enumerate() {
+            assert_eq!(p.index(), i);
+            assert_eq!(Phase::from_str(p.as_str()), Some(*p));
+        }
+        assert_eq!(Phase::from_str("no_such_phase"), None);
+    }
+
+    #[test]
+    fn disabled_recorder_samples_nothing_and_drains_empty() {
+        let mut r = Recorder::default();
+        assert!(!r.enabled());
+        assert!(r.start().is_none());
+        r.finish(None, 0, Phase::Broadcast);
+        r.push(Span { round: 0, phase: Phase::LocalSolve, slot: Some(0), wall_s: 1.0, cpu_s: 1.0 });
+        assert!(r.drain().is_empty());
+    }
+
+    #[test]
+    fn enabled_recorder_captures_spans_per_phase() {
+        let mut r = Recorder::default();
+        r.set_enabled(true);
+        let t = r.start();
+        assert!(t.is_some());
+        r.finish(t, 3, Phase::Commit);
+        r.push(Span { round: 3, phase: Phase::LocalSolve, slot: Some(1), wall_s: 0.5, cpu_s: 0.4 });
+        let spans = r.drain();
+        assert_eq!(spans.len(), 2);
+        assert_eq!(spans[0].phase, Phase::Commit);
+        assert_eq!(spans[0].round, 3);
+        assert!(spans[0].wall_s >= 0.0 && spans[0].cpu_s >= 0.0);
+        assert_eq!(spans[1].slot, Some(1));
+        assert!(r.drain().is_empty());
+    }
+}

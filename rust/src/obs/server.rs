@@ -1,0 +1,216 @@
+//! A minimal HTTP/1.0 responder serving `GET /metrics` from a live
+//! leader, reusing the `transport/net` socket plumbing (`NetListener` /
+//! `Sock`) — no HTTP library, no new dependency.
+//!
+//! The server owns one background thread polling a nonblocking listener;
+//! each accepted connection gets one request parsed, one response
+//! written, and the socket closed (`Connection: close` semantics, which
+//! every Prometheus scraper and `curl`-style client speaks). Rendering
+//! happens outside the driver thread via the shared [`MetricsHub`], so
+//! scrapes never touch the round loop — the passivity test in
+//! `tests/observability.rs` runs with a live scraper attached.
+
+use std::io::{Read, Write};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+use super::metrics::MetricsHub;
+use crate::error::{Error, Result};
+use crate::transport::net::{NetAddr, NetListener, Sock};
+
+/// Longest request head we will buffer before answering 400.
+const MAX_REQUEST_BYTES: usize = 8 * 1024;
+
+/// A live `/metrics` endpoint; dropping it stops the listener thread.
+pub struct MetricsServer {
+    stop: Arc<AtomicBool>,
+    handle: Option<JoinHandle<()>>,
+    addr: String,
+}
+
+impl MetricsServer {
+    /// Bind `addr` (`tcp:host:port` or `uds:/path`) and serve `hub` until
+    /// the server is dropped or [`MetricsServer::shutdown`] is called.
+    pub fn serve(addr: &str, hub: MetricsHub) -> Result<MetricsServer> {
+        let parsed = NetAddr::parse(addr)?;
+        let listener = NetListener::bind(&parsed)?;
+        listener.set_nonblocking(true).map_err(|e| Error::Transport {
+            message: format!("metrics listener nonblocking failed: {e}"),
+        })?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let stop_t = Arc::clone(&stop);
+        let handle = std::thread::Builder::new()
+            .name("cocoa-metrics".into())
+            .spawn(move || {
+                while !stop_t.load(Ordering::Relaxed) {
+                    match listener.accept() {
+                        Ok(sock) => respond(sock, &hub),
+                        Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                            std::thread::sleep(Duration::from_millis(20));
+                        }
+                        Err(_) => std::thread::sleep(Duration::from_millis(20)),
+                    }
+                }
+            })
+            .map_err(|e| Error::Transport {
+                message: format!("metrics server thread spawn failed: {e}"),
+            })?;
+        Ok(MetricsServer { stop, handle: Some(handle), addr: addr.to_string() })
+    }
+
+    /// The address the server was bound on, as given.
+    pub fn addr(&self) -> &str {
+        &self.addr
+    }
+
+    /// Stop accepting and join the listener thread.
+    pub fn shutdown(mut self) {
+        self.stop_and_join();
+    }
+
+    fn stop_and_join(&mut self) {
+        self.stop.store(true, Ordering::Relaxed);
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for MetricsServer {
+    fn drop(&mut self) {
+        self.stop_and_join();
+    }
+}
+
+/// Serve exactly one request on `sock`. All errors are swallowed — a
+/// misbehaving scraper must never take the leader down.
+fn respond(mut sock: Sock, hub: &MetricsHub) {
+    let _ = sock.set_read_timeout(Some(Duration::from_secs(2)));
+    let mut head = Vec::with_capacity(256);
+    let mut buf = [0u8; 512];
+    // read until the blank line ending the request head (we ignore bodies)
+    while !head.windows(4).any(|w| w == b"\r\n\r\n") && head.len() < MAX_REQUEST_BYTES {
+        match sock.read(&mut buf) {
+            Ok(0) => break,
+            Ok(n) => head.extend_from_slice(&buf[..n]),
+            Err(_) => break,
+        }
+    }
+    let request_line = head
+        .split(|&b| b == b'\r' || b == b'\n')
+        .next()
+        .map(|l| String::from_utf8_lossy(l).into_owned())
+        .unwrap_or_default();
+    let mut parts = request_line.split_whitespace();
+    let (method, path) = (parts.next().unwrap_or(""), parts.next().unwrap_or(""));
+
+    let (status, body) = if method != "GET" {
+        ("405 Method Not Allowed", "only GET is served\n".to_string())
+    } else if path == "/metrics" || path.starts_with("/metrics?") {
+        ("200 OK", hub.render())
+    } else {
+        ("404 Not Found", "try /metrics\n".to_string())
+    };
+    let response = format!(
+        "HTTP/1.0 {status}\r\n\
+         Content-Type: text/plain; version=0.0.4; charset=utf-8\r\n\
+         Content-Length: {}\r\n\
+         Connection: close\r\n\r\n{body}",
+        body.len(),
+    );
+    let _ = sock.write_all(response.as_bytes());
+    let _ = sock.flush();
+    let _ = sock.shutdown();
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::WorkerMetrics;
+    use crate::driver::{Observer, RoundEvent, RunMeta};
+    use crate::obs::{Phase, RoundObs, Span};
+
+    fn scrape(addr: &NetAddr, request: &str) -> String {
+        // the listener thread polls at 20 ms; retry connect briefly
+        let mut sock = None;
+        for _ in 0..100 {
+            match Sock::connect(addr) {
+                Ok(s) => {
+                    sock = Some(s);
+                    break;
+                }
+                Err(_) => std::thread::sleep(Duration::from_millis(10)),
+            }
+        }
+        let mut sock = sock.expect("metrics server never came up");
+        sock.write_all(request.as_bytes()).unwrap();
+        sock.flush().unwrap();
+        let mut out = String::new();
+        sock.read_to_string(&mut out).unwrap();
+        out
+    }
+
+    #[test]
+    fn serves_prometheus_text_over_uds_and_404s_elsewhere() {
+        let dir = std::env::temp_dir().join(format!("cocoa_obs_srv_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("metrics.sock");
+        let addr_str = format!("uds:{}", path.display());
+
+        let hub = MetricsHub::new();
+        let meta = RunMeta {
+            algorithm: "cocoa".into(),
+            dataset: "t".into(),
+            k: 1,
+            h: 1,
+            beta: 1.0,
+            lambda: 0.1,
+        };
+        let mut obs = hub.observer();
+        obs.on_event(&meta, &RoundEvent::RoundStarted { round: 1 }).unwrap();
+        obs.on_round_obs(
+            &meta,
+            &RoundObs {
+                round: 1,
+                spans: vec![Span {
+                    round: 1,
+                    phase: Phase::Commit,
+                    slot: None,
+                    wall_s: 0.001,
+                    cpu_s: 0.001,
+                }],
+                workers: vec![WorkerMetrics {
+                    worker: 0,
+                    round: 1,
+                    solve_wall_s: 0.01,
+                    solve_cpu_s: 0.01,
+                    inner_steps: 5,
+                    peak_rss_bytes: 1,
+                    reconnects: 0,
+                }],
+                ..RoundObs::default()
+            },
+        )
+        .unwrap();
+
+        let server = MetricsServer::serve(&addr_str, hub).unwrap();
+        let parsed = NetAddr::parse(&addr_str).unwrap();
+
+        let ok = scrape(&parsed, "GET /metrics HTTP/1.0\r\n\r\n");
+        assert!(ok.starts_with("HTTP/1.0 200 OK\r\n"), "{ok}");
+        assert!(ok.contains("Content-Type: text/plain; version=0.0.4"));
+        assert!(ok.contains("cocoa_rounds_total 1"));
+        assert!(ok.contains("# TYPE cocoa_solve_seconds histogram"));
+
+        let missing = scrape(&parsed, "GET /nope HTTP/1.0\r\n\r\n");
+        assert!(missing.starts_with("HTTP/1.0 404 Not Found\r\n"), "{missing}");
+
+        let post = scrape(&parsed, "POST /metrics HTTP/1.0\r\n\r\n");
+        assert!(post.starts_with("HTTP/1.0 405"), "{post}");
+
+        server.shutdown();
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

@@ -1,0 +1,218 @@
+//! [`SpanSink`]: an observer streaming round-phase spans as JSONL, plus
+//! the structural validator CI and the tests run over the output.
+//!
+//! One JSON object per line, flushed per line so a killed process loses
+//! at most the line being written:
+//!
+//! ```json
+//! {"round": 3, "phase": "local_solve", "slot": 1, "wall_s": 0.0021, "cpu_s": 0.0019}
+//! ```
+//!
+//! Fields: `round` (u64), `phase` (one of `broadcast`, `local_solve`,
+//! `reduce`, `commit`, `evaluate`), `slot` (worker index, or `null` for
+//! leader-side phases), `wall_s` / `cpu_s` (finite nonnegative seconds).
+//! [`validate_span_jsonl`] enforces exactly that, in the style of the
+//! perf `schema.rs` gate (it reuses the same parser).
+
+use std::fs::File;
+use std::io::{BufWriter, Write};
+use std::path::Path;
+
+use super::{Phase, RoundObs};
+use crate::driver::{Observer, RoundEvent, RunMeta};
+use crate::error::{Error, Result};
+use crate::perf::schema::{parse, Json, SchemaError};
+use crate::telemetry::json_f64;
+
+/// Streams every span of every round to `out` as flush-per-line JSONL.
+pub struct SpanSink<W: Write> {
+    out: W,
+}
+
+impl SpanSink<BufWriter<File>> {
+    /// Create (truncate) a JSONL file, creating parent directories.
+    pub fn create(path: impl AsRef<Path>) -> Result<Self> {
+        let path = path.as_ref();
+        if let Some(parent) = path.parent() {
+            if !parent.as_os_str().is_empty() {
+                std::fs::create_dir_all(parent).map_err(io_err)?;
+            }
+        }
+        let file = File::create(path).map_err(io_err)?;
+        Ok(SpanSink { out: BufWriter::new(file) })
+    }
+}
+
+impl<W: Write> SpanSink<W> {
+    /// Stream into any writer (tests use a `Vec<u8>`).
+    pub fn new(out: W) -> Self {
+        SpanSink { out }
+    }
+
+    /// The writer, for tests inspecting what was streamed.
+    pub fn into_inner(self) -> W {
+        self.out
+    }
+}
+
+fn io_err(e: std::io::Error) -> Error {
+    Error::Runtime { message: format!("span sink io: {e}") }
+}
+
+impl<W: Write> Observer for SpanSink<W> {
+    fn on_event(&mut self, _meta: &RunMeta, _event: &RoundEvent) -> Result<()> {
+        Ok(())
+    }
+
+    fn on_round_obs(&mut self, _meta: &RunMeta, obs: &RoundObs) -> Result<()> {
+        for span in &obs.spans {
+            let slot = match span.slot {
+                Some(s) => s.to_string(),
+                None => "null".to_string(),
+            };
+            writeln!(
+                self.out,
+                "{{\"round\": {}, \"phase\": \"{}\", \"slot\": {}, \"wall_s\": {}, \"cpu_s\": {}}}",
+                span.round,
+                span.phase.as_str(),
+                slot,
+                json_f64(span.wall_s),
+                json_f64(span.cpu_s),
+            )
+            .map_err(io_err)?;
+            self.out.flush().map_err(io_err)?;
+        }
+        Ok(())
+    }
+}
+
+fn line_err<T>(line_no: usize, message: impl Into<String>) -> std::result::Result<T, SchemaError> {
+    Err(SchemaError { message: format!("span jsonl line {line_no}: {}", message.into()) })
+}
+
+/// Structurally validate span JSONL: every non-empty line is an object
+/// with exactly the documented fields, a known phase name, and finite
+/// nonnegative times. Returns the number of span lines.
+pub fn validate_span_jsonl(text: &str) -> std::result::Result<usize, SchemaError> {
+    let mut count = 0;
+    for (i, line) in text.lines().enumerate() {
+        let line_no = i + 1;
+        if line.trim().is_empty() {
+            continue;
+        }
+        let doc = parse(line)
+            .map_err(|e| SchemaError { message: format!("span jsonl line {line_no}: {e}") })?;
+        let fields = match &doc {
+            Json::Obj(fields) => fields,
+            _ => return line_err(line_no, "not a JSON object"),
+        };
+        if fields.len() != 5 {
+            return line_err(line_no, format!("expected 5 fields, found {}", fields.len()));
+        }
+        match doc.get("round").and_then(Json::as_f64) {
+            Some(r) if r.is_finite() && r >= 0.0 && r.fract() == 0.0 => {}
+            _ => return line_err(line_no, "\"round\" must be a nonnegative integer"),
+        }
+        match doc.get("phase").and_then(Json::as_str) {
+            Some(name) if Phase::from_str(name).is_some() => {}
+            Some(name) => return line_err(line_no, format!("unknown phase {name:?}")),
+            None => return line_err(line_no, "missing string field \"phase\""),
+        }
+        match doc.get("slot") {
+            Some(Json::Null) => {}
+            Some(Json::Num(s)) if s.is_finite() && *s >= 0.0 && s.fract() == 0.0 => {}
+            _ => return line_err(line_no, "\"slot\" must be null or a nonnegative integer"),
+        }
+        for key in ["wall_s", "cpu_s"] {
+            match doc.get(key).and_then(Json::as_f64) {
+                Some(v) if v.is_finite() && v >= 0.0 => {}
+                _ => {
+                    return line_err(line_no, format!("{key:?} must be finite and nonnegative"))
+                }
+            }
+        }
+        count += 1;
+    }
+    Ok(count)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::Span;
+
+    fn meta() -> RunMeta {
+        RunMeta {
+            algorithm: "cocoa".into(),
+            dataset: "t".into(),
+            k: 2,
+            h: 5,
+            beta: 1.0,
+            lambda: 0.1,
+        }
+    }
+
+    #[test]
+    fn sink_streams_validating_jsonl() {
+        let mut sink = SpanSink::new(Vec::new());
+        let obs = RoundObs {
+            round: 1,
+            spans: vec![
+                Span { round: 1, phase: Phase::Broadcast, slot: None, wall_s: 0.01, cpu_s: 0.005 },
+                Span {
+                    round: 1,
+                    phase: Phase::LocalSolve,
+                    slot: Some(0),
+                    wall_s: 0.04,
+                    cpu_s: 0.039,
+                },
+                Span { round: 1, phase: Phase::Commit, slot: None, wall_s: 0.001, cpu_s: 0.001 },
+            ],
+            ..RoundObs::default()
+        };
+        sink.on_round_obs(&meta(), &obs).unwrap();
+        let text = String::from_utf8(sink.into_inner()).unwrap();
+        assert_eq!(text.lines().count(), 3);
+        assert_eq!(validate_span_jsonl(&text).unwrap(), 3);
+        assert!(text.contains("\"phase\": \"local_solve\", \"slot\": 0"));
+        assert!(text.contains("\"slot\": null"));
+    }
+
+    #[test]
+    fn validator_rejects_malformed_lines() {
+        assert_eq!(validate_span_jsonl("").unwrap(), 0);
+        let good =
+            r#"{"round": 1, "phase": "reduce", "slot": null, "wall_s": 0.1, "cpu_s": 0.0}"#;
+        assert_eq!(validate_span_jsonl(good).unwrap(), 1);
+        for (bad, needle) in [
+            ("not json", "line 1"),
+            (r#"{"round": 1}"#, "expected 5 fields"),
+            (
+                r#"{"round": 1, "phase": "warp", "slot": null, "wall_s": 0.1, "cpu_s": 0.0}"#,
+                "unknown phase",
+            ),
+            (
+                r#"{"round": -1, "phase": "reduce", "slot": null, "wall_s": 0.1, "cpu_s": 0.0}"#,
+                "round",
+            ),
+            (
+                r#"{"round": 1, "phase": "reduce", "slot": 1.5, "wall_s": 0.1, "cpu_s": 0.0}"#,
+                "slot",
+            ),
+            (
+                r#"{"round": 1, "phase": "reduce", "slot": null, "wall_s": -0.1, "cpu_s": 0.0}"#,
+                "wall_s",
+            ),
+            (
+                r#"{"round": 1, "phase": "reduce", "slot": null, "wall_s": 1e999, "cpu_s": 0.0}"#,
+                "wall_s",
+            ),
+        ] {
+            let e = validate_span_jsonl(bad).unwrap_err();
+            assert!(e.message.contains(needle), "{bad:?} -> {e}");
+        }
+        // a bad second line reports its line number
+        let two = format!("{good}\nnope");
+        assert!(validate_span_jsonl(&two).unwrap_err().message.contains("line 2"));
+    }
+}

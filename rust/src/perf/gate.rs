@@ -13,7 +13,11 @@
 //!   reached) skips the check; a `null` candidate against a non-null
 //!   baseline is a regression (the build stopped reaching the gap);
 //! * `peak_rss_bytes` per report — candidate at most
-//!   `(1 + tolerance) x baseline`, same null rules.
+//!   `(1 + tolerance) x baseline`, same null rules;
+//! * `phase_seconds.<phase>` per workload (v3) — candidate at most
+//!   `(1 + tolerance) x baseline` for each round phase, so a failure
+//!   names *which phase* regressed. A zero baseline phase is skipped
+//!   (noise would dominate a ratio against ~0).
 //!
 //! Workloads present in the baseline but missing from the candidate fail
 //! the gate (a silently dropped workload is how a regression hides);
@@ -165,6 +169,37 @@ pub fn compare(candidate: &Json, baseline: &Json, tolerance: f64) -> Result<Gate
             )),
             _ => out.failures.push(format!("{name}: time_to_gap_1e3_s missing")),
         }
+
+        // per-phase wall seconds: a failure here localizes the regression
+        // to the phase that moved (broadcast / local_solve / reduce /
+        // commit / evaluate)
+        for phase in ["broadcast", "local_solve", "reduce", "commit", "evaluate"] {
+            let b_p = bw.get("phase_seconds").and_then(|p| num(p, phase));
+            let c_p = cw.get("phase_seconds").and_then(|p| num(p, phase));
+            match (b_p, c_p) {
+                (Some(b), Some(c)) => {
+                    if b <= 0.0 {
+                        out.skipped.push(format!(
+                            "{name}: phase_seconds.{phase} (baseline recorded ~0)"
+                        ));
+                        continue;
+                    }
+                    let ceil = (1.0 + tolerance) * b;
+                    let line = format!(
+                        "{name}: phase_seconds.{phase} {c:.4} vs baseline {b:.4} \
+                         (ceiling {ceil:.4})"
+                    );
+                    if c <= ceil {
+                        out.checked.push(line);
+                    } else {
+                        out.failures.push(line);
+                    }
+                }
+                _ => out
+                    .failures
+                    .push(format!("{name}: phase_seconds.{phase} missing")),
+            }
+        }
     }
 
     for (name, _) in &cand {
@@ -230,12 +265,15 @@ mod tests {
                         "density": 1.0, "rounds": 3, "inner_steps": 30,
                         "wall_s": 0.01, "steps_per_sec": {sps},
                         "final_gap": 0.5, "time_to_gap_1e3_s": {gap_s},
-                        "bytes_measured": 128, "round_sim_time_s": [0.0, 0.1]}}"#
+                        "bytes_measured": 128,
+                        "phase_seconds": {{"broadcast": 0.001, "local_solve": 0.006,
+                          "reduce": 0.002, "commit": 0.0005, "evaluate": 0.0005}},
+                        "round_sim_time_s": [0.0, 0.1]}}"#
                 )
             })
             .collect();
         format!(
-            r#"{{"schema_version": 2, "profile": "smoke", "seed": 7,
+            r#"{{"schema_version": 3, "profile": "smoke", "seed": 7,
                 "kernel_backend": "scalar", "peak_rss_bytes": {rss},
                 "workloads": [{}]}}"#,
             workloads.join(", ")
@@ -308,6 +346,35 @@ mod tests {
         let fat = report(&[("a_k1", 1000.0)], "2000000", "0.2");
         let out = compare_str(&fat, &base, 0.5).unwrap();
         assert!(out.failures.iter().any(|f| f.contains("peak_rss_bytes")), "{:?}", out.failures);
+    }
+
+    #[test]
+    fn phase_regression_names_the_phase_zero_baseline_phase_skips() {
+        let base = report(&[("a_k1", 1000.0)], "1048576", "0.2");
+        // one phase blows past the 50% band, the rest stay put
+        let slow = base.replace("\"reduce\": 0.002", "\"reduce\": 0.02");
+        let out = compare_str(&slow, &base, 0.5).unwrap();
+        assert!(!out.passed());
+        assert!(
+            out.failures.iter().any(|f| f.contains("phase_seconds.reduce")),
+            "{:?}",
+            out.failures
+        );
+        assert!(
+            !out.failures.iter().any(|f| f.contains("phase_seconds.commit")),
+            "{:?}",
+            out.failures
+        );
+
+        // a zero baseline phase is skipped, never failed
+        let base_zero = base.replace("\"commit\": 0.0005", "\"commit\": 0.0");
+        let out = compare_str(&base, &base_zero, 0.5).unwrap();
+        assert!(out.passed(), "{:?}", out.failures);
+        assert!(
+            out.skipped.iter().any(|s| s.contains("phase_seconds.commit")),
+            "{:?}",
+            out.skipped
+        );
     }
 
     #[test]

@@ -361,6 +361,27 @@ pub fn validate(doc: &Json) -> Result<(), SchemaError> {
             }
         }
         finite_num(wl, &ctx, "final_gap")?;
+        // v3: per-phase wall seconds — exactly the five round phases,
+        // each finite and nonnegative
+        let phases = match wl.get("phase_seconds") {
+            Some(p @ Json::Obj(fields)) => {
+                if fields.len() != 5 {
+                    return err(format!(
+                        "{ctx}: phase_seconds has {} fields, expected 5",
+                        fields.len()
+                    ));
+                }
+                p
+            }
+            Some(_) => return err(format!("{ctx}: \"phase_seconds\" is not an object")),
+            None => return err(format!("{ctx}: missing object \"phase_seconds\"")),
+        };
+        for key in ["broadcast", "local_solve", "reduce", "commit", "evaluate"] {
+            let v = finite_num(phases, &format!("{ctx} phase_seconds"), key)?;
+            if v < 0.0 {
+                return err(format!("{ctx}: phase_seconds.{key} = {v} < 0"));
+            }
+        }
         if let Some(t) = finite_num_or_null(wl, &ctx, "time_to_gap_1e3_s")? {
             if t < 0.0 {
                 return err(format!("{ctx}: time_to_gap_1e3_s = {t} < 0"));
@@ -426,7 +447,7 @@ mod tests {
 
     fn minimal_workload(extra: &str, times: &str) -> String {
         format!(
-            r#"{{"schema_version": 2, "profile": "smoke", "seed": 7,
+            r#"{{"schema_version": 3, "profile": "smoke", "seed": 7,
                 "kernel_backend": "scalar",
                 "peak_rss_bytes": 1048576,
                 "workloads": [{{"name": "w", "k": 1, "threads": 1, "n": 10, "d": 2,
@@ -434,6 +455,8 @@ mod tests {
                   "wall_s": 0.01, "steps_per_sec": 3000.0,
                   "final_gap": 0.5, "time_to_gap_1e3_s": null,
                   "bytes_measured": 128,
+                  "phase_seconds": {{"broadcast": 0.001, "local_solve": 0.006,
+                    "reduce": 0.002, "commit": 0.0005, "evaluate": 0.0005}},
                   "round_sim_time_s": {times}{extra}}}]}}"#
         )
     }
@@ -457,7 +480,7 @@ mod tests {
 
     #[test]
     fn validator_rejects_missing_fields_and_bad_version() {
-        let doc = minimal_workload("", "[0.0]").replace("\"schema_version\": 2", "\"schema_version\": 99");
+        let doc = minimal_workload("", "[0.0]").replace("\"schema_version\": 3", "\"schema_version\": 99");
         assert!(validate_str(&doc).unwrap_err().message.contains("schema_version"));
         let doc = minimal_workload("", "[0.0]").replace("\"steps_per_sec\": 3000.0,", "");
         assert!(validate_str(&doc)
@@ -468,6 +491,18 @@ mod tests {
         assert!(validate_str(&doc).unwrap_err().message.contains("kernel_backend"));
         let doc = minimal_workload("", "[0.0]").replace("\"threads\": 1,", "\"threads\": 0,");
         assert!(validate_str(&doc).unwrap_err().message.contains("threads"));
+    }
+
+    #[test]
+    fn validator_rejects_bad_phase_seconds() {
+        let doc = minimal_workload("", "[0.0]").replace("\"broadcast\": 0.001,", "");
+        assert!(validate_str(&doc).unwrap_err().message.contains("expected 5"));
+        let doc = minimal_workload("", "[0.0]")
+            .replace("\"local_solve\": 0.006,", "\"local_solve\": -0.006,");
+        assert!(validate_str(&doc).unwrap_err().message.contains("local_solve"));
+        let doc = minimal_workload("", "[0.0]")
+            .replace("\"reduce\": 0.002,", "\"warp\": 0.002,");
+        assert!(validate_str(&doc).unwrap_err().message.contains("reduce"));
     }
 
     #[test]

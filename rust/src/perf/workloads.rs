@@ -34,6 +34,7 @@ use crate::data::{cov_like, rcv1_like, Dataset};
 use crate::driver::{GapBelow, MaxRounds, StoppingRule};
 use crate::loss::LossKind;
 use crate::netsim::NetworkModel;
+use crate::obs::{MetricsHub, Phase};
 use crate::regularizers::RegularizerKind;
 use crate::telemetry::{json_f64, peak_rss_bytes};
 use crate::transport::TransportKind;
@@ -43,7 +44,11 @@ use crate::Trainer;
 /// field names or meanings; the validator rejects mismatches.
 /// v2: per-workload `threads`, top-level `kernel_backend`, `_t4` sparse
 /// variants.
-pub const SCHEMA_VERSION: u32 = 2;
+/// v3: per-workload `phase_seconds` (cumulative wall seconds per round
+/// phase; `local_solve` is the slowest slot per round — the critical
+/// path), so `perf --validate --baseline` localizes a regression to the
+/// phase that moved. `peak_rss_bytes` now folds in the workers' maxima.
+pub const SCHEMA_VERSION: u32 = 3;
 
 /// Problem sizes: tiny (CI smoke) or benchmark-scale.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -87,6 +92,9 @@ pub struct WorkloadReport {
     pub time_to_gap_1e3_s: Option<f64>,
     /// Byte-exact wire bytes (counted transport).
     pub bytes_measured: u64,
+    /// Cumulative wall seconds per round phase, indexed like
+    /// [`Phase::ALL`] (`local_solve` = slowest slot per round).
+    pub phase_seconds: [f64; 5],
     /// Cumulative simulated time at each evaluated round (monotone).
     pub round_sim_time_s: Vec<f64>,
 }
@@ -166,6 +174,7 @@ fn specs(profile: PerfProfile, seed: u64) -> Vec<WorkloadSpec> {
 /// Run every workload and assemble the report.
 pub fn run_all(profile: PerfProfile, seed: u64) -> crate::Result<BenchReport> {
     let mut workloads = Vec::new();
+    let mut worker_rss_max: u64 = 0;
     for spec in specs(profile, seed) {
         let n = spec.data.n();
         let d = spec.data.d();
@@ -183,10 +192,21 @@ pub fn run_all(profile: PerfProfile, seed: u64) -> crate::Result<BenchReport> {
             .label(spec.name)
             .build()?;
         let stopping = GapBelow::new(1e-3).or(MaxRounds::new(spec.max_rounds));
+        // spans feed the per-phase seconds of BENCH v3; the recorder costs
+        // a few clock samples per round, well under measurement noise
+        session.set_tracing(true);
+        let hub = MetricsHub::new();
+        let mut hub_obs = hub.observer();
         let t0 = Instant::now();
-        let trace = session.run(&mut Cocoa::new(h), stopping)?;
+        let mut algorithm = Cocoa::new(h);
+        let trace = {
+            let mut driver = session.drive(&mut algorithm, stopping)?;
+            driver.observe(&mut hub_obs)?;
+            driver.drain()?
+        };
         let wall_s = t0.elapsed().as_secs_f64();
         let stats = *session.stats();
+        worker_rss_max = worker_rss_max.max(session.max_worker_rss());
         session.shutdown();
 
         let last = trace.rows.last().expect("at least round 0 recorded");
@@ -205,15 +225,24 @@ pub fn run_all(profile: PerfProfile, seed: u64) -> crate::Result<BenchReport> {
             final_gap: last.gap,
             time_to_gap_1e3_s: trace.time_to_gap(1e-3),
             bytes_measured: last.bytes_measured,
+            phase_seconds: hub.phase_seconds(),
             round_sim_time_s: trace.rows.iter().map(|r| r.sim_time_s).collect(),
         });
     }
+    // run-wide max: the perf process itself, plus whatever the workers
+    // reported in their metrics blocks (same process here, but the fold
+    // is what a multi-process BENCH would need)
+    let peak_rss = match peak_rss_bytes() {
+        Some(rss) => Some(rss.max(worker_rss_max)),
+        None if worker_rss_max > 0 => Some(worker_rss_max),
+        None => None,
+    };
     Ok(BenchReport {
         schema_version: SCHEMA_VERSION,
         profile,
         seed,
         kernel_backend: crate::kernels::backend_name().to_string(),
-        peak_rss_bytes: peak_rss_bytes(),
+        peak_rss_bytes: peak_rss,
         workloads,
     })
 }
@@ -235,11 +264,16 @@ impl BenchReport {
         s.push_str("  \"workloads\": [\n");
         for (i, w) in self.workloads.iter().enumerate() {
             let times: Vec<String> = w.round_sim_time_s.iter().map(|t| json_f64(*t)).collect();
+            let phases: Vec<String> = Phase::ALL
+                .iter()
+                .map(|p| format!("\"{}\": {}", p.as_str(), json_f64(w.phase_seconds[p.index()])))
+                .collect();
             s.push_str(&format!(
                 "    {{\"name\": \"{}\", \"k\": {}, \"threads\": {}, \"n\": {}, \"d\": {}, \
                  \"density\": {}, \
                  \"rounds\": {}, \"inner_steps\": {}, \"wall_s\": {}, \"steps_per_sec\": {}, \
                  \"final_gap\": {}, \"time_to_gap_1e3_s\": {}, \"bytes_measured\": {}, \
+                 \"phase_seconds\": {{{}}}, \
                  \"round_sim_time_s\": [{}]}}{}\n",
                 w.name,
                 w.k,
@@ -254,6 +288,7 @@ impl BenchReport {
                 json_f64(w.final_gap),
                 w.time_to_gap_1e3_s.map_or("null".to_string(), json_f64),
                 w.bytes_measured,
+                phases.join(", "),
                 times.join(", "),
                 if i + 1 == self.workloads.len() { "" } else { "," },
             ));
@@ -298,6 +333,18 @@ mod tests {
                 "{}: sim time not monotone",
                 w.name
             );
+            assert!(
+                w.phase_seconds.iter().all(|s| s.is_finite() && *s >= 0.0),
+                "{}: bad phase_seconds {:?}",
+                w.name,
+                w.phase_seconds
+            );
+            // real rounds ran, so the straggler barrier took real time
+            assert!(
+                w.phase_seconds[Phase::LocalSolve.index()] > 0.0,
+                "{}: no local_solve time recorded",
+                w.name
+            );
         }
         let json = report.to_json_string();
         schema::validate_str(&json).unwrap();
@@ -328,6 +375,7 @@ mod tests {
                 final_gap: 0.5,
                 time_to_gap_1e3_s: None,
                 bytes_measured: 64,
+                phase_seconds: [0.001, 0.008, 0.002, 0.0005, 0.0005],
                 round_sim_time_s: vec![0.0, 0.5],
             }],
         };

@@ -401,7 +401,9 @@ mod tests {
         let mut tr = Trace::new("cocoa", "cov", 4, 100, 1.0, 1e-4);
         tr.push(row(1, 1.0, 8, 0.1, 0.2));
         tr.push(row(2, 2.0, 16, 0.01, 0.02));
-        let dir = std::env::temp_dir().join("cocoa_trace_test");
+        // each test writes under its own scratch dir so parallel test
+        // threads (and stale leftovers) can never collide
+        let dir = std::env::temp_dir().join("cocoa_trace_test_csv");
         let p = dir.join("t.csv");
         tr.to_csv(&p).unwrap();
         let text = std::fs::read_to_string(&p).unwrap();
@@ -428,7 +430,7 @@ mod tests {
         no_ref.primal_subopt = f64::NAN; // NaN subopt (no P*) must survive
         no_ref.stop = StopReason::Gap;
         tr.push(no_ref);
-        let p = std::env::temp_dir().join("cocoa_trace_test/schema.csv");
+        let p = std::env::temp_dir().join("cocoa_trace_test_schema/schema.csv");
         tr.to_csv(&p).unwrap();
         let text = std::fs::read_to_string(&p).unwrap();
         let mut lines = text.lines();
@@ -531,7 +533,7 @@ mod tests {
         // a hostile dataset label cannot corrupt the JSON writer
         let mut tr = Trace::new("cocoa", "rcv1 \"full\"", 1, 1, 1.0, 0.1);
         tr.push(row(1, 1.0, 8, 0.1, 0.2));
-        let p = std::env::temp_dir().join("cocoa_trace_test/escaped.json");
+        let p = std::env::temp_dir().join("cocoa_trace_test_escape/escaped.json");
         tr.to_json(&p).unwrap();
         let json = std::fs::read_to_string(&p).unwrap();
         assert!(json.contains("\"dataset\": \"rcv1 \\\"full\\\"\""), "{json}");

@@ -70,6 +70,10 @@ pub fn run_worker_process(
     // reconnect so recovery restores the same block when possible
     let mut held: Option<usize> = None;
     let mut failures: u32 = 0;
+    // lifetime count of successful handshakes: unlike `failures` (which a
+    // handshake resets), this only grows, and `connections - 1` is the
+    // reconnect total reported in every metrics block
+    let mut connections: u64 = 0;
     loop {
         let mut sock = match Sock::connect(&addr) {
             Ok(s) => s,
@@ -112,6 +116,7 @@ pub fn run_worker_process(
         }
         held = Some(slot);
         failures = 0; // a full handshake resets the reconnect budget
+        connections += 1;
 
         // A fresh core per connection: zero dual state, slot-seeded rng.
         // After a recovery the leader's SetState overwrites both before
@@ -127,6 +132,7 @@ pub fn run_worker_process(
             slot,
             cfg.runtime.threads,
         ));
+        core.set_reconnects(connections - 1);
         match serve(&mut sock, &mut core)? {
             Served::Shutdown => return Ok(()),
             Served::Lost(_) => {
@@ -192,6 +198,15 @@ fn serve(sock: &mut Sock, core: &mut WorkerCore) -> Result<Served> {
             CoreStep::Reply(reply) => {
                 if let Err(e) = write_frame(sock, &wire::encode_to_leader(&reply)) {
                     return Ok(Served::Lost(format!("write failed: {e}")));
+                }
+            }
+            CoreStep::ReplyWithMetrics(reply, metrics) => {
+                // the round reply first, its observability block right
+                // behind it — same frame order the in-process path sends
+                for msg in [reply, metrics] {
+                    if let Err(e) = write_frame(sock, &wire::encode_to_leader(&msg)) {
+                        return Ok(Served::Lost(format!("write failed: {e}")));
+                    }
                 }
             }
             CoreStep::Fatal(reply) => {

@@ -30,10 +30,10 @@
 
 use std::sync::Arc;
 
-use crate::coordinator::{LocalWork, RoundReply, ToLeader, ToWorker, WorkerState};
+use crate::coordinator::{LocalWork, RoundReply, ToLeader, ToWorker, WorkerMetrics, WorkerState};
 
 /// Number of [`MessageKind`] variants (ledger array size).
-pub const KIND_COUNT: usize = 7;
+pub const KIND_COUNT: usize = 8;
 
 /// Message taxonomy for per-kind byte accounting.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -52,6 +52,9 @@ pub enum MessageKind {
     Checkpoint = 5,
     /// Control traffic (reset, shutdown, fatal errors).
     Control = 6,
+    /// Worker -> leader per-round observability block (instrumentation;
+    /// never charged as algorithm communication).
+    Metrics = 7,
 }
 
 impl MessageKind {
@@ -63,6 +66,7 @@ impl MessageKind {
         MessageKind::EvalReply,
         MessageKind::Checkpoint,
         MessageKind::Control,
+        MessageKind::Metrics,
     ];
 
     #[inline]
@@ -89,6 +93,7 @@ impl MessageKind {
             MessageKind::EvalReply => "eval_reply",
             MessageKind::Checkpoint => "checkpoint",
             MessageKind::Control => "control",
+            MessageKind::Metrics => "metrics",
         }
     }
 }
@@ -98,8 +103,9 @@ impl MessageKind {
 pub const HEADER_BYTES: u64 = 16;
 /// First two header bytes of every frame ("C0CA", little-endian).
 pub const MAGIC: u16 = 0xC0CA;
-/// Wire-format version; bump on any layout change.
-pub const WIRE_VERSION: u8 = 1;
+/// Wire-format version; bump on any layout change. v2 added the
+/// worker -> leader metrics frame ([`MessageKind::Metrics`]).
+pub const WIRE_VERSION: u8 = 2;
 /// Length prefix of variable-size payloads.
 const LEN_BYTES: u64 = 4;
 /// RNG state carried by checkpoint messages (`[u64; 4]`).
@@ -121,6 +127,7 @@ pub(crate) const TAG_ROUND_REPLY: u8 = 0x81;
 pub(crate) const TAG_EVAL_REPLY: u8 = 0x82;
 pub(crate) const TAG_STATE: u8 = 0x83;
 pub(crate) const TAG_FATAL: u8 = 0x84;
+pub(crate) const TAG_METRICS: u8 = 0x85;
 pub(crate) const TAG_HELLO: u8 = 0xF0;
 pub(crate) const TAG_ACCEPT: u8 = 0xF1;
 pub(crate) const TAG_REJECT: u8 = 0xF2;
@@ -299,6 +306,9 @@ pub fn to_leader_wire(msg: &ToLeader) -> (MessageKind, u64) {
             MessageKind::Control,
             HEADER_BYTES + LEN_BYTES + message.len() as u64,
         ),
+        // solve_wall_s + solve_cpu_s (f64) + inner_steps + peak_rss_bytes
+        // + reconnects (u64); worker and round ride the header
+        ToLeader::Metrics(_) => (MessageKind::Metrics, HEADER_BYTES + 40),
     }
 }
 
@@ -398,6 +408,14 @@ pub fn encode_to_leader(msg: &ToLeader) -> Vec<u8> {
             encode_header(TAG_FATAL, *worker as u32, 0, &mut out);
             out.extend_from_slice(&(message.len() as u32).to_le_bytes());
             out.extend_from_slice(message.as_bytes());
+        }
+        ToLeader::Metrics(m) => {
+            encode_header(TAG_METRICS, m.worker as u32, m.round, &mut out);
+            out.extend_from_slice(&m.solve_wall_s.to_le_bytes());
+            out.extend_from_slice(&m.solve_cpu_s.to_le_bytes());
+            out.extend_from_slice(&m.inner_steps.to_le_bytes());
+            out.extend_from_slice(&m.peak_rss_bytes.to_le_bytes());
+            out.extend_from_slice(&m.reconnects.to_le_bytes());
         }
     }
     debug_assert_eq!(out.len() as u64, sized);
@@ -585,6 +603,15 @@ pub fn decode_to_leader(buf: &[u8]) -> WireResult<ToLeader> {
             let raw = r.take(len, "fatal message")?;
             ToLeader::Fatal { worker, message: String::from_utf8_lossy(raw).into_owned() }
         }
+        TAG_METRICS => ToLeader::Metrics(WorkerMetrics {
+            worker,
+            round: h.round,
+            solve_wall_s: r.f64("metrics solve_wall_s")?,
+            solve_cpu_s: r.f64("metrics solve_cpu_s")?,
+            inner_steps: r.u64("metrics inner_steps")?,
+            peak_rss_bytes: r.u64("metrics peak_rss_bytes")?,
+            reconnects: r.u64("metrics reconnects")?,
+        }),
         got => return Err(WireError::UnknownTag { got }),
     };
     r.finish("trailing bytes after message")?;
@@ -750,6 +777,9 @@ mod tests {
         assert!(!MessageKind::EvalReply.is_algorithm());
         assert!(!MessageKind::Checkpoint.is_algorithm());
         assert!(!MessageKind::Control.is_algorithm());
+        // metrics are instrumentation: charging them to the paper's
+        // communication axis would change bytes_measured and sim-time
+        assert!(!MessageKind::Metrics.is_algorithm());
     }
 
     // -- full codec: encoded length == sized length, bit-exact round-trips
@@ -857,6 +887,31 @@ mod tests {
             }
             other => panic!("wrong variant: {other:?}"),
         }
+
+        let metrics = WorkerMetrics {
+            worker: 2,
+            round: 11,
+            solve_wall_s: 0.03125,
+            solve_cpu_s: 0.015625,
+            inner_steps: 400,
+            peak_rss_bytes: 123_456_789,
+            reconnects: 2,
+        };
+        let (kind, sized) = to_leader_wire(&ToLeader::Metrics(metrics));
+        assert_eq!(kind, MessageKind::Metrics);
+        assert_eq!(sized, HEADER_BYTES + 40);
+        match roundtrip_to_leader(ToLeader::Metrics(metrics)) {
+            ToLeader::Metrics(back) => {
+                assert_eq!(back.worker, 2);
+                assert_eq!(back.round, 11);
+                assert_eq!(back.solve_wall_s.to_bits(), metrics.solve_wall_s.to_bits());
+                assert_eq!(back.solve_cpu_s.to_bits(), metrics.solve_cpu_s.to_bits());
+                assert_eq!(back.inner_steps, 400);
+                assert_eq!(back.peak_rss_bytes, 123_456_789);
+                assert_eq!(back.reconnects, 2);
+            }
+            other => panic!("wrong variant: {other:?}"),
+        }
     }
 
     #[test]
@@ -868,7 +923,7 @@ mod tests {
             buf,
             vec![
                 0xCA, 0xC0, // magic 0xC0CA, little-endian
-                0x01, // wire version
+                0x02, // wire version
                 0x02, // tag: commit
                 0x02, 0x00, 0x00, 0x00, // worker 2
                 0x00, 0x00, 0x00, 0x00, 0x00, 0x00, 0x00, 0x00, // round 0
@@ -887,7 +942,7 @@ mod tests {
         assert_eq!(
             buf,
             vec![
-                0xCA, 0xC0, 0x01, 0x81, // magic, version, tag: round reply
+                0xCA, 0xC0, 0x02, 0x81, // magic, version, tag: round reply
                 0x01, 0x00, 0x00, 0x00, // worker 1
                 0x03, 0x00, 0x00, 0x00, 0x00, 0x00, 0x00, 0x00, // round 3
                 0x00, 0x00, 0x00, 0x00, 0x00, 0x00, 0xE0, 0x3F, // compute_s 0.5

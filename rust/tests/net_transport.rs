@@ -143,6 +143,7 @@ fn uds_run_is_bit_identical_to_inproc() {
             MessageKind::DeltaW,
             MessageKind::EvalRequest,
             MessageKind::EvalReply,
+            MessageKind::Metrics,
         ] {
             assert_eq!(ledger.bytes(kind), twin_ledger.bytes(kind), "K={k} {kind:?}");
             assert_eq!(ledger.msgs(kind), twin_ledger.msgs(kind), "K={k} {kind:?}");

@@ -1,0 +1,344 @@
+//! Observability acceptance: round-phase spans, per-worker metrics
+//! blocks, and the live `/metrics` endpoint must be *provably passive* —
+//! a run with tracing, a JSONL span sink, and a live Prometheus scraper
+//! attached is bit-identical to a bare run, in-process and over real UDS
+//! sockets — and the `Metrics` wire kind must reconcile exactly in the
+//! ledger and socket accounting.
+
+use std::io::{Read, Write};
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::thread;
+use std::time::Duration;
+
+use cocoa::algorithms::Cocoa;
+use cocoa::config::{
+    AlgorithmSpec, Backend, DatasetSpec, ExperimentConfig, PartitionSpec, RunSpec, RuntimeSpec,
+};
+use cocoa::data::{cov_like, PartitionStrategy};
+use cocoa::driver::MaxRounds;
+use cocoa::loss::LossKind;
+use cocoa::netsim::NetworkModel;
+use cocoa::obs::{validate_span_jsonl, MetricsHub, MetricsServer, SpanSink};
+use cocoa::regularizers::RegularizerKind;
+use cocoa::solvers::SolverKind;
+use cocoa::telemetry::Trace;
+use cocoa::transport::net::run_worker_process;
+use cocoa::transport::{MessageKind, NetConfig, ReconnectPolicy, TransportKind};
+use cocoa::Trainer;
+
+const N: usize = 120;
+const D: usize = 8;
+const NOISE: f64 = 0.1;
+const SEED: u64 = 5;
+const LAMBDA: f64 = 0.05;
+const H: usize = 25;
+const ROUNDS: u64 = 5;
+const K: usize = 2;
+
+/// Everything a trajectory is, bit for bit.
+fn row_bits(tr: &Trace) -> Vec<(u64, u64, u64, u64, u64, u64, u64)> {
+    tr.rows
+        .iter()
+        .map(|r| {
+            (
+                r.round,
+                r.primal.to_bits(),
+                r.dual.to_bits(),
+                r.gap.to_bits(),
+                r.sim_time_s.to_bits(),
+                r.inner_steps,
+                r.bytes_measured,
+            )
+        })
+        .collect()
+}
+
+/// The bare twin every observed run is compared against: in-process,
+/// counted, no tracing, no observers.
+fn bare_run(data: &cocoa::data::Dataset) -> (Trace, Vec<u64>, cocoa::transport::Ledger) {
+    let mut session = Trainer::on(data)
+        .workers(K)
+        .lambda(LAMBDA)
+        .seed(SEED)
+        .transport(TransportKind::Counted)
+        .build()
+        .unwrap();
+    assert!(!session.tracing(), "tracing must default off");
+    let trace = session.run(&mut Cocoa::new(H), MaxRounds::new(ROUNDS)).unwrap();
+    let w = session.w().iter().map(|x| x.to_bits()).collect();
+    let ledger = session.ledger().unwrap().clone();
+    session.shutdown();
+    (trace, w, ledger)
+}
+
+fn sock_path(tag: &str) -> PathBuf {
+    std::env::temp_dir().join(format!("cocoa-obs-{}-{tag}.sock", std::process::id()))
+}
+
+fn worker_cfg(k: usize, listen: &str) -> ExperimentConfig {
+    ExperimentConfig {
+        dataset: DatasetSpec::CovLike { n: N, d: D, noise: NOISE, seed: SEED },
+        partition: PartitionSpec { k, strategy: PartitionStrategy::Contiguous, seed: 0 },
+        algorithm: AlgorithmSpec::Cocoa { h: H, beta_k: 1.0, solver: SolverKind::Sdca },
+        loss: LossKind::Hinge,
+        lambda: LAMBDA,
+        regularizer: RegularizerKind::default(),
+        run: RunSpec {
+            rounds: ROUNDS,
+            target_gap: 0.0,
+            target_subopt: 0.0,
+            eval_every: 1,
+            seed: SEED,
+            backend: Backend::Native,
+        },
+        runtime: RuntimeSpec::default(),
+        netsim: NetworkModel::free(),
+        transport: TransportKind::Net(NetConfig::new(listen)),
+        artifacts_dir: "artifacts".into(),
+    }
+}
+
+fn spawn_workers(k: usize, listen: &str) -> Vec<thread::JoinHandle<()>> {
+    (0..k)
+        .map(|_| {
+            let listen = listen.to_string();
+            thread::spawn(move || {
+                let cfg = worker_cfg(k, &listen);
+                run_worker_process(
+                    &cfg,
+                    &listen,
+                    &ReconnectPolicy { attempts: 60, backoff_s: 0.05 },
+                )
+                .unwrap();
+            })
+        })
+        .collect()
+}
+
+/// One HTTP/1.0 request against the metrics UDS socket, with a short
+/// connect retry (the listener thread polls at 20 ms).
+fn scrape(path: &Path) -> String {
+    let mut sock = None;
+    for _ in 0..100 {
+        match std::os::unix::net::UnixStream::connect(path) {
+            Ok(s) => {
+                sock = Some(s);
+                break;
+            }
+            Err(_) => thread::sleep(Duration::from_millis(10)),
+        }
+    }
+    let mut sock = sock.expect("metrics server never came up");
+    sock.write_all(b"GET /metrics HTTP/1.0\r\n\r\n").unwrap();
+    sock.flush().unwrap();
+    let mut out = String::new();
+    sock.read_to_string(&mut out).unwrap();
+    out
+}
+
+/// Every non-comment line of a Prometheus text body is `name value` or
+/// `name{labels} value` with a parseable value.
+fn assert_prometheus_wellformed(body: &str) {
+    assert!(!body.trim().is_empty(), "empty exposition");
+    for line in body.lines() {
+        if line.starts_with('#') || line.is_empty() {
+            continue;
+        }
+        let (name, value) = line.rsplit_once(' ').unwrap_or_else(|| panic!("bad line: {line}"));
+        assert!(name.starts_with("cocoa_"), "foreign metric: {line}");
+        assert!(
+            value.parse::<f64>().is_ok() || matches!(value, "NaN" | "+Inf" | "-Inf"),
+            "unparseable value: {line}"
+        );
+    }
+}
+
+/// In-process: tracing on, a span sink and a metrics hub attached — the
+/// trajectory, final `w`, and *algorithm* ledger are bit-identical to the
+/// bare run, and the always-on metrics blocks are ledgered byte-exactly
+/// without being charged as algorithm communication.
+#[test]
+fn tracing_and_metrics_hub_are_passive_in_proc() {
+    let data = cov_like(N, D, NOISE, SEED);
+    let (bare_trace, bare_w, bare_ledger) = bare_run(&data);
+
+    let mut session = Trainer::on(&data)
+        .workers(K)
+        .lambda(LAMBDA)
+        .seed(SEED)
+        .transport(TransportKind::Counted)
+        .build()
+        .unwrap();
+    session.set_tracing(true);
+    let hub = MetricsHub::new();
+    let mut hub_obs = hub.observer();
+    let mut sink = SpanSink::new(Vec::new());
+    let mut algo = Cocoa::new(H);
+    let trace = {
+        let mut driver = session.drive(&mut algo, MaxRounds::new(ROUNDS)).unwrap();
+        driver.observe(&mut sink).unwrap();
+        driver.observe(&mut hub_obs).unwrap();
+        driver.drain().unwrap()
+    };
+    let w: Vec<u64> = session.w().iter().map(|x| x.to_bits()).collect();
+    let ledger = session.ledger().unwrap().clone();
+    session.shutdown();
+
+    assert_eq!(row_bits(&trace), row_bits(&bare_trace), "observed run diverged");
+    assert_eq!(w, bare_w, "final w diverged");
+
+    // metrics flow whether or not anyone listens: both runs ledger one
+    // 56-byte block (16-byte header + 40-byte payload) per worker per
+    // round, and neither charges it to the algorithm
+    for l in [&ledger, &bare_ledger] {
+        assert_eq!(l.msgs(MessageKind::Metrics), K as u64 * ROUNDS);
+        assert_eq!(l.bytes(MessageKind::Metrics), 56 * K as u64 * ROUNDS);
+        assert_eq!(l.total_bytes() - l.algorithm_bytes(), l.bytes(MessageKind::Metrics));
+    }
+    assert_eq!(ledger.algorithm_bytes(), bare_ledger.algorithm_bytes());
+
+    // the spans streamed are structurally valid and cover all phases
+    let text = String::from_utf8(sink.into_inner()).unwrap();
+    let count = validate_span_jsonl(&text).unwrap();
+    assert!(count > 0, "no spans streamed");
+    for phase in ["broadcast", "local_solve", "reduce", "commit", "evaluate"] {
+        assert!(text.contains(&format!("\"phase\": \"{phase}\"")), "missing {phase}:\n{text}");
+    }
+    assert!(text.contains("\"slot\": 1"), "no per-slot local_solve span");
+
+    // the hub aggregated the same run
+    let body = hub.render();
+    assert_prometheus_wellformed(&body);
+    assert!(body.contains(&format!("cocoa_rounds_total {ROUNDS}")), "{body}");
+    assert!(body.contains("cocoa_solve_seconds_count{slot=\"1\"} 5"), "{body}");
+    assert!(body.contains("cocoa_ledger_msgs_total{kind=\"metrics\"} 10"), "{body}");
+}
+
+/// UDS multi-process: a run with `--trace-out`-style span streaming, a
+/// metrics hub, and a live scraper hammering `GET /metrics` throughout is
+/// bit-identical to the bare in-process run; the Metrics kind reconciles
+/// exactly in both the per-kind ledger and the raw socket byte totals.
+#[test]
+fn uds_run_with_live_scraper_is_bit_identical() {
+    let data = cov_like(N, D, NOISE, SEED);
+    let (bare_trace, bare_w, bare_ledger) = bare_run(&data);
+
+    let sock = sock_path("run");
+    let _ = std::fs::remove_file(&sock);
+    let listen = format!("uds:{}", sock.display());
+    let workers = spawn_workers(K, &listen);
+
+    let scratch = std::env::temp_dir().join(format!("cocoa_obs_test_{}", std::process::id()));
+    std::fs::create_dir_all(&scratch).unwrap();
+    let jsonl = scratch.join("spans.jsonl");
+    let msock = scratch.join("metrics.sock");
+    let _ = std::fs::remove_file(&msock);
+
+    let hub = MetricsHub::new();
+    let server = MetricsServer::serve(&format!("uds:{}", msock.display()), hub.clone()).unwrap();
+
+    // a scraper polling the endpoint for the whole run — passivity must
+    // hold with live traffic on the metrics socket, not just with the
+    // observers merely attached
+    let stop = Arc::new(AtomicBool::new(false));
+    let scraper = {
+        let stop = Arc::clone(&stop);
+        let msock = msock.clone();
+        thread::spawn(move || {
+            let mut bodies = 0u32;
+            while !stop.load(Ordering::Relaxed) {
+                if let Ok(mut s) = std::os::unix::net::UnixStream::connect(&msock) {
+                    let _ = s.write_all(b"GET /metrics HTTP/1.0\r\n\r\n");
+                    let _ = s.flush();
+                    let mut out = String::new();
+                    if s.read_to_string(&mut out).is_ok() && out.starts_with("HTTP/1.0 200") {
+                        bodies += 1;
+                    }
+                }
+                thread::sleep(Duration::from_millis(5));
+            }
+            bodies
+        })
+    };
+
+    let mut session = Trainer::on(&data)
+        .workers(K)
+        .lambda(LAMBDA)
+        .seed(SEED)
+        .transport(TransportKind::Net(NetConfig::new(&listen)))
+        .build()
+        .unwrap();
+    session.set_tracing(true);
+    let mut sink = SpanSink::create(&jsonl).unwrap();
+    let mut hub_obs = hub.observer();
+    let mut algo = Cocoa::new(H);
+    let trace = {
+        let mut driver = session.drive(&mut algo, MaxRounds::new(ROUNDS)).unwrap();
+        driver.observe(&mut sink).unwrap();
+        driver.observe(&mut hub_obs).unwrap();
+        driver.drain().unwrap()
+    };
+    let w: Vec<u64> = session.w().iter().map(|x| x.to_bits()).collect();
+    let ledger = session.ledger().unwrap().clone();
+    let stats = session.socket_stats().expect("net transport reports socket stats");
+
+    // a guaranteed post-run scrape over the real socket
+    let response = scrape(&msock);
+    stop.store(true, Ordering::Relaxed);
+    let live_bodies = scraper.join().unwrap();
+
+    session.shutdown();
+    for h in workers {
+        h.join().unwrap();
+    }
+    server.shutdown();
+
+    // passivity across the process boundary, with the scraper attached
+    assert_eq!(row_bits(&trace), row_bits(&bare_trace), "UDS observed run diverged");
+    assert_eq!(w, bare_w, "final w diverged");
+    for kind in [
+        MessageKind::Broadcast,
+        MessageKind::Commit,
+        MessageKind::DeltaW,
+        MessageKind::EvalRequest,
+        MessageKind::EvalReply,
+        MessageKind::Metrics,
+    ] {
+        assert_eq!(ledger.bytes(kind), bare_ledger.bytes(kind), "{kind:?}");
+        assert_eq!(ledger.msgs(kind), bare_ledger.msgs(kind), "{kind:?}");
+    }
+
+    // socket reconciliation with metrics frames in the stream
+    assert_eq!(stats.payload_bytes(), ledger.total_bytes());
+    assert_eq!(
+        stats.sent_bytes + stats.recv_bytes,
+        ledger.total_bytes() + stats.framing_bytes + stats.handshake_bytes,
+        "socket bytes must reconcile with the ledger"
+    );
+
+    // the endpoint spoke valid HTTP + Prometheus text
+    assert!(response.starts_with("HTTP/1.0 200 OK\r\n"), "{response}");
+    let body = response.split("\r\n\r\n").nth(1).expect("response has a body");
+    assert_prometheus_wellformed(body);
+    assert!(body.contains(&format!("cocoa_rounds_total {ROUNDS}")), "{body}");
+    assert!(body.contains("cocoa_solve_seconds_bucket{slot=\"0\""), "{body}");
+    assert!(body.contains("cocoa_round_solve_seconds{stat=\"max\"}"), "{body}");
+    assert!(body.contains("cocoa_solve_imbalance_ratio"), "{body}");
+    assert!(body.contains("cocoa_ledger_bytes_total{kind=\"metrics\"}"), "{body}");
+    assert!(body.contains("cocoa_socket_bytes_total{direction=\"sent\"}"), "{body}");
+    // the scraper ran; mid-run hits are timing-dependent, the post-run
+    // scrape above is the guaranteed one
+    let _ = live_bodies;
+
+    // the streamed span file validates and covers the leader phases
+    let text = std::fs::read_to_string(&jsonl).unwrap();
+    let count = validate_span_jsonl(&text).unwrap();
+    assert!(count > 0, "no spans streamed");
+    assert!(text.contains("\"phase\": \"reduce\""), "{text}");
+    assert!(text.contains("\"phase\": \"local_solve\", \"slot\": 1"), "{text}");
+
+    let _ = std::fs::remove_dir_all(&scratch);
+    let _ = std::fs::remove_file(&sock);
+}
