@@ -26,9 +26,9 @@ use std::path::Path;
 use crate::algorithms::Algorithm;
 use crate::config::Backend;
 use crate::coordinator::{
-    Checkpoint, Cluster, ClusterSpec, CommStats, Evaluation, LocalWork, RoundReply,
+    Checkpoint, Cluster, ClusterSpec, CommStats, DataSource, Evaluation, LocalWork, RoundReply,
 };
-use crate::data::{Dataset, Partition, PartitionStrategy};
+use crate::data::{Dataset, Partition, PartitionStrategy, ShardSet};
 use crate::driver::{Driver, IntoDriverSpec};
 use crate::error::{Error, Result};
 use crate::loss::LossKind;
@@ -37,6 +37,14 @@ use crate::regularizers::RegularizerKind;
 use crate::solvers::SolverKind;
 use crate::telemetry::Trace;
 use crate::transport::{Ledger, Transcript, TransportKind};
+
+/// What the trainer trains on: a resident dataset or an on-disk shard
+/// set (see [`Trainer::on`] / [`Trainer::on_shards`]).
+#[derive(Debug, Clone)]
+enum SourceChoice<'a> {
+    Memory(&'a Dataset),
+    Shards(&'a ShardSet),
+}
 
 /// How the trainer partitions the data over workers.
 #[derive(Debug, Clone)]
@@ -57,7 +65,7 @@ enum PartitionChoice {
 /// of panicking or stringly failing.
 #[derive(Debug, Clone)]
 pub struct Trainer<'a> {
-    data: &'a Dataset,
+    source: SourceChoice<'a>,
     partition: Option<PartitionChoice>,
     loss: LossKind,
     lambda: Option<f64>,
@@ -76,8 +84,28 @@ pub struct Trainer<'a> {
 impl<'a> Trainer<'a> {
     /// Start describing a training run over `data`.
     pub fn on(data: &'a Dataset) -> Self {
+        Self::from_source(SourceChoice::Memory(data))
+    }
+
+    /// Start describing a training run over an on-disk [`ShardSet`]
+    /// (written by [`write_shards`](crate::data::write_shards),
+    /// [`shard_libsvm`](crate::data::shard_libsvm), or `cocoa shard`).
+    ///
+    /// The out-of-core path: worker `kid` opens only shard `kid`
+    /// (mmap-backed when supported) and the full dataset is never
+    /// materialized in memory. The partition is fixed by the shard-set
+    /// manifest, so [`Trainer::workers`] is optional — calling it with a
+    /// `k` other than the set's shard count is a typed [`Error::Config`],
+    /// and [`Trainer::partition`] (an explicit partition) is rejected.
+    /// Trajectories are bit-identical to [`Trainer::on`] over the same
+    /// data with the manifest's partition.
+    pub fn on_shards(set: &'a ShardSet) -> Self {
+        Self::from_source(SourceChoice::Shards(set))
+    }
+
+    fn from_source(source: SourceChoice<'a>) -> Self {
         Trainer {
-            data,
+            source,
             partition: None,
             loss: LossKind::Hinge,
             lambda: None,
@@ -232,22 +260,53 @@ impl<'a> Trainer<'a> {
 
     /// Validate the description and spawn the worker cluster.
     pub fn build(self) -> Result<Session> {
-        let n = self.data.n();
+        let n = match &self.source {
+            SourceChoice::Memory(data) => data.n(),
+            SourceChoice::Shards(set) => set.n(),
+        };
 
         let lambda = self.lambda.ok_or(Error::MissingLambda)?;
         if !lambda.is_finite() || lambda <= 0.0 {
             return Err(Error::InvalidLambda { value: lambda });
         }
 
-        let partition = match self.partition {
-            None => return Err(Error::MissingPartition),
-            Some(PartitionChoice::Workers { k, strategy, seed }) => {
+        let partition = match (&self.source, self.partition) {
+            // Shard sets carry their partition in the manifest — the rows
+            // were physically routed by it at write time, so nothing else
+            // can be honored. workers(k) may restate the shard count;
+            // anything else is a typed error, not a silent repartition.
+            (SourceChoice::Shards(set), choice) => {
+                match choice {
+                    None | Some(PartitionChoice::Workers { k: 0, .. }) => {}
+                    Some(PartitionChoice::Workers { k, .. }) if k == set.k() => {}
+                    Some(PartitionChoice::Workers { k, .. }) => {
+                        return Err(Error::Config {
+                            message: format!(
+                                "workers({k}) does not match the shard set (written \
+                                 for K = {}); reshard or drop the workers() call",
+                                set.k()
+                            ),
+                        });
+                    }
+                    Some(PartitionChoice::Explicit(_)) => {
+                        return Err(Error::Config {
+                            message: "explicit partitions cannot apply to a shard set \
+                                      (rows were already routed by the manifest's \
+                                      partition at write time)"
+                                .into(),
+                        });
+                    }
+                }
+                set.partition()
+            }
+            (SourceChoice::Memory(_), None) => return Err(Error::MissingPartition),
+            (SourceChoice::Memory(_), Some(PartitionChoice::Workers { k, strategy, seed })) => {
                 if k == 0 || k > n {
                     return Err(Error::TooManyWorkers { k, n });
                 }
                 Partition::new(strategy, n, k, seed)
             }
-            Some(PartitionChoice::Explicit(p)) => {
+            (SourceChoice::Memory(_), Some(PartitionChoice::Explicit(p))) => {
                 if p.n() != n {
                     return Err(Error::PartitionMismatch { data_n: n, partition_n: p.n() });
                 }
@@ -300,14 +359,24 @@ impl<'a> Trainer<'a> {
             });
         }
 
-        if self.backend == Backend::Pjrt
-            && !Path::new(&self.artifacts_dir).join("manifest.tsv").exists()
-        {
-            return Err(Error::MissingArtifacts { dir: self.artifacts_dir });
+        if self.backend == Backend::Pjrt {
+            if matches!(self.source, SourceChoice::Shards(_)) {
+                return Err(Error::Config {
+                    message: "the pjrt backend cannot train from shards (it registers \
+                              in-memory blocks at spawn); use Backend::Native"
+                        .into(),
+                });
+            }
+            if !Path::new(&self.artifacts_dir).join("manifest.tsv").exists() {
+                return Err(Error::MissingArtifacts { dir: self.artifacts_dir });
+            }
         }
 
         let cluster = Cluster::spawn(ClusterSpec {
-            data: self.data,
+            source: match self.source {
+                SourceChoice::Memory(data) => DataSource::Memory(data),
+                SourceChoice::Shards(set) => DataSource::Shards(set),
+            },
             partition: &partition,
             loss: self.loss,
             lambda,

@@ -12,7 +12,7 @@ use anyhow::{anyhow, bail, Context, Result};
 
 use crate::algorithms::{self, Aggregation, Algorithm, Budget};
 use crate::api::Trainer;
-use crate::data::{self, Dataset, Partition, PartitionStrategy};
+use crate::data::{self, Dataset, Partition, PartitionStrategy, ShardMode, ShardSet};
 use crate::error::Error;
 use crate::loss::LossKind;
 use crate::netsim::NetworkModel;
@@ -56,6 +56,12 @@ pub enum DatasetSpec {
     ImagenetLike { n: usize, d: usize, noise: f64, seed: u64 },
     Orthogonal { k: usize, rows_per_block: usize, cols_per_block: usize, seed: u64 },
     Libsvm { path: String, d_hint: usize },
+    /// An on-disk shard set written by `cocoa shard` — the out-of-core
+    /// path. Declared as `[data] shards = "dir"` (with optional
+    /// `mmap = false` to force owned reads); mutually exclusive with
+    /// `[dataset]`. Opened via [`ExperimentConfig::open_shards`], never
+    /// [`DatasetSpec::load`] — the whole point is not materializing it.
+    Shards { dir: String, mmap: bool },
 }
 
 impl DatasetSpec {
@@ -71,6 +77,19 @@ impl DatasetSpec {
                 .file_stem()
                 .map(|s| s.to_string_lossy().into_owned())
                 .unwrap_or_else(|| "libsvm".into()),
+            DatasetSpec::Shards { dir, .. } => Path::new(dir)
+                .file_name()
+                .map(|s| s.to_string_lossy().into_owned())
+                .unwrap_or_else(|| "shards".into()),
+        }
+    }
+
+    /// The shard directory + mmap flag when this spec names an on-disk
+    /// shard set (`None` for every in-memory kind).
+    pub fn shards(&self) -> Option<(&str, bool)> {
+        match self {
+            DatasetSpec::Shards { dir, mmap } => Some((dir, *mmap)),
+            _ => None,
         }
     }
 
@@ -91,10 +110,25 @@ impl DatasetSpec {
                 ds.normalize_rows();
                 ds
             }
+            DatasetSpec::Shards { dir, .. } => bail!(
+                "shard set {dir:?} is not loadable as an in-memory dataset: \
+                 open it with ExperimentConfig::open_shards (the out-of-core path)"
+            ),
         })
     }
 
     fn from_doc(doc: &Doc) -> Result<Self> {
+        // the out-of-core surface: `[data] shards = "dir"` names an
+        // on-disk shard set instead of an in-memory [dataset]
+        if let Some(dir) = doc.get("data", "shards").and_then(|v| v.as_str()) {
+            if doc.has_section("dataset") {
+                bail!("[data] shards = ... and [dataset] are mutually exclusive");
+            }
+            return Ok(DatasetSpec::Shards {
+                dir: dir.to_string(),
+                mmap: doc.get("data", "mmap").and_then(|v| v.as_bool()).unwrap_or(true),
+            });
+        }
         let kind = doc.str_of("dataset", "kind")?;
         let noise = doc.f64_or("dataset", "noise", 0.1);
         let seed = doc.u64_or("dataset", "seed", 0);
@@ -418,6 +452,47 @@ impl ExperimentConfig {
             .label(self.dataset.name())
     }
 
+    /// Open the shard set a `[data] shards = "dir"` config names,
+    /// honoring its `mmap` flag. Typed [`Error::Config`] when the config
+    /// is not shard-backed.
+    pub fn open_shards(&self) -> Result<ShardSet, Error> {
+        match &self.dataset {
+            DatasetSpec::Shards { dir, mmap } => {
+                let mode = if *mmap { ShardMode::default_mode() } else { ShardMode::Owned };
+                ShardSet::open_with_mode(Path::new(dir), mode)
+            }
+            other => Err(Error::Config {
+                message: format!(
+                    "dataset {} is not shard-backed: add [data] shards = \"dir\" \
+                     (or load it with DatasetSpec::load)",
+                    other.name()
+                ),
+            }),
+        }
+    }
+
+    /// The shard-backed counterpart of [`ExperimentConfig::trainer`]: a
+    /// [`Trainer`] over an opened [`ShardSet`]. The partition comes from
+    /// the set's manifest; a `[partition] k` that disagrees with the
+    /// set's shard count surfaces as a typed error at `build()`.
+    pub fn trainer_shards<'a>(&self, set: &'a ShardSet) -> Trainer<'a> {
+        let t = Trainer::on_shards(set)
+            .loss(self.loss)
+            .lambda(self.lambda)
+            .regularizer(self.regularizer)
+            .solver(self.algorithm.solver_kind())
+            .backend(self.run.backend)
+            .artifacts_dir(self.artifacts_dir.as_str())
+            .network(self.netsim)
+            .transport(self.transport.clone())
+            .seed(self.run.seed)
+            .threads(self.runtime.threads)
+            .label(self.dataset.name());
+        // k = 0 means the config had no [partition] section (the manifest
+        // is authoritative); a stated k is restated so build() checks it
+        if self.partition.k == 0 { t } else { t.workers(self.partition.k) }
+    }
+
     fn parse_toml(text: &str) -> Result<Self> {
         let doc = Doc::parse(text)?;
         let loss_name = doc.str_or("loss", "kind", "hinge");
@@ -482,9 +557,17 @@ impl ExperimentConfig {
         } else {
             TransportKind::InProc
         };
+        let dataset = DatasetSpec::from_doc(&doc)?;
+        // shard sets carry their partition in the manifest, so [partition]
+        // is optional for them; k = 0 records "not stated"
+        let partition = if !doc.has_section("partition") && dataset.shards().is_some() {
+            PartitionSpec { k: 0, strategy: PartitionStrategy::Contiguous, seed: 0 }
+        } else {
+            PartitionSpec::from_doc(&doc)?
+        };
         Ok(ExperimentConfig {
-            dataset: DatasetSpec::from_doc(&doc)?,
-            partition: PartitionSpec::from_doc(&doc)?,
+            dataset,
+            partition,
             algorithm: AlgorithmSpec::from_doc(&doc)?,
             loss,
             lambda: doc.f64_of("", "lambda")?,

@@ -34,7 +34,7 @@ use std::sync::mpsc::channel;
 use anyhow::{anyhow, Result};
 
 use crate::config::Backend;
-use crate::data::{Dataset, Partition};
+use crate::data::{Dataset, Partition, ShardSet};
 use crate::loss::LossKind;
 use crate::netsim::{NetworkModel, StragglerModel};
 use crate::objective;
@@ -45,10 +45,47 @@ use crate::solvers::{Block, SolverKind};
 use crate::telemetry::StopReason;
 use crate::transport::{InProc, Ledger, Transcript, Transport, TransportKind};
 
+/// Where the training rows come from: a resident [`Dataset`] (the
+/// classic path — workers get `data.subset(block)`) or an on-disk
+/// [`ShardSet`] (the out-of-core path — worker `kid` opens only shard
+/// `kid`, typically mmap-backed, and the leader never holds the data at
+/// all; evaluation was already fully distributed). The two produce
+/// bit-identical trajectories — shard `kid` stores exactly
+/// `data.subset(&partition.blocks[kid])`, bit for bit.
+pub(crate) enum DataSource<'a> {
+    Memory(&'a Dataset),
+    Shards(&'a ShardSet),
+}
+
+impl DataSource<'_> {
+    pub fn n(&self) -> usize {
+        match self {
+            DataSource::Memory(data) => data.n(),
+            DataSource::Shards(set) => set.n(),
+        }
+    }
+
+    pub fn d(&self) -> usize {
+        match self {
+            DataSource::Memory(data) => data.d(),
+            DataSource::Shards(set) => set.d(),
+        }
+    }
+
+    /// The dataset content fingerprint (identical across both paths: the
+    /// shard manifest stores `Dataset::fingerprint` of the sharded data).
+    pub fn fingerprint(&self) -> String {
+        match self {
+            DataSource::Memory(data) => data.fingerprint(),
+            DataSource::Shards(set) => set.fingerprint().to_string(),
+        }
+    }
+}
+
 /// Everything [`Cluster::spawn`] needs, by name. Built and validated by
 /// [`crate::Trainer`] — the only public road to a cluster.
 pub(crate) struct ClusterSpec<'a> {
-    pub data: &'a Dataset,
+    pub source: DataSource<'a>,
     pub partition: &'a Partition,
     pub loss: LossKind,
     pub lambda: f64,
@@ -104,6 +141,37 @@ pub(crate) fn native_worker_config(
         seed: worker_seed(seed, kid),
         threads,
     }
+}
+
+/// The out-of-core counterpart of [`native_worker_config`]: build worker
+/// `kid`'s configuration straight from its on-disk shard. The shard file
+/// already holds exactly `data.subset(&partition.blocks[kid])` (values,
+/// labels, *and* the norms a subset would recompute), so the resulting
+/// [`Block`] is bit-identical to the in-memory path's — one construction
+/// shared by [`Cluster::spawn`] and the `cocoa worker` process.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn shard_worker_config(
+    set: &ShardSet,
+    kid: usize,
+    loss: LossKind,
+    lambda: f64,
+    regularizer: RegularizerKind,
+    solver: SolverKind,
+    seed: u64,
+    threads: usize,
+) -> crate::error::Result<WorkerConfig> {
+    // lambda_n scales by the GLOBAL row count, not the shard's
+    let lambda_n = lambda * regularizer.build().strong_convexity() * set.n() as f64;
+    let block = Block::new(set.open_shard(kid)?, lambda_n);
+    Ok(WorkerConfig {
+        id: kid,
+        block,
+        loss: loss.build(),
+        solver: solver.build(threads),
+        lambda,
+        seed: worker_seed(seed, kid),
+        threads,
+    })
 }
 
 /// Exact communication/time accounting for a run.
@@ -185,7 +253,7 @@ impl Cluster {
     /// [`crate::Trainer::build`], which validates the spec first.
     pub(crate) fn spawn(spec: ClusterSpec<'_>) -> Result<Cluster> {
         let ClusterSpec {
-            data,
+            source,
             partition,
             loss,
             lambda,
@@ -202,8 +270,8 @@ impl Cluster {
         // the partition was already validated (with typed errors) by
         // Trainer::build — the only road here
         let k = partition.k();
-        let n = data.n();
-        let d = data.d();
+        let n = source.n();
+        let d = source.d();
         let reg = regularizer.build();
         // the normalized problem's strength: lambda * sigma. For L2
         // (sigma = 1) this is exactly lambda, so Block constants and every
@@ -218,8 +286,13 @@ impl Cluster {
             if backend == Backend::Pjrt {
                 return Err(anyhow!("net transport requires the native backend"));
             }
-            let fingerprint = crate::transport::net::run_fingerprint(
-                data,
+            // Both sources hash to the same run fingerprint: the shard
+            // manifest stores the sharded dataset's content fingerprint,
+            // so in-memory and shard-fed leaders accept the same workers.
+            let fingerprint = crate::transport::net::run_fingerprint_parts(
+                &source.fingerprint(),
+                n,
+                d,
                 partition,
                 loss,
                 regularizer,
@@ -262,6 +335,13 @@ impl Cluster {
             });
         }
 
+        // The PJRT path registers in-memory blocks with the engine at
+        // spawn; feeding it from shards would force a full materialization
+        // and defeat the out-of-core point. Rejected, not silently slow.
+        if backend == Backend::Pjrt && matches!(source, DataSource::Shards(_)) {
+            return Err(anyhow!("shard-backed training requires the native backend"));
+        }
+
         let engine = match backend {
             Backend::Native => None,
             Backend::Pjrt => Some(runtime::Engine::start(artifacts_dir)?),
@@ -273,8 +353,8 @@ impl Cluster {
         let mut block_sizes = Vec::with_capacity(k);
 
         for (kid, rows) in partition.blocks.iter().enumerate() {
-            let cfg = match (&backend, &engine) {
-                (Backend::Pjrt, Some(engine)) => {
+            let cfg = match (&backend, &engine, &source) {
+                (Backend::Pjrt, Some(engine), DataSource::Memory(data)) => {
                     // subset() compacts the shard to contiguous local-row
                     // storage; Block::new fills the per-shard caches
                     // (curvatures, sparse column-touch set).
@@ -299,7 +379,7 @@ impl Cluster {
                         threads: 1,
                     }
                 }
-                _ => native_worker_config(
+                (_, _, DataSource::Memory(data)) => native_worker_config(
                     data,
                     rows,
                     loss,
@@ -310,6 +390,19 @@ impl Cluster {
                     kid,
                     threads,
                 ),
+                (_, _, DataSource::Shards(set)) => {
+                    let wc = shard_worker_config(
+                        set, kid, loss, lambda, regularizer, solver, seed, threads,
+                    )?;
+                    if wc.block.n_k() != rows.len() {
+                        return Err(anyhow!(
+                            "shard {kid} holds {} rows but the partition block has {}",
+                            wc.block.n_k(),
+                            rows.len()
+                        ));
+                    }
+                    wc
+                }
             };
             block_sizes.push(cfg.block.n_k());
             let (tx, rx) = channel::<ToWorker>();
@@ -838,7 +931,7 @@ mod tests {
 
     fn spec_cluster(data: &Dataset, part: &Partition, net: NetworkModel, seed: u64) -> Cluster {
         Cluster::spawn(ClusterSpec {
-            data,
+            source: DataSource::Memory(data),
             partition: part,
             loss: LossKind::Hinge,
             lambda: 0.1,
@@ -948,7 +1041,7 @@ mod tests {
         let data = cov_like(40, 5, 0.1, 2);
         let part = Partition::new(PartitionStrategy::Contiguous, 40, 2, 0);
         let mut cluster = Cluster::spawn(ClusterSpec {
-            data: &data,
+            source: DataSource::Memory(&data),
             partition: &part,
             loss: LossKind::Hinge,
             lambda: 0.1,
@@ -991,7 +1084,7 @@ mod tests {
         let data = cov_like(60, 8, 0.1, 9);
         let part = Partition::new(PartitionStrategy::Contiguous, 60, 2, 0);
         let mut cluster = Cluster::spawn(ClusterSpec {
-            data: &data,
+            source: DataSource::Memory(&data),
             partition: &part,
             loss: LossKind::Squared,
             lambda: 0.2,

@@ -1,9 +1,12 @@
-//! LibSVM-format reader/writer.
+//! LibSVM-format reader, writer, and streaming sharder.
 //!
 //! The paper's datasets (cov, rcv1, imagenet) ship in this format; with a
 //! local copy, `[dataset] kind = "libsvm", path = "..."` in the experiment
 //! config drops the real corpus into any harness. The writer exists so
-//! synthetic datasets can be exported and round-tripped.
+//! synthetic datasets can be exported and round-tripped. For corpora that
+//! do not fit in memory, [`shard_libsvm`] streams the file once and writes
+//! per-worker on-disk shards directly (see [`crate::data::mmap`] and
+//! `docs/DATA.md`).
 //!
 //! The reader is hardened against the format's wild variants: `qid:` rank
 //! fields and comments (full-line and trailing `# ...`) are accepted,
@@ -26,11 +29,95 @@ use std::path::Path;
 use anyhow::{Context, Result};
 
 use crate::error::Error;
+use crate::kernels;
 
-use super::{CsrMatrix, Dataset, Features};
+use super::mmap::{ShardSet, ShardSetWriter};
+use super::{CsrMatrix, Dataset, Features, PartitionStrategy};
 
 fn bad(line: usize, message: impl Into<String>) -> Error {
     Error::Libsvm { line, message: message.into() }
+}
+
+/// Strip the trailing comment (`#` starts one anywhere) and surrounding
+/// whitespace; `None` when nothing remains. Both the whole-file reader
+/// and the streaming sharder (including its row-counting pre-pass) agree
+/// on this single definition of "a data line".
+fn data_line(raw: &str) -> Option<&str> {
+    let line = match raw.split_once('#') {
+        Some((head, _comment)) => head,
+        None => raw,
+    }
+    .trim();
+    if line.is_empty() {
+        None
+    } else {
+        Some(line)
+    }
+}
+
+/// Parse one non-empty data line: `label [qid:<q>] idx:val ...` with
+/// 1-based indices. Fills `entries` with 0-based `(col, value)` pairs in
+/// file order and returns the label; `scratch` is a reusable buffer for
+/// the sorted-copy duplicate scan. Every malformed token is the typed
+/// [`Error::Libsvm`](crate::error::Error::Libsvm) carrying `lineno`.
+fn parse_data_line(
+    lineno: usize,
+    line: &str,
+    entries: &mut Vec<(u32, f64)>,
+    scratch: &mut Vec<u32>,
+) -> Result<f64, Error> {
+    entries.clear();
+    let mut parts = line.split_ascii_whitespace().peekable();
+    let label_tok = parts.next().expect("non-empty trimmed line has a token");
+    let label: f64 = label_tok
+        .parse()
+        .map_err(|_| bad(lineno, format!("bad label {label_tok:?}")))?;
+    if !label.is_finite() {
+        return Err(bad(lineno, format!("non-finite label {label_tok:?}")));
+    }
+    // optional ranking qid field between the label and the features
+    if let Some(tok) = parts.peek() {
+        if let Some(q) = tok.strip_prefix("qid:") {
+            q.parse::<u64>().map_err(|_| bad(lineno, format!("bad qid {q:?}")))?;
+            parts.next();
+        }
+    }
+    for tok in parts {
+        let (idx, val) = tok
+            .split_once(':')
+            .ok_or_else(|| bad(lineno, format!("bad feature {tok:?} (want idx:val)")))?;
+        let idx: usize = idx
+            .parse()
+            .map_err(|_| bad(lineno, format!("bad index {idx:?}")))?;
+        if idx == 0 {
+            return Err(bad(lineno, "libsvm indices are 1-based, found index 0"));
+        }
+        if idx > u32::MAX as usize {
+            return Err(bad(lineno, format!("index {idx} exceeds u32 range")));
+        }
+        let val: f64 = val
+            .parse()
+            .map_err(|_| bad(lineno, format!("bad value {val:?}")))?;
+        if !val.is_finite() {
+            return Err(bad(lineno, format!("non-finite value {val:?} at index {idx}")));
+        }
+        entries.push(((idx - 1) as u32, val));
+    }
+    // duplicate indices are ambiguous (last-wins? sum?) — reject them;
+    // out-of-order indices are fine (callers sort per row)
+    scratch.clear();
+    scratch.extend(entries.iter().map(|&(c, _)| c));
+    scratch.sort_unstable();
+    if let Some(dup) = scratch.windows(2).find(|p| p[0] == p[1]) {
+        return Err(bad(lineno, format!("duplicate feature index {}", dup[0] + 1)));
+    }
+    Ok(label)
+}
+
+/// The whole-file classification convention: only when *every* label is
+/// in `{-1, 0, 1, 2}` is the file binary (see module docs).
+fn is_classification_label(y: f64) -> bool {
+    y == -1.0 || y == 0.0 || y == 1.0 || y == 2.0
 }
 
 /// Parse a LibSVM file: `label [qid:<q>] idx:val idx:val ... [# comment]`
@@ -45,78 +132,27 @@ pub fn read_libsvm<P: AsRef<Path>>(path: P, d_hint: usize) -> Result<Dataset, Er
     let mut labels = Vec::new();
     let mut triplets: Vec<(usize, u32, f64)> = Vec::new();
     let mut max_col: usize = d_hint;
-    // per-row duplicate detection without a hash set (offline build):
-    // collect the row's indices and scan a sorted copy for equal neighbors
-    let mut row_cols: Vec<u32> = Vec::new();
+    // reusable per-row buffers (duplicate detection scans a sorted copy
+    // rather than a hash set — offline build)
+    let mut entries: Vec<(u32, f64)> = Vec::new();
+    let mut scratch: Vec<u32> = Vec::new();
     for (lineno, line) in reader.lines().enumerate() {
         let lineno = lineno + 1; // 1-based for error messages
         let line = line.map_err(|e| bad(lineno, format!("read: {e}")))?;
-        // strip trailing comments ('#' starts a comment anywhere on the
-        // line) and surrounding whitespace (including trailing '\r')
-        let line = match line.split_once('#') {
-            Some((head, _comment)) => head,
-            None => line.as_str(),
-        }
-        .trim();
-        if line.is_empty() {
-            continue;
-        }
+        let Some(line) = data_line(&line) else { continue };
         let row = labels.len();
-        let mut parts = line.split_ascii_whitespace().peekable();
-        let label_tok = parts.next().expect("non-empty trimmed line has a token");
-        let label: f64 = label_tok
-            .parse()
-            .map_err(|_| bad(lineno, format!("bad label {label_tok:?}")))?;
-        if !label.is_finite() {
-            return Err(bad(lineno, format!("non-finite label {label_tok:?}")));
-        }
+        let label = parse_data_line(lineno, line, &mut entries, &mut scratch)?;
         labels.push(label);
-        // optional ranking qid field between the label and the features
-        if let Some(tok) = parts.peek() {
-            if let Some(q) = tok.strip_prefix("qid:") {
-                q.parse::<u64>()
-                    .map_err(|_| bad(lineno, format!("bad qid {q:?}")))?;
-                parts.next();
-            }
-        }
-        row_cols.clear();
-        for tok in parts {
-            let (idx, val) = tok
-                .split_once(':')
-                .ok_or_else(|| bad(lineno, format!("bad feature {tok:?} (want idx:val)")))?;
-            let idx: usize = idx
-                .parse()
-                .map_err(|_| bad(lineno, format!("bad index {idx:?}")))?;
-            if idx == 0 {
-                return Err(bad(lineno, "libsvm indices are 1-based, found index 0"));
-            }
-            if idx > u32::MAX as usize {
-                return Err(bad(lineno, format!("index {idx} exceeds u32 range")));
-            }
-            let val: f64 = val
-                .parse()
-                .map_err(|_| bad(lineno, format!("bad value {val:?}")))?;
-            if !val.is_finite() {
-                return Err(bad(lineno, format!("non-finite value {val:?} at index {idx}")));
-            }
-            max_col = max_col.max(idx);
-            row_cols.push((idx - 1) as u32);
-            triplets.push((row, (idx - 1) as u32, val));
-        }
-        // duplicate indices are ambiguous (last-wins? sum?) — reject them;
-        // out-of-order indices are fine (the CSR builder sorts per row)
-        row_cols.sort_unstable();
-        if let Some(dup) = row_cols.windows(2).find(|p| p[0] == p[1]) {
-            return Err(bad(lineno, format!("duplicate feature index {}", dup[0] + 1)));
+        for &(c, v) in &entries {
+            max_col = max_col.max(c as usize + 1);
+            triplets.push((row, c, v));
         }
     }
     // normalize the {0,1} / {1,2} classification conventions to {-1,+1},
     // but only when the whole file looks like one — a single real-valued
     // response makes this a regression target set and binarizing it would
     // silently destroy the labels (see module docs)
-    let classification = labels
-        .iter()
-        .all(|&y| y == -1.0 || y == 0.0 || y == 1.0 || y == 2.0);
+    let classification = labels.iter().all(|&y| is_classification_label(y));
     if classification {
         for y in labels.iter_mut() {
             *y = if *y <= 0.0 { -1.0 } else { 1.0 };
@@ -152,6 +188,114 @@ pub fn write_libsvm<P: AsRef<Path>>(ds: &Dataset, path: P) -> Result<()> {
         writeln!(w)?;
     }
     Ok(())
+}
+
+/// Stream a LibSVM file straight into per-worker on-disk shards (the
+/// `cocoa shard --libsvm` ingest path) without ever materializing the
+/// full dataset: each parsed row goes to its partition block's shard
+/// file as it streams by, so peak memory is O(n) scalars — labels, row
+/// norms, per-shard `indptr` — never O(nnz).
+///
+/// The result is byte-for-byte what `read_libsvm` + `write_shards` would
+/// produce: the same hardened per-line parser, the same whole-file
+/// classification binarization, and (with `normalize`) the same
+/// `Dataset::normalize_rows` arithmetic, applied per row in stream order.
+/// A shard opened from the output is therefore bit-identical to
+/// `read_libsvm(path)?.subset(&partition.blocks[k])`.
+///
+/// `strategy` follows [`PartitionStrategy`]: `round_robin` is truly
+/// single-pass; `contiguous` and `random` need the row count up front and
+/// cost one extra cheap line-counting pass over the file. `d_hint`
+/// pre-sizes the column count exactly as in [`read_libsvm`] (pass 0 to
+/// infer).
+///
+/// ```
+/// use cocoa::data::{read_libsvm, shard_libsvm, PartitionStrategy};
+///
+/// let dir = std::env::temp_dir().join("cocoa_doc_shard_libsvm");
+/// let _ = std::fs::remove_dir_all(&dir);
+/// std::fs::create_dir_all(&dir).unwrap();
+/// let svm = dir.join("tiny.svm");
+/// std::fs::write(&svm, "+1 1:0.5 3:2.0\n-1 2:1.0\n+1 3:0.1\n-1 1:0.2\n").unwrap();
+///
+/// let set = shard_libsvm(&svm, dir.join("shards"), 2,
+///                        PartitionStrategy::RoundRobin, 0, 0, false).unwrap();
+/// assert_eq!((set.n(), set.d(), set.k()), (4, 3, 2));
+/// // shard 0 holds global rows {0, 2}, exactly as the in-memory path would
+/// let full = read_libsvm(&svm, 0).unwrap();
+/// assert_eq!(set.open_shard(0).unwrap().labels,
+///            full.subset(&set.partition().blocks[0]).labels);
+/// ```
+pub fn shard_libsvm<P: AsRef<Path>, Q: AsRef<Path>>(
+    path: P,
+    dir: Q,
+    k: usize,
+    strategy: PartitionStrategy,
+    partition_seed: u64,
+    d_hint: usize,
+    normalize: bool,
+) -> Result<ShardSet, Error> {
+    let path = path.as_ref();
+    let open = || -> Result<BufReader<File>, Error> {
+        let file = File::open(path)
+            .map_err(|e| bad(0, format!("open {}: {e}", path.display())))?;
+        Ok(BufReader::new(file))
+    };
+    // contiguous/random block boundaries depend on n, so those strategies
+    // pay a cheap counting pre-pass; round_robin streams in one pass
+    let n = match strategy {
+        PartitionStrategy::RoundRobin => None,
+        _ => {
+            let mut count = 0usize;
+            for (lineno, line) in open()?.lines().enumerate() {
+                let line = line.map_err(|e| bad(lineno + 1, format!("read: {e}")))?;
+                if data_line(&line).is_some() {
+                    count += 1;
+                }
+            }
+            Some(count)
+        }
+    };
+    let mut writer = ShardSetWriter::create(dir, k, strategy, partition_seed, n)?;
+    let mut max_col: usize = d_hint;
+    let mut entries: Vec<(u32, f64)> = Vec::new();
+    let mut scratch: Vec<u32> = Vec::new();
+    let mut idx_buf: Vec<u32> = Vec::new();
+    let mut val_buf: Vec<f64> = Vec::new();
+    let mut classification = true;
+    for (lineno, line) in open()?.lines().enumerate() {
+        let lineno = lineno + 1;
+        let line = line.map_err(|e| bad(lineno, format!("read: {e}")))?;
+        let Some(line) = data_line(&line) else { continue };
+        let label = parse_data_line(lineno, line, &mut entries, &mut scratch)?;
+        classification &= is_classification_label(label);
+        // sort by column first: norms are summed over the sorted row,
+        // matching the bits the in-memory path (from_triplets then
+        // Dataset::new) produces
+        entries.sort_unstable_by_key(|&(c, _)| c);
+        idx_buf.clear();
+        val_buf.clear();
+        for &(c, v) in &entries {
+            max_col = max_col.max(c as usize + 1);
+            idx_buf.push(c);
+            val_buf.push(v);
+        }
+        let mut norm_sq = kernels::sparse_norm_sq(&val_buf);
+        if normalize {
+            // exactly Dataset::normalize_rows: rows inside the unit ball
+            // are untouched, scaled rows cache a norm of exactly 1.0
+            let norm = norm_sq.sqrt();
+            if norm > 1.0 {
+                kernels::scale_in_place(&mut val_buf, 1.0 / norm);
+                norm_sq = 1.0;
+            }
+        }
+        writer.push_row(&idx_buf, &val_buf, label, norm_sq)?;
+    }
+    if classification {
+        writer.map_labels(|y| if y <= 0.0 { -1.0 } else { 1.0 });
+    }
+    writer.finish(max_col)
 }
 
 #[cfg(test)]
@@ -283,6 +427,76 @@ mod tests {
     fn missing_file_is_typed_not_a_panic() {
         let err = read_libsvm("/nonexistent/cocoa/no.svm", 0).unwrap_err();
         assert!(matches!(err, Error::Libsvm { line: 0, .. }), "{err}");
+    }
+
+    #[test]
+    fn stream_sharding_matches_in_memory_partition_bitwise() {
+        // the ingester property: for every strategy, shard k of the
+        // streamed file == read_libsvm(file).subset(blocks[k]), bit for bit
+        let ds = crate::data::rcv1_like(60, 25, 4, 0.1, 17);
+        let dir = std::env::temp_dir().join("cocoa_libsvm_shard_prop");
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("prop.svm");
+        write_libsvm(&ds, &p).unwrap();
+        let full = read_libsvm(&p, 0).unwrap();
+        for strategy in [
+            PartitionStrategy::Contiguous,
+            PartitionStrategy::RoundRobin,
+            PartitionStrategy::Random,
+        ] {
+            let out = dir.join(format!("shards_{}", strategy.name()));
+            let set = shard_libsvm(&p, &out, 3, strategy, 7, 0, false).unwrap();
+            assert_eq!(set.fingerprint(), full.fingerprint(), "{strategy:?}");
+            let partition = set.partition();
+            for kid in 0..3 {
+                let shard = set.open_shard(kid).unwrap();
+                let reference = full.subset(&partition.blocks[kid]);
+                assert_eq!(shard.labels, reference.labels, "{strategy:?} shard {kid}");
+                for i in 0..shard.n() {
+                    assert_eq!(
+                        shard.norm_sq(i).to_bits(),
+                        reference.norm_sq(i).to_bits(),
+                        "{strategy:?} shard {kid} row {i}"
+                    );
+                    assert_eq!(
+                        shard.features.row_dense(i),
+                        reference.features.row_dense(i),
+                        "{strategy:?} shard {kid} row {i}"
+                    );
+                }
+            }
+        }
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn stream_sharding_normalize_matches_normalize_rows() {
+        let ds = crate::data::rcv1_like(40, 20, 4, 0.1, 23);
+        let dir = std::env::temp_dir().join("cocoa_libsvm_shard_norm");
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("norm.svm");
+        write_libsvm(&ds, &p).unwrap();
+        let mut full = read_libsvm(&p, 0).unwrap();
+        full.normalize_rows();
+        let set =
+            shard_libsvm(&p, dir.join("shards"), 2, PartitionStrategy::Contiguous, 0, 0, true)
+                .unwrap();
+        assert_eq!(set.fingerprint(), full.fingerprint());
+        let partition = set.partition();
+        for kid in 0..2 {
+            let shard = set.open_shard(kid).unwrap();
+            let reference = full.subset(&partition.blocks[kid]);
+            for i in 0..shard.n() {
+                assert_eq!(
+                    shard.features.row_dense(i),
+                    reference.features.row_dense(i),
+                    "shard {kid} row {i}"
+                );
+            }
+        }
+        std::fs::remove_dir_all(&dir).unwrap();
     }
 
     #[test]

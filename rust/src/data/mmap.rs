@@ -1,0 +1,1271 @@
+//! Out-of-core shard storage: the versioned on-disk CSR format, a
+//! streaming shard-set writer, and the mmap-backed read path.
+//!
+//! A *shard set* is a directory holding one `shard_NNNN.bin` per worker
+//! plus a `manifest.toml` describing the global dataset (n, d, nnz, the
+//! partition that produced the shards, and the full-dataset fingerprint
+//! used by the net handshake). Shard `k` contains exactly the rows of
+//! partition block `k`, in ascending global-row order — the same rows,
+//! in the same order, that the in-memory path's `Dataset::subset` would
+//! hand worker `k`. Labels and cached row norms are stored alongside the
+//! CSR sections, so opening a shard never recomputes (and therefore never
+//! pages through) anything: the trajectory from shards is bit-identical
+//! to the in-memory trajectory by construction.
+//!
+//! Every section is FNV-1a checksummed and the open path verifies the
+//! checksums *and* the CSR invariants (per-row indices strictly
+//! increasing, every `index < cols`, `indptr` monotone with
+//! `indptr[rows] == nnz`, all floats finite) with buffered streaming
+//! reads before any data is trusted. That verification is what keeps the
+//! unchecked gather kernels sound on mapped data — see `docs/DATA.md`
+//! for the full contract. Corruption is rejected with the typed
+//! [`Error::Shard`].
+//!
+//! On 64-bit linux/macOS the index/value sections are `mmap`ed
+//! (read-only, `MAP_PRIVATE`) and only faulted in as rows are touched; a
+//! residency budget periodically drops clean pages with
+//! `madvise(MADV_DONTNEED)` so peak RSS stays bounded far below the
+//! dataset size. Elsewhere — or with [`ShardMode::Owned`] — the sections
+//! are simply read into memory, same bytes, same trajectory.
+//!
+//! ```
+//! use cocoa::data::{rcv1_like, write_shards, PartitionStrategy, ShardSet};
+//!
+//! let data = rcv1_like(60, 40, 4, 0.1, 7);
+//! let dir = std::env::temp_dir().join("cocoa_doc_shards");
+//! let _ = std::fs::remove_dir_all(&dir);
+//! let set = write_shards(&data, PartitionStrategy::Contiguous, 2, 0, &dir).unwrap();
+//! assert_eq!((set.n(), set.d(), set.k()), (60, 40, 2));
+//! let shard0 = set.open_shard(0).unwrap();
+//! assert_eq!(shard0.n(), 30);
+//! assert_eq!(set.fingerprint(), data.fingerprint());
+//! ```
+
+use std::fs::File;
+use std::io::{BufReader, BufWriter, Read, Seek, Write};
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Arc;
+
+use crate::error::{Error, Result};
+use crate::kernels;
+use crate::util::toml_lite::Doc;
+
+use super::{
+    fingerprint_parts, CsrMatrix, Dataset, Features, Partition, PartitionStrategy,
+};
+
+/// First 8 bytes of every shard file.
+pub const SHARD_MAGIC: &[u8; 8] = b"CCOASHRD";
+/// On-disk format version; the open path rejects any other value.
+pub const SHARD_FORMAT_VERSION: u32 = 1;
+/// Manifest format version (the `manifest.toml` layout).
+pub const MANIFEST_VERSION: u32 = 1;
+
+/// Fixed header size: magic + version + shape + 5-entry section table +
+/// header checksum, padded to an 8-byte boundary.
+const HEADER_BYTES: usize = 192;
+/// Section order inside a shard file.
+const SEC_INDPTR: usize = 0;
+const SEC_INDICES: usize = 1;
+const SEC_VALUES: usize = 2;
+const SEC_LABELS: usize = 3;
+const SEC_NORMS: usize = 4;
+const SECTIONS: usize = 5;
+
+/// Touched-bytes budget before the mapped sections are dropped back to
+/// the page cache with `madvise(MADV_DONTNEED)`. Clean read-only
+/// file-backed pages refault to identical bytes, so this bounds resident
+/// memory without affecting the trajectory.
+pub(crate) const RESIDENCY_BUDGET_BYTES: usize = 16 << 20;
+
+fn shard_err(path: &Path, message: impl Into<String>) -> Error {
+    Error::Shard { path: path.display().to_string(), message: message.into() }
+}
+
+// ---------------------------------------------------------------------------
+// FNV-1a over byte streams (the section checksum)
+// ---------------------------------------------------------------------------
+
+#[derive(Debug, Clone, Copy)]
+struct Fnv(u64);
+
+impl Fnv {
+    fn new() -> Fnv {
+        Fnv(0xcbf29ce484222325)
+    }
+
+    fn update(&mut self, bytes: &[u8]) {
+        let mut h = self.0;
+        for &b in bytes {
+            h ^= b as u64;
+            h = h.wrapping_mul(0x100000001b3);
+        }
+        self.0 = h;
+    }
+
+    fn finish(self) -> u64 {
+        self.0
+    }
+}
+
+// ---------------------------------------------------------------------------
+// mmap FFI — same direct-binding pattern as telemetry::thread_cpu_time_s
+// (the offline build carries no libc crate). Gated to 64-bit unix targets
+// we actually run on; everywhere else ShardMode::Mapped falls back to an
+// owned in-memory load of the same verified bytes.
+// ---------------------------------------------------------------------------
+
+#[cfg(all(
+    unix,
+    target_pointer_width = "64",
+    any(target_os = "linux", target_os = "macos")
+))]
+mod sys {
+    use std::os::unix::io::AsRawFd;
+
+    pub const PROT_READ: i32 = 1;
+    pub const MAP_PRIVATE: i32 = 2;
+    pub const MADV_DONTNEED: i32 = 4;
+
+    extern "C" {
+        fn mmap(
+            addr: *mut u8,
+            len: usize,
+            prot: i32,
+            flags: i32,
+            fd: i32,
+            offset: i64,
+        ) -> *mut u8;
+        fn munmap(addr: *mut u8, len: usize) -> i32;
+        fn madvise(addr: *mut u8, len: usize, advice: i32) -> i32;
+    }
+
+    pub fn map_file(file: &std::fs::File, len: usize) -> Option<*mut u8> {
+        if len == 0 {
+            return None;
+        }
+        // SAFETY: a fresh read-only private mapping of `len` bytes backed
+        // by an open fd; the kernel validates every argument.
+        let ptr = unsafe {
+            mmap(
+                std::ptr::null_mut(),
+                len,
+                PROT_READ,
+                MAP_PRIVATE,
+                file.as_raw_fd(),
+                0,
+            )
+        };
+        if ptr as isize == -1 || ptr.is_null() {
+            None
+        } else {
+            Some(ptr)
+        }
+    }
+
+    /// # Safety
+    /// `ptr`/`len` must be a live mapping returned by [`map_file`].
+    pub unsafe fn unmap(ptr: *mut u8, len: usize) {
+        munmap(ptr, len);
+    }
+
+    /// Best-effort `madvise(MADV_DONTNEED)` over the 64 KiB-aligned
+    /// interior of `[ptr, ptr+len)` — 64 KiB alignment is a multiple of
+    /// every page size we run on, so the call never straddles a partial
+    /// page. Failure is ignored: DONTNEED on a clean private file
+    /// mapping is purely an RSS hint.
+    ///
+    /// # Safety
+    /// `ptr`/`len` must be a live mapping returned by [`map_file`].
+    pub unsafe fn drop_resident(ptr: *mut u8, len: usize) {
+        const ALIGN: usize = 64 << 10;
+        let start = ptr as usize;
+        let lo = (start + ALIGN - 1) & !(ALIGN - 1);
+        let hi = (start + len) & !(ALIGN - 1);
+        if hi > lo {
+            madvise(lo as *mut u8, hi - lo, MADV_DONTNEED);
+        }
+    }
+
+    pub const SUPPORTED: bool = true;
+}
+
+#[cfg(not(all(
+    unix,
+    target_pointer_width = "64",
+    any(target_os = "linux", target_os = "macos")
+)))]
+mod sys {
+    pub fn map_file(_file: &std::fs::File, _len: usize) -> Option<*mut u8> {
+        None
+    }
+
+    /// # Safety
+    /// Never called: `map_file` never returns a pointer on this target.
+    pub unsafe fn unmap(_ptr: *mut u8, _len: usize) {}
+
+    /// # Safety
+    /// Never called: `map_file` never returns a pointer on this target.
+    pub unsafe fn drop_resident(_ptr: *mut u8, _len: usize) {}
+
+    pub const SUPPORTED: bool = false;
+}
+
+/// Whether this build can actually `mmap` shard files. When `false`,
+/// [`ShardMode::Mapped`] silently degrades to an owned in-memory load of
+/// the same verified bytes (same trajectory, no RSS bound).
+pub fn mmap_supported() -> bool {
+    sys::SUPPORTED
+}
+
+/// One live read-only file mapping; unmapped on drop.
+struct MapRegion {
+    ptr: *mut u8,
+    len: usize,
+}
+
+// SAFETY: the mapping is read-only for its whole lifetime; concurrent
+// reads from worker threads are races only with `madvise(DONTNEED)`,
+// which atomically replaces clean pages with identical refaulted bytes.
+unsafe impl Send for MapRegion {}
+unsafe impl Sync for MapRegion {}
+
+impl Drop for MapRegion {
+    fn drop(&mut self) {
+        // SAFETY: ptr/len came from sys::map_file and are unmapped once.
+        unsafe { sys::unmap(self.ptr, self.len) };
+    }
+}
+
+impl std::fmt::Debug for MapRegion {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "MapRegion({} bytes)", self.len)
+    }
+}
+
+/// The mapped index/value sections of one shard, handed to
+/// [`CsrMatrix`] as its `Storage::Mapped` backing. Cloning shares the
+/// mapping (`Arc`) but gives the clone a fresh residency counter.
+pub(crate) struct MappedCsr {
+    region: Arc<MapRegion>,
+    idx_off: usize,
+    idx_len: usize,
+    val_off: usize,
+    val_len: usize,
+    touched: AtomicUsize,
+}
+
+impl std::fmt::Debug for MappedCsr {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "MappedCsr(nnz = {})", self.idx_len)
+    }
+}
+
+impl Clone for MappedCsr {
+    fn clone(&self) -> Self {
+        MappedCsr {
+            region: Arc::clone(&self.region),
+            idx_off: self.idx_off,
+            idx_len: self.idx_len,
+            val_off: self.val_off,
+            val_len: self.val_len,
+            touched: AtomicUsize::new(0),
+        }
+    }
+}
+
+impl MappedCsr {
+    /// The full indices section. Raw view — no residency accounting.
+    #[inline]
+    pub(crate) fn indices(&self) -> &[u32] {
+        // SAFETY: the open path validated that the section lies inside
+        // the mapping at an 8-aligned offset; the mapping outlives self.
+        unsafe {
+            std::slice::from_raw_parts(
+                self.region.ptr.add(self.idx_off) as *const u32,
+                self.idx_len,
+            )
+        }
+    }
+
+    /// The full values section. Raw view — no residency accounting.
+    #[inline]
+    pub(crate) fn values(&self) -> &[f64] {
+        // SAFETY: as in `indices`.
+        unsafe {
+            std::slice::from_raw_parts(
+                self.region.ptr.add(self.val_off) as *const f64,
+                self.val_len,
+            )
+        }
+    }
+
+    /// Account `bytes` of row data as touched; past the residency budget,
+    /// drop the mapping's clean pages and restart the count. Thread-safe:
+    /// a racing thread at worst issues one extra (harmless) `madvise`.
+    #[inline]
+    pub(crate) fn note_touched(&self, bytes: usize) {
+        let total = self.touched.fetch_add(bytes, Ordering::Relaxed) + bytes;
+        if total >= RESIDENCY_BUDGET_BYTES {
+            self.touched.store(0, Ordering::Relaxed);
+            // SAFETY: region is alive for as long as self is.
+            unsafe { sys::drop_resident(self.region.ptr, self.region.len) };
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Shard file header
+// ---------------------------------------------------------------------------
+
+#[derive(Debug, Clone, Copy, Default)]
+struct Section {
+    offset: u64,
+    bytes: u64,
+    checksum: u64,
+}
+
+#[derive(Debug, Clone, Copy)]
+struct ShardHeader {
+    rows: u64,
+    cols: u64,
+    nnz: u64,
+    shard_index: u64,
+    shard_count: u64,
+    global_n: u64,
+    sections: [Section; SECTIONS],
+}
+
+impl ShardHeader {
+    fn encode(&self) -> [u8; HEADER_BYTES] {
+        let mut buf = [0u8; HEADER_BYTES];
+        buf[..8].copy_from_slice(SHARD_MAGIC);
+        buf[8..12].copy_from_slice(&SHARD_FORMAT_VERSION.to_le_bytes());
+        // bytes 12..16 reserved (zero)
+        let mut at = 16;
+        for v in [
+            self.rows,
+            self.cols,
+            self.nnz,
+            self.shard_index,
+            self.shard_count,
+            self.global_n,
+        ] {
+            buf[at..at + 8].copy_from_slice(&v.to_le_bytes());
+            at += 8;
+        }
+        for s in &self.sections {
+            for v in [s.offset, s.bytes, s.checksum] {
+                buf[at..at + 8].copy_from_slice(&v.to_le_bytes());
+                at += 8;
+            }
+        }
+        debug_assert_eq!(at, 184);
+        let mut sum = Fnv::new();
+        sum.update(&buf[..184]);
+        buf[184..192].copy_from_slice(&sum.finish().to_le_bytes());
+        buf
+    }
+
+    fn decode(path: &Path, buf: &[u8; HEADER_BYTES]) -> Result<ShardHeader> {
+        if &buf[..8] != SHARD_MAGIC {
+            return Err(shard_err(path, "bad magic: not a cocoa shard file"));
+        }
+        let version = u32::from_le_bytes(buf[8..12].try_into().unwrap());
+        if version != SHARD_FORMAT_VERSION {
+            return Err(shard_err(
+                path,
+                format!("shard format v{version}, this build reads v{SHARD_FORMAT_VERSION}"),
+            ));
+        }
+        let mut sum = Fnv::new();
+        sum.update(&buf[..184]);
+        let stored = u64::from_le_bytes(buf[184..192].try_into().unwrap());
+        if sum.finish() != stored {
+            return Err(shard_err(path, "header checksum mismatch (corrupt header)"));
+        }
+        let read_u64 = |at: usize| u64::from_le_bytes(buf[at..at + 8].try_into().unwrap());
+        let mut sections = [Section::default(); SECTIONS];
+        for (i, s) in sections.iter_mut().enumerate() {
+            let at = 64 + 24 * i;
+            *s = Section {
+                offset: read_u64(at),
+                bytes: read_u64(at + 8),
+                checksum: read_u64(at + 16),
+            };
+        }
+        Ok(ShardHeader {
+            rows: read_u64(16),
+            cols: read_u64(24),
+            nnz: read_u64(32),
+            shard_index: read_u64(40),
+            shard_count: read_u64(48),
+            global_n: read_u64(56),
+            sections,
+        })
+    }
+}
+
+fn align8(v: u64) -> u64 {
+    (v + 7) & !7
+}
+
+/// Section layout for a shard of `rows` rows and `nnz` stored entries:
+/// indptr (u64), indices (u32), values/labels/norms (f64), each starting
+/// 8-aligned. Returns `(offsets, byte_lens, file_len)`.
+fn layout(rows: u64, nnz: u64) -> ([u64; SECTIONS], [u64; SECTIONS], u64) {
+    let lens = [
+        (rows + 1) * 8, // indptr
+        nnz * 4,        // indices
+        nnz * 8,        // values
+        rows * 8,       // labels
+        rows * 8,       // norms
+    ];
+    let mut offsets = [0u64; SECTIONS];
+    let mut at = HEADER_BYTES as u64;
+    for (i, len) in lens.iter().enumerate() {
+        offsets[i] = at;
+        at = align8(at + len);
+    }
+    (offsets, lens, at)
+}
+
+// ---------------------------------------------------------------------------
+// Writing
+// ---------------------------------------------------------------------------
+
+fn f64s_to_bytes(vals: &[f64]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(vals.len() * 8);
+    for v in vals {
+        out.extend_from_slice(&v.to_le_bytes());
+    }
+    out
+}
+
+/// One shard under construction: index/value bytes stream to temp files
+/// (with running checksums) so nothing scales with shard nnz in memory;
+/// indptr/labels/norms stay in memory (O(rows per shard)).
+struct ShardFileBuilder {
+    final_path: PathBuf,
+    idx_path: PathBuf,
+    val_path: PathBuf,
+    idx_file: BufWriter<File>,
+    val_file: BufWriter<File>,
+    idx_sum: Fnv,
+    val_sum: Fnv,
+    indptr: Vec<u64>,
+    labels: Vec<f64>,
+    norms: Vec<f64>,
+    nnz: u64,
+}
+
+impl ShardFileBuilder {
+    fn create(dir: &Path, kid: usize) -> Result<ShardFileBuilder> {
+        let final_path = dir.join(format!("shard_{kid:04}.bin"));
+        let idx_path = dir.join(format!("shard_{kid:04}.idx.tmp"));
+        let val_path = dir.join(format!("shard_{kid:04}.val.tmp"));
+        let open = |p: &Path| -> Result<BufWriter<File>> {
+            Ok(BufWriter::new(
+                File::create(p).map_err(|e| shard_err(p, format!("create failed: {e}")))?,
+            ))
+        };
+        Ok(ShardFileBuilder {
+            idx_file: open(&idx_path)?,
+            val_file: open(&val_path)?,
+            final_path,
+            idx_path,
+            val_path,
+            idx_sum: Fnv::new(),
+            val_sum: Fnv::new(),
+            indptr: vec![0],
+            labels: Vec::new(),
+            norms: Vec::new(),
+            nnz: 0,
+        })
+    }
+
+    fn push_row(
+        &mut self,
+        indices: &[u32],
+        values: &[f64],
+        label: f64,
+        norm_sq: f64,
+    ) -> Result<()> {
+        debug_assert_eq!(indices.len(), values.len());
+        let mut idx_bytes = Vec::with_capacity(indices.len() * 4);
+        for c in indices {
+            idx_bytes.extend_from_slice(&c.to_le_bytes());
+        }
+        let val_bytes = f64s_to_bytes(values);
+        self.idx_sum.update(&idx_bytes);
+        self.val_sum.update(&val_bytes);
+        let io = |p: &Path, e: std::io::Error| shard_err(p, format!("write failed: {e}"));
+        self.idx_file.write_all(&idx_bytes).map_err(|e| io(&self.idx_path, e))?;
+        self.val_file.write_all(&val_bytes).map_err(|e| io(&self.val_path, e))?;
+        self.nnz += indices.len() as u64;
+        self.indptr.push(self.nnz);
+        self.labels.push(label);
+        self.norms.push(norm_sq);
+        Ok(())
+    }
+
+    /// Assemble the final shard file (header + sections) and remove the
+    /// temp section files.
+    fn finish(mut self, cols: u64, kid: u64, k: u64, global_n: u64) -> Result<()> {
+        let rows = self.labels.len() as u64;
+        let (offsets, lens, file_len) = layout(rows, self.nnz);
+        let path = self.final_path.clone();
+        let io = |e: std::io::Error| shard_err(&path, format!("write failed: {e}"));
+        self.idx_file.flush().map_err(io)?;
+        self.val_file.flush().map_err(io)?;
+        drop(self.idx_file);
+        drop(self.val_file);
+
+        let indptr_bytes: Vec<u8> =
+            self.indptr.iter().flat_map(|v| v.to_le_bytes()).collect();
+        let labels_bytes = f64s_to_bytes(&self.labels);
+        let norms_bytes = f64s_to_bytes(&self.norms);
+        let sum_of = |bytes: &[u8]| {
+            let mut s = Fnv::new();
+            s.update(bytes);
+            s.finish()
+        };
+        let mut sections = [Section::default(); SECTIONS];
+        let checks = [
+            sum_of(&indptr_bytes),
+            self.idx_sum.finish(),
+            self.val_sum.finish(),
+            sum_of(&labels_bytes),
+            sum_of(&norms_bytes),
+        ];
+        for i in 0..SECTIONS {
+            sections[i] = Section { offset: offsets[i], bytes: lens[i], checksum: checks[i] };
+        }
+        let header = ShardHeader {
+            rows,
+            cols,
+            nnz: self.nnz,
+            shard_index: kid,
+            shard_count: k,
+            global_n,
+            sections,
+        };
+
+        let mut out = BufWriter::new(File::create(&path).map_err(io)?);
+        let mut written = HEADER_BYTES as u64;
+        out.write_all(&header.encode()).map_err(io)?;
+        let mut copy_section = |out: &mut BufWriter<File>,
+                                written: &mut u64,
+                                i: usize,
+                                bytes: SectionBytes<'_>|
+         -> Result<()> {
+            debug_assert_eq!(*written, offsets[i]);
+            match bytes {
+                SectionBytes::Mem(b) => out.write_all(b).map_err(io)?,
+                SectionBytes::Tmp(p) => {
+                    let f = File::open(p).map_err(|e| shard_err(p, format!("reopen: {e}")))?;
+                    std::io::copy(&mut BufReader::new(f), out).map_err(io)?;
+                }
+            }
+            *written += lens[i];
+            let pad = align8(*written) - *written;
+            out.write_all(&[0u8; 8][..pad as usize]).map_err(io)?;
+            *written += pad;
+            Ok(())
+        };
+        copy_section(&mut out, &mut written, SEC_INDPTR, SectionBytes::Mem(&indptr_bytes))?;
+        copy_section(&mut out, &mut written, SEC_INDICES, SectionBytes::Tmp(&self.idx_path))?;
+        copy_section(&mut out, &mut written, SEC_VALUES, SectionBytes::Tmp(&self.val_path))?;
+        copy_section(&mut out, &mut written, SEC_LABELS, SectionBytes::Mem(&labels_bytes))?;
+        copy_section(&mut out, &mut written, SEC_NORMS, SectionBytes::Mem(&norms_bytes))?;
+        debug_assert_eq!(written, file_len);
+        out.flush().map_err(io)?;
+        let _ = std::fs::remove_file(&self.idx_path);
+        let _ = std::fs::remove_file(&self.val_path);
+        Ok(())
+    }
+}
+
+enum SectionBytes<'a> {
+    Mem(&'a [u8]),
+    Tmp(&'a Path),
+}
+
+/// Streaming shard-set writer: rows arrive once, in global order, and are
+/// routed to their partition block's shard on the fly. Peak memory is
+/// O(n) scalars (global labels/norms for the manifest fingerprint,
+/// per-shard indptr) — never O(nnz).
+pub struct ShardSetWriter {
+    dir: PathBuf,
+    k: usize,
+    strategy: PartitionStrategy,
+    partition_seed: u64,
+    /// Precomputed row -> shard for contiguous/random (empty: round-robin).
+    assign: Vec<u32>,
+    expected_n: Option<usize>,
+    shards: Vec<ShardFileBuilder>,
+    labels: Vec<f64>,
+    norms: Vec<f64>,
+    next_row: usize,
+}
+
+impl ShardSetWriter {
+    /// Open a writer for `k` shards under `dir` (created if missing).
+    /// `n` must be known up front for the contiguous and random
+    /// strategies (their block boundaries depend on it); round-robin is
+    /// truly single-pass and accepts `None`.
+    pub fn create(
+        dir: impl AsRef<Path>,
+        k: usize,
+        strategy: PartitionStrategy,
+        partition_seed: u64,
+        n: Option<usize>,
+    ) -> Result<ShardSetWriter> {
+        let dir = dir.as_ref().to_path_buf();
+        if k == 0 {
+            return Err(shard_err(&dir, "shard count k must be >= 1"));
+        }
+        std::fs::create_dir_all(&dir)
+            .map_err(|e| shard_err(&dir, format!("create dir: {e}")))?;
+        let assign = match (strategy, n) {
+            (PartitionStrategy::RoundRobin, _) => Vec::new(),
+            (_, None) => {
+                return Err(shard_err(
+                    &dir,
+                    format!(
+                        "the {} strategy needs the row count up front \
+                         (round_robin is the single-pass strategy)",
+                        strategy.name()
+                    ),
+                ))
+            }
+            (_, Some(n)) => {
+                // replicate Partition::new exactly, then invert it: shard
+                // k must hold precisely partition block k
+                let partition = Partition::new(strategy, n, k, partition_seed);
+                let mut assign = vec![0u32; n];
+                for (kid, block) in partition.blocks.iter().enumerate() {
+                    for &row in block {
+                        assign[row as usize] = kid as u32;
+                    }
+                }
+                assign
+            }
+        };
+        let shards = (0..k)
+            .map(|kid| ShardFileBuilder::create(&dir, kid))
+            .collect::<Result<Vec<_>>>()?;
+        Ok(ShardSetWriter {
+            dir,
+            k,
+            strategy,
+            partition_seed,
+            assign,
+            expected_n: n,
+            shards,
+            labels: Vec::new(),
+            norms: Vec::new(),
+            next_row: 0,
+        })
+    }
+
+    /// Append the next global row (rows must arrive in global order).
+    /// `indices` must be strictly increasing. `cached_norm_sq` is the
+    /// *dataset-cached* `||x_i||^2` (after `normalize_rows` that is
+    /// exactly 1.0 for scaled rows) — it feeds only the manifest
+    /// fingerprint, so shard-mode runs key the same cached optima as the
+    /// in-memory dataset. The norm *stored in the shard file* is
+    /// recomputed here from `values`: that matches, bit for bit, what the
+    /// in-memory worker path sees (`Dataset::subset` rebuilds norms from
+    /// the final values), which is what keeps shard trajectories
+    /// identical.
+    pub fn push_row(
+        &mut self,
+        indices: &[u32],
+        values: &[f64],
+        label: f64,
+        cached_norm_sq: f64,
+    ) -> Result<()> {
+        let i = self.next_row;
+        if let Some(n) = self.expected_n {
+            if i >= n {
+                return Err(shard_err(
+                    &self.dir,
+                    format!("row {i} pushed but the writer was created for n = {n}"),
+                ));
+            }
+        }
+        let kid = match self.strategy {
+            PartitionStrategy::RoundRobin => i % self.k,
+            _ => self.assign[i] as usize,
+        };
+        let stored_norm_sq = kernels::sparse_norm_sq(values);
+        self.shards[kid].push_row(indices, values, label, stored_norm_sq)?;
+        self.labels.push(label);
+        self.norms.push(cached_norm_sq);
+        self.next_row += 1;
+        Ok(())
+    }
+
+    /// Rewrite every stored label in place. The LibSVM sharder's
+    /// whole-file classification binarization can only run once the last
+    /// line has parsed, but must land before the label sections and the
+    /// fingerprint are written — labels are O(n) writer state, so this is
+    /// cheap and keeps the ingest single-pass over the (big) features.
+    pub(crate) fn map_labels(&mut self, f: impl Fn(f64) -> f64) {
+        for y in self.labels.iter_mut() {
+            *y = f(*y);
+        }
+        for shard in self.shards.iter_mut() {
+            for y in shard.labels.iter_mut() {
+                *y = f(*y);
+            }
+        }
+    }
+
+    /// Finalize every shard file and write `manifest.toml`. `cols` is the
+    /// global feature dimension d (for LibSVM streams it is only known
+    /// once the last line has parsed).
+    pub fn finish(self, cols: usize) -> Result<ShardSet> {
+        let n = self.next_row;
+        if let Some(expected) = self.expected_n {
+            if n != expected {
+                return Err(shard_err(
+                    &self.dir,
+                    format!("writer created for n = {expected} but {n} rows were pushed"),
+                ));
+            }
+        }
+        if n < self.k {
+            return Err(shard_err(
+                &self.dir,
+                format!("{} shards over {n} rows: at least one shard would be empty", self.k),
+            ));
+        }
+        let nnz: u64 = self.shards.iter().map(|s| s.nnz).sum();
+        let fingerprint =
+            fingerprint_parts(n, cols, nnz as usize, &self.labels, &self.norms);
+        let k = self.k;
+        let dir = self.dir.clone();
+        for (kid, shard) in self.shards.into_iter().enumerate() {
+            shard.finish(cols as u64, kid as u64, k as u64, n as u64)?;
+        }
+        let manifest = format!(
+            "# cocoa shard-set manifest (see docs/DATA.md)\n\
+             format_version = {MANIFEST_VERSION}\n\
+             n = {n}\n\
+             d = {cols}\n\
+             nnz = {nnz}\n\
+             k = {k}\n\
+             strategy = \"{}\"\n\
+             partition_seed = {}\n\
+             fingerprint = \"{fingerprint}\"\n",
+            self.strategy.name(),
+            self.partition_seed,
+        );
+        let mpath = dir.join("manifest.toml");
+        std::fs::write(&mpath, manifest)
+            .map_err(|e| shard_err(&mpath, format!("write failed: {e}")))?;
+        ShardSet::open_with_mode(dir, ShardMode::default_mode())
+    }
+}
+
+/// Shard an in-memory sparse [`Dataset`] to `dir` — the partition
+/// produced by `Partition::new(strategy, n, k, seed)` decides which rows
+/// land in which shard. Used by `cocoa shard --synthetic`, tests, and as
+/// the reference the streaming LibSVM sharder is property-tested against.
+pub fn write_shards(
+    data: &Dataset,
+    strategy: PartitionStrategy,
+    k: usize,
+    partition_seed: u64,
+    dir: impl AsRef<Path>,
+) -> Result<ShardSet> {
+    let dir = dir.as_ref();
+    let m = match &data.features {
+        Features::Sparse(m) => m,
+        Features::Dense(_) => {
+            return Err(shard_err(
+                dir,
+                "the shard format is CSR-only; dense datasets stay in-memory \
+                 (store them sparse to shard them)",
+            ))
+        }
+    };
+    let mut w = ShardSetWriter::create(dir, k, strategy, partition_seed, Some(data.n()))?;
+    for i in 0..data.n() {
+        let (idx, vals) = m.row_view(i);
+        w.push_row(idx, vals, data.labels[i], data.norm_sq(i))?;
+    }
+    w.finish(data.d())
+}
+
+// ---------------------------------------------------------------------------
+// Reading
+// ---------------------------------------------------------------------------
+
+/// How [`ShardSet::open_shard`] backs the index/value sections.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ShardMode {
+    /// `mmap` the file; rows fault in on demand and a residency budget
+    /// keeps peak RSS bounded. Falls back to [`ShardMode::Owned`] when
+    /// [`mmap_supported`] is false.
+    Mapped,
+    /// Read the sections into ordinary `Vec`s (same verified bytes).
+    Owned,
+}
+
+impl ShardMode {
+    /// Mapped where the platform supports it, Owned elsewhere.
+    pub fn default_mode() -> ShardMode {
+        if mmap_supported() {
+            ShardMode::Mapped
+        } else {
+            ShardMode::Owned
+        }
+    }
+}
+
+/// An opened shard-set directory: the parsed manifest plus the mode used
+/// to open individual shards. This is the data half of a shard-mode
+/// [`crate::Trainer`]: the leader reads only the manifest (n, d,
+/// fingerprint, partition recipe); each worker opens exactly its own
+/// shard file.
+#[derive(Debug, Clone)]
+pub struct ShardSet {
+    dir: PathBuf,
+    n: usize,
+    d: usize,
+    nnz: u64,
+    k: usize,
+    strategy: PartitionStrategy,
+    partition_seed: u64,
+    fingerprint: String,
+    mode: ShardMode,
+}
+
+impl ShardSet {
+    /// Open `dir/manifest.toml` with the platform-default [`ShardMode`].
+    pub fn open(dir: impl AsRef<Path>) -> Result<ShardSet> {
+        ShardSet::open_with_mode(dir, ShardMode::default_mode())
+    }
+
+    /// Open with an explicit mode (`[data] mmap = false` forces Owned).
+    pub fn open_with_mode(dir: impl AsRef<Path>, mode: ShardMode) -> Result<ShardSet> {
+        let dir = dir.as_ref().to_path_buf();
+        let mpath = dir.join("manifest.toml");
+        let text = std::fs::read_to_string(&mpath)
+            .map_err(|e| shard_err(&mpath, format!("read failed: {e}")))?;
+        let doc = Doc::parse(&text)
+            .map_err(|e| shard_err(&mpath, format!("manifest parse failed: {e:#}")))?;
+        let version = doc.usize_or("", "format_version", 0);
+        if version != MANIFEST_VERSION as usize {
+            return Err(shard_err(
+                &mpath,
+                format!("manifest v{version}, this build reads v{MANIFEST_VERSION}"),
+            ));
+        }
+        let field = |key: &str| -> Result<usize> {
+            doc.get("", key).and_then(crate::util::toml_lite::Value::as_usize).ok_or_else(
+                || shard_err(&mpath, format!("manifest is missing integer key {key:?}")),
+            )
+        };
+        let n = field("n")?;
+        let d = field("d")?;
+        let nnz = field("nnz")? as u64;
+        let k = field("k")?;
+        let strategy_name = doc
+            .get("", "strategy")
+            .and_then(crate::util::toml_lite::Value::as_str)
+            .ok_or_else(|| shard_err(&mpath, "manifest is missing string key \"strategy\""))?;
+        let strategy = PartitionStrategy::from_name(strategy_name).ok_or_else(|| {
+            shard_err(&mpath, format!("unknown partition strategy {strategy_name:?}"))
+        })?;
+        let partition_seed = doc.u64_or("", "partition_seed", 0);
+        let fingerprint = doc
+            .get("", "fingerprint")
+            .and_then(crate::util::toml_lite::Value::as_str)
+            .ok_or_else(|| shard_err(&mpath, "manifest is missing string key \"fingerprint\""))?
+            .to_string();
+        if k == 0 || n == 0 || d == 0 || k > n {
+            return Err(shard_err(
+                &mpath,
+                format!("manifest shape is degenerate (n = {n}, d = {d}, k = {k})"),
+            ));
+        }
+        let mode = match mode {
+            ShardMode::Mapped if !mmap_supported() => ShardMode::Owned,
+            m => m,
+        };
+        let set = ShardSet {
+            dir,
+            n,
+            d,
+            nnz,
+            k,
+            strategy,
+            partition_seed,
+            fingerprint,
+            mode,
+        };
+        for kid in 0..k {
+            let p = set.shard_path(kid);
+            if !p.exists() {
+                return Err(shard_err(&p, "manifest names a shard file that does not exist"));
+            }
+        }
+        Ok(set)
+    }
+
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    pub fn d(&self) -> usize {
+        self.d
+    }
+
+    pub fn nnz(&self) -> u64 {
+        self.nnz
+    }
+
+    pub fn k(&self) -> usize {
+        self.k
+    }
+
+    pub fn mode(&self) -> ShardMode {
+        self.mode
+    }
+
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+
+    /// The full-dataset content fingerprint (`Dataset::fingerprint` of
+    /// the dataset that was sharded) — what the net handshake binds to.
+    pub fn fingerprint(&self) -> &str {
+        &self.fingerprint
+    }
+
+    /// Reconstruct the partition the shards were written under.
+    pub fn partition(&self) -> Partition {
+        Partition::new(self.strategy, self.n, self.k, self.partition_seed)
+    }
+
+    pub fn shard_path(&self, kid: usize) -> PathBuf {
+        self.dir.join(format!("shard_{kid:04}.bin"))
+    }
+
+    /// Total on-disk bytes across all shard files (the `dataset_bytes`
+    /// the `_ooc` BENCH entries compare peak RSS against).
+    pub fn total_bytes(&self) -> u64 {
+        (0..self.k)
+            .filter_map(|kid| std::fs::metadata(self.shard_path(kid)).ok())
+            .map(|m| m.len())
+            .sum()
+    }
+
+    /// Open shard `kid` as a worker-local [`Dataset`]: verify every
+    /// section checksum and the CSR invariants with buffered streaming
+    /// reads, then back the index/value sections per [`ShardSet::mode`].
+    /// The returned dataset is bit-identical (labels, norms, row views)
+    /// to `full_dataset.subset(&partition.blocks[kid])`.
+    pub fn open_shard(&self, kid: usize) -> Result<Dataset> {
+        if kid >= self.k {
+            return Err(shard_err(
+                &self.dir,
+                format!("shard index {kid} out of range (k = {})", self.k),
+            ));
+        }
+        let path = self.shard_path(kid);
+        let file =
+            File::open(&path).map_err(|e| shard_err(&path, format!("open failed: {e}")))?;
+        let file_len = file
+            .metadata()
+            .map_err(|e| shard_err(&path, format!("stat failed: {e}")))?
+            .len();
+        let mut reader = BufReader::with_capacity(256 << 10, file);
+
+        let mut hbuf = [0u8; HEADER_BYTES];
+        reader
+            .read_exact(&mut hbuf)
+            .map_err(|e| shard_err(&path, format!("truncated header: {e}")))?;
+        let header = ShardHeader::decode(&path, &hbuf)?;
+        let rows = header.rows as usize;
+        let cols = header.cols as usize;
+        let nnz = header.nnz as usize;
+        if header.shard_index != kid as u64
+            || header.shard_count != self.k as u64
+            || header.global_n != self.n as u64
+            || cols != self.d
+        {
+            return Err(shard_err(
+                &path,
+                format!(
+                    "shard/manifest mismatch: file says shard {}/{} of n = {}, d = {}; \
+                     manifest says shard {kid}/{} of n = {}, d = {}",
+                    header.shard_index,
+                    header.shard_count,
+                    header.global_n,
+                    cols,
+                    self.k,
+                    self.n,
+                    self.d
+                ),
+            ));
+        }
+        let (offsets, lens, expect_len) = layout(header.rows, header.nnz);
+        for (i, s) in header.sections.iter().enumerate() {
+            if s.offset != offsets[i] || s.bytes != lens[i] {
+                return Err(shard_err(&path, "section table disagrees with the shard shape"));
+            }
+        }
+        if file_len != expect_len {
+            return Err(shard_err(
+                &path,
+                format!("file is {file_len} bytes, layout expects {expect_len} (truncated?)"),
+            ));
+        }
+
+        // --- streaming verification + owned loads of the small sections.
+        // Buffered reads go through the page cache, not the process RSS
+        // ledger, so verification never costs what it verifies.
+        let mut read_section = |i: usize, want_pad: bool| -> Result<Vec<u8>> {
+            let mut bytes = vec![0u8; lens[i] as usize];
+            reader
+                .read_exact(&mut bytes)
+                .map_err(|e| shard_err(&path, format!("truncated section {i}: {e}")))?;
+            let mut sum = Fnv::new();
+            sum.update(&bytes);
+            if sum.finish() != header.sections[i].checksum {
+                return Err(shard_err(
+                    &path,
+                    format!("section {i} checksum mismatch (corrupt shard)"),
+                ));
+            }
+            if want_pad {
+                let pad = (align8(offsets[i] + lens[i]) - (offsets[i] + lens[i])) as usize;
+                let mut padbuf = [0u8; 8];
+                reader
+                    .read_exact(&mut padbuf[..pad])
+                    .map_err(|e| shard_err(&path, format!("truncated padding: {e}")))?;
+            }
+            Ok(bytes)
+        };
+
+        let indptr_bytes = read_section(SEC_INDPTR, true)?;
+        let mut indptr = Vec::with_capacity(rows + 1);
+        for chunk in indptr_bytes.chunks_exact(8) {
+            indptr.push(u64::from_le_bytes(chunk.try_into().unwrap()) as usize);
+        }
+        drop(indptr_bytes);
+        if indptr.first() != Some(&0)
+            || indptr.last() != Some(&nnz)
+            || indptr.windows(2).any(|w| w[1] < w[0])
+        {
+            return Err(shard_err(&path, "indptr is not a monotone 0..nnz row index"));
+        }
+
+        let idx_bytes = read_section(SEC_INDICES, true)?;
+        let mut indices: Vec<u32> = Vec::with_capacity(nnz);
+        for chunk in idx_bytes.chunks_exact(4) {
+            indices.push(u32::from_le_bytes(chunk.try_into().unwrap()));
+        }
+        drop(idx_bytes);
+        for r in 0..rows {
+            let row = &indices[indptr[r]..indptr[r + 1]];
+            if row.iter().any(|&c| c as usize >= cols) {
+                return Err(shard_err(
+                    &path,
+                    format!("row {r} has a column index >= d = {cols}"),
+                ));
+            }
+            if row.windows(2).any(|w| w[1] <= w[0]) {
+                return Err(shard_err(
+                    &path,
+                    format!("row {r} indices are not strictly increasing"),
+                ));
+            }
+        }
+
+        let val_bytes = read_section(SEC_VALUES, false)?;
+        let mut values: Vec<f64> = Vec::with_capacity(nnz);
+        for chunk in val_bytes.chunks_exact(8) {
+            values.push(f64::from_le_bytes(chunk.try_into().unwrap()));
+        }
+        drop(val_bytes);
+        if values.iter().any(|v| !v.is_finite()) {
+            return Err(shard_err(&path, "values section contains a non-finite number"));
+        }
+
+        let to_f64s = |bytes: Vec<u8>| -> Vec<f64> {
+            bytes
+                .chunks_exact(8)
+                .map(|c| f64::from_le_bytes(c.try_into().unwrap()))
+                .collect()
+        };
+        let labels = to_f64s(read_section(SEC_LABELS, false)?);
+        let norms = to_f64s(read_section(SEC_NORMS, false)?);
+        if labels.iter().chain(&norms).any(|v| !v.is_finite()) {
+            return Err(shard_err(&path, "labels/norms contain a non-finite number"));
+        }
+
+        let matrix = match self.mode {
+            ShardMode::Owned => CsrMatrix::from_validated_parts(rows, cols, indptr, indices, values),
+            ShardMode::Mapped => {
+                // every byte was just verified; now map the file and keep
+                // only the two big sections behind the mapping
+                drop(values);
+                drop(indices);
+                let mut file = reader.into_inner();
+                file.rewind()
+                    .map_err(|e| shard_err(&path, format!("rewind failed: {e}")))?;
+                match sys::map_file(&file, file_len as usize) {
+                    Some(ptr) => {
+                        let region = Arc::new(MapRegion { ptr, len: file_len as usize });
+                        let mapped = MappedCsr {
+                            region,
+                            idx_off: offsets[SEC_INDICES] as usize,
+                            idx_len: nnz,
+                            val_off: offsets[SEC_VALUES] as usize,
+                            val_len: nnz,
+                            touched: AtomicUsize::new(0),
+                        };
+                        CsrMatrix::from_mapped(rows, cols, indptr, mapped)
+                    }
+                    None => {
+                        return Err(shard_err(&path, "mmap failed (out of address space?)"))
+                    }
+                }
+            }
+        };
+        Ok(Dataset::with_norms(Features::Sparse(matrix), labels, norms))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::rcv1_like;
+
+    fn tmpdir(name: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join(format!("cocoa_mmap_{name}_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        dir
+    }
+
+    #[test]
+    fn roundtrip_matches_subset_bitwise() {
+        let data = rcv1_like(120, 60, 5, 0.1, 3);
+        let dir = tmpdir("roundtrip");
+        let set = write_shards(&data, PartitionStrategy::Contiguous, 3, 0, &dir).unwrap();
+        assert_eq!(set.fingerprint(), data.fingerprint());
+        assert_eq!(set.nnz() as usize, data.nnz());
+        let partition = set.partition();
+        for mode in [ShardMode::Owned, ShardMode::Mapped] {
+            let set = ShardSet::open_with_mode(&dir, mode).unwrap();
+            for kid in 0..3 {
+                let shard = set.open_shard(kid).unwrap();
+                let reference = data.subset(&partition.blocks[kid]);
+                assert_eq!(shard.labels, reference.labels);
+                assert_eq!(shard.n(), reference.n());
+                for i in 0..shard.n() {
+                    assert_eq!(shard.norm_sq(i).to_bits(), reference.norm_sq(i).to_bits());
+                    assert_eq!(
+                        shard.features.row_dense(i),
+                        reference.features.row_dense(i),
+                        "shard {kid} row {i}"
+                    );
+                }
+            }
+        }
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn random_strategy_replicates_partition_assignment() {
+        let data = rcv1_like(90, 40, 4, 0.1, 5);
+        let dir = tmpdir("random");
+        let set = write_shards(&data, PartitionStrategy::Random, 4, 99, &dir).unwrap();
+        let partition = set.partition();
+        for kid in 0..4 {
+            let shard = set.open_shard(kid).unwrap();
+            let reference = data.subset(&partition.blocks[kid]);
+            assert_eq!(shard.labels, reference.labels, "shard {kid}");
+        }
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn corrupt_and_truncated_shards_are_rejected_typed() {
+        let data = rcv1_like(80, 30, 4, 0.1, 11);
+        let dir = tmpdir("corrupt");
+        let set = write_shards(&data, PartitionStrategy::RoundRobin, 2, 0, &dir).unwrap();
+        let path = set.shard_path(1);
+        let pristine = std::fs::read(&path).unwrap();
+
+        // flip one byte deep in the values section
+        let mut bad = pristine.clone();
+        let at = bad.len() - 24;
+        bad[at] ^= 0x40;
+        std::fs::write(&path, &bad).unwrap();
+        let err = set.open_shard(1).unwrap_err();
+        assert!(matches!(err, Error::Shard { .. }), "{err}");
+        assert!(err.to_string().contains("checksum"), "{err}");
+
+        // truncate the file
+        std::fs::write(&path, &pristine[..pristine.len() / 2]).unwrap();
+        let err = set.open_shard(1).unwrap_err();
+        assert!(matches!(err, Error::Shard { .. }), "{err}");
+
+        // garbage magic
+        let mut bad = pristine.clone();
+        bad[0] = b'X';
+        std::fs::write(&path, &bad).unwrap();
+        let err = set.open_shard(1).unwrap_err();
+        assert!(err.to_string().contains("magic"), "{err}");
+
+        std::fs::write(&path, &pristine).unwrap();
+        set.open_shard(1).unwrap();
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn manifest_mismatches_are_rejected() {
+        let data = rcv1_like(50, 20, 3, 0.1, 2);
+        let dir = tmpdir("manifest");
+        write_shards(&data, PartitionStrategy::Contiguous, 2, 0, &dir).unwrap();
+        let mpath = dir.join("manifest.toml");
+        let text = std::fs::read_to_string(&mpath).unwrap();
+        std::fs::write(&mpath, text.replace("n = 50", "n = 49")).unwrap();
+        // manifest n disagrees with the shard headers' global_n
+        let set = ShardSet::open(&dir).unwrap();
+        assert!(matches!(set.open_shard(0).unwrap_err(), Error::Shard { .. }));
+        std::fs::write(&mpath, text.replace("format_version = 1", "format_version = 9")).unwrap();
+        assert!(matches!(ShardSet::open(&dir).unwrap_err(), Error::Shard { .. }));
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn writer_validates_shape() {
+        let dir = tmpdir("shape");
+        // contiguous needs n up front
+        assert!(ShardSetWriter::create(&dir, 2, PartitionStrategy::Contiguous, 0, None).is_err());
+        // more shards than rows
+        let mut w =
+            ShardSetWriter::create(&dir, 3, PartitionStrategy::RoundRobin, 0, None).unwrap();
+        w.push_row(&[0], &[1.0], 1.0, 1.0).unwrap();
+        assert!(matches!(w.finish(4).unwrap_err(), Error::Shard { .. }));
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn dense_datasets_are_refused() {
+        let dense = crate::data::cov_like(10, 3, 0.0, 1);
+        let dir = tmpdir("dense");
+        let err = write_shards(&dense, PartitionStrategy::Contiguous, 2, 0, &dir).unwrap_err();
+        assert!(err.to_string().contains("CSR-only"), "{err}");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

@@ -4,19 +4,52 @@
 //! Data lives in row-major form (one row per training example `x_i`); the
 //! paper's rescaled column matrix `A_i = x_i / (lambda n)` is never
 //! materialized — solvers fold the `1/(lambda n)` factor into their updates.
+//!
+//! Two storage paths feed the solvers, and they are bit-identical by
+//! construction (see `docs/DATA.md` for the full contract):
+//!
+//! * **in-memory** — [`read_libsvm`] / the synthetic generators build a
+//!   [`Dataset`] whose CSR arrays are owned `Vec`s;
+//! * **out-of-core** — [`shard_libsvm`] (streaming) or [`write_shards`]
+//!   (from memory) split the rows into per-worker shard files, and
+//!   [`ShardSet`] reopens them `mmap`-backed so a worker's peak RSS stays
+//!   bounded far below the dataset size (module [`mmap`]).
+//!
+//! ```
+//! use cocoa::data::{rcv1_like, write_shards, PartitionStrategy};
+//! use cocoa::prelude::*;
+//!
+//! let data = rcv1_like(60, 30, 4, 0.1, 3);
+//! let dir = std::env::temp_dir().join("cocoa_doc_data_mod");
+//! let _ = std::fs::remove_dir_all(&dir);
+//! let set = write_shards(&data, PartitionStrategy::Contiguous, 2, 0, &dir).unwrap();
+//! // the same builder, on shards instead of a Dataset — K comes
+//! // from the manifest, workers open only their own shard file
+//! let mut session = Trainer::on_shards(&set)
+//!     .loss(LossKind::Hinge)
+//!     .lambda(0.05)
+//!     .build()
+//!     .unwrap();
+//! let trace = session.run(&mut Cocoa::new(30), MaxRounds::new(2)).unwrap();
+//! assert_eq!(trace.rows.last().unwrap().round, 2);
+//! let _ = std::fs::remove_dir_all(&dir);
+//! ```
 
 mod dense;
 mod libsvm;
+pub mod mmap;
 mod partition;
 mod sparse;
 mod synthetic;
 
 pub use dense::DenseMatrix;
-pub use libsvm::{read_libsvm, write_libsvm};
+pub use libsvm::{read_libsvm, shard_libsvm, write_libsvm};
+pub use mmap::{mmap_supported, write_shards, ShardMode, ShardSet, ShardSetWriter};
 pub use partition::{Partition, PartitionStrategy};
 pub use sparse::CsrMatrix;
 pub use synthetic::{
-    cov_like, imagenet_like, orthogonal_blocks, rcv1_like, SyntheticSpec,
+    cov_like, imagenet_like, kdd_stream_shards, orthogonal_blocks, rcv1_like,
+    rcv1_stream_shards, url_stream_shards, SyntheticSpec,
 };
 
 /// Feature storage: dense row-major or CSR. All solver hot paths go
@@ -113,6 +146,21 @@ impl Dataset {
         Dataset { features, labels, norms_sq }
     }
 
+    /// Construct with norms the caller already holds (the shard open
+    /// path: norms were cached at shard-write time, so reopening never
+    /// pages the value section just to recompute them — and the cached
+    /// bits match what [`Dataset::new`] would compute, keeping shard and
+    /// in-memory trajectories identical).
+    pub(crate) fn with_norms(
+        features: Features,
+        labels: Vec<f64>,
+        norms_sq: Vec<f64>,
+    ) -> Self {
+        assert_eq!(features.rows(), labels.len(), "feature rows must match label count");
+        assert_eq!(features.rows(), norms_sq.len(), "feature rows must match norm count");
+        Dataset { features, labels, norms_sq }
+    }
+
     pub fn n(&self) -> usize {
         self.labels.len()
     }
@@ -180,22 +228,36 @@ impl Dataset {
     /// A short stable fingerprint of shape + content used to key cached
     /// optima on disk.
     pub fn fingerprint(&self) -> String {
-        // FNV-1a over a deterministic sample of entries: cheap and stable.
-        let mut h: u64 = 0xcbf29ce484222325;
-        let mut mix = |v: u64| {
-            h ^= v;
-            h = h.wrapping_mul(0x100000001b3);
-        };
-        mix(self.n() as u64);
-        mix(self.d() as u64);
-        mix(self.nnz() as u64);
-        let step = (self.n() / 64).max(1);
-        for i in (0..self.n()).step_by(step) {
-            mix(self.labels[i].to_bits());
-            mix(self.norms_sq[i].to_bits());
-        }
-        format!("{h:016x}")
+        fingerprint_parts(self.n(), self.d(), self.nnz(), &self.labels, &self.norms_sq)
     }
+}
+
+/// [`Dataset::fingerprint`] from its raw ingredients — the shard writer
+/// computes the same string without a `Dataset` in memory, and a
+/// shard-mode leader/worker reads it straight from `manifest.toml`, so
+/// the net handshake binds to identical fingerprints on both paths.
+pub(crate) fn fingerprint_parts(
+    n: usize,
+    d: usize,
+    nnz: usize,
+    labels: &[f64],
+    norms_sq: &[f64],
+) -> String {
+    // FNV-1a over a deterministic sample of entries: cheap and stable.
+    let mut h: u64 = 0xcbf29ce484222325;
+    let mut mix = |v: u64| {
+        h ^= v;
+        h = h.wrapping_mul(0x100000001b3);
+    };
+    mix(n as u64);
+    mix(d as u64);
+    mix(nnz as u64);
+    let step = (n / 64).max(1);
+    for i in (0..n).step_by(step) {
+        mix(labels[i].to_bits());
+        mix(norms_sq[i].to_bits());
+    }
+    format!("{h:016x}")
 }
 
 #[cfg(test)]

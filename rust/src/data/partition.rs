@@ -5,6 +5,20 @@
 //! convergence theory depends on: Lemma 3's sigma_min is a property of how
 //! correlated data ends up across blocks, and `~n = max_k n_k` enters
 //! Proposition 1's Theta.
+//!
+//! Every strategy emits blocks in **ascending row order** (Random sorts
+//! each block after sampling). The out-of-core shard writer relies on
+//! this: rows streamed in global order land in their shard in exactly the
+//! order `Dataset::subset(&blocks[k])` would produce, which is what makes
+//! shard-mode trajectories bit-identical to in-memory ones.
+//!
+//! ```
+//! use cocoa::data::{Partition, PartitionStrategy};
+//!
+//! let p = Partition::new(PartitionStrategy::RoundRobin, 7, 2, 0);
+//! assert_eq!(p.blocks[0], vec![0, 2, 4, 6]);
+//! assert!(p.validate().is_ok());
+//! ```
 
 use crate::util::Rng;
 

@@ -1,6 +1,54 @@
 //! CSR sparse feature matrix — the rcv1-regime storage (n >> d, ~0.1% nnz).
+//!
+//! Since PR 9 the index/value arrays live behind a private [`Storage`]
+//! enum: either owned `Vec`s (the classic in-memory path) or an
+//! `mmap`-backed shard section (see [`crate::data::mmap`]). Every accessor
+//! returns plain slices either way, so the unchecked gather kernels, the
+//! solvers, and the coordinator are storage-agnostic — and because the
+//! bytes are identical, so are the trajectories.
+//!
+//! ```
+//! use cocoa::data::CsrMatrix;
+//!
+//! let m = CsrMatrix::from_triplets(2, 3, &[(0, 0, 1.0), (0, 2, 2.0), (1, 1, 3.0)]);
+//! let (idx, val) = m.row_view(0);
+//! assert_eq!((idx, val), (&[0u32, 2][..], &[1.0, 2.0][..]));
+//! assert_eq!(m.row_dot(1, &[0.0, 10.0, 0.0]), 30.0);
+//! ```
 
 use crate::kernels;
+
+use super::mmap::MappedCsr;
+
+/// Where a matrix's index/value arrays live. Private: constructors
+/// validate the CSR invariants once (indices strictly increasing within a
+/// row, every `index < cols`), and nothing can break them afterwards.
+#[derive(Debug, Clone)]
+enum Storage {
+    /// Ordinary heap vectors (from_triplets, subset, loaders).
+    Owned { indices: Vec<u32>, values: Vec<f64> },
+    /// Read-only mmap'ed shard sections, verified at open
+    /// (checksums + the same CSR invariants) by `ShardSet::open_shard`.
+    Mapped(MappedCsr),
+}
+
+impl Storage {
+    #[inline]
+    fn indices(&self) -> &[u32] {
+        match self {
+            Storage::Owned { indices, .. } => indices,
+            Storage::Mapped(m) => m.indices(),
+        }
+    }
+
+    #[inline]
+    fn values(&self) -> &[f64] {
+        match self {
+            Storage::Owned { values, .. } => values,
+            Storage::Mapped(m) => m.values(),
+        }
+    }
+}
 
 /// Compressed sparse row matrix. `indptr` has `rows + 1` entries;
 /// row `i`'s entries live in `indices/values[indptr[i]..indptr[i+1]]`.
@@ -10,14 +58,27 @@ use crate::kernels;
 /// lets the row accessors run the *unchecked* gather kernels from
 /// [`crate::kernels`] soundly (no per-element bounds check in the SDCA
 /// inner loop). Read access goes through [`CsrMatrix::row_view`] and
-/// friends.
-#[derive(Debug, Clone, PartialEq)]
+/// friends. The same soundness contract is re-established for mapped
+/// shards by `ShardSet::open_shard`'s streaming verification — see
+/// `docs/DATA.md`.
+#[derive(Debug, Clone)]
 pub struct CsrMatrix {
     rows: usize,
     cols: usize,
     indptr: Vec<usize>,
-    indices: Vec<u32>,
-    values: Vec<f64>,
+    storage: Storage,
+}
+
+/// Logical equality: same shape and the same stored entries, regardless
+/// of whether the entries are owned or mapped.
+impl PartialEq for CsrMatrix {
+    fn eq(&self, other: &Self) -> bool {
+        self.rows == other.rows
+            && self.cols == other.cols
+            && self.indptr == other.indptr
+            && self.storage.indices() == other.storage.indices()
+            && self.storage.values() == other.storage.values()
+    }
 }
 
 impl CsrMatrix {
@@ -43,7 +104,35 @@ impl CsrMatrix {
             }
             indptr.push(indices.len());
         }
-        CsrMatrix { rows, cols, indptr, indices, values }
+        CsrMatrix { rows, cols, indptr, storage: Storage::Owned { indices, values } }
+    }
+
+    /// Owned matrix from parts whose CSR invariants the caller has
+    /// already verified (the shard open path, after checksum +
+    /// invariant streaming checks).
+    pub(crate) fn from_validated_parts(
+        rows: usize,
+        cols: usize,
+        indptr: Vec<usize>,
+        indices: Vec<u32>,
+        values: Vec<f64>,
+    ) -> Self {
+        debug_assert_eq!(indptr.len(), rows + 1);
+        debug_assert_eq!(indices.len(), values.len());
+        CsrMatrix { rows, cols, indptr, storage: Storage::Owned { indices, values } }
+    }
+
+    /// Mapped matrix over verified shard sections. The caller
+    /// (`ShardSet::open_shard`) has checked the invariants against the
+    /// very bytes now behind the mapping.
+    pub(crate) fn from_mapped(
+        rows: usize,
+        cols: usize,
+        indptr: Vec<usize>,
+        mapped: MappedCsr,
+    ) -> Self {
+        debug_assert_eq!(indptr.len(), rows + 1);
+        CsrMatrix { rows, cols, indptr, storage: Storage::Mapped(mapped) }
     }
 
     pub fn rows(&self) -> usize {
@@ -56,7 +145,7 @@ impl CsrMatrix {
 
     /// Stored entries (the CSR nnz).
     pub fn nnz(&self) -> usize {
-        self.values.len()
+        *self.indptr.last().expect("indptr has rows + 1 entries")
     }
 
     #[inline]
@@ -65,11 +154,20 @@ impl CsrMatrix {
     }
 
     /// Row `i` as `(indices, values)` slices — one indptr fetch for both,
-    /// the shape the fused inner-loop kernels consume.
+    /// the shape the fused inner-loop kernels consume. On mapped storage
+    /// this also feeds the residency accounting that keeps a shard's
+    /// resident pages bounded (see [`crate::data::mmap`]).
     #[inline]
     pub fn row_view(&self, i: usize) -> (&[u32], &[f64]) {
         let r = self.row_range(i);
-        (&self.indices[r.clone()], &self.values[r])
+        match &self.storage {
+            Storage::Owned { indices, values } => (&indices[r.clone()], &values[r]),
+            Storage::Mapped(m) => {
+                // 4 index bytes + 8 value bytes per entry
+                m.note_touched((r.end - r.start) * 12);
+                (&m.indices()[r.clone()], &m.values()[r])
+            }
+        }
     }
 
     #[inline]
@@ -90,12 +188,22 @@ impl CsrMatrix {
     }
 
     pub fn row_norm_sq(&self, i: usize) -> f64 {
-        kernels::sparse_norm_sq(&self.values[self.row_range(i)])
+        let r = self.row_range(i);
+        kernels::sparse_norm_sq(&self.storage.values()[r])
     }
 
+    /// In-place row scale. Only owned storage is mutable: mapped shards
+    /// are read-only by design (normalize *before* sharding — the shard
+    /// writer stores the final values and norms).
     pub fn scale_row(&mut self, i: usize, s: f64) {
         let r = self.row_range(i);
-        kernels::scale_in_place(&mut self.values[r], s);
+        match &mut self.storage {
+            Storage::Owned { values, .. } => kernels::scale_in_place(&mut values[r], s),
+            Storage::Mapped(_) => panic!(
+                "scale_row on an mmap-backed (read-only) shard; \
+                 normalize before sharding"
+            ),
+        }
     }
 
     pub fn row_nnz(&self, i: usize) -> usize {
@@ -103,6 +211,8 @@ impl CsrMatrix {
     }
 
     pub fn subset(&self, idx: &[u32]) -> CsrMatrix {
+        let src_indices = self.storage.indices();
+        let src_values = self.storage.values();
         let mut indptr = Vec::with_capacity(idx.len() + 1);
         let nnz: usize = idx.iter().map(|&i| self.row_nnz(i as usize)).sum();
         let mut indices = Vec::with_capacity(nnz);
@@ -110,11 +220,16 @@ impl CsrMatrix {
         indptr.push(0);
         for &i in idx {
             let r = self.row_range(i as usize);
-            indices.extend_from_slice(&self.indices[r.clone()]);
-            values.extend_from_slice(&self.values[r]);
+            indices.extend_from_slice(&src_indices[r.clone()]);
+            values.extend_from_slice(&src_values[r]);
             indptr.push(indices.len());
         }
-        CsrMatrix { rows: idx.len(), cols: self.cols, indptr, indices, values }
+        CsrMatrix {
+            rows: idx.len(),
+            cols: self.cols,
+            indptr,
+            storage: Storage::Owned { indices, values },
+        }
     }
 
     /// Sorted unique columns with at least one stored entry — the shard's
@@ -124,7 +239,7 @@ impl CsrMatrix {
     /// feature space).
     pub fn touched_cols(&self) -> Vec<u32> {
         let mut seen = vec![false; self.cols];
-        for &c in &self.indices {
+        for &c in self.storage.indices() {
             seen[c as usize] = true;
         }
         let mut cols: Vec<u32> = Vec::new();
@@ -220,5 +335,20 @@ mod tests {
         assert_eq!(m.row_view(1).0.len(), 0);
         assert_eq!(m.nnz(), 4);
         assert_eq!((m.rows(), m.cols()), (3, 4));
+    }
+
+    #[test]
+    fn logical_equality_ignores_storage_backing() {
+        let a = sample();
+        let b = CsrMatrix::from_validated_parts(
+            3,
+            4,
+            vec![0, 2, 2, 4],
+            vec![1, 3, 0, 2],
+            vec![2.0, 1.0, -1.0, 0.5],
+        );
+        assert_eq!(a, b);
+        let c = CsrMatrix::from_triplets(3, 4, &[(0, 1, 2.0)]);
+        assert_ne!(a, c);
     }
 }

@@ -5,10 +5,31 @@
 //! actually respond to: n/d regime, density, label noise, and cross-worker
 //! feature correlation (which controls Lemma 3's sigma_min). See DESIGN.md
 //! section 2 for the substitution argument.
+//!
+//! The `*_stream_shards` generators serve the out-of-core path: they
+//! write rows straight into an on-disk [`ShardSet`] through the streaming
+//! shard writer, so datasets many times larger than RAM-per-worker can be
+//! produced with O(d + n) working memory — the `_ooc` perf family and the
+//! ci.sh peak-RSS gate are built on them.
+//!
+//! ```
+//! use cocoa::data::rcv1_stream_shards;
+//!
+//! let dir = std::env::temp_dir().join("cocoa_doc_stream_shards");
+//! let _ = std::fs::remove_dir_all(&dir);
+//! let set = rcv1_stream_shards(64, 50, 4, 42, 2, &dir).unwrap();
+//! assert_eq!((set.n(), set.k()), (64, 2));
+//! assert!(set.open_shard(1).unwrap().n() == 32);
+//! ```
 
+use std::path::Path;
+
+use crate::error::Error;
+use crate::kernels;
 use crate::util::Rng;
 
-use super::{CsrMatrix, Dataset, DenseMatrix, Features};
+use super::mmap::{ShardSet, ShardSetWriter};
+use super::{CsrMatrix, Dataset, DenseMatrix, Features, PartitionStrategy};
 
 /// Declarative spec used by the config system and the Table-1 harness.
 #[derive(Debug, Clone, PartialEq)]
@@ -140,6 +161,117 @@ pub fn orthogonal_blocks(
     ds
 }
 
+/// The streaming core shared by the `*_stream_shards` generators: one
+/// row at a time — Zipf-ish sparse columns, tf-idf-ish positive values,
+/// a label from the row's margin against a fixed random hyperplane, the
+/// standard `||x_i|| <= 1` per-row normalization — pushed straight into
+/// the round-robin shard writer. Working memory is the d-dim truth
+/// vector plus the writer's O(n) scalar state; the features never exist
+/// in memory at once. Fully deterministic in `seed`.
+fn stream_shards_core(
+    salt: u64,
+    n: usize,
+    d: usize,
+    nnz_per_row: usize,
+    label_noise: f64,
+    seed: u64,
+    k: usize,
+    dir: &Path,
+) -> Result<ShardSet, Error> {
+    let mut rng = Rng::seed_from_u64(seed ^ salt);
+    let truth: Vec<f64> = (0..d).map(|_| rng.normal()).collect();
+    let mut writer =
+        ShardSetWriter::create(dir, k, PartitionStrategy::RoundRobin, 0, Some(n))?;
+    let want = nnz_per_row.min(d).max(1);
+    let mut seen = vec![false; d];
+    let mut entries: Vec<(u32, f64)> = Vec::with_capacity(want);
+    let mut idx_buf: Vec<u32> = Vec::with_capacity(want);
+    let mut val_buf: Vec<f64> = Vec::with_capacity(want);
+    for _ in 0..n {
+        entries.clear();
+        // fixed nnz per row => deterministic shard bytes; cap the rejection
+        // loop so adversarial shapes (nnz_per_row ~ d) still terminate
+        let mut attempts = 0usize;
+        while entries.len() < want && attempts < 8 * want + 16 {
+            attempts += 1;
+            // Zipf-ish column draw: squaring a uniform biases toward 0.
+            let u = rng.gen_f64();
+            let c = (((u * u) * d as f64) as usize % d) as u32;
+            if !seen[c as usize] {
+                seen[c as usize] = true;
+                entries.push((c, rng.gen_range_f64(0.1, 1.0)));
+            }
+        }
+        for &(c, _) in &entries {
+            seen[c as usize] = false;
+        }
+        entries.sort_unstable_by_key(|&(c, _)| c);
+        idx_buf.clear();
+        val_buf.clear();
+        for &(c, v) in &entries {
+            idx_buf.push(c);
+            val_buf.push(v);
+        }
+        let margin: f64 = entries.iter().map(|&(c, v)| v * truth[c as usize]).sum();
+        let mut y = if margin >= 0.0 { 1.0 } else { -1.0 };
+        if rng.gen_bool(label_noise) {
+            y = -y;
+        }
+        // per-row normalization, exactly Dataset::normalize_rows
+        let mut norm_sq = kernels::sparse_norm_sq(&val_buf);
+        let norm = norm_sq.sqrt();
+        if norm > 1.0 {
+            kernels::scale_in_place(&mut val_buf, 1.0 / norm);
+            norm_sq = 1.0;
+        }
+        writer.push_row(&idx_buf, &val_buf, y, norm_sq)?;
+    }
+    writer.finish(d)
+}
+
+/// rcv1-regime out-of-core generator: n >> d text-style sparsity,
+/// streamed directly to `k` on-disk shards (see [`stream_shards_core`]'s
+/// description on the module). The paper's rcv1 is n = 677,399,
+/// d = 47,236 at ~0.16% density; size to taste via `n`/`d`/`nnz_per_row`.
+pub fn rcv1_stream_shards(
+    n: usize,
+    d: usize,
+    nnz_per_row: usize,
+    seed: u64,
+    k: usize,
+    dir: impl AsRef<Path>,
+) -> Result<ShardSet, Error> {
+    stream_shards_core(0x5cf1, n, d, nnz_per_row, 0.05, seed, k, dir.as_ref())
+}
+
+/// url-regime out-of-core generator: even higher-dimensional, sparser
+/// rows than rcv1 (the url corpus is d ~ 3.2M at ~0.004% density) with
+/// noisier labels. Streamed to `k` on-disk shards.
+pub fn url_stream_shards(
+    n: usize,
+    d: usize,
+    nnz_per_row: usize,
+    seed: u64,
+    k: usize,
+    dir: impl AsRef<Path>,
+) -> Result<ShardSet, Error> {
+    stream_shards_core(0x0541, n, d, nnz_per_row, 0.1, seed, k, dir.as_ref())
+}
+
+/// kdd-regime out-of-core generator: web-scale n with moderate d (kddb
+/// style), the "many cheap rows" end of the out-of-core spectrum.
+/// Streamed to `k` on-disk shards.
+pub fn kdd_stream_shards(
+    n: usize,
+    d: usize,
+    nnz_per_row: usize,
+    seed: u64,
+    k: usize,
+    dir: impl AsRef<Path>,
+) -> Result<ShardSet, Error> {
+    stream_shards_core(0x06dd, n, d, nnz_per_row, 0.02, seed, k, dir.as_ref())
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -187,6 +319,36 @@ mod tests {
         let r2 = ds.features.row_dense(2 * 8); // block 2
         let dot: f64 = r0.iter().zip(&r2).map(|(a, b)| a * b).sum();
         assert_eq!(dot, 0.0);
+    }
+
+    #[test]
+    fn stream_generators_are_deterministic_and_bounded() {
+        let dir = std::env::temp_dir()
+            .join(format!("cocoa_stream_gen_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let a = rcv1_stream_shards(48, 30, 4, 9, 2, dir.join("a")).unwrap();
+        let b = rcv1_stream_shards(48, 30, 4, 9, 2, dir.join("b")).unwrap();
+        assert_eq!(a.fingerprint(), b.fingerprint());
+        assert_eq!(
+            std::fs::read(a.shard_path(0)).unwrap(),
+            std::fs::read(b.shard_path(0)).unwrap(),
+            "same seed must produce byte-identical shards"
+        );
+        let c = rcv1_stream_shards(48, 30, 4, 10, 2, dir.join("c")).unwrap();
+        assert_ne!(a.fingerprint(), c.fingerprint());
+        // fixed nnz per row, normalized, classification labels
+        let shard = a.open_shard(0).unwrap();
+        assert_eq!(shard.nnz(), shard.n() * 4);
+        assert!(shard.labels.iter().all(|&y| y == 1.0 || y == -1.0));
+        for i in 0..shard.n() {
+            assert!(shard.norm_sq(i) <= 1.0 + 1e-9);
+        }
+        // the other regimes share the core; smoke their shapes
+        let u = url_stream_shards(24, 200, 3, 1, 2, dir.join("u")).unwrap();
+        assert_eq!((u.n(), u.d()), (24, 200));
+        let kdd = kdd_stream_shards(30, 16, 2, 1, 3, dir.join("k")).unwrap();
+        assert_eq!((kdd.n(), kdd.k()), (30, 3));
+        std::fs::remove_dir_all(&dir).unwrap();
     }
 
     #[test]

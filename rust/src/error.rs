@@ -47,6 +47,11 @@ pub enum Error {
     /// A LibSVM file failed to parse (`line` is 1-based; 0 for file-level
     /// problems).
     Libsvm { line: usize, message: String },
+    /// An on-disk shard set failed to write, open, or verify: I/O errors,
+    /// a bad magic/version, a checksum mismatch, a violated CSR
+    /// invariant, or a shard/manifest disagreement. `path` names the
+    /// offending file (or the shard directory for set-level problems).
+    Shard { path: String, message: String },
     /// A transport configuration failed validation (out-of-range SimNet
     /// parameters such as `drop_prob >= 1` or a slowdown below 1).
     InvalidTransport { reason: String },
@@ -118,6 +123,9 @@ impl fmt::Display for Error {
                     write!(f, "libsvm parse error at line {line}: {message}")
                 }
             }
+            Error::Shard { path, message } => {
+                write!(f, "shard data error at {path}: {message}")
+            }
             Error::InvalidTransport { reason } => {
                 write!(f, "invalid transport config: {reason}")
             }
@@ -169,6 +177,11 @@ mod tests {
             Error::Timeout { waited_s: 30.0 }.to_string(),
             Error::PeerLost { worker: 2, reason: "connection closed".into() }.to_string(),
             Error::Handshake { reason: "wire version 2 incompatible with 1".into() }.to_string(),
+            Error::Shard {
+                path: "shards/shard_0001.bin".into(),
+                message: "section 2 checksum mismatch (corrupt shard)".into(),
+            }
+            .to_string(),
         ];
         assert!(msgs[0].contains("lambda"));
         assert!(msgs[1].contains("-1"));
@@ -180,6 +193,7 @@ mod tests {
         assert!(msgs[7].contains("30"));
         assert!(msgs[8].contains("worker 2"));
         assert!(msgs[9].contains("wire version"));
+        assert!(msgs[10].contains("shard_0001.bin") && msgs[10].contains("checksum"));
     }
 
     #[test]

@@ -174,11 +174,31 @@
 //! bit-identical to one that never failed, because checkpoints carry the
 //! worker rng streams.
 //!
+//! ## Out-of-core data
+//!
+//! Datasets larger than RAM train from on-disk shards. `cocoa shard`
+//! (or [`data::shard_libsvm`] / [`data::write_shards`] / the streaming
+//! `*_stream_shards` generators) writes one checksummed CSR file per
+//! worker plus a manifest, without ever materializing the dataset; a
+//! [`data::ShardSet`] opens the directory back up and
+//! [`Trainer::on_shards`] builds a session whose workers read their own
+//! shard — memory-mapped by default ([`data::ShardMode`]), so peak RSS
+//! stays a small fraction of the data's size. Shards store the same row
+//! bytes and bit-exact cached norms as [`data::Dataset::subset`] under
+//! the manifest's partition, so shard-backed trajectories are
+//! bit-identical to in-memory ones (pinned by
+//! `rust/tests/ooc_bit_identity.rs`); corrupt or truncated files are
+//! rejected with typed [`Error::Shard`] before any kernel sees them.
+//! The full contract lives in `docs/DATA.md`.
+//!
 //! ## Layers
 //!
-//! * [`data`] — dense/CSR datasets, a LibSVM loader, the synthetic workload
-//!   generators matching the paper's three dataset regimes, and the
-//!   coordinate-block [`data::Partition`] the framework distributes over.
+//! * [`data`] — dense/CSR datasets, the LibSVM loader + streaming shard
+//!   ingester, the synthetic workload generators matching the paper's
+//!   three dataset regimes (in-memory and streamed-to-shard variants),
+//!   the mmap-backed [`data::ShardSet`] store, and the coordinate-block
+//!   [`data::Partition`] the framework distributes over (contract:
+//!   `docs/DATA.md`).
 //! * [`loss`] — the regularized-loss-minimization problem class of eq. (1):
 //!   hinge, smoothed hinge, squared and logistic losses with their Fenchel
 //!   conjugates and closed-form/Newton single-coordinate dual maximizers.
@@ -200,9 +220,10 @@
 //!   the sparse column-touch set) so inner loops never recompute them.
 //! * [`perf`] — the reproducible performance harness behind `cocoa perf`:
 //!   standardized workloads (dense ridge, rcv1-density sparse logistic,
-//!   smoothed-L1 lasso, each at K ∈ {1, 4}) emitting a schema-versioned
+//!   smoothed-L1 lasso, each at K ∈ {1, 4}, plus the `_ooc` out-of-core
+//!   family training from mmap shards) emitting a schema-versioned
 //!   `BENCH_hotpath.json` (steps/sec, time-to-1e-3-gap, wire bytes, peak
-//!   RSS) that CI validates as a smoke gate.
+//!   RSS vs on-disk dataset bytes) that CI validates as a smoke gate.
 //! * [`coordinator`] — Algorithm 1 as a leader/worker runtime: real worker
 //!   threads owning disjoint data + dual blocks, message-passing rounds,
 //!   exact communication accounting.

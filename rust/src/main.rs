@@ -67,7 +67,11 @@ cocoa — communication-efficient distributed dual coordinate ascent (NIPS 2014 
 
 USAGE:
   cocoa train --config <toml> [--out <csv>] [--p-star <f64>] [--progress] [--threads <t>]
-              [--trace-out <jsonl>]
+              [--trace-out <jsonl>] [--rss-budget-mb <mb>]
+  cocoa shard --out <dir> --workers <k>
+              (--libsvm <file> [--d-hint <d>] [--normalize]
+                 [--strategy <contiguous|round_robin|random>] [--partition-seed <s>]
+               | --synthetic <rcv1|url|kdd> --n <n> --d <d> [--nnz <per-row>] [--seed <s>])
   cocoa repro <table1|fig1|fig2|fig3|fig4|headline|sparsity|theory|all> [--smoke] [--results-dir <dir>] [--rounds <n>]
   cocoa perf [--smoke] [--out <json>] [--seed <n>]
   cocoa perf --validate <json> [--baseline <json>] [--tolerance <frac>] [--delta <path>]
@@ -93,6 +97,12 @@ USAGE:
   to also gate steps/sec, time-to-1e-3-gap, and peak RSS within the
   --tolerance band (default 0.5 = 50%); --delta writes the comparison
   report to a file for CI artifacts.
+
+  shard writes per-worker on-disk partitions (the out-of-core path; see
+  docs/DATA.md). Train from them with `[data] shards = \"dir\"` in the
+  config — workers mmap only their own shard, so datasets larger than RAM
+  train with a bounded footprint. --rss-budget-mb makes `cocoa train` exit
+  nonzero if the process's peak RSS exceeded the budget (the CI gate).
 ";
 
 fn main() -> Result<()> {
@@ -112,7 +122,12 @@ fn main() -> Result<()> {
                 args.flags.contains("progress"),
                 args.opt("threads").map(|s| s.parse()).transpose()?,
                 args.opt("trace-out").map(String::from),
+                args.opt("rss-budget-mb").map(|s| s.parse()).transpose()?,
             )
+        }
+        "shard" => {
+            let args = Args::parse(&argv[1..], &["normalize"])?;
+            shard(&args)
         }
         "repro" => {
             let args = Args::parse(&argv[1..], &["smoke"])?;
@@ -197,6 +212,7 @@ fn main() -> Result<()> {
     }
 }
 
+#[allow(clippy::too_many_arguments)]
 fn train(
     config_path: &str,
     out: Option<String>,
@@ -204,25 +220,56 @@ fn train(
     progress: bool,
     threads: Option<usize>,
     trace_out: Option<String>,
+    rss_budget_mb: Option<u64>,
 ) -> Result<()> {
     let mut cfg = ExperimentConfig::from_toml_file(config_path)?;
     if let Some(t) = threads {
         cfg.runtime.threads = t;
     }
-    let data = cfg.dataset.load()?;
-    eprintln!(
-        "dataset {} (n={}, d={}, density={:.4}) | K={} | {} | loss {} | lambda {} | T={}",
-        cfg.dataset.name(),
-        data.n(),
-        data.d(),
-        data.density(),
-        cfg.partition.k,
-        cfg.algorithm.name(),
-        cfg.loss,
-        cfg.lambda,
-        cfg.runtime.threads,
-    );
-    let mut session = cfg.trainer(&data).build()?;
+    // `[data] shards = "dir"` trains out-of-core: only the manifest is
+    // opened here, and each worker maps just its own shard file
+    let shards = match cfg.dataset.shards() {
+        Some(_) => Some(cfg.open_shards()?),
+        None => None,
+    };
+    let data = match &shards {
+        Some(_) => None,
+        None => Some(cfg.dataset.load()?),
+    };
+    match (&shards, &data) {
+        (Some(set), _) => eprintln!(
+            "shards {} (n={}, d={}, {:.1} MiB on disk, {:?}) | K={} | {} | loss {} | lambda {} | T={}",
+            cfg.dataset.name(),
+            set.n(),
+            set.d(),
+            set.total_bytes() as f64 / (1024.0 * 1024.0),
+            set.mode(),
+            set.k(),
+            cfg.algorithm.name(),
+            cfg.loss,
+            cfg.lambda,
+            cfg.runtime.threads,
+        ),
+        (_, Some(data)) => eprintln!(
+            "dataset {} (n={}, d={}, density={:.4}) | K={} | {} | loss {} | lambda {} | T={}",
+            cfg.dataset.name(),
+            data.n(),
+            data.d(),
+            data.density(),
+            cfg.partition.k,
+            cfg.algorithm.name(),
+            cfg.loss,
+            cfg.lambda,
+            cfg.runtime.threads,
+        ),
+        (None, None) => unreachable!("exactly one data source"),
+    }
+    let part_k = shards.as_ref().map(|s| s.k()).unwrap_or(cfg.partition.k);
+    let mut session = match (&shards, &data) {
+        (Some(set), _) => cfg.trainer_shards(set).build()?,
+        (_, Some(data)) => cfg.trainer(data).build()?,
+        (None, None) => unreachable!("exactly one data source"),
+    };
     session.set_reference_optimum(p_star);
     let mut algorithm = cfg.algorithm.instantiate();
     let mut budget = cfg.run.budget();
@@ -274,7 +321,7 @@ fn train(
             "results/train_{}_{}_k{}_h{}.csv",
             cfg.dataset.name(),
             cfg.algorithm.name(),
-            cfg.partition.k,
+            part_k,
             cfg.algorithm.h()
         )
     });
@@ -283,6 +330,87 @@ fn train(
     if let Some(path) = &trace_out {
         eprintln!("spans -> {path}");
     }
+    if let Some(budget_mb) = rss_budget_mb {
+        let peak = peak_rss_bytes().unwrap_or(0);
+        if peak == 0 {
+            eprintln!(
+                "rss budget: peak RSS unavailable on this platform; \
+                 --rss-budget-mb {budget_mb} not enforced"
+            );
+        } else if peak > budget_mb * 1024 * 1024 {
+            bail!(
+                "peak RSS {:.1} MiB exceeds --rss-budget-mb {budget_mb}",
+                peak as f64 / (1024.0 * 1024.0)
+            );
+        } else {
+            eprintln!(
+                "rss budget: peak RSS {:.1} MiB within --rss-budget-mb {budget_mb}",
+                peak as f64 / (1024.0 * 1024.0)
+            );
+        }
+    }
+    Ok(())
+}
+
+/// `cocoa shard`: write a per-worker on-disk shard set (the out-of-core
+/// ingest step; see docs/DATA.md). Sources are mutually exclusive:
+/// `--libsvm` streams an existing file through the single-pass sharder,
+/// `--synthetic` generates an rcv1/url/kdd-regime dataset row by row.
+/// Neither materializes the full dataset in memory.
+fn shard(args: &Args) -> Result<()> {
+    let dir = std::path::PathBuf::from(args.req("out")?);
+    let k: usize = args.req("workers")?.parse()?;
+    let set = if let Some(path) = args.opt("libsvm") {
+        if args.opt("synthetic").is_some() {
+            bail!("--libsvm and --synthetic are mutually exclusive");
+        }
+        let strategy_name = args.opt("strategy").unwrap_or("contiguous");
+        let strategy = data::PartitionStrategy::from_name(strategy_name).ok_or_else(|| {
+            anyhow!("unknown --strategy {strategy_name:?} (contiguous|round_robin|random)")
+        })?;
+        let partition_seed =
+            args.opt("partition-seed").map(|s| s.parse()).transpose()?.unwrap_or(0);
+        let d_hint = args.opt("d-hint").map(|s| s.parse()).transpose()?.unwrap_or(0);
+        data::shard_libsvm(
+            path,
+            &dir,
+            k,
+            strategy,
+            partition_seed,
+            d_hint,
+            args.flags.contains("normalize"),
+        )?
+    } else if let Some(regime) = args.opt("synthetic") {
+        if args.opt("strategy").is_some() || args.opt("partition-seed").is_some() {
+            bail!(
+                "--strategy/--partition-seed apply to --libsvm only; \
+                 the streaming synthetic generators shard round-robin"
+            );
+        }
+        let n: usize = args.req("n")?.parse()?;
+        let d: usize = args.req("d")?.parse()?;
+        let nnz = args.opt("nnz").map(|s| s.parse()).transpose()?.unwrap_or(16);
+        let seed = args.opt("seed").map(|s| s.parse()).transpose()?.unwrap_or(42);
+        match regime {
+            "rcv1" => data::rcv1_stream_shards(n, d, nnz, seed, k, &dir)?,
+            "url" => data::url_stream_shards(n, d, nnz, seed, k, &dir)?,
+            "kdd" => data::kdd_stream_shards(n, d, nnz, seed, k, &dir)?,
+            other => bail!("unknown synthetic regime {other:?} (rcv1|url|kdd)"),
+        }
+    } else {
+        bail!("shard needs a source: --libsvm <file> or --synthetic <rcv1|url|kdd>");
+    };
+    eprintln!(
+        "sharded n={} d={} nnz={} into K={} shards under {} \
+         ({:.1} MiB on disk, fingerprint {})",
+        set.n(),
+        set.d(),
+        set.nnz(),
+        set.k(),
+        dir.display(),
+        set.total_bytes() as f64 / (1024.0 * 1024.0),
+        set.fingerprint(),
+    );
     Ok(())
 }
 
@@ -304,14 +432,23 @@ fn leader(
     if let Some(t) = threads {
         cfg.runtime.threads = t;
     }
-    let data = cfg.dataset.load()?;
+    // shard-backed configs never load rows into the leader: the manifest
+    // supplies n/d/partition, and evaluate() is distributed anyway
+    let shards = match cfg.dataset.shards() {
+        Some(_) => Some(cfg.open_shards()?),
+        None => None,
+    };
+    let data = match &shards {
+        Some(_) => None,
+        None => Some(cfg.dataset.load()?),
+    };
+    let part_k = shards.as_ref().map(|s| s.k()).unwrap_or(cfg.partition.k);
     if let Some(k) = workers {
-        if k != cfg.partition.k {
+        if k != part_k {
             bail!(
-                "--workers {k} disagrees with the config partition (k = {}); \
+                "--workers {k} disagrees with the configured partition (k = {part_k}); \
                  every worker derives its block from the same config, so the \
-                 two must match",
-                cfg.partition.k
+                 two must match"
             );
         }
     }
@@ -327,16 +464,25 @@ fn leader(
     if netcfg.listen.is_empty() {
         bail!("no listen address: pass --listen or set listen under [transport.net]");
     }
+    let (ln, ld) = match (&shards, &data) {
+        (Some(set), _) => (set.n(), set.d()),
+        (_, Some(ds)) => (ds.n(), ds.d()),
+        (None, None) => unreachable!("exactly one data source"),
+    };
     eprintln!(
-        "leader: dataset {} (n={}, d={}) | {} | waiting for {} workers on {}",
+        "leader: dataset {} (n={ln}, d={ld}) | {} | waiting for {part_k} workers on {}",
         cfg.dataset.name(),
-        data.n(),
-        data.d(),
         cfg.algorithm.name(),
-        cfg.partition.k,
         netcfg.listen,
     );
-    let mut session = cfg.trainer(&data).transport(TransportKind::Net(netcfg)).build()?;
+    let mut session = match (&shards, &data) {
+        (Some(set), _) => cfg
+            .trainer_shards(set)
+            .transport(TransportKind::Net(netcfg))
+            .build()?,
+        (_, Some(ds)) => cfg.trainer(ds).transport(TransportKind::Net(netcfg)).build()?,
+        (None, None) => unreachable!("exactly one data source"),
+    };
     session.set_reference_optimum(p_star);
     let mut algorithm = cfg.algorithm.instantiate();
     let mut budget = cfg.run.budget();
@@ -419,7 +565,7 @@ fn leader(
             "results/leader_{}_{}_k{}_h{}.csv",
             cfg.dataset.name(),
             cfg.algorithm.name(),
-            cfg.partition.k,
+            part_k,
             cfg.algorithm.h()
         )
     });
@@ -643,10 +789,18 @@ fn default_rounds(profile: Profile) -> u64 {
 fn perf_run(profile: PerfProfile, seed: u64, out: &str) -> Result<()> {
     eprintln!(
         "perf: profile {} seed {seed} -> {out} \
-         (3 workload families x K in {{1, 4}}, sparse also at T = 4)",
+         (3 in-memory families x K in {{1, 4}}, sparse also at T = 4, \
+         plus the _ooc out-of-core family)",
         profile.as_str()
     );
-    let report = perf::run_all(profile, seed)?;
+    let mut report = perf::run_all(profile, seed)?;
+    // the out-of-core family: stream-generate shard sets in a scratch
+    // dir, train from mmap, and record dataset bytes next to peak RSS
+    // (the validator then enforces rss * 2 <= dataset_bytes)
+    let ooc_dir = std::env::temp_dir().join(format!("cocoa_ooc_{seed}"));
+    let ooc = perf::run_ooc(profile, seed, &ooc_dir)?;
+    let _ = std::fs::remove_dir_all(&ooc_dir);
+    report.workloads.extend(ooc);
     println!(
         "{:<24} {:>3} {:>3} {:>9} {:>9} {:>13} {:>12} {:>14} {:>12}",
         "workload", "K", "T", "n", "d", "steps/s", "final gap", "t(gap 1e-3) s", "wire bytes"
@@ -666,6 +820,17 @@ fn perf_run(profile: PerfProfile, seed: u64, out: &str) -> Result<()> {
                 .unwrap_or("-".into()),
             w.bytes_measured,
         );
+    }
+    for w in &report.workloads {
+        if let (Some(ds), Some(rss)) = (w.dataset_bytes, w.peak_rss_bytes) {
+            println!(
+                "{}: dataset {:.1} MiB on disk, peak RSS {:.1} MiB ({:.1}x headroom)",
+                w.name,
+                ds as f64 / (1024.0 * 1024.0),
+                rss as f64 / (1024.0 * 1024.0),
+                ds as f64 / rss.max(1) as f64,
+            );
+        }
     }
     if let Some(rss) = report.peak_rss_bytes {
         println!("peak RSS: {:.1} MiB", rss as f64 / (1024.0 * 1024.0));

@@ -17,7 +17,12 @@
 //! * `phase_seconds.<phase>` per workload (v3) — candidate at most
 //!   `(1 + tolerance) x baseline` for each round phase, so a failure
 //!   names *which phase* regressed. A zero baseline phase is skipped
-//!   (noise would dominate a ratio against ~0).
+//!   (noise would dominate a ratio against ~0);
+//! * `peak_rss_bytes` per workload (v4, the `_ooc` out-of-core family)
+//!   — candidate at most `(1 + tolerance) x baseline`, same null rules,
+//!   so a footprint regression names the workload that fattened (the
+//!   hard `rss * 2 <= dataset_bytes` band is the validator's job; this
+//!   comparison catches drift long before the band breaks).
 //!
 //! Workloads present in the baseline but missing from the candidate fail
 //! the gate (a silently dropped workload is how a regression hides);
@@ -170,6 +175,30 @@ pub fn compare(candidate: &Json, baseline: &Json, tolerance: f64) -> Result<Gate
             _ => out.failures.push(format!("{name}: time_to_gap_1e3_s missing")),
         }
 
+        // per-workload peak RSS (v4, the out-of-core family): drift in
+        // the mmap path's footprint fails here long before it would
+        // break the validator's hard 2x band
+        match (opt_num(bw, "peak_rss_bytes"), opt_num(cw, "peak_rss_bytes")) {
+            (Some(None), _) => out.skipped.push(format!(
+                "{name}: peak_rss_bytes (baseline recorded none)"
+            )),
+            (Some(Some(b_r)), Some(Some(c_r))) => {
+                let ceil = (1.0 + tolerance) * b_r;
+                let line = format!(
+                    "{name}: peak_rss_bytes {c_r:.0} vs baseline {b_r:.0} (ceiling {ceil:.0})"
+                );
+                if c_r <= ceil {
+                    out.checked.push(line);
+                } else {
+                    out.failures.push(line);
+                }
+            }
+            (Some(Some(b_r)), Some(None)) => out.failures.push(format!(
+                "{name}: baseline recorded peak_rss_bytes {b_r:.0}, candidate recorded none"
+            )),
+            _ => out.failures.push(format!("{name}: peak_rss_bytes missing")),
+        }
+
         // per-phase wall seconds: a failure here localizes the regression
         // to the phase that moved (broadcast / local_solve / reduce /
         // commit / evaluate)
@@ -266,6 +295,7 @@ mod tests {
                         "wall_s": 0.01, "steps_per_sec": {sps},
                         "final_gap": 0.5, "time_to_gap_1e3_s": {gap_s},
                         "bytes_measured": 128,
+                        "dataset_bytes": null, "peak_rss_bytes": null,
                         "phase_seconds": {{"broadcast": 0.001, "local_solve": 0.006,
                           "reduce": 0.002, "commit": 0.0005, "evaluate": 0.0005}},
                         "round_sim_time_s": [0.0, 0.1]}}"#
@@ -273,7 +303,7 @@ mod tests {
             })
             .collect();
         format!(
-            r#"{{"schema_version": 3, "profile": "smoke", "seed": 7,
+            r#"{{"schema_version": 4, "profile": "smoke", "seed": 7,
                 "kernel_backend": "scalar", "peak_rss_bytes": {rss},
                 "workloads": [{}]}}"#,
             workloads.join(", ")
@@ -374,6 +404,39 @@ mod tests {
             out.skipped.iter().any(|s| s.contains("phase_seconds.commit")),
             "{:?}",
             out.skipped
+        );
+    }
+
+    #[test]
+    fn per_workload_rss_gates_with_null_semantics() {
+        // an _ooc-style workload with recorded footprint: growth past the
+        // band fails and names the workload, within-band passes
+        let with_rss = |rss: u64| {
+            report(&[("rcv1_ooc_k2", 1000.0)], "1048576", "0.2").replace(
+                "\"dataset_bytes\": null, \"peak_rss_bytes\": null",
+                &format!("\"dataset_bytes\": 100000000, \"peak_rss_bytes\": {rss}"),
+            )
+        };
+        let base = with_rss(10_000_000);
+        let fat = with_rss(40_000_000);
+        let out = compare_str(&fat, &base, 0.5).unwrap();
+        assert!(
+            out.failures
+                .iter()
+                .any(|f| f.contains("rcv1_ooc_k2") && f.contains("peak_rss_bytes")),
+            "{:?}",
+            out.failures
+        );
+        let ok = with_rss(12_000_000);
+        assert!(compare_str(&ok, &base, 0.5).unwrap().passed());
+        // a candidate that stopped recording its footprint is a
+        // regression, not a skip
+        let gone = report(&[("rcv1_ooc_k2", 1000.0)], "1048576", "0.2");
+        let out = compare_str(&gone, &base, 0.5).unwrap();
+        assert!(
+            out.failures.iter().any(|f| f.contains("candidate recorded none")),
+            "{:?}",
+            out.failures
         );
     }
 

@@ -4,9 +4,11 @@
 //! module is how that claim becomes a measured trajectory instead of a
 //! slogan. [`run_all`] executes standardized workloads (dense ridge,
 //! rcv1-density sparse logistic, smoothed-L1 lasso, each at K ∈ {1, 4})
-//! and emits a schema-versioned `BENCH_hotpath.json`: steps/sec,
-//! simulated time to a 1e-3 duality gap, byte-exact wire bytes, and peak
-//! RSS.
+//! and [`run_ooc`] adds the out-of-core `_ooc` family (mmap-shard
+//! training with a per-workload `dataset_bytes` / `peak_rss_bytes`
+//! band); together they emit a schema-versioned `BENCH_hotpath.json`:
+//! steps/sec, simulated time to a 1e-3 duality gap, byte-exact wire
+//! bytes, and peak RSS.
 //!
 //! CI consumes the `--smoke` profile twice:
 //!
@@ -25,4 +27,4 @@ mod workloads;
 
 pub use gate::{compare, compare_files, compare_str, GateOutcome};
 pub use schema::{parse, validate, validate_file, validate_str, Json, SchemaError};
-pub use workloads::{run_all, BenchReport, PerfProfile, WorkloadReport, SCHEMA_VERSION};
+pub use workloads::{run_all, run_ooc, BenchReport, PerfProfile, WorkloadReport, SCHEMA_VERSION};

@@ -387,6 +387,29 @@ pub fn validate(doc: &Json) -> Result<(), SchemaError> {
                 return err(format!("{ctx}: time_to_gap_1e3_s = {t} < 0"));
             }
         }
+        // v4: the out-of-core band. In-memory workloads record null for
+        // both; an `_ooc` workload records the shard set's on-disk bytes
+        // and the run's peak RSS, and the report is only valid if the
+        // footprint stayed at least 2x below the data — the structural
+        // proof that mmap-shard training is actually out-of-core.
+        let dataset_bytes = finite_num_or_null(wl, &ctx, "dataset_bytes")?;
+        let rss = finite_num_or_null(wl, &ctx, "peak_rss_bytes")?;
+        for (key, v) in [("dataset_bytes", dataset_bytes), ("peak_rss_bytes", rss)] {
+            if let Some(v) = v {
+                if v < 0.0 {
+                    return err(format!("{ctx}: {key} = {v} < 0"));
+                }
+            }
+        }
+        if let (Some(ds), Some(rss)) = (dataset_bytes, rss) {
+            if rss * 2.0 > ds {
+                return err(format!(
+                    "{ctx}: out-of-core band violated — peak_rss_bytes {rss:.0} * 2 > \
+                     dataset_bytes {ds:.0} (the run's footprint must stay at least 2x \
+                     below the on-disk data)"
+                ));
+            }
+        }
         let times = wl
             .get("round_sim_time_s")
             .and_then(Json::as_arr)
@@ -447,7 +470,7 @@ mod tests {
 
     fn minimal_workload(extra: &str, times: &str) -> String {
         format!(
-            r#"{{"schema_version": 3, "profile": "smoke", "seed": 7,
+            r#"{{"schema_version": 4, "profile": "smoke", "seed": 7,
                 "kernel_backend": "scalar",
                 "peak_rss_bytes": 1048576,
                 "workloads": [{{"name": "w", "k": 1, "threads": 1, "n": 10, "d": 2,
@@ -455,6 +478,7 @@ mod tests {
                   "wall_s": 0.01, "steps_per_sec": 3000.0,
                   "final_gap": 0.5, "time_to_gap_1e3_s": null,
                   "bytes_measured": 128,
+                  "dataset_bytes": null, "peak_rss_bytes": null,
                   "phase_seconds": {{"broadcast": 0.001, "local_solve": 0.006,
                     "reduce": 0.002, "commit": 0.0005, "evaluate": 0.0005}},
                   "round_sim_time_s": {times}{extra}}}]}}"#
@@ -480,7 +504,7 @@ mod tests {
 
     #[test]
     fn validator_rejects_missing_fields_and_bad_version() {
-        let doc = minimal_workload("", "[0.0]").replace("\"schema_version\": 3", "\"schema_version\": 99");
+        let doc = minimal_workload("", "[0.0]").replace("\"schema_version\": 4", "\"schema_version\": 99");
         assert!(validate_str(&doc).unwrap_err().message.contains("schema_version"));
         let doc = minimal_workload("", "[0.0]").replace("\"steps_per_sec\": 3000.0,", "");
         assert!(validate_str(&doc)
@@ -503,6 +527,29 @@ mod tests {
         let doc = minimal_workload("", "[0.0]")
             .replace("\"reduce\": 0.002,", "\"warp\": 0.002,");
         assert!(validate_str(&doc).unwrap_err().message.contains("reduce"));
+    }
+
+    #[test]
+    fn validator_enforces_the_out_of_core_band() {
+        // both fields recorded and RSS well under half the data: valid
+        let ok = minimal_workload("", "[0.0]").replace(
+            "\"dataset_bytes\": null, \"peak_rss_bytes\": null",
+            "\"dataset_bytes\": 100000000, \"peak_rss_bytes\": 40000000",
+        );
+        validate_str(&ok).unwrap();
+        // footprint above half the data: the band is violated
+        let fat = minimal_workload("", "[0.0]").replace(
+            "\"dataset_bytes\": null, \"peak_rss_bytes\": null",
+            "\"dataset_bytes\": 100000000, \"peak_rss_bytes\": 60000000",
+        );
+        let e = validate_str(&fat).unwrap_err();
+        assert!(e.message.contains("out-of-core band"), "{e}");
+        // dropping the fields entirely is a schema error, not a skip —
+        // v4 reports must state them (null means "in-memory workload")
+        let missing = minimal_workload("", "[0.0]")
+            .replace("\"dataset_bytes\": null, \"peak_rss_bytes\": null,", "");
+        let e = validate_str(&missing).unwrap_err();
+        assert!(e.message.contains("dataset_bytes"), "{e}");
     }
 
     #[test]

@@ -16,6 +16,13 @@
 //! (suffix `_t4`) so the intra-worker sharded hot path has its own
 //! trajectory next to the sequential one.
 //!
+//! A fourth, out-of-core family (suffix `_ooc`, run by [`run_ooc`])
+//! stream-generates rcv1/url/kdd-regime shard sets on disk and trains
+//! from them via mmap. Those entries carry `dataset_bytes` and
+//! `peak_rss_bytes`, and the schema validator enforces the band
+//! `peak_rss_bytes * 2 <= dataset_bytes` — the checked-in proof that the
+//! out-of-core path's footprint stays several times below the data.
+//!
 //! Every run uses the byte-exact counted transport and the ec2-like
 //! network model, so `bytes_measured` and the simulated time axis are
 //! populated. The report is written as schema-versioned JSON
@@ -30,7 +37,10 @@ use std::path::Path;
 use std::time::Instant;
 
 use crate::algorithms::Cocoa;
-use crate::data::{cov_like, rcv1_like, Dataset};
+use crate::data::{
+    cov_like, kdd_stream_shards, rcv1_like, rcv1_stream_shards, url_stream_shards, Dataset,
+    ShardSet,
+};
 use crate::driver::{GapBelow, MaxRounds, StoppingRule};
 use crate::loss::LossKind;
 use crate::netsim::NetworkModel;
@@ -48,7 +58,12 @@ use crate::Trainer;
 /// phase; `local_solve` is the slowest slot per round — the critical
 /// path), so `perf --validate --baseline` localizes a regression to the
 /// phase that moved. `peak_rss_bytes` now folds in the workers' maxima.
-pub const SCHEMA_VERSION: u32 = 3;
+/// v4: per-workload `dataset_bytes` and `peak_rss_bytes` (both null
+/// outside the `_ooc` out-of-core family); when both are present the
+/// validator enforces the out-of-core band `peak_rss_bytes * 2 <=
+/// dataset_bytes`, the report-level proof that mmap-shard training keeps
+/// its footprint several times below the data it trains on.
+pub const SCHEMA_VERSION: u32 = 4;
 
 /// Problem sizes: tiny (CI smoke) or benchmark-scale.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -92,6 +107,14 @@ pub struct WorkloadReport {
     pub time_to_gap_1e3_s: Option<f64>,
     /// Byte-exact wire bytes (counted transport).
     pub bytes_measured: u64,
+    /// On-disk bytes of the shard set an `_ooc` workload trained from
+    /// (`None` for in-memory workloads).
+    pub dataset_bytes: Option<u64>,
+    /// Peak RSS observed over this workload's run (`None` for in-memory
+    /// workloads and on platforms without procfs). The validator's
+    /// out-of-core band requires `peak_rss_bytes * 2 <= dataset_bytes`
+    /// whenever both are recorded.
+    pub peak_rss_bytes: Option<u64>,
     /// Cumulative wall seconds per round phase, indexed like
     /// [`Phase::ALL`] (`local_solve` = slowest slot per round).
     pub phase_seconds: [f64; 5],
@@ -225,6 +248,8 @@ pub fn run_all(profile: PerfProfile, seed: u64) -> crate::Result<BenchReport> {
             final_gap: last.gap,
             time_to_gap_1e3_s: trace.time_to_gap(1e-3),
             bytes_measured: last.bytes_measured,
+            dataset_bytes: None,
+            peak_rss_bytes: None,
             phase_seconds: hub.phase_seconds(),
             round_sim_time_s: trace.rows.iter().map(|r| r.sim_time_s).collect(),
         });
@@ -245,6 +270,135 @@ pub fn run_all(profile: PerfProfile, seed: u64) -> crate::Result<BenchReport> {
         peak_rss_bytes: peak_rss,
         workloads,
     })
+}
+
+/// One out-of-core workload: a streaming generator regime plus shapes
+/// big enough that the RSS band is meaningful (the dataset must dwarf
+/// the process footprint even at the smoke profile — a tiny shard set
+/// would make `rss * 2 <= dataset_bytes` unsatisfiable by any
+/// implementation).
+struct OocSpec {
+    name: &'static str,
+    regime: fn(usize, usize, usize, u64, usize, &Path) -> crate::Result<ShardSet>,
+    n: usize,
+    d: usize,
+    nnz_per_row: usize,
+    k: usize,
+}
+
+fn ooc_specs(profile: PerfProfile) -> Vec<OocSpec> {
+    fn rcv1(n: usize, d: usize, z: usize, s: u64, k: usize, p: &Path) -> crate::Result<ShardSet> {
+        rcv1_stream_shards(n, d, z, s, k, p)
+    }
+    fn url(n: usize, d: usize, z: usize, s: u64, k: usize, p: &Path) -> crate::Result<ShardSet> {
+        url_stream_shards(n, d, z, s, k, p)
+    }
+    fn kdd(n: usize, d: usize, z: usize, s: u64, k: usize, p: &Path) -> crate::Result<ShardSet> {
+        kdd_stream_shards(n, d, z, s, k, p)
+    }
+    let mut specs = vec![OocSpec {
+        name: "rcv1_ooc",
+        regime: rcv1,
+        n: 150_000,
+        d: 40_000,
+        nnz_per_row: 160,
+        k: 2,
+    }];
+    if profile == PerfProfile::Full {
+        specs.push(OocSpec {
+            name: "url_ooc",
+            regime: url,
+            n: 250_000,
+            d: 1_000_000,
+            nnz_per_row: 120,
+            k: 4,
+        });
+        specs.push(OocSpec {
+            name: "kdd_ooc",
+            regime: kdd,
+            n: 600_000,
+            d: 30_000,
+            nnz_per_row: 50,
+            k: 4,
+        });
+    }
+    specs
+}
+
+/// Run the out-of-core workload family: stream-generate a shard set
+/// under `dir` (never materializing the dataset in memory), train from
+/// the mmapped shards, and record the on-disk dataset size next to the
+/// run's peak RSS. The validator's v4 band (`rss * 2 <= dataset_bytes`)
+/// then *proves* the footprint stayed several times below the data.
+///
+/// Kept separate from [`run_all`] because these workloads write hundreds
+/// of megabytes to `dir` — the caller owns creating and cleaning it.
+pub fn run_ooc(profile: PerfProfile, seed: u64, dir: &Path) -> crate::Result<Vec<WorkloadReport>> {
+    let mut workloads = Vec::new();
+    let cap = match profile {
+        PerfProfile::Smoke => 3,
+        PerfProfile::Full => 8,
+    };
+    for spec in ooc_specs(profile) {
+        let subdir = dir.join(spec.name);
+        let set = (spec.regime)(spec.n, spec.d, spec.nnz_per_row, seed, spec.k, &subdir)?;
+        let dataset_bytes = set.total_bytes();
+        let h = (set.n() / set.k()).max(1);
+        let mut session = Trainer::on_shards(&set)
+            .loss(LossKind::Logistic)
+            .lambda(1.0 / set.n() as f64)
+            .regularizer(RegularizerKind::L2)
+            .network(NetworkModel::ec2_like())
+            .transport(TransportKind::Counted)
+            .seed(seed)
+            .label(spec.name)
+            .build()?;
+        let stopping = GapBelow::new(1e-3).or(MaxRounds::new(cap));
+        session.set_tracing(true);
+        let hub = MetricsHub::new();
+        let mut hub_obs = hub.observer();
+        let t0 = Instant::now();
+        let mut algorithm = Cocoa::new(h);
+        let trace = {
+            let mut driver = session.drive(&mut algorithm, stopping)?;
+            driver.observe(&mut hub_obs)?;
+            driver.drain()?
+        };
+        let wall_s = t0.elapsed().as_secs_f64();
+        let stats = *session.stats();
+        let worker_rss = session.max_worker_rss();
+        session.shutdown();
+
+        // the run's footprint: this process's lifetime peak folded with
+        // whatever the workers reported (same process here, but the fold
+        // is what a multi-process BENCH would need)
+        let peak = match peak_rss_bytes() {
+            Some(rss) => Some(rss.max(worker_rss)),
+            None if worker_rss > 0 => Some(worker_rss),
+            None => None,
+        };
+        let last = trace.rows.last().expect("at least round 0 recorded");
+        workloads.push(WorkloadReport {
+            name: format!("{}_k{}", spec.name, set.k()),
+            k: set.k(),
+            threads: 1,
+            n: set.n(),
+            d: set.d(),
+            density: set.nnz() as f64 / (set.n() as f64 * set.d() as f64),
+            rounds: stats.rounds.max(1),
+            inner_steps: stats.inner_steps,
+            wall_s,
+            steps_per_sec: stats.inner_steps as f64 / wall_s.max(1e-9),
+            final_gap: last.gap,
+            time_to_gap_1e3_s: trace.time_to_gap(1e-3),
+            bytes_measured: last.bytes_measured,
+            dataset_bytes: Some(dataset_bytes),
+            peak_rss_bytes: peak,
+            phase_seconds: hub.phase_seconds(),
+            round_sim_time_s: trace.rows.iter().map(|r| r.sim_time_s).collect(),
+        });
+    }
+    Ok(workloads)
 }
 
 impl BenchReport {
@@ -273,6 +427,7 @@ impl BenchReport {
                  \"density\": {}, \
                  \"rounds\": {}, \"inner_steps\": {}, \"wall_s\": {}, \"steps_per_sec\": {}, \
                  \"final_gap\": {}, \"time_to_gap_1e3_s\": {}, \"bytes_measured\": {}, \
+                 \"dataset_bytes\": {}, \"peak_rss_bytes\": {}, \
                  \"phase_seconds\": {{{}}}, \
                  \"round_sim_time_s\": [{}]}}{}\n",
                 w.name,
@@ -288,6 +443,8 @@ impl BenchReport {
                 json_f64(w.final_gap),
                 w.time_to_gap_1e3_s.map_or("null".to_string(), json_f64),
                 w.bytes_measured,
+                w.dataset_bytes.map_or("null".to_string(), |v| v.to_string()),
+                w.peak_rss_bytes.map_or("null".to_string(), |v| v.to_string()),
                 phases.join(", "),
                 times.join(", "),
                 if i + 1 == self.workloads.len() { "" } else { "," },
@@ -375,6 +532,8 @@ mod tests {
                 final_gap: 0.5,
                 time_to_gap_1e3_s: None,
                 bytes_measured: 64,
+                dataset_bytes: None,
+                peak_rss_bytes: None,
                 phase_seconds: [0.001, 0.008, 0.002, 0.0005, 0.0005],
                 round_sim_time_s: vec![0.0, 0.5],
             }],

@@ -480,10 +480,43 @@ pub fn run_fingerprint(
     seed: u64,
     threads: usize,
 ) -> u64 {
+    run_fingerprint_parts(
+        &data.fingerprint(),
+        data.n(),
+        data.d(),
+        partition,
+        loss,
+        regularizer,
+        solver,
+        lambda,
+        seed,
+        threads,
+    )
+}
+
+/// [`run_fingerprint`] from an already-computed dataset content
+/// fingerprint. This is what makes the out-of-core path handshake-equal
+/// to the in-memory one: a shard manifest stores the sharded dataset's
+/// `Dataset::fingerprint`, so a shard-fed leader (which never holds the
+/// data) and a shard-fed worker (which holds only its own block) both
+/// hash the identical run description without materializing anything.
+#[allow(clippy::too_many_arguments)]
+pub fn run_fingerprint_parts(
+    data_fingerprint: &str,
+    n: usize,
+    d: usize,
+    partition: &Partition,
+    loss: LossKind,
+    regularizer: RegularizerKind,
+    solver: SolverKind,
+    lambda: f64,
+    seed: u64,
+    threads: usize,
+) -> u64 {
     let mut h: u64 = 0xcbf29ce484222325;
-    fnv1a_bytes(&mut h, data.fingerprint().as_bytes());
-    fnv1a(&mut h, data.n() as u64);
-    fnv1a(&mut h, data.d() as u64);
+    fnv1a_bytes(&mut h, data_fingerprint.as_bytes());
+    fnv1a(&mut h, n as u64);
+    fnv1a(&mut h, d as u64);
     fnv1a(&mut h, partition.k() as u64);
     for block in &partition.blocks {
         fnv1a(&mut h, block.len() as u64);
@@ -638,6 +671,23 @@ mod tests {
         };
         let base = f(&data, 2, 1e-3, 0, 1);
         assert_eq!(base, f(&data, 2, 1e-3, 0, 1), "deterministic");
+        // the parts form (what the shard-fed paths call) hashes
+        // identically given the same run description
+        assert_eq!(
+            base,
+            run_fingerprint_parts(
+                &data.fingerprint(),
+                60,
+                6,
+                &part(2),
+                LossKind::Hinge,
+                RegularizerKind::L2,
+                SolverKind::Sdca,
+                1e-3,
+                0,
+                1,
+            )
+        );
         assert_ne!(base, f(&other, 2, 1e-3, 0, 1), "different data");
         assert_ne!(base, f(&data, 3, 1e-3, 0, 1), "different k");
         assert_ne!(base, f(&data, 2, 1e-2, 0, 1), "different lambda");

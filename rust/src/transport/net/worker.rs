@@ -8,6 +8,14 @@
 //! construction, and [`run_fingerprint`](super::run_fingerprint) proves
 //! both sides agree before any training traffic flows.
 //!
+//! Shard-backed configs (`[data] shards = "dir"`) are the out-of-core
+//! deployment: the worker opens only the shard-set *manifest* before
+//! connecting (fingerprint and partition both come from it), then after
+//! each handshake opens just its assigned slot's shard file via
+//! [`shard_worker_config`] — the full dataset never exists in any single
+//! process, yet the fingerprint (and hence the trajectory) is identical
+//! to the in-memory deployment's.
+//!
 //! Connection loss is survivable: the worker reconnects with bounded
 //! exponential backoff (a fresh connection starts with a fresh core; the
 //! leader's checkpoint recovery restores real state via `SetState`). A
@@ -20,7 +28,7 @@ use super::{
 };
 use crate::config::{Backend, ExperimentConfig};
 use crate::coordinator::worker::{CoreStep, WorkerCore};
-use crate::coordinator::{native_worker_config, ToLeader};
+use crate::coordinator::{native_worker_config, shard_worker_config, ToLeader};
 use crate::error::{Error, Result};
 use crate::transport::wire;
 
@@ -53,18 +61,53 @@ pub fn run_worker_process(
             ),
         });
     }
-    let data = cfg.dataset.load().map_err(Error::from)?;
-    let partition = cfg.partition.build(data.n());
-    let fingerprint = super::run_fingerprint(
-        &data,
-        &partition,
-        cfg.loss,
-        cfg.regularizer,
-        cfg.algorithm.solver_kind(),
-        cfg.lambda,
-        cfg.run.seed,
-        cfg.runtime.threads,
-    );
+    // Shard-backed: open the manifest only (cheap — no row data); the
+    // slot's shard file is opened after each handshake assigns it.
+    let (shards, data) = match cfg.dataset.shards() {
+        Some(_) => (Some(cfg.open_shards()?), None),
+        None => (None, Some(cfg.dataset.load().map_err(Error::from)?)),
+    };
+    let partition = match (&shards, &data) {
+        (Some(set), _) => {
+            if cfg.partition.k != 0 && cfg.partition.k != set.k() {
+                return Err(Error::Config {
+                    message: format!(
+                        "[partition] k = {} does not match the shard set (written for K = {})",
+                        cfg.partition.k,
+                        set.k()
+                    ),
+                });
+            }
+            set.partition()
+        }
+        (_, Some(ds)) => cfg.partition.build(ds.n()),
+        (None, None) => unreachable!("exactly one data source"),
+    };
+    let fingerprint = match (&shards, &data) {
+        (Some(set), _) => super::run_fingerprint_parts(
+            set.fingerprint(),
+            set.n(),
+            set.d(),
+            &partition,
+            cfg.loss,
+            cfg.regularizer,
+            cfg.algorithm.solver_kind(),
+            cfg.lambda,
+            cfg.run.seed,
+            cfg.runtime.threads,
+        ),
+        (_, Some(ds)) => super::run_fingerprint(
+            ds,
+            &partition,
+            cfg.loss,
+            cfg.regularizer,
+            cfg.algorithm.solver_kind(),
+            cfg.lambda,
+            cfg.run.seed,
+            cfg.runtime.threads,
+        ),
+        (None, None) => unreachable!("exactly one data source"),
+    };
 
     // the slot we held on the previous connection; re-requested on
     // reconnect so recovery restores the same block when possible
@@ -121,17 +164,31 @@ pub fn run_worker_process(
         // A fresh core per connection: zero dual state, slot-seeded rng.
         // After a recovery the leader's SetState overwrites both before
         // any round work is dispatched.
-        let mut core = WorkerCore::new(native_worker_config(
-            &data,
-            &partition.blocks[slot],
-            cfg.loss,
-            cfg.lambda,
-            cfg.regularizer,
-            cfg.algorithm.solver_kind(),
-            cfg.run.seed,
-            slot,
-            cfg.runtime.threads,
-        ));
+        let core_cfg = match (&shards, &data) {
+            (Some(set), _) => shard_worker_config(
+                set,
+                slot,
+                cfg.loss,
+                cfg.lambda,
+                cfg.regularizer,
+                cfg.algorithm.solver_kind(),
+                cfg.run.seed,
+                cfg.runtime.threads,
+            )?,
+            (_, Some(ds)) => native_worker_config(
+                ds,
+                &partition.blocks[slot],
+                cfg.loss,
+                cfg.lambda,
+                cfg.regularizer,
+                cfg.algorithm.solver_kind(),
+                cfg.run.seed,
+                slot,
+                cfg.runtime.threads,
+            ),
+            (None, None) => unreachable!("exactly one data source"),
+        };
+        let mut core = WorkerCore::new(core_cfg);
         core.set_reconnects(connections - 1);
         match serve(&mut sock, &mut core)? {
             Served::Shutdown => return Ok(()),

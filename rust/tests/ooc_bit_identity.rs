@@ -1,0 +1,289 @@
+//! Out-of-core acceptance gates: training from mmap-backed shards is
+//! *bit-identical* to training in memory, and the shard format's failure
+//! modes surface as typed errors at the API boundary.
+//!
+//! * `Trainer::on_shards` at K ∈ {1, 2, 4} reproduces the
+//!   `Trainer::on(&data).workers(k)` trajectory bit for bit — every
+//!   deterministic TraceRow column and the final `w` — in both shard
+//!   modes (`Mapped` where the platform supports mmap, `Owned`
+//!   everywhere).
+//! * A corrupted or truncated shard file is rejected with
+//!   `Error::Shard` naming the file, not silently trained on.
+//! * `workers(k)` disagreeing with the manifest, and explicit
+//!   partitions on shard sets, are `Error::Config` at build time.
+//! * The `[data] shards = "dir"` TOML surface round-trips: a config
+//!   file drives the same bit-identical run through
+//!   `ExperimentConfig::open_shards` + `trainer_shards`.
+
+use cocoa::config::ExperimentConfig;
+use cocoa::data::{rcv1_like, write_shards, Partition, PartitionStrategy, ShardMode, ShardSet};
+use cocoa::prelude::*;
+
+fn tmpdir(tag: &str) -> std::path::PathBuf {
+    let dir = std::env::temp_dir().join(format!("cocoa_ooc_{tag}"));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+/// Every deterministic TraceRow column, bit for bit. Timing columns fold
+/// in measured thread-CPU seconds and are excluded (same convention as
+/// the driver-equivalence suite).
+fn assert_rows_bit_identical(a: &Trace, b: &Trace, context: &str) {
+    assert_eq!(a.rows.len(), b.rows.len(), "{context}: row counts differ");
+    for (ra, rb) in a.rows.iter().zip(&b.rows) {
+        let ctx = format!("{context}, round {}", ra.round);
+        assert_eq!(ra.round, rb.round, "{ctx}");
+        assert_eq!(ra.vectors, rb.vectors, "{ctx}: vectors");
+        assert_eq!(ra.bytes_modeled, rb.bytes_modeled, "{ctx}: bytes_modeled");
+        assert_eq!(ra.bytes_measured, rb.bytes_measured, "{ctx}: bytes_measured");
+        assert_eq!(ra.inner_steps, rb.inner_steps, "{ctx}: inner_steps");
+        assert_eq!(ra.primal.to_bits(), rb.primal.to_bits(), "{ctx}: primal");
+        assert_eq!(ra.dual.to_bits(), rb.dual.to_bits(), "{ctx}: dual");
+        assert_eq!(ra.gap.to_bits(), rb.gap.to_bits(), "{ctx}: gap");
+        assert_eq!(ra.w_nnz, rb.w_nnz, "{ctx}: w_nnz");
+        assert_eq!(ra.stop, rb.stop, "{ctx}: stop reason");
+    }
+}
+
+fn run_in_memory(data: &cocoa::data::Dataset, k: usize) -> (Trace, Vec<f64>) {
+    let mut session = Trainer::on(data)
+        .workers(k)
+        .loss(LossKind::Hinge)
+        .lambda(0.05)
+        .seed(9)
+        .label("ooc_mem")
+        .build()
+        .unwrap();
+    let trace = session.run(&mut Cocoa::new(20), MaxRounds::new(6)).unwrap();
+    let w = session.w().to_vec();
+    session.shutdown();
+    (trace, w)
+}
+
+fn run_from_shards(set: &ShardSet) -> (Trace, Vec<f64>) {
+    let mut session = Trainer::on_shards(set)
+        .loss(LossKind::Hinge)
+        .lambda(0.05)
+        .seed(9)
+        .label("ooc_shards")
+        .build()
+        .unwrap();
+    let trace = session.run(&mut Cocoa::new(20), MaxRounds::new(6)).unwrap();
+    let w = session.w().to_vec();
+    session.shutdown();
+    (trace, w)
+}
+
+/// The tentpole acceptance: shard-backed training reproduces the
+/// in-memory trajectory bit for bit at K ∈ {1, 2, 4}, in both shard
+/// modes. `n` deliberately does not divide evenly by every K, so the
+/// ragged-block bookkeeping is on the line too.
+#[test]
+fn mmap_shards_match_in_memory_bitwise() {
+    let data = rcv1_like(98, 40, 8, 0.1, 7);
+    for k in [1usize, 2, 4] {
+        let dir = tmpdir(&format!("bitid_k{k}"));
+        let set = write_shards(&data, PartitionStrategy::Contiguous, k, 0, &dir).unwrap();
+        assert_eq!(set.n(), data.n());
+        assert_eq!(set.d(), data.d());
+        assert_eq!(set.fingerprint(), data.fingerprint(), "K={k}: fingerprint drift");
+
+        let (mem_trace, mem_w) = run_in_memory(&data, k);
+        for mode in [ShardMode::default_mode(), ShardMode::Owned] {
+            let set = ShardSet::open_with_mode(&dir, mode).unwrap();
+            let (ooc_trace, ooc_w) = run_from_shards(&set);
+            let ctx = format!("K={k} mode={mode:?}");
+            assert_rows_bit_identical(&mem_trace, &ooc_trace, &ctx);
+            assert_eq!(mem_w.len(), ooc_w.len(), "{ctx}: w length");
+            for (i, (a, b)) in mem_w.iter().zip(&ooc_w).enumerate() {
+                assert_eq!(a.to_bits(), b.to_bits(), "{ctx}: w[{i}] {a} vs {b}");
+            }
+        }
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}
+
+/// Round-robin and random partitions shard through the same writer; the
+/// manifest remembers strategy + seed, so the shard-fed run must land on
+/// the *same* trajectory as the in-memory run under that partition.
+#[test]
+fn non_contiguous_partitions_round_trip_through_shards() {
+    let data = rcv1_like(90, 30, 6, 0.1, 13);
+    for (strategy, pseed) in
+        [(PartitionStrategy::RoundRobin, 0u64), (PartitionStrategy::Random, 5)]
+    {
+        let dir = tmpdir(&format!("strat_{strategy:?}"));
+        let set = write_shards(&data, strategy, 3, pseed, &dir).unwrap();
+
+        let mut mem = Trainer::on(&data)
+            .workers(3)
+            .partition_strategy(strategy)
+            .partition_seed(pseed)
+            .loss(LossKind::Logistic)
+            .lambda(0.02)
+            .seed(4)
+            .build()
+            .unwrap();
+        let mem_trace = mem.run(&mut Cocoa::new(15), MaxRounds::new(5)).unwrap();
+        let mem_w = mem.w().to_vec();
+        mem.shutdown();
+
+        let mut ooc = Trainer::on_shards(&set)
+            .loss(LossKind::Logistic)
+            .lambda(0.02)
+            .seed(4)
+            .build()
+            .unwrap();
+        let ooc_trace = ooc.run(&mut Cocoa::new(15), MaxRounds::new(5)).unwrap();
+        let ooc_w = ooc.w().to_vec();
+        ooc.shutdown();
+
+        let ctx = format!("{strategy:?}");
+        assert_rows_bit_identical(&mem_trace, &ooc_trace, &ctx);
+        for (a, b) in mem_w.iter().zip(&ooc_w) {
+            assert_eq!(a.to_bits(), b.to_bits(), "{ctx}: w diverged");
+        }
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}
+
+/// A flipped byte in a shard's payload fails the section checksum and
+/// surfaces as `Error::Shard` naming the file — through the full
+/// `Trainer::build()` stack, not just the low-level open.
+#[test]
+fn corrupted_shard_is_rejected_with_a_typed_error() {
+    let data = rcv1_like(60, 20, 5, 0.1, 3);
+    let dir = tmpdir("corrupt");
+    let set = write_shards(&data, PartitionStrategy::Contiguous, 2, 0, &dir).unwrap();
+
+    // flip one byte deep in shard 0's payload (past the header)
+    let path = set.shard_path(0);
+    let mut bytes = std::fs::read(&path).unwrap();
+    let mid = bytes.len() / 2;
+    bytes[mid] ^= 0xff;
+    std::fs::write(&path, &bytes).unwrap();
+
+    let err = Trainer::on_shards(&set)
+        .loss(LossKind::Hinge)
+        .lambda(0.05)
+        .seed(1)
+        .build()
+        .err()
+        .expect("a corrupt shard must not build a session");
+    match &err {
+        Error::Shard { path, message } => {
+            assert!(path.contains("shard_0000"), "{err}");
+            assert!(!message.is_empty(), "{err}");
+        }
+        other => panic!("expected Error::Shard, got {other:?}"),
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// A truncated shard file (torn copy, partial download) is rejected the
+/// same way — the header promises more bytes than the file holds.
+#[test]
+fn truncated_shard_is_rejected_with_a_typed_error() {
+    let data = rcv1_like(60, 20, 5, 0.1, 3);
+    let dir = tmpdir("truncate");
+    let set = write_shards(&data, PartitionStrategy::Contiguous, 2, 0, &dir).unwrap();
+
+    let path = set.shard_path(1);
+    let bytes = std::fs::read(&path).unwrap();
+    std::fs::write(&path, &bytes[..bytes.len() / 2]).unwrap();
+
+    let err = set.open_shard(1).err().expect("a truncated shard must not open");
+    assert!(matches!(err, Error::Shard { .. }), "{err}");
+    assert!(err.to_string().contains("shard_0001"), "{err}");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// The manifest is authoritative for the partition: `workers(k)` may
+/// restate the manifest's K but not contradict it, and explicit
+/// partitions are meaningless (rows were routed at write time).
+#[test]
+fn shard_partition_conflicts_are_typed_config_errors() {
+    let data = rcv1_like(60, 20, 5, 0.1, 3);
+    let dir = tmpdir("conflict");
+    let set = write_shards(&data, PartitionStrategy::Contiguous, 2, 0, &dir).unwrap();
+
+    // restating the manifest's K is fine
+    Trainer::on_shards(&set)
+        .workers(2)
+        .loss(LossKind::Hinge)
+        .lambda(0.05)
+        .build()
+        .unwrap()
+        .shutdown();
+
+    // contradicting it is not
+    let err = Trainer::on_shards(&set)
+        .workers(3)
+        .loss(LossKind::Hinge)
+        .lambda(0.05)
+        .build()
+        .err()
+        .expect("workers(3) on a K=2 shard set must fail");
+    assert!(matches!(err, Error::Config { .. }), "{err}");
+    assert!(err.to_string().contains("does not match the shard set"), "{err}");
+
+    // explicit partitions cannot apply to shards at all
+    let err = Trainer::on_shards(&set)
+        .partition(Partition::new(PartitionStrategy::Contiguous, 60, 2, 0))
+        .loss(LossKind::Hinge)
+        .lambda(0.05)
+        .build()
+        .err()
+        .expect("an explicit partition on a shard set must fail");
+    assert!(matches!(err, Error::Config { .. }), "{err}");
+    assert!(err.to_string().contains("explicit partitions"), "{err}");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// The `[data] shards` TOML surface end to end: the config file opens
+/// the set (here with `mmap = false`, forcing `Owned` mode), derives the
+/// trainer, and lands on the exact in-memory trajectory.
+#[test]
+fn toml_data_shards_round_trips_bit_identically() {
+    let data = rcv1_like(80, 24, 6, 0.1, 11);
+    let dir = tmpdir("toml");
+    let shard_dir = dir.join("shards");
+    write_shards(&data, PartitionStrategy::Contiguous, 2, 0, &shard_dir).unwrap();
+
+    let cfg_path = dir.join("exp.toml");
+    std::fs::write(
+        &cfg_path,
+        format!(
+            "lambda = 0.05\n\n\
+             [data]\nshards = \"{}\"\nmmap = false\n\n\
+             [algorithm]\nname = \"cocoa\"\nh = 20\n\n\
+             [loss]\nkind = \"hinge\"\n\n\
+             [run]\nrounds = 6\nseed = 9\n",
+            shard_dir.display()
+        ),
+    )
+    .unwrap();
+
+    let cfg = ExperimentConfig::from_toml_file(cfg_path.to_str().unwrap()).unwrap();
+    let set = cfg.open_shards().unwrap();
+    assert_eq!(set.mode(), ShardMode::Owned, "mmap = false must force Owned");
+    assert_eq!(set.k(), 2);
+
+    let mut session = cfg.trainer_shards(&set).build().unwrap();
+    let cfg_trace = session.run(&mut Cocoa::new(20), MaxRounds::new(6)).unwrap();
+    let cfg_w = session.w().to_vec();
+    session.shutdown();
+
+    let (mem_trace, mem_w) = run_in_memory(&data, 2);
+    assert_rows_bit_identical(&mem_trace, &cfg_trace, "toml round trip");
+    for (a, b) in mem_w.iter().zip(&cfg_w) {
+        assert_eq!(a.to_bits(), b.to_bits(), "toml round trip: w diverged");
+    }
+
+    // loading a shard config as an in-memory dataset is a typed refusal,
+    // not a silent fallback
+    let err = cfg.dataset.load().err().expect("shards are not loadable in-memory");
+    assert!(err.to_string().contains("open_shards"), "{err}");
+    let _ = std::fs::remove_dir_all(&dir);
+}
