@@ -1,8 +1,8 @@
 #!/usr/bin/env bash
-# CI gate for the cocoa crate: build, test, determinism, perf smoke,
-# perf regression gate (vs benchmarks/BENCH_hotpath.json), the
-# out-of-core smoke (shard -> mmap-backed train under an RSS budget),
-# lint.
+# CI gate for the cocoa crate: build, test, determinism, the serving
+# smoke (cocoa serve + cocoa score over UDS), perf smoke, perf
+# regression gate (vs benchmarks/BENCH_hotpath.json), the out-of-core
+# smoke (shard -> mmap-backed train under an RSS budget), lint.
 #
 #   ./ci.sh            # everything
 #   ./ci.sh --fast     # skip clippy/fmt/doc (tier-1 + determinism + perf smoke)
@@ -155,8 +155,59 @@ grep -q '"phase": "local_solve"' "$SPANS"
 grep -q '"phase": "commit"' "$SPANS"
 printf 'net smoke: gap target reached over UDS; /metrics scraped mid-run; spans -> %s\n' "$SPANS"
 
-# Perf smoke: run the tiny-profile workloads and validate BENCH_hotpath.json
-# structurally (fields present, numbers finite, monotone round times).
+# Serving smoke: `cocoa serve --model live` trains from a config while
+# serving the freshest snapshot over a Unix socket, and `cocoa score`
+# hits it from another process — versioned scoring handshake, CSR batch
+# on the wire, margins back. The scoring client retries connecting, so
+# only server startup is raced; the server lingers after training
+# (--serve-s) so the score lands whether training is still running or
+# already done. Gates the whole serving path end-to-end: SnapshotSink
+# publication, the score server thread, the wire protocol, and the
+# LibSVM ingestion on the client side.
+step "serving smoke (cocoa serve --model live over UDS + cocoa score)"
+SERVE_SOCK="$SCRATCH/serve_smoke.sock"
+cat > "$SCRATCH/serve_smoke.toml" <<'EOF'
+lambda = 0.01
+
+[dataset]
+kind = "cov_like"
+n = 400
+d = 10
+seed = 11
+
+[algorithm]
+name = "cocoa"
+h = 200
+
+[loss]
+kind = "hinge"
+
+[run]
+rounds = 400
+target_gap = 1e-3
+EOF
+cat > "$SCRATCH/serve_smoke.svm" <<'EOF'
++1 1:0.5 3:1.25 10:-0.75
+-1 2:1.0 7:0.25
++1 1:-0.25 5:2.0 9:0.5
+-1 4:0.125 8:-1.5
+EOF
+./target/release/cocoa serve --model live --config "$SCRATCH/serve_smoke.toml" \
+    --listen "uds:$SERVE_SOCK" --serve-s 5 > "$SCRATCH/serve_smoke.out" &
+SERVER=$!
+./target/release/cocoa score --connect "uds:$SERVE_SOCK" \
+    --libsvm "$SCRATCH/serve_smoke.svm" --d-hint 10 \
+    --attempts 60 --backoff-s 0.25 > "$SCRATCH/score_smoke.out"
+grep -Eq '^scored 4 rows from .*: [0-9]+ correct \(snapshot round [0-9]+, epoch [0-9]+\)$' \
+    "$SCRATCH/score_smoke.out"
+wait "$SERVER"     # set -e: a nonzero serve exit fails the gate
+grep -q "finished: rounds=" "$SCRATCH/serve_smoke.out"
+grep -Eq '^predictions served: [1-9][0-9]*$' "$SCRATCH/serve_smoke.out"
+printf 'serving smoke: cocoa score answered over UDS against the live model\n'
+
+# Perf smoke: run the tiny-profile workloads (training families plus the
+# serve_ scoring family) and validate BENCH_hotpath.json structurally
+# (fields present, numbers finite, monotone round times).
 step "perf smoke (BENCH_hotpath.json schema gate)"
 ./target/release/cocoa perf --smoke --seed "$DET_SEED" --out target/BENCH_hotpath.json
 ./target/release/cocoa perf --validate target/BENCH_hotpath.json

@@ -1,7 +1,17 @@
 //! Multiclass classification via one-vs-rest — the paper's problem class
 //! (1) covers any convex loss of linear predictors; this example shows the
 //! framework as a downstream user would apply it to a C-class problem:
-//! C independent CoCoA-trained binary SVMs over the same partitioned data.
+//! C binary CoCoA-trained SVMs over the same partitioned data.
+//!
+//! The C models come out of ONE session: the per-worker curvature caches
+//! are label-independent, so [`Session::set_labels`] +
+//! [`Session::reset`] retrains each class without rebuilding the cluster
+//! (the old version of this example paid a cold build per class). The
+//! per-round models are published through a [`SnapshotSink`] and the
+//! final argmax prediction runs through a [`MulticlassScorer`] — the
+//! same serving path `cocoa serve` uses. The example then rebuilds one
+//! cold session per class with the same seed and asserts the warm-start
+//! models match bit for bit (and therefore score identically).
 //!
 //! ```bash
 //! cargo run --release --example multiclass_ovr
@@ -39,58 +49,101 @@ fn make_multiclass(n: usize, d: usize, seed: u64) -> (Dataset, Vec<usize>) {
     (ds, classes)
 }
 
+/// ±1 relabeling for one-vs-rest: +1 for `class`, -1 for the rest.
+fn ovr_labels(classes: &[usize], class: usize) -> Vec<f64> {
+    classes
+        .iter()
+        .map(|&c| if c == class { 1.0 } else { -1.0 })
+        .collect()
+}
+
 fn main() -> cocoa::Result<()> {
     let (base, classes) = make_multiclass(N, D, 77);
     let lambda = 1.0 / N as f64;
     let k = 4;
     let h = N / k;
+    let seed = 5;
+    let stopping = || GapBelow::new(1e-3).or(MaxRounds::new(25));
 
-    println!("one-vs-rest: {CLASSES} classes, n={N}, d={D}, K={k}");
-    let mut models: Vec<Vec<f64>> = Vec::with_capacity(CLASSES);
+    println!("one-vs-rest: {CLASSES} classes, n={N}, d={D}, K={k} (one warm session)");
+    let mut session = Trainer::on(&base)
+        .workers(k)
+        .partition_strategy(PartitionStrategy::RoundRobin)
+        .loss(LossKind::Hinge)
+        .lambda(lambda)
+        .network(NetworkModel::ec2_like())
+        .seed(seed)
+        .label("ovr")
+        .build()?;
+    // set_labels never moves the dataset fingerprint, so one sink's
+    // identity covers every class's run
+    let mut sink = SnapshotSink::for_session(&session, 1);
+    let handle = sink.handle();
+    let mut algo = Cocoa::new(h);
+
+    let mut models: Vec<ModelSnapshot> = Vec::with_capacity(CLASSES);
     for class in 0..CLASSES {
-        // relabel: +1 for `class`, -1 for the rest
-        let mut ds = base.clone();
-        for (label, &c) in ds.labels.iter_mut().zip(&classes) {
-            *label = if c == class { 1.0 } else { -1.0 };
-        }
-        let mut session = Trainer::on(&ds)
-            .workers(k)
-            .partition_strategy(PartitionStrategy::RoundRobin)
-            .loss(LossKind::Hinge)
-            .lambda(lambda)
-            .network(NetworkModel::ec2_like())
-            .seed(5 + class as u64)
-            .label("ovr")
-            .build()?;
-        let stopping = GapBelow::new(1e-3).or(MaxRounds::new(25));
-        let trace = session.run(&mut Cocoa::new(h), stopping)?;
-        let w = session.w().to_vec();
-        session.shutdown();
+        session.set_labels(&ovr_labels(&classes, class))?;
+        session.reset()?;
+        let trace = {
+            let mut driver = session.drive(&mut algo, stopping())?;
+            driver.observe(&mut sink)?;
+            driver.drain()?
+        };
         let last = trace.rows.last().unwrap();
         println!(
             "  class {class}: {} rounds, gap {:.2e}, {} vectors, sim {:.2}s",
             last.round, last.gap, last.vectors, last.sim_time_s
         );
-        models.push(w);
+        models.push((*handle.current()).clone());
+    }
+    session.shutdown();
+
+    // warm restarts must match cold training exactly: rebuild a fresh
+    // session per class (same seed, same relabeled data) and compare the
+    // models bit for bit — identical models score identically, so the
+    // per-class accuracies agree by construction, and we assert both
+    for (class, warm) in models.iter().enumerate() {
+        let mut ds = base.clone();
+        ds.labels = ovr_labels(&classes, class);
+        let mut cold = Trainer::on(&ds)
+            .workers(k)
+            .partition_strategy(PartitionStrategy::RoundRobin)
+            .loss(LossKind::Hinge)
+            .lambda(lambda)
+            .network(NetworkModel::ec2_like())
+            .seed(seed)
+            .label("ovr")
+            .build()?;
+        cold.run(&mut Cocoa::new(h), stopping())?;
+        let w_cold = cold.w().to_vec();
+        cold.shutdown();
+
+        let bit_identical = warm.w.len() == w_cold.len()
+            && warm.w.iter().zip(&w_cold).all(|(a, b)| a.to_bits() == b.to_bits());
+        if !bit_identical {
+            return Err(Error::Runtime {
+                message: format!("class {class}: warm-restart model differs from cold training"),
+            });
+        }
+        let binary_acc = |w: &[f64]| {
+            (0..N)
+                .filter(|&i| (base.features.row_dot(i, w) >= 0.0) == (classes[i] == class))
+                .count()
+        };
+        let (warm_acc, cold_acc) = (binary_acc(&warm.w), binary_acc(&w_cold));
+        if warm_acc != cold_acc {
+            return Err(Error::Runtime {
+                message: format!("class {class}: warm acc {warm_acc} != cold acc {cold_acc}"),
+            });
+        }
+        println!("  class {class}: warm == cold (binary accuracy {warm_acc}/{N})");
     }
 
-    // multiclass prediction: argmax_c w_c . x
-    let mut correct = 0usize;
-    for i in 0..N {
-        let scores: Vec<f64> = models
-            .iter()
-            .map(|w| base.features.row_dot(i, w))
-            .collect();
-        let pred = scores
-            .iter()
-            .enumerate()
-            .max_by(|a, b| a.1.total_cmp(b.1))
-            .unwrap()
-            .0;
-        if pred == classes[i] {
-            correct += 1;
-        }
-    }
+    // multiclass prediction: argmax_c w_c . x, through the serving path
+    let scorer = MulticlassScorer::new(models)?;
+    let preds = scorer.predict(&base.features)?;
+    let correct = preds.iter().zip(&classes).filter(|(p, c)| p == c).count();
     let acc = correct as f64 / N as f64;
     println!("training accuracy: {:.2}% ({} / {N})", 100.0 * acc, correct);
     if acc <= 0.9 {

@@ -452,6 +452,43 @@ impl Session {
         self.p_star = p_star;
     }
 
+    /// Continuous training: grow the live problem with `batch` (same
+    /// feature width `d`; any row count ≥ 1) without tearing the cluster
+    /// down. Appended rows are dealt round-robin over the K workers by
+    /// their position in the lifetime append stream, retained dual
+    /// variables are kept (new rows start at the feasible `alpha = 0`),
+    /// and the leader rescales its accumulator for the new `n` so the
+    /// invariant `v = (1/(lambda_eff n)) A alpha` holds over the grown
+    /// matrix. Must be called at a round boundary (mid-round appends are
+    /// a worker fault, surfaced as a typed error on the next dispatch).
+    /// The session's [`Session::fingerprint`] advances by chaining in the
+    /// batch's fingerprint; old [`Checkpoint`]s no longer restore (shape
+    /// mismatch), so checkpoint again after appending. See
+    /// `docs/SERVING.md` for the duality-gap growth bound.
+    pub fn append_rows(&mut self, batch: &Dataset) -> Result<()> {
+        Ok(self.cluster.append_rows(batch)?)
+    }
+
+    /// Swap every row's label in place (row order = global dataset
+    /// order), leaving features, norms, curvatures, and the partition
+    /// untouched. This is the one-vs-rest lever: curvatures are
+    /// label-independent, so one session can train K binary problems by
+    /// relabeling between runs. Retained duals are generally infeasible
+    /// for the new labels — call [`Session::reset`] before the next run.
+    pub fn set_labels(&mut self, labels: &[f64]) -> Result<()> {
+        Ok(self.cluster.set_labels(labels)?)
+    }
+
+    /// Fingerprint of the dataset the session currently trains on: the
+    /// source's fingerprint at build time, chained (order-sensitive)
+    /// through every appended batch. Scoring clients bind to this to
+    /// reject snapshots from a different dataset; relabeling via
+    /// [`Session::set_labels`] deliberately does *not* move it (OVR label
+    /// views are transient).
+    pub fn fingerprint(&self) -> &str {
+        self.cluster.fingerprint()
+    }
+
     /// Straggler injection for the simulated-time axis.
     pub fn set_stragglers(&mut self, stragglers: StragglerModel) {
         self.cluster.stragglers = stragglers;

@@ -70,7 +70,60 @@ pub enum ToWorker {
     /// data block (and any PJRT binding) alive. No ack: channel ordering
     /// guarantees the next `Round` sees the reset state.
     Reset,
+    /// Continuous training: extend the worker's block with new rows and
+    /// rebake the curvature cache against the grown dataset
+    /// (`lambda_n = lambda_eff * n_new` changes for *every* worker, so
+    /// this is sent to all K workers even when `block` is empty). The
+    /// retained dual variables stay put; new rows start at `alpha = 0`.
+    /// Must arrive at a round boundary (no pending dual update). No ack,
+    /// like `Reset`: channel ordering makes the next message see the
+    /// grown block.
+    Append { block: AppendBlock, lambda_n: f64 },
+    /// Swap the block's labels in place (block order). Feature rows,
+    /// norms and curvatures are label-independent, so this is the cheap
+    /// primitive behind one-vs-rest relabeling: callers normally follow
+    /// with `Reset`, because retained dual variables are only feasible
+    /// for the labels they were trained against. No ack.
+    SetLabels { labels: Vec<f64> },
     Shutdown,
+}
+
+/// New rows for one worker's block, CSR-style regardless of the block's
+/// storage (dense blocks densify each row on arrival). `norms_sq` carries
+/// the dataset-cached row norms so an appended block is bit-identical to
+/// one built from the grown dataset directly (e.g. after
+/// `normalize_rows`, where the cached norm is exactly 1.0 but a
+/// recomputed one need not be).
+#[derive(Debug, Clone, PartialEq)]
+pub struct AppendBlock {
+    /// `rows + 1` entries, starting at 0.
+    pub indptr: Vec<usize>,
+    pub indices: Vec<u32>,
+    pub values: Vec<f64>,
+    pub labels: Vec<f64>,
+    pub norms_sq: Vec<f64>,
+}
+
+impl AppendBlock {
+    /// An append that carries no rows (sent to workers that only need
+    /// the new `lambda_n`).
+    pub fn empty() -> Self {
+        AppendBlock {
+            indptr: vec![0],
+            indices: Vec::new(),
+            values: Vec::new(),
+            labels: Vec::new(),
+            norms_sq: Vec::new(),
+        }
+    }
+
+    pub fn rows(&self) -> usize {
+        self.labels.len()
+    }
+
+    pub fn nnz(&self) -> usize {
+        self.values.len()
+    }
 }
 
 /// Worker -> leader: result of one round.

@@ -26,7 +26,7 @@ pub mod messages;
 pub(crate) mod worker;
 
 pub use checkpoint::{Checkpoint, WorkerState};
-pub use messages::{EvalReply, LocalWork, RoundReply, ToLeader, ToWorker, WorkerMetrics};
+pub use messages::{AppendBlock, EvalReply, LocalWork, RoundReply, ToLeader, ToWorker, WorkerMetrics};
 pub use worker::WorkerConfig;
 
 use std::sync::mpsc::channel;
@@ -242,6 +242,20 @@ pub struct Cluster {
     obs_timeouts: u64,
     /// Cumulative connections healed across those recoveries.
     obs_heals: u64,
+    /// The dataset content fingerprint this cluster was spawned over,
+    /// chained through every [`Cluster::append_rows`] — the identity a
+    /// serving handshake binds to (see [`crate::serve`]).
+    fingerprint: String,
+    /// Global row indices per worker block, in block (local-row) order.
+    /// Owned here so appends can route new rows and `set_labels` can
+    /// slice a global label vector per worker without the original
+    /// [`Partition`] in hand.
+    blocks: Vec<Vec<u32>>,
+    /// Rows appended since spawn, across all batches. Appended row `a`
+    /// (0-based in this stream) lives on worker `a % K` — one continuous
+    /// round-robin stream, the same convention the durable shard append
+    /// records in its manifest.
+    appended: usize,
     /// Keeps the PJRT engine (and its compiled executables) alive.
     _engine: Option<runtime::Engine>,
 }
@@ -289,8 +303,9 @@ impl Cluster {
             // Both sources hash to the same run fingerprint: the shard
             // manifest stores the sharded dataset's content fingerprint,
             // so in-memory and shard-fed leaders accept the same workers.
+            let data_fingerprint = source.fingerprint();
             let fingerprint = crate::transport::net::run_fingerprint_parts(
-                &source.fingerprint(),
+                &data_fingerprint,
                 n,
                 d,
                 partition,
@@ -331,6 +346,9 @@ impl Cluster {
                 max_worker_rss: 0,
                 obs_timeouts: 0,
                 obs_heals: 0,
+                fingerprint: data_fingerprint,
+                blocks: partition.blocks.clone(),
+                appended: 0,
                 _engine: None,
             });
         }
@@ -440,6 +458,9 @@ impl Cluster {
             max_worker_rss: 0,
             obs_timeouts: 0,
             obs_heals: 0,
+            fingerprint: source.fingerprint(),
+            blocks: partition.blocks.clone(),
+            appended: 0,
             _engine: engine,
         })
     }
@@ -479,6 +500,124 @@ impl Cluster {
         self.obs_timeouts = 0;
         self.obs_heals = 0;
         Ok(())
+    }
+
+    /// Continuous training: grow the training set by `batch` without
+    /// tearing the cluster down, keeping all committed dual state. Must
+    /// be called at a round boundary (after `commit`); workers fail fast
+    /// otherwise.
+    ///
+    /// New rows are routed round-robin across workers (appended row `a`
+    /// of the lifetime append stream lands on worker `a % K`) and enter
+    /// at `alpha = 0` — always dual-feasible. Because the shared vector
+    /// is the *normalized* combination `v = (1/(lambda_eff n)) A alpha`
+    /// and `n` just grew, the leader rescales `v *= n_old / n_new` and
+    /// every worker rebakes its curvatures against the new
+    /// `lambda_n = lambda_eff * n_new` — after which the state is
+    /// exactly what a fresh cluster over the grown dataset would reach
+    /// with the same alpha. That is the warm-restart guarantee: the
+    /// retained duals keep their objective value, so convergence resumes
+    /// instead of restarting (see `docs/SERVING.md` for the gap bound).
+    ///
+    /// Checkpoints taken before an append no longer match the cluster
+    /// shape (`n` changed) and are rejected by [`Cluster::restore`] with
+    /// the usual typed shape error. The dataset fingerprint is chained
+    /// (see [`crate::data`]'s `fingerprint_chain`), so serving snapshots
+    /// taken before the append are recognizably stale.
+    pub fn append_rows(&mut self, batch: &Dataset) -> Result<()> {
+        use crate::data::Features;
+        if batch.n() == 0 {
+            return Err(anyhow!("append batch has no rows"));
+        }
+        if batch.d() != self.d {
+            return Err(anyhow!(
+                "append batch has d={} but the cluster was built with d={}",
+                batch.d(),
+                self.d
+            ));
+        }
+        let m = batch.n();
+        let n_old = self.n;
+        let n_new = n_old + m;
+        if n_new > u32::MAX as usize {
+            return Err(anyhow!("appended dataset exceeds u32 row indexing"));
+        }
+        // route the batch: one AppendBlock per worker, rows in global order
+        let mut per: Vec<messages::AppendBlock> =
+            (0..self.k).map(|_| messages::AppendBlock::empty()).collect();
+        for j in 0..m {
+            let kid = (self.appended + j) % self.k;
+            let ab = &mut per[kid];
+            match &batch.features {
+                Features::Sparse(mtx) => {
+                    let (idx, val) = mtx.row_view(j);
+                    ab.indices.extend_from_slice(idx);
+                    ab.values.extend_from_slice(val);
+                }
+                Features::Dense(mtx) => {
+                    for (c, &v) in mtx.row(j).iter().enumerate() {
+                        if v != 0.0 {
+                            ab.indices.push(c as u32);
+                            ab.values.push(v);
+                        }
+                    }
+                }
+            }
+            ab.indptr.push(ab.values.len());
+            ab.labels.push(batch.labels[j]);
+            // ship the batch's *cached* norm so appended blocks match a
+            // whole-built dataset bit for bit (normalize_rows caches 1.0)
+            ab.norms_sq.push(batch.norm_sq(j));
+            self.blocks[kid].push((n_old + j) as u32);
+        }
+        // every worker gets the append — lambda_n changed for all of
+        // them, even the ones that received no rows this batch
+        let lambda_n = self.lambda_eff * n_new as f64;
+        for (kid, ab) in per.into_iter().enumerate() {
+            self.block_sizes[kid] += ab.rows();
+            self.transport.send(kid, ToWorker::Append { block: ab, lambda_n })?;
+        }
+        // v = (1/(lambda_eff n)) A alpha: alpha is unchanged (new rows at
+        // zero), only the 1/n normalization moved
+        let rescale = n_old as f64 / n_new as f64;
+        for vv in self.v.iter_mut() {
+            *vv *= rescale;
+        }
+        self.sync_w();
+        self.n = n_new;
+        self.appended += m;
+        self.fingerprint =
+            crate::data::fingerprint_chain(&self.fingerprint, &batch.fingerprint());
+        Ok(())
+    }
+
+    /// Swap every worker's labels in place (global order; length must be
+    /// exactly `n`). Features, norms, and curvatures are label-independent,
+    /// so nothing is rebaked — this is the cheap primitive behind
+    /// one-vs-rest relabeling. Retained dual variables are generally
+    /// *infeasible* for new labels: callers should [`Cluster::reset`]
+    /// right after unless they know better. The dataset fingerprint is
+    /// deliberately left alone — it identifies the feature matrix and the
+    /// labels it was spawned with; one-vs-rest views are transient.
+    pub fn set_labels(&mut self, labels: &[f64]) -> Result<()> {
+        if labels.len() != self.n {
+            return Err(anyhow!(
+                "set_labels got {} labels for n={} rows",
+                labels.len(),
+                self.n
+            ));
+        }
+        for (kid, block) in self.blocks.iter().enumerate() {
+            let local: Vec<f64> = block.iter().map(|&i| labels[i as usize]).collect();
+            self.transport.send(kid, ToWorker::SetLabels { labels: local })?;
+        }
+        Ok(())
+    }
+
+    /// The dataset content fingerprint this cluster serves — spawn-time
+    /// fingerprint chained through every append.
+    pub fn fingerprint(&self) -> &str {
+        &self.fingerprint
     }
 
     /// Dispatch one round of local work (per-worker via `work_for`) and

@@ -157,6 +157,54 @@ impl WorkerCore {
                 self.pending = None;
                 CoreStep::Continue
             }
+            ToWorker::Append { block, lambda_n } => {
+                if self.pending.is_some() {
+                    return CoreStep::Fatal(ToLeader::Fatal {
+                        worker: self.id,
+                        message: "append dispatched with uncommitted dual update".into(),
+                    });
+                }
+                if block.indptr.len() != block.rows() + 1
+                    || block.labels.len() != block.norms_sq.len()
+                {
+                    return CoreStep::Fatal(ToLeader::Fatal {
+                        worker: self.id,
+                        message: "append block arrays disagree".into(),
+                    });
+                }
+                if let Err(message) = self.block.append(
+                    &block.indptr,
+                    &block.indices,
+                    &block.values,
+                    &block.labels,
+                    &block.norms_sq,
+                    lambda_n,
+                ) {
+                    return CoreStep::Fatal(ToLeader::Fatal { worker: self.id, message });
+                }
+                // retained duals stay put; new rows enter at alpha = 0,
+                // which is always dual-feasible (D contribution 0)
+                self.alpha.resize(self.block.n_k(), 0.0);
+                self.n_k = self.block.n_k();
+                CoreStep::Continue
+            }
+            ToWorker::SetLabels { labels } => {
+                if labels.len() != self.n_k {
+                    return CoreStep::Fatal(ToLeader::Fatal {
+                        worker: self.id,
+                        message: format!(
+                            "set_labels length {} != block size {}",
+                            labels.len(),
+                            self.n_k
+                        ),
+                    });
+                }
+                // norms and curvatures are label-independent; nothing to
+                // rebake. Retained alpha may be infeasible for the new
+                // labels — the leader's contract is to Reset after.
+                self.block.data.labels = labels;
+                CoreStep::Continue
+            }
             ToWorker::Eval { w } => {
                 let loss_sum = objective::block_loss_sum(&self.block.data, &w, self.loss.as_ref());
                 let conj_sum =

@@ -1,0 +1,634 @@
+//! Minimal gzip (RFC 1952) reader over a from-scratch DEFLATE (RFC 1951)
+//! inflater, so `.gz` LibSVM corpora feed the ingesters without adding a
+//! compression dependency. Decode only — the repo never writes `.gz`.
+//!
+//! Scope: exactly what decompressing a dataset needs. All three block
+//! types (stored, fixed-Huffman, dynamic-Huffman), concatenated members,
+//! the optional header fields (FEXTRA/FNAME/FCOMMENT/FHCRC), and CRC32 +
+//! ISIZE verification of every member. The whole stream is inflated into
+//! memory up front ([`open_maybe_gz`] hands back a `Cursor`): ingestion
+//! is a one-shot offline path, and the streaming sharder's strength —
+//! O(n)-scalar peak memory — is about the *parsed* representation, not
+//! the text. Decoding is the simple bit-at-a-time canonical-Huffman walk
+//! (the `puff.c` construction): a few tens of MB/s, plenty for ingest.
+
+use std::io::{BufRead, Cursor};
+use std::path::Path;
+
+/// Does this path name a gzip stream? Extension test only (`.gz`, any
+/// case) — both ingesters use it, so `data.svm.gz` works wherever
+/// `data.svm` does.
+pub(crate) fn is_gz(path: &Path) -> bool {
+    path.extension().is_some_and(|e| e.eq_ignore_ascii_case("gz"))
+}
+
+/// Open `path` for line-oriented reading, transparently gunzipping when
+/// [`is_gz`]. Corrupt gzip data surfaces as `ErrorKind::InvalidData`
+/// with the inflater's message.
+pub(crate) fn open_maybe_gz(path: &Path) -> std::io::Result<Box<dyn BufRead>> {
+    if is_gz(path) {
+        let bytes = std::fs::read(path)?;
+        let out = gunzip(&bytes)
+            .map_err(|m| std::io::Error::new(std::io::ErrorKind::InvalidData, m))?;
+        Ok(Box::new(Cursor::new(out)))
+    } else {
+        Ok(Box::new(std::io::BufReader::new(std::fs::File::open(path)?)))
+    }
+}
+
+/// Decompress a complete gzip file (one or more concatenated members,
+/// per the spec). Every malformed input is a `String` error, never a
+/// panic; callers wrap it in their own typed error.
+pub(crate) fn gunzip(data: &[u8]) -> Result<Vec<u8>, String> {
+    let mut bits = Bits::new(data);
+    let mut out = Vec::new();
+    loop {
+        member(&mut bits, &mut out)?;
+        if bits.remaining() == 0 {
+            return Ok(out);
+        }
+    }
+}
+
+/// One gzip member: header, deflate stream, CRC32 + ISIZE trailer.
+fn member(bits: &mut Bits<'_>, out: &mut Vec<u8>) -> Result<(), String> {
+    let h = bits.bytes(10)?;
+    if h[0] != 0x1f || h[1] != 0x8b {
+        return Err("not a gzip stream (bad magic)".into());
+    }
+    if h[2] != 8 {
+        return Err(format!("unsupported gzip compression method {}", h[2]));
+    }
+    let flg = h[3];
+    if flg & 0xe0 != 0 {
+        return Err("reserved gzip FLG bits set".into());
+    }
+    if flg & 0x04 != 0 {
+        let xlen = bits.u16le()? as usize; // FEXTRA
+        bits.bytes(xlen)?;
+    }
+    if flg & 0x08 != 0 {
+        bits.skip_cstr()?; // FNAME
+    }
+    if flg & 0x10 != 0 {
+        bits.skip_cstr()?; // FCOMMENT
+    }
+    if flg & 0x02 != 0 {
+        bits.bytes(2)?; // FHCRC over the header — CRC32 below subsumes it
+    }
+    let start = out.len();
+    inflate(bits, out)?;
+    bits.align();
+    let crc = bits.u32le()?;
+    let isize = bits.u32le()?;
+    if crc32(&out[start..]) != crc {
+        return Err("gzip CRC32 mismatch (corrupt stream)".into());
+    }
+    if (out.len() - start) as u32 != isize {
+        return Err("gzip ISIZE mismatch (corrupt stream)".into());
+    }
+    Ok(())
+}
+
+/// IEEE CRC32 (reflected, poly 0xEDB88320) — the gzip trailer checksum.
+/// Bitwise, no table: this path is ingest-only.
+pub(crate) fn crc32(bytes: &[u8]) -> u32 {
+    let mut crc = !0u32;
+    for &b in bytes {
+        crc ^= b as u32;
+        for _ in 0..8 {
+            let mask = (crc & 1).wrapping_neg();
+            crc = (crc >> 1) ^ (0xEDB88320 & mask);
+        }
+    }
+    !crc
+}
+
+// ---------------------------------------------------------------------------
+// DEFLATE (RFC 1951)
+// ---------------------------------------------------------------------------
+
+/// LSB-first bit cursor over the member bytes; byte-granular reads
+/// require alignment (stored blocks and the trailer re-align per spec).
+struct Bits<'a> {
+    data: &'a [u8],
+    byte: usize,
+    bit: u32,
+}
+
+impl<'a> Bits<'a> {
+    fn new(data: &'a [u8]) -> Bits<'a> {
+        Bits { data, byte: 0, bit: 0 }
+    }
+
+    fn take(&mut self, n: u32) -> Result<u64, String> {
+        let mut v = 0u64;
+        for i in 0..n {
+            let Some(&b) = self.data.get(self.byte) else {
+                return Err("truncated deflate stream".into());
+            };
+            v |= u64::from((b >> self.bit) & 1) << i;
+            self.bit += 1;
+            if self.bit == 8 {
+                self.bit = 0;
+                self.byte += 1;
+            }
+        }
+        Ok(v)
+    }
+
+    fn align(&mut self) {
+        if self.bit != 0 {
+            self.bit = 0;
+            self.byte += 1;
+        }
+    }
+
+    fn bytes(&mut self, n: usize) -> Result<&'a [u8], String> {
+        debug_assert_eq!(self.bit, 0, "byte read while bit-misaligned");
+        let end = self
+            .byte
+            .checked_add(n)
+            .filter(|&e| e <= self.data.len())
+            .ok_or("truncated gzip stream")?;
+        let s = &self.data[self.byte..end];
+        self.byte = end;
+        Ok(s)
+    }
+
+    fn u16le(&mut self) -> Result<u16, String> {
+        let b = self.bytes(2)?;
+        Ok(u16::from_le_bytes([b[0], b[1]]))
+    }
+
+    fn u32le(&mut self) -> Result<u32, String> {
+        let b = self.bytes(4)?;
+        Ok(u32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+    }
+
+    fn skip_cstr(&mut self) -> Result<(), String> {
+        while self.bytes(1)?[0] != 0 {}
+        Ok(())
+    }
+
+    fn remaining(&self) -> usize {
+        self.data.len() - self.byte.min(self.data.len())
+    }
+}
+
+/// A canonical Huffman code as (count per length, symbols in canonical
+/// order) — decoded bit by bit. Rejects over-subscribed length sets;
+/// incomplete sets are legal (the spec allows e.g. a single 1-bit
+/// distance code) and surface as a decode error only if the missing
+/// codes actually appear.
+struct Huffman {
+    counts: [u16; 16],
+    symbols: Vec<u16>,
+}
+
+impl Huffman {
+    fn new(lengths: &[u8]) -> Result<Huffman, String> {
+        let mut counts = [0u16; 16];
+        for &l in lengths {
+            if l > 15 {
+                return Err(format!("huffman code length {l} > 15"));
+            }
+            counts[l as usize] += 1;
+        }
+        counts[0] = 0;
+        let mut left = 1i32;
+        for len in 1..16 {
+            left <<= 1;
+            left -= i32::from(counts[len]);
+            if left < 0 {
+                return Err("over-subscribed huffman code".into());
+            }
+        }
+        let mut offs = [0u16; 16];
+        for len in 1..15 {
+            offs[len + 1] = offs[len] + counts[len];
+        }
+        let mut symbols = vec![0u16; lengths.iter().filter(|&&l| l > 0).count()];
+        for (sym, &l) in lengths.iter().enumerate() {
+            if l > 0 {
+                symbols[offs[l as usize] as usize] = sym as u16;
+                offs[l as usize] += 1;
+            }
+        }
+        Ok(Huffman { counts, symbols })
+    }
+
+    fn decode(&self, bits: &mut Bits<'_>) -> Result<u16, String> {
+        let mut code = 0i32;
+        let mut first = 0i32;
+        let mut index = 0i32;
+        for len in 1..16 {
+            code |= bits.take(1)? as i32;
+            let count = i32::from(self.counts[len]);
+            if code - first < count {
+                return Ok(self.symbols[(index + code - first) as usize]);
+            }
+            index += count;
+            first = (first + count) << 1;
+            code <<= 1;
+        }
+        Err("invalid huffman code".into())
+    }
+}
+
+const LEN_BASE: [u16; 29] = [
+    3, 4, 5, 6, 7, 8, 9, 10, 11, 13, 15, 17, 19, 23, 27, 31, 35, 43, 51, 59, 67, 83, 99, 115,
+    131, 163, 195, 227, 258,
+];
+const LEN_EXTRA: [u32; 29] = [
+    0, 0, 0, 0, 0, 0, 0, 0, 1, 1, 1, 1, 2, 2, 2, 2, 3, 3, 3, 3, 4, 4, 4, 4, 5, 5, 5, 5, 0,
+];
+const DIST_BASE: [u16; 30] = [
+    1, 2, 3, 4, 5, 7, 9, 13, 17, 25, 33, 49, 65, 97, 129, 193, 257, 385, 513, 769, 1025, 1537,
+    2049, 3073, 4097, 6145, 8193, 12289, 16385, 24577,
+];
+const DIST_EXTRA: [u32; 30] = [
+    0, 0, 0, 0, 1, 1, 2, 2, 3, 3, 4, 4, 5, 5, 6, 6, 7, 7, 8, 8, 9, 9, 10, 10, 11, 11, 12, 12,
+    13, 13,
+];
+/// Code-length-code symbol transmission order (RFC 1951 §3.2.7).
+const CLEN_ORDER: [usize; 19] =
+    [16, 17, 18, 0, 8, 7, 9, 6, 10, 5, 11, 4, 12, 3, 13, 2, 14, 1, 15];
+
+fn inflate(bits: &mut Bits<'_>, out: &mut Vec<u8>) -> Result<(), String> {
+    loop {
+        let bfinal = bits.take(1)?;
+        match bits.take(2)? {
+            0 => {
+                bits.align();
+                let len = bits.u16le()?;
+                let nlen = bits.u16le()?;
+                if len != !nlen {
+                    return Err("stored block LEN/NLEN mismatch".into());
+                }
+                out.extend_from_slice(bits.bytes(len as usize)?);
+            }
+            1 => {
+                let (lit, dist) = fixed_tables()?;
+                block(bits, out, &lit, &dist)?;
+            }
+            2 => {
+                let (lit, dist) = dynamic_tables(bits)?;
+                block(bits, out, &lit, &dist)?;
+            }
+            _ => return Err("reserved deflate block type 3".into()),
+        }
+        if bfinal == 1 {
+            return Ok(());
+        }
+    }
+}
+
+/// The fixed litlen/distance code of RFC 1951 §3.2.6.
+fn fixed_tables() -> Result<(Huffman, Huffman), String> {
+    let mut lit = [0u8; 288];
+    lit[..144].fill(8);
+    lit[144..256].fill(9);
+    lit[256..280].fill(7);
+    lit[280..].fill(8);
+    Ok((Huffman::new(&lit)?, Huffman::new(&[5u8; 30])?))
+}
+
+/// Decode the HLIT/HDIST/HCLEN header and the run-length-encoded code
+/// lengths of a dynamic block.
+fn dynamic_tables(bits: &mut Bits<'_>) -> Result<(Huffman, Huffman), String> {
+    let hlit = bits.take(5)? as usize + 257;
+    let hdist = bits.take(5)? as usize + 1;
+    let hclen = bits.take(4)? as usize + 4;
+    if hlit > 286 || hdist > 30 {
+        return Err(format!("dynamic block declares {hlit} litlen / {hdist} dist codes"));
+    }
+    let mut cl = [0u8; 19];
+    for &sym in CLEN_ORDER.iter().take(hclen) {
+        cl[sym] = bits.take(3)? as u8;
+    }
+    let clh = Huffman::new(&cl)?;
+    let mut lengths = vec![0u8; hlit + hdist];
+    let mut i = 0;
+    while i < lengths.len() {
+        let sym = clh.decode(bits)?;
+        let (fill, reps) = match sym {
+            0..=15 => {
+                lengths[i] = sym as u8;
+                i += 1;
+                continue;
+            }
+            16 => {
+                if i == 0 {
+                    return Err("code-length repeat with no previous length".into());
+                }
+                (lengths[i - 1], 3 + bits.take(2)? as usize)
+            }
+            17 => (0, 3 + bits.take(3)? as usize),
+            _ => (0, 11 + bits.take(7)? as usize), // 18; clh only emits 0..=18
+        };
+        if i + reps > lengths.len() {
+            return Err("code-length repeat overflows the declared count".into());
+        }
+        lengths[i..i + reps].fill(fill);
+        i += reps;
+    }
+    Ok((Huffman::new(&lengths[..hlit])?, Huffman::new(&lengths[hlit..])?))
+}
+
+/// Decode one Huffman-coded block body into `out`. Back-references copy
+/// byte by byte so overlapping matches (dist < len) replicate correctly.
+fn block(
+    bits: &mut Bits<'_>,
+    out: &mut Vec<u8>,
+    lit: &Huffman,
+    dist: &Huffman,
+) -> Result<(), String> {
+    loop {
+        let sym = lit.decode(bits)?;
+        if sym < 256 {
+            out.push(sym as u8);
+        } else if sym == 256 {
+            return Ok(());
+        } else {
+            let s = sym as usize - 257;
+            if s >= 29 {
+                return Err(format!("invalid length symbol {sym}"));
+            }
+            let len = LEN_BASE[s] as usize + bits.take(LEN_EXTRA[s])? as usize;
+            let dsym = dist.decode(bits)? as usize;
+            if dsym >= 30 {
+                return Err(format!("invalid distance symbol {dsym}"));
+            }
+            let d = DIST_BASE[dsym] as usize + bits.take(DIST_EXTRA[dsym])? as usize;
+            if d > out.len() {
+                return Err("back-reference before output start".into());
+            }
+            let start = out.len() - d;
+            for j in 0..len {
+                let b = out[start + j];
+                out.push(b);
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Test-only gzip writers — the repo never compresses for real; these
+// exist so round-trip tests can exercise all three block types without a
+// gzip binary in the environment.
+// ---------------------------------------------------------------------------
+
+#[cfg(test)]
+pub(crate) mod testgz {
+    use super::crc32;
+
+    fn header(out: &mut Vec<u8>) {
+        // CM=8, no flags, zero MTIME, XFL=0, OS=255 (unknown)
+        out.extend_from_slice(&[0x1f, 0x8b, 8, 0, 0, 0, 0, 0, 0, 255]);
+    }
+
+    fn trailer(out: &mut Vec<u8>, data: &[u8]) {
+        out.extend_from_slice(&crc32(data).to_le_bytes());
+        out.extend_from_slice(&(data.len() as u32).to_le_bytes());
+    }
+
+    /// LSB-first bit sink; Huffman codes go MSB-first per the spec.
+    struct BitWriter {
+        bytes: Vec<u8>,
+        bit: u32,
+    }
+
+    impl BitWriter {
+        fn new(bytes: Vec<u8>) -> BitWriter {
+            BitWriter { bytes, bit: 0 }
+        }
+
+        fn push_bits(&mut self, v: u64, n: u32) {
+            for i in 0..n {
+                if self.bit == 0 {
+                    self.bytes.push(0);
+                }
+                let last = self.bytes.last_mut().expect("pushed above");
+                *last |= (((v >> i) & 1) as u8) << self.bit;
+                self.bit = (self.bit + 1) % 8;
+            }
+        }
+
+        fn push_code(&mut self, code: u32, n: u32) {
+            for i in (0..n).rev() {
+                self.push_bits(u64::from((code >> i) & 1), 1);
+            }
+        }
+
+        fn finish(self) -> Vec<u8> {
+            self.bytes
+        }
+    }
+
+    /// Compress with stored (BTYPE=00) blocks only.
+    pub(crate) fn gzip_stored(data: &[u8]) -> Vec<u8> {
+        let mut out = Vec::new();
+        header(&mut out);
+        let mut chunks = data.chunks(0xffff).peekable();
+        if data.is_empty() {
+            out.extend_from_slice(&[1, 0, 0, 0xff, 0xff]);
+        }
+        while let Some(c) = chunks.next() {
+            // 3 header bits then byte alignment: the header occupies one
+            // whole byte whose value is just BFINAL
+            out.push(u8::from(chunks.peek().is_none()));
+            out.extend_from_slice(&(c.len() as u16).to_le_bytes());
+            out.extend_from_slice(&(!(c.len() as u16)).to_le_bytes());
+            out.extend_from_slice(c);
+        }
+        trailer(&mut out, data);
+        out
+    }
+
+    pub(crate) enum Tok {
+        Lit(u8),
+        Match { len: usize, dist: usize },
+    }
+
+    /// The fixed litlen code of RFC 1951 §3.2.6 as (code, bits).
+    fn fixed_code(sym: usize) -> (u32, u32) {
+        match sym {
+            0..=143 => (0x30 + sym as u32, 8),
+            144..=255 => (0x190 + (sym as u32 - 144), 9),
+            256..=279 => (sym as u32 - 256, 7),
+            _ => (0xc0 + (sym as u32 - 280), 8),
+        }
+    }
+
+    /// Largest base-table entry not exceeding `v`: (symbol offset, extra).
+    fn table_code(bases: &[u16], extras: &[u32], v: usize) -> (usize, u64, u32) {
+        let s = bases.iter().rposition(|&b| b as usize <= v).expect("v >= min base");
+        (s, (v - bases[s] as usize) as u64, extras[s])
+    }
+
+    /// One fixed-Huffman (BTYPE=01) block from an explicit token stream;
+    /// returns (gzip bytes, expected decompressed bytes).
+    pub(crate) fn gzip_fixed(tokens: &[Tok]) -> (Vec<u8>, Vec<u8>) {
+        let mut expect: Vec<u8> = Vec::new();
+        let mut head = Vec::new();
+        header(&mut head);
+        let mut bw = BitWriter::new(head);
+        bw.push_bits(1, 1); // BFINAL
+        bw.push_bits(1, 2); // fixed
+        for t in tokens {
+            match *t {
+                Tok::Lit(b) => {
+                    let (c, n) = fixed_code(b as usize);
+                    bw.push_code(c, n);
+                    expect.push(b);
+                }
+                Tok::Match { len, dist } => {
+                    let (s, extra, nbits) = table_code(&super::LEN_BASE, &super::LEN_EXTRA, len);
+                    let (c, n) = fixed_code(257 + s);
+                    bw.push_code(c, n);
+                    bw.push_bits(extra, nbits);
+                    let (ds, dextra, dnbits) =
+                        table_code(&super::DIST_BASE, &super::DIST_EXTRA, dist);
+                    bw.push_code(ds as u32, 5);
+                    bw.push_bits(dextra, dnbits);
+                    let start = expect.len() - dist;
+                    for j in 0..len {
+                        let b = expect[start + j];
+                        expect.push(b);
+                    }
+                }
+            }
+        }
+        let (c, n) = fixed_code(256);
+        bw.push_code(c, n);
+        let mut out = bw.finish();
+        trailer(&mut out, &expect);
+        (out, expect)
+    }
+
+    /// One dynamic-Huffman (BTYPE=10) block: every litlen symbol 0..=256
+    /// gets a 9-bit code (so canonical code == symbol), plus a single
+    /// unused 1-bit distance code — exercising the code-length decoder,
+    /// the 16-repeat path, and incomplete distance codes.
+    pub(crate) fn gzip_dynamic(data: &[u8]) -> Vec<u8> {
+        let mut head = Vec::new();
+        header(&mut head);
+        let mut bw = BitWriter::new(head);
+        bw.push_bits(1, 1); // BFINAL
+        bw.push_bits(2, 2); // dynamic
+        bw.push_bits(0, 5); // HLIT  = 257
+        bw.push_bits(0, 5); // HDIST = 1
+        // code-length code: length(9) = 1 bit, length(16) = length(1) = 2
+        // bits; canonical codes 9 -> 0, 1 -> 10b, 16 -> 11b. CLEN_ORDER
+        // index of symbol 1 is 17, so transmit 18 entries.
+        bw.push_bits(18 - 4, 4); // HCLEN
+        for &sym in super::CLEN_ORDER.iter().take(18) {
+            let l = match sym {
+                9 => 1u64,
+                16 | 1 => 2,
+                _ => 0,
+            };
+            bw.push_bits(l, 3);
+        }
+        // litlen lengths: 257 nines = one literal 9 + repeats (42x6 + 1x4)
+        bw.push_code(0, 1); // length 9
+        for _ in 0..42 {
+            bw.push_code(3, 2); // symbol 16
+            bw.push_bits(6 - 3, 2);
+        }
+        bw.push_code(3, 2);
+        bw.push_bits(4 - 3, 2);
+        bw.push_code(2, 2); // distance code: length 1
+        // payload: all codes are 9 bits, code == symbol
+        for &b in data {
+            bw.push_code(u32::from(b), 9);
+        }
+        bw.push_code(256, 9);
+        let mut out = bw.finish();
+        trailer(&mut out, data);
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::testgz::{gzip_dynamic, gzip_fixed, gzip_stored, Tok};
+    use super::*;
+
+    #[test]
+    fn crc32_known_answer() {
+        // the standard CRC32 check value
+        assert_eq!(crc32(b"123456789"), 0xCBF4_3926);
+        assert_eq!(crc32(b""), 0);
+    }
+
+    #[test]
+    fn stored_blocks_roundtrip_including_multi_block() {
+        for data in [
+            Vec::new(),
+            b"hello libsvm\n".to_vec(),
+            // > 64 KiB forces multiple stored blocks
+            (0..70_000u32).map(|i| (i % 251) as u8).collect::<Vec<u8>>(),
+        ] {
+            assert_eq!(gunzip(&gzip_stored(&data)).unwrap(), data);
+        }
+    }
+
+    #[test]
+    fn fixed_blocks_roundtrip_with_overlapping_matches() {
+        let (gz, expect) = gzip_fixed(&[
+            Tok::Lit(b'a'),
+            Tok::Lit(b'b'),
+            Tok::Lit(b'c'),
+            // overlapping copy: len > dist replicates the last 3 bytes
+            Tok::Match { len: 9, dist: 3 },
+            Tok::Lit(0xfe), // a 9-bit literal
+            // length and distance both with extra bits
+            Tok::Match { len: 13, dist: 5 },
+        ]);
+        assert_eq!(gunzip(&gz).unwrap(), expect);
+        assert!(expect.starts_with(b"abcabcabcabc"));
+    }
+
+    #[test]
+    fn dynamic_blocks_roundtrip_all_byte_values() {
+        let data: Vec<u8> = (0..=255u8).cycle().take(700).collect();
+        assert_eq!(gunzip(&gzip_dynamic(&data)).unwrap(), data);
+    }
+
+    #[test]
+    fn concatenated_members_decode_in_order() {
+        let mut gz = gzip_stored(b"first ");
+        gz.extend_from_slice(&gzip_dynamic(b"second"));
+        assert_eq!(gunzip(&gz).unwrap(), b"first second");
+    }
+
+    #[test]
+    fn corrupt_streams_are_typed_errors() {
+        let good = gzip_stored(b"payload bytes here");
+        // bad magic
+        let mut bad = good.clone();
+        bad[0] = 0x1e;
+        assert!(gunzip(&bad).unwrap_err().contains("magic"));
+        // flipped payload byte -> CRC mismatch
+        let mut bad = good.clone();
+        let at = bad.len() - 12; // inside the stored payload
+        bad[at] ^= 0x01;
+        assert!(gunzip(&bad).unwrap_err().contains("CRC"));
+        // truncation
+        assert!(gunzip(&good[..good.len() - 6]).unwrap_err().contains("truncated"));
+        // reserved block type
+        let mut bad = good.clone();
+        bad[10] = 0b111; // BFINAL + BTYPE=3
+        assert!(gunzip(&bad).unwrap_err().contains("reserved"));
+    }
+
+    #[test]
+    fn gz_extension_detection_is_case_insensitive() {
+        assert!(is_gz(Path::new("data.svm.gz")));
+        assert!(is_gz(Path::new("DATA.SVM.GZ")));
+        assert!(!is_gz(Path::new("data.svm")));
+        assert!(!is_gz(Path::new("gz")));
+    }
+}

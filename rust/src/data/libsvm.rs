@@ -8,6 +8,11 @@
 //! per-worker on-disk shards directly (see [`crate::data::mmap`] and
 //! `docs/DATA.md`).
 //!
+//! Both ingesters accept gzip-compressed files transparently: a `.gz`
+//! extension (any case) routes the open through the built-in inflater
+//! (see [`super::gzip`]), so `rcv1.svm.gz` works wherever `rcv1.svm`
+//! does and parses to the identical dataset.
+//!
 //! The reader is hardened against the format's wild variants: `qid:` rank
 //! fields and comments (full-line and trailing `# ...`) are accepted,
 //! out-of-order feature indices are sorted, and every malformed input —
@@ -23,7 +28,7 @@
 //! lasso/squared-loss workloads keep their real-valued responses.
 
 use std::fs::File;
-use std::io::{BufRead, BufReader, BufWriter, Write};
+use std::io::{BufRead, BufWriter, Write};
 use std::path::Path;
 
 use anyhow::{Context, Result};
@@ -126,9 +131,8 @@ fn is_classification_label(y: f64) -> bool {
 /// [`Error::Libsvm`](crate::error::Error::Libsvm) — see the module docs
 /// for exactly what is accepted.
 pub fn read_libsvm<P: AsRef<Path>>(path: P, d_hint: usize) -> Result<Dataset, Error> {
-    let file = File::open(&path)
+    let reader = super::gzip::open_maybe_gz(path.as_ref())
         .map_err(|e| bad(0, format!("open {}: {e}", path.as_ref().display())))?;
-    let reader = BufReader::new(file);
     let mut labels = Vec::new();
     let mut triplets: Vec<(usize, u32, f64)> = Vec::new();
     let mut max_col: usize = d_hint;
@@ -205,9 +209,9 @@ pub fn write_libsvm<P: AsRef<Path>>(ds: &Dataset, path: P) -> Result<()> {
 ///
 /// `strategy` follows [`PartitionStrategy`]: `round_robin` is truly
 /// single-pass; `contiguous` and `random` need the row count up front and
-/// cost one extra cheap line-counting pass over the file. `d_hint`
-/// pre-sizes the column count exactly as in [`read_libsvm`] (pass 0 to
-/// infer).
+/// cost one extra cheap line-counting pass over the file (for a `.gz`
+/// input each pass decompresses afresh). `d_hint` pre-sizes the column
+/// count exactly as in [`read_libsvm`] (pass 0 to infer).
 ///
 /// ```
 /// use cocoa::data::{read_libsvm, shard_libsvm, PartitionStrategy};
@@ -236,10 +240,8 @@ pub fn shard_libsvm<P: AsRef<Path>, Q: AsRef<Path>>(
     normalize: bool,
 ) -> Result<ShardSet, Error> {
     let path = path.as_ref();
-    let open = || -> Result<BufReader<File>, Error> {
-        let file = File::open(path)
-            .map_err(|e| bad(0, format!("open {}: {e}", path.display())))?;
-        Ok(BufReader::new(file))
+    let open = || -> Result<Box<dyn BufRead>, Error> {
+        super::gzip::open_maybe_gz(path).map_err(|e| bad(0, format!("open {}: {e}", path.display())))
     };
     // contiguous/random block boundaries depend on n, so those strategies
     // pay a cheap counting pre-pass; round_robin streams in one pass
@@ -496,6 +498,52 @@ mod tests {
                 );
             }
         }
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn gz_twin_parses_and_shards_identically() {
+        // a .gz file and its uncompressed twin must be indistinguishable
+        // to both ingesters, bit for bit
+        let ds = crate::data::rcv1_like(50, 20, 4, 0.1, 31);
+        let dir = std::env::temp_dir().join("cocoa_libsvm_gz");
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        let plain = dir.join("twin.svm");
+        write_libsvm(&ds, &plain).unwrap();
+        let text = std::fs::read(&plain).unwrap();
+        for (name, gz_bytes) in [
+            ("stored.svm.gz", crate::data::gzip::testgz::gzip_stored(&text)),
+            ("dynamic.svm.gz", crate::data::gzip::testgz::gzip_dynamic(&text)),
+        ] {
+            let gz = dir.join(name);
+            std::fs::write(&gz, gz_bytes).unwrap();
+            let a = read_libsvm(&plain, 0).unwrap();
+            let b = read_libsvm(&gz, 0).unwrap();
+            assert_eq!(a.fingerprint(), b.fingerprint(), "{name}");
+            assert_eq!(a.labels, b.labels, "{name}");
+            // contiguous exercises the counting pre-pass on the gz stream
+            let sp = dir.join(format!("{name}.shards_plain"));
+            let sg = dir.join(format!("{name}.shards_gz"));
+            let set_a =
+                shard_libsvm(&plain, &sp, 2, PartitionStrategy::Contiguous, 0, 0, false).unwrap();
+            let set_b =
+                shard_libsvm(&gz, &sg, 2, PartitionStrategy::Contiguous, 0, 0, false).unwrap();
+            assert_eq!(set_a.fingerprint(), set_b.fingerprint(), "{name}");
+            for kid in 0..2 {
+                let x = set_a.open_shard(kid).unwrap();
+                let y = set_b.open_shard(kid).unwrap();
+                assert_eq!(x.labels, y.labels, "{name} shard {kid}");
+                for i in 0..x.n() {
+                    assert_eq!(x.features.row_dense(i), y.features.row_dense(i));
+                }
+            }
+        }
+        // corrupt gz input is a typed Libsvm error, not a panic
+        let gz = dir.join("bad.svm.gz");
+        std::fs::write(&gz, b"\x1f\x8bnot really gzip").unwrap();
+        let err = read_libsvm(&gz, 0).unwrap_err();
+        assert!(matches!(err, Error::Libsvm { line: 0, .. }), "{err}");
         std::fs::remove_dir_all(&dir).unwrap();
     }
 

@@ -801,6 +801,110 @@ pub fn write_shards(
     w.finish(data.d())
 }
 
+/// Grow an on-disk shard set with `batch` — the durable twin of
+/// [`Session::append_rows`](crate::Session::append_rows). Appended row
+/// `a` (its 0-based position in the set's **lifetime** append stream,
+/// recorded by the manifest's `appended` counter) lands in shard
+/// `a % k` — exactly the round-robin routing the live cluster deals
+/// appended rows by — and the manifest fingerprint advances by the same
+/// order-sensitive chain. A set grown on disk therefore hands worker
+/// `k` the same rows, in the same order, with the same stored norms, as
+/// a live session that appended the same batches: reopening it trains
+/// the identical problem.
+///
+/// Every shard file is rewritten (a shard whose block gained no rows
+/// still needs its header's `global_n` updated), so one call costs a
+/// full read + write of the set — append in batches, don't dribble
+/// single rows. The rewrite is not crash-atomic: a death mid-append
+/// leaves shard headers disagreeing with the manifest, which
+/// [`ShardSet::open_shard`] rejects with a typed [`Error::Shard`]
+/// instead of training on a half-grown set.
+pub fn append_shard_rows(dir: impl AsRef<Path>, batch: &Dataset) -> Result<ShardSet> {
+    let dir = dir.as_ref();
+    let set = ShardSet::open_with_mode(dir, ShardMode::Owned)?;
+    if batch.n() == 0 {
+        return Err(shard_err(dir, "append batch has no rows"));
+    }
+    if batch.d() != set.d {
+        return Err(shard_err(
+            dir,
+            format!("append batch has d = {} but the set has d = {}", batch.d(), set.d),
+        ));
+    }
+    let m = batch.n();
+    let n_new = set.n + m;
+    // batch row j -> shard (lifetime position) % k, the live routing
+    let mut incoming: Vec<Vec<usize>> = vec![Vec::new(); set.k];
+    for j in 0..m {
+        incoming[(set.appended + j) % set.k].push(j);
+    }
+    let mut nnz_new = 0u64;
+    for (kid, extra) in incoming.iter().enumerate() {
+        // Owned mode materializes the old shard fully before finish()
+        // truncates its file
+        let old = set.open_shard(kid)?;
+        let old_m = match &old.features {
+            Features::Sparse(mm) => mm,
+            Features::Dense(_) => unreachable!("shard files are CSR-only"),
+        };
+        let mut b = ShardFileBuilder::create(dir, kid)?;
+        for i in 0..old.n() {
+            let (idx, vals) = old_m.row_view(i);
+            b.push_row(idx, vals, old.labels[i], old.norm_sq(i))?;
+        }
+        for &j in extra {
+            let (own_idx, own_val);
+            let (idx, vals): (&[u32], &[f64]) = match &batch.features {
+                Features::Sparse(mm) => mm.row_view(j),
+                Features::Dense(mm) => {
+                    // densified rows shed exact-zero bits, like the live
+                    // AppendBlock (w . x and the stored norm are unchanged)
+                    let row = mm.row(j);
+                    let mut ii = Vec::new();
+                    let mut vv = Vec::new();
+                    for (c, &v) in row.iter().enumerate() {
+                        if v.to_bits() != 0 {
+                            ii.push(c as u32);
+                            vv.push(v);
+                        }
+                    }
+                    own_idx = ii;
+                    own_val = vv;
+                    (&own_idx, &own_val)
+                }
+            };
+            // store the batch's cached norm — what the live append ships
+            // to workers — so disk-grown and live-grown blocks agree bit
+            // for bit
+            b.push_row(idx, vals, batch.labels[j], batch.norm_sq(j))?;
+        }
+        nnz_new += b.nnz;
+        b.finish(set.d as u64, kid as u64, set.k as u64, n_new as u64)?;
+    }
+    let fingerprint = super::fingerprint_chain(&set.fingerprint, &batch.fingerprint());
+    let appended = set.appended + m;
+    let manifest = format!(
+        "# cocoa shard-set manifest (see docs/DATA.md)\n\
+         format_version = {MANIFEST_VERSION}\n\
+         n = {n_new}\n\
+         d = {}\n\
+         nnz = {nnz_new}\n\
+         k = {}\n\
+         strategy = \"{}\"\n\
+         partition_seed = {}\n\
+         appended = {appended}\n\
+         fingerprint = \"{fingerprint}\"\n",
+        set.d,
+        set.k,
+        set.strategy.name(),
+        set.partition_seed,
+    );
+    let mpath = dir.join("manifest.toml");
+    std::fs::write(&mpath, manifest)
+        .map_err(|e| shard_err(&mpath, format!("write failed: {e}")))?;
+    ShardSet::open_with_mode(dir, ShardMode::default_mode())
+}
+
 // ---------------------------------------------------------------------------
 // Reading
 // ---------------------------------------------------------------------------
@@ -841,6 +945,7 @@ pub struct ShardSet {
     k: usize,
     strategy: PartitionStrategy,
     partition_seed: u64,
+    appended: usize,
     fingerprint: String,
     mode: ShardMode,
 }
@@ -883,6 +988,9 @@ impl ShardSet {
             shard_err(&mpath, format!("unknown partition strategy {strategy_name:?}"))
         })?;
         let partition_seed = doc.u64_or("", "partition_seed", 0);
+        // rows grown onto the set after it was written (absent on sets
+        // that never saw `append_shard_rows`)
+        let appended = doc.usize_or("", "appended", 0);
         let fingerprint = doc
             .get("", "fingerprint")
             .and_then(crate::util::toml_lite::Value::as_str)
@@ -892,6 +1000,12 @@ impl ShardSet {
             return Err(shard_err(
                 &mpath,
                 format!("manifest shape is degenerate (n = {n}, d = {d}, k = {k})"),
+            ));
+        }
+        if appended >= n || n - appended < k {
+            return Err(shard_err(
+                &mpath,
+                format!("manifest appended = {appended} leaves no base partition (n = {n}, k = {k})"),
             ));
         }
         let mode = match mode {
@@ -906,6 +1020,7 @@ impl ShardSet {
             k,
             strategy,
             partition_seed,
+            appended,
             fingerprint,
             mode,
         };
@@ -942,15 +1057,32 @@ impl ShardSet {
         &self.dir
     }
 
-    /// The full-dataset content fingerprint (`Dataset::fingerprint` of
-    /// the dataset that was sharded) — what the net handshake binds to.
+    /// Rows grown onto the set by [`append_shard_rows`] after it was
+    /// first written (the manifest's lifetime append counter).
+    pub fn appended(&self) -> usize {
+        self.appended
+    }
+
+    /// The full-dataset content fingerprint: `Dataset::fingerprint` of
+    /// the dataset that was sharded, advanced by the append chain for
+    /// every batch grown on since — what the net handshake binds to.
     pub fn fingerprint(&self) -> &str {
         &self.fingerprint
     }
 
-    /// Reconstruct the partition the shards were written under.
+    /// Reconstruct the partition the shards were written under: the
+    /// strategy partition over the base rows, with every appended row
+    /// `a` (lifetime append-stream position) dealt onto block `a % k` —
+    /// the same routing the live cluster uses, so a disk-grown set and
+    /// a live-grown session agree on who owns which row.
     pub fn partition(&self) -> Partition {
-        Partition::new(self.strategy, self.n, self.k, self.partition_seed)
+        let base = self.n - self.appended;
+        let mut blocks =
+            Partition::new(self.strategy, base, self.k, self.partition_seed).blocks;
+        for a in 0..self.appended {
+            blocks[a % self.k].push((base + a) as u32);
+        }
+        Partition::from_blocks(blocks, self.n)
     }
 
     pub fn shard_path(&self, kid: usize) -> PathBuf {
@@ -1267,5 +1399,104 @@ mod tests {
         let err = write_shards(&dense, PartitionStrategy::Contiguous, 2, 0, &dir).unwrap_err();
         assert!(err.to_string().contains("CSR-only"), "{err}");
         let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn append_grows_shards_round_robin_and_chains_fingerprint() {
+        let base = rcv1_like(60, 30, 4, 0.1, 7);
+        let batch = rcv1_like(10, 30, 4, 0.1, 8);
+        let dir = tmpdir("append");
+        let set = write_shards(&base, PartitionStrategy::RoundRobin, 3, 0, &dir).unwrap();
+        let base_partition = set.partition();
+        let base_fp = set.fingerprint().to_string();
+
+        let grown = append_shard_rows(&dir, &batch).unwrap();
+        assert_eq!(grown.n(), 70);
+        assert_eq!(grown.appended(), 10);
+        assert_eq!(grown.nnz() as usize, base.nnz() + batch.nnz());
+        assert_eq!(
+            grown.fingerprint(),
+            crate::data::fingerprint_chain(&base_fp, &batch.fingerprint())
+        );
+
+        // partition = base blocks + appended row a on block a % k
+        let partition = grown.partition();
+        partition.validate().unwrap();
+        for kid in 0..3 {
+            let tail: Vec<u32> =
+                (0..10u32).filter(|a| (*a as usize) % 3 == kid).map(|a| 60 + a).collect();
+            assert_eq!(partition.blocks[kid][base_partition.blocks[kid].len()..], tail[..]);
+        }
+
+        // each shard = old shard rows followed by its appended rows, with
+        // the batch's cached norms stored bit-for-bit
+        for mode in [ShardMode::Owned, ShardMode::Mapped] {
+            let grown = ShardSet::open_with_mode(&dir, mode).unwrap();
+            for kid in 0..3 {
+                let shard = grown.open_shard(kid).unwrap();
+                let old = base.subset(&base_partition.blocks[kid]);
+                assert_eq!(shard.n(), partition.blocks[kid].len());
+                for i in 0..old.n() {
+                    assert_eq!(shard.labels[i], old.labels[i]);
+                    assert_eq!(shard.norm_sq(i).to_bits(), old.norm_sq(i).to_bits());
+                    assert_eq!(shard.features.row_dense(i), old.features.row_dense(i));
+                }
+                for (t, j) in (0..10).filter(|j| j % 3 == kid).enumerate() {
+                    let i = old.n() + t;
+                    assert_eq!(shard.labels[i], batch.labels[j]);
+                    assert_eq!(shard.norm_sq(i).to_bits(), batch.norm_sq(j).to_bits());
+                    assert_eq!(
+                        shard.features.row_dense(i),
+                        batch.features.row_dense(j),
+                        "shard {kid} appended row {j}"
+                    );
+                }
+            }
+        }
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn second_append_continues_the_lifetime_stream() {
+        let base = rcv1_like(20, 15, 3, 0.1, 1);
+        let dir = tmpdir("append_twice");
+        write_shards(&base, PartitionStrategy::Contiguous, 2, 0, &dir).unwrap();
+        append_shard_rows(&dir, &rcv1_like(3, 15, 3, 0.1, 2)).unwrap();
+        let grown = append_shard_rows(&dir, &rcv1_like(4, 15, 3, 0.1, 3)).unwrap();
+        assert_eq!(grown.n(), 27);
+        assert_eq!(grown.appended(), 7);
+        // lifetime stream positions 0..7 deal 20+a onto block a % 2,
+        // regardless of the batch boundary after position 2
+        let partition = grown.partition();
+        partition.validate().unwrap();
+        let tail0: Vec<u32> = (0..7u32).filter(|a| a % 2 == 0).map(|a| 20 + a).collect();
+        let tail1: Vec<u32> = (0..7u32).filter(|a| a % 2 == 1).map(|a| 20 + a).collect();
+        assert!(partition.blocks[0].ends_with(&tail0));
+        assert!(partition.blocks[1].ends_with(&tail1));
+        // every shard opens clean (headers agree with the rewritten manifest)
+        for kid in 0..2 {
+            grown.open_shard(kid).unwrap();
+        }
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn append_validates_batch_shape() {
+        let base = rcv1_like(20, 15, 3, 0.1, 4);
+        let dir = tmpdir("append_shape");
+        write_shards(&base, PartitionStrategy::RoundRobin, 2, 0, &dir).unwrap();
+        let err = append_shard_rows(&dir, &rcv1_like(5, 9, 3, 0.1, 5)).unwrap_err();
+        assert!(err.to_string().contains("d = 9"), "{err}");
+        let empty = Dataset::new(
+            Features::Sparse(crate::data::sparse::CsrMatrix::from_triplets(0, 15, &[])),
+            vec![],
+        );
+        let err = append_shard_rows(&dir, &empty).unwrap_err();
+        assert!(err.to_string().contains("no rows"), "{err}");
+        // failed appends leave the set intact
+        let set = ShardSet::open(&dir).unwrap();
+        assert_eq!(set.n(), 20);
+        assert_eq!(set.appended(), 0);
+        std::fs::remove_dir_all(&dir).unwrap();
     }
 }

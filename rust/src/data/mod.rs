@@ -36,6 +36,7 @@
 //! ```
 
 mod dense;
+mod gzip;
 mod libsvm;
 pub mod mmap;
 mod partition;
@@ -44,7 +45,7 @@ mod synthetic;
 
 pub use dense::DenseMatrix;
 pub use libsvm::{read_libsvm, shard_libsvm, write_libsvm};
-pub use mmap::{mmap_supported, write_shards, ShardMode, ShardSet, ShardSetWriter};
+pub use mmap::{append_shard_rows, mmap_supported, write_shards, ShardMode, ShardSet, ShardSetWriter};
 pub use partition::{Partition, PartitionStrategy};
 pub use sparse::CsrMatrix;
 pub use synthetic::{
@@ -121,6 +122,49 @@ impl Features {
         match self {
             Features::Dense(m) => m.scale_row(i, s),
             Features::Sparse(m) => m.scale_row(i, s),
+        }
+    }
+
+    /// Append rows given in CSR form (continuous training). Sparse
+    /// storage extends its arrays (materializing mmap-backed storage
+    /// first — the shard file on disk stays immutable); dense storage
+    /// densifies each row. `indptr` is batch-local (`rows + 1` entries
+    /// starting at 0).
+    pub(crate) fn append_csr_rows(
+        &mut self,
+        indptr: &[usize],
+        indices: &[u32],
+        values: &[f64],
+    ) -> Result<(), String> {
+        match self {
+            Features::Sparse(m) => m.append_csr_rows(indptr, indices, values),
+            Features::Dense(m) => {
+                if indptr.is_empty() || indptr[0] != 0 {
+                    return Err("append indptr must start at 0".into());
+                }
+                if *indptr.last().expect("checked non-empty") != indices.len()
+                    || indices.len() != values.len()
+                {
+                    return Err("append arrays disagree".into());
+                }
+                if let Some(c) = indices.iter().find(|&&c| c as usize >= m.cols) {
+                    return Err(format!("append index {} >= cols {}", c, m.cols));
+                }
+                // validated — mutate only now, so a bad batch never
+                // leaves a half-appended matrix behind
+                let rows = indptr.len() - 1;
+                m.data.reserve(rows * m.cols);
+                for win in indptr.windows(2) {
+                    let start = m.data.len();
+                    m.data.resize(start + m.cols, 0.0);
+                    let row = &mut m.data[start..];
+                    for (c, v) in indices[win[0]..win[1]].iter().zip(&values[win[0]..win[1]]) {
+                        row[*c as usize] = *v;
+                    }
+                }
+                m.rows += rows;
+                Ok(())
+            }
         }
     }
 }
@@ -230,6 +274,36 @@ impl Dataset {
     pub fn fingerprint(&self) -> String {
         fingerprint_parts(self.n(), self.d(), self.nnz(), &self.labels, &self.norms_sq)
     }
+
+    /// Append rows given in CSR form with their labels and *cached*
+    /// norms (continuous training). Shipping the cached norms — rather
+    /// than recomputing from `values` — keeps an appended dataset
+    /// bit-identical to one built whole (e.g. after [`normalize_rows`],
+    /// where the cache holds exactly 1.0 but a recomputed norm need
+    /// not). `indptr` is batch-local (`rows + 1` entries starting at 0).
+    ///
+    /// [`normalize_rows`]: Dataset::normalize_rows
+    pub(crate) fn append_csr_rows(
+        &mut self,
+        indptr: &[usize],
+        indices: &[u32],
+        values: &[f64],
+        labels: &[f64],
+        norms_sq: &[f64],
+    ) -> Result<(), String> {
+        if indptr.len() != labels.len() + 1 || labels.len() != norms_sq.len() {
+            return Err(format!(
+                "append rows disagree: indptr for {} rows, {} labels, {} norms",
+                indptr.len().saturating_sub(1),
+                labels.len(),
+                norms_sq.len()
+            ));
+        }
+        self.features.append_csr_rows(indptr, indices, values)?;
+        self.labels.extend_from_slice(labels);
+        self.norms_sq.extend_from_slice(norms_sq);
+        Ok(())
+    }
 }
 
 /// [`Dataset::fingerprint`] from its raw ingredients — the shard writer
@@ -256,6 +330,21 @@ pub(crate) fn fingerprint_parts(
     for i in (0..n).step_by(step) {
         mix(labels[i].to_bits());
         mix(norms_sq[i].to_bits());
+    }
+    format!("{h:016x}")
+}
+
+/// Chain a base fingerprint with an appended batch's fingerprint. A
+/// grown dataset's identity is the *history* of appends, not a function
+/// of the final bytes: the live append path (`Session::append_rows`) and
+/// the durable one (`append_shard_rows`) both chain the same way, so a
+/// serving handshake bound to either stays consistent — and a scorer
+/// holding a pre-append snapshot is recognizably stale.
+pub(crate) fn fingerprint_chain(base: &str, batch: &str) -> String {
+    let mut h: u64 = 0xcbf29ce484222325;
+    for b in base.bytes().chain(batch.bytes()) {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100000001b3);
     }
     format!("{h:016x}")
 }

@@ -232,6 +232,67 @@ impl CsrMatrix {
         }
     }
 
+    /// Append CSR rows in place (continuous training). `indptr` is the
+    /// batch-local pointer array (`rows + 1` entries starting at 0). The
+    /// same invariants every constructor enforces are re-validated here —
+    /// strictly increasing indices within a row, every `index < cols` —
+    /// because appended rows feed the same unchecked gather kernels.
+    /// Mapped storage is materialized to owned vectors first: the shard
+    /// file on disk stays immutable (see `docs/DATA.md`); growing a
+    /// mapped block trades its page-residency bound for mutability.
+    pub(crate) fn append_csr_rows(
+        &mut self,
+        indptr: &[usize],
+        indices: &[u32],
+        values: &[f64],
+    ) -> Result<(), String> {
+        if indptr.is_empty() || indptr[0] != 0 {
+            return Err("append indptr must start at 0".into());
+        }
+        let nnz = *indptr.last().expect("checked non-empty");
+        if nnz != indices.len() || indices.len() != values.len() {
+            return Err(format!(
+                "append arrays disagree: indptr says {} entries, {} indices, {} values",
+                nnz,
+                indices.len(),
+                values.len()
+            ));
+        }
+        for win in indptr.windows(2) {
+            if win[1] < win[0] {
+                return Err("append indptr must be non-decreasing".into());
+            }
+            let row = &indices[win[0]..win[1]];
+            for pair in row.windows(2) {
+                if pair[1] <= pair[0] {
+                    return Err("append indices must be strictly increasing within a row".into());
+                }
+            }
+            if let Some(&last) = row.last() {
+                if last as usize >= self.cols {
+                    return Err(format!("append index {} >= cols {}", last, self.cols));
+                }
+            }
+        }
+        // materialize mapped storage: appends are an owned-memory affair
+        if let Storage::Mapped(m) = &self.storage {
+            self.storage = Storage::Owned {
+                indices: m.indices().to_vec(),
+                values: m.values().to_vec(),
+            };
+        }
+        let (own_indices, own_values) = match &mut self.storage {
+            Storage::Owned { indices, values } => (indices, values),
+            Storage::Mapped(_) => unreachable!("materialized above"),
+        };
+        let base = *self.indptr.last().expect("indptr has rows + 1 entries");
+        own_indices.extend_from_slice(indices);
+        own_values.extend_from_slice(values);
+        self.indptr.extend(indptr[1..].iter().map(|p| base + p));
+        self.rows += indptr.len() - 1;
+        Ok(())
+    }
+
     /// Sorted unique columns with at least one stored entry — the shard's
     /// column-touch set. A worker's local updates can only move `w` on
     /// these columns, so the inner loop's delta extraction walks this set

@@ -485,6 +485,14 @@ impl<'d> Driver<'d> {
         for o in self.observers.iter_mut() {
             o.on_round_obs(&self.meta, &obs)?;
         }
+        // the model hook rides the same cadence: once per completed round
+        // (and once for the round-0 snapshot), after the round's state is
+        // fully committed — w is exactly what a checkpoint at this
+        // boundary would persist
+        let round = self.round;
+        for o in self.observers.iter_mut() {
+            o.on_model(&self.meta, round, &self.cluster.w)?;
+        }
         Ok(())
     }
 

@@ -66,6 +66,17 @@ pub trait Observer {
         let _ = (meta, obs);
         Ok(())
     }
+
+    /// Called once per completed round (and once for the round-0
+    /// snapshot) with the leader's current primal iterate `w` — the model
+    /// the run would serve if it stopped right now. Default no-op. `w` is
+    /// a borrowed view of the leader's live vector: copy what you keep
+    /// (see [`SnapshotSink`](crate::serve::SnapshotSink), which publishes
+    /// round-stamped copies to concurrent scorers).
+    fn on_model(&mut self, meta: &RunMeta, round: u64, w: &[f64]) -> Result<()> {
+        let _ = (meta, round, w);
+        Ok(())
+    }
 }
 
 fn io_err(e: std::io::Error) -> Error {

@@ -70,6 +70,10 @@ pub enum Error {
     /// a slot conflict. Not recoverable by retrying — the peer is
     /// running a different experiment (or a different build).
     Handshake { reason: String },
+    /// A scoring request failed: the batch's feature width doesn't match
+    /// the served model, a malformed score frame, or a dead scoring
+    /// connection (see [`crate::serve`]).
+    Score { message: String },
     /// A TOML experiment config failed to parse or validate.
     Config { message: String },
     /// A runtime failure after construction (worker death, PJRT engine
@@ -137,6 +141,7 @@ impl fmt::Display for Error {
                 write!(f, "lost worker {worker}: {reason}")
             }
             Error::Handshake { reason } => write!(f, "handshake rejected: {reason}"),
+            Error::Score { message } => write!(f, "scoring error: {message}"),
             Error::Config { message } => write!(f, "config error: {message}"),
             Error::Runtime { message } => write!(f, "runtime error: {message}"),
         }

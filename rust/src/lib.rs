@@ -239,7 +239,17 @@
 //!   [`Driver`] with typed [`RoundEvent`]s, composable
 //!   [`driver::stopping`] rules, and pluggable [`driver::observers`]
 //!   (trace builder, streaming CSV/JSONL, checkpoint policy, progress).
-//! * [`api`] — the [`Trainer`] builder and [`Session`] facade.
+//! * [`api`] — the [`Trainer`] builder and [`Session`] facade, including
+//!   the continuous-training surface ([`Session::append_rows`] grows the
+//!   live problem with new rows under retained dual state;
+//!   [`Session::set_labels`] relabels in place for one-vs-rest reuse).
+//! * [`serve`] — online serving: round-stamped [`serve::ModelSnapshot`]s
+//!   published by a passive [`serve::SnapshotSink`] observer, batched
+//!   [`serve::Scorer`]/[`serve::MulticlassScorer`] prediction through the
+//!   fused gather-dot kernels, and the `cocoa serve` / `cocoa score`
+//!   request/reply protocol ([`serve::ScoreServer`] /
+//!   [`serve::ScoreClient`]) over the net-transport framing (contract:
+//!   `docs/SERVING.md`).
 //! * [`objective`] — primal/dual objectives and the duality-gap certificate.
 //! * [`netsim`] — the network cost model that turns counted communication
 //!   into simulated distributed wall-time.
@@ -275,6 +285,7 @@ pub mod obs;
 pub mod perf;
 pub mod regularizers;
 pub mod runtime;
+pub mod serve;
 pub mod solvers;
 pub mod telemetry;
 pub mod theory;
@@ -310,6 +321,10 @@ pub mod prelude {
     pub use crate::loss::LossKind;
     pub use crate::netsim::{NetworkModel, StragglerModel};
     pub use crate::regularizers::RegularizerKind;
+    pub use crate::serve::{
+        ModelSnapshot, MulticlassScorer, ScoreClient, ScoreServer, Scorer, SnapshotHandle,
+        SnapshotSink,
+    };
     pub use crate::solvers::SolverKind;
     pub use crate::telemetry::{StopReason, Trace, TraceRow};
     pub use crate::transport::{SimNetConfig, Transcript, TransportKind};

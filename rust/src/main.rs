@@ -11,6 +11,7 @@
 use anyhow::{anyhow, bail, Result};
 
 use cocoa::config::ExperimentConfig;
+use cocoa::coordinator::Checkpoint;
 use cocoa::data;
 use cocoa::driver::recovery::{run_with_recovery, RecoveryPolicy};
 use cocoa::driver::{IntoDriverSpec, Observer, ProgressLine};
@@ -19,6 +20,7 @@ use cocoa::objective;
 use cocoa::obs::{MetricsHub, MetricsServer, SpanSink};
 use cocoa::perf::{self, PerfProfile};
 use cocoa::regularizers::Regularizer;
+use cocoa::serve::{ModelSnapshot, ScoreClient, ScoreIdentity, ScoreServer, Scorer, SnapshotSink};
 use cocoa::telemetry::peak_rss_bytes;
 use cocoa::transport::net::run_worker_process;
 use cocoa::transport::{NetConfig, ReconnectPolicy, TransportKind};
@@ -81,6 +83,10 @@ USAGE:
                [--p-star <f64>] [--progress] [--checkpoint-every <n>] [--max-recoveries <m>] [--threads <t>]
                [--trace-out <jsonl>] [--metrics <tcp:host:port|uds:/path>]
   cocoa worker --config <toml> --connect <tcp:host:port|uds:/path> [--attempts <n>] [--backoff-s <s>] [--threads <t>]
+  cocoa serve --model <live|ckpt> --config <toml> --listen <tcp:host:port|uds:/path>
+              [--snapshot-every <n>] [--serve-s <secs>] [--progress] [--threads <t>]
+  cocoa score --connect <tcp:host:port|uds:/path> --libsvm <file> [--d-hint <d>]
+              [--attempts <n>] [--backoff-s <s>]
 
   --threads overrides [runtime] threads from the config (intra-worker shard
   count T for the local solves; trajectories are deterministic per T). In a
@@ -97,6 +103,17 @@ USAGE:
   to also gate steps/sec, time-to-1e-3-gap, and peak RSS within the
   --tolerance band (default 0.5 = 50%); --delta writes the comparison
   report to a file for CI artifacts.
+
+  serve answers the scoring protocol of docs/SERVING.md. --model live
+  trains the config to its budget while answering every request from the
+  freshest snapshot (published every --snapshot-every rounds; the
+  publisher is a passive observer, so the trajectory is bit-identical to
+  an unserved run), then keeps the final model up for --serve-s seconds
+  (default 0) before exiting. --model <ckpt> restores the checkpoint and
+  serves it frozen; there --serve-s bounds the lifetime (default: until
+  killed). score connects, binds to the served identity in a versioned
+  handshake, scores a LibSVM file (.gz accepted), and prints how many
+  rows the served margins classify correctly.
 
   shard writes per-worker on-disk partitions (the out-of-core path; see
   docs/DATA.md). Train from them with `[data] shards = \"dir\"` in the
@@ -199,6 +216,28 @@ fn main() -> Result<()> {
                 args.opt("attempts").map(|s| s.parse()).transpose()?.unwrap_or(10),
                 args.opt("backoff-s").map(|s| s.parse()).transpose()?.unwrap_or(0.2),
                 args.opt("threads").map(|s| s.parse()).transpose()?,
+            )
+        }
+        "serve" => {
+            let args = Args::parse(&argv[1..], &["progress"])?;
+            serve(
+                args.req("model")?,
+                args.req("config")?,
+                args.req("listen")?,
+                args.opt("snapshot-every").map(|s| s.parse()).transpose()?.unwrap_or(1),
+                args.flags.contains("progress"),
+                args.opt("threads").map(|s| s.parse()).transpose()?,
+                args.opt("serve-s").map(|s| s.parse()).transpose()?,
+            )
+        }
+        "score" => {
+            let args = Args::parse(&argv[1..], &[])?;
+            score(
+                args.req("connect")?,
+                args.req("libsvm")?,
+                args.opt("d-hint").map(|s| s.parse()).transpose()?.unwrap_or(0),
+                args.opt("attempts").map(|s| s.parse()).transpose()?.unwrap_or(10),
+                args.opt("backoff-s").map(|s| s.parse()).transpose()?.unwrap_or(0.2),
             )
         }
         "help" | "--help" | "-h" => {
@@ -602,6 +641,144 @@ fn worker(
     Ok(())
 }
 
+/// `cocoa serve`: answer the scoring protocol on `listen`. `--model
+/// live` trains the config while serving (every request reads the
+/// freshest published snapshot); `--model <ckpt>` restores the
+/// checkpoint through a session (so the regularizer's prox and all
+/// shape/identity validation apply) and serves the recovered `w`
+/// frozen.
+fn serve(
+    model: &str,
+    config_path: &str,
+    listen: &str,
+    snapshot_every: u64,
+    progress: bool,
+    threads: Option<usize>,
+    serve_s: Option<f64>,
+) -> Result<()> {
+    let mut cfg = ExperimentConfig::from_toml_file(config_path)?;
+    if let Some(t) = threads {
+        cfg.runtime.threads = t;
+    }
+    let shards = match cfg.dataset.shards() {
+        Some(_) => Some(cfg.open_shards()?),
+        None => None,
+    };
+    let data = match &shards {
+        Some(_) => None,
+        None => Some(cfg.dataset.load()?),
+    };
+    let mut session = match (&shards, &data) {
+        (Some(set), _) => cfg.trainer_shards(set).build()?,
+        (_, Some(ds)) => cfg.trainer(ds).build()?,
+        (None, None) => unreachable!("exactly one data source"),
+    };
+
+    if model == "live" {
+        let mut sink = SnapshotSink::for_session(&session, snapshot_every);
+        let server = ScoreServer::serve(listen, Scorer::live(sink.handle()))?;
+        eprintln!(
+            "serve: {} (d={}, fingerprint {}) live on {listen}, \
+             snapshot every {} round(s)",
+            cfg.dataset.name(),
+            session.d(),
+            session.fingerprint(),
+            snapshot_every.max(1),
+        );
+        let mut algorithm = cfg.algorithm.instantiate();
+        let mut budget = cfg.run.budget();
+        if budget.target_subopt > 0.0 {
+            eprintln!("note: target_subopt needs --p-star; serving to the round/gap budget");
+            budget.target_subopt = 0.0;
+        }
+        let trace = {
+            let mut line = ProgressLine::stderr();
+            let mut driver = session.drive(algorithm.as_mut(), budget)?;
+            driver.observe(&mut sink)?;
+            if progress {
+                driver.observe(&mut line)?;
+            }
+            driver.drain()?
+        };
+        let last = trace.last().expect("at least round 0 recorded");
+        println!(
+            "finished: rounds={} gap={:.2e} stop={}",
+            last.round, last.gap, last.stop
+        );
+        if let Some(s) = serve_s {
+            eprintln!("serve: final model up for {s:.1}s more on {listen}");
+            std::thread::sleep(std::time::Duration::from_secs_f64(s.max(0.0)));
+        }
+        println!("predictions served: {}", server.predictions_served());
+        server.shutdown();
+        session.shutdown();
+    } else {
+        let cp = Checkpoint::load(model)?;
+        session.restore(&cp)?;
+        let snapshot = ModelSnapshot {
+            epoch: 0,
+            round: cp.round_counter,
+            w: session.w().to_vec(),
+            loss: session.loss().to_string(),
+            regularizer: session.regularizer().to_string(),
+            fingerprint: session.fingerprint().to_string(),
+        };
+        session.shutdown();
+        let server = ScoreServer::serve(listen, Scorer::frozen(snapshot))?;
+        eprintln!(
+            "serve: frozen model from {model} (round {}) on {listen}{}",
+            cp.round_counter,
+            match serve_s {
+                Some(s) => format!(" for {s:.1}s"),
+                None => " until killed".into(),
+            },
+        );
+        match serve_s {
+            Some(s) => std::thread::sleep(std::time::Duration::from_secs_f64(s.max(0.0))),
+            None => loop {
+                std::thread::sleep(std::time::Duration::from_secs(3600));
+            },
+        }
+        println!("predictions served: {}", server.predictions_served());
+        server.shutdown();
+    }
+    Ok(())
+}
+
+/// `cocoa score`: one handshake, one batch. Reads a LibSVM file (plain
+/// or `.gz`), scores every row against the served model, and reports
+/// how many rows the margins classify correctly — the line ci.sh greps.
+fn score(
+    connect: &str,
+    libsvm: &str,
+    d_hint: usize,
+    attempts: u32,
+    backoff_s: f64,
+) -> Result<()> {
+    let ds = data::read_libsvm(libsvm, d_hint)?;
+    let mut client =
+        ScoreClient::connect_with_retry(connect, &ScoreIdentity::any(), attempts, backoff_s)?;
+    let id = client.identity();
+    eprintln!(
+        "score: bound to served model d={} loss {} fingerprint {}",
+        id.d, id.loss, id.fingerprint
+    );
+    let scores = client.score(&ds.features)?;
+    let correct = scores
+        .margins
+        .iter()
+        .zip(&ds.labels)
+        .filter(|(m, y)| (**m >= 0.0) == (**y > 0.0))
+        .count();
+    println!(
+        "scored {} rows from {libsvm}: {correct} correct (snapshot round {}, epoch {})",
+        scores.margins.len(),
+        scores.round,
+        scores.epoch,
+    );
+    Ok(())
+}
+
 fn repro(target: &str, profile: Profile, results_dir: &str, rounds: Option<u64>) -> Result<()> {
     match target {
         "table1" => {
@@ -790,7 +967,7 @@ fn perf_run(profile: PerfProfile, seed: u64, out: &str) -> Result<()> {
     eprintln!(
         "perf: profile {} seed {seed} -> {out} \
          (3 in-memory families x K in {{1, 4}}, sparse also at T = 4, \
-         plus the _ooc out-of-core family)",
+         plus the _ooc out-of-core and serve_ scoring families)",
         profile.as_str()
     );
     let mut report = perf::run_all(profile, seed)?;
@@ -801,6 +978,8 @@ fn perf_run(profile: PerfProfile, seed: u64, out: &str) -> Result<()> {
     let ooc = perf::run_ooc(profile, seed, &ooc_dir)?;
     let _ = std::fs::remove_dir_all(&ooc_dir);
     report.workloads.extend(ooc);
+    // the serving family: batched scoring through live snapshots
+    report.workloads.extend(perf::run_serve(profile, seed)?);
     println!(
         "{:<24} {:>3} {:>3} {:>9} {:>9} {:>13} {:>12} {:>14} {:>12}",
         "workload", "K", "T", "n", "d", "steps/s", "final gap", "t(gap 1e-3) s", "wire bytes"
@@ -820,6 +999,16 @@ fn perf_run(profile: PerfProfile, seed: u64, out: &str) -> Result<()> {
                 .unwrap_or("-".into()),
             w.bytes_measured,
         );
+    }
+    for w in &report.workloads {
+        if let (Some(pps), Some(p99)) = (w.predictions_per_sec, w.p99_latency_s) {
+            println!(
+                "{}: {:.0} predictions/s, p99 batch latency {:.3} ms",
+                w.name,
+                pps,
+                p99 * 1000.0,
+            );
+        }
     }
     for w in &report.workloads {
         if let (Some(ds), Some(rss)) = (w.dataset_bytes, w.peak_rss_bytes) {

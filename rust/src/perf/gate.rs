@@ -22,7 +22,13 @@
 //!   — candidate at most `(1 + tolerance) x baseline`, same null rules,
 //!   so a footprint regression names the workload that fattened (the
 //!   hard `rss * 2 <= dataset_bytes` band is the validator's job; this
-//!   comparison catches drift long before the band breaks).
+//!   comparison catches drift long before the band breaks);
+//! * `predictions_per_sec` per workload (v5, the `serve_` scoring
+//!   family) — candidate must reach at least `(1 - tolerance) x
+//!   baseline`, same null rules as time-to-gap (a null baseline skips, a
+//!   candidate that stopped reporting throughput fails);
+//! * `p99_latency_s` per workload (v5) — candidate at most
+//!   `(1 + tolerance) x baseline`, same null rules.
 //!
 //! Workloads present in the baseline but missing from the candidate fail
 //! the gate (a silently dropped workload is how a regression hides);
@@ -199,6 +205,51 @@ pub fn compare(candidate: &Json, baseline: &Json, tolerance: f64) -> Result<Gate
             _ => out.failures.push(format!("{name}: peak_rss_bytes missing")),
         }
 
+        // serving throughput (v5, the serve_ family): a floor, like
+        // steps_per_sec — fewer predictions per second is the regression
+        match (opt_num(bw, "predictions_per_sec"), opt_num(cw, "predictions_per_sec")) {
+            (Some(None), _) => out.skipped.push(format!(
+                "{name}: predictions_per_sec (baseline recorded none)"
+            )),
+            (Some(Some(b_p)), Some(Some(c_p))) => {
+                let floor = (1.0 - tolerance) * b_p;
+                let line = format!(
+                    "{name}: predictions_per_sec {c_p:.1} vs baseline {b_p:.1} (floor {floor:.1})"
+                );
+                if c_p >= floor {
+                    out.checked.push(line);
+                } else {
+                    out.failures.push(line);
+                }
+            }
+            (Some(Some(b_p)), Some(None)) => out.failures.push(format!(
+                "{name}: baseline recorded predictions_per_sec {b_p:.1}, candidate recorded none"
+            )),
+            _ => out.failures.push(format!("{name}: predictions_per_sec missing")),
+        }
+
+        // p99 scoring latency (v5): a ceiling — fatter tails fail
+        match (opt_num(bw, "p99_latency_s"), opt_num(cw, "p99_latency_s")) {
+            (Some(None), _) => out.skipped.push(format!(
+                "{name}: p99_latency_s (baseline recorded none)"
+            )),
+            (Some(Some(b_l)), Some(Some(c_l))) => {
+                let ceil = (1.0 + tolerance) * b_l;
+                let line = format!(
+                    "{name}: p99_latency_s {c_l:.6} vs baseline {b_l:.6} (ceiling {ceil:.6})"
+                );
+                if c_l <= ceil {
+                    out.checked.push(line);
+                } else {
+                    out.failures.push(line);
+                }
+            }
+            (Some(Some(b_l)), Some(None)) => out.failures.push(format!(
+                "{name}: baseline recorded p99_latency_s {b_l:.6}, candidate recorded none"
+            )),
+            _ => out.failures.push(format!("{name}: p99_latency_s missing")),
+        }
+
         // per-phase wall seconds: a failure here localizes the regression
         // to the phase that moved (broadcast / local_solve / reduce /
         // commit / evaluate)
@@ -296,6 +347,7 @@ mod tests {
                         "final_gap": 0.5, "time_to_gap_1e3_s": {gap_s},
                         "bytes_measured": 128,
                         "dataset_bytes": null, "peak_rss_bytes": null,
+                        "predictions_per_sec": null, "p99_latency_s": null,
                         "phase_seconds": {{"broadcast": 0.001, "local_solve": 0.006,
                           "reduce": 0.002, "commit": 0.0005, "evaluate": 0.0005}},
                         "round_sim_time_s": [0.0, 0.1]}}"#
@@ -303,7 +355,7 @@ mod tests {
             })
             .collect();
         format!(
-            r#"{{"schema_version": 4, "profile": "smoke", "seed": 7,
+            r#"{{"schema_version": 5, "profile": "smoke", "seed": 7,
                 "kernel_backend": "scalar", "peak_rss_bytes": {rss},
                 "workloads": [{}]}}"#,
             workloads.join(", ")
@@ -435,6 +487,54 @@ mod tests {
         let out = compare_str(&gone, &base, 0.5).unwrap();
         assert!(
             out.failures.iter().any(|f| f.contains("candidate recorded none")),
+            "{:?}",
+            out.failures
+        );
+    }
+
+    #[test]
+    fn serve_family_gates_throughput_floor_and_latency_ceiling() {
+        let with_serve = |pps: f64, p99: &str| {
+            report(&[("serve_sparse_k1", pps)], "1048576", "0.2").replace(
+                "\"predictions_per_sec\": null, \"p99_latency_s\": null",
+                &format!("\"predictions_per_sec\": {pps}, \"p99_latency_s\": {p99}"),
+            )
+        };
+        let base = with_serve(100_000.0, "0.001");
+
+        // throughput below the floor fails and names the field
+        let slow = with_serve(40_000.0, "0.001");
+        let out = compare_str(&slow, &base, 0.5).unwrap();
+        assert!(
+            out.failures.iter().any(|f| f.contains("predictions_per_sec")),
+            "{:?}",
+            out.failures
+        );
+        // a fatter p99 tail fails
+        let fat = with_serve(100_000.0, "0.01");
+        let out = compare_str(&fat, &base, 0.5).unwrap();
+        assert!(
+            out.failures.iter().any(|f| f.contains("p99_latency_s")),
+            "{:?}",
+            out.failures
+        );
+        // within the band both pass
+        let ok = with_serve(60_000.0, "0.0012");
+        assert!(compare_str(&ok, &base, 0.5).unwrap().passed());
+
+        // null-p99 baseline skips the latency check but still gates
+        // throughput; a candidate that stopped reporting throughput
+        // against a recorded baseline fails
+        let base_null_p99 = with_serve(100_000.0, "null");
+        let out = compare_str(&with_serve(100_000.0, "0.5"), &base_null_p99, 0.5).unwrap();
+        assert!(out.passed(), "{:?}", out.failures);
+        assert!(out.skipped.iter().any(|s| s.contains("p99_latency_s")), "{:?}", out.skipped);
+        let gone = report(&[("serve_sparse_k1", 100_000.0)], "1048576", "0.2");
+        let out = compare_str(&gone, &base, 0.5).unwrap();
+        assert!(
+            out.failures
+                .iter()
+                .any(|f| f.contains("predictions_per_sec") && f.contains("recorded none")),
             "{:?}",
             out.failures
         );

@@ -6,9 +6,10 @@
 //! rcv1-density sparse logistic, smoothed-L1 lasso, each at K ∈ {1, 4})
 //! and [`run_ooc`] adds the out-of-core `_ooc` family (mmap-shard
 //! training with a per-workload `dataset_bytes` / `peak_rss_bytes`
-//! band); together they emit a schema-versioned `BENCH_hotpath.json`:
-//! steps/sec, simulated time to a 1e-3 duality gap, byte-exact wire
-//! bytes, and peak RSS.
+//! band); [`run_serve`] adds the `serve_` scoring family (live-snapshot
+//! batch prediction, `predictions_per_sec` + p99 latency); together they
+//! emit a schema-versioned `BENCH_hotpath.json`: steps/sec, simulated
+//! time to a 1e-3 duality gap, byte-exact wire bytes, and peak RSS.
 //!
 //! CI consumes the `--smoke` profile twice:
 //!
@@ -27,4 +28,6 @@ mod workloads;
 
 pub use gate::{compare, compare_files, compare_str, GateOutcome};
 pub use schema::{parse, validate, validate_file, validate_str, Json, SchemaError};
-pub use workloads::{run_all, run_ooc, BenchReport, PerfProfile, WorkloadReport, SCHEMA_VERSION};
+pub use workloads::{
+    run_all, run_ooc, run_serve, BenchReport, PerfProfile, WorkloadReport, SCHEMA_VERSION,
+};

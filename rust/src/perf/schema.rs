@@ -401,6 +401,16 @@ pub fn validate(doc: &Json) -> Result<(), SchemaError> {
                 }
             }
         }
+        // v5: serving throughput. Null outside the `serve_` family; a
+        // serve workload records predictions answered per second and the
+        // 99th-percentile per-batch latency.
+        for key in ["predictions_per_sec", "p99_latency_s"] {
+            if let Some(v) = finite_num_or_null(wl, &ctx, key)? {
+                if v < 0.0 {
+                    return err(format!("{ctx}: {key} = {v} < 0"));
+                }
+            }
+        }
         if let (Some(ds), Some(rss)) = (dataset_bytes, rss) {
             if rss * 2.0 > ds {
                 return err(format!(
@@ -470,7 +480,7 @@ mod tests {
 
     fn minimal_workload(extra: &str, times: &str) -> String {
         format!(
-            r#"{{"schema_version": 4, "profile": "smoke", "seed": 7,
+            r#"{{"schema_version": 5, "profile": "smoke", "seed": 7,
                 "kernel_backend": "scalar",
                 "peak_rss_bytes": 1048576,
                 "workloads": [{{"name": "w", "k": 1, "threads": 1, "n": 10, "d": 2,
@@ -479,6 +489,7 @@ mod tests {
                   "final_gap": 0.5, "time_to_gap_1e3_s": null,
                   "bytes_measured": 128,
                   "dataset_bytes": null, "peak_rss_bytes": null,
+                  "predictions_per_sec": null, "p99_latency_s": null,
                   "phase_seconds": {{"broadcast": 0.001, "local_solve": 0.006,
                     "reduce": 0.002, "commit": 0.0005, "evaluate": 0.0005}},
                   "round_sim_time_s": {times}{extra}}}]}}"#
@@ -504,7 +515,7 @@ mod tests {
 
     #[test]
     fn validator_rejects_missing_fields_and_bad_version() {
-        let doc = minimal_workload("", "[0.0]").replace("\"schema_version\": 4", "\"schema_version\": 99");
+        let doc = minimal_workload("", "[0.0]").replace("\"schema_version\": 5", "\"schema_version\": 99");
         assert!(validate_str(&doc).unwrap_err().message.contains("schema_version"));
         let doc = minimal_workload("", "[0.0]").replace("\"steps_per_sec\": 3000.0,", "");
         assert!(validate_str(&doc)
@@ -550,6 +561,28 @@ mod tests {
             .replace("\"dataset_bytes\": null, \"peak_rss_bytes\": null,", "");
         let e = validate_str(&missing).unwrap_err();
         assert!(e.message.contains("dataset_bytes"), "{e}");
+    }
+
+    #[test]
+    fn validator_checks_the_serve_fields() {
+        // a serve workload records both numbers
+        let serve = minimal_workload("", "[0.0]").replace(
+            "\"predictions_per_sec\": null, \"p99_latency_s\": null",
+            "\"predictions_per_sec\": 120000.0, \"p99_latency_s\": 0.002",
+        );
+        validate_str(&serve).unwrap();
+        // negative throughput is nonsense
+        let neg = minimal_workload("", "[0.0]").replace(
+            "\"predictions_per_sec\": null",
+            "\"predictions_per_sec\": -1.0",
+        );
+        let e = validate_str(&neg).unwrap_err();
+        assert!(e.message.contains("predictions_per_sec"), "{e}");
+        // v5 reports must state the fields even for non-serve workloads
+        let missing = minimal_workload("", "[0.0]")
+            .replace("\"predictions_per_sec\": null, \"p99_latency_s\": null,", "");
+        let e = validate_str(&missing).unwrap_err();
+        assert!(e.message.contains("predictions_per_sec"), "{e}");
     }
 
     #[test]

@@ -23,6 +23,14 @@
 //! `peak_rss_bytes * 2 <= dataset_bytes` — the checked-in proof that the
 //! out-of-core path's footprint stays several times below the data.
 //!
+//! A fifth, serving family (prefix `serve_`, run by [`run_serve`])
+//! trains briefly, publishes live snapshots through a
+//! [`SnapshotSink`](crate::serve::SnapshotSink), and measures batched
+//! scoring through [`Scorer`](crate::serve::Scorer) and
+//! [`MulticlassScorer`](crate::serve::MulticlassScorer). Those entries
+//! carry `predictions_per_sec` and `p99_latency_s` (null everywhere
+//! else) and are gated like every other family.
+//!
 //! Every run uses the byte-exact counted transport and the ec2-like
 //! network model, so `bytes_measured` and the simulated time axis are
 //! populated. The report is written as schema-versioned JSON
@@ -63,7 +71,10 @@ use crate::Trainer;
 /// validator enforces the out-of-core band `peak_rss_bytes * 2 <=
 /// dataset_bytes`, the report-level proof that mmap-shard training keeps
 /// its footprint several times below the data it trains on.
-pub const SCHEMA_VERSION: u32 = 4;
+/// v5: per-workload `predictions_per_sec` and `p99_latency_s` (both null
+/// outside the `serve_` serving family) — the online-scoring trajectory
+/// next to the training one.
+pub const SCHEMA_VERSION: u32 = 5;
 
 /// Problem sizes: tiny (CI smoke) or benchmark-scale.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -115,6 +126,12 @@ pub struct WorkloadReport {
     /// out-of-core band requires `peak_rss_bytes * 2 <= dataset_bytes`
     /// whenever both are recorded.
     pub peak_rss_bytes: Option<u64>,
+    /// Scoring throughput for the `serve_` family (`None` elsewhere):
+    /// predictions answered per wall second through the live snapshot.
+    pub predictions_per_sec: Option<f64>,
+    /// 99th-percentile per-batch scoring latency in seconds (`None`
+    /// outside the `serve_` family).
+    pub p99_latency_s: Option<f64>,
     /// Cumulative wall seconds per round phase, indexed like
     /// [`Phase::ALL`] (`local_solve` = slowest slot per round).
     pub phase_seconds: [f64; 5],
@@ -250,6 +267,8 @@ pub fn run_all(profile: PerfProfile, seed: u64) -> crate::Result<BenchReport> {
             bytes_measured: last.bytes_measured,
             dataset_bytes: None,
             peak_rss_bytes: None,
+            predictions_per_sec: None,
+            p99_latency_s: None,
             phase_seconds: hub.phase_seconds(),
             round_sim_time_s: trace.rows.iter().map(|r| r.sim_time_s).collect(),
         });
@@ -394,11 +413,145 @@ pub fn run_ooc(profile: PerfProfile, seed: u64, dir: &Path) -> crate::Result<Vec
             bytes_measured: last.bytes_measured,
             dataset_bytes: Some(dataset_bytes),
             peak_rss_bytes: peak,
+            predictions_per_sec: None,
+            p99_latency_s: None,
             phase_seconds: hub.phase_seconds(),
             round_sim_time_s: trace.rows.iter().map(|r| r.sim_time_s).collect(),
         });
     }
     Ok(workloads)
+}
+
+/// Run the serving workload family: train a short session with a live
+/// [`SnapshotSink`](crate::serve::SnapshotSink), then measure batched
+/// scoring against the published snapshots.
+///
+/// * `serve_sparse_k1` — binary margins over rcv1-regime CSR batches
+///   through [`Scorer::score_batch`](crate::serve::Scorer::score_batch)
+///   (the fused sparse gather-dot path, re-reading the live handle per
+///   batch exactly as `cocoa serve` does);
+/// * `serve_multiclass_k1` — one-vs-rest `predict` over the same batches
+///   through a [`MulticlassScorer`](crate::serve::MulticlassScorer)
+///   built by `set_labels` + `reset` warm restarts of the same session.
+///
+/// Report mapping: `rounds` = batches scored, `inner_steps` = total
+/// predictions, `steps_per_sec` = `predictions_per_sec`, and
+/// `p99_latency_s` = 99th-percentile per-batch latency. Training fields
+/// that do not apply (`final_gap`, `bytes_measured`, phase and sim-time
+/// axes) are zero. Kept separate from [`run_all`] like [`run_ooc`]; the
+/// `cocoa perf` driver merges all three.
+pub fn run_serve(profile: PerfProfile, seed: u64) -> crate::Result<Vec<WorkloadReport>> {
+    use crate::serve::{MulticlassScorer, Scorer, SnapshotSink};
+
+    let (n, d, nnz, batches, rows, classes, rounds) = match profile {
+        PerfProfile::Smoke => (400usize, 500usize, 8usize, 40usize, 64usize, 3usize, 5u64),
+        PerfProfile::Full => (20_000, 20_000, 12, 400, 256, 8, 20),
+    };
+    let data = rcv1_like(n, d, nnz, 0.1, seed ^ 0x5e);
+    let density = data.density();
+
+    let mut session = Trainer::on(&data)
+        .workers(1)
+        .loss(LossKind::Hinge)
+        .lambda(1.0 / n as f64)
+        .regularizer(RegularizerKind::L2)
+        .seed(seed)
+        .label("serve_perf")
+        .build()?;
+    let mut sink = SnapshotSink::for_session(&session, 1);
+    let handle = sink.handle();
+    let mut algorithm = Cocoa::new(n.max(1));
+    {
+        let mut driver = session.drive(&mut algorithm, MaxRounds::new(rounds))?;
+        driver.observe(&mut sink)?;
+        driver.drain()?;
+    }
+
+    // rotating row windows over the dataset, materialized up front —
+    // batch construction is the client's cost, not the serving path's
+    let batch_feats: Vec<crate::data::Features> = (0..batches)
+        .map(|b| {
+            let rows: Vec<u32> =
+                (0..rows).map(|r| ((b * rows + r) % n) as u32).collect();
+            data.subset(&rows).features
+        })
+        .collect();
+
+    // percentile over sorted per-batch latencies
+    let p99_of = |lat: &mut Vec<f64>| {
+        lat.sort_by(f64::total_cmp);
+        let idx = ((lat.len() as f64 * 0.99).ceil() as usize).clamp(1, lat.len()) - 1;
+        lat[idx]
+    };
+    let serve_report = |name: &str, total: u64, wall: f64, p99: f64| {
+        let pps = total as f64 / wall.max(1e-9);
+        WorkloadReport {
+            name: name.to_string(),
+            k: 1,
+            threads: 1,
+            n,
+            d,
+            density,
+            rounds: batches as u64,
+            inner_steps: total,
+            wall_s: wall,
+            steps_per_sec: pps,
+            final_gap: 0.0,
+            time_to_gap_1e3_s: None,
+            bytes_measured: 0,
+            dataset_bytes: None,
+            peak_rss_bytes: None,
+            predictions_per_sec: Some(pps),
+            p99_latency_s: Some(p99),
+            phase_seconds: [0.0; 5],
+            round_sim_time_s: vec![0.0],
+        }
+    };
+
+    let mut out = Vec::new();
+
+    // serve_sparse: binary margins through the live handle
+    let scorer = Scorer::live(handle.clone());
+    let mut lat = Vec::with_capacity(batches);
+    let mut total = 0u64;
+    let t0 = Instant::now();
+    for f in &batch_feats {
+        let t = Instant::now();
+        let scored = scorer.score_batch(f)?;
+        lat.push(t.elapsed().as_secs_f64());
+        total += scored.margins.len() as u64;
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    out.push(serve_report("serve_sparse_k1", total, wall, p99_of(&mut lat)));
+
+    // serve_multiclass: one-vs-rest models from warm restarts of the
+    // same session (curvatures are label-independent), then parallel
+    // argmax scoring
+    let mut models = Vec::with_capacity(classes);
+    for c in 0..classes {
+        let relabeled: Vec<f64> =
+            (0..n).map(|i| if i % classes == c { 1.0 } else { -1.0 }).collect();
+        session.set_labels(&relabeled)?;
+        session.reset()?;
+        let mut driver = session.drive(&mut algorithm, MaxRounds::new(rounds))?;
+        driver.observe(&mut sink)?;
+        driver.drain()?;
+        models.push((*handle.current()).clone());
+    }
+    session.shutdown();
+    let mc = MulticlassScorer::new(models)?;
+    let mut lat = Vec::with_capacity(batches);
+    let mut total = 0u64;
+    let t0 = Instant::now();
+    for f in &batch_feats {
+        let t = Instant::now();
+        let classes_out = mc.predict(f)?;
+        lat.push(t.elapsed().as_secs_f64());
+        total += classes_out.len() as u64;
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    out.push(serve_report("serve_multiclass_k1", total, wall, p99_of(&mut lat)));
+    Ok(out)
 }
 
 impl BenchReport {
@@ -428,6 +581,7 @@ impl BenchReport {
                  \"rounds\": {}, \"inner_steps\": {}, \"wall_s\": {}, \"steps_per_sec\": {}, \
                  \"final_gap\": {}, \"time_to_gap_1e3_s\": {}, \"bytes_measured\": {}, \
                  \"dataset_bytes\": {}, \"peak_rss_bytes\": {}, \
+                 \"predictions_per_sec\": {}, \"p99_latency_s\": {}, \
                  \"phase_seconds\": {{{}}}, \
                  \"round_sim_time_s\": [{}]}}{}\n",
                 w.name,
@@ -445,6 +599,8 @@ impl BenchReport {
                 w.bytes_measured,
                 w.dataset_bytes.map_or("null".to_string(), |v| v.to_string()),
                 w.peak_rss_bytes.map_or("null".to_string(), |v| v.to_string()),
+                w.predictions_per_sec.map_or("null".to_string(), json_f64),
+                w.p99_latency_s.map_or("null".to_string(), json_f64),
                 phases.join(", "),
                 times.join(", "),
                 if i + 1 == self.workloads.len() { "" } else { "," },
@@ -508,6 +664,33 @@ mod tests {
     }
 
     #[test]
+    fn serve_workloads_measure_scoring_and_validate() {
+        let workloads = run_serve(PerfProfile::Smoke, 42).unwrap();
+        assert_eq!(workloads.len(), 2);
+        assert_eq!(workloads[0].name, "serve_sparse_k1");
+        assert_eq!(workloads[1].name, "serve_multiclass_k1");
+        for w in &workloads {
+            let pps = w.predictions_per_sec.expect("serve family reports throughput");
+            assert!(pps > 0.0, "{}: predictions_per_sec = {pps}", w.name);
+            assert!((pps - w.steps_per_sec).abs() < 1e-9, "{}: steps_per_sec mirror", w.name);
+            let p99 = w.p99_latency_s.expect("serve family reports p99");
+            assert!(p99 >= 0.0 && p99.is_finite(), "{}: p99 = {p99}", w.name);
+            assert!(w.inner_steps > 0, "{}: no predictions", w.name);
+            assert_eq!(w.rounds as usize, 40, "{}: batch count", w.name);
+        }
+        // serve rows slot into a full report and still pass the validator
+        let report = BenchReport {
+            schema_version: SCHEMA_VERSION,
+            profile: PerfProfile::Smoke,
+            seed: 42,
+            kernel_backend: crate::kernels::backend_name().to_string(),
+            peak_rss_bytes: None,
+            workloads,
+        };
+        schema::validate_str(&report.to_json_string()).unwrap();
+    }
+
+    #[test]
     fn report_write_creates_parents_and_validates() {
         let dir = std::env::temp_dir().join("cocoa_perf_test");
         let _ = std::fs::remove_dir_all(&dir);
@@ -534,6 +717,8 @@ mod tests {
                 bytes_measured: 64,
                 dataset_bytes: None,
                 peak_rss_bytes: None,
+                predictions_per_sec: None,
+                p99_latency_s: None,
                 phase_seconds: [0.001, 0.008, 0.002, 0.0005, 0.0005],
                 round_sim_time_s: vec![0.0, 0.5],
             }],

@@ -1,0 +1,440 @@
+//! Online serving: live model snapshots published by a training run, a
+//! batched [`Scorer`] over them, and the request/reply scoring protocol
+//! behind `cocoa serve` — see `docs/SERVING.md` for the full contract.
+//!
+//! The design keeps serving strictly *passive* with respect to training:
+//!
+//! * The driver's [`on_model`](crate::driver::Observer::on_model) hook
+//!   hands a [`SnapshotSink`] the leader's primal iterate once per round;
+//!   on its cadence the sink copies `w` into an immutable, round-stamped
+//!   [`ModelSnapshot`] and swaps it into a shared [`SnapshotHandle`].
+//!   Training never blocks on readers: publication replaces an
+//!   `Arc<ModelSnapshot>` under a write lock held for one pointer swap,
+//!   and readers clone the `Arc` under a shared lock held for one clone —
+//!   both O(1) critical sections, no allocation, no waiting on scoring
+//!   traffic. The passivity test in `tests/serving.rs` pins that a run
+//!   with live scorers attached is bit-identical to a bare run.
+//! * A [`Scorer`] answers batched margin queries from whatever snapshot
+//!   is current, routing every row product through
+//!   [`Features::row_dot`](crate::data::Features) — the same fused
+//!   sparse gather-dot kernels the training inner loop uses.
+//! * [`MulticlassScorer`] holds K frozen one-vs-rest snapshots and
+//!   answers argmax class predictions, scoring the K models in parallel
+//!   (deterministically: ties break to the lowest class index).
+//!
+//! Snapshots carry the **dataset fingerprint** and the **loss /
+//! regularizer tokens** of the run that produced them; the scoring
+//! handshake ([`ScoreServer`] / [`ScoreClient`]) rejects a client bound
+//! to a different dataset or loss with a typed reason instead of serving
+//! margins that silently mean something else.
+//!
+//! Staleness bound: a sink publishing `every = c` sees the model at most
+//! `c - 1` completed rounds behind the trainer (the round-0 snapshot and
+//! every round divisible by `c` are published). With `c = 1` a snapshot
+//! at round `r` is bit-identical to the `w` a checkpoint taken at round
+//! `r` would restore — pinned by a test.
+
+mod server;
+mod wire;
+
+pub use server::{ScoreClient, ScoreServer};
+pub use wire::{RemoteScores, ScoreBatch, ScoreIdentity};
+
+use std::sync::{Arc, RwLock};
+
+use crate::data::Features;
+use crate::driver::{Observer, RoundEvent, RunMeta};
+use crate::error::{Error, Result};
+
+/// One immutable, round-stamped view of the model: everything a scorer
+/// needs to answer (and to refuse) prediction requests.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ModelSnapshot {
+    /// Publication sequence number (1-based; 0 for the pre-run snapshot
+    /// a [`SnapshotSink`] is seeded with). Strictly increasing per sink,
+    /// so a client can detect model turnover even when the round number
+    /// repeats across warm restarts.
+    pub epoch: u64,
+    /// The completed round this iterate belongs to.
+    pub round: u64,
+    /// The primal iterate `w` (a private copy — never aliased with the
+    /// leader's live vector).
+    pub w: Vec<f64>,
+    /// Loss token (the [`LossKind`](crate::loss::LossKind) display form,
+    /// e.g. `"hinge"`); margins are only meaningful under the loss the
+    /// model was trained for.
+    pub loss: String,
+    /// Regularizer token (display form, e.g. `"l2"`).
+    pub regularizer: String,
+    /// Dataset fingerprint of the session that produced the snapshot
+    /// (chained through appended batches — see
+    /// [`Session::fingerprint`](crate::Session::fingerprint)).
+    pub fingerprint: String,
+}
+
+impl ModelSnapshot {
+    /// Feature width the snapshot scores.
+    pub fn d(&self) -> usize {
+        self.w.len()
+    }
+}
+
+/// Shared, lock-free-read access to the latest [`ModelSnapshot`].
+///
+/// Cloning the handle is cheap (an `Arc` clone); every clone observes
+/// the same publication stream. [`current`](SnapshotHandle::current)
+/// never blocks on a publisher for more than one pointer swap — the
+/// write lock is held only to replace the inner `Arc`, never while
+/// copying model data.
+#[derive(Clone)]
+pub struct SnapshotHandle {
+    inner: Arc<RwLock<Arc<ModelSnapshot>>>,
+}
+
+impl SnapshotHandle {
+    /// A handle seeded with `initial` (epoch 0 by convention).
+    pub fn new(initial: ModelSnapshot) -> SnapshotHandle {
+        SnapshotHandle { inner: Arc::new(RwLock::new(Arc::new(initial))) }
+    }
+
+    /// The latest published snapshot. O(1): clones the inner `Arc` under
+    /// a shared lock; the returned snapshot stays valid (and immutable)
+    /// however many publications follow.
+    pub fn current(&self) -> Arc<ModelSnapshot> {
+        // a poisoned lock means a publisher panicked mid-swap; the Arc
+        // swap itself cannot be observed half-done, so the value is fine
+        match self.inner.read() {
+            Ok(g) => Arc::clone(&g),
+            Err(poisoned) => Arc::clone(&poisoned.into_inner()),
+        }
+    }
+
+    /// Replace the current snapshot (publisher side).
+    pub fn publish(&self, snapshot: ModelSnapshot) {
+        let next = Arc::new(snapshot);
+        match self.inner.write() {
+            Ok(mut g) => *g = next,
+            Err(poisoned) => *poisoned.into_inner() = next,
+        }
+    }
+}
+
+/// A driver [`Observer`] that publishes [`ModelSnapshot`]s to a
+/// [`SnapshotHandle`] on a fixed round cadence.
+///
+/// Strictly passive: it copies the borrowed `w` it is handed and touches
+/// nothing in the cluster, so attaching one leaves the training
+/// trajectory bit-identical (pinned in `tests/serving.rs`). Construct
+/// per run with [`SnapshotSink::for_session`] so the identity tokens
+/// (loss, regularizer, dataset fingerprint) match what the session will
+/// actually train — after [`Session::append_rows`](crate::Session::append_rows)
+/// moves the fingerprint, build a fresh sink for the next run.
+pub struct SnapshotSink {
+    handle: SnapshotHandle,
+    every: u64,
+    epoch: u64,
+    loss: String,
+    regularizer: String,
+    fingerprint: String,
+}
+
+impl SnapshotSink {
+    /// A sink bound to `session`'s identity, publishing every `every`
+    /// completed rounds (`every` is clamped to at least 1; the round-0
+    /// snapshot is always published). The handle starts at epoch 0 with
+    /// the session's current `w`, so scorers have a model before the
+    /// first round commits.
+    pub fn for_session(session: &crate::Session, every: u64) -> SnapshotSink {
+        let loss = session.loss().to_string();
+        let regularizer = session.regularizer().to_string();
+        let fingerprint = session.fingerprint().to_string();
+        let handle = SnapshotHandle::new(ModelSnapshot {
+            epoch: 0,
+            round: 0,
+            w: session.w().to_vec(),
+            loss: loss.clone(),
+            regularizer: regularizer.clone(),
+            fingerprint: fingerprint.clone(),
+        });
+        SnapshotSink { handle, every: every.max(1), epoch: 0, loss, regularizer, fingerprint }
+    }
+
+    /// A handle scorers can read from (clone freely across threads).
+    pub fn handle(&self) -> SnapshotHandle {
+        self.handle.clone()
+    }
+}
+
+impl Observer for SnapshotSink {
+    fn on_event(&mut self, _meta: &RunMeta, _event: &RoundEvent) -> Result<()> {
+        Ok(())
+    }
+
+    fn on_model(&mut self, _meta: &RunMeta, round: u64, w: &[f64]) -> Result<()> {
+        if round % self.every == 0 {
+            self.epoch += 1;
+            self.handle.publish(ModelSnapshot {
+                epoch: self.epoch,
+                round,
+                w: w.to_vec(),
+                loss: self.loss.clone(),
+                regularizer: self.regularizer.clone(),
+                fingerprint: self.fingerprint.clone(),
+            });
+        }
+        Ok(())
+    }
+}
+
+/// Margins for one scored batch, stamped with the snapshot that
+/// produced them.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ScoredBatch {
+    /// Publication epoch of the snapshot used.
+    pub epoch: u64,
+    /// Round of the snapshot used.
+    pub round: u64,
+    /// `x_i . w` per batch row, in row order.
+    pub margins: Vec<f64>,
+}
+
+/// Batched predictions over the current snapshot of a [`SnapshotHandle`]
+/// (live serving) or over one frozen [`ModelSnapshot`] (checkpoint
+/// serving) — the two paths produce bit-identical margins for the same
+/// `w`, which is what lets the snapshot-vs-checkpoint test pin round-`r`
+/// equivalence.
+pub struct Scorer {
+    handle: SnapshotHandle,
+}
+
+impl Scorer {
+    /// Score from whatever `handle` currently publishes (each batch
+    /// re-reads, so a long-lived scorer follows the training run).
+    pub fn live(handle: SnapshotHandle) -> Scorer {
+        Scorer { handle }
+    }
+
+    /// Score a fixed snapshot (e.g. `w` restored from a checkpoint).
+    pub fn frozen(snapshot: ModelSnapshot) -> Scorer {
+        Scorer { handle: SnapshotHandle::new(snapshot) }
+    }
+
+    /// The snapshot the next [`score_batch`](Scorer::score_batch) would
+    /// use.
+    pub fn snapshot(&self) -> Arc<ModelSnapshot> {
+        self.handle.current()
+    }
+
+    /// Margins `x_i . w` for every row of `batch` against the current
+    /// snapshot, through the fused sparse/dense gather-dot kernels. The
+    /// snapshot is read once per call, so all rows of one batch score
+    /// against the same model even while training publishes mid-batch.
+    pub fn score_batch(&self, batch: &Features) -> Result<ScoredBatch> {
+        let snap = self.handle.current();
+        let margins = margins_against(batch, &snap.w)?;
+        Ok(ScoredBatch { epoch: snap.epoch, round: snap.round, margins })
+    }
+}
+
+/// `x_i . w` per row, with the width check every scoring path shares.
+fn margins_against(batch: &Features, w: &[f64]) -> Result<Vec<f64>> {
+    if batch.cols() != w.len() {
+        return Err(Error::Score {
+            message: format!(
+                "batch has d={} features but the model has d={}",
+                batch.cols(),
+                w.len()
+            ),
+        });
+    }
+    Ok((0..batch.rows()).map(|i| batch.row_dot(i, w)).collect())
+}
+
+/// One-vs-rest serving: K frozen per-class snapshots answering argmax
+/// class predictions, scored in parallel (one thread per class, joined
+/// in class order — predictions are deterministic, ties break to the
+/// lowest class index).
+pub struct MulticlassScorer {
+    models: Vec<Arc<ModelSnapshot>>,
+}
+
+impl MulticlassScorer {
+    /// Build from per-class snapshots (index = class id). All models
+    /// must share the feature width and dataset fingerprint — K models
+    /// from different data answer a question nobody asked.
+    pub fn new(models: Vec<ModelSnapshot>) -> Result<MulticlassScorer> {
+        let first = models.first().ok_or_else(|| Error::Score {
+            message: "multiclass scorer needs at least one class model".into(),
+        })?;
+        let (d, fp) = (first.d(), first.fingerprint.clone());
+        for (c, m) in models.iter().enumerate() {
+            if m.d() != d {
+                return Err(Error::Score {
+                    message: format!("class {c} model has d={} but class 0 has d={d}", m.d()),
+                });
+            }
+            if m.fingerprint != fp {
+                return Err(Error::Score {
+                    message: format!(
+                        "class {c} model fingerprint {:?} != class 0 fingerprint {fp:?}",
+                        m.fingerprint
+                    ),
+                });
+            }
+        }
+        Ok(MulticlassScorer { models: models.into_iter().map(Arc::new).collect() })
+    }
+
+    /// Number of classes served.
+    pub fn classes(&self) -> usize {
+        self.models.len()
+    }
+
+    /// Per-class margins for every row: `margins[c][i] = x_i . w_c`,
+    /// computed with one scoring thread per class.
+    pub fn margins(&self, batch: &Features) -> Result<Vec<Vec<f64>>> {
+        for (c, m) in self.models.iter().enumerate() {
+            if batch.cols() != m.d() {
+                return Err(Error::Score {
+                    message: format!(
+                        "batch has d={} features but class {c} model has d={}",
+                        batch.cols(),
+                        m.d()
+                    ),
+                });
+            }
+        }
+        let mut out: Vec<Vec<f64>> = Vec::with_capacity(self.models.len());
+        std::thread::scope(|scope| {
+            let handles: Vec<_> = self
+                .models
+                .iter()
+                .map(|m| scope.spawn(move || margins_against(batch, &m.w).expect("width checked")))
+                .collect();
+            // joining in spawn (= class) order keeps the output
+            // deterministic regardless of which thread finishes first
+            for h in handles {
+                out.push(h.join().expect("class scoring thread panicked"));
+            }
+        });
+        Ok(out)
+    }
+
+    /// Argmax class per row (ties to the lowest class index).
+    pub fn predict(&self, batch: &Features) -> Result<Vec<usize>> {
+        let margins = self.margins(batch)?;
+        Ok((0..batch.rows())
+            .map(|i| {
+                let mut best = 0usize;
+                for c in 1..margins.len() {
+                    if margins[c][i] > margins[best][i] {
+                        best = c;
+                    }
+                }
+                best
+            })
+            .collect())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::{cov_like, Dataset};
+
+    fn snap(epoch: u64, round: u64, w: Vec<f64>) -> ModelSnapshot {
+        ModelSnapshot {
+            epoch,
+            round,
+            w,
+            loss: "hinge".into(),
+            regularizer: "l2".into(),
+            fingerprint: "fp".into(),
+        }
+    }
+
+    #[test]
+    fn handle_publish_and_read() {
+        let h = SnapshotHandle::new(snap(0, 0, vec![0.0; 3]));
+        assert_eq!(h.current().epoch, 0);
+        let reader = h.clone();
+        h.publish(snap(1, 5, vec![1.0, 2.0, 3.0]));
+        let seen = reader.current();
+        assert_eq!(seen.epoch, 1);
+        assert_eq!(seen.round, 5);
+        assert_eq!(seen.w, vec![1.0, 2.0, 3.0]);
+        // an Arc taken before a publish stays valid and unchanged
+        let old = reader.current();
+        h.publish(snap(2, 6, vec![9.0, 9.0, 9.0]));
+        assert_eq!(old.epoch, 1);
+        assert_eq!(reader.current().epoch, 2);
+    }
+
+    #[test]
+    fn scorer_matches_manual_dots_dense_and_sparse() {
+        let data: Dataset = cov_like(40, 7, 0.3, 11);
+        let w: Vec<f64> = (0..7).map(|j| (j as f64 + 1.0) * 0.25).collect();
+        let scorer = Scorer::frozen(snap(3, 9, w.clone()));
+        let scored = scorer.score_batch(&data.features).unwrap();
+        assert_eq!(scored.epoch, 3);
+        assert_eq!(scored.round, 9);
+        assert_eq!(scored.margins.len(), 40);
+        for i in 0..40 {
+            let mut want = 0.0;
+            for (j, wj) in w.iter().enumerate() {
+                want += data.features.row_dense(i)[j] * wj;
+            }
+            assert!(
+                (scored.margins[i] - want).abs() < 1e-12,
+                "row {i}: {} vs {want}",
+                scored.margins[i]
+            );
+        }
+    }
+
+    #[test]
+    fn scorer_rejects_width_mismatch_typed() {
+        let data = cov_like(10, 4, 0.5, 2);
+        let scorer = Scorer::frozen(snap(1, 1, vec![0.0; 5]));
+        let err = scorer.score_batch(&data.features).unwrap_err();
+        assert!(matches!(err, Error::Score { .. }), "{err}");
+    }
+
+    #[test]
+    fn multiclass_argmax_is_deterministic_and_tie_breaks_low() {
+        let data = cov_like(25, 6, 0.4, 7);
+        // class 1 dominated by class 0 everywhere; class 2 is class 0
+        // exactly, so ties must resolve to class 0
+        let w0: Vec<f64> = vec![1.0; 6];
+        let models = vec![
+            snap(1, 1, w0.clone()),
+            snap(1, 1, vec![0.0; 6]),
+            snap(1, 1, w0.clone()),
+        ];
+        let mc = MulticlassScorer::new(models).unwrap();
+        assert_eq!(mc.classes(), 3);
+        let preds = mc.predict(&data.features).unwrap();
+        let single = Scorer::frozen(snap(1, 1, w0)).score_batch(&data.features).unwrap();
+        for (i, &p) in preds.iter().enumerate() {
+            if single.margins[i] > 0.0 {
+                assert_eq!(p, 0, "row {i} positive margin must pick the tied-lowest class");
+            }
+        }
+        // repeated calls are identical (parallel join order is pinned)
+        assert_eq!(preds, mc.predict(&data.features).unwrap());
+    }
+
+    #[test]
+    fn multiclass_rejects_mismatched_models() {
+        let err = MulticlassScorer::new(vec![]).unwrap_err();
+        assert!(matches!(err, Error::Score { .. }), "{err}");
+        let err =
+            MulticlassScorer::new(vec![snap(1, 1, vec![0.0; 3]), snap(1, 1, vec![0.0; 4])])
+                .unwrap_err();
+        assert!(matches!(err, Error::Score { .. }), "{err}");
+        let mut other = snap(1, 1, vec![0.0; 3]);
+        other.fingerprint = "other".into();
+        let err = MulticlassScorer::new(vec![snap(1, 1, vec![0.0; 3]), other]).unwrap_err();
+        assert!(matches!(err, Error::Score { .. }), "{err}");
+    }
+}

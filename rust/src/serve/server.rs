@@ -1,0 +1,429 @@
+//! The `cocoa serve` endpoint: a [`ScoreServer`] answering the scoring
+//! protocol of [`serve::wire`](super::wire) over TCP or UDS, and the
+//! matching [`ScoreClient`].
+//!
+//! The server reuses the net-transport plumbing wholesale — `NetAddr` /
+//! `NetListener` / `Sock` and the length-prefixed `write_frame` /
+//! `read_frame` — and follows the `MetricsServer` shape: one background
+//! thread polling a nonblocking listener, connections served one at a
+//! time. v1 limitations, by design: no concurrent connections (a scoring
+//! client finishes its batch exchange and disconnects), and a ~1 s
+//! per-read deadline inside a connection, so an idle client is dropped
+//! rather than wedging the accept loop (reconnect to resume). Scoring
+//! reads model state only through a [`Scorer`]'s snapshot handle, so a
+//! server attached to a live training run never perturbs it.
+
+use std::io;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+use super::wire::{
+    decode_score_frame, encode_score_accept, encode_score_hello, encode_score_reject,
+    encode_score_reply, encode_score_request, RemoteScores, ScoreBatch, ScoreFrame,
+    ScoreIdentity,
+};
+use super::Scorer;
+use crate::data::Features;
+use crate::error::{Error, Result};
+use crate::transport::net::{
+    read_frame, write_frame, FrameRead, NetAddr, NetListener, ReconnectPolicy, Sock,
+};
+
+/// How long one in-connection read may stall before the connection is
+/// dropped (keeps a dead or idle client from wedging the single-threaded
+/// accept loop).
+const READ_TIMEOUT: Duration = Duration::from_secs(1);
+
+/// A live scoring endpoint; dropping it stops the listener thread.
+pub struct ScoreServer {
+    stop: Arc<AtomicBool>,
+    handle: Option<JoinHandle<()>>,
+    addr: String,
+    served: Arc<AtomicU64>,
+}
+
+impl ScoreServer {
+    /// Bind `addr` (`tcp:host:port` or `uds:/path`) and serve `scorer`
+    /// until the server is dropped or [`ScoreServer::shutdown`] runs.
+    /// The scorer may be [`Scorer::live`] over a training run's
+    /// [`SnapshotHandle`](super::SnapshotHandle) or [`Scorer::frozen`]
+    /// over a checkpoint-restored model — the protocol is identical.
+    pub fn serve(addr: &str, scorer: Scorer) -> Result<ScoreServer> {
+        let parsed = NetAddr::parse(addr)?;
+        let listener = NetListener::bind(&parsed)?;
+        listener.set_nonblocking(true).map_err(|e| Error::Transport {
+            message: format!("score listener nonblocking failed: {e}"),
+        })?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let served = Arc::new(AtomicU64::new(0));
+        let (stop_t, served_t) = (Arc::clone(&stop), Arc::clone(&served));
+        let handle = std::thread::Builder::new()
+            .name("cocoa-score".into())
+            .spawn(move || {
+                while !stop_t.load(Ordering::Relaxed) {
+                    match listener.accept() {
+                        Ok(sock) => serve_connection(sock, &scorer, &served_t),
+                        Err(e) if e.kind() == io::ErrorKind::WouldBlock => {
+                            std::thread::sleep(Duration::from_millis(20));
+                        }
+                        Err(_) => std::thread::sleep(Duration::from_millis(20)),
+                    }
+                }
+            })
+            .map_err(|e| Error::Transport {
+                message: format!("score server thread spawn failed: {e}"),
+            })?;
+        Ok(ScoreServer { stop, handle: Some(handle), addr: addr.to_string(), served })
+    }
+
+    /// The address the server was bound on, as given.
+    pub fn addr(&self) -> &str {
+        &self.addr
+    }
+
+    /// Total margins answered so far (across all connections) — the
+    /// counter behind the `serve_` perf workloads and the CI smoke gate.
+    pub fn predictions_served(&self) -> u64 {
+        self.served.load(Ordering::Relaxed)
+    }
+
+    /// Stop accepting and join the listener thread. In-flight reads
+    /// finish within the [`READ_TIMEOUT`] deadline.
+    pub fn shutdown(mut self) {
+        self.stop_and_join();
+    }
+
+    fn stop_and_join(&mut self) {
+        self.stop.store(true, Ordering::Relaxed);
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for ScoreServer {
+    fn drop(&mut self) {
+        self.stop_and_join();
+    }
+}
+
+/// Serve one client: handshake, then request/reply until the client
+/// closes (or errs, or stalls past the read deadline). All failures end
+/// the connection — a misbehaving client must never take the server
+/// down.
+fn serve_connection(mut sock: Sock, scorer: &Scorer, served: &AtomicU64) {
+    let _ = sock.set_read_timeout(Some(READ_TIMEOUT));
+    // handshake: the snapshot read here fixes the identity the client
+    // binds to; margins still track later publications (live serving)
+    let snap = scorer.snapshot();
+    let hello = match read_frame(&mut sock) {
+        Ok(FrameRead::Frame(buf)) => match decode_score_frame(&buf) {
+            Ok(ScoreFrame::Hello(id)) => id,
+            Ok(_) | Err(_) => {
+                let _ = write_frame(&mut sock, &encode_score_reject("expected a score hello"));
+                return;
+            }
+        },
+        Ok(FrameRead::Eof) | Err(_) => return,
+    };
+    let mismatch = if hello.d != 0 && hello.d != snap.d() {
+        Some(format!("width mismatch: client expects d={}, serving d={}", hello.d, snap.d()))
+    } else if !hello.fingerprint.is_empty() && hello.fingerprint != snap.fingerprint {
+        Some(format!(
+            "dataset fingerprint mismatch: client expects {:?}, serving {:?}",
+            hello.fingerprint, snap.fingerprint
+        ))
+    } else if !hello.loss.is_empty() && hello.loss != snap.loss {
+        Some(format!(
+            "loss mismatch: client expects {:?}, serving {:?}",
+            hello.loss, snap.loss
+        ))
+    } else {
+        None
+    };
+    if let Some(reason) = mismatch {
+        let _ = write_frame(&mut sock, &encode_score_reject(&reason));
+        return;
+    }
+    let accepted = ScoreIdentity {
+        d: snap.d(),
+        fingerprint: snap.fingerprint.clone(),
+        loss: snap.loss.clone(),
+    };
+    if write_frame(&mut sock, &encode_score_accept(&accepted)).is_err() {
+        return;
+    }
+
+    loop {
+        let batch = match read_frame(&mut sock) {
+            Ok(FrameRead::Frame(buf)) => match decode_score_frame(&buf) {
+                Ok(ScoreFrame::Request(batch)) => batch,
+                Ok(_) => {
+                    let _ = write_frame(
+                        &mut sock,
+                        &encode_score_reject("expected a score request"),
+                    );
+                    return;
+                }
+                Err(e) => {
+                    let _ = write_frame(&mut sock, &encode_score_reject(&e.to_string()));
+                    return;
+                }
+            },
+            Ok(FrameRead::Eof) | Err(_) => return,
+        };
+        // re-read per request so a live run's latest snapshot answers
+        let snap = scorer.snapshot();
+        let features = match batch.into_features(snap.d()) {
+            Ok(f) => f,
+            Err(e) => {
+                let _ = write_frame(&mut sock, &encode_score_reject(&e.to_string()));
+                return;
+            }
+        };
+        let scored = match scorer.score_batch(&features) {
+            Ok(s) => s,
+            Err(e) => {
+                let _ = write_frame(&mut sock, &encode_score_reject(&e.to_string()));
+                return;
+            }
+        };
+        served.fetch_add(scored.margins.len() as u64, Ordering::Relaxed);
+        let reply = RemoteScores {
+            epoch: scored.epoch,
+            round: scored.round,
+            margins: scored.margins,
+        };
+        if write_frame(&mut sock, &encode_score_reply(&reply)).is_err() {
+            return;
+        }
+    }
+}
+
+/// A connected scoring client. One handshake binds it to the served
+/// model's identity; [`ScoreClient::score`] then answers batches until
+/// the client is dropped (closing the connection).
+pub struct ScoreClient {
+    sock: Sock,
+    identity: ScoreIdentity,
+}
+
+impl ScoreClient {
+    /// Connect to `addr` and handshake with `expect` (see
+    /// [`ScoreIdentity::any`] for an unconstrained bind). A server-side
+    /// identity mismatch surfaces as a typed [`Error::Handshake`]
+    /// carrying the server's reason.
+    pub fn connect(addr: &str, expect: &ScoreIdentity) -> Result<ScoreClient> {
+        let parsed = NetAddr::parse(addr)?;
+        let sock = Sock::connect(&parsed).map_err(|e| Error::Transport {
+            message: format!("score connect to {addr} failed: {e}"),
+        })?;
+        Self::handshake(sock, expect)
+    }
+
+    /// [`ScoreClient::connect`] with bounded retry (exponential backoff,
+    /// same schedule as worker reconnects) — for clients racing a server
+    /// that is still binding, e.g. the CI smoke scoring a training run
+    /// it just launched. Handshake *rejects* are not retried: the server
+    /// is up and will keep saying no.
+    pub fn connect_with_retry(
+        addr: &str,
+        expect: &ScoreIdentity,
+        attempts: u32,
+        backoff_s: f64,
+    ) -> Result<ScoreClient> {
+        let policy = ReconnectPolicy { attempts: attempts.max(1), backoff_s };
+        let mut failures = 0u32;
+        loop {
+            match Self::connect(addr, expect) {
+                Ok(client) => return Ok(client),
+                Err(e @ Error::Handshake { .. }) => return Err(e),
+                Err(e) => {
+                    failures += 1;
+                    if failures >= policy.attempts {
+                        return Err(e);
+                    }
+                    std::thread::sleep(policy.delay(failures));
+                }
+            }
+        }
+    }
+
+    fn handshake(mut sock: Sock, expect: &ScoreIdentity) -> Result<ScoreClient> {
+        let _ = sock.set_read_timeout(Some(Duration::from_secs(30)));
+        write_frame(&mut sock, &encode_score_hello(expect)).map_err(|e| Error::Transport {
+            message: format!("score hello write failed: {e}"),
+        })?;
+        match read_frame(&mut sock) {
+            Ok(FrameRead::Frame(buf)) => match decode_score_frame(&buf) {
+                Ok(ScoreFrame::Accept(identity)) => Ok(ScoreClient { sock, identity }),
+                Ok(ScoreFrame::Reject(reason)) => Err(Error::Handshake { reason }),
+                Ok(_) => Err(Error::Handshake {
+                    reason: "server answered the hello with a non-handshake frame".into(),
+                }),
+                Err(e) => Err(Error::Handshake { reason: format!("undecodable reply: {e}") }),
+            },
+            Ok(FrameRead::Eof) => Err(Error::Handshake {
+                reason: "server closed the connection during the handshake".into(),
+            }),
+            Err(e) => Err(Error::Transport {
+                message: format!("score handshake read failed: {e}"),
+            }),
+        }
+    }
+
+    /// The identity the server accepted with (its actual `d`,
+    /// fingerprint, and loss token — useful after a wildcard hello).
+    pub fn identity(&self) -> &ScoreIdentity {
+        &self.identity
+    }
+
+    /// Score every row of `features` remotely; margins come back in row
+    /// order, stamped with the answering snapshot's round and epoch.
+    pub fn score(&mut self, features: &Features) -> Result<RemoteScores> {
+        let batch = ScoreBatch::from_features(features);
+        write_frame(&mut self.sock, &encode_score_request(&batch)).map_err(|e| {
+            Error::Score { message: format!("score request write failed: {e}") }
+        })?;
+        match read_frame(&mut self.sock) {
+            Ok(FrameRead::Frame(buf)) => match decode_score_frame(&buf) {
+                Ok(ScoreFrame::Reply(scores)) => {
+                    if scores.margins.len() != features.rows() {
+                        return Err(Error::Score {
+                            message: format!(
+                                "server answered {} margins for {} rows",
+                                scores.margins.len(),
+                                features.rows()
+                            ),
+                        });
+                    }
+                    Ok(scores)
+                }
+                Ok(ScoreFrame::Reject(reason)) => Err(Error::Score { message: reason }),
+                Ok(_) => Err(Error::Score {
+                    message: "server answered a request with a non-reply frame".into(),
+                }),
+                Err(e) => Err(Error::Score { message: format!("undecodable reply: {e}") }),
+            },
+            Ok(FrameRead::Eof) => Err(Error::Score {
+                message: "server closed the connection mid-exchange".into(),
+            }),
+            Err(e) => Err(Error::Score { message: format!("score reply read failed: {e}") }),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::cov_like;
+    use crate::serve::ModelSnapshot;
+
+    fn uds_addr(tag: &str) -> (std::path::PathBuf, String) {
+        let dir = std::env::temp_dir().join(format!("cocoa_serve_{}_{tag}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("score.sock");
+        let addr = format!("uds:{}", path.display());
+        (dir, addr)
+    }
+
+    fn snap(w: Vec<f64>) -> ModelSnapshot {
+        ModelSnapshot {
+            epoch: 4,
+            round: 17,
+            w,
+            loss: "hinge".into(),
+            regularizer: "l2".into(),
+            fingerprint: "fp-test".into(),
+        }
+    }
+
+    #[test]
+    fn remote_margins_match_local_scoring_bit_for_bit() {
+        let (dir, addr) = uds_addr("roundtrip");
+        let data = cov_like(30, 8, 0.4, 3);
+        let w: Vec<f64> = (0..8).map(|j| 0.3 * (j as f64 - 4.0)).collect();
+        let local = Scorer::frozen(snap(w.clone()))
+            .score_batch(&data.features)
+            .unwrap();
+        let server = ScoreServer::serve(&addr, Scorer::frozen(snap(w))).unwrap();
+
+        let mut client =
+            ScoreClient::connect_with_retry(&addr, &ScoreIdentity::any(), 100, 0.01).unwrap();
+        assert_eq!(client.identity().d, 8);
+        assert_eq!(client.identity().fingerprint, "fp-test");
+        assert_eq!(client.identity().loss, "hinge");
+        let remote = client.score(&data.features).unwrap();
+        assert_eq!(remote.round, 17);
+        assert_eq!(remote.epoch, 4);
+        assert_eq!(remote.margins.len(), local.margins.len());
+        for (a, b) in remote.margins.iter().zip(&local.margins) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+        assert_eq!(server.predictions_served(), 30);
+
+        // a second batch on the same connection
+        let again = client.score(&data.features).unwrap();
+        assert_eq!(again.margins.len(), 30);
+        assert_eq!(server.predictions_served(), 60);
+
+        drop(client);
+        server.shutdown();
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn identity_mismatches_get_typed_rejects() {
+        let (dir, addr) = uds_addr("reject");
+        let server = ScoreServer::serve(&addr, Scorer::frozen(snap(vec![0.0; 6]))).unwrap();
+
+        // wrong fingerprint
+        let expect = ScoreIdentity { d: 0, fingerprint: "other".into(), loss: String::new() };
+        let err = ScoreClient::connect_with_retry(&addr, &expect, 100, 0.01).unwrap_err();
+        match err {
+            Error::Handshake { reason } => assert!(reason.contains("fingerprint"), "{reason}"),
+            other => panic!("{other}"),
+        }
+        // wrong loss token
+        let expect = ScoreIdentity { d: 0, fingerprint: String::new(), loss: "squared".into() };
+        let err = ScoreClient::connect_with_retry(&addr, &expect, 100, 0.01).unwrap_err();
+        match err {
+            Error::Handshake { reason } => assert!(reason.contains("loss"), "{reason}"),
+            other => panic!("{other}"),
+        }
+        // wrong width
+        let expect = ScoreIdentity { d: 9, fingerprint: String::new(), loss: String::new() };
+        let err = ScoreClient::connect_with_retry(&addr, &expect, 100, 0.01).unwrap_err();
+        match err {
+            Error::Handshake { reason } => assert!(reason.contains("width"), "{reason}"),
+            other => panic!("{other}"),
+        }
+        // matching identity still binds after the rejects
+        let ok = ScoreIdentity { d: 6, fingerprint: "fp-test".into(), loss: "hinge".into() };
+        let client = ScoreClient::connect_with_retry(&addr, &ok, 100, 0.01).unwrap();
+        drop(client);
+        server.shutdown();
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn oversized_width_batch_is_rejected_not_served() {
+        let (dir, addr) = uds_addr("badbatch");
+        let server = ScoreServer::serve(&addr, Scorer::frozen(snap(vec![0.0; 4]))).unwrap();
+        let mut client =
+            ScoreClient::connect_with_retry(&addr, &ScoreIdentity::any(), 100, 0.01).unwrap();
+        // 8-wide rows against a 4-wide model: typed scoring error with
+        // the server's reason, not a hang or a panic
+        let wide = cov_like(5, 8, 1.0, 1);
+        let err = client.score(&wide.features).unwrap_err();
+        match err {
+            Error::Score { message } => assert!(message.contains("out of range"), "{message}"),
+            other => panic!("{other}"),
+        }
+        drop(client);
+        server.shutdown();
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

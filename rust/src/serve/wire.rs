@@ -1,0 +1,372 @@
+//! The scoring wire protocol: request/reply frames riding the same
+//! versioned 16-byte header (`MAGIC` + `WIRE_VERSION` + tag) and the
+//! same length-prefixed framing as the training transport, so a peer
+//! from an incompatible build fails with a typed
+//! [`WireError::BadVersion`] before any payload is interpreted.
+//!
+//! Exchange, in order:
+//!
+//! 1. client -> server [`ScoreFrame::Hello`] — the identity the client
+//!    expects (`d` / dataset fingerprint / loss token; `0` or `""` means
+//!    "any").
+//! 2. server -> client [`ScoreFrame::Accept`] with the served model's
+//!    actual identity, or [`ScoreFrame::Reject`] with a typed reason
+//!    (fingerprint mismatch, loss mismatch, width mismatch).
+//! 3. client -> server [`ScoreFrame::Request`] — a CSR batch; server ->
+//!    client [`ScoreFrame::Reply`] — margins stamped with the snapshot's
+//!    round and epoch. Repeat until the client closes.
+//!
+//! Tags live in the `0xE_` block (training frames use `0x0_`/`0x8_`,
+//! net handshake `0xF_`), so a scoring frame accidentally delivered to a
+//! training decoder is an [`WireError::UnknownTag`], never a
+//! misinterpretation.
+
+use crate::data::{CsrMatrix, Features};
+use crate::error::Error;
+use crate::transport::wire::{decode_header, encode_header, Reader, WireError};
+
+pub(crate) const TAG_SCORE_HELLO: u8 = 0xE0;
+pub(crate) const TAG_SCORE_ACCEPT: u8 = 0xE1;
+pub(crate) const TAG_SCORE_REJECT: u8 = 0xE2;
+pub(crate) const TAG_SCORE_REQUEST: u8 = 0xE3;
+pub(crate) const TAG_SCORE_REPLY: u8 = 0xE4;
+
+type WireResult<T> = std::result::Result<T, WireError>;
+
+/// What a scoring peer claims (hello) or serves (accept): feature
+/// width, dataset fingerprint, loss token. In a hello, `d = 0` and
+/// empty strings are wildcards — a client that doesn't know the
+/// training identity can still bind, but one that states an identity
+/// gets a typed reject instead of silently-wrong margins.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ScoreIdentity {
+    pub d: usize,
+    pub fingerprint: String,
+    pub loss: String,
+}
+
+impl ScoreIdentity {
+    /// A hello that binds to whatever the server serves.
+    pub fn any() -> ScoreIdentity {
+        ScoreIdentity { d: 0, fingerprint: String::new(), loss: String::new() }
+    }
+}
+
+/// A batch of rows to score, in CSR form (batch-local `indptr`).
+#[derive(Debug, Clone, PartialEq)]
+pub struct ScoreBatch {
+    pub indptr: Vec<usize>,
+    pub indices: Vec<u32>,
+    pub values: Vec<f64>,
+}
+
+impl ScoreBatch {
+    pub fn rows(&self) -> usize {
+        self.indptr.len() - 1
+    }
+
+    pub fn nnz(&self) -> usize {
+        self.values.len()
+    }
+
+    /// CSR view of `features` rows (dense rows shed their exact-zero
+    /// entries — `w . x` is unchanged, and the server rebuilds a sparse
+    /// matrix anyway).
+    pub fn from_features(features: &Features) -> ScoreBatch {
+        let mut batch =
+            ScoreBatch { indptr: vec![0], indices: Vec::new(), values: Vec::new() };
+        for i in 0..features.rows() {
+            match features {
+                Features::Sparse(m) => {
+                    let (idx, val) = m.row_view(i);
+                    batch.indices.extend_from_slice(idx);
+                    batch.values.extend_from_slice(val);
+                }
+                Features::Dense(m) => {
+                    for (c, &v) in m.row(i).iter().enumerate() {
+                        if v.to_bits() != 0 {
+                            batch.indices.push(c as u32);
+                            batch.values.push(v);
+                        }
+                    }
+                }
+            }
+            batch.indptr.push(batch.values.len());
+        }
+        batch
+    }
+
+    /// Validate against the served width and build a scorable matrix.
+    /// Typed [`Error::Score`] on out-of-range or non-increasing indices
+    /// — a malformed batch must never panic the server.
+    pub fn into_features(self, d: usize) -> Result<Features, Error> {
+        for row in self.indptr.windows(2) {
+            let mut prev: Option<u32> = None;
+            for &c in &self.indices[row[0]..row[1]] {
+                if c as usize >= d {
+                    return Err(Error::Score {
+                        message: format!("batch column {c} out of range for d={d}"),
+                    });
+                }
+                if prev.is_some_and(|p| c <= p) {
+                    return Err(Error::Score {
+                        message: "batch row indices must be strictly increasing".into(),
+                    });
+                }
+                prev = Some(c);
+            }
+        }
+        let rows = self.rows();
+        Ok(Features::Sparse(CsrMatrix::from_validated_parts(
+            rows,
+            d,
+            self.indptr,
+            self.indices,
+            self.values,
+        )))
+    }
+}
+
+/// Margins answered by a remote scorer, stamped with the snapshot that
+/// produced them (same stamps as a local
+/// [`ScoredBatch`](crate::serve::ScoredBatch)).
+#[derive(Debug, Clone, PartialEq)]
+pub struct RemoteScores {
+    pub epoch: u64,
+    pub round: u64,
+    pub margins: Vec<f64>,
+}
+
+/// One decoded scoring frame (either direction).
+#[derive(Debug, Clone, PartialEq)]
+pub enum ScoreFrame {
+    Hello(ScoreIdentity),
+    Accept(ScoreIdentity),
+    Reject(String),
+    Request(ScoreBatch),
+    Reply(RemoteScores),
+}
+
+fn put_str(s: &str, out: &mut Vec<u8>) {
+    out.extend_from_slice(&(s.len() as u32).to_le_bytes());
+    out.extend_from_slice(s.as_bytes());
+}
+
+fn take_str(r: &mut Reader<'_>, what: &'static str) -> WireResult<String> {
+    let len = r.elems(what)?;
+    let raw = r.take(len, what)?;
+    String::from_utf8(raw.to_vec()).map_err(|_| WireError::Malformed { what })
+}
+
+fn identity_payload(id: &ScoreIdentity, out: &mut Vec<u8>) {
+    out.extend_from_slice(&(id.d as u32).to_le_bytes());
+    put_str(&id.fingerprint, out);
+    put_str(&id.loss, out);
+}
+
+fn identity_from(r: &mut Reader<'_>) -> WireResult<ScoreIdentity> {
+    let d = r.u32("score identity d")? as usize;
+    let fingerprint = take_str(r, "score identity fingerprint")?;
+    let loss = take_str(r, "score identity loss")?;
+    Ok(ScoreIdentity { d, fingerprint, loss })
+}
+
+pub(crate) fn encode_score_hello(id: &ScoreIdentity) -> Vec<u8> {
+    let mut out = Vec::with_capacity(32 + id.fingerprint.len() + id.loss.len());
+    encode_header(TAG_SCORE_HELLO, 0, 0, &mut out);
+    identity_payload(id, &mut out);
+    out
+}
+
+pub(crate) fn encode_score_accept(id: &ScoreIdentity) -> Vec<u8> {
+    let mut out = Vec::with_capacity(32 + id.fingerprint.len() + id.loss.len());
+    encode_header(TAG_SCORE_ACCEPT, 0, 0, &mut out);
+    identity_payload(id, &mut out);
+    out
+}
+
+pub(crate) fn encode_score_reject(reason: &str) -> Vec<u8> {
+    let mut out = Vec::with_capacity(20 + reason.len());
+    encode_header(TAG_SCORE_REJECT, 0, 0, &mut out);
+    put_str(reason, &mut out);
+    out
+}
+
+pub(crate) fn encode_score_request(batch: &ScoreBatch) -> Vec<u8> {
+    let mut out =
+        Vec::with_capacity(28 + 4 * batch.rows() + 12 * batch.nnz());
+    encode_header(TAG_SCORE_REQUEST, 0, 0, &mut out);
+    out.extend_from_slice(&(batch.rows() as u32).to_le_bytes());
+    for row in batch.indptr.windows(2) {
+        out.extend_from_slice(&((row[1] - row[0]) as u32).to_le_bytes());
+    }
+    out.extend_from_slice(&(batch.nnz() as u32).to_le_bytes());
+    for (&c, &v) in batch.indices.iter().zip(&batch.values) {
+        out.extend_from_slice(&c.to_le_bytes());
+        out.extend_from_slice(&v.to_le_bytes());
+    }
+    out
+}
+
+pub(crate) fn encode_score_reply(scores: &RemoteScores) -> Vec<u8> {
+    let mut out = Vec::with_capacity(28 + 8 * scores.margins.len());
+    encode_header(TAG_SCORE_REPLY, 0, scores.round, &mut out);
+    out.extend_from_slice(&scores.epoch.to_le_bytes());
+    out.extend_from_slice(&(scores.margins.len() as u32).to_le_bytes());
+    for &m in &scores.margins {
+        out.extend_from_slice(&m.to_le_bytes());
+    }
+    out
+}
+
+/// Decode one scoring frame of either direction; typed [`WireError`] on
+/// anything else (including training-protocol frames).
+pub(crate) fn decode_score_frame(buf: &[u8]) -> WireResult<ScoreFrame> {
+    let (h, mut r) = decode_header(buf)?;
+    let frame = match h.tag {
+        TAG_SCORE_HELLO => ScoreFrame::Hello(identity_from(&mut r)?),
+        TAG_SCORE_ACCEPT => ScoreFrame::Accept(identity_from(&mut r)?),
+        TAG_SCORE_REJECT => ScoreFrame::Reject(take_str(&mut r, "score reject reason")?),
+        TAG_SCORE_REQUEST => {
+            let rows = r.elems("score request rows")?;
+            let mut indptr = Vec::with_capacity(rows + 1);
+            indptr.push(0usize);
+            let mut total = 0usize;
+            for _ in 0..rows {
+                let len = r.elems("score request row length")?;
+                total += len;
+                if total > crate::transport::wire::MAX_WIRE_ELEMS {
+                    return Err(WireError::Oversized {
+                        declared: total as u64,
+                        max: crate::transport::wire::MAX_WIRE_ELEMS as u64,
+                    });
+                }
+                indptr.push(total);
+            }
+            let nnz = r.elems("score request nnz")?;
+            if nnz != total {
+                return Err(WireError::Malformed {
+                    what: "score request nnz != sum of row lengths",
+                });
+            }
+            let raw = r.take(12 * nnz, "score request entries")?;
+            let mut indices = Vec::with_capacity(nnz);
+            let mut values = Vec::with_capacity(nnz);
+            for chunk in raw.chunks_exact(12) {
+                indices.push(u32::from_le_bytes(chunk[0..4].try_into().unwrap()));
+                values.push(f64::from_le_bytes(chunk[4..12].try_into().unwrap()));
+            }
+            ScoreFrame::Request(ScoreBatch { indptr, indices, values })
+        }
+        TAG_SCORE_REPLY => {
+            let epoch = r.u64("score reply epoch")?;
+            let count = r.elems("score reply count")?;
+            let raw = r.take(8 * count, "score reply margins")?;
+            let margins = raw
+                .chunks_exact(8)
+                .map(|c| f64::from_le_bytes(c.try_into().unwrap()))
+                .collect();
+            ScoreFrame::Reply(RemoteScores { epoch, round: h.round, margins })
+        }
+        got => return Err(WireError::UnknownTag { got }),
+    };
+    r.finish("trailing bytes after score frame")?;
+    Ok(frame)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::cov_like;
+
+    #[test]
+    fn identity_frames_roundtrip_including_wildcards() {
+        let id = ScoreIdentity { d: 54, fingerprint: "abc123".into(), loss: "hinge".into() };
+        match decode_score_frame(&encode_score_hello(&id)).unwrap() {
+            ScoreFrame::Hello(got) => assert_eq!(got, id),
+            other => panic!("{other:?}"),
+        }
+        match decode_score_frame(&encode_score_accept(&id)).unwrap() {
+            ScoreFrame::Accept(got) => assert_eq!(got, id),
+            other => panic!("{other:?}"),
+        }
+        match decode_score_frame(&encode_score_hello(&ScoreIdentity::any())).unwrap() {
+            ScoreFrame::Hello(got) => {
+                assert_eq!(got.d, 0);
+                assert!(got.fingerprint.is_empty() && got.loss.is_empty());
+            }
+            other => panic!("{other:?}"),
+        }
+        match decode_score_frame(&encode_score_reject("loss mismatch")).unwrap() {
+            ScoreFrame::Reject(reason) => assert_eq!(reason, "loss mismatch"),
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn request_roundtrips_sparse_and_dense_batches() {
+        for density in [0.2, 1.0] {
+            let data = cov_like(17, 9, density, 5);
+            let batch = ScoreBatch::from_features(&data.features);
+            let wire = encode_score_request(&batch);
+            let got = match decode_score_frame(&wire).unwrap() {
+                ScoreFrame::Request(b) => b,
+                other => panic!("{other:?}"),
+            };
+            assert_eq!(got, batch);
+            // the rebuilt matrix scores identically to the original rows
+            let w: Vec<f64> = (0..9).map(|j| 0.1 * (j as f64 + 1.0)).collect();
+            let rebuilt = got.into_features(9).unwrap();
+            for i in 0..17 {
+                let a = data.features.row_dot(i, &w);
+                let b = rebuilt.row_dot(i, &w);
+                assert!((a - b).abs() < 1e-15, "row {i}: {a} vs {b}");
+            }
+        }
+    }
+
+    #[test]
+    fn reply_roundtrips_with_stamps() {
+        let scores =
+            RemoteScores { epoch: 7, round: 42, margins: vec![1.5, -0.25, 0.0, -0.0] };
+        let got = match decode_score_frame(&encode_score_reply(&scores)).unwrap() {
+            ScoreFrame::Reply(s) => s,
+            other => panic!("{other:?}"),
+        };
+        assert_eq!(got.epoch, 7);
+        assert_eq!(got.round, 42);
+        assert_eq!(got.margins.len(), 4);
+        // bit-exact margins, including the negative zero
+        for (a, b) in got.margins.iter().zip(&scores.margins) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+    }
+
+    #[test]
+    fn malformed_frames_are_typed_not_panics() {
+        // training frame into the score decoder: unknown tag
+        let training = crate::transport::wire::encode_to_worker(
+            &crate::coordinator::ToWorker::Commit { scale: 1.0 },
+            0,
+        );
+        assert!(matches!(
+            decode_score_frame(&training),
+            Err(WireError::UnknownTag { .. })
+        ));
+        // nnz disagreeing with the row lengths
+        let batch = ScoreBatch { indptr: vec![0, 2], indices: vec![1, 3], values: vec![1.0, 2.0] };
+        let mut bad = encode_score_request(&batch);
+        let nnz_at = bad.len() - 2 * 12 - 4;
+        bad[nnz_at] = 9;
+        assert!(matches!(
+            decode_score_frame(&bad),
+            Err(WireError::Malformed { .. })
+        ));
+        // out-of-range / unsorted columns are typed at into_features
+        let oob = ScoreBatch { indptr: vec![0, 1], indices: vec![9], values: vec![1.0] };
+        assert!(oob.into_features(4).is_err());
+        let unsorted =
+            ScoreBatch { indptr: vec![0, 2], indices: vec![3, 1], values: vec![1.0, 2.0] };
+        assert!(unsorted.into_features(4).is_err());
+    }
+}

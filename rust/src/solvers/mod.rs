@@ -88,6 +88,32 @@ impl Block {
     pub fn touched_cols(&self) -> Option<&[u32]> {
         self.touched.as_deref()
     }
+
+    /// Grow the block with appended rows (CSR-form, batch-local
+    /// `indptr`) and rebake every cache against the new `lambda_n`.
+    /// The global `n` changed, so *all* curvatures change — which is why
+    /// this runs even for an empty batch, and why the whole `curv`
+    /// vector is recomputed rather than extended. Same division as
+    /// [`Block::new`], so a grown block is bit-identical to one built
+    /// from the grown dataset directly.
+    pub fn append(
+        &mut self,
+        indptr: &[usize],
+        indices: &[u32],
+        values: &[f64],
+        labels: &[f64],
+        norms_sq: &[f64],
+        lambda_n: f64,
+    ) -> Result<(), String> {
+        self.data.append_csr_rows(indptr, indices, values, labels, norms_sq)?;
+        self.lambda_n = lambda_n;
+        self.curv = (0..self.data.n()).map(|i| self.data.norm_sq(i) / lambda_n).collect();
+        self.touched = match &self.data.features {
+            Features::Sparse(m) => Some(m.touched_cols()),
+            Features::Dense(_) => None,
+        };
+        Ok(())
+    }
 }
 
 /// Result of one local round.

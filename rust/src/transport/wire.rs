@@ -30,7 +30,9 @@
 
 use std::sync::Arc;
 
-use crate::coordinator::{LocalWork, RoundReply, ToLeader, ToWorker, WorkerMetrics, WorkerState};
+use crate::coordinator::{
+    AppendBlock, LocalWork, RoundReply, ToLeader, ToWorker, WorkerMetrics, WorkerState,
+};
 
 /// Number of [`MessageKind`] variants (ledger array size).
 pub const KIND_COUNT: usize = 8;
@@ -50,7 +52,12 @@ pub enum MessageKind {
     EvalReply = 4,
     /// Checkpoint traffic in either direction (get/set/report state).
     Checkpoint = 5,
-    /// Control traffic (reset, shutdown, fatal errors).
+    /// Control traffic (reset, shutdown, fatal errors) and data
+    /// management (append, set-labels). Data management is classified
+    /// here rather than as a new kind because it is not *algorithm*
+    /// communication — the paper's figures charge only the per-round
+    /// broadcast/reduce/commit vectors, and growing the training set is
+    /// an out-of-band operation, like checkpointing.
     Control = 6,
     /// Worker -> leader per-round observability block (instrumentation;
     /// never charged as algorithm communication).
@@ -104,8 +111,9 @@ pub const HEADER_BYTES: u64 = 16;
 /// First two header bytes of every frame ("C0CA", little-endian).
 pub const MAGIC: u16 = 0xC0CA;
 /// Wire-format version; bump on any layout change. v2 added the
-/// worker -> leader metrics frame ([`MessageKind::Metrics`]).
-pub const WIRE_VERSION: u8 = 2;
+/// worker -> leader metrics frame ([`MessageKind::Metrics`]); v3 added
+/// the continuous-training frames (append, set-labels).
+pub const WIRE_VERSION: u8 = 3;
 /// Length prefix of variable-size payloads.
 const LEN_BYTES: u64 = 4;
 /// RNG state carried by checkpoint messages (`[u64; 4]`).
@@ -123,6 +131,8 @@ pub(crate) const TAG_GET_STATE: u8 = 0x04;
 pub(crate) const TAG_SET_STATE: u8 = 0x05;
 pub(crate) const TAG_RESET: u8 = 0x06;
 pub(crate) const TAG_SHUTDOWN: u8 = 0x07;
+pub(crate) const TAG_APPEND: u8 = 0x08;
+pub(crate) const TAG_SET_LABELS: u8 = 0x09;
 pub(crate) const TAG_ROUND_REPLY: u8 = 0x81;
 pub(crate) const TAG_EVAL_REPLY: u8 = 0x82;
 pub(crate) const TAG_STATE: u8 = 0x83;
@@ -288,6 +298,15 @@ pub fn to_worker_wire(msg: &ToWorker) -> (MessageKind, u64) {
             HEADER_BYTES + RNG_STATE_BYTES + dense_vec_bytes(ws.alpha.len()),
         ),
         ToWorker::Reset | ToWorker::Shutdown => (MessageKind::Control, HEADER_BYTES),
+        // lambda_n f64 + rows u32 + rows * (row-len u32) + nnz u32 +
+        // nnz * (u32 index + f64 value) + rows * (label f64 + norm f64)
+        ToWorker::Append { block, .. } => (
+            MessageKind::Control,
+            HEADER_BYTES + 16 + 20 * block.rows() as u64 + 12 * block.nnz() as u64,
+        ),
+        ToWorker::SetLabels { labels } => {
+            (MessageKind::Control, HEADER_BYTES + dense_vec_bytes(labels.len()))
+        }
     }
 }
 
@@ -377,6 +396,30 @@ pub fn encode_to_worker(msg: &ToWorker, to: usize) -> Vec<u8> {
         }
         ToWorker::Reset => encode_header(TAG_RESET, to, 0, &mut out),
         ToWorker::Shutdown => encode_header(TAG_SHUTDOWN, to, 0, &mut out),
+        ToWorker::Append { block, lambda_n } => {
+            encode_header(TAG_APPEND, to, 0, &mut out);
+            out.extend_from_slice(&lambda_n.to_le_bytes());
+            out.extend_from_slice(&(block.rows() as u32).to_le_bytes());
+            for win in block.indptr.windows(2) {
+                out.extend_from_slice(&((win[1] - win[0]) as u32).to_le_bytes());
+            }
+            out.extend_from_slice(&(block.nnz() as u32).to_le_bytes());
+            for (i, v) in block.indices.iter().zip(&block.values) {
+                out.extend_from_slice(&i.to_le_bytes());
+                out.extend_from_slice(&v.to_le_bytes());
+            }
+            for (y, nsq) in block.labels.iter().zip(&block.norms_sq) {
+                out.extend_from_slice(&y.to_le_bytes());
+                out.extend_from_slice(&nsq.to_le_bytes());
+            }
+        }
+        ToWorker::SetLabels { labels } => {
+            encode_header(TAG_SET_LABELS, to, 0, &mut out);
+            out.extend_from_slice(&(labels.len() as u32).to_le_bytes());
+            for y in labels {
+                out.extend_from_slice(&y.to_le_bytes());
+            }
+        }
     }
     debug_assert_eq!(out.len() as u64, sized);
     out
@@ -574,6 +617,47 @@ pub fn decode_to_worker(buf: &[u8]) -> WireResult<ToWorker> {
         TAG_SET_STATE => ToWorker::SetState(r.worker_state(h.worker as usize)?),
         TAG_RESET => ToWorker::Reset,
         TAG_SHUTDOWN => ToWorker::Shutdown,
+        TAG_APPEND => {
+            let lambda_n = r.f64("append lambda_n")?;
+            let rows = r.elems("append rows")?;
+            let mut indptr = Vec::with_capacity(rows + 1);
+            indptr.push(0usize);
+            let mut total = 0usize;
+            for _ in 0..rows {
+                let len = r.elems("append row length")?;
+                total += len;
+                if total > MAX_WIRE_ELEMS {
+                    return Err(WireError::Oversized {
+                        declared: total as u64,
+                        max: MAX_WIRE_ELEMS as u64,
+                    });
+                }
+                indptr.push(total);
+            }
+            let nnz = r.elems("append nnz")?;
+            if nnz != total {
+                return Err(WireError::Malformed { what: "append nnz != sum of row lengths" });
+            }
+            let raw = r.take(12 * nnz, "append entries")?;
+            let mut indices = Vec::with_capacity(nnz);
+            let mut values = Vec::with_capacity(nnz);
+            for chunk in raw.chunks_exact(12) {
+                indices.push(u32::from_le_bytes(chunk[0..4].try_into().unwrap()));
+                values.push(f64::from_le_bytes(chunk[4..12].try_into().unwrap()));
+            }
+            let raw = r.take(16 * rows, "append labels")?;
+            let mut labels = Vec::with_capacity(rows);
+            let mut norms_sq = Vec::with_capacity(rows);
+            for chunk in raw.chunks_exact(16) {
+                labels.push(f64::from_le_bytes(chunk[0..8].try_into().unwrap()));
+                norms_sq.push(f64::from_le_bytes(chunk[8..16].try_into().unwrap()));
+            }
+            ToWorker::Append {
+                block: AppendBlock { indptr, indices, values, labels, norms_sq },
+                lambda_n,
+            }
+        }
+        TAG_SET_LABELS => ToWorker::SetLabels { labels: r.f64_vec("set_labels labels")? },
         got => return Err(WireError::UnknownTag { got }),
     };
     r.finish("trailing bytes after message")?;
@@ -842,6 +926,70 @@ mod tests {
     }
 
     #[test]
+    fn append_and_set_labels_roundtrip() {
+        // two rows: [(1, 0.5), (3, -0.0)] and [] (an empty row)
+        let block = AppendBlock {
+            indptr: vec![0, 2, 2],
+            indices: vec![1, 3],
+            values: vec![0.5, -0.0],
+            labels: vec![1.0, -1.0],
+            norms_sq: vec![0.25, 0.0],
+        };
+        match roundtrip_to_worker(
+            ToWorker::Append { block: block.clone(), lambda_n: 12.5 },
+            1,
+        ) {
+            ToWorker::Append { block: back, lambda_n } => {
+                assert_eq!(lambda_n, 12.5);
+                assert_eq!(back.indptr, block.indptr);
+                assert_eq!(back.indices, block.indices);
+                assert_eq!(back.labels, block.labels);
+                for (a, b) in block.values.iter().zip(&back.values) {
+                    assert_eq!(a.to_bits(), b.to_bits(), "-0.0 must survive");
+                }
+                for (a, b) in block.norms_sq.iter().zip(&back.norms_sq) {
+                    assert_eq!(a.to_bits(), b.to_bits());
+                }
+            }
+            other => panic!("wrong variant: {other:?}"),
+        }
+        // the zero-row append (lambda_n-only) is a legal frame too
+        match roundtrip_to_worker(
+            ToWorker::Append { block: AppendBlock::empty(), lambda_n: 7.0 },
+            0,
+        ) {
+            ToWorker::Append { block: back, lambda_n } => {
+                assert_eq!(lambda_n, 7.0);
+                assert_eq!(back.rows(), 0);
+            }
+            other => panic!("wrong variant: {other:?}"),
+        }
+        match roundtrip_to_worker(ToWorker::SetLabels { labels: vec![1.0, -1.0, 1.0] }, 2) {
+            ToWorker::SetLabels { labels } => assert_eq!(labels, vec![1.0, -1.0, 1.0]),
+            other => panic!("wrong variant: {other:?}"),
+        }
+        // both are control traffic: never charged as algorithm bytes
+        let (kind, _) = to_worker_wire(&ToWorker::Append {
+            block: AppendBlock::empty(),
+            lambda_n: 1.0,
+        });
+        assert!(!kind.is_algorithm());
+        let (kind, _) = to_worker_wire(&ToWorker::SetLabels { labels: vec![1.0] });
+        assert!(!kind.is_algorithm());
+        // a declared nnz disagreeing with row lengths is a typed error
+        let mut bad = Vec::new();
+        encode_header(TAG_APPEND, 0, 0, &mut bad);
+        bad.extend_from_slice(&1.0f64.to_le_bytes()); // lambda_n
+        bad.extend_from_slice(&1u32.to_le_bytes()); // rows = 1
+        bad.extend_from_slice(&2u32.to_le_bytes()); // row length 2
+        bad.extend_from_slice(&1u32.to_le_bytes()); // nnz = 1 (!= 2)
+        assert_eq!(
+            decode_to_worker(&bad).unwrap_err(),
+            WireError::Malformed { what: "append nnz != sum of row lengths" }
+        );
+    }
+
+    #[test]
     fn to_leader_codec_roundtrips_every_variant() {
         let reply = RoundReply {
             worker: 2,
@@ -923,7 +1071,7 @@ mod tests {
             buf,
             vec![
                 0xCA, 0xC0, // magic 0xC0CA, little-endian
-                0x02, // wire version
+                0x03, // wire version
                 0x02, // tag: commit
                 0x02, 0x00, 0x00, 0x00, // worker 2
                 0x00, 0x00, 0x00, 0x00, 0x00, 0x00, 0x00, 0x00, // round 0
@@ -942,7 +1090,7 @@ mod tests {
         assert_eq!(
             buf,
             vec![
-                0xCA, 0xC0, 0x02, 0x81, // magic, version, tag: round reply
+                0xCA, 0xC0, 0x03, 0x81, // magic, version, tag: round reply
                 0x01, 0x00, 0x00, 0x00, // worker 1
                 0x03, 0x00, 0x00, 0x00, 0x00, 0x00, 0x00, 0x00, // round 3
                 0x00, 0x00, 0x00, 0x00, 0x00, 0x00, 0xE0, 0x3F, // compute_s 0.5

@@ -1,0 +1,455 @@
+//! Serving acceptance: the online-serving subsystem must be *provably
+//! passive* — a training run with a [`SnapshotSink`] publishing every
+//! round and live scorers hammering the handle (in-process and over a
+//! real UDS scoring socket) is bit-identical to a bare run — and a
+//! snapshot at round `r` must score exactly like a checkpoint taken at
+//! round `r`, restored offline. Continuous training rides along: the
+//! post-append duality gap obeys the documented bound, warm restarts
+//! resume convergence, and a live-appended session trains bit-identically
+//! to a shard set grown on disk.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::thread;
+use std::time::Duration;
+
+use cocoa::coordinator::Checkpoint;
+use cocoa::data::{append_shard_rows, cov_like, rcv1_like, write_shards};
+use cocoa::prelude::*;
+use cocoa::serve::ScoreIdentity;
+use cocoa::transport::{Ledger, MessageKind};
+
+const N: usize = 120;
+const D: usize = 10;
+const NOISE: f64 = 0.1;
+const SEED: u64 = 7;
+const LAMBDA: f64 = 0.05;
+const H: usize = 25;
+const ROUNDS: u64 = 5;
+const K: usize = 2;
+
+/// Everything deterministic a trajectory is, bit for bit. `sim_time_s`
+/// is deliberately excluded: timing columns fold in measured thread-CPU
+/// seconds, which no two runs share.
+fn row_bits(tr: &Trace) -> Vec<(u64, u64, u64, u64, u64, u64)> {
+    tr.rows
+        .iter()
+        .map(|r| {
+            (
+                r.round,
+                r.primal.to_bits(),
+                r.dual.to_bits(),
+                r.gap.to_bits(),
+                r.inner_steps,
+                r.bytes_measured,
+            )
+        })
+        .collect()
+}
+
+/// The bare twin every served run is compared against: in-process,
+/// counted, no sink, no scorers.
+fn bare_run(data: &Dataset) -> (Trace, Vec<u64>, Ledger) {
+    let mut session = Trainer::on(data)
+        .workers(K)
+        .loss(LossKind::Hinge)
+        .lambda(LAMBDA)
+        .seed(SEED)
+        .transport(TransportKind::Counted)
+        .build()
+        .unwrap();
+    let trace = session.run(&mut Cocoa::new(H), MaxRounds::new(ROUNDS)).unwrap();
+    let w = session.w().iter().map(|x| x.to_bits()).collect();
+    let ledger = session.ledger().unwrap().clone();
+    session.shutdown();
+    (trace, w, ledger)
+}
+
+fn assert_ledgers_match(ledger: &Ledger, bare: &Ledger) {
+    for kind in [
+        MessageKind::Broadcast,
+        MessageKind::Commit,
+        MessageKind::DeltaW,
+        MessageKind::EvalRequest,
+        MessageKind::EvalReply,
+        MessageKind::Metrics,
+    ] {
+        assert_eq!(ledger.bytes(kind), bare.bytes(kind), "{kind:?} bytes");
+        assert_eq!(ledger.msgs(kind), bare.msgs(kind), "{kind:?} msgs");
+    }
+}
+
+/// In-process: a sink publishing every round plus a scorer thread
+/// hammering the handle for the whole run change nothing — trajectory,
+/// final `w`, and the per-kind ledger are bit-identical to the bare run,
+/// and the final published snapshot IS the final `w`.
+#[test]
+fn live_scoring_is_passive_in_proc() {
+    let data = cov_like(N, D, NOISE, SEED);
+    let (bare_trace, bare_w, bare_ledger) = bare_run(&data);
+
+    let mut session = Trainer::on(&data)
+        .workers(K)
+        .loss(LossKind::Hinge)
+        .lambda(LAMBDA)
+        .seed(SEED)
+        .transport(TransportKind::Counted)
+        .build()
+        .unwrap();
+    let mut sink = SnapshotSink::for_session(&session, 1);
+    let handle = sink.handle();
+
+    // scoring traffic throughout the run — passivity must hold with
+    // readers actually contending on the handle, not just attached
+    let stop = Arc::new(AtomicBool::new(false));
+    let scorer_thread = {
+        let stop = Arc::clone(&stop);
+        let scorer = Scorer::live(handle.clone());
+        let batch = data.subset(&(0..16u32).collect::<Vec<_>>()).features;
+        thread::spawn(move || {
+            let mut scored = 0u64;
+            loop {
+                let out = scorer.score_batch(&batch).unwrap();
+                assert_eq!(out.margins.len(), 16);
+                scored += out.margins.len() as u64;
+                if stop.load(Ordering::Relaxed) {
+                    return scored;
+                }
+                thread::yield_now();
+            }
+        })
+    };
+
+    let mut algo = Cocoa::new(H);
+    let trace = {
+        let mut driver = session.drive(&mut algo, MaxRounds::new(ROUNDS)).unwrap();
+        driver.observe(&mut sink).unwrap();
+        driver.drain().unwrap()
+    };
+    stop.store(true, Ordering::Relaxed);
+    let scored = scorer_thread.join().unwrap();
+    assert!(scored > 0, "the scorer never ran");
+
+    let w: Vec<u64> = session.w().iter().map(|x| x.to_bits()).collect();
+    let ledger = session.ledger().unwrap().clone();
+
+    // the current snapshot is the committed round-R iterate, stamped
+    let snap = handle.current();
+    assert_eq!(snap.round, ROUNDS);
+    assert_eq!(snap.epoch, ROUNDS + 1, "round-0 seed + one publish per round");
+    assert_eq!(snap.fingerprint, session.fingerprint());
+    assert_eq!(snap.loss, session.loss().to_string());
+    let snap_bits: Vec<u64> = snap.w.iter().map(|x| x.to_bits()).collect();
+    assert_eq!(snap_bits, w, "published model != leader w");
+    session.shutdown();
+
+    assert_eq!(row_bits(&trace), row_bits(&bare_trace), "served run diverged");
+    assert_eq!(w, bare_w, "final w diverged");
+    assert_ledgers_match(&ledger, &bare_ledger);
+}
+
+/// The staleness contract: a sink publishing every `c` rounds leaves the
+/// handle at most `c - 1` completed rounds behind the trainer.
+#[test]
+fn publication_cadence_bounds_staleness() {
+    let data = cov_like(N, D, NOISE, SEED);
+    let mut session = Trainer::on(&data)
+        .workers(K)
+        .loss(LossKind::Hinge)
+        .lambda(LAMBDA)
+        .seed(SEED)
+        .build()
+        .unwrap();
+    let mut sink = SnapshotSink::for_session(&session, 2);
+    let handle = sink.handle();
+    let mut algo = Cocoa::new(H);
+    {
+        let mut driver = session.drive(&mut algo, MaxRounds::new(ROUNDS)).unwrap();
+        driver.observe(&mut sink).unwrap();
+        driver.drain().unwrap();
+    }
+    session.shutdown();
+
+    let snap = handle.current();
+    // 5 rounds at every=2: published at rounds 0, 2, 4
+    assert_eq!(snap.round, ROUNDS - 1);
+    assert_eq!(snap.epoch, 3);
+    assert!(ROUNDS - snap.round <= 1, "staleness exceeded every - 1");
+}
+
+/// The acceptance criterion: with `every = 1`, predictions from the
+/// snapshot at round `r` are bit-identical to offline scoring with a
+/// checkpoint taken at round `r`, saved, loaded, and restored into a
+/// fresh session.
+#[test]
+fn snapshot_predictions_match_checkpoint_restored_scoring() {
+    let data = cov_like(N, D, NOISE, SEED);
+    let build = || {
+        Trainer::on(&data)
+            .workers(K)
+            .loss(LossKind::Hinge)
+            .lambda(LAMBDA)
+            .seed(SEED)
+            .build()
+            .unwrap()
+    };
+
+    let mut session = build();
+    let mut sink = SnapshotSink::for_session(&session, 1);
+    let handle = sink.handle();
+    let mut algo = Cocoa::new(H);
+    {
+        let mut driver = session.drive(&mut algo, MaxRounds::new(ROUNDS)).unwrap();
+        driver.observe(&mut sink).unwrap();
+        driver.drain().unwrap();
+    }
+    let cp = session.checkpoint().unwrap();
+    session.shutdown();
+
+    let dir = std::env::temp_dir().join(format!("cocoa_serving_cp_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("round_r.ckpt");
+    cp.save(&path).unwrap();
+    let cp = Checkpoint::load(&path).unwrap();
+    assert_eq!(cp.round_counter, ROUNDS);
+
+    // offline path: restore the checkpoint, freeze its w into a snapshot
+    let mut offline = build();
+    offline.restore(&cp).unwrap();
+    let frozen = Scorer::frozen(ModelSnapshot {
+        epoch: 0,
+        round: cp.round_counter,
+        w: offline.w().to_vec(),
+        loss: offline.loss().to_string(),
+        regularizer: offline.regularizer().to_string(),
+        fingerprint: offline.fingerprint().to_string(),
+    });
+    offline.shutdown();
+
+    let live_snap = handle.current();
+    assert_eq!(live_snap.round, cp.round_counter, "snapshot/checkpoint round drift");
+    let live = Scorer::frozen((*live_snap).clone());
+
+    let a = live.score_batch(&data.features).unwrap();
+    let b = frozen.score_batch(&data.features).unwrap();
+    assert_eq!(a.margins.len(), N);
+    assert_eq!(a.round, b.round);
+    for (i, (x, y)) in a.margins.iter().zip(&b.margins).enumerate() {
+        assert_eq!(x.to_bits(), y.to_bits(), "margin {i}: {x} vs {y}");
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// UDS serving: a `ScoreServer` on a real socket with a client scoring
+/// throughout the run is passive (trajectory, w, ledger bit-identical to
+/// bare), and a post-run request returns margins bit-identical to
+/// offline `row_dot` against the final w.
+#[test]
+fn uds_score_server_with_live_traffic_is_passive() {
+    let data = cov_like(N, D, NOISE, SEED);
+    let (bare_trace, bare_w, bare_ledger) = bare_run(&data);
+
+    let sock = std::env::temp_dir().join(format!("cocoa_serving_{}.sock", std::process::id()));
+    let _ = std::fs::remove_file(&sock);
+    let addr = format!("uds:{}", sock.display());
+
+    let mut session = Trainer::on(&data)
+        .workers(K)
+        .loss(LossKind::Hinge)
+        .lambda(LAMBDA)
+        .seed(SEED)
+        .transport(TransportKind::Counted)
+        .build()
+        .unwrap();
+    let mut sink = SnapshotSink::for_session(&session, 1);
+    let server = ScoreServer::serve(&addr, Scorer::live(sink.handle())).unwrap();
+
+    // a client scoring over the socket for the whole run
+    let stop = Arc::new(AtomicBool::new(false));
+    let client_thread = {
+        let stop = Arc::clone(&stop);
+        let addr = addr.clone();
+        let batch = data.subset(&(0..8u32).collect::<Vec<_>>()).features;
+        thread::spawn(move || {
+            let mut client =
+                ScoreClient::connect_with_retry(&addr, &ScoreIdentity::any(), 100, 0.01).unwrap();
+            let mut scored = 0u64;
+            loop {
+                let out = client.score(&batch).unwrap();
+                assert_eq!(out.margins.len(), 8);
+                scored += out.margins.len() as u64;
+                if stop.load(Ordering::Relaxed) {
+                    return scored;
+                }
+                thread::sleep(Duration::from_millis(1));
+            }
+        })
+    };
+
+    let mut algo = Cocoa::new(H);
+    let trace = {
+        let mut driver = session.drive(&mut algo, MaxRounds::new(ROUNDS)).unwrap();
+        driver.observe(&mut sink).unwrap();
+        driver.drain().unwrap()
+    };
+    stop.store(true, Ordering::Relaxed);
+    let scored_mid_run = client_thread.join().unwrap();
+    assert!(scored_mid_run > 0, "the client never scored");
+
+    let w: Vec<u64> = session.w().iter().map(|x| x.to_bits()).collect();
+    let ledger = session.ledger().unwrap().clone();
+
+    // guaranteed post-run request, bound to the exact identity this
+    // session serves — margins must equal offline scoring bit for bit
+    let identity = ScoreIdentity {
+        d: data.d(),
+        fingerprint: session.fingerprint().to_string(),
+        loss: session.loss().to_string(),
+    };
+    let mut client = ScoreClient::connect_with_retry(&addr, &identity, 10, 0.05).unwrap();
+    let out = client.score(&data.features).unwrap();
+    assert_eq!(out.round, ROUNDS);
+    assert_eq!(out.margins.len(), N);
+    let w_f64 = session.w().to_vec();
+    for (i, m) in out.margins.iter().enumerate() {
+        let local = data.features.row_dot(i, &w_f64);
+        assert_eq!(m.to_bits(), local.to_bits(), "row {i}: remote {m} vs local {local}");
+    }
+    assert!(server.predictions_served() >= scored_mid_run + N as u64);
+    server.shutdown();
+    session.shutdown();
+
+    assert_eq!(row_bits(&trace), row_bits(&bare_trace), "UDS-served run diverged");
+    assert_eq!(w, bare_w, "final w diverged");
+    assert_ledgers_match(&ledger, &bare_ledger);
+    let _ = std::fs::remove_file(&sock);
+}
+
+/// Continuous training: appending `m` rows at a round boundary moves the
+/// duality gap by no more than the documented decomposition
+/// (docs/SERVING.md), and the warm restart then *resumes* convergence
+/// instead of restarting it.
+///
+/// With hinge + L2, appending rescales `w' = (n/n')·w` and keeps every
+/// dual variable, so with `Σℓ* = conj_sum` recovered from the dual value:
+///
+/// ```text
+/// gap' - gap = λ‖w‖²(ρ²-1)                              (≤ 0, dropped)
+///            + S_new/n'                                 (new rows' loss)
+///            + (S_old(w')/n' - S_old(w)/n)              (old loss re-weighted)
+///            + conj_sum·(1/n' - 1/n)                    (conjugate re-weighted)
+/// ```
+#[test]
+fn append_gap_obeys_the_documented_bound_and_warm_restart_converges() {
+    let base = cov_like(N, D, NOISE, SEED);
+    let batch = cov_like(40, D, NOISE, SEED ^ 0x9e);
+    let hinge_sum = |ds: &Dataset, w: &[f64]| -> f64 {
+        (0..ds.n())
+            .map(|i| (1.0 - ds.labels[i] * ds.features.row_dot(i, w)).max(0.0))
+            .sum()
+    };
+
+    let mut session = Trainer::on(&base)
+        .workers(K)
+        .loss(LossKind::Hinge)
+        .lambda(LAMBDA)
+        .seed(SEED)
+        .build()
+        .unwrap();
+    let mut algo = Cocoa::new(H);
+    let pre_trace = session.run(&mut algo, MaxRounds::new(ROUNDS)).unwrap();
+    let pre = pre_trace.rows.last().unwrap();
+    let (gap_pre, dual_pre) = (pre.gap, pre.dual);
+    let w_pre = session.w().to_vec();
+    let fp_pre = session.fingerprint().to_string();
+
+    let n_old = base.n();
+    let n_new = n_old + batch.n();
+    let s_old = hinge_sum(&base, &w_pre);
+    let w_norm_sq: f64 = w_pre.iter().map(|x| x * x).sum();
+    // D = -(λ/2)‖w‖² - conj_sum/n  =>  conj_sum = -(D + (λ/2)‖w‖²)·n
+    let conj_sum = -(dual_pre + 0.5 * LAMBDA * w_norm_sq) * n_old as f64;
+
+    session.append_rows(&batch).unwrap();
+    assert_eq!(session.n(), n_new);
+    assert_ne!(session.fingerprint(), fp_pre, "append must chain the fingerprint");
+    let w_post = session.w().to_vec(); // = (n_old/n_new)·w_pre under the L2 prox
+    let s_old_post = hinge_sum(&base, &w_post);
+    let s_new = hinge_sum(&batch, &w_post);
+
+    let post_trace = session.run(&mut algo, MaxRounds::new(ROUNDS)).unwrap();
+    let first = &post_trace.rows[0];
+    assert_eq!(first.round, 0, "the post-append drive must evaluate before working");
+    let gap_post = first.gap;
+
+    let (inv_new, inv_old) = (1.0 / n_new as f64, 1.0 / n_old as f64);
+    let bound = gap_pre
+        + s_new * inv_new
+        + (s_old_post * inv_new - s_old * inv_old).max(0.0)
+        + (conj_sum * (inv_new - inv_old)).max(0.0)
+        + 1e-9;
+    assert!(
+        gap_post <= bound,
+        "post-append gap {gap_post} exceeds the documented bound {bound} \
+         (gap_pre {gap_pre}, S_new {s_new}, S_old {s_old} -> {s_old_post})"
+    );
+
+    // warm restart: retained duals mean training resumes, not restarts
+    let last = post_trace.rows.last().unwrap();
+    assert!(last.gap.is_finite() && last.gap >= -1e-9);
+    assert!(
+        last.gap < gap_post,
+        "warm restart made no progress: {} -> {}",
+        gap_post,
+        last.gap
+    );
+    session.shutdown();
+}
+
+/// A session that appends a batch live trains bit-identically to a shard
+/// set grown on disk by `append_shard_rows` — the durable and in-memory
+/// append paths are the same problem, row for row, norm for norm.
+#[test]
+fn live_append_matches_disk_grown_shards_bitwise() {
+    let base = rcv1_like(96, 40, 8, 0.1, 11);
+    let batch = rcv1_like(30, 40, 8, 0.1, 12);
+
+    // live: build on the base, grow in memory, then train
+    let mut live = Trainer::on(&base)
+        .workers(K)
+        .loss(LossKind::Hinge)
+        .lambda(LAMBDA)
+        .seed(SEED)
+        .label("grown")
+        .build()
+        .unwrap();
+    live.append_rows(&batch).unwrap();
+    let live_fp = live.fingerprint().to_string();
+    let live_trace = live.run(&mut Cocoa::new(H), MaxRounds::new(ROUNDS)).unwrap();
+    let live_w: Vec<u64> = live.w().iter().map(|x| x.to_bits()).collect();
+    live.shutdown();
+
+    // disk: shard the base, grow the set on disk, reopen, train
+    let dir = std::env::temp_dir().join(format!("cocoa_serving_grow_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    write_shards(&base, PartitionStrategy::Contiguous, K, 0, &dir).unwrap();
+    let set = append_shard_rows(&dir, &batch).unwrap();
+    assert_eq!(set.n(), base.n() + batch.n());
+    assert_eq!(set.fingerprint(), live_fp, "append fingerprint chains must agree");
+
+    let mut disk = Trainer::on_shards(&set)
+        .loss(LossKind::Hinge)
+        .lambda(LAMBDA)
+        .seed(SEED)
+        .label("grown")
+        .build()
+        .unwrap();
+    let disk_trace = disk.run(&mut Cocoa::new(H), MaxRounds::new(ROUNDS)).unwrap();
+    let disk_w: Vec<u64> = disk.w().iter().map(|x| x.to_bits()).collect();
+    disk.shutdown();
+
+    assert_eq!(row_bits(&live_trace), row_bits(&disk_trace), "grown trajectories diverged");
+    assert_eq!(live_w, disk_w, "grown final w diverged");
+    let _ = std::fs::remove_dir_all(&dir);
+}
